@@ -1,0 +1,74 @@
+//! Batching behaviour of block-wise decoding (the §5.4 story, measured
+//! on this box): decode the same request set at batch sizes {1, 2, 4}
+//! and report per-step cost and aggregate TPS. Block-wise DLMs amortize
+//! weight traffic across both the block and the batch, so per-request
+//! cost should fall as the batch grows until compute saturates.
+//!
+//! ```text
+//! cargo run --release --example batch_comparison
+//! ```
+
+use cdlm::coordinator::{DecodeOpts, GroupKey, Method, ServingCore};
+use cdlm::workload::{self, Family};
+
+fn main() -> anyhow::Result<()> {
+    let mut core = ServingCore::load(&cdlm::artifacts_dir(), 16)?;
+    let geom = core.rt.manifest.geometry.clone();
+    let opts = DecodeOpts::defaults(&geom);
+    let n = 4;
+    let samples = workload::generate(Family::ListOp, n, 0xE7A1);
+    let prompts: Vec<Vec<i32>> = samples
+        .iter()
+        .map(|s| {
+            workload::encode_example(
+                &core.tokenizer,
+                Family::ListOp,
+                s,
+                geom.prompt_len,
+                geom.gen_len,
+            )
+            .map(|e| e.prompt_ids)
+        })
+        .collect::<anyhow::Result<_>>()?;
+
+    println!("method x batch-size grid over {n} list-op requests:\n");
+    println!(
+        "{:<14} {:>4} {:>12} {:>12} {:>10}",
+        "method", "bs", "total(ms)", "ms/request", "agg TPS"
+    );
+    for method in [Method::Cdlm, Method::Ar, Method::Vanilla] {
+        let key = GroupKey { backbone: "dream".into(), method };
+        // warm-up every batch bucket (compiles are per-(program, bs))
+        for bs in [1usize, 2, 4] {
+            core.decode_group(&key, &prompts[..bs], &opts)?;
+        }
+        for bs in [1usize, 2, 4] {
+            let t0 = std::time::Instant::now();
+            let mut toks = 0usize;
+            for chunk in prompts.chunks(bs) {
+                let outs = core.decode_group(&key, chunk, &opts)?;
+                toks += outs.iter().map(|o| o.gen_len).sum::<usize>();
+            }
+            let total = t0.elapsed().as_secs_f64();
+            println!(
+                "{:<14} {:>4} {:>12.1} {:>12.1} {:>10.1}",
+                method.name(),
+                bs,
+                total * 1e3,
+                total * 1e3 / n as f64,
+                toks as f64 / total
+            );
+        }
+        println!();
+    }
+    println!(
+        "reading the shape (single-core CPU = compute-bound device):\n\
+         - vanilla DLM: per-request cost RISES with bs — it is already\n\
+           compute-saturated at bs=1, the Fig. 4 'vanilla DLM' regime;\n\
+         - CDLM / AR: per-request cost roughly flat — their small\n\
+           per-step compute amortizes fixed per-call overhead, the\n\
+           memory-bound-to-ridge regime (on an accelerator these two\n\
+           keep scaling until the ridge point, Fig. 9)."
+    );
+    Ok(())
+}

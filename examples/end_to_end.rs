@@ -1,0 +1,82 @@
+//! End-to-end validation driver (the run recorded in EXPERIMENTS.md):
+//! serve batched requests from every benchmark family through the full
+//! stack for every method on both backbones, and report the paper's
+//! metrics — TPS, per-sample latency, refinement steps, generation
+//! length, accuracy — proving all three layers compose:
+//!
+//!   L1 Pallas block-attention + confidence kernels (inside the HLO)
+//!   L2 AOT-lowered JAX student/teacher/AR programs
+//!   L3 rust router -> batcher -> scheduler -> exact block KV cache
+//!
+//! ```text
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+//! Env: CDLM_EVAL_N per-cell prompts (default 8), CDLM_BENCH_BS.
+
+use cdlm::bench_support as bench;
+use cdlm::coordinator::{DecodeOpts, Method};
+use cdlm::workload::FAMILIES;
+
+fn main() -> anyhow::Result<()> {
+    let Some(mut core) = bench::require_artifacts("end_to_end") else {
+        anyhow::bail!("artifacts missing — run `make artifacts`");
+    };
+    let n = bench::eval_n(8);
+    let geom = core.rt.manifest.geometry.clone();
+    let opts = DecodeOpts::defaults(&geom);
+    println!(
+        "end-to-end serving validation: {} prompts/cell, decode bs={}, platform {}",
+        n,
+        bench::bench_bs(),
+        core.rt.platform()
+    );
+
+    let methods = [
+        Method::Vanilla,
+        Method::DllmCache,
+        Method::FastDllmPar,
+        Method::FastDllmDc,
+        Method::Cdlm,
+        Method::Ar,
+    ];
+    let mut all = Vec::new();
+    for backbone in ["dream", "llada"] {
+        let mut rows = Vec::new();
+        for fam in FAMILIES {
+            for m in methods {
+                let r = bench::run_cell(&mut core, backbone, m, fam, n, &opts)?;
+                rows.push(r);
+            }
+        }
+        bench::print_paper_table(
+            &format!("end-to-end — {backbone} backbone"),
+            backbone,
+            &rows,
+            Method::Vanilla,
+        );
+        // headline check: CDLM must beat the naive DLM on latency in
+        // every family (the paper's 3.6x-14.5x claim, scaled)
+        for fam in FAMILIES {
+            let naive = rows
+                .iter()
+                .find(|r| r.family == fam && r.method == Method::Vanilla)
+                .unwrap();
+            let ours = rows
+                .iter()
+                .find(|r| r.family == fam && r.method == Method::Cdlm)
+                .unwrap();
+            let speedup = naive.latency_s / ours.latency_s.max(1e-9);
+            println!(
+                "  {}: CDLM latency speedup x{:.1}, step reduction x{:.1} {}",
+                fam.name(),
+                speedup,
+                naive.steps / ours.steps.max(1e-9),
+                if speedup > 1.0 { "(ok)" } else { "(!! slower than naive)" }
+            );
+        }
+        all.extend(rows);
+    }
+    bench::save_results("end_to_end", bench::rows_to_json(&all));
+    println!("\nKV pool peak in use: {}", core.pool.peak_in_use);
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Quickstart: load the serving core, decode one math prompt with CDLM,
+//! and compare against the naive diffusion baseline.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use cdlm::coordinator::{DecodeOpts, GroupKey, Method, ServingCore};
+use cdlm::server::http::encode_user_prompt;
+use cdlm::workload;
+
+fn main() -> anyhow::Result<()> {
+    let mut core = ServingCore::load(&cdlm::artifacts_dir(), 8)?;
+    let geom = core.rt.manifest.geometry.clone();
+    println!(
+        "loaded {} AOT programs on {} (geometry: P={} Lg={} B={})",
+        core.rt.manifest.programs.len(),
+        core.rt.platform(),
+        geom.prompt_len,
+        geom.gen_len,
+        geom.block_size
+    );
+
+    // a chain-arith problem with its 1-shot prefix, exactly like eval
+    let sample = workload::generate(workload::Family::ChainArith, 1, 42)
+        .pop()
+        .unwrap();
+    let enc = workload::encode_example(
+        &core.tokenizer,
+        workload::Family::ChainArith,
+        &sample,
+        geom.prompt_len,
+        geom.gen_len,
+    )?;
+    println!("\nprompt:    {}", sample.prompt);
+    println!("reference: {}", sample.answer);
+
+    let opts = DecodeOpts::defaults(&geom);
+    for method in [Method::Vanilla, Method::Cdlm] {
+        let key = GroupKey { backbone: "dream".into(), method };
+        let out = core
+            .decode_group(&key, &[enc.prompt_ids.clone()], &opts)?
+            .remove(0);
+        let text = core.tokenizer.decode(&out.gen, true);
+        println!(
+            "\n[{:<8}] {} \n  steps {:>3}  model calls {:>3}  latency {:>7.1} ms  answer {:?} ({})",
+            method.name(),
+            text,
+            out.steps,
+            out.model_calls,
+            out.latency.as_secs_f64() * 1e3,
+            workload::extract_final(&text).unwrap_or("-"),
+            if workload::score(&text, &sample) { "correct" } else { "wrong" },
+        );
+    }
+
+    // same entry point the HTTP server uses
+    let ids = encode_user_prompt(&core.tokenizer, "q:2+3*4=?", geom.prompt_len)?;
+    let key = GroupKey { backbone: "dream".into(), method: Method::Cdlm };
+    let out = core.decode_group(&key, &[ids], &opts)?.remove(0);
+    println!(
+        "\nad-hoc 'q:2+3*4=?' -> {:?} in {} steps",
+        core.tokenizer.decode(&out.gen, true),
+        out.steps
+    );
+    Ok(())
+}

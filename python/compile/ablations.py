@@ -1,0 +1,69 @@
+"""Ablation sweeps (paper Table 3): loss-weight composition.
+
+Trains six short CDLM students on the dream backbone with the paper's
+weight grid and records (score, steps-to-convergence) on the validation
+suite — the same two quantities Table 3 reports. Results land in
+``artifacts/ablations/table3.json``; the rust bench
+``table3_loss_weights`` formats them as the paper table.
+
+Run via ``make ablations`` (not part of the default build: it retrains
+six students).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from . import model as M
+from . import train_common as TC
+from .aot import eval_suite
+from .train_cdlm import train_cdlm
+from .trajectory import TrajectoryDataset
+
+# (w_distill, w_cons, w_dlm) — rows of paper Table 3 ('X' -> 0.0)
+GRID = [
+    (1.0, 0.0, 0.01),
+    (0.0, 1.0, 0.01),
+    (1.0, 1.0, 0.01),
+    (1.0, 1.0, 0.0),
+    (1.0, 0.1, 0.01),
+    (1.0, 0.1, 0.0),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+    cfg = M.ModelConfig()
+    steps = args.steps or (40 if TC.fast_mode() else 120)
+    teacher = TC.load_params(os.path.join(args.out, "weights_teacher_dream.npz"))
+    traj = TrajectoryDataset.load(os.path.join(args.out, "traj_dream.npz"))
+    rows = []
+    for (wd, wc, wm) in GRID:
+        print(f"[ablation] training w=({wd}, {wc}, {wm}) for {steps} steps",
+              flush=True)
+        student, _ = train_cdlm(cfg, teacher, traj, steps,
+                                weights=(wd, wc, wm), seed=7, log_every=100)
+        m = eval_suite(cfg, student, n=24)
+        m_math = m
+        m_code = eval_suite(cfg, student, n=24, seed=0xC0DE)
+        rows.append({
+            "w_distill": wd, "w_cons": wc, "w_dlm": wm,
+            "score": m_math["score"] * 100.0,
+            "steps_to_convergence": m_math["steps"],
+            "score_alt": m_code["score"] * 100.0,
+            "steps_alt": m_code["steps"],
+        })
+        print(f"[ablation] -> {rows[-1]}", flush=True)
+    os.makedirs(os.path.join(args.out, "ablations"), exist_ok=True)
+    with open(os.path.join(args.out, "ablations", "table3.json"), "w") as f:
+        json.dump({"steps": steps, "rows": rows}, f, indent=1)
+    print("[ablation] wrote ablations/table3.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,368 @@
+"""AOT pipeline: train → collect → distill → lower → export.
+
+``python -m compile.aot`` (driven by ``make artifacts``) produces
+everything the rust request path needs, then python is never imported
+again:
+
+  artifacts/
+    manifest.json        program table, shapes, weight arg order, geometry
+    vocab.json           tokenizer table (rust mirror golden-checks this)
+    hlo/<prog>_b<bs>[_B<blk>].hlo.txt
+    weights_{teacher,cdlm,ar}_{dream,llada}.npz
+    traj_{dream,llada}.npz          teacher trajectories (Alg. 1)
+    eval/<family>.json              eval prompt sets + references
+    golden/*.json                   cross-language parity fixtures
+    fig7.json                       validation-trend series (Fig. 7)
+
+HLO **text** is the interchange format (not serialized protos): jax>=0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Every step is skipped if its output already exists, so ``make artifacts``
+is incremental; ``CDLM_FAST=1`` shrinks training for development.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import decoding
+from . import model as M
+from . import tasks
+from . import train_common as TC
+from . import vocab
+from .train_ar import greedy_decode, train_ar
+from .train_cdlm import train_cdlm
+from .train_teacher import MIXTURES, SEEDS, train_teacher
+from .trajectory import TrajectoryDataset, collect
+
+BACKBONES = ("dream", "llada")
+BUCKETS = (1, 2, 4)
+SWEEP_BLOCKS = (2, 4, 16)  # Fig. 8 block-size sweep (default B=8 is in BUCKETS)
+EVAL_N = 64
+
+
+def art(path: str, *parts) -> str:
+    return os.path.join(path, *parts)
+
+
+# --------------------------------------------------------------------------
+# HLO lowering
+# --------------------------------------------------------------------------
+
+def to_hlo_text(fn, specs) -> str:
+    # keep_unused: every program takes the full weight set in the same
+    # order, even weights its computation does not touch (e.g. prefill
+    # never reads lm_head) — the rust runtime relies on that convention.
+    lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def program_table(cfg: M.ModelConfig, names: list[str]):
+    """(name, bs, blk, input specs, builder) for every AOT program.
+
+    Weight args always come first, in sorted-name order; the manifest and
+    the rust runtime share this convention.
+    """
+    L, H, dh = cfg.n_layers, cfg.n_heads, cfg.d_head
+    P, S, V = cfg.prompt_len, cfg.seq_len, cfg.vocab_size
+
+    def wspecs():
+        shapes = M.param_shapes(cfg)
+        return [f32(*shapes[n]) for n in names]
+
+    def wrap(body, n_extra):
+        def fn(*args):
+            p = dict(zip(names, args[:len(names)]))
+            return body(p, *args[len(names):])
+        return fn
+
+    table = []
+    for bs in BUCKETS:
+        cache = [f32(L, bs, H, S, dh)] * 2
+        B = cfg.block_size
+        table += [
+            ("teacher_denoise", bs, None,
+             wspecs() + [i32(bs, S), i32(bs)],
+             lambda p, ids, vf: M.teacher_denoise(cfg, p, ids, vf)),
+            ("teacher_full_cache", bs, None,
+             wspecs() + [i32(bs, S), i32(bs)],
+             lambda p, ids, vf: M.teacher_full_cache(cfg, p, ids, vf)),
+            ("teacher_block_approx", bs, B,
+             wspecs() + cache + [i32(bs), i32(bs, B), i32()],
+             lambda p, kc, vc, vf, blk, pos0: M.teacher_block_approx(
+                 cfg, p, kc, vc, vf, blk, pos0)),
+            ("student_prefill", bs, None,
+             wspecs() + [i32(bs, P), i32(bs)],
+             lambda p, ids, vf: M.student_prefill(cfg, p, ids, vf)),
+            ("student_block_step", bs, B,
+             wspecs() + cache + [i32(), i32(bs), i32(bs, B), i32()],
+             lambda p, kc, vc, cl, vf, blk, pos0: M.student_block_step(
+                 cfg, p, kc, vc, cl, vf, blk, pos0)),
+            ("ar_prefill", bs, None,
+             wspecs() + [i32(bs, P), i32(bs)],
+             lambda p, ids, vf: M.ar_prefill(cfg, p, ids, vf)),
+            ("ar_step", bs, None,
+             wspecs() + cache + [i32(), i32(bs), i32(bs)],
+             lambda p, kc, vc, cl, vf, tok: M.ar_step(
+                 cfg, p, kc, vc, cl, vf, tok)),
+            # Appendix C extension: parallel AR verification of a
+            # CDLM-drafted block (speculative decoding)
+            ("ar_verify", bs, B,
+             wspecs() + cache + [i32(), i32(bs), i32(bs, B), i32()],
+             lambda p, kc, vc, cl, vf, blk, pos0: M.ar_verify(
+                 cfg, p, kc, vc, cl, vf, blk, pos0)),
+        ]
+    # Fig. 8: block-size sweep variants (bs=1 only)
+    for B in SWEEP_BLOCKS:
+        cache = [f32(L, 1, H, S, dh)] * 2
+        table.append(
+            ("student_block_step", 1, B,
+             wspecs() + cache + [i32(), i32(1), i32(1, B), i32()],
+             lambda p, kc, vc, cl, vf, blk, pos0: M.student_block_step(
+                 cfg, p, kc, vc, cl, vf, blk, pos0)))
+    return table
+
+
+def prog_filename(name: str, bs: int, blk) -> str:
+    base = f"{name}_b{bs}"
+    if blk is not None:
+        base += f"_B{blk}"
+    return base + ".hlo.txt"
+
+
+def export_hlo(cfg: M.ModelConfig, out_dir: str, force: bool = False):
+    names = sorted(M.param_shapes(cfg))
+    os.makedirs(art(out_dir, "hlo"), exist_ok=True)
+    entries = []
+    for name, bs, blk, specs, body in program_table(cfg, names):
+        fname = prog_filename(name, bs, blk)
+        path = art(out_dir, "hlo", fname)
+        entry = {
+            "name": name, "bs": bs, "block": blk, "file": f"hlo/{fname}",
+            "inputs": [{"shape": list(s.shape),
+                        "dtype": str(s.dtype)} for s in specs],
+        }
+        entries.append(entry)
+        if os.path.exists(path) and not force:
+            continue
+        t0 = time.time()
+
+        def fn(*args, _body=body):
+            p = dict(zip(names, args[:len(names)]))
+            return _body(p, *args[len(names):])
+
+        text = to_hlo_text(fn, specs)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] lowered {fname} ({len(text)} chars, "
+              f"{time.time()-t0:.1f}s)", flush=True)
+    return entries
+
+
+# --------------------------------------------------------------------------
+# Eval sets + goldens
+# --------------------------------------------------------------------------
+
+def export_eval_sets(cfg: M.ModelConfig, out_dir: str):
+    os.makedirs(art(out_dir, "eval"), exist_ok=True)
+    for fam in tasks.FAMILIES:
+        path = art(out_dir, "eval", f"{fam}.json")
+        if os.path.exists(path):
+            continue
+        prompts, answers, samples = TC.encode_family_batch(
+            cfg, fam, EVAL_N, seed=0xE7A1)
+        data = {
+            "family": fam,
+            "paper_analogue": tasks.PAPER_ANALOGUE[fam],
+            "num_shots": tasks.NUM_SHOTS[fam],
+            "prompt_len": cfg.prompt_len,
+            "gen_len": cfg.gen_len,
+            "prompts": prompts.tolist(),
+            "ref_answers": answers.tolist(),
+            "finals": [s.final for s in samples],
+        }
+        with open(path, "w") as f:
+            json.dump(data, f)
+        print(f"[aot] wrote eval/{fam}.json")
+
+
+def export_goldens(cfg: M.ModelConfig, out_dir: str, weights: dict):
+    """Cross-language parity fixtures for the rust test suite."""
+    os.makedirs(art(out_dir, "golden"), exist_ok=True)
+
+    # tokenizer golden
+    path = art(out_dir, "golden", "tokenizer.json")
+    if not os.path.exists(path):
+        texts = ["q:3*4+5=?a:", "#17;", "q:rev(catx)=?a:",
+                 "0123456789abcxyz+-*=;#:?(),.><[] "]
+        with open(path, "w") as f:
+            json.dump({"cases": [{"text": t, "ids": vocab.encode(t)}
+                                 for t in texts]}, f)
+
+    # task-generation golden (SplitMix64 parity)
+    path = art(out_dir, "golden", "tasks.json")
+    if not os.path.exists(path):
+        out = {}
+        for fam in tasks.FAMILIES:
+            ss = tasks.generate(fam, 8, seed=0xBEEF)
+            out[fam] = [{"prompt": s.prompt, "answer": s.answer,
+                         "final": s.final} for s in ss]
+        with open(path, "w") as f:
+            json.dump(out, f)
+
+    # decode-parity goldens: python reference decoders on trained weights
+    path = art(out_dir, "golden", "decode_parity.json")
+    if not os.path.exists(path):
+        t_params = TC.load_params(weights["teacher_dream"])
+        s_params = TC.load_params(weights["cdlm_dream"])
+        a_params = TC.load_params(weights["ar_dream"])
+        prompts, _, samples = TC.encode_family_batch(
+            cfg, "chain-arith", 4, seed=0x60D)
+        fix = {"prompts": prompts.tolist()}
+        r = decoding.teacher_block_decode(cfg, t_params, prompts)
+        fix["vanilla_ids"] = r.ids[:, cfg.prompt_len:].tolist()
+        fix["vanilla_steps"] = r.steps.tolist()
+        r = decoding.student_cdlm_decode(cfg, s_params, prompts,
+                                         tau_conf=0.9)
+        fix["cdlm_ids"] = r.ids[:, cfg.prompt_len:].tolist()
+        fix["cdlm_steps"] = r.steps.tolist()
+        gen, steps = greedy_decode(cfg, a_params, prompts)
+        fix["ar_ids"] = gen.tolist()
+        fix["ar_steps"] = steps.tolist()
+        with open(path, "w") as f:
+            json.dump(fix, f)
+        print("[aot] wrote golden/decode_parity.json")
+
+
+# --------------------------------------------------------------------------
+# Training orchestration
+# --------------------------------------------------------------------------
+
+def eval_suite(cfg: M.ModelConfig, params, n: int = 16, seed: int = 0xF17):
+    """Small validation suite: score + mean steps on chain-arith via the
+    python CDLM reference decoder (drives Fig. 7 and Table 3 metrics)."""
+    p, _, samples = TC.encode_family_batch(cfg, "chain-arith", n, seed)
+    res = decoding.student_cdlm_decode(cfg, params, p, tau_conf=0.9)
+    return {"score": decoding.score_batch(cfg, res, samples),
+            "steps": float(np.mean(res.steps))}
+
+
+def ensure_weights(cfg: M.ModelConfig, out_dir: str) -> dict:
+    fast = TC.fast_mode()
+    teacher_steps = 200 if fast else 3000
+    ar_steps = 150 if fast else 1000
+    cdlm_steps = 120 if fast else 300
+    traj_n = 32 if fast else 96
+    paths = {}
+    for b in BACKBONES:
+        tp = art(out_dir, f"weights_teacher_{b}.npz")
+        paths[f"teacher_{b}"] = tp
+        if not os.path.exists(tp):
+            print(f"[aot] training teacher-{b} ({teacher_steps} steps)…",
+                  flush=True)
+            params, _ = train_teacher(cfg, b, teacher_steps)
+            TC.save_params(tp, params)
+        ap = art(out_dir, f"weights_ar_{b}.npz")
+        paths[f"ar_{b}"] = ap
+        if not os.path.exists(ap):
+            print(f"[aot] training ar-{b} ({ar_steps} steps)…", flush=True)
+            TC.save_params(ap, train_ar(cfg, b, ar_steps))
+        jp = art(out_dir, f"traj_{b}.npz")
+        paths[f"traj_{b}"] = jp
+        if not os.path.exists(jp):
+            print(f"[aot] collecting trajectories for {b} "
+                  f"({traj_n} prompts x {len('xx')} temps)…", flush=True)
+            t_params = TC.load_params(tp)
+            traj = collect(cfg, t_params, MIXTURES[b], traj_n,
+                           seed=SEEDS[b] + 300)
+            traj.save(jp)
+        cp = art(out_dir, f"weights_cdlm_{b}.npz")
+        paths[f"cdlm_{b}"] = cp
+        if not os.path.exists(cp):
+            print(f"[aot] CDLM distillation for {b} "
+                  f"({cdlm_steps} steps)…", flush=True)
+            t_params = TC.load_params(tp)
+            traj = TrajectoryDataset.load(jp)
+            w_dlm = 0.01 if b == "dream" else 0.1  # paper Tables 5/6
+            hook = (lambda mp: eval_suite(cfg, mp)) if b == "dream" else None
+            student, hist = train_cdlm(
+                cfg, t_params, traj, cdlm_steps,
+                weights=(1.0, 0.5, w_dlm), seed=SEEDS[b],
+                eval_hook=hook,
+                eval_every=max(1, cdlm_steps // 6) if hook else None)
+            TC.save_params(cp, student)
+            if hist:
+                with open(art(out_dir, "fig7.json"), "w") as f:
+                    json.dump({"backbone": b, "history": hist}, f)
+                print("[aot] wrote fig7.json")
+    return paths
+
+
+# --------------------------------------------------------------------------
+# Main
+# --------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force-hlo", action="store_true")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    cfg = M.ModelConfig()
+
+    with open(art(out, "vocab.json"), "w") as f:
+        f.write(vocab.to_json())
+
+    weights = ensure_weights(cfg, out)
+    entries = export_hlo(cfg, out, force=args.force_hlo)
+    export_eval_sets(cfg, out)
+    export_goldens(cfg, out, weights)
+
+    manifest = {
+        "geometry": {
+            "vocab_size": cfg.vocab_size, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_head": cfg.d_head, "d_ff": cfg.d_ff,
+            "prompt_len": cfg.prompt_len, "gen_len": cfg.gen_len,
+            "block_size": cfg.block_size, "seq_len": cfg.seq_len,
+            "pad": vocab.PAD, "mask": vocab.MASK, "bos": vocab.BOS,
+            "eos": vocab.EOS,
+        },
+        "weight_names": sorted(M.param_shapes(cfg)),
+        "buckets": list(BUCKETS),
+        "sweep_blocks": list(SWEEP_BLOCKS),
+        "programs": entries,
+        "models": {
+            k: os.path.basename(v) for k, v in weights.items()
+            if not k.startswith("traj")
+        },
+        "fast_mode": TC.fast_mode(),
+    }
+    with open(art(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest written; {len(entries)} programs")
+
+
+if __name__ == "__main__":
+    main()

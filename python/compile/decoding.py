@@ -1,0 +1,216 @@
+"""Reference (python-side) decoders.
+
+These run only at build time, for three purposes:
+  1. teacher trajectory collection (Algorithm 1),
+  2. validation metrics during training (Fig. 7, Table 3 convergence),
+  3. golden parity with the rust decode engines (rust integration tests
+     replay the same inputs and must produce identical token streams).
+
+The rust coordinator re-implements the same policies on top of the AOT
+executables; any drift is a test failure, not a judgement call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from . import vocab
+
+
+@dataclasses.dataclass
+class DecodeResult:
+    ids: np.ndarray          # [bs, S] final sequences
+    steps: np.ndarray        # [bs] refinement steps executed (per sample)
+    gen_len: np.ndarray      # [bs] valid generated tokens (pre-<eos>)
+    trace: list | None = None  # optional per-step trace (trajectories)
+
+
+def _prep(cfg: M.ModelConfig, prompts: np.ndarray) -> np.ndarray:
+    """[bs, P] prompts -> [bs, S] with the generation span masked."""
+    bs = prompts.shape[0]
+    gen = np.full((bs, cfg.gen_len), vocab.MASK, np.int32)
+    return np.concatenate([prompts, gen], axis=1)
+
+
+def _valid_from(prompts: np.ndarray) -> np.ndarray:
+    """First non-pad index per row (prompts are left-padded)."""
+    is_pad = prompts == vocab.PAD
+    # index of first non-pad; all-pad rows are invalid inputs
+    return is_pad.argmin(axis=1).astype(np.int32)
+
+
+def _gen_length(row: np.ndarray) -> int:
+    """Valid tokens before the first <eos> (paper §A.3 accounting)."""
+    eos = np.nonzero(row == vocab.EOS)[0]
+    end = int(eos[0]) if len(eos) else len(row)
+    return int(np.sum(row[:end] != vocab.MASK))
+
+
+def sample_tokens(logits: jnp.ndarray, temperature: float, key):
+    """Greedy (tau=0) or temperature sampling; returns (tok, conf) where
+    conf is the softmax probability of the chosen token."""
+    lg = logits.astype(jnp.float32)
+    probs = jax.nn.softmax(lg, axis=-1)
+    if temperature <= 0.0:
+        tok = jnp.argmax(lg, axis=-1)
+    else:
+        tok = jax.random.categorical(key, lg / temperature, axis=-1)
+    conf = jnp.take_along_axis(probs, tok[..., None], axis=-1)[..., 0]
+    return tok.astype(jnp.int32), conf
+
+
+def teacher_block_decode(cfg: M.ModelConfig, params, prompts: np.ndarray,
+                         temperature: float = 0.0, seed: int = 0,
+                         collect: bool = False,
+                         steps_per_block: int | None = None) -> DecodeResult:
+    """Block-wise decoding with the bidirectional teacher.
+
+    The paper's most-performant teacher operating point (§4.1): N = Lg
+    total steps, exactly one (top-confidence) token finalized per step,
+    restricted to the active block. ``steps_per_block`` < B gives the
+    naive step-truncation baseline of Table 4 (finalize top-m per step).
+
+    When ``collect``, returns per-step (position, token, hidden) tuples —
+    the raw material of the trajectory dataset (Algorithm 1).
+    """
+    bs = prompts.shape[0]
+    P, B, S = cfg.prompt_len, cfg.block_size, cfg.seq_len
+    spb = B if steps_per_block is None else steps_per_block
+    ids = _prep(cfg, prompts)
+    vf = jnp.asarray(_valid_from(prompts))
+    key = jax.random.PRNGKey(seed)
+    steps = np.zeros(bs, np.int64)
+    trace: list[list[tuple[int, int, np.ndarray]]] = [[] for _ in range(bs)]
+
+    fwd = jax.jit(lambda p, i: M.forward_full(
+        cfg, p, i,
+        (jnp.arange(S)[None, None, :] >= vf[:, None, None])
+        & jnp.ones((bs, S, 1), bool),
+        collect_hidden=True))
+
+    jids = jnp.asarray(ids)
+    for b in range(cfg.num_blocks):
+        lo, hi = P + b * B, P + (b + 1) * B
+        for _ in range(spb):
+            masked = jids[:, lo:hi] == vocab.MASK
+            if not bool(masked.any()):
+                break
+            logits, hidden = fwd(params, jids)
+            key, sub = jax.random.split(key)
+            tok, conf = sample_tokens(logits[:, lo:hi, :], temperature, sub)
+            # finalize the top-m highest-confidence masked positions
+            m = max(1, int(np.ceil(B / spb)))
+            conf = jnp.where(masked, conf, -1.0)
+            order = jnp.argsort(-conf, axis=-1)[:, :m]  # [bs, m]
+            take = jnp.zeros_like(masked).at[
+                jnp.arange(bs)[:, None], order].set(True) & masked
+            new_blk = jnp.where(take, tok, jids[:, lo:hi])
+            jids = jids.at[:, lo:hi].set(new_blk)
+            steps += 1
+            if collect:
+                h_np = np.asarray(hidden[:, lo:hi, :])
+                take_np = np.asarray(take)
+                tok_np = np.asarray(tok)
+                for r in range(bs):
+                    for j in np.nonzero(take_np[r])[0]:
+                        trace[r].append(
+                            (lo + int(j), int(tok_np[r, j]), h_np[r, j]))
+    ids = np.asarray(jids)
+    gl = np.array([_gen_length(ids[r, P:]) for r in range(bs)])
+    return DecodeResult(ids, steps, gl, trace if collect else None)
+
+
+def student_cdlm_decode(cfg: M.ModelConfig, params, prompts: np.ndarray,
+                        tau_conf: float = 0.9,
+                        block_size: int | None = None) -> DecodeResult:
+    """Reference CDLM inference (paper §4.3): block-causal student with
+    exact KV caching, confidence-thresholded parallel finalization, and
+    <eos> early stopping at block boundaries.
+
+    This mirrors the rust `methods/cdlm.rs` engine step for step; parity
+    is enforced by integration tests. ``block_size`` may differ from the
+    training block (Fig. 8 sensitivity sweep) as long as it divides Lg.
+    """
+    bs = prompts.shape[0]
+    P, Lg, S = cfg.prompt_len, cfg.gen_len, cfg.seq_len
+    B = cfg.block_size if block_size is None else block_size
+    assert Lg % B == 0
+    nblocks = Lg // B
+    vf = jnp.asarray(_valid_from(prompts))
+
+    prefill = jax.jit(lambda p, i, v: M.student_prefill(cfg, p, i, v))
+    step_fn = jax.jit(lambda p, kc, vc, cl, v, blk, pos: M.student_block_step(
+        cfg, p, kc, vc, cl, v, blk, pos))
+
+    k_blkcache, v_blkcache = prefill(params, jnp.asarray(prompts), vf)
+    # full-size cache buffers [L, bs, H, S, dh], prompt KV installed
+    L, _, H, _, dh = k_blkcache.shape
+    k_cache = jnp.zeros((L, bs, H, S, dh), jnp.float32)
+    v_cache = jnp.zeros((L, bs, H, S, dh), jnp.float32)
+    k_cache = k_cache.at[:, :, :, :P, :].set(k_blkcache)
+    v_cache = v_cache.at[:, :, :, :P, :].set(v_blkcache)
+
+    gen = np.full((bs, Lg), vocab.MASK, np.int32)
+    steps = np.zeros(bs, np.int64)
+    done = np.zeros(bs, bool)
+    cache_len = P
+    for b in range(nblocks):
+        lo = b * B
+        active = ~done
+        if not active.any():
+            break
+        blk = jnp.asarray(gen[:, lo:lo + B])
+        while True:
+            masked = np.asarray(blk) == vocab.MASK
+            if not masked[active].any():
+                break
+            _, tok, conf, kb, vb = step_fn(
+                params, k_cache, v_cache, jnp.int32(cache_len), vf, blk,
+                jnp.int32(P + lo))
+            steps[active] += 1
+            tok_np, conf_np = np.asarray(tok), np.asarray(conf)
+            for r in np.nonzero(active)[0]:
+                mrow = masked[r]
+                if not mrow.any():
+                    continue
+                sel = mrow & (conf_np[r] >= tau_conf)
+                if not sel.any():
+                    # always finalize at least the most confident token
+                    cand = np.where(mrow, conf_np[r], -1.0)
+                    sel = np.zeros_like(mrow)
+                    sel[int(cand.argmax())] = True
+                row = np.array(blk[r])  # copy: jax arrays are read-only
+                row[sel] = tok_np[r][sel]
+                blk = blk.at[r].set(jnp.asarray(row))
+            gen[:, lo:lo + B] = np.asarray(blk)
+        # commit: one extra pass over the finalized block so the cache
+        # holds KV of the *final* tokens (exact caching; DESIGN.md §7)
+        _, _, _, kb, vb = step_fn(
+            params, k_cache, v_cache, jnp.int32(cache_len), vf, blk,
+            jnp.int32(P + lo))
+        k_cache = k_cache.at[:, :, :, cache_len:cache_len + B, :].set(kb)
+        v_cache = v_cache.at[:, :, :, cache_len:cache_len + B, :].set(vb)
+        cache_len += B
+        # early stop: a finalized <eos> inside the block ends the request
+        for r in range(bs):
+            if not done[r] and (gen[r, lo:lo + B] == vocab.EOS).any():
+                done[r] = True
+    ids = np.concatenate([prompts, gen], axis=1)
+    gl = np.array([_gen_length(gen[r]) for r in range(bs)])
+    return DecodeResult(ids, steps, gl)
+
+
+def score_batch(cfg: M.ModelConfig, res: DecodeResult, samples) -> float:
+    """Exact-match accuracy over decoded answers (tasks.score protocol)."""
+    from . import tasks
+    P = cfg.prompt_len
+    n_ok = 0
+    for r, s in enumerate(samples):
+        text = vocab.decode(res.ids[r, P:])
+        n_ok += bool(tasks.score(text, s))
+    return n_ok / max(1, len(samples))

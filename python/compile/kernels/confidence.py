@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: fused confidence head for thresholded finalization.
+
+After each refinement step the coordinator needs, for every masked
+position of the active block, the greedy token and its softmax
+probability (the paper's token-level confidence, §4.3 / Fast-dLLM). Doing
+this on-device fuses the softmax + argmax into the decode executable, so
+the rust hot path never sees raw logits unless it asks for them.
+
+Numerically this is a single-pass max / log-sum-exp: conf = exp(max - lse).
+Oracle: ``ref.ref_confidence``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conf_kernel(lg_ref, tok_ref, conf_ref):
+    """One grid cell per block position: [1, V] logits -> token + conf."""
+    lg = lg_ref[0].astype(jnp.float32)  # [V]
+    m = jnp.max(lg)
+    tok_ref[0] = jnp.argmax(lg).astype(jnp.int32)
+    lse = m + jnp.log(jnp.sum(jnp.exp(lg - m)))
+    conf_ref[0] = jnp.exp(m - lse)
+
+
+@jax.jit
+def confidence(logits):
+    """Greedy token + confidence per position.
+
+    logits [B, V] -> (tok int32 [B], conf float32 [B]).
+    """
+    B, V = logits.shape
+    return pl.pallas_call(
+        _conf_kernel,
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, V), lambda b: (b, 0))],
+        out_specs=[
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+        ],
+        interpret=True,
+    )(logits)
+
+
+def confidence_batched(logits):
+    """vmap over a leading batch dim: [bs, B, V] -> ([bs, B], [bs, B])."""
+    return jax.vmap(confidence)(logits)

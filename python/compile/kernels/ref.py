@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest (with hypothesis sweeps over
+shapes / cache lengths / dtypes) asserts the Pallas kernels in
+``block_attn.py`` and ``confidence.py`` match these to tight tolerances.
+They are also used directly by the teacher model (full bidirectional
+attention is not the serving hot-spot, so it stays as plain jnp / XLA).
+"""
+
+from __future__ import annotations
+
+import jax.nn
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_block_attn(q, k_cache, v_cache, k_blk, v_blk, cache_len, valid_from,
+                   sm_scale=None, excl_start=0, excl_len=0,
+                   intra_causal=False):
+    """Reference block-causal cached attention for one sequence.
+
+    The active block's queries attend to
+      * cache positions ``valid_from <= idx < cache_len`` (prompt +
+        previously committed blocks; left-pad positions below
+        ``valid_from`` are masked), minus an optional exclusion window
+        ``[excl_start, excl_start + excl_len)`` — used by the Fast-dLLM
+        dual-cache baseline, whose *stale* full-sequence cache must not
+        shadow the freshly computed active block, and
+      * every position of the active block itself (within-block attention
+        is fully bidirectional — the defining property of block-causal
+        DLMs, paper Fig. 2).
+
+    Shapes: q/k_blk/v_blk [H, B, dh]; k_cache/v_cache [H, T, dh].
+    Returns o [H, B, dh] (f32).
+    """
+    H, B, dh = q.shape
+    T = k_cache.shape[1]
+    scale = sm_scale if sm_scale is not None else 1.0 / jnp.sqrt(dh)
+    q = q.astype(jnp.float32) * scale
+    sc = jnp.einsum("hbd,htd->hbt", q, k_cache.astype(jnp.float32))
+    sb = jnp.einsum("hbd,hkd->hbk", q, k_blk.astype(jnp.float32))
+    idx = jnp.arange(T)
+    mask_c = (idx >= valid_from) & (idx < cache_len)
+    mask_c &= ~((idx >= excl_start) & (idx < excl_start + excl_len))
+    sc = jnp.where(mask_c[None, None, :], sc, NEG_INF)
+    if intra_causal:
+        qi = jnp.arange(B)
+        sb = jnp.where(qi[None, None, :] <= qi[None, :, None], sb, NEG_INF)
+    s = jnp.concatenate([sc, sb], axis=-1)  # [H, B, T+B]
+    p = jax.nn.softmax(s, axis=-1)
+    v = jnp.concatenate(
+        [v_cache.astype(jnp.float32), v_blk.astype(jnp.float32)], axis=1
+    )
+    return jnp.einsum("hbt,htd->hbd", p, v)
+
+
+def ref_confidence(logits):
+    """Reference confidence head: per-position greedy token + probability.
+
+    logits [..., V] -> (tok i32 [...], conf f32 [...]) where conf is the
+    softmax probability of the argmax token (the paper's token-level
+    confidence for thresholded parallel finalization, §4.3).
+    """
+    lg = logits.astype(jnp.float32)
+    tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    m = jnp.max(lg, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(lg - m[..., None]), axis=-1))
+    conf = jnp.exp(m - lse)
+    return tok, conf
+
+
+def ref_masked_attention(x_q, x_kv, mask):
+    """Generic masked attention used by model-level tests.
+
+    x_q [Sq, H, dh], x_kv [Sk, H, dh], mask [Sq, Sk] boolean.
+    """
+    Sq, H, dh = x_q.shape
+    scale = 1.0 / jnp.sqrt(dh)
+    s = jnp.einsum("qhd,khd->hqk", x_q.astype(jnp.float32) * scale,
+                   x_kv.astype(jnp.float32))
+    s = jnp.where(mask[None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,khd->qhd", p, x_kv.astype(jnp.float32))

@@ -1,0 +1,452 @@
+"""L2: the transformer backbone for teacher / student / AR variants.
+
+A single purely-functional architecture serves all three roles — only the
+attention *mask* (and for the student, LoRA adapters) differs:
+
+  teacher   fully bidirectional over the whole padded sequence (paper
+            Fig. 2 left);
+  student   block-wise causal: every position sees the full prompt;
+            generation position i in block b sees generation blocks <= b,
+            with full bidirectional attention inside a block (Fig. 2
+            right);
+  AR        standard causal mask (the equal-size autoregressive baseline
+            of Fig. 3).
+
+Architecture: pre-RMSNorm, RoPE, multi-head attention, SwiGLU MLP,
+untied lm_head. All decode-path entry points (prefill / block_step /
+ar_step / teacher block-approx) call the L1 Pallas kernels so that the
+AOT-lowered HLO contains the fused hot path.
+
+Everything here is init/apply style over a flat dict of jnp arrays, so
+weights round-trip trivially through ``weights.npz`` to the rust runtime.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.block_attn import block_attn_batched
+from .kernels.confidence import confidence, confidence_batched
+from .kernels.ref import NEG_INF
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab_size: int = 64
+    d_model: int = 96
+    n_layers: int = 3
+    n_heads: int = 4
+    d_ff: int = 192
+    prompt_len: int = 64   # P: prompts left-padded to this length
+    gen_len: int = 32      # Lg: generation budget (paper: 256)
+    block_size: int = 8    # B: decode block (paper: 32)
+    rope_base: float = 10000.0
+    lora_rank: int = 8     # student LoRA rank (paper: 32/64)
+    lora_alpha: float = 16.0
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def seq_len(self) -> int:
+        return self.prompt_len + self.gen_len
+
+    @property
+    def num_blocks(self) -> int:
+        assert self.gen_len % self.block_size == 0
+        return self.gen_len // self.block_size
+
+
+# LoRA is applied to the same projection set the paper targets (Table 5):
+# attention q/k/v/o and the SwiGLU gate/up/down.
+LORA_TARGETS = ("wq", "wk", "wv", "wo", "wg", "wu", "wd")
+
+
+# --------------------------------------------------------------------------
+# Parameter init / manipulation
+# --------------------------------------------------------------------------
+
+def param_shapes(cfg: ModelConfig) -> dict[str, tuple[int, ...]]:
+    """Flat name -> shape map. The sorted key order is the canonical weight
+    argument order of every AOT program (manifest + rust agree on it)."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    shapes: dict[str, tuple[int, ...]] = {"emb": (v, d), "head": (d, v), "lnf": (d,)}
+    for l in range(cfg.n_layers):
+        p = f"l{l}."
+        shapes[p + "wq"] = (d, d)
+        shapes[p + "wk"] = (d, d)
+        shapes[p + "wv"] = (d, d)
+        shapes[p + "wo"] = (d, d)
+        shapes[p + "wg"] = (d, f)
+        shapes[p + "wu"] = (d, f)
+        shapes[p + "wd"] = (f, d)
+        shapes[p + "ln1"] = (d,)
+        shapes[p + "ln2"] = (d,)
+    return shapes
+
+
+def init_params(cfg: ModelConfig, key) -> dict[str, jnp.ndarray]:
+    shapes = param_shapes(cfg)
+    params = {}
+    keys = jax.random.split(key, len(shapes))
+    for k, (name, shp) in zip(keys, sorted(shapes.items())):
+        if name.endswith(("ln1", "ln2", "lnf")):
+            params[name] = jnp.ones(shp, jnp.float32)
+        else:
+            fan_in = shp[0]
+            params[name] = (jax.random.normal(k, shp, jnp.float32)
+                            / jnp.sqrt(fan_in))
+    return params
+
+
+def init_lora(cfg: ModelConfig, key) -> dict[str, jnp.ndarray]:
+    """LoRA adapters: for every target W [m, n], A [m, r] ~ N(0, 1/m) and
+    B [r, n] = 0 (standard zero-init so the student starts == teacher)."""
+    lora = {}
+    shapes = param_shapes(cfg)
+    targets = [n for n in sorted(shapes) if n.split(".")[-1] in LORA_TARGETS]
+    keys = jax.random.split(key, len(targets))
+    for k, name in zip(keys, targets):
+        m, n = shapes[name]
+        r = cfg.lora_rank
+        lora[name + ".A"] = jax.random.normal(k, (m, r), jnp.float32) / jnp.sqrt(m)
+        lora[name + ".B"] = jnp.zeros((r, n), jnp.float32)
+    return lora
+
+
+def merge_lora(cfg: ModelConfig, params, lora) -> dict[str, jnp.ndarray]:
+    """Fold adapters into dense weights: W' = W + (alpha/r) A @ B.
+
+    Exported students are always merged, so every AOT program takes one
+    dense weight set regardless of how it was trained."""
+    scale = cfg.lora_alpha / cfg.lora_rank
+    out = dict(params)
+    for name in params:
+        a, b = lora.get(name + ".A"), lora.get(name + ".B")
+        if a is not None:
+            out[name] = params[name] + scale * (a @ b)
+    return out
+
+
+def apply_lora(cfg: ModelConfig, params, lora):
+    """Functional view of merged weights (used inside the training step so
+    gradients flow to the adapters only)."""
+    return merge_lora(cfg, params, lora)
+
+
+# --------------------------------------------------------------------------
+# Masks
+# --------------------------------------------------------------------------
+
+def bidirectional_mask(cfg: ModelConfig, valid_from):
+    """[S, S]: everyone attends to every valid (non-pad) position."""
+    S = cfg.seq_len
+    idx = jnp.arange(S)
+    valid = idx >= valid_from
+    return valid[None, :] & jnp.ones((S, 1), bool)
+
+
+def causal_mask(cfg: ModelConfig, valid_from):
+    S = cfg.seq_len
+    idx = jnp.arange(S)
+    valid = idx >= valid_from
+    return (idx[None, :] <= idx[:, None]) & valid[None, :]
+
+
+def block_causal_mask(cfg: ModelConfig, valid_from):
+    """The student mask (paper Fig. 2 right).
+
+    * Every position sees the full (non-pad) prompt.
+    * A generation position in block b sees generation blocks <= b; within
+      a block, attention is fully bidirectional.
+    * Prompt positions see only the prompt.
+    """
+    S, P, B = cfg.seq_len, cfg.prompt_len, cfg.block_size
+    idx = jnp.arange(S)
+    valid = idx >= valid_from
+    is_prompt = idx < P
+    blk = jnp.where(is_prompt, -1, (idx - P) // B)
+    allowed = is_prompt[None, :] | (blk[None, :] <= blk[:, None])
+    return allowed & valid[None, :]
+
+
+# --------------------------------------------------------------------------
+# Core transformer pieces
+# --------------------------------------------------------------------------
+
+def rms_norm(x, g, eps: float = 1e-6):
+    x = x.astype(jnp.float32)
+    return g * x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def rope(x, positions, base: float):
+    """Rotary embedding. x [..., S, H, dh]; positions [..., S] int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = base ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # [..., S, half]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _qkv(cfg: ModelConfig, params, layer: int, x, positions):
+    """Project + reshape + RoPE. x [..., S, d] -> q,k,v [..., S, H, dh]."""
+    p = f"l{layer}."
+    H, dh = cfg.n_heads, cfg.d_head
+    shp = x.shape[:-1] + (H, dh)
+    q = (x @ params[p + "wq"]).reshape(shp)
+    k = (x @ params[p + "wk"]).reshape(shp)
+    v = (x @ params[p + "wv"]).reshape(shp)
+    q = rope(q, positions, cfg.rope_base)
+    k = rope(k, positions, cfg.rope_base)
+    return q, k, v
+
+
+def _mlp(cfg: ModelConfig, params, layer: int, x):
+    p = f"l{layer}."
+    return (jax.nn.silu(x @ params[p + "wg"]) * (x @ params[p + "wu"])) \
+        @ params[p + "wd"]
+
+
+def forward_full(cfg: ModelConfig, params, ids, mask, collect_kv=False,
+                 collect_hidden=False):
+    """Full-sequence forward with an explicit [S, S] (or [bs, S, S]) mask.
+
+    ids [bs, S] int32. Returns logits [bs, S, V], plus optionally the
+    per-layer post-RoPE K/V stacks ([L, bs, H, S, dh]) and the final
+    pre-head hidden states ([bs, S, d] — the paper's hidden-state buffer
+    source, §4.1).
+    """
+    bs, S = ids.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (bs, S))
+    x = params["emb"][ids]
+    if mask.ndim == 2:
+        mask = jnp.broadcast_to(mask, (bs, S, S))
+    ks, vs = [], []
+    scale = 1.0 / jnp.sqrt(cfg.d_head)
+    for l in range(cfg.n_layers):
+        h = rms_norm(x, params[f"l{l}.ln1"])
+        q, k, v = _qkv(cfg, params, l, h, positions)
+        if collect_kv:
+            ks.append(k)
+            vs.append(v)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q * scale, k)
+        s = jnp.where(mask[:, None, :, :], s, NEG_INF)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(bs, S, cfg.d_model)
+        x = x + o @ params[f"l{l}.wo"]
+        x = x + _mlp(cfg, params, l, rms_norm(x, params[f"l{l}.ln2"]))
+    hidden = rms_norm(x, params["lnf"])
+    logits = hidden @ params["head"]
+    out = [logits]
+    if collect_kv:
+        # [L, bs, H, S, dh] — head-major to match the Pallas cache layout
+        out.append(jnp.stack(ks).transpose(0, 1, 3, 2, 4))
+        out.append(jnp.stack(vs).transpose(0, 1, 3, 2, 4))
+    if collect_hidden:
+        out.append(hidden)
+    return tuple(out) if len(out) > 1 else logits
+
+
+# --------------------------------------------------------------------------
+# Decode-path programs (these are what aot.py lowers)
+# --------------------------------------------------------------------------
+
+def student_prefill(cfg: ModelConfig, params, prompt_ids, valid_from):
+    """Prompt -> exact prompt KV cache.
+
+    prompt_ids [bs, P]; valid_from [bs] (first non-pad index).
+    Returns (k, v) [L, bs, H, P, dh]. Within the prompt, attention is fully
+    bidirectional (the prompt is given context, visible to all blocks —
+    Fig. 2 right), with left-pad masking.
+    """
+    bs, P = prompt_ids.shape
+    idx = jnp.arange(P)
+    mask = (idx[None, None, :] >= valid_from[:, None, None]) \
+        & jnp.ones((bs, P, 1), bool)
+    positions = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32), (bs, P))
+    x = params["emb"][prompt_ids]
+    ks, vs = [], []
+    scale = 1.0 / jnp.sqrt(cfg.d_head)
+    for l in range(cfg.n_layers):
+        h = rms_norm(x, params[f"l{l}.ln1"])
+        q, k, v = _qkv(cfg, params, l, h, positions)
+        ks.append(k)
+        vs.append(v)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q * scale, k)
+        s = jnp.where(mask[:, None, :, :], s, NEG_INF)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(bs, P, cfg.d_model)
+        x = x + o @ params[f"l{l}.wo"]
+        x = x + _mlp(cfg, params, l, rms_norm(x, params[f"l{l}.ln2"]))
+    k = jnp.stack(ks).transpose(0, 1, 3, 2, 4)  # [L, bs, H, P, dh]
+    v = jnp.stack(vs).transpose(0, 1, 3, 2, 4)
+    return k, v
+
+
+def _cached_block_forward(cfg: ModelConfig, params, k_cache, v_cache,
+                          cache_len, valid_from, blk_ids, pos0,
+                          excl_start=0, excl_len=0, intra_causal=False):
+    """Shared body of student_block_step / teacher_block_approx / ar_step.
+
+    k_cache/v_cache [L, bs, H, T, dh]; blk_ids [bs, Bq]; pos0 scalar int32
+    (absolute position of the block's first token; shared across the batch
+    because batched sequences decode in lockstep). Returns
+    (logits [bs, Bq, V], k_blk, v_blk [L, bs, H, Bq, dh]).
+    """
+    bs, Bq = blk_ids.shape
+    positions = pos0 + jnp.broadcast_to(
+        jnp.arange(Bq, dtype=jnp.int32), (bs, Bq))
+    x = params["emb"][blk_ids]
+    kbs, vbs = [], []
+    for l in range(cfg.n_layers):
+        h = rms_norm(x, params[f"l{l}.ln1"])
+        q, k, v = _qkv(cfg, params, l, h, positions)
+        kbs.append(k)
+        vbs.append(v)
+        # -> [bs, H, Bq, dh] for the Pallas kernel
+        o = block_attn_batched(
+            q.transpose(0, 2, 1, 3), k_cache[l], v_cache[l],
+            k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+            cache_len, valid_from, excl_start, excl_len,
+            intra_causal=intra_causal)
+        o = o.transpose(0, 2, 1, 3).reshape(bs, Bq, cfg.d_model)
+        x = x + o @ params[f"l{l}.wo"]
+        x = x + _mlp(cfg, params, l, rms_norm(x, params[f"l{l}.ln2"]))
+    logits = rms_norm(x, params["lnf"]) @ params["head"]
+    k_blk = jnp.stack(kbs).transpose(0, 1, 3, 2, 4)
+    v_blk = jnp.stack(vbs).transpose(0, 1, 3, 2, 4)
+    return logits, k_blk, v_blk
+
+
+def student_block_step(cfg: ModelConfig, params, k_cache, v_cache, cache_len,
+                       valid_from, blk_ids, pos0):
+    """One refinement step of the active block under the block-causal mask.
+
+    Returns (logits [bs, B, V], tok [bs, B], conf [bs, B],
+    k_blk, v_blk [L, bs, H, B, dh]). ``tok``/``conf`` come from the fused
+    L1 confidence kernel; the rust scheduler applies the threshold and
+    remask policy. k_blk/v_blk are returned every step so the final call
+    on the finalized block doubles as the cache commit (DESIGN.md §7).
+    """
+    logits, k_blk, v_blk = _cached_block_forward(
+        cfg, params, k_cache, v_cache, cache_len, valid_from, blk_ids, pos0)
+    tok, conf = confidence_batched(logits)
+    return logits, tok, conf, k_blk, v_blk
+
+
+def teacher_block_approx(cfg: ModelConfig, params, k_cache, v_cache,
+                         valid_from, blk_ids, pos0):
+    """Approximate-cache step for the Fast-dLLM dual-cache / dLLM-Cache
+    baselines: the bidirectional teacher recomputes only the active block,
+    attending to the *stale* full-sequence KV (prompt + prefix + suffix of
+    still-masked tokens) with the stale copy of the active block excluded
+    in favour of the fresh one.
+    """
+    T = k_cache.shape[3]
+    logits, k_blk, v_blk = _cached_block_forward(
+        cfg, params, k_cache, v_cache, jnp.int32(T), valid_from, blk_ids,
+        pos0, excl_start=pos0, excl_len=blk_ids.shape[1])
+    tok, conf = confidence_batched(logits)
+    return logits, tok, conf, k_blk, v_blk
+
+
+def teacher_denoise(cfg: ModelConfig, params, ids, valid_from):
+    """One vanilla full-bidirectional denoising step: logits + confidence
+    for every position (the vanilla-DLM / Fast-dLLM(Par.) baselines)."""
+    bs, S = ids.shape
+    idx = jnp.arange(S)
+    mask = (idx[None, None, :] >= valid_from[:, None, None]) \
+        & jnp.ones((bs, S, 1), bool)
+    logits = forward_full(cfg, params, ids, mask)
+    tok, conf = confidence_batched(logits)
+    return logits, tok, conf
+
+
+def teacher_full_cache(cfg: ModelConfig, params, ids, valid_from):
+    """Full denoising step that also emits the KV stacks — the refresh
+    step of the approximate-cache baselines."""
+    bs, S = ids.shape
+    idx = jnp.arange(S)
+    mask = (idx[None, None, :] >= valid_from[:, None, None]) \
+        & jnp.ones((bs, S, 1), bool)
+    logits, k, v = forward_full(cfg, params, ids, mask, collect_kv=True)
+    tok, conf = confidence_batched(logits)
+    return logits, tok, conf, k, v
+
+
+def ar_prefill(cfg: ModelConfig, params, prompt_ids, valid_from):
+    """Causal prefill for the AR baseline: prompt KV + last-position
+    logits (the first generated token's distribution)."""
+    bs, P = prompt_ids.shape
+    idx = jnp.arange(P)
+    mask = (idx[None, None, :] <= idx[None, :, None]) \
+        & (idx[None, None, :] >= valid_from[:, None, None])
+    logits, k, v = forward_full_prompt_causal(cfg, params, prompt_ids, mask)
+    # [bs, V]: batch rows play the role of the block dimension here
+    tok, conf = confidence(logits[:, -1, :])
+    return logits[:, -1, :], tok, conf, k, v
+
+
+def forward_full_prompt_causal(cfg: ModelConfig, params, ids, mask):
+    """Causal forward over the prompt only (length P, not S)."""
+    bs, P = ids.shape
+    positions = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32), (bs, P))
+    x = params["emb"][ids]
+    ks, vs = [], []
+    scale = 1.0 / jnp.sqrt(cfg.d_head)
+    for l in range(cfg.n_layers):
+        h = rms_norm(x, params[f"l{l}.ln1"])
+        q, k, v = _qkv(cfg, params, l, h, positions)
+        ks.append(k)
+        vs.append(v)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q * scale, k)
+        s = jnp.where(mask[:, None, :, :], s, NEG_INF)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(bs, P, cfg.d_model)
+        x = x + o @ params[f"l{l}.wo"]
+        x = x + _mlp(cfg, params, l, rms_norm(x, params[f"l{l}.ln2"]))
+    logits = rms_norm(x, params["lnf"]) @ params["head"]
+    k = jnp.stack(ks).transpose(0, 1, 3, 2, 4)
+    v = jnp.stack(vs).transpose(0, 1, 3, 2, 4)
+    return logits, k, v
+
+
+def ar_verify(cfg: ModelConfig, params, k_cache, v_cache, cache_len,
+              valid_from, blk_ids, pos0):
+    """Parallel AR verification of a drafted block (Appendix C: CDLM as
+    a speculative-decoding drafter for an AR verifier).
+
+    Teacher-forced causal forward over the B drafted tokens against the
+    AR model's exact cache: position i attends to the cache plus drafted
+    tokens <= i (intra-block causal mask in the L1 kernel). Returns the
+    AR logits at every drafted position (logits[i] predicts token i+1;
+    the first draft token is judged by the *previous* step's logits) and
+    the block K/V for committing the accepted prefix.
+    """
+    logits, k_blk, v_blk = _cached_block_forward(
+        cfg, params, k_cache, v_cache, cache_len, valid_from, blk_ids,
+        pos0, intra_causal=True)
+    tok, conf = confidence_batched(logits)
+    return logits, tok, conf, k_blk, v_blk
+
+
+def ar_step(cfg: ModelConfig, params, k_cache, v_cache, cache_len,
+            valid_from, tok_ids):
+    """One AR decode step: a 1-token "block" attending to the cache + itself.
+
+    tok_ids [bs]; position of the new token == cache_len.
+    Returns (logits [bs, V], tok [bs], conf [bs], k1, v1 [L, bs, H, 1, dh]).
+    """
+    blk_ids = tok_ids[:, None]
+    logits, k1, v1 = _cached_block_forward(
+        cfg, params, k_cache, v_cache, cache_len, valid_from, blk_ids,
+        cache_len)
+    tok, conf = confidence_batched(logits)
+    return logits[:, 0, :], tok[:, 0], conf[:, 0], k1, v1

@@ -1,0 +1,212 @@
+"""Synthetic benchmark task families.
+
+The paper evaluates on GSM8K(-CoT), MATH, HumanEval and MBPP. Those need
+real model downloads and an execution sandbox, neither of which exists
+here (repro band 0), so we substitute four procedurally generated,
+deterministically scorable families that preserve the *structure* the
+paper's evaluation exercises:
+
+  chain-arith   GSM8K-like: multi-step arithmetic with a chain-of-thought
+                (intermediate equations) before the final answer.
+  deep-arith    MATH-like: deeper nesting / more steps, harder mix.
+  str-transform HumanEval-like: deterministic string manipulation,
+                scored 0-shot by "executing" the spec (exact output match
+                plays the role of pass@1).
+  list-op       MBPP-like: list/digit-sequence operations, 0-shot.
+
+Answer format: a CoT of ``lhs=rhs;`` steps (arith families) followed by
+``#<answer>`` and <eos>. Scoring extracts the text after the final '#'
+(before ';' or <eos>) and exact-matches against the reference — the same
+"truncate at stop-sequence, then exact-match / execute" protocol as
+lm-eval-harness (§A.3).
+
+All generation is driven by SplitMix64 so the rust `workload` module can
+reproduce byte-identical prompt sets (golden files pin this).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from . import vocab
+
+FAMILIES = ("chain-arith", "deep-arith", "str-transform", "list-op")
+
+# Mapping used in docs/benches: paper benchmark -> our family.
+PAPER_ANALOGUE = {
+    "chain-arith": "GSM8K-CoT",
+    "deep-arith": "MATH",
+    "str-transform": "HumanEval",
+    "list-op": "MBPP",
+}
+
+
+class SplitMix64:
+    """Deterministic RNG, mirrored exactly in rust/src/util/rng.rs."""
+
+    MASK = (1 << 64) - 1
+
+    def __init__(self, seed: int):
+        self.state = seed & self.MASK
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & self.MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & self.MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & self.MASK
+        return z ^ (z >> 31)
+
+    def below(self, n: int) -> int:
+        """Uniform in [0, n) (mod bias negligible for tiny n)."""
+        return self.next_u64() % n
+
+
+@dataclass
+class Sample:
+    prompt: str  # raw prompt text (no few-shot prefix)
+    answer: str  # reference CoT + '#ans' (no <eos>)
+    final: str   # reference final answer (text after '#')
+
+
+def _gen_chain_arith(rng: SplitMix64) -> Sample:
+    """a*b+c or a+b*c style two-step problems, single-digit operands."""
+    a, b, c = rng.below(5) + 1, rng.below(5) + 1, rng.below(9) + 1
+    if rng.below(2) == 0:
+        # a*b+c  -> p=a*b ; r=p+c
+        p = a * b
+        r = p + c
+        prompt = f"q:{a}*{b}+{c}=?"
+        answer = f"{a}*{b}={p};{p}+{c}={r};#{r}"
+    else:
+        # a+b*c with CoT evaluating the product first
+        b2, c2 = rng.below(5) + 1, rng.below(5) + 1
+        p = b2 * c2
+        r = a + p
+        prompt = f"q:{a}+{b2}*{c2}=?"
+        answer = f"{b2}*{c2}={p};{a}+{p}={r};#{r}"
+    return Sample(prompt, answer, answer.rsplit("#", 1)[1])
+
+
+def _gen_deep_arith(rng: SplitMix64) -> Sample:
+    """((a+b)*c-d): three chained steps, slightly larger intermediates."""
+    a, b = rng.below(6) + 1, rng.below(6) + 1
+    c = rng.below(3) + 2
+    s1 = a + b
+    s2 = s1 * c
+    d = rng.below(min(s2, 9)) + 1
+    s3 = s2 - d
+    prompt = f"q:(({a}+{b})*{c}-{d})=?"
+    answer = f"{a}+{b}={s1};{s1}*{c}={s2};{s2}-{d}={s3};#{s3}"
+    return Sample(prompt, answer, str(s3))
+
+
+_WORDS = [
+    "cat", "dog", "sun", "map", "key", "box", "fig", "hat", "ink", "jar",
+    "kit", "log", "mud", "net", "oak", "pie", "rug", "saw", "tin", "urn",
+]
+
+
+def _gen_str_transform(rng: SplitMix64) -> Sample:
+    """rev(w) or dup(w): deterministic string ops, 0-shot."""
+    w = _WORDS[rng.below(len(_WORDS))] + chr(ord("a") + rng.below(26))
+    if rng.below(2) == 0:
+        prompt = f"q:rev({w})=?"
+        out = w[::-1]
+    else:
+        prompt = f"q:dup({w})=?"
+        out = w + w
+    return Sample(prompt, f"#{out}", out)
+
+
+def _gen_list_op(rng: SplitMix64) -> Sample:
+    """sort/max/min over a 5-digit sequence, 0-shot."""
+    digits = [rng.below(10) for _ in range(5)]
+    s = "".join(str(d) for d in digits)
+    k = rng.below(3)
+    if k == 0:
+        prompt = f"q:sort({s})=?"
+        out = "".join(sorted(s))
+    elif k == 1:
+        prompt = f"q:max({s})=?"
+        out = str(max(digits))
+    else:
+        prompt = f"q:min({s})=?"
+        out = str(min(digits))
+    return Sample(prompt, f"#{out}", out)
+
+
+_GENERATORS = {
+    "chain-arith": _gen_chain_arith,
+    "deep-arith": _gen_deep_arith,
+    "str-transform": _gen_str_transform,
+    "list-op": _gen_list_op,
+}
+
+# Few-shot protocol mirrors the paper: few-shot for math, 0-shot for
+# "coding" (str-transform / list-op). Shots are drawn from a fixed stream.
+NUM_SHOTS = {"chain-arith": 1, "deep-arith": 1, "str-transform": 0, "list-op": 0}
+
+_FAMILY_SEED = {
+    "chain-arith": 0x11AA, "deep-arith": 0x22BB,
+    "str-transform": 0x33CC, "list-op": 0x44DD,
+}
+
+
+def generate(family: str, n: int, seed: int) -> list[Sample]:
+    rng = SplitMix64(seed ^ _FAMILY_SEED[family])
+    gen = _GENERATORS[family]
+    return [gen(rng) for _ in range(n)]
+
+
+def build_prompt_text(family: str, sample: Sample, shots: list[Sample]) -> str:
+    """Assemble the full prompt (few-shot examples merged into one prompt,
+    as the paper does for math: no fewshot_as_multiturn, §A.3)."""
+    parts = [f"{s.prompt}a:{s.answer};" for s in shots]
+    parts.append(f"{sample.prompt}a:")
+    return "".join(parts)
+
+
+def few_shot_examples(family: str) -> list[Sample]:
+    """Fixed shots per family (deterministic, disjoint from eval seeds)."""
+    k = NUM_SHOTS[family]
+    return generate(family, k, seed=0xF00D) if k else []
+
+
+def extract_final(text: str) -> str | None:
+    """Scoring rule: text after the last '#', truncated at ';'.
+
+    Returns None if no '#' was emitted (counts as wrong)."""
+    if "#" not in text:
+        return None
+    tail = text.rsplit("#", 1)[1]
+    return tail.split(";", 1)[0]
+
+
+def score(generated_text: str, sample: Sample) -> bool:
+    return extract_final(generated_text) == sample.final
+
+
+def encode_example(family: str, sample: Sample, prompt_len: int,
+                   gen_len: int) -> tuple[list[int], list[int]]:
+    """Tokenize to fixed geometry: left-padded prompt, right-padded answer.
+
+    Prompt: [<pad>..., <bos>, prompt tokens]; answer: [tokens..., <eos>,
+    <pad>...]. Raises if the text does not fit (generators are sized so it
+    always does)."""
+    shots = few_shot_examples(family)
+    ptext = build_prompt_text(family, sample, shots)
+    pids = [vocab.BOS] + vocab.encode(ptext)
+    if len(pids) > prompt_len:
+        raise ValueError(f"prompt too long ({len(pids)} > {prompt_len}): {ptext!r}")
+    pids = [vocab.PAD] * (prompt_len - len(pids)) + pids
+    aids = vocab.encode(sample.answer + ";") + [vocab.EOS]
+    if len(aids) > gen_len:
+        raise ValueError(f"answer too long ({len(aids)} > {gen_len}): {sample.answer!r}")
+    # Pad the answer tail with <eos>, NOT <pad>: every generation
+    # position must be supervised so that inference-time states (all
+    # positions masked) stay in-distribution — the model learns "after
+    # the answer, everything is <eos>", which is also what makes
+    # confidence-thresholded finalization and block early-stop work
+    # (LLaDA pads generations with EOS for the same reason).
+    aids = aids + [vocab.EOS] * (gen_len - len(aids))
+    return pids, aids

@@ -1,0 +1,104 @@
+"""Autoregressive baseline training (paper Fig. 3 / §5.2.3).
+
+Equal-size causal transformer trained with next-token prediction on the
+same corpus as its DLM counterpart (stand-ins for Qwen2.5-7B-Instruct /
+Llama-3.1-8B-Instruct, which cannot be downloaded here).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from . import train_common as TC
+from . import vocab
+from .train_teacher import MIXTURES, SEEDS
+
+
+def train_ar(cfg: M.ModelConfig, backbone: str, steps: int,
+             batch_size: int = 16, lr: float = 1e-3, corpus_n: int = 4096,
+             log_every: int = 100):
+    seed = SEEDS[backbone] + 50
+    prompts, answers, _ = TC.make_corpus(
+        cfg, MIXTURES[backbone], corpus_n, seed=seed + 100)
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = TC.AdamW(lr, total_steps=steps, weight_decay=0.01)
+    ost = opt.init(params)
+
+    @jax.jit
+    def step_fn(params, ost, p, a):
+        loss, grads = jax.value_and_grad(
+            lambda pp: TC.ar_loss(cfg, pp, p, a))(params)
+        params, ost = opt.update(params, grads, ost)
+        return params, ost, loss
+
+    rng = np.random.RandomState(seed + 13)
+    t0 = time.time()
+    for it in range(steps):
+        sel = rng.randint(0, len(prompts), batch_size)
+        params, ost, loss = step_fn(
+            params, ost, jnp.asarray(prompts[sel]), jnp.asarray(answers[sel]))
+        if (it + 1) % log_every == 0:
+            print(f"[ar-{backbone}] step {it+1}/{steps} "
+                  f"loss {float(loss):.4f} ({time.time()-t0:.0f}s)",
+                  flush=True)
+    return params
+
+
+def greedy_decode(cfg: M.ModelConfig, params, prompts: np.ndarray):
+    """Reference greedy AR decoding (parity oracle for rust methods/ar.rs)."""
+    bs = prompts.shape[0]
+    P, Lg, S = cfg.prompt_len, cfg.gen_len, cfg.seq_len
+    vf = jnp.argmin(jnp.asarray(prompts) == vocab.PAD, axis=1).astype(jnp.int32)
+    pre = jax.jit(lambda p, i, v: M.ar_prefill(cfg, p, i, v))
+    stp = jax.jit(lambda p, kc, vc, cl, v, t: M.ar_step(cfg, p, kc, vc, cl, v, t))
+    _, tok, _, k, v = pre(params, jnp.asarray(prompts), vf)
+    L, _, H, _, dh = k.shape
+    k_cache = jnp.zeros((L, bs, H, S, dh), jnp.float32).at[:, :, :, :P].set(k)
+    v_cache = jnp.zeros((L, bs, H, S, dh), jnp.float32).at[:, :, :, :P].set(v)
+    gen = np.full((bs, Lg), vocab.PAD, np.int32)
+    done = np.zeros(bs, bool)
+    steps = np.zeros(bs, np.int64)
+    cur = tok
+    for i in range(Lg):
+        gen[~done, i] = np.asarray(cur)[~done]
+        steps[~done] += 1
+        done |= np.asarray(cur) == vocab.EOS
+        if done.all() or i == Lg - 1:
+            break
+        _, tok, _, k1, v1 = stp(params, k_cache, v_cache, jnp.int32(P + i),
+                                vf, cur)
+        k_cache = k_cache.at[:, :, :, P + i:P + i + 1].set(k1)
+        v_cache = v_cache.at[:, :, :, P + i:P + i + 1].set(v1)
+        cur = tok
+    return gen, steps
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backbone", choices=("dream", "llada"), required=True)
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    cfg = M.ModelConfig()
+    steps = args.steps or (150 if TC.fast_mode() else 1000)
+    params = train_ar(cfg, args.backbone, steps)
+    # quick accuracy probe
+    from . import tasks
+    p, _, samples = TC.encode_family_batch(cfg, "chain-arith", 32, 4242)
+    gen, _ = greedy_decode(cfg, params, p)
+    acc = np.mean([tasks.score(vocab.decode(gen[r]), samples[r])
+                   for r in range(len(samples))])
+    print(f"[ar-{args.backbone}] chain-arith acc {acc:.3f}")
+    out = args.out or f"../artifacts/weights_ar_{args.backbone}.npz"
+    TC.save_params(out, params)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""Algorithm 2: CDLM consistency distillation of the block-causal student.
+
+The student is the teacher plus LoRA adapters (paper: LoRA on attention +
+MLP), trained under the block-wise causal mask with the three-objective
+loss (Eq. 7):
+
+  L = w_distill * L_Distillation + w_cons * L_Consistency + w_dlm * L_DLM
+
+  * Distillation (Eq. 4): forward KL from the teacher's distribution
+    (reconstructed as lm_head(h) from the stored hidden-state buffer) to
+    the student's prediction at state y, on positions newly unmasked
+    between y and its block-completion y*. This is the multi-token
+    finalization supervision.
+  * Consistency (Eq. 5): forward KL from the stop-gradient student at the
+    more-informed state y* to the student at the less-informed y, on
+    positions still masked at y* — the discrete analogue of consistency
+    models' trajectory self-alignment.
+  * DLM (Eq. 6): the standard masked-denoising loss on ground-truth text,
+    preserving mask-prediction ability (small weight; Table 3 row 4/6
+    shows dropping it trades math for coding accuracy).
+
+Default weights (1.0, 0.5, w_dlm) follow paper Tables 5/6.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from . import train_common as TC
+from . import vocab
+from .trajectory import TrajectoryDataset
+
+
+def _states_from_batch(cfg: M.ModelConfig, order, toks, t_start, t_end):
+    """Vectorized reconstruction of (y, y*) generation spans + index sets.
+
+    order/toks [bs, Lg]; t_start/t_end [bs]. Returns gen_y, gen_ystar
+    [bs, Lg] token arrays and boolean U (newly unmasked in (t_start,
+    t_end]) and Sm (still masked at y*) over positions.
+    """
+    bs, Lg = order.shape
+    step_of_pos = np.zeros((bs, Lg), np.int32)  # step at which pos finalizes
+    rows = np.arange(bs)[:, None]
+    step_of_pos[rows, order] = np.arange(Lg)[None, :]
+    finalized_y = step_of_pos < t_start[:, None]
+    finalized_ystar = step_of_pos < t_end[:, None]
+    tok_at_pos = np.zeros((bs, Lg), np.int32)
+    tok_at_pos[rows, order] = toks
+    gen_y = np.where(finalized_y, tok_at_pos, vocab.MASK).astype(np.int32)
+    gen_ystar = np.where(finalized_ystar, tok_at_pos,
+                         vocab.MASK).astype(np.int32)
+    U = finalized_ystar & ~finalized_y
+    Sm = ~finalized_ystar
+    return gen_y, gen_ystar, U, Sm, tok_at_pos
+
+
+def cdlm_losses(cfg: M.ModelConfig, teacher_params, params_merged,
+                prompts, gen_y, gen_ystar, U, Sm, hbuf, answers, key,
+                w):
+    """The three objectives for one batch. All inputs are jnp arrays;
+    ``params_merged`` is teacher+LoRA (gradients flow to LoRA only).
+
+    Returns (total, dict of parts)."""
+    bs = prompts.shape[0]
+    P, S = cfg.prompt_len, cfg.seq_len
+    vf = jnp.argmin(prompts == vocab.PAD, axis=1).astype(jnp.int32)
+    mask = jax.vmap(lambda v: M.block_causal_mask(cfg, v))(vf)
+
+    ids_y = jnp.concatenate([prompts, gen_y], axis=1)
+    logits_y = M.forward_full(cfg, params_merged, ids_y, mask)[:, P:, :]
+    logq_y = jax.nn.log_softmax(logits_y.astype(jnp.float32), axis=-1)
+
+    # ---- Distillation (Eq. 4): teacher probs from the hidden buffer
+    t_logits = hbuf @ teacher_params["head"]
+    logp_t = jax.nn.log_softmax(t_logits.astype(jnp.float32), axis=-1)
+    p_t = jnp.exp(logp_t)
+    kl_distill = jnp.sum(p_t * (logp_t - logq_y), axis=-1)  # [bs, Lg]
+    Uf = U.astype(jnp.float32)
+    l_distill = jnp.sum(kl_distill * Uf) / (jnp.sum(Uf) + 1e-6)
+
+    # ---- Consistency (Eq. 5): stop-gradient student at y*
+    ids_ystar = jnp.concatenate([prompts, gen_ystar], axis=1)
+    logits_ystar = M.forward_full(
+        cfg, jax.lax.stop_gradient(params_merged), ids_ystar, mask)[:, P:, :]
+    logq_ystar = jax.nn.log_softmax(logits_ystar.astype(jnp.float32), -1)
+    q_ystar = jnp.exp(logq_ystar)
+    kl_cons = jnp.sum(q_ystar * (logq_ystar - logq_y), axis=-1)
+    Sf = Sm.astype(jnp.float32)
+    l_cons = jnp.sum(kl_cons * Sf) / (jnp.sum(Sf) + 1e-6)
+
+    # ---- DLM (Eq. 6) on ground truth, under the student mask
+    l_dlm = TC.dlm_loss(cfg, params_merged, prompts, answers, key,
+                        mask_fn=M.block_causal_mask)
+
+    total = w["distill"] * l_distill + w["cons"] * l_cons + w["dlm"] * l_dlm
+    return total, {"distill": l_distill, "cons": l_cons, "dlm": l_dlm}
+
+
+def train_cdlm(cfg: M.ModelConfig, teacher_params, traj: TrajectoryDataset,
+               steps: int, weights=(1.0, 0.5, 0.01), batch_size: int = 16,
+               lr: float = 1e-3, seed: int = 0, log_every: int = 50,
+               eval_hook=None, eval_every: int | None = None):
+    """Train LoRA adapters; returns (merged_student_params, history).
+
+    ``eval_hook(merged_params) -> dict`` is called every ``eval_every``
+    steps (drives Fig. 7 validation trends and Table 3 convergence)."""
+    w = {"distill": weights[0], "cons": weights[1], "dlm": weights[2]}
+    lora = M.init_lora(cfg, jax.random.PRNGKey(seed + 3))
+    opt = TC.AdamW(lr, total_steps=steps, weight_decay=0.0)
+    ost = opt.init(lora)
+    N, B = cfg.gen_len, cfg.block_size
+
+    @jax.jit
+    def step_fn(lora, ost, prompts, gen_y, gen_ystar, U, Sm, hbuf, answers,
+                key):
+        def loss_fn(lo):
+            merged = M.apply_lora(cfg, teacher_params, lo)
+            return cdlm_losses(cfg, teacher_params, merged, prompts, gen_y,
+                               gen_ystar, U, Sm, hbuf, answers, key, w)
+        (loss, parts), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(lora)
+        lora, ost = opt.update(lora, grads, ost)
+        return lora, ost, loss, parts
+
+    rng = np.random.RandomState(seed + 17)
+    key = jax.random.PRNGKey(seed + 23)
+    history = []
+    t0 = time.time()
+    for it in range(steps):
+        sel = rng.randint(0, len(traj), batch_size)
+        order, toks = traj.order[sel], traj.toks[sel]
+        # t_start uniform over steps; t_end = completion of its block
+        # (Alg. 2 line 5). Block-boundary t_start would make y == y*
+        # (degenerate), so t_end uses floor(t/B)+1 blocks.
+        t_start = rng.randint(0, N, batch_size)
+        t_end = np.minimum(N, (t_start // B + 1) * B)
+        gen_y, gen_ystar, U, Sm, _ = _states_from_batch(
+            cfg, order, toks, t_start, t_end)
+        key, sub = jax.random.split(key)
+        lora, ost, loss, parts = step_fn(
+            lora, ost, jnp.asarray(traj.prompts[sel]), jnp.asarray(gen_y),
+            jnp.asarray(gen_ystar), jnp.asarray(U), jnp.asarray(Sm),
+            jnp.asarray(traj.hbuf[sel]), jnp.asarray(traj.answers[sel]), sub)
+        if (it + 1) % log_every == 0:
+            print(f"[cdlm] step {it+1}/{steps} loss {float(loss):.4f} "
+                  f"(distill {float(parts['distill']):.3f} "
+                  f"cons {float(parts['cons']):.3f} "
+                  f"dlm {float(parts['dlm']):.3f}) "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+        if eval_hook and eval_every and (it + 1) % eval_every == 0:
+            merged = M.merge_lora(cfg, teacher_params, lora)
+            metrics = eval_hook(merged)
+            metrics["step"] = it + 1
+            history.append(metrics)
+            print(f"[cdlm] eval @{it+1}: {metrics}", flush=True)
+    return M.merge_lora(cfg, teacher_params, lora), history

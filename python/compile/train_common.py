@@ -1,0 +1,163 @@
+"""Shared training infrastructure: AdamW, batch assembly, checkpoints.
+
+optax is unavailable in this offline image, so AdamW is implemented
+directly (decoupled weight decay, bias-corrected moments) over flat
+name->array parameter dicts.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from . import tasks
+from . import vocab
+
+
+# --------------------------------------------------------------------------
+# AdamW over flat dicts
+# --------------------------------------------------------------------------
+
+class AdamW:
+    def __init__(self, lr: float, betas=(0.9, 0.95), eps: float = 1e-8,
+                 weight_decay: float = 0.0, warmup_frac: float = 0.05,
+                 total_steps: int = 1000):
+        self.lr = lr
+        self.b1, self.b2 = betas
+        self.eps = eps
+        self.wd = weight_decay
+        self.warmup = max(1, int(warmup_frac * total_steps))
+
+    def init(self, params):
+        z = lambda: {k: jnp.zeros_like(v) for k, v in params.items()}
+        return {"m": z(), "v": z(), "t": jnp.zeros((), jnp.int32)}
+
+    def update(self, params, grads, state):
+        t = state["t"] + 1
+        # constant schedule with linear warmup (paper Tables 5/6)
+        lr = self.lr * jnp.minimum(1.0, t / self.warmup)
+        m = {k: self.b1 * state["m"][k] + (1 - self.b1) * grads[k]
+             for k in params}
+        v = {k: self.b2 * state["v"][k] + (1 - self.b2) * grads[k] ** 2
+             for k in params}
+        mh = {k: m[k] / (1 - self.b1 ** t) for k in params}
+        vh = {k: v[k] / (1 - self.b2 ** t) for k in params}
+        new = {k: params[k] - lr * (mh[k] / (jnp.sqrt(vh[k]) + self.eps)
+                                    + self.wd * params[k])
+               for k in params}
+        return new, {"m": m, "v": v, "t": t}
+
+
+# --------------------------------------------------------------------------
+# Data
+# --------------------------------------------------------------------------
+
+def encode_family_batch(cfg: M.ModelConfig, family: str, n: int, seed: int):
+    """n samples of a family -> (prompts [n, P], answers [n, Lg], samples)."""
+    samples = tasks.generate(family, n, seed)
+    P, Lg = cfg.prompt_len, cfg.gen_len
+    prompts = np.zeros((n, P), np.int32)
+    answers = np.zeros((n, Lg), np.int32)
+    for i, s in enumerate(samples):
+        p, a = tasks.encode_example(family, s, P, Lg)
+        prompts[i] = p
+        answers[i] = a
+    return prompts, answers, samples
+
+
+def make_corpus(cfg: M.ModelConfig, mixture: dict[str, float], n: int,
+                seed: int):
+    """Training corpus with a family mixture (dream-tiny: uniform;
+    llada-tiny: math-augmented, mirroring §5.2.2 / Appendix A.1)."""
+    fams, weights = zip(*mixture.items())
+    weights = np.asarray(weights, np.float64)
+    weights = weights / weights.sum()
+    counts = np.floor(weights * n).astype(int)
+    counts[0] += n - counts.sum()
+    ps, as_, ss = [], [], []
+    for fam, c in zip(fams, counts):
+        p, a, s = encode_family_batch(cfg, fam, int(c), seed)
+        ps.append(p)
+        as_.append(a)
+        ss.extend(s)
+    prompts = np.concatenate(ps)
+    answers = np.concatenate(as_)
+    rng = np.random.RandomState(seed)
+    perm = rng.permutation(len(prompts))
+    return prompts[perm], answers[perm], [ss[i] for i in perm]
+
+
+# --------------------------------------------------------------------------
+# Objectives
+# --------------------------------------------------------------------------
+
+def dlm_loss(cfg: M.ModelConfig, params, prompts, answers, key,
+             mask_fn=None):
+    """Masked-denoising objective (paper Eq. 6): sample t ~ U(0,1) per
+    sequence, mask each answer token independently w.p. t, predict the
+    original tokens at masked positions with 1/t weighting.
+
+    ``mask_fn(cfg, valid_from)`` selects the attention mask (bidirectional
+    for the teacher, block-causal for the student's auxiliary loss)."""
+    bs = prompts.shape[0]
+    P, Lg, S = cfg.prompt_len, cfg.gen_len, cfg.seq_len
+    kt, km = jax.random.split(key)
+    t = jax.random.uniform(kt, (bs, 1), minval=0.05, maxval=1.0)
+    # every answer position is supervised (answers are EOS-padded)
+    drop = jax.random.uniform(km, (bs, Lg)) < t
+    gen = jnp.where(drop, vocab.MASK, answers)
+    ids = jnp.concatenate([prompts, gen], axis=1)
+    vf = jnp.argmin(prompts == vocab.PAD, axis=1).astype(jnp.int32)
+    if mask_fn is None:
+        mask_fn = M.bidirectional_mask
+    idx = jnp.arange(S)
+    if mask_fn is M.bidirectional_mask:
+        mask = (idx[None, None, :] >= vf[:, None, None]) \
+            & jnp.ones((bs, S, 1), bool)
+    else:
+        mask = jax.vmap(lambda v: mask_fn(cfg, v))(vf)
+    logits = M.forward_full(cfg, params, ids, mask)
+    lp = jax.nn.log_softmax(logits[:, P:, :].astype(jnp.float32), axis=-1)
+    tok_lp = jnp.take_along_axis(lp, answers[..., None], axis=-1)[..., 0]
+    w = drop.astype(jnp.float32) / t
+    return -jnp.sum(tok_lp * w) / (jnp.sum(drop) + 1e-6)
+
+
+def ar_loss(cfg: M.ModelConfig, params, prompts, answers):
+    """Next-token prediction over the answer span (causal mask)."""
+    bs = prompts.shape[0]
+    P, S = cfg.prompt_len, cfg.seq_len
+    ids = jnp.concatenate([prompts, answers], axis=1)
+    vf = jnp.argmin(prompts == vocab.PAD, axis=1).astype(jnp.int32)
+    idx = jnp.arange(S)
+    mask = (idx[None, None, :] <= idx[None, :, None]) \
+        & (idx[None, None, :] >= vf[:, None, None])
+    logits = M.forward_full(cfg, params, ids, mask)
+    # predict answers[i] from position P-1+i
+    lp = jax.nn.log_softmax(logits[:, P - 1:S - 1, :].astype(jnp.float32), -1)
+    tok_lp = jnp.take_along_axis(lp, answers[..., None], axis=-1)[..., 0]
+    w = (answers != vocab.PAD).astype(jnp.float32)
+    return -jnp.sum(tok_lp * w) / jnp.sum(w)
+
+
+# --------------------------------------------------------------------------
+# Checkpoints
+# --------------------------------------------------------------------------
+
+def save_params(path: str, params: dict):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+
+
+def load_params(path: str) -> dict:
+    with np.load(path) as z:
+        return {k: jnp.asarray(z[k]) for k in z.files}
+
+
+def fast_mode() -> bool:
+    """CDLM_FAST=1 shrinks every training run for quick iteration."""
+    return os.environ.get("CDLM_FAST", "0") == "1"

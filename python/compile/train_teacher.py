@@ -1,0 +1,99 @@
+"""Teacher pretraining: bidirectional masked-diffusion objective (Eq. 6).
+
+Produces the two backbones of the paper's evaluation:
+  dream-tiny   uniform mixture over all four task families (stand-in for
+               Dream-7B-Instruct trained on the Bespoke-derived subset);
+  llada-tiny   math-augmented mixture — 2x weight on the arithmetic
+               families, mirroring the paper's LLaDA corpus augmentation
+               with 7.5k math-style DParallel prompts (§5.2.2, A.1).
+
+Run via ``python -m compile.train_teacher --backbone dream`` (aot.py
+drives this as part of ``make artifacts``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import decoding
+from . import model as M
+from . import train_common as TC
+
+MIXTURES = {
+    "dream": {"chain-arith": 1.0, "deep-arith": 1.0,
+              "str-transform": 1.0, "list-op": 1.0},
+    "llada": {"chain-arith": 2.0, "deep-arith": 2.0,
+              "str-transform": 1.0, "list-op": 1.0},
+}
+SEEDS = {"dream": 0, "llada": 1}
+
+
+def train_teacher(cfg: M.ModelConfig, backbone: str, steps: int,
+                  batch_size: int = 16, lr: float = 1e-3,
+                  corpus_n: int = 4096, log_every: int = 100,
+                  eval_every: int | None = None, eval_n: int = 32):
+    seed = SEEDS[backbone]
+    prompts, answers, _ = TC.make_corpus(
+        cfg, MIXTURES[backbone], corpus_n, seed=seed + 100)
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = TC.AdamW(lr, total_steps=steps, weight_decay=0.01)
+    ost = opt.init(params)
+
+    @jax.jit
+    def step_fn(params, ost, p, a, key):
+        loss, grads = jax.value_and_grad(
+            lambda pp: TC.dlm_loss(cfg, pp, p, a, key))(params)
+        params, ost = opt.update(params, grads, ost)
+        return params, ost, loss
+
+    key = jax.random.PRNGKey(seed + 7)
+    rng = np.random.RandomState(seed + 13)
+    t0 = time.time()
+    history = []
+    for it in range(steps):
+        sel = rng.randint(0, len(prompts), batch_size)
+        key, sub = jax.random.split(key)
+        params, ost, loss = step_fn(
+            params, ost, jnp.asarray(prompts[sel]), jnp.asarray(answers[sel]),
+            sub)
+        if (it + 1) % log_every == 0:
+            print(f"[teacher-{backbone}] step {it+1}/{steps} "
+                  f"loss {float(loss):.4f} ({time.time()-t0:.0f}s)",
+                  flush=True)
+        if eval_every and (it + 1) % eval_every == 0:
+            acc = quick_eval(cfg, params, eval_n, seed=seed + 999)
+            history.append({"step": it + 1, "acc": acc})
+            print(f"[teacher-{backbone}] eval acc {acc:.3f}", flush=True)
+    return params, history
+
+
+def quick_eval(cfg: M.ModelConfig, params, n: int, seed: int,
+               family: str = "chain-arith") -> float:
+    p, _, samples = TC.encode_family_batch(cfg, family, n, seed)
+    res = decoding.teacher_block_decode(cfg, params, p)
+    return decoding.score_batch(cfg, res, samples)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backbone", choices=("dream", "llada"), required=True)
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    cfg = M.ModelConfig()
+    steps = args.steps or (150 if TC.fast_mode() else 1200)
+    params, _ = train_teacher(cfg, args.backbone, steps)
+    acc = quick_eval(cfg, params, 64, seed=4242)
+    print(f"[teacher-{args.backbone}] final chain-arith acc {acc:.3f}")
+    out = args.out or f"../artifacts/weights_teacher_{args.backbone}.npz"
+    TC.save_params(out, params)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

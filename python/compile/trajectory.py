@@ -1,0 +1,104 @@
+"""Algorithm 1: offline trajectory collection from the bidirectional teacher.
+
+For each prompt we run the teacher at its most performant operating point
+(block-wise decoding, N = Lg steps, exactly one top-confidence token
+finalized per step) and record
+
+  * the finalization order+tokens (which fully determine every
+    intermediate state x_{t_k} of the decoding trajectory, Eq. 3), and
+  * the hidden-state buffer H [Lg, d]: the teacher's last hidden state at
+    each position, captured at the moment that position was finalized
+    (paper Fig. 6 — storing d-dim hiddens instead of |V|-dim logits is
+    the paper's ~30x storage saving; we reconstruct teacher logits at
+    training time by applying the teacher's lm_head).
+
+Temperature augmentation: each prompt is decoded at tau in {0.0, 0.5}
+(Appendix A.1 — tau = 1.0 destabilizes the reasoning chain, Fig. 5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import decoding
+from . import model as M
+from . import train_common as TC
+
+TEMPERATURES = (0.0, 0.5)
+
+
+@dataclasses.dataclass
+class TrajectoryDataset:
+    """Columnar trajectory store (one row per (prompt, temperature)).
+
+    order [n, Lg]  absolute position finalized at each step, minus P
+    toks  [n, Lg]  token finalized at each step
+    hbuf  [n, Lg, d]  hidden-state buffer indexed BY POSITION (not step)
+    prompts [n, P]; answers [n, Lg] ground truth; final [n, Lg] the
+    teacher's final sequence (for inspection/tests).
+    """
+    order: np.ndarray
+    toks: np.ndarray
+    hbuf: np.ndarray
+    prompts: np.ndarray
+    answers: np.ndarray
+    final: np.ndarray
+
+    def __len__(self):
+        return len(self.order)
+
+    def save(self, path: str):
+        np.savez_compressed(path, order=self.order, toks=self.toks,
+                            hbuf=self.hbuf, prompts=self.prompts,
+                            answers=self.answers, final=self.final)
+
+    @staticmethod
+    def load(path: str) -> "TrajectoryDataset":
+        with np.load(path) as z:
+            return TrajectoryDataset(*(z[k] for k in (
+                "order", "toks", "hbuf", "prompts", "answers", "final")))
+
+    def state_at(self, row: int, t: int, cfg: M.ModelConfig) -> np.ndarray:
+        """Reconstruct x_{t_k}: prompt + tokens finalized in steps < t."""
+        from . import vocab
+        gen = np.full(cfg.gen_len, vocab.MASK, np.int32)
+        for s in range(t):
+            gen[self.order[row, s]] = self.toks[row, s]
+        return np.concatenate([self.prompts[row], gen])
+
+
+def collect(cfg: M.ModelConfig, teacher_params, mixture: dict[str, float],
+            n_prompts: int, seed: int, batch_size: int = 16,
+            temperatures=TEMPERATURES, log=print) -> TrajectoryDataset:
+    prompts, answers, _ = TC.make_corpus(cfg, mixture, n_prompts, seed)
+    Lg, d = cfg.gen_len, cfg.d_model
+    rows_o, rows_t, rows_h, rows_p, rows_a, rows_f = [], [], [], [], [], []
+    for tau in temperatures:
+        for lo in range(0, n_prompts, batch_size):
+            p = prompts[lo:lo + batch_size]
+            a = answers[lo:lo + batch_size]
+            res = decoding.teacher_block_decode(
+                cfg, teacher_params, p, temperature=tau,
+                seed=seed + lo, collect=True)
+            for r in range(len(p)):
+                tr = res.trace[r]
+                assert len(tr) == Lg, f"trajectory length {len(tr)} != {Lg}"
+                order = np.array([pos - cfg.prompt_len for pos, _, _ in tr],
+                                 np.int32)
+                toks = np.array([tok for _, tok, _ in tr], np.int32)
+                h = np.zeros((Lg, d), np.float32)
+                for pos, _, hv in tr:
+                    h[pos - cfg.prompt_len] = hv
+                rows_o.append(order)
+                rows_t.append(toks)
+                rows_h.append(h)
+                rows_p.append(p[r])
+                rows_a.append(a[r])
+                rows_f.append(np.asarray(res.ids[r, cfg.prompt_len:]))
+            log(f"[trajectory] tau={tau} {min(lo + batch_size, n_prompts)}"
+                f"/{n_prompts}")
+    return TrajectoryDataset(
+        np.stack(rows_o), np.stack(rows_t), np.stack(rows_h),
+        np.stack(rows_p), np.stack(rows_a), np.stack(rows_f))

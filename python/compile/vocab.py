@@ -1,0 +1,85 @@
+"""Toy character-level vocabulary shared between the python build path and
+the rust request path.
+
+The vocabulary is the single source of truth for token ids. ``aot.py``
+exports it to ``artifacts/vocab.json``; the rust ``tokenizer`` module loads
+that file, and golden tests on both sides pin the mapping.
+
+Layout (V = 64):
+  0     <pad>     left-padding for prompts / right-padding for answers
+  1     <mask>    the DLM [MASK] token
+  2     <bos>     prompt start marker
+  3     <eos>     answer terminator (early-stop trigger, paper §4.3)
+  4..13 digits '0'..'9'
+  14..39 lowercase 'a'..'z'
+  40..  symbols '+ - * = ; # : ? ( ) , . > < [ ]' and space
+  rest  reserved (never produced)
+"""
+
+from __future__ import annotations
+
+import json
+
+PAD, MASK, BOS, EOS = 0, 1, 2, 3
+
+_SYMBOLS = "+-*=;#:?(),.><[] "
+
+VOCAB_SIZE = 64
+
+
+def _build_tables():
+    tok_to_id = {"<pad>": PAD, "<mask>": MASK, "<bos>": BOS, "<eos>": EOS}
+    idx = 4
+    for ch in "0123456789":
+        tok_to_id[ch] = idx
+        idx += 1
+    for o in range(26):
+        tok_to_id[chr(ord("a") + o)] = idx
+        idx += 1
+    for ch in _SYMBOLS:
+        tok_to_id[ch] = idx
+        idx += 1
+    assert idx <= VOCAB_SIZE, f"vocab overflow: {idx} > {VOCAB_SIZE}"
+    id_to_tok = {v: k for k, v in tok_to_id.items()}
+    return tok_to_id, id_to_tok
+
+
+TOK_TO_ID, ID_TO_TOK = _build_tables()
+
+
+def encode(text: str) -> list[int]:
+    """Encode a string to token ids. Raises on unknown characters."""
+    return [TOK_TO_ID[ch] for ch in text]
+
+
+def decode(ids, stop_at_eos: bool = True) -> str:
+    """Decode token ids back to a string.
+
+    Special tokens are dropped; decoding stops at the first <eos> when
+    ``stop_at_eos`` (mirrors the paper's generation-length accounting,
+    §A.3: valid tokens exclude <endoftext> and anything after it).
+    """
+    out = []
+    for i in ids:
+        i = int(i)
+        if i == EOS and stop_at_eos:
+            break
+        if i in (PAD, MASK, BOS, EOS):
+            continue
+        out.append(ID_TO_TOK.get(i, "?"))
+    return "".join(out)
+
+
+def to_json() -> str:
+    """Serialize the vocab for the rust tokenizer (artifacts/vocab.json)."""
+    return json.dumps(
+        {
+            "vocab_size": VOCAB_SIZE,
+            "pad": PAD,
+            "mask": MASK,
+            "bos": BOS,
+            "eos": EOS,
+            "id_to_tok": {str(k): v for k, v in ID_TO_TOK.items()},
+        },
+        indent=1,
+    )

@@ -1,0 +1,34 @@
+// throwaway smoke: load student_block_step HLO + weights npz, execute, compare
+use xla::FromRawBytes;
+fn main() -> anyhow::Result<()> {
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file("/tmp/sbs_test.hlo.txt")?;
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+    let mut weights = xla::Literal::read_npz("/tmp/sbs_weights.npz", &())?;
+    weights.sort_by(|a, b| a.0.cmp(&b.0));
+    let (l, bs, h, s, dh, b) = (3usize, 2usize, 4usize, 96usize, 24usize, 8usize);
+    let kc = xla::Literal::vec1(&vec![0f32; l*bs*h*s*dh]).reshape(&[l as i64, bs as i64, h as i64, s as i64, dh as i64])?;
+    let vc = kc.clone()?; // hmm Literal clone?
+    let cl = xla::Literal::scalar(64i32);
+    let vf = xla::Literal::vec1(&[10i32, 0i32]);
+    let blk = xla::Literal::vec1(&vec![1i32; bs*b]).reshape(&[bs as i64, b as i64])?;
+    let pos0 = xla::Literal::scalar(64i32);
+    let mut args: Vec<&xla::Literal> = weights.iter().map(|(_, l)| l).collect();
+    args.push(&kc); args.push(&vc); args.push(&cl); args.push(&vf); args.push(&blk); args.push(&pos0);
+    let t0 = std::time::Instant::now();
+    let res = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+    println!("exec time {:?}", t0.elapsed());
+    let outs = res.to_tuple()?;
+    println!("n outs {}", outs.len());
+    let logits = outs[0].to_vec::<f32>()?;
+    let expected = xla::Literal::read_npy("/tmp/sbs_expected_logits.npy", &())?.to_vec::<f32>()?;
+    let max_err = logits.iter().zip(&expected).map(|(a, e)| (a - e).abs()).fold(0f32, f32::max);
+    println!("logits sum {} max_err {}", logits.iter().sum::<f32>(), max_err);
+    assert!(max_err < 1e-4);
+    // time a few executions
+    let t0 = std::time::Instant::now();
+    for _ in 0..10 { exe.execute::<&xla::Literal>(&args)?; }
+    println!("per-exec {:?}", t0.elapsed() / 10);
+    println!("SMOKE OK");
+    Ok(())
+}

@@ -1,0 +1,121 @@
+"""Algorithm 2 objective properties (Eqs. 4-7)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import train_common as TC
+from compile import vocab
+from compile.train_cdlm import _states_from_batch, cdlm_losses, train_cdlm
+from compile.trajectory import collect
+
+CFG = M.ModelConfig(d_model=48, n_layers=2, n_heads=2, d_ff=96,
+                    prompt_len=32, gen_len=16, block_size=4)
+
+
+@pytest.fixture(scope="module")
+def teacher():
+    return M.init_params(CFG, jax.random.PRNGKey(2))
+
+
+@pytest.fixture(scope="module")
+def traj(teacher):
+    return collect(CFG, teacher, {"list-op": 1.0}, 4, seed=11,
+                   batch_size=4, temperatures=(0.0,), log=lambda *_: None)
+
+
+def _batch_states(traj, t_start, t_end):
+    n = len(traj)
+    return _states_from_batch(
+        CFG, traj.order[:n], traj.toks[:n],
+        np.full(n, t_start), np.full(n, t_end))
+
+
+def test_state_sets_partition(traj):
+    """U (newly unmasked) and S (still masked) partition the masked-at-y
+    positions; finalized-at-y positions are in neither."""
+    gen_y, gen_ys, U, Sm, _ = _batch_states(traj, 3, 8)
+    masked_y = gen_y == vocab.MASK
+    assert ((U | Sm) == masked_y).all()
+    assert not (U & Sm).any()
+    assert (U.sum(1) == 5).all()  # t_end - t_start newly unmasked
+
+
+def test_block_completion_state(traj):
+    """y* fully unmasks the active block of y and nothing else."""
+    B = CFG.block_size
+    t_start, t_end = 5, 8  # inside block 1
+    gen_y, gen_ys, U, Sm, _ = _batch_states(traj, t_start, t_end)
+    # positions finalized in steps [t_start, t_end) belong to block 1
+    for r in range(len(traj)):
+        pos_new = np.nonzero(U[r])[0]
+        assert (pos_new // B == 1).all()
+        # block 1 fully unmasked at y*
+        assert (gen_ys[r][B:2 * B] != vocab.MASK).all()
+
+
+def test_losses_finite_and_nonnegative(teacher, traj):
+    gen_y, gen_ys, U, Sm, _ = _batch_states(traj, 3, 8)
+    w = {"distill": 1.0, "cons": 0.5, "dlm": 0.01}
+    total, parts = cdlm_losses(
+        CFG, teacher, teacher, jnp.asarray(traj.prompts),
+        jnp.asarray(gen_y), jnp.asarray(gen_ys), jnp.asarray(U),
+        jnp.asarray(Sm), jnp.asarray(traj.hbuf), jnp.asarray(traj.answers),
+        jax.random.PRNGKey(0), w)
+    assert np.isfinite(float(total))
+    assert float(parts["distill"]) >= 0  # KL >= 0
+    assert float(parts["cons"]) >= 0
+    assert float(parts["dlm"]) >= 0
+
+
+def test_consistency_zero_when_states_equal(teacher, traj):
+    """If y == y* the consistency KL must vanish identically."""
+    gen_y, gen_ys, U, Sm, _ = _batch_states(traj, 4, 4)
+    assert (gen_y == gen_ys).all() and not U.any()
+    w = {"distill": 0.0, "cons": 1.0, "dlm": 0.0}
+    _, parts = cdlm_losses(
+        CFG, teacher, teacher, jnp.asarray(traj.prompts),
+        jnp.asarray(gen_y), jnp.asarray(gen_ys), jnp.asarray(U),
+        jnp.asarray(Sm), jnp.asarray(traj.hbuf), jnp.asarray(traj.answers),
+        jax.random.PRNGKey(0), w)
+    assert abs(float(parts["cons"])) < 1e-5
+
+
+def test_distill_gradient_reaches_lora_only(teacher, traj):
+    """Gradients must flow to LoRA adapters, not the frozen base."""
+    lora = M.init_lora(CFG, jax.random.PRNGKey(3))
+    gen_y, gen_ys, U, Sm, _ = _batch_states(traj, 3, 8)
+    w = {"distill": 1.0, "cons": 0.5, "dlm": 0.01}
+
+    def loss_fn(lo):
+        merged = M.apply_lora(CFG, teacher, lo)
+        t, _ = cdlm_losses(
+            CFG, teacher, merged, jnp.asarray(traj.prompts),
+            jnp.asarray(gen_y), jnp.asarray(gen_ys), jnp.asarray(U),
+            jnp.asarray(Sm), jnp.asarray(traj.hbuf),
+            jnp.asarray(traj.answers), jax.random.PRNGKey(0), w)
+        return t
+
+    grads = jax.grad(loss_fn)(lora)
+    gnorm = sum(float(jnp.abs(g).sum()) for g in grads.values())
+    assert gnorm > 0, "no gradient reached the adapters"
+
+
+def test_train_cdlm_smoke_reduces_loss(teacher, traj):
+    """A few steps of Algorithm 2 run end-to-end and return a merged
+    student that differs from the teacher."""
+    student, _ = train_cdlm(CFG, teacher, traj, steps=4, batch_size=4,
+                            log_every=100)
+    assert set(student) == set(teacher)
+    diff = float(jnp.abs(student["l0.wq"] - teacher["l0.wq"]).max())
+    assert diff > 0
+
+
+def test_dlm_loss_masks_only_answers(teacher):
+    """The DLM loss never corrupts the prompt and weights by 1/t."""
+    prompts, answers, _ = TC.encode_family_batch(CFG, "list-op", 4, 21)
+    val = TC.dlm_loss(CFG, teacher, jnp.asarray(prompts),
+                      jnp.asarray(answers), jax.random.PRNGKey(4))
+    assert np.isfinite(float(val)) and float(val) > 0

@@ -1,0 +1,143 @@
+"""Decoder + trajectory invariants (Algorithm 1 structure)."""
+
+import jax
+import numpy as np
+import pytest
+
+from compile import decoding, tasks, vocab
+from compile import model as M
+from compile import train_common as TC
+from compile.trajectory import TrajectoryDataset, collect
+
+CFG = M.ModelConfig(d_model=48, n_layers=2, n_heads=2, d_ff=96,
+                    prompt_len=32, gen_len=16, block_size=4)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(1))
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    p, _, _ = TC.encode_family_batch(CFG, "list-op", 4, seed=5)
+    return p
+
+
+def test_teacher_decode_finalizes_everything(params, prompts):
+    res = decoding.teacher_block_decode(CFG, params, prompts)
+    gen = res.ids[:, CFG.prompt_len:]
+    assert (gen != vocab.MASK).all(), "all positions must be finalized"
+    assert (res.steps == CFG.gen_len).all(), "N = Lg steps (one per token)"
+
+
+def test_teacher_decode_respects_block_order(params, prompts):
+    res = decoding.teacher_block_decode(CFG, params, prompts, collect=True)
+    B = CFG.block_size
+    for tr in res.trace:
+        blocks = [(pos - CFG.prompt_len) // B for pos, _, _ in tr]
+        assert blocks == sorted(blocks), "blocks must complete in order"
+        # exactly B finalizations per block
+        for b in range(CFG.num_blocks):
+            assert blocks.count(b) == B
+
+
+def test_teacher_decode_deterministic_at_tau0(params, prompts):
+    r1 = decoding.teacher_block_decode(CFG, params, prompts)
+    r2 = decoding.teacher_block_decode(CFG, params, prompts)
+    assert (r1.ids == r2.ids).all()
+
+
+def test_temperature_changes_trajectories(params, prompts):
+    r0 = decoding.teacher_block_decode(CFG, params, prompts, temperature=0.0)
+    r1 = decoding.teacher_block_decode(CFG, params, prompts, temperature=1.0,
+                                       seed=3)
+    # with random init weights, sampling at tau=1 differs from greedy
+    assert (r0.ids != r1.ids).any()
+
+
+def test_step_truncation_budget(params, prompts):
+    """steps_per_block < B: the Table 4 naive-truncation baseline uses
+    ceil(B/spb) finalizations per step and stays within budget."""
+    res = decoding.teacher_block_decode(CFG, params, prompts,
+                                        steps_per_block=2)
+    assert (res.steps <= 2 * CFG.num_blocks).all()
+    gen = res.ids[:, CFG.prompt_len:]
+    assert (gen != vocab.MASK).all()
+
+
+def test_student_decode_terminates_and_counts(params, prompts):
+    res = decoding.student_cdlm_decode(CFG, params, prompts, tau_conf=0.9)
+    gen = res.ids[:, CFG.prompt_len:]
+    assert gen.shape == (4, CFG.gen_len)
+    assert (res.steps >= 1).all()
+    # at most B steps + nothing beyond budget
+    assert (res.steps <= CFG.gen_len).all()
+
+
+def test_student_decode_low_threshold_is_fast(params, prompts):
+    """tau=0 finalizes a whole block per step: steps == #blocks decoded."""
+    res = decoding.student_cdlm_decode(CFG, params, prompts, tau_conf=0.0)
+    assert (res.steps <= CFG.num_blocks).all()
+
+
+def test_gen_length_accounting():
+    row = np.array([5, 6, vocab.EOS, 7, vocab.MASK])
+    assert decoding._gen_length(row) == 2
+    row = np.array([5, vocab.MASK, 6])
+    assert decoding._gen_length(row) == 2  # masks don't count
+
+
+def test_valid_from():
+    p = np.array([[vocab.PAD, vocab.PAD, vocab.BOS, 5],
+                  [vocab.BOS, 5, 6, 7]], np.int32)
+    np.testing.assert_array_equal(decoding._valid_from(p), [2, 0])
+
+
+# ---------------------------------------------------------------------------
+# trajectory collection (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def traj(params):
+    mix = {"list-op": 1.0}
+    return collect(CFG, params, mix, 4, seed=9, batch_size=4,
+                   temperatures=(0.0,), log=lambda *_: None)
+
+
+def test_trajectory_order_is_permutation(traj):
+    for r in range(len(traj)):
+        assert sorted(traj.order[r]) == list(range(CFG.gen_len))
+
+
+def test_trajectory_hidden_buffer_written_once(traj):
+    """Every position's hidden state is written exactly when finalized,
+    so no row of H may be all-zero (paper Fig. 6 write-once buffer)."""
+    assert not (np.abs(traj.hbuf).sum(axis=-1) == 0).any()
+
+
+def test_trajectory_state_reconstruction(traj):
+    """state_at(t) must have exactly t finalized tokens, matching the
+    finalization order."""
+    row = 0
+    s0 = traj.state_at(row, 0, CFG)
+    assert (s0[CFG.prompt_len:] == vocab.MASK).all()
+    s3 = traj.state_at(row, 3, CFG)
+    gen = s3[CFG.prompt_len:]
+    assert (gen != vocab.MASK).sum() == 3
+    for t in range(3):
+        assert gen[traj.order[row, t]] == traj.toks[row, t]
+
+
+def test_trajectory_final_matches_tokens(traj):
+    row = 0
+    full = traj.state_at(row, CFG.gen_len, CFG)
+    np.testing.assert_array_equal(full[CFG.prompt_len:], traj.final[row])
+
+
+def test_trajectory_save_load_roundtrip(tmp_path, traj):
+    p = str(tmp_path / "t.npz")
+    traj.save(p)
+    t2 = TrajectoryDataset.load(p)
+    np.testing.assert_array_equal(t2.order, traj.order)
+    np.testing.assert_array_equal(t2.hbuf, traj.hbuf)

@@ -1,0 +1,175 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+hypothesis sweeps shapes, dtypes, cache lengths and exclusion windows; any
+mismatch against ref.py is a hard failure.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.block_attn import block_attn, block_attn_batched
+from compile.kernels.confidence import confidence, confidence_batched
+from compile.kernels.ref import ref_block_attn, ref_confidence
+
+settings.register_profile("ci", deadline=None, max_examples=20)
+settings.load_profile("ci")
+
+
+def _rand(key, *shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _attn_inputs(seed, H, B, dh, T, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = _rand(ks[0], H, B, dh, dtype=dtype)
+    kc = _rand(ks[1], H, T, dh, dtype=dtype)
+    vc = _rand(ks[2], H, T, dh, dtype=dtype)
+    kb = _rand(ks[3], H, B, dh, dtype=dtype)
+    vb = _rand(ks[4], H, B, dh, dtype=dtype)
+    return q, kc, vc, kb, vb
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       H=st.sampled_from([1, 2, 4]),
+       B=st.sampled_from([1, 2, 8]),
+       dh=st.sampled_from([8, 24]),
+       tiles=st.integers(1, 3),
+       kv_tile=st.sampled_from([16, 32]))
+def test_block_attn_matches_ref(seed, H, B, dh, tiles, kv_tile):
+    T = tiles * kv_tile
+    q, kc, vc, kb, vb = _attn_inputs(seed, H, B, dh, T)
+    rng = np.random.RandomState(seed % 2**31)
+    cache_len = int(rng.randint(0, T + 1))
+    valid_from = int(rng.randint(0, max(1, cache_len + 1)))
+    got = block_attn(q, kc, vc, kb, vb, cache_len, valid_from,
+                     kv_tile=kv_tile)
+    want = ref_block_attn(q, kc, vc, kb, vb, cache_len, valid_from)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       excl_start=st.integers(0, 80),
+       excl_len=st.sampled_from([0, 4, 8, 16]))
+def test_block_attn_exclusion_window(seed, excl_start, excl_len):
+    H, B, dh, T = 2, 8, 8, 96
+    q, kc, vc, kb, vb = _attn_inputs(seed, H, B, dh, T)
+    got = block_attn(q, kc, vc, kb, vb, T, 0, excl_start, excl_len)
+    want = ref_block_attn(q, kc, vc, kb, vb, T, 0,
+                          excl_start=excl_start, excl_len=excl_len)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_block_attn_empty_cache():
+    """cache_len == 0: attention only over the block itself."""
+    q, kc, vc, kb, vb = _attn_inputs(0, 2, 4, 8, 32)
+    got = block_attn(q, kc, vc, kb, vb, 0, 0)
+    want = ref_block_attn(q, jnp.zeros_like(kc), jnp.zeros_like(vc),
+                          kb, vb, 0, 0)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_block_attn_ignores_stale_cache_contents():
+    """Invalid cache slots must not influence the output at all."""
+    q, kc, vc, kb, vb = _attn_inputs(1, 2, 4, 8, 64)
+    cache_len = 20
+    o1 = block_attn(q, kc, vc, kb, vb, cache_len, 0)
+    kc2 = kc.at[:, cache_len:, :].set(1e6)
+    vc2 = vc.at[:, cache_len:, :].set(-1e6)
+    o2 = block_attn(q, kc2, vc2, kb, vb, cache_len, 0)
+    np.testing.assert_allclose(o1, o2, rtol=1e-6, atol=1e-6)
+
+
+def test_block_attn_valid_from_masks_left_pad():
+    q, kc, vc, kb, vb = _attn_inputs(2, 2, 4, 8, 64)
+    o1 = block_attn(q, kc, vc, kb, vb, 40, 10)
+    kc2 = kc.at[:, :10, :].set(99.0)
+    o2 = block_attn(q, kc2, vc, kb, vb, 40, 10)
+    np.testing.assert_allclose(o1, o2, rtol=1e-6, atol=1e-6)
+
+
+def test_block_attn_rejects_bad_tile():
+    q, kc, vc, kb, vb = _attn_inputs(0, 1, 2, 8, 40)
+    with pytest.raises(ValueError):
+        block_attn(q, kc, vc, kb, vb, 0, 0, kv_tile=32)
+
+
+def test_block_attn_bf16_inputs():
+    """bf16 K/V with f32 accumulation stays close to the f32 oracle."""
+    q, kc, vc, kb, vb = _attn_inputs(3, 2, 4, 8, 32, dtype=jnp.bfloat16)
+    got = block_attn(q, kc, vc, kb, vb, 32, 0)
+    want = ref_block_attn(q, kc, vc, kb, vb, 32, 0)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_block_attn_batched_matches_per_row():
+    bs = 3
+    rows = [_attn_inputs(10 + r, 2, 8, 8, 64) for r in range(bs)]
+    q, kc, vc, kb, vb = [jnp.stack([r[i] for r in rows]) for i in range(5)]
+    vf = jnp.array([0, 5, 63], jnp.int32)
+    got = block_attn_batched(q, kc, vc, kb, vb, 64, vf)
+    for r in range(bs):
+        want = ref_block_attn(*rows[r], 64, int(vf[r]))
+        np.testing.assert_allclose(got[r], want, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# confidence kernel
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**31 - 1),
+       B=st.sampled_from([1, 4, 8, 16]),
+       V=st.sampled_from([16, 64, 128]),
+       scale=st.sampled_from([0.1, 1.0, 10.0]))
+def test_confidence_matches_ref(seed, B, V, scale):
+    lg = jax.random.normal(jax.random.PRNGKey(seed), (B, V)) * scale
+    tok, conf = confidence(lg)
+    rtok, rconf = ref_confidence(lg)
+    assert (tok == rtok).all()
+    np.testing.assert_allclose(conf, rconf, rtol=1e-5, atol=1e-6)
+
+
+def test_confidence_is_probability():
+    lg = jax.random.normal(jax.random.PRNGKey(0), (32, 64)) * 5
+    _, conf = confidence(lg)
+    assert (conf > 0).all() and (conf <= 1.0 + 1e-6).all()
+
+
+def test_confidence_onehot_certainty():
+    lg = jnp.full((2, 64), -30.0).at[0, 7].set(30.0).at[1, 3].set(30.0)
+    tok, conf = confidence(lg)
+    assert tok.tolist() == [7, 3]
+    np.testing.assert_allclose(conf, [1.0, 1.0], rtol=1e-5)
+
+
+def test_confidence_batched_shape():
+    lg = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 64))
+    tok, conf = confidence_batched(lg)
+    assert tok.shape == (4, 8) and conf.shape == (4, 8)
+    rtok, rconf = ref_confidence(lg)
+    assert (tok == rtok).all()
+    np.testing.assert_allclose(conf, rconf, rtol=1e-5, atol=1e-6)
+
+
+@given(seed=st.integers(0, 2**31 - 1), B=st.sampled_from([2, 4, 8]))
+def test_block_attn_intra_causal(seed, B):
+    """AR-verify path: within-block lower-triangular masking."""
+    H, dh, T = 2, 8, 32
+    q, kc, vc, kb, vb = _attn_inputs(seed, H, B, dh, T)
+    got = block_attn(q, kc, vc, kb, vb, 16, 0, intra_causal=True)
+    want = ref_block_attn(q, kc, vc, kb, vb, 16, 0, intra_causal=True)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_intra_causal_first_position_ignores_rest_of_block():
+    """Row 0 under the causal mask sees only the cache + itself, so
+    changing later block tokens must not affect it."""
+    H, B, dh, T = 2, 4, 8, 32
+    q, kc, vc, kb, vb = _attn_inputs(5, H, B, dh, T)
+    o1 = block_attn(q, kc, vc, kb, vb, 20, 0, intra_causal=True)
+    kb2 = kb.at[:, 1:, :].set(99.0)
+    vb2 = vb.at[:, 1:, :].set(-99.0)
+    o2 = block_attn(q, kc, vc, kb2, vb2, 20, 0, intra_causal=True)
+    np.testing.assert_allclose(o1[:, 0, :], o2[:, 0, :], rtol=1e-6)

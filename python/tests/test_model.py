@@ -1,0 +1,231 @@
+"""L2 model invariants.
+
+The load-bearing test is cache parity: decode-path programs (prefill +
+block_step with KV cache) must produce exactly the same logits as a full
+forward pass under the block-causal mask — that is what makes the
+student's KV caching *exact* rather than approximate (the paper's core
+systems claim, §4.3).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import vocab
+
+CFG = M.ModelConfig(d_model=48, n_layers=2, n_heads=2, d_ff=96,
+                    prompt_len=32, gen_len=16, block_size=4)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _random_ids(key, lo_valid=0):
+    S = CFG.seq_len
+    ids = jax.random.randint(key, (2, S), 4, CFG.vocab_size)
+    return ids.astype(jnp.int32)
+
+
+def test_param_shapes_cover_all_params(params):
+    assert set(params) == set(M.param_shapes(CFG))
+
+
+def test_mask_shapes_and_prompt_visibility():
+    m = M.block_causal_mask(CFG, 0)
+    P, B = CFG.prompt_len, CFG.block_size
+    assert m.shape == (CFG.seq_len, CFG.seq_len)
+    # every generation position sees the whole prompt
+    assert bool(m[P:, :P].all())
+    # prompt sees only prompt
+    assert not bool(m[:P, P:].any())
+    # gen block 0 does not see gen block 1
+    assert not bool(m[P, P + B:].any())
+    # within-block bidirectional
+    assert bool(m[P:P + B, P:P + B].all())
+
+
+def test_block_causal_mask_is_superset_of_causal_on_blocks():
+    mb = np.asarray(M.block_causal_mask(CFG, 0))
+    mc = np.asarray(M.causal_mask(CFG, 0))
+    P = CFG.prompt_len
+    # causal visibility within generation implies block-causal visibility
+    assert (mc[P:, P:] <= mb[P:, P:]).all()
+
+
+def test_valid_from_masks_columns():
+    m = np.asarray(M.bidirectional_mask(CFG, 5))
+    assert not m[:, :5].any()
+    assert m[:, 5:].all()
+
+
+def test_rope_rotation_properties():
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 2, 8))
+    pos = jnp.arange(4, dtype=jnp.int32)
+    y = M.rope(x, pos, 10000.0)
+    # norm-preserving
+    np.testing.assert_allclose(
+        jnp.linalg.norm(x, axis=-1), jnp.linalg.norm(y, axis=-1), rtol=1e-5)
+    # position 0 is identity
+    np.testing.assert_allclose(y[0], x[0], rtol=1e-6)
+
+
+def test_rms_norm_unit_scale():
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, 8)) * 7
+    y = M.rms_norm(x, jnp.ones(8))
+    np.testing.assert_allclose(
+        jnp.mean(y * y, axis=-1), jnp.ones(3), rtol=1e-4)
+
+
+def test_forward_full_shapes(params):
+    ids = _random_ids(jax.random.PRNGKey(3))
+    mask = M.bidirectional_mask(CFG, 0)
+    logits, k, v, h = M.forward_full(CFG, params, ids, mask,
+                                     collect_kv=True, collect_hidden=True)
+    S, L, H, dh = CFG.seq_len, CFG.n_layers, CFG.n_heads, CFG.d_head
+    assert logits.shape == (2, S, CFG.vocab_size)
+    assert k.shape == (L, 2, H, S, dh)
+    assert h.shape == (2, S, CFG.d_model)
+
+
+def test_hidden_buffer_reconstructs_logits(params):
+    """lm_head(hidden) == logits — the paper's 30x storage trick (A.1)
+    relies on this identity."""
+    ids = _random_ids(jax.random.PRNGKey(4))
+    mask = M.bidirectional_mask(CFG, 0)
+    logits, h = M.forward_full(CFG, params, ids, mask, collect_hidden=True)
+    np.testing.assert_allclose(h @ params["head"], logits, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_cache_parity_student(params):
+    """prefill + block_step(cache) == forward_full(block-causal mask).
+
+    Exact KV caching: for the first generation block, the cached decode
+    path must reproduce the full-sequence student forward bit-for-bit
+    (up to float tolerance)."""
+    key = jax.random.PRNGKey(5)
+    P, B, S = CFG.prompt_len, CFG.block_size, CFG.seq_len
+    prompts = jax.random.randint(key, (2, P), 4, 40).astype(jnp.int32)
+    vf = jnp.array([0, 3], jnp.int32)
+    prompts = jnp.where(jnp.arange(P)[None, :] >= vf[:, None], prompts,
+                        vocab.PAD)
+    gen = jnp.full((2, CFG.gen_len), vocab.MASK, jnp.int32)
+    blk = jax.random.randint(jax.random.PRNGKey(6), (2, B), 4, 40)
+    gen = gen.at[:, :B].set(blk)
+    ids = jnp.concatenate([prompts, gen], axis=1)
+
+    # full forward under the student mask; rows mask their own padding
+    mask = jax.vmap(lambda v: M.block_causal_mask(CFG, v))(vf)
+    full_logits = M.forward_full(CFG, params, ids, mask)
+
+    # decode path: prefill prompt, then one block step
+    k, v = M.student_prefill(CFG, params, prompts, vf)
+    L, H, dh = CFG.n_layers, CFG.n_heads, CFG.d_head
+    kc = jnp.zeros((L, 2, H, S, dh)).at[:, :, :, :P].set(k)
+    vc = jnp.zeros((L, 2, H, S, dh)).at[:, :, :, :P].set(v)
+    logits, tok, conf, kb, vb = M.student_block_step(
+        CFG, params, kc, vc, jnp.int32(P), vf, blk.astype(jnp.int32),
+        jnp.int32(P))
+    np.testing.assert_allclose(logits, full_logits[:, P:P + B, :],
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_cache_parity_second_block(params):
+    """After committing block 0's KV, block 1 decode matches full fwd."""
+    key = jax.random.PRNGKey(7)
+    P, B, S = CFG.prompt_len, CFG.block_size, CFG.seq_len
+    prompts = jax.random.randint(key, (1, P), 4, 40).astype(jnp.int32)
+    vf = jnp.zeros(1, jnp.int32)
+    g1 = jax.random.randint(jax.random.PRNGKey(8), (1, B), 4, 40)
+    g2 = jax.random.randint(jax.random.PRNGKey(9), (1, B), 4, 40)
+    gen = jnp.full((1, CFG.gen_len), vocab.MASK, jnp.int32)
+    gen = gen.at[:, :B].set(g1).at[:, B:2 * B].set(g2)
+    ids = jnp.concatenate([prompts, gen], axis=1)
+    mask = jax.vmap(lambda v: M.block_causal_mask(CFG, v))(vf)
+    full_logits = M.forward_full(CFG, params, ids, mask)
+
+    k, v = M.student_prefill(CFG, params, prompts, vf)
+    L, H, dh = CFG.n_layers, CFG.n_heads, CFG.d_head
+    kc = jnp.zeros((L, 1, H, S, dh)).at[:, :, :, :P].set(k)
+    vc = jnp.zeros((L, 1, H, S, dh)).at[:, :, :, :P].set(v)
+    # commit block 0
+    _, _, _, kb, vb = M.student_block_step(
+        CFG, params, kc, vc, jnp.int32(P), vf, g1.astype(jnp.int32),
+        jnp.int32(P))
+    kc = kc.at[:, :, :, P:P + B].set(kb)
+    vc = vc.at[:, :, :, P:P + B].set(vb)
+    logits, *_ = M.student_block_step(
+        CFG, params, kc, vc, jnp.int32(P + B), vf, g2.astype(jnp.int32),
+        jnp.int32(P + B))
+    np.testing.assert_allclose(logits, full_logits[:, P + B:P + 2 * B, :],
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ar_cache_parity(params):
+    """AR prefill + steps == causal forward_full logits."""
+    P, S = CFG.prompt_len, CFG.seq_len
+    prompts = jax.random.randint(jax.random.PRNGKey(10), (1, P), 4, 40)
+    prompts = prompts.astype(jnp.int32)
+    vf = jnp.zeros(1, jnp.int32)
+    t1 = jnp.array([5], jnp.int32)
+    ids = jnp.concatenate(
+        [prompts, t1[:, None],
+         jnp.full((1, CFG.gen_len - 1), vocab.PAD, jnp.int32)], axis=1)
+    mask = M.causal_mask(CFG, 0)
+    full_logits = M.forward_full(CFG, params, ids, mask)
+
+    last, tok, conf, k, v = M.ar_prefill(CFG, params, prompts, vf)
+    np.testing.assert_allclose(last, full_logits[:, P - 1, :], rtol=2e-4,
+                               atol=2e-4)
+    L, H, dh = CFG.n_layers, CFG.n_heads, CFG.d_head
+    kc = jnp.zeros((L, 1, H, S, dh)).at[:, :, :, :P].set(k)
+    vc = jnp.zeros((L, 1, H, S, dh)).at[:, :, :, :P].set(v)
+    lg, *_ = M.ar_step(CFG, params, kc, vc, jnp.int32(P), vf, t1)
+    np.testing.assert_allclose(lg, full_logits[:, P, :], rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_teacher_block_approx_refresh_equals_full(params):
+    """With a fresh cache (refreshed this step), the approximate-cache
+    block step must equal the full bidirectional forward on the block —
+    the dual-cache correctness anchor (refresh_every=1 ⇒ exact)."""
+    P, B, S = CFG.prompt_len, CFG.block_size, CFG.seq_len
+    ids = _random_ids(jax.random.PRNGKey(11))
+    vf = jnp.zeros(2, jnp.int32)
+    full_logits, k, v = M.forward_full(
+        CFG, params, ids, M.bidirectional_mask(CFG, 0), collect_kv=True)
+    pos0 = P + B  # second generation block
+    blk = ids[:, pos0:pos0 + B]
+    logits, *_ = M.teacher_block_approx(CFG, params, k, v, vf, blk,
+                                        jnp.int32(pos0))
+    np.testing.assert_allclose(logits, full_logits[:, pos0:pos0 + B, :],
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_lora_zero_init_is_identity(params):
+    lora = M.init_lora(CFG, jax.random.PRNGKey(12))
+    merged = M.merge_lora(CFG, params, lora)
+    for k in params:
+        np.testing.assert_allclose(merged[k], params[k])
+
+
+def test_lora_targets_paper_projections():
+    lora = M.init_lora(CFG, jax.random.PRNGKey(13))
+    kinds = {k.split(".")[-2] if k.count(".") == 2 else k.split(".")[0]
+             for k in lora}
+    for t in M.LORA_TARGETS:
+        assert any(k.endswith(f"{t}.A") for k in lora), t
+
+
+def test_lora_merge_changes_weights():
+    params = M.init_params(CFG, jax.random.PRNGKey(14))
+    lora = M.init_lora(CFG, jax.random.PRNGKey(15))
+    lora = {k: (v + 0.1 if k.endswith(".B") else v) for k, v in lora.items()}
+    merged = M.merge_lora(CFG, params, lora)
+    assert not np.allclose(merged["l0.wq"], params["l0.wq"])
+    # non-target weights untouched
+    np.testing.assert_allclose(merged["emb"], params["emb"])

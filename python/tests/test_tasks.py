@@ -1,0 +1,103 @@
+import numpy as np
+import pytest
+
+from compile import tasks, vocab
+from compile.model import ModelConfig
+
+CFG = ModelConfig()
+
+
+def test_splitmix64_reference_values():
+    """Pinned outputs — the rust util::rng mirror must match these."""
+    rng = tasks.SplitMix64(0)
+    vals = [rng.next_u64() for _ in range(3)]
+    assert vals == [0xE220A8397B1DCDAF, 0x6E789E6AA1B965F4, 0x06C45D188009454F]
+
+
+def test_splitmix64_seeded_determinism():
+    a = tasks.SplitMix64(42)
+    b = tasks.SplitMix64(42)
+    assert [a.next_u64() for _ in range(10)] == [b.next_u64() for _ in range(10)]
+
+
+@pytest.mark.parametrize("family", tasks.FAMILIES)
+def test_generation_deterministic(family):
+    s1 = tasks.generate(family, 16, seed=7)
+    s2 = tasks.generate(family, 16, seed=7)
+    assert [(a.prompt, a.answer) for a in s1] == \
+        [(a.prompt, a.answer) for a in s2]
+
+
+@pytest.mark.parametrize("family", tasks.FAMILIES)
+def test_answers_are_correct(family):
+    """The CoT must actually evaluate to the final answer."""
+    for s in tasks.generate(family, 64, seed=3):
+        assert s.answer.rsplit("#", 1)[1] == s.final
+        # every CoT equation must be arithmetically true
+        body = s.answer.rsplit("#", 1)[0]
+        for eq in filter(None, body.split(";")):
+            lhs, rhs = eq.split("=")
+            assert eval(lhs) == int(rhs), f"{family}: bad CoT step {eq}"
+
+
+def test_str_transform_semantics():
+    for s in tasks.generate("str-transform", 64, seed=11):
+        arg = s.prompt[s.prompt.index("(") + 1:s.prompt.index(")")]
+        if s.prompt.startswith("q:rev"):
+            assert s.final == arg[::-1]
+        else:
+            assert s.final == arg + arg
+
+
+def test_list_op_semantics():
+    for s in tasks.generate("list-op", 64, seed=13):
+        arg = s.prompt[s.prompt.index("(") + 1:s.prompt.index(")")]
+        if "sort" in s.prompt:
+            assert s.final == "".join(sorted(arg))
+        elif "max" in s.prompt:
+            assert s.final == max(arg)
+        else:
+            assert s.final == min(arg)
+
+
+@pytest.mark.parametrize("family", tasks.FAMILIES)
+def test_encode_fits_geometry(family):
+    """Every generated sample must fit the fixed prompt/gen geometry."""
+    for s in tasks.generate(family, 128, seed=17):
+        p, a = tasks.encode_example(family, s, CFG.prompt_len, CFG.gen_len)
+        assert len(p) == CFG.prompt_len
+        assert len(a) == CFG.gen_len
+        assert vocab.EOS in a
+
+
+def test_encode_left_pads_prompt():
+    s = tasks.generate("list-op", 1, seed=1)[0]
+    p, _ = tasks.encode_example("list-op", s, CFG.prompt_len, CFG.gen_len)
+    first = next(i for i, t in enumerate(p) if t != vocab.PAD)
+    assert p[first] == vocab.BOS
+    assert all(t == vocab.PAD for t in p[:first])
+    assert all(t != vocab.PAD for t in p[first:])
+
+
+def test_few_shot_protocol():
+    assert tasks.NUM_SHOTS["chain-arith"] == 1
+    assert tasks.NUM_SHOTS["str-transform"] == 0  # coding: 0-shot (paper)
+    shots = tasks.few_shot_examples("chain-arith")
+    assert len(shots) == 1
+    # shots are fixed across calls
+    assert tasks.few_shot_examples("chain-arith")[0].prompt == shots[0].prompt
+
+
+def test_extract_final_and_score():
+    assert tasks.extract_final("3*4=12;#17;") == "17"
+    assert tasks.extract_final("nothing here") is None
+    s = tasks.Sample("q", "a", "17")
+    assert tasks.score("blah#17;<pad>", s)
+    assert not tasks.score("blah#18;", s)
+    assert not tasks.score("17", s)
+
+
+def test_scoring_truncates_at_semicolon():
+    s = tasks.Sample("q", "a", "17")
+    assert tasks.score("#17;junk#99", s) is False  # last '#' wins
+    assert tasks.score("x#17;trailing", s)

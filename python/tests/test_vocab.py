@@ -1,0 +1,47 @@
+import json
+
+import pytest
+
+from compile import vocab
+
+
+def test_specials_fixed():
+    assert (vocab.PAD, vocab.MASK, vocab.BOS, vocab.EOS) == (0, 1, 2, 3)
+
+
+def test_roundtrip_simple():
+    s = "q:3*4+5=?a:3*4=12;12+5=17;#17;"
+    assert vocab.decode(vocab.encode(s)) == s
+
+
+def test_all_symbols_roundtrip():
+    s = "0123456789abcdefghijklmnopqrstuvwxyz+-*=;#:?(),.><[] "
+    ids = vocab.encode(s)
+    assert len(set(ids)) == len(ids), "symbol ids must be unique"
+    assert vocab.decode(ids) == s
+
+
+def test_decode_stops_at_eos():
+    ids = vocab.encode("#17") + [vocab.EOS] + vocab.encode("garbage")
+    assert vocab.decode(ids) == "#17"
+
+
+def test_decode_skips_specials_without_eos_stop():
+    ids = [vocab.PAD, vocab.BOS] + vocab.encode("ab") + [vocab.MASK]
+    assert vocab.decode(ids, stop_at_eos=False) == "ab"
+
+
+def test_unknown_char_raises():
+    with pytest.raises(KeyError):
+        vocab.encode("A")  # uppercase not in vocab
+
+
+def test_vocab_size_bound():
+    assert max(vocab.ID_TO_TOK) < vocab.VOCAB_SIZE
+
+
+def test_json_export_parses_and_matches():
+    data = json.loads(vocab.to_json())
+    assert data["vocab_size"] == vocab.VOCAB_SIZE
+    assert data["id_to_tok"][str(vocab.TOK_TO_ID["7"])] == "7"
+    assert data["eos"] == vocab.EOS

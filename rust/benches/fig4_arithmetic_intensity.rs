@@ -1,0 +1,57 @@
+//! Paper Figure 4: arithmetic intensity across batch sizes — analytic,
+//! at the paper's own scale (LLaMA-3.1-8B AR, LLaDA-8B DLM, A100).
+//! Reproduces the quoted AI values directly (within a few percent; the
+//! unit tests in `analysis::intensity` pin them).
+//!
+//! Run: `cargo bench --bench fig4_arithmetic_intensity`
+
+use cdlm::analysis::intensity::{
+    ArchConfig, DecodeMode, IntensityModel, Workload, PAPER_BATCH_SIZES,
+};
+use cdlm::analysis::roofline::A100;
+use cdlm::util::json::Json;
+
+fn main() {
+    let ar = IntensityModel::new(ArchConfig::llama31_8b(), Workload::paper());
+    let dlm = IntensityModel::new(ArchConfig::llada_8b(), Workload::paper());
+    let modes: Vec<(&str, &IntensityModel, DecodeMode)> = vec![
+        ("AR (LLaMA-3.1-8B)", &ar, DecodeMode::Ar),
+        ("Vanilla DLM (LLaDA-8B)", &dlm, DecodeMode::VanillaDlm),
+        ("Block DLM B=4", &dlm, DecodeMode::BlockDlm { block: 4 }),
+        ("Block DLM B=16", &dlm, DecodeMode::BlockDlm { block: 16 }),
+        ("Block DLM B=32", &dlm, DecodeMode::BlockDlm { block: 32 }),
+    ];
+    println!(
+        "\n=== Figure 4 — arithmetic intensity vs batch size (ridge {:.1} FLOP/B) ===",
+        A100.ridge()
+    );
+    print!("{:<24}", "mode");
+    for bs in PAPER_BATCH_SIZES {
+        print!("{bs:>9}");
+    }
+    println!();
+    let mut results = Vec::new();
+    for (name, m, mode) in &modes {
+        print!("{name:<24}");
+        let mut series = Vec::new();
+        for bs in PAPER_BATCH_SIZES {
+            let ai = m.ai(*mode, bs);
+            print!("{ai:>9.1}");
+            series.push(Json::num(ai));
+        }
+        println!();
+        results.push(Json::obj(vec![
+            ("mode", Json::str(*name)),
+            ("ai", Json::Arr(series)),
+        ]));
+    }
+    println!("\npaper anchors: AR bs1-8 = 1.0/2.0/4.0/7.8, AR bs128 = 71.3;");
+    println!("vanilla bs1 = 438.9 (compute-bound); block bs1 = 4.0/15.8/31.1 (B=4/16/32)");
+    for (b, want) in [(32usize, 8usize), (16, 16)] {
+        let got = dlm
+            .ridge_crossing(DecodeMode::BlockDlm { block: b }, A100.ridge(), 256)
+            .unwrap_or(0);
+        println!("ridge crossing B={b}: bs ≈ {got} (paper ≈ {want})");
+    }
+    cdlm::bench_support::save_results("fig4_intensity", Json::arr(results));
+}

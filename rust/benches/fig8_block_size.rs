@@ -1,0 +1,63 @@
+//! Paper Figure 8 (Appendix B.3): inference-time block-size sensitivity.
+//!
+//! The student was trained with B=8 (paper: 32); we sweep the
+//! inference-time block size over the exported variants {2, 4, 8, 16}.
+//! Paper shape: TPS rises with B up to the training block size, then
+//! saturates/regresses (train-inference mismatch); accuracy peaks at the
+//! training block size.
+//!
+//! Run: `cargo bench --bench fig8_block_size`
+
+use cdlm::bench_support as bench;
+use cdlm::coordinator::{DecodeOpts, Method};
+use cdlm::util::json::Json;
+use cdlm::workload::Family;
+
+fn main() {
+    let Some(mut core) = bench::require_artifacts("fig8") else {
+        return;
+    };
+    let n = bench::eval_n(16);
+    let geom = core.rt.manifest.geometry.clone();
+    let mut blocks = core.rt.manifest.sweep_blocks.clone();
+    blocks.push(geom.block_size);
+    blocks.sort_unstable();
+
+    println!("\n=== Figure 8 — inference block-size sweep (trained B={}) ===",
+             geom.block_size);
+    println!(
+        "{:<10} {:>4} {:>8} {:>12} {:>8} {:>8}",
+        "backbone", "B", "TPS", "Latency(s)", "Steps", "Score"
+    );
+    let mut results = Vec::new();
+    // sweep programs were exported at bs=1 only
+    std::env::set_var("CDLM_BENCH_BS", "1");
+    for backbone in ["dream", "llada"] {
+        for &b in &blocks {
+            let mut opts = DecodeOpts::defaults(&geom);
+            opts.block_size = b;
+            let r = bench::run_cell(
+                &mut core,
+                backbone,
+                Method::Cdlm,
+                Family::ChainArith,
+                n,
+                &opts,
+            )
+            .expect("cell");
+            println!(
+                "{:<10} {:>4} {:>8.1} {:>12.2} {:>8.1} {:>8.1}",
+                backbone, b, r.tps, r.latency_s, r.steps, r.score
+            );
+            results.push(Json::obj(vec![
+                ("backbone", Json::str(backbone)),
+                ("block", Json::num(b as f64)),
+                ("tps", Json::num(r.tps)),
+                ("latency_s", Json::num(r.latency_s)),
+                ("steps", Json::num(r.steps)),
+                ("score", Json::num(r.score)),
+            ]));
+        }
+    }
+    bench::save_results("fig8_block_size", Json::arr(results));
+}

@@ -1,0 +1,69 @@
+//! Paper Figure 9 (Appendix B.4): roofline placement of AR / vanilla /
+//! block-wise decoding on the A100 (311.9 TF/s FP16, 2039 GB/s,
+//! ridge 153.0) — attainable TFLOP/s and step latency per batch size.
+//!
+//! Run: `cargo bench --bench fig9_roofline`
+
+use cdlm::analysis::intensity::{
+    ArchConfig, DecodeMode, IntensityModel, Workload, PAPER_BATCH_SIZES,
+};
+use cdlm::analysis::roofline::A100;
+use cdlm::util::json::Json;
+
+fn main() {
+    let ar = IntensityModel::new(ArchConfig::llama31_8b(), Workload::paper());
+    let dlm = IntensityModel::new(ArchConfig::llada_8b(), Workload::paper());
+    let modes: Vec<(&str, &IntensityModel, DecodeMode)> = vec![
+        ("AR (LLaMA-3.1-8B)", &ar, DecodeMode::Ar),
+        ("Vanilla DLM (LLaDA-8B)", &dlm, DecodeMode::VanillaDlm),
+        ("Block DLM B=4", &dlm, DecodeMode::BlockDlm { block: 4 }),
+        ("Block DLM B=16", &dlm, DecodeMode::BlockDlm { block: 16 }),
+        ("Block DLM B=32", &dlm, DecodeMode::BlockDlm { block: 32 }),
+    ];
+    println!(
+        "\n=== Figure 9 — roofline simulation (A100: {:.1} TF/s, {:.0} GB/s, ridge {:.1}, eff. peak {:.1} TF/s) ===",
+        A100.peak_flops / 1e12,
+        A100.bandwidth / 1e9,
+        A100.ridge(),
+        A100.effective_peak() / 1e12,
+    );
+    println!("attainable TFLOP/s per batch size:");
+    print!("{:<24}", "mode");
+    for bs in PAPER_BATCH_SIZES {
+        print!("{bs:>9}");
+    }
+    println!();
+    let mut results = Vec::new();
+    for (name, m, mode) in &modes {
+        print!("{name:<24}");
+        let mut tf = Vec::new();
+        let mut bound = Vec::new();
+        for bs in PAPER_BATCH_SIZES {
+            let p = A100.simulate_mode(m, *mode, bs);
+            print!("{:>9.1}", p.attainable_tflops);
+            tf.push(Json::num(p.attainable_tflops));
+            bound.push(Json::str(if p.memory_bound { "mem" } else { "comp" }));
+        }
+        println!();
+        results.push(Json::obj(vec![
+            ("mode", Json::str(*name)),
+            ("attainable_tflops", Json::Arr(tf)),
+            ("bound", Json::Arr(bound)),
+        ]));
+    }
+    // paper-shape saturation points: B=4 ~ bs 64, B=16 ~ bs 16, B=32 ~ bs 8
+    println!("\nsaturation (first bs where attainable > 95% of ceiling):");
+    for (b, want) in [(4usize, 64usize), (16, 16), (32, 8)] {
+        let m = &dlm;
+        let mode = DecodeMode::BlockDlm { block: b };
+        let sat = PAPER_BATCH_SIZES
+            .iter()
+            .find(|&&bs| {
+                A100.simulate_mode(m, mode, bs).attainable_tflops
+                    > 0.95 * A100.effective_peak() / 1e12
+            })
+            .copied();
+        println!("  B={b}: bs = {sat:?} (paper ≈ {want})");
+    }
+    cdlm::bench_support::save_results("fig9_roofline", Json::arr(results));
+}

@@ -1,0 +1,110 @@
+//! Runtime microbenchmarks (the §Perf profile targets): per-program
+//! execute cost, literal-churn overhead, KV pool gather/commit cost —
+//! the numbers EXPERIMENTS.md §Perf tracks before/after optimization.
+//!
+//! Run: `cargo bench --bench microbench_runtime`
+
+use cdlm::bench_support as bench;
+use cdlm::coordinator::KvPool;
+use cdlm::runtime::{Programs, TensorF32, TensorI32};
+use cdlm::util::stats;
+
+fn main() {
+    let Some(core) = bench::require_artifacts("microbench") else {
+        return;
+    };
+    let g = core.rt.manifest.geometry.clone();
+    let mut weights =
+        cdlm::runtime::ModelWeights::load(&core.rt.manifest, "cdlm_dream")
+            .expect("weights");
+
+    // ---- §Perf A/B: host-literal weights vs device-resident buffers
+    {
+        let bs = 1;
+        let (l, h, s, dh, b, p) = (
+            g.n_layers, g.n_heads, g.seq_len, g.d_head, g.block_size,
+            g.prompt_len,
+        );
+        let kc = TensorF32::zeros(&[l, bs, h, s, dh]).to_literal().unwrap();
+        let vc = TensorF32::zeros(&[l, bs, h, s, dh]).to_literal().unwrap();
+        let vf = TensorI32::from_vec(&[bs], vec![0; bs]);
+        let blk = TensorI32::from_vec(&[bs, b], vec![5; bs * b]);
+        let progs = Programs::new(&core.rt, &weights);
+        let before = stats::bench(3, 15, || {
+            progs
+                .student_block_step(bs, b, &kc, &vc, p as i32, &vf, &blk,
+                                    p as i32)
+                .unwrap();
+        });
+        weights.upload(&core.rt).expect("upload");
+        let progs = Programs::new(&core.rt, &weights);
+        let after = stats::bench(3, 15, || {
+            progs
+                .student_block_step(bs, b, &kc, &vc, p as i32, &vf, &blk,
+                                    p as i32)
+                .unwrap();
+        });
+        println!(
+            "§Perf weight residency (block_step bs=1): host-literals {:.2}ms -> device-buffers {:.2}ms ({:+.0}%)",
+            before.mean() * 1e3,
+            after.mean() * 1e3,
+            (after.mean() / before.mean() - 1.0) * 100.0
+        );
+    }
+    let progs = Programs::new(&core.rt, &weights);
+    let (l, h, s, dh, b, p) =
+        (g.n_layers, g.n_heads, g.seq_len, g.d_head, g.block_size, g.prompt_len);
+
+    println!("\n=== runtime microbench (per-call wall time) ===");
+    for bs in core.rt.manifest.buckets.clone() {
+        let kc = TensorF32::zeros(&[l, bs, h, s, dh]).to_literal().unwrap();
+        let vc = TensorF32::zeros(&[l, bs, h, s, dh]).to_literal().unwrap();
+        let vf = TensorI32::from_vec(&[bs], vec![0; bs]);
+        let blk = TensorI32::from_vec(&[bs, b], vec![5; bs * b]);
+        let ids = TensorI32::from_vec(&[bs, s], vec![5; bs * s]);
+        let pids = TensorI32::from_vec(&[bs, p], vec![5; bs * p]);
+
+        let st = stats::bench(2, 10, || {
+            progs
+                .student_block_step(bs, b, &kc, &vc, p as i32, &vf, &blk,
+                                    p as i32)
+                .unwrap();
+        });
+        let td = stats::bench(2, 10, || {
+            progs.teacher_denoise(bs, &ids, &vf).unwrap();
+        });
+        let pf = stats::bench(2, 10, || {
+            progs.student_prefill(bs, &pids, &vf).unwrap();
+        });
+        println!(
+            "bs={bs}: block_step {:.2}ms  teacher_denoise {:.2}ms  prefill {:.2}ms  (denoise/block ratio {:.1}x)",
+            st.mean() * 1e3,
+            td.mean() * 1e3,
+            pf.mean() * 1e3,
+            td.mean() / st.mean()
+        );
+    }
+
+    // KV pool host-side costs
+    let mut pool = KvPool::new(&g, 8);
+    let id = pool.alloc().unwrap();
+    let bs = 4;
+    let kp = vec![0.5f32; l * bs * h * p * dh];
+    pool.write_prefill(id, 0, bs, &kp, &kp);
+    let kb = vec![0.5f32; l * bs * h * b * dh];
+    let mut kout = vec![0.0f32; l * bs * h * s * dh];
+    let mut vout = kout.clone();
+    let ids4: Vec<_> = (0..1).map(|_| id).collect();
+    let gather = stats::bench(5, 100, || {
+        pool.gather_batch(&ids4, bs, &mut kout, &mut vout);
+    });
+    println!(
+        "kv gather (1 lane into bs=4 buffer): {:.1}us   bytes/slot: {}KiB",
+        gather.mean() * 1e6,
+        pool.bytes_per_slot() / 1024
+    );
+    // one commit (append-only; repeated commits would overflow the slot)
+    let t0 = std::time::Instant::now();
+    pool.commit_block(id, 0, bs, b, &kb, &kb);
+    println!("kv commit (one block): {:.1}us", t0.elapsed().as_secs_f64() * 1e6);
+}

@@ -1,0 +1,44 @@
+//! Paper Table 1: main results on the Dream backbone.
+//!
+//! Five methods x four benchmark families, reporting TPS / latency /
+//! steps / gen-length / score with speedups vs the naive DLM — the same
+//! grid as the paper (methods and protocol identical; backbone and
+//! hardware scaled per DESIGN.md §2).
+//!
+//! Run: `cargo bench --bench table1_main_results`
+//! Env: CDLM_EVAL_N (prompts per cell, default 12), CDLM_BENCH_BS.
+
+use cdlm::bench_support as bench;
+use cdlm::coordinator::{DecodeOpts, Method};
+use cdlm::workload::FAMILIES;
+
+fn main() {
+    let Some(mut core) = bench::require_artifacts("table1") else {
+        return;
+    };
+    let n = bench::eval_n(12);
+    let opts = DecodeOpts::defaults(&core.rt.manifest.geometry.clone());
+    let methods = [
+        Method::Vanilla,
+        Method::DllmCache,
+        Method::FastDllmPar,
+        Method::FastDllmDc,
+        Method::Cdlm,
+    ];
+    let mut rows = Vec::new();
+    for fam in FAMILIES {
+        for m in methods {
+            match bench::run_cell(&mut core, "dream", m, fam, n, &opts) {
+                Ok(r) => rows.push(r),
+                Err(e) => eprintln!("[table1] {}/{}: {e:#}", fam.name(), m.name()),
+            }
+        }
+    }
+    bench::print_paper_table(
+        "Table 1 — Dream backbone (families are the paper's GSM8K-CoT/MATH/HumanEval/MBPP analogues)",
+        "Dream",
+        &rows,
+        Method::Vanilla,
+    );
+    bench::save_results("table1_dream", bench::rows_to_json(&rows));
+}

@@ -1,0 +1,39 @@
+//! Paper Table 2: main results on the LLaDA backbone (the math-augmented
+//! training-mixture variant — §5.2.2 / Appendix A.1).
+//!
+//! Run: `cargo bench --bench table2_main_results`
+
+use cdlm::bench_support as bench;
+use cdlm::coordinator::{DecodeOpts, Method};
+use cdlm::workload::FAMILIES;
+
+fn main() {
+    let Some(mut core) = bench::require_artifacts("table2") else {
+        return;
+    };
+    let n = bench::eval_n(12);
+    let opts = DecodeOpts::defaults(&core.rt.manifest.geometry.clone());
+    let methods = [
+        Method::Vanilla,
+        Method::DllmCache,
+        Method::FastDllmPar,
+        Method::FastDllmDc,
+        Method::Cdlm,
+    ];
+    let mut rows = Vec::new();
+    for fam in FAMILIES {
+        for m in methods {
+            match bench::run_cell(&mut core, "llada", m, fam, n, &opts) {
+                Ok(r) => rows.push(r),
+                Err(e) => eprintln!("[table2] {}/{}: {e:#}", fam.name(), m.name()),
+            }
+        }
+    }
+    bench::print_paper_table(
+        "Table 2 — LLaDA backbone (math-augmented corpus)",
+        "LLaDA",
+        &rows,
+        Method::Vanilla,
+    );
+    bench::save_results("table2_llada", bench::rows_to_json(&rows));
+}

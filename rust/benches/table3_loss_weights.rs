@@ -1,0 +1,58 @@
+//! Paper Table 3: loss-weight composition ablation.
+//!
+//! The six (w_distill, w_cons, w_dlm) students are trained by
+//! `make ablations` (python, build path); this bench formats the
+//! resulting score / steps-to-convergence grid as the paper prints it.
+//! Expected shape: consistency-only collapses; distillation anchors;
+//! coupling both converges faster at equal-or-better score.
+//!
+//! Run: `make ablations && cargo bench --bench table3_loss_weights`
+
+use cdlm::util::json::{self, Json};
+
+fn main() {
+    let path = cdlm::artifacts_dir().join("ablations").join("table3.json");
+    let Ok(j) = json::load(&path) else {
+        eprintln!(
+            "[table3] skipped: {} missing — run `make ablations` first",
+            path.display()
+        );
+        return;
+    };
+    let rows = j.req("rows").unwrap().as_arr().unwrap_or_default();
+    println!("\n=== Table 3 — loss-weight ablation (CDLM-Dream) ===");
+    println!(
+        "{:>9} {:>7} {:>7} | {:>22} | {:>22}",
+        "w_distill", "w_cons", "w_dlm", "chain-arith score(steps)",
+        "alt-val score(steps)"
+    );
+    for r in rows {
+        let g = |k: &str| r.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        println!(
+            "{:>9.2} {:>7.2} {:>7.2} | {:>14.1} ({:>5.1}) | {:>14.1} ({:>5.1})",
+            g("w_distill"),
+            g("w_cons"),
+            g("w_dlm"),
+            g("score"),
+            g("steps_to_convergence"),
+            g("score_alt"),
+            g("steps_alt"),
+        );
+    }
+    // paper-shape check: consistency-only (row 2) must collapse relative
+    // to distillation-anchored rows
+    if rows.len() >= 3 {
+        let g = |r: &Json, k: &str| r.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        let cons_only = &rows[1];
+        let coupled = &rows[2];
+        if g(cons_only, "score") < g(coupled, "score") {
+            println!(
+                "\nshape check OK: consistency-only ({:.1}) < coupled ({:.1}) — matches paper row 2 collapse",
+                g(cons_only, "score"),
+                g(coupled, "score")
+            );
+        } else {
+            println!("\nshape check WARNING: consistency-only did not underperform");
+        }
+    }
+}

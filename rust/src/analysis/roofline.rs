@@ -1,0 +1,135 @@
+//! Roofline simulation (paper Appendix B.4, Fig. 9).
+//!
+//! A100-SXM4-80GB, dense FP16 tensor cores at boost clock:
+//!     peak = 108 SM x 4 TC x 256 FMA x 1.41 GHz x 2 = 311.9 TFLOP/s
+//!     bw   = 2039 GB/s          ridge = 153.0 FLOP/byte
+//!
+//! attainable(AI) = min(effective_peak, AI * bw). The paper notes the
+//! observed plateau sits slightly below theoretical peak because softmax /
+//! layer-norm run on vector units; `vector_fraction` models that mixed
+//! ceiling.
+
+use super::intensity::{DecodeMode, IntensityModel, StepCost};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Roofline {
+    /// Peak matrix-unit throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// Memory bandwidth, byte/s.
+    pub bandwidth: f64,
+    /// Fraction of FLOPs executed on vector units (lowers the ceiling).
+    pub vector_fraction: f64,
+    /// Vector-unit peak relative to tensor-core peak.
+    pub vector_rel_peak: f64,
+}
+
+/// The paper's A100 parameterization.
+pub const A100: Roofline = Roofline {
+    peak_flops: 311.9e12,
+    bandwidth: 2039.0e9,
+    vector_fraction: 0.02,
+    vector_rel_peak: 0.0625, // 19.5 TF/s FP32 vector vs 311.9 TF/s TC
+};
+
+impl Roofline {
+    /// Theoretical ridge point in FLOP/byte (paper: 153.0).
+    pub fn ridge(&self) -> f64 {
+        self.peak_flops / self.bandwidth
+    }
+
+    /// Mixed-unit compute ceiling (slightly below tensor-core peak).
+    pub fn effective_peak(&self) -> f64 {
+        1.0 / ((1.0 - self.vector_fraction) / self.peak_flops
+            + self.vector_fraction / (self.vector_rel_peak * self.peak_flops))
+    }
+
+    /// Attainable throughput (FLOP/s) at arithmetic intensity `ai`.
+    pub fn attainable(&self, ai: f64) -> f64 {
+        (ai * self.bandwidth).min(self.effective_peak())
+    }
+
+    /// Simulated step latency and throughput for a decode step cost.
+    pub fn simulate(&self, cost: StepCost) -> RooflinePoint {
+        let ai = cost.ai();
+        let perf = self.attainable(ai);
+        RooflinePoint {
+            ai,
+            attainable_tflops: perf / 1e12,
+            step_latency_s: cost.flops / perf,
+            memory_bound: ai < self.ridge(),
+        }
+    }
+
+    pub fn simulate_mode(
+        &self,
+        model: &IntensityModel,
+        mode: DecodeMode,
+        bs: usize,
+    ) -> RooflinePoint {
+        self.simulate(model.step_cost(mode, bs))
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct RooflinePoint {
+    pub ai: f64,
+    pub attainable_tflops: f64,
+    pub step_latency_s: f64,
+    pub memory_bound: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::intensity::{ArchConfig, Workload};
+
+    #[test]
+    fn ridge_matches_paper() {
+        // paper: 311.9 TF/s / 2039 GB/s ~= 153.0 FLOP/byte
+        assert!((A100.ridge() - 153.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn effective_peak_below_theoretical() {
+        let ep = A100.effective_peak();
+        assert!(ep < A100.peak_flops);
+        assert!(ep > 0.7 * A100.peak_flops);
+    }
+
+    #[test]
+    fn attainable_piecewise() {
+        assert!((A100.attainable(10.0) - 10.0 * A100.bandwidth).abs() < 1.0);
+        assert_eq!(A100.attainable(1e6), A100.effective_peak());
+    }
+
+    #[test]
+    fn ar_memory_bound_vanilla_compute_bound() {
+        let m = IntensityModel::new(ArchConfig::llada_8b(), Workload::paper());
+        let ar_m = IntensityModel::new(ArchConfig::llama31_8b(), Workload::paper());
+        assert!(A100.simulate_mode(&ar_m, DecodeMode::Ar, 1).memory_bound);
+        assert!(
+            !A100
+                .simulate_mode(&m, DecodeMode::VanillaDlm, 1)
+                .memory_bound
+        );
+    }
+
+    #[test]
+    fn block_dlm_perf_saturates_with_batch() {
+        // paper Fig. 9: B=32 saturates around bs=8
+        let m = IntensityModel::new(ArchConfig::llada_8b(), Workload::paper());
+        let mode = DecodeMode::BlockDlm { block: 32 };
+        let p8 = A100.simulate_mode(&m, mode, 8).attainable_tflops;
+        let p128 = A100.simulate_mode(&m, mode, 128).attainable_tflops;
+        assert!(p128 / p8 < 1.15, "should be nearly flat: {p8} -> {p128}");
+    }
+
+    #[test]
+    fn vanilla_latency_exceeds_block_latency() {
+        // per-step latency: recomputing 768 tokens costs more than 32
+        let m = IntensityModel::new(ArchConfig::llada_8b(), Workload::paper());
+        let v = A100.simulate_mode(&m, DecodeMode::VanillaDlm, 1);
+        let b = A100.simulate_mode(&m, DecodeMode::BlockDlm { block: 32 }, 1);
+        assert!(v.step_latency_s > 5.0 * b.step_latency_s);
+    }
+}

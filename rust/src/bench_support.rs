@@ -1,0 +1,202 @@
+//! Shared harness for the paper-table benches (criterion is unavailable
+//! offline; bench targets use `harness = false` and this module).
+//!
+//! Every bench regenerates one table or figure from the paper's
+//! evaluation section: same rows, same columns, with speedup ratios
+//! relative to the naive baseline as the paper prints them. Absolute
+//! numbers differ (tiny backbone, CPU PJRT) — the *shape* (who wins, by
+//! roughly what factor) is the reproduction target; EXPERIMENTS.md
+//! records paper-vs-measured side by side.
+
+use anyhow::Result;
+
+use crate::coordinator::{
+    DecodeOpts, GroupKey, Method, MetricsAggregator, RequestRecord,
+    ServingCore,
+};
+use crate::workload::{self, Family};
+
+/// Eval-set size: benches default small on this 1-core box; override
+/// with CDLM_EVAL_N.
+pub fn eval_n(default: usize) -> usize {
+    std::env::var("CDLM_EVAL_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Decode batch size for grid runs (1 matches the paper's measurement
+/// protocol: batch size 1 per GPU, §A.3). Override with CDLM_BENCH_BS.
+pub fn bench_bs() -> usize {
+    std::env::var("CDLM_BENCH_BS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+}
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub family: Family,
+    pub method: Method,
+    pub tps: f64,
+    pub latency_s: f64,
+    pub steps: f64,
+    pub model_calls: f64,
+    pub gen_len: f64,
+    pub score: f64,
+}
+
+/// Run one (family, method) cell: decode `n` eval prompts in
+/// `bench_bs()`-sized groups, score, aggregate per-sample (§A.3).
+pub fn run_cell(
+    core: &mut ServingCore,
+    backbone: &str,
+    method: Method,
+    family: Family,
+    n: usize,
+    opts: &DecodeOpts,
+) -> Result<Row> {
+    let geom = core.rt.manifest.geometry.clone();
+    let samples = workload::generate(family, n, 0xE7A1);
+    let enc: Vec<_> = samples
+        .iter()
+        .map(|s| {
+            workload::encode_example(
+                &core.tokenizer,
+                family,
+                s,
+                geom.prompt_len,
+                geom.gen_len,
+            )
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let key = GroupKey { backbone: backbone.to_string(), method };
+    let bs = bench_bs();
+    let mut agg = MetricsAggregator::new();
+    // warm-up: compile the programs outside the timed region
+    let warm: Vec<Vec<i32>> = vec![enc[0].prompt_ids.clone()];
+    core.decode_group(&key, &warm, opts)?;
+    for (chunk_enc, chunk_samples) in
+        enc.chunks(bs).zip(samples.chunks(bs))
+    {
+        let prompts: Vec<Vec<i32>> =
+            chunk_enc.iter().map(|e| e.prompt_ids.clone()).collect();
+        let outs = core.decode_group(&key, &prompts, opts)?;
+        for (o, s) in outs.iter().zip(chunk_samples) {
+            let text = core.tokenizer.decode(&o.gen, true);
+            agg.record(&RequestRecord {
+                latency: o.latency,
+                steps: o.steps,
+                model_calls: o.model_calls,
+                gen_len: o.gen_len,
+                correct: Some(workload::score(&text, s)),
+            });
+        }
+    }
+    Ok(Row {
+        family,
+        method,
+        tps: agg.tps(),
+        latency_s: agg.avg_latency_s(),
+        steps: agg.avg_steps(),
+        model_calls: agg.avg_model_calls(),
+        gen_len: agg.avg_gen_len(),
+        score: agg.score(),
+    })
+}
+
+/// Print rows in the paper's Table 1/2 format, with (xN) speedups
+/// relative to the `baseline` method within each family.
+pub fn print_paper_table(
+    title: &str,
+    backbone: &str,
+    rows: &[Row],
+    baseline: Method,
+) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:<14} {:<24} {:>16} {:>18} {:>16} {:>10} {:>7}",
+        "Benchmark", "Method", "TPS^", "Latency(s)v", "Steps v", "Gen.Len",
+        "Score^"
+    );
+    let mut fam_seen: Vec<Family> = Vec::new();
+    for r in rows {
+        if !fam_seen.contains(&r.family) {
+            fam_seen.push(r.family);
+        }
+    }
+    for fam in fam_seen {
+        let base = rows
+            .iter()
+            .find(|r| r.family == fam && r.method == baseline)
+            .cloned();
+        for r in rows.iter().filter(|r| r.family == fam) {
+            let (tps_x, lat_x, steps_x) = match &base {
+                Some(b) if b.tps > 0.0 => (
+                    r.tps / b.tps,
+                    b.latency_s / r.latency_s.max(1e-9),
+                    b.steps / r.steps.max(1e-9),
+                ),
+                _ => (1.0, 1.0, 1.0),
+            };
+            println!(
+                "{:<14} {:<24} {:>8.1} (x{:<4.1}) {:>9.2} (x{:<4.1}) {:>8.1} (x{:<3.1}) {:>10.1} {:>7.1}",
+                format!("{} [{}]", r.family.name(),
+                        r.family.paper_analogue()),
+                r.method.paper_label(backbone),
+                r.tps,
+                tps_x,
+                r.latency_s,
+                lat_x,
+                r.steps,
+                steps_x,
+                r.gen_len,
+                r.score,
+            );
+        }
+    }
+}
+
+/// Emit machine-readable results next to the human table (consumed by
+/// EXPERIMENTS.md tooling and regression diffing).
+pub fn rows_to_json(rows: &[Row]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::arr(rows.iter().map(|r| {
+        Json::obj(vec![
+            ("family", Json::str(r.family.name())),
+            ("method", Json::str(r.method.name())),
+            ("tps", Json::num(r.tps)),
+            ("latency_s", Json::num(r.latency_s)),
+            ("steps", Json::num(r.steps)),
+            ("model_calls", Json::num(r.model_calls)),
+            ("gen_len", Json::num(r.gen_len)),
+            ("score", Json::num(r.score)),
+        ])
+    }))
+}
+
+/// Standard bench preamble: skip (successfully) when artifacts are
+/// missing so `cargo bench` works before `make artifacts`.
+pub fn require_artifacts(bench: &str) -> Option<ServingCore> {
+    if !crate::artifacts_available() {
+        eprintln!("[{bench}] skipped: run `make artifacts` first");
+        return None;
+    }
+    match ServingCore::load(&crate::artifacts_dir(), 32) {
+        Ok(c) => Some(c),
+        Err(e) => {
+            eprintln!("[{bench}] failed to load serving core: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Write bench JSON under artifacts/bench_results/.
+pub fn save_results(name: &str, j: crate::util::json::Json) {
+    let dir = crate::artifacts_dir().join("bench_results");
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join(format!("{name}.json"));
+    if std::fs::write(&path, j.to_string()).is_ok() {
+        eprintln!("[{name}] results -> {}", path.display());
+    }
+}

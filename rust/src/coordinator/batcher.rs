@@ -1,0 +1,192 @@
+//! Dynamic batcher: groups concurrent requests by (backbone, method)
+//! and flushes when a full bucket accumulates or the batching window
+//! expires — the standard continuous-serving front half (vLLM-style),
+//! sized for the lockstep block-diffusion engines behind it.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use super::methods::Method;
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct GroupKey {
+    pub backbone: String,
+    pub method: Method,
+}
+
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub key: GroupKey,
+    pub payload: T,
+    pub enqueued: Instant,
+}
+
+/// Accumulates pending requests per group; `pop_ready` returns a batch
+/// when a group fills `max_batch` or its oldest member exceeds
+/// `max_wait`.
+pub struct DynamicBatcher<T> {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    queues: HashMap<GroupKey, Vec<Pending<T>>>,
+    pub total_enqueued: u64,
+    pub total_batches: u64,
+}
+
+impl<T> DynamicBatcher<T> {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        Self {
+            max_batch,
+            max_wait,
+            queues: HashMap::new(),
+            total_enqueued: 0,
+            total_batches: 0,
+        }
+    }
+
+    pub fn push(&mut self, p: Pending<T>) {
+        self.total_enqueued += 1;
+        self.queues.entry(p.key.clone()).or_default().push(p);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queues.values().map(Vec::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Next batch to run, if any group is ready at `now`.
+    pub fn pop_ready(&mut self, now: Instant) -> Option<(GroupKey, Vec<T>)> {
+        let key = self
+            .queues
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .find(|(_, q)| {
+                q.len() >= self.max_batch
+                    || now.duration_since(q[0].enqueued) >= self.max_wait
+            })
+            .map(|(k, _)| k.clone())?;
+        Some((key.clone(), self.drain(&key)))
+    }
+
+    /// Force-flush the oldest group regardless of readiness (shutdown).
+    pub fn pop_any(&mut self) -> Option<(GroupKey, Vec<T>)> {
+        let key = self
+            .queues
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .min_by_key(|(_, q)| q[0].enqueued)
+            .map(|(k, _)| k.clone())?;
+        Some((key.clone(), self.drain(&key)))
+    }
+
+    fn drain(&mut self, key: &GroupKey) -> Vec<T> {
+        let q = self.queues.get_mut(key).unwrap();
+        let take = q.len().min(self.max_batch);
+        q.drain(..take).map(|p| p.payload).collect()
+    }
+
+    /// Earliest deadline across queues (for the worker's sleep).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter_map(|q| q.first())
+            .map(|p| p.enqueued + self.max_wait)
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn key(m: Method) -> GroupKey {
+        GroupKey { backbone: "dream".into(), method: m }
+    }
+
+    fn pend(m: Method, v: u32, t: Instant) -> Pending<u32> {
+        Pending { key: key(m), payload: v, enqueued: t }
+    }
+
+    #[test]
+    fn flushes_on_full_bucket() {
+        let mut b = DynamicBatcher::new(2, Duration::from_secs(10));
+        let t = Instant::now();
+        b.push(pend(Method::Cdlm, 1, t));
+        assert!(b.pop_ready(t).is_none(), "not full, not timed out");
+        b.push(pend(Method::Cdlm, 2, t));
+        let (k, batch) = b.pop_ready(t).unwrap();
+        assert_eq!(k.method, Method::Cdlm);
+        assert_eq!(batch, vec![1, 2]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b = DynamicBatcher::new(8, Duration::from_millis(5));
+        let t0 = Instant::now();
+        b.push(pend(Method::Ar, 7, t0));
+        assert!(b.pop_ready(t0).is_none());
+        let later = t0 + Duration::from_millis(6);
+        let (_, batch) = b.pop_ready(later).unwrap();
+        assert_eq!(batch, vec![7]);
+    }
+
+    #[test]
+    fn groups_do_not_mix() {
+        let mut b = DynamicBatcher::new(2, Duration::from_secs(10));
+        let t = Instant::now();
+        b.push(pend(Method::Cdlm, 1, t));
+        b.push(pend(Method::Ar, 2, t));
+        assert!(b.pop_ready(t).is_none(), "neither group full");
+        b.push(pend(Method::Cdlm, 3, t));
+        let (k, batch) = b.pop_ready(t).unwrap();
+        assert_eq!(k.method, Method::Cdlm);
+        assert_eq!(batch, vec![1, 3]);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn batch_respects_max_size() {
+        let mut b = DynamicBatcher::new(2, Duration::from_secs(0));
+        let t = Instant::now();
+        for i in 0..5 {
+            b.push(pend(Method::Cdlm, i, t));
+        }
+        let (_, batch) = b.pop_ready(t).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn pop_any_drains_everything() {
+        let mut b = DynamicBatcher::new(4, Duration::from_secs(100));
+        let t = Instant::now();
+        b.push(pend(Method::Cdlm, 1, t));
+        b.push(pend(Method::Ar, 2, t));
+        assert!(b.pop_any().is_some());
+        assert!(b.pop_any().is_some());
+        assert!(b.pop_any().is_none());
+    }
+
+    #[test]
+    fn property_no_request_lost_or_duplicated() {
+        check("batcher-conservation", 50, |r| {
+            let mut b = DynamicBatcher::new(1 + r.index(4), Duration::from_secs(100));
+            let t = Instant::now();
+            let n = 1 + r.index(30);
+            let methods = [Method::Cdlm, Method::Ar, Method::Vanilla];
+            for i in 0..n {
+                b.push(pend(methods[r.index(3)], i as u32, t));
+            }
+            let mut seen = Vec::new();
+            while let Some((_, batch)) = b.pop_any() {
+                seen.extend(batch);
+            }
+            seen.sort_unstable();
+            seen == (0..n as u32).collect::<Vec<_>>()
+        });
+    }
+}

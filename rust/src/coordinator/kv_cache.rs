@@ -1,0 +1,327 @@
+//! Block KV-cache manager: a slab pool of per-sequence cache slots.
+//!
+//! Exact block-level caching is the paper's second pillar (§4.3): the
+//! prompt KV is written at prefill, each completed block's KV is
+//! committed once, and nothing is ever recomputed. The pool hands out
+//! fixed-size slots ([L, H, S, dh] per sequence, f32), tracks per-slot
+//! valid length, and gathers/scatters between per-sequence slots and the
+//! batch-major layout ([L, bs, H, S, dh]) the AOT programs consume.
+
+use anyhow::Result;
+
+use crate::runtime::Geometry;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SlotId(usize);
+
+#[derive(Debug)]
+struct Slot {
+    k: Vec<f32>, // [L, H, S, dh]
+    v: Vec<f32>,
+    cache_len: usize,
+    in_use: bool,
+}
+
+/// Slab pool with O(1) alloc/free.
+pub struct KvPool {
+    geom: Geometry,
+    slots: Vec<Slot>,
+    free: Vec<usize>,
+    slot_elems: usize,
+    pub peak_in_use: usize,
+}
+
+impl KvPool {
+    pub fn new(geom: &Geometry, capacity: usize) -> Self {
+        let slot_elems =
+            geom.n_layers * geom.n_heads * geom.seq_len * geom.d_head;
+        let slots = (0..capacity)
+            .map(|_| Slot {
+                k: vec![0.0; slot_elems],
+                v: vec![0.0; slot_elems],
+                cache_len: 0,
+                in_use: false,
+            })
+            .collect();
+        Self {
+            geom: geom.clone(),
+            slots,
+            free: (0..capacity).rev().collect(),
+            slot_elems,
+            peak_in_use: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    pub fn bytes_per_slot(&self) -> usize {
+        2 * self.slot_elems * std::mem::size_of::<f32>()
+    }
+
+    pub fn alloc(&mut self) -> Result<SlotId> {
+        let idx = self
+            .free
+            .pop()
+            .ok_or_else(|| anyhow::anyhow!("KV pool exhausted"))?;
+        let s = &mut self.slots[idx];
+        debug_assert!(!s.in_use);
+        s.in_use = true;
+        s.cache_len = 0;
+        self.peak_in_use = self.peak_in_use.max(self.in_use());
+        Ok(SlotId(idx))
+    }
+
+    pub fn free(&mut self, id: SlotId) {
+        let s = &mut self.slots[id.0];
+        assert!(s.in_use, "double free of KV slot {id:?}");
+        s.in_use = false;
+        // zeroing is unnecessary for correctness (cache_len gates reads)
+        self.free.push(id.0);
+    }
+
+    pub fn cache_len(&self, id: SlotId) -> usize {
+        self.slots[id.0].cache_len
+    }
+
+    /// Install prefill output for one lane. `k`/`v` are batch-major
+    /// [L, bs, H, P, dh] slices from the prefill program.
+    pub fn write_prefill(
+        &mut self,
+        id: SlotId,
+        lane: usize,
+        bs: usize,
+        k: &[f32],
+        v: &[f32],
+    ) {
+        let g = &self.geom;
+        let (l_n, h_n, s_n, d) = (g.n_layers, g.n_heads, g.seq_len, g.d_head);
+        let p = g.prompt_len;
+        let slot = &mut self.slots[id.0];
+        for l in 0..l_n {
+            for h in 0..h_n {
+                let src = (((l * bs + lane) * h_n + h) * p) * d;
+                let dst = ((l * h_n + h) * s_n) * d;
+                slot.k[dst..dst + p * d].copy_from_slice(&k[src..src + p * d]);
+                slot.v[dst..dst + p * d].copy_from_slice(&v[src..src + p * d]);
+            }
+        }
+        slot.cache_len = p;
+    }
+
+    /// Commit a finalized block's KV for one lane. `k_blk`/`v_blk` are
+    /// [L, bs, H, B, dh]; the block lands at the slot's current
+    /// cache_len, which advances by `blk` (exact append-only caching).
+    pub fn commit_block(
+        &mut self,
+        id: SlotId,
+        lane: usize,
+        bs: usize,
+        blk: usize,
+        k_blk: &[f32],
+        v_blk: &[f32],
+    ) {
+        let g = &self.geom;
+        let (l_n, h_n, s_n, d) = (g.n_layers, g.n_heads, g.seq_len, g.d_head);
+        let pos = self.slots[id.0].cache_len;
+        assert!(pos + blk <= s_n, "cache overflow: {pos} + {blk} > {s_n}");
+        let slot = &mut self.slots[id.0];
+        for l in 0..l_n {
+            for h in 0..h_n {
+                let src = (((l * bs + lane) * h_n + h) * blk) * d;
+                let dst = ((l * h_n + h) * s_n + pos) * d;
+                slot.k[dst..dst + blk * d]
+                    .copy_from_slice(&k_blk[src..src + blk * d]);
+                slot.v[dst..dst + blk * d]
+                    .copy_from_slice(&v_blk[src..src + blk * d]);
+            }
+        }
+        slot.cache_len = pos + blk;
+    }
+
+    /// Gather lanes' slots into batch-major buffers [L, bs, H, S, dh].
+    /// Lanes beyond `ids.len()` are left untouched (dead-lane padding).
+    pub fn gather_batch(
+        &self,
+        ids: &[SlotId],
+        bs: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) {
+        let g = &self.geom;
+        let (l_n, h_n, s_n, d) = (g.n_layers, g.n_heads, g.seq_len, g.d_head);
+        debug_assert_eq!(k_out.len(), l_n * bs * h_n * s_n * d);
+        let row = h_n * s_n * d;
+        for (lane, id) in ids.iter().enumerate() {
+            let slot = &self.slots[id.0];
+            for l in 0..l_n {
+                let src = l * row;
+                let dst = (l * bs + lane) * row;
+                k_out[dst..dst + row].copy_from_slice(&slot.k[src..src + row]);
+                v_out[dst..dst + row].copy_from_slice(&slot.v[src..src + row]);
+            }
+        }
+    }
+
+    /// Direct write of full-sequence KV (approximate-cache baselines):
+    /// overwrite the slot with the stale full-sequence stacks
+    /// [L, bs, H, S, dh] and mark the whole sequence resident.
+    pub fn write_full(
+        &mut self,
+        id: SlotId,
+        lane: usize,
+        bs: usize,
+        k: &[f32],
+        v: &[f32],
+    ) {
+        let g = &self.geom;
+        let (l_n, h_n, s_n, d) = (g.n_layers, g.n_heads, g.seq_len, g.d_head);
+        let row = h_n * s_n * d;
+        let slot = &mut self.slots[id.0];
+        for l in 0..l_n {
+            let src = (l * bs + lane) * row;
+            let dst = l * row;
+            slot.k[dst..dst + row].copy_from_slice(&k[src..src + row]);
+            slot.v[dst..dst + row].copy_from_slice(&v[src..src + row]);
+        }
+        slot.cache_len = s_n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn geom() -> Geometry {
+        Geometry {
+            vocab_size: 64,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 4,
+            d_ff: 16,
+            prompt_len: 4,
+            gen_len: 4,
+            block_size: 2,
+            seq_len: 8,
+            pad: 0,
+            mask: 1,
+            bos: 2,
+            eos: 3,
+        }
+    }
+
+    #[test]
+    fn alloc_free_cycle() {
+        let mut p = KvPool::new(&geom(), 2);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert!(p.alloc().is_err(), "capacity enforced");
+        p.free(a);
+        let c = p.alloc().unwrap();
+        assert_eq!(p.in_use(), 2);
+        p.free(b);
+        p.free(c);
+        assert_eq!(p.in_use(), 0);
+        assert_eq!(p.peak_in_use, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut p = KvPool::new(&geom(), 1);
+        let a = p.alloc().unwrap();
+        p.free(a);
+        p.free(a);
+    }
+
+    #[test]
+    fn prefill_commit_gather_roundtrip() {
+        let g = geom();
+        let mut pool = KvPool::new(&g, 2);
+        let id = pool.alloc().unwrap();
+        let (l_n, h_n, d, p, s, blk) = (2, 2, 4, 4, 8, 2);
+        let bs = 1;
+        // distinct values per (l, h, pos, d)
+        let kp: Vec<f32> = (0..l_n * bs * h_n * p * d).map(|i| i as f32).collect();
+        let vp: Vec<f32> = kp.iter().map(|x| x + 0.5).collect();
+        pool.write_prefill(id, 0, bs, &kp, &vp);
+        assert_eq!(pool.cache_len(id), p);
+
+        let kb: Vec<f32> =
+            (0..l_n * bs * h_n * blk * d).map(|i| 1000.0 + i as f32).collect();
+        let vb: Vec<f32> = kb.iter().map(|x| x + 0.5).collect();
+        pool.commit_block(id, 0, bs, blk, &kb, &vb);
+        assert_eq!(pool.cache_len(id), p + blk);
+
+        let mut k_out = vec![-1.0; l_n * bs * h_n * s * d];
+        let mut v_out = vec![-1.0; l_n * bs * h_n * s * d];
+        pool.gather_batch(&[id], bs, &mut k_out, &mut v_out);
+        // prompt row l=0,h=0,pos=0..4 lands at the front
+        assert_eq!(&k_out[..p * d], &kp[..p * d]);
+        // committed block lands at pos=4.. for l=0,h=0
+        let blk_at = p * d;
+        assert_eq!(&k_out[blk_at..blk_at + blk * d], &kb[..blk * d]);
+    }
+
+    #[test]
+    fn gather_respects_lane_offsets() {
+        let g = geom();
+        let mut pool = KvPool::new(&g, 2);
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        let n = 2 * 1 * 2 * 4 * 4;
+        pool.write_prefill(a, 0, 1, &vec![1.0; n], &vec![1.0; n]);
+        pool.write_prefill(b, 0, 1, &vec![2.0; n], &vec![2.0; n]);
+        let bs = 2;
+        let total = 2 * bs * 2 * 8 * 4;
+        let mut k_out = vec![0.0; total];
+        let mut v_out = vec![0.0; total];
+        pool.gather_batch(&[a, b], bs, &mut k_out, &mut v_out);
+        // lane 0 row l=0: ones in the prompt region
+        assert_eq!(k_out[0], 1.0);
+        // lane 1 row l=0 starts at offset h*s*d (row stride)
+        let row = 2 * 8 * 4;
+        assert_eq!(k_out[row], 2.0);
+    }
+
+    #[test]
+    fn property_pool_never_leaks_or_double_allocs() {
+        check("kv-pool-invariants", 50, |r| {
+            let mut pool = KvPool::new(&geom(), 4);
+            let mut held: Vec<SlotId> = Vec::new();
+            for _ in 0..100 {
+                if r.below(2) == 0 && !held.is_empty() {
+                    let i = r.index(held.len());
+                    pool.free(held.swap_remove(i));
+                } else if pool.in_use() < pool.capacity() {
+                    let id = pool.alloc().unwrap();
+                    if held.contains(&id) {
+                        return false; // double-alloc!
+                    }
+                    held.push(id);
+                }
+                if pool.in_use() != held.len() {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn write_full_marks_whole_sequence() {
+        let g = geom();
+        let mut pool = KvPool::new(&g, 1);
+        let id = pool.alloc().unwrap();
+        let n = 2 * 1 * 2 * 8 * 4;
+        pool.write_full(id, 0, 1, &vec![3.0; n], &vec![3.0; n]);
+        assert_eq!(pool.cache_len(id), g.seq_len);
+    }
+}

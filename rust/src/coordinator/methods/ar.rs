@@ -1,0 +1,108 @@
+//! Autoregressive baseline (paper Fig. 3 / §5.2.3): greedy decoding with
+//! an exact token-level KV cache. One `ar_step` per generated token;
+//! lanes stop at `<eos>` but the lockstep batch runs until all lanes
+//! finish (dead lanes keep executing, their outputs ignored).
+
+use anyhow::Result;
+
+use super::DecodeOutcome;
+use crate::coordinator::kv_cache::{KvPool, SlotId};
+use crate::coordinator::sequence::SequenceState;
+use crate::runtime::{Geometry, Programs, TensorF32, TensorI32};
+use crate::tokenizer::EOS;
+
+pub fn decode(
+    progs: &Programs,
+    geom: &Geometry,
+    prompts: &[Vec<i32>],
+    pool: &mut KvPool,
+) -> Result<Vec<DecodeOutcome>> {
+    let bs = prompts.len();
+    let (p_len, g_len, s_len) = (geom.prompt_len, geom.gen_len, geom.seq_len);
+    let (l_n, h_n, dh) = (geom.n_layers, geom.n_heads, geom.d_head);
+
+    let mut seqs: Vec<SequenceState> = prompts
+        .iter()
+        .map(|p| SequenceState::new(geom, p.clone()))
+        .collect();
+    let valid_from =
+        TensorI32::from_vec(&[bs], seqs.iter().map(|s| s.valid_from).collect());
+
+    // ---- causal prefill: prompt KV + first-token logits
+    let mut prompt_ids = vec![0i32; bs * p_len];
+    for (r, s) in seqs.iter().enumerate() {
+        prompt_ids[r * p_len..(r + 1) * p_len].copy_from_slice(&s.prompt_ids);
+    }
+    let pre = progs.ar_prefill(
+        bs,
+        &TensorI32::from_vec(&[bs, p_len], prompt_ids),
+        &valid_from,
+    )?;
+    let slots: Vec<SlotId> =
+        (0..bs).map(|_| pool.alloc()).collect::<Result<_>>()?;
+    for (lane, &slot) in slots.iter().enumerate() {
+        pool.write_prefill(slot, lane, bs, &pre.k.data, &pre.v.data);
+    }
+    for s in seqs.iter_mut() {
+        s.model_calls += 1;
+    }
+
+    let mut k_host = TensorF32::zeros(&[l_n, bs, h_n, s_len, dh]);
+    let mut v_host = TensorF32::zeros(&[l_n, bs, h_n, s_len, dh]);
+    pool.gather_batch(&slots, bs, &mut k_host.data, &mut v_host.data);
+    let mut k_lit = k_host.to_literal()?;
+    let mut v_lit = v_host.to_literal()?;
+
+    let mut cur: Vec<i32> = pre.tok.data.clone();
+    let mut done = vec![false; bs];
+    for i in 0..g_len {
+        for r in 0..bs {
+            if !done[r] {
+                seqs[r].gen[i] = cur[r];
+                seqs[r].steps += 1;
+                if cur[r] == EOS {
+                    done[r] = true;
+                    seqs[r].mark_done();
+                }
+            }
+        }
+        if done.iter().all(|&d| d) || i == g_len - 1 {
+            break;
+        }
+        let out = progs.ar_step(
+            bs,
+            &k_lit,
+            &v_lit,
+            (p_len + i) as i32,
+            &valid_from,
+            &TensorI32::from_vec(&[bs], cur.clone()),
+        )?;
+        // append the new token's KV for every lane (exact caching)
+        for (lane, &slot) in slots.iter().enumerate() {
+            pool.commit_block(slot, lane, bs, 1, &out.k1.data, &out.v1.data);
+            if !done[lane] {
+                seqs[lane].model_calls += 1;
+            }
+        }
+        pool.gather_batch(&slots, bs, &mut k_host.data, &mut v_host.data);
+        k_host.write_into(&mut k_lit)?;
+        v_host.write_into(&mut v_lit)?;
+        cur = out.tok.data.clone();
+    }
+    for slot in slots {
+        pool.free(slot);
+    }
+    Ok(seqs
+        .into_iter()
+        .map(|mut s| {
+            s.mark_done();
+            DecodeOutcome {
+                gen_len: s.gen_length(),
+                gen: std::mem::take(&mut s.gen),
+                steps: s.steps,
+                model_calls: s.model_calls,
+                latency: s.latency(),
+            }
+        })
+        .collect())
+}

@@ -1,0 +1,122 @@
+//! Cache-less bidirectional decoding: the vanilla-DLM baseline (top-1
+//! per step, N = Lg steps) and Fast-dLLM (Parallel) (confidence
+//! threshold, no KV reuse). Every step recomputes the full padded
+//! sequence with the `teacher_denoise` program — exactly the cost
+//! profile §5.4 calls compute-bound.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::{DecodeOpts, DecodeOutcome};
+use crate::coordinator::sequence::SequenceState;
+use crate::runtime::{Geometry, Programs, TensorI32};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Policy {
+    /// Vanilla: finalize the top-m most confident masked positions per
+    /// step (m = 1 at the teacher's most performant point; m > 1 under
+    /// Table 4's naive step truncation).
+    TopM,
+    /// Fast-dLLM (Par.): finalize everything above tau (>=1 guaranteed).
+    Threshold,
+}
+
+pub fn decode(
+    progs: &Programs,
+    geom: &Geometry,
+    opts: &DecodeOpts,
+    prompts: &[Vec<i32>],
+    policy: Policy,
+) -> Result<Vec<DecodeOutcome>> {
+    let bs = prompts.len();
+    let (p_len, g_len, s_len, v) =
+        (geom.prompt_len, geom.gen_len, geom.seq_len, geom.vocab_size);
+    let blk = opts.block_size;
+    let num_blocks = g_len / blk;
+    let m_per_step = opts
+        .steps_per_block
+        .map(|spb| blk.div_ceil(spb))
+        .unwrap_or(1);
+
+    let mut seqs: Vec<SequenceState> = prompts
+        .iter()
+        .map(|p| SequenceState::new(geom, p.clone()))
+        .collect();
+    let valid_from =
+        TensorI32::from_vec(&[bs], seqs.iter().map(|s| s.valid_from).collect());
+
+    let mut ids = vec![0i32; bs * s_len];
+    for b in 0..num_blocks {
+        let lo = b * blk;
+        loop {
+            // lockstep: run while any lane still has masked positions in
+            // the block; every lane ticks (python-reference accounting)
+            let any = (0..bs).any(|r| !seqs[r].masked_in(lo, blk).is_empty());
+            if !any {
+                break;
+            }
+            for (r, s) in seqs.iter().enumerate() {
+                ids[r * s_len..(r + 1) * s_len].copy_from_slice(&s.full_ids());
+            }
+            let out = progs.teacher_denoise(
+                bs,
+                &TensorI32::from_vec(&[bs, s_len], ids.clone()),
+                &valid_from,
+            )?;
+            for r in 0..bs {
+                let base = r * s_len + p_len + lo;
+                let toks = &out.tok.data[base..base + blk];
+                let confs = &out.conf.data[base..base + blk];
+                let _ = v; // logits available in out.logits if needed
+                if !seqs[r].masked_in(lo, blk).is_empty() {
+                    match policy {
+                        Policy::TopM => {
+                            seqs[r].finalize_top_m(lo, toks, confs, m_per_step)
+                        }
+                        Policy::Threshold => seqs[r].finalize_threshold(
+                            lo,
+                            toks,
+                            confs,
+                            opts.tau_conf,
+                        ),
+                    };
+                }
+                seqs[r].steps += 1;
+                seqs[r].model_calls += 1;
+            }
+        }
+        // bidirectional baselines decode every block (no early stop);
+        // generation-length accounting truncates at <eos> afterwards.
+    }
+    Ok(seqs
+        .into_iter()
+        .map(|mut s| {
+            s.mark_done();
+            DecodeOutcome {
+                gen_len: s.gen_length(),
+                gen: std::mem::take(&mut s.gen),
+                steps: s.steps,
+                model_calls: s.model_calls,
+                latency: s.latency(),
+            }
+        })
+        .collect())
+}
+
+/// Convenience wrapper used by tests/benches for Table 4: vanilla with a
+/// truncated step budget.
+pub fn decode_truncated(
+    progs: &Programs,
+    geom: &Geometry,
+    opts: &DecodeOpts,
+    prompts: &[Vec<i32>],
+    steps_per_block: usize,
+) -> Result<Vec<DecodeOutcome>> {
+    let mut o = opts.clone();
+    o.steps_per_block = Some(steps_per_block);
+    let t0 = Instant::now();
+    let r = decode(progs, geom, &o, prompts, Policy::TopM);
+    let _ = t0;
+    r
+}

@@ -1,0 +1,177 @@
+//! Approximate-cache baselines on the bidirectional teacher:
+//!
+//! * `DllmCache` — dLLM-Cache (Liu et al. 2025): keep the N = Lg step
+//!   budget and top-1 finalization, but recompute only the active block
+//!   against a *stale* full-sequence KV cache, refreshing the full cache
+//!   every `refresh_every` steps (adaptive feature caching).
+//! * `DualCache` — Fast-dLLM (Par.+D.C.) (Wu et al. 2025): confidence-
+//!   thresholded parallel finalization + dual cache (stale prefix and
+//!   suffix KV), refreshed at every block boundary.
+//!
+//! Both run `teacher_full_cache` for refresh steps and
+//! `teacher_block_approx` in between — the latter excludes the stale
+//! copy of the active block in favour of freshly computed K/V (the
+//! "dual" part of dual caching). With refresh_every = 1 the approx path
+//! degenerates to exact recomputation, which the integration tests use
+//! as a correctness anchor.
+
+use anyhow::Result;
+
+use super::{DecodeOpts, DecodeOutcome};
+use crate::coordinator::kv_cache::{KvPool, SlotId};
+use crate::coordinator::sequence::SequenceState;
+use crate::runtime::{Geometry, Programs, TensorF32, TensorI32};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Variant {
+    DllmCache,
+    DualCache,
+}
+
+pub fn decode(
+    progs: &Programs,
+    geom: &Geometry,
+    opts: &DecodeOpts,
+    prompts: &[Vec<i32>],
+    pool: &mut KvPool,
+    variant: Variant,
+) -> Result<Vec<DecodeOutcome>> {
+    let bs = prompts.len();
+    let (p_len, g_len, s_len) = (geom.prompt_len, geom.gen_len, geom.seq_len);
+    let blk = opts.block_size;
+    let num_blocks = g_len / blk;
+    let (l_n, h_n, dh) = (geom.n_layers, geom.n_heads, geom.d_head);
+    let cache_elems = l_n * bs * h_n * s_len * dh;
+
+    let mut seqs: Vec<SequenceState> = prompts
+        .iter()
+        .map(|p| SequenceState::new(geom, p.clone()))
+        .collect();
+    let valid_from =
+        TensorI32::from_vec(&[bs], seqs.iter().map(|s| s.valid_from).collect());
+
+    let slots: Vec<SlotId> =
+        (0..bs).map(|_| pool.alloc()).collect::<Result<_>>()?;
+
+    // batch-major staging buffers + reusable literals for the cache
+    let mut k_host = TensorF32::zeros(&[l_n, bs, h_n, s_len, dh]);
+    let mut v_host = TensorF32::zeros(&[l_n, bs, h_n, s_len, dh]);
+    let mut k_lit = k_host.to_literal()?;
+    let mut v_lit = v_host.to_literal()?;
+    debug_assert_eq!(k_host.numel(), cache_elems);
+
+    let mut ids = vec![0i32; bs * s_len];
+    let mut steps_since_refresh = usize::MAX; // force refresh first
+
+    for b in 0..num_blocks {
+        let lo = b * blk;
+        if variant == Variant::DualCache {
+            steps_since_refresh = usize::MAX; // refresh at block boundary
+        }
+        loop {
+            let active: Vec<usize> = (0..bs)
+                .filter(|&r| !seqs[r].masked_in(lo, blk).is_empty())
+                .collect();
+            if active.is_empty() {
+                break;
+            }
+            let refresh = steps_since_refresh >= opts.refresh_every;
+            if refresh {
+                // full bidirectional pass: fresh logits + fresh KV stacks
+                for (r, s) in seqs.iter().enumerate() {
+                    ids[r * s_len..(r + 1) * s_len]
+                        .copy_from_slice(&s.full_ids());
+                }
+                let out = progs.teacher_full_cache(
+                    bs,
+                    &TensorI32::from_vec(&[bs, s_len], ids.clone()),
+                    &valid_from,
+                )?;
+                for (lane, &slot) in slots.iter().enumerate() {
+                    pool.write_full(slot, lane, bs, &out.k.data, &out.v.data);
+                }
+                pool.gather_batch(&slots, bs, &mut k_host.data, &mut v_host.data);
+                k_host.write_into(&mut k_lit)?;
+                v_host.write_into(&mut v_lit)?;
+                for &r in &active {
+                    let base = r * s_len + p_len + lo;
+                    finalize(
+                        &mut seqs[r],
+                        lo,
+                        &out.tok.data[base..base + blk],
+                        &out.conf.data[base..base + blk],
+                        opts,
+                        variant,
+                    );
+                    seqs[r].steps += 1;
+                    seqs[r].model_calls += 1;
+                }
+                steps_since_refresh = 1;
+            } else {
+                // approximate step: recompute the active block only
+                let mut blk_ids = vec![0i32; bs * blk];
+                for (r, s) in seqs.iter().enumerate() {
+                    blk_ids[r * blk..(r + 1) * blk]
+                        .copy_from_slice(&s.gen[lo..lo + blk]);
+                }
+                let out = progs.teacher_block_approx(
+                    bs,
+                    blk,
+                    &k_lit,
+                    &v_lit,
+                    &valid_from,
+                    &TensorI32::from_vec(&[bs, blk], blk_ids),
+                    (p_len + lo) as i32,
+                )?;
+                for &r in &active {
+                    let base = r * blk;
+                    finalize(
+                        &mut seqs[r],
+                        lo,
+                        &out.tok.data[base..base + blk],
+                        &out.conf.data[base..base + blk],
+                        opts,
+                        variant,
+                    );
+                    seqs[r].steps += 1;
+                    seqs[r].model_calls += 1;
+                }
+                steps_since_refresh += 1;
+            }
+        }
+    }
+    for slot in slots {
+        pool.free(slot);
+    }
+    Ok(seqs
+        .into_iter()
+        .map(|mut s| {
+            s.mark_done();
+            DecodeOutcome {
+                gen_len: s.gen_length(),
+                gen: std::mem::take(&mut s.gen),
+                steps: s.steps,
+                model_calls: s.model_calls,
+                latency: s.latency(),
+            }
+        })
+        .collect())
+}
+
+fn finalize(
+    seq: &mut SequenceState,
+    lo: usize,
+    toks: &[i32],
+    confs: &[f32],
+    opts: &DecodeOpts,
+    variant: Variant,
+) {
+    match variant {
+        // dLLM-Cache keeps the vanilla one-token-per-step schedule
+        Variant::DllmCache => seq.finalize_top_m(lo, toks, confs, 1),
+        // Fast-dLLM D.C. adds thresholded parallel finalization
+        Variant::DualCache => {
+            seq.finalize_threshold(lo, toks, confs, opts.tau_conf)
+        }
+    };
+}

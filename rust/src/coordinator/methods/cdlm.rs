@@ -1,0 +1,178 @@
+//! CDLM inference (paper §4.3) — the system under evaluation.
+//!
+//! Block-causal student + **exact** block KV caching:
+//!   1. `student_prefill` writes the prompt KV once;
+//!   2. within the active block, `student_block_step` attends to the
+//!      cache + fresh block K/V; every masked position with confidence
+//!      >= tau is finalized in parallel (>=1 per step guaranteed);
+//!   3. when the block is complete, one commit call recomputes the
+//!      block's K/V from its *final* tokens and appends it to the cache
+//!      (counted in `model_calls`, not `steps` — see DESIGN.md §10);
+//!   4. a finalized `<eos>` stops the request at the block boundary —
+//!      no compute is spent on later blocks (early stopping).
+//!
+//! This mirrors `python/compile/decoding.py::student_cdlm_decode`
+//! token-for-token; integration tests enforce parity via the
+//! `decode_parity.json` golden.
+
+use anyhow::Result;
+
+use super::{DecodeOpts, DecodeOutcome};
+use crate::coordinator::kv_cache::{KvPool, SlotId};
+use crate::coordinator::sequence::SequenceState;
+use crate::runtime::{Geometry, Programs, TensorF32, TensorI32};
+
+pub fn decode(
+    progs: &Programs,
+    geom: &Geometry,
+    opts: &DecodeOpts,
+    prompts: &[Vec<i32>],
+    pool: &mut KvPool,
+) -> Result<Vec<DecodeOutcome>> {
+    let bs = prompts.len();
+    let (p_len, g_len, s_len) = (geom.prompt_len, geom.gen_len, geom.seq_len);
+    let blk = opts.block_size;
+    anyhow::ensure!(g_len % blk == 0, "block {blk} must divide gen {g_len}");
+    let num_blocks = g_len / blk;
+    let (l_n, h_n, dh) = (geom.n_layers, geom.n_heads, geom.d_head);
+
+    let mut seqs: Vec<SequenceState> = prompts
+        .iter()
+        .map(|p| SequenceState::new(geom, p.clone()))
+        .collect();
+    let valid_from =
+        TensorI32::from_vec(&[bs], seqs.iter().map(|s| s.valid_from).collect());
+
+    // ---- prefill: exact prompt KV, once per request
+    let mut prompt_ids = vec![0i32; bs * p_len];
+    for (r, s) in seqs.iter().enumerate() {
+        prompt_ids[r * p_len..(r + 1) * p_len].copy_from_slice(&s.prompt_ids);
+    }
+    let pre = progs.student_prefill(
+        bs,
+        &TensorI32::from_vec(&[bs, p_len], prompt_ids),
+        &valid_from,
+    )?;
+    let slots: Vec<SlotId> =
+        (0..bs).map(|_| pool.alloc()).collect::<Result<_>>()?;
+    for (lane, &slot) in slots.iter().enumerate() {
+        pool.write_prefill(slot, lane, bs, &pre.k.data, &pre.v.data);
+    }
+    for s in seqs.iter_mut() {
+        s.model_calls += 1;
+    }
+
+    // reusable batch cache staging + literals (no per-step allocation)
+    let mut k_host = TensorF32::zeros(&[l_n, bs, h_n, s_len, dh]);
+    let mut v_host = TensorF32::zeros(&[l_n, bs, h_n, s_len, dh]);
+    pool.gather_batch(&slots, bs, &mut k_host.data, &mut v_host.data);
+    let mut k_lit = k_host.to_literal()?;
+    let mut v_lit = v_host.to_literal()?;
+
+    let mut cache_len = p_len;
+    let mut blk_ids = vec![0i32; bs * blk];
+    for b in 0..num_blocks {
+        let lo = b * blk;
+        let any_active = seqs.iter().any(|s| !s.done);
+        if !any_active {
+            break;
+        }
+        // ---- refinement steps under the exact cache
+        loop {
+            // lockstep accounting (matches the python reference): every
+            // not-done lane ticks while any lane still refines the block
+            let need: Vec<usize> = (0..bs)
+                .filter(|&r| {
+                    !seqs[r].done && !seqs[r].masked_in(lo, blk).is_empty()
+                })
+                .collect();
+            if need.is_empty() {
+                break;
+            }
+            for (r, s) in seqs.iter().enumerate() {
+                blk_ids[r * blk..(r + 1) * blk]
+                    .copy_from_slice(&s.gen[lo..lo + blk]);
+            }
+            let out = progs.student_block_step(
+                bs,
+                blk,
+                &k_lit,
+                &v_lit,
+                cache_len as i32,
+                &valid_from,
+                &TensorI32::from_vec(&[bs, blk], blk_ids.clone()),
+                (p_len + lo) as i32,
+            )?;
+            for r in 0..bs {
+                if seqs[r].done {
+                    continue;
+                }
+                if !seqs[r].masked_in(lo, blk).is_empty() {
+                    let base = r * blk;
+                    seqs[r].finalize_threshold(
+                        lo,
+                        &out.tok.data[base..base + blk],
+                        &out.conf.data[base..base + blk],
+                        opts.tau_conf,
+                    );
+                }
+                seqs[r].steps += 1;
+                seqs[r].model_calls += 1;
+            }
+        }
+        // ---- early stop at the block boundary
+        for s in seqs.iter_mut() {
+            if !s.done && s.eos_in(lo, blk) {
+                s.mark_done();
+            }
+        }
+        let still_running = seqs.iter().any(|s| !s.done);
+        if !still_running || b + 1 == num_blocks {
+            break; // no one needs this block's KV committed
+        }
+        // ---- commit: recompute block KV from the *final* tokens so the
+        // cache is exact (one extra model call, not a refinement step)
+        for (r, s) in seqs.iter().enumerate() {
+            blk_ids[r * blk..(r + 1) * blk]
+                .copy_from_slice(&s.gen[lo..lo + blk]);
+        }
+        let out = progs.student_block_step(
+            bs,
+            blk,
+            &k_lit,
+            &v_lit,
+            cache_len as i32,
+            &valid_from,
+            &TensorI32::from_vec(&[bs, blk], blk_ids.clone()),
+            (p_len + lo) as i32,
+        )?;
+        for (lane, &slot) in slots.iter().enumerate() {
+            if !seqs[lane].done {
+                pool.commit_block(
+                    slot, lane, bs, blk, &out.k_blk.data, &out.v_blk.data,
+                );
+                seqs[lane].model_calls += 1;
+            }
+        }
+        pool.gather_batch(&slots, bs, &mut k_host.data, &mut v_host.data);
+        k_host.write_into(&mut k_lit)?;
+        v_host.write_into(&mut v_lit)?;
+        cache_len += blk;
+    }
+    for slot in slots {
+        pool.free(slot);
+    }
+    Ok(seqs
+        .into_iter()
+        .map(|mut s| {
+            s.mark_done();
+            DecodeOutcome {
+                gen_len: s.gen_length(),
+                gen: std::mem::take(&mut s.gen),
+                steps: s.steps,
+                model_calls: s.model_calls,
+                latency: s.latency(),
+            }
+        })
+        .collect())
+}

@@ -1,0 +1,186 @@
+//! Decode engines: one per method row of paper Tables 1 & 2.
+//!
+//! | engine          | paper row             | cache           | step policy |
+//! |-----------------|-----------------------|-----------------|-------------|
+//! | `vanilla`       | Dream/LLaDA-Instruct  | none            | top-1/step  |
+//! | `dllm_cache`    | dLLM-Cache            | approx, refresh | top-1/step  |
+//! | `fast_dllm_par` | Fast-dLLM (Par.)      | none            | threshold   |
+//! | `fast_dllm_dc`  | Fast-dLLM (Par.+D.C.) | approx dual     | threshold   |
+//! | `cdlm`          | CDLM (ours)           | exact block     | threshold + early stop |
+//! | `ar`            | AR baselines (Fig. 3) | exact token     | greedy      |
+//!
+//! Engines decode a fixed-size batch in lockstep with dead-lane masking:
+//! per-sample step counts only advance while a lane still has masked
+//! positions, and per-sample latency stops at lane completion (§A.3).
+
+pub mod ar;
+pub mod bidirectional;
+pub mod cached_teacher;
+pub mod cdlm;
+pub mod spec_decode;
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::kv_cache::KvPool;
+use crate::runtime::{Geometry, Programs};
+
+/// Decode-time knobs (paper defaults: tau=0.9, B=32 scaled to 8 here).
+#[derive(Debug, Clone)]
+pub struct DecodeOpts {
+    pub tau_conf: f32,
+    /// Inference block size (Fig. 8 sweeps this; must divide gen_len and
+    /// have an exported program variant).
+    pub block_size: usize,
+    /// Vanilla-teacher step budget per block (Table 4 naive truncation:
+    /// fewer steps => top-m finalization with m = ceil(B / spb)).
+    pub steps_per_block: Option<usize>,
+    /// Approximate-cache refresh period in steps (dLLM-Cache).
+    pub refresh_every: usize,
+}
+
+impl DecodeOpts {
+    pub fn defaults(geom: &Geometry) -> Self {
+        Self {
+            tau_conf: 0.9,
+            block_size: geom.block_size,
+            steps_per_block: None,
+            refresh_every: 4,
+        }
+    }
+}
+
+/// Result of decoding one request.
+#[derive(Debug, Clone)]
+pub struct DecodeOutcome {
+    pub gen: Vec<i32>,
+    pub steps: u64,
+    pub model_calls: u64,
+    pub latency: Duration,
+    pub gen_len: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    Vanilla,
+    DllmCache,
+    FastDllmPar,
+    FastDllmDc,
+    Cdlm,
+    Ar,
+}
+
+pub const ALL_METHODS: [Method; 6] = [
+    Method::Vanilla,
+    Method::DllmCache,
+    Method::FastDllmPar,
+    Method::FastDllmDc,
+    Method::Cdlm,
+    Method::Ar,
+];
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Vanilla => "vanilla",
+            Method::DllmCache => "dllm-cache",
+            Method::FastDllmPar => "fast-dllm-par",
+            Method::FastDllmDc => "fast-dllm-dc",
+            Method::Cdlm => "cdlm",
+            Method::Ar => "ar",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Method> {
+        ALL_METHODS.iter().copied().find(|m| m.name() == s)
+    }
+
+    /// Paper-table label.
+    pub fn paper_label(&self, backbone: &str) -> String {
+        match self {
+            Method::Vanilla => format!("{backbone}-Instruct (naive)"),
+            Method::DllmCache => "dLLM-Cache".to_string(),
+            Method::FastDllmPar => "Fast-dLLM (Par.)".to_string(),
+            Method::FastDllmDc => "Fast-dLLM (Par.+D.C.)".to_string(),
+            Method::Cdlm => format!("CDLM-{backbone} (ours)"),
+            Method::Ar => "AR baseline".to_string(),
+        }
+    }
+
+    /// Which weight set this method decodes with.
+    pub fn weights_for(&self, backbone: &str) -> String {
+        match self {
+            Method::Cdlm => format!("cdlm_{backbone}"),
+            Method::Ar => format!("ar_{backbone}"),
+            _ => format!("teacher_{backbone}"),
+        }
+    }
+}
+
+/// Dispatch a batch decode. `prompts` length must equal the program
+/// bucket `bs`; the scheduler handles padding.
+pub fn decode_batch(
+    progs: &Programs,
+    geom: &Geometry,
+    opts: &DecodeOpts,
+    method: Method,
+    prompts: &[Vec<i32>],
+    pool: &mut KvPool,
+) -> Result<Vec<DecodeOutcome>> {
+    match method {
+        Method::Vanilla => bidirectional::decode(
+            progs,
+            geom,
+            opts,
+            prompts,
+            bidirectional::Policy::TopM,
+        ),
+        Method::FastDllmPar => bidirectional::decode(
+            progs,
+            geom,
+            opts,
+            prompts,
+            bidirectional::Policy::Threshold,
+        ),
+        Method::DllmCache => cached_teacher::decode(
+            progs,
+            geom,
+            opts,
+            prompts,
+            pool,
+            cached_teacher::Variant::DllmCache,
+        ),
+        Method::FastDllmDc => cached_teacher::decode(
+            progs,
+            geom,
+            opts,
+            prompts,
+            pool,
+            cached_teacher::Variant::DualCache,
+        ),
+        Method::Cdlm => cdlm::decode(progs, geom, opts, prompts, pool),
+        Method::Ar => ar::decode(progs, geom, prompts, pool),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_names_roundtrip() {
+        for m in ALL_METHODS {
+            assert_eq!(Method::from_name(m.name()), Some(m));
+        }
+        assert_eq!(Method::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn weight_selection() {
+        assert_eq!(Method::Cdlm.weights_for("dream"), "cdlm_dream");
+        assert_eq!(Method::Vanilla.weights_for("llada"), "teacher_llada");
+        assert_eq!(Method::FastDllmDc.weights_for("dream"), "teacher_dream");
+        assert_eq!(Method::Ar.weights_for("llada"), "ar_llada");
+    }
+}

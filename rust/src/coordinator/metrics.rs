@@ -1,0 +1,170 @@
+//! Serving metrics with the paper's §A.3 accounting: per-sample averages
+//! of latency / refinement steps / generation length, plus TPS
+//! (valid tokens per second of generation wall-clock).
+
+use std::time::Duration;
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub latency: Duration,
+    pub steps: u64,
+    pub model_calls: u64,
+    pub gen_len: usize,
+    pub correct: Option<bool>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct MetricsAggregator {
+    latency_s: Summary,
+    steps: Summary,
+    model_calls: Summary,
+    gen_len: Summary,
+    n_scored: usize,
+    n_correct: usize,
+}
+
+impl MetricsAggregator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, r: &RequestRecord) {
+        self.latency_s.push(r.latency.as_secs_f64());
+        self.steps.push(r.steps as f64);
+        self.model_calls.push(r.model_calls as f64);
+        self.gen_len.push(r.gen_len as f64);
+        if let Some(c) = r.correct {
+            self.n_scored += 1;
+            self.n_correct += usize::from(c);
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.latency_s.count()
+    }
+
+    /// Per-sample average latency (seconds) — paper "Latency (s)".
+    pub fn avg_latency_s(&self) -> f64 {
+        self.latency_s.mean()
+    }
+
+    pub fn p95_latency_s(&self) -> f64 {
+        self.latency_s.percentile(95.0)
+    }
+
+    /// Per-sample average refinement steps — paper "Total Steps".
+    pub fn avg_steps(&self) -> f64 {
+        self.steps.mean()
+    }
+
+    pub fn avg_model_calls(&self) -> f64 {
+        self.model_calls.mean()
+    }
+
+    /// Per-sample average valid generated tokens — paper "Gen. Length".
+    pub fn avg_gen_len(&self) -> f64 {
+        self.gen_len.mean()
+    }
+
+    /// Tokens per second: total valid tokens / total generation time —
+    /// paper "TPS".
+    pub fn tps(&self) -> f64 {
+        let t = self.latency_s.sum();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.gen_len.sum() / t
+        }
+    }
+
+    /// Accuracy over scored requests (0-100) — paper "Score".
+    pub fn score(&self) -> f64 {
+        if self.n_scored == 0 {
+            0.0
+        } else {
+            100.0 * self.n_correct as f64 / self.n_scored as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count() as f64)),
+            ("tps", Json::num(self.tps())),
+            ("avg_latency_s", Json::num(self.avg_latency_s())),
+            ("p95_latency_s", Json::num(self.p95_latency_s())),
+            ("avg_steps", Json::num(self.avg_steps())),
+            ("avg_model_calls", Json::num(self.avg_model_calls())),
+            ("avg_gen_len", Json::num(self.avg_gen_len())),
+            ("score", Json::num(self.score())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(ms: u64, steps: u64, gen: usize, ok: bool) -> RequestRecord {
+        RequestRecord {
+            latency: Duration::from_millis(ms),
+            steps,
+            model_calls: steps + 1,
+            gen_len: gen,
+            correct: Some(ok),
+        }
+    }
+
+    #[test]
+    fn per_sample_averages() {
+        let mut m = MetricsAggregator::new();
+        m.record(&rec(100, 10, 20, true));
+        m.record(&rec(300, 30, 40, false));
+        assert_eq!(m.count(), 2);
+        assert!((m.avg_latency_s() - 0.2).abs() < 1e-9);
+        assert_eq!(m.avg_steps(), 20.0);
+        assert_eq!(m.avg_gen_len(), 30.0);
+        assert_eq!(m.score(), 50.0);
+    }
+
+    #[test]
+    fn tps_is_tokens_over_total_time() {
+        let mut m = MetricsAggregator::new();
+        m.record(&rec(500, 5, 25, true));
+        m.record(&rec(500, 5, 25, true));
+        assert!((m.tps() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unscored_requests_do_not_affect_score() {
+        let mut m = MetricsAggregator::new();
+        m.record(&RequestRecord {
+            latency: Duration::from_millis(10),
+            steps: 1,
+            model_calls: 1,
+            gen_len: 5,
+            correct: None,
+        });
+        m.record(&rec(10, 1, 5, true));
+        assert_eq!(m.score(), 100.0);
+    }
+
+    #[test]
+    fn empty_aggregator_is_safe() {
+        let m = MetricsAggregator::new();
+        assert_eq!(m.tps(), 0.0);
+        assert_eq!(m.score(), 0.0);
+    }
+
+    #[test]
+    fn json_has_paper_fields() {
+        let mut m = MetricsAggregator::new();
+        m.record(&rec(100, 10, 20, true));
+        let j = m.to_json();
+        for k in ["tps", "avg_latency_s", "avg_steps", "avg_gen_len", "score"] {
+            assert!(j.get(k).is_some(), "missing {k}");
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! L3 coordinator — the paper's serving system around the AOT compute:
+//! request router + admission, dynamic batcher, block KV-cache manager,
+//! decode scheduler, per-method engines, and §A.3-style metrics.
+
+pub mod batcher;
+pub mod kv_cache;
+pub mod methods;
+pub mod metrics;
+pub mod router;
+pub mod scheduler;
+pub mod sequence;
+
+pub use batcher::{DynamicBatcher, GroupKey, Pending};
+pub use kv_cache::{KvPool, SlotId};
+pub use methods::{DecodeOpts, DecodeOutcome, Method, ALL_METHODS};
+pub use metrics::{MetricsAggregator, RequestRecord};
+pub use router::{GenerateRequest, GenerateResponse, Router, ServingCore};
+pub use scheduler::Engine;
+pub use sequence::SequenceState;

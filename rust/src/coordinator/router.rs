@@ -1,0 +1,375 @@
+//! Request router + serving core.
+//!
+//! The `xla` crate's PJRT handles are deliberately `!Send` (they wrap
+//! `Rc`s over C pointers), so the architecture confines *every* XLA
+//! object to one decode-worker thread: the worker owns the
+//! `ServingCore` (runtime, weights, KV pool, metrics) and the rest of
+//! the process — HTTP handler threads, the CLI — talks to it purely
+//! through channels. On this single-core box one decode worker is also
+//! the right degree of parallelism; the dynamic batcher, not thread
+//! count, provides concurrency.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::{DynamicBatcher, GroupKey, Pending};
+use super::kv_cache::KvPool;
+use super::methods::{DecodeOpts, DecodeOutcome, Method};
+use super::metrics::{MetricsAggregator, RequestRecord};
+use super::scheduler::Engine;
+use crate::runtime::{Geometry, ModelWeights, Runtime};
+use crate::tokenizer::Tokenizer;
+use crate::util::json::{self, Json};
+
+// ---------------------------------------------------------------------------
+// ServingCore: single-threaded owner of all XLA state
+// ---------------------------------------------------------------------------
+
+pub struct ServingCore {
+    pub rt: Runtime,
+    pub tokenizer: Tokenizer,
+    weights: HashMap<String, ModelWeights>,
+    pub pool: KvPool,
+    pub metrics: HashMap<String, MetricsAggregator>,
+}
+
+impl ServingCore {
+    pub fn load(artifacts: &Path, pool_capacity: usize) -> Result<Self> {
+        let rt = Runtime::load(artifacts)?;
+        let tokenizer = Tokenizer::new();
+        // cross-language vocab pin
+        let vocab = json::load(&artifacts.join("vocab.json"))?;
+        tokenizer.verify_against(&vocab)?;
+        let pool = KvPool::new(&rt.manifest.geometry, pool_capacity);
+        Ok(Self {
+            rt,
+            tokenizer,
+            weights: HashMap::new(),
+            pool,
+            metrics: HashMap::new(),
+        })
+    }
+
+    pub fn geometry(&self) -> &Geometry {
+        &self.rt.manifest.geometry
+    }
+
+    fn ensure_weights(&mut self, model: &str) -> Result<()> {
+        if !self.weights.contains_key(model) {
+            let mut w = ModelWeights::load(&self.rt.manifest, model)?;
+            // §Perf: weights live on-device for the model's lifetime
+            w.upload(&self.rt)?;
+            self.weights.insert(model.to_string(), w);
+        }
+        Ok(())
+    }
+
+    /// Decode one lockstep group (benches/examples call this directly;
+    /// the router worker calls it from its thread).
+    pub fn decode_group(
+        &mut self,
+        key: &GroupKey,
+        prompts: &[Vec<i32>],
+        opts: &DecodeOpts,
+    ) -> Result<Vec<DecodeOutcome>> {
+        let model = key.method.weights_for(&key.backbone);
+        self.ensure_weights(&model)?;
+        let weights = &self.weights[&model];
+        let engine = Engine::new(&self.rt, weights);
+        let outcomes = engine.decode(key.method, opts, prompts, &mut self.pool)?;
+        let agg = self
+            .metrics
+            .entry(format!("{}/{}", key.backbone, key.method.name()))
+            .or_default();
+        for o in &outcomes {
+            agg.record(&RequestRecord {
+                latency: o.latency,
+                steps: o.steps,
+                model_calls: o.model_calls,
+                gen_len: o.gen_len,
+                correct: None,
+            });
+        }
+        Ok(outcomes)
+    }
+
+    pub fn metrics_json(&self) -> Json {
+        Json::Obj(
+            self.metrics
+                .iter()
+                .map(|(k, v)| (k.clone(), v.to_json()))
+                .collect(),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Router: channel front-end + decode worker thread
+// ---------------------------------------------------------------------------
+
+pub struct GenerateRequest {
+    pub backbone: String,
+    pub method: Method,
+    pub prompt_ids: Vec<i32>,
+    pub tau_conf: Option<f32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct GenerateResponse {
+    pub gen_ids: Vec<i32>,
+    pub text: String,
+    pub steps: u64,
+    pub model_calls: u64,
+    pub latency: Duration,
+    pub gen_len: usize,
+}
+
+type Responder = mpsc::Sender<Result<GenerateResponse, String>>;
+
+enum RouterMsg {
+    Request(Box<(GenerateRequest, Responder)>),
+    Metrics(mpsc::Sender<Json>),
+    Health(mpsc::Sender<Json>),
+    Shutdown,
+}
+
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub max_queue: usize,
+    pub pool_capacity: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 4,
+            max_wait: Duration::from_millis(25),
+            max_queue: 256,
+            pool_capacity: 64,
+        }
+    }
+}
+
+pub struct Router {
+    tx: mpsc::Sender<RouterMsg>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    pub geometry: Geometry,
+    pub max_queue: usize,
+    queued: Arc<AtomicUsize>,
+    known_models: Vec<String>,
+}
+
+impl Router {
+    /// Spawn the decode worker (which loads all XLA state on its own
+    /// thread) and wait for it to come up.
+    pub fn start(artifacts: PathBuf, cfg: RouterConfig) -> Result<Router> {
+        let (tx, rx) = mpsc::channel::<RouterMsg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<Geometry, String>>();
+        let queued = Arc::new(AtomicUsize::new(0));
+        let wq = queued.clone();
+        let wcfg = cfg.clone();
+        let wartifacts = artifacts.clone();
+        let worker = std::thread::Builder::new()
+            .name("cdlm-decode-worker".into())
+            .spawn(move || {
+                let mut core =
+                    match ServingCore::load(&wartifacts, wcfg.pool_capacity) {
+                        Ok(c) => {
+                            let _ = ready_tx
+                                .send(Ok(c.rt.manifest.geometry.clone()));
+                            c
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(format!("{e:#}")));
+                            return;
+                        }
+                    };
+                worker_loop(&mut core, rx, wcfg, wq);
+            })?;
+        let geometry = ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("worker died during startup"))?
+            .map_err(|e| anyhow::anyhow!("serving core failed to load: {e}"))?;
+        // Known model list comes from the manifest; re-read it cheaply
+        // here so admission can reject unknown backbones without a
+        // round-trip to the worker.
+        let manifest = crate::runtime::Manifest::load(&artifacts)?;
+        Ok(Router {
+            tx,
+            worker: Some(worker),
+            geometry,
+            max_queue: cfg.max_queue,
+            queued,
+            known_models: manifest.models.iter().map(|(k, _)| k.clone()).collect(),
+        })
+    }
+
+    /// Enqueue a request; returns a receiver for the response.
+    pub fn submit(
+        &self,
+        req: GenerateRequest,
+    ) -> Result<mpsc::Receiver<Result<GenerateResponse, String>>> {
+        anyhow::ensure!(
+            req.prompt_ids.len() == self.geometry.prompt_len,
+            "prompt must be padded to {} tokens (got {})",
+            self.geometry.prompt_len,
+            req.prompt_ids.len()
+        );
+        let model = req.method.weights_for(&req.backbone);
+        anyhow::ensure!(
+            self.known_models.contains(&model),
+            "unknown backbone '{}' for method '{}'",
+            req.backbone,
+            req.method.name()
+        );
+        let q = self.queued.load(Ordering::SeqCst);
+        anyhow::ensure!(
+            q < self.max_queue,
+            "admission rejected: queue full ({q}/{})",
+            self.max_queue
+        );
+        self.queued.fetch_add(1, Ordering::SeqCst);
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(RouterMsg::Request(Box::new((req, rtx))))
+            .map_err(|_| anyhow::anyhow!("router worker is gone"))?;
+        Ok(rrx)
+    }
+
+    pub fn metrics(&self) -> Result<Json> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(RouterMsg::Metrics(tx))
+            .map_err(|_| anyhow::anyhow!("router worker is gone"))?;
+        Ok(rx.recv()?)
+    }
+
+    pub fn health(&self) -> Result<Json> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(RouterMsg::Health(tx))
+            .map_err(|_| anyhow::anyhow!("router worker is gone"))?;
+        Ok(rx.recv()?)
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(RouterMsg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    core: &mut ServingCore,
+    rx: mpsc::Receiver<RouterMsg>,
+    cfg: RouterConfig,
+    queued: Arc<AtomicUsize>,
+) {
+    let mut batcher: DynamicBatcher<(GenerateRequest, Responder)> =
+        DynamicBatcher::new(cfg.max_batch, cfg.max_wait);
+    let mut shutdown = false;
+    loop {
+        let timeout = if batcher.is_empty() {
+            Duration::from_millis(200)
+        } else {
+            batcher
+                .next_deadline()
+                .map(|d| d.saturating_duration_since(Instant::now()))
+                .unwrap_or(Duration::from_millis(1))
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(RouterMsg::Request(b)) => {
+                let (req, resp) = *b;
+                let key = GroupKey {
+                    backbone: req.backbone.clone(),
+                    method: req.method,
+                };
+                batcher.push(Pending {
+                    key,
+                    payload: (req, resp),
+                    enqueued: Instant::now(),
+                });
+                // fall through: maybe this filled a bucket
+            }
+            Ok(RouterMsg::Metrics(tx)) => {
+                let _ = tx.send(core.metrics_json());
+                continue;
+            }
+            Ok(RouterMsg::Health(tx)) => {
+                let _ = tx.send(Json::obj(vec![
+                    ("status", Json::str("ok")),
+                    ("platform", Json::str(core.rt.platform())),
+                    (
+                        "compiled_programs",
+                        Json::num(core.rt.compiled_count() as f64),
+                    ),
+                    (
+                        "kv_slots_in_use",
+                        Json::num(core.pool.in_use() as f64),
+                    ),
+                    ("queued", Json::num(batcher.len() as f64)),
+                ]));
+                continue;
+            }
+            Ok(RouterMsg::Shutdown) => shutdown = true,
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => shutdown = true,
+        }
+        loop {
+            let item = if shutdown {
+                batcher.pop_any()
+            } else {
+                batcher.pop_ready(Instant::now())
+            };
+            let Some((key, items)) = item else { break };
+            queued.fetch_sub(items.len().min(queued.load(Ordering::SeqCst)),
+                             Ordering::SeqCst);
+            run_group(core, &key, items);
+        }
+        if shutdown && batcher.is_empty() {
+            return;
+        }
+    }
+}
+
+fn run_group(
+    core: &mut ServingCore,
+    key: &GroupKey,
+    items: Vec<(GenerateRequest, Responder)>,
+) {
+    let mut opts = DecodeOpts::defaults(&core.rt.manifest.geometry.clone());
+    if let Some(t) = items.iter().find_map(|(r, _)| r.tau_conf) {
+        opts.tau_conf = t;
+    }
+    let prompts: Vec<Vec<i32>> =
+        items.iter().map(|(r, _)| r.prompt_ids.clone()).collect();
+    match core.decode_group(key, &prompts, &opts) {
+        Ok(outcomes) => {
+            for ((_, resp), o) in items.into_iter().zip(outcomes) {
+                let text = core.tokenizer.decode(&o.gen, true);
+                let _ = resp.send(Ok(GenerateResponse {
+                    gen_ids: o.gen,
+                    text,
+                    steps: o.steps,
+                    model_calls: o.model_calls,
+                    latency: o.latency,
+                    gen_len: o.gen_len,
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = format!("decode failed: {e:#}");
+            for (_, resp) in items {
+                let _ = resp.send(Err(msg.clone()));
+            }
+        }
+    }
+}

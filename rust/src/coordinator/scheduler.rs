@@ -1,0 +1,116 @@
+//! Decode scheduler: bucket selection, batch padding, engine dispatch.
+//!
+//! AOT programs exist for fixed batch buckets (manifest `buckets`, e.g.
+//! {1, 2, 4}); the scheduler chunks a request list into bucket-sized
+//! lockstep batches, pads the tail chunk with replicated prompts (dead
+//! lanes), runs the decode engine, and drops padded outcomes.
+
+use anyhow::Result;
+
+use super::kv_cache::KvPool;
+use super::methods::{self, DecodeOpts, DecodeOutcome, Method};
+use crate::runtime::{Geometry, ModelWeights, Programs, Runtime};
+
+/// An engine bound to one model's weights.
+pub struct Engine<'rt> {
+    pub rt: &'rt Runtime,
+    pub weights: &'rt ModelWeights,
+    pub geom: Geometry,
+}
+
+impl<'rt> Engine<'rt> {
+    pub fn new(rt: &'rt Runtime, weights: &'rt ModelWeights) -> Self {
+        let geom = rt.manifest.geometry.clone();
+        Self { rt, weights, geom }
+    }
+
+    /// Decode `prompts` with `method`, chunking to exported buckets.
+    pub fn decode(
+        &self,
+        method: Method,
+        opts: &DecodeOpts,
+        prompts: &[Vec<i32>],
+        pool: &mut KvPool,
+    ) -> Result<Vec<DecodeOutcome>> {
+        let progs = Programs::new(self.rt, self.weights);
+        let mut out = Vec::with_capacity(prompts.len());
+        for chunk in plan_chunks(prompts.len(), &self.rt.manifest.buckets) {
+            let lo = out.len();
+            let real = &prompts[lo..lo + chunk.real];
+            let mut padded: Vec<Vec<i32>> = real.to_vec();
+            while padded.len() < chunk.bucket {
+                padded.push(real.last().unwrap().clone());
+            }
+            let mut results = methods::decode_batch(
+                &progs, &self.geom, opts, method, &padded, pool,
+            )?;
+            results.truncate(chunk.real);
+            out.extend(results);
+        }
+        Ok(out)
+    }
+}
+
+/// One lockstep batch: `real` live lanes padded up to `bucket`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Chunk {
+    pub bucket: usize,
+    pub real: usize,
+}
+
+/// Greedy chunk plan: largest buckets first, a padded tail chunk last.
+pub fn plan_chunks(n: usize, buckets: &[usize]) -> Vec<Chunk> {
+    let mut sorted: Vec<usize> = buckets.to_vec();
+    sorted.sort_unstable();
+    let max = *sorted.last().expect("no buckets");
+    let mut out = Vec::new();
+    let mut left = n;
+    while left >= max {
+        out.push(Chunk { bucket: max, real: max });
+        left -= max;
+    }
+    if left > 0 {
+        let bucket = sorted.iter().copied().find(|&b| b >= left).unwrap_or(max);
+        out.push(Chunk { bucket, real: left });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn chunk_plan_exact_fit() {
+        let c = plan_chunks(8, &[1, 2, 4]);
+        assert_eq!(c, vec![Chunk { bucket: 4, real: 4 }, Chunk { bucket: 4, real: 4 }]);
+    }
+
+    #[test]
+    fn chunk_plan_tail_padding() {
+        let c = plan_chunks(7, &[1, 2, 4]);
+        assert_eq!(
+            c,
+            vec![
+                Chunk { bucket: 4, real: 4 },
+                Chunk { bucket: 4, real: 3 },
+            ]
+        );
+        let c = plan_chunks(1, &[1, 2, 4]);
+        assert_eq!(c, vec![Chunk { bucket: 1, real: 1 }]);
+        let c = plan_chunks(2, &[1, 2, 4]);
+        assert_eq!(c, vec![Chunk { bucket: 2, real: 2 }]);
+    }
+
+    #[test]
+    fn property_chunks_cover_all_requests() {
+        check("chunks-cover", 100, |r| {
+            let n = 1 + r.index(40);
+            let chunks = plan_chunks(n, &[1, 2, 4]);
+            let total: usize = chunks.iter().map(|c| c.real).sum();
+            let valid = chunks.iter().all(|c| c.real <= c.bucket && c.real > 0);
+            total == n && valid
+        });
+    }
+}

@@ -1,0 +1,290 @@
+//! Per-request decode state machine.
+//!
+//! A `SequenceState` tracks one request through block-wise refinement:
+//! which generation positions are still `[MASK]`, the active block
+//! cursor, step/model-call accounting (paper §A.3 protocol), and the
+//! finalization policy (confidence-thresholded parallel finalization
+//! with a guaranteed top-1 per step — paper §4.3 / Fast-dLLM).
+
+use std::time::{Duration, Instant};
+
+use crate::runtime::Geometry;
+use crate::tokenizer::{EOS, MASK};
+
+#[derive(Debug, Clone)]
+pub struct SequenceState {
+    pub prompt_ids: Vec<i32>, // [P], left-padded
+    pub valid_from: i32,
+    pub gen: Vec<i32>, // [Lg], MASK until finalized
+    pub steps: u64,
+    /// Model executions attributable to this sequence, including cache
+    /// commits (steps counts only refinement steps, as the paper does).
+    pub model_calls: u64,
+    pub done: bool,
+    started: Instant,
+    finished: Option<Instant>,
+}
+
+impl SequenceState {
+    pub fn new(geom: &Geometry, prompt_ids: Vec<i32>) -> Self {
+        assert_eq!(prompt_ids.len(), geom.prompt_len, "prompt must be padded");
+        let valid_from = prompt_ids
+            .iter()
+            .position(|&t| t != geom.pad)
+            .unwrap_or(geom.prompt_len) as i32;
+        Self {
+            prompt_ids,
+            valid_from,
+            gen: vec![MASK; geom.gen_len],
+            steps: 0,
+            model_calls: 0,
+            done: false,
+            started: Instant::now(),
+            finished: None,
+        }
+    }
+
+    pub fn restart_clock(&mut self) {
+        self.started = Instant::now();
+        self.finished = None;
+    }
+
+    /// Masked positions within [lo, lo+len) of the generation span.
+    pub fn masked_in(&self, lo: usize, len: usize) -> Vec<usize> {
+        (lo..lo + len).filter(|&i| self.gen[i] == MASK).collect()
+    }
+
+    pub fn block_fully_finalized(&self, lo: usize, len: usize) -> bool {
+        self.gen[lo..lo + len].iter().all(|&t| t != MASK)
+    }
+
+    /// Confidence-thresholded parallel finalization over one block
+    /// (gen-span offsets [lo, lo+len)). Reveals every masked position
+    /// with conf >= tau; if none clears the bar, reveals the single
+    /// most-confident masked position so progress is guaranteed.
+    /// Returns the number of tokens finalized.
+    pub fn finalize_threshold(
+        &mut self,
+        lo: usize,
+        toks: &[i32],  // [len] proposed tokens for the block
+        confs: &[f32], // [len]
+        tau: f32,
+    ) -> usize {
+        let len = toks.len();
+        let masked = self.masked_in(lo, len);
+        if masked.is_empty() {
+            return 0;
+        }
+        let mut finalized = 0;
+        for &pos in &masked {
+            if confs[pos - lo] >= tau {
+                self.gen[pos] = toks[pos - lo];
+                finalized += 1;
+            }
+        }
+        if finalized == 0 {
+            // first maximum on ties (matches python argmax semantics —
+            // ties are real: softmax confidence saturates at 1.0)
+            let mut best = masked[0];
+            let mut best_c = confs[best - lo];
+            for &pos in &masked[1..] {
+                if confs[pos - lo] > best_c {
+                    best_c = confs[pos - lo];
+                    best = pos;
+                }
+            }
+            self.gen[best] = toks[best - lo];
+            finalized = 1;
+        }
+        finalized
+    }
+
+    /// Top-m finalization (vanilla / truncated-step baselines): reveal
+    /// the m most confident masked positions in the block.
+    pub fn finalize_top_m(
+        &mut self,
+        lo: usize,
+        toks: &[i32],
+        confs: &[f32],
+        m: usize,
+    ) -> usize {
+        let mut masked = self.masked_in(lo, toks.len());
+        if masked.is_empty() {
+            return 0;
+        }
+        masked.sort_by(|&a, &b| {
+            confs[b - lo]
+                .partial_cmp(&confs[a - lo])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let take = masked.len().min(m.max(1));
+        for &pos in &masked[..take] {
+            self.gen[pos] = toks[pos - lo];
+        }
+        take
+    }
+
+    /// Early stop check: a finalized <eos> within [lo, lo+len)
+    /// terminates the request at the block boundary (paper §4.3).
+    pub fn eos_in(&self, lo: usize, len: usize) -> bool {
+        self.gen[lo..lo + len].iter().any(|&t| t == EOS)
+    }
+
+    pub fn mark_done(&mut self) {
+        if !self.done {
+            self.done = true;
+            self.finished = Some(Instant::now());
+        }
+    }
+
+    pub fn latency(&self) -> Duration {
+        self.finished.unwrap_or_else(Instant::now) - self.started
+    }
+
+    /// Valid generated tokens before the first <eos> (paper §A.3).
+    pub fn gen_length(&self) -> usize {
+        let end = self
+            .gen
+            .iter()
+            .position(|&t| t == EOS)
+            .unwrap_or(self.gen.len());
+        self.gen[..end].iter().filter(|&&t| t != MASK).count()
+    }
+
+    /// Full sequence [P + Lg] (prompt + generation) for full-seq programs.
+    pub fn full_ids(&self) -> Vec<i32> {
+        let mut out = self.prompt_ids.clone();
+        out.extend_from_slice(&self.gen);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::PAD;
+    use crate::util::prop::check;
+    use crate::util::rng::SplitMix64;
+
+    fn geom() -> Geometry {
+        Geometry {
+            vocab_size: 64,
+            d_model: 96,
+            n_layers: 3,
+            n_heads: 4,
+            d_head: 24,
+            d_ff: 192,
+            prompt_len: 8,
+            gen_len: 8,
+            block_size: 4,
+            seq_len: 16,
+            pad: PAD,
+            mask: MASK,
+            bos: 2,
+            eos: EOS,
+        }
+    }
+
+    fn seq() -> SequenceState {
+        let mut p = vec![PAD; 8];
+        p[3] = 2;
+        for (i, t) in p.iter_mut().enumerate().skip(4) {
+            *t = 10 + i as i32;
+        }
+        SequenceState::new(&geom(), p)
+    }
+
+    #[test]
+    fn valid_from_detects_padding() {
+        assert_eq!(seq().valid_from, 3);
+    }
+
+    #[test]
+    fn threshold_finalizes_confident_tokens() {
+        let mut s = seq();
+        let toks = vec![5, 6, 7, 8];
+        let confs = vec![0.95, 0.5, 0.91, 0.2];
+        let n = s.finalize_threshold(0, &toks, &confs, 0.9);
+        assert_eq!(n, 2);
+        assert_eq!(s.gen[0], 5);
+        assert_eq!(s.gen[1], MASK);
+        assert_eq!(s.gen[2], 7);
+    }
+
+    #[test]
+    fn threshold_guarantees_progress() {
+        let mut s = seq();
+        let confs = vec![0.1, 0.3, 0.2, 0.05];
+        let n = s.finalize_threshold(0, &[5, 6, 7, 8], &confs, 0.9);
+        assert_eq!(n, 1);
+        assert_eq!(s.gen[1], 6, "most confident masked position wins");
+    }
+
+    #[test]
+    fn threshold_skips_already_finalized() {
+        let mut s = seq();
+        s.gen[0] = 9;
+        let n = s.finalize_threshold(0, &[5, 6, 7, 8], &[1.0, 1.0, 0.0, 0.0], 0.9);
+        assert_eq!(n, 1); // only position 1 (position 0 already set)
+        assert_eq!(s.gen[0], 9, "finalized tokens are immutable");
+    }
+
+    #[test]
+    fn top_m_takes_most_confident() {
+        let mut s = seq();
+        let n = s.finalize_top_m(4, &[5, 6, 7, 8], &[0.1, 0.9, 0.5, 0.7], 2);
+        assert_eq!(n, 2);
+        assert_eq!(s.gen[5], 6);
+        assert_eq!(s.gen[7], 8);
+        assert_eq!(s.gen[4], MASK);
+    }
+
+    #[test]
+    fn gen_length_stops_at_eos() {
+        let mut s = seq();
+        s.gen = vec![10, 11, EOS, 12, MASK, MASK, MASK, MASK];
+        assert_eq!(s.gen_length(), 2);
+    }
+
+    #[test]
+    fn eos_detection_block_scoped() {
+        let mut s = seq();
+        s.gen[5] = EOS;
+        assert!(!s.eos_in(0, 4));
+        assert!(s.eos_in(4, 4));
+    }
+
+    #[test]
+    fn full_ids_concatenates() {
+        let s = seq();
+        let ids = s.full_ids();
+        assert_eq!(ids.len(), 16);
+        assert_eq!(&ids[..8], &s.prompt_ids[..]);
+    }
+
+    #[test]
+    fn property_finalization_monotone_and_terminating() {
+        // repeated threshold finalization must strictly reduce the
+        // masked set and terminate within len steps, for any confidences
+        check("finalize-terminates", 100, |r: &mut SplitMix64| {
+            let mut s = seq();
+            let tau = 0.5 + r.f64() as f32 * 0.5;
+            let mut iters = 0;
+            while !s.block_fully_finalized(0, 4) {
+                let confs: Vec<f32> =
+                    (0..4).map(|_| r.f64() as f32).collect();
+                let before = s.masked_in(0, 4).len();
+                let n = s.finalize_threshold(0, &[5, 6, 7, 8], &confs, tau);
+                let after = s.masked_in(0, 4).len();
+                if !(n >= 1 && after == before - n) {
+                    return false;
+                }
+                iters += 1;
+                if iters > 4 {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+}

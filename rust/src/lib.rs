@@ -1,0 +1,47 @@
+//! # CDLM — Consistency Diffusion Language Models for Faster Sampling
+//!
+//! Rust serving coordinator for the MLSys'26 CDLM paper reproduction:
+//! a three-layer stack in which **rust owns the request path** (routing,
+//! dynamic batching, exact block KV caching, decode scheduling, metrics,
+//! HTTP) and executes **AOT-compiled JAX/Pallas programs** through the
+//! PJRT C API. Python runs once at build time (`make artifacts`) and is
+//! never on the request path.
+//!
+//! Crate map (see DESIGN.md for the paper mapping):
+//! * [`runtime`] — PJRT client, HLO-text loading, typed program wrappers;
+//! * [`coordinator`] — router/batcher/scheduler/KV-pool + the six decode
+//!   engines of paper Tables 1-2 (vanilla, dLLM-Cache, Fast-dLLM Par./
+//!   +D.C., CDLM, AR);
+//! * [`analysis`] — §5.4 arithmetic-intensity + Appendix B.4 roofline
+//!   models (reproduce the paper's A100 numbers analytically);
+//! * [`workload`] / [`tokenizer`] — synthetic benchmarks + vocab,
+//!   golden-pinned mirrors of the python build path;
+//! * [`server`] — minimal HTTP front-end;
+//! * [`util`] — std-only JSON/CLI/RNG/stats/property-test infrastructure
+//!   (the offline registry has no serde/clap/criterion/proptest).
+
+pub mod analysis;
+pub mod bench_support;
+pub mod coordinator;
+pub mod runtime;
+pub mod server;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;
+
+use std::path::PathBuf;
+
+/// Locate the artifacts directory: `$CDLM_ARTIFACTS` or `<repo>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("CDLM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}
+
+/// True when artifacts exist (several tests/benches skip gracefully
+/// otherwise so `cargo test` works pre-`make artifacts`).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}

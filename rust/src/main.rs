@@ -1,0 +1,249 @@
+//! `cdlm` — CLI for the CDLM serving stack.
+//!
+//! Subcommands:
+//!   serve      start the HTTP server (router + dynamic batcher)
+//!   generate   one-shot decode from the command line
+//!   eval       method x family evaluation grid (paper-table rows)
+//!   analysis   print Fig. 4 arithmetic-intensity / Fig. 9 roofline
+//!   info       artifacts manifest summary
+
+use std::time::Duration;
+
+use cdlm::coordinator::router::RouterConfig;
+use cdlm::coordinator::{
+    DecodeOpts, GroupKey, Method, Router, ServingCore, ALL_METHODS,
+};
+use cdlm::server::{self, http::ServerConfig};
+use cdlm::util::cli::Args;
+use cdlm::workload::{self, Family};
+use cdlm::{analysis, artifacts_dir};
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let code = match cmd {
+        "serve" => cmd_serve(&args),
+        "generate" => cmd_generate(&args),
+        "eval" => cmd_eval(&args),
+        "analysis" => cmd_analysis(&args),
+        "info" => cmd_info(),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "cdlm — Consistency Diffusion Language Model serving stack\n\
+         \n\
+         USAGE: cdlm <command> [--flags]\n\
+         \n\
+         COMMANDS:\n\
+         \x20 serve      --addr 127.0.0.1:8472 --backbone dream --max-batch 4 --max-wait-ms 25\n\
+         \x20 generate   --prompt 'q:3*4+5=?' --method cdlm --backbone dream [--tau 0.9]\n\
+         \x20 eval       --methods cdlm,ar --families chain-arith --n 16 --backbone dream\n\
+         \x20 analysis   [--fig 4|9]\n\
+         \x20 info\n"
+    );
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let router = Router::start(
+        artifacts_dir(),
+        RouterConfig {
+            max_batch: args.get_usize("max-batch", 4),
+            max_wait: Duration::from_millis(
+                args.get_usize("max-wait-ms", 25) as u64,
+            ),
+            max_queue: args.get_usize("max-queue", 256),
+            pool_capacity: args.get_usize("pool", 64),
+        },
+    )?;
+    server::serve(
+        router,
+        ServerConfig {
+            addr: args.get_or("addr", "127.0.0.1:8472").to_string(),
+            default_backbone: args.get_or("backbone", "dream").to_string(),
+        },
+    )
+}
+
+fn cmd_generate(args: &Args) -> anyhow::Result<()> {
+    let prompt = args
+        .get("prompt")
+        .ok_or_else(|| anyhow::anyhow!("--prompt required"))?;
+    let method = Method::from_name(args.get_or("method", "cdlm"))
+        .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
+    let backbone = args.get_or("backbone", "dream").to_string();
+    let mut core = ServingCore::load(&artifacts_dir(), 8)?;
+    let geom = core.rt.manifest.geometry.clone();
+
+    let mut ids = vec![cdlm::tokenizer::BOS];
+    ids.extend(core.tokenizer.encode(&format!("{prompt}a:"))?);
+    anyhow::ensure!(ids.len() <= geom.prompt_len, "prompt too long");
+    let mut prompt_ids = vec![cdlm::tokenizer::PAD; geom.prompt_len - ids.len()];
+    prompt_ids.extend(ids);
+
+    let mut opts = DecodeOpts::defaults(&geom);
+    opts.tau_conf = args.get_f64("tau", 0.9) as f32;
+    let key = GroupKey { backbone, method };
+    let out = core.decode_group(&key, &[prompt_ids], &opts)?;
+    let o = &out[0];
+    println!("text:        {}", core.tokenizer.decode(&o.gen, true));
+    println!(
+        "final:       {}",
+        workload::extract_final(&core.tokenizer.decode(&o.gen, true))
+            .unwrap_or("(none)")
+    );
+    println!("steps:       {}", o.steps);
+    println!("model calls: {}", o.model_calls);
+    println!("latency:     {:.1} ms", o.latency.as_secs_f64() * 1e3);
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+    let mut core = ServingCore::load(&artifacts_dir(), 16)?;
+    let geom = core.rt.manifest.geometry.clone();
+    let n = args.get_usize("n", 16);
+    let backbone = args.get_or("backbone", "dream").to_string();
+    let methods: Vec<Method> = match args.get("methods") {
+        None => vec![Method::Cdlm],
+        Some("all") => ALL_METHODS.to_vec(),
+        Some(s) => s
+            .split(',')
+            .filter_map(Method::from_name)
+            .collect(),
+    };
+    let families: Vec<Family> = match args.get("families") {
+        None => vec![Family::ChainArith],
+        Some("all") => workload::FAMILIES.to_vec(),
+        Some(s) => s.split(',').filter_map(Family::from_name).collect(),
+    };
+    let mut opts = DecodeOpts::defaults(&geom);
+    opts.tau_conf = args.get_f64("tau", 0.9) as f32;
+
+    println!(
+        "{:<14} {:<14} {:>8} {:>10} {:>8} {:>9} {:>7}",
+        "family", "method", "TPS", "lat(ms)", "steps", "gen.len", "score"
+    );
+    for fam in &families {
+        let samples = workload::generate(*fam, n, 0xE7A1);
+        let enc: Vec<_> = samples
+            .iter()
+            .map(|s| {
+                workload::encode_example(
+                    &core.tokenizer,
+                    *fam,
+                    s,
+                    geom.prompt_len,
+                    geom.gen_len,
+                )
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let prompts: Vec<Vec<i32>> =
+            enc.iter().map(|e| e.prompt_ids.clone()).collect();
+        for m in &methods {
+            let key = GroupKey { backbone: backbone.clone(), method: *m };
+            let outs = core.decode_group(&key, &prompts, &opts)?;
+            let mut agg = cdlm::coordinator::MetricsAggregator::new();
+            for (o, s) in outs.iter().zip(&samples) {
+                let text = core.tokenizer.decode(&o.gen, true);
+                agg.record(&cdlm::coordinator::RequestRecord {
+                    latency: o.latency,
+                    steps: o.steps,
+                    model_calls: o.model_calls,
+                    gen_len: o.gen_len,
+                    correct: Some(workload::score(&text, s)),
+                });
+            }
+            println!(
+                "{:<14} {:<14} {:>8.1} {:>10.1} {:>8.1} {:>9.1} {:>7.1}",
+                fam.name(),
+                m.name(),
+                agg.tps(),
+                agg.avg_latency_s() * 1e3,
+                agg.avg_steps(),
+                agg.avg_gen_len(),
+                agg.score()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_analysis(args: &Args) -> anyhow::Result<()> {
+    use analysis::intensity::{
+        ArchConfig, DecodeMode, IntensityModel, Workload, PAPER_BATCH_SIZES,
+    };
+    use analysis::roofline::A100;
+    let fig = args.get_usize("fig", 4);
+    let ar = IntensityModel::new(ArchConfig::llama31_8b(), Workload::paper());
+    let dlm = IntensityModel::new(ArchConfig::llada_8b(), Workload::paper());
+    let modes = [
+        ("AR (LLaMA-3.1-8B)", &ar, DecodeMode::Ar),
+        ("Vanilla DLM (LLaDA-8B)", &dlm, DecodeMode::VanillaDlm),
+        ("Block DLM B=4", &dlm, DecodeMode::BlockDlm { block: 4 }),
+        ("Block DLM B=16", &dlm, DecodeMode::BlockDlm { block: 16 }),
+        ("Block DLM B=32", &dlm, DecodeMode::BlockDlm { block: 32 }),
+    ];
+    if fig == 4 {
+        println!("Arithmetic intensity vs batch size (ridge {:.1} FLOP/B)",
+                 A100.ridge());
+        print!("{:<24}", "mode");
+        for bs in PAPER_BATCH_SIZES {
+            print!("{bs:>9}");
+        }
+        println!();
+        for (name, m, mode) in modes {
+            print!("{name:<24}");
+            for bs in PAPER_BATCH_SIZES {
+                print!("{:>9.1}", m.ai(mode, bs));
+            }
+            println!();
+        }
+    } else {
+        println!(
+            "Roofline (A100: peak {:.1} TF/s, bw {:.0} GB/s, ridge {:.1})",
+            A100.peak_flops / 1e12,
+            A100.bandwidth / 1e9,
+            A100.ridge()
+        );
+        for (name, m, mode) in modes {
+            print!("{name:<24}");
+            for bs in PAPER_BATCH_SIZES {
+                let p = A100.simulate_mode(m, mode, bs);
+                print!("{:>9.1}", p.attainable_tflops);
+            }
+            println!();
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    let dir = artifacts_dir();
+    let core = ServingCore::load(&dir, 1)?;
+    let m = &core.rt.manifest;
+    let g = &m.geometry;
+    println!("artifacts:   {}", dir.display());
+    println!("platform:    {}", core.rt.platform());
+    println!(
+        "geometry:    d={} L={} H={} P={} Lg={} B={} V={}",
+        g.d_model, g.n_layers, g.n_heads, g.prompt_len, g.gen_len,
+        g.block_size, g.vocab_size
+    );
+    println!("programs:    {}", m.programs.len());
+    println!("buckets:     {:?}  sweep blocks: {:?}", m.buckets, m.sweep_blocks);
+    println!("fast mode:   {}", m.fast_mode);
+    println!("models:");
+    for (k, v) in &m.models {
+        println!("  {k:<16} {v}");
+    }
+    Ok(())
+}

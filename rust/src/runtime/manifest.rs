@@ -1,0 +1,210 @@
+//! `artifacts/manifest.json` — the contract between the python build
+//! path and the rust request path: model geometry, the canonical weight
+//! argument order, and the AOT program table.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+#[derive(Debug, Clone)]
+pub struct Geometry {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    pub block_size: usize,
+    pub seq_len: usize,
+    pub pad: i32,
+    pub mask: i32,
+    pub bos: i32,
+    pub eos: i32,
+}
+
+impl Geometry {
+    pub fn num_blocks(&self) -> usize {
+        self.gen_len / self.block_size
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ProgramEntry {
+    pub name: String,
+    pub bs: usize,
+    pub block: Option<usize>,
+    pub file: String,
+    /// Input shapes (including the leading weight args).
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub geometry: Geometry,
+    pub weight_names: Vec<String>,
+    pub buckets: Vec<usize>,
+    pub sweep_blocks: Vec<usize>,
+    pub programs: Vec<ProgramEntry>,
+    pub models: Vec<(String, String)>,
+    pub fast_mode: bool,
+}
+
+fn geti(j: &Json, key: &str) -> anyhow::Result<usize> {
+    j.req(key)?
+        .as_usize()
+        .ok_or_else(|| anyhow::anyhow!("{key} not a number"))
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let j = json::load(&dir.join("manifest.json"))?;
+        let g = j.req("geometry")?;
+        let geometry = Geometry {
+            vocab_size: geti(g, "vocab_size")?,
+            d_model: geti(g, "d_model")?,
+            n_layers: geti(g, "n_layers")?,
+            n_heads: geti(g, "n_heads")?,
+            d_head: geti(g, "d_head")?,
+            d_ff: geti(g, "d_ff")?,
+            prompt_len: geti(g, "prompt_len")?,
+            gen_len: geti(g, "gen_len")?,
+            block_size: geti(g, "block_size")?,
+            seq_len: geti(g, "seq_len")?,
+            pad: geti(g, "pad")? as i32,
+            mask: geti(g, "mask")? as i32,
+            bos: geti(g, "bos")? as i32,
+            eos: geti(g, "eos")? as i32,
+        };
+        let weight_names = j
+            .req("weight_names")?
+            .as_arr()
+            .unwrap_or_default()
+            .iter()
+            .filter_map(|v| v.as_str().map(String::from))
+            .collect::<Vec<_>>();
+        let buckets = j
+            .req("buckets")?
+            .as_arr()
+            .unwrap_or_default()
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let sweep_blocks = j
+            .get("sweep_blocks")
+            .and_then(Json::as_arr)
+            .unwrap_or_default()
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let mut programs = Vec::new();
+        for p in j.req("programs")?.as_arr().unwrap_or_default() {
+            programs.push(ProgramEntry {
+                name: p.req("name")?.as_str().unwrap_or("").to_string(),
+                bs: geti(p, "bs")?,
+                block: p.get("block").and_then(Json::as_usize),
+                file: p.req("file")?.as_str().unwrap_or("").to_string(),
+                input_shapes: p
+                    .req("inputs")?
+                    .as_arr()
+                    .unwrap_or_default()
+                    .iter()
+                    .map(|i| {
+                        i.get("shape")
+                            .and_then(Json::as_arr)
+                            .unwrap_or_default()
+                            .iter()
+                            .filter_map(Json::as_usize)
+                            .collect()
+                    })
+                    .collect(),
+            });
+        }
+        let models = j
+            .req("models")?
+            .as_obj()
+            .map(|m| {
+                m.iter()
+                    .map(|(k, v)| (k.clone(), v.as_str().unwrap_or("").to_string()))
+                    .collect()
+            })
+            .unwrap_or_default();
+        anyhow::ensure!(!programs.is_empty(), "manifest has no programs");
+        anyhow::ensure!(!weight_names.is_empty(), "manifest has no weights");
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            geometry,
+            weight_names,
+            buckets,
+            sweep_blocks,
+            programs,
+            models,
+            fast_mode: j
+                .get("fast_mode")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+        })
+    }
+
+    pub fn find_program(
+        &self,
+        name: &str,
+        bs: usize,
+        block: Option<usize>,
+    ) -> Option<&ProgramEntry> {
+        self.programs
+            .iter()
+            .find(|p| p.name == name && p.bs == bs && p.block == block)
+    }
+
+    /// Smallest exported batch bucket >= n.
+    pub fn bucket_for(&self, n: usize) -> Option<usize> {
+        self.buckets.iter().copied().filter(|&b| b >= n).min()
+    }
+
+    pub fn model_weight_file(&self, model: &str) -> Option<&str> {
+        self.models
+            .iter()
+            .find(|(k, _)| k == model)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.geometry.seq_len, m.geometry.prompt_len + m.geometry.gen_len);
+        assert!(m.geometry.gen_len % m.geometry.block_size == 0);
+        assert!(m.find_program("student_block_step", 1,
+                               Some(m.geometry.block_size)).is_some());
+        assert!(m.find_program("teacher_denoise", 4, None).is_some());
+        assert!(m.model_weight_file("cdlm_dream").is_some());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.bucket_for(1), Some(1));
+        assert_eq!(m.bucket_for(3), Some(4));
+        assert_eq!(m.bucket_for(4), Some(4));
+        assert_eq!(m.bucket_for(99), None);
+    }
+}

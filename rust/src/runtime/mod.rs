@@ -1,0 +1,19 @@
+//! Runtime: the bridge from AOT artifacts to the serving hot path.
+//!
+//! `Runtime` owns the PJRT CPU client and the compiled-executable cache;
+//! `ModelWeights` holds a model's parameter literals in the manifest's
+//! canonical order; `Programs` exposes typed call wrappers for every AOT
+//! program. Python is never on this path — the artifacts directory is
+//! the entire contract.
+
+pub mod manifest;
+pub mod pjrt;
+pub mod programs;
+pub mod tensor;
+pub mod weights;
+
+pub use manifest::{Geometry, Manifest};
+pub use pjrt::{ProgramKey, Runtime};
+pub use programs::Programs;
+pub use tensor::{TensorF32, TensorI32};
+pub use weights::ModelWeights;

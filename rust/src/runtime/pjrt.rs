@@ -1,0 +1,205 @@
+//! PJRT runtime: load HLO-text artifacts, compile once, execute from the
+//! serving hot path.
+//!
+//! Interchange is HLO *text* (xla_extension 0.5.1 rejects jax>=0.5
+//! serialized protos — the text parser reassigns instruction ids; see
+//! /opt/xla-example/README.md). Executables are compiled lazily on first
+//! use and cached for the lifetime of the runtime; `warmup()` pre-compiles
+//! the hot set so serving latency is flat from the first request.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::manifest::Manifest;
+
+/// Key into the executable cache.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ProgramKey {
+    pub name: String,
+    pub bs: usize,
+    pub block: Option<usize>,
+}
+
+impl ProgramKey {
+    pub fn new(name: &str, bs: usize, block: Option<usize>) -> Self {
+        Self { name: name.to_string(), bs, block }
+    }
+}
+
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: Mutex<HashMap<ProgramKey, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    pub compile_log: Mutex<Vec<(String, f64)>>,
+}
+
+impl Runtime {
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            manifest,
+            client,
+            executables: Mutex::new(HashMap::new()),
+            compile_log: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Compile (or fetch cached) an AOT program.
+    pub fn executable(
+        &self,
+        key: &ProgramKey,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.executables.lock().unwrap().get(key) {
+            return Ok(e.clone());
+        }
+        let entry = self
+            .manifest
+            .find_program(&key.name, key.bs, key.block)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "program {}(bs={}, block={:?}) not in manifest",
+                    key.name,
+                    key.bs,
+                    key.block
+                )
+            })?;
+        let path = self.manifest.dir.join(&entry.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("utf8 path"),
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.compile_log
+            .lock()
+            .unwrap()
+            .push((entry.file.clone(), t0.elapsed().as_secs_f64()));
+        self.executables.lock().unwrap().insert(key.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a program: weights first, then `inputs`; returns the
+    /// decomposed output tuple.
+    pub fn run(
+        &self,
+        key: &ProgramKey,
+        weights: &[xla::Literal],
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let trace = std::env::var_os("CDLM_TRACE").is_some();
+        let t0 = Instant::now();
+        let exe = self.executable(key)?;
+        let t_compile = t0.elapsed();
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(weights.len() + inputs.len());
+        args.extend(weights.iter());
+        args.extend(inputs.iter().copied());
+        let t1 = Instant::now();
+        let out = exe.execute::<&xla::Literal>(&args)?;
+        let t_exec = t1.elapsed();
+        let t2 = Instant::now();
+        let lit = out[0][0].to_literal_sync()?;
+        let parsed = lit.to_tuple()?;
+        if trace {
+            eprintln!(
+                "[trace] {}(bs={}) compile/fetch {:?} exec {:?} fetch {:?}",
+                key.name, key.bs, t_compile, t_exec, t2.elapsed()
+            );
+        }
+        Ok(parsed)
+    }
+
+    /// Host literal -> device buffer (for persistent weight residency).
+    pub fn to_device(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+
+    /// Execute with device-resident weight buffers (`execute_b`): only
+    /// the per-step inputs are copied host->device.
+    pub fn run_with_buffers(
+        &self,
+        key: &ProgramKey,
+        weight_bufs: &[xla::PjRtBuffer],
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let trace = std::env::var_os("CDLM_TRACE").is_some();
+        let exe = self.executable(key)?;
+        let input_bufs = inputs
+            .iter()
+            .map(|l| self.to_device(l))
+            .collect::<Result<Vec<_>>>()?;
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(weight_bufs.len() + input_bufs.len());
+        args.extend(weight_bufs.iter());
+        args.extend(input_bufs.iter());
+        let t1 = Instant::now();
+        let out = exe.execute_b::<&xla::PjRtBuffer>(&args)?;
+        let t_exec = t1.elapsed();
+        let lit = out[0][0].to_literal_sync()?;
+        if trace {
+            eprintln!(
+                "[trace] {}(bs={}) exec_b {:?}",
+                key.name, key.bs, t_exec
+            );
+        }
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Pre-compile the given programs (serving warm-up).
+    pub fn warmup(&self, keys: &[ProgramKey]) -> Result<()> {
+        for k in keys {
+            self.executable(k)?;
+        }
+        Ok(())
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.executables.lock().unwrap().len()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_and_compiles_lazily() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let rt = Runtime::load(&dir).unwrap();
+        assert_eq!(rt.compiled_count(), 0);
+        let key = ProgramKey::new("teacher_denoise", 1, None);
+        rt.executable(&key).unwrap();
+        assert_eq!(rt.compiled_count(), 1);
+        // cached: second call does not recompile
+        rt.executable(&key).unwrap();
+        assert_eq!(rt.compiled_count(), 1);
+        assert_eq!(rt.compile_log.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn missing_program_is_an_error() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let rt = Runtime::load(&dir).unwrap();
+        assert!(rt
+            .executable(&ProgramKey::new("nonexistent", 1, None))
+            .is_err());
+    }
+}

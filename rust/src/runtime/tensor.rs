@@ -1,0 +1,109 @@
+//! Host tensors + conversion to/from `xla::Literal`.
+//!
+//! The hot path reuses `Literal`s in place (`copy_raw_from`) to avoid
+//! per-step allocation; see `coordinator::methods` for usage.
+
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct TensorF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorF32 {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    /// Overwrite an existing literal's contents (shape must match).
+    pub fn write_into(&self, lit: &mut xla::Literal) -> Result<()> {
+        lit.copy_raw_from(&self.data)?;
+        Ok(())
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        Ok(Self { shape: dims, data: lit.to_vec::<f32>()? })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        Ok(Self { shape: dims, data: lit.to_vec::<i32>()? })
+    }
+}
+
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip_through_literal() {
+        let t = TensorF32::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let l = t.to_literal().unwrap();
+        let back = TensorF32::from_literal(&l).unwrap();
+        assert_eq!(back.shape, vec![2, 3]);
+        assert_eq!(back.data, t.data);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let t = TensorI32::from_vec(&[4], vec![1, -2, 3, 4]);
+        let back = TensorI32::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back.data, t.data);
+    }
+
+    #[test]
+    fn write_into_reuses_literal() {
+        let t = TensorF32::zeros(&[8]);
+        let mut l = t.to_literal().unwrap();
+        let t2 = TensorF32::from_vec(&[8], (0..8).map(|i| i as f32).collect());
+        t2.write_into(&mut l).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), t2.data);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        TensorF32::from_vec(&[2, 2], vec![1.0]);
+    }
+}

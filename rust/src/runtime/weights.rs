@@ -1,0 +1,112 @@
+//! Model weights: npz loading in the manifest's canonical argument order.
+//!
+//! Weights are uploaded as the leading arguments of every AOT program.
+//! They are loaded once per model and shared (Arc) across engines.
+
+use std::path::Path;
+
+use anyhow::Result;
+use xla::FromRawBytes;
+
+use super::manifest::Manifest;
+
+pub struct ModelWeights {
+    pub name: String,
+    /// Literals in manifest `weight_names` order.
+    pub literals: Vec<xla::Literal>,
+    /// Persistent device buffers (uploaded once; §Perf optimization #4:
+    /// avoids re-copying ~1.2 MB of weights host->device on every
+    /// decode step). Populated by `upload`.
+    pub buffers: Option<Vec<xla::PjRtBuffer>>,
+    pub total_params: usize,
+}
+
+impl ModelWeights {
+    pub fn load(manifest: &Manifest, model: &str) -> Result<ModelWeights> {
+        let file = manifest
+            .model_weight_file(model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
+        Self::load_file(&manifest.dir.join(file), &manifest.weight_names, model)
+    }
+
+    pub fn load_file(
+        path: &Path,
+        weight_names: &[String],
+        name: &str,
+    ) -> Result<ModelWeights> {
+        let mut arrays = xla::Literal::read_npz(path, &())?;
+        arrays.sort_by(|a, b| a.0.cmp(&b.0));
+        let names: Vec<&String> = arrays.iter().map(|(n, _)| n).collect();
+        anyhow::ensure!(
+            names.len() == weight_names.len()
+                && names.iter().zip(weight_names).all(|(a, b)| *a == b),
+            "weight names in {} do not match manifest order",
+            path.display()
+        );
+        let mut total = 0usize;
+        let literals: Vec<xla::Literal> = arrays
+            .into_iter()
+            .map(|(_, l)| {
+                total += l.element_count();
+                l
+            })
+            .collect();
+        Ok(ModelWeights {
+            name: name.to_string(),
+            literals,
+            buffers: None,
+            total_params: total,
+        })
+    }
+
+    /// Upload the weights to device buffers once (subsequent executes
+    /// use `execute_b` and skip the per-call host->device weight copy).
+    /// Disabled by CDLM_NO_DEVICE_WEIGHTS=1 (the §Perf A/B switch).
+    pub fn upload(&mut self, rt: &super::Runtime) -> Result<()> {
+        if self.buffers.is_some()
+            || std::env::var_os("CDLM_NO_DEVICE_WEIGHTS").is_some()
+        {
+            return Ok(());
+        }
+        let bufs = self
+            .literals
+            .iter()
+            .map(|l| rt.to_device(l))
+            .collect::<Result<Vec<_>>>()?;
+        self.buffers = Some(bufs);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_all_declared_models() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        for (model, _) in &m.models {
+            let w = ModelWeights::load(&m, model).unwrap();
+            assert_eq!(w.literals.len(), m.weight_names.len());
+            assert!(w.total_params > 10_000, "{model}: {}", w.total_params);
+        }
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(ModelWeights::load(&m, "nope").is_err());
+    }
+}

@@ -1,0 +1,184 @@
+//! HTTP/1.1 API over std::net — one handler thread per connection.
+//! Handlers never touch XLA state: they tokenize, submit to the router
+//! (whose worker thread owns the PJRT runtime), and wait on a channel.
+//!
+//!   POST /generate   {"prompt": str, "backbone": str?, "method": str?,
+//!                     "tau_conf": num?}
+//!   GET  /metrics    per-(backbone, method) §A.3 aggregates
+//!   GET  /healthz    liveness + platform info
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::{GenerateRequest, Method, Router};
+use crate::tokenizer::{Tokenizer, BOS, PAD};
+use crate::util::json::Json;
+use crate::workload;
+
+pub struct ServerConfig {
+    pub addr: String,
+    pub default_backbone: String,
+}
+
+/// Parse one HTTP request (method, path, body).
+fn read_request(stream: &mut TcpStream) -> Result<(String, String, String)> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let mut content_len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:")
+        {
+            content_len = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; content_len];
+    if content_len > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok((method, path, String::from_utf8_lossy(&body).into_owned()))
+}
+
+fn respond(stream: &mut TcpStream, status: u16, body: &str) {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        429 => "Too Many Requests",
+        _ => "Internal Server Error",
+    };
+    let _ = write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+}
+
+fn err_json(msg: &str) -> String {
+    Json::obj(vec![("error", Json::str(msg))]).to_string()
+}
+
+/// Encode a user prompt to the fixed left-padded geometry.
+pub fn encode_user_prompt(
+    tok: &Tokenizer,
+    prompt: &str,
+    prompt_len: usize,
+) -> Result<Vec<i32>> {
+    let mut ids = vec![BOS];
+    ids.extend(tok.encode(&format!("{prompt}a:"))?);
+    anyhow::ensure!(ids.len() <= prompt_len, "prompt too long");
+    let mut out = vec![PAD; prompt_len - ids.len()];
+    out.extend(ids);
+    Ok(out)
+}
+
+fn handle_generate(
+    tok: &Tokenizer,
+    router: &Router,
+    default_backbone: &str,
+    body: &str,
+) -> (u16, String) {
+    let req = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return (400, err_json(&format!("bad json: {e}"))),
+    };
+    let Some(prompt) = req.get("prompt").and_then(Json::as_str) else {
+        return (400, err_json("missing 'prompt'"));
+    };
+    let backbone = req
+        .get("backbone")
+        .and_then(Json::as_str)
+        .unwrap_or(default_backbone)
+        .to_string();
+    let method = match req.get("method").and_then(Json::as_str) {
+        None => Method::Cdlm,
+        Some(m) => match Method::from_name(m) {
+            Some(m) => m,
+            None => return (400, err_json(&format!("unknown method '{m}'"))),
+        },
+    };
+    let prompt_ids =
+        match encode_user_prompt(tok, prompt, router.geometry.prompt_len) {
+            Ok(ids) => ids,
+            Err(e) => return (400, err_json(&format!("{e:#}"))),
+        };
+    let tau_conf = req.get("tau_conf").and_then(Json::as_f64).map(|f| f as f32);
+    let rx = match router.submit(GenerateRequest {
+        backbone,
+        method,
+        prompt_ids,
+        tau_conf,
+    }) {
+        Ok(rx) => rx,
+        Err(e) => return (429, err_json(&format!("{e:#}"))),
+    };
+    match rx.recv() {
+        Ok(Ok(resp)) => {
+            let final_answer = workload::extract_final(&resp.text)
+                .map(Json::str)
+                .unwrap_or(Json::Null);
+            let j = Json::obj(vec![
+                ("text", Json::str(resp.text.clone())),
+                ("final", final_answer),
+                ("steps", Json::num(resp.steps as f64)),
+                ("model_calls", Json::num(resp.model_calls as f64)),
+                ("gen_len", Json::num(resp.gen_len as f64)),
+                ("latency_ms", Json::num(resp.latency.as_secs_f64() * 1e3)),
+                ("method", Json::str(method.name())),
+            ]);
+            (200, j.to_string())
+        }
+        Ok(Err(e)) => (500, err_json(&e)),
+        Err(_) => (500, err_json("worker dropped the request")),
+    }
+}
+
+/// Serve until the process is killed.
+pub fn serve(router: Router, cfg: ServerConfig) -> Result<()> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    eprintln!("[cdlm] serving on http://{}", listener.local_addr()?);
+    let router = Arc::new(router);
+    // bounded connection-handler pool (decode concurrency is separately
+    // bounded by the router worker + batcher)
+    let pool = crate::util::threadpool::ThreadPool::new(8);
+    for stream in listener.incoming() {
+        let Ok(mut stream) = stream else { continue };
+        let router = router.clone();
+        let backbone = cfg.default_backbone.clone();
+        pool.execute(move || {
+            let tok = Tokenizer::new();
+            let (method, path, body) = match read_request(&mut stream) {
+                Ok(r) => r,
+                Err(_) => return,
+            };
+            let (status, body) = match (method.as_str(), path.as_str()) {
+                ("POST", "/generate") => {
+                    handle_generate(&tok, &router, &backbone, &body)
+                }
+                ("GET", "/metrics") => match router.metrics() {
+                    Ok(j) => (200, j.to_string()),
+                    Err(e) => (500, err_json(&format!("{e:#}"))),
+                },
+                ("GET", "/healthz") => match router.health() {
+                    Ok(j) => (200, j.to_string()),
+                    Err(e) => (500, err_json(&format!("{e:#}"))),
+                },
+                _ => (404, err_json("not found")),
+            };
+            respond(&mut stream, status, &body);
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,5 @@
+//! Minimal HTTP front-end (std::net; no external HTTP stack offline).
+
+pub mod http;
+
+pub use http::serve;

@@ -1,0 +1,163 @@
+//! Toy character tokenizer — the rust mirror of `python/compile/vocab.py`.
+//!
+//! The table is compiled in (the vocab is part of the model contract),
+//! and `Tokenizer::verify_against` cross-checks it against
+//! `artifacts/vocab.json` at runtime-load time so the two languages can
+//! never silently drift.
+
+use std::collections::HashMap;
+
+use crate::util::json::Json;
+
+pub const PAD: i32 = 0;
+pub const MASK: i32 = 1;
+pub const BOS: i32 = 2;
+pub const EOS: i32 = 3;
+pub const VOCAB_SIZE: usize = 64;
+
+const SYMBOLS: &str = "+-*=;#:?(),.><[] ";
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    tok_to_id: HashMap<char, i32>,
+    id_to_tok: Vec<Option<char>>,
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tokenizer {
+    pub fn new() -> Self {
+        let mut tok_to_id = HashMap::new();
+        let mut id_to_tok = vec![None; VOCAB_SIZE];
+        let mut idx = 4i32;
+        let put = |ch: char, idx: &mut i32, t: &mut HashMap<char, i32>,
+                       i: &mut Vec<Option<char>>| {
+            t.insert(ch, *idx);
+            i[*idx as usize] = Some(ch);
+            *idx += 1;
+        };
+        for ch in "0123456789".chars() {
+            put(ch, &mut idx, &mut tok_to_id, &mut id_to_tok);
+        }
+        for o in 0..26u8 {
+            put((b'a' + o) as char, &mut idx, &mut tok_to_id, &mut id_to_tok);
+        }
+        for ch in SYMBOLS.chars() {
+            put(ch, &mut idx, &mut tok_to_id, &mut id_to_tok);
+        }
+        assert!(idx as usize <= VOCAB_SIZE);
+        Self { tok_to_id, id_to_tok }
+    }
+
+    pub fn encode(&self, text: &str) -> anyhow::Result<Vec<i32>> {
+        text.chars()
+            .map(|c| {
+                self.tok_to_id
+                    .get(&c)
+                    .copied()
+                    .ok_or_else(|| anyhow::anyhow!("unknown character {c:?}"))
+            })
+            .collect()
+    }
+
+    /// Decode ids, dropping specials; stops at the first `<eos>` when
+    /// `stop_at_eos` (paper §A.3 generation-length accounting).
+    pub fn decode(&self, ids: &[i32], stop_at_eos: bool) -> String {
+        let mut out = String::new();
+        for &i in ids {
+            if i == EOS && stop_at_eos {
+                break;
+            }
+            if (0..=3).contains(&i) {
+                continue;
+            }
+            if let Some(Some(c)) = self.id_to_tok.get(i as usize) {
+                out.push(*c);
+            } else {
+                out.push('?');
+            }
+        }
+        out
+    }
+
+    /// Cross-check against the python-exported vocab.json.
+    pub fn verify_against(&self, vocab_json: &Json) -> anyhow::Result<()> {
+        let size = vocab_json.req("vocab_size")?.as_usize().unwrap_or(0);
+        anyhow::ensure!(size == VOCAB_SIZE, "vocab size mismatch: {size}");
+        for (k, v) in ["pad", "mask", "bos", "eos"].iter().zip([PAD, MASK, BOS, EOS]) {
+            let got = vocab_json.req(k)?.as_i64().unwrap_or(-1) as i32;
+            anyhow::ensure!(got == v, "{k} mismatch: {got} != {v}");
+        }
+        let map = vocab_json.req("id_to_tok")?.as_obj()
+            .ok_or_else(|| anyhow::anyhow!("id_to_tok not an object"))?;
+        for (id_str, tok) in map {
+            let id: usize = id_str.parse()?;
+            let t = tok.as_str().unwrap_or("");
+            if t.starts_with('<') {
+                continue; // specials already checked
+            }
+            let ch = t.chars().next().unwrap();
+            anyhow::ensure!(
+                self.id_to_tok.get(id) == Some(&Some(ch)),
+                "token id {id} maps to {:?}, python says {ch:?}",
+                self.id_to_tok.get(id)
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = Tokenizer::new();
+        let s = "q:3*4+5=?a:3*4=12;12+5=17;#17;";
+        let ids = t.encode(s).unwrap();
+        assert_eq!(t.decode(&ids, true), s);
+    }
+
+    #[test]
+    fn specials_fixed() {
+        assert_eq!((PAD, MASK, BOS, EOS), (0, 1, 2, 3));
+    }
+
+    #[test]
+    fn digit_ids_match_python_layout() {
+        let t = Tokenizer::new();
+        // python: digits start at id 4
+        assert_eq!(t.encode("0").unwrap(), vec![4]);
+        assert_eq!(t.encode("9").unwrap(), vec![13]);
+        assert_eq!(t.encode("a").unwrap(), vec![14]);
+        assert_eq!(t.encode("z").unwrap(), vec![39]);
+        assert_eq!(t.encode("+").unwrap(), vec![40]);
+    }
+
+    #[test]
+    fn decode_stops_at_eos() {
+        let t = Tokenizer::new();
+        let mut ids = t.encode("#17").unwrap();
+        ids.push(EOS);
+        ids.extend(t.encode("junk").unwrap());
+        assert_eq!(t.decode(&ids, true), "#17");
+        assert_eq!(t.decode(&ids, false), "#17junk");
+    }
+
+    #[test]
+    fn unknown_char_errors() {
+        assert!(Tokenizer::new().encode("A").is_err());
+    }
+
+    #[test]
+    fn decode_skips_mask_and_pad() {
+        let t = Tokenizer::new();
+        let ids = vec![PAD, BOS, 14, MASK, 15];
+        assert_eq!(t.decode(&ids, true), "ab");
+    }
+}

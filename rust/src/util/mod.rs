@@ -1,0 +1,12 @@
+//! std-only infrastructure: JSON, RNG, CLI, stats, property testing.
+//!
+//! The offline registry only carries the `xla` crate closure, so the
+//! usual suspects (serde, clap, rand, criterion, proptest) are replaced
+//! by these small, fully-tested modules.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

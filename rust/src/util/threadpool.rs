@@ -1,0 +1,106 @@
+//! Bounded thread pool for connection handling (the HTTP front-end must
+//! not spawn unboundedly under load; decode concurrency is separately
+//! bounded by the router's single worker + batcher).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> ThreadPool {
+        assert!(size > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("cdlm-http-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => return, // sender dropped: shutdown
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers }
+    }
+
+    /// Queue a job; blocks never (unbounded queue, bounded parallelism).
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("workers gone");
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel; workers drain + exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(3);
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..50 {
+            let c = count.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(count.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn parallelism_is_bounded_but_present() {
+        let pool = ThreadPool::new(2);
+        let active = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        for _ in 0..8 {
+            let a = active.clone();
+            let p = peak.clone();
+            pool.execute(move || {
+                let now = a.fetch_add(1, Ordering::SeqCst) + 1;
+                p.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(Duration::from_millis(10));
+                a.fetch_sub(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool);
+        let peak = peak.load(Ordering::SeqCst);
+        assert!(peak <= 2, "exceeded pool size: {peak}");
+        assert!(peak >= 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_size_panics() {
+        let _ = ThreadPool::new(0);
+    }
+}

@@ -1,0 +1,125 @@
+//! Loader for the python-exported eval sets (`artifacts/eval/*.json`).
+//!
+//! Benches normally regenerate prompts through the mirrored generators;
+//! this loader provides the byte-identical exported sets and doubles as
+//! a third cross-language pin (generator mirror == exported file).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::{self, Json};
+
+#[derive(Debug, Clone)]
+pub struct EvalSet {
+    pub family: String,
+    pub paper_analogue: String,
+    pub num_shots: usize,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    pub prompts: Vec<Vec<i32>>,       // [n][P] token ids, left-padded
+    pub ref_answers: Vec<Vec<i32>>,   // [n][Lg]
+    pub finals: Vec<String>,
+}
+
+impl EvalSet {
+    pub fn load(artifacts: &Path, family: &str) -> Result<EvalSet> {
+        let j = json::load(&artifacts.join("eval").join(format!("{family}.json")))?;
+        let rows = |key: &str| -> Result<Vec<Vec<i32>>> {
+            Ok(j.req(key)?
+                .as_arr()
+                .unwrap_or_default()
+                .iter()
+                .filter_map(Json::as_i32_vec)
+                .collect())
+        };
+        let set = EvalSet {
+            family: j.req("family")?.as_str().unwrap_or("").to_string(),
+            paper_analogue: j
+                .req("paper_analogue")?
+                .as_str()
+                .unwrap_or("")
+                .to_string(),
+            num_shots: j.req("num_shots")?.as_usize().unwrap_or(0),
+            prompt_len: j.req("prompt_len")?.as_usize().unwrap_or(0),
+            gen_len: j.req("gen_len")?.as_usize().unwrap_or(0),
+            prompts: rows("prompts")?,
+            ref_answers: rows("ref_answers")?,
+            finals: j
+                .req("finals")?
+                .as_arr()
+                .unwrap_or_default()
+                .iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect(),
+        };
+        anyhow::ensure!(
+            set.prompts.len() == set.finals.len()
+                && set.prompts.len() == set.ref_answers.len(),
+            "eval set {family}: ragged arrays"
+        );
+        anyhow::ensure!(
+            set.prompts.iter().all(|p| p.len() == set.prompt_len),
+            "eval set {family}: prompt length mismatch"
+        );
+        Ok(set)
+    }
+
+    pub fn len(&self) -> usize {
+        self.prompts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prompts.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::Tokenizer;
+    use crate::workload;
+
+    #[test]
+    fn exported_sets_match_mirrored_generators() {
+        let dir = crate::artifacts_dir();
+        if !dir.join("eval").join("chain-arith.json").exists() {
+            eprintln!("skipping: no eval sets");
+            return;
+        }
+        let tok = Tokenizer::new();
+        for fam in workload::FAMILIES {
+            let set = EvalSet::load(&dir, fam.name()).unwrap();
+            assert!(!set.is_empty());
+            // regenerate with the same seed the exporter used
+            let samples = workload::generate(fam, set.len(), 0xE7A1);
+            for (i, s) in samples.iter().enumerate() {
+                assert_eq!(set.finals[i], s.final_answer, "{} row {i}",
+                           fam.name());
+                let enc = workload::encode_example(
+                    &tok, fam, s, set.prompt_len, set.gen_len,
+                )
+                .unwrap();
+                assert_eq!(
+                    set.prompts[i], enc.prompt_ids,
+                    "{} row {i}: prompt ids drift",
+                    fam.name()
+                );
+                assert_eq!(
+                    set.ref_answers[i], enc.ref_answer_ids,
+                    "{} row {i}: answer ids drift",
+                    fam.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn missing_family_errors() {
+        let dir = crate::artifacts_dir();
+        if !dir.join("eval").exists() {
+            return;
+        }
+        assert!(EvalSet::load(&dir, "no-such-family").is_err());
+    }
+}

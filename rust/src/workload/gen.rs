@@ -1,0 +1,247 @@
+//! Task generators. Mirrors `python/compile/tasks.py` draw-for-draw.
+
+use crate::util::rng::SplitMix64;
+
+pub const FAMILIES: [Family; 4] = [
+    Family::ChainArith,
+    Family::DeepArith,
+    Family::StrTransform,
+    Family::ListOp,
+];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    ChainArith,
+    DeepArith,
+    StrTransform,
+    ListOp,
+}
+
+impl Family {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::ChainArith => "chain-arith",
+            Family::DeepArith => "deep-arith",
+            Family::StrTransform => "str-transform",
+            Family::ListOp => "list-op",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Family> {
+        FAMILIES.iter().copied().find(|f| f.name() == s)
+    }
+
+    fn seed_xor(&self) -> u64 {
+        match self {
+            Family::ChainArith => 0x11AA,
+            Family::DeepArith => 0x22BB,
+            Family::StrTransform => 0x33CC,
+            Family::ListOp => 0x44DD,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Sample {
+    pub prompt: String,
+    pub answer: String,
+    pub final_answer: String,
+}
+
+const WORDS: [&str; 20] = [
+    "cat", "dog", "sun", "map", "key", "box", "fig", "hat", "ink", "jar",
+    "kit", "log", "mud", "net", "oak", "pie", "rug", "saw", "tin", "urn",
+];
+
+fn gen_chain_arith(rng: &mut SplitMix64) -> Sample {
+    let a = rng.below(5) + 1;
+    let b = rng.below(5) + 1;
+    let c = rng.below(9) + 1;
+    if rng.below(2) == 0 {
+        let p = a * b;
+        let r = p + c;
+        Sample {
+            prompt: format!("q:{a}*{b}+{c}=?"),
+            answer: format!("{a}*{b}={p};{p}+{c}={r};#{r}"),
+            final_answer: r.to_string(),
+        }
+    } else {
+        let b2 = rng.below(5) + 1;
+        let c2 = rng.below(5) + 1;
+        let p = b2 * c2;
+        let r = a + p;
+        Sample {
+            prompt: format!("q:{a}+{b2}*{c2}=?"),
+            answer: format!("{b2}*{c2}={p};{a}+{p}={r};#{r}"),
+            final_answer: r.to_string(),
+        }
+    }
+}
+
+fn gen_deep_arith(rng: &mut SplitMix64) -> Sample {
+    let a = rng.below(6) + 1;
+    let b = rng.below(6) + 1;
+    let c = rng.below(3) + 2;
+    let s1 = a + b;
+    let s2 = s1 * c;
+    let d = rng.below(s2.min(9)) + 1;
+    let s3 = s2 - d;
+    Sample {
+        prompt: format!("q:(({a}+{b})*{c}-{d})=?"),
+        answer: format!("{a}+{b}={s1};{s1}*{c}={s2};{s2}-{d}={s3};#{s3}"),
+        final_answer: s3.to_string(),
+    }
+}
+
+fn gen_str_transform(rng: &mut SplitMix64) -> Sample {
+    let w = format!(
+        "{}{}",
+        WORDS[rng.index(WORDS.len())],
+        (b'a' + rng.below(26) as u8) as char
+    );
+    if rng.below(2) == 0 {
+        let out: String = w.chars().rev().collect();
+        Sample {
+            prompt: format!("q:rev({w})=?"),
+            answer: format!("#{out}"),
+            final_answer: out,
+        }
+    } else {
+        let out = format!("{w}{w}");
+        Sample {
+            prompt: format!("q:dup({w})=?"),
+            answer: format!("#{out}"),
+            final_answer: out,
+        }
+    }
+}
+
+fn gen_list_op(rng: &mut SplitMix64) -> Sample {
+    let digits: Vec<u64> = (0..5).map(|_| rng.below(10)).collect();
+    let s: String = digits.iter().map(|d| d.to_string()).collect();
+    match rng.below(3) {
+        0 => {
+            let mut ds = digits.clone();
+            ds.sort_unstable();
+            let out: String = ds.iter().map(|d| d.to_string()).collect();
+            Sample {
+                prompt: format!("q:sort({s})=?"),
+                answer: format!("#{out}"),
+                final_answer: out,
+            }
+        }
+        1 => {
+            let out = digits.iter().max().unwrap().to_string();
+            Sample {
+                prompt: format!("q:max({s})=?"),
+                answer: format!("#{out}"),
+                final_answer: out,
+            }
+        }
+        _ => {
+            let out = digits.iter().min().unwrap().to_string();
+            Sample {
+                prompt: format!("q:min({s})=?"),
+                answer: format!("#{out}"),
+                final_answer: out,
+            }
+        }
+    }
+}
+
+pub fn generate(family: Family, n: usize, seed: u64) -> Vec<Sample> {
+    let mut rng = SplitMix64::new(seed ^ family.seed_xor());
+    (0..n)
+        .map(|_| match family {
+            Family::ChainArith => gen_chain_arith(&mut rng),
+            Family::DeepArith => gen_deep_arith(&mut rng),
+            Family::StrTransform => gen_str_transform(&mut rng),
+            Family::ListOp => gen_list_op(&mut rng),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn deterministic() {
+        for fam in FAMILIES {
+            assert_eq!(generate(fam, 8, 7), generate(fam, 8, 7));
+        }
+    }
+
+    #[test]
+    fn chain_arith_cot_is_valid() {
+        for s in generate(Family::ChainArith, 64, 3) {
+            assert_eq!(
+                s.answer.rsplit('#').next().unwrap(),
+                s.final_answer
+            );
+        }
+    }
+
+    #[test]
+    fn str_transform_semantics() {
+        for s in generate(Family::StrTransform, 64, 11) {
+            let arg: String = s
+                .prompt
+                .split('(')
+                .nth(1)
+                .unwrap()
+                .trim_end_matches(")=?")
+                .to_string();
+            if s.prompt.starts_with("q:rev") {
+                assert_eq!(s.final_answer, arg.chars().rev().collect::<String>());
+            } else {
+                assert_eq!(s.final_answer, format!("{arg}{arg}"));
+            }
+        }
+    }
+
+    #[test]
+    fn list_op_semantics_property() {
+        check("list-op-correct", 30, |r| {
+            let seed = r.next_u64();
+            generate(Family::ListOp, 4, seed).iter().all(|s| {
+                let arg: String = s
+                    .prompt
+                    .split('(')
+                    .nth(1)
+                    .unwrap()
+                    .trim_end_matches(")=?")
+                    .to_string();
+                let mut cs: Vec<char> = arg.chars().collect();
+                if s.prompt.contains("sort") {
+                    cs.sort_unstable();
+                    s.final_answer == cs.iter().collect::<String>()
+                } else if s.prompt.contains("max") {
+                    s.final_answer
+                        == cs.iter().max().unwrap().to_string()
+                } else {
+                    s.final_answer
+                        == cs.iter().min().unwrap().to_string()
+                }
+            })
+        });
+    }
+
+    #[test]
+    fn family_names_roundtrip() {
+        for f in FAMILIES {
+            assert_eq!(Family::from_name(f.name()), Some(f));
+        }
+        assert_eq!(Family::from_name("nope"), None);
+    }
+
+    #[test]
+    fn deep_arith_stays_nonnegative() {
+        check("deep-arith-nonneg", 50, |r| {
+            generate(Family::DeepArith, 4, r.next_u64())
+                .iter()
+                .all(|s| s.final_answer.parse::<i64>().unwrap() >= 0)
+        });
+    }
+}

@@ -1,0 +1,29 @@
+//! Synthetic benchmark workloads — the rust mirror of
+//! `python/compile/tasks.py`.
+//!
+//! Generators must be byte-identical with python (same SplitMix64 draws
+//! in the same order); `artifacts/golden/tasks.json` pins parity in the
+//! integration tests. See DESIGN.md §2 for the paper-benchmark mapping:
+//! chain-arith↔GSM8K-CoT, deep-arith↔MATH, str-transform↔HumanEval,
+//! list-op↔MBPP.
+
+mod eval_set;
+mod gen;
+mod prompt;
+mod score;
+
+pub use eval_set::EvalSet;
+pub use gen::{generate, Family, Sample, FAMILIES};
+pub use prompt::{encode_example, few_shot_examples, num_shots, EncodedSample};
+pub use score::{extract_final, score};
+
+impl Family {
+    pub fn paper_analogue(&self) -> &'static str {
+        match self {
+            Family::ChainArith => "GSM8K-CoT",
+            Family::DeepArith => "MATH",
+            Family::StrTransform => "HumanEval",
+            Family::ListOp => "MBPP",
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! Few-shot prompt assembly + fixed-geometry encoding.
+//! Mirrors `tasks.build_prompt_text` / `tasks.encode_example`.
+
+use super::gen::{generate, Family, Sample};
+use crate::tokenizer::{Tokenizer, BOS, EOS, PAD};
+
+/// Few-shot protocol (paper: few-shot math, 0-shot coding).
+pub fn num_shots(family: Family) -> usize {
+    match family {
+        Family::ChainArith | Family::DeepArith => 1,
+        Family::StrTransform | Family::ListOp => 0,
+    }
+}
+
+/// Fixed shots per family, disjoint from eval seeds (python seed 0xF00D).
+pub fn few_shot_examples(family: Family) -> Vec<Sample> {
+    let k = num_shots(family);
+    if k == 0 {
+        vec![]
+    } else {
+        generate(family, k, 0xF00D)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EncodedSample {
+    pub prompt_ids: Vec<i32>,  // left-padded to prompt_len
+    pub ref_answer_ids: Vec<i32>,
+    pub sample: Sample,
+}
+
+fn build_prompt_text(sample: &Sample, shots: &[Sample]) -> String {
+    let mut s = String::new();
+    for sh in shots {
+        s.push_str(&format!("{}a:{};", sh.prompt, sh.answer));
+    }
+    s.push_str(&format!("{}a:", sample.prompt));
+    s
+}
+
+/// Tokenize a sample to the fixed geometry: `[<pad>…, <bos>, prompt]` and
+/// `[answer…, <eos>, <pad>…]`.
+pub fn encode_example(
+    tok: &Tokenizer,
+    family: Family,
+    sample: &Sample,
+    prompt_len: usize,
+    gen_len: usize,
+) -> anyhow::Result<EncodedSample> {
+    let shots = few_shot_examples(family);
+    let ptext = build_prompt_text(sample, &shots);
+    let mut pids = vec![BOS];
+    pids.extend(tok.encode(&ptext)?);
+    anyhow::ensure!(
+        pids.len() <= prompt_len,
+        "prompt too long ({} > {prompt_len}): {ptext:?}",
+        pids.len()
+    );
+    let mut prompt_ids = vec![PAD; prompt_len - pids.len()];
+    prompt_ids.extend(pids);
+
+    let mut aids = tok.encode(&format!("{};", sample.answer))?;
+    aids.push(EOS);
+    anyhow::ensure!(
+        aids.len() <= gen_len,
+        "answer too long ({} > {gen_len})",
+        aids.len()
+    );
+    // EOS-padded tail (mirrors python: every position supervised)
+    aids.resize(gen_len, EOS);
+    Ok(EncodedSample { prompt_ids, ref_answer_ids: aids, sample: sample.clone() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encoding_geometry() {
+        let tok = Tokenizer::new();
+        let s = generate(Family::ListOp, 1, 1)[0].clone();
+        let e = encode_example(&tok, Family::ListOp, &s, 64, 32).unwrap();
+        assert_eq!(e.prompt_ids.len(), 64);
+        assert_eq!(e.ref_answer_ids.len(), 32);
+        assert!(e.ref_answer_ids.contains(&EOS));
+    }
+
+    #[test]
+    fn left_padding_then_bos() {
+        let tok = Tokenizer::new();
+        let s = generate(Family::ListOp, 1, 1)[0].clone();
+        let e = encode_example(&tok, Family::ListOp, &s, 64, 32).unwrap();
+        let first = e.prompt_ids.iter().position(|&t| t != PAD).unwrap();
+        assert_eq!(e.prompt_ids[first], BOS);
+        assert!(e.prompt_ids[..first].iter().all(|&t| t == PAD));
+    }
+
+    #[test]
+    fn few_shot_counts_match_protocol() {
+        assert_eq!(few_shot_examples(Family::ChainArith).len(), 1);
+        assert_eq!(few_shot_examples(Family::StrTransform).len(), 0);
+    }
+
+    #[test]
+    fn shots_are_stable() {
+        assert_eq!(
+            few_shot_examples(Family::ChainArith),
+            few_shot_examples(Family::ChainArith)
+        );
+    }
+
+    #[test]
+    fn one_shot_prompt_contains_shot_answer() {
+        let tok = Tokenizer::new();
+        let s = generate(Family::ChainArith, 1, 2)[0].clone();
+        let e = encode_example(&tok, Family::ChainArith, &s, 64, 32).unwrap();
+        let text = tok.decode(&e.prompt_ids, false);
+        assert!(text.contains('#'), "shot CoT must appear: {text}");
+        assert!(text.ends_with("a:"));
+    }
+
+    #[test]
+    fn all_eval_samples_fit() {
+        let tok = Tokenizer::new();
+        for fam in super::super::FAMILIES {
+            for s in generate(fam, 128, 0xE7A1) {
+                encode_example(&tok, fam, &s, 64, 32).unwrap();
+            }
+        }
+    }
+}

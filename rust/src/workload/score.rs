@@ -1,0 +1,51 @@
+//! Scoring: the lm-eval-harness-style protocol (paper §A.3) —
+//! truncate at stop sequences, extract the final answer after the last
+//! '#', exact-match against the reference. Mirrors `tasks.extract_final`
+//! / `tasks.score`.
+
+use super::gen::Sample;
+
+/// Text after the last '#', truncated at ';'. None if no '#' was emitted.
+pub fn extract_final(text: &str) -> Option<&str> {
+    let tail = text.rsplit_once('#')?.1;
+    Some(tail.split(';').next().unwrap_or(tail))
+}
+
+pub fn score(generated_text: &str, sample: &Sample) -> bool {
+    extract_final(generated_text) == Some(sample.final_answer.as_str())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(final_answer: &str) -> Sample {
+        Sample {
+            prompt: "q".into(),
+            answer: "a".into(),
+            final_answer: final_answer.into(),
+        }
+    }
+
+    #[test]
+    fn extracts_after_last_hash() {
+        assert_eq!(extract_final("3*4=12;#17;"), Some("17"));
+        assert_eq!(extract_final("#1;x#2;"), Some("2"));
+        assert_eq!(extract_final("no hash"), None);
+        assert_eq!(extract_final("#tail-no-semicolon"), Some("tail-no-semicolon"));
+    }
+
+    #[test]
+    fn scoring() {
+        assert!(score("cot;#17;", &sample("17")));
+        assert!(!score("cot;#18;", &sample("17")));
+        assert!(!score("17", &sample("17")));
+        assert!(score("x#17;trailing", &sample("17")));
+    }
+
+    #[test]
+    fn empty_final() {
+        assert_eq!(extract_final("#;"), Some(""));
+        assert!(!score("#;", &sample("17")));
+    }
+}

@@ -1,0 +1,325 @@
+//! Integration tests over the full runtime (require `make artifacts`;
+//! they skip gracefully when artifacts are missing so plain
+//! `cargo test` still works on a fresh checkout).
+//!
+//! The load-bearing ones:
+//!  * decode parity: rust engines reproduce the python reference
+//!    decoders token-for-token (golden/decode_parity.json);
+//!  * approx-cache anchor: dLLM-Cache with refresh_every=1 equals the
+//!    vanilla top-1 decode (a fully-refreshed approximate cache is
+//!    exact);
+//!  * golden parity for the tokenizer and task generators.
+
+use cdlm::coordinator::methods::cached_teacher::{self, Variant};
+use cdlm::coordinator::{
+    DecodeOpts, GroupKey, KvPool, Method, ServingCore,
+};
+use cdlm::runtime::Programs;
+use cdlm::tokenizer::{Tokenizer, EOS};
+use cdlm::util::json::{self, Json};
+use cdlm::workload::{self, Family};
+
+fn core() -> Option<ServingCore> {
+    if !cdlm::artifacts_available() {
+        eprintln!("skipping integration test: no artifacts");
+        return None;
+    }
+    Some(ServingCore::load(&cdlm::artifacts_dir(), 16).expect("core loads"))
+}
+
+fn golden(name: &str) -> Option<Json> {
+    let p = cdlm::artifacts_dir().join("golden").join(name);
+    p.exists().then(|| json::load(&p).expect("golden parses"))
+}
+
+#[test]
+fn tokenizer_golden_parity() {
+    let Some(g) = golden("tokenizer.json") else { return };
+    let tok = Tokenizer::new();
+    for case in g.req("cases").unwrap().as_arr().unwrap() {
+        let text = case.get("text").unwrap().as_str().unwrap();
+        let ids = case.get("ids").unwrap().as_i32_vec().unwrap();
+        assert_eq!(tok.encode(text).unwrap(), ids, "python/rust drift: {text}");
+    }
+}
+
+#[test]
+fn task_generator_golden_parity() {
+    let Some(g) = golden("tasks.json") else { return };
+    for fam in workload::FAMILIES {
+        let pinned = g.req(fam.name()).unwrap().as_arr().unwrap();
+        let ours = workload::generate(fam, pinned.len(), 0xBEEF);
+        for (p, o) in pinned.iter().zip(&ours) {
+            assert_eq!(p.get("prompt").unwrap().as_str().unwrap(), o.prompt);
+            assert_eq!(p.get("answer").unwrap().as_str().unwrap(), o.answer);
+            assert_eq!(
+                p.get("final").unwrap().as_str().unwrap(),
+                o.final_answer
+            );
+        }
+    }
+}
+
+fn parity_prompts(fix: &Json) -> Vec<Vec<i32>> {
+    fix.req("prompts")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|p| p.as_i32_vec().unwrap())
+        .collect()
+}
+
+#[test]
+fn vanilla_decode_matches_python_reference() {
+    let Some(mut core) = core() else { return };
+    let Some(fix) = golden("decode_parity.json") else { return };
+    let prompts = parity_prompts(&fix);
+    let opts = DecodeOpts::defaults(&core.rt.manifest.geometry.clone());
+    let key = GroupKey { backbone: "dream".into(), method: Method::Vanilla };
+    let outs = core.decode_group(&key, &prompts, &opts).unwrap();
+    let want_ids = fix.req("vanilla_ids").unwrap().as_arr().unwrap();
+    let want_steps = fix.req("vanilla_steps").unwrap().as_i32_vec().unwrap();
+    for (r, o) in outs.iter().enumerate() {
+        assert_eq!(
+            o.gen,
+            want_ids[r].as_i32_vec().unwrap(),
+            "vanilla decode diverged from python reference at row {r}"
+        );
+        assert_eq!(o.steps as i32, want_steps[r]);
+    }
+}
+
+#[test]
+fn cdlm_decode_matches_python_reference() {
+    let Some(mut core) = core() else { return };
+    let Some(fix) = golden("decode_parity.json") else { return };
+    let prompts = parity_prompts(&fix);
+    let opts = DecodeOpts::defaults(&core.rt.manifest.geometry.clone());
+    let key = GroupKey { backbone: "dream".into(), method: Method::Cdlm };
+    let outs = core.decode_group(&key, &prompts, &opts).unwrap();
+    let want_ids = fix.req("cdlm_ids").unwrap().as_arr().unwrap();
+    let want_steps = fix.req("cdlm_steps").unwrap().as_i32_vec().unwrap();
+    for (r, o) in outs.iter().enumerate() {
+        assert_eq!(
+            o.gen,
+            want_ids[r].as_i32_vec().unwrap(),
+            "CDLM decode diverged from python reference at row {r}"
+        );
+        assert_eq!(o.steps as i32, want_steps[r], "step count drift row {r}");
+    }
+}
+
+#[test]
+fn ar_decode_matches_python_reference() {
+    let Some(mut core) = core() else { return };
+    let Some(fix) = golden("decode_parity.json") else { return };
+    let prompts = parity_prompts(&fix);
+    let opts = DecodeOpts::defaults(&core.rt.manifest.geometry.clone());
+    let key = GroupKey { backbone: "dream".into(), method: Method::Ar };
+    let outs = core.decode_group(&key, &prompts, &opts).unwrap();
+    let want_ids = fix.req("ar_ids").unwrap().as_arr().unwrap();
+    for (r, o) in outs.iter().enumerate() {
+        let want = want_ids[r].as_i32_vec().unwrap();
+        // python pads the tail with <pad>, rust leaves <mask>; compare
+        // through the first <eos> (the generated content)
+        let end = want
+            .iter()
+            .position(|&t| t == EOS)
+            .map(|i| i + 1)
+            .unwrap_or(want.len());
+        assert_eq!(&o.gen[..end], &want[..end], "AR diverged at row {r}");
+    }
+}
+
+#[test]
+fn dllm_cache_with_refresh_every_step_equals_vanilla() {
+    let Some(mut core) = core() else { return };
+    let samples = workload::generate(Family::ListOp, 2, 7);
+    let geom = core.rt.manifest.geometry.clone();
+    let prompts: Vec<Vec<i32>> = samples
+        .iter()
+        .map(|s| {
+            workload::encode_example(
+                &core.tokenizer,
+                Family::ListOp,
+                s,
+                geom.prompt_len,
+                geom.gen_len,
+            )
+            .unwrap()
+            .prompt_ids
+        })
+        .collect();
+    let mut opts = DecodeOpts::defaults(&geom);
+    opts.refresh_every = 1; // fully refreshed approx cache == exact
+    let vanilla = core
+        .decode_group(
+            &GroupKey { backbone: "dream".into(), method: Method::Vanilla },
+            &prompts,
+            &opts,
+        )
+        .unwrap();
+    let cached = core
+        .decode_group(
+            &GroupKey { backbone: "dream".into(), method: Method::DllmCache },
+            &prompts,
+            &opts,
+        )
+        .unwrap();
+    for (v, c) in vanilla.iter().zip(&cached) {
+        assert_eq!(v.gen, c.gen, "refresh_every=1 must reproduce vanilla");
+    }
+}
+
+#[test]
+fn batched_equals_sequential_cdlm() {
+    let Some(mut core) = core() else { return };
+    let geom = core.rt.manifest.geometry.clone();
+    let samples = workload::generate(Family::ListOp, 2, 21);
+    let prompts: Vec<Vec<i32>> = samples
+        .iter()
+        .map(|s| {
+            workload::encode_example(
+                &core.tokenizer,
+                Family::ListOp,
+                s,
+                geom.prompt_len,
+                geom.gen_len,
+            )
+            .unwrap()
+            .prompt_ids
+        })
+        .collect();
+    let opts = DecodeOpts::defaults(&geom);
+    let key = GroupKey { backbone: "dream".into(), method: Method::Cdlm };
+    let batched = core.decode_group(&key, &prompts, &opts).unwrap();
+    let solo0 = core.decode_group(&key, &prompts[..1], &opts).unwrap();
+    let solo1 = core.decode_group(&key, &prompts[1..], &opts).unwrap();
+    assert_eq!(batched[0].gen, solo0[0].gen, "lane 0 batch!=solo");
+    assert_eq!(batched[1].gen, solo1[0].gen, "lane 1 batch!=solo");
+}
+
+#[test]
+fn early_stop_never_decodes_past_eos_block() {
+    let Some(mut core) = core() else { return };
+    let geom = core.rt.manifest.geometry.clone();
+    let samples = workload::generate(Family::ListOp, 4, 33);
+    let prompts: Vec<Vec<i32>> = samples
+        .iter()
+        .map(|s| {
+            workload::encode_example(
+                &core.tokenizer,
+                Family::ListOp,
+                s,
+                geom.prompt_len,
+                geom.gen_len,
+            )
+            .unwrap()
+            .prompt_ids
+        })
+        .collect();
+    let opts = DecodeOpts::defaults(&geom);
+    let key = GroupKey { backbone: "dream".into(), method: Method::Cdlm };
+    let outs = core.decode_group(&key, &prompts, &opts).unwrap();
+    for o in outs {
+        if let Some(eos_at) = o.gen.iter().position(|&t| t == EOS) {
+            let blk_end =
+                (eos_at / geom.block_size + 1) * geom.block_size;
+            // everything after the eos block must still be <mask>
+            for &t in &o.gen[blk_end..] {
+                assert_eq!(
+                    t,
+                    cdlm::tokenizer::MASK,
+                    "decoded past the early-stop boundary"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn kv_pool_is_balanced_after_decoding() {
+    let Some(mut core) = core() else { return };
+    let geom = core.rt.manifest.geometry.clone();
+    let prompts: Vec<Vec<i32>> = workload::generate(Family::ListOp, 3, 5)
+        .iter()
+        .map(|s| {
+            workload::encode_example(
+                &core.tokenizer,
+                Family::ListOp,
+                s,
+                geom.prompt_len,
+                geom.gen_len,
+            )
+            .unwrap()
+            .prompt_ids
+        })
+        .collect();
+    let opts = DecodeOpts::defaults(&geom);
+    for m in [Method::Cdlm, Method::Ar, Method::FastDllmDc, Method::DllmCache]
+    {
+        let key = GroupKey { backbone: "dream".into(), method: m };
+        core.decode_group(&key, &prompts, &opts).unwrap();
+        assert_eq!(core.pool.in_use(), 0, "{} leaked KV slots", m.name());
+    }
+    assert!(core.pool.peak_in_use > 0);
+}
+
+#[test]
+fn dual_cache_decode_runs_and_respects_structure() {
+    let Some(mut core) = core() else { return };
+    let geom = core.rt.manifest.geometry.clone();
+    let prompts: Vec<Vec<i32>> = workload::generate(Family::ChainArith, 2, 9)
+        .iter()
+        .map(|s| {
+            workload::encode_example(
+                &core.tokenizer,
+                Family::ChainArith,
+                s,
+                geom.prompt_len,
+                geom.gen_len,
+            )
+            .unwrap()
+            .prompt_ids
+        })
+        .collect();
+    // exercise the engine directly for structural assertions
+    let weights =
+        cdlm::runtime::ModelWeights::load(&core.rt.manifest, "teacher_dream")
+            .unwrap();
+    let progs = Programs::new(&core.rt, &weights);
+    let mut pool = KvPool::new(&geom, 4);
+    let opts = DecodeOpts::defaults(&geom);
+    let outs = cached_teacher::decode(
+        &progs,
+        &geom,
+        &opts,
+        &prompts,
+        &mut pool,
+        Variant::DualCache,
+    )
+    .unwrap();
+    for o in &outs {
+        // thresholded parallel finalization: fewer steps than positions
+        assert!(o.steps <= geom.gen_len as u64);
+        assert!(o.steps >= geom.num_blocks() as u64);
+        // everything finalized (no early stop in the teacher baselines)
+        assert!(o.gen.iter().all(|&t| t != cdlm::tokenizer::MASK));
+    }
+    assert_eq!(pool.in_use(), 0);
+}
+
+#[test]
+fn fig8_sweep_blocks_have_programs() {
+    let Some(core) = core() else { return };
+    for &b in &core.rt.manifest.sweep_blocks.clone() {
+        assert!(
+            core.rt
+                .manifest
+                .find_program("student_block_step", 1, Some(b))
+                .is_some(),
+            "missing sweep program B={b}"
+        );
+    }
+}
