@@ -1,0 +1,34 @@
+# Repo-level build/CI entry points. `make ci` mirrors the CI workflow;
+# `make verify` mirrors the tier-1 gate exactly.
+
+CARGO ?= cargo
+
+.PHONY: ci verify fmt clippy build test smoke bench clean
+
+ci: fmt clippy build test smoke
+
+# Tier-1 verify (the regression gate), exactly as the roadmap states it.
+verify:
+	$(CARGO) build --release && $(CARGO) test -q
+
+fmt:
+	$(CARGO) fmt --all --check
+
+clippy:
+	$(CARGO) clippy --workspace --all-targets -- -D warnings
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+# Hermetic end-to-end smoke: eval two methods on the reference backend.
+smoke:
+	$(CARGO) run --release --bin cdlm -- eval --methods cdlm,ar --n 8
+
+bench:
+	$(CARGO) bench
+
+clean:
+	$(CARGO) clean

@@ -1,6 +1,8 @@
 //! Runtime microbenchmarks (the §Perf profile targets): per-program
-//! execute cost, literal-churn overhead, KV pool gather/commit cost —
-//! the numbers EXPERIMENTS.md §Perf tracks before/after optimization.
+//! execute cost and KV pool gather/commit cost — the backend-level
+//! numbers serving-latency regressions are diffed against. Runs on
+//! whichever backend the serving core loads (reference when no
+//! artifacts are present).
 //!
 //! Run: `cargo bench --bench microbench_runtime`
 
@@ -14,51 +16,21 @@ fn main() {
         return;
     };
     let g = core.rt.manifest.geometry.clone();
-    let mut weights =
+    let weights =
         cdlm::runtime::ModelWeights::load(&core.rt.manifest, "cdlm_dream")
             .expect("weights");
-
-    // ---- §Perf A/B: host-literal weights vs device-resident buffers
-    {
-        let bs = 1;
-        let (l, h, s, dh, b, p) = (
-            g.n_layers, g.n_heads, g.seq_len, g.d_head, g.block_size,
-            g.prompt_len,
-        );
-        let kc = TensorF32::zeros(&[l, bs, h, s, dh]).to_literal().unwrap();
-        let vc = TensorF32::zeros(&[l, bs, h, s, dh]).to_literal().unwrap();
-        let vf = TensorI32::from_vec(&[bs], vec![0; bs]);
-        let blk = TensorI32::from_vec(&[bs, b], vec![5; bs * b]);
-        let progs = Programs::new(&core.rt, &weights);
-        let before = stats::bench(3, 15, || {
-            progs
-                .student_block_step(bs, b, &kc, &vc, p as i32, &vf, &blk,
-                                    p as i32)
-                .unwrap();
-        });
-        weights.upload(&core.rt).expect("upload");
-        let progs = Programs::new(&core.rt, &weights);
-        let after = stats::bench(3, 15, || {
-            progs
-                .student_block_step(bs, b, &kc, &vc, p as i32, &vf, &blk,
-                                    p as i32)
-                .unwrap();
-        });
-        println!(
-            "§Perf weight residency (block_step bs=1): host-literals {:.2}ms -> device-buffers {:.2}ms ({:+.0}%)",
-            before.mean() * 1e3,
-            after.mean() * 1e3,
-            (after.mean() / before.mean() - 1.0) * 100.0
-        );
-    }
+    weights.upload(&core.rt).expect("upload");
     let progs = Programs::new(&core.rt, &weights);
     let (l, h, s, dh, b, p) =
         (g.n_layers, g.n_heads, g.seq_len, g.d_head, g.block_size, g.prompt_len);
 
-    println!("\n=== runtime microbench (per-call wall time) ===");
+    println!(
+        "\n=== runtime microbench (per-call wall time, backend: {}) ===",
+        core.rt.backend_name()
+    );
     for bs in core.rt.manifest.buckets.clone() {
-        let kc = TensorF32::zeros(&[l, bs, h, s, dh]).to_literal().unwrap();
-        let vc = TensorF32::zeros(&[l, bs, h, s, dh]).to_literal().unwrap();
+        let kc = TensorF32::zeros(&[l, bs, h, s, dh]);
+        let vc = TensorF32::zeros(&[l, bs, h, s, dh]);
         let vf = TensorI32::from_vec(&[bs], vec![0; bs]);
         let blk = TensorI32::from_vec(&[bs, b], vec![5; bs * b]);
         let ids = TensorI32::from_vec(&[bs, s], vec![5; bs * s]);
@@ -77,11 +49,11 @@ fn main() {
             progs.student_prefill(bs, &pids, &vf).unwrap();
         });
         println!(
-            "bs={bs}: block_step {:.2}ms  teacher_denoise {:.2}ms  prefill {:.2}ms  (denoise/block ratio {:.1}x)",
+            "bs={bs}: block_step {:.3}ms  teacher_denoise {:.3}ms  prefill {:.3}ms  (denoise/block ratio {:.1}x)",
             st.mean() * 1e3,
             td.mean() * 1e3,
             pf.mean() * 1e3,
-            td.mean() / st.mean()
+            td.mean() / st.mean().max(1e-12)
         );
     }
 
@@ -94,9 +66,9 @@ fn main() {
     let kb = vec![0.5f32; l * bs * h * b * dh];
     let mut kout = vec![0.0f32; l * bs * h * s * dh];
     let mut vout = kout.clone();
-    let ids4: Vec<_> = (0..1).map(|_| id).collect();
+    let ids1 = [id];
     let gather = stats::bench(5, 100, || {
-        pool.gather_batch(&ids4, bs, &mut kout, &mut vout);
+        pool.gather_batch(&ids1, bs, &mut kout, &mut vout);
     });
     println!(
         "kv gather (1 lane into bs=4 buffer): {:.1}us   bytes/slot: {}KiB",

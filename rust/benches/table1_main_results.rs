@@ -3,7 +3,7 @@
 //! Five methods x four benchmark families, reporting TPS / latency /
 //! steps / gen-length / score with speedups vs the naive DLM — the same
 //! grid as the paper (methods and protocol identical; backbone and
-//! hardware scaled per DESIGN.md §2).
+//! hardware scaled — see rust/README.md).
 //!
 //! Run: `cargo bench --bench table1_main_results`
 //! Env: CDLM_EVAL_N (prompts per cell, default 12), CDLM_BENCH_BS.

@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
         .find_program("ar_verify", 1, Some(geom.block_size))
         .is_none()
     {
-        anyhow::bail!("ar_verify program missing — re-run `make artifacts`");
+        anyhow::bail!("ar_verify program missing from the manifest");
     }
     let n = 6;
     let samples = workload::generate(Family::ChainArith, n, 0xA11CE);
@@ -52,8 +52,8 @@ fn main() -> anyhow::Result<()> {
     let ar_outs = core.decode_group(&ar_key, &prompts, &opts)?;
 
     // speculative: CDLM drafts + AR verifies
-    let mut draft_w = ModelWeights::load(&core.rt.manifest, "cdlm_dream")?;
-    let mut verify_w = ModelWeights::load(&core.rt.manifest, "ar_dream")?;
+    let draft_w = ModelWeights::load(&core.rt.manifest, "cdlm_dream")?;
+    let verify_w = ModelWeights::load(&core.rt.manifest, "ar_dream")?;
     draft_w.upload(&core.rt)?;
     verify_w.upload(&core.rt)?;
     let draft = Programs::new(&core.rt, &draft_w);

@@ -1,0 +1,88 @@
+//! HLO artifact smoke test: load one exported `student_block_step`
+//! program plus its weights npz, execute it through PJRT, and compare
+//! logits against the python-exported expectation.
+//!
+//! Only meaningful with the `pjrt` feature and an artifacts directory;
+//! in every other configuration it prints why and exits 0 so CI can
+//! invoke it unconditionally.
+
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!(
+        "hlo_smoke: built without the `pjrt` feature — no PJRT runtime to \
+         smoke-test; skipping (ok)"
+    );
+}
+
+#[cfg(feature = "pjrt")]
+fn main() -> anyhow::Result<()> {
+    use xla::FromRawBytes;
+
+    let dir = cdlm::artifacts_dir().join("smoke");
+    let hlo = dir.join("sbs_test.hlo.txt");
+    let npz = dir.join("sbs_weights.npz");
+    let expected_npy = dir.join("sbs_expected_logits.npy");
+    if !hlo.exists() || !npz.exists() {
+        eprintln!(
+            "hlo_smoke: no smoke artifacts under {} — run `make artifacts` \
+             first; skipping (ok)",
+            dir.display()
+        );
+        return Ok(());
+    }
+
+    let client = xla::PjRtClient::cpu()?;
+    let proto =
+        xla::HloModuleProto::from_text_file(hlo.to_str().expect("utf8 path"))?;
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+    let mut weights = xla::Literal::read_npz(&npz, &())?;
+    weights.sort_by(|a, b| a.0.cmp(&b.0));
+
+    let g = cdlm::runtime::Manifest::load_or_reference(&cdlm::artifacts_dir())?
+        .geometry;
+    let (l, bs, h, s, dh, b) =
+        (g.n_layers, 2usize, g.n_heads, g.seq_len, g.d_head, g.block_size);
+    let kc = xla::Literal::vec1(&vec![0f32; l * bs * h * s * dh]).reshape(&[
+        l as i64, bs as i64, h as i64, s as i64, dh as i64,
+    ])?;
+    let vc = xla::Literal::vec1(&vec![0f32; l * bs * h * s * dh]).reshape(&[
+        l as i64, bs as i64, h as i64, s as i64, dh as i64,
+    ])?;
+    let cl = xla::Literal::scalar(g.prompt_len as i32);
+    let vf = xla::Literal::vec1(&[10i32, 0i32]);
+    let blk = xla::Literal::vec1(&vec![1i32; bs * b])
+        .reshape(&[bs as i64, b as i64])?;
+    let pos0 = xla::Literal::scalar(g.prompt_len as i32);
+    let mut args: Vec<&xla::Literal> = weights.iter().map(|(_, l)| l).collect();
+    args.push(&kc);
+    args.push(&vc);
+    args.push(&cl);
+    args.push(&vf);
+    args.push(&blk);
+    args.push(&pos0);
+
+    let t0 = std::time::Instant::now();
+    let res = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+    println!("exec time {:?}", t0.elapsed());
+    let outs = res.to_tuple()?;
+    println!("n outs {}", outs.len());
+    let logits = outs[0].to_vec::<f32>()?;
+    if expected_npy.exists() {
+        let expected =
+            xla::Literal::read_npy(&expected_npy, &())?.to_vec::<f32>()?;
+        let max_err = logits
+            .iter()
+            .zip(&expected)
+            .map(|(a, e)| (a - e).abs())
+            .fold(0f32, f32::max);
+        println!("logits sum {} max_err {}", logits.iter().sum::<f32>(), max_err);
+        anyhow::ensure!(max_err < 1e-4, "logits diverge from python export");
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..10 {
+        exe.execute::<&xla::Literal>(&args)?;
+    }
+    println!("per-exec {:?}", t0.elapsed() / 10);
+    println!("SMOKE OK");
+    Ok(())
+}

@@ -50,8 +50,6 @@ pub fn decode(
     let mut k_host = TensorF32::zeros(&[l_n, bs, h_n, s_len, dh]);
     let mut v_host = TensorF32::zeros(&[l_n, bs, h_n, s_len, dh]);
     pool.gather_batch(&slots, bs, &mut k_host.data, &mut v_host.data);
-    let mut k_lit = k_host.to_literal()?;
-    let mut v_lit = v_host.to_literal()?;
 
     let mut cur: Vec<i32> = pre.tok.data.clone();
     let mut done = vec![false; bs];
@@ -71,8 +69,8 @@ pub fn decode(
         }
         let out = progs.ar_step(
             bs,
-            &k_lit,
-            &v_lit,
+            &k_host,
+            &v_host,
             (p_len + i) as i32,
             &valid_from,
             &TensorI32::from_vec(&[bs], cur.clone()),
@@ -85,8 +83,6 @@ pub fn decode(
             }
         }
         pool.gather_batch(&slots, bs, &mut k_host.data, &mut v_host.data);
-        k_host.write_into(&mut k_lit)?;
-        v_host.write_into(&mut v_lit)?;
         cur = out.tok.data.clone();
     }
     for slot in slots {

@@ -53,11 +53,9 @@ pub fn decode(
     let slots: Vec<SlotId> =
         (0..bs).map(|_| pool.alloc()).collect::<Result<_>>()?;
 
-    // batch-major staging buffers + reusable literals for the cache
+    // reusable batch-major staging buffers for the cache
     let mut k_host = TensorF32::zeros(&[l_n, bs, h_n, s_len, dh]);
     let mut v_host = TensorF32::zeros(&[l_n, bs, h_n, s_len, dh]);
-    let mut k_lit = k_host.to_literal()?;
-    let mut v_lit = v_host.to_literal()?;
     debug_assert_eq!(k_host.numel(), cache_elems);
 
     let mut ids = vec![0i32; bs * s_len];
@@ -91,8 +89,6 @@ pub fn decode(
                     pool.write_full(slot, lane, bs, &out.k.data, &out.v.data);
                 }
                 pool.gather_batch(&slots, bs, &mut k_host.data, &mut v_host.data);
-                k_host.write_into(&mut k_lit)?;
-                v_host.write_into(&mut v_lit)?;
                 for &r in &active {
                     let base = r * s_len + p_len + lo;
                     finalize(
@@ -117,8 +113,8 @@ pub fn decode(
                 let out = progs.teacher_block_approx(
                     bs,
                     blk,
-                    &k_lit,
-                    &v_lit,
+                    &k_host,
+                    &v_host,
                     &valid_from,
                     &TensorI32::from_vec(&[bs, blk], blk_ids),
                     (p_len + lo) as i32,

@@ -7,13 +7,14 @@
 //!      >= tau is finalized in parallel (>=1 per step guaranteed);
 //!   3. when the block is complete, one commit call recomputes the
 //!      block's K/V from its *final* tokens and appends it to the cache
-//!      (counted in `model_calls`, not `steps` — see DESIGN.md §10);
+//!      (counted in `model_calls`, not `steps` — see rust/README.md);
 //!   4. a finalized `<eos>` stops the request at the block boundary —
 //!      no compute is spent on later blocks (early stopping).
 //!
 //! This mirrors `python/compile/decoding.py::student_cdlm_decode`
 //! token-for-token; integration tests enforce parity via the
-//! `decode_parity.json` golden.
+//! `decode_parity.json` golden (see rust/README.md §caches for the
+//! step/model-call accounting).
 
 use anyhow::Result;
 
@@ -62,12 +63,10 @@ pub fn decode(
         s.model_calls += 1;
     }
 
-    // reusable batch cache staging + literals (no per-step allocation)
+    // reusable batch-major cache staging (no per-step allocation)
     let mut k_host = TensorF32::zeros(&[l_n, bs, h_n, s_len, dh]);
     let mut v_host = TensorF32::zeros(&[l_n, bs, h_n, s_len, dh]);
     pool.gather_batch(&slots, bs, &mut k_host.data, &mut v_host.data);
-    let mut k_lit = k_host.to_literal()?;
-    let mut v_lit = v_host.to_literal()?;
 
     let mut cache_len = p_len;
     let mut blk_ids = vec![0i32; bs * blk];
@@ -96,8 +95,8 @@ pub fn decode(
             let out = progs.student_block_step(
                 bs,
                 blk,
-                &k_lit,
-                &v_lit,
+                &k_host,
+                &v_host,
                 cache_len as i32,
                 &valid_from,
                 &TensorI32::from_vec(&[bs, blk], blk_ids.clone()),
@@ -139,8 +138,8 @@ pub fn decode(
         let out = progs.student_block_step(
             bs,
             blk,
-            &k_lit,
-            &v_lit,
+            &k_host,
+            &v_host,
             cache_len as i32,
             &valid_from,
             &TensorI32::from_vec(&[bs, blk], blk_ids.clone()),
@@ -155,8 +154,6 @@ pub fn decode(
             }
         }
         pool.gather_batch(&slots, bs, &mut k_host.data, &mut v_host.data);
-        k_host.write_into(&mut k_lit)?;
-        v_host.write_into(&mut v_lit)?;
         cache_len += blk;
     }
     for slot in slots {

@@ -78,10 +78,6 @@ pub fn decode(
     let mut vv_host = TensorF32::zeros(&shape);
     pool.gather_batch(&d_slots, bs, &mut dk_host.data, &mut dv_host.data);
     pool.gather_batch(&v_slots, bs, &mut vk_host.data, &mut vv_host.data);
-    let mut dk_lit = dk_host.to_literal()?;
-    let mut dv_lit = dv_host.to_literal()?;
-    let mut vk_lit = vk_host.to_literal()?;
-    let mut vv_lit = vv_host.to_literal()?;
 
     // verifier's next-token proposal entering the current block
     let mut next_tok: Vec<i32> = v_pre.tok.data.clone();
@@ -110,8 +106,8 @@ pub fn decode(
             let out = draft_progs.student_block_step(
                 bs,
                 blk,
-                &dk_lit,
-                &dv_lit,
+                &dk_host,
+                &dv_host,
                 cache_len as i32,
                 &valid_from,
                 &TensorI32::from_vec(&[bs, blk], blk_ids.clone()),
@@ -150,8 +146,8 @@ pub fn decode(
         let ver = verify_progs.ar_verify(
             bs,
             blk,
-            &vk_lit,
-            &vv_lit,
+            &vk_host,
+            &vv_host,
             cache_len as i32,
             &valid_from,
             &TensorI32::from_vec(&[bs, blk], blk_ids.clone()),
@@ -200,10 +196,10 @@ pub fn decode(
                 opts,
                 &mut seqs,
                 &valid_from,
-                &dk_lit,
-                &dv_lit,
-                &vk_lit,
-                &vv_lit,
+                &dk_host,
+                &dv_host,
+                &vk_host,
+                &vv_host,
                 lo,
                 cache_len,
                 &mut next_tok,
@@ -224,11 +220,11 @@ pub fn decode(
         }
         let blk_t = TensorI32::from_vec(&[bs, blk], blk_ids.clone());
         let dcommit = draft_progs.student_block_step(
-            bs, blk, &dk_lit, &dv_lit, cache_len as i32, &valid_from,
+            bs, blk, &dk_host, &dv_host, cache_len as i32, &valid_from,
             &blk_t, (p_len + lo) as i32,
         )?;
         let vcommit = verify_progs.ar_verify(
-            bs, blk, &vk_lit, &vv_lit, cache_len as i32, &valid_from,
+            bs, blk, &vk_host, &vv_host, cache_len as i32, &valid_from,
             &blk_t, (p_len + lo) as i32,
         )?;
         for lane in 0..bs {
@@ -243,10 +239,6 @@ pub fn decode(
         }
         pool.gather_batch(&d_slots, bs, &mut dk_host.data, &mut dv_host.data);
         pool.gather_batch(&v_slots, bs, &mut vk_host.data, &mut vv_host.data);
-        dk_host.write_into(&mut dk_lit)?;
-        dv_host.write_into(&mut dv_lit)?;
-        vk_host.write_into(&mut vk_lit)?;
-        vv_host.write_into(&mut vv_lit)?;
         cache_len += blk;
     }
     for slot in d_slots.into_iter().chain(v_slots) {
@@ -278,10 +270,10 @@ fn continue_redraft(
     opts: &DecodeOpts,
     seqs: &mut [SequenceState],
     valid_from: &TensorI32,
-    dk_lit: &xla::Literal,
-    dv_lit: &xla::Literal,
-    vk_lit: &xla::Literal,
-    vv_lit: &xla::Literal,
+    dk_host: &TensorF32,
+    dv_host: &TensorF32,
+    vk_host: &TensorF32,
+    vv_host: &TensorF32,
     lo: usize,
     cache_len: usize,
     next_tok: &mut [i32],
@@ -317,7 +309,7 @@ fn continue_redraft(
                     .copy_from_slice(&s.gen[lo..lo + blk]);
             }
             let out = draft_progs.student_block_step(
-                bs, blk, dk_lit, dv_lit, cache_len as i32, valid_from,
+                bs, blk, dk_host, dv_host, cache_len as i32, valid_from,
                 &TensorI32::from_vec(&[bs, blk], blk_ids.clone()),
                 (p_len + lo) as i32,
             )?;
@@ -339,7 +331,7 @@ fn continue_redraft(
                 .copy_from_slice(&s.gen[lo..lo + blk]);
         }
         let ver = verify_progs.ar_verify(
-            bs, blk, vk_lit, vv_lit, cache_len as i32, valid_from,
+            bs, blk, vk_host, vv_host, cache_len as i32, valid_from,
             &TensorI32::from_vec(&[bs, blk], blk_ids.clone()),
             (p_len + lo) as i32,
         )?;

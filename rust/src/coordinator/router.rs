@@ -1,13 +1,12 @@
 //! Request router + serving core.
 //!
-//! The `xla` crate's PJRT handles are deliberately `!Send` (they wrap
-//! `Rc`s over C pointers), so the architecture confines *every* XLA
-//! object to one decode-worker thread: the worker owns the
-//! `ServingCore` (runtime, weights, KV pool, metrics) and the rest of
-//! the process — HTTP handler threads, the CLI — talks to it purely
-//! through channels. On this single-core box one decode worker is also
-//! the right degree of parallelism; the dynamic batcher, not thread
-//! count, provides concurrency.
+//! Backends may hold `!Send` state (the PJRT handles wrap `Rc`s over C
+//! pointers), so the architecture confines the whole `ServingCore`
+//! (runtime, weights, KV pool, metrics) to one decode-worker thread,
+//! and the rest of the process — HTTP handler threads, the CLI — talks
+//! to it purely through channels. On a single-core box one decode
+//! worker is also the right degree of parallelism; the dynamic batcher,
+//! not thread count, provides concurrency.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -27,7 +26,7 @@ use crate::tokenizer::Tokenizer;
 use crate::util::json::{self, Json};
 
 // ---------------------------------------------------------------------------
-// ServingCore: single-threaded owner of all XLA state
+// ServingCore: single-threaded owner of all backend state
 // ---------------------------------------------------------------------------
 
 pub struct ServingCore {
@@ -42,9 +41,13 @@ impl ServingCore {
     pub fn load(artifacts: &Path, pool_capacity: usize) -> Result<Self> {
         let rt = Runtime::load(artifacts)?;
         let tokenizer = Tokenizer::new();
-        // cross-language vocab pin
-        let vocab = json::load(&artifacts.join("vocab.json"))?;
-        tokenizer.verify_against(&vocab)?;
+        // cross-language vocab pin: a real artifacts directory MUST
+        // carry a matching vocab.json (a missing one is a broken
+        // export, not a skip); only the built-in reference manifest
+        // uses the compiled-in vocab directly.
+        if artifacts.join("manifest.json").exists() {
+            tokenizer.verify_against(&json::load(&artifacts.join("vocab.json"))?)?;
+        }
         let pool = KvPool::new(&rt.manifest.geometry, pool_capacity);
         Ok(Self {
             rt,
@@ -61,8 +64,10 @@ impl ServingCore {
 
     fn ensure_weights(&mut self, model: &str) -> Result<()> {
         if !self.weights.contains_key(model) {
-            let mut w = ModelWeights::load(&self.rt.manifest, model)?;
-            // §Perf: weights live on-device for the model's lifetime
+            let w = ModelWeights::load(&self.rt.manifest, model)?;
+            // §Perf: backends with a host/device split make the
+            // weights device-resident for the model's lifetime here;
+            // the reference backend treats this as a no-op
             w.upload(&self.rt)?;
             self.weights.insert(model.to_string(), w);
         }
@@ -167,8 +172,8 @@ pub struct Router {
 }
 
 impl Router {
-    /// Spawn the decode worker (which loads all XLA state on its own
-    /// thread) and wait for it to come up.
+    /// Spawn the decode worker (which loads all backend state on its
+    /// own thread) and wait for it to come up.
     pub fn start(artifacts: PathBuf, cfg: RouterConfig) -> Result<Router> {
         let (tx, rx) = mpsc::channel::<RouterMsg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<Geometry, String>>();
@@ -200,7 +205,7 @@ impl Router {
         // Known model list comes from the manifest; re-read it cheaply
         // here so admission can reject unknown backbones without a
         // round-trip to the worker.
-        let manifest = crate::runtime::Manifest::load(&artifacts)?;
+        let manifest = crate::runtime::Manifest::load_or_reference(&artifacts)?;
         Ok(Router {
             tx,
             worker: Some(worker),

@@ -3,12 +3,15 @@
 //! Rust serving coordinator for the MLSys'26 CDLM paper reproduction:
 //! a three-layer stack in which **rust owns the request path** (routing,
 //! dynamic batching, exact block KV caching, decode scheduling, metrics,
-//! HTTP) and executes **AOT-compiled JAX/Pallas programs** through the
-//! PJRT C API. Python runs once at build time (`make artifacts`) and is
-//! never on the request path.
+//! HTTP) and executes model programs through a pluggable [`runtime`]
+//! backend — the deterministic pure-Rust reference backend by default,
+//! or AOT-compiled JAX/Pallas programs via the PJRT C API with the
+//! `pjrt` cargo feature. Python runs once at build time
+//! (`make artifacts`) and is never on the request path.
 //!
-//! Crate map (see DESIGN.md for the paper mapping):
-//! * [`runtime`] — PJRT client, HLO-text loading, typed program wrappers;
+//! Crate map (see rust/README.md for the paper mapping):
+//! * [`runtime`] — backend seam, reference backend, PJRT client,
+//!   typed program wrappers;
 //! * [`coordinator`] — router/batcher/scheduler/KV-pool + the six decode
 //!   engines of paper Tables 1-2 (vanilla, dLLM-Cache, Fast-dLLM Par./
 //!   +D.C., CDLM, AR);

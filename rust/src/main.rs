@@ -232,6 +232,7 @@ fn cmd_info() -> anyhow::Result<()> {
     let m = &core.rt.manifest;
     let g = &m.geometry;
     println!("artifacts:   {}", dir.display());
+    println!("backend:     {}", core.rt.backend_name());
     println!("platform:    {}", core.rt.platform());
     println!(
         "geometry:    d={} L={} H={} P={} Lg={} B={} V={}",

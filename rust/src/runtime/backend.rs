@@ -1,0 +1,232 @@
+//! The execution-backend seam: everything above this trait (engines,
+//! scheduler, router, server, benches) is backend-agnostic.
+//!
+//! Two implementations exist:
+//! * [`crate::runtime::ReferenceBackend`] — deterministic pure-Rust
+//!   stand-in model (seeded hash chains, real tensor shapes); the
+//!   default whenever no AOT artifacts directory is present, so the
+//!   full serving stack builds and runs hermetically on any machine;
+//! * `PjrtBackend` (feature `pjrt`) — the original PJRT/XLA path that
+//!   executes the AOT-compiled JAX/Pallas programs.
+//!
+//! All tensors cross the trait as host [`TensorF32`]/[`TensorI32`];
+//! KV caches are batch-major `[L, bs, H, S, dh]` buffers produced by
+//! `KvPool::gather_batch`. Backends convert to their device formats
+//! internally.
+#![allow(clippy::too_many_arguments)]
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::manifest::Manifest;
+use super::pjrt::ProgramKey;
+use super::programs::{
+    ArPrefillOut, ArStepOut, BlockStepOut, DenoiseOut, FullCacheOut,
+    PrefillOut,
+};
+use super::reference::{ReferenceBackend, DEFAULT_SEED};
+use super::tensor::{TensorF32, TensorI32};
+use super::weights::ModelWeights;
+
+/// One executable model surface: the eight AOT program entry points of
+/// `python/compile/model.py`, plus backend lifecycle hooks.
+pub trait Backend {
+    /// Device platform label (the reference backend reports "cpu", like
+    /// the PJRT CPU client it stands in for).
+    fn platform(&self) -> String;
+
+    /// Short backend identity for logs/manifest summaries.
+    fn name(&self) -> &'static str;
+
+    /// Number of compiled executables held (0 for non-compiling backends).
+    fn compiled_count(&self) -> usize {
+        0
+    }
+
+    /// Pre-compile a program set (no-op where compilation is free).
+    fn warmup(&self, _keys: &[ProgramKey]) -> Result<()> {
+        Ok(())
+    }
+
+    /// Make a model's weights resident on the device (no-op where the
+    /// distinction does not exist).
+    fn upload(&self, _weights: &ModelWeights) -> Result<()> {
+        Ok(())
+    }
+
+    /// One bidirectional refinement pass over the full padded sequence.
+    fn teacher_denoise(
+        &self,
+        w: &ModelWeights,
+        bs: usize,
+        ids: &TensorI32,        // [bs, S]
+        valid_from: &TensorI32, // [bs]
+    ) -> Result<DenoiseOut>;
+
+    /// Full pass that also returns the KV stacks (approx-cache refresh).
+    fn teacher_full_cache(
+        &self,
+        w: &ModelWeights,
+        bs: usize,
+        ids: &TensorI32,
+        valid_from: &TensorI32,
+    ) -> Result<FullCacheOut>;
+
+    /// Block-scoped teacher step against a stale full-sequence cache.
+    fn teacher_block_approx(
+        &self,
+        w: &ModelWeights,
+        bs: usize,
+        block: usize,
+        k_cache: &TensorF32, // [L, bs, H, S, dh]
+        v_cache: &TensorF32,
+        valid_from: &TensorI32,
+        blk_ids: &TensorI32, // [bs, B]
+        pos0: i32,
+    ) -> Result<BlockStepOut>;
+
+    /// Student prompt prefill: exact prompt KV.
+    fn student_prefill(
+        &self,
+        w: &ModelWeights,
+        bs: usize,
+        prompt_ids: &TensorI32, // [bs, P]
+        valid_from: &TensorI32,
+    ) -> Result<PrefillOut>;
+
+    /// Student block refinement step under the exact cache.
+    fn student_block_step(
+        &self,
+        w: &ModelWeights,
+        bs: usize,
+        block: usize,
+        k_cache: &TensorF32,
+        v_cache: &TensorF32,
+        cache_len: i32,
+        valid_from: &TensorI32,
+        blk_ids: &TensorI32,
+        pos0: i32,
+    ) -> Result<BlockStepOut>;
+
+    /// Parallel AR verification of a drafted block (Appendix C).
+    fn ar_verify(
+        &self,
+        w: &ModelWeights,
+        bs: usize,
+        block: usize,
+        k_cache: &TensorF32,
+        v_cache: &TensorF32,
+        cache_len: i32,
+        valid_from: &TensorI32,
+        blk_ids: &TensorI32,
+        pos0: i32,
+    ) -> Result<BlockStepOut>;
+
+    /// Causal prompt prefill + first-token logits.
+    fn ar_prefill(
+        &self,
+        w: &ModelWeights,
+        bs: usize,
+        prompt_ids: &TensorI32,
+        valid_from: &TensorI32,
+    ) -> Result<ArPrefillOut>;
+
+    /// One causal decode step with an exact token-level cache.
+    fn ar_step(
+        &self,
+        w: &ModelWeights,
+        bs: usize,
+        k_cache: &TensorF32,
+        v_cache: &TensorF32,
+        cache_len: i32,
+        valid_from: &TensorI32,
+        tok_ids: &TensorI32, // [bs]
+    ) -> Result<ArStepOut>;
+}
+
+/// The runtime a `ServingCore` owns: a manifest plus the backend that
+/// executes it.
+pub struct Runtime {
+    pub manifest: Manifest,
+    backend: Box<dyn Backend>,
+}
+
+impl Runtime {
+    /// Load from an artifacts directory. If `manifest.json` is present
+    /// and the `pjrt` feature is compiled in, the PJRT path executes the
+    /// AOT programs; otherwise the deterministic reference backend
+    /// serves the (real or built-in) manifest.
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load_or_reference(artifacts_dir)?;
+        let backend = Self::pick_backend(&manifest, artifacts_dir)?;
+        Ok(Runtime { manifest, backend })
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn pick_backend(
+        manifest: &Manifest,
+        artifacts_dir: &Path,
+    ) -> Result<Box<dyn Backend>> {
+        if artifacts_dir.join("manifest.json").exists() {
+            Ok(Box::new(super::pjrt::PjrtBackend::load(manifest)?))
+        } else {
+            Ok(Box::new(ReferenceBackend::new(
+                manifest.geometry.clone(),
+                reference_seed(),
+            )))
+        }
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn pick_backend(
+        manifest: &Manifest,
+        _artifacts_dir: &Path,
+    ) -> Result<Box<dyn Backend>> {
+        Ok(Box::new(ReferenceBackend::new(
+            manifest.geometry.clone(),
+            reference_seed(),
+        )))
+    }
+
+    /// A reference-backend runtime with an explicit seed (tests pin
+    /// decode traces through this constructor).
+    pub fn reference(seed: u64) -> Runtime {
+        let manifest = Manifest::reference(Path::new("reference"));
+        let backend: Box<dyn Backend> = Box::new(ReferenceBackend::new(
+            manifest.geometry.clone(),
+            seed,
+        ));
+        Runtime { manifest, backend }
+    }
+
+    pub fn backend(&self) -> &dyn Backend {
+        &*self.backend
+    }
+
+    pub fn platform(&self) -> String {
+        self.backend.platform()
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.backend.compiled_count()
+    }
+
+    /// Pre-compile the given programs (serving warm-up).
+    pub fn warmup(&self, keys: &[ProgramKey]) -> Result<()> {
+        self.backend.warmup(keys)
+    }
+}
+
+/// Reference-backend seed: `CDLM_REF_SEED` override or the fixed
+/// default (decode traces are reproducible across machines).
+fn reference_seed() -> u64 {
+    std::env::var("CDLM_REF_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(DEFAULT_SEED)
+}

@@ -1,6 +1,11 @@
 //! `artifacts/manifest.json` — the contract between the python build
 //! path and the rust request path: model geometry, the canonical weight
 //! argument order, and the AOT program table.
+//!
+//! When no artifacts directory exists the stack runs on the built-in
+//! [`Manifest::reference`] manifest instead: the same schema, a toy
+//! geometry matching the python fast-mode build, and a virtual program
+//! table served by the deterministic reference backend.
 
 use std::path::{Path, PathBuf};
 
@@ -170,6 +175,106 @@ impl Manifest {
             .find(|(k, _)| k == model)
             .map(|(_, v)| v.as_str())
     }
+
+    /// Load `manifest.json` if present, else the built-in reference
+    /// manifest (the artifact-free serving path).
+    pub fn load_or_reference(dir: &Path) -> anyhow::Result<Manifest> {
+        if dir.join("manifest.json").exists() {
+            Self::load(dir)
+        } else {
+            Ok(Self::reference(dir))
+        }
+    }
+
+    /// The built-in manifest backing the reference backend: the python
+    /// fast-mode geometry, bucket/block grids matching the exported AOT
+    /// set, and a virtual program table (no files behind the entries).
+    pub fn reference(dir: &Path) -> Manifest {
+        let geometry = Geometry {
+            vocab_size: crate::tokenizer::VOCAB_SIZE,
+            d_model: 96,
+            n_layers: 3,
+            n_heads: 4,
+            d_head: 24,
+            d_ff: 192,
+            prompt_len: 64,
+            gen_len: 32,
+            block_size: 8,
+            seq_len: 96,
+            pad: crate::tokenizer::PAD,
+            mask: crate::tokenizer::MASK,
+            bos: crate::tokenizer::BOS,
+            eos: crate::tokenizer::EOS,
+        };
+        let buckets = vec![1usize, 2, 4];
+        let sweep_blocks = vec![2usize, 4, 16];
+        let mut weight_names = vec![
+            "embed".to_string(),
+            "head".to_string(),
+            "ln_f".to_string(),
+        ];
+        for l in 0..geometry.n_layers {
+            // gated MLP (wg/wu/wd), matching the python param_shapes
+            for part in [
+                "attn_q", "attn_k", "attn_v", "attn_o", "mlp_wg", "mlp_wu",
+                "mlp_wd", "ln1", "ln2",
+            ] {
+                weight_names.push(format!("layer{l}.{part}"));
+            }
+        }
+        weight_names.sort();
+
+        let mut programs = Vec::new();
+        let mut push = |name: &str, bs: usize, block: Option<usize>| {
+            let file = match block {
+                Some(b) => format!("{name}_bs{bs}_b{b}.hlo.txt"),
+                None => format!("{name}_bs{bs}.hlo.txt"),
+            };
+            programs.push(ProgramEntry {
+                name: name.to_string(),
+                bs,
+                block,
+                file,
+                input_shapes: Vec::new(),
+            });
+        };
+        for &bs in &buckets {
+            push("teacher_denoise", bs, None);
+            push("teacher_full_cache", bs, None);
+            push("student_prefill", bs, None);
+            push("ar_prefill", bs, None);
+            push("ar_step", bs, None);
+            push("student_block_step", bs, Some(geometry.block_size));
+            push("teacher_block_approx", bs, Some(geometry.block_size));
+            push("ar_verify", bs, Some(geometry.block_size));
+        }
+        // inference-time block-size sweep variants (Fig. 8) at bs=1
+        for &b in &sweep_blocks {
+            push("student_block_step", 1, Some(b));
+        }
+
+        let models = ["dream", "llada"]
+            .iter()
+            .flat_map(|backbone| {
+                ["teacher", "cdlm", "ar"].iter().map(move |role| {
+                    let name = format!("{role}_{backbone}");
+                    let file = format!("weights_{name}.npz");
+                    (name, file)
+                })
+            })
+            .collect();
+
+        Manifest {
+            dir: dir.to_path_buf(),
+            geometry,
+            weight_names,
+            buckets,
+            sweep_blocks,
+            programs,
+            models,
+            fast_mode: true,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -202,6 +307,46 @@ mod tests {
             return;
         };
         let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.bucket_for(1), Some(1));
+        assert_eq!(m.bucket_for(3), Some(4));
+        assert_eq!(m.bucket_for(4), Some(4));
+        assert_eq!(m.bucket_for(99), None);
+    }
+
+    #[test]
+    fn reference_manifest_is_coherent() {
+        let m = Manifest::reference(Path::new("/nonexistent"));
+        let g = &m.geometry;
+        assert_eq!(g.seq_len, g.prompt_len + g.gen_len);
+        assert_eq!(g.d_model, g.n_heads * g.d_head);
+        assert!(g.gen_len % g.block_size == 0);
+        for &b in &m.sweep_blocks {
+            assert!(g.gen_len % b == 0, "sweep block {b} must divide gen_len");
+            assert!(
+                m.find_program("student_block_step", 1, Some(b)).is_some(),
+                "missing sweep variant B={b}"
+            );
+        }
+        for &bs in &m.buckets {
+            for name in ["teacher_denoise", "student_prefill", "ar_step"] {
+                assert!(m.find_program(name, bs, None).is_some(), "{name}/{bs}");
+            }
+            for name in ["student_block_step", "teacher_block_approx", "ar_verify"] {
+                assert!(
+                    m.find_program(name, bs, Some(g.block_size)).is_some(),
+                    "{name}/{bs}"
+                );
+            }
+        }
+        assert!(!m.weight_names.is_empty());
+        for model in ["teacher_dream", "cdlm_dream", "ar_dream", "cdlm_llada"] {
+            assert!(m.model_weight_file(model).is_some(), "{model}");
+        }
+    }
+
+    #[test]
+    fn reference_bucket_selection() {
+        let m = Manifest::reference(Path::new("/nonexistent"));
         assert_eq!(m.bucket_for(1), Some(1));
         assert_eq!(m.bucket_for(3), Some(4));
         assert_eq!(m.bucket_for(4), Some(4));

@@ -1,19 +1,26 @@
-//! Runtime: the bridge from AOT artifacts to the serving hot path.
+//! Runtime: the bridge from model artifacts to the serving hot path.
 //!
-//! `Runtime` owns the PJRT CPU client and the compiled-executable cache;
-//! `ModelWeights` holds a model's parameter literals in the manifest's
-//! canonical order; `Programs` exposes typed call wrappers for every AOT
-//! program. Python is never on this path — the artifacts directory is
-//! the entire contract.
+//! [`Runtime`] owns a [`Manifest`] and a boxed [`Backend`]; `Programs`
+//! exposes typed call wrappers for every AOT program entry point. Two
+//! backends implement the seam: the deterministic pure-Rust
+//! [`ReferenceBackend`] (default, artifact-free) and the PJRT/XLA path
+//! (`pjrt` cargo feature, requires `make artifacts`). Python is never
+//! on the request path — the artifacts directory is the entire
+//! contract, and when it is absent the built-in reference manifest
+//! stands in.
 
+pub mod backend;
 pub mod manifest;
 pub mod pjrt;
 pub mod programs;
+pub mod reference;
 pub mod tensor;
 pub mod weights;
 
+pub use backend::{Backend, Runtime};
 pub use manifest::{Geometry, Manifest};
-pub use pjrt::{ProgramKey, Runtime};
+pub use pjrt::ProgramKey;
 pub use programs::Programs;
+pub use reference::ReferenceBackend;
 pub use tensor::{TensorF32, TensorI32};
 pub use weights::ModelWeights;

@@ -1,22 +1,22 @@
-//! PJRT runtime: load HLO-text artifacts, compile once, execute from the
-//! serving hot path.
+//! PJRT execution path: load HLO-text artifacts, compile once, execute
+//! from the serving hot path. Compiled only with the `pjrt` cargo
+//! feature (requires the offline `xla` crate closure); the default
+//! build uses the deterministic reference backend instead.
 //!
 //! Interchange is HLO *text* (xla_extension 0.5.1 rejects jax>=0.5
-//! serialized protos — the text parser reassigns instruction ids; see
-//! /opt/xla-example/README.md). Executables are compiled lazily on first
-//! use and cached for the lifetime of the runtime; `warmup()` pre-compiles
-//! the hot set so serving latency is flat from the first request.
+//! serialized protos — the text parser reassigns instruction ids).
+//! Executables are compiled lazily on first use and cached for the
+//! lifetime of the backend; `warmup()` pre-compiles the hot set so
+//! serving latency is flat from the first request.
+//!
+//! Known cost of the backend seam: KV caches cross it as host
+//! tensors, so each block/step call materializes fresh cache literals
+//! (`to_literal`) where the pre-seam engines refreshed one literal in
+//! place. If the §Perf profile shows literal churn dominating again,
+//! add a per-(model, shape) scratch-literal cache here — behind the
+//! seam, not in the engines.
 
-use std::collections::HashMap;
-use std::path::Path;
-use std::sync::Mutex;
-use std::time::Instant;
-
-use anyhow::Result;
-
-use super::manifest::Manifest;
-
-/// Key into the executable cache.
+/// Key into a backend's executable cache.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct ProgramKey {
     pub name: String,
@@ -30,176 +30,399 @@ impl ProgramKey {
     }
 }
 
-pub struct Runtime {
-    pub manifest: Manifest,
-    client: xla::PjRtClient,
-    executables: Mutex<HashMap<ProgramKey, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
-    pub compile_log: Mutex<Vec<(String, f64)>>,
-}
+#[cfg(feature = "pjrt")]
+pub use client::PjrtBackend;
 
-impl Runtime {
-    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime {
-            manifest,
-            client,
-            executables: Mutex::new(HashMap::new()),
-            compile_log: Mutex::new(Vec::new()),
-        })
+#[cfg(feature = "pjrt")]
+mod client {
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex};
+    use std::time::Instant;
+
+    use anyhow::Result;
+
+    use super::ProgramKey;
+    use crate::runtime::backend::Backend;
+    use crate::runtime::manifest::Manifest;
+    use crate::runtime::programs::{
+        ArPrefillOut, ArStepOut, BlockStepOut, DenoiseOut, FullCacheOut,
+        PrefillOut,
+    };
+    use crate::runtime::tensor::{scalar_i32, TensorF32, TensorI32};
+    use crate::runtime::weights::ModelWeights;
+
+    /// PJRT-backed executor: owns the CPU client, the compiled
+    /// executable cache, per-model weight literals loaded from the
+    /// manifest's npz files, and (after `upload`) persistent device
+    /// buffers — §Perf optimization #4: avoids re-copying every
+    /// parameter tensor host->device on each decode step. Residency
+    /// is disabled by CDLM_NO_DEVICE_WEIGHTS=1 (the §Perf A/B switch).
+    pub struct PjrtBackend {
+        manifest: Manifest,
+        client: xla::PjRtClient,
+        executables: Mutex<HashMap<ProgramKey, Arc<xla::PjRtLoadedExecutable>>>,
+        weights: Mutex<HashMap<String, Arc<Vec<xla::Literal>>>>,
+        device_weights: Mutex<HashMap<String, Arc<Vec<xla::PjRtBuffer>>>>,
+        pub compile_log: Mutex<Vec<(String, f64)>>,
     }
 
-    /// Compile (or fetch cached) an AOT program.
-    pub fn executable(
-        &self,
-        key: &ProgramKey,
-    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.executables.lock().unwrap().get(key) {
-            return Ok(e.clone());
+    impl PjrtBackend {
+        pub fn load(manifest: &Manifest) -> Result<PjrtBackend> {
+            Ok(PjrtBackend {
+                manifest: manifest.clone(),
+                client: xla::PjRtClient::cpu()?,
+                executables: Mutex::new(HashMap::new()),
+                weights: Mutex::new(HashMap::new()),
+                device_weights: Mutex::new(HashMap::new()),
+                compile_log: Mutex::new(Vec::new()),
+            })
         }
-        let entry = self
-            .manifest
-            .find_program(&key.name, key.bs, key.block)
-            .ok_or_else(|| {
-                anyhow::anyhow!(
-                    "program {}(bs={}, block={:?}) not in manifest",
+
+        fn executable(
+            &self,
+            key: &ProgramKey,
+        ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+            if let Some(e) = self.executables.lock().unwrap().get(key) {
+                return Ok(e.clone());
+            }
+            let entry = self
+                .manifest
+                .find_program(&key.name, key.bs, key.block)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "program {}(bs={}, block={:?}) not in manifest",
+                        key.name,
+                        key.bs,
+                        key.block
+                    )
+                })?;
+            let path = self.manifest.dir.join(&entry.file);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().expect("utf8 path"),
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = Arc::new(self.client.compile(&comp)?);
+            self.compile_log
+                .lock()
+                .unwrap()
+                .push((entry.file.clone(), t0.elapsed().as_secs_f64()));
+            self.executables.lock().unwrap().insert(key.clone(), exe.clone());
+            Ok(exe)
+        }
+
+        fn model_literals(
+            &self,
+            w: &ModelWeights,
+        ) -> Result<Arc<Vec<xla::Literal>>> {
+            use xla::FromRawBytes;
+            if let Some(l) = self.weights.lock().unwrap().get(&w.name) {
+                return Ok(l.clone());
+            }
+            let file = self
+                .manifest
+                .model_weight_file(&w.name)
+                .ok_or_else(|| anyhow::anyhow!("unknown model '{}'", w.name))?;
+            let mut arrays =
+                xla::Literal::read_npz(&self.manifest.dir.join(file), &())?;
+            arrays.sort_by(|a, b| a.0.cmp(&b.0));
+            anyhow::ensure!(
+                arrays.len() == self.manifest.weight_names.len()
+                    && arrays
+                        .iter()
+                        .zip(&self.manifest.weight_names)
+                        .all(|((a, _), b)| a == b),
+                "weight names in {file} do not match manifest order"
+            );
+            let lits =
+                Arc::new(arrays.into_iter().map(|(_, l)| l).collect::<Vec<_>>());
+            self.weights.lock().unwrap().insert(w.name.clone(), lits.clone());
+            Ok(lits)
+        }
+
+        /// Execute a program: weights first, then `inputs`; returns the
+        /// decomposed output tuple. Prefers device-resident weight
+        /// buffers (`execute_b`) when `upload` has installed them —
+        /// only the per-step inputs are then copied host->device.
+        fn run(
+            &self,
+            w: &ModelWeights,
+            key: &ProgramKey,
+            inputs: &[&xla::Literal],
+        ) -> Result<Vec<xla::Literal>> {
+            let trace = std::env::var_os("CDLM_TRACE").is_some();
+            let exe = self.executable(key)?;
+            let resident = self.device_weights.lock().unwrap().get(&w.name).cloned();
+            let t1 = Instant::now();
+            let lit = match resident {
+                Some(bufs) => {
+                    let input_bufs = inputs
+                        .iter()
+                        .map(|l| {
+                            Ok(self.client.buffer_from_host_literal(None, l)?)
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                    let mut args: Vec<&xla::PjRtBuffer> =
+                        Vec::with_capacity(bufs.len() + input_bufs.len());
+                    args.extend(bufs.iter());
+                    args.extend(input_bufs.iter());
+                    let out = exe.execute_b::<&xla::PjRtBuffer>(&args)?;
+                    out[0][0].to_literal_sync()?
+                }
+                None => {
+                    let weights = self.model_literals(w)?;
+                    let mut args: Vec<&xla::Literal> =
+                        Vec::with_capacity(weights.len() + inputs.len());
+                    args.extend(weights.iter());
+                    args.extend(inputs.iter().copied());
+                    let out = exe.execute::<&xla::Literal>(&args)?;
+                    out[0][0].to_literal_sync()?
+                }
+            };
+            if trace {
+                eprintln!(
+                    "[trace] {}(bs={}) exec {:?}",
                     key.name,
                     key.bs,
-                    key.block
-                )
-            })?;
-        let path = self.manifest.dir.join(&entry.file);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().expect("utf8 path"),
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
-        self.compile_log
-            .lock()
-            .unwrap()
-            .push((entry.file.clone(), t0.elapsed().as_secs_f64()));
-        self.executables.lock().unwrap().insert(key.clone(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Execute a program: weights first, then `inputs`; returns the
-    /// decomposed output tuple.
-    pub fn run(
-        &self,
-        key: &ProgramKey,
-        weights: &[xla::Literal],
-        inputs: &[&xla::Literal],
-    ) -> Result<Vec<xla::Literal>> {
-        let trace = std::env::var_os("CDLM_TRACE").is_some();
-        let t0 = Instant::now();
-        let exe = self.executable(key)?;
-        let t_compile = t0.elapsed();
-        let mut args: Vec<&xla::Literal> = Vec::with_capacity(weights.len() + inputs.len());
-        args.extend(weights.iter());
-        args.extend(inputs.iter().copied());
-        let t1 = Instant::now();
-        let out = exe.execute::<&xla::Literal>(&args)?;
-        let t_exec = t1.elapsed();
-        let t2 = Instant::now();
-        let lit = out[0][0].to_literal_sync()?;
-        let parsed = lit.to_tuple()?;
-        if trace {
-            eprintln!(
-                "[trace] {}(bs={}) compile/fetch {:?} exec {:?} fetch {:?}",
-                key.name, key.bs, t_compile, t_exec, t2.elapsed()
-            );
+                    t1.elapsed()
+                );
+            }
+            Ok(lit.to_tuple()?)
         }
-        Ok(parsed)
     }
 
-    /// Host literal -> device buffer (for persistent weight residency).
-    pub fn to_device(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_literal(None, lit)?)
-    }
-
-    /// Execute with device-resident weight buffers (`execute_b`): only
-    /// the per-step inputs are copied host->device.
-    pub fn run_with_buffers(
-        &self,
-        key: &ProgramKey,
-        weight_bufs: &[xla::PjRtBuffer],
-        inputs: &[&xla::Literal],
-    ) -> Result<Vec<xla::Literal>> {
-        let trace = std::env::var_os("CDLM_TRACE").is_some();
-        let exe = self.executable(key)?;
-        let input_bufs = inputs
-            .iter()
-            .map(|l| self.to_device(l))
-            .collect::<Result<Vec<_>>>()?;
-        let mut args: Vec<&xla::PjRtBuffer> =
-            Vec::with_capacity(weight_bufs.len() + input_bufs.len());
-        args.extend(weight_bufs.iter());
-        args.extend(input_bufs.iter());
-        let t1 = Instant::now();
-        let out = exe.execute_b::<&xla::PjRtBuffer>(&args)?;
-        let t_exec = t1.elapsed();
-        let lit = out[0][0].to_literal_sync()?;
-        if trace {
-            eprintln!(
-                "[trace] {}(bs={}) exec_b {:?}",
-                key.name, key.bs, t_exec
-            );
+    impl Backend for PjrtBackend {
+        fn platform(&self) -> String {
+            self.client.platform_name()
         }
-        Ok(lit.to_tuple()?)
-    }
 
-    /// Pre-compile the given programs (serving warm-up).
-    pub fn warmup(&self, keys: &[ProgramKey]) -> Result<()> {
-        for k in keys {
-            self.executable(k)?;
+        fn name(&self) -> &'static str {
+            "pjrt"
         }
-        Ok(())
+
+        fn compiled_count(&self) -> usize {
+            self.executables.lock().unwrap().len()
+        }
+
+        fn warmup(&self, keys: &[ProgramKey]) -> Result<()> {
+            for k in keys {
+                self.executable(k)?;
+            }
+            Ok(())
+        }
+
+        fn upload(&self, weights: &ModelWeights) -> Result<()> {
+            if std::env::var_os("CDLM_NO_DEVICE_WEIGHTS").is_some()
+                || self.device_weights.lock().unwrap().contains_key(&weights.name)
+            {
+                return Ok(());
+            }
+            let lits = self.model_literals(weights)?;
+            let bufs = lits
+                .iter()
+                .map(|l| Ok(self.client.buffer_from_host_literal(None, l)?))
+                .collect::<Result<Vec<_>>>()?;
+            self.device_weights
+                .lock()
+                .unwrap()
+                .insert(weights.name.clone(), Arc::new(bufs));
+            Ok(())
+        }
+
+        fn teacher_denoise(
+            &self,
+            w: &ModelWeights,
+            bs: usize,
+            ids: &TensorI32,
+            valid_from: &TensorI32,
+        ) -> Result<DenoiseOut> {
+            let key = ProgramKey::new("teacher_denoise", bs, None);
+            let a = ids.to_literal()?;
+            let b = valid_from.to_literal()?;
+            let out = self.run(w, &key, &[&a, &b])?;
+            Ok(DenoiseOut {
+                logits: TensorF32::from_literal(&out[0])?,
+                tok: TensorI32::from_literal(&out[1])?,
+                conf: TensorF32::from_literal(&out[2])?,
+            })
+        }
+
+        fn teacher_full_cache(
+            &self,
+            w: &ModelWeights,
+            bs: usize,
+            ids: &TensorI32,
+            valid_from: &TensorI32,
+        ) -> Result<FullCacheOut> {
+            let key = ProgramKey::new("teacher_full_cache", bs, None);
+            let a = ids.to_literal()?;
+            let b = valid_from.to_literal()?;
+            let out = self.run(w, &key, &[&a, &b])?;
+            Ok(FullCacheOut {
+                logits: TensorF32::from_literal(&out[0])?,
+                tok: TensorI32::from_literal(&out[1])?,
+                conf: TensorF32::from_literal(&out[2])?,
+                k: TensorF32::from_literal(&out[3])?,
+                v: TensorF32::from_literal(&out[4])?,
+            })
+        }
+
+        fn teacher_block_approx(
+            &self,
+            w: &ModelWeights,
+            bs: usize,
+            block: usize,
+            k_cache: &TensorF32,
+            v_cache: &TensorF32,
+            valid_from: &TensorI32,
+            blk_ids: &TensorI32,
+            pos0: i32,
+        ) -> Result<BlockStepOut> {
+            let key = ProgramKey::new("teacher_block_approx", bs, Some(block));
+            let kc = k_cache.to_literal()?;
+            let vc = v_cache.to_literal()?;
+            let vf = valid_from.to_literal()?;
+            let blk = blk_ids.to_literal()?;
+            let p0 = scalar_i32(pos0);
+            let out = self.run(w, &key, &[&kc, &vc, &vf, &blk, &p0])?;
+            parse_block_step(out)
+        }
+
+        fn student_prefill(
+            &self,
+            w: &ModelWeights,
+            bs: usize,
+            prompt_ids: &TensorI32,
+            valid_from: &TensorI32,
+        ) -> Result<PrefillOut> {
+            let key = ProgramKey::new("student_prefill", bs, None);
+            let a = prompt_ids.to_literal()?;
+            let b = valid_from.to_literal()?;
+            let out = self.run(w, &key, &[&a, &b])?;
+            Ok(PrefillOut {
+                k: TensorF32::from_literal(&out[0])?,
+                v: TensorF32::from_literal(&out[1])?,
+            })
+        }
+
+        fn student_block_step(
+            &self,
+            w: &ModelWeights,
+            bs: usize,
+            block: usize,
+            k_cache: &TensorF32,
+            v_cache: &TensorF32,
+            cache_len: i32,
+            valid_from: &TensorI32,
+            blk_ids: &TensorI32,
+            pos0: i32,
+        ) -> Result<BlockStepOut> {
+            let key = ProgramKey::new("student_block_step", bs, Some(block));
+            let kc = k_cache.to_literal()?;
+            let vc = v_cache.to_literal()?;
+            let cl = scalar_i32(cache_len);
+            let vf = valid_from.to_literal()?;
+            let blk = blk_ids.to_literal()?;
+            let p0 = scalar_i32(pos0);
+            let out = self.run(w, &key, &[&kc, &vc, &cl, &vf, &blk, &p0])?;
+            parse_block_step(out)
+        }
+
+        fn ar_verify(
+            &self,
+            w: &ModelWeights,
+            bs: usize,
+            block: usize,
+            k_cache: &TensorF32,
+            v_cache: &TensorF32,
+            cache_len: i32,
+            valid_from: &TensorI32,
+            blk_ids: &TensorI32,
+            pos0: i32,
+        ) -> Result<BlockStepOut> {
+            let key = ProgramKey::new("ar_verify", bs, Some(block));
+            let kc = k_cache.to_literal()?;
+            let vc = v_cache.to_literal()?;
+            let cl = scalar_i32(cache_len);
+            let vf = valid_from.to_literal()?;
+            let blk = blk_ids.to_literal()?;
+            let p0 = scalar_i32(pos0);
+            let out = self.run(w, &key, &[&kc, &vc, &cl, &vf, &blk, &p0])?;
+            parse_block_step(out)
+        }
+
+        fn ar_prefill(
+            &self,
+            w: &ModelWeights,
+            bs: usize,
+            prompt_ids: &TensorI32,
+            valid_from: &TensorI32,
+        ) -> Result<ArPrefillOut> {
+            let key = ProgramKey::new("ar_prefill", bs, None);
+            let a = prompt_ids.to_literal()?;
+            let b = valid_from.to_literal()?;
+            let out = self.run(w, &key, &[&a, &b])?;
+            Ok(ArPrefillOut {
+                logits: TensorF32::from_literal(&out[0])?,
+                tok: TensorI32::from_literal(&out[1])?,
+                conf: TensorF32::from_literal(&out[2])?,
+                k: TensorF32::from_literal(&out[3])?,
+                v: TensorF32::from_literal(&out[4])?,
+            })
+        }
+
+        fn ar_step(
+            &self,
+            w: &ModelWeights,
+            bs: usize,
+            k_cache: &TensorF32,
+            v_cache: &TensorF32,
+            cache_len: i32,
+            valid_from: &TensorI32,
+            tok_ids: &TensorI32,
+        ) -> Result<ArStepOut> {
+            let key = ProgramKey::new("ar_step", bs, None);
+            let kc = k_cache.to_literal()?;
+            let vc = v_cache.to_literal()?;
+            let cl = scalar_i32(cache_len);
+            let vf = valid_from.to_literal()?;
+            let t = tok_ids.to_literal()?;
+            let out = self.run(w, &key, &[&kc, &vc, &cl, &vf, &t])?;
+            Ok(ArStepOut {
+                logits: TensorF32::from_literal(&out[0])?,
+                tok: TensorI32::from_literal(&out[1])?,
+                conf: TensorF32::from_literal(&out[2])?,
+                k1: TensorF32::from_literal(&out[3])?,
+                v1: TensorF32::from_literal(&out[4])?,
+            })
+        }
     }
 
-    pub fn compiled_count(&self) -> usize {
-        self.executables.lock().unwrap().len()
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    fn parse_block_step(out: Vec<xla::Literal>) -> Result<BlockStepOut> {
+        Ok(BlockStepOut {
+            logits: TensorF32::from_literal(&out[0])?,
+            tok: TensorI32::from_literal(&out[1])?,
+            conf: TensorF32::from_literal(&out[2])?,
+            k_blk: TensorF32::from_literal(&out[3])?,
+            v_blk: TensorF32::from_literal(&out[4])?,
+        })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::path::PathBuf;
-
-    fn artifacts_dir() -> Option<PathBuf> {
-        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        d.join("manifest.json").exists().then_some(d)
-    }
 
     #[test]
-    fn loads_and_compiles_lazily() {
-        let Some(dir) = artifacts_dir() else {
-            return;
-        };
-        let rt = Runtime::load(&dir).unwrap();
-        assert_eq!(rt.compiled_count(), 0);
-        let key = ProgramKey::new("teacher_denoise", 1, None);
-        rt.executable(&key).unwrap();
-        assert_eq!(rt.compiled_count(), 1);
-        // cached: second call does not recompile
-        rt.executable(&key).unwrap();
-        assert_eq!(rt.compiled_count(), 1);
-        assert_eq!(rt.compile_log.lock().unwrap().len(), 1);
-    }
-
-    #[test]
-    fn missing_program_is_an_error() {
-        let Some(dir) = artifacts_dir() else {
-            return;
-        };
-        let rt = Runtime::load(&dir).unwrap();
-        assert!(rt
-            .executable(&ProgramKey::new("nonexistent", 1, None))
-            .is_err());
+    fn program_keys_hash_and_compare() {
+        let a = ProgramKey::new("student_block_step", 1, Some(8));
+        let b = ProgramKey::new("student_block_step", 1, Some(8));
+        let c = ProgramKey::new("student_block_step", 2, Some(8));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        let mut set = std::collections::HashSet::new();
+        set.insert(a);
+        assert!(set.contains(&b));
+        assert!(!set.contains(&c));
     }
 }

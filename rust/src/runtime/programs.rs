@@ -1,14 +1,15 @@
 //! Typed wrappers over the AOT program set.
 //!
-//! Each wrapper builds the input literal list (weights first — the
-//! manifest's canonical order), executes, and parses the output tuple
-//! into host tensors. Output tuple orders are fixed by the L2 function
-//! signatures in `python/compile/model.py`.
+//! `Programs` binds one model's weights to the runtime's backend and
+//! exposes the eight program entry points with host-tensor signatures;
+//! engines never see backend-specific types. Output tuple orders are
+//! fixed by the L2 function signatures in `python/compile/model.py`.
+#![allow(clippy::too_many_arguments)]
 
 use anyhow::Result;
 
-use super::pjrt::{ProgramKey, Runtime};
-use super::tensor::{scalar_i32, TensorF32, TensorI32};
+use super::backend::{Backend, Runtime};
+use super::tensor::{TensorF32, TensorI32};
 use super::weights::ModelWeights;
 
 /// One refinement step over every sequence position (vanilla teacher).
@@ -68,30 +69,13 @@ impl<'rt> Programs<'rt> {
         Self { rt, weights }
     }
 
-    fn run(&self, key: &ProgramKey, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
-        // §Perf: prefer device-resident weights when uploaded (skips the
-        // per-call host->device copy of every parameter tensor)
-        match &self.weights.buffers {
-            Some(bufs) => self.rt.run_with_buffers(key, bufs, inputs),
-            None => self.rt.run(key, &self.weights.literals, inputs),
-        }
-    }
-
     pub fn teacher_denoise(
         &self,
         bs: usize,
-        ids: &TensorI32,         // [bs, S]
-        valid_from: &TensorI32,  // [bs]
+        ids: &TensorI32,        // [bs, S]
+        valid_from: &TensorI32, // [bs]
     ) -> Result<DenoiseOut> {
-        let key = ProgramKey::new("teacher_denoise", bs, None);
-        let a = ids.to_literal()?;
-        let b = valid_from.to_literal()?;
-        let out = self.run(&key, &[&a, &b])?;
-        Ok(DenoiseOut {
-            logits: TensorF32::from_literal(&out[0])?,
-            tok: TensorI32::from_literal(&out[1])?,
-            conf: TensorF32::from_literal(&out[2])?,
-        })
+        self.rt.backend().teacher_denoise(self.weights, bs, ids, valid_from)
     }
 
     pub fn teacher_full_cache(
@@ -100,36 +84,31 @@ impl<'rt> Programs<'rt> {
         ids: &TensorI32,
         valid_from: &TensorI32,
     ) -> Result<FullCacheOut> {
-        let key = ProgramKey::new("teacher_full_cache", bs, None);
-        let a = ids.to_literal()?;
-        let b = valid_from.to_literal()?;
-        let out = self.run(&key, &[&a, &b])?;
-        Ok(FullCacheOut {
-            logits: TensorF32::from_literal(&out[0])?,
-            tok: TensorI32::from_literal(&out[1])?,
-            conf: TensorF32::from_literal(&out[2])?,
-            k: TensorF32::from_literal(&out[3])?,
-            v: TensorF32::from_literal(&out[4])?,
-        })
+        self.rt
+            .backend()
+            .teacher_full_cache(self.weights, bs, ids, valid_from)
     }
 
-    #[allow(clippy::too_many_arguments)]
     pub fn teacher_block_approx(
         &self,
         bs: usize,
         block: usize,
-        k_cache: &xla::Literal,
-        v_cache: &xla::Literal,
+        k_cache: &TensorF32, // [L, bs, H, S, dh]
+        v_cache: &TensorF32,
         valid_from: &TensorI32,
         blk_ids: &TensorI32, // [bs, B]
         pos0: i32,
     ) -> Result<BlockStepOut> {
-        let key = ProgramKey::new("teacher_block_approx", bs, Some(block));
-        let vf = valid_from.to_literal()?;
-        let blk = blk_ids.to_literal()?;
-        let p0 = scalar_i32(pos0);
-        let out = self.run(&key, &[k_cache, v_cache, &vf, &blk, &p0])?;
-        parse_block_step(out)
+        self.rt.backend().teacher_block_approx(
+            self.weights,
+            bs,
+            block,
+            k_cache,
+            v_cache,
+            valid_from,
+            blk_ids,
+            pos0,
+        )
     }
 
     pub fn student_prefill(
@@ -138,59 +117,60 @@ impl<'rt> Programs<'rt> {
         prompt_ids: &TensorI32, // [bs, P]
         valid_from: &TensorI32,
     ) -> Result<PrefillOut> {
-        let key = ProgramKey::new("student_prefill", bs, None);
-        let a = prompt_ids.to_literal()?;
-        let b = valid_from.to_literal()?;
-        let out = self.run(&key, &[&a, &b])?;
-        Ok(PrefillOut {
-            k: TensorF32::from_literal(&out[0])?,
-            v: TensorF32::from_literal(&out[1])?,
-        })
+        self.rt
+            .backend()
+            .student_prefill(self.weights, bs, prompt_ids, valid_from)
     }
 
-    #[allow(clippy::too_many_arguments)]
     pub fn student_block_step(
         &self,
         bs: usize,
         block: usize,
-        k_cache: &xla::Literal,
-        v_cache: &xla::Literal,
+        k_cache: &TensorF32,
+        v_cache: &TensorF32,
         cache_len: i32,
         valid_from: &TensorI32,
         blk_ids: &TensorI32,
         pos0: i32,
     ) -> Result<BlockStepOut> {
-        let key = ProgramKey::new("student_block_step", bs, Some(block));
-        let cl = scalar_i32(cache_len);
-        let vf = valid_from.to_literal()?;
-        let blk = blk_ids.to_literal()?;
-        let p0 = scalar_i32(pos0);
-        let out = self.run(&key, &[k_cache, v_cache, &cl, &vf, &blk, &p0])?;
-        parse_block_step(out)
+        self.rt.backend().student_block_step(
+            self.weights,
+            bs,
+            block,
+            k_cache,
+            v_cache,
+            cache_len,
+            valid_from,
+            blk_ids,
+            pos0,
+        )
     }
 
     /// Parallel AR verification of a drafted block (Appendix C
     /// speculative-decoding extension): causal teacher-forcing over the
     /// drafted tokens against the AR cache.
-    #[allow(clippy::too_many_arguments)]
     pub fn ar_verify(
         &self,
         bs: usize,
         block: usize,
-        k_cache: &xla::Literal,
-        v_cache: &xla::Literal,
+        k_cache: &TensorF32,
+        v_cache: &TensorF32,
         cache_len: i32,
         valid_from: &TensorI32,
         blk_ids: &TensorI32,
         pos0: i32,
     ) -> Result<BlockStepOut> {
-        let key = ProgramKey::new("ar_verify", bs, Some(block));
-        let cl = scalar_i32(cache_len);
-        let vf = valid_from.to_literal()?;
-        let blk = blk_ids.to_literal()?;
-        let p0 = scalar_i32(pos0);
-        let out = self.run(&key, &[k_cache, v_cache, &cl, &vf, &blk, &p0])?;
-        parse_block_step(out)
+        self.rt.backend().ar_verify(
+            self.weights,
+            bs,
+            block,
+            k_cache,
+            v_cache,
+            cache_len,
+            valid_from,
+            blk_ids,
+            pos0,
+        )
     }
 
     pub fn ar_prefill(
@@ -199,50 +179,28 @@ impl<'rt> Programs<'rt> {
         prompt_ids: &TensorI32,
         valid_from: &TensorI32,
     ) -> Result<ArPrefillOut> {
-        let key = ProgramKey::new("ar_prefill", bs, None);
-        let a = prompt_ids.to_literal()?;
-        let b = valid_from.to_literal()?;
-        let out = self.run(&key, &[&a, &b])?;
-        Ok(ArPrefillOut {
-            logits: TensorF32::from_literal(&out[0])?,
-            tok: TensorI32::from_literal(&out[1])?,
-            conf: TensorF32::from_literal(&out[2])?,
-            k: TensorF32::from_literal(&out[3])?,
-            v: TensorF32::from_literal(&out[4])?,
-        })
+        self.rt
+            .backend()
+            .ar_prefill(self.weights, bs, prompt_ids, valid_from)
     }
 
-    #[allow(clippy::too_many_arguments)]
     pub fn ar_step(
         &self,
         bs: usize,
-        k_cache: &xla::Literal,
-        v_cache: &xla::Literal,
+        k_cache: &TensorF32,
+        v_cache: &TensorF32,
         cache_len: i32,
         valid_from: &TensorI32,
         tok_ids: &TensorI32, // [bs]
     ) -> Result<ArStepOut> {
-        let key = ProgramKey::new("ar_step", bs, None);
-        let cl = scalar_i32(cache_len);
-        let vf = valid_from.to_literal()?;
-        let t = tok_ids.to_literal()?;
-        let out = self.run(&key, &[k_cache, v_cache, &cl, &vf, &t])?;
-        Ok(ArStepOut {
-            logits: TensorF32::from_literal(&out[0])?,
-            tok: TensorI32::from_literal(&out[1])?,
-            conf: TensorF32::from_literal(&out[2])?,
-            k1: TensorF32::from_literal(&out[3])?,
-            v1: TensorF32::from_literal(&out[4])?,
-        })
+        self.rt.backend().ar_step(
+            self.weights,
+            bs,
+            k_cache,
+            v_cache,
+            cache_len,
+            valid_from,
+            tok_ids,
+        )
     }
-}
-
-fn parse_block_step(out: Vec<xla::Literal>) -> Result<BlockStepOut> {
-    Ok(BlockStepOut {
-        logits: TensorF32::from_literal(&out[0])?,
-        tok: TensorI32::from_literal(&out[1])?,
-        conf: TensorF32::from_literal(&out[2])?,
-        k_blk: TensorF32::from_literal(&out[3])?,
-        v_blk: TensorF32::from_literal(&out[4])?,
-    })
 }

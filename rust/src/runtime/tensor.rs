@@ -1,11 +1,9 @@
-//! Host tensors + conversion to/from `xla::Literal`.
+//! Host tensors: dense row-major f32/i32 buffers with explicit shapes.
 //!
-//! The hot path reuses `Literal`s in place (`copy_raw_from`) to avoid
-//! per-step allocation; see `coordinator::methods` for usage.
+//! These are the interchange type across the [`crate::runtime::Backend`]
+//! seam; the PJRT path (feature `pjrt`) adds `xla::Literal` conversions.
 
-use anyhow::Result;
-
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TensorF32 {
     pub shape: Vec<usize>,
     pub data: Vec<f32>,
@@ -25,85 +23,108 @@ impl TensorF32 {
     pub fn numel(&self) -> usize {
         self.data.len()
     }
-
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
-    }
-
-    /// Overwrite an existing literal's contents (shape must match).
-    pub fn write_into(&self, lit: &mut xla::Literal) -> Result<()> {
-        lit.copy_raw_from(&self.data)?;
-        Ok(())
-    }
-
-    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        Ok(Self { shape: dims, data: lit.to_vec::<f32>()? })
-    }
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TensorI32 {
     pub shape: Vec<usize>,
     pub data: Vec<i32>,
 }
 
 impl TensorI32 {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0; n] }
+    }
+
     pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         Self { shape: shape.to_vec(), data }
     }
 
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
-    }
-
-    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        Ok(Self { shape: dims, data: lit.to_vec::<i32>()? })
+    pub fn numel(&self) -> usize {
+        self.data.len()
     }
 }
 
-pub fn scalar_i32(v: i32) -> xla::Literal {
-    xla::Literal::scalar(v)
+#[cfg(feature = "pjrt")]
+mod literal {
+    use super::{TensorF32, TensorI32};
+    use anyhow::Result;
+
+    impl TensorF32 {
+        pub fn to_literal(&self) -> Result<xla::Literal> {
+            let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+            Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+        }
+
+        /// Overwrite an existing literal's contents (shape must match).
+        pub fn write_into(&self, lit: &mut xla::Literal) -> Result<()> {
+            lit.copy_raw_from(&self.data)?;
+            Ok(())
+        }
+
+        pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+            let shape = lit.array_shape()?;
+            let dims: Vec<usize> =
+                shape.dims().iter().map(|&d| d as usize).collect();
+            Ok(Self { shape: dims, data: lit.to_vec::<f32>()? })
+        }
+    }
+
+    impl TensorI32 {
+        pub fn to_literal(&self) -> Result<xla::Literal> {
+            let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+            Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+        }
+
+        pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+            let shape = lit.array_shape()?;
+            let dims: Vec<usize> =
+                shape.dims().iter().map(|&d| d as usize).collect();
+            Ok(Self { shape: dims, data: lit.to_vec::<i32>()? })
+        }
+    }
+
+    pub fn scalar_i32(v: i32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
 }
+
+#[cfg(feature = "pjrt")]
+pub use literal::scalar_i32;
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn f32_roundtrip_through_literal() {
+    fn zeros_and_numel() {
+        let t = TensorF32::zeros(&[2, 3, 4]);
+        assert_eq!(t.numel(), 24);
+        assert!(t.data.iter().all(|&x| x == 0.0));
+        let i = TensorI32::zeros(&[5]);
+        assert_eq!(i.numel(), 5);
+    }
+
+    #[test]
+    fn from_vec_keeps_shape_and_data() {
         let t = TensorF32::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
-        let l = t.to_literal().unwrap();
-        let back = TensorF32::from_literal(&l).unwrap();
-        assert_eq!(back.shape, vec![2, 3]);
-        assert_eq!(back.data, t.data);
-    }
-
-    #[test]
-    fn i32_roundtrip() {
-        let t = TensorI32::from_vec(&[4], vec![1, -2, 3, 4]);
-        let back = TensorI32::from_literal(&t.to_literal().unwrap()).unwrap();
-        assert_eq!(back.data, t.data);
-    }
-
-    #[test]
-    fn write_into_reuses_literal() {
-        let t = TensorF32::zeros(&[8]);
-        let mut l = t.to_literal().unwrap();
-        let t2 = TensorF32::from_vec(&[8], (0..8).map(|i| i as f32).collect());
-        t2.write_into(&mut l).unwrap();
-        assert_eq!(l.to_vec::<f32>().unwrap(), t2.data);
+        assert_eq!(t.shape, vec![2, 3]);
+        assert_eq!(t.data[4], 5.0);
+        let i = TensorI32::from_vec(&[4], vec![1, -2, 3, 4]);
+        assert_eq!(i.data, vec![1, -2, 3, 4]);
     }
 
     #[test]
     #[should_panic]
     fn shape_mismatch_panics() {
         TensorF32::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn i32_shape_mismatch_panics() {
+        TensorI32::from_vec(&[3], vec![1, 2]);
     }
 }

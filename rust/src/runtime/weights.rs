@@ -1,112 +1,94 @@
-//! Model weights: npz loading in the manifest's canonical argument order.
+//! Model weights handle: the per-model identity engines bind to.
 //!
-//! Weights are uploaded as the leading arguments of every AOT program.
-//! They are loaded once per model and shared (Arc) across engines.
-
-use std::path::Path;
+//! The handle itself is backend-agnostic metadata — name, a stable
+//! 64-bit seed derived from the name (the reference backend's notion of
+//! "which parameters"), and the parameter count implied by the manifest
+//! geometry. The PJRT backend resolves the name to its npz literals
+//! internally; nothing above the backend seam touches array data.
 
 use anyhow::Result;
-use xla::FromRawBytes;
 
+use super::backend::Backend;
 use super::manifest::Manifest;
 
 pub struct ModelWeights {
     pub name: String,
-    /// Literals in manifest `weight_names` order.
-    pub literals: Vec<xla::Literal>,
-    /// Persistent device buffers (uploaded once; §Perf optimization #4:
-    /// avoids re-copying ~1.2 MB of weights host->device on every
-    /// decode step). Populated by `upload`.
-    pub buffers: Option<Vec<xla::PjRtBuffer>>,
+    /// Stable content seed (FNV-1a of the model name): two models never
+    /// share a seed, so reference-backend decodes differ per model.
+    pub seed: u64,
     pub total_params: usize,
 }
 
 impl ModelWeights {
     pub fn load(manifest: &Manifest, model: &str) -> Result<ModelWeights> {
-        let file = manifest
-            .model_weight_file(model)
-            .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
-        Self::load_file(&manifest.dir.join(file), &manifest.weight_names, model)
-    }
-
-    pub fn load_file(
-        path: &Path,
-        weight_names: &[String],
-        name: &str,
-    ) -> Result<ModelWeights> {
-        let mut arrays = xla::Literal::read_npz(path, &())?;
-        arrays.sort_by(|a, b| a.0.cmp(&b.0));
-        let names: Vec<&String> = arrays.iter().map(|(n, _)| n).collect();
         anyhow::ensure!(
-            names.len() == weight_names.len()
-                && names.iter().zip(weight_names).all(|(a, b)| *a == b),
-            "weight names in {} do not match manifest order",
-            path.display()
+            manifest.model_weight_file(model).is_some(),
+            "unknown model '{model}'"
         );
-        let mut total = 0usize;
-        let literals: Vec<xla::Literal> = arrays
-            .into_iter()
-            .map(|(_, l)| {
-                total += l.element_count();
-                l
-            })
-            .collect();
+        let g = &manifest.geometry;
+        // gated MLP: wg/wu (d x f) + wd (f x d), matching
+        // python/compile/model.py::param_shapes
+        let per_layer = 4 * g.d_model * g.d_model
+            + 3 * g.d_model * g.d_ff
+            + 2 * g.d_model;
+        let total_params = 2 * g.vocab_size * g.d_model
+            + g.n_layers * per_layer
+            + g.d_model;
         Ok(ModelWeights {
-            name: name.to_string(),
-            literals,
-            buffers: None,
-            total_params: total,
+            name: model.to_string(),
+            seed: fnv1a(model.as_bytes()),
+            total_params,
         })
     }
 
-    /// Upload the weights to device buffers once (subsequent executes
-    /// use `execute_b` and skip the per-call host->device weight copy).
-    /// Disabled by CDLM_NO_DEVICE_WEIGHTS=1 (the §Perf A/B switch).
-    pub fn upload(&mut self, rt: &super::Runtime) -> Result<()> {
-        if self.buffers.is_some()
-            || std::env::var_os("CDLM_NO_DEVICE_WEIGHTS").is_some()
-        {
-            return Ok(());
-        }
-        let bufs = self
-            .literals
-            .iter()
-            .map(|l| rt.to_device(l))
-            .collect::<Result<Vec<_>>>()?;
-        self.buffers = Some(bufs);
-        Ok(())
+    /// Make the weights device-resident (backend-dependent; a no-op on
+    /// the reference backend).
+    pub fn upload(&self, rt: &super::Runtime) -> Result<()> {
+        rt.backend().upload(self)
     }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::path::PathBuf;
-
-    fn artifacts_dir() -> Option<PathBuf> {
-        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        d.join("manifest.json").exists().then_some(d)
-    }
+    use std::path::Path;
 
     #[test]
     fn loads_all_declared_models() {
-        let Some(dir) = artifacts_dir() else {
-            return;
-        };
-        let m = Manifest::load(&dir).unwrap();
+        let m = Manifest::reference(Path::new("ref"));
+        let mut seeds = Vec::new();
         for (model, _) in &m.models {
             let w = ModelWeights::load(&m, model).unwrap();
-            assert_eq!(w.literals.len(), m.weight_names.len());
+            assert_eq!(w.name, *model);
             assert!(w.total_params > 10_000, "{model}: {}", w.total_params);
+            seeds.push(w.seed);
         }
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), m.models.len(), "model seeds must be distinct");
     }
 
     #[test]
     fn unknown_model_errors() {
-        let Some(dir) = artifacts_dir() else {
-            return;
-        };
-        let m = Manifest::load(&dir).unwrap();
+        let m = Manifest::reference(Path::new("ref"));
         assert!(ModelWeights::load(&m, "nope").is_err());
+    }
+
+    #[test]
+    fn seed_is_stable_across_calls() {
+        let m = Manifest::reference(Path::new("ref"));
+        let a = ModelWeights::load(&m, "cdlm_dream").unwrap();
+        let b = ModelWeights::load(&m, "cdlm_dream").unwrap();
+        assert_eq!(a.seed, b.seed);
+        let c = ModelWeights::load(&m, "ar_dream").unwrap();
+        assert_ne!(a.seed, c.seed);
     }
 }

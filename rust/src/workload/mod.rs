@@ -3,7 +3,7 @@
 //!
 //! Generators must be byte-identical with python (same SplitMix64 draws
 //! in the same order); `artifacts/golden/tasks.json` pins parity in the
-//! integration tests. See DESIGN.md §2 for the paper-benchmark mapping:
+//! integration tests. Paper-benchmark mapping (rust/README.md):
 //! chain-arith↔GSM8K-CoT, deep-arith↔MATH, str-transform↔HumanEval,
 //! list-op↔MBPP.
 

@@ -1,0 +1,151 @@
+//! Backend-trait contract tests on the deterministic reference backend.
+//!
+//! Golden property: with a fixed seed, the decode trace (tokens, steps,
+//! model calls) of every one of the six methods is bit-identical across
+//! independently constructed runtimes — on any machine. This is what
+//! makes the artifact-free CI path a regression gate rather than a
+//! smoke test: any change to engine control flow, KV pool plumbing, or
+//! the reference model itself shifts a pinned trace.
+
+use cdlm::coordinator::methods::{self, spec_decode};
+use cdlm::coordinator::{DecodeOpts, DecodeOutcome, KvPool, Method, ALL_METHODS};
+use cdlm::runtime::{ModelWeights, Programs, Runtime};
+use cdlm::tokenizer::{Tokenizer, EOS, MASK};
+use cdlm::workload::{self, Family};
+
+const SEED: u64 = 0x5EED_0001;
+
+fn prompts(n: usize) -> Vec<Vec<i32>> {
+    let rt = Runtime::reference(SEED);
+    let geom = rt.manifest.geometry.clone();
+    let tok = Tokenizer::new();
+    workload::generate(Family::ChainArith, n, 0xE7A1)
+        .iter()
+        .map(|s| {
+            workload::encode_example(
+                &tok,
+                Family::ChainArith,
+                s,
+                geom.prompt_len,
+                geom.gen_len,
+            )
+            .unwrap()
+            .prompt_ids
+        })
+        .collect()
+}
+
+fn decode_all(seed: u64, prompts: &[Vec<i32>]) -> Vec<(Method, Vec<DecodeOutcome>)> {
+    let rt = Runtime::reference(seed);
+    let geom = rt.manifest.geometry.clone();
+    let opts = DecodeOpts::defaults(&geom);
+    let mut pool = KvPool::new(&geom, 16);
+    ALL_METHODS
+        .iter()
+        .map(|&m| {
+            let w = ModelWeights::load(&rt.manifest, &m.weights_for("dream"))
+                .unwrap();
+            let progs = Programs::new(&rt, &w);
+            let outs = methods::decode_batch(
+                &progs, &geom, &opts, m, prompts, &mut pool,
+            )
+            .unwrap();
+            (m, outs)
+        })
+        .collect()
+}
+
+#[test]
+fn same_seed_same_trace_across_all_six_methods() {
+    let ps = prompts(2);
+    let a = decode_all(SEED, &ps);
+    let b = decode_all(SEED, &ps);
+    for ((ma, outs_a), (mb, outs_b)) in a.iter().zip(&b) {
+        assert_eq!(ma, mb);
+        for (oa, ob) in outs_a.iter().zip(outs_b) {
+            assert_eq!(oa.gen, ob.gen, "{} tokens drift across runs", ma.name());
+            assert_eq!(oa.steps, ob.steps, "{} steps drift", ma.name());
+            assert_eq!(
+                oa.model_calls, ob.model_calls,
+                "{} model calls drift",
+                ma.name()
+            );
+            assert_eq!(oa.gen_len, ob.gen_len, "{} gen_len drift", ma.name());
+        }
+    }
+}
+
+#[test]
+fn different_seed_changes_the_trace() {
+    let ps = prompts(2);
+    let a = decode_all(SEED, &ps);
+    let b = decode_all(SEED ^ 0xFFFF, &ps);
+    let drifted = a
+        .iter()
+        .zip(&b)
+        .any(|((_, oa), (_, ob))| {
+            oa.iter().zip(ob).any(|(x, y)| x.gen != y.gen)
+        });
+    assert!(drifted, "the seed must actually steer decode outputs");
+}
+
+#[test]
+fn traces_stay_within_vocab_and_geometry() {
+    let ps = prompts(2);
+    for (m, outs) in decode_all(SEED, &ps) {
+        for o in outs {
+            assert!(o.steps >= 1, "{}: no refinement steps", m.name());
+            assert!(o.model_calls >= o.steps, "{}: calls < steps", m.name());
+            for &t in &o.gen {
+                assert!(
+                    t == MASK || (0..64).contains(&t),
+                    "{}: token {t} out of vocab",
+                    m.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn speculative_decode_is_lossless_vs_ar_greedy() {
+    let ps = prompts(2);
+    let rt = Runtime::reference(SEED);
+    let geom = rt.manifest.geometry.clone();
+    let opts = DecodeOpts::defaults(&geom);
+    let mut pool = KvPool::new(&geom, 16);
+
+    let ar_w = ModelWeights::load(&rt.manifest, "ar_dream").unwrap();
+    let ar_progs = Programs::new(&rt, &ar_w);
+    let ar_outs = methods::decode_batch(
+        &ar_progs, &geom, &opts, Method::Ar, &ps, &mut pool,
+    )
+    .unwrap();
+
+    let draft_w = ModelWeights::load(&rt.manifest, "cdlm_dream").unwrap();
+    let draft_progs = Programs::new(&rt, &draft_w);
+    for (i, p) in ps.iter().enumerate() {
+        let outs = spec_decode::decode(
+            &draft_progs,
+            &ar_progs,
+            &geom,
+            &opts,
+            std::slice::from_ref(p),
+            &mut pool,
+        )
+        .unwrap();
+        let a = &ar_outs[i];
+        let end = a
+            .gen
+            .iter()
+            .position(|&t| t == EOS)
+            .map(|x| x + 1)
+            .unwrap_or(a.gen.len());
+        assert_eq!(
+            &outs[0].gen[..end],
+            &a.gen[..end],
+            "speculative decode diverged from AR greedy at row {i}"
+        );
+    }
+    assert_eq!(pool.in_use(), 0, "spec decode leaked KV slots");
+}

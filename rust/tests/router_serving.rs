@@ -1,6 +1,8 @@
 //! Router + serving-path integration: the full channel architecture
 //! (submit -> admission -> dynamic batcher -> decode worker -> response)
 //! plus failure injection (bad requests, admission limits, shutdown).
+//! Runs hermetically: without an artifacts directory the worker loads
+//! the deterministic reference backend.
 
 use std::time::Duration;
 
@@ -10,23 +12,17 @@ use cdlm::server::http::encode_user_prompt;
 use cdlm::tokenizer::Tokenizer;
 use cdlm::workload::{self, Family};
 
-fn start_router() -> Option<Router> {
-    if !cdlm::artifacts_available() {
-        eprintln!("skipping: no artifacts");
-        return None;
-    }
-    Some(
-        Router::start(
-            cdlm::artifacts_dir(),
-            RouterConfig {
-                max_batch: 2,
-                max_wait: Duration::from_millis(10),
-                max_queue: 8,
-                pool_capacity: 8,
-            },
-        )
-        .expect("router starts"),
+fn start_router() -> Router {
+    Router::start(
+        cdlm::artifacts_dir(),
+        RouterConfig {
+            max_batch: 2,
+            max_wait: Duration::from_millis(10),
+            max_queue: 8,
+            pool_capacity: 8,
+        },
     )
+    .expect("router starts")
 }
 
 fn valid_request(method: Method) -> GenerateRequest {
@@ -42,7 +38,7 @@ fn valid_request(method: Method) -> GenerateRequest {
 
 #[test]
 fn request_roundtrip_through_worker() {
-    let Some(router) = start_router() else { return };
+    let router = start_router();
     let rx = router.submit(valid_request(Method::Cdlm)).unwrap();
     let resp = rx.recv().unwrap().expect("decode ok");
     assert!(resp.steps >= 1);
@@ -53,7 +49,7 @@ fn request_roundtrip_through_worker() {
 
 #[test]
 fn concurrent_requests_are_batched() {
-    let Some(router) = start_router() else { return };
+    let router = start_router();
     let receivers: Vec<_> = (0..4)
         .map(|_| router.submit(valid_request(Method::Cdlm)).unwrap())
         .collect();
@@ -73,7 +69,7 @@ fn concurrent_requests_are_batched() {
 
 #[test]
 fn wrong_prompt_length_rejected_at_admission() {
-    let Some(router) = start_router() else { return };
+    let router = start_router();
     let mut req = valid_request(Method::Cdlm);
     req.prompt_ids.truncate(10);
     let err = router.submit(req).err().expect("must reject");
@@ -83,7 +79,7 @@ fn wrong_prompt_length_rejected_at_admission() {
 
 #[test]
 fn unknown_backbone_rejected_at_admission() {
-    let Some(router) = start_router() else { return };
+    let router = start_router();
     let mut req = valid_request(Method::Cdlm);
     req.backbone = "gpt-oss".into();
     let err = router.submit(req).err().expect("must reject");
@@ -93,7 +89,7 @@ fn unknown_backbone_rejected_at_admission() {
 
 #[test]
 fn health_reports_worker_state() {
-    let Some(router) = start_router() else { return };
+    let router = start_router();
     let h = router.health().unwrap();
     assert_eq!(h.get("status").unwrap().as_str(), Some("ok"));
     assert_eq!(h.get("platform").unwrap().as_str(), Some("cpu"));
@@ -102,7 +98,7 @@ fn health_reports_worker_state() {
 
 #[test]
 fn shutdown_drains_pending_requests() {
-    let Some(router) = start_router() else { return };
+    let router = start_router();
     // enqueue one request and shut down immediately: the worker must
     // still answer it (pop_any drain on shutdown)
     let rx = router.submit(valid_request(Method::Ar)).unwrap();
@@ -113,7 +109,7 @@ fn shutdown_drains_pending_requests() {
 
 #[test]
 fn tau_override_travels_with_request() {
-    let Some(router) = start_router() else { return };
+    let router = start_router();
     let mut req = valid_request(Method::Cdlm);
     req.tau_conf = Some(0.0); // finalize whole blocks per step
     let rx = router.submit(req).unwrap();

@@ -1,0 +1,199 @@
+//! Minimal, std-only stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access and no vendored registry
+//! beyond this repository, so the serving crate depends on this shim by
+//! path. It covers exactly the surface the codebase uses:
+//!
+//! * [`Error`] — an opaque error that any `std::error::Error` converts
+//!   into via `?`, displayable with `{e}` (top message) and `{e:#}`
+//!   (full cause chain, `a: b: c`);
+//! * [`Result`] — `Result<T, Error>` alias;
+//! * [`anyhow!`], [`ensure!`], [`bail!`] — the construction macros.
+//!
+//! Context methods and downcasting are intentionally omitted; add them
+//! here if a future caller needs them rather than reaching for the real
+//! crate.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Opaque boxed error with a cause chain.
+pub struct Error(Box<dyn StdError + Send + Sync + 'static>);
+
+impl Error {
+    /// Build an error from a plain message.
+    pub fn msg(message: impl Into<String>) -> Error {
+        Error(Box::new(MessageError(message.into())))
+    }
+
+    /// Build an error from any concrete `std::error::Error`.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error(Box::new(error))
+    }
+
+    /// The top-level cause chain, starting at this error.
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn StdError + 'static)> {
+        Chain { next: Some(&*self.0 as &(dyn StdError + 'static)) }
+    }
+}
+
+struct Chain<'a> {
+    next: Option<&'a (dyn StdError + 'static)>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a (dyn StdError + 'static);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let cur = self.next?;
+        self.next = cur.source();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{e:#}`: the full cause chain, anyhow-style
+            for (i, cause) in self.chain().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{cause}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.0)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)?;
+        let causes: Vec<_> = self.chain().skip(1).collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in causes {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// A plain-message error (what `anyhow!("...")` produces).
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(
+                ::std::concat!("condition failed: ", ::std::stringify!($cond))
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(anyhow!("boom {}", 42))
+    }
+
+    #[test]
+    fn message_roundtrip() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "boom 42");
+        assert_eq!(format!("{e:#}"), "boom 42");
+    }
+
+    #[test]
+    fn std_errors_convert_via_question_mark() {
+        fn parse() -> Result<i32> {
+            let n: i32 = "not-a-number".parse()?;
+            Ok(n)
+        }
+        assert!(parse().is_err());
+    }
+
+    #[test]
+    fn ensure_formats_condition() {
+        fn check(x: i32) -> Result<()> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(())
+        }
+        assert!(check(1).is_ok());
+        let e = check(-1).unwrap_err();
+        assert_eq!(e.to_string(), "x must be positive, got -1");
+    }
+
+    #[test]
+    fn bail_returns_error() {
+        fn f() -> Result<()> {
+            bail!("nope");
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope");
+    }
+
+    #[test]
+    fn inline_captures_in_literal() {
+        let key = "geometry";
+        let e: Error = anyhow!("missing json key '{key}'");
+        assert_eq!(e.to_string(), "missing json key 'geometry'");
+    }
+}
