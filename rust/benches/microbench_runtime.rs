@@ -1,5 +1,5 @@
 //! Runtime microbenchmarks (the §Perf profile targets): per-program
-//! execute cost and KV pool gather/commit cost — the backend-level
+//! execute cost and KV pool view/commit cost — the backend-level
 //! numbers serving-latency regressions are diffed against. Runs on
 //! whichever backend the serving core loads (reference when no
 //! artifacts are present).
@@ -8,7 +8,7 @@
 
 use cdlm::bench_support as bench;
 use cdlm::coordinator::KvPool;
-use cdlm::runtime::{Programs, TensorF32, TensorI32};
+use cdlm::runtime::{Programs, TensorI32};
 use cdlm::util::stats;
 
 fn main() {
@@ -29,8 +29,12 @@ fn main() {
         core.rt.backend_name()
     );
     for bs in core.rt.manifest.buckets.clone() {
-        let kc = TensorF32::zeros(&[l, bs, h, s, dh]);
-        let vc = TensorF32::zeros(&[l, bs, h, s, dh]);
+        let mut pool = KvPool::new(&g, bs);
+        let slots: Vec<_> = (0..bs).map(|_| pool.alloc().unwrap()).collect();
+        let kp = vec![0.5f32; l * bs * h * p * dh];
+        for (lane, &slot) in slots.iter().enumerate() {
+            pool.write_prefill(slot, lane, bs, &kp, &kp);
+        }
         let vf = TensorI32::from_vec(&[bs], vec![0; bs]);
         let blk = TensorI32::from_vec(&[bs, b], vec![5; bs * b]);
         let ids = TensorI32::from_vec(&[bs, s], vec![5; bs * s]);
@@ -38,7 +42,7 @@ fn main() {
 
         let st = stats::bench(2, 10, || {
             progs
-                .student_block_step(bs, b, &kc, &vc, p as i32, &vf, &blk,
+                .student_block_step(bs, b, &pool.view(&slots, p), &vf, &blk,
                                     p as i32)
                 .unwrap();
         });
@@ -57,26 +61,33 @@ fn main() {
         );
     }
 
-    // KV pool host-side costs
-    let mut pool = KvPool::new(&g, 8);
-    let id = pool.alloc().unwrap();
+    // KV pool host-side costs: zero-copy view creation vs the batch-major
+    // materialization device backends still pay behind the seam
     let bs = 4;
+    let mut pool = KvPool::new(&g, bs);
+    let slots: Vec<_> = (0..bs).map(|_| pool.alloc().unwrap()).collect();
     let kp = vec![0.5f32; l * bs * h * p * dh];
-    pool.write_prefill(id, 0, bs, &kp, &kp);
-    let kb = vec![0.5f32; l * bs * h * b * dh];
-    let mut kout = vec![0.0f32; l * bs * h * s * dh];
-    let mut vout = kout.clone();
-    let ids1 = [id];
-    let gather = stats::bench(5, 100, || {
-        pool.gather_batch(&ids1, bs, &mut kout, &mut vout);
+    for (lane, &slot) in slots.iter().enumerate() {
+        pool.write_prefill(slot, lane, bs, &kp, &kp);
+    }
+    let view_cost = stats::bench(5, 100, || {
+        let v = pool.view(&slots, p);
+        std::hint::black_box(v.cache_len());
+    });
+    let gather_cost = stats::bench(5, 100, || {
+        let (k, v) = pool.view(&slots, p).to_batch_major();
+        std::hint::black_box((k.numel(), v.numel()));
     });
     println!(
-        "kv gather (1 lane into bs=4 buffer): {:.1}us   bytes/slot: {}KiB",
-        gather.mean() * 1e6,
+        "kv view (bs=4, zero-copy): {:.2}us   batch-major materialize \
+         (pjrt seam only): {:.1}us   bytes/slot: {}KiB",
+        view_cost.mean() * 1e6,
+        gather_cost.mean() * 1e6,
         pool.bytes_per_slot() / 1024
     );
     // one commit (append-only; repeated commits would overflow the slot)
+    let kb = vec![0.5f32; l * bs * h * b * dh];
     let t0 = std::time::Instant::now();
-    pool.commit_block(id, 0, bs, b, &kb, &kb);
+    pool.commit_block(slots[0], 0, bs, b, &kb, &kb);
     println!("kv commit (one block): {:.1}us", t0.elapsed().as_secs_f64() * 1e6);
 }

@@ -72,7 +72,7 @@ fn main() -> anyhow::Result<()> {
             &verify,
             &geom,
             &opts,
-            std::slice::from_ref(p),
+            &[p.as_slice()],
             &mut pool,
         )?;
         let o = &outs[0];

@@ -23,11 +23,14 @@ pub struct Pending<T> {
 
 /// Accumulates pending requests per group; `pop_ready` returns a batch
 /// when a group fills `max_batch` or its oldest member exceeds
-/// `max_wait`.
+/// `max_wait`. A running element count keeps `len()` O(1) (it used to
+/// walk every group queue), and each pop clones the popped `GroupKey`
+/// exactly once.
 pub struct DynamicBatcher<T> {
     pub max_batch: usize,
     pub max_wait: Duration,
     queues: HashMap<GroupKey, Vec<Pending<T>>>,
+    count: usize,
     pub total_enqueued: u64,
     pub total_batches: u64,
 }
@@ -38,6 +41,7 @@ impl<T> DynamicBatcher<T> {
             max_batch,
             max_wait,
             queues: HashMap::new(),
+            count: 0,
             total_enqueued: 0,
             total_batches: 0,
         }
@@ -45,15 +49,17 @@ impl<T> DynamicBatcher<T> {
 
     pub fn push(&mut self, p: Pending<T>) {
         self.total_enqueued += 1;
+        self.count += 1;
         self.queues.entry(p.key.clone()).or_default().push(p);
     }
 
+    /// Pending requests across all groups (running count, O(1)).
     pub fn len(&self) -> usize {
-        self.queues.values().map(Vec::len).sum()
+        self.count
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.count == 0
     }
 
     /// Next batch to run, if any group is ready at `now`.
@@ -61,13 +67,14 @@ impl<T> DynamicBatcher<T> {
         let key = self
             .queues
             .iter()
-            .filter(|(_, q)| !q.is_empty())
             .find(|(_, q)| {
-                q.len() >= self.max_batch
-                    || now.duration_since(q[0].enqueued) >= self.max_wait
+                !q.is_empty()
+                    && (q.len() >= self.max_batch
+                        || now.duration_since(q[0].enqueued) >= self.max_wait)
             })
             .map(|(k, _)| k.clone())?;
-        Some((key.clone(), self.drain(&key)))
+        let batch = self.drain(&key);
+        Some((key, batch))
     }
 
     /// Force-flush the oldest group regardless of readiness (shutdown).
@@ -78,13 +85,20 @@ impl<T> DynamicBatcher<T> {
             .filter(|(_, q)| !q.is_empty())
             .min_by_key(|(_, q)| q[0].enqueued)
             .map(|(k, _)| k.clone())?;
-        Some((key.clone(), self.drain(&key)))
+        let batch = self.drain(&key);
+        Some((key, batch))
     }
 
     fn drain(&mut self, key: &GroupKey) -> Vec<T> {
         let q = self.queues.get_mut(key).unwrap();
         let take = q.len().min(self.max_batch);
-        q.drain(..take).map(|p| p.payload).collect()
+        let batch: Vec<T> = q.drain(..take).map(|p| p.payload).collect();
+        if q.is_empty() {
+            self.queues.remove(key); // keep ready-scans proportional to live groups
+        }
+        self.count -= batch.len();
+        self.total_batches += 1;
+        batch
     }
 
     /// Earliest deadline across queues (for the worker's sleep).
@@ -169,6 +183,24 @@ mod tests {
         assert!(b.pop_any().is_some());
         assert!(b.pop_any().is_some());
         assert!(b.pop_any().is_none());
+    }
+
+    #[test]
+    fn running_count_tracks_push_and_pop() {
+        let mut b = DynamicBatcher::new(2, Duration::from_secs(0));
+        let t = Instant::now();
+        assert_eq!(b.len(), 0);
+        for i in 0..5 {
+            b.push(pend(Method::Cdlm, i, t));
+        }
+        b.push(pend(Method::Ar, 9, t));
+        assert_eq!(b.len(), 6);
+        let (_, batch) = b.pop_ready(t).unwrap();
+        assert_eq!(b.len(), 6 - batch.len());
+        while b.pop_any().is_some() {}
+        assert_eq!(b.len(), 0);
+        assert!(b.is_empty());
+        assert_eq!(b.total_batches, 4, "5 cdlm in batches of 2 + 1 ar");
     }
 
     #[test]

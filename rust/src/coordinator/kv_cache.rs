@@ -1,31 +1,34 @@
-//! Block KV-cache manager: a slab pool of per-sequence cache slots.
+//! Block KV-cache manager: lane-major contiguous slabs of per-sequence
+//! cache slots.
 //!
 //! Exact block-level caching is the paper's second pillar (§4.3): the
 //! prompt KV is written at prefill, each completed block's KV is
-//! committed once, and nothing is ever recomputed. The pool hands out
-//! fixed-size slots ([L, H, S, dh] per sequence, f32), tracks per-slot
-//! valid length, and gathers/scatters between per-sequence slots and the
-//! batch-major layout ([L, bs, H, S, dh]) the AOT programs consume.
+//! committed once, and nothing is ever recomputed. The pool owns two
+//! contiguous slabs (K and V); slot `i` is the `[L, H, S, dh]` region at
+//! offset `i * slot_elems`, handed out with O(1) alloc/free. Engines
+//! never copy the cache out: [`KvPool::view`] lends a zero-copy
+//! [`KvView`] (per-lane slot bases over the slabs, `cache_len`-bounded)
+//! that flows through the backend seam, and commits append in place per
+//! lane. The batch-major `[L, bs, H, S, dh]` staging copies the old
+//! `gather_batch` produced are gone from the decode loop; device
+//! backends that still need that layout materialize it behind the seam
+//! via `KvView::to_batch_major`.
 
 use anyhow::Result;
 
-use crate::runtime::Geometry;
+use crate::runtime::{Geometry, KvDims, KvView};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct SlotId(usize);
 
-#[derive(Debug)]
-struct Slot {
-    k: Vec<f32>, // [L, H, S, dh]
-    v: Vec<f32>,
-    cache_len: usize,
-    in_use: bool,
-}
-
 /// Slab pool with O(1) alloc/free.
 pub struct KvPool {
-    geom: Geometry,
-    slots: Vec<Slot>,
+    dims: KvDims,
+    prompt_len: usize,
+    k: Vec<f32>, // [capacity] x [L, H, S, dh], lane-major slots
+    v: Vec<f32>,
+    cache_lens: Vec<usize>,
+    used: Vec<bool>,
     free: Vec<usize>,
     slot_elems: usize,
     pub peak_in_use: usize,
@@ -33,19 +36,15 @@ pub struct KvPool {
 
 impl KvPool {
     pub fn new(geom: &Geometry, capacity: usize) -> Self {
-        let slot_elems =
-            geom.n_layers * geom.n_heads * geom.seq_len * geom.d_head;
-        let slots = (0..capacity)
-            .map(|_| Slot {
-                k: vec![0.0; slot_elems],
-                v: vec![0.0; slot_elems],
-                cache_len: 0,
-                in_use: false,
-            })
-            .collect();
+        let dims = KvDims::of(geom);
+        let slot_elems = dims.slot_elems();
         Self {
-            geom: geom.clone(),
-            slots,
+            dims,
+            prompt_len: geom.prompt_len,
+            k: vec![0.0; capacity * slot_elems],
+            v: vec![0.0; capacity * slot_elems],
+            cache_lens: vec![0; capacity],
+            used: vec![false; capacity],
             free: (0..capacity).rev().collect(),
             slot_elems,
             peak_in_use: 0,
@@ -53,11 +52,11 @@ impl KvPool {
     }
 
     pub fn capacity(&self) -> usize {
-        self.slots.len()
+        self.used.len()
     }
 
     pub fn in_use(&self) -> usize {
-        self.slots.len() - self.free.len()
+        self.used.len() - self.free.len()
     }
 
     pub fn bytes_per_slot(&self) -> usize {
@@ -69,28 +68,40 @@ impl KvPool {
             .free
             .pop()
             .ok_or_else(|| anyhow::anyhow!("KV pool exhausted"))?;
-        let s = &mut self.slots[idx];
-        debug_assert!(!s.in_use);
-        s.in_use = true;
-        s.cache_len = 0;
+        debug_assert!(!self.used[idx]);
+        self.used[idx] = true;
+        self.cache_lens[idx] = 0;
         self.peak_in_use = self.peak_in_use.max(self.in_use());
         Ok(SlotId(idx))
     }
 
     pub fn free(&mut self, id: SlotId) {
-        let s = &mut self.slots[id.0];
-        assert!(s.in_use, "double free of KV slot {id:?}");
-        s.in_use = false;
+        assert!(self.used[id.0], "double free of KV slot {id:?}");
+        self.used[id.0] = false;
         // zeroing is unnecessary for correctness (cache_len gates reads)
         self.free.push(id.0);
     }
 
     pub fn cache_len(&self, id: SlotId) -> usize {
-        self.slots[id.0].cache_len
+        self.cache_lens[id.0]
+    }
+
+    #[inline]
+    fn base(&self, id: SlotId) -> usize {
+        id.0 * self.slot_elems
+    }
+
+    /// Borrow a zero-copy view of `ids`' slots with the given lockstep
+    /// valid-prefix length. No cache data moves: the view is the slab
+    /// borrows plus one base offset per lane.
+    pub fn view(&self, ids: &[SlotId], cache_len: usize) -> KvView<'_> {
+        let bases = ids.iter().map(|&id| self.base(id)).collect();
+        KvView::new(&self.k, &self.v, bases, self.dims, cache_len)
     }
 
     /// Install prefill output for one lane. `k`/`v` are batch-major
-    /// [L, bs, H, P, dh] slices from the prefill program.
+    /// [L, bs, H, P, dh] slices from the prefill program; the prompt
+    /// region of the slot is the only part written.
     pub fn write_prefill(
         &mut self,
         id: SlotId,
@@ -99,24 +110,30 @@ impl KvPool {
         k: &[f32],
         v: &[f32],
     ) {
-        let g = &self.geom;
+        let g = self.dims;
         let (l_n, h_n, s_n, d) = (g.n_layers, g.n_heads, g.seq_len, g.d_head);
-        let p = g.prompt_len;
-        let slot = &mut self.slots[id.0];
+        let p = self.prompt_len;
+        assert_eq!(
+            k.len(),
+            l_n * bs * h_n * p * d,
+            "prefill KV must be [L, bs={bs}, H, P={p}, dh]"
+        );
+        let base = self.base(id);
         for l in 0..l_n {
             for h in 0..h_n {
                 let src = (((l * bs + lane) * h_n + h) * p) * d;
-                let dst = ((l * h_n + h) * s_n) * d;
-                slot.k[dst..dst + p * d].copy_from_slice(&k[src..src + p * d]);
-                slot.v[dst..dst + p * d].copy_from_slice(&v[src..src + p * d]);
+                let dst = base + ((l * h_n + h) * s_n) * d;
+                self.k[dst..dst + p * d].copy_from_slice(&k[src..src + p * d]);
+                self.v[dst..dst + p * d].copy_from_slice(&v[src..src + p * d]);
             }
         }
-        slot.cache_len = p;
+        self.cache_lens[id.0] = p;
     }
 
     /// Commit a finalized block's KV for one lane. `k_blk`/`v_blk` are
-    /// [L, bs, H, B, dh]; the block lands at the slot's current
-    /// cache_len, which advances by `blk` (exact append-only caching).
+    /// [L, bs, H, B, dh]; the block appends in place at the slot's
+    /// current cache_len, which advances by `blk` (exact append-only
+    /// caching — no other slab region is touched).
     pub fn commit_block(
         &mut self,
         id: SlotId,
@@ -126,46 +143,22 @@ impl KvPool {
         k_blk: &[f32],
         v_blk: &[f32],
     ) {
-        let g = &self.geom;
+        let g = self.dims;
         let (l_n, h_n, s_n, d) = (g.n_layers, g.n_heads, g.seq_len, g.d_head);
-        let pos = self.slots[id.0].cache_len;
+        let pos = self.cache_lens[id.0];
         assert!(pos + blk <= s_n, "cache overflow: {pos} + {blk} > {s_n}");
-        let slot = &mut self.slots[id.0];
+        let base = self.base(id);
         for l in 0..l_n {
             for h in 0..h_n {
                 let src = (((l * bs + lane) * h_n + h) * blk) * d;
-                let dst = ((l * h_n + h) * s_n + pos) * d;
-                slot.k[dst..dst + blk * d]
+                let dst = base + ((l * h_n + h) * s_n + pos) * d;
+                self.k[dst..dst + blk * d]
                     .copy_from_slice(&k_blk[src..src + blk * d]);
-                slot.v[dst..dst + blk * d]
+                self.v[dst..dst + blk * d]
                     .copy_from_slice(&v_blk[src..src + blk * d]);
             }
         }
-        slot.cache_len = pos + blk;
-    }
-
-    /// Gather lanes' slots into batch-major buffers [L, bs, H, S, dh].
-    /// Lanes beyond `ids.len()` are left untouched (dead-lane padding).
-    pub fn gather_batch(
-        &self,
-        ids: &[SlotId],
-        bs: usize,
-        k_out: &mut [f32],
-        v_out: &mut [f32],
-    ) {
-        let g = &self.geom;
-        let (l_n, h_n, s_n, d) = (g.n_layers, g.n_heads, g.seq_len, g.d_head);
-        debug_assert_eq!(k_out.len(), l_n * bs * h_n * s_n * d);
-        let row = h_n * s_n * d;
-        for (lane, id) in ids.iter().enumerate() {
-            let slot = &self.slots[id.0];
-            for l in 0..l_n {
-                let src = l * row;
-                let dst = (l * bs + lane) * row;
-                k_out[dst..dst + row].copy_from_slice(&slot.k[src..src + row]);
-                v_out[dst..dst + row].copy_from_slice(&slot.v[src..src + row]);
-            }
-        }
+        self.cache_lens[id.0] = pos + blk;
     }
 
     /// Direct write of full-sequence KV (approximate-cache baselines):
@@ -179,17 +172,17 @@ impl KvPool {
         k: &[f32],
         v: &[f32],
     ) {
-        let g = &self.geom;
+        let g = self.dims;
         let (l_n, h_n, s_n, d) = (g.n_layers, g.n_heads, g.seq_len, g.d_head);
         let row = h_n * s_n * d;
-        let slot = &mut self.slots[id.0];
+        let base = self.base(id);
         for l in 0..l_n {
             let src = (l * bs + lane) * row;
-            let dst = l * row;
-            slot.k[dst..dst + row].copy_from_slice(&k[src..src + row]);
-            slot.v[dst..dst + row].copy_from_slice(&v[src..src + row]);
+            let dst = base + l * row;
+            self.k[dst..dst + row].copy_from_slice(&k[src..src + row]);
+            self.v[dst..dst + row].copy_from_slice(&v[src..src + row]);
         }
-        slot.cache_len = s_n;
+        self.cache_lens[id.0] = s_n;
     }
 }
 
@@ -242,11 +235,11 @@ mod tests {
     }
 
     #[test]
-    fn prefill_commit_gather_roundtrip() {
+    fn prefill_commit_view_roundtrip() {
         let g = geom();
         let mut pool = KvPool::new(&g, 2);
         let id = pool.alloc().unwrap();
-        let (l_n, h_n, d, p, s, blk) = (2, 2, 4, 4, 8, 2);
+        let (l_n, h_n, d, p, blk) = (2usize, 2usize, 4usize, 4usize, 2usize);
         let bs = 1;
         // distinct values per (l, h, pos, d)
         let kp: Vec<f32> = (0..l_n * bs * h_n * p * d).map(|i| i as f32).collect();
@@ -260,35 +253,43 @@ mod tests {
         pool.commit_block(id, 0, bs, blk, &kb, &vb);
         assert_eq!(pool.cache_len(id), p + blk);
 
-        let mut k_out = vec![-1.0; l_n * bs * h_n * s * d];
-        let mut v_out = vec![-1.0; l_n * bs * h_n * s * d];
-        pool.gather_batch(&[id], bs, &mut k_out, &mut v_out);
-        // prompt row l=0,h=0,pos=0..4 lands at the front
-        assert_eq!(&k_out[..p * d], &kp[..p * d]);
-        // committed block lands at pos=4.. for l=0,h=0
-        let blk_at = p * d;
-        assert_eq!(&k_out[blk_at..blk_at + blk * d], &kb[..blk * d]);
+        let view = pool.view(&[id], p + blk);
+        // prompt l=0, h=0, pos=0..4 is the front of the prefill input
+        for pos in 0..p {
+            for f in 0..d {
+                assert_eq!(view.k_at(0, 0, 0, pos, f), (pos * d + f) as f32);
+                assert_eq!(view.v_at(0, 0, 0, pos, f), (pos * d + f) as f32 + 0.5);
+            }
+        }
+        // committed block lands at pos = p.. for l=0, h=0
+        for i in 0..blk {
+            for f in 0..d {
+                assert_eq!(
+                    view.k_at(0, 0, 0, p + i, f),
+                    1000.0 + (i * d + f) as f32
+                );
+            }
+        }
     }
 
     #[test]
-    fn gather_respects_lane_offsets() {
+    fn view_respects_lane_order() {
         let g = geom();
         let mut pool = KvPool::new(&g, 2);
         let a = pool.alloc().unwrap();
         let b = pool.alloc().unwrap();
-        let n = 2 * 1 * 2 * 4 * 4;
+        let n = 2 * 2 * 4 * 4; // [L, bs=1, H, P, dh]
         pool.write_prefill(a, 0, 1, &vec![1.0; n], &vec![1.0; n]);
         pool.write_prefill(b, 0, 1, &vec![2.0; n], &vec![2.0; n]);
-        let bs = 2;
-        let total = 2 * bs * 2 * 8 * 4;
-        let mut k_out = vec![0.0; total];
-        let mut v_out = vec![0.0; total];
-        pool.gather_batch(&[a, b], bs, &mut k_out, &mut v_out);
-        // lane 0 row l=0: ones in the prompt region
-        assert_eq!(k_out[0], 1.0);
-        // lane 1 row l=0 starts at offset h*s*d (row stride)
-        let row = 2 * 8 * 4;
-        assert_eq!(k_out[row], 2.0);
+        let view = pool.view(&[b, a], 4);
+        assert_eq!(view.bs(), 2);
+        assert_eq!(view.k_at(0, 0, 0, 0, 0), 2.0, "lane 0 is slot b");
+        assert_eq!(view.k_at(1, 0, 0, 0, 0), 1.0, "lane 1 is slot a");
+        // batch-major materialization places lane rows correctly
+        let (bk, _) = view.to_batch_major();
+        let row = 2 * 8 * 4; // [H, S, dh]
+        assert_eq!(bk.data[0], 2.0);
+        assert_eq!(bk.data[row], 1.0);
     }
 
     #[test]
@@ -320,8 +321,10 @@ mod tests {
         let g = geom();
         let mut pool = KvPool::new(&g, 1);
         let id = pool.alloc().unwrap();
-        let n = 2 * 1 * 2 * 8 * 4;
+        let n = 2 * 2 * 8 * 4;
         pool.write_full(id, 0, 1, &vec![3.0; n], &vec![3.0; n]);
         assert_eq!(pool.cache_len(id), g.seq_len);
+        let view = pool.view(&[id], g.seq_len);
+        assert_eq!(view.k_at(0, 1, 1, 7, 3), 3.0);
     }
 }

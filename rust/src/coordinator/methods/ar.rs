@@ -1,29 +1,31 @@
 //! Autoregressive baseline (paper Fig. 3 / §5.2.3): greedy decoding with
 //! an exact token-level KV cache. One `ar_step` per generated token;
 //! lanes stop at `<eos>` but the lockstep batch runs until all lanes
-//! finish (dead lanes keep executing, their outputs ignored).
+//! finish (dead lanes keep executing, their outputs ignored). Each step
+//! borrows a zero-copy `KvView` of the lane slots — the pre-view
+//! per-token `[L, bs, H, S, dh]` gather (the single largest memcpy in
+//! the old decode loop) no longer exists.
 
 use anyhow::Result;
 
 use super::DecodeOutcome;
 use crate::coordinator::kv_cache::{KvPool, SlotId};
 use crate::coordinator::sequence::SequenceState;
-use crate::runtime::{Geometry, Programs, TensorF32, TensorI32};
+use crate::runtime::{Geometry, Programs, TensorI32};
 use crate::tokenizer::EOS;
 
 pub fn decode(
     progs: &Programs,
     geom: &Geometry,
-    prompts: &[Vec<i32>],
+    prompts: &[&[i32]],
     pool: &mut KvPool,
 ) -> Result<Vec<DecodeOutcome>> {
     let bs = prompts.len();
-    let (p_len, g_len, s_len) = (geom.prompt_len, geom.gen_len, geom.seq_len);
-    let (l_n, h_n, dh) = (geom.n_layers, geom.n_heads, geom.d_head);
+    let (p_len, g_len) = (geom.prompt_len, geom.gen_len);
 
     let mut seqs: Vec<SequenceState> = prompts
         .iter()
-        .map(|p| SequenceState::new(geom, p.clone()))
+        .map(|p| SequenceState::new(geom, p))
         .collect();
     let valid_from =
         TensorI32::from_vec(&[bs], seqs.iter().map(|s| s.valid_from).collect());
@@ -47,11 +49,9 @@ pub fn decode(
         s.model_calls += 1;
     }
 
-    let mut k_host = TensorF32::zeros(&[l_n, bs, h_n, s_len, dh]);
-    let mut v_host = TensorF32::zeros(&[l_n, bs, h_n, s_len, dh]);
-    pool.gather_batch(&slots, bs, &mut k_host.data, &mut v_host.data);
-
     let mut cur: Vec<i32> = pre.tok.data.clone();
+    // reused every step: one [bs] token buffer
+    let mut tok_t = TensorI32::zeros(&[bs]);
     let mut done = vec![false; bs];
     for i in 0..g_len {
         for r in 0..bs {
@@ -67,13 +67,12 @@ pub fn decode(
         if done.iter().all(|&d| d) || i == g_len - 1 {
             break;
         }
+        tok_t.data.copy_from_slice(&cur);
         let out = progs.ar_step(
             bs,
-            &k_host,
-            &v_host,
-            (p_len + i) as i32,
+            &pool.view(&slots, p_len + i),
             &valid_from,
-            &TensorI32::from_vec(&[bs], cur.clone()),
+            &tok_t,
         )?;
         // append the new token's KV for every lane (exact caching)
         for (lane, &slot) in slots.iter().enumerate() {
@@ -82,8 +81,7 @@ pub fn decode(
                 seqs[lane].model_calls += 1;
             }
         }
-        pool.gather_batch(&slots, bs, &mut k_host.data, &mut v_host.data);
-        cur = out.tok.data.clone();
+        cur.copy_from_slice(&out.tok.data);
     }
     for slot in slots {
         pool.free(slot);

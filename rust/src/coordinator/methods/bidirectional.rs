@@ -26,7 +26,7 @@ pub fn decode(
     progs: &Programs,
     geom: &Geometry,
     opts: &DecodeOpts,
-    prompts: &[Vec<i32>],
+    prompts: &[&[i32]],
     policy: Policy,
 ) -> Result<Vec<DecodeOutcome>> {
     let bs = prompts.len();
@@ -41,12 +41,13 @@ pub fn decode(
 
     let mut seqs: Vec<SequenceState> = prompts
         .iter()
-        .map(|p| SequenceState::new(geom, p.clone()))
+        .map(|p| SequenceState::new(geom, p))
         .collect();
     let valid_from =
         TensorI32::from_vec(&[bs], seqs.iter().map(|s| s.valid_from).collect());
 
-    let mut ids = vec![0i32; bs * s_len];
+    // reused every step: one [bs, S] id buffer, no per-step allocation
+    let mut ids_t = TensorI32::zeros(&[bs, s_len]);
     for b in 0..num_blocks {
         let lo = b * blk;
         loop {
@@ -57,13 +58,11 @@ pub fn decode(
                 break;
             }
             for (r, s) in seqs.iter().enumerate() {
-                ids[r * s_len..(r + 1) * s_len].copy_from_slice(&s.full_ids());
+                s.copy_full_ids_into(
+                    &mut ids_t.data[r * s_len..(r + 1) * s_len],
+                );
             }
-            let out = progs.teacher_denoise(
-                bs,
-                &TensorI32::from_vec(&[bs, s_len], ids.clone()),
-                &valid_from,
-            )?;
+            let out = progs.teacher_denoise(bs, &ids_t, &valid_from)?;
             for r in 0..bs {
                 let base = r * s_len + p_len + lo;
                 let toks = &out.tok.data[base..base + blk];
@@ -110,7 +109,7 @@ pub fn decode_truncated(
     progs: &Programs,
     geom: &Geometry,
     opts: &DecodeOpts,
-    prompts: &[Vec<i32>],
+    prompts: &[&[i32]],
     steps_per_block: usize,
 ) -> Result<Vec<DecodeOutcome>> {
     let mut o = opts.clone();

@@ -11,16 +11,19 @@
 //! Both run `teacher_full_cache` for refresh steps and
 //! `teacher_block_approx` in between — the latter excludes the stale
 //! copy of the active block in favour of freshly computed K/V (the
-//! "dual" part of dual caching). With refresh_every = 1 the approx path
-//! degenerates to exact recomputation, which the integration tests use
-//! as a correctness anchor.
+//! "dual" part of dual caching). Refreshes overwrite the lane slots in
+//! place; approx steps borrow a zero-copy `KvView` spanning the whole
+//! (stale) sequence — no batch-major staging buffer exists on this
+//! path. With refresh_every = 1 the approx path degenerates to exact
+//! recomputation, which the integration tests use as a correctness
+//! anchor.
 
 use anyhow::Result;
 
 use super::{DecodeOpts, DecodeOutcome};
 use crate::coordinator::kv_cache::{KvPool, SlotId};
 use crate::coordinator::sequence::SequenceState;
-use crate::runtime::{Geometry, Programs, TensorF32, TensorI32};
+use crate::runtime::{Geometry, Programs, TensorI32};
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Variant {
@@ -32,7 +35,7 @@ pub fn decode(
     progs: &Programs,
     geom: &Geometry,
     opts: &DecodeOpts,
-    prompts: &[Vec<i32>],
+    prompts: &[&[i32]],
     pool: &mut KvPool,
     variant: Variant,
 ) -> Result<Vec<DecodeOutcome>> {
@@ -40,12 +43,10 @@ pub fn decode(
     let (p_len, g_len, s_len) = (geom.prompt_len, geom.gen_len, geom.seq_len);
     let blk = opts.block_size;
     let num_blocks = g_len / blk;
-    let (l_n, h_n, dh) = (geom.n_layers, geom.n_heads, geom.d_head);
-    let cache_elems = l_n * bs * h_n * s_len * dh;
 
     let mut seqs: Vec<SequenceState> = prompts
         .iter()
-        .map(|p| SequenceState::new(geom, p.clone()))
+        .map(|p| SequenceState::new(geom, p))
         .collect();
     let valid_from =
         TensorI32::from_vec(&[bs], seqs.iter().map(|s| s.valid_from).collect());
@@ -53,12 +54,9 @@ pub fn decode(
     let slots: Vec<SlotId> =
         (0..bs).map(|_| pool.alloc()).collect::<Result<_>>()?;
 
-    // reusable batch-major staging buffers for the cache
-    let mut k_host = TensorF32::zeros(&[l_n, bs, h_n, s_len, dh]);
-    let mut v_host = TensorF32::zeros(&[l_n, bs, h_n, s_len, dh]);
-    debug_assert_eq!(k_host.numel(), cache_elems);
-
-    let mut ids = vec![0i32; bs * s_len];
+    // reused across steps: [bs, S] refresh ids and [bs, B] block ids
+    let mut ids_t = TensorI32::zeros(&[bs, s_len]);
+    let mut blk_t = TensorI32::zeros(&[bs, blk]);
     let mut steps_since_refresh = usize::MAX; // force refresh first
 
     for b in 0..num_blocks {
@@ -77,18 +75,14 @@ pub fn decode(
             if refresh {
                 // full bidirectional pass: fresh logits + fresh KV stacks
                 for (r, s) in seqs.iter().enumerate() {
-                    ids[r * s_len..(r + 1) * s_len]
-                        .copy_from_slice(&s.full_ids());
+                    s.copy_full_ids_into(
+                        &mut ids_t.data[r * s_len..(r + 1) * s_len],
+                    );
                 }
-                let out = progs.teacher_full_cache(
-                    bs,
-                    &TensorI32::from_vec(&[bs, s_len], ids.clone()),
-                    &valid_from,
-                )?;
+                let out = progs.teacher_full_cache(bs, &ids_t, &valid_from)?;
                 for (lane, &slot) in slots.iter().enumerate() {
                     pool.write_full(slot, lane, bs, &out.k.data, &out.v.data);
                 }
-                pool.gather_batch(&slots, bs, &mut k_host.data, &mut v_host.data);
                 for &r in &active {
                     let base = r * s_len + p_len + lo;
                     finalize(
@@ -104,19 +98,18 @@ pub fn decode(
                 }
                 steps_since_refresh = 1;
             } else {
-                // approximate step: recompute the active block only
-                let mut blk_ids = vec![0i32; bs * blk];
+                // approximate step: recompute the active block only,
+                // reading the stale full-sequence cache through a view
                 for (r, s) in seqs.iter().enumerate() {
-                    blk_ids[r * blk..(r + 1) * blk]
+                    blk_t.data[r * blk..(r + 1) * blk]
                         .copy_from_slice(&s.gen[lo..lo + blk]);
                 }
                 let out = progs.teacher_block_approx(
                     bs,
                     blk,
-                    &k_host,
-                    &v_host,
+                    &pool.view(&slots, s_len),
                     &valid_from,
-                    &TensorI32::from_vec(&[bs, blk], blk_ids),
+                    &blk_t,
                     (p_len + lo) as i32,
                 )?;
                 for &r in &active {

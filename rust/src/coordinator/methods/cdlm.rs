@@ -6,10 +6,16 @@
 //!      cache + fresh block K/V; every masked position with confidence
 //!      >= tau is finalized in parallel (>=1 per step guaranteed);
 //!   3. when the block is complete, one commit call recomputes the
-//!      block's K/V from its *final* tokens and appends it to the cache
-//!      (counted in `model_calls`, not `steps` — see rust/README.md);
+//!      block's K/V from its *final* tokens and appends it in place to
+//!      the lane's slot (counted in `model_calls`, not `steps` — see
+//!      rust/README.md);
 //!   4. a finalized `<eos>` stops the request at the block boundary —
 //!      no compute is spent on later blocks (early stopping).
+//!
+//! The cache never leaves the pool: every program call borrows a
+//! zero-copy `KvView` over the lane-major slabs, so the per-block
+//! `[L, bs, H, S, dh]` staging copies of the pre-view engines are gone
+//! from this hot path entirely.
 //!
 //! This mirrors `python/compile/decoding.py::student_cdlm_decode`
 //! token-for-token; integration tests enforce parity via the
@@ -21,25 +27,24 @@ use anyhow::Result;
 use super::{DecodeOpts, DecodeOutcome};
 use crate::coordinator::kv_cache::{KvPool, SlotId};
 use crate::coordinator::sequence::SequenceState;
-use crate::runtime::{Geometry, Programs, TensorF32, TensorI32};
+use crate::runtime::{Geometry, Programs, TensorI32};
 
 pub fn decode(
     progs: &Programs,
     geom: &Geometry,
     opts: &DecodeOpts,
-    prompts: &[Vec<i32>],
+    prompts: &[&[i32]],
     pool: &mut KvPool,
 ) -> Result<Vec<DecodeOutcome>> {
     let bs = prompts.len();
-    let (p_len, g_len, s_len) = (geom.prompt_len, geom.gen_len, geom.seq_len);
+    let (p_len, g_len) = (geom.prompt_len, geom.gen_len);
     let blk = opts.block_size;
     anyhow::ensure!(g_len % blk == 0, "block {blk} must divide gen {g_len}");
     let num_blocks = g_len / blk;
-    let (l_n, h_n, dh) = (geom.n_layers, geom.n_heads, geom.d_head);
 
     let mut seqs: Vec<SequenceState> = prompts
         .iter()
-        .map(|p| SequenceState::new(geom, p.clone()))
+        .map(|p| SequenceState::new(geom, p))
         .collect();
     let valid_from =
         TensorI32::from_vec(&[bs], seqs.iter().map(|s| s.valid_from).collect());
@@ -63,13 +68,9 @@ pub fn decode(
         s.model_calls += 1;
     }
 
-    // reusable batch-major cache staging (no per-step allocation)
-    let mut k_host = TensorF32::zeros(&[l_n, bs, h_n, s_len, dh]);
-    let mut v_host = TensorF32::zeros(&[l_n, bs, h_n, s_len, dh]);
-    pool.gather_batch(&slots, bs, &mut k_host.data, &mut v_host.data);
-
     let mut cache_len = p_len;
-    let mut blk_ids = vec![0i32; bs * blk];
+    // reused every step and commit: one [bs, B] block-id buffer
+    let mut blk_t = TensorI32::zeros(&[bs, blk]);
     for b in 0..num_blocks {
         let lo = b * blk;
         let any_active = seqs.iter().any(|s| !s.done);
@@ -89,17 +90,15 @@ pub fn decode(
                 break;
             }
             for (r, s) in seqs.iter().enumerate() {
-                blk_ids[r * blk..(r + 1) * blk]
+                blk_t.data[r * blk..(r + 1) * blk]
                     .copy_from_slice(&s.gen[lo..lo + blk]);
             }
             let out = progs.student_block_step(
                 bs,
                 blk,
-                &k_host,
-                &v_host,
-                cache_len as i32,
+                &pool.view(&slots, cache_len),
                 &valid_from,
-                &TensorI32::from_vec(&[bs, blk], blk_ids.clone()),
+                &blk_t,
                 (p_len + lo) as i32,
             )?;
             for r in 0..bs {
@@ -132,17 +131,15 @@ pub fn decode(
         // ---- commit: recompute block KV from the *final* tokens so the
         // cache is exact (one extra model call, not a refinement step)
         for (r, s) in seqs.iter().enumerate() {
-            blk_ids[r * blk..(r + 1) * blk]
+            blk_t.data[r * blk..(r + 1) * blk]
                 .copy_from_slice(&s.gen[lo..lo + blk]);
         }
         let out = progs.student_block_step(
             bs,
             blk,
-            &k_host,
-            &v_host,
-            cache_len as i32,
+            &pool.view(&slots, cache_len),
             &valid_from,
-            &TensorI32::from_vec(&[bs, blk], blk_ids.clone()),
+            &blk_t,
             (p_len + lo) as i32,
         )?;
         for (lane, &slot) in slots.iter().enumerate() {
@@ -153,7 +150,6 @@ pub fn decode(
                 seqs[lane].model_calls += 1;
             }
         }
-        pool.gather_batch(&slots, bs, &mut k_host.data, &mut v_host.data);
         cache_len += blk;
     }
     for slot in slots {

@@ -119,13 +119,14 @@ impl Method {
 }
 
 /// Dispatch a batch decode. `prompts` length must equal the program
-/// bucket `bs`; the scheduler handles padding.
+/// bucket `bs`; the scheduler handles padding (lanes are borrowed, so
+/// padded lanes can alias a live prompt without copying it).
 pub fn decode_batch(
     progs: &Programs,
     geom: &Geometry,
     opts: &DecodeOpts,
     method: Method,
-    prompts: &[Vec<i32>],
+    prompts: &[&[i32]],
     pool: &mut KvPool,
 ) -> Result<Vec<DecodeOutcome>> {
     match method {

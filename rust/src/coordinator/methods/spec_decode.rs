@@ -15,6 +15,11 @@
 //!      (positions beyond the accepted prefix are recomputed when they
 //!      are re-drafted — the cache stays exact).
 //!
+//! Both cache sets (drafter + verifier) live in one pool; every program
+//! call borrows a zero-copy `KvView` of the relevant slot set — the
+//! four `[L, bs, H, S, dh]` staging buffers of the pre-view engine are
+//! gone.
+//!
 //! The output equals AR greedy decoding exactly (same tokens), but with
 //! fewer verifier passes when the drafter agrees — the acceptance rate
 //! is the figure of merit (reported in `DecodeOutcome::steps` as
@@ -25,7 +30,7 @@ use anyhow::Result;
 use super::{DecodeOpts, DecodeOutcome};
 use crate::coordinator::kv_cache::{KvPool, SlotId};
 use crate::coordinator::sequence::SequenceState;
-use crate::runtime::{Geometry, Programs, TensorF32, TensorI32};
+use crate::runtime::{Geometry, Programs, TensorI32};
 use crate::tokenizer::MASK;
 
 /// Decode with CDLM drafts + AR verification. `draft_progs` runs the
@@ -36,18 +41,17 @@ pub fn decode(
     verify_progs: &Programs,
     geom: &Geometry,
     opts: &DecodeOpts,
-    prompts: &[Vec<i32>],
+    prompts: &[&[i32]],
     pool: &mut KvPool,
 ) -> Result<Vec<DecodeOutcome>> {
     let bs = prompts.len();
-    let (p_len, g_len, s_len) = (geom.prompt_len, geom.gen_len, geom.seq_len);
+    let (p_len, g_len) = (geom.prompt_len, geom.gen_len);
     let blk = geom.block_size;
     let num_blocks = g_len / blk;
-    let (l_n, h_n, dh) = (geom.n_layers, geom.n_heads, geom.d_head);
 
     let mut seqs: Vec<SequenceState> = prompts
         .iter()
-        .map(|p| SequenceState::new(geom, p.clone()))
+        .map(|p| SequenceState::new(geom, p))
         .collect();
     let valid_from =
         TensorI32::from_vec(&[bs], seqs.iter().map(|s| s.valid_from).collect());
@@ -71,17 +75,10 @@ pub fn decode(
         seqs[lane].model_calls += 2;
     }
 
-    let shape = [l_n, bs, h_n, s_len, dh];
-    let mut dk_host = TensorF32::zeros(&shape);
-    let mut dv_host = TensorF32::zeros(&shape);
-    let mut vk_host = TensorF32::zeros(&shape);
-    let mut vv_host = TensorF32::zeros(&shape);
-    pool.gather_batch(&d_slots, bs, &mut dk_host.data, &mut dv_host.data);
-    pool.gather_batch(&v_slots, bs, &mut vk_host.data, &mut vv_host.data);
-
     // verifier's next-token proposal entering the current block
     let mut next_tok: Vec<i32> = v_pre.tok.data.clone();
-    let mut blk_ids = vec![MASK; bs * blk];
+    // reused [bs, B] block-id buffer for every draft/verify/commit call
+    let mut blk_t = TensorI32::from_vec(&[bs, blk], vec![MASK; bs * blk]);
     let mut cache_len = p_len;
 
     for b in 0..num_blocks {
@@ -100,17 +97,15 @@ pub fn decode(
                 break;
             }
             for (r, s) in seqs.iter().enumerate() {
-                blk_ids[r * blk..(r + 1) * blk]
+                blk_t.data[r * blk..(r + 1) * blk]
                     .copy_from_slice(&s.gen[lo..lo + blk]);
             }
             let out = draft_progs.student_block_step(
                 bs,
                 blk,
-                &dk_host,
-                &dv_host,
-                cache_len as i32,
+                &pool.view(&d_slots, cache_len),
                 &valid_from,
-                &TensorI32::from_vec(&[bs, blk], blk_ids.clone()),
+                &blk_t,
                 (p_len + lo) as i32,
             )?;
             for r in 0..bs {
@@ -140,17 +135,15 @@ pub fn decode(
 
         // ---- 2. one parallel verify pass over the drafted block
         for (r, s) in seqs.iter().enumerate() {
-            blk_ids[r * blk..(r + 1) * blk]
+            blk_t.data[r * blk..(r + 1) * blk]
                 .copy_from_slice(&s.gen[lo..lo + blk]);
         }
         let ver = verify_progs.ar_verify(
             bs,
             blk,
-            &vk_host,
-            &vv_host,
-            cache_len as i32,
+            &pool.view(&v_slots, cache_len),
             &valid_from,
-            &TensorI32::from_vec(&[bs, blk], blk_ids.clone()),
+            &blk_t,
             (p_len + lo) as i32,
         )?;
         // ---- 3. greedy acceptance per lane
@@ -196,10 +189,8 @@ pub fn decode(
                 opts,
                 &mut seqs,
                 &valid_from,
-                &dk_host,
-                &dv_host,
-                &vk_host,
-                &vv_host,
+                pool,
+                (d_slots.as_slice(), v_slots.as_slice()),
                 lo,
                 cache_len,
                 &mut next_tok,
@@ -215,17 +206,16 @@ pub fn decode(
             break;
         }
         for (r, s) in seqs.iter().enumerate() {
-            blk_ids[r * blk..(r + 1) * blk]
+            blk_t.data[r * blk..(r + 1) * blk]
                 .copy_from_slice(&s.gen[lo..lo + blk]);
         }
-        let blk_t = TensorI32::from_vec(&[bs, blk], blk_ids.clone());
         let dcommit = draft_progs.student_block_step(
-            bs, blk, &dk_host, &dv_host, cache_len as i32, &valid_from,
-            &blk_t, (p_len + lo) as i32,
+            bs, blk, &pool.view(&d_slots, cache_len), &valid_from, &blk_t,
+            (p_len + lo) as i32,
         )?;
         let vcommit = verify_progs.ar_verify(
-            bs, blk, &vk_host, &vv_host, cache_len as i32, &valid_from,
-            &blk_t, (p_len + lo) as i32,
+            bs, blk, &pool.view(&v_slots, cache_len), &valid_from, &blk_t,
+            (p_len + lo) as i32,
         )?;
         for lane in 0..bs {
             if !seqs[lane].done {
@@ -237,8 +227,6 @@ pub fn decode(
                 next_tok[lane] = vcommit.tok.data[lane * blk + blk - 1];
             }
         }
-        pool.gather_batch(&d_slots, bs, &mut dk_host.data, &mut dv_host.data);
-        pool.gather_batch(&v_slots, bs, &mut vk_host.data, &mut vv_host.data);
         cache_len += blk;
     }
     for slot in d_slots.into_iter().chain(v_slots) {
@@ -261,7 +249,8 @@ pub fn decode(
 
 /// Re-draft + re-verify the unfinished tail of a block until every live
 /// lane has it fully finalized. Bounded: each verify pass accepts at
-/// least one token per lane.
+/// least one token per lane. Reads both cache sets through fresh views
+/// per call (`slots` is the (draft, verify) slot-set pair).
 #[allow(clippy::too_many_arguments)]
 fn continue_redraft(
     draft_progs: &Programs,
@@ -270,18 +259,17 @@ fn continue_redraft(
     opts: &DecodeOpts,
     seqs: &mut [SequenceState],
     valid_from: &TensorI32,
-    dk_host: &TensorF32,
-    dv_host: &TensorF32,
-    vk_host: &TensorF32,
-    vv_host: &TensorF32,
+    pool: &KvPool,
+    slots: (&[SlotId], &[SlotId]),
     lo: usize,
     cache_len: usize,
     next_tok: &mut [i32],
 ) -> Result<()> {
+    let (d_slots, v_slots) = slots;
     let bs = seqs.len();
     let blk = geom.block_size;
     let p_len = geom.prompt_len;
-    let mut blk_ids = vec![MASK; bs * blk];
+    let mut blk_t = TensorI32::from_vec(&[bs, blk], vec![MASK; bs * blk]);
     let mut guard = 0;
     loop {
         guard += 1;
@@ -305,12 +293,11 @@ fn continue_redraft(
                 break;
             }
             for (r, s) in seqs.iter().enumerate() {
-                blk_ids[r * blk..(r + 1) * blk]
+                blk_t.data[r * blk..(r + 1) * blk]
                     .copy_from_slice(&s.gen[lo..lo + blk]);
             }
             let out = draft_progs.student_block_step(
-                bs, blk, dk_host, dv_host, cache_len as i32, valid_from,
-                &TensorI32::from_vec(&[bs, blk], blk_ids.clone()),
+                bs, blk, &pool.view(d_slots, cache_len), valid_from, &blk_t,
                 (p_len + lo) as i32,
             )?;
             for &r in &need {
@@ -327,12 +314,11 @@ fn continue_redraft(
         }
         // verify
         for (r, s) in seqs.iter().enumerate() {
-            blk_ids[r * blk..(r + 1) * blk]
+            blk_t.data[r * blk..(r + 1) * blk]
                 .copy_from_slice(&s.gen[lo..lo + blk]);
         }
         let ver = verify_progs.ar_verify(
-            bs, blk, vk_host, vv_host, cache_len as i32, valid_from,
-            &TensorI32::from_vec(&[bs, blk], blk_ids.clone()),
+            bs, blk, &pool.view(v_slots, cache_len), valid_from, &blk_t,
             (p_len + lo) as i32,
         )?;
         for &r in &unfinished {

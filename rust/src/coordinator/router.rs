@@ -1,12 +1,16 @@
 //! Request router + serving core.
 //!
-//! Backends may hold `!Send` state (the PJRT handles wrap `Rc`s over C
-//! pointers), so the architecture confines the whole `ServingCore`
-//! (runtime, weights, KV pool, metrics) to one decode-worker thread,
-//! and the rest of the process — HTTP handler threads, the CLI — talks
-//! to it purely through channels. On a single-core box one decode
-//! worker is also the right degree of parallelism; the dynamic batcher,
-//! not thread count, provides concurrency.
+//! All backend state (runtime, weights, KV pool, metrics) lives in one
+//! `ServingCore` owned by the decode-worker thread; HTTP handler
+//! threads and the CLI talk to it purely through channels. Within the
+//! worker, ready batcher groups are independent — different (backbone,
+//! method) keys never share sequence state or KV slots — so the worker
+//! drains every ready group per wakeup and decodes them concurrently on
+//! scoped threads (each group against its own KV pool), bounded by the
+//! backend's `max_concurrency`. Backends that must stay single-threaded
+//! (PJRT reports `max_concurrency() == 1`) keep the old serial path;
+//! responses and metrics are always emitted in group order, so traces
+//! are identical either way.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -24,6 +28,7 @@ use super::scheduler::Engine;
 use crate::runtime::{Geometry, ModelWeights, Runtime};
 use crate::tokenizer::Tokenizer;
 use crate::util::json::{self, Json};
+use crate::util::threadpool;
 
 // ---------------------------------------------------------------------------
 // ServingCore: single-threaded owner of all backend state
@@ -87,11 +92,17 @@ impl ServingCore {
         let weights = &self.weights[&model];
         let engine = Engine::new(&self.rt, weights);
         let outcomes = engine.decode(key.method, opts, prompts, &mut self.pool)?;
+        self.record_group(key, &outcomes);
+        Ok(outcomes)
+    }
+
+    /// Fold a group's outcomes into the per-(backbone, method) metrics.
+    fn record_group(&mut self, key: &GroupKey, outcomes: &[DecodeOutcome]) {
         let agg = self
             .metrics
             .entry(format!("{}/{}", key.backbone, key.method.name()))
             .or_default();
-        for o in &outcomes {
+        for o in outcomes {
             agg.record(&RequestRecord {
                 latency: o.latency,
                 steps: o.steps,
@@ -100,7 +111,6 @@ impl ServingCore {
                 correct: None,
             });
         }
-        Ok(outcomes)
     }
 
     pub fn metrics_json(&self) -> Json {
@@ -328,6 +338,10 @@ fn worker_loop(
             Err(mpsc::RecvTimeoutError::Timeout) => {}
             Err(mpsc::RecvTimeoutError::Disconnected) => shutdown = true,
         }
+        // drain every ready group this wakeup, then dispatch them
+        // together — independent groups decode concurrently
+        let mut groups: Vec<(GroupKey, Vec<(GenerateRequest, Responder)>)> =
+            Vec::new();
         loop {
             let item = if shutdown {
                 batcher.pop_any()
@@ -337,26 +351,36 @@ fn worker_loop(
             let Some((key, items)) = item else { break };
             queued.fetch_sub(items.len().min(queued.load(Ordering::SeqCst)),
                              Ordering::SeqCst);
-            run_group(core, &key, items);
+            groups.push((key, items));
         }
+        run_groups(core, groups);
         if shutdown && batcher.is_empty() {
             return;
         }
     }
 }
 
-fn run_group(
-    core: &mut ServingCore,
-    key: &GroupKey,
-    items: Vec<(GenerateRequest, Responder)>,
-) {
-    let mut opts = DecodeOpts::defaults(&core.rt.manifest.geometry.clone());
+/// Decode opts for one group (per-request tau overrides win).
+fn group_opts(
+    geom: &Geometry,
+    items: &[(GenerateRequest, Responder)],
+) -> DecodeOpts {
+    let mut opts = DecodeOpts::defaults(geom);
     if let Some(t) = items.iter().find_map(|(r, _)| r.tau_conf) {
         opts.tau_conf = t;
     }
-    let prompts: Vec<Vec<i32>> =
-        items.iter().map(|(r, _)| r.prompt_ids.clone()).collect();
-    match core.decode_group(key, &prompts, &opts) {
+    opts
+}
+
+/// Answer one group's requests from its decode result. Metrics are
+/// recorded by the caller (serial path: inside `decode_group`; parallel
+/// path: explicitly, after the scoped join), never here.
+fn respond_group(
+    core: &ServingCore,
+    items: Vec<(GenerateRequest, Responder)>,
+    result: Result<Vec<DecodeOutcome>>,
+) {
+    match result {
         Ok(outcomes) => {
             for ((_, resp), o) in items.into_iter().zip(outcomes) {
                 let text = core.tokenizer.decode(&o.gen, true);
@@ -376,5 +400,87 @@ fn run_group(
                 let _ = resp.send(Err(msg.clone()));
             }
         }
+    }
+}
+
+/// Run a wakeup's worth of batcher groups. A single group (the common
+/// case) decodes on the worker thread against the shared pool; several
+/// groups fan out on scoped threads, each with its own KV pool and slot
+/// set, then respond in group order — decode traces are identical to
+/// running the groups back to back.
+fn run_groups(
+    core: &mut ServingCore,
+    groups: Vec<(GroupKey, Vec<(GenerateRequest, Responder)>)>,
+) {
+    if groups.is_empty() {
+        return;
+    }
+    let threads = crate::coordinator::scheduler::decode_threads(&core.rt);
+    // resolve every group's weights up front; any load failure drops to
+    // the serial path, which reproduces the error per group
+    let all_loaded = groups.iter().all(|(key, _)| {
+        core.ensure_weights(&key.method.weights_for(&key.backbone)).is_ok()
+    });
+    if groups.len() == 1 || threads <= 1 || !all_loaded {
+        for (key, items) in groups {
+            let opts = group_opts(core.geometry(), &items);
+            let prompts: Vec<Vec<i32>> =
+                items.iter().map(|(r, _)| r.prompt_ids.clone()).collect();
+            let result = core.decode_group(&key, &prompts, &opts);
+            respond_group(core, items, result);
+        }
+        return;
+    }
+    // parallel: each group decodes on a scoped worker against a private
+    // KV pool; groups share only the immutable runtime + weights map
+    let geom = core.rt.manifest.geometry.clone();
+    let pool_cap = groups
+        .iter()
+        .map(|(_, items)| items.len())
+        .chain(core.rt.manifest.buckets.iter().copied())
+        .max()
+        .unwrap_or(4);
+    let meta: Vec<(String, Method, Vec<Vec<i32>>, DecodeOpts)> = groups
+        .iter()
+        .map(|(key, items)| {
+            (
+                key.method.weights_for(&key.backbone),
+                key.method,
+                items.iter().map(|(r, _)| r.prompt_ids.clone()).collect(),
+                group_opts(&geom, items),
+            )
+        })
+        .collect();
+    let mut results: Vec<Option<Result<Vec<DecodeOutcome>>>> = Vec::new();
+    results.resize_with(groups.len(), || None);
+    {
+        let rt = &core.rt;
+        let weights_map = &core.weights;
+        let geom_ref = &geom;
+        // split the thread budget between the group fan-out (here) and
+        // each group's own chunk fan-out, so nesting never runs more
+        // than ~`threads` CPU-bound workers in total
+        let per_group = (threads / groups.len()).max(1);
+        let jobs: Vec<_> = results
+            .iter_mut()
+            .zip(&meta)
+            .map(|(slot, (model, method, prompts, opts))| {
+                move || {
+                    let engine = Engine::new(rt, &weights_map[model]);
+                    let mut pool = KvPool::new(geom_ref, pool_cap);
+                    *slot = Some(engine.decode_with_threads(
+                        per_group, *method, opts, prompts, &mut pool,
+                    ));
+                }
+            })
+            .collect();
+        threadpool::scoped(threads, jobs);
+    }
+    for ((key, items), result) in groups.into_iter().zip(results) {
+        let result = result.expect("group executor dropped a group");
+        if let Ok(outcomes) = &result {
+            core.record_group(&key, outcomes);
+        }
+        respond_group(core, items, result);
     }
 }

@@ -1,15 +1,28 @@
-//! Decode scheduler: bucket selection, batch padding, engine dispatch.
+//! Decode scheduler: bucket selection, batch padding, engine dispatch,
+//! and the parallel chunk executor.
 //!
 //! AOT programs exist for fixed batch buckets (manifest `buckets`, e.g.
 //! {1, 2, 4}); the scheduler chunks a request list into bucket-sized
-//! lockstep batches, pads the tail chunk with replicated prompts (dead
-//! lanes), runs the decode engine, and drops padded outcomes.
+//! lockstep batches, pads the tail chunk by *borrowing* a live lane
+//! (dead lanes never clone prompt buffers), runs the decode engine, and
+//! drops padded outcomes.
+//!
+//! Chunks are independent by construction — each gets its own sequence
+//! states and its own KV slot set, and every decode engine's outputs
+//! depend only on its own chunk's content. `Engine::decode` therefore
+//! dispatches multi-chunk plans concurrently on scoped worker threads
+//! (`util::threadpool::scoped`), bounded by the backend's
+//! `max_concurrency` (overridable with `CDLM_DECODE_THREADS`), and
+//! reassembles results in chunk order — same-seed decode traces are
+//! byte-identical to the serial path, which
+//! `tests/parallel_decode.rs` pins property-style.
 
 use anyhow::Result;
 
 use super::kv_cache::KvPool;
 use super::methods::{self, DecodeOpts, DecodeOutcome, Method};
 use crate::runtime::{Geometry, ModelWeights, Programs, Runtime};
+use crate::util::threadpool;
 
 /// An engine bound to one model's weights.
 pub struct Engine<'rt> {
@@ -24,7 +37,16 @@ impl<'rt> Engine<'rt> {
         Self { rt, weights, geom }
     }
 
+    /// Worker threads the chunk executor may use (see
+    /// [`decode_threads`]).
+    pub fn decode_threads(&self) -> usize {
+        decode_threads(self.rt)
+    }
+
     /// Decode `prompts` with `method`, chunking to exported buckets.
+    /// Multi-chunk plans run concurrently when the backend allows it;
+    /// outcomes are always returned in request order and are
+    /// trace-identical to [`Engine::decode_serial`].
     pub fn decode(
         &self,
         method: Method,
@@ -32,15 +54,57 @@ impl<'rt> Engine<'rt> {
         prompts: &[Vec<i32>],
         pool: &mut KvPool,
     ) -> Result<Vec<DecodeOutcome>> {
+        self.decode_with_threads(self.decode_threads(), method, opts,
+                                 prompts, pool)
+    }
+
+    /// Strictly serial decode on the shared pool (the reference path
+    /// the parallel executor is pinned against).
+    pub fn decode_serial(
+        &self,
+        method: Method,
+        opts: &DecodeOpts,
+        prompts: &[Vec<i32>],
+        pool: &mut KvPool,
+    ) -> Result<Vec<DecodeOutcome>> {
+        self.decode_with_threads(1, method, opts, prompts, pool)
+    }
+
+    /// Decode with an explicit thread budget (tests pin parallel ==
+    /// serial through this entry point). The budget is always clamped
+    /// to the backend's `max_concurrency` — a single-threaded backend
+    /// (PJRT) can never be fanned out, whatever the caller asks for.
+    pub fn decode_with_threads(
+        &self,
+        threads: usize,
+        method: Method,
+        opts: &DecodeOpts,
+        prompts: &[Vec<i32>],
+        pool: &mut KvPool,
+    ) -> Result<Vec<DecodeOutcome>> {
+        let threads =
+            threads.min(self.rt.backend().max_concurrency().max(1));
+        let chunks = plan_chunks(prompts.len(), &self.rt.manifest.buckets);
+        if threads <= 1 || chunks.len() <= 1 {
+            return self.run_chunks_serial(&chunks, method, opts, prompts,
+                                          pool);
+        }
+        self.run_chunks_parallel(&chunks, threads, method, opts, prompts)
+    }
+
+    fn run_chunks_serial(
+        &self,
+        chunks: &[Chunk],
+        method: Method,
+        opts: &DecodeOpts,
+        prompts: &[Vec<i32>],
+        pool: &mut KvPool,
+    ) -> Result<Vec<DecodeOutcome>> {
         let progs = Programs::new(self.rt, self.weights);
         let mut out = Vec::with_capacity(prompts.len());
-        for chunk in plan_chunks(prompts.len(), &self.rt.manifest.buckets) {
-            let lo = out.len();
-            let real = &prompts[lo..lo + chunk.real];
-            let mut padded: Vec<Vec<i32>> = real.to_vec();
-            while padded.len() < chunk.bucket {
-                padded.push(real.last().unwrap().clone());
-            }
+        for chunk in chunks {
+            let padded = pad_chunk(&prompts[out.len()..out.len() + chunk.real],
+                                   chunk.bucket);
             let mut results = methods::decode_batch(
                 &progs, &self.geom, opts, method, &padded, pool,
             )?;
@@ -49,6 +113,89 @@ impl<'rt> Engine<'rt> {
         }
         Ok(out)
     }
+
+    /// One scoped job per chunk, each against its own KV slot set (a
+    /// private pool sized to the chunk bucket — the engines allocate at
+    /// most one slot per lane). Results land in per-chunk slots and are
+    /// reassembled in plan order, so the outcome stream is deterministic
+    /// regardless of which worker finishes first.
+    fn run_chunks_parallel(
+        &self,
+        chunks: &[Chunk],
+        threads: usize,
+        method: Method,
+        opts: &DecodeOpts,
+        prompts: &[Vec<i32>],
+    ) -> Result<Vec<DecodeOutcome>> {
+        let mut starts = Vec::with_capacity(chunks.len());
+        let mut acc = 0usize;
+        for c in chunks {
+            starts.push(acc);
+            acc += c.real;
+        }
+        let mut results: Vec<Option<Result<Vec<DecodeOutcome>>>> = Vec::new();
+        results.resize_with(chunks.len(), || None);
+        let (rt, weights, geom) = (self.rt, self.weights, &self.geom);
+        let jobs: Vec<_> = results
+            .iter_mut()
+            .zip(chunks.iter().zip(&starts))
+            .map(|(slot, (&chunk, &start))| {
+                move || {
+                    let progs = Programs::new(rt, weights);
+                    let mut pool = KvPool::new(geom, chunk.bucket);
+                    let padded = pad_chunk(
+                        &prompts[start..start + chunk.real],
+                        chunk.bucket,
+                    );
+                    let r = methods::decode_batch(
+                        &progs, geom, opts, method, &padded, &mut pool,
+                    );
+                    *slot = Some(r.map(|mut v| {
+                        v.truncate(chunk.real);
+                        v
+                    }));
+                }
+            })
+            .collect();
+        threadpool::scoped(threads, jobs);
+        let mut out = Vec::with_capacity(prompts.len());
+        for r in results {
+            out.extend(r.expect("chunk executor dropped a chunk")?);
+        }
+        Ok(out)
+    }
+}
+
+/// Worker threads the decode executors (chunk fan-out here, group
+/// fan-out in the router worker) may use: the machine's parallelism,
+/// overridable with `CDLM_DECODE_THREADS`, always clamped to the
+/// backend's `max_concurrency`. A backend cap of 1 (PJRT) wins over
+/// everything — those backends must never see calls from two threads.
+pub fn decode_threads(rt: &Runtime) -> usize {
+    let cap = rt.backend().max_concurrency().max(1);
+    if cap == 1 {
+        return 1;
+    }
+    let machine = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    std::env::var("CDLM_DECODE_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .map(|n| n.max(1))
+        .unwrap_or(machine)
+        .min(cap)
+}
+
+/// Borrow `real` lanes and pad to `bucket` by aliasing the last live
+/// lane — no prompt buffer is ever cloned for a dead lane.
+fn pad_chunk(real: &[Vec<i32>], bucket: usize) -> Vec<&[i32]> {
+    let mut padded: Vec<&[i32]> = real.iter().map(Vec::as_slice).collect();
+    let last = *padded.last().expect("chunk has at least one live lane");
+    while padded.len() < bucket {
+        padded.push(last);
+    }
+    padded
 }
 
 /// One lockstep batch: `real` live lanes padded up to `bucket`.
@@ -112,5 +259,16 @@ mod tests {
             let valid = chunks.iter().all(|c| c.real <= c.bucket && c.real > 0);
             total == n && valid
         });
+    }
+
+    #[test]
+    fn pad_chunk_aliases_last_lane() {
+        let prompts = vec![vec![1, 2], vec![3, 4]];
+        let padded = pad_chunk(&prompts, 4);
+        assert_eq!(padded.len(), 4);
+        assert_eq!(padded[1], &[3, 4]);
+        // dead lanes alias lane 1's buffer, no copies
+        assert!(std::ptr::eq(padded[1].as_ptr(), padded[2].as_ptr()));
+        assert!(std::ptr::eq(padded[2].as_ptr(), padded[3].as_ptr()));
     }
 }

@@ -26,14 +26,17 @@ pub struct SequenceState {
 }
 
 impl SequenceState {
-    pub fn new(geom: &Geometry, prompt_ids: Vec<i32>) -> Self {
+    /// Borrowing constructor: the prompt is copied exactly once, here —
+    /// callers (including the scheduler's dead-lane padding) never need
+    /// to own prompt buffers.
+    pub fn new(geom: &Geometry, prompt_ids: &[i32]) -> Self {
         assert_eq!(prompt_ids.len(), geom.prompt_len, "prompt must be padded");
         let valid_from = prompt_ids
             .iter()
             .position(|&t| t != geom.pad)
             .unwrap_or(geom.prompt_len) as i32;
         Self {
-            prompt_ids,
+            prompt_ids: prompt_ids.to_vec(),
             valid_from,
             gen: vec![MASK; geom.gen_len],
             steps: 0,
@@ -151,10 +154,19 @@ impl SequenceState {
         self.gen[..end].iter().filter(|&&t| t != MASK).count()
     }
 
-    /// Full sequence [P + Lg] (prompt + generation) for full-seq programs.
+    /// Write the full sequence [P + Lg] (prompt + generation) into a
+    /// caller-owned row — the allocation-free form the full-seq engines
+    /// use with their reused id buffers.
+    pub fn copy_full_ids_into(&self, row: &mut [i32]) {
+        let p = self.prompt_ids.len();
+        row[..p].copy_from_slice(&self.prompt_ids);
+        row[p..].copy_from_slice(&self.gen);
+    }
+
+    /// Full sequence [P + Lg] as an owned vector.
     pub fn full_ids(&self) -> Vec<i32> {
-        let mut out = self.prompt_ids.clone();
-        out.extend_from_slice(&self.gen);
+        let mut out = vec![0; self.prompt_ids.len() + self.gen.len()];
+        self.copy_full_ids_into(&mut out);
         out
     }
 }
@@ -191,7 +203,7 @@ mod tests {
         for (i, t) in p.iter_mut().enumerate().skip(4) {
             *t = 10 + i as i32;
         }
-        SequenceState::new(&geom(), p)
+        SequenceState::new(&geom(), &p)
     }
 
     #[test]

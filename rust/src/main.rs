@@ -4,10 +4,11 @@
 //!   serve      start the HTTP server (router + dynamic batcher)
 //!   generate   one-shot decode from the command line
 //!   eval       method x family evaluation grid (paper-table rows)
+//!   bench      decode-throughput grid -> machine-readable JSON
 //!   analysis   print Fig. 4 arithmetic-intensity / Fig. 9 roofline
 //!   info       artifacts manifest summary
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use cdlm::coordinator::router::RouterConfig;
 use cdlm::coordinator::{
@@ -15,6 +16,8 @@ use cdlm::coordinator::{
 };
 use cdlm::server::{self, http::ServerConfig};
 use cdlm::util::cli::Args;
+use cdlm::util::json::Json;
+use cdlm::util::stats::Summary;
 use cdlm::workload::{self, Family};
 use cdlm::{analysis, artifacts_dir};
 
@@ -25,6 +28,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "generate" => cmd_generate(&args),
         "eval" => cmd_eval(&args),
+        "bench" => cmd_bench(&args),
         "analysis" => cmd_analysis(&args),
         "info" => cmd_info(),
         _ => {
@@ -48,6 +52,7 @@ fn print_help() {
          \x20 serve      --addr 127.0.0.1:8472 --backbone dream --max-batch 4 --max-wait-ms 25\n\
          \x20 generate   --prompt 'q:3*4+5=?' --method cdlm --backbone dream [--tau 0.9]\n\
          \x20 eval       --methods cdlm,ar --families chain-arith --n 16 --backbone dream\n\
+         \x20 bench      --methods all --batches 1,2,4,8 --n 16 --out BENCH_decode.json\n\
          \x20 analysis   [--fig 4|9]\n\
          \x20 info\n"
     );
@@ -174,6 +179,128 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+/// Decode-throughput bench: method x batch grid on the serving core,
+/// emitting the machine-readable `BENCH_decode.json` every perf PR
+/// records its trajectory against (schema documented in rust/README.md).
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 16);
+    let backbone = args.get_or("backbone", "dream").to_string();
+    let out_path = args.get_or("out", "BENCH_decode.json").to_string();
+    let methods: Vec<Method> = match args.get("methods") {
+        None | Some("all") => ALL_METHODS.to_vec(),
+        Some(s) => s.split(',').filter_map(Method::from_name).collect(),
+    };
+    anyhow::ensure!(!methods.is_empty(), "no valid methods selected");
+    let batches: Vec<usize> = args
+        .get("batches")
+        .map(|s| {
+            s.split(',')
+                .filter_map(|x| x.parse().ok())
+                .filter(|&b| b > 0)
+                .collect()
+        })
+        // 8 > the largest exported bucket (4): the two-chunk plan also
+        // exercises the parallel chunk executor in the default grid
+        .unwrap_or_else(|| vec![1, 2, 4, 8]);
+    anyhow::ensure!(!batches.is_empty(), "no valid batch sizes selected");
+    let max_bs = *batches.iter().max().unwrap();
+
+    let mut core = ServingCore::load(&artifacts_dir(), (2 * max_bs).max(16))?;
+    let geom = core.rt.manifest.geometry.clone();
+    let mut opts = DecodeOpts::defaults(&geom);
+    opts.tau_conf = args.get_f64("tau", 0.9) as f32;
+
+    let samples = workload::generate(Family::ChainArith, n, 0xE7A1);
+    let prompts: Vec<Vec<i32>> = samples
+        .iter()
+        .map(|s| {
+            workload::encode_example(
+                &core.tokenizer,
+                Family::ChainArith,
+                s,
+                geom.prompt_len,
+                geom.gen_len,
+            )
+            .map(|e| e.prompt_ids)
+        })
+        .collect::<anyhow::Result<_>>()?;
+
+    println!(
+        "{:<14} {:>6} {:>12} {:>10} {:>10} {:>8} {:>8}",
+        "method", "batch", "tokens/s", "p50(ms)", "p95(ms)", "steps",
+        "calls"
+    );
+    let mut results = Vec::new();
+    for m in &methods {
+        let key = GroupKey { backbone: backbone.clone(), method: *m };
+        for &requested_bs in &batches {
+            // the JSON must record the batch that actually decoded, not
+            // the requested one (n < batch clamps the group size)
+            let bs = requested_bs.min(prompts.len());
+            // warm-up outside the timed region: compiling backends must
+            // build this batch's program variants before the clock runs
+            core.decode_group(&key, &prompts[..bs], &opts)?;
+            let mut lat_s = Summary::new();
+            let mut steps = Summary::new();
+            let mut calls = Summary::new();
+            let mut tokens = 0usize;
+            let t0 = Instant::now();
+            for chunk in prompts.chunks(bs) {
+                let outs = core.decode_group(&key, chunk, &opts)?;
+                for o in &outs {
+                    lat_s.push(o.latency.as_secs_f64());
+                    steps.push(o.steps as f64);
+                    calls.push(o.model_calls as f64);
+                    tokens += o.gen_len;
+                }
+            }
+            let wall_s = t0.elapsed().as_secs_f64();
+            let tps = tokens as f64 / wall_s.max(1e-9);
+            println!(
+                "{:<14} {:>6} {:>12.1} {:>10.2} {:>10.2} {:>8.1} {:>8.1}",
+                m.name(),
+                bs,
+                tps,
+                lat_s.percentile(50.0) * 1e3,
+                lat_s.percentile(95.0) * 1e3,
+                steps.mean(),
+                calls.mean()
+            );
+            results.push(Json::obj(vec![
+                ("method", Json::str(m.name())),
+                ("batch", Json::num(bs as f64)),
+                ("requests", Json::num(lat_s.count() as f64)),
+                ("tokens", Json::num(tokens as f64)),
+                ("wall_s", Json::num(wall_s)),
+                ("tokens_per_s", Json::num(tps)),
+                ("p50_latency_ms", Json::num(lat_s.percentile(50.0) * 1e3)),
+                ("p95_latency_ms", Json::num(lat_s.percentile(95.0) * 1e3)),
+                ("avg_steps", Json::num(steps.mean())),
+                ("avg_model_calls", Json::num(calls.mean())),
+            ]));
+        }
+    }
+    let doc = Json::obj(vec![
+        ("schema", Json::str("cdlm.bench.decode/v1")),
+        ("backend", Json::str(core.rt.backend_name())),
+        ("platform", Json::str(core.rt.platform())),
+        ("backbone", Json::str(backbone.as_str())),
+        (
+            "decode_threads",
+            Json::num(
+                cdlm::coordinator::scheduler::decode_threads(&core.rt) as f64,
+            ),
+        ),
+        ("n", Json::num(n as f64)),
+        ("gen_len", Json::num(geom.gen_len as f64)),
+        ("block_size", Json::num(geom.block_size as f64)),
+        ("results", Json::Arr(results)),
+    ]);
+    std::fs::write(&out_path, doc.to_string())?;
+    println!("results -> {out_path}");
     Ok(())
 }
 

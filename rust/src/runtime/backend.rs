@@ -9,16 +9,23 @@
 //! * `PjrtBackend` (feature `pjrt`) — the original PJRT/XLA path that
 //!   executes the AOT-compiled JAX/Pallas programs.
 //!
-//! All tensors cross the trait as host [`TensorF32`]/[`TensorI32`];
-//! KV caches are batch-major `[L, bs, H, S, dh]` buffers produced by
-//! `KvPool::gather_batch`. Backends convert to their device formats
-//! internally.
+//! Program inputs/outputs cross the trait as host
+//! `TensorF32`/`TensorI32`; KV caches cross it as borrowed
+//! zero-copy [`KvView`]s over the coordinator's lane-major slabs.
+//! Backends that need the batch-major `[L, bs, H, S, dh]` device layout
+//! materialize it internally (`KvView::to_batch_major`); host backends
+//! read positions straight out of the slabs.
+//!
+//! Backends are `Send + Sync`: the scheduler's parallel chunk executor
+//! and the router's concurrent group dispatch issue program calls from
+//! multiple threads, bounded by [`Backend::max_concurrency`].
 #![allow(clippy::too_many_arguments)]
 
 use std::path::Path;
 
 use anyhow::Result;
 
+use super::kv::KvView;
 use super::manifest::Manifest;
 use super::pjrt::ProgramKey;
 use super::programs::{
@@ -26,12 +33,12 @@ use super::programs::{
     PrefillOut,
 };
 use super::reference::{ReferenceBackend, DEFAULT_SEED};
-use super::tensor::{TensorF32, TensorI32};
+use super::tensor::TensorI32;
 use super::weights::ModelWeights;
 
 /// One executable model surface: the eight AOT program entry points of
 /// `python/compile/model.py`, plus backend lifecycle hooks.
-pub trait Backend {
+pub trait Backend: Send + Sync {
     /// Device platform label (the reference backend reports "cpu", like
     /// the PJRT CPU client it stands in for).
     fn platform(&self) -> String;
@@ -42,6 +49,13 @@ pub trait Backend {
     /// Number of compiled executables held (0 for non-compiling backends).
     fn compiled_count(&self) -> usize {
         0
+    }
+
+    /// Upper bound on concurrent program executions the backend
+    /// supports. 1 means "serialize every call on one thread" and
+    /// disables the parallel chunk/group executors above the seam.
+    fn max_concurrency(&self) -> usize {
+        1
     }
 
     /// Pre-compile a program set (no-op where compilation is free).
@@ -73,14 +87,14 @@ pub trait Backend {
         valid_from: &TensorI32,
     ) -> Result<FullCacheOut>;
 
-    /// Block-scoped teacher step against a stale full-sequence cache.
+    /// Block-scoped teacher step against a stale full-sequence cache
+    /// (the view's valid prefix spans the whole sequence).
     fn teacher_block_approx(
         &self,
         w: &ModelWeights,
         bs: usize,
         block: usize,
-        k_cache: &TensorF32, // [L, bs, H, S, dh]
-        v_cache: &TensorF32,
+        kv: &KvView<'_>,
         valid_from: &TensorI32,
         blk_ids: &TensorI32, // [bs, B]
         pos0: i32,
@@ -95,15 +109,14 @@ pub trait Backend {
         valid_from: &TensorI32,
     ) -> Result<PrefillOut>;
 
-    /// Student block refinement step under the exact cache.
+    /// Student block refinement step under the exact cache; the view's
+    /// `cache_len` is the committed-prefix length.
     fn student_block_step(
         &self,
         w: &ModelWeights,
         bs: usize,
         block: usize,
-        k_cache: &TensorF32,
-        v_cache: &TensorF32,
-        cache_len: i32,
+        kv: &KvView<'_>,
         valid_from: &TensorI32,
         blk_ids: &TensorI32,
         pos0: i32,
@@ -115,9 +128,7 @@ pub trait Backend {
         w: &ModelWeights,
         bs: usize,
         block: usize,
-        k_cache: &TensorF32,
-        v_cache: &TensorF32,
-        cache_len: i32,
+        kv: &KvView<'_>,
         valid_from: &TensorI32,
         blk_ids: &TensorI32,
         pos0: i32,
@@ -137,9 +148,7 @@ pub trait Backend {
         &self,
         w: &ModelWeights,
         bs: usize,
-        k_cache: &TensorF32,
-        v_cache: &TensorF32,
-        cache_len: i32,
+        kv: &KvView<'_>,
         valid_from: &TensorI32,
         tok_ids: &TensorI32, // [bs]
     ) -> Result<ArStepOut>;

@@ -1,0 +1,206 @@
+//! Zero-copy KV-cache views: the read side of the backend seam.
+//!
+//! A [`KvView`] is a borrowed, `cache_len`-bounded window over the
+//! coordinator's lane-major KV slabs (`coordinator::kv_cache::KvPool`).
+//! Each lane's slot is one contiguous `[L, H, S, dh]` region, so a view
+//! is just the two slab borrows plus a per-lane base offset — creating
+//! one copies no cache data. Engines hand views straight to the backend
+//! every program call; backends that execute on the host (the reference
+//! backend) read individual positions through the accessors, and
+//! backends that need a device layout (PJRT) materialize the batch-major
+//! `[L, bs, H, S, dh]` buffer behind the seam with
+//! [`KvView::to_batch_major`] — the one place the old per-step
+//! `gather_batch` cost still exists, and only for that backend.
+//!
+//! `cache_len` is the lockstep valid-prefix length: positions
+//! `>= cache_len` are stale slab content (slots are not zeroed on free)
+//! and reads there are a bug the debug assertions catch.
+
+use super::tensor::TensorF32;
+
+/// Per-slot layout dimensions: one lane's slot is `[L, H, S, dh]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvDims {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub d_head: usize,
+}
+
+impl KvDims {
+    pub fn of(geom: &super::manifest::Geometry) -> KvDims {
+        KvDims {
+            n_layers: geom.n_layers,
+            n_heads: geom.n_heads,
+            seq_len: geom.seq_len,
+            d_head: geom.d_head,
+        }
+    }
+
+    /// Elements in one lane's slot.
+    pub fn slot_elems(&self) -> usize {
+        self.n_layers * self.n_heads * self.seq_len * self.d_head
+    }
+}
+
+/// Borrowed view of a batch's KV caches: lane-major slabs, valid-prefix
+/// bounded. See the module docs for the layout contract.
+pub struct KvView<'a> {
+    k: &'a [f32],
+    v: &'a [f32],
+    /// Per-lane base offset of the lane's `[L, H, S, dh]` slot within
+    /// the slabs.
+    bases: Vec<usize>,
+    dims: KvDims,
+    cache_len: usize,
+}
+
+impl<'a> KvView<'a> {
+    /// Build a view over lane-major slabs. `bases[lane]` is the element
+    /// offset of that lane's slot; every slot must fit inside both
+    /// slabs.
+    pub fn new(
+        k: &'a [f32],
+        v: &'a [f32],
+        bases: Vec<usize>,
+        dims: KvDims,
+        cache_len: usize,
+    ) -> KvView<'a> {
+        debug_assert!(cache_len <= dims.seq_len, "cache_len beyond slot");
+        debug_assert!(bases
+            .iter()
+            .all(|&b| b + dims.slot_elems() <= k.len()
+                && b + dims.slot_elems() <= v.len()));
+        KvView { k, v, bases, dims, cache_len }
+    }
+
+    /// Number of lanes in the view.
+    pub fn bs(&self) -> usize {
+        self.bases.len()
+    }
+
+    /// Valid-prefix length: positions `< cache_len` are committed.
+    pub fn cache_len(&self) -> usize {
+        self.cache_len
+    }
+
+    pub fn dims(&self) -> KvDims {
+        self.dims
+    }
+
+    #[inline]
+    fn idx(&self, lane: usize, l: usize, h: usize, pos: usize, d: usize) -> usize {
+        debug_assert!(pos < self.cache_len, "read past valid prefix");
+        let g = &self.dims;
+        self.bases[lane]
+            + ((l * g.n_heads + h) * g.seq_len + pos) * g.d_head
+            + d
+    }
+
+    /// One K element at `(lane, layer, head, pos, feature)`.
+    #[inline]
+    pub fn k_at(&self, lane: usize, l: usize, h: usize, pos: usize, d: usize) -> f32 {
+        self.k[self.idx(lane, l, h, pos, d)]
+    }
+
+    /// One V element at `(lane, layer, head, pos, feature)`.
+    #[inline]
+    pub fn v_at(&self, lane: usize, l: usize, h: usize, pos: usize, d: usize) -> f32 {
+        self.v[self.idx(lane, l, h, pos, d)]
+    }
+
+    /// Materialize the batch-major `[L, bs, H, S, dh]` K/V pair the AOT
+    /// programs consume. This is the full copy the engines no longer
+    /// perform; only device backends (PJRT) pay it, behind the seam.
+    pub fn to_batch_major(&self) -> (TensorF32, TensorF32) {
+        let g = &self.dims;
+        let (l_n, h_n, s_n, dh) = (g.n_layers, g.n_heads, g.seq_len, g.d_head);
+        let bs = self.bases.len();
+        let mut k = TensorF32::zeros(&[l_n, bs, h_n, s_n, dh]);
+        let mut v = TensorF32::zeros(&[l_n, bs, h_n, s_n, dh]);
+        let row = s_n * dh;
+        for (lane, &base) in self.bases.iter().enumerate() {
+            for l in 0..l_n {
+                for h in 0..h_n {
+                    let src = base + (l * h_n + h) * row;
+                    let dst = ((l * bs + lane) * h_n + h) * row;
+                    k.data[dst..dst + row]
+                        .copy_from_slice(&self.k[src..src + row]);
+                    v.data[dst..dst + row]
+                        .copy_from_slice(&self.v[src..src + row]);
+                }
+            }
+        }
+        (k, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> KvDims {
+        KvDims { n_layers: 2, n_heads: 2, seq_len: 4, d_head: 3 }
+    }
+
+    #[test]
+    fn view_reads_lane_major_slots() {
+        let d = dims();
+        let n = d.slot_elems();
+        // two slots: slot 0 holds its flat index, slot 1 holds +1000
+        let mut k: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        k.extend((0..n).map(|i| 1000.0 + i as f32));
+        let v: Vec<f32> = k.iter().map(|x| x + 0.5).collect();
+        // lanes swapped relative to slot order
+        let view = KvView::new(&k, &v, vec![n, 0], d, 4);
+        assert_eq!(view.bs(), 2);
+        // lane 0 reads slot 1's content
+        assert_eq!(view.k_at(0, 0, 0, 0, 0), 1000.0);
+        // lane 1, layer 1, head 1, pos 3, feat 2 = last element of slot 0
+        assert_eq!(view.k_at(1, 1, 1, 3, 2), (n - 1) as f32);
+        assert_eq!(view.v_at(1, 0, 0, 0, 0), 0.5);
+    }
+
+    #[test]
+    fn batch_major_materialization_matches_accessors() {
+        let d = dims();
+        let n = d.slot_elems();
+        let k: Vec<f32> = (0..2 * n).map(|i| i as f32).collect();
+        let v: Vec<f32> = k.iter().map(|x| -x).collect();
+        let view = KvView::new(&k, &v, vec![0, n], d, 4);
+        let (bk, bv) = view.to_batch_major();
+        assert_eq!(bk.shape, vec![2, 2, 2, 4, 3]);
+        for lane in 0..2 {
+            for l in 0..2 {
+                for h in 0..2 {
+                    for pos in 0..4 {
+                        for f in 0..3 {
+                            let idx = ((((l * 2 + lane) * 2 + h) * 4) + pos)
+                                * 3
+                                + f;
+                            assert_eq!(
+                                bk.data[idx],
+                                view.k_at(lane, l, h, pos, f)
+                            );
+                            assert_eq!(
+                                bv.data[idx],
+                                view.v_at(lane, l, h, pos, f)
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "valid prefix")]
+    fn reads_past_cache_len_are_caught() {
+        let d = dims();
+        let k = vec![0.0; d.slot_elems()];
+        let v = vec![0.0; d.slot_elems()];
+        let view = KvView::new(&k, &v, vec![0], d, 2);
+        view.k_at(0, 0, 0, 2, 0);
+    }
+}

@@ -10,6 +10,7 @@
 //! stands in.
 
 pub mod backend;
+pub mod kv;
 pub mod manifest;
 pub mod pjrt;
 pub mod programs;
@@ -18,6 +19,7 @@ pub mod tensor;
 pub mod weights;
 
 pub use backend::{Backend, Runtime};
+pub use kv::{KvDims, KvView};
 pub use manifest::{Geometry, Manifest};
 pub use pjrt::ProgramKey;
 pub use programs::Programs;

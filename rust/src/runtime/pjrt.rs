@@ -9,12 +9,16 @@
 //! lifetime of the backend; `warmup()` pre-compiles the hot set so
 //! serving latency is flat from the first request.
 //!
-//! Known cost of the backend seam: KV caches cross it as host
-//! tensors, so each block/step call materializes fresh cache literals
-//! (`to_literal`) where the pre-seam engines refreshed one literal in
-//! place. If the §Perf profile shows literal churn dominating again,
-//! add a per-(model, shape) scratch-literal cache here — behind the
-//! seam, not in the engines.
+//! Known cost of the backend seam: KV caches cross it as borrowed
+//! `KvView`s over the coordinator's lane-major slabs, and the AOT
+//! programs consume batch-major `[L, bs, H, S, dh]` buffers — so each
+//! block/step call materializes the batch-major pair here
+//! (`KvView::to_batch_major`) before building the cache literals. That
+//! copy used to live in every engine's decode loop (`gather_batch`);
+//! it now exists only behind this seam, and only for this backend. If
+//! the §Perf profile shows literal churn dominating again, add a
+//! per-(model, shape) scratch-literal cache here — behind the seam,
+//! not in the engines.
 
 /// Key into a backend's executable cache.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -43,6 +47,7 @@ mod client {
 
     use super::ProgramKey;
     use crate::runtime::backend::Backend;
+    use crate::runtime::kv::KvView;
     use crate::runtime::manifest::Manifest;
     use crate::runtime::programs::{
         ArPrefillOut, ArStepOut, BlockStepOut, DenoiseOut, FullCacheOut,
@@ -64,7 +69,24 @@ mod client {
         weights: Mutex<HashMap<String, Arc<Vec<xla::Literal>>>>,
         device_weights: Mutex<HashMap<String, Arc<Vec<xla::PjRtBuffer>>>>,
         pub compile_log: Mutex<Vec<(String, f64)>>,
+        /// First thread to execute a program; `run()` asserts every
+        /// later execution stays on it (the unsafe Send/Sync contract).
+        exec_thread: Mutex<Option<std::thread::ThreadId>>,
     }
+
+    // SAFETY: the PJRT C API is documented thread-compatible and every
+    // interior-mutable member is Mutex-guarded, but the xla crate's
+    // client handles are not `Send`/`Sync` themselves. The serving
+    // architecture therefore still confines this backend to the single
+    // decode-worker thread: `max_concurrency()` reports 1, which keeps
+    // the parallel chunk/group executors on the serial path (both
+    // fan-out sites clamp to it), so no program call ever crosses a
+    // thread in practice — and `run()` debug-asserts that affinity on
+    // every execution. These impls only satisfy the
+    // `Backend: Send + Sync` bound the reference backend needs for
+    // real parallelism.
+    unsafe impl Send for PjrtBackend {}
+    unsafe impl Sync for PjrtBackend {}
 
     impl PjrtBackend {
         pub fn load(manifest: &Manifest) -> Result<PjrtBackend> {
@@ -75,6 +97,7 @@ mod client {
                 weights: Mutex::new(HashMap::new()),
                 device_weights: Mutex::new(HashMap::new()),
                 compile_log: Mutex::new(Vec::new()),
+                exec_thread: Mutex::new(None),
             })
         }
 
@@ -150,6 +173,19 @@ mod client {
             key: &ProgramKey,
             inputs: &[&xla::Literal],
         ) -> Result<Vec<xla::Literal>> {
+            {
+                // enforce the single-thread contract behind the unsafe
+                // Send/Sync impls: all executions on one thread
+                let mut owner = self.exec_thread.lock().unwrap();
+                let me = std::thread::current().id();
+                match *owner {
+                    None => *owner = Some(me),
+                    Some(t) => debug_assert_eq!(
+                        t, me,
+                        "PjrtBackend program call crossed threads"
+                    ),
+                }
+            }
             let trace = std::env::var_os("CDLM_TRACE").is_some();
             let exe = self.executable(key)?;
             let resident = self.device_weights.lock().unwrap().get(&w.name).cloned();
@@ -202,6 +238,10 @@ mod client {
 
         fn compiled_count(&self) -> usize {
             self.executables.lock().unwrap().len()
+        }
+
+        fn max_concurrency(&self) -> usize {
+            1 // single decode-worker thread; see the Send/Sync note above
         }
 
         fn warmup(&self, keys: &[ProgramKey]) -> Result<()> {
@@ -272,13 +312,13 @@ mod client {
             w: &ModelWeights,
             bs: usize,
             block: usize,
-            k_cache: &TensorF32,
-            v_cache: &TensorF32,
+            kv: &KvView<'_>,
             valid_from: &TensorI32,
             blk_ids: &TensorI32,
             pos0: i32,
         ) -> Result<BlockStepOut> {
             let key = ProgramKey::new("teacher_block_approx", bs, Some(block));
+            let (k_cache, v_cache) = kv.to_batch_major();
             let kc = k_cache.to_literal()?;
             let vc = v_cache.to_literal()?;
             let vf = valid_from.to_literal()?;
@@ -310,17 +350,16 @@ mod client {
             w: &ModelWeights,
             bs: usize,
             block: usize,
-            k_cache: &TensorF32,
-            v_cache: &TensorF32,
-            cache_len: i32,
+            kv: &KvView<'_>,
             valid_from: &TensorI32,
             blk_ids: &TensorI32,
             pos0: i32,
         ) -> Result<BlockStepOut> {
             let key = ProgramKey::new("student_block_step", bs, Some(block));
+            let (k_cache, v_cache) = kv.to_batch_major();
             let kc = k_cache.to_literal()?;
             let vc = v_cache.to_literal()?;
-            let cl = scalar_i32(cache_len);
+            let cl = scalar_i32(kv.cache_len() as i32);
             let vf = valid_from.to_literal()?;
             let blk = blk_ids.to_literal()?;
             let p0 = scalar_i32(pos0);
@@ -333,17 +372,16 @@ mod client {
             w: &ModelWeights,
             bs: usize,
             block: usize,
-            k_cache: &TensorF32,
-            v_cache: &TensorF32,
-            cache_len: i32,
+            kv: &KvView<'_>,
             valid_from: &TensorI32,
             blk_ids: &TensorI32,
             pos0: i32,
         ) -> Result<BlockStepOut> {
             let key = ProgramKey::new("ar_verify", bs, Some(block));
+            let (k_cache, v_cache) = kv.to_batch_major();
             let kc = k_cache.to_literal()?;
             let vc = v_cache.to_literal()?;
-            let cl = scalar_i32(cache_len);
+            let cl = scalar_i32(kv.cache_len() as i32);
             let vf = valid_from.to_literal()?;
             let blk = blk_ids.to_literal()?;
             let p0 = scalar_i32(pos0);
@@ -375,16 +413,15 @@ mod client {
             &self,
             w: &ModelWeights,
             bs: usize,
-            k_cache: &TensorF32,
-            v_cache: &TensorF32,
-            cache_len: i32,
+            kv: &KvView<'_>,
             valid_from: &TensorI32,
             tok_ids: &TensorI32,
         ) -> Result<ArStepOut> {
             let key = ProgramKey::new("ar_step", bs, None);
+            let (k_cache, v_cache) = kv.to_batch_major();
             let kc = k_cache.to_literal()?;
             let vc = v_cache.to_literal()?;
-            let cl = scalar_i32(cache_len);
+            let cl = scalar_i32(kv.cache_len() as i32);
             let vf = valid_from.to_literal()?;
             let t = tok_ids.to_literal()?;
             let out = self.run(w, &key, &[&kc, &vc, &cl, &vf, &t])?;

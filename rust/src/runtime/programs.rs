@@ -2,13 +2,16 @@
 //!
 //! `Programs` binds one model's weights to the runtime's backend and
 //! exposes the eight program entry points with host-tensor signatures;
-//! engines never see backend-specific types. Output tuple orders are
-//! fixed by the L2 function signatures in `python/compile/model.py`.
+//! engines never see backend-specific types. KV caches flow through as
+//! borrowed [`KvView`]s (zero-copy slab windows); everything else is a
+//! host tensor. Output tuple orders are fixed by the L2 function
+//! signatures in `python/compile/model.py`.
 #![allow(clippy::too_many_arguments)]
 
 use anyhow::Result;
 
 use super::backend::{Backend, Runtime};
+use super::kv::KvView;
 use super::tensor::{TensorF32, TensorI32};
 use super::weights::ModelWeights;
 
@@ -93,8 +96,7 @@ impl<'rt> Programs<'rt> {
         &self,
         bs: usize,
         block: usize,
-        k_cache: &TensorF32, // [L, bs, H, S, dh]
-        v_cache: &TensorF32,
+        kv: &KvView<'_>,
         valid_from: &TensorI32,
         blk_ids: &TensorI32, // [bs, B]
         pos0: i32,
@@ -103,8 +105,7 @@ impl<'rt> Programs<'rt> {
             self.weights,
             bs,
             block,
-            k_cache,
-            v_cache,
+            kv,
             valid_from,
             blk_ids,
             pos0,
@@ -126,9 +127,7 @@ impl<'rt> Programs<'rt> {
         &self,
         bs: usize,
         block: usize,
-        k_cache: &TensorF32,
-        v_cache: &TensorF32,
-        cache_len: i32,
+        kv: &KvView<'_>,
         valid_from: &TensorI32,
         blk_ids: &TensorI32,
         pos0: i32,
@@ -137,9 +136,7 @@ impl<'rt> Programs<'rt> {
             self.weights,
             bs,
             block,
-            k_cache,
-            v_cache,
-            cache_len,
+            kv,
             valid_from,
             blk_ids,
             pos0,
@@ -153,9 +150,7 @@ impl<'rt> Programs<'rt> {
         &self,
         bs: usize,
         block: usize,
-        k_cache: &TensorF32,
-        v_cache: &TensorF32,
-        cache_len: i32,
+        kv: &KvView<'_>,
         valid_from: &TensorI32,
         blk_ids: &TensorI32,
         pos0: i32,
@@ -164,9 +159,7 @@ impl<'rt> Programs<'rt> {
             self.weights,
             bs,
             block,
-            k_cache,
-            v_cache,
-            cache_len,
+            kv,
             valid_from,
             blk_ids,
             pos0,
@@ -187,20 +180,10 @@ impl<'rt> Programs<'rt> {
     pub fn ar_step(
         &self,
         bs: usize,
-        k_cache: &TensorF32,
-        v_cache: &TensorF32,
-        cache_len: i32,
+        kv: &KvView<'_>,
         valid_from: &TensorI32,
         tok_ids: &TensorI32, // [bs]
     ) -> Result<ArStepOut> {
-        self.rt.backend().ar_step(
-            self.weights,
-            bs,
-            k_cache,
-            v_cache,
-            cache_len,
-            valid_from,
-            tok_ids,
-        )
+        self.rt.backend().ar_step(self.weights, bs, kv, valid_from, tok_ids)
     }
 }

@@ -10,11 +10,13 @@
 //! model: each cached position `p` stores a 24-bit *context hash* of
 //! the token prefix that produced it at `k[l, lane, 0, p, 0]` (f32
 //! holds 24-bit integers exactly). Prefill seeds the chain from the
-//! prompt; block/step programs read the hash at `cache_len - 1`, extend
-//! it over their input tokens, and emit it in their block KV — so KV
-//! pool bugs (wrong lane offsets, missed commits, stale gathers) change
-//! decoded tokens and are caught by the parity tests rather than
-//! silently ignored. Consequences engineered into the proposals:
+//! prompt; block/step programs read the hash at `cache_len - 1`
+//! straight out of the borrowed [`KvView`] (zero-copy — no staging
+//! buffer ever exists on this path), extend it over their input tokens,
+//! and emit it in their block KV — so KV pool bugs (wrong lane offsets,
+//! missed commits, stale views) change decoded tokens and are caught by
+//! the parity tests rather than silently ignored. Consequences
+//! engineered into the proposals:
 //!
 //! * `teacher_denoise` ≡ `teacher_full_cache` on identical inputs
 //!   (the dLLM-Cache `refresh_every = 1` anchor);
@@ -25,11 +27,15 @@
 //! * the student's confidence distribution is sharper than the
 //!   teacher's (CDLM finalizes multiple tokens per step, reproducing
 //!   the paper's step-reduction shape).
+//!
+//! The backend holds no mutable state, so it is trivially `Send + Sync`
+//! and reports full host parallelism to the chunk executor.
 #![allow(clippy::too_many_arguments)]
 
 use anyhow::Result;
 
 use super::backend::Backend;
+use super::kv::KvView;
 use super::manifest::Geometry;
 use super::programs::{
     ArPrefillOut, ArStepOut, BlockStepOut, DenoiseOut, FullCacheOut,
@@ -82,15 +88,14 @@ fn ctx_step(prev: u64, tok: i32) -> u64 {
     mix(prev, tok as u32 as u64) & CTX_MASK
 }
 
-/// Read the context hash stored at `(lane, pos)` of a batch-major
-/// `[L, bs, H, len, dh]` cache buffer (layer 0, head 0, feature 0).
-fn read_ctx(cache: &TensorF32, h_n: usize, len: usize, dh: usize,
-            lane: usize, pos: usize) -> u64 {
-    cache.data[(lane * h_n * len + pos) * dh] as u64 & CTX_MASK
+/// Read the context hash stored at `(lane, pos)` of a KV view
+/// (layer 0, head 0, feature 0) — a single zero-copy slab read.
+fn view_ctx(kv: &KvView<'_>, lane: usize, pos: usize) -> u64 {
+    kv.k_at(lane, 0, 0, pos, 0) as u64 & CTX_MASK
 }
 
 /// Write the context hash for `(lane, pos)` into every layer of a
-/// batch-major `[L, bs, H, len, dh]` buffer (head 0, feature 0).
+/// batch-major `[L, bs, H, len, dh]` output buffer (head 0, feature 0).
 fn write_ctx(data: &mut [f32], l_n: usize, bs: usize, h_n: usize,
              len: usize, dh: usize, lane: usize, pos: usize, ctx: u64) {
     for l in 0..l_n {
@@ -208,22 +213,23 @@ impl ReferenceBackend {
         w: &ModelWeights,
         bs: usize,
         block: usize,
-        k_cache: &TensorF32,
+        kv: &KvView<'_>,
         ctx_pos: usize,
         blk_ids: &TensorI32,
         pos0: i32,
         student: bool,
     ) -> Result<BlockStepOut> {
         let g = &self.geom;
-        let (l_n, h_n, s, dh, v) =
-            (g.n_layers, g.n_heads, g.seq_len, g.d_head, g.vocab_size);
+        let (l_n, h_n, dh, v) =
+            (g.n_layers, g.n_heads, g.d_head, g.vocab_size);
         anyhow::ensure!(
             blk_ids.data.len() == bs * block,
             "block ids must be [bs={bs}, B={block}]"
         );
         anyhow::ensure!(
-            k_cache.data.len() == l_n * bs * h_n * s * dh,
-            "cache must be [L, bs, H, S, dh]"
+            kv.bs() == bs,
+            "KV view has {} lanes, batch is {bs}",
+            kv.bs()
         );
         let ms = self.model_seed(w);
         let mut logits = TensorF32::zeros(&[bs, block, v]);
@@ -233,7 +239,7 @@ impl ReferenceBackend {
         let mut v_blk = TensorF32::zeros(&[l_n, bs, h_n, block, dh]);
         for lane in 0..bs {
             let row = &blk_ids.data[lane * block..(lane + 1) * block];
-            let ctx_prev = read_ctx(k_cache, h_n, s, dh, lane, ctx_pos);
+            let ctx_prev = view_ctx(kv, lane, ctx_pos);
             let bh = mix(token_hash(row), ctx_prev);
             let mut ctx = ctx_prev;
             for i in 0..block {
@@ -269,6 +275,12 @@ impl Backend for ReferenceBackend {
         "reference"
     }
 
+    fn max_concurrency(&self) -> usize {
+        // stateless host execution: safe at any parallelism (the
+        // executors pick a useful default from the machine size)
+        usize::MAX
+    }
+
     fn teacher_denoise(
         &self,
         w: &ModelWeights,
@@ -301,15 +313,14 @@ impl Backend for ReferenceBackend {
         w: &ModelWeights,
         bs: usize,
         block: usize,
-        k_cache: &TensorF32,
-        _v_cache: &TensorF32,
+        kv: &KvView<'_>,
         _valid_from: &TensorI32,
         blk_ids: &TensorI32,
         pos0: i32,
     ) -> Result<BlockStepOut> {
         anyhow::ensure!(pos0 >= 1, "block cannot start at position 0");
         self.dlm_block_step(
-            w, bs, block, k_cache, (pos0 - 1) as usize, blk_ids, pos0, false,
+            w, bs, block, kv, (pos0 - 1) as usize, blk_ids, pos0, false,
         )
     }
 
@@ -337,17 +348,15 @@ impl Backend for ReferenceBackend {
         w: &ModelWeights,
         bs: usize,
         block: usize,
-        k_cache: &TensorF32,
-        _v_cache: &TensorF32,
-        cache_len: i32,
+        kv: &KvView<'_>,
         _valid_from: &TensorI32,
         blk_ids: &TensorI32,
         pos0: i32,
     ) -> Result<BlockStepOut> {
+        let cache_len = kv.cache_len();
         anyhow::ensure!(cache_len >= 1, "student cache cannot be empty");
         self.dlm_block_step(
-            w, bs, block, k_cache, (cache_len - 1) as usize, blk_ids, pos0,
-            true,
+            w, bs, block, kv, cache_len - 1, blk_ids, pos0, true,
         )
     }
 
@@ -356,21 +365,21 @@ impl Backend for ReferenceBackend {
         w: &ModelWeights,
         bs: usize,
         block: usize,
-        k_cache: &TensorF32,
-        _v_cache: &TensorF32,
-        cache_len: i32,
+        kv: &KvView<'_>,
         _valid_from: &TensorI32,
         blk_ids: &TensorI32,
         _pos0: i32,
     ) -> Result<BlockStepOut> {
         let g = &self.geom;
-        let (l_n, h_n, s, dh, v) =
-            (g.n_layers, g.n_heads, g.seq_len, g.d_head, g.vocab_size);
+        let (l_n, h_n, dh, v) =
+            (g.n_layers, g.n_heads, g.d_head, g.vocab_size);
+        let cache_len = kv.cache_len();
         anyhow::ensure!(cache_len >= 1, "AR cache cannot be empty");
         anyhow::ensure!(
             blk_ids.data.len() == bs * block,
             "block ids must be [bs={bs}, B={block}]"
         );
+        anyhow::ensure!(kv.bs() == bs, "KV view lane count mismatch");
         let ms = self.model_seed(w);
         let mut logits = TensorF32::zeros(&[bs, block, v]);
         let mut tok = vec![0i32; bs * block];
@@ -379,8 +388,7 @@ impl Backend for ReferenceBackend {
         let mut v_blk = TensorF32::zeros(&[l_n, bs, h_n, block, dh]);
         for lane in 0..bs {
             let row = &blk_ids.data[lane * block..(lane + 1) * block];
-            let mut ctx =
-                read_ctx(k_cache, h_n, s, dh, lane, (cache_len - 1) as usize);
+            let mut ctx = view_ctx(kv, lane, cache_len - 1);
             for i in 0..block {
                 // teacher-forced: extend the chain by draft token i, then
                 // emit AR's greedy continuation *after* it
@@ -440,17 +448,17 @@ impl Backend for ReferenceBackend {
         &self,
         w: &ModelWeights,
         bs: usize,
-        k_cache: &TensorF32,
-        _v_cache: &TensorF32,
-        cache_len: i32,
+        kv: &KvView<'_>,
         _valid_from: &TensorI32,
         tok_ids: &TensorI32,
     ) -> Result<ArStepOut> {
         let g = &self.geom;
-        let (l_n, h_n, s, dh, v) =
-            (g.n_layers, g.n_heads, g.seq_len, g.d_head, g.vocab_size);
+        let (l_n, h_n, dh, v) =
+            (g.n_layers, g.n_heads, g.d_head, g.vocab_size);
+        let cache_len = kv.cache_len();
         anyhow::ensure!(cache_len >= 1, "AR cache cannot be empty");
         anyhow::ensure!(tok_ids.data.len() == bs, "tok ids must be [bs]");
+        anyhow::ensure!(kv.bs() == bs, "KV view lane count mismatch");
         let ms = self.model_seed(w);
         let mut logits = TensorF32::zeros(&[bs, v]);
         let mut tok = vec![0i32; bs];
@@ -458,8 +466,7 @@ impl Backend for ReferenceBackend {
         let mut k1 = TensorF32::zeros(&[l_n, bs, h_n, 1, dh]);
         let mut v1 = TensorF32::zeros(&[l_n, bs, h_n, 1, dh]);
         for lane in 0..bs {
-            let prev =
-                read_ctx(k_cache, h_n, s, dh, lane, (cache_len - 1) as usize);
+            let prev = view_ctx(kv, lane, cache_len - 1);
             let ctx = ctx_step(prev, tok_ids.data[lane]);
             let (t, c) = self.ar_next(ms, ctx);
             tok[lane] = t;
@@ -483,6 +490,7 @@ mod tests {
     use super::*;
     use std::path::Path;
 
+    use crate::runtime::kv::KvDims;
     use crate::runtime::Manifest;
 
     fn backend() -> ReferenceBackend {
@@ -552,38 +560,37 @@ mod tests {
         let vf = TensorI32::from_vec(&[1], vec![0]);
         let pre = b.student_prefill(&w, 1, &prompt, &vf).unwrap();
         // the last prompt position carries a nonzero context hash
-        let h_n = g.n_heads;
-        let ctx = read_ctx(&pre.k, h_n, p, g.d_head, 0, p - 1);
+        // (prefill output is batch-major [L, 1, H, P, dh]; the hash
+        // lives at layer 0, head 0, feature 0)
+        let ctx = pre.k.data[(p - 1) * g.d_head] as u64 & CTX_MASK;
         assert_ne!(ctx, 0);
-        // widen prompt KV into a full [L, 1, H, S, dh] cache buffer
-        let mut cache =
-            TensorF32::zeros(&[g.n_layers, 1, h_n, g.seq_len, g.d_head]);
+        // widen prompt KV into a lane-major [L, H, S, dh] slot and view it
+        let dims = KvDims::of(&g);
+        let mut k_slab = vec![0.0f32; dims.slot_elems()];
         for l in 0..g.n_layers {
-            for h in 0..h_n {
+            for h in 0..g.n_heads {
                 for pos in 0..p {
                     for d in 0..g.d_head {
-                        let src = (((l * h_n) + h) * p + pos) * g.d_head + d;
-                        let dst =
-                            (((l * h_n) + h) * g.seq_len + pos) * g.d_head + d;
-                        cache.data[dst] = pre.k.data[src];
+                        let src = (((l * g.n_heads) + h) * p + pos) * g.d_head
+                            + d;
+                        let dst = (((l * g.n_heads) + h) * g.seq_len + pos)
+                            * g.d_head
+                            + d;
+                        k_slab[dst] = pre.k.data[src];
                     }
                 }
             }
         }
+        let v_slab = k_slab.clone();
+        let view = KvView::new(&k_slab, &v_slab, vec![0], dims, p);
         let blk_ids = TensorI32::from_vec(&[1, blk], vec![1; blk]);
         let out = b
-            .student_block_step(
-                &w, 1, blk, &cache, &cache, p as i32, &vf, &blk_ids,
-                p as i32,
-            )
+            .student_block_step(&w, 1, blk, &view, &vf, &blk_ids, p as i32)
             .unwrap();
         assert_eq!(out.tok.data.len(), blk);
         // deterministic: same call, same outputs
         let again = b
-            .student_block_step(
-                &w, 1, blk, &cache, &cache, p as i32, &vf, &blk_ids,
-                p as i32,
-            )
+            .student_block_step(&w, 1, blk, &view, &vf, &blk_ids, p as i32)
             .unwrap();
         assert_eq!(out.tok.data, again.tok.data);
         assert_eq!(out.conf.data, again.conf.data);

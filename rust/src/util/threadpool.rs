@@ -1,9 +1,54 @@
-//! Bounded thread pool for connection handling (the HTTP front-end must
-//! not spawn unboundedly under load; decode concurrency is separately
-//! bounded by the router's single worker + batcher).
+//! Bounded thread pools.
+//!
+//! Two facilities share this module:
+//! * [`ThreadPool`] — long-lived workers for connection handling (the
+//!   HTTP front-end must not spawn unboundedly under load);
+//! * [`scoped`] — run a finite job list to completion with bounded
+//!   parallelism while *borrowing from the caller's stack*. This is
+//!   what the decode-path executors (scheduler chunk fan-out, router
+//!   group fan-out) are built on: their jobs borrow the runtime,
+//!   weights, and result slots, so the `'static` channel-fed pool
+//!   cannot host them.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
+
+/// Run every job to completion on at most `max_threads` scoped worker
+/// threads (plus nothing else: with one thread, or one job, the jobs
+/// run inline). Jobs may borrow non-`'static` data; panics propagate
+/// after all workers join, and job order is never load-bearing — the
+/// decode executors write results into per-job slots and reassemble
+/// deterministically.
+pub fn scoped<F>(max_threads: usize, jobs: Vec<F>)
+where
+    F: FnOnce() + Send,
+{
+    let n = max_threads.max(1).min(jobs.len());
+    if n <= 1 {
+        for job in jobs {
+            job();
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<F>>> =
+        jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+    std::thread::scope(|s| {
+        for _ in 0..n {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= slots.len() {
+                    break;
+                }
+                let job = slots[i].lock().unwrap().take();
+                if let Some(job) = job {
+                    job();
+                }
+            });
+        }
+    });
+}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -102,5 +147,55 @@ mod tests {
     #[should_panic]
     fn zero_size_panics() {
         let _ = ThreadPool::new(0);
+    }
+
+    #[test]
+    fn scoped_runs_all_jobs_and_borrows_stack() {
+        let mut results = vec![0usize; 17];
+        let jobs: Vec<_> = results
+            .iter_mut()
+            .enumerate()
+            .map(|(i, slot)| move || *slot = i + 1)
+            .collect();
+        scoped(3, jobs);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(*r, i + 1, "job {i} did not run");
+        }
+    }
+
+    #[test]
+    fn scoped_bounds_parallelism() {
+        let active = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<_> = (0..12)
+            .map(|_| {
+                let a = active.clone();
+                let p = peak.clone();
+                move || {
+                    let now = a.fetch_add(1, Ordering::SeqCst) + 1;
+                    p.fetch_max(now, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(5));
+                    a.fetch_sub(1, Ordering::SeqCst);
+                }
+            })
+            .collect();
+        scoped(2, jobs);
+        let peak = peak.load(Ordering::SeqCst);
+        assert!(peak <= 2, "exceeded scoped thread bound: {peak}");
+        assert!(peak >= 1);
+    }
+
+    #[test]
+    fn scoped_single_thread_runs_inline() {
+        let mut vals = [0, 0];
+        {
+            let jobs: Vec<_> = vals
+                .iter_mut()
+                .enumerate()
+                .map(|(i, v)| move || *v = i + 10)
+                .collect();
+            scoped(1, jobs);
+        }
+        assert_eq!(vals, [10, 11]);
     }
 }

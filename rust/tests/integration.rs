@@ -302,11 +302,12 @@ fn dual_cache_decode_runs_and_respects_structure() {
     let progs = Programs::new(&core.rt, &weights);
     let mut pool = KvPool::new(&geom, 4);
     let opts = DecodeOpts::defaults(&geom);
+    let lanes: Vec<&[i32]> = prompts.iter().map(Vec::as_slice).collect();
     let outs = cached_teacher::decode(
         &progs,
         &geom,
         &opts,
-        &prompts,
+        &lanes,
         &mut pool,
         Variant::DualCache,
     )

@@ -1,0 +1,126 @@
+//! Parallel chunk executor + KvView invariants.
+//!
+//! Two load-bearing properties of the PR 2 decode hot path:
+//!  * the parallel chunk executor is a pure scheduling change: for any
+//!    request count and any method, `Engine::decode_with_threads(N)`
+//!    returns outcomes trace-for-trace identical (tokens, steps, model
+//!    calls, gen lengths, order) to `Engine::decode_serial`;
+//!  * decoding through zero-copy `KvView`s keeps lanes independent:
+//!    a batched decode (including scheduler dead-lane padding) equals
+//!    each lane's solo decode for every KV-caching method.
+
+use cdlm::coordinator::{
+    DecodeOpts, DecodeOutcome, Engine, KvPool, Method, ALL_METHODS,
+};
+use cdlm::runtime::{ModelWeights, Runtime};
+use cdlm::tokenizer::Tokenizer;
+use cdlm::util::prop::check;
+use cdlm::workload::{self, Family};
+
+const SEED: u64 = 0x5EED_0002;
+
+fn prompts(n: usize, task_seed: u64) -> Vec<Vec<i32>> {
+    let rt = Runtime::reference(SEED);
+    let geom = rt.manifest.geometry.clone();
+    let tok = Tokenizer::new();
+    workload::generate(Family::ChainArith, n, task_seed)
+        .iter()
+        .map(|s| {
+            workload::encode_example(
+                &tok,
+                Family::ChainArith,
+                s,
+                geom.prompt_len,
+                geom.gen_len,
+            )
+            .unwrap()
+            .prompt_ids
+        })
+        .collect()
+}
+
+fn traces_equal(a: &[DecodeOutcome], b: &[DecodeOutcome]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.gen == y.gen
+                && x.steps == y.steps
+                && x.model_calls == y.model_calls
+                && x.gen_len == y.gen_len
+        })
+}
+
+#[test]
+fn parallel_chunks_match_serial_for_random_request_counts() {
+    let rt = Runtime::reference(SEED);
+    let geom = rt.manifest.geometry.clone();
+    let opts = DecodeOpts::defaults(&geom);
+    check("parallel-equals-serial", 8, |r| {
+        // 5..=12 requests: always more than the max bucket (4), so the
+        // plan has several chunks and the executor actually fans out
+        let n = 5 + r.index(8);
+        let m = ALL_METHODS[r.index(ALL_METHODS.len())];
+        let ps = prompts(n, 0xC0DE ^ n as u64);
+        let w =
+            ModelWeights::load(&rt.manifest, &m.weights_for("dream")).unwrap();
+        let engine = Engine::new(&rt, &w);
+        let mut pool = KvPool::new(&geom, 16);
+        let serial = engine.decode_serial(m, &opts, &ps, &mut pool).unwrap();
+        let parallel = engine
+            .decode_with_threads(4, m, &opts, &ps, &mut pool)
+            .unwrap();
+        pool.in_use() == 0 && traces_equal(&serial, &parallel)
+    });
+}
+
+#[test]
+fn parallel_executor_covers_every_method_at_fixed_size() {
+    let rt = Runtime::reference(SEED);
+    let geom = rt.manifest.geometry.clone();
+    let opts = DecodeOpts::defaults(&geom);
+    let ps = prompts(7, 0xFA57); // chunks: [4 real 4, 4 real 3]
+    for m in ALL_METHODS {
+        let w =
+            ModelWeights::load(&rt.manifest, &m.weights_for("dream")).unwrap();
+        let engine = Engine::new(&rt, &w);
+        let mut pool = KvPool::new(&geom, 16);
+        let serial = engine.decode_serial(m, &opts, &ps, &mut pool).unwrap();
+        let parallel = engine
+            .decode_with_threads(2, m, &opts, &ps, &mut pool)
+            .unwrap();
+        assert!(
+            traces_equal(&serial, &parallel),
+            "{}: parallel executor changed the decode trace",
+            m.name()
+        );
+    }
+}
+
+#[test]
+fn kv_view_batched_decode_equals_solo_per_lane() {
+    let rt = Runtime::reference(SEED);
+    let geom = rt.manifest.geometry.clone();
+    let opts = DecodeOpts::defaults(&geom);
+    // 3 distinct prompts: the bucket-4 chunk pads a dead lane, so this
+    // also exercises view reads on an aliased padded slot
+    let ps = prompts(3, 0xBA7C);
+    for m in [Method::Cdlm, Method::Ar, Method::DllmCache, Method::FastDllmDc]
+    {
+        let w =
+            ModelWeights::load(&rt.manifest, &m.weights_for("dream")).unwrap();
+        let engine = Engine::new(&rt, &w);
+        let mut pool = KvPool::new(&geom, 8);
+        let batched = engine.decode_serial(m, &opts, &ps, &mut pool).unwrap();
+        for (lane, p) in ps.iter().enumerate() {
+            let solo = engine
+                .decode_serial(m, &opts, std::slice::from_ref(p), &mut pool)
+                .unwrap();
+            assert_eq!(
+                batched[lane].gen,
+                solo[0].gen,
+                "{}: lane {lane} batched != solo",
+                m.name()
+            );
+        }
+        assert_eq!(pool.in_use(), 0, "{} leaked KV slots", m.name());
+    }
+}

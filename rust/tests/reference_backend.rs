@@ -40,6 +40,7 @@ fn decode_all(seed: u64, prompts: &[Vec<i32>]) -> Vec<(Method, Vec<DecodeOutcome
     let geom = rt.manifest.geometry.clone();
     let opts = DecodeOpts::defaults(&geom);
     let mut pool = KvPool::new(&geom, 16);
+    let lanes: Vec<&[i32]> = prompts.iter().map(Vec::as_slice).collect();
     ALL_METHODS
         .iter()
         .map(|&m| {
@@ -47,7 +48,7 @@ fn decode_all(seed: u64, prompts: &[Vec<i32>]) -> Vec<(Method, Vec<DecodeOutcome
                 .unwrap();
             let progs = Programs::new(&rt, &w);
             let outs = methods::decode_batch(
-                &progs, &geom, &opts, m, prompts, &mut pool,
+                &progs, &geom, &opts, m, &lanes, &mut pool,
             )
             .unwrap();
             (m, outs)
@@ -117,8 +118,9 @@ fn speculative_decode_is_lossless_vs_ar_greedy() {
 
     let ar_w = ModelWeights::load(&rt.manifest, "ar_dream").unwrap();
     let ar_progs = Programs::new(&rt, &ar_w);
+    let lanes: Vec<&[i32]> = ps.iter().map(Vec::as_slice).collect();
     let ar_outs = methods::decode_batch(
-        &ar_progs, &geom, &opts, Method::Ar, &ps, &mut pool,
+        &ar_progs, &geom, &opts, Method::Ar, &lanes, &mut pool,
     )
     .unwrap();
 
@@ -130,7 +132,7 @@ fn speculative_decode_is_lossless_vs_ar_greedy() {
             &ar_progs,
             &geom,
             &opts,
-            std::slice::from_ref(p),
+            &[p.as_slice()],
             &mut pool,
         )
         .unwrap();
