@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
         "method", "bs", "total(ms)", "ms/request", "agg TPS"
     );
     for method in [Method::Cdlm, Method::Ar, Method::Vanilla] {
-        let key = GroupKey { backbone: "dream".into(), method };
+        let key = GroupKey::new("dream", method);
         // warm-up every batch bucket (compiles are per-(program, bs))
         for bs in [1usize, 2, 4] {
             core.decode_group(&key, &prompts[..bs], &opts)?;

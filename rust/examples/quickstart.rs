@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
 
     let opts = DecodeOpts::defaults(&geom);
     for method in [Method::Vanilla, Method::Cdlm] {
-        let key = GroupKey { backbone: "dream".into(), method };
+        let key = GroupKey::new("dream", method);
         let out = core
             .decode_group(&key, &[enc.prompt_ids.clone()], &opts)?
             .remove(0);
@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
 
     // same entry point the HTTP server uses
     let ids = encode_user_prompt(&core.tokenizer, "q:2+3*4=?", geom.prompt_len)?;
-    let key = GroupKey { backbone: "dream".into(), method: Method::Cdlm };
+    let key = GroupKey::new("dream", Method::Cdlm);
     let out = core.decode_group(&key, &[ids], &opts)?.remove(0);
     println!(
         "\nad-hoc 'q:2+3*4=?' -> {:?} in {} steps",

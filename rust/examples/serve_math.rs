@@ -48,6 +48,7 @@ fn main() -> anyhow::Result<()> {
             max_wait: Duration::from_millis(30),
             max_queue: 64,
             pool_capacity: 16,
+            ..RouterConfig::default()
         },
     )?;
     // server thread

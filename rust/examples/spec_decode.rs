@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
     let opts = DecodeOpts::defaults(&geom);
 
     // plain AR baseline (ground truth for losslessness)
-    let ar_key = GroupKey { backbone: "dream".into(), method: Method::Ar };
+    let ar_key = GroupKey::new("dream", Method::Ar);
     let ar_outs = core.decode_group(&ar_key, &prompts, &opts)?;
 
     // speculative: CDLM drafts + AR verifies

@@ -69,7 +69,7 @@ pub fn run_cell(
             )
         })
         .collect::<Result<Vec<_>>>()?;
-    let key = GroupKey { backbone: backbone.to_string(), method };
+    let key = GroupKey::new(backbone, method);
     let bs = bench_bs();
     let mut agg = MetricsAggregator::new();
     // warm-up: compile the programs outside the timed region

@@ -1,7 +1,9 @@
-//! Dynamic batcher: groups concurrent requests by (backbone, method)
-//! and flushes when a full bucket accumulates or the batching window
-//! expires — the standard continuous-serving front half (vLLM-style),
-//! sized for the lockstep block-diffusion engines behind it.
+//! Dynamic batcher: groups concurrent requests by (backbone, method,
+//! tau) and flushes when a full bucket accumulates or the batching
+//! window expires — the standard continuous-serving front half
+//! (vLLM-style), sized for the lockstep block-diffusion engines behind
+//! it. The continuous worker additionally drains compatible requests
+//! straight into in-flight batches with [`DynamicBatcher::take_for`].
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
@@ -12,6 +14,29 @@ use super::methods::Method;
 pub struct GroupKey {
     pub backbone: String,
     pub method: Method,
+    /// Confidence-threshold override, as bits (f32 is not `Hash`/`Eq`).
+    /// The closed-batch path folds each request's tau override in here
+    /// so a whole group decodes with one tau and no request ever decodes
+    /// with another request's threshold; the block-step machine instead
+    /// carries tau per lane and leaves this `None` to batch across
+    /// overrides.
+    pub tau_bits: Option<u32>,
+}
+
+impl GroupKey {
+    pub fn new(backbone: impl Into<String>, method: Method) -> GroupKey {
+        GroupKey { backbone: backbone.into(), method, tau_bits: None }
+    }
+
+    /// Fold a per-request tau override into the key (closed-batch path).
+    pub fn with_tau(mut self, tau: Option<f32>) -> GroupKey {
+        self.tau_bits = tau.map(f32::to_bits);
+        self
+    }
+
+    pub fn tau(&self) -> Option<f32> {
+        self.tau_bits.map(f32::from_bits)
+    }
 }
 
 #[derive(Debug)]
@@ -63,7 +88,10 @@ impl<T> DynamicBatcher<T> {
     }
 
     /// Next batch to run, if any group is ready at `now`.
-    pub fn pop_ready(&mut self, now: Instant) -> Option<(GroupKey, Vec<T>)> {
+    pub fn pop_ready(
+        &mut self,
+        now: Instant,
+    ) -> Option<(GroupKey, Vec<Pending<T>>)> {
         let key = self
             .queues
             .iter()
@@ -73,32 +101,63 @@ impl<T> DynamicBatcher<T> {
                         || now.duration_since(q[0].enqueued) >= self.max_wait)
             })
             .map(|(k, _)| k.clone())?;
-        let batch = self.drain(&key);
+        let batch = self.drain(&key, self.max_batch);
+        self.total_batches += 1;
         Some((key, batch))
     }
 
-    /// Force-flush the oldest group regardless of readiness (shutdown).
-    pub fn pop_any(&mut self) -> Option<(GroupKey, Vec<T>)> {
+    /// Force-flush the oldest group regardless of readiness (shutdown
+    /// drain, and the continuous worker's batch opening — a block-step
+    /// machine admits later arrivals mid-flight, so there is nothing to
+    /// gain by holding requests back for a fuller bucket).
+    pub fn pop_any(&mut self) -> Option<(GroupKey, Vec<Pending<T>>)> {
         let key = self
             .queues
             .iter()
             .filter(|(_, q)| !q.is_empty())
             .min_by_key(|(_, q)| q[0].enqueued)
             .map(|(k, _)| k.clone())?;
-        let batch = self.drain(&key);
+        let batch = self.drain(&key, self.max_batch);
+        self.total_batches += 1;
         Some((key, batch))
     }
 
-    fn drain(&mut self, key: &GroupKey) -> Vec<T> {
+    /// Admission drain: up to `n` oldest requests for exactly `key`,
+    /// ignoring readiness — they are joining an in-flight batch at a
+    /// block boundary, so waiting out the batching window would only
+    /// add latency. Does not count as a popped batch in
+    /// `total_batches`.
+    pub fn take_for(&mut self, key: &GroupKey, n: usize) -> Vec<Pending<T>> {
+        if n == 0 || !self.queues.contains_key(key) {
+            return Vec::new();
+        }
+        self.drain(key, n)
+    }
+
+    /// Pure queue removal (callers that pop whole batches account
+    /// `total_batches` themselves).
+    fn drain(&mut self, key: &GroupKey, n: usize) -> Vec<Pending<T>> {
         let q = self.queues.get_mut(key).unwrap();
-        let take = q.len().min(self.max_batch);
-        let batch: Vec<T> = q.drain(..take).map(|p| p.payload).collect();
+        let take = q.len().min(n);
+        let batch: Vec<Pending<T>> = q.drain(..take).collect();
         if q.is_empty() {
             self.queues.remove(key); // keep ready-scans proportional to live groups
         }
         self.count -= batch.len();
-        self.total_batches += 1;
         batch
+    }
+
+    /// Distinct queued group keys, oldest head-of-line first (the
+    /// continuous worker opens block-step batches in this order).
+    pub fn keys_by_age(&self) -> Vec<GroupKey> {
+        let mut ks: Vec<(&GroupKey, Instant)> = self
+            .queues
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .map(|(k, q)| (k, q[0].enqueued))
+            .collect();
+        ks.sort_by_key(|&(_, t)| t);
+        ks.into_iter().map(|(k, _)| k.clone()).collect()
     }
 
     /// Earliest deadline across queues (for the worker's sleep).
@@ -117,11 +176,15 @@ mod tests {
     use crate::util::prop::check;
 
     fn key(m: Method) -> GroupKey {
-        GroupKey { backbone: "dream".into(), method: m }
+        GroupKey::new("dream", m)
     }
 
     fn pend(m: Method, v: u32, t: Instant) -> Pending<u32> {
         Pending { key: key(m), payload: v, enqueued: t }
+    }
+
+    fn payloads(batch: Vec<Pending<u32>>) -> Vec<u32> {
+        batch.into_iter().map(|p| p.payload).collect()
     }
 
     #[test]
@@ -133,7 +196,7 @@ mod tests {
         b.push(pend(Method::Cdlm, 2, t));
         let (k, batch) = b.pop_ready(t).unwrap();
         assert_eq!(k.method, Method::Cdlm);
-        assert_eq!(batch, vec![1, 2]);
+        assert_eq!(payloads(batch), vec![1, 2]);
         assert!(b.is_empty());
     }
 
@@ -145,7 +208,7 @@ mod tests {
         assert!(b.pop_ready(t0).is_none());
         let later = t0 + Duration::from_millis(6);
         let (_, batch) = b.pop_ready(later).unwrap();
-        assert_eq!(batch, vec![7]);
+        assert_eq!(payloads(batch), vec![7]);
     }
 
     #[test]
@@ -158,8 +221,27 @@ mod tests {
         b.push(pend(Method::Cdlm, 3, t));
         let (k, batch) = b.pop_ready(t).unwrap();
         assert_eq!(k.method, Method::Cdlm);
-        assert_eq!(batch, vec![1, 3]);
+        assert_eq!(payloads(batch), vec![1, 3]);
         assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn tau_overrides_never_share_a_group() {
+        // satellite regression: the closed-batch path folds tau into the
+        // key, so a 0.5-tau request can never decode with a 0.9-tau
+        // group (it used to inherit whichever override came first)
+        let mut b = DynamicBatcher::new(2, Duration::from_secs(10));
+        let t = Instant::now();
+        let k_hi = key(Method::Cdlm).with_tau(Some(0.9));
+        let k_lo = key(Method::Cdlm).with_tau(Some(0.5));
+        assert_ne!(k_hi, k_lo);
+        b.push(Pending { key: k_hi.clone(), payload: 1u32, enqueued: t });
+        b.push(Pending { key: k_lo.clone(), payload: 2u32, enqueued: t });
+        assert!(b.pop_ready(t).is_none(), "different taus, neither full");
+        b.push(Pending { key: k_hi.clone(), payload: 3u32, enqueued: t });
+        let (k, batch) = b.pop_ready(t).unwrap();
+        assert_eq!(k.tau(), Some(0.9));
+        assert_eq!(payloads(batch), vec![1, 3]);
     }
 
     #[test]
@@ -186,6 +268,27 @@ mod tests {
     }
 
     #[test]
+    fn take_for_drains_only_matching_key_ignoring_readiness() {
+        let mut b = DynamicBatcher::new(8, Duration::from_secs(100));
+        let t = Instant::now();
+        b.push(pend(Method::Cdlm, 1, t));
+        b.push(pend(Method::Ar, 2, t));
+        b.push(pend(Method::Cdlm, 3, t));
+        // nothing is "ready" (bucket not full, window not expired) but
+        // admission takes matching requests immediately
+        assert!(b.pop_ready(t).is_none());
+        let got = payloads(b.take_for(&key(Method::Cdlm), 1));
+        assert_eq!(got, vec![1], "oldest matching request first");
+        let got = payloads(b.take_for(&key(Method::Cdlm), 4));
+        assert_eq!(got, vec![3]);
+        assert!(b.take_for(&key(Method::Cdlm), 4).is_empty());
+        assert_eq!(b.len(), 1, "other keys untouched");
+        assert!(b.take_for(&key(Method::Ar), 0).is_empty());
+        assert_eq!(payloads(b.take_for(&key(Method::Ar), 1)), vec![2]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
     fn running_count_tracks_push_and_pop() {
         let mut b = DynamicBatcher::new(2, Duration::from_secs(0));
         let t = Instant::now();
@@ -206,7 +309,8 @@ mod tests {
     #[test]
     fn property_no_request_lost_or_duplicated() {
         check("batcher-conservation", 50, |r| {
-            let mut b = DynamicBatcher::new(1 + r.index(4), Duration::from_secs(100));
+            let mut b =
+                DynamicBatcher::new(1 + r.index(4), Duration::from_secs(100));
             let t = Instant::now();
             let n = 1 + r.index(30);
             let methods = [Method::Cdlm, Method::Ar, Method::Vanilla];
@@ -214,8 +318,16 @@ mod tests {
                 b.push(pend(methods[r.index(3)], i as u32, t));
             }
             let mut seen = Vec::new();
-            while let Some((_, batch)) = b.pop_any() {
-                seen.extend(batch);
+            // interleave admission drains with batch pops
+            loop {
+                if r.below(2) == 0 {
+                    let k = key(methods[r.index(3)]);
+                    seen.extend(payloads(b.take_for(&k, 1 + r.index(3))));
+                } else if let Some((_, batch)) = b.pop_any() {
+                    seen.extend(payloads(batch));
+                } else if b.is_empty() {
+                    break;
+                }
             }
             seen.sort_unstable();
             seen == (0..n as u32).collect::<Vec<_>>()

@@ -32,6 +32,12 @@ pub struct KvPool {
     free: Vec<usize>,
     slot_elems: usize,
     pub peak_in_use: usize,
+    /// Lifetime alloc count. With mid-batch slot recycling (continuous
+    /// batching retires a lane and hands its slot to the next
+    /// admission) this exceeds `capacity` on a busy pool — aggregated
+    /// across pools as `kv_total_allocs` on `/healthz`, an
+    /// admission-churn signal.
+    pub total_allocs: u64,
 }
 
 impl KvPool {
@@ -48,6 +54,7 @@ impl KvPool {
             free: (0..capacity).rev().collect(),
             slot_elems,
             peak_in_use: 0,
+            total_allocs: 0,
         }
     }
 
@@ -72,6 +79,7 @@ impl KvPool {
         self.used[idx] = true;
         self.cache_lens[idx] = 0;
         self.peak_in_use = self.peak_in_use.max(self.in_use());
+        self.total_allocs += 1;
         Ok(SlotId(idx))
     }
 
@@ -314,6 +322,27 @@ mod tests {
             }
             true
         });
+    }
+
+    #[test]
+    fn mid_batch_recycle_resets_slot_state() {
+        // continuous batching: a retired lane's slot is freed while the
+        // pool is live and handed to the next admission with a clean
+        // cache_len, leaving sibling slots untouched
+        let g = geom();
+        let mut pool = KvPool::new(&g, 2);
+        let keep = pool.alloc().unwrap();
+        let retire = pool.alloc().unwrap();
+        let n = 2 * 2 * 4 * 4; // [L, bs=1, H, P, dh]
+        pool.write_prefill(keep, 0, 1, &vec![7.0; n], &vec![7.0; n]);
+        pool.write_prefill(retire, 0, 1, &vec![9.0; n], &vec![9.0; n]);
+        pool.free(retire);
+        let admitted = pool.alloc().unwrap();
+        assert_eq!(pool.cache_len(admitted), 0, "recycled slot starts fresh");
+        assert_eq!(pool.cache_len(keep), 4, "sibling lane unaffected");
+        assert_eq!(pool.total_allocs, 3, "lifetime allocs count recycling");
+        let view = pool.view(&[keep], 4);
+        assert_eq!(view.k_at(0, 0, 0, 0, 0), 7.0);
     }
 
     #[test]

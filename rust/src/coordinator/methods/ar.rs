@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 
-use super::DecodeOutcome;
+use super::{machine, DecodeOutcome};
 use crate::coordinator::kv_cache::{KvPool, SlotId};
 use crate::coordinator::sequence::SequenceState;
 use crate::runtime::{Geometry, Programs, TensorI32};
@@ -57,6 +57,7 @@ pub fn decode(
         for r in 0..bs {
             if !done[r] {
                 seqs[r].gen[i] = cur[r];
+                seqs[r].note_finalized();
                 seqs[r].steps += 1;
                 if cur[r] == EOS {
                     done[r] = true;
@@ -86,17 +87,92 @@ pub fn decode(
     for slot in slots {
         pool.free(slot);
     }
-    Ok(seqs
-        .into_iter()
-        .map(|mut s| {
-            s.mark_done();
-            DecodeOutcome {
-                gen_len: s.gen_length(),
-                gen: std::mem::take(&mut s.gen),
-                steps: s.steps,
-                model_calls: s.model_calls,
-                latency: s.latency(),
+    Ok(seqs.into_iter().map(SequenceState::into_outcome).collect())
+}
+
+// ---------------------------------------------------------------------------
+// Block-step-machine policy (resumable per-lane decode)
+// ---------------------------------------------------------------------------
+
+/// Admission prefill for one lane: allocate a slot, write the causal
+/// prompt KV with a single-lane `ar_prefill` call (padded to the
+/// smallest exported bucket by aliasing the one real prompt row, like
+/// every other machine program call), and return the slot plus the
+/// first-token proposal the prefill emits.
+pub(crate) fn machine_prefill(
+    progs: &Programs,
+    pool: &mut KvPool,
+    seq: &mut SequenceState,
+    pad_to: usize,
+) -> Result<(SlotId, i32)> {
+    let (pid, vf) = machine::padded_prompt(seq, pad_to);
+    let pre = progs.ar_prefill(pad_to, &pid, &vf)?;
+    let slot = pool.alloc()?;
+    pool.write_prefill(slot, 0, pad_to, &pre.k.data, &pre.v.data);
+    seq.model_calls += 1;
+    Ok((slot, pre.tok.data[0]))
+}
+
+/// Advance one cohort by up to `blk` token positions starting at gen
+/// index `pos0` — the greedy loop of [`decode`] cut at block
+/// boundaries so lanes can retire and admissions can join. Each
+/// iteration writes the pending proposal, then runs one `ar_step`
+/// (which also commits that token's KV for every cohort lane, done or
+/// not — exact caching, same as the closed-batch engine). `cur` holds
+/// each lane's pending proposal and is written back for the next block.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn machine_step(
+    progs: &Programs,
+    geom: &Geometry,
+    pool: &mut KvPool,
+    seqs: &mut [&mut SequenceState],
+    cur: &mut [i32],
+    slots: &[SlotId],
+    pos0: usize,
+    blk: usize,
+    pad_to: usize,
+) -> Result<()> {
+    let n = seqs.len();
+    let (p_len, g_len) = (geom.prompt_len, geom.gen_len);
+    let valid_from = TensorI32::from_vec(
+        &[pad_to],
+        machine::pad_map(n, pad_to, |r| seqs[r].valid_from),
+    );
+    let call_slots: Vec<SlotId> =
+        machine::pad_map(n, pad_to, |r| slots[r]);
+    let mut tok_t = TensorI32::zeros(&[pad_to]);
+    for t in 0..blk {
+        let i = pos0 + t;
+        for r in 0..n {
+            if !seqs[r].done {
+                seqs[r].gen[i] = cur[r];
+                seqs[r].note_finalized();
+                seqs[r].steps += 1;
+                if cur[r] == EOS {
+                    seqs[r].mark_done();
+                }
             }
-        })
-        .collect())
+        }
+        if (0..n).all(|r| seqs[r].done) || i == g_len - 1 {
+            break;
+        }
+        for r in 0..pad_to {
+            tok_t.data[r] = cur[r.min(n - 1)];
+        }
+        let out = progs.ar_step(
+            pad_to,
+            &pool.view(&call_slots, p_len + i),
+            &valid_from,
+            &tok_t,
+        )?;
+        // append the new token's KV for every real lane (exact caching)
+        for (lane, &slot) in slots.iter().enumerate() {
+            pool.commit_block(slot, lane, pad_to, 1, &out.k1.data, &out.v1.data);
+            if !seqs[lane].done {
+                seqs[lane].model_calls += 1;
+            }
+        }
+        cur[..n].copy_from_slice(&out.tok.data[..n]);
+    }
+    Ok(())
 }

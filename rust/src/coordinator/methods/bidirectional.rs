@@ -8,7 +8,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::{DecodeOpts, DecodeOutcome};
+use super::{machine, DecodeOpts, DecodeOutcome};
 use crate::coordinator::sequence::SequenceState;
 use crate::runtime::{Geometry, Programs, TensorI32};
 
@@ -88,19 +88,68 @@ pub fn decode(
         // bidirectional baselines decode every block (no early stop);
         // generation-length accounting truncates at <eos> afterwards.
     }
-    Ok(seqs
-        .into_iter()
-        .map(|mut s| {
-            s.mark_done();
-            DecodeOutcome {
-                gen_len: s.gen_length(),
-                gen: std::mem::take(&mut s.gen),
-                steps: s.steps,
-                model_calls: s.model_calls,
-                latency: s.latency(),
+    Ok(seqs.into_iter().map(SequenceState::into_outcome).collect())
+}
+
+/// Block-step-machine policy: refine one cohort's current block to
+/// completion. Mirrors the per-block loop of [`decode`] exactly — every
+/// cohort lane ticks on every pass while any cohort lane still has
+/// masked positions in the block (python-reference accounting) — so a
+/// cohort holding the whole batch reproduces the closed-batch trace
+/// byte-for-byte. Call rows beyond `seqs.len()` are padded by aliasing
+/// the last live lane (the AOT bucket contract).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn machine_step(
+    progs: &Programs,
+    geom: &Geometry,
+    opts: &DecodeOpts,
+    policy: Policy,
+    seqs: &mut [&mut SequenceState],
+    taus: &[f32],
+    lo: usize,
+    blk: usize,
+    pad_to: usize,
+) -> Result<()> {
+    let n = seqs.len();
+    let (p_len, s_len) = (geom.prompt_len, geom.seq_len);
+    let m_per_step = opts
+        .steps_per_block
+        .map(|spb| blk.div_ceil(spb))
+        .unwrap_or(1);
+    let valid_from = TensorI32::from_vec(
+        &[pad_to],
+        machine::pad_map(n, pad_to, |r| seqs[r].valid_from),
+    );
+    let mut ids_t = TensorI32::zeros(&[pad_to, s_len]);
+    loop {
+        let any = (0..n).any(|r| !seqs[r].masked_in(lo, blk).is_empty());
+        if !any {
+            break;
+        }
+        for r in 0..pad_to {
+            seqs[r.min(n - 1)]
+                .copy_full_ids_into(&mut ids_t.data[r * s_len..(r + 1) * s_len]);
+        }
+        let out = progs.teacher_denoise(pad_to, &ids_t, &valid_from)?;
+        for r in 0..n {
+            let base = r * s_len + p_len + lo;
+            if !seqs[r].masked_in(lo, blk).is_empty() {
+                let toks = &out.tok.data[base..base + blk];
+                let confs = &out.conf.data[base..base + blk];
+                match policy {
+                    Policy::TopM => {
+                        seqs[r].finalize_top_m(lo, toks, confs, m_per_step)
+                    }
+                    Policy::Threshold => {
+                        seqs[r].finalize_threshold(lo, toks, confs, taus[r])
+                    }
+                };
             }
-        })
-        .collect())
+            seqs[r].steps += 1;
+            seqs[r].model_calls += 1;
+        }
+    }
+    Ok(())
 }
 
 /// Convenience wrapper used by tests/benches for Table 4: vanilla with a

@@ -20,7 +20,7 @@
 
 use anyhow::Result;
 
-use super::{DecodeOpts, DecodeOutcome};
+use super::{machine, DecodeOpts, DecodeOutcome};
 use crate::coordinator::kv_cache::{KvPool, SlotId};
 use crate::coordinator::sequence::SequenceState;
 use crate::runtime::{Geometry, Programs, TensorI32};
@@ -90,7 +90,7 @@ pub fn decode(
                         lo,
                         &out.tok.data[base..base + blk],
                         &out.conf.data[base..base + blk],
-                        opts,
+                        opts.tau_conf,
                         variant,
                     );
                     seqs[r].steps += 1;
@@ -119,7 +119,7 @@ pub fn decode(
                         lo,
                         &out.tok.data[base..base + blk],
                         &out.conf.data[base..base + blk],
-                        opts,
+                        opts.tau_conf,
                         variant,
                     );
                     seqs[r].steps += 1;
@@ -132,19 +132,7 @@ pub fn decode(
     for slot in slots {
         pool.free(slot);
     }
-    Ok(seqs
-        .into_iter()
-        .map(|mut s| {
-            s.mark_done();
-            DecodeOutcome {
-                gen_len: s.gen_length(),
-                gen: std::mem::take(&mut s.gen),
-                steps: s.steps,
-                model_calls: s.model_calls,
-                latency: s.latency(),
-            }
-        })
-        .collect())
+    Ok(seqs.into_iter().map(SequenceState::into_outcome).collect())
 }
 
 fn finalize(
@@ -152,15 +140,118 @@ fn finalize(
     lo: usize,
     toks: &[i32],
     confs: &[f32],
-    opts: &DecodeOpts,
+    tau: f32,
     variant: Variant,
 ) {
     match variant {
         // dLLM-Cache keeps the vanilla one-token-per-step schedule
         Variant::DllmCache => seq.finalize_top_m(lo, toks, confs, 1),
         // Fast-dLLM D.C. adds thresholded parallel finalization
-        Variant::DualCache => {
-            seq.finalize_threshold(lo, toks, confs, opts.tau_conf)
-        }
+        Variant::DualCache => seq.finalize_threshold(lo, toks, confs, tau),
     };
+}
+
+/// Block-step-machine policy: refine one cohort's block to completion
+/// against the approximate cache, mirroring the per-block loop of
+/// [`decode`]. The refresh counter is cohort-lockstep state in the
+/// closed-batch engine; the machine carries it per lane (uniform within
+/// a cohort that was admitted together), takes the cohort max on entry
+/// — a refresh as soon as any lane needs one, exactly the legacy
+/// behavior when counters agree — and returns the counter for write-
+/// back. `DualCache` refreshes at every block boundary regardless.
+/// Refreshes rewrite only the real lanes' slots; padded call rows alias
+/// the last live lane and are never written back.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn machine_step(
+    progs: &Programs,
+    geom: &Geometry,
+    opts: &DecodeOpts,
+    variant: Variant,
+    pool: &mut KvPool,
+    seqs: &mut [&mut SequenceState],
+    taus: &[f32],
+    slots: &[SlotId],
+    ssr_in: usize,
+    lo: usize,
+    blk: usize,
+    pad_to: usize,
+) -> Result<usize> {
+    let n = seqs.len();
+    let (p_len, s_len) = (geom.prompt_len, geom.seq_len);
+    let mut ssr = if variant == Variant::DualCache {
+        usize::MAX // refresh at the block boundary
+    } else {
+        ssr_in
+    };
+    let valid_from = TensorI32::from_vec(
+        &[pad_to],
+        machine::pad_map(n, pad_to, |r| seqs[r].valid_from),
+    );
+    let call_slots: Vec<SlotId> =
+        machine::pad_map(n, pad_to, |r| slots[r]);
+    let mut ids_t = TensorI32::zeros(&[pad_to, s_len]);
+    let mut blk_t = TensorI32::zeros(&[pad_to, blk]);
+    loop {
+        let active: Vec<usize> = (0..n)
+            .filter(|&r| !seqs[r].masked_in(lo, blk).is_empty())
+            .collect();
+        if active.is_empty() {
+            break;
+        }
+        if ssr >= opts.refresh_every {
+            // full bidirectional pass: fresh logits + fresh KV stacks
+            for r in 0..pad_to {
+                seqs[r.min(n - 1)].copy_full_ids_into(
+                    &mut ids_t.data[r * s_len..(r + 1) * s_len],
+                );
+            }
+            let out = progs.teacher_full_cache(pad_to, &ids_t, &valid_from)?;
+            for (lane, &slot) in slots.iter().enumerate() {
+                pool.write_full(slot, lane, pad_to, &out.k.data, &out.v.data);
+            }
+            for &r in &active {
+                let base = r * s_len + p_len + lo;
+                finalize(
+                    &mut *seqs[r],
+                    lo,
+                    &out.tok.data[base..base + blk],
+                    &out.conf.data[base..base + blk],
+                    taus[r],
+                    variant,
+                );
+                seqs[r].steps += 1;
+                seqs[r].model_calls += 1;
+            }
+            ssr = 1;
+        } else {
+            // approximate step: active block only, stale full-seq cache
+            for r in 0..pad_to {
+                blk_t.data[r * blk..(r + 1) * blk]
+                    .copy_from_slice(&seqs[r.min(n - 1)].gen[lo..lo + blk]);
+            }
+            let out = progs.teacher_block_approx(
+                pad_to,
+                blk,
+                &pool.view(&call_slots, s_len),
+                &valid_from,
+                &blk_t,
+                (p_len + lo) as i32,
+            )?;
+            for &r in &active {
+                let base = r * blk;
+                finalize(
+                    &mut *seqs[r],
+                    lo,
+                    &out.tok.data[base..base + blk],
+                    &out.conf.data[base..base + blk],
+                    taus[r],
+                    variant,
+                );
+                seqs[r].steps += 1;
+                seqs[r].model_calls += 1;
+            }
+            ssr += 1;
+        }
+    }
+    Ok(ssr)
 }

@@ -24,7 +24,7 @@
 
 use anyhow::Result;
 
-use super::{DecodeOpts, DecodeOutcome};
+use super::{machine, DecodeOpts, DecodeOutcome};
 use crate::coordinator::kv_cache::{KvPool, SlotId};
 use crate::coordinator::sequence::SequenceState;
 use crate::runtime::{Geometry, Programs, TensorI32};
@@ -155,17 +155,146 @@ pub fn decode(
     for slot in slots {
         pool.free(slot);
     }
-    Ok(seqs
-        .into_iter()
-        .map(|mut s| {
-            s.mark_done();
-            DecodeOutcome {
-                gen_len: s.gen_length(),
-                gen: std::mem::take(&mut s.gen),
-                steps: s.steps,
-                model_calls: s.model_calls,
-                latency: s.latency(),
+    Ok(seqs.into_iter().map(SequenceState::into_outcome).collect())
+}
+
+// ---------------------------------------------------------------------------
+// Block-step-machine policy (resumable per-lane decode)
+// ---------------------------------------------------------------------------
+
+/// Admission prefill for one lane: allocate a slot and write the exact
+/// prompt KV with a single-lane `student_prefill` call, padded up to
+/// the smallest exported bucket (`pad_to`) by aliasing the one real
+/// prompt row — the same AOT bucket contract every cohort call honors
+/// (a manifest need not export bucket 1). Per-lane outputs equal the
+/// batched prefill of [`decode`] (lanes are independent), so admitting
+/// a whole group lane-by-lane reproduces the closed-batch trace.
+pub(crate) fn machine_prefill(
+    progs: &Programs,
+    pool: &mut KvPool,
+    seq: &mut SequenceState,
+    pad_to: usize,
+) -> Result<SlotId> {
+    let (pid, vf) = machine::padded_prompt(seq, pad_to);
+    let pre = progs.student_prefill(pad_to, &pid, &vf)?;
+    let slot = pool.alloc()?;
+    pool.write_prefill(slot, 0, pad_to, &pre.k.data, &pre.v.data);
+    seq.model_calls += 1;
+    Ok(slot)
+}
+
+/// Refine one cohort's block to completion + early-stop marking at the
+/// boundary. Mirrors the per-block refinement loop of [`decode`]: every
+/// not-done cohort lane ticks while any cohort lane still has masked
+/// positions in the block. Rows beyond `seqs.len()` alias the last live
+/// lane and its slot (bucket padding; never finalized or committed).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn machine_step(
+    progs: &Programs,
+    geom: &Geometry,
+    pool: &KvPool,
+    seqs: &mut [&mut SequenceState],
+    taus: &[f32],
+    slots: &[SlotId],
+    lo: usize,
+    blk: usize,
+    pad_to: usize,
+) -> Result<()> {
+    let n = seqs.len();
+    let p_len = geom.prompt_len;
+    let cache_len = p_len + lo;
+    let valid_from = TensorI32::from_vec(
+        &[pad_to],
+        machine::pad_map(n, pad_to, |r| seqs[r].valid_from),
+    );
+    let call_slots: Vec<SlotId> =
+        machine::pad_map(n, pad_to, |r| slots[r]);
+    let mut blk_t = TensorI32::zeros(&[pad_to, blk]);
+    loop {
+        let any = (0..n)
+            .any(|r| !seqs[r].done && !seqs[r].masked_in(lo, blk).is_empty());
+        if !any {
+            break;
+        }
+        for r in 0..pad_to {
+            blk_t.data[r * blk..(r + 1) * blk]
+                .copy_from_slice(&seqs[r.min(n - 1)].gen[lo..lo + blk]);
+        }
+        let out = progs.student_block_step(
+            pad_to,
+            blk,
+            &pool.view(&call_slots, cache_len),
+            &valid_from,
+            &blk_t,
+            (p_len + lo) as i32,
+        )?;
+        for r in 0..n {
+            if seqs[r].done {
+                continue;
             }
-        })
-        .collect())
+            if !seqs[r].masked_in(lo, blk).is_empty() {
+                let base = r * blk;
+                seqs[r].finalize_threshold(
+                    lo,
+                    &out.tok.data[base..base + blk],
+                    &out.conf.data[base..base + blk],
+                    taus[r],
+                );
+            }
+            seqs[r].steps += 1;
+            seqs[r].model_calls += 1;
+        }
+    }
+    // early stop at the block boundary (paper §4.3)
+    for s in seqs.iter_mut() {
+        if !s.done && s.eos_in(lo, blk) {
+            s.mark_done();
+        }
+    }
+    Ok(())
+}
+
+/// Commit the block KV for the cohort lanes that continue past the
+/// boundary (one extra model call each, not a refinement step — the
+/// same §A.3 accounting as [`decode`]). `items` holds only continuing
+/// lanes; callers skip the call entirely when none continue.
+pub(crate) fn machine_commit(
+    progs: &Programs,
+    geom: &Geometry,
+    pool: &mut KvPool,
+    items: &mut [(&mut SequenceState, SlotId)],
+    lo: usize,
+    blk: usize,
+    pad_to: usize,
+) -> Result<()> {
+    let n = items.len();
+    if n == 0 {
+        return Ok(());
+    }
+    let p_len = geom.prompt_len;
+    let cache_len = p_len + lo;
+    let valid_from = TensorI32::from_vec(
+        &[pad_to],
+        machine::pad_map(n, pad_to, |r| items[r].0.valid_from),
+    );
+    let call_slots: Vec<SlotId> =
+        machine::pad_map(n, pad_to, |r| items[r].1);
+    let mut blk_t = TensorI32::zeros(&[pad_to, blk]);
+    for r in 0..pad_to {
+        blk_t.data[r * blk..(r + 1) * blk]
+            .copy_from_slice(&items[r.min(n - 1)].0.gen[lo..lo + blk]);
+    }
+    let out = progs.student_block_step(
+        pad_to,
+        blk,
+        &pool.view(&call_slots, cache_len),
+        &valid_from,
+        &blk_t,
+        (p_len + lo) as i32,
+    )?;
+    for (lane, (s, slot)) in items.iter_mut().enumerate() {
+        pool.commit_block(*slot, lane, pad_to, blk, &out.k_blk.data, &out.v_blk.data);
+        s.model_calls += 1;
+    }
+    Ok(())
 }

@@ -1,0 +1,498 @@
+//! Resumable block-step decode machine — the engine layer behind
+//! continuous batching.
+//!
+//! The closed-batch engines (`bidirectional::decode`, `cdlm::decode`,
+//! …) are run-to-completion functions: a batch enters, nothing leaves
+//! until the slowest lane finishes, and nothing joins. CDLM's
+//! block-wise causal attention makes the KV cache exact and append-only
+//! at block granularity (paper §4.3), which is precisely the property
+//! that lets sequences enter and leave a running batch at block
+//! boundaries. [`BatchState`] exploits it:
+//!
+//! * every request owns a **lane**: a [`SequenceState`], an optional KV
+//!   slot, a per-lane tau, and a block cursor;
+//! * [`BatchState::admit`] fills a free lane at any block boundary with
+//!   a bucket-1 prefill (per-lane program outputs are independent of
+//!   batch composition, so a lane admitted alone decodes exactly as it
+//!   would inside a group — `tests/parallel_decode.rs` pins this);
+//! * [`BatchState::step_cycle`] advances every live lane by one block:
+//!   lanes are grouped into **cohorts** sharing a block cursor, each
+//!   cohort runs the method's refinement loop to block completion in
+//!   lockstep (one program call per pass, padded up to an exported
+//!   bucket by aliasing the last live lane), then commits its block KV
+//!   and applies the method's early-stop policy;
+//! * [`BatchState::take_finished`] retires finished lanes immediately —
+//!   the outcome is produced and the KV slot freed mid-batch, instead
+//!   of the lane dragging along dead until the group drains.
+//!
+//! The per-method step behavior (cache variant, finalization policy,
+//! §A.3 step/model-call accounting) lives next to each closed-batch
+//! engine as `machine_prefill` / `machine_step` / `machine_commit`
+//! policy functions; this file only owns lane lifecycle and cohort
+//! scheduling. With no mid-flight admission, the machine reproduces the
+//! closed-batch decode traces (gen ids, steps, model calls)
+//! byte-for-byte for all six methods — `tests/continuous_batching.rs`
+//! pins this property against [`Engine::decode_serial`].
+//!
+//! [`Engine::decode_serial`]: crate::coordinator::scheduler::Engine::decode_serial
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::{ar, bidirectional, cached_teacher, cdlm};
+use super::{DecodeOpts, DecodeOutcome, Method};
+use crate::coordinator::kv_cache::{KvPool, SlotId};
+use crate::coordinator::sequence::SequenceState;
+use crate::runtime::{
+    Geometry, ModelWeights, Programs, Runtime, TensorI32,
+};
+
+/// One request's resumable decode state.
+struct Lane {
+    seq: SequenceState,
+    /// Per-lane confidence threshold: a request's tau override never
+    /// leaks onto its batch mates.
+    tau: f32,
+    /// Block cursor (DLM methods): blocks `< block` are fully decoded
+    /// and, where the method caches, committed.
+    block: usize,
+    /// Steps since the last approximate-cache refresh (cached-teacher
+    /// variants; `usize::MAX` forces a refresh first).
+    ssr: usize,
+    /// AR: pending next-token proposal entering the current position.
+    cur_tok: i32,
+    /// AR: next generation index to write.
+    ar_pos: usize,
+    slot: Option<SlotId>,
+    /// Set at the block boundary where the lane completed; the lane
+    /// stops stepping and waits for [`BatchState::take_finished`].
+    finished: bool,
+}
+
+/// A resumable lockstep batch: fixed lane capacity, per-lane state, an
+/// owned KV pool whose slots recycle as lanes retire and admissions
+/// take their place.
+pub struct BatchState {
+    rt: Arc<Runtime>,
+    weights: Arc<ModelWeights>,
+    pub method: Method,
+    pub opts: DecodeOpts,
+    geom: Geometry,
+    /// Exported batch buckets, ascending; cohort calls pad up to the
+    /// smallest bucket that fits.
+    buckets: Vec<usize>,
+    pool: KvPool,
+    lanes: Vec<Option<Lane>>,
+    stepped: bool,
+    pub total_admissions: u64,
+    pub mid_flight_admissions: u64,
+}
+
+impl BatchState {
+    /// A machine with `capacity` lanes (clamped to the largest exported
+    /// bucket — a cohort must fit one program call).
+    pub fn new(
+        rt: Arc<Runtime>,
+        weights: Arc<ModelWeights>,
+        method: Method,
+        opts: DecodeOpts,
+        capacity: usize,
+    ) -> Result<BatchState> {
+        let geom = rt.manifest.geometry.clone();
+        anyhow::ensure!(
+            opts.block_size > 0 && geom.gen_len % opts.block_size == 0,
+            "block {} must divide gen {}",
+            opts.block_size,
+            geom.gen_len
+        );
+        let mut buckets = rt.manifest.buckets.clone();
+        buckets.sort_unstable();
+        let max_bucket = buckets.last().copied().unwrap_or(1);
+        let cap = capacity.clamp(1, max_bucket);
+        // cache-less methods never allocate a slot; skip their slabs
+        let pool_cap = if method.uses_kv_cache() { cap } else { 0 };
+        let pool = KvPool::new(&geom, pool_cap);
+        Ok(BatchState {
+            rt,
+            weights,
+            method,
+            opts,
+            geom,
+            buckets,
+            pool,
+            lanes: (0..cap).map(|_| None).collect(),
+            stepped: false,
+            total_admissions: 0,
+            mid_flight_admissions: 0,
+        })
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn live_lanes(&self) -> usize {
+        self.lanes.iter().filter(|l| l.is_some()).count()
+    }
+
+    pub fn free_lanes(&self) -> usize {
+        self.capacity() - self.live_lanes()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lanes.iter().all(Option::is_none)
+    }
+
+    /// KV slots currently held by live lanes.
+    pub fn kv_in_use(&self) -> usize {
+        self.pool.in_use()
+    }
+
+    /// Lifetime slot allocations in this batch's pool — exceeds the
+    /// lane count once retired lanes' slots recycle into admissions.
+    pub fn kv_total_allocs(&self) -> u64 {
+        self.pool.total_allocs
+    }
+
+    /// Admit one request into a free lane: a single-lane prefill
+    /// (padded to the smallest exported bucket) for the caching
+    /// methods, slot allocation only for the approximate-cache
+    /// teachers, nothing for the cache-less baselines. Legal at any
+    /// block boundary — the new lane starts at block 0 in its own
+    /// cohort and never perturbs in-flight lanes.
+    ///
+    /// Admissions are per-lane by design (a mid-flight join has no one
+    /// to share a call with). When a batch opens with several requests
+    /// at once this costs one prefill launch per lane where the
+    /// closed-batch engine runs one batched call — negligible on the
+    /// reference backend; a batched group-admit entry point is the
+    /// obvious extension if launch overhead ever dominates on a device
+    /// backend.
+    pub fn admit(
+        &mut self,
+        prompt_ids: &[i32],
+        tau: Option<f32>,
+    ) -> Result<usize> {
+        anyhow::ensure!(
+            prompt_ids.len() == self.geom.prompt_len,
+            "prompt must be padded to {} tokens (got {})",
+            self.geom.prompt_len,
+            prompt_ids.len()
+        );
+        let idx = self
+            .lanes
+            .iter()
+            .position(Option::is_none)
+            .ok_or_else(|| anyhow::anyhow!("no free lane"))?;
+        let progs = Programs::new(&self.rt, &self.weights);
+        let mut seq = SequenceState::new(&self.geom, prompt_ids);
+        let tau = tau.unwrap_or(self.opts.tau_conf);
+        // smallest exported bucket that fits one prompt row — a
+        // manifest need not export bucket 1
+        let pre_pad = pad_of(&self.buckets, 1);
+        let (slot, cur_tok) = match self.method {
+            Method::Vanilla | Method::FastDllmPar => (None, 0),
+            Method::DllmCache | Method::FastDllmDc => {
+                (Some(self.pool.alloc()?), 0)
+            }
+            Method::Cdlm => (
+                Some(cdlm::machine_prefill(
+                    &progs,
+                    &mut self.pool,
+                    &mut seq,
+                    pre_pad,
+                )?),
+                0,
+            ),
+            Method::Ar => {
+                let (slot, tok) = ar::machine_prefill(
+                    &progs,
+                    &mut self.pool,
+                    &mut seq,
+                    pre_pad,
+                )?;
+                (Some(slot), tok)
+            }
+        };
+        self.lanes[idx] = Some(Lane {
+            seq,
+            tau,
+            block: 0,
+            ssr: usize::MAX,
+            cur_tok,
+            ar_pos: 0,
+            slot,
+            finished: false,
+        });
+        self.total_admissions += 1;
+        if self.stepped {
+            self.mid_flight_admissions += 1;
+        }
+        Ok(idx)
+    }
+
+    /// Lane grouping key: lanes sharing a cursor share a committed
+    /// cache length and block offset, so they can step in one lockstep
+    /// program call.
+    fn cursor_of(&self, lane: &Lane) -> usize {
+        match self.method {
+            Method::Ar => lane.ar_pos,
+            _ => lane.block,
+        }
+    }
+
+    /// Advance every unfinished lane by one block: cohorts (grouped by
+    /// cursor, deterministic order) each refine their block to
+    /// completion, apply the method's boundary policy, and commit block
+    /// KV for lanes that continue. Afterwards, finished lanes wait in
+    /// place for [`BatchState::take_finished`].
+    pub fn step_cycle(&mut self) -> Result<()> {
+        self.stepped = true;
+        let mut cohorts: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (i, l) in self.lanes.iter().enumerate() {
+            if let Some(l) = l {
+                if !l.finished {
+                    cohorts.entry(self.cursor_of(l)).or_default().push(i);
+                }
+            }
+        }
+        for (cursor, idxs) in cohorts {
+            self.step_cohort(cursor, &idxs)?;
+        }
+        Ok(())
+    }
+
+    /// Retire every finished lane: free its KV slot (mid-batch slot
+    /// recycling — the slot is immediately reusable by the next
+    /// admission) and convert its state into a [`DecodeOutcome`].
+    /// Returns `(lane index, outcome)` pairs.
+    pub fn take_finished(&mut self) -> Vec<(usize, DecodeOutcome)> {
+        let mut out = Vec::new();
+        for (i, entry) in self.lanes.iter_mut().enumerate() {
+            if entry.as_ref().is_some_and(|l| l.finished) {
+                let lane = entry.take().expect("checked above");
+                if let Some(slot) = lane.slot {
+                    self.pool.free(slot);
+                }
+                out.push((i, lane.seq.into_outcome()));
+            }
+        }
+        out
+    }
+
+    /// One cohort's block: dispatch to the per-method policy functions
+    /// that live beside each closed-batch engine.
+    fn step_cohort(&mut self, cursor: usize, idxs: &[usize]) -> Result<()> {
+        let blk = self.opts.block_size;
+        let num_blocks = self.geom.gen_len / blk;
+        let progs = Programs::new(&self.rt, &self.weights);
+        // disjoint &mut Lane refs, ascending lane order (idxs is sorted)
+        let mut lane_refs: Vec<&mut Lane> = Vec::with_capacity(idxs.len());
+        let mut rest: &mut [Option<Lane>] = &mut self.lanes;
+        let mut consumed = 0usize;
+        for &i in idxs {
+            let (head, tail) = rest.split_at_mut(i - consumed + 1);
+            lane_refs
+                .push(head[i - consumed].as_mut().expect("cohort lane live"));
+            consumed = i + 1;
+            rest = tail;
+        }
+        let n = lane_refs.len();
+        let pad_to = pad_of(&self.buckets, n);
+        let taus: Vec<f32> = lane_refs.iter().map(|l| l.tau).collect();
+        match self.method {
+            Method::Vanilla | Method::FastDllmPar => {
+                let policy = if self.method == Method::Vanilla {
+                    bidirectional::Policy::TopM
+                } else {
+                    bidirectional::Policy::Threshold
+                };
+                {
+                    let mut seqs: Vec<&mut SequenceState> =
+                        lane_refs.iter_mut().map(|l| &mut l.seq).collect();
+                    bidirectional::machine_step(
+                        &progs,
+                        &self.geom,
+                        &self.opts,
+                        policy,
+                        &mut seqs,
+                        &taus,
+                        cursor * blk,
+                        blk,
+                        pad_to,
+                    )?;
+                }
+                // no early stop in the bidirectional baselines
+                for l in lane_refs {
+                    l.block += 1;
+                    if l.block >= num_blocks {
+                        l.finished = true;
+                    }
+                }
+            }
+            Method::DllmCache | Method::FastDllmDc => {
+                let variant = if self.method == Method::DllmCache {
+                    cached_teacher::Variant::DllmCache
+                } else {
+                    cached_teacher::Variant::DualCache
+                };
+                let slots: Vec<SlotId> = lane_refs
+                    .iter()
+                    .map(|l| l.slot.expect("cached lane has a slot"))
+                    .collect();
+                let ssr_in =
+                    lane_refs.iter().map(|l| l.ssr).max().unwrap_or(usize::MAX);
+                let ssr_out = {
+                    let mut seqs: Vec<&mut SequenceState> =
+                        lane_refs.iter_mut().map(|l| &mut l.seq).collect();
+                    cached_teacher::machine_step(
+                        &progs,
+                        &self.geom,
+                        &self.opts,
+                        variant,
+                        &mut self.pool,
+                        &mut seqs,
+                        &taus,
+                        &slots,
+                        ssr_in,
+                        cursor * blk,
+                        blk,
+                        pad_to,
+                    )?
+                };
+                for l in lane_refs {
+                    l.ssr = ssr_out;
+                    l.block += 1;
+                    if l.block >= num_blocks {
+                        l.finished = true;
+                    }
+                }
+            }
+            Method::Cdlm => {
+                let slots: Vec<SlotId> = lane_refs
+                    .iter()
+                    .map(|l| l.slot.expect("cdlm lane has a slot"))
+                    .collect();
+                {
+                    let mut seqs: Vec<&mut SequenceState> =
+                        lane_refs.iter_mut().map(|l| &mut l.seq).collect();
+                    cdlm::machine_step(
+                        &progs,
+                        &self.geom,
+                        &self.pool,
+                        &mut seqs,
+                        &taus,
+                        &slots,
+                        cursor * blk,
+                        blk,
+                        pad_to,
+                    )?;
+                }
+                // commit block KV only for lanes continuing past the
+                // boundary (early-stopped lanes retire without paying
+                // the commit call — same as the closed-batch engine)
+                if cursor + 1 < num_blocks {
+                    let mut items: Vec<(&mut SequenceState, SlotId)> =
+                        lane_refs
+                            .iter_mut()
+                            .filter(|l| !l.seq.done)
+                            .map(|l| {
+                                let slot =
+                                    l.slot.expect("cdlm lane has a slot");
+                                (&mut l.seq, slot)
+                            })
+                            .collect();
+                    let pad = pad_of(&self.buckets, items.len());
+                    cdlm::machine_commit(
+                        &progs,
+                        &self.geom,
+                        &mut self.pool,
+                        &mut items,
+                        cursor * blk,
+                        blk,
+                        pad,
+                    )?;
+                }
+                for l in lane_refs {
+                    if l.seq.done {
+                        l.finished = true;
+                    } else {
+                        l.block += 1;
+                        if l.block >= num_blocks {
+                            l.finished = true;
+                        }
+                    }
+                }
+            }
+            Method::Ar => {
+                let slots: Vec<SlotId> = lane_refs
+                    .iter()
+                    .map(|l| l.slot.expect("ar lane has a slot"))
+                    .collect();
+                let mut curs: Vec<i32> =
+                    lane_refs.iter().map(|l| l.cur_tok).collect();
+                {
+                    let mut seqs: Vec<&mut SequenceState> =
+                        lane_refs.iter_mut().map(|l| &mut l.seq).collect();
+                    ar::machine_step(
+                        &progs,
+                        &self.geom,
+                        &mut self.pool,
+                        &mut seqs,
+                        &mut curs,
+                        &slots,
+                        cursor,
+                        blk,
+                        pad_to,
+                    )?;
+                }
+                let g_len = self.geom.gen_len;
+                for (l, cur) in lane_refs.into_iter().zip(curs) {
+                    l.cur_tok = cur;
+                    l.ar_pos = (cursor + blk).min(g_len);
+                    if l.seq.done || l.ar_pos >= g_len {
+                        l.finished = true;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Smallest exported bucket that fits `n` call rows (free function so
+/// callers holding `&mut` lane borrows can still consult the field).
+fn pad_of(buckets: &[usize], n: usize) -> usize {
+    buckets.iter().copied().find(|&b| b >= n).unwrap_or(n)
+}
+
+/// Build a bucket-padded per-row vector: rows `>= n` alias row `n - 1`
+/// (the single pad-by-aliasing contract every machine policy function
+/// shares — change the padding scheme here, not per engine).
+pub(crate) fn pad_map<T>(
+    n: usize,
+    pad_to: usize,
+    f: impl Fn(usize) -> T,
+) -> Vec<T> {
+    (0..pad_to).map(|r| f(r.min(n - 1))).collect()
+}
+
+/// Bucket-padded tensors for an admission prefill: `pad_to` copies of
+/// the one real prompt row plus the matching `valid_from` column (the
+/// shared scaffold of `cdlm::machine_prefill`/`ar::machine_prefill`).
+pub(crate) fn padded_prompt(
+    seq: &SequenceState,
+    pad_to: usize,
+) -> (TensorI32, TensorI32) {
+    let p_len = seq.prompt_ids.len();
+    let mut pid = Vec::with_capacity(pad_to * p_len);
+    for _ in 0..pad_to {
+        pid.extend_from_slice(&seq.prompt_ids);
+    }
+    (
+        TensorI32::from_vec(&[pad_to, p_len], pid),
+        TensorI32::from_vec(&[pad_to], vec![seq.valid_from; pad_to]),
+    )
+}

@@ -12,11 +12,20 @@
 //! Engines decode a fixed-size batch in lockstep with dead-lane masking:
 //! per-sample step counts only advance while a lane still has masked
 //! positions, and per-sample latency stops at lane completion (§A.3).
+//!
+//! Each engine exists in two forms that share the same per-step code
+//! and accounting: the closed-batch run-to-completion `decode` function
+//! (dispatched by [`decode_batch`], the trace-pinned reference path)
+//! and `machine_prefill`/`machine_step`/`machine_commit` policy
+//! functions driven by the resumable [`machine::BatchState`], which
+//! adds lane retirement and mid-flight admission at block boundaries
+//! for continuous serving.
 
 pub mod ar;
 pub mod bidirectional;
 pub mod cached_teacher;
 pub mod cdlm;
+pub mod machine;
 pub mod spec_decode;
 
 use std::time::Duration;
@@ -58,6 +67,9 @@ pub struct DecodeOutcome {
     pub steps: u64,
     pub model_calls: u64,
     pub latency: Duration,
+    /// Decode-side time to first revealed token (§A.3 latency starts at
+    /// decode start; the serving layer adds queueing delay for TTFT).
+    pub ttft: Duration,
     pub gen_len: usize,
 }
 
@@ -106,6 +118,24 @@ impl Method {
             Method::Cdlm => format!("CDLM-{backbone} (ours)"),
             Method::Ar => "AR baseline".to_string(),
         }
+    }
+
+    /// Whether the method's finalization reads `tau_conf` at all.
+    /// Top-m and greedy methods ignore it, so batching layers must not
+    /// split their groups over tau overrides.
+    pub fn uses_tau_conf(&self) -> bool {
+        matches!(
+            self,
+            Method::FastDllmPar | Method::FastDllmDc | Method::Cdlm
+        )
+    }
+
+    /// Whether the method allocates KV slots at decode time. The
+    /// cache-less bidirectional baselines recompute the full sequence
+    /// every step, so their lanes hold no slots and must not count
+    /// against KV budgets.
+    pub fn uses_kv_cache(&self) -> bool {
+        !matches!(self, Method::Vanilla | Method::FastDllmPar)
     }
 
     /// Which weight set this method decodes with.
@@ -175,6 +205,29 @@ mod tests {
             assert_eq!(Method::from_name(m.name()), Some(m));
         }
         assert_eq!(Method::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn tau_sensitivity_matches_finalization_policy() {
+        // threshold finalizers read tau; top-m/greedy never do
+        assert!(Method::Cdlm.uses_tau_conf());
+        assert!(Method::FastDllmPar.uses_tau_conf());
+        assert!(Method::FastDllmDc.uses_tau_conf());
+        assert!(!Method::Vanilla.uses_tau_conf());
+        assert!(!Method::DllmCache.uses_tau_conf());
+        assert!(!Method::Ar.uses_tau_conf());
+    }
+
+    #[test]
+    fn kv_usage_matches_cache_column() {
+        // cache-less bidirectional baselines hold no slots; everything
+        // else allocates per-lane KV
+        assert!(!Method::Vanilla.uses_kv_cache());
+        assert!(!Method::FastDllmPar.uses_kv_cache());
+        assert!(Method::DllmCache.uses_kv_cache());
+        assert!(Method::FastDllmDc.uses_kv_cache());
+        assert!(Method::Cdlm.uses_kv_cache());
+        assert!(Method::Ar.uses_kv_cache());
     }
 
     #[test]

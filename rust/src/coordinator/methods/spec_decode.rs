@@ -24,6 +24,12 @@
 //! fewer verifier passes when the drafter agrees — the acceptance rate
 //! is the figure of merit (reported in `DecodeOutcome::steps` as
 //! verify passes vs tokens).
+//!
+//! `DecodeOutcome::ttft` here dates from the first *drafted* token,
+//! which the verifier may later roll back — it can lead the first
+//! surviving token by up to one draft/verify round. Speculative
+//! decoding is not router-served, so no serving metric consumes this;
+//! tighten to acceptance time if that changes.
 
 use anyhow::Result;
 
@@ -130,6 +136,7 @@ pub fn decode(
         for (r, s) in seqs.iter_mut().enumerate() {
             if !s.done {
                 s.gen[lo] = next_tok[r];
+                s.note_finalized();
             }
         }
 
@@ -232,19 +239,7 @@ pub fn decode(
     for slot in d_slots.into_iter().chain(v_slots) {
         pool.free(slot);
     }
-    Ok(seqs
-        .into_iter()
-        .map(|mut s| {
-            s.mark_done();
-            DecodeOutcome {
-                gen_len: s.gen_length(),
-                gen: std::mem::take(&mut s.gen),
-                steps: s.steps,
-                model_calls: s.model_calls,
-                latency: s.latency(),
-            }
-        })
-        .collect())
+    Ok(seqs.into_iter().map(SequenceState::into_outcome).collect())
 }
 
 /// Re-draft + re-verify the unfinished tail of a block until every live

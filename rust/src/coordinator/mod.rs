@@ -12,8 +12,9 @@ pub mod sequence;
 
 pub use batcher::{DynamicBatcher, GroupKey, Pending};
 pub use kv_cache::{KvPool, SlotId};
+pub use methods::machine::BatchState;
 pub use methods::{DecodeOpts, DecodeOutcome, Method, ALL_METHODS};
 pub use metrics::{MetricsAggregator, RequestRecord};
 pub use router::{GenerateRequest, GenerateResponse, Router, ServingCore};
-pub use scheduler::Engine;
+pub use scheduler::{ActiveBatch, Engine};
 pub use sequence::SequenceState;

@@ -2,15 +2,24 @@
 //!
 //! All backend state (runtime, weights, KV pool, metrics) lives in one
 //! `ServingCore` owned by the decode-worker thread; HTTP handler
-//! threads and the CLI talk to it purely through channels. Within the
-//! worker, ready batcher groups are independent — different (backbone,
-//! method) keys never share sequence state or KV slots — so the worker
-//! drains every ready group per wakeup and decodes them concurrently on
-//! scoped threads (each group against its own KV pool), bounded by the
-//! backend's `max_concurrency`. Backends that must stay single-threaded
-//! (PJRT reports `max_concurrency() == 1`) keep the old serial path;
-//! responses and metrics are always emitted in group order, so traces
-//! are identical either way.
+//! threads and the CLI talk to it purely through channels.
+//!
+//! The worker runs **continuous batching** by default: queued requests
+//! open a resumable block-step batch ([`ActiveBatch`] over
+//! `methods::machine::BatchState`) immediately, every live batch
+//! advances one block per loop iteration, lanes that finalize `<eos>`
+//! are retired and answered mid-batch (their KV slot recycles on the
+//! spot), and compatible queued requests are admitted into freed lanes
+//! at block boundaries via a bucket-1 prefill — iteration-level
+//! scheduling instead of request-level. The classic closed-batch path
+//! (dynamic batcher windows + run-to-completion groups, the PR 2
+//! behavior) remains reachable with `RouterConfig::continuous = false`
+//! and serves as the serving-bench baseline.
+//!
+//! Per-request tau never leaks across requests: the continuous machine
+//! carries tau per lane, and the closed-batch path folds the override
+//! into the batching [`GroupKey`] so mixed-tau requests never share a
+//! lockstep group.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -22,9 +31,10 @@ use anyhow::Result;
 
 use super::batcher::{DynamicBatcher, GroupKey, Pending};
 use super::kv_cache::KvPool;
+use super::methods::machine::BatchState;
 use super::methods::{DecodeOpts, DecodeOutcome, Method};
 use super::metrics::{MetricsAggregator, RequestRecord};
-use super::scheduler::Engine;
+use super::scheduler::{ActiveBatch, Engine};
 use crate::runtime::{Geometry, ModelWeights, Runtime};
 use crate::tokenizer::Tokenizer;
 use crate::util::json::{self, Json};
@@ -35,9 +45,9 @@ use crate::util::threadpool;
 // ---------------------------------------------------------------------------
 
 pub struct ServingCore {
-    pub rt: Runtime,
+    pub rt: Arc<Runtime>,
     pub tokenizer: Tokenizer,
-    weights: HashMap<String, ModelWeights>,
+    weights: HashMap<String, Arc<ModelWeights>>,
     pub pool: KvPool,
     pub metrics: HashMap<String, MetricsAggregator>,
 }
@@ -55,7 +65,7 @@ impl ServingCore {
         }
         let pool = KvPool::new(&rt.manifest.geometry, pool_capacity);
         Ok(Self {
-            rt,
+            rt: Arc::new(rt),
             tokenizer,
             weights: HashMap::new(),
             pool,
@@ -67,20 +77,36 @@ impl ServingCore {
         &self.rt.manifest.geometry
     }
 
-    fn ensure_weights(&mut self, model: &str) -> Result<()> {
+    /// Load (once) and share a model's weights. The `Arc` lets
+    /// long-lived block-step machines hold the weights while the core
+    /// keeps loading others.
+    fn ensure_weights(&mut self, model: &str) -> Result<Arc<ModelWeights>> {
         if !self.weights.contains_key(model) {
             let w = ModelWeights::load(&self.rt.manifest, model)?;
             // §Perf: backends with a host/device split make the
             // weights device-resident for the model's lifetime here;
             // the reference backend treats this as a no-op
             w.upload(&self.rt)?;
-            self.weights.insert(model.to_string(), w);
+            self.weights.insert(model.to_string(), Arc::new(w));
         }
-        Ok(())
+        Ok(self.weights[model].clone())
     }
 
-    /// Decode one lockstep group (benches/examples call this directly;
-    /// the router worker calls it from its thread).
+    /// Open a resumable block-step batch for one group key.
+    pub fn open_batch(
+        &mut self,
+        key: &GroupKey,
+        opts: DecodeOpts,
+        capacity: usize,
+    ) -> Result<BatchState> {
+        let model = key.method.weights_for(&key.backbone);
+        let weights = self.ensure_weights(&model)?;
+        BatchState::new(self.rt.clone(), weights, key.method, opts, capacity)
+    }
+
+    /// Decode one lockstep group to completion (benches/examples call
+    /// this directly; the closed-batch worker calls it from its
+    /// thread).
     pub fn decode_group(
         &mut self,
         key: &GroupKey,
@@ -88,28 +114,32 @@ impl ServingCore {
         opts: &DecodeOpts,
     ) -> Result<Vec<DecodeOutcome>> {
         let model = key.method.weights_for(&key.backbone);
-        self.ensure_weights(&model)?;
-        let weights = &self.weights[&model];
-        let engine = Engine::new(&self.rt, weights);
+        let weights = self.ensure_weights(&model)?;
+        let engine = Engine::new(&self.rt, &weights);
         let outcomes = engine.decode(key.method, opts, prompts, &mut self.pool)?;
         self.record_group(key, &outcomes);
         Ok(outcomes)
     }
 
-    /// Fold a group's outcomes into the per-(backbone, method) metrics.
-    fn record_group(&mut self, key: &GroupKey, outcomes: &[DecodeOutcome]) {
+    /// Fold one outcome into the per-(backbone, method) metrics.
+    fn record_outcome(&mut self, key: &GroupKey, o: &DecodeOutcome) {
         let agg = self
             .metrics
             .entry(format!("{}/{}", key.backbone, key.method.name()))
             .or_default();
+        agg.record(&RequestRecord {
+            latency: o.latency,
+            steps: o.steps,
+            model_calls: o.model_calls,
+            gen_len: o.gen_len,
+            correct: None,
+        });
+    }
+
+    /// Fold a group's outcomes into the per-(backbone, method) metrics.
+    fn record_group(&mut self, key: &GroupKey, outcomes: &[DecodeOutcome]) {
         for o in outcomes {
-            agg.record(&RequestRecord {
-                latency: o.latency,
-                steps: o.steps,
-                model_calls: o.model_calls,
-                gen_len: o.gen_len,
-                correct: None,
-            });
+            self.record_outcome(key, o);
         }
     }
 
@@ -140,14 +170,23 @@ pub struct GenerateResponse {
     pub text: String,
     pub steps: u64,
     pub model_calls: u64,
+    /// Decode time (§A.3: starts when the lane enters a batch).
     pub latency: Duration,
+    /// Time from arrival to the first revealed token (queueing
+    /// included).
+    pub ttft: Duration,
+    /// Time from arrival to the full response (queueing included).
+    pub ttlt: Duration,
     pub gen_len: usize,
 }
 
 type Responder = mpsc::Sender<Result<GenerateResponse, String>>;
 
 enum RouterMsg {
-    Request(Box<(GenerateRequest, Responder)>),
+    /// A request, its responder, and its submit instant — arrival time
+    /// is stamped at `Router::submit`, so TTFT/TTLT include the time a
+    /// message waits in this channel while the worker decodes.
+    Request(Box<(GenerateRequest, Responder, Instant)>),
     Metrics(mpsc::Sender<Json>),
     Health(mpsc::Sender<Json>),
     Shutdown,
@@ -158,7 +197,23 @@ pub struct RouterConfig {
     pub max_batch: usize,
     pub max_wait: Duration,
     pub max_queue: usize,
+    /// KV slot budget. The closed-batch worker sizes the shared
+    /// `ServingCore` pool with it; the continuous worker additionally
+    /// treats it as the total-lane bound across live block-step
+    /// batches (each lane holds at most one slot in its batch's own
+    /// pool), so `--pool` caps KV memory on both paths.
     pub pool_capacity: usize,
+    /// Iteration-level scheduling (default). `false` restores the
+    /// closed-batch worker: batching windows + run-to-completion
+    /// groups, no mid-flight admission — the serving-bench baseline.
+    pub continuous: bool,
+    /// Upper bound on concurrently live block-step batches (bounds KV
+    /// memory: each batch owns a pool of `min(max_batch, max bucket)`
+    /// slots).
+    pub max_active: usize,
+    /// Artificial pause before each block step (tests/demos use this to
+    /// widen admission windows; zero in production).
+    pub step_delay: Duration,
 }
 
 impl Default for RouterConfig {
@@ -168,6 +223,9 @@ impl Default for RouterConfig {
             max_wait: Duration::from_millis(25),
             max_queue: 256,
             pool_capacity: 64,
+            continuous: true,
+            max_active: 4,
+            step_delay: Duration::ZERO,
         }
     }
 }
@@ -191,11 +249,15 @@ impl Router {
         let wq = queued.clone();
         let wcfg = cfg.clone();
         let wartifacts = artifacts.clone();
+        // the continuous worker decodes exclusively through per-batch
+        // KV pools (pool_capacity bounds their total lanes); don't
+        // also allocate the shared core pool it would never touch
+        let core_pool = if cfg.continuous { 0 } else { cfg.pool_capacity };
         let worker = std::thread::Builder::new()
             .name("cdlm-decode-worker".into())
             .spawn(move || {
                 let mut core =
-                    match ServingCore::load(&wartifacts, wcfg.pool_capacity) {
+                    match ServingCore::load(&wartifacts, core_pool) {
                         Ok(c) => {
                             let _ = ready_tx
                                 .send(Ok(c.rt.manifest.geometry.clone()));
@@ -206,7 +268,11 @@ impl Router {
                             return;
                         }
                     };
-                worker_loop(&mut core, rx, wcfg, wq);
+                if wcfg.continuous {
+                    worker_loop_continuous(&mut core, rx, wcfg, wq);
+                } else {
+                    worker_loop_closed(&mut core, rx, wcfg, wq);
+                }
             })?;
         let geometry = ready_rx
             .recv()
@@ -244,17 +310,28 @@ impl Router {
             req.backbone,
             req.method.name()
         );
-        let q = self.queued.load(Ordering::SeqCst);
-        anyhow::ensure!(
-            q < self.max_queue,
-            "admission rejected: queue full ({q}/{})",
-            self.max_queue
-        );
-        self.queued.fetch_add(1, Ordering::SeqCst);
+        // reserve-then-rollback: acting on the fetch_add result keeps
+        // the bound exact under concurrent submits (a load-then-add
+        // here would be the same racy RMW the worker's decrement had)
+        let q = self.queued.fetch_add(1, Ordering::SeqCst);
+        if q >= self.max_queue {
+            self.queued.fetch_sub(1, Ordering::SeqCst);
+            anyhow::bail!(
+                "admission rejected: queue full ({q}/{})",
+                self.max_queue
+            );
+        }
         let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(RouterMsg::Request(Box::new((req, rtx))))
-            .map_err(|_| anyhow::anyhow!("router worker is gone"))?;
+        if self
+            .tx
+            .send(RouterMsg::Request(Box::new((req, rtx, Instant::now()))))
+            .is_err()
+        {
+            // the request never reached the worker: release the permit
+            // so a dead worker reports as such, not as a full queue
+            self.queued.fetch_sub(1, Ordering::SeqCst);
+            anyhow::bail!("router worker is gone");
+        }
         Ok(rrx)
     }
 
@@ -282,7 +359,29 @@ impl Router {
     }
 }
 
-fn worker_loop(
+// ---------------------------------------------------------------------------
+// Continuous worker: block-step machines + mid-flight admission
+// ---------------------------------------------------------------------------
+
+/// Per-lane response ticket: where to answer and when the request
+/// arrived/entered a batch (TTFT/TTLT accounting).
+struct Ticket {
+    resp: Responder,
+    enqueued: Instant,
+    admitted: Instant,
+}
+
+/// Serving counters surfaced on `/healthz`. Live batches report their
+/// own admission counts; these fold in batches that already drained.
+#[derive(Default)]
+struct ServeStats {
+    closed_total_admissions: u64,
+    closed_mid_flight: u64,
+    closed_kv_allocs: u64,
+    retired_early: u64,
+}
+
+fn worker_loop_continuous(
     core: &mut ServingCore,
     rx: mpsc::Receiver<RouterMsg>,
     cfg: RouterConfig,
@@ -290,6 +389,251 @@ fn worker_loop(
 ) {
     let mut batcher: DynamicBatcher<(GenerateRequest, Responder)> =
         DynamicBatcher::new(cfg.max_batch, cfg.max_wait);
+    let mut active: Vec<ActiveBatch<Ticket>> = Vec::new();
+    let mut stats = ServeStats::default();
+    let mut shutdown = false;
+    // lanes one new machine would hold (each lane needs at most one KV
+    // slot, so total lanes bound total continuous KV memory)
+    let bucket_cap = core
+        .rt
+        .manifest
+        .buckets
+        .iter()
+        .copied()
+        .max()
+        .unwrap_or(1);
+    let batch_cap = cfg.max_batch.clamp(1, bucket_cap);
+    loop {
+        // ---- 1. ingest channel traffic (block only when fully idle)
+        let timeout = if !active.is_empty() {
+            Duration::ZERO
+        } else if !batcher.is_empty() {
+            Duration::from_millis(1)
+        } else {
+            Duration::from_millis(200)
+        };
+        let mut msgs = Vec::new();
+        match rx.recv_timeout(timeout) {
+            Ok(m) => msgs.push(m),
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => shutdown = true,
+        }
+        while let Ok(m) = rx.try_recv() {
+            msgs.push(m);
+        }
+        for m in msgs {
+            match m {
+                RouterMsg::Request(b) => {
+                    let (req, resp, submitted) = *b;
+                    // tau stays per-lane in the step machine, so
+                    // overrides batch together without leaking
+                    let key = GroupKey::new(req.backbone.clone(), req.method);
+                    batcher.push(Pending {
+                        key,
+                        payload: (req, resp),
+                        enqueued: submitted,
+                    });
+                }
+                RouterMsg::Metrics(tx) => {
+                    let _ = tx.send(core.metrics_json());
+                }
+                RouterMsg::Health(tx) => {
+                    let _ = tx.send(health_json(
+                        core, &batcher, &active, &stats,
+                    ));
+                }
+                RouterMsg::Shutdown => shutdown = true,
+            }
+        }
+        // ---- 2. open machines for queued keys no live batch can host.
+        // A block-step batch admits later arrivals mid-flight, so there
+        // is nothing to gain from holding a request back for a fuller
+        // bucket: open immediately. `max_active` and `pool_capacity`
+        // (total lanes ≈ total KV slots) bound continuous KV memory,
+        // but a key with no live batch at all may exceed them —
+        // otherwise sustained traffic on one key (whose batches never
+        // drain thanks to mid-flight refills) would starve every other
+        // key forever. The overflow is bounded by the number of
+        // distinct queued keys (backbone × method, a dozen at most).
+        for key in batcher.keys_by_age() {
+            let has_room = active
+                .iter()
+                .any(|ab| ab.key == key && ab.free_lanes() > 0);
+            if has_room {
+                continue;
+            }
+            let key_served = active.iter().any(|ab| ab.key == key);
+            // only slot-holding lanes draw on the KV budget; the
+            // cache-less baselines' batches are bounded by max_active
+            let total_kv_lanes: usize = active
+                .iter()
+                .filter(|ab| ab.key.method.uses_kv_cache())
+                .map(|ab| ab.state.capacity())
+                .sum();
+            let new_kv_lanes =
+                if key.method.uses_kv_cache() { batch_cap } else { 0 };
+            let at_capacity = active.len() >= cfg.max_active.max(1)
+                || total_kv_lanes + new_kv_lanes
+                    > cfg.pool_capacity.max(batch_cap);
+            if key_served && at_capacity {
+                continue; // at capacity and this key is already decoding
+            }
+            let opts = DecodeOpts::defaults(core.geometry());
+            match core.open_batch(&key, opts, cfg.max_batch) {
+                Ok(state) => active.push(ActiveBatch::new(key, state)),
+                Err(e) => {
+                    // fail this key's queued requests (bad weights)
+                    let msg = format!("decode failed: {e:#}");
+                    let items = batcher.take_for(&key, usize::MAX);
+                    queued.fetch_sub(items.len(), Ordering::SeqCst);
+                    for p in items {
+                        let _ = p.payload.1.send(Err(msg.clone()));
+                    }
+                }
+            }
+        }
+        // ---- 3. admission: feed queued requests into free lanes at
+        // the block boundary (bucket-1 prefill inside `admit`)
+        for ab in active.iter_mut() {
+            loop {
+                let free = ab.free_lanes();
+                if free == 0 {
+                    break;
+                }
+                let items = batcher.take_for(&ab.key, free);
+                if items.is_empty() {
+                    break;
+                }
+                queued.fetch_sub(items.len(), Ordering::SeqCst);
+                for p in items {
+                    let (req, resp) = p.payload;
+                    let ticket = Ticket {
+                        resp,
+                        enqueued: p.enqueued,
+                        admitted: Instant::now(),
+                    };
+                    if let Err((t, e)) =
+                        ab.admit(&req.prompt_ids, req.tau_conf, ticket)
+                    {
+                        let _ =
+                            t.resp.send(Err(format!("admission failed: {e:#}")));
+                    }
+                }
+            }
+        }
+        // ---- 4. advance every live batch one block; retire + answer
+        // finished lanes immediately
+        for ab in active.iter_mut() {
+            if ab.is_empty() {
+                continue;
+            }
+            if !cfg.step_delay.is_zero() {
+                std::thread::sleep(cfg.step_delay);
+            }
+            match ab.step() {
+                Ok(finished) => {
+                    let still_live = !ab.is_empty();
+                    if still_live {
+                        stats.retired_early += finished.len() as u64;
+                    }
+                    for (ticket, outcome) in finished {
+                        core.record_outcome(&ab.key, &outcome);
+                        respond_lane(core, ticket, outcome);
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("decode failed: {e:#}");
+                    for t in ab.take_all_tickets() {
+                        let _ = t.resp.send(Err(msg.clone()));
+                    }
+                    ab.poisoned = true;
+                }
+            }
+        }
+        // ---- 5. fold drained/poisoned batches into the closed stats
+        active.retain(|ab| {
+            let done = ab.poisoned || ab.is_empty();
+            if done {
+                stats.closed_total_admissions += ab.state.total_admissions;
+                stats.closed_mid_flight += ab.state.mid_flight_admissions;
+                stats.closed_kv_allocs += ab.state.kv_total_allocs();
+            }
+            !done
+        });
+        if shutdown && active.is_empty() && batcher.is_empty() {
+            return;
+        }
+    }
+}
+
+/// Answer one retired lane. TTFT/TTLT include queueing: the lane's
+/// decode-relative first-token offset is rebased onto its admission
+/// instant.
+fn respond_lane(core: &ServingCore, ticket: Ticket, o: DecodeOutcome) {
+    let wait = ticket.admitted - ticket.enqueued;
+    let text = core.tokenizer.decode(&o.gen, true);
+    let _ = ticket.resp.send(Ok(GenerateResponse {
+        text,
+        steps: o.steps,
+        model_calls: o.model_calls,
+        latency: o.latency,
+        ttft: wait + o.ttft,
+        ttlt: Instant::now() - ticket.enqueued,
+        gen_len: o.gen_len,
+        gen_ids: o.gen,
+    }));
+}
+
+fn health_json(
+    core: &ServingCore,
+    batcher: &DynamicBatcher<(GenerateRequest, Responder)>,
+    active: &[ActiveBatch<Ticket>],
+    stats: &ServeStats,
+) -> Json {
+    let in_flight: usize = active.iter().map(|ab| ab.live_lanes()).sum();
+    let kv_in_use: usize = core.pool.in_use()
+        + active.iter().map(|ab| ab.state.kv_in_use()).sum::<usize>();
+    let total_admissions = stats.closed_total_admissions
+        + active.iter().map(|ab| ab.state.total_admissions).sum::<u64>();
+    let mid_flight = stats.closed_mid_flight
+        + active
+            .iter()
+            .map(|ab| ab.state.mid_flight_admissions)
+            .sum::<u64>();
+    let kv_allocs = stats.closed_kv_allocs
+        + core.pool.total_allocs
+        + active.iter().map(|ab| ab.state.kv_total_allocs()).sum::<u64>();
+    Json::obj(vec![
+        ("status", Json::str("ok")),
+        ("platform", Json::str(core.rt.platform())),
+        ("compiled_programs", Json::num(core.rt.compiled_count() as f64)),
+        ("kv_slots_in_use", Json::num(kv_in_use as f64)),
+        ("kv_total_allocs", Json::num(kv_allocs as f64)),
+        ("queued", Json::num(batcher.len() as f64)),
+        ("active_batches", Json::num(active.len() as f64)),
+        ("in_flight_lanes", Json::num(in_flight as f64)),
+        ("total_admissions", Json::num(total_admissions as f64)),
+        ("mid_flight_admissions", Json::num(mid_flight as f64)),
+        ("retired_early", Json::num(stats.retired_early as f64)),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Closed-batch worker (legacy): batching windows + run-to-completion
+// ---------------------------------------------------------------------------
+
+fn worker_loop_closed(
+    core: &mut ServingCore,
+    rx: mpsc::Receiver<RouterMsg>,
+    cfg: RouterConfig,
+    queued: Arc<AtomicUsize>,
+) {
+    let mut batcher: DynamicBatcher<(GenerateRequest, Responder)> =
+        DynamicBatcher::new(cfg.max_batch, cfg.max_wait);
+    // closed-batch admission accounting for /healthz: every request
+    // dispatched into a group counts as an admission; mid-flight joins
+    // and early retirement don't exist on this path, so those stay 0.
+    let mut stats = ServeStats::default();
     let mut shutdown = false;
     loop {
         let timeout = if batcher.is_empty() {
@@ -302,15 +646,23 @@ fn worker_loop(
         };
         match rx.recv_timeout(timeout) {
             Ok(RouterMsg::Request(b)) => {
-                let (req, resp) = *b;
-                let key = GroupKey {
-                    backbone: req.backbone.clone(),
-                    method: req.method,
+                let (req, resp, submitted) = *b;
+                // fold the tau override into the key: a group is
+                // tau-uniform, so no request decodes with another
+                // request's threshold. Methods whose finalization
+                // ignores tau keep one group — no batch fragmentation
+                // over an override they would never read.
+                let tau = if req.method.uses_tau_conf() {
+                    req.tau_conf
+                } else {
+                    None
                 };
+                let key = GroupKey::new(req.backbone.clone(), req.method)
+                    .with_tau(tau);
                 batcher.push(Pending {
                     key,
                     payload: (req, resp),
-                    enqueued: Instant::now(),
+                    enqueued: submitted,
                 });
                 // fall through: maybe this filled a bucket
             }
@@ -319,19 +671,7 @@ fn worker_loop(
                 continue;
             }
             Ok(RouterMsg::Health(tx)) => {
-                let _ = tx.send(Json::obj(vec![
-                    ("status", Json::str("ok")),
-                    ("platform", Json::str(core.rt.platform())),
-                    (
-                        "compiled_programs",
-                        Json::num(core.rt.compiled_count() as f64),
-                    ),
-                    (
-                        "kv_slots_in_use",
-                        Json::num(core.pool.in_use() as f64),
-                    ),
-                    ("queued", Json::num(batcher.len() as f64)),
-                ]));
+                let _ = tx.send(health_json(core, &batcher, &[], &stats));
                 continue;
             }
             Ok(RouterMsg::Shutdown) => shutdown = true,
@@ -340,8 +680,7 @@ fn worker_loop(
         }
         // drain every ready group this wakeup, then dispatch them
         // together — independent groups decode concurrently
-        let mut groups: Vec<(GroupKey, Vec<(GenerateRequest, Responder)>)> =
-            Vec::new();
+        let mut groups: Vec<(GroupKey, Group)> = Vec::new();
         loop {
             let item = if shutdown {
                 batcher.pop_any()
@@ -349,8 +688,11 @@ fn worker_loop(
                 batcher.pop_ready(Instant::now())
             };
             let Some((key, items)) = item else { break };
-            queued.fetch_sub(items.len().min(queued.load(Ordering::SeqCst)),
-                             Ordering::SeqCst);
+            // pushes and pops are balanced, so a plain decrement is
+            // exact (the old `min(load)` clamp was a racy read-modify-
+            // write that could leak permits under concurrent submits)
+            queued.fetch_sub(items.len(), Ordering::SeqCst);
+            stats.closed_total_admissions += items.len() as u64;
             groups.push((key, items));
         }
         run_groups(core, groups);
@@ -360,13 +702,14 @@ fn worker_loop(
     }
 }
 
-/// Decode opts for one group (per-request tau overrides win).
-fn group_opts(
-    geom: &Geometry,
-    items: &[(GenerateRequest, Responder)],
-) -> DecodeOpts {
+type Group = Vec<Pending<(GenerateRequest, Responder)>>;
+
+/// Decode opts for one group. Groups are tau-uniform by construction
+/// (tau is folded into the `GroupKey`), so applying the key's tau is
+/// exact — no request can inherit another's override.
+fn group_opts(geom: &Geometry, key: &GroupKey) -> DecodeOpts {
     let mut opts = DecodeOpts::defaults(geom);
-    if let Some(t) = items.iter().find_map(|(r, _)| r.tau_conf) {
+    if let Some(t) = key.tau() {
         opts.tau_conf = t;
     }
     opts
@@ -377,27 +720,31 @@ fn group_opts(
 /// path: explicitly, after the scoped join), never here.
 fn respond_group(
     core: &ServingCore,
-    items: Vec<(GenerateRequest, Responder)>,
+    items: Group,
+    decode_start: Instant,
     result: Result<Vec<DecodeOutcome>>,
 ) {
     match result {
         Ok(outcomes) => {
-            for ((_, resp), o) in items.into_iter().zip(outcomes) {
+            for (p, o) in items.into_iter().zip(outcomes) {
+                let wait = decode_start - p.enqueued;
                 let text = core.tokenizer.decode(&o.gen, true);
-                let _ = resp.send(Ok(GenerateResponse {
-                    gen_ids: o.gen,
+                let _ = p.payload.1.send(Ok(GenerateResponse {
                     text,
                     steps: o.steps,
                     model_calls: o.model_calls,
                     latency: o.latency,
+                    ttft: wait + o.ttft,
+                    ttlt: Instant::now() - p.enqueued,
                     gen_len: o.gen_len,
+                    gen_ids: o.gen,
                 }));
             }
         }
         Err(e) => {
             let msg = format!("decode failed: {e:#}");
-            for (_, resp) in items {
-                let _ = resp.send(Err(msg.clone()));
+            for p in items {
+                let _ = p.payload.1.send(Err(msg.clone()));
             }
         }
     }
@@ -408,10 +755,7 @@ fn respond_group(
 /// groups fan out on scoped threads, each with its own KV pool and slot
 /// set, then respond in group order — decode traces are identical to
 /// running the groups back to back.
-fn run_groups(
-    core: &mut ServingCore,
-    groups: Vec<(GroupKey, Vec<(GenerateRequest, Responder)>)>,
-) {
+fn run_groups(core: &mut ServingCore, groups: Vec<(GroupKey, Group)>) {
     if groups.is_empty() {
         return;
     }
@@ -423,11 +767,14 @@ fn run_groups(
     });
     if groups.len() == 1 || threads <= 1 || !all_loaded {
         for (key, items) in groups {
-            let opts = group_opts(core.geometry(), &items);
-            let prompts: Vec<Vec<i32>> =
-                items.iter().map(|(r, _)| r.prompt_ids.clone()).collect();
+            let opts = group_opts(core.geometry(), &key);
+            let prompts: Vec<Vec<i32>> = items
+                .iter()
+                .map(|p| p.payload.0.prompt_ids.clone())
+                .collect();
+            let t0 = Instant::now();
             let result = core.decode_group(&key, &prompts, &opts);
-            respond_group(core, items, result);
+            respond_group(core, items, t0, result);
         }
         return;
     }
@@ -446,13 +793,17 @@ fn run_groups(
             (
                 key.method.weights_for(&key.backbone),
                 key.method,
-                items.iter().map(|(r, _)| r.prompt_ids.clone()).collect(),
-                group_opts(&geom, items),
+                items
+                    .iter()
+                    .map(|p| p.payload.0.prompt_ids.clone())
+                    .collect(),
+                group_opts(&geom, key),
             )
         })
         .collect();
     let mut results: Vec<Option<Result<Vec<DecodeOutcome>>>> = Vec::new();
     results.resize_with(groups.len(), || None);
+    let t0 = Instant::now();
     {
         let rt = &core.rt;
         let weights_map = &core.weights;
@@ -481,6 +832,6 @@ fn run_groups(
         if let Ok(outcomes) = &result {
             core.record_group(&key, outcomes);
         }
-        respond_group(core, items, result);
+        respond_group(core, items, t0, result);
     }
 }

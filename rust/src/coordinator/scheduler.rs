@@ -1,5 +1,7 @@
 //! Decode scheduler: bucket selection, batch padding, engine dispatch,
-//! and the parallel chunk executor.
+//! the parallel chunk executor, and the continuous-batching driver
+//! ([`ActiveBatch`]) that pairs a resumable block-step machine with
+//! per-lane response tickets.
 //!
 //! AOT programs exist for fixed batch buckets (manifest `buckets`, e.g.
 //! {1, 2, 4}); the scheduler chunks a request list into bucket-sized
@@ -19,7 +21,9 @@
 
 use anyhow::Result;
 
+use super::batcher::GroupKey;
 use super::kv_cache::KvPool;
+use super::methods::machine::BatchState;
 use super::methods::{self, DecodeOpts, DecodeOutcome, Method};
 use crate::runtime::{Geometry, ModelWeights, Programs, Runtime};
 use crate::util::threadpool;
@@ -163,6 +167,92 @@ impl<'rt> Engine<'rt> {
             out.extend(r.expect("chunk executor dropped a chunk")?);
         }
         Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Continuous scheduling: one in-flight block-step batch + its tickets
+// ---------------------------------------------------------------------------
+
+/// An in-flight continuous batch: a resumable [`BatchState`] plus one
+/// caller-supplied ticket per lane (the router uses the response
+/// channel + arrival time; tests use plain indices). The worker loop
+/// drives it one block per [`ActiveBatch::step`]; lanes that finish
+/// retire immediately with their ticket, and freed lanes accept new
+/// admissions between steps — iteration-level scheduling instead of
+/// run-to-completion groups.
+pub struct ActiveBatch<T> {
+    pub key: GroupKey,
+    pub state: BatchState,
+    /// Set by the driver after a step error: every ticket has been
+    /// failed and the batch must be dropped, not stepped again.
+    pub poisoned: bool,
+    tickets: Vec<Option<T>>,
+}
+
+impl<T> ActiveBatch<T> {
+    pub fn new(key: GroupKey, state: BatchState) -> ActiveBatch<T> {
+        let cap = state.capacity();
+        ActiveBatch {
+            key,
+            state,
+            poisoned: false,
+            tickets: (0..cap).map(|_| None).collect(),
+        }
+    }
+
+    pub fn free_lanes(&self) -> usize {
+        self.state.free_lanes()
+    }
+
+    pub fn live_lanes(&self) -> usize {
+        self.state.live_lanes()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.state.is_empty()
+    }
+
+    /// Admit one request into a free lane (bucket-1 prefill) and file
+    /// its ticket. On failure the ticket is handed back so the caller
+    /// can answer the requester.
+    pub fn admit(
+        &mut self,
+        prompt_ids: &[i32],
+        tau: Option<f32>,
+        ticket: T,
+    ) -> Result<usize, (T, anyhow::Error)> {
+        match self.state.admit(prompt_ids, tau) {
+            Ok(lane) => {
+                self.tickets[lane] = Some(ticket);
+                Ok(lane)
+            }
+            Err(e) => Err((ticket, e)),
+        }
+    }
+
+    /// Advance every live lane by one block, then retire finished lanes
+    /// early: their `(ticket, outcome)` pairs return immediately while
+    /// slower lanes keep decoding.
+    pub fn step(&mut self) -> Result<Vec<(T, DecodeOutcome)>> {
+        self.state.step_cycle()?;
+        Ok(self
+            .state
+            .take_finished()
+            .into_iter()
+            .map(|(lane, outcome)| {
+                let ticket = self.tickets[lane]
+                    .take()
+                    .expect("retired lane has a ticket");
+                (ticket, outcome)
+            })
+            .collect())
+    }
+
+    /// Abandon the batch (decode error): hand back every outstanding
+    /// ticket so the caller can fail the requests.
+    pub fn take_all_tickets(&mut self) -> Vec<T> {
+        self.tickets.iter_mut().filter_map(Option::take).collect()
     }
 }
 

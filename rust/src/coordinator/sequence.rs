@@ -8,6 +8,7 @@
 
 use std::time::{Duration, Instant};
 
+use super::methods::DecodeOutcome;
 use crate::runtime::Geometry;
 use crate::tokenizer::{EOS, MASK};
 
@@ -22,6 +23,8 @@ pub struct SequenceState {
     pub model_calls: u64,
     pub done: bool,
     started: Instant,
+    /// When the first generation token was revealed (serving TTFT).
+    first_finalized: Option<Instant>,
     finished: Option<Instant>,
 }
 
@@ -43,13 +46,24 @@ impl SequenceState {
             model_calls: 0,
             done: false,
             started: Instant::now(),
+            first_finalized: None,
             finished: None,
         }
     }
 
     pub fn restart_clock(&mut self) {
         self.started = Instant::now();
+        self.first_finalized = None;
         self.finished = None;
+    }
+
+    /// Record the first-token instant. The finalize helpers call this;
+    /// engines that write `gen` directly (AR, speculative) call it
+    /// themselves after the write.
+    pub fn note_finalized(&mut self) {
+        if self.first_finalized.is_none() {
+            self.first_finalized = Some(Instant::now());
+        }
     }
 
     /// Masked positions within [lo, lo+len) of the generation span.
@@ -99,6 +113,7 @@ impl SequenceState {
             self.gen[best] = toks[best - lo];
             finalized = 1;
         }
+        self.note_finalized();
         finalized
     }
 
@@ -124,6 +139,7 @@ impl SequenceState {
         for &pos in &masked[..take] {
             self.gen[pos] = toks[pos - lo];
         }
+        self.note_finalized();
         take
     }
 
@@ -142,6 +158,31 @@ impl SequenceState {
 
     pub fn latency(&self) -> Duration {
         self.finished.unwrap_or_else(Instant::now) - self.started
+    }
+
+    /// Time from decode start to the first revealed token (decode-side
+    /// TTFT; the serving layer adds queueing delay on top).
+    pub fn ttft(&self) -> Duration {
+        self.first_finalized
+            .or(self.finished)
+            .unwrap_or_else(Instant::now)
+            - self.started
+    }
+
+    /// Close out the sequence as a [`DecodeOutcome`] — the one place
+    /// every engine (closed-batch and block-step machine) converts
+    /// per-lane state into a result, so the §A.3 accounting fields are
+    /// assembled identically everywhere.
+    pub fn into_outcome(mut self) -> DecodeOutcome {
+        self.mark_done();
+        DecodeOutcome {
+            gen_len: self.gen_length(),
+            steps: self.steps,
+            model_calls: self.model_calls,
+            latency: self.latency(),
+            ttft: self.ttft(),
+            gen: std::mem::take(&mut self.gen),
+        }
     }
 
     /// Valid generated tokens before the first <eos> (paper §A.3).

@@ -1,10 +1,12 @@
 //! `cdlm` — CLI for the CDLM serving stack.
 //!
 //! Subcommands:
-//!   serve      start the HTTP server (router + dynamic batcher)
+//!   serve      start the HTTP server (router + continuous batching)
 //!   generate   one-shot decode from the command line
 //!   eval       method x family evaluation grid (paper-table rows)
-//!   bench      decode-throughput grid -> machine-readable JSON
+//!   bench      decode-throughput grid -> machine-readable JSON;
+//!              --scenario serving runs staggered arrivals through the
+//!              router (continuous vs closed-batch) -> BENCH_serving.json
 //!   analysis   print Fig. 4 arithmetic-intensity / Fig. 9 roofline
 //!   info       artifacts manifest summary
 
@@ -12,7 +14,8 @@ use std::time::{Duration, Instant};
 
 use cdlm::coordinator::router::RouterConfig;
 use cdlm::coordinator::{
-    DecodeOpts, GroupKey, Method, Router, ServingCore, ALL_METHODS,
+    DecodeOpts, GenerateRequest, GroupKey, Method, Router, ServingCore,
+    ALL_METHODS,
 };
 use cdlm::server::{self, http::ServerConfig};
 use cdlm::util::cli::Args;
@@ -49,10 +52,11 @@ fn print_help() {
          USAGE: cdlm <command> [--flags]\n\
          \n\
          COMMANDS:\n\
-         \x20 serve      --addr 127.0.0.1:8472 --backbone dream --max-batch 4 --max-wait-ms 25\n\
+         \x20 serve      --addr 127.0.0.1:8472 --backbone dream --max-batch 4 --max-wait-ms 25 [--closed-batch]\n\
          \x20 generate   --prompt 'q:3*4+5=?' --method cdlm --backbone dream [--tau 0.9]\n\
          \x20 eval       --methods cdlm,ar --families chain-arith --n 16 --backbone dream\n\
          \x20 bench      --methods all --batches 1,2,4,8 --n 16 --out BENCH_decode.json\n\
+         \x20 bench      --scenario serving --method cdlm --n 32 --arrival-ms 3 --out BENCH_serving.json\n\
          \x20 analysis   [--fig 4|9]\n\
          \x20 info\n"
     );
@@ -68,6 +72,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             ),
             max_queue: args.get_usize("max-queue", 256),
             pool_capacity: args.get_usize("pool", 64),
+            continuous: !args.has("closed-batch"),
+            max_active: args.get_usize("max-active", 4),
+            step_delay: Duration::from_millis(
+                args.get_usize("step-delay-ms", 0) as u64,
+            ),
         },
     )?;
     server::serve(
@@ -97,7 +106,7 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
 
     let mut opts = DecodeOpts::defaults(&geom);
     opts.tau_conf = args.get_f64("tau", 0.9) as f32;
-    let key = GroupKey { backbone, method };
+    let key = GroupKey::new(backbone, method);
     let out = core.decode_group(&key, &[prompt_ids], &opts)?;
     let o = &out[0];
     println!("text:        {}", core.tokenizer.decode(&o.gen, true));
@@ -154,7 +163,7 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
         let prompts: Vec<Vec<i32>> =
             enc.iter().map(|e| e.prompt_ids.clone()).collect();
         for m in &methods {
-            let key = GroupKey { backbone: backbone.clone(), method: *m };
+            let key = GroupKey::new(backbone.clone(), *m);
             let outs = core.decode_group(&key, &prompts, &opts)?;
             let mut agg = cdlm::coordinator::MetricsAggregator::new();
             for (o, s) in outs.iter().zip(&samples) {
@@ -185,7 +194,12 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
 /// Decode-throughput bench: method x batch grid on the serving core,
 /// emitting the machine-readable `BENCH_decode.json` every perf PR
 /// records its trajectory against (schema documented in rust/README.md).
+/// `--scenario serving` instead drives staggered arrivals through the
+/// router, continuous vs closed-batch, emitting `BENCH_serving.json`.
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    if args.get_or("scenario", "decode") == "serving" {
+        return cmd_bench_serving(args);
+    }
     let n = args.get_usize("n", 16);
     let backbone = args.get_or("backbone", "dream").to_string();
     let out_path = args.get_or("out", "BENCH_decode.json").to_string();
@@ -235,7 +249,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     );
     let mut results = Vec::new();
     for m in &methods {
-        let key = GroupKey { backbone: backbone.clone(), method: *m };
+        let key = GroupKey::new(backbone.clone(), *m);
         for &requested_bs in &batches {
             // the JSON must record the batch that actually decoded, not
             // the requested one (n < batch clamps the group size)
@@ -298,6 +312,157 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         ("gen_len", Json::num(geom.gen_len as f64)),
         ("block_size", Json::num(geom.block_size as f64)),
         ("results", Json::Arr(results)),
+    ]);
+    std::fs::write(&out_path, doc.to_string())?;
+    println!("results -> {out_path}");
+    Ok(())
+}
+
+/// One serving-bench pass: staggered arrivals through a fresh router.
+struct ServingRun {
+    ttft: Summary,
+    ttlt: Summary,
+    wall_s: f64,
+    health: Json,
+}
+
+fn run_serving_mode(
+    continuous: bool,
+    prompts: &[Vec<i32>],
+    backbone: &str,
+    method: Method,
+    arrival: Duration,
+    max_batch: usize,
+) -> anyhow::Result<ServingRun> {
+    let router = Router::start(
+        artifacts_dir(),
+        RouterConfig {
+            max_batch,
+            max_queue: prompts.len().max(256),
+            continuous,
+            ..RouterConfig::default()
+        },
+    )?;
+    let t0 = Instant::now();
+    let mut receivers = Vec::with_capacity(prompts.len());
+    for p in prompts {
+        receivers.push(router.submit(GenerateRequest {
+            backbone: backbone.to_string(),
+            method,
+            prompt_ids: p.clone(),
+            tau_conf: None,
+        })?);
+        std::thread::sleep(arrival);
+    }
+    let mut ttft = Summary::new();
+    let mut ttlt = Summary::new();
+    for rx in receivers {
+        let resp = rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("worker dropped a request"))?
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        ttft.push(resp.ttft.as_secs_f64() * 1e3);
+        ttlt.push(resp.ttlt.as_secs_f64() * 1e3);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let health = router.health()?;
+    router.shutdown();
+    Ok(ServingRun { ttft, ttlt, wall_s, health })
+}
+
+/// Serving bench: the same staggered open-loop arrival trace against
+/// the continuous-batching worker and the closed-batch baseline. The
+/// headline number is mean TTFT — iteration-level scheduling admits a
+/// request at the next block boundary instead of parking it behind a
+/// batching window + the slowest lane of the previous group.
+fn cmd_bench_serving(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 32);
+    let arrival = Duration::from_millis(args.get_usize("arrival-ms", 3) as u64);
+    let max_batch = args.get_usize("max-batch", 4);
+    let backbone = args.get_or("backbone", "dream").to_string();
+    let out_path = args.get_or("out", "BENCH_serving.json").to_string();
+    let method = Method::from_name(args.get_or("method", "cdlm"))
+        .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
+
+    // encode the workload once; both modes see identical prompts
+    let probe = ServingCore::load(&artifacts_dir(), 1)?;
+    let geom = probe.rt.manifest.geometry.clone();
+    let samples = workload::generate(Family::ChainArith, n, 0xE7A1);
+    let prompts: Vec<Vec<i32>> = samples
+        .iter()
+        .map(|s| {
+            workload::encode_example(
+                &probe.tokenizer,
+                Family::ChainArith,
+                s,
+                geom.prompt_len,
+                geom.gen_len,
+            )
+            .map(|e| e.prompt_ids)
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let backend = probe.rt.backend_name();
+    drop(probe);
+
+    println!(
+        "{:<14} {:>11} {:>11} {:>11} {:>11} {:>11} {:>9}",
+        "mode", "ttft-p50", "ttft-p95", "ttft-mean", "ttlt-p50", "ttlt-p95",
+        "wall(s)"
+    );
+    let mut modes = Vec::new();
+    let mut means = Vec::new();
+    for (label, continuous) in
+        [("continuous", true), ("closed_batch", false)]
+    {
+        let run = run_serving_mode(
+            continuous, &prompts, &backbone, method, arrival, max_batch,
+        )?;
+        println!(
+            "{:<14} {:>11.2} {:>11.2} {:>11.2} {:>11.2} {:>11.2} {:>9.2}",
+            label,
+            run.ttft.percentile(50.0),
+            run.ttft.percentile(95.0),
+            run.ttft.mean(),
+            run.ttlt.percentile(50.0),
+            run.ttlt.percentile(95.0),
+            run.wall_s
+        );
+        let stat = |k: &str| {
+            run.health.get(k).and_then(Json::as_f64).unwrap_or(0.0)
+        };
+        means.push(run.ttft.mean());
+        modes.push(Json::obj(vec![
+            ("mode", Json::str(label)),
+            ("requests", Json::num(run.ttft.count() as f64)),
+            ("ttft_p50_ms", Json::num(run.ttft.percentile(50.0))),
+            ("ttft_p95_ms", Json::num(run.ttft.percentile(95.0))),
+            ("ttft_mean_ms", Json::num(run.ttft.mean())),
+            ("ttlt_p50_ms", Json::num(run.ttlt.percentile(50.0))),
+            ("ttlt_p95_ms", Json::num(run.ttlt.percentile(95.0))),
+            ("ttlt_mean_ms", Json::num(run.ttlt.mean())),
+            ("wall_s", Json::num(run.wall_s)),
+            ("admissions", Json::num(stat("total_admissions"))),
+            (
+                "mid_flight_admissions",
+                Json::num(stat("mid_flight_admissions")),
+            ),
+            ("retired_early", Json::num(stat("retired_early"))),
+        ]));
+    }
+    let speedup = if means[0] > 0.0 { means[1] / means[0] } else { 1.0 };
+    println!("mean TTFT speedup (closed/continuous): x{speedup:.2}");
+    let doc = Json::obj(vec![
+        ("schema", Json::str("cdlm.bench.serving/v1")),
+        ("backend", Json::str(backend)),
+        ("backbone", Json::str(backbone.as_str())),
+        ("method", Json::str(method.name())),
+        ("n", Json::num(n as f64)),
+        ("arrival_ms", Json::num(arrival.as_millis() as f64)),
+        ("max_batch", Json::num(max_batch as f64)),
+        ("gen_len", Json::num(geom.gen_len as f64)),
+        ("block_size", Json::num(geom.block_size as f64)),
+        ("ttft_mean_speedup", Json::num(speedup)),
+        ("modes", Json::Arr(modes)),
     ]);
     std::fs::write(&out_path, doc.to_string())?;
     println!("results -> {out_path}");

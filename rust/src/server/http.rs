@@ -3,9 +3,12 @@
 //! (whose worker thread owns the PJRT runtime), and wait on a channel.
 //!
 //!   POST /generate   {"prompt": str, "backbone": str?, "method": str?,
-//!                     "tau_conf": num?}
+//!                     "tau_conf": num?} -> text + §A.3 counters +
+//!                     ttft_ms/ttlt_ms (queueing included)
 //!   GET  /metrics    per-(backbone, method) §A.3 aggregates
-//!   GET  /healthz    liveness + platform info
+//!   GET  /healthz    liveness + platform info + continuous-batching
+//!                    state (in_flight_lanes, active_batches,
+//!                    total/mid-flight admissions, retired_early)
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -136,6 +139,8 @@ fn handle_generate(
                 ("model_calls", Json::num(resp.model_calls as f64)),
                 ("gen_len", Json::num(resp.gen_len as f64)),
                 ("latency_ms", Json::num(resp.latency.as_secs_f64() * 1e3)),
+                ("ttft_ms", Json::num(resp.ttft.as_secs_f64() * 1e3)),
+                ("ttlt_ms", Json::num(resp.ttlt.as_secs_f64() * 1e3)),
                 ("method", Json::str(method.name())),
             ]);
             (200, j.to_string())

@@ -1,0 +1,314 @@
+//! Resumable block-step machine invariants.
+//!
+//! The load-bearing pins of the continuous-batching refactor:
+//!  * **closed-batch equivalence** — for every method and batch size,
+//!    a `BatchState` whose lanes are admitted together and never joined
+//!    mid-flight reproduces `Engine::decode_serial`'s decode traces
+//!    (gen ids, steps, model calls, gen lengths) byte-for-byte;
+//!  * **mid-flight admission** — a lane admitted at a block boundary
+//!    into a running batch decodes exactly as it would alone, and the
+//!    in-flight lanes are unperturbed;
+//!  * **slot recycling** — a retired lane's KV slot is reused by the
+//!    next admission and the pool balances to zero when the machine
+//!    drains.
+
+use std::sync::Arc;
+
+use cdlm::coordinator::{
+    BatchState, DecodeOpts, DecodeOutcome, Engine, KvPool, Method,
+    ALL_METHODS,
+};
+use cdlm::runtime::{ModelWeights, Runtime};
+use cdlm::tokenizer::Tokenizer;
+use cdlm::util::prop::check;
+use cdlm::workload::{self, Family};
+
+const SEED: u64 = 0x5EED_0003;
+
+fn prompts(n: usize, task_seed: u64) -> Vec<Vec<i32>> {
+    let rt = Runtime::reference(SEED);
+    let geom = rt.manifest.geometry.clone();
+    let tok = Tokenizer::new();
+    workload::generate(Family::ChainArith, n, task_seed)
+        .iter()
+        .map(|s| {
+            workload::encode_example(
+                &tok,
+                Family::ChainArith,
+                s,
+                geom.prompt_len,
+                geom.gen_len,
+            )
+            .unwrap()
+            .prompt_ids
+        })
+        .collect()
+}
+
+fn weights_for(rt: &Runtime, m: Method) -> Arc<ModelWeights> {
+    Arc::new(
+        ModelWeights::load(&rt.manifest, &m.weights_for("dream")).unwrap(),
+    )
+}
+
+/// Drive a machine to completion with every lane admitted up front (no
+/// mid-flight arrivals) and return outcomes in lane order.
+fn machine_decode(
+    rt: &Arc<Runtime>,
+    m: Method,
+    opts: &DecodeOpts,
+    prompts: &[Vec<i32>],
+) -> Vec<DecodeOutcome> {
+    let weights = weights_for(rt, m);
+    let mut st = BatchState::new(
+        rt.clone(),
+        weights,
+        m,
+        opts.clone(),
+        prompts.len(),
+    )
+    .unwrap();
+    let mut lanes = Vec::new();
+    for p in prompts {
+        lanes.push(st.admit(p, None).unwrap());
+    }
+    let mut out: Vec<Option<DecodeOutcome>> = Vec::new();
+    out.resize_with(prompts.len(), || None);
+    let mut guard = 0;
+    while !st.is_empty() {
+        guard += 1;
+        assert!(guard <= 10_000, "machine failed to drain");
+        st.step_cycle().unwrap();
+        for (lane, o) in st.take_finished() {
+            let req = lanes.iter().position(|&l| l == lane).unwrap();
+            assert!(out[req].is_none(), "lane retired twice");
+            out[req] = Some(o);
+        }
+    }
+    assert_eq!(st.kv_in_use(), 0, "machine leaked KV slots");
+    out.into_iter().map(Option::unwrap).collect()
+}
+
+fn traces_equal(a: &[DecodeOutcome], b: &[DecodeOutcome]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.gen == y.gen
+                && x.steps == y.steps
+                && x.model_calls == y.model_calls
+                && x.gen_len == y.gen_len
+        })
+}
+
+#[test]
+fn property_machine_matches_closed_batch_for_all_methods() {
+    let rt = Arc::new(Runtime::reference(SEED));
+    let geom = rt.manifest.geometry.clone();
+    let opts = DecodeOpts::defaults(&geom);
+    check("machine-equals-closed-batch", 12, |r| {
+        // 1..=4 lanes: within one machine (the largest exported bucket)
+        let n = 1 + r.index(4);
+        let m = ALL_METHODS[r.index(ALL_METHODS.len())];
+        let ps = prompts(n, 0xFEED ^ (n as u64) << 8 ^ r.index(1024) as u64);
+        let weights = weights_for(&rt, m);
+        let engine = Engine::new(&rt, &weights);
+        let mut pool = KvPool::new(&geom, 8);
+        let closed = engine.decode_serial(m, &opts, &ps, &mut pool).unwrap();
+        let machine = machine_decode(&rt, m, &opts, &ps);
+        pool.in_use() == 0 && traces_equal(&closed, &machine)
+    });
+}
+
+#[test]
+fn machine_matches_closed_batch_every_method_fixed_size() {
+    let rt = Arc::new(Runtime::reference(SEED));
+    let geom = rt.manifest.geometry.clone();
+    let opts = DecodeOpts::defaults(&geom);
+    let ps = prompts(3, 0xBEE5);
+    for m in ALL_METHODS {
+        let weights = weights_for(&rt, m);
+        let engine = Engine::new(&rt, &weights);
+        let mut pool = KvPool::new(&geom, 8);
+        let closed = engine.decode_serial(m, &opts, &ps, &mut pool).unwrap();
+        let machine = machine_decode(&rt, m, &opts, &ps);
+        assert!(
+            traces_equal(&closed, &machine),
+            "{}: block-step machine diverged from the closed-batch trace",
+            m.name()
+        );
+    }
+}
+
+#[test]
+fn mid_flight_admission_decodes_like_solo_for_all_methods() {
+    let rt = Arc::new(Runtime::reference(SEED));
+    let geom = rt.manifest.geometry.clone();
+    let opts = DecodeOpts::defaults(&geom);
+    let ps = prompts(2, 0xADA7);
+    for m in ALL_METHODS {
+        let weights = weights_for(&rt, m);
+        // solo references through the closed-batch engine
+        let engine = Engine::new(&rt, &weights);
+        let mut pool = KvPool::new(&geom, 4);
+        let solo_a = engine
+            .decode_serial(m, &opts, &ps[..1], &mut pool)
+            .unwrap();
+        let solo_b = engine
+            .decode_serial(m, &opts, &ps[1..], &mut pool)
+            .unwrap();
+        // machine: admit A, advance one block, then admit B mid-flight
+        let mut st = BatchState::new(
+            rt.clone(),
+            weights.clone(),
+            m,
+            opts.clone(),
+            2,
+        )
+        .unwrap();
+        let lane_a = st.admit(&ps[0], None).unwrap();
+        st.step_cycle().unwrap();
+        // A may already have early-stopped in its first block; if so its
+        // lane index is recycled by B, so capture its outcome now
+        let mut got_a: Option<DecodeOutcome> =
+            st.take_finished().pop().map(|(l, o)| {
+                assert_eq!(l, lane_a);
+                o
+            });
+        let lane_b = st.admit(&ps[1], None).unwrap();
+        assert_eq!(st.mid_flight_admissions, 1, "{}", m.name());
+        let mut got_b: Option<DecodeOutcome> = None;
+        let mut guard = 0;
+        while !st.is_empty() {
+            guard += 1;
+            assert!(guard <= 10_000, "{}: machine failed to drain", m.name());
+            st.step_cycle().unwrap();
+            for (lane, o) in st.take_finished() {
+                if lane == lane_b && got_b.is_none() {
+                    got_b = Some(o);
+                } else {
+                    assert_eq!(lane, lane_a, "{}", m.name());
+                    assert!(got_a.is_none(), "{}: lane retired twice", m.name());
+                    got_a = Some(o);
+                }
+            }
+        }
+        let got_a = got_a.expect("lane A retired");
+        let got_b = got_b.expect("lane B retired");
+        assert!(
+            traces_equal(&solo_a, std::slice::from_ref(&got_a)),
+            "{}: in-flight lane perturbed by admission",
+            m.name()
+        );
+        assert!(
+            traces_equal(&solo_b, std::slice::from_ref(&got_b)),
+            "{}: admitted lane diverged from its solo trace",
+            m.name()
+        );
+        assert_eq!(st.kv_in_use(), 0, "{} leaked KV slots", m.name());
+    }
+}
+
+#[test]
+fn retired_lane_slot_recycles_into_next_admission() {
+    let rt = Arc::new(Runtime::reference(SEED));
+    let geom = rt.manifest.geometry.clone();
+    let opts = DecodeOpts::defaults(&geom);
+    let ps = prompts(2, 0x51D5);
+    // capacity-1 machine: B can only run by recycling A's lane + slot
+    let weights = weights_for(&rt, Method::Cdlm);
+    let engine = Engine::new(&rt, &weights);
+    let mut pool = KvPool::new(&geom, 2);
+    let solo_b = engine
+        .decode_serial(Method::Cdlm, &opts, &ps[1..], &mut pool)
+        .unwrap();
+    let mut st = BatchState::new(
+        rt.clone(),
+        weights,
+        Method::Cdlm,
+        opts.clone(),
+        1,
+    )
+    .unwrap();
+    st.admit(&ps[0], None).unwrap();
+    assert!(st.admit(&ps[1], None).is_err(), "no free lane while A runs");
+    let mut guard = 0;
+    while st.free_lanes() == 0 {
+        guard += 1;
+        assert!(guard <= 10_000);
+        st.step_cycle().unwrap();
+        st.take_finished();
+    }
+    // A retired; its lane and KV slot are free for B immediately
+    let lane_b = st.admit(&ps[1], None).unwrap();
+    let mut got_b = None;
+    while !st.is_empty() {
+        st.step_cycle().unwrap();
+        for (lane, o) in st.take_finished() {
+            if lane == lane_b {
+                got_b = Some(o);
+            }
+        }
+    }
+    let got_b = got_b.expect("B retired");
+    assert!(
+        traces_equal(&solo_b, std::slice::from_ref(&got_b)),
+        "recycled-lane decode diverged from solo"
+    );
+    assert_eq!(st.total_admissions, 2);
+    assert_eq!(st.kv_in_use(), 0);
+}
+
+#[test]
+fn per_lane_tau_overrides_do_not_leak_across_lanes() {
+    let rt = Arc::new(Runtime::reference(SEED));
+    let geom = rt.manifest.geometry.clone();
+    let opts = DecodeOpts::defaults(&geom);
+    let ps = prompts(2, 0x7A07);
+    let weights = weights_for(&rt, Method::Cdlm);
+    let engine = Engine::new(&rt, &weights);
+    // solo references: lane 1 at the default tau, lane 0 at tau=0
+    let mut pool = KvPool::new(&geom, 4);
+    let solo_default = engine
+        .decode_serial(Method::Cdlm, &opts, &ps[1..], &mut pool)
+        .unwrap();
+    let mut opts_zero = opts.clone();
+    opts_zero.tau_conf = 0.0;
+    let solo_zero = engine
+        .decode_serial(Method::Cdlm, &opts_zero, &ps[..1], &mut pool)
+        .unwrap();
+    // machine: lane 0 carries a tau=0 override, lane 1 the default —
+    // both in ONE cohort, so a leak either way changes a gen trace
+    let mut st = BatchState::new(
+        rt.clone(),
+        weights,
+        Method::Cdlm,
+        opts.clone(),
+        2,
+    )
+    .unwrap();
+    let lane_a = st.admit(&ps[0], Some(0.0)).unwrap();
+    let lane_b = st.admit(&ps[1], None).unwrap();
+    let mut got_a = None;
+    let mut got_b = None;
+    while !st.is_empty() {
+        st.step_cycle().unwrap();
+        for (lane, o) in st.take_finished() {
+            if lane == lane_b {
+                got_b = Some(o);
+            } else if lane == lane_a {
+                got_a = Some(o);
+            }
+        }
+    }
+    let got_b = got_b.expect("default-tau lane retired");
+    let got_a = got_a.expect("override lane retired");
+    // gen ids are pure functions of the lane's own tau (steps are
+    // lockstep-coupled across the cohort, so only ids are comparable)
+    assert_eq!(
+        got_b.gen, solo_default[0].gen,
+        "lane 0's tau override leaked onto lane 1"
+    );
+    assert_eq!(
+        got_a.gen, solo_zero[0].gen,
+        "lane 0 decoded with the batch default instead of its override"
+    );
+}

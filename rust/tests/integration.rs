@@ -87,7 +87,7 @@ fn vanilla_decode_matches_python_reference() {
     let Some(fix) = golden("decode_parity.json") else { return };
     let prompts = parity_prompts(&fix);
     let opts = DecodeOpts::defaults(&core.rt.manifest.geometry.clone());
-    let key = GroupKey { backbone: "dream".into(), method: Method::Vanilla };
+    let key = GroupKey::new("dream", Method::Vanilla);
     let outs = core.decode_group(&key, &prompts, &opts).unwrap();
     let want_ids = fix.req("vanilla_ids").unwrap().as_arr().unwrap();
     let want_steps = fix.req("vanilla_steps").unwrap().as_i32_vec().unwrap();
@@ -107,7 +107,7 @@ fn cdlm_decode_matches_python_reference() {
     let Some(fix) = golden("decode_parity.json") else { return };
     let prompts = parity_prompts(&fix);
     let opts = DecodeOpts::defaults(&core.rt.manifest.geometry.clone());
-    let key = GroupKey { backbone: "dream".into(), method: Method::Cdlm };
+    let key = GroupKey::new("dream", Method::Cdlm);
     let outs = core.decode_group(&key, &prompts, &opts).unwrap();
     let want_ids = fix.req("cdlm_ids").unwrap().as_arr().unwrap();
     let want_steps = fix.req("cdlm_steps").unwrap().as_i32_vec().unwrap();
@@ -127,7 +127,7 @@ fn ar_decode_matches_python_reference() {
     let Some(fix) = golden("decode_parity.json") else { return };
     let prompts = parity_prompts(&fix);
     let opts = DecodeOpts::defaults(&core.rt.manifest.geometry.clone());
-    let key = GroupKey { backbone: "dream".into(), method: Method::Ar };
+    let key = GroupKey::new("dream", Method::Ar);
     let outs = core.decode_group(&key, &prompts, &opts).unwrap();
     let want_ids = fix.req("ar_ids").unwrap().as_arr().unwrap();
     for (r, o) in outs.iter().enumerate() {
@@ -166,14 +166,14 @@ fn dllm_cache_with_refresh_every_step_equals_vanilla() {
     opts.refresh_every = 1; // fully refreshed approx cache == exact
     let vanilla = core
         .decode_group(
-            &GroupKey { backbone: "dream".into(), method: Method::Vanilla },
+            &GroupKey::new("dream", Method::Vanilla),
             &prompts,
             &opts,
         )
         .unwrap();
     let cached = core
         .decode_group(
-            &GroupKey { backbone: "dream".into(), method: Method::DllmCache },
+            &GroupKey::new("dream", Method::DllmCache),
             &prompts,
             &opts,
         )
@@ -203,7 +203,7 @@ fn batched_equals_sequential_cdlm() {
         })
         .collect();
     let opts = DecodeOpts::defaults(&geom);
-    let key = GroupKey { backbone: "dream".into(), method: Method::Cdlm };
+    let key = GroupKey::new("dream", Method::Cdlm);
     let batched = core.decode_group(&key, &prompts, &opts).unwrap();
     let solo0 = core.decode_group(&key, &prompts[..1], &opts).unwrap();
     let solo1 = core.decode_group(&key, &prompts[1..], &opts).unwrap();
@@ -231,7 +231,7 @@ fn early_stop_never_decodes_past_eos_block() {
         })
         .collect();
     let opts = DecodeOpts::defaults(&geom);
-    let key = GroupKey { backbone: "dream".into(), method: Method::Cdlm };
+    let key = GroupKey::new("dream", Method::Cdlm);
     let outs = core.decode_group(&key, &prompts, &opts).unwrap();
     for o in outs {
         if let Some(eos_at) = o.gen.iter().position(|&t| t == EOS) {
@@ -270,7 +270,7 @@ fn kv_pool_is_balanced_after_decoding() {
     let opts = DecodeOpts::defaults(&geom);
     for m in [Method::Cdlm, Method::Ar, Method::FastDllmDc, Method::DllmCache]
     {
-        let key = GroupKey { backbone: "dream".into(), method: m };
+        let key = GroupKey::new("dream", m);
         core.decode_group(&key, &prompts, &opts).unwrap();
         assert_eq!(core.pool.in_use(), 0, "{} leaked KV slots", m.name());
     }

@@ -20,6 +20,7 @@ fn start_router() -> Router {
             max_wait: Duration::from_millis(10),
             max_queue: 8,
             pool_capacity: 8,
+            ..RouterConfig::default()
         },
     )
     .expect("router starts")
@@ -93,6 +94,71 @@ fn health_reports_worker_state() {
     let h = router.health().unwrap();
     assert_eq!(h.get("status").unwrap().as_str(), Some("ok"));
     assert_eq!(h.get("platform").unwrap().as_str(), Some("cpu"));
+    // continuous-batching surface: lane/admission state is always
+    // present, zeroed on an idle worker
+    for k in [
+        "in_flight_lanes",
+        "active_batches",
+        "total_admissions",
+        "mid_flight_admissions",
+        "retired_early",
+    ] {
+        assert!(h.get(k).and_then(|v| v.as_f64()).is_some(), "missing {k}");
+    }
+    router.shutdown();
+}
+
+/// The continuous-batching headline: a request that arrives while a
+/// batch is mid-decode is admitted into a freed lane at a block
+/// boundary and completes without waiting for the prior group to
+/// drain. The step delay widens each block so the second submission
+/// deterministically lands mid-flight (vanilla decodes every block —
+/// no early stop — so the first request is always still running).
+#[test]
+fn request_admitted_mid_decode_completes() {
+    let router = Router::start(
+        cdlm::artifacts_dir(),
+        RouterConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(5),
+            max_queue: 16,
+            pool_capacity: 16,
+            step_delay: Duration::from_millis(40),
+            ..RouterConfig::default()
+        },
+    )
+    .expect("router starts");
+    let rx_a = router.submit(valid_request(Method::Vanilla)).unwrap();
+    // wait until A's batch is actually in flight
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let h = router.health().unwrap();
+        let lanes = h.get("in_flight_lanes").unwrap().as_f64().unwrap();
+        if lanes >= 1.0 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "first request never entered a batch"
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let rx_b = router.submit(valid_request(Method::Vanilla)).unwrap();
+    let resp_b = rx_b.recv().unwrap().expect("mid-decode admission decodes");
+    let resp_a = rx_a.recv().unwrap().expect("in-flight lane unaffected");
+    assert!(resp_a.gen_len <= router.geometry.gen_len);
+    assert!(resp_b.gen_len <= router.geometry.gen_len);
+    let h = router.health().unwrap();
+    let mid = h.get("mid_flight_admissions").unwrap().as_f64().unwrap();
+    assert!(
+        mid >= 1.0,
+        "second request joined a fresh batch instead of the in-flight one"
+    );
+    let retired = h.get("retired_early").unwrap().as_f64().unwrap();
+    assert!(
+        retired >= 1.0,
+        "the first-finished lane should retire while the other still runs"
+    );
     router.shutdown();
 }
 
