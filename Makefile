@@ -3,9 +3,9 @@
 
 CARGO ?= cargo
 
-.PHONY: ci verify fmt clippy build test smoke bench clean
+.PHONY: ci verify fmt clippy build test smoke check-baseline check-pjrt bench clean
 
-ci: fmt clippy build test smoke
+ci: fmt clippy build test smoke check-baseline check-pjrt
 
 # Tier-1 verify (the regression gate), exactly as the roadmap states it.
 verify:
@@ -26,6 +26,18 @@ test:
 # Hermetic end-to-end smoke: eval two methods on the reference backend.
 smoke:
 	$(CARGO) run --release --bin cdlm -- eval --methods cdlm,ar --n 8
+
+# Deterministic accounting gate: the same bench CI runs, hard-failing on
+# any drift of per-cell steps/model_calls from BENCH_baseline.json.
+# To regenerate after an intentional accounting change:
+#   cargo run --release --bin cdlm -- bench --methods all --batches 1,4,8 --n 8 --out BENCH_baseline.json
+check-baseline:
+	$(CARGO) run --release --bin cdlm -- bench --methods all --batches 1,4,8 --n 8 --out BENCH_decode.json --check-baseline BENCH_baseline.json
+
+# Type-check the off-by-default PJRT seam against the vendored xla API
+# stub (the `pjrt` feature gates real execution behind the real crate).
+check-pjrt:
+	$(CARGO) check --workspace --all-targets --features pjrt
 
 bench:
 	$(CARGO) bench

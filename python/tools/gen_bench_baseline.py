@@ -1,0 +1,500 @@
+#!/usr/bin/env python3
+"""Generate BENCH_baseline.json: the deterministic accounting baseline
+the CI gate (`cdlm bench --check-baseline`) compares against.
+
+The rust reference backend is a pure function of (backend seed, model
+seed, decode history), so per-request `steps` and `model_calls` are
+exact integers reproducible on any machine. This script is a
+line-for-line port of that accounting — the SplitMix64/avalanche hash
+chain (rust/src/runtime/reference.rs), the six closed-batch decode
+engines (rust/src/coordinator/methods/*.rs), the bucket chunk planner
+(scheduler.rs), and the `cdlm bench` grid loop (main.rs) — reusing the
+existing python mirrors of the workload generators and vocab
+(python/compile/tasks.py).
+
+Regenerate after an intentional accounting change:
+
+    python3 python/tools/gen_bench_baseline.py
+
+and commit the refreshed BENCH_baseline.json in the same PR. The CI
+bench itself runs the rust implementation; this generator exists so the
+baseline can be produced without a decode run, and any disagreement
+between the two is itself a cross-language parity failure worth
+investigating.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import json
+import struct
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[2]
+
+# ---------------------------------------------------------------------------
+# import python/compile/{vocab,tasks}.py as a package (no __init__.py)
+# ---------------------------------------------------------------------------
+
+def _load(name: str, path: Path, package: str | None = None):
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[name] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+import types
+
+_pkg = types.ModuleType("compile")
+_pkg.__path__ = [str(REPO / "python" / "compile")]
+sys.modules["compile"] = _pkg
+vocab = _load("compile.vocab", REPO / "python" / "compile" / "vocab.py")
+tasks = _load("compile.tasks", REPO / "python" / "compile" / "tasks.py")
+
+MASK64 = (1 << 64) - 1
+
+# ---------------------------------------------------------------------------
+# reference backend hash chain (rust/src/runtime/reference.rs)
+# ---------------------------------------------------------------------------
+
+DEFAULT_SEED = 0xCD1A_2026
+CTX_MASK = 0x00FF_FFFF
+TOK_BASE = 4
+TOK_RANGE = 53
+
+PAD, MASK, BOS, EOS = 0, 1, 2, 3
+
+# geometry (rust/src/runtime/manifest.rs::Manifest::reference)
+PROMPT_LEN, GEN_LEN, BLOCK, SEQ_LEN = 64, 32, 8, 96
+BUCKETS = [1, 2, 4]
+TAU = None  # f32(0.9), set below
+REFRESH_EVERY = 4
+
+
+def f32(x: float) -> float:
+    """Round a double to the nearest f32 (exact f64 representation)."""
+    return struct.unpack("f", struct.pack("f", x))[0]
+
+
+TAU = f32(0.9)
+
+
+def mix(a: int, b: int) -> int:
+    z = (a ^ (b * 0x9E37_79B9_7F4A_7C15)) & MASK64
+    z = ((z ^ (z >> 30)) * 0xBF58_476D_1CE4_E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D0_49BB_1331_11EB) & MASK64
+    return z ^ (z >> 31)
+
+
+def unit(h: int) -> float:
+    return (h >> 11) / float(1 << 53)
+
+
+def token_hash(ids) -> int:
+    h = 0x6A09_E667_F3BC_C908
+    for t in ids:
+        h = mix(h, t & 0xFFFF_FFFF)
+    return h
+
+
+def ctx_step(prev: int, tok: int) -> int:
+    return mix(prev, tok & 0xFFFF_FFFF) & CTX_MASK
+
+
+def fnv1a(name: str) -> int:
+    h = 0xCBF2_9CE4_8422_2325
+    for b in name.encode():
+        h = ((h ^ b) * 0x0000_0100_0000_01B3) & MASK64
+    return h
+
+
+def model_seed(model: str) -> int:
+    return mix(DEFAULT_SEED, fnv1a(model))
+
+
+def ctx_root(ms: int) -> int:
+    return mix(ms, 0xB10C_CACE) & CTX_MASK
+
+
+def chain(ms: int, ids) -> int:
+    """Context hash after folding `ids` from the chain root."""
+    ctx = ctx_root(ms)
+    for t in ids:
+        ctx = ctx_step(ctx, t)
+    return ctx
+
+
+def dlm_propose(ms: int, h_pos: int, student: bool):
+    r = mix(ms, h_pos)
+    tok = EOS if r % 16 == 0 else TOK_BASE + (r % TOK_RANGE)
+    u = unit(mix(r, 0x5EED_C0DE))
+    conf = 1.0 - 0.25 * u if student else 1.0 - 0.6 * u
+    return tok, f32(conf)
+
+
+def ar_next(ms: int, ctx: int) -> int:
+    r = mix(mix(ms, 0xA12_57E9), ctx)
+    return EOS if r % 12 == 0 else TOK_BASE + (r % TOK_RANGE)
+
+
+# ---------------------------------------------------------------------------
+# SequenceState accounting subset (rust/src/coordinator/sequence.rs)
+# ---------------------------------------------------------------------------
+
+class Seq:
+    def __init__(self, prompt_ids):
+        assert len(prompt_ids) == PROMPT_LEN
+        self.prompt = list(prompt_ids)
+        self.gen = [MASK] * GEN_LEN
+        self.steps = 0
+        self.model_calls = 0
+        self.done = False
+
+    def full_ids(self):
+        return self.prompt + self.gen
+
+    def masked_in(self, lo, ln):
+        return [i for i in range(lo, lo + ln) if self.gen[i] == MASK]
+
+    def finalize_threshold(self, lo, toks, confs, tau):
+        masked = self.masked_in(lo, len(toks))
+        if not masked:
+            return 0
+        n = 0
+        for pos in masked:
+            if confs[pos - lo] >= tau:
+                self.gen[pos] = toks[pos - lo]
+                n += 1
+        if n == 0:
+            best, best_c = masked[0], confs[masked[0] - lo]
+            for pos in masked[1:]:
+                if confs[pos - lo] > best_c:
+                    best_c = confs[pos - lo]
+                    best = pos
+            self.gen[best] = toks[best - lo]
+            n = 1
+        return n
+
+    def finalize_top_m(self, lo, toks, confs, m):
+        masked = self.masked_in(lo, len(toks))
+        if not masked:
+            return 0
+        # stable descending by confidence (rust sort_by is stable)
+        masked = sorted(masked, key=lambda pos: -confs[pos - lo])
+        take = min(len(masked), max(m, 1))
+        for pos in masked[:take]:
+            self.gen[pos] = toks[pos - lo]
+        return take
+
+    def eos_in(self, lo, ln):
+        return any(t == EOS for t in self.gen[lo:lo + ln])
+
+    def gen_length(self):
+        try:
+            end = self.gen.index(EOS)
+        except ValueError:
+            end = len(self.gen)
+        return sum(1 for t in self.gen[:end] if t != MASK)
+
+
+# ---------------------------------------------------------------------------
+# closed-batch decode engines (accounting-faithful ports)
+# ---------------------------------------------------------------------------
+
+def denoise_proposals(ms: int, seqs):
+    """teacher_denoise / teacher_full_cache: per-lane full-seq proposals."""
+    out = []
+    for s in seqs:
+        row = s.full_ids()
+        lh = token_hash(row)
+        out.append([dlm_propose(ms, mix(lh, p), False) for p in range(SEQ_LEN)])
+    return out
+
+
+def block_proposals(ms: int, rows, ctxs, pos0: int, student: bool):
+    """student_block_step / teacher_block_approx over one block."""
+    out = []
+    for row, ctx_prev in zip(rows, ctxs):
+        bh = mix(token_hash(row), ctx_prev)
+        out.append(
+            [dlm_propose(ms, mix(bh, pos0 + i), student)
+             for i in range(len(row))]
+        )
+    return out
+
+
+def decode_bidirectional(ms, prompts, threshold: bool):
+    """vanilla (TopM m=1) and fast-dllm-par (Threshold)."""
+    seqs = [Seq(p) for p in prompts]
+    blk = BLOCK
+    for b in range(GEN_LEN // blk):
+        lo = b * blk
+        while True:
+            if not any(s.masked_in(lo, blk) for s in seqs):
+                break
+            props = denoise_proposals(ms, seqs)
+            for r, s in enumerate(seqs):
+                base = PROMPT_LEN + lo
+                toks = [props[r][base + i][0] for i in range(blk)]
+                confs = [props[r][base + i][1] for i in range(blk)]
+                if s.masked_in(lo, blk):
+                    if threshold:
+                        s.finalize_threshold(lo, toks, confs, TAU)
+                    else:
+                        s.finalize_top_m(lo, toks, confs, 1)
+                s.steps += 1
+                s.model_calls += 1
+    return seqs
+
+
+def decode_cached_teacher(ms, prompts, dual: bool):
+    """dllm-cache (top-1, periodic refresh) / fast-dllm-dc (threshold,
+    refresh at block boundaries)."""
+    seqs = [Seq(p) for p in prompts]
+    blk = BLOCK
+    refresh_ids = [None] * len(seqs)  # full ids at last write_full
+    ssr = 1 << 62  # usize::MAX stand-in: force refresh first
+    for b in range(GEN_LEN // blk):
+        lo = b * blk
+        if dual:
+            ssr = 1 << 62
+        while True:
+            active = [r for r, s in enumerate(seqs) if s.masked_in(lo, blk)]
+            if not active:
+                break
+            if ssr >= REFRESH_EVERY:
+                props = denoise_proposals(ms, seqs)
+                for r, s in enumerate(seqs):
+                    refresh_ids[r] = s.full_ids()
+                for r in active:
+                    base = PROMPT_LEN + lo
+                    toks = [props[r][base + i][0] for i in range(blk)]
+                    confs = [props[r][base + i][1] for i in range(blk)]
+                    if dual:
+                        seqs[r].finalize_threshold(lo, toks, confs, TAU)
+                    else:
+                        seqs[r].finalize_top_m(lo, toks, confs, 1)
+                    seqs[r].steps += 1
+                    seqs[r].model_calls += 1
+                ssr = 1
+            else:
+                pos0 = PROMPT_LEN + lo
+                rows = [s.gen[lo:lo + blk] for s in seqs]
+                ctxs = [chain(ms, refresh_ids[r][:pos0])
+                        for r in range(len(seqs))]
+                props = block_proposals(ms, rows, ctxs, pos0, False)
+                for r in active:
+                    toks = [t for t, _ in props[r]]
+                    confs = [c for _, c in props[r]]
+                    if dual:
+                        seqs[r].finalize_threshold(lo, toks, confs, TAU)
+                    else:
+                        seqs[r].finalize_top_m(lo, toks, confs, 1)
+                    seqs[r].steps += 1
+                    seqs[r].model_calls += 1
+                ssr += 1
+    return seqs
+
+
+def decode_cdlm(ms, prompts):
+    seqs = [Seq(p) for p in prompts]
+    blk = BLOCK
+    num_blocks = GEN_LEN // blk
+    # prefill: exact prompt chain, one model call per lane
+    ctx = [chain(ms, s.prompt) for s in seqs]
+    for s in seqs:
+        s.model_calls += 1
+    for b in range(num_blocks):
+        lo = b * blk
+        if all(s.done for s in seqs):
+            break
+        while True:
+            need = [r for r, s in enumerate(seqs)
+                    if not s.done and s.masked_in(lo, blk)]
+            if not need:
+                break
+            pos0 = PROMPT_LEN + lo
+            rows = [s.gen[lo:lo + blk] for s in seqs]
+            props = block_proposals(ms, rows, ctx, pos0, True)
+            for r, s in enumerate(seqs):
+                if s.done:
+                    continue
+                if s.masked_in(lo, blk):
+                    toks = [t for t, _ in props[r]]
+                    confs = [c for _, c in props[r]]
+                    s.finalize_threshold(lo, toks, confs, TAU)
+                s.steps += 1
+                s.model_calls += 1
+        for s in seqs:
+            if not s.done and s.eos_in(lo, blk):
+                s.done = True
+        still_running = any(not s.done for s in seqs)
+        if not still_running or b + 1 == num_blocks:
+            break
+        # commit: one extra model call per continuing lane; the chain
+        # extends over the final block tokens
+        for r, s in enumerate(seqs):
+            if not s.done:
+                s.model_calls += 1
+                new_ctx = ctx[r]
+                for t in s.gen[lo:lo + blk]:
+                    new_ctx = ctx_step(new_ctx, t)
+                ctx[r] = new_ctx
+            else:
+                # done lanes' slots are not committed; their chain is
+                # never read again
+                pass
+    return seqs
+
+
+def decode_ar(ms, prompts):
+    seqs = [Seq(p) for p in prompts]
+    ctx = [chain(ms, s.prompt) for s in seqs]
+    cur = [ar_next(ms, c) for c in ctx]
+    for s in seqs:
+        s.model_calls += 1
+    done = [False] * len(seqs)
+    for i in range(GEN_LEN):
+        for r, s in enumerate(seqs):
+            if not done[r]:
+                s.gen[i] = cur[r]
+                s.steps += 1
+                if cur[r] == EOS:
+                    done[r] = True
+                    s.done = True
+        if all(done) or i == GEN_LEN - 1:
+            break
+        # ar_step: every lane's chain extends over its pending token
+        # (done lanes included — exact caching), but only live lanes
+        # are charged the model call
+        for r, s in enumerate(seqs):
+            ctx[r] = ctx_step(ctx[r], cur[r])
+            if not done[r]:
+                s.model_calls += 1
+        cur = [ar_next(ms, c) for c in ctx]
+    return seqs
+
+
+METHODS = [
+    ("vanilla", "teacher_dream"),
+    ("dllm-cache", "teacher_dream"),
+    ("fast-dllm-par", "teacher_dream"),
+    ("fast-dllm-dc", "teacher_dream"),
+    ("cdlm", "cdlm_dream"),
+    ("ar", "ar_dream"),
+]
+
+
+def decode_batch(method: str, ms: int, prompts):
+    if method == "vanilla":
+        return decode_bidirectional(ms, prompts, threshold=False)
+    if method == "fast-dllm-par":
+        return decode_bidirectional(ms, prompts, threshold=True)
+    if method == "dllm-cache":
+        return decode_cached_teacher(ms, prompts, dual=False)
+    if method == "fast-dllm-dc":
+        return decode_cached_teacher(ms, prompts, dual=True)
+    if method == "cdlm":
+        return decode_cdlm(ms, prompts)
+    if method == "ar":
+        return decode_ar(ms, prompts)
+    raise ValueError(method)
+
+
+# ---------------------------------------------------------------------------
+# scheduler chunk plan (rust/src/coordinator/scheduler.rs::plan_chunks)
+# ---------------------------------------------------------------------------
+
+def plan_chunks(n: int):
+    buckets = sorted(BUCKETS)
+    mx = buckets[-1]
+    out = []
+    left = n
+    while left >= mx:
+        out.append((mx, mx))
+        left -= mx
+    if left > 0:
+        bucket = next((b for b in buckets if b >= left), mx)
+        out.append((bucket, left))
+    return out
+
+
+def engine_decode(method: str, ms: int, prompts):
+    """Engine::decode: chunk to buckets, pad by aliasing the last lane,
+    truncate padded outcomes."""
+    out = []
+    start = 0
+    for bucket, real in plan_chunks(len(prompts)):
+        group = list(prompts[start:start + real])
+        start += real
+        while len(group) < bucket:
+            group.append(group[-1])
+        out.extend(decode_batch(method, ms, group)[:real])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the bench grid (rust/src/main.rs::cmd_bench)
+# ---------------------------------------------------------------------------
+
+def main():
+    if len(sys.argv) > 1:
+        sys.exit(
+            "gen_bench_baseline.py takes no arguments: it always runs the "
+            "CI grid (methods all, batches 1/4/8, n 8) and writes "
+            f"{REPO / 'BENCH_baseline.json'}"
+        )
+    n = 8
+    batches = [1, 4, 8]
+    samples = tasks.generate("chain-arith", n, 0xE7A1)
+    prompts = [
+        tasks.encode_example("chain-arith", s, PROMPT_LEN, GEN_LEN)[0]
+        for s in samples
+    ]
+    cells = []
+    print(f"{'method':<14} {'batch':>6} {'requests':>9} {'tokens':>7} "
+          f"{'steps':>7} {'calls':>7}")
+    for method, model in METHODS:
+        ms = model_seed(model)
+        for requested_bs in batches:
+            bs = min(requested_bs, len(prompts))
+            outs = []
+            for i in range(0, len(prompts), bs):
+                outs.extend(engine_decode(method, ms, prompts[i:i + bs]))
+            tokens = sum(s.gen_length() for s in outs)
+            total_steps = sum(s.steps for s in outs)
+            total_calls = sum(s.model_calls for s in outs)
+            print(f"{method:<14} {bs:>6} {len(outs):>9} {tokens:>7} "
+                  f"{total_steps:>7} {total_calls:>7}")
+            cells.append({
+                "method": method,
+                "batch": bs,
+                "requests": len(outs),
+                "tokens": tokens,
+                "total_steps": total_steps,
+                "total_model_calls": total_calls,
+            })
+    doc = {
+        "schema": "cdlm.bench.decode/v1",
+        "backend": "reference",
+        "backbone": "dream",
+        "note": (
+            "Deterministic accounting baseline for the CI gate "
+            "(cdlm bench --check-baseline). Only requests/tokens/"
+            "total_steps/total_model_calls are compared; regenerate "
+            "with python3 python/tools/gen_bench_baseline.py after an "
+            "intentional accounting change."
+        ),
+        "n": n,
+        "gen_len": GEN_LEN,
+        "block_size": BLOCK,
+        "results": cells,
+    }
+    out = REPO / "BENCH_baseline.json"
+    out.write_text(json.dumps(doc, indent=1) + "\n")
+    print(f"baseline -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -56,7 +56,11 @@ fn main() -> anyhow::Result<()> {
     std::thread::spawn(move || {
         let _ = server::serve(
             router,
-            ServerConfig { addr: srv_addr, default_backbone: "dream".into() },
+            ServerConfig {
+                addr: srv_addr,
+                default_backbone: "dream".into(),
+                io_timeout: Duration::from_secs(10),
+            },
         );
     });
     std::thread::sleep(Duration::from_millis(300));

@@ -205,3 +205,137 @@ pub fn save_results(name: &str, j: crate::util::json::Json) {
         eprintln!("[{name}] results -> {}", path.display());
     }
 }
+
+/// The per-cell fields of a `cdlm.bench.decode/v1` document that are
+/// exact deterministic integers on the reference backend — the CI
+/// accounting gate compares these and nothing else (throughput and
+/// latency stay unasserted; shared runners are too noisy).
+const ACCOUNTING_FIELDS: [&str; 4] =
+    ["requests", "tokens", "total_steps", "total_model_calls"];
+
+fn cell_key(cell: &crate::util::json::Json) -> Option<(String, u64)> {
+    let m = cell.get("method")?.as_str()?.to_string();
+    let b = cell.get("batch")?.as_f64()?;
+    Some((m, b as u64))
+}
+
+/// Compare a freshly measured `cdlm.bench.decode/v1` document against
+/// the committed accounting baseline: every baseline cell must exist
+/// with identical step/model-call accounting, and no cells may appear
+/// or vanish. Returns a newline-separated drift report on mismatch —
+/// any drift is a hard CI failure (an intentional accounting change
+/// regenerates the baseline in the same PR).
+pub fn check_baseline(
+    current: &crate::util::json::Json,
+    baseline: &crate::util::json::Json,
+) -> Result<(), String> {
+    use crate::util::json::Json;
+    let cur = current
+        .get("results")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "current document has no results array".to_string())?;
+    let base = baseline
+        .get("results")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "baseline document has no results array".to_string())?;
+    let mut drifts = Vec::new();
+    if cur.len() != base.len() {
+        drifts.push(format!(
+            "result cell count changed: {} (baseline {})",
+            cur.len(),
+            base.len()
+        ));
+    }
+    for bc in base {
+        let Some(key) = cell_key(bc) else {
+            return Err("baseline cell lacks method/batch".to_string());
+        };
+        let Some(cc) = cur.iter().find(|c| cell_key(c).as_ref() == Some(&key))
+        else {
+            drifts.push(format!(
+                "cell {}/bs{} missing from the current run",
+                key.0, key.1
+            ));
+            continue;
+        };
+        for f in ACCOUNTING_FIELDS {
+            let bv = bc.get(f).and_then(Json::as_f64);
+            let cv = cc.get(f).and_then(Json::as_f64);
+            if bv != cv {
+                drifts.push(format!(
+                    "{}/bs{}: {f} = {cv:?}, baseline {bv:?}",
+                    key.0, key.1
+                ));
+            }
+        }
+    }
+    if drifts.is_empty() {
+        Ok(())
+    } else {
+        Err(drifts.join("\n"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::check_baseline;
+    use crate::util::json::Json;
+
+    fn cell(method: &str, batch: f64, calls: f64) -> Json {
+        Json::obj(vec![
+            ("method", Json::str(method)),
+            ("batch", Json::num(batch)),
+            ("requests", Json::num(8.0)),
+            ("tokens", Json::num(100.0)),
+            ("total_steps", Json::num(200.0)),
+            ("total_model_calls", Json::num(calls)),
+            // noisy fields must never participate in the comparison
+            ("tokens_per_s", Json::num(batch * 7.0)),
+        ])
+    }
+
+    fn doc(cells: Vec<Json>) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("cdlm.bench.decode/v1")),
+            ("results", Json::Arr(cells)),
+        ])
+    }
+
+    #[test]
+    fn identical_accounting_passes() {
+        let a = doc(vec![cell("cdlm", 1.0, 42.0), cell("ar", 4.0, 50.0)]);
+        let b = doc(vec![cell("cdlm", 1.0, 42.0), cell("ar", 4.0, 50.0)]);
+        assert!(check_baseline(&a, &b).is_ok());
+    }
+
+    #[test]
+    fn latency_noise_is_ignored() {
+        let a = doc(vec![cell("cdlm", 1.0, 42.0)]);
+        let mut noisy = cell("cdlm", 1.0, 42.0);
+        if let Json::Obj(ref mut m) = noisy {
+            m.insert("tokens_per_s".into(), Json::num(9999.0));
+            m.insert("p95_latency_ms".into(), Json::num(123.0));
+        }
+        let b = doc(vec![noisy]);
+        assert!(check_baseline(&b, &a).is_ok());
+    }
+
+    #[test]
+    fn injected_drift_fails_with_the_field_named() {
+        let base = doc(vec![cell("cdlm", 1.0, 42.0)]);
+        let drifted = doc(vec![cell("cdlm", 1.0, 43.0)]);
+        let err = check_baseline(&drifted, &base).unwrap_err();
+        assert!(err.contains("total_model_calls"), "{err}");
+        assert!(err.contains("cdlm/bs1"), "{err}");
+    }
+
+    #[test]
+    fn missing_and_extra_cells_fail() {
+        let base = doc(vec![cell("cdlm", 1.0, 42.0), cell("ar", 1.0, 9.0)]);
+        let cur = doc(vec![cell("cdlm", 1.0, 42.0)]);
+        let err = check_baseline(&cur, &base).unwrap_err();
+        assert!(err.contains("missing"), "{err}");
+        let err = check_baseline(&base, &cur).unwrap_err();
+        assert!(err.contains("cell count"), "{err}");
+    }
+}

@@ -1,36 +1,123 @@
-//! Block KV-cache manager: lane-major contiguous slabs of per-sequence
-//! cache slots.
+//! Block KV-cache manager: lane slots + ref-counted shared-prefix
+//! chains.
 //!
 //! Exact block-level caching is the paper's second pillar (§4.3): the
 //! prompt KV is written at prefill, each completed block's KV is
-//! committed once, and nothing is ever recomputed. The pool owns two
-//! contiguous slabs (K and V); slot `i` is the `[L, H, S, dh]` region at
-//! offset `i * slot_elems`, handed out with O(1) alloc/free. Engines
-//! never copy the cache out: [`KvPool::view`] lends a zero-copy
-//! [`KvView`] (per-lane slot bases over the slabs, `cache_len`-bounded)
-//! that flows through the backend seam, and commits append in place per
-//! lane. The batch-major `[L, bs, H, S, dh]` staging copies the old
-//! `gather_batch` produced are gone from the decode loop; device
-//! backends that still need that layout materialize it behind the seam
-//! via `KvView::to_batch_major`.
+//! committed once, and nothing is ever recomputed. Block-wise causal
+//! attention also makes the prompt KV *position-causal* — the cache for
+//! positions `[0, p)` depends only on the tokens at `[0, p)` — which is
+//! what makes cross-request reuse legal: two requests whose prompts
+//! share a block-aligned token prefix can share the cached KV for it
+//! verbatim.
+//!
+//! The pool therefore owns two kinds of storage inside one pair of
+//! contiguous K/V slabs:
+//!
+//! * **lane slots** — the classic one-owner `[L, H, S, dh]` regions
+//!   with O(1) alloc/free; every decode engine commits generated-block
+//!   KV here, and engines that never share (the closed-batch baselines,
+//!   the approximate-cache teachers) keep their whole cache here;
+//! * **prefix pages** — block-granular `[L, H, B, dh]` regions indexed
+//!   by a token-id trie ([`ChainNode`]) and shared across lanes with
+//!   refcounts. A lane that admits with a cached prompt pins its chain
+//!   (one refcount per node); retirement unpins; unpinned chains stay
+//!   resident as a warm cache until an LRU evictor reclaims them under
+//!   page pressure. Eviction is leaf-first and never touches a pinned
+//!   node, so a live lane's prefix can never be freed under it (the
+//!   pinned-chain guarantee `tests/prefix_cache.rs` pins).
+//!
+//! Divergence is copy-on-write by construction: a prompt that shares
+//! `k` blocks and then differs branches the trie at block `k` — the
+//! divergent tail gets fresh pages and the shared prefix is never
+//! overwritten.
+//!
+//! Engines never copy the cache out: [`KvPool::view`] lends a zero-copy
+//! [`KvView`] whose per-lane segment runs stitch shared pages and the
+//! private slot together; commits append in place per lane. Device
+//! backends that need the batch-major layout materialize it behind the
+//! seam via `KvView::to_batch_major`.
+
+use std::collections::HashMap;
 
 use anyhow::Result;
 
-use crate::runtime::{Geometry, KvDims, KvView};
+use crate::runtime::{Geometry, KvDims, KvSeg, KvView};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct SlotId(usize);
 
-/// Slab pool with O(1) alloc/free.
+/// A pinned prefix chain: the trie path (root-first) whose pages hold
+/// one full prompt's KV. Produced by [`KvPool::prefix_acquire_full`] /
+/// [`KvPool::prefix_install`] with every node's refcount already
+/// incremented; hand it to [`KvPool::attach_chain`] so the owning
+/// slot's retirement unpins it.
+#[derive(Debug)]
+pub struct ChainPin {
+    nodes: Vec<usize>,
+    /// First-token proposal cached at full-prompt depth (AR prefill
+    /// emits one; DLM prefills leave it empty).
+    pub ar_tok: Option<i32>,
+}
+
+/// Prefix-sharing granularity for a geometry: the block size when it
+/// divides the prompt cleanly, else the whole prompt as one block (no
+/// sub-prompt sharing, but the machinery still works).
+fn page_len_of(geom: &Geometry) -> usize {
+    if geom.block_size > 0 && geom.prompt_len % geom.block_size == 0 {
+        geom.block_size
+    } else {
+        geom.prompt_len.max(1)
+    }
+}
+
+/// One block of cached prompt KV in the trie: `tokens` is the block's
+/// token ids, `page` its `[L, H, B, dh]` region, `refs` the number of
+/// live lanes pinning it.
+#[derive(Debug)]
+struct ChainNode {
+    tag: u64,
+    tokens: Vec<i32>,
+    parent: Option<usize>,
+    children: Vec<usize>,
+    page: usize,
+    refs: usize,
+    tick: u64,
+    ar_tok: Option<i32>,
+}
+
+/// Slab pool with O(1) slot alloc/free plus the shared-prefix page
+/// store and its trie index.
 pub struct KvPool {
     dims: KvDims,
     prompt_len: usize,
-    k: Vec<f32>, // [capacity] x [L, H, S, dh], lane-major slots
+    /// Positions per prefix page (the prefix-sharing granularity):
+    /// the geometry block size when it divides the prompt, else the
+    /// whole prompt as a single block.
+    page_len: usize,
+    /// Pages covering one full prompt.
+    prompt_pages: usize,
+    k: Vec<f32>, // [slots | pages], lane-major regions
     v: Vec<f32>,
+    // ---- lane slots (one owner each)
     cache_lens: Vec<usize>,
     used: Vec<bool>,
     free: Vec<usize>,
     slot_elems: usize,
+    /// Per-slot attached chain (trie node path); empty = private slot
+    /// only.
+    chains: Vec<Vec<usize>>,
+    // ---- prefix pages (shared, ref-counted)
+    page_elems: usize,
+    /// Element offset where the page region starts in the slabs.
+    page_region: usize,
+    page_used: Vec<bool>,
+    page_free: Vec<usize>,
+    // ---- trie
+    nodes: Vec<Option<ChainNode>>,
+    node_free: Vec<usize>,
+    roots: HashMap<u64, Vec<usize>>,
+    lru_tick: u64,
+    // ---- counters
     pub peak_in_use: usize,
     /// Lifetime alloc count. With mid-batch slot recycling (continuous
     /// batching retires a lane and hands its slot to the next
@@ -38,23 +125,74 @@ pub struct KvPool {
     /// across pools as `kv_total_allocs` on `/healthz`, an
     /// admission-churn signal.
     pub total_allocs: u64,
+    /// Full-prompt chain hits: admissions that skipped prefill
+    /// entirely.
+    pub prefix_hits: u64,
+    /// Block-granular reuse: cached blocks found at admission,
+    /// including partial (copy-on-write) matches.
+    pub prefix_hit_blocks: u64,
+    /// Chain blocks reclaimed by the LRU evictor under page pressure.
+    pub prefix_evictions: u64,
 }
 
 impl KvPool {
+    /// A pool with `capacity` lane slots and **no** prefix pages: the
+    /// layout every closed-batch path uses (those engines always
+    /// prefill into private slots, keeping the trace-pinned baseline
+    /// accounting cold by construction). The block-step machine builds
+    /// its pool with [`KvPool::with_prefix_pages`] instead.
     pub fn new(geom: &Geometry, capacity: usize) -> Self {
+        Self::with_prefix_pages(geom, capacity, 0)
+    }
+
+    /// The machine's default prefix-page budget for a pool of
+    /// `capacity` lanes: two prompts' worth of pages per lane — a full
+    /// complement of live chains plus as much again retained as warm
+    /// cache before the LRU evictor starts reclaiming.
+    pub fn default_page_budget(geom: &Geometry, capacity: usize) -> usize {
+        2 * capacity * (geom.prompt_len / page_len_of(geom))
+    }
+
+    /// A pool with an explicit prefix-page budget (tests exercise
+    /// eviction pressure through this constructor).
+    pub fn with_prefix_pages(
+        geom: &Geometry,
+        capacity: usize,
+        page_capacity: usize,
+    ) -> Self {
         let dims = KvDims::of(geom);
         let slot_elems = dims.slot_elems();
+        let page_len = page_len_of(geom);
+        let prompt_pages = geom.prompt_len / page_len;
+        let page_elems =
+            dims.n_layers * dims.n_heads * page_len * dims.d_head;
+        let page_region = capacity * slot_elems;
+        let total = page_region + page_capacity * page_elems;
         Self {
             dims,
             prompt_len: geom.prompt_len,
-            k: vec![0.0; capacity * slot_elems],
-            v: vec![0.0; capacity * slot_elems],
+            page_len,
+            prompt_pages,
+            k: vec![0.0; total],
+            v: vec![0.0; total],
             cache_lens: vec![0; capacity],
             used: vec![false; capacity],
             free: (0..capacity).rev().collect(),
             slot_elems,
+            chains: (0..capacity).map(|_| Vec::new()).collect(),
+            page_elems,
+            page_region,
+            page_used: vec![false; page_capacity],
+            page_free: (0..page_capacity).rev().collect(),
+            nodes: Vec::new(),
+            node_free: Vec::new(),
+            roots: HashMap::new(),
+            lru_tick: 0,
             peak_in_use: 0,
             total_allocs: 0,
+            prefix_hits: 0,
+            prefix_hit_blocks: 0,
+            prefix_evictions: 0,
         }
     }
 
@@ -70,12 +208,34 @@ impl KvPool {
         2 * self.slot_elems * std::mem::size_of::<f32>()
     }
 
+    /// Positions per prefix page (the block-aligned sharing
+    /// granularity).
+    pub fn page_len(&self) -> usize {
+        self.page_len
+    }
+
+    /// Pages that make up one full prompt chain.
+    pub fn prompt_pages(&self) -> usize {
+        self.prompt_pages
+    }
+
+    /// Prefix pages currently resident (pinned or retained) — surfaced
+    /// as `kv_shared_slots` on `/healthz`.
+    pub fn prefix_resident_pages(&self) -> usize {
+        self.page_used.len() - self.page_free.len()
+    }
+
+    pub fn prefix_page_capacity(&self) -> usize {
+        self.page_used.len()
+    }
+
     pub fn alloc(&mut self) -> Result<SlotId> {
         let idx = self
             .free
             .pop()
             .ok_or_else(|| anyhow::anyhow!("KV pool exhausted"))?;
         debug_assert!(!self.used[idx]);
+        debug_assert!(self.chains[idx].is_empty(), "freed slot kept a chain");
         self.used[idx] = true;
         self.cache_lens[idx] = 0;
         self.peak_in_use = self.peak_in_use.max(self.in_use());
@@ -83,8 +243,17 @@ impl KvPool {
         Ok(SlotId(idx))
     }
 
+    /// Free a slot. If a prefix chain is attached its refcounts drop by
+    /// one; the chain's pages stay resident as warm cache until the LRU
+    /// evictor needs them.
     pub fn free(&mut self, id: SlotId) {
         assert!(self.used[id.0], "double free of KV slot {id:?}");
+        let path = std::mem::take(&mut self.chains[id.0]);
+        for n in path {
+            let node = self.nodes[n].as_mut().expect("chain node resident");
+            debug_assert!(node.refs > 0, "unpin of an unpinned chain node");
+            node.refs -= 1;
+        }
         self.used[id.0] = false;
         // zeroing is unnecessary for correctness (cache_len gates reads)
         self.free.push(id.0);
@@ -99,12 +268,52 @@ impl KvPool {
         id.0 * self.slot_elems
     }
 
-    /// Borrow a zero-copy view of `ids`' slots with the given lockstep
-    /// valid-prefix length. No cache data moves: the view is the slab
-    /// borrows plus one base offset per lane.
+    #[inline]
+    fn page_base(&self, page: usize) -> usize {
+        self.page_region + page * self.page_elems
+    }
+
+    /// Borrow a zero-copy view of `ids`' caches with the given lockstep
+    /// valid-prefix length. No cache data moves: each lane is a segment
+    /// run over the slabs — its pinned prefix pages (if a chain is
+    /// attached) followed by its private slot. An all-plain batch (the
+    /// closed-batch engines) takes the allocation-light bases path.
     pub fn view(&self, ids: &[SlotId], cache_len: usize) -> KvView<'_> {
-        let bases = ids.iter().map(|&id| self.base(id)).collect();
-        KvView::new(&self.k, &self.v, bases, self.dims, cache_len)
+        if ids.iter().all(|&id| self.chains[id.0].is_empty()) {
+            let bases = ids.iter().map(|&id| self.base(id)).collect();
+            return KvView::new(&self.k, &self.v, bases, self.dims, cache_len);
+        }
+        let lanes = ids.iter().map(|&id| self.lane_segs(id)).collect();
+        KvView::segmented(&self.k, &self.v, lanes, self.dims, cache_len)
+    }
+
+    fn lane_segs(&self, id: SlotId) -> Vec<KvSeg> {
+        let path = &self.chains[id.0];
+        if path.is_empty() {
+            return vec![KvSeg::full_slot(self.base(id), self.dims.seq_len)];
+        }
+        let mut segs = Vec::with_capacity(path.len() + 1);
+        for (i, &n) in path.iter().enumerate() {
+            let page =
+                self.nodes[n].as_ref().expect("chain node resident").page;
+            segs.push(KvSeg {
+                start: i * self.page_len,
+                len: self.page_len,
+                base: self.page_base(page),
+                region_len: self.page_len,
+                offset: 0,
+            });
+        }
+        // generated positions live in the lane's own slot at their
+        // natural offsets
+        segs.push(KvSeg {
+            start: self.prompt_len,
+            len: self.dims.seq_len - self.prompt_len,
+            base: self.base(id),
+            region_len: self.dims.seq_len,
+            offset: self.prompt_len,
+        });
+        segs
     }
 
     /// Install prefill output for one lane. `k`/`v` are batch-major
@@ -118,6 +327,10 @@ impl KvPool {
         k: &[f32],
         v: &[f32],
     ) {
+        debug_assert!(
+            self.chains[id.0].is_empty(),
+            "write_prefill into a chained slot"
+        );
         let g = self.dims;
         let (l_n, h_n, s_n, d) = (g.n_layers, g.n_heads, g.seq_len, g.d_head);
         let p = self.prompt_len;
@@ -155,6 +368,10 @@ impl KvPool {
         let (l_n, h_n, s_n, d) = (g.n_layers, g.n_heads, g.seq_len, g.d_head);
         let pos = self.cache_lens[id.0];
         assert!(pos + blk <= s_n, "cache overflow: {pos} + {blk} > {s_n}");
+        debug_assert!(
+            self.chains[id.0].is_empty() || pos >= self.prompt_len,
+            "commit into the shared prefix of a chained slot"
+        );
         let base = self.base(id);
         for l in 0..l_n {
             for h in 0..h_n {
@@ -180,6 +397,10 @@ impl KvPool {
         k: &[f32],
         v: &[f32],
     ) {
+        debug_assert!(
+            self.chains[id.0].is_empty(),
+            "write_full into a chained slot"
+        );
         let g = self.dims;
         let (l_n, h_n, s_n, d) = (g.n_layers, g.n_heads, g.seq_len, g.d_head);
         let row = h_n * s_n * d;
@@ -191,6 +412,288 @@ impl KvPool {
             self.v[dst..dst + row].copy_from_slice(&v[src..src + row]);
         }
         self.cache_lens[id.0] = s_n;
+    }
+
+    // -----------------------------------------------------------------
+    // Shared-prefix chains
+    // -----------------------------------------------------------------
+
+    /// Walk the trie for `prompt` under `tag` and return the resident
+    /// node path for its longest block-aligned prefix (no pinning).
+    fn match_prefix(&self, tag: u64, prompt: &[i32]) -> Vec<usize> {
+        let mut path = Vec::new();
+        let mut kids: &[usize] =
+            self.roots.get(&tag).map(Vec::as_slice).unwrap_or(&[]);
+        for blk in prompt.chunks(self.page_len) {
+            let found = kids.iter().copied().find(|&n| {
+                self.nodes[n]
+                    .as_ref()
+                    .expect("indexed chain node resident")
+                    .tokens
+                    == blk
+            });
+            let Some(next) = found else { break };
+            path.push(next);
+            kids = &self.nodes[next]
+                .as_ref()
+                .expect("indexed chain node resident")
+                .children;
+        }
+        path
+    }
+
+    /// Pin the full-prompt chain for `prompt` if every block is
+    /// resident: the warm-hit path that lets admission skip prefill
+    /// entirely. With `need_ar_tok`, a chain lacking a cached
+    /// first-token proposal reports as a miss (nothing is pinned).
+    pub fn prefix_acquire_full(
+        &mut self,
+        tag: u64,
+        prompt: &[i32],
+        need_ar_tok: bool,
+    ) -> Option<ChainPin> {
+        debug_assert_eq!(prompt.len(), self.prompt_len);
+        let path = self.match_prefix(tag, prompt);
+        if path.len() < self.prompt_pages {
+            return None;
+        }
+        let leaf = *path.last().expect("prompt has at least one block");
+        let ar_tok =
+            self.nodes[leaf].as_ref().expect("chain node resident").ar_tok;
+        if need_ar_tok && ar_tok.is_none() {
+            return None;
+        }
+        self.lru_tick += 1;
+        let tick = self.lru_tick;
+        for &n in &path {
+            let node = self.nodes[n].as_mut().expect("chain node resident");
+            node.refs += 1;
+            node.tick = tick;
+        }
+        self.prefix_hits += 1;
+        self.prefix_hit_blocks += path.len() as u64;
+        Some(ChainPin { nodes: path, ar_tok })
+    }
+
+    /// Install (and pin) the full-prompt chain for `prompt` from a
+    /// prefill output: resident blocks are reused (copy-on-write — the
+    /// trie branches at the first divergent block and nothing shared is
+    /// overwritten), missing blocks get fresh pages written from the
+    /// batch-major `[L, bs, H, P, dh]` prefill K/V. Fails without side
+    /// effects when the page budget cannot cover the uncached tail even
+    /// after LRU eviction; callers then fall back to a private-slot
+    /// prefill.
+    #[allow(clippy::too_many_arguments)]
+    pub fn prefix_install(
+        &mut self,
+        tag: u64,
+        prompt: &[i32],
+        lane: usize,
+        bs: usize,
+        k: &[f32],
+        v: &[f32],
+        ar_tok: Option<i32>,
+    ) -> Result<ChainPin> {
+        debug_assert_eq!(prompt.len(), self.prompt_len);
+        let matched = self.match_prefix(tag, prompt);
+        // pin the matched prefix first so eviction (below) can't
+        // reclaim it while we make room for the tail
+        self.lru_tick += 1;
+        let tick = self.lru_tick;
+        for &n in &matched {
+            let node = self.nodes[n].as_mut().expect("chain node resident");
+            node.refs += 1;
+            node.tick = tick;
+        }
+        let needed = self.prompt_pages - matched.len();
+        if !self.ensure_pages(needed) {
+            for &n in &matched {
+                let node =
+                    self.nodes[n].as_mut().expect("chain node resident");
+                node.refs -= 1;
+            }
+            anyhow::bail!(
+                "prefix cache full: {needed} pages unavailable \
+                 (all resident chains pinned)"
+            );
+        }
+        self.prefix_hit_blocks += matched.len() as u64;
+        let mut path = matched;
+        for bi in path.len()..self.prompt_pages {
+            let page = self
+                .page_free
+                .pop()
+                .expect("ensure_pages reserved the tail");
+            debug_assert!(!self.page_used[page]);
+            self.page_used[page] = true;
+            self.write_page(page, lane, bs, bi, k, v);
+            let tokens =
+                prompt[bi * self.page_len..(bi + 1) * self.page_len].to_vec();
+            let node = ChainNode {
+                tag,
+                tokens,
+                parent: path.last().copied(),
+                children: Vec::new(),
+                page,
+                refs: 1,
+                tick,
+                ar_tok: None,
+            };
+            let idx = match self.node_free.pop() {
+                Some(i) => {
+                    self.nodes[i] = Some(node);
+                    i
+                }
+                None => {
+                    self.nodes.push(Some(node));
+                    self.nodes.len() - 1
+                }
+            };
+            match path.last() {
+                Some(&p) => self.nodes[p]
+                    .as_mut()
+                    .expect("chain node resident")
+                    .children
+                    .push(idx),
+                None => self.roots.entry(tag).or_default().push(idx),
+            }
+            path.push(idx);
+        }
+        let leaf = *path.last().expect("prompt has at least one block");
+        if ar_tok.is_some() {
+            self.nodes[leaf]
+                .as_mut()
+                .expect("chain node resident")
+                .ar_tok = ar_tok;
+        }
+        let ar_tok =
+            self.nodes[leaf].as_ref().expect("chain node resident").ar_tok;
+        Ok(ChainPin { nodes: path, ar_tok })
+    }
+
+    /// Attach a pinned chain to a live slot: the slot now reads its
+    /// prompt positions from the shared pages (its prompt region is
+    /// never written) and [`KvPool::free`] will unpin the chain when
+    /// the lane retires.
+    pub fn attach_chain(&mut self, id: SlotId, pin: ChainPin) {
+        assert!(self.used[id.0], "attach_chain to a free slot");
+        assert!(self.chains[id.0].is_empty(), "slot already has a chain");
+        self.chains[id.0] = pin.nodes;
+        self.cache_lens[id.0] = self.prompt_len;
+    }
+
+    /// Release a pin without attaching it to a slot (admission error
+    /// paths).
+    pub fn release_pin(&mut self, pin: ChainPin) {
+        for n in pin.nodes {
+            let node = self.nodes[n].as_mut().expect("chain node resident");
+            debug_assert!(node.refs > 0, "release of an unpinned chain node");
+            node.refs -= 1;
+        }
+    }
+
+    /// Diagnostic/test accessor: `(resident blocks, min refcount along
+    /// the resident path)` for a prompt's longest cached prefix.
+    pub fn prefix_chain_info(
+        &self,
+        tag: u64,
+        prompt: &[i32],
+    ) -> Option<(usize, usize)> {
+        let path = self.match_prefix(tag, prompt);
+        if path.is_empty() {
+            return None;
+        }
+        let min_refs = path
+            .iter()
+            .map(|&n| {
+                self.nodes[n].as_ref().expect("chain node resident").refs
+            })
+            .min()
+            .expect("non-empty path");
+        Some((path.len(), min_refs))
+    }
+
+    /// Make at least `needed` pages available on the free list,
+    /// evicting LRU unpinned chain leaves if necessary. Returns false
+    /// (with eviction partially done — evicted chains were reclaimable
+    /// by definition) when pressure cannot be relieved.
+    fn ensure_pages(&mut self, needed: usize) -> bool {
+        while self.page_free.len() < needed {
+            if !self.evict_one() {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Evict the least-recently-used unpinned chain leaf. Interior
+    /// nodes become leaves once their children go, so repeated calls
+    /// reclaim whole chains back-to-front; pinned nodes (refs > 0) are
+    /// never candidates.
+    fn evict_one(&mut self) -> bool {
+        let victim = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, n)| n.as_ref().map(|n| (i, n)))
+            .filter(|(_, n)| n.refs == 0 && n.children.is_empty())
+            .min_by_key(|(_, n)| n.tick)
+            .map(|(i, _)| i);
+        let Some(i) = victim else { return false };
+        let node = self.nodes[i].take().expect("victim resident");
+        match node.parent {
+            Some(p) => {
+                let kids = &mut self.nodes[p]
+                    .as_mut()
+                    .expect("parent of resident node resident")
+                    .children;
+                kids.retain(|&c| c != i);
+            }
+            None => {
+                if let Some(kids) = self.roots.get_mut(&node.tag) {
+                    kids.retain(|&c| c != i);
+                }
+            }
+        }
+        assert!(self.page_used[node.page], "double free of KV page");
+        self.page_used[node.page] = false;
+        self.page_free.push(node.page);
+        self.node_free.push(i);
+        self.prefix_evictions += 1;
+        true
+    }
+
+    /// Write prompt block `bi` of one lane's batch-major
+    /// `[L, bs, H, P, dh]` prefill output into a page.
+    fn write_page(
+        &mut self,
+        page: usize,
+        lane: usize,
+        bs: usize,
+        bi: usize,
+        k: &[f32],
+        v: &[f32],
+    ) {
+        let g = self.dims;
+        let (l_n, h_n, d) = (g.n_layers, g.n_heads, g.d_head);
+        let p = self.prompt_len;
+        let pl = self.page_len;
+        debug_assert_eq!(
+            k.len(),
+            l_n * bs * h_n * p * d,
+            "prefill KV must be [L, bs={bs}, H, P={p}, dh]"
+        );
+        let base = self.page_base(page);
+        for l in 0..l_n {
+            for h in 0..h_n {
+                let src = (((l * bs + lane) * h_n + h) * p + bi * pl) * d;
+                let dst = base + (l * h_n + h) * pl * d;
+                self.k[dst..dst + pl * d]
+                    .copy_from_slice(&k[src..src + pl * d]);
+                self.v[dst..dst + pl * d]
+                    .copy_from_slice(&v[src..src + pl * d]);
+            }
+        }
     }
 }
 
@@ -218,6 +721,14 @@ mod tests {
         }
     }
 
+    /// Distinct batch-major [L, bs=1, H, P, dh] prefill stacks.
+    fn prefill_kv(g: &Geometry, salt: f32) -> (Vec<f32>, Vec<f32>) {
+        let n = g.n_layers * g.n_heads * g.prompt_len * g.d_head;
+        let k: Vec<f32> = (0..n).map(|i| salt + i as f32).collect();
+        let v: Vec<f32> = k.iter().map(|x| x + 0.5).collect();
+        (k, v)
+    }
+
     #[test]
     fn alloc_free_cycle() {
         let mut p = KvPool::new(&geom(), 2);
@@ -240,6 +751,22 @@ mod tests {
         let a = p.alloc().unwrap();
         p.free(a);
         p.free(a);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_of_chained_slot_panics() {
+        // the double-free guard must keep firing for chained slots: a
+        // second free would otherwise unpin the chain twice
+        let g = geom();
+        let mut pool = KvPool::with_prefix_pages(&g, 1, 2);
+        let (k, v) = prefill_kv(&g, 0.0);
+        let a = pool.alloc().unwrap();
+        let pin =
+            pool.prefix_install(9, &[5, 6, 7, 8], 0, 1, &k, &v, None).unwrap();
+        pool.attach_chain(a, pin);
+        pool.free(a);
+        pool.free(a);
     }
 
     #[test]
@@ -355,5 +882,186 @@ mod tests {
         assert_eq!(pool.cache_len(id), g.seq_len);
         let view = pool.view(&[id], g.seq_len);
         assert_eq!(view.k_at(0, 1, 1, 7, 3), 3.0);
+    }
+
+    // -----------------------------------------------------------------
+    // Shared-prefix chains
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn install_then_full_hit_reads_identical_kv() {
+        let g = geom();
+        let mut pool = KvPool::with_prefix_pages(&g, 2, 8);
+        let prompt = vec![5, 6, 7, 8];
+        let (k, v) = prefill_kv(&g, 0.0);
+
+        // cold: install writes 2 pages and pins the chain on slot a
+        let a = pool.alloc().unwrap();
+        let pin = pool.prefix_install(9, &prompt, 0, 1, &k, &v, None).unwrap();
+        pool.attach_chain(a, pin);
+        assert_eq!(pool.cache_len(a), g.prompt_len);
+        assert_eq!(pool.prefix_resident_pages(), 2);
+        assert_eq!(pool.prefix_hits, 0);
+
+        // warm: a second lane full-hits and shares the same pages
+        let b = pool.alloc().unwrap();
+        let pin = pool.prefix_acquire_full(9, &prompt, false).unwrap();
+        pool.attach_chain(b, pin);
+        assert_eq!(pool.prefix_hits, 1);
+        assert_eq!(pool.prefix_hit_blocks, 2);
+        assert_eq!(pool.prefix_resident_pages(), 2, "no new pages on a hit");
+        assert_eq!(pool.prefix_chain_info(9, &prompt), Some((2, 2)));
+
+        // both lanes read the prefill content through their views
+        let view = pool.view(&[a, b], g.prompt_len);
+        for lane in 0..2 {
+            for l in 0..g.n_layers {
+                for h in 0..g.n_heads {
+                    for pos in 0..g.prompt_len {
+                        for f in 0..g.d_head {
+                            let src = (((l * g.n_heads) + h) * g.prompt_len
+                                + pos)
+                                * g.d_head
+                                + f;
+                            assert_eq!(view.k_at(lane, l, h, pos, f), k[src]);
+                            assert_eq!(view.v_at(lane, l, h, pos, f), v[src]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn divergent_prompt_branches_instead_of_overwriting() {
+        let g = geom();
+        let mut pool = KvPool::with_prefix_pages(&g, 2, 8);
+        let p1 = vec![5, 6, 7, 8];
+        let mut p2 = p1.clone();
+        p2[2] = 9; // diverges at block 1 (page_len = 2)
+        let (k1, v1) = prefill_kv(&g, 0.0);
+        let (k2, v2) = prefill_kv(&g, 100.0);
+
+        let a = pool.alloc().unwrap();
+        let pin = pool.prefix_install(9, &p1, 0, 1, &k1, &v1, None).unwrap();
+        pool.attach_chain(a, pin);
+        let b = pool.alloc().unwrap();
+        let pin = pool.prefix_install(9, &p2, 0, 1, &k2, &v2, None).unwrap();
+        pool.attach_chain(b, pin);
+
+        // block 0 shared (copy-on-write: only the divergent tail is new)
+        assert_eq!(pool.prefix_resident_pages(), 3);
+        assert_eq!(pool.prefix_hit_blocks, 1);
+        assert_eq!(pool.prefix_chain_info(9, &p1), Some((2, 1)));
+        assert_eq!(pool.prefix_chain_info(9, &p2), Some((2, 1)));
+
+        // lane a still reads p1's original block-1 KV (nothing was
+        // overwritten); lane b reads its own divergent block
+        let view = pool.view(&[a, b], g.prompt_len);
+        let src = 2 * g.d_head; // (l=0, h=0, pos=2, f=0) in [L,1,H,P,dh]
+        assert_eq!(view.k_at(0, 0, 0, 2, 0), k1[src]);
+        assert_eq!(view.k_at(1, 0, 0, 2, 0), k2[src]);
+        // the shared block reads the first installer's content for both
+        assert_eq!(view.k_at(0, 0, 0, 0, 0), k1[0]);
+        assert_eq!(view.k_at(1, 0, 0, 0, 0), k1[0]);
+    }
+
+    #[test]
+    fn tags_isolate_models() {
+        let g = geom();
+        let mut pool = KvPool::with_prefix_pages(&g, 2, 8);
+        let prompt = vec![5, 6, 7, 8];
+        let (k, v) = prefill_kv(&g, 0.0);
+        let a = pool.alloc().unwrap();
+        let pin = pool.prefix_install(1, &prompt, 0, 1, &k, &v, None).unwrap();
+        pool.attach_chain(a, pin);
+        assert!(pool.prefix_acquire_full(2, &prompt, false).is_none());
+        assert!(pool.prefix_chain_info(2, &prompt).is_none());
+    }
+
+    #[test]
+    fn retirement_unpins_and_eviction_spares_pinned_chains() {
+        let g = geom();
+        // page budget: exactly one prompt's worth
+        let mut pool = KvPool::with_prefix_pages(&g, 2, 2);
+        let p1 = vec![5, 6, 7, 8];
+        let p2 = vec![10, 11, 12, 13];
+        let (k, v) = prefill_kv(&g, 0.0);
+
+        let a = pool.alloc().unwrap();
+        let pin = pool.prefix_install(9, &p1, 0, 1, &k, &v, None).unwrap();
+        pool.attach_chain(a, pin);
+
+        // p1's chain is pinned: installing p2 must fail, not evict it
+        let b = pool.alloc().unwrap();
+        assert!(
+            pool.prefix_install(9, &p2, 0, 1, &k, &v, None).is_err(),
+            "eviction must never free a pinned chain"
+        );
+        assert_eq!(pool.prefix_evictions, 0);
+        assert_eq!(pool.prefix_chain_info(9, &p1), Some((2, 1)), "p1 intact");
+        // the failed install leaves no dangling pins
+        pool.free(b);
+
+        // retiring lane a unpins; the retained chain is now evictable
+        pool.free(a);
+        assert_eq!(pool.prefix_chain_info(9, &p1), Some((2, 0)));
+        let b = pool.alloc().unwrap();
+        let pin = pool.prefix_install(9, &p2, 0, 1, &k, &v, None).unwrap();
+        pool.attach_chain(b, pin);
+        assert_eq!(pool.prefix_evictions, 2, "p1's two pages reclaimed");
+        assert!(pool.prefix_chain_info(9, &p1).is_none(), "p1 evicted");
+        assert_eq!(pool.prefix_chain_info(9, &p2), Some((2, 1)));
+    }
+
+    #[test]
+    fn ar_tok_gates_full_hits_when_required() {
+        let g = geom();
+        let mut pool = KvPool::with_prefix_pages(&g, 2, 8);
+        let prompt = vec![5, 6, 7, 8];
+        let (k, v) = prefill_kv(&g, 0.0);
+        let a = pool.alloc().unwrap();
+        let pin = pool.prefix_install(9, &prompt, 0, 1, &k, &v, None).unwrap();
+        pool.attach_chain(a, pin);
+        // DLM chain has no cached first token: AR-style lookups miss…
+        assert!(pool.prefix_acquire_full(9, &prompt, true).is_none());
+        // …until an install caches one on the leaf
+        let pin = pool
+            .prefix_install(9, &prompt, 0, 1, &k, &v, Some(42))
+            .unwrap();
+        pool.release_pin(pin);
+        let pin = pool.prefix_acquire_full(9, &prompt, true).unwrap();
+        assert_eq!(pin.ar_tok, Some(42));
+        pool.release_pin(pin);
+    }
+
+    #[test]
+    fn lru_evicts_coldest_chain_first() {
+        let g = geom();
+        // room for two prompts' worth of pages
+        let mut pool = KvPool::with_prefix_pages(&g, 1, 4);
+        let (k, v) = prefill_kv(&g, 0.0);
+        let p1 = vec![5, 6, 7, 8];
+        let p2 = vec![10, 11, 12, 13];
+        let p3 = vec![20, 21, 22, 23];
+        for p in [&p1, &p2] {
+            let s = pool.alloc().unwrap();
+            let pin = pool.prefix_install(9, p, 0, 1, &k, &v, None).unwrap();
+            pool.attach_chain(s, pin);
+            pool.free(s);
+        }
+        // touch p1 so p2 is the LRU chain
+        let s = pool.alloc().unwrap();
+        let pin = pool.prefix_acquire_full(9, &p1, false).unwrap();
+        pool.attach_chain(s, pin);
+        pool.free(s);
+        // p3 needs two pages: p2 (coldest, unpinned) is reclaimed
+        let s = pool.alloc().unwrap();
+        let pin = pool.prefix_install(9, &p3, 0, 1, &k, &v, None).unwrap();
+        pool.attach_chain(s, pin);
+        pool.free(s);
+        assert!(pool.prefix_chain_info(9, &p1).is_some(), "warm chain kept");
+        assert!(pool.prefix_chain_info(9, &p2).is_none(), "cold chain evicted");
+        assert!(pool.prefix_chain_info(9, &p3).is_some());
     }
 }

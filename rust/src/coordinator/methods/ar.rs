@@ -94,22 +94,61 @@ pub fn decode(
 // Block-step-machine policy (resumable per-lane decode)
 // ---------------------------------------------------------------------------
 
-/// Admission prefill for one lane: allocate a slot, write the causal
+/// Admission prefill for one lane: allocate a slot, install the causal
 /// prompt KV with a single-lane `ar_prefill` call (padded to the
 /// smallest exported bucket by aliasing the one real prompt row, like
 /// every other machine program call), and return the slot plus the
 /// first-token proposal the prefill emits.
+///
+/// With `prefix_tag` set, a fully cached prompt whose chain also
+/// carries the cached first-token proposal pins it and skips the
+/// prefill call (AR prefill is the only program that returns decode
+/// state beyond KV, so the proposal is cached on the chain leaf at
+/// install time — a chain without one counts as a miss). Misses prefill
+/// and install as usual, falling back to a private slot under pinned
+/// page pressure.
 pub(crate) fn machine_prefill(
     progs: &Programs,
     pool: &mut KvPool,
     seq: &mut SequenceState,
     pad_to: usize,
+    prefix_tag: Option<u64>,
 ) -> Result<(SlotId, i32)> {
-    let (pid, vf) = machine::padded_prompt(seq, pad_to);
-    let pre = progs.ar_prefill(pad_to, &pid, &vf)?;
     let slot = pool.alloc()?;
-    pool.write_prefill(slot, 0, pad_to, &pre.k.data, &pre.v.data);
+    if let Some(tag) = prefix_tag {
+        if let Some(pin) =
+            pool.prefix_acquire_full(tag, &seq.prompt_ids, true)
+        {
+            let tok = pin.ar_tok.expect("hit required a cached first token");
+            pool.attach_chain(slot, pin);
+            return Ok((slot, tok));
+        }
+    }
+    let (pid, vf) = machine::padded_prompt(seq, pad_to);
+    let pre = match progs.ar_prefill(pad_to, &pid, &vf) {
+        Ok(pre) => pre,
+        Err(e) => {
+            // hand the slot back: a failed admission must not leak it
+            pool.free(slot);
+            return Err(e);
+        }
+    };
     seq.model_calls += 1;
+    if let Some(tag) = prefix_tag {
+        if let Ok(pin) = pool.prefix_install(
+            tag,
+            &seq.prompt_ids,
+            0,
+            pad_to,
+            &pre.k.data,
+            &pre.v.data,
+            Some(pre.tok.data[0]),
+        ) {
+            pool.attach_chain(slot, pin);
+            return Ok((slot, pre.tok.data[0]));
+        }
+    }
+    pool.write_prefill(slot, 0, pad_to, &pre.k.data, &pre.v.data);
     Ok((slot, pre.tok.data[0]))
 }
 

@@ -162,24 +162,65 @@ pub fn decode(
 // Block-step-machine policy (resumable per-lane decode)
 // ---------------------------------------------------------------------------
 
-/// Admission prefill for one lane: allocate a slot and write the exact
-/// prompt KV with a single-lane `student_prefill` call, padded up to
-/// the smallest exported bucket (`pad_to`) by aliasing the one real
-/// prompt row — the same AOT bucket contract every cohort call honors
-/// (a manifest need not export bucket 1). Per-lane outputs equal the
-/// batched prefill of [`decode`] (lanes are independent), so admitting
-/// a whole group lane-by-lane reproduces the closed-batch trace.
+/// Admission prefill for one lane: allocate a slot and install the
+/// exact prompt KV, padded up to the smallest exported bucket
+/// (`pad_to`) by aliasing the one real prompt row — the same AOT
+/// bucket contract every cohort call honors (a manifest need not
+/// export bucket 1). Per-lane outputs equal the batched prefill of
+/// [`decode`] (lanes are independent), so admitting a whole group
+/// lane-by-lane reproduces the closed-batch trace.
+///
+/// With `prefix_tag` set (the serving layer's shared-prefix cache), a
+/// fully cached prompt pins its resident chain and **skips the prefill
+/// call** — the decode that follows is byte-identical because the
+/// pages hold exactly what prefill would have produced (the backend is
+/// deterministic in the prompt tokens), and `model_calls` drops by
+/// exactly the skipped prefill. A miss prefills as usual and
+/// installs the chain (copy-on-write at the first divergent block) so
+/// later admissions can share it; if the page budget is exhausted by
+/// pinned chains the lane falls back to a private-slot prefill —
+/// identical trace, no sharing.
 pub(crate) fn machine_prefill(
     progs: &Programs,
     pool: &mut KvPool,
     seq: &mut SequenceState,
     pad_to: usize,
+    prefix_tag: Option<u64>,
 ) -> Result<SlotId> {
-    let (pid, vf) = machine::padded_prompt(seq, pad_to);
-    let pre = progs.student_prefill(pad_to, &pid, &vf)?;
     let slot = pool.alloc()?;
-    pool.write_prefill(slot, 0, pad_to, &pre.k.data, &pre.v.data);
+    if let Some(tag) = prefix_tag {
+        if let Some(pin) =
+            pool.prefix_acquire_full(tag, &seq.prompt_ids, false)
+        {
+            pool.attach_chain(slot, pin);
+            return Ok(slot);
+        }
+    }
+    let (pid, vf) = machine::padded_prompt(seq, pad_to);
+    let pre = match progs.student_prefill(pad_to, &pid, &vf) {
+        Ok(pre) => pre,
+        Err(e) => {
+            // hand the slot back: a failed admission must not leak it
+            pool.free(slot);
+            return Err(e);
+        }
+    };
     seq.model_calls += 1;
+    if let Some(tag) = prefix_tag {
+        if let Ok(pin) = pool.prefix_install(
+            tag,
+            &seq.prompt_ids,
+            0,
+            pad_to,
+            &pre.k.data,
+            &pre.v.data,
+            None,
+        ) {
+            pool.attach_chain(slot, pin);
+            return Ok(slot);
+        }
+    }
+    pool.write_prefill(slot, 0, pad_to, &pre.k.data, &pre.v.data);
     Ok(slot)
 }
 

@@ -86,6 +86,10 @@ pub struct BatchState {
     pool: KvPool,
     lanes: Vec<Option<Lane>>,
     stepped: bool,
+    /// Cross-request prompt-prefix reuse at admission (off by default:
+    /// the closed-batch trace pins assume every admit prefills; the
+    /// serving layer turns it on per `RouterConfig::prefix_cache`).
+    prefix_cache: bool,
     pub total_admissions: u64,
     pub mid_flight_admissions: u64,
 }
@@ -111,7 +115,11 @@ impl BatchState {
         buckets.sort_unstable();
         let max_bucket = buckets.last().copied().unwrap_or(1);
         let cap = capacity.clamp(1, max_bucket);
-        // cache-less methods never allocate a slot; skip their slabs
+        // cache-less methods never allocate a slot; skip their slabs.
+        // Prefix pages are NOT budgeted here: the machine starts with
+        // the prefix cache off, and `set_prefix_cache(true)` swaps in
+        // the paged pool — a machine that never shares never pays for
+        // page slabs.
         let pool_cap = if method.uses_kv_cache() { cap } else { 0 };
         let pool = KvPool::new(&geom, pool_cap);
         Ok(BatchState {
@@ -124,9 +132,41 @@ impl BatchState {
             pool,
             lanes: (0..cap).map(|_| None).collect(),
             stepped: false,
+            prefix_cache: false,
             total_admissions: 0,
             mid_flight_admissions: 0,
         })
+    }
+
+    /// Enable (or disable) shared-prefix KV reuse for admissions. Warm
+    /// full-prompt hits then skip the admission prefill: decode traces
+    /// stay byte-identical (the chain pages hold exactly the prefill
+    /// output for those tokens) with `model_calls` lower by exactly the
+    /// skipped call — `tests/prefix_cache.rs` pins this per method.
+    ///
+    /// Enabling on a fresh machine (the serving layer does it right
+    /// after construction) swaps in a pool with the default prefix-page
+    /// budget. Enabling later — once lanes or counters exist — keeps
+    /// the pageless pool: admissions then fall back to private-slot
+    /// prefills, which is always correct, just unshared.
+    pub fn set_prefix_cache(&mut self, on: bool) {
+        if on
+            && self.pool.prefix_page_capacity() == 0
+            && self.is_empty()
+            && self.pool.total_allocs == 0
+        {
+            let cap = self.pool.capacity();
+            self.pool = KvPool::with_prefix_pages(
+                &self.geom,
+                cap,
+                KvPool::default_page_budget(&self.geom, cap),
+            );
+        }
+        self.prefix_cache = on;
+    }
+
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.prefix_cache
     }
 
     pub fn capacity(&self) -> usize {
@@ -154,6 +194,35 @@ impl BatchState {
     /// lane count once retired lanes' slots recycle into admissions.
     pub fn kv_total_allocs(&self) -> u64 {
         self.pool.total_allocs
+    }
+
+    /// Full-prompt chain hits: admissions that skipped their prefill.
+    pub fn prefix_hits(&self) -> u64 {
+        self.pool.prefix_hits
+    }
+
+    /// Cached blocks reused at admission (partial matches included).
+    pub fn prefix_hit_blocks(&self) -> u64 {
+        self.pool.prefix_hit_blocks
+    }
+
+    /// Chain blocks reclaimed by the LRU evictor under page pressure.
+    pub fn prefix_evictions(&self) -> u64 {
+        self.pool.prefix_evictions
+    }
+
+    /// Prefix pages resident in this batch's pool (pinned + retained).
+    pub fn kv_shared_pages(&self) -> usize {
+        self.pool.prefix_resident_pages()
+    }
+
+    /// Diagnostic/test accessor: `(resident blocks, min refcount)` of a
+    /// prompt's cached chain under this machine's weights.
+    pub fn prefix_chain_info(
+        &self,
+        prompt_ids: &[i32],
+    ) -> Option<(usize, usize)> {
+        self.pool.prefix_chain_info(self.weights.seed, prompt_ids)
     }
 
     /// Admit one request into a free lane: a single-lane prefill
@@ -186,12 +255,21 @@ impl BatchState {
             .iter()
             .position(Option::is_none)
             .ok_or_else(|| anyhow::anyhow!("no free lane"))?;
+        // a mid-flight join is an admission NEXT TO live lanes in a
+        // machine that has stepped; an admission into a drained
+        // (retained) machine is a fresh start, not a join
+        let joins_live = self.lanes.iter().any(Option::is_some);
         let progs = Programs::new(&self.rt, &self.weights);
         let mut seq = SequenceState::new(&self.geom, prompt_ids);
         let tau = tau.unwrap_or(self.opts.tau_conf);
         // smallest exported bucket that fits one prompt row — a
         // manifest need not export bucket 1
         let pre_pad = pad_of(&self.buckets, 1);
+        // the prefix trie is keyed by the weight identity: chains are
+        // pure functions of (weights, prompt tokens), so two models
+        // must never share one
+        let prefix_tag =
+            if self.prefix_cache { Some(self.weights.seed) } else { None };
         let (slot, cur_tok) = match self.method {
             Method::Vanilla | Method::FastDllmPar => (None, 0),
             Method::DllmCache | Method::FastDllmDc => {
@@ -203,6 +281,7 @@ impl BatchState {
                     &mut self.pool,
                     &mut seq,
                     pre_pad,
+                    prefix_tag,
                 )?),
                 0,
             ),
@@ -212,6 +291,7 @@ impl BatchState {
                     &mut self.pool,
                     &mut seq,
                     pre_pad,
+                    prefix_tag,
                 )?;
                 (Some(slot), tok)
             }
@@ -227,7 +307,7 @@ impl BatchState {
             finished: false,
         });
         self.total_admissions += 1;
-        if self.stepped {
+        if self.stepped && joins_live {
             self.mid_flight_admissions += 1;
         }
         Ok(idx)

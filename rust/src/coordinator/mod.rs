@@ -11,7 +11,7 @@ pub mod scheduler;
 pub mod sequence;
 
 pub use batcher::{DynamicBatcher, GroupKey, Pending};
-pub use kv_cache::{KvPool, SlotId};
+pub use kv_cache::{ChainPin, KvPool, SlotId};
 pub use methods::machine::BatchState;
 pub use methods::{DecodeOpts, DecodeOutcome, Method, ALL_METHODS};
 pub use metrics::{MetricsAggregator, RequestRecord};

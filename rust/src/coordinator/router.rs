@@ -214,6 +214,11 @@ pub struct RouterConfig {
     /// Artificial pause before each block step (tests/demos use this to
     /// widen admission windows; zero in production).
     pub step_delay: Duration,
+    /// Shared-prefix KV reuse (continuous path): admissions whose full
+    /// prompt is cached skip their prefill call, and drained machines
+    /// are retained as warm caches until a new key needs their room.
+    /// `cdlm serve --no-prefix-cache` turns it off.
+    pub prefix_cache: bool,
 }
 
 impl Default for RouterConfig {
@@ -226,6 +231,7 @@ impl Default for RouterConfig {
             continuous: true,
             max_active: 4,
             step_delay: Duration::ZERO,
+            prefix_cache: true,
         }
     }
 }
@@ -372,13 +378,39 @@ struct Ticket {
 }
 
 /// Serving counters surfaced on `/healthz`. Live batches report their
-/// own admission counts; these fold in batches that already drained.
+/// own admission counts; these fold in batches that already dropped
+/// (poisoned, or reclaimed after draining).
 #[derive(Default)]
 struct ServeStats {
     closed_total_admissions: u64,
     closed_mid_flight: u64,
     closed_kv_allocs: u64,
+    closed_prefix_hits: u64,
+    closed_prefix_hit_blocks: u64,
+    closed_prefix_evictions: u64,
     retired_early: u64,
+}
+
+impl ServeStats {
+    /// Fold a batch's lifetime counters in before dropping it.
+    fn absorb(&mut self, st: &BatchState) {
+        self.closed_total_admissions += st.total_admissions;
+        self.closed_mid_flight += st.mid_flight_admissions;
+        self.closed_kv_allocs += st.kv_total_allocs();
+        self.closed_prefix_hits += st.prefix_hits();
+        self.closed_prefix_hit_blocks += st.prefix_hit_blocks();
+        self.closed_prefix_evictions += st.prefix_evictions();
+    }
+}
+
+/// KV lanes a batch draws from the `pool_capacity` budget (cache-less
+/// methods hold no slots).
+fn kv_lanes_of(ab: &ActiveBatch<Ticket>) -> usize {
+    if ab.key.method.uses_kv_cache() {
+        ab.state.capacity()
+    } else {
+        0
+    }
 }
 
 fn worker_loop_continuous(
@@ -404,8 +436,10 @@ fn worker_loop_continuous(
         .unwrap_or(1);
     let batch_cap = cfg.max_batch.clamp(1, bucket_cap);
     loop {
-        // ---- 1. ingest channel traffic (block only when fully idle)
-        let timeout = if !active.is_empty() {
+        // ---- 1. ingest channel traffic (block only when fully idle —
+        // drained batches retained as warm prefix caches don't count)
+        let any_live = active.iter().any(|ab| !ab.is_empty());
+        let timeout = if any_live {
             Duration::ZERO
         } else if !batcher.is_empty() {
             Duration::from_millis(1)
@@ -465,22 +499,56 @@ fn worker_loop_continuous(
             let key_served = active.iter().any(|ab| ab.key == key);
             // only slot-holding lanes draw on the KV budget; the
             // cache-less baselines' batches are bounded by max_active
-            let total_kv_lanes: usize = active
-                .iter()
-                .filter(|ab| ab.key.method.uses_kv_cache())
-                .map(|ab| ab.state.capacity())
-                .sum();
             let new_kv_lanes =
                 if key.method.uses_kv_cache() { batch_cap } else { 0 };
-            let at_capacity = active.len() >= cfg.max_active.max(1)
-                || total_kv_lanes + new_kv_lanes
-                    > cfg.pool_capacity.max(batch_cap);
-            if key_served && at_capacity {
-                continue; // at capacity and this key is already decoding
+            let over_caps = |batches: usize, kv_lanes: usize| {
+                batches >= cfg.max_active.max(1)
+                    || kv_lanes + new_kv_lanes
+                        > cfg.pool_capacity.max(batch_cap)
+            };
+            let totals = |active: &[ActiveBatch<Ticket>]| {
+                (active.len(), active.iter().map(kv_lanes_of).sum::<usize>())
+            };
+            let (n_all, kv_all) = totals(&active);
+            if over_caps(n_all, kv_all) {
+                // a served key only gets a second batch if room actually
+                // exists once the retained warm caches are reclaimed —
+                // check BEFORE evicting, so hopeless pressure never
+                // destroys other keys' warm prefix chains for nothing
+                let n_live =
+                    active.iter().filter(|ab| !ab.is_empty()).count();
+                let kv_live: usize = active
+                    .iter()
+                    .filter(|ab| !ab.is_empty())
+                    .map(kv_lanes_of)
+                    .sum();
+                if key_served && over_caps(n_live, kv_live) {
+                    continue; // at capacity and this key already decodes
+                }
+                // reclaim the coldest drained machines (retained only as
+                // warm prefix caches) until we're under the caps
+                loop {
+                    let (n, kv) = totals(&active);
+                    if !over_caps(n, kv) {
+                        break;
+                    }
+                    let idle = active
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, ab)| ab.is_empty())
+                        .min_by_key(|(_, ab)| ab.last_active)
+                        .map(|(i, _)| i);
+                    let Some(i) = idle else { break };
+                    let reclaimed = active.remove(i);
+                    stats.absorb(&reclaimed.state);
+                }
             }
             let opts = DecodeOpts::defaults(core.geometry());
             match core.open_batch(&key, opts, cfg.max_batch) {
-                Ok(state) => active.push(ActiveBatch::new(key, state)),
+                Ok(mut state) => {
+                    state.set_prefix_cache(cfg.prefix_cache);
+                    active.push(ActiveBatch::new(key, state));
+                }
                 Err(e) => {
                     // fail this key's queued requests (bad weights)
                     let msg = format!("decode failed: {e:#}");
@@ -550,17 +618,20 @@ fn worker_loop_continuous(
                 }
             }
         }
-        // ---- 5. fold drained/poisoned batches into the closed stats
+        // ---- 5. drop poisoned batches. Drained batches are *retained*
+        // — their pools hold the warm prefix chains the next burst of
+        // the same key admits against — until step 2 reclaims their
+        // room for a new key.
         active.retain(|ab| {
-            let done = ab.poisoned || ab.is_empty();
-            if done {
-                stats.closed_total_admissions += ab.state.total_admissions;
-                stats.closed_mid_flight += ab.state.mid_flight_admissions;
-                stats.closed_kv_allocs += ab.state.kv_total_allocs();
+            if ab.poisoned {
+                stats.absorb(&ab.state);
             }
-            !done
+            !ab.poisoned
         });
-        if shutdown && active.is_empty() && batcher.is_empty() {
+        if shutdown
+            && batcher.is_empty()
+            && active.iter().all(|ab| ab.is_empty())
+        {
             return;
         }
     }
@@ -591,6 +662,7 @@ fn health_json(
     stats: &ServeStats,
 ) -> Json {
     let in_flight: usize = active.iter().map(|ab| ab.live_lanes()).sum();
+    let decoding = active.iter().filter(|ab| !ab.is_empty()).count();
     let kv_in_use: usize = core.pool.in_use()
         + active.iter().map(|ab| ab.state.kv_in_use()).sum::<usize>();
     let total_admissions = stats.closed_total_admissions
@@ -603,18 +675,39 @@ fn health_json(
     let kv_allocs = stats.closed_kv_allocs
         + core.pool.total_allocs
         + active.iter().map(|ab| ab.state.kv_total_allocs()).sum::<u64>();
+    let prefix_hits = stats.closed_prefix_hits
+        + core.pool.prefix_hits
+        + active.iter().map(|ab| ab.state.prefix_hits()).sum::<u64>();
+    let prefix_hit_blocks = stats.closed_prefix_hit_blocks
+        + core.pool.prefix_hit_blocks
+        + active.iter().map(|ab| ab.state.prefix_hit_blocks()).sum::<u64>();
+    let prefix_evictions = stats.closed_prefix_evictions
+        + core.pool.prefix_evictions
+        + active.iter().map(|ab| ab.state.prefix_evictions()).sum::<u64>();
+    // resident shared pages are live state, not a lifetime counter:
+    // only pools that still exist contribute
+    let kv_shared_slots = core.pool.prefix_resident_pages()
+        + active.iter().map(|ab| ab.state.kv_shared_pages()).sum::<usize>();
     Json::obj(vec![
         ("status", Json::str("ok")),
         ("platform", Json::str(core.rt.platform())),
         ("compiled_programs", Json::num(core.rt.compiled_count() as f64)),
         ("kv_slots_in_use", Json::num(kv_in_use as f64)),
         ("kv_total_allocs", Json::num(kv_allocs as f64)),
+        ("kv_shared_slots", Json::num(kv_shared_slots as f64)),
         ("queued", Json::num(batcher.len() as f64)),
-        ("active_batches", Json::num(active.len() as f64)),
+        // active = machines with live lanes (the pre-retention meaning);
+        // drained machines kept only as warm prefix caches report
+        // separately so "idle server" stays distinguishable
+        ("active_batches", Json::num(decoding as f64)),
+        ("retained_batches", Json::num((active.len() - decoding) as f64)),
         ("in_flight_lanes", Json::num(in_flight as f64)),
         ("total_admissions", Json::num(total_admissions as f64)),
         ("mid_flight_admissions", Json::num(mid_flight as f64)),
         ("retired_early", Json::num(stats.retired_early as f64)),
+        ("prefix_hits", Json::num(prefix_hits as f64)),
+        ("prefix_hit_blocks", Json::num(prefix_hit_blocks as f64)),
+        ("prefix_evictions", Json::num(prefix_evictions as f64)),
     ])
 }
 

@@ -187,6 +187,10 @@ pub struct ActiveBatch<T> {
     /// Set by the driver after a step error: every ticket has been
     /// failed and the batch must be dropped, not stepped again.
     pub poisoned: bool,
+    /// Last admission or live step. Drained batches are retained as
+    /// warm prefix caches; the driver reclaims the coldest one first
+    /// when it needs room for a new key.
+    pub last_active: std::time::Instant,
     tickets: Vec<Option<T>>,
 }
 
@@ -197,6 +201,7 @@ impl<T> ActiveBatch<T> {
             key,
             state,
             poisoned: false,
+            last_active: std::time::Instant::now(),
             tickets: (0..cap).map(|_| None).collect(),
         }
     }
@@ -225,6 +230,7 @@ impl<T> ActiveBatch<T> {
         match self.state.admit(prompt_ids, tau) {
             Ok(lane) => {
                 self.tickets[lane] = Some(ticket);
+                self.last_active = std::time::Instant::now();
                 Ok(lane)
             }
             Err(e) => Err((ticket, e)),
@@ -235,6 +241,7 @@ impl<T> ActiveBatch<T> {
     /// early: their `(ticket, outcome)` pairs return immediately while
     /// slower lanes keep decoding.
     pub fn step(&mut self) -> Result<Vec<(T, DecodeOutcome)>> {
+        self.last_active = std::time::Instant::now();
         self.state.step_cycle()?;
         Ok(self
             .state

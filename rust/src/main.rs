@@ -52,11 +52,12 @@ fn print_help() {
          USAGE: cdlm <command> [--flags]\n\
          \n\
          COMMANDS:\n\
-         \x20 serve      --addr 127.0.0.1:8472 --backbone dream --max-batch 4 --max-wait-ms 25 [--closed-batch]\n\
+         \x20 serve      --addr 127.0.0.1:8472 --backbone dream --max-batch 4 --max-wait-ms 25 [--closed-batch] [--no-prefix-cache] [--io-timeout-ms 10000]\n\
          \x20 generate   --prompt 'q:3*4+5=?' --method cdlm --backbone dream [--tau 0.9]\n\
          \x20 eval       --methods cdlm,ar --families chain-arith --n 16 --backbone dream\n\
-         \x20 bench      --methods all --batches 1,2,4,8 --n 16 --out BENCH_decode.json\n\
+         \x20 bench      --methods all --batches 1,2,4,8 --n 16 --out BENCH_decode.json [--check-baseline BENCH_baseline.json]\n\
          \x20 bench      --scenario serving --method cdlm --n 32 --arrival-ms 3 --out BENCH_serving.json\n\
+         \x20 bench      --scenario prefix --method cdlm --n 24 --distinct 6 --arrival-ms 2 --out BENCH_prefix.json\n\
          \x20 analysis   [--fig 4|9]\n\
          \x20 info\n"
     );
@@ -77,6 +78,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             step_delay: Duration::from_millis(
                 args.get_usize("step-delay-ms", 0) as u64,
             ),
+            prefix_cache: !args.has("no-prefix-cache"),
         },
     )?;
     server::serve(
@@ -84,6 +86,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         ServerConfig {
             addr: args.get_or("addr", "127.0.0.1:8472").to_string(),
             default_backbone: args.get_or("backbone", "dream").to_string(),
+            io_timeout: Duration::from_millis(
+                args.get_usize("io-timeout-ms", 10_000) as u64,
+            ),
         },
     )
 }
@@ -197,8 +202,10 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
 /// `--scenario serving` instead drives staggered arrivals through the
 /// router, continuous vs closed-batch, emitting `BENCH_serving.json`.
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
-    if args.get_or("scenario", "decode") == "serving" {
-        return cmd_bench_serving(args);
+    match args.get_or("scenario", "decode") {
+        "serving" => return cmd_bench_serving(args),
+        "prefix" => return cmd_bench_prefix(args),
+        _ => {}
     }
     let n = args.get_usize("n", 16);
     let backbone = args.get_or("backbone", "dream").to_string();
@@ -261,6 +268,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             let mut steps = Summary::new();
             let mut calls = Summary::new();
             let mut tokens = 0usize;
+            let (mut total_steps, mut total_calls) = (0u64, 0u64);
             let t0 = Instant::now();
             for chunk in prompts.chunks(bs) {
                 let outs = core.decode_group(&key, chunk, &opts)?;
@@ -269,6 +277,8 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                     steps.push(o.steps as f64);
                     calls.push(o.model_calls as f64);
                     tokens += o.gen_len;
+                    total_steps += o.steps;
+                    total_calls += o.model_calls;
                 }
             }
             let wall_s = t0.elapsed().as_secs_f64();
@@ -294,6 +304,10 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                 ("p95_latency_ms", Json::num(lat_s.percentile(95.0) * 1e3)),
                 ("avg_steps", Json::num(steps.mean())),
                 ("avg_model_calls", Json::num(calls.mean())),
+                // integer totals: the deterministic accounting CI gates
+                // on (latency fields stay unasserted — runners are noisy)
+                ("total_steps", Json::num(total_steps as f64)),
+                ("total_model_calls", Json::num(total_calls as f64)),
             ]));
         }
     }
@@ -315,7 +329,57 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     ]);
     std::fs::write(&out_path, doc.to_string())?;
     println!("results -> {out_path}");
+    if let Some(baseline_path) = args.get("check-baseline") {
+        let baseline = Json::parse(&std::fs::read_to_string(baseline_path)?)
+            .map_err(|e| anyhow::anyhow!("bad baseline json: {e}"))?;
+        cdlm::bench_support::check_baseline(&doc, &baseline).map_err(|e| {
+            anyhow::anyhow!(
+                "accounting drifted from {baseline_path}:\n{e}\n\
+                 If the drift is intentional, regenerate the baseline \
+                 (see rust/README.md, 'The accounting baseline gate')."
+            )
+        })?;
+        println!("accounting matches {baseline_path}");
+    }
     Ok(())
+}
+
+/// Drive one open-loop arrival trace through a fresh router: submit
+/// every prompt with an `arrival` gap, collect responses in arrival
+/// order, snapshot `/healthz` *before* shutdown (retained machines
+/// still hold their live counters), and return the wall time. Both
+/// serving-style benches are built on this one driver.
+fn drive_trace(
+    cfg: RouterConfig,
+    prompts: &[Vec<i32>],
+    backbone: &str,
+    method: Method,
+    arrival: Duration,
+) -> anyhow::Result<(Vec<cdlm::coordinator::GenerateResponse>, f64, Json)> {
+    let router = Router::start(artifacts_dir(), cfg)?;
+    let t0 = Instant::now();
+    let mut receivers = Vec::with_capacity(prompts.len());
+    for p in prompts {
+        receivers.push(router.submit(GenerateRequest {
+            backbone: backbone.to_string(),
+            method,
+            prompt_ids: p.clone(),
+            tau_conf: None,
+        })?);
+        std::thread::sleep(arrival);
+    }
+    let mut responses = Vec::with_capacity(receivers.len());
+    for rx in receivers {
+        responses.push(
+            rx.recv()
+                .map_err(|_| anyhow::anyhow!("worker dropped a request"))?
+                .map_err(|e| anyhow::anyhow!("{e}"))?,
+        );
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let health = router.health()?;
+    router.shutdown();
+    Ok((responses, wall_s, health))
 }
 
 /// One serving-bench pass: staggered arrivals through a fresh router.
@@ -334,39 +398,24 @@ fn run_serving_mode(
     arrival: Duration,
     max_batch: usize,
 ) -> anyhow::Result<ServingRun> {
-    let router = Router::start(
-        artifacts_dir(),
+    let (responses, wall_s, health) = drive_trace(
         RouterConfig {
             max_batch,
             max_queue: prompts.len().max(256),
             continuous,
             ..RouterConfig::default()
         },
+        prompts,
+        backbone,
+        method,
+        arrival,
     )?;
-    let t0 = Instant::now();
-    let mut receivers = Vec::with_capacity(prompts.len());
-    for p in prompts {
-        receivers.push(router.submit(GenerateRequest {
-            backbone: backbone.to_string(),
-            method,
-            prompt_ids: p.clone(),
-            tau_conf: None,
-        })?);
-        std::thread::sleep(arrival);
-    }
     let mut ttft = Summary::new();
     let mut ttlt = Summary::new();
-    for rx in receivers {
-        let resp = rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("worker dropped a request"))?
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+    for resp in &responses {
         ttft.push(resp.ttft.as_secs_f64() * 1e3);
         ttlt.push(resp.ttlt.as_secs_f64() * 1e3);
     }
-    let wall_s = t0.elapsed().as_secs_f64();
-    let health = router.health()?;
-    router.shutdown();
     Ok(ServingRun { ttft, ttlt, wall_s, health })
 }
 
@@ -462,6 +511,154 @@ fn cmd_bench_serving(args: &Args) -> anyhow::Result<()> {
         ("gen_len", Json::num(geom.gen_len as f64)),
         ("block_size", Json::num(geom.block_size as f64)),
         ("ttft_mean_speedup", Json::num(speedup)),
+        ("modes", Json::Arr(modes)),
+    ]);
+    std::fs::write(&out_path, doc.to_string())?;
+    println!("results -> {out_path}");
+    Ok(())
+}
+
+/// One prefix-bench pass: a repeated-prompt arrival trace through the
+/// continuous router with the prefix cache on or off.
+struct PrefixRun {
+    ttft: Summary,
+    wall_s: f64,
+    total_model_calls: u64,
+    health: Json,
+}
+
+fn run_prefix_mode(
+    prefix_on: bool,
+    prompts: &[Vec<i32>],
+    backbone: &str,
+    method: Method,
+    arrival: Duration,
+    max_batch: usize,
+) -> anyhow::Result<PrefixRun> {
+    let (responses, wall_s, health) = drive_trace(
+        RouterConfig {
+            max_batch,
+            max_queue: prompts.len().max(256),
+            continuous: true,
+            prefix_cache: prefix_on,
+            ..RouterConfig::default()
+        },
+        prompts,
+        backbone,
+        method,
+        arrival,
+    )?;
+    let mut ttft = Summary::new();
+    let mut total_model_calls = 0u64;
+    for resp in &responses {
+        ttft.push(resp.ttft.as_secs_f64() * 1e3);
+        total_model_calls += resp.model_calls;
+    }
+    Ok(PrefixRun { ttft, wall_s, total_model_calls, health })
+}
+
+/// Shared-prefix bench: the same repeated-prompt open-loop arrival
+/// trace (templated serving traffic: `--distinct` unique prompts
+/// round-robined over `--n` arrivals) against the continuous router
+/// with the prefix cache on vs off. Warm full-prompt hits skip their
+/// admission prefill, so total model calls drop by exactly the hit
+/// count while decoded traces stay byte-identical; TTFT is reported
+/// unasserted alongside.
+fn cmd_bench_prefix(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 24);
+    let distinct = args.get_usize("distinct", 6).clamp(1, n.max(1));
+    let arrival =
+        Duration::from_millis(args.get_usize("arrival-ms", 2) as u64);
+    let max_batch = args.get_usize("max-batch", 4);
+    let backbone = args.get_or("backbone", "dream").to_string();
+    let out_path = args.get_or("out", "BENCH_prefix.json").to_string();
+    let method = Method::from_name(args.get_or("method", "cdlm"))
+        .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
+
+    let probe = ServingCore::load(&artifacts_dir(), 1)?;
+    let geom = probe.rt.manifest.geometry.clone();
+    let samples = workload::generate(Family::ChainArith, distinct, 0xE7A1);
+    let base: Vec<Vec<i32>> = samples
+        .iter()
+        .map(|s| {
+            workload::encode_example(
+                &probe.tokenizer,
+                Family::ChainArith,
+                s,
+                geom.prompt_len,
+                geom.gen_len,
+            )
+            .map(|e| e.prompt_ids)
+        })
+        .collect::<anyhow::Result<_>>()?;
+    // round-robin repetition: every arrival after the first `distinct`
+    // is a repeat of a prompt the cache has already seen
+    let prompts: Vec<Vec<i32>> =
+        (0..n).map(|i| base[i % distinct].clone()).collect();
+    let backend = probe.rt.backend_name();
+    drop(probe);
+
+    println!(
+        "{:<14} {:>11} {:>11} {:>12} {:>7} {:>11} {:>9}",
+        "mode", "ttft-p50", "ttft-mean", "model-calls", "hits", "hit-blocks",
+        "wall(s)"
+    );
+    let mut modes = Vec::new();
+    let mut calls = Vec::new();
+    let mut warm_hits = 0.0f64;
+    for (label, prefix_on) in [("prefix_cache", true), ("cold", false)] {
+        let run = run_prefix_mode(
+            prefix_on, &prompts, &backbone, method, arrival, max_batch,
+        )?;
+        let stat = |k: &str| {
+            run.health.get(k).and_then(Json::as_f64).unwrap_or(0.0)
+        };
+        if prefix_on {
+            warm_hits = stat("prefix_hits");
+        }
+        println!(
+            "{:<14} {:>11.2} {:>11.2} {:>12} {:>7} {:>11} {:>9.2}",
+            label,
+            run.ttft.percentile(50.0),
+            run.ttft.mean(),
+            run.total_model_calls,
+            stat("prefix_hits") as u64,
+            stat("prefix_hit_blocks") as u64,
+            run.wall_s
+        );
+        calls.push(run.total_model_calls);
+        modes.push(Json::obj(vec![
+            ("mode", Json::str(label)),
+            ("requests", Json::num(run.ttft.count() as f64)),
+            ("ttft_p50_ms", Json::num(run.ttft.percentile(50.0))),
+            ("ttft_p95_ms", Json::num(run.ttft.percentile(95.0))),
+            ("ttft_mean_ms", Json::num(run.ttft.mean())),
+            ("wall_s", Json::num(run.wall_s)),
+            (
+                "total_model_calls",
+                Json::num(run.total_model_calls as f64),
+            ),
+            ("prefix_hits", Json::num(stat("prefix_hits"))),
+            ("prefix_hit_blocks", Json::num(stat("prefix_hit_blocks"))),
+            ("prefix_evictions", Json::num(stat("prefix_evictions"))),
+            ("kv_shared_slots", Json::num(stat("kv_shared_slots"))),
+        ]));
+    }
+    let saved = calls[1].saturating_sub(calls[0]);
+    println!("prefill model calls saved by the prefix cache: {saved}");
+    let doc = Json::obj(vec![
+        ("schema", Json::str("cdlm.bench.prefix/v1")),
+        ("backend", Json::str(backend)),
+        ("backbone", Json::str(backbone.as_str())),
+        ("method", Json::str(method.name())),
+        ("n", Json::num(n as f64)),
+        ("distinct_prompts", Json::num(distinct as f64)),
+        ("arrival_ms", Json::num(arrival.as_millis() as f64)),
+        ("max_batch", Json::num(max_batch as f64)),
+        ("gen_len", Json::num(geom.gen_len as f64)),
+        ("block_size", Json::num(geom.block_size as f64)),
+        ("prefill_calls_saved", Json::num(saved as f64)),
+        ("warm_hits", Json::num(warm_hits)),
         ("modes", Json::Arr(modes)),
     ]);
     std::fs::write(&out_path, doc.to_string())?;

@@ -1,16 +1,29 @@
 //! Zero-copy KV-cache views: the read side of the backend seam.
 //!
 //! A [`KvView`] is a borrowed, `cache_len`-bounded window over the
-//! coordinator's lane-major KV slabs (`coordinator::kv_cache::KvPool`).
-//! Each lane's slot is one contiguous `[L, H, S, dh]` region, so a view
-//! is just the two slab borrows plus a per-lane base offset — creating
-//! one copies no cache data. Engines hand views straight to the backend
-//! every program call; backends that execute on the host (the reference
-//! backend) read individual positions through the accessors, and
-//! backends that need a device layout (PJRT) materialize the batch-major
-//! `[L, bs, H, S, dh]` buffer behind the seam with
-//! [`KvView::to_batch_major`] — the one place the old per-step
-//! `gather_batch` cost still exists, and only for that backend.
+//! coordinator's KV slabs (`coordinator::kv_cache::KvPool`). Since the
+//! shared-prefix refactor a lane's cache is no longer necessarily one
+//! contiguous region: each lane is described by a sorted run of
+//! [`KvSeg`]s, every segment mapping a contiguous position range onto a
+//! `[L, H, region_len, dh]` region of the slabs. Two layouts exist in
+//! practice:
+//!
+//! * **private slot** — one segment covering the whole sequence (the
+//!   pre-refactor layout; every closed-batch engine still sees exactly
+//!   this);
+//! * **chained** — the prompt positions map onto ref-counted,
+//!   block-granular prefix pages shared with other lanes (the prefix
+//!   cache), and the generated positions map onto the lane's private
+//!   slot at their natural offsets.
+//!
+//! Creating a view copies no cache data either way: a view is the two
+//! slab borrows plus the per-lane segment tables. Engines hand views
+//! straight to the backend every program call; backends that execute on
+//! the host (the reference backend) read individual positions through
+//! the accessors, and backends that need a device layout (PJRT)
+//! materialize the batch-major `[L, bs, H, S, dh]` buffer behind the
+//! seam with [`KvView::to_batch_major`] — the one place a full copy
+//! still exists, and only for that backend.
 //!
 //! `cache_len` is the lockstep valid-prefix length: positions
 //! `>= cache_len` are stale slab content (slots are not zeroed on free)
@@ -43,22 +56,60 @@ impl KvDims {
     }
 }
 
-/// Borrowed view of a batch's KV caches: lane-major slabs, valid-prefix
-/// bounded. See the module docs for the layout contract.
+/// One contiguous piece of a lane's cache: positions
+/// `[start, start + len)` live in the `[L, H, region_len, dh]` region
+/// that begins at element `base`, where position `start` maps to
+/// region-local position `offset`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvSeg {
+    pub start: usize,
+    pub len: usize,
+    pub base: usize,
+    pub region_len: usize,
+    pub offset: usize,
+}
+
+impl KvSeg {
+    /// The classic whole-slot layout: one `[L, H, seq_len, dh]` region
+    /// serving every position at its natural offset.
+    pub fn full_slot(base: usize, seq_len: usize) -> KvSeg {
+        KvSeg { start: 0, len: seq_len, base, region_len: seq_len, offset: 0 }
+    }
+}
+
+/// One lane's segment run. Plain single-slot lanes (every closed-batch
+/// engine) are stored inline so building a view of them allocates
+/// nothing per lane, exactly like the pre-refactor bases vector.
+enum LaneMap {
+    One(KvSeg),
+    Many(Vec<KvSeg>),
+}
+
+impl LaneMap {
+    #[inline]
+    fn segs(&self) -> &[KvSeg] {
+        match self {
+            LaneMap::One(s) => std::slice::from_ref(s),
+            LaneMap::Many(v) => v,
+        }
+    }
+}
+
+/// Borrowed view of a batch's KV caches: segmented lane maps over the
+/// slabs, valid-prefix bounded. See the module docs for the layout
+/// contract.
 pub struct KvView<'a> {
     k: &'a [f32],
     v: &'a [f32],
-    /// Per-lane base offset of the lane's `[L, H, S, dh]` slot within
-    /// the slabs.
-    bases: Vec<usize>,
+    lanes: Vec<LaneMap>,
     dims: KvDims,
     cache_len: usize,
 }
 
 impl<'a> KvView<'a> {
-    /// Build a view over lane-major slabs. `bases[lane]` is the element
-    /// offset of that lane's slot; every slot must fit inside both
-    /// slabs.
+    /// Build a view over classic one-slot-per-lane layouts.
+    /// `bases[lane]` is the element offset of that lane's `[L, H, S,
+    /// dh]` slot; every slot must fit inside both slabs.
     pub fn new(
         k: &'a [f32],
         v: &'a [f32],
@@ -66,17 +117,70 @@ impl<'a> KvView<'a> {
         dims: KvDims,
         cache_len: usize,
     ) -> KvView<'a> {
+        let lanes = bases
+            .into_iter()
+            .map(|b| LaneMap::One(KvSeg::full_slot(b, dims.seq_len)))
+            .collect();
+        Self::build(k, v, lanes, dims, cache_len)
+    }
+
+    /// Build a view from explicit per-lane segment runs (the shared-
+    /// prefix layout). Segments must be sorted, contiguous from
+    /// position 0, and cover at least `cache_len` positions.
+    pub fn segmented(
+        k: &'a [f32],
+        v: &'a [f32],
+        lanes: Vec<Vec<KvSeg>>,
+        dims: KvDims,
+        cache_len: usize,
+    ) -> KvView<'a> {
+        let lanes = lanes
+            .into_iter()
+            .map(|segs| {
+                if segs.len() == 1 {
+                    LaneMap::One(segs[0])
+                } else {
+                    LaneMap::Many(segs)
+                }
+            })
+            .collect();
+        Self::build(k, v, lanes, dims, cache_len)
+    }
+
+    fn build(
+        k: &'a [f32],
+        v: &'a [f32],
+        lanes: Vec<LaneMap>,
+        dims: KvDims,
+        cache_len: usize,
+    ) -> KvView<'a> {
         debug_assert!(cache_len <= dims.seq_len, "cache_len beyond slot");
-        debug_assert!(bases
-            .iter()
-            .all(|&b| b + dims.slot_elems() <= k.len()
-                && b + dims.slot_elems() <= v.len()));
-        KvView { k, v, bases, dims, cache_len }
+        #[cfg(debug_assertions)]
+        for lane in &lanes {
+            let mut next = 0usize;
+            for s in lane.segs() {
+                debug_assert_eq!(s.start, next, "segments must be contiguous");
+                debug_assert!(s.len > 0, "empty KV segment");
+                debug_assert!(
+                    s.offset + s.len <= s.region_len,
+                    "segment overruns its region"
+                );
+                let end = s.base
+                    + dims.n_layers * dims.n_heads * s.region_len * dims.d_head;
+                debug_assert!(
+                    end <= k.len() && end <= v.len(),
+                    "segment region outside the slabs"
+                );
+                next += s.len;
+            }
+            debug_assert!(next >= cache_len, "segments do not cover cache_len");
+        }
+        KvView { k, v, lanes, dims, cache_len }
     }
 
     /// Number of lanes in the view.
     pub fn bs(&self) -> usize {
-        self.bases.len()
+        self.lanes.len()
     }
 
     /// Valid-prefix length: positions `< cache_len` are committed.
@@ -92,8 +196,29 @@ impl<'a> KvView<'a> {
     fn idx(&self, lane: usize, l: usize, h: usize, pos: usize, d: usize) -> usize {
         debug_assert!(pos < self.cache_len, "read past valid prefix");
         let g = &self.dims;
-        self.bases[lane]
-            + ((l * g.n_heads + h) * g.seq_len + pos) * g.d_head
+        let segs = self.lanes[lane].segs();
+        // single-slot lanes keep the pre-refactor pure offset
+        // arithmetic; multi-segment (chained) lanes guess the segment
+        // from the uniform page length — exact for pool-built runs
+        // (equal-length pages then the tail) — and fall back to a scan
+        // for arbitrary layouts
+        let seg = if segs.len() == 1 {
+            &segs[0]
+        } else {
+            let guess = (pos / segs[0].len).min(segs.len() - 1);
+            let s = &segs[guess];
+            if pos >= s.start && pos < s.start + s.len {
+                s
+            } else {
+                segs.iter()
+                    .find(|s| pos >= s.start && pos < s.start + s.len)
+                    .expect("position not covered by any KV segment")
+            }
+        };
+        seg.base
+            + ((l * g.n_heads + h) * seg.region_len + seg.offset
+                + (pos - seg.start))
+                * g.d_head
             + d
     }
 
@@ -112,22 +237,30 @@ impl<'a> KvView<'a> {
     /// Materialize the batch-major `[L, bs, H, S, dh]` K/V pair the AOT
     /// programs consume. This is the full copy the engines no longer
     /// perform; only device backends (PJRT) pay it, behind the seam.
+    /// Shared prefix segments are copied once per lane here — the price
+    /// of the device layout, not of the shared pool.
     pub fn to_batch_major(&self) -> (TensorF32, TensorF32) {
         let g = &self.dims;
         let (l_n, h_n, s_n, dh) = (g.n_layers, g.n_heads, g.seq_len, g.d_head);
-        let bs = self.bases.len();
+        let bs = self.lanes.len();
         let mut k = TensorF32::zeros(&[l_n, bs, h_n, s_n, dh]);
         let mut v = TensorF32::zeros(&[l_n, bs, h_n, s_n, dh]);
-        let row = s_n * dh;
-        for (lane, &base) in self.bases.iter().enumerate() {
-            for l in 0..l_n {
-                for h in 0..h_n {
-                    let src = base + (l * h_n + h) * row;
-                    let dst = ((l * bs + lane) * h_n + h) * row;
-                    k.data[dst..dst + row]
-                        .copy_from_slice(&self.k[src..src + row]);
-                    v.data[dst..dst + row]
-                        .copy_from_slice(&self.v[src..src + row]);
+        for (lane, map) in self.lanes.iter().enumerate() {
+            for seg in map.segs() {
+                let span = seg.len * dh;
+                for l in 0..l_n {
+                    for h in 0..h_n {
+                        let src = seg.base
+                            + ((l * h_n + h) * seg.region_len + seg.offset)
+                                * dh;
+                        let dst = (((l * bs + lane) * h_n + h) * s_n
+                            + seg.start)
+                            * dh;
+                        k.data[dst..dst + span]
+                            .copy_from_slice(&self.k[src..src + span]);
+                        v.data[dst..dst + span]
+                            .copy_from_slice(&self.v[src..src + span]);
+                    }
                 }
             }
         }
@@ -162,12 +295,52 @@ mod tests {
     }
 
     #[test]
+    fn segmented_view_stitches_pages_and_tail() {
+        let d = dims();
+        // one shared page covering positions 0..2 ([L, H, 2, dh]) placed
+        // after a full slot in the same slab
+        let slot_elems = d.slot_elems();
+        let page_elems = d.n_layers * d.n_heads * 2 * d.d_head;
+        let mut k = vec![0.0f32; slot_elems + page_elems];
+        // slot content: flat index; page content: +5000
+        for (i, x) in k.iter_mut().enumerate().take(slot_elems) {
+            *x = i as f32;
+        }
+        for i in 0..page_elems {
+            k[slot_elems + i] = 5000.0 + i as f32;
+        }
+        let v: Vec<f32> = k.iter().map(|x| -x).collect();
+        let segs = vec![
+            KvSeg { start: 0, len: 2, base: slot_elems, region_len: 2, offset: 0 },
+            KvSeg { start: 2, len: 2, base: 0, region_len: 4, offset: 2 },
+        ];
+        let view = KvView::segmented(&k, &v, vec![segs], d, 4);
+        // pos 0..2 come from the page: page-local (l, h, pos, f)
+        assert_eq!(view.k_at(0, 0, 0, 0, 0), 5000.0);
+        // (l=1, h=1, pos=1, f=2) -> page-local ((3 * 2) + 1) * 3 + 2 = 23
+        assert_eq!(view.k_at(0, 1, 1, 1, 2), 5023.0);
+        // pos 2..4 come from the slot at natural offsets
+        assert_eq!(view.k_at(0, 0, 0, 2, 0), 6.0);
+        assert_eq!(view.v_at(0, 0, 0, 3, 1), -10.0);
+    }
+
+    #[test]
     fn batch_major_materialization_matches_accessors() {
         let d = dims();
         let n = d.slot_elems();
-        let k: Vec<f32> = (0..2 * n).map(|i| i as f32).collect();
+        let page_elems = d.n_layers * d.n_heads * 2 * d.d_head;
+        let mut k: Vec<f32> = (0..2 * n).map(|i| i as f32).collect();
+        k.extend((0..page_elems).map(|i| 9000.0 + i as f32));
         let v: Vec<f32> = k.iter().map(|x| -x).collect();
-        let view = KvView::new(&k, &v, vec![0, n], d, 4);
+        // lane 0: plain slot 0; lane 1: shared page + slot-1 tail
+        let lanes = vec![
+            vec![KvSeg::full_slot(0, 4)],
+            vec![
+                KvSeg { start: 0, len: 2, base: 2 * n, region_len: 2, offset: 0 },
+                KvSeg { start: 2, len: 2, base: n, region_len: 4, offset: 2 },
+            ],
+        ];
+        let view = KvView::segmented(&k, &v, lanes, d, 4);
         let (bk, bv) = view.to_batch_major();
         assert_eq!(bk.shape, vec![2, 2, 2, 4, 3]);
         for lane in 0..2 {
@@ -202,5 +375,19 @@ mod tests {
         let v = vec![0.0; d.slot_elems()];
         let view = KvView::new(&k, &v, vec![0], d, 2);
         view.k_at(0, 0, 0, 2, 0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "contiguous")]
+    fn gapped_segments_are_caught() {
+        let d = dims();
+        let k = vec![0.0; 2 * d.slot_elems()];
+        let v = vec![0.0; 2 * d.slot_elems()];
+        let segs = vec![
+            KvSeg { start: 0, len: 1, base: 0, region_len: 4, offset: 0 },
+            KvSeg { start: 2, len: 2, base: 0, region_len: 4, offset: 2 },
+        ];
+        let _ = KvView::segmented(&k, &v, vec![segs], d, 3);
     }
 }

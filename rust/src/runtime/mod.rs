@@ -19,7 +19,7 @@ pub mod tensor;
 pub mod weights;
 
 pub use backend::{Backend, Runtime};
-pub use kv::{KvDims, KvView};
+pub use kv::{KvDims, KvSeg, KvView};
 pub use manifest::{Geometry, Manifest};
 pub use pjrt::ProgramKey;
 pub use programs::Programs;

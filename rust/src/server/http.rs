@@ -13,6 +13,7 @@
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -24,20 +25,75 @@ use crate::workload;
 pub struct ServerConfig {
     pub addr: String,
     pub default_backbone: String,
+    /// Per-socket read/write timeout. The handler pool is 8 threads;
+    /// without this, 8 idle or slow-loris connections pin the whole
+    /// server — every blocking socket syscall must be able to give up.
+    /// `Duration::ZERO` disables the timeouts (blocking sockets).
+    pub io_timeout: Duration,
 }
 
-/// Parse one HTTP request (method, path, body).
-fn read_request(stream: &mut TcpStream) -> Result<(String, String, String)> {
+/// Request-size guards: a drip-feeding (slow-loris) client that stays
+/// under the per-syscall io_timeout could otherwise stream one header
+/// byte at a time forever. Together with the per-connection `budget`
+/// deadline they bound how long any handler thread can be pinned.
+const MAX_HEADERS: usize = 64;
+const MAX_LINE_BYTES: usize = 8 * 1024;
+const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+fn in_budget(deadline: &Option<std::time::Instant>) -> bool {
+    match deadline {
+        Some(d) => std::time::Instant::now() <= *d,
+        None => true,
+    }
+}
+
+/// Read one `\n`-terminated line, enforcing the length cap and the
+/// wall-clock deadline *between underlying reads* — a client dripping
+/// one byte per (sub-timeout) interval is cut off at the deadline
+/// instead of stretching a single `read_line` indefinitely.
+fn read_line_within(
+    reader: &mut impl BufRead,
+    deadline: &Option<std::time::Instant>,
+    out: &mut String,
+) -> Result<()> {
+    loop {
+        anyhow::ensure!(in_budget(deadline), "request read budget exceeded");
+        let buf = reader.fill_buf()?;
+        if buf.is_empty() {
+            return Ok(()); // EOF: caller sees a short/empty line
+        }
+        let nl = buf.iter().position(|&b| b == b'\n');
+        let take = nl.map(|i| i + 1).unwrap_or(buf.len());
+        out.push_str(&String::from_utf8_lossy(&buf[..take]));
+        reader.consume(take);
+        anyhow::ensure!(out.len() <= MAX_LINE_BYTES, "line too long");
+        if nl.is_some() {
+            return Ok(());
+        }
+    }
+}
+
+/// Parse one HTTP request (method, path, body). `budget` is the total
+/// wall-clock allowance for reading the request; the socket's own
+/// read timeout bounds each syscall, this bounds their sum.
+fn read_request(
+    stream: &mut TcpStream,
+    budget: Option<std::time::Duration>,
+) -> Result<(String, String, String)> {
+    let deadline = budget.map(|b| std::time::Instant::now() + b);
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut line = String::new();
-    reader.read_line(&mut line)?;
+    read_line_within(&mut reader, &deadline, &mut line)?;
     let mut parts = line.split_whitespace();
     let method = parts.next().unwrap_or("").to_string();
     let path = parts.next().unwrap_or("").to_string();
     let mut content_len = 0usize;
+    let mut headers = 0usize;
     loop {
+        headers += 1;
+        anyhow::ensure!(headers <= MAX_HEADERS, "too many headers");
         let mut h = String::new();
-        reader.read_line(&mut h)?;
+        read_line_within(&mut reader, &deadline, &mut h)?;
         let h = h.trim();
         if h.is_empty() {
             break;
@@ -47,9 +103,14 @@ fn read_request(stream: &mut TcpStream) -> Result<(String, String, String)> {
             content_len = v.trim().parse().unwrap_or(0);
         }
     }
+    anyhow::ensure!(content_len <= MAX_BODY_BYTES, "body too large");
     let mut body = vec![0u8; content_len];
-    if content_len > 0 {
-        reader.read_exact(&mut body)?;
+    let mut got = 0usize;
+    while got < content_len {
+        anyhow::ensure!(in_budget(&deadline), "request read budget exceeded");
+        let n = reader.read(&mut body[got..])?;
+        anyhow::ensure!(n > 0, "connection closed mid-body");
+        got += n;
     }
     Ok((method, path, String::from_utf8_lossy(&body).into_owned()))
 }
@@ -154,20 +215,44 @@ fn handle_generate(
 pub fn serve(router: Router, cfg: ServerConfig) -> Result<()> {
     let listener = TcpListener::bind(&cfg.addr)?;
     eprintln!("[cdlm] serving on http://{}", listener.local_addr()?);
+    serve_on(listener, router, cfg)
+}
+
+/// Serve on an already-bound listener (tests bind an ephemeral port
+/// themselves and pass it in).
+pub fn serve_on(
+    listener: TcpListener,
+    router: Router,
+    cfg: ServerConfig,
+) -> Result<()> {
     let router = Arc::new(router);
     // bounded connection-handler pool (decode concurrency is separately
     // bounded by the router worker + batcher)
     let pool = crate::util::threadpool::ThreadPool::new(8);
+    let io_timeout = if cfg.io_timeout.is_zero() {
+        None
+    } else {
+        Some(cfg.io_timeout)
+    };
     for stream in listener.incoming() {
         let Ok(mut stream) = stream else { continue };
+        // an unresponsive peer must release its handler thread: every
+        // read/write syscall on the socket gives up after io_timeout
+        // and the handler returns (read_request propagates the error)
+        let _ = stream.set_read_timeout(io_timeout);
+        let _ = stream.set_write_timeout(io_timeout);
         let router = router.clone();
         let backbone = cfg.default_backbone.clone();
         pool.execute(move || {
             let tok = Tokenizer::new();
-            let (method, path, body) = match read_request(&mut stream) {
-                Ok(r) => r,
-                Err(_) => return,
-            };
+            // the whole request must arrive within one io_timeout of
+            // the handler starting — a drip-feed that beats every
+            // per-syscall timeout still cannot hold the thread longer
+            let (method, path, body) =
+                match read_request(&mut stream, io_timeout) {
+                    Ok(r) => r,
+                    Err(_) => return,
+                };
             let (status, body) = match (method.as_str(), path.as_str()) {
                 ("POST", "/generate") => {
                     handle_generate(&tok, &router, &backbone, &body)

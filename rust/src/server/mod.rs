@@ -2,4 +2,4 @@
 
 pub mod http;
 
-pub use http::serve;
+pub use http::{serve, serve_on};

@@ -1,0 +1,93 @@
+//! HTTP front-end robustness: socket timeouts must keep idle and
+//! slow-loris connections from pinning the bounded handler pool.
+//!
+//! Runs hermetically on the reference backend; the server is started on
+//! an ephemeral port via `serve_on`.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use cdlm::coordinator::router::RouterConfig;
+use cdlm::coordinator::Router;
+use cdlm::server::{self, http::ServerConfig};
+
+fn start_server(io_timeout: Duration) -> SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral");
+    let addr = listener.local_addr().unwrap();
+    let router = Router::start(
+        cdlm::artifacts_dir(),
+        RouterConfig {
+            max_batch: 2,
+            max_queue: 8,
+            pool_capacity: 8,
+            ..RouterConfig::default()
+        },
+    )
+    .expect("router starts");
+    std::thread::spawn(move || {
+        let _ = server::serve_on(
+            listener,
+            router,
+            ServerConfig {
+                addr: String::new(), // already bound
+                default_backbone: "dream".into(),
+                io_timeout,
+            },
+        );
+    });
+    addr
+}
+
+fn http_get(addr: SocketAddr, path: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n")
+        .expect("request written");
+    let mut out = String::new();
+    let _ = s.read_to_string(&mut out);
+    out
+}
+
+#[test]
+fn idle_connections_cannot_pin_the_handler_pool() {
+    let addr = start_server(Duration::from_millis(250));
+    // saturate the 8-thread handler pool with idle (slow-loris) clients
+    // that never send a byte
+    let _loris: Vec<TcpStream> = (0..8)
+        .map(|_| TcpStream::connect(addr).expect("loris connect"))
+        .collect();
+    // give the pool time to hand every idle socket to a handler
+    std::thread::sleep(Duration::from_millis(100));
+    // a real request must still complete: the idle sockets' reads time
+    // out and release their handler threads
+    let t0 = Instant::now();
+    let resp = http_get(addr, "/healthz");
+    assert!(
+        resp.starts_with("HTTP/1.1 200"),
+        "healthz behind 8 idle clients failed: {resp:?}"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(8),
+        "request starved for {:?}",
+        t0.elapsed()
+    );
+}
+
+#[test]
+fn idle_connection_is_dropped_after_the_timeout() {
+    let addr = start_server(Duration::from_millis(200));
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // send nothing: the server must hang up after its io_timeout
+    // instead of holding the handler forever
+    let t0 = Instant::now();
+    let mut buf = [0u8; 16];
+    let n = s.read(&mut buf).unwrap_or(0);
+    assert_eq!(n, 0, "server must close the idle connection silently");
+    assert!(
+        t0.elapsed() < Duration::from_secs(8),
+        "idle connection held for {:?}",
+        t0.elapsed()
+    );
+}

@@ -1,0 +1,357 @@
+//! Shared-prefix KV cache invariants.
+//!
+//! The load-bearing pins of the prefix-chain refactor:
+//!  * **warm == cold trace identity** — for every method, re-admitting
+//!    a prompt whose chain is cached decodes byte-identically (gen ids,
+//!    steps, gen lengths) to the cold admission, with `model_calls`
+//!    lower by exactly the skipped prefill (and only for the methods
+//!    that prefill at admission: CDLM and AR);
+//!  * **refcount pin/unpin under mid-batch retirement** — lanes sharing
+//!    a chain pin it once each; a lane retiring mid-batch unpins
+//!    without perturbing the survivor, and the drained machine retains
+//!    the chain as warm cache;
+//!  * **copy-on-write divergence** — a prompt diverging at block `k`
+//!    reuses exactly `k` cached blocks and branches the trie; its
+//!    decode equals the solo cold trace;
+//!  * **eviction safety** — pressure never reclaims a pinned chain
+//!    (covered at pool granularity in `kv_cache.rs` unit tests; the
+//!    router-level test here closes the serving loop via `/healthz`).
+
+use std::sync::Arc;
+
+use cdlm::coordinator::router::RouterConfig;
+use cdlm::coordinator::{
+    BatchState, DecodeOpts, DecodeOutcome, Engine, GenerateRequest, KvPool,
+    Method, Router, ALL_METHODS,
+};
+use cdlm::runtime::{ModelWeights, Runtime};
+use cdlm::server::http::encode_user_prompt;
+use cdlm::tokenizer::Tokenizer;
+use cdlm::util::prop::check;
+use cdlm::workload::{self, Family};
+
+const SEED: u64 = 0x5EED_0004;
+
+fn prompts(n: usize, task_seed: u64) -> Vec<Vec<i32>> {
+    let rt = Runtime::reference(SEED);
+    let geom = rt.manifest.geometry.clone();
+    let tok = Tokenizer::new();
+    workload::generate(Family::ChainArith, n, task_seed)
+        .iter()
+        .map(|s| {
+            workload::encode_example(
+                &tok,
+                Family::ChainArith,
+                s,
+                geom.prompt_len,
+                geom.gen_len,
+            )
+            .unwrap()
+            .prompt_ids
+        })
+        .collect()
+}
+
+fn weights_for(rt: &Runtime, m: Method) -> Arc<ModelWeights> {
+    Arc::new(
+        ModelWeights::load(&rt.manifest, &m.weights_for("dream")).unwrap(),
+    )
+}
+
+fn machine(
+    rt: &Arc<Runtime>,
+    m: Method,
+    opts: &DecodeOpts,
+    capacity: usize,
+    prefix: bool,
+) -> BatchState {
+    let mut st = BatchState::new(
+        rt.clone(),
+        weights_for(rt, m),
+        m,
+        opts.clone(),
+        capacity,
+    )
+    .unwrap();
+    st.set_prefix_cache(prefix);
+    st
+}
+
+/// Admit `prompts` into a (possibly warm) machine and drive it to
+/// drain, returning outcomes in admission order.
+fn run_pass(st: &mut BatchState, prompts: &[Vec<i32>]) -> Vec<DecodeOutcome> {
+    let mut lanes = Vec::new();
+    for p in prompts {
+        lanes.push(st.admit(p, None).unwrap());
+    }
+    let mut out: Vec<Option<DecodeOutcome>> = Vec::new();
+    out.resize_with(prompts.len(), || None);
+    let mut guard = 0;
+    while !st.is_empty() {
+        guard += 1;
+        assert!(guard <= 10_000, "machine failed to drain");
+        st.step_cycle().unwrap();
+        for (lane, o) in st.take_finished() {
+            let req = lanes
+                .iter()
+                .position(|&l| l == lane)
+                .expect("retired lane was admitted");
+            assert!(out[req].is_none(), "lane retired twice");
+            out[req] = Some(o);
+        }
+    }
+    out.into_iter().map(Option::unwrap).collect()
+}
+
+fn same_trace(a: &DecodeOutcome, b: &DecodeOutcome) -> bool {
+    a.gen == b.gen && a.steps == b.steps && a.gen_len == b.gen_len
+}
+
+/// Does this method run a prefill model call at machine admission (the
+/// call a warm hit skips)?
+fn prefills_at_admit(m: Method) -> bool {
+    matches!(m, Method::Cdlm | Method::Ar)
+}
+
+#[test]
+fn warm_equals_cold_with_one_less_prefill_for_all_methods() {
+    let rt = Arc::new(Runtime::reference(SEED));
+    let geom = rt.manifest.geometry.clone();
+    let opts = DecodeOpts::defaults(&geom);
+    let ps = prompts(1, 0xAB01);
+    for m in ALL_METHODS {
+        // closed-batch cold reference (always cold by construction)
+        let weights = weights_for(&rt, m);
+        let engine = Engine::new(&rt, &weights);
+        let mut pool = KvPool::new(&geom, 4);
+        let closed = engine.decode_serial(m, &opts, &ps, &mut pool).unwrap();
+
+        let mut st = machine(&rt, m, &opts, 1, true);
+        let cold = run_pass(&mut st, &ps);
+        let warm = run_pass(&mut st, &ps);
+
+        assert!(
+            same_trace(&cold[0], &closed[0]),
+            "{}: cold machine trace diverged from closed batch",
+            m.name()
+        );
+        assert!(
+            same_trace(&warm[0], &cold[0]),
+            "{}: warm-hit decode trace diverged from cold",
+            m.name()
+        );
+        if prefills_at_admit(m) {
+            assert_eq!(
+                warm[0].model_calls + 1,
+                cold[0].model_calls,
+                "{}: warm hit must save exactly the prefill call",
+                m.name()
+            );
+            assert_eq!(st.prefix_hits(), 1, "{}", m.name());
+            assert!(st.kv_shared_pages() > 0, "{}", m.name());
+        } else {
+            assert_eq!(
+                warm[0].model_calls,
+                cold[0].model_calls,
+                "{}: non-prefill methods must be unaffected",
+                m.name()
+            );
+            assert_eq!(st.prefix_hits(), 0, "{}", m.name());
+        }
+        assert_eq!(st.kv_in_use(), 0, "{} leaked KV slots", m.name());
+    }
+}
+
+#[test]
+fn property_warm_trace_identical_to_cold_across_methods() {
+    let rt = Arc::new(Runtime::reference(SEED));
+    let geom = rt.manifest.geometry.clone();
+    let opts = DecodeOpts::defaults(&geom);
+    check("prefix-warm-equals-cold", 12, |r| {
+        let n = 1 + r.index(3);
+        let m = ALL_METHODS[r.index(ALL_METHODS.len())];
+        let ps =
+            prompts(n, 0xF00 ^ (n as u64) << 8 ^ r.index(1024) as u64);
+        let mut st = machine(&rt, m, &opts, n, true);
+        let cold = run_pass(&mut st, &ps);
+        let warm = run_pass(&mut st, &ps);
+        // gen/steps identical per lane; model_calls never higher warm
+        // (duplicate prompts may already hit inside the cold pass, so
+        // the exact -1 delta is pinned in the solo test above)
+        cold.iter().zip(&warm).all(|(c, w)| {
+            same_trace(c, w) && w.model_calls <= c.model_calls
+        }) && st.kv_in_use() == 0
+    });
+}
+
+#[test]
+fn refcounts_pin_and_unpin_under_mid_batch_retirement() {
+    let rt = Arc::new(Runtime::reference(SEED));
+    let geom = rt.manifest.geometry.clone();
+    let opts = DecodeOpts::defaults(&geom);
+    let p = prompts(1, 0x77AA).pop().unwrap();
+    let blocks = geom.prompt_len / geom.block_size;
+
+    // solo cold reference (prefix off)
+    let mut solo_st = machine(&rt, Method::Cdlm, &opts, 1, false);
+    let solo = run_pass(&mut solo_st, std::slice::from_ref(&p));
+
+    let mut st = machine(&rt, Method::Cdlm, &opts, 2, true);
+    let _lane_a = st.admit(&p, None).unwrap();
+    assert_eq!(
+        st.prefix_chain_info(&p),
+        Some((blocks, 1)),
+        "admission installs and pins the full chain"
+    );
+    st.step_cycle().unwrap();
+    // A may have early-stopped within its first block
+    let mut finished = st.take_finished();
+    let lane_b = st.admit(&p, None).unwrap();
+    assert_eq!(st.prefix_hits(), 1, "B re-admitted the cached prompt");
+    let live = if finished.is_empty() { 2 } else { 1 };
+    assert_eq!(
+        st.prefix_chain_info(&p),
+        Some((blocks, live)),
+        "each live lane holds exactly one pin"
+    );
+    let mut got_b = None;
+    let mut guard = 0;
+    while !st.is_empty() {
+        guard += 1;
+        assert!(guard <= 10_000);
+        st.step_cycle().unwrap();
+        for (lane, o) in st.take_finished() {
+            if lane == lane_b && got_b.is_none() {
+                got_b = Some(o);
+            } else {
+                finished.push((lane, o));
+            }
+        }
+    }
+    let got_b = got_b.expect("lane B retired");
+    assert!(
+        same_trace(&got_b, &solo[0]),
+        "warm shared-chain decode diverged from the solo cold trace"
+    );
+    assert_eq!(
+        got_b.model_calls + 1,
+        solo[0].model_calls,
+        "warm hit saves exactly the prefill call"
+    );
+    // fully drained: unpinned but retained as warm cache
+    assert_eq!(st.prefix_chain_info(&p), Some((blocks, 0)));
+    assert_eq!(st.kv_shared_pages(), blocks);
+    assert_eq!(st.kv_in_use(), 0, "machine leaked KV slots");
+}
+
+#[test]
+fn copy_on_write_divergence_at_each_block_offset() {
+    let rt = Arc::new(Runtime::reference(SEED));
+    let geom = rt.manifest.geometry.clone();
+    let opts = DecodeOpts::defaults(&geom);
+    let pb = geom.block_size;
+    let blocks = geom.prompt_len / pb;
+    // synthetic prompts (no padding): full control over block content
+    let base: Vec<i32> = vec![5; geom.prompt_len];
+    for k in 0..blocks {
+        let mut q = base.clone();
+        q[k * pb] = 6; // diverge exactly at block k
+
+        // solo cold reference for q
+        let mut solo_st = machine(&rt, Method::Cdlm, &opts, 1, false);
+        let solo = run_pass(&mut solo_st, std::slice::from_ref(&q));
+
+        let mut st = machine(&rt, Method::Cdlm, &opts, 1, true);
+        let cold_base = run_pass(&mut st, std::slice::from_ref(&base));
+        let hit_blocks_before = st.prefix_hit_blocks();
+        let pages_before = st.kv_shared_pages();
+        let got = run_pass(&mut st, std::slice::from_ref(&q));
+
+        assert_eq!(
+            st.prefix_hit_blocks() - hit_blocks_before,
+            k as u64,
+            "divergence at block {k} must reuse exactly {k} blocks"
+        );
+        assert_eq!(
+            st.kv_shared_pages() - pages_before,
+            blocks - k,
+            "only the divergent tail gets new pages (copy-on-write)"
+        );
+        assert!(
+            same_trace(&got[0], &solo[0]),
+            "divergent-at-{k} decode differs from its solo cold trace"
+        );
+        assert_eq!(
+            got[0].model_calls, solo[0].model_calls,
+            "partial hits still run one prefill call"
+        );
+        // the original chain is intact: base re-admits as a full hit
+        let hits_before = st.prefix_hits();
+        let warm = run_pass(&mut st, std::slice::from_ref(&base));
+        assert_eq!(st.prefix_hits(), hits_before + 1);
+        assert!(same_trace(&warm[0], &cold_base[0]));
+        assert_eq!(warm[0].model_calls + 1, cold_base[0].model_calls);
+    }
+}
+
+#[test]
+fn router_repeated_prompts_hit_and_report_on_healthz() {
+    let router = Router::start(
+        cdlm::artifacts_dir(),
+        RouterConfig {
+            max_batch: 2,
+            max_queue: 8,
+            pool_capacity: 8,
+            ..RouterConfig::default()
+        },
+    )
+    .expect("router starts");
+    let tok = Tokenizer::new();
+    let s = workload::generate(Family::ChainArith, 1, 99).pop().unwrap();
+    let req = || GenerateRequest {
+        backbone: "dream".into(),
+        method: Method::Cdlm,
+        prompt_ids: encode_user_prompt(&tok, &s.prompt, 64).unwrap(),
+        tau_conf: None,
+    };
+    // sequential round trips: the second arrival admits against the
+    // retained machine's warm chain
+    let cold = router.submit(req()).unwrap().recv().unwrap().unwrap();
+    let warm = router.submit(req()).unwrap().recv().unwrap().unwrap();
+    assert_eq!(warm.gen_ids, cold.gen_ids, "warm response text identical");
+    assert_eq!(warm.steps, cold.steps);
+    assert_eq!(
+        warm.model_calls + 1,
+        cold.model_calls,
+        "warm admission skipped its prefill"
+    );
+    let h = router.health().unwrap();
+    let stat = |k: &str| {
+        h.get(k)
+            .and_then(cdlm::util::json::Json::as_f64)
+            .unwrap_or(-1.0)
+    };
+    assert!(stat("prefix_hits") >= 1.0, "healthz prefix_hits: {h}");
+    assert!(
+        stat("prefix_hit_blocks") >= 1.0,
+        "healthz prefix_hit_blocks: {h}"
+    );
+    assert!(stat("kv_shared_slots") >= 1.0, "healthz kv_shared_slots: {h}");
+    assert!(stat("prefix_evictions") >= 0.0, "healthz prefix_evictions: {h}");
+    router.shutdown();
+}
+
+#[test]
+fn disabled_prefix_cache_changes_nothing() {
+    let rt = Arc::new(Runtime::reference(SEED));
+    let geom = rt.manifest.geometry.clone();
+    let opts = DecodeOpts::defaults(&geom);
+    let ps = prompts(1, 0xD15A);
+    let mut st = machine(&rt, Method::Cdlm, &opts, 1, false);
+    let first = run_pass(&mut st, &ps);
+    let second = run_pass(&mut st, &ps);
+    assert!(same_trace(&first[0], &second[0]));
+    assert_eq!(first[0].model_calls, second[0].model_calls);
+    assert_eq!(st.prefix_hits(), 0);
+    assert_eq!(st.kv_shared_pages(), 0, "no pages populated when off");
+}
