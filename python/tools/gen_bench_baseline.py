@@ -8,9 +8,12 @@ exact integers reproducible on any machine. This script is a
 line-for-line port of that accounting — the SplitMix64/avalanche hash
 chain (rust/src/runtime/reference.rs), the six closed-batch decode
 engines (rust/src/coordinator/methods/*.rs), the bucket chunk planner
-(scheduler.rs), and the `cdlm bench` grid loop (main.rs) — reusing the
-existing python mirrors of the workload generators and vocab
-(python/compile/tasks.py).
+(scheduler.rs), and the `cdlm bench` grid loop (main.rs), including
+the cancelled-lane cells (a machine batch stepped `cancel_block` block
+cycles then cancelled at the boundary — the block-step machine is
+trace-pinned to the closed engines per block, so truncating the closed
+loops reproduces its partial accounting) — reusing the existing python
+mirrors of the workload generators and vocab (python/compile/tasks.py).
 
 Regenerate after an intentional accounting change:
 
@@ -224,11 +227,20 @@ def block_proposals(ms: int, rows, ctxs, pos0: int, student: bool):
     return out
 
 
-def decode_bidirectional(ms, prompts, threshold: bool):
-    """vanilla (TopM m=1) and fast-dllm-par (Threshold)."""
+def decode_bidirectional(ms, prompts, threshold: bool, max_cycles=None):
+    """vanilla (TopM m=1) and fast-dllm-par (Threshold).
+
+    `max_cycles` mirrors the rust block-step machine's cancellation
+    point: the lanes are cancelled at that block-cycle boundary, so the
+    outer loop simply stops after that many blocks (the machine's
+    cycle N processes block N for a together-admitted batch, and all
+    per-block accounting is charged inside the cycle).
+    """
     seqs = [Seq(p) for p in prompts]
     blk = BLOCK
     for b in range(GEN_LEN // blk):
+        if max_cycles is not None and b >= max_cycles:
+            break
         lo = b * blk
         while True:
             if not any(s.masked_in(lo, blk) for s in seqs):
@@ -248,7 +260,7 @@ def decode_bidirectional(ms, prompts, threshold: bool):
     return seqs
 
 
-def decode_cached_teacher(ms, prompts, dual: bool):
+def decode_cached_teacher(ms, prompts, dual: bool, max_cycles=None):
     """dllm-cache (top-1, periodic refresh) / fast-dllm-dc (threshold,
     refresh at block boundaries)."""
     seqs = [Seq(p) for p in prompts]
@@ -256,6 +268,8 @@ def decode_cached_teacher(ms, prompts, dual: bool):
     refresh_ids = [None] * len(seqs)  # full ids at last write_full
     ssr = 1 << 62  # usize::MAX stand-in: force refresh first
     for b in range(GEN_LEN // blk):
+        if max_cycles is not None and b >= max_cycles:
+            break
         lo = b * blk
         if dual:
             ssr = 1 << 62
@@ -297,7 +311,7 @@ def decode_cached_teacher(ms, prompts, dual: bool):
     return seqs
 
 
-def decode_cdlm(ms, prompts):
+def decode_cdlm(ms, prompts, max_cycles=None):
     seqs = [Seq(p) for p in prompts]
     blk = BLOCK
     num_blocks = GEN_LEN // blk
@@ -306,6 +320,8 @@ def decode_cdlm(ms, prompts):
     for s in seqs:
         s.model_calls += 1
     for b in range(num_blocks):
+        if max_cycles is not None and b >= max_cycles:
+            break
         lo = b * blk
         if all(s.done for s in seqs):
             break
@@ -348,7 +364,11 @@ def decode_cdlm(ms, prompts):
     return seqs
 
 
-def decode_ar(ms, prompts):
+def decode_ar(ms, prompts, max_cycles=None):
+    """AR: one machine cycle covers BLOCK token positions, so
+    cancellation after k cycles truncates the token loop at k*BLOCK
+    (the charge for the step that proposed token k*BLOCK was paid at
+    position k*BLOCK - 1 and is included, same as the machine)."""
     seqs = [Seq(p) for p in prompts]
     ctx = [chain(ms, s.prompt) for s in seqs]
     cur = [ar_next(ms, c) for c in ctx]
@@ -356,6 +376,8 @@ def decode_ar(ms, prompts):
         s.model_calls += 1
     done = [False] * len(seqs)
     for i in range(GEN_LEN):
+        if max_cycles is not None and i >= max_cycles * BLOCK:
+            break
         for r, s in enumerate(seqs):
             if not done[r]:
                 s.gen[i] = cur[r]
@@ -386,20 +408,36 @@ METHODS = [
 ]
 
 
-def decode_batch(method: str, ms: int, prompts):
+def decode_batch(method: str, ms: int, prompts, max_cycles=None):
     if method == "vanilla":
-        return decode_bidirectional(ms, prompts, threshold=False)
+        return decode_bidirectional(
+            ms, prompts, threshold=False, max_cycles=max_cycles)
     if method == "fast-dllm-par":
-        return decode_bidirectional(ms, prompts, threshold=True)
+        return decode_bidirectional(
+            ms, prompts, threshold=True, max_cycles=max_cycles)
     if method == "dllm-cache":
-        return decode_cached_teacher(ms, prompts, dual=False)
+        return decode_cached_teacher(
+            ms, prompts, dual=False, max_cycles=max_cycles)
     if method == "fast-dllm-dc":
-        return decode_cached_teacher(ms, prompts, dual=True)
+        return decode_cached_teacher(
+            ms, prompts, dual=True, max_cycles=max_cycles)
     if method == "cdlm":
-        return decode_cdlm(ms, prompts)
+        return decode_cdlm(ms, prompts, max_cycles=max_cycles)
     if method == "ar":
-        return decode_ar(ms, prompts)
+        return decode_ar(ms, prompts, max_cycles=max_cycles)
     raise ValueError(method)
+
+
+def cancelled_count(method: str, outs, k: int) -> int:
+    """Lanes still decoding at the cancellation boundary — the count the
+    rust harness cancels (the teacher baselines never early-stop, so
+    every lane survives to the boundary; CDLM/AR lanes that finalized
+    <eos> before cycle k retired naturally)."""
+    if k >= GEN_LEN // BLOCK:
+        return 0
+    if method in ("cdlm", "ar"):
+        return sum(1 for s in outs if not s.done)
+    return len(outs)
 
 
 # ---------------------------------------------------------------------------
@@ -475,6 +513,35 @@ def main():
                 "total_steps": total_steps,
                 "total_model_calls": total_calls,
             })
+    # cancelled-lane accounting cells (rust: `cdlm bench` machine-path
+    # harness — admit min(4, n) lanes together, step `cancel_block`
+    # block cycles, cancel every surviving lane at the boundary). The
+    # machine is trace-pinned to the closed-batch engines per block, so
+    # the truncated closed loops above reproduce its partial accounting
+    # exactly.
+    cancel_block = 2
+    for method, model in METHODS:
+        ms = model_seed(model)
+        bs = min(4, len(prompts))
+        outs = decode_batch(
+            method, ms, prompts[:bs], max_cycles=cancel_block)
+        tokens = sum(s.gen_length() for s in outs)
+        total_steps = sum(s.steps for s in outs)
+        total_calls = sum(s.model_calls for s in outs)
+        cancelled = cancelled_count(method, outs, cancel_block)
+        print(f"{method:<14} {bs:>6} cancel@{cancel_block}: "
+              f"cancelled {cancelled}, tokens {tokens}, "
+              f"steps {total_steps}, calls {total_calls}")
+        cells.append({
+            "method": method,
+            "batch": bs,
+            "cancel_at_block": cancel_block,
+            "cancelled_lanes": cancelled,
+            "requests": len(outs),
+            "tokens": tokens,
+            "total_steps": total_steps,
+            "total_model_calls": total_calls,
+        })
     doc = {
         "schema": "cdlm.bench.decode/v1",
         "backend": "reference",

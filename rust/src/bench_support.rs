@@ -213,10 +213,28 @@ pub fn save_results(name: &str, j: crate::util::json::Json) {
 const ACCOUNTING_FIELDS: [&str; 4] =
     ["requests", "tokens", "total_steps", "total_model_calls"];
 
-fn cell_key(cell: &crate::util::json::Json) -> Option<(String, u64)> {
+/// Cell identity: (method, batch, cancel_at_block). Full-decode cells
+/// have no `cancel_at_block` field and key as `u64::MAX`; the
+/// cancelled-lane cells key by the block cycle the cancellation fired
+/// at, so the same (method, batch) can carry both cell kinds.
+fn cell_key(cell: &crate::util::json::Json) -> Option<(String, u64, u64)> {
     let m = cell.get("method")?.as_str()?.to_string();
     let b = cell.get("batch")?.as_f64()?;
-    Some((m, b as u64))
+    let c = cell
+        .get("cancel_at_block")
+        .and_then(crate::util::json::Json::as_f64)
+        .map(|v| v as u64)
+        .unwrap_or(u64::MAX);
+    Some((m, b as u64, c))
+}
+
+/// Human label for drift reports.
+fn cell_label(key: &(String, u64, u64)) -> String {
+    if key.2 == u64::MAX {
+        format!("{}/bs{}", key.0, key.1)
+    } else {
+        format!("{}/bs{}/cancel@{}", key.0, key.1, key.2)
+    }
 }
 
 /// Compare a freshly measured `cdlm.bench.decode/v1` document against
@@ -253,8 +271,8 @@ pub fn check_baseline(
         let Some(cc) = cur.iter().find(|c| cell_key(c).as_ref() == Some(&key))
         else {
             drifts.push(format!(
-                "cell {}/bs{} missing from the current run",
-                key.0, key.1
+                "cell {} missing from the current run",
+                cell_label(&key)
             ));
             continue;
         };
@@ -263,8 +281,8 @@ pub fn check_baseline(
             let cv = cc.get(f).and_then(Json::as_f64);
             if bv != cv {
                 drifts.push(format!(
-                    "{}/bs{}: {f} = {cv:?}, baseline {bv:?}",
-                    key.0, key.1
+                    "{}: {f} = {cv:?}, baseline {bv:?}",
+                    cell_label(&key)
                 ));
             }
         }
@@ -337,5 +355,25 @@ mod tests {
         assert!(err.contains("missing"), "{err}");
         let err = check_baseline(&base, &cur).unwrap_err();
         assert!(err.contains("cell count"), "{err}");
+    }
+
+    #[test]
+    fn cancel_cells_key_separately_from_full_cells() {
+        // a cancelled-lane cell shares (method, batch) with a full cell
+        // but must be gated independently
+        let cancel = |calls: f64| {
+            let mut c = cell("cdlm", 1.0, calls);
+            if let Json::Obj(ref mut m) = c {
+                m.insert("cancel_at_block".into(), Json::num(2.0));
+            }
+            c
+        };
+        let base = doc(vec![cell("cdlm", 1.0, 42.0), cancel(10.0)]);
+        let same = doc(vec![cell("cdlm", 1.0, 42.0), cancel(10.0)]);
+        assert!(check_baseline(&same, &base).is_ok());
+        let drifted = doc(vec![cell("cdlm", 1.0, 42.0), cancel(11.0)]);
+        let err = check_baseline(&drifted, &base).unwrap_err();
+        assert!(err.contains("cancel@2"), "{err}");
+        assert!(!err.contains("cdlm/bs1:"), "full cell must not drift: {err}");
     }
 }

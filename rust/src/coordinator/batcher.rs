@@ -44,6 +44,11 @@ pub struct Pending<T> {
     pub key: GroupKey,
     pub payload: T,
     pub enqueued: Instant,
+    /// Client deadline: a request still queued past this instant is
+    /// dead weight — [`DynamicBatcher::take_for`] refuses to admit it
+    /// (no lane, no prefill, no prefix-chain pin) and hands it back as
+    /// expired so the worker can answer it with a terminal abort.
+    pub deadline: Option<Instant>,
 }
 
 /// Accumulates pending requests per group; `pop_ready` returns a batch
@@ -122,16 +127,77 @@ impl<T> DynamicBatcher<T> {
         Some((key, batch))
     }
 
-    /// Admission drain: up to `n` oldest requests for exactly `key`,
-    /// ignoring readiness — they are joining an in-flight batch at a
-    /// block boundary, so waiting out the batching window would only
-    /// add latency. Does not count as a popped batch in
+    /// Admission drain: up to `n` oldest *live* requests for exactly
+    /// `key`, ignoring readiness — they are joining an in-flight batch
+    /// at a block boundary, so waiting out the batching window would
+    /// only add latency. Requests whose deadline already passed at
+    /// `now` are skipped (they must not consume a lane, a prefill
+    /// model call, or a prefix-chain pin) and returned as the second
+    /// vector so the caller can terminate them; they do not count
+    /// toward `n`. Does not count as a popped batch in
     /// `total_batches`.
-    pub fn take_for(&mut self, key: &GroupKey, n: usize) -> Vec<Pending<T>> {
+    #[allow(clippy::type_complexity)]
+    pub fn take_for(
+        &mut self,
+        key: &GroupKey,
+        n: usize,
+        now: Instant,
+    ) -> (Vec<Pending<T>>, Vec<Pending<T>>) {
+        let (mut fresh, mut expired) = (Vec::new(), Vec::new());
         if n == 0 || !self.queues.contains_key(key) {
-            return Vec::new();
+            return (fresh, expired);
         }
-        self.drain(key, n)
+        let q = self.queues.get_mut(key).unwrap();
+        // oldest first: stop once n live requests are in hand (later
+        // expired entries are caught by the next admission pass)
+        let mut consumed = 0;
+        let mut live = 0;
+        for p in q.iter() {
+            if live >= n {
+                break;
+            }
+            consumed += 1;
+            if !p.deadline.is_some_and(|d| now > d) {
+                live += 1;
+            }
+        }
+        for p in q.drain(..consumed) {
+            if p.deadline.is_some_and(|d| now > d) {
+                expired.push(p);
+            } else {
+                fresh.push(p);
+            }
+        }
+        if q.is_empty() {
+            self.queues.remove(key);
+        }
+        self.count -= consumed;
+        (fresh, expired)
+    }
+
+    /// Drain every queued request (any key) whose deadline has passed
+    /// at `now`. The serving workers run this once per loop iteration,
+    /// so an expired request releases its queue permit and receives its
+    /// terminal abort within one wakeup — it never has to wait for a
+    /// free lane of its own key to be discovered by `take_for`.
+    pub fn take_expired(&mut self, now: Instant) -> Vec<Pending<T>> {
+        let mut out = Vec::new();
+        self.queues.retain(|_key, q| {
+            if q.iter().any(|p| p.deadline.is_some_and(|d| now > d)) {
+                let mut kept = Vec::with_capacity(q.len());
+                for p in q.drain(..) {
+                    if p.deadline.is_some_and(|d| now > d) {
+                        out.push(p);
+                    } else {
+                        kept.push(p);
+                    }
+                }
+                *q = kept;
+            }
+            !q.is_empty()
+        });
+        self.count -= out.len();
+        out
     }
 
     /// Pure queue removal (callers that pop whole batches account
@@ -180,7 +246,7 @@ mod tests {
     }
 
     fn pend(m: Method, v: u32, t: Instant) -> Pending<u32> {
-        Pending { key: key(m), payload: v, enqueued: t }
+        Pending { key: key(m), payload: v, enqueued: t, deadline: None }
     }
 
     fn payloads(batch: Vec<Pending<u32>>) -> Vec<u32> {
@@ -235,10 +301,25 @@ mod tests {
         let k_hi = key(Method::Cdlm).with_tau(Some(0.9));
         let k_lo = key(Method::Cdlm).with_tau(Some(0.5));
         assert_ne!(k_hi, k_lo);
-        b.push(Pending { key: k_hi.clone(), payload: 1u32, enqueued: t });
-        b.push(Pending { key: k_lo.clone(), payload: 2u32, enqueued: t });
+        b.push(Pending {
+            key: k_hi.clone(),
+            payload: 1u32,
+            enqueued: t,
+            deadline: None,
+        });
+        b.push(Pending {
+            key: k_lo.clone(),
+            payload: 2u32,
+            enqueued: t,
+            deadline: None,
+        });
         assert!(b.pop_ready(t).is_none(), "different taus, neither full");
-        b.push(Pending { key: k_hi.clone(), payload: 3u32, enqueued: t });
+        b.push(Pending {
+            key: k_hi.clone(),
+            payload: 3u32,
+            enqueued: t,
+            deadline: None,
+        });
         let (k, batch) = b.pop_ready(t).unwrap();
         assert_eq!(k.tau(), Some(0.9));
         assert_eq!(payloads(batch), vec![1, 3]);
@@ -277,15 +358,69 @@ mod tests {
         // nothing is "ready" (bucket not full, window not expired) but
         // admission takes matching requests immediately
         assert!(b.pop_ready(t).is_none());
-        let got = payloads(b.take_for(&key(Method::Cdlm), 1));
+        let got = payloads(b.take_for(&key(Method::Cdlm), 1, t).0);
         assert_eq!(got, vec![1], "oldest matching request first");
-        let got = payloads(b.take_for(&key(Method::Cdlm), 4));
+        let got = payloads(b.take_for(&key(Method::Cdlm), 4, t).0);
         assert_eq!(got, vec![3]);
-        assert!(b.take_for(&key(Method::Cdlm), 4).is_empty());
+        assert!(b.take_for(&key(Method::Cdlm), 4, t).0.is_empty());
         assert_eq!(b.len(), 1, "other keys untouched");
-        assert!(b.take_for(&key(Method::Ar), 0).is_empty());
-        assert_eq!(payloads(b.take_for(&key(Method::Ar), 1)), vec![2]);
+        assert!(b.take_for(&key(Method::Ar), 0, t).0.is_empty());
+        assert_eq!(payloads(b.take_for(&key(Method::Ar), 1, t).0), vec![2]);
         assert!(b.is_empty());
+    }
+
+    #[test]
+    fn take_for_skips_expired_requests_without_consuming_lanes() {
+        // satellite: a dead client's queued request must not get a
+        // lane — take_for hands it back as expired, and the live
+        // request behind it still fills the single requested lane
+        let mut b = DynamicBatcher::new(8, Duration::from_secs(100));
+        let t = Instant::now();
+        let mut dead = pend(Method::Cdlm, 1, t);
+        dead.deadline = Some(t);
+        b.push(dead);
+        b.push(pend(Method::Cdlm, 2, t));
+        let later = t + Duration::from_millis(1);
+        let (fresh, expired) = b.take_for(&key(Method::Cdlm), 1, later);
+        assert_eq!(payloads(fresh), vec![2], "live request got the lane");
+        assert_eq!(payloads(expired), vec![1], "expired handed back");
+        assert!(b.is_empty(), "count balanced across both outcomes");
+        // an unexpired deadline is admitted normally
+        let mut live = pend(Method::Cdlm, 3, t);
+        live.deadline = Some(later + Duration::from_secs(5));
+        b.push(live);
+        let (fresh, expired) = b.take_for(&key(Method::Cdlm), 1, later);
+        assert_eq!(payloads(fresh), vec![3]);
+        assert!(expired.is_empty());
+    }
+
+    #[test]
+    fn take_expired_sweeps_every_key_and_balances_the_count() {
+        let mut b = DynamicBatcher::new(8, Duration::from_secs(100));
+        let t = Instant::now();
+        let mut dead_cdlm = pend(Method::Cdlm, 1, t);
+        dead_cdlm.deadline = Some(t);
+        let mut dead_ar = pend(Method::Ar, 2, t);
+        dead_ar.deadline = Some(t);
+        let mut live = pend(Method::Cdlm, 3, t);
+        live.deadline = Some(t + Duration::from_secs(60));
+        b.push(dead_cdlm);
+        b.push(dead_ar);
+        b.push(live);
+        b.push(pend(Method::Vanilla, 4, t)); // no deadline: never expires
+        let later = t + Duration::from_millis(1);
+        let mut expired = payloads(b.take_expired(later));
+        expired.sort_unstable();
+        assert_eq!(expired, vec![1, 2], "both keys' dead requests swept");
+        assert_eq!(b.len(), 2, "count released with the permits");
+        assert!(b.take_expired(later).is_empty(), "idempotent");
+        // the survivors are still poppable
+        let mut rest = Vec::new();
+        while let Some((_, batch)) = b.pop_any() {
+            rest.extend(payloads(batch));
+        }
+        rest.sort_unstable();
+        assert_eq!(rest, vec![3, 4]);
     }
 
     #[test]
@@ -322,7 +457,9 @@ mod tests {
             loop {
                 if r.below(2) == 0 {
                     let k = key(methods[r.index(3)]);
-                    seen.extend(payloads(b.take_for(&k, 1 + r.index(3))));
+                    seen.extend(payloads(
+                        b.take_for(&k, 1 + r.index(3), t).0,
+                    ));
                 } else if let Some((_, batch)) = b.pop_any() {
                     seen.extend(payloads(batch));
                 } else if b.is_empty() {

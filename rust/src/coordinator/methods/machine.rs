@@ -49,6 +49,26 @@ use crate::runtime::{
     Geometry, ModelWeights, Programs, Runtime, TensorI32,
 };
 
+/// One lane's newly committed token run, reported by
+/// [`BatchState::step_cycle`]: the generation span the cycle finalized
+/// for that lane (one full block for the DLM methods, up to one block
+/// of greedy tokens for AR). Runs arrive in generation order per lane,
+/// so concatenating a lane's runs reproduces its final `gen` buffer up
+/// to the last committed position — the streaming serving layer turns
+/// each run into an incrementally detokenized delta
+/// (`tests/streaming.rs` pins the concatenation byte-identical to the
+/// one-shot decode). Tokens are copied verbatim from the lane's gen
+/// buffer: positions past a lane's `<eos>` may be `[MASK]` (AR) or
+/// refined-but-dead tokens (teacher baselines); the stream decoder
+/// drops both.
+#[derive(Debug, Clone)]
+pub struct CommitRun {
+    pub lane: usize,
+    /// Gen-span offset where the run starts.
+    pub start: usize,
+    pub tokens: Vec<i32>,
+}
+
 /// One request's resumable decode state.
 struct Lane {
     seq: SequenceState,
@@ -328,7 +348,12 @@ impl BatchState {
     /// completion, apply the method's boundary policy, and commit block
     /// KV for lanes that continue. Afterwards, finished lanes wait in
     /// place for [`BatchState::take_finished`].
-    pub fn step_cycle(&mut self) -> Result<()> {
+    ///
+    /// Returns one [`CommitRun`] per lane stepped: which generation
+    /// span that lane finalized this cycle (ascending cursor, then
+    /// ascending lane — per-lane runs across cycles are therefore in
+    /// generation order).
+    pub fn step_cycle(&mut self) -> Result<Vec<CommitRun>> {
         self.stepped = true;
         let mut cohorts: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
         for (i, l) in self.lanes.iter().enumerate() {
@@ -338,10 +363,30 @@ impl BatchState {
                 }
             }
         }
+        let mut runs = Vec::new();
         for (cursor, idxs) in cohorts {
-            self.step_cohort(cursor, &idxs)?;
+            self.step_cohort(cursor, &idxs, &mut runs)?;
         }
-        Ok(())
+        Ok(runs)
+    }
+
+    /// Cancel a live lane at the block boundary: drop its state, free
+    /// its KV slot (which also unpins any shared-prefix chain the
+    /// admission attached — the pages stay resident as warm cache), and
+    /// return the partial outcome so the caller can account the wasted
+    /// steps/model calls. Legal between any two [`step_cycle`] calls;
+    /// in-flight cohort mates are never perturbed (per-lane program
+    /// outputs are independent of batch composition, the same property
+    /// admission relies on). Returns `None` for a lane that is already
+    /// empty.
+    ///
+    /// [`step_cycle`]: BatchState::step_cycle
+    pub fn cancel_lane(&mut self, lane: usize) -> Option<DecodeOutcome> {
+        let l = self.lanes.get_mut(lane)?.take()?;
+        if let Some(slot) = l.slot {
+            self.pool.free(slot);
+        }
+        Some(l.seq.into_outcome())
     }
 
     /// Retire every finished lane: free its KV slot (mid-batch slot
@@ -363,8 +408,14 @@ impl BatchState {
     }
 
     /// One cohort's block: dispatch to the per-method policy functions
-    /// that live beside each closed-batch engine.
-    fn step_cohort(&mut self, cursor: usize, idxs: &[usize]) -> Result<()> {
+    /// that live beside each closed-batch engine, then report the span
+    /// each lane committed as [`CommitRun`]s.
+    fn step_cohort(
+        &mut self,
+        cursor: usize,
+        idxs: &[usize],
+        runs: &mut Vec<CommitRun>,
+    ) -> Result<()> {
         let blk = self.opts.block_size;
         let num_blocks = self.geom.gen_len / blk;
         let progs = Programs::new(&self.rt, &self.weights);
@@ -537,6 +588,20 @@ impl BatchState {
                     }
                 }
             }
+        }
+        // report the span each cohort lane committed this cycle (the
+        // lane borrows above are released; read back through `lanes`)
+        for &i in idxs {
+            let l = self.lanes[i].as_ref().expect("cohort lane live");
+            let (start, len) = match self.method {
+                Method::Ar => (cursor, l.ar_pos - cursor),
+                _ => (cursor * blk, blk),
+            };
+            runs.push(CommitRun {
+                lane: i,
+                start,
+                tokens: l.seq.gen[start..start + len].to_vec(),
+            });
         }
         Ok(())
     }

@@ -16,6 +16,18 @@ pub struct RequestRecord {
     pub correct: Option<bool>,
 }
 
+/// Work a cancelled lane burned before it was retired (deadline,
+/// client disconnect, shutdown): the §A.3 counters it accrued plus the
+/// tokens it had already committed. Aborted requests never enter the
+/// per-sample averages — they'd skew the paper metrics — but their
+/// wasted work is visible per (backbone, method) on `/metrics`.
+#[derive(Debug, Clone)]
+pub struct AbortRecord {
+    pub steps: u64,
+    pub model_calls: u64,
+    pub committed_tokens: usize,
+}
+
 #[derive(Debug, Default, Clone)]
 pub struct MetricsAggregator {
     latency_s: Summary,
@@ -24,6 +36,10 @@ pub struct MetricsAggregator {
     gen_len: Summary,
     n_scored: usize,
     n_correct: usize,
+    n_aborted: usize,
+    wasted_steps: u64,
+    wasted_model_calls: u64,
+    wasted_tokens: u64,
 }
 
 impl MetricsAggregator {
@@ -42,8 +58,21 @@ impl MetricsAggregator {
         }
     }
 
+    /// Fold in a cancelled lane's partial work. Kept out of the
+    /// per-sample §A.3 aggregates by design.
+    pub fn record_abort(&mut self, r: &AbortRecord) {
+        self.n_aborted += 1;
+        self.wasted_steps += r.steps;
+        self.wasted_model_calls += r.model_calls;
+        self.wasted_tokens += r.committed_tokens as u64;
+    }
+
     pub fn count(&self) -> usize {
         self.latency_s.count()
+    }
+
+    pub fn aborted(&self) -> usize {
+        self.n_aborted
     }
 
     /// Per-sample average latency (seconds) — paper "Latency (s)".
@@ -99,6 +128,13 @@ impl MetricsAggregator {
             ("avg_model_calls", Json::num(self.avg_model_calls())),
             ("avg_gen_len", Json::num(self.avg_gen_len())),
             ("score", Json::num(self.score())),
+            ("aborted", Json::num(self.n_aborted as f64)),
+            ("wasted_steps", Json::num(self.wasted_steps as f64)),
+            (
+                "wasted_model_calls",
+                Json::num(self.wasted_model_calls as f64),
+            ),
+            ("wasted_tokens", Json::num(self.wasted_tokens as f64)),
         ])
     }
 }
@@ -156,6 +192,25 @@ mod tests {
         let m = MetricsAggregator::new();
         assert_eq!(m.tps(), 0.0);
         assert_eq!(m.score(), 0.0);
+    }
+
+    #[test]
+    fn aborts_tracked_outside_the_paper_aggregates() {
+        let mut m = MetricsAggregator::new();
+        m.record(&rec(100, 10, 20, true));
+        m.record_abort(&AbortRecord {
+            steps: 7,
+            model_calls: 9,
+            committed_tokens: 5,
+        });
+        assert_eq!(m.count(), 1, "aborts never enter the sample count");
+        assert_eq!(m.aborted(), 1);
+        assert_eq!(m.avg_steps(), 10.0, "averages unchanged by aborts");
+        let j = m.to_json();
+        assert_eq!(j.get("aborted").unwrap().as_i64(), Some(1));
+        assert_eq!(j.get("wasted_steps").unwrap().as_i64(), Some(7));
+        assert_eq!(j.get("wasted_model_calls").unwrap().as_i64(), Some(9));
+        assert_eq!(j.get("wasted_tokens").unwrap().as_i64(), Some(5));
     }
 
     #[test]

@@ -12,9 +12,12 @@ pub mod sequence;
 
 pub use batcher::{DynamicBatcher, GroupKey, Pending};
 pub use kv_cache::{ChainPin, KvPool, SlotId};
-pub use methods::machine::BatchState;
+pub use methods::machine::{BatchState, CommitRun};
 pub use methods::{DecodeOpts, DecodeOutcome, Method, ALL_METHODS};
-pub use metrics::{MetricsAggregator, RequestRecord};
-pub use router::{GenerateRequest, GenerateResponse, Router, ServingCore};
+pub use metrics::{AbortRecord, MetricsAggregator, RequestRecord};
+pub use router::{
+    GenerateRequest, GenerateResponse, LaneEvent, ResponseHandle, Router,
+    ServingCore,
+};
 pub use scheduler::{ActiveBatch, Engine};
 pub use sequence::SequenceState;

@@ -20,10 +20,26 @@
 //! carries tau per lane, and the closed-batch path folds the override
 //! into the batching [`GroupKey`] so mixed-tau requests never share a
 //! lockstep group.
+//!
+//! **The lane-event pipeline.** A request is no longer a one-shot
+//! `(ticket -> outcome)` round trip: `Router::submit` returns a
+//! [`ResponseHandle`] over a per-request [`LaneEvent`] channel —
+//! `Admitted` when the lane enters a batch, one `Committed` per
+//! finalized block (incrementally detokenized delta), and exactly one
+//! terminal `Finished`/`Aborted`. The same handle carries control the
+//! other way: an explicit [`ResponseHandle::cancel`], a per-request
+//! deadline, or a `max_new_tokens` budget retires the lane at the next
+//! block boundary, freeing its KV slot and unpinning its prefix chain
+//! immediately so queued work can take the lane; dropping the handle
+//! (a disconnected client) is detected on the next `Committed` send
+//! and cancels the same way. Expired requests are refused *before*
+//! admission (`DynamicBatcher::take_for`) so a dead client never costs
+//! a prefill. `/healthz` counts both: `aborted_queued` /
+//! `aborted_inflight`.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -31,12 +47,12 @@ use anyhow::Result;
 
 use super::batcher::{DynamicBatcher, GroupKey, Pending};
 use super::kv_cache::KvPool;
-use super::methods::machine::BatchState;
+use super::methods::machine::{BatchState, CommitRun};
 use super::methods::{DecodeOpts, DecodeOutcome, Method};
-use super::metrics::{MetricsAggregator, RequestRecord};
+use super::metrics::{AbortRecord, MetricsAggregator, RequestRecord};
 use super::scheduler::{ActiveBatch, Engine};
 use crate::runtime::{Geometry, ModelWeights, Runtime};
-use crate::tokenizer::Tokenizer;
+use crate::tokenizer::{StreamDecoder, Tokenizer};
 use crate::util::json::{self, Json};
 use crate::util::threadpool;
 
@@ -136,6 +152,15 @@ impl ServingCore {
         });
     }
 
+    /// Fold a cancelled lane's wasted work into the per-(backbone,
+    /// method) metrics (kept out of the §A.3 per-sample averages).
+    fn record_abort(&mut self, key: &GroupKey, r: &AbortRecord) {
+        self.metrics
+            .entry(format!("{}/{}", key.backbone, key.method.name()))
+            .or_default()
+            .record_abort(r);
+    }
+
     /// Fold a group's outcomes into the per-(backbone, method) metrics.
     fn record_group(&mut self, key: &GroupKey, outcomes: &[DecodeOutcome]) {
         for o in outcomes {
@@ -162,6 +187,36 @@ pub struct GenerateRequest {
     pub method: Method,
     pub prompt_ids: Vec<i32>,
     pub tau_conf: Option<f32>,
+    /// Wall-clock budget measured from submission. An expired request
+    /// is refused before it costs anything — at admission on the
+    /// continuous path, at group dispatch on the closed-batch path —
+    /// and an admitted continuous lane is cancelled at the next block
+    /// boundary.
+    pub timeout: Option<Duration>,
+    /// Generation budget: the lane retires with a normal `Finished`
+    /// (truncated) response at the first block boundary where at least
+    /// this many tokens have been *delivered* (post-`<eos>` dead
+    /// refinement never charges it). Needs block-boundary cancellation,
+    /// so the closed-batch worker (run-to-completion groups) ignores
+    /// it.
+    pub max_new_tokens: Option<usize>,
+}
+
+impl GenerateRequest {
+    pub fn new(
+        backbone: impl Into<String>,
+        method: Method,
+        prompt_ids: Vec<i32>,
+    ) -> Self {
+        Self {
+            backbone: backbone.into(),
+            method,
+            prompt_ids,
+            tau_conf: None,
+            timeout: None,
+            max_new_tokens: None,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -180,13 +235,121 @@ pub struct GenerateResponse {
     pub gen_len: usize,
 }
 
-type Responder = mpsc::Sender<Result<GenerateResponse, String>>;
+/// One hop of a request's life, streamed over its per-request channel.
+/// The sequence is always `Admitted?` · `Committed*` · exactly one
+/// terminal (`Finished` | `Aborted`); a request that never reaches a
+/// lane (queue rejection at submit is an `Err` from `submit` itself;
+/// queued-deadline expiry, shutdown, load-failure) goes straight to
+/// `Aborted`.
+#[derive(Debug, Clone)]
+pub enum LaneEvent {
+    /// The request entered a batch lane (admission prefill done).
+    Admitted,
+    /// One block's worth of tokens finalized. `text` is the
+    /// incrementally detokenized delta: concatenating every `text` of a
+    /// request reproduces the terminal response's `text` byte-for-byte
+    /// (`tests/streaming.rs` pins this for all six methods). `tokens`
+    /// counts the tokens this delta delivers (specials and anything
+    /// at/after the stream's first `<eos>` excluded — dead post-`<eos>`
+    /// refinement charges nothing); `block` is the 0-based ordinal of
+    /// the event within its request.
+    Committed { block: usize, text: String, tokens: usize },
+    /// Terminal: the lane decoded to completion (or hit its
+    /// `max_new_tokens` budget — a truncated but successful response).
+    Finished(GenerateResponse),
+    /// Terminal: the request was cancelled or failed. The counters
+    /// carry whatever work the lane burned before retiring (zero when
+    /// it never reached a lane).
+    Aborted {
+        reason: String,
+        steps: u64,
+        model_calls: u64,
+        committed_tokens: usize,
+    },
+}
+
+/// Client-side control half of the event pipeline: shared with the
+/// worker, checked at every block boundary.
+#[derive(Debug)]
+pub struct RequestCtl {
+    cancelled: AtomicBool,
+    deadline: Option<Instant>,
+    max_new_tokens: Option<usize>,
+}
+
+impl RequestCtl {
+    fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+}
+
+/// The caller's end of one request's event pipeline. Read events with
+/// [`next_event`] (streaming) or collapse to the terminal response with
+/// [`wait`] (one-shot callers). [`cancel`] — or simply dropping the
+/// handle — asks the worker to retire the lane at the next block
+/// boundary, freeing its KV slot and prefix-chain pin for queued work.
+///
+/// [`next_event`]: ResponseHandle::next_event
+/// [`wait`]: ResponseHandle::wait
+/// [`cancel`]: ResponseHandle::cancel
+pub struct ResponseHandle {
+    rx: mpsc::Receiver<LaneEvent>,
+    ctl: Arc<RequestCtl>,
+}
+
+impl ResponseHandle {
+    /// Next lane event; `None` once the channel closes (after the
+    /// terminal event, or if the worker died).
+    pub fn next_event(&self) -> Option<LaneEvent> {
+        self.rx.recv().ok()
+    }
+
+    /// Drain to the terminal event: `Finished -> Ok`, `Aborted -> Err`.
+    pub fn wait(&self) -> Result<GenerateResponse, String> {
+        loop {
+            match self.rx.recv() {
+                Ok(LaneEvent::Finished(resp)) => return Ok(resp),
+                Ok(LaneEvent::Aborted { reason, .. }) => return Err(reason),
+                Ok(_) => continue,
+                Err(_) => return Err("worker dropped the request".into()),
+            }
+        }
+    }
+
+    /// Request cancellation. Asynchronous: the worker retires the lane
+    /// at its next block boundary and answers with a terminal
+    /// `Aborted`.
+    pub fn cancel(&self) {
+        self.ctl.cancelled.store(true, Ordering::Relaxed);
+    }
+}
+
+type EventTx = mpsc::Sender<LaneEvent>;
+
+/// A submitted request in flight toward a worker lane.
+struct Submit {
+    req: GenerateRequest,
+    events: EventTx,
+    ctl: Arc<RequestCtl>,
+    /// Stamped at `Router::submit`, so TTFT/TTLT include the time a
+    /// message waits in the channel while the worker decodes.
+    submitted: Instant,
+}
+
+impl Submit {
+    /// Terminal abort for a request that never reached a lane.
+    fn abort(&self, reason: &str) {
+        let _ = self.events.send(LaneEvent::Aborted {
+            reason: reason.to_string(),
+            steps: 0,
+            model_calls: 0,
+            committed_tokens: 0,
+        });
+    }
+}
 
 enum RouterMsg {
-    /// A request, its responder, and its submit instant — arrival time
-    /// is stamped at `Router::submit`, so TTFT/TTLT include the time a
-    /// message waits in this channel while the worker decodes.
-    Request(Box<(GenerateRequest, Responder, Instant)>),
+    Request(Box<Submit>),
     Metrics(mpsc::Sender<Json>),
     Health(mpsc::Sender<Json>),
     Shutdown,
@@ -298,11 +461,8 @@ impl Router {
         })
     }
 
-    /// Enqueue a request; returns a receiver for the response.
-    pub fn submit(
-        &self,
-        req: GenerateRequest,
-    ) -> Result<mpsc::Receiver<Result<GenerateResponse, String>>> {
+    /// Enqueue a request; returns the handle to its event pipeline.
+    pub fn submit(&self, req: GenerateRequest) -> Result<ResponseHandle> {
         anyhow::ensure!(
             req.prompt_ids.len() == self.geometry.prompt_len,
             "prompt must be padded to {} tokens (got {})",
@@ -327,18 +487,26 @@ impl Router {
                 self.max_queue
             );
         }
-        let (rtx, rrx) = mpsc::channel();
-        if self
-            .tx
-            .send(RouterMsg::Request(Box::new((req, rtx, Instant::now()))))
-            .is_err()
-        {
+        let now = Instant::now();
+        let ctl = Arc::new(RequestCtl {
+            cancelled: AtomicBool::new(false),
+            deadline: req.timeout.map(|t| now + t),
+            max_new_tokens: req.max_new_tokens,
+        });
+        let (etx, erx) = mpsc::channel();
+        let sub = Submit {
+            req,
+            events: etx,
+            ctl: ctl.clone(),
+            submitted: now,
+        };
+        if self.tx.send(RouterMsg::Request(Box::new(sub))).is_err() {
             // the request never reached the worker: release the permit
             // so a dead worker reports as such, not as a full queue
             self.queued.fetch_sub(1, Ordering::SeqCst);
             anyhow::bail!("router worker is gone");
         }
-        Ok(rrx)
+        Ok(ResponseHandle { rx: erx, ctl })
     }
 
     pub fn metrics(&self) -> Result<Json> {
@@ -357,6 +525,15 @@ impl Router {
         Ok(rx.recv()?)
     }
 
+    /// Graceful drain: every request still in the system receives a
+    /// terminal event — nothing is ever answered by a silently dropped
+    /// channel. The continuous worker aborts queued requests and
+    /// in-flight lanes with `Aborted { reason: "shutdown" }` (a
+    /// streaming socket sees it as its terminal line) and frees their
+    /// KV state immediately; the closed-batch worker instead decodes
+    /// its remaining queue to completion (its groups are
+    /// run-to-completion, so draining by finishing is the cheaper exit
+    /// there). Then the worker exits.
     pub fn shutdown(mut self) {
         let _ = self.tx.send(RouterMsg::Shutdown);
         if let Some(w) = self.worker.take() {
@@ -369,12 +546,67 @@ impl Router {
 // Continuous worker: block-step machines + mid-flight admission
 // ---------------------------------------------------------------------------
 
-/// Per-lane response ticket: where to answer and when the request
-/// arrived/entered a batch (TTFT/TTLT accounting).
+/// Per-lane response ticket: the lane's event channel, its control
+/// block, arrival/admission instants (TTFT/TTLT accounting), and the
+/// streaming state (incremental detokenizer + committed-token count the
+/// generation budget is charged against).
 struct Ticket {
-    resp: Responder,
+    events: EventTx,
+    ctl: Arc<RequestCtl>,
     enqueued: Instant,
     admitted: Instant,
+    detok: StreamDecoder,
+    committed_tokens: usize,
+    blocks_committed: usize,
+    /// The event channel came back disconnected (client dropped its
+    /// handle): cancel the lane at the next block boundary.
+    dead: bool,
+}
+
+impl Ticket {
+    /// Split a queued submit into its lane ticket and the request to
+    /// admit (the admission instant is stamped here).
+    fn from_submit(sub: Submit) -> (Ticket, GenerateRequest) {
+        (
+            Ticket {
+                events: sub.events,
+                ctl: sub.ctl,
+                enqueued: sub.submitted,
+                admitted: Instant::now(),
+                detok: StreamDecoder::new(),
+                committed_tokens: 0,
+                blocks_committed: 0,
+                dead: false,
+            },
+            sub.req,
+        )
+    }
+}
+
+/// Why a lane leaves its batch early at a block boundary.
+enum Cancel {
+    /// Terminal `Aborted`: the work is wasted.
+    Abort(&'static str),
+    /// `max_new_tokens` reached: terminal `Finished` with the
+    /// truncated-but-valid partial response.
+    Budget,
+}
+
+/// The block-boundary cancellation policy, in priority order.
+fn cancel_of(t: &Ticket, now: Instant) -> Option<Cancel> {
+    if t.dead {
+        return Some(Cancel::Abort("client disconnected"));
+    }
+    if t.ctl.is_cancelled() {
+        return Some(Cancel::Abort("cancelled by client"));
+    }
+    if t.ctl.deadline.is_some_and(|d| now > d) {
+        return Some(Cancel::Abort("deadline exceeded"));
+    }
+    if t.ctl.max_new_tokens.is_some_and(|m| t.committed_tokens >= m) {
+        return Some(Cancel::Budget);
+    }
+    None
 }
 
 /// Serving counters surfaced on `/healthz`. Live batches report their
@@ -389,6 +621,13 @@ struct ServeStats {
     closed_prefix_hit_blocks: u64,
     closed_prefix_evictions: u64,
     retired_early: u64,
+    /// Requests terminated while still queued (deadline already expired
+    /// or cancelled before a lane/prefill was ever spent on them).
+    aborted_queued: u64,
+    /// Lanes cancelled mid-decode (disconnect, deadline, explicit
+    /// cancel, shutdown) — their KV slots and chain pins were reclaimed
+    /// at the block boundary.
+    aborted_inflight: u64,
 }
 
 impl ServeStats {
@@ -419,7 +658,7 @@ fn worker_loop_continuous(
     cfg: RouterConfig,
     queued: Arc<AtomicUsize>,
 ) {
-    let mut batcher: DynamicBatcher<(GenerateRequest, Responder)> =
+    let mut batcher: DynamicBatcher<Submit> =
         DynamicBatcher::new(cfg.max_batch, cfg.max_wait);
     let mut active: Vec<ActiveBatch<Ticket>> = Vec::new();
     let mut stats = ServeStats::default();
@@ -458,14 +697,18 @@ fn worker_loop_continuous(
         for m in msgs {
             match m {
                 RouterMsg::Request(b) => {
-                    let (req, resp, submitted) = *b;
+                    let sub = *b;
                     // tau stays per-lane in the step machine, so
                     // overrides batch together without leaking
-                    let key = GroupKey::new(req.backbone.clone(), req.method);
+                    let key = GroupKey::new(
+                        sub.req.backbone.clone(),
+                        sub.req.method,
+                    );
                     batcher.push(Pending {
                         key,
-                        payload: (req, resp),
-                        enqueued: submitted,
+                        enqueued: sub.submitted,
+                        deadline: sub.ctl.deadline,
+                        payload: sub,
                     });
                 }
                 RouterMsg::Metrics(tx) => {
@@ -478,6 +721,39 @@ fn worker_loop_continuous(
                 }
                 RouterMsg::Shutdown => shutdown = true,
             }
+        }
+        // ---- 1.5 graceful drain: on shutdown every queued request and
+        // in-flight lane gets a terminal Aborted{"shutdown"} event
+        // (instead of its channel silently dropping), KV state frees,
+        // and the worker exits immediately.
+        if shutdown {
+            while let Some((_key, items)) = batcher.pop_any() {
+                queued.fetch_sub(items.len(), Ordering::SeqCst);
+                for p in items {
+                    stats.aborted_queued += 1;
+                    p.payload.abort("shutdown");
+                }
+            }
+            for ab in active.iter_mut() {
+                for lane in ab.ticketed_lanes() {
+                    if let Some((t, o)) = ab.cancel(lane) {
+                        abort_lane(
+                            core, &ab.key, &t, &o, "shutdown", &mut stats,
+                        );
+                    }
+                }
+                stats.absorb(&ab.state);
+            }
+            return;
+        }
+        // ---- 1.6 reap expired queued requests every iteration: a dead
+        // client's permit and terminal 504 must not wait for a free
+        // lane of its key to show up (the worker wakes at least every
+        // 200ms even when idle, so the delay is bounded by one wakeup)
+        for p in batcher.take_expired(Instant::now()) {
+            queued.fetch_sub(1, Ordering::SeqCst);
+            stats.aborted_queued += 1;
+            p.payload.abort("deadline expired before admission");
         }
         // ---- 2. open machines for queued keys no live batch can host.
         // A block-step batch admits later arrivals mid-flight, so there
@@ -552,67 +828,150 @@ fn worker_loop_continuous(
                 Err(e) => {
                     // fail this key's queued requests (bad weights)
                     let msg = format!("decode failed: {e:#}");
-                    let items = batcher.take_for(&key, usize::MAX);
-                    queued.fetch_sub(items.len(), Ordering::SeqCst);
-                    for p in items {
-                        let _ = p.payload.1.send(Err(msg.clone()));
+                    let (fresh, expired) =
+                        batcher.take_for(&key, usize::MAX, Instant::now());
+                    queued.fetch_sub(
+                        fresh.len() + expired.len(),
+                        Ordering::SeqCst,
+                    );
+                    for p in expired {
+                        stats.aborted_queued += 1;
+                        p.payload.abort("deadline expired before admission");
+                    }
+                    for p in fresh {
+                        p.payload.abort(&msg);
                     }
                 }
             }
         }
         // ---- 3. admission: feed queued requests into free lanes at
-        // the block boundary (bucket-1 prefill inside `admit`)
+        // the block boundary (bucket-1 prefill inside `admit`).
+        // Requests whose deadline already expired — or whose client
+        // already cancelled — are terminated here WITHOUT consuming a
+        // lane, a prefill call, or a prefix-chain pin.
         for ab in active.iter_mut() {
             loop {
                 let free = ab.free_lanes();
                 if free == 0 {
                     break;
                 }
-                let items = batcher.take_for(&ab.key, free);
-                if items.is_empty() {
+                let (fresh, expired) =
+                    batcher.take_for(&ab.key, free, Instant::now());
+                if fresh.is_empty() && expired.is_empty() {
                     break;
                 }
-                queued.fetch_sub(items.len(), Ordering::SeqCst);
-                for p in items {
-                    let (req, resp) = p.payload;
-                    let ticket = Ticket {
-                        resp,
-                        enqueued: p.enqueued,
-                        admitted: Instant::now(),
-                    };
+                queued.fetch_sub(
+                    fresh.len() + expired.len(),
+                    Ordering::SeqCst,
+                );
+                for p in expired {
+                    stats.aborted_queued += 1;
+                    p.payload.abort("deadline expired before admission");
+                }
+                for p in fresh {
+                    if p.payload.ctl.is_cancelled() {
+                        stats.aborted_queued += 1;
+                        p.payload.abort("cancelled before admission");
+                        continue;
+                    }
+                    let (ticket, req) = Ticket::from_submit(p.payload);
+                    if ticket.events.send(LaneEvent::Admitted).is_err() {
+                        // handle already dropped: the client is gone,
+                        // don't spend the prefill
+                        stats.aborted_queued += 1;
+                        continue;
+                    }
                     if let Err((t, e)) =
                         ab.admit(&req.prompt_ids, req.tau_conf, ticket)
                     {
-                        let _ =
-                            t.resp.send(Err(format!("admission failed: {e:#}")));
+                        let _ = t.events.send(LaneEvent::Aborted {
+                            reason: format!("admission failed: {e:#}"),
+                            steps: 0,
+                            model_calls: 0,
+                            committed_tokens: 0,
+                        });
                     }
                 }
             }
         }
-        // ---- 4. advance every live batch one block; retire + answer
-        // finished lanes immediately
+        // ---- 4. cancellation sweep, then advance every live batch one
+        // block; retire + answer finished lanes immediately. The sweep
+        // runs at the block boundary — exactly where lane state is
+        // consistent and a departure cannot perturb cohort mates — and
+        // frees the cancelled lane's KV slot + chain pin on the spot,
+        // so the admission pass above can refill it next iteration.
         for ab in active.iter_mut() {
             if ab.is_empty() {
                 continue;
+            }
+            let now = Instant::now();
+            for lane in ab.ticketed_lanes() {
+                let kind = match ab.ticket_mut(lane) {
+                    Some(t) => cancel_of(t, now),
+                    None => None,
+                };
+                match kind {
+                    None => {}
+                    Some(Cancel::Budget) => {
+                        // generation budget reached: a truncated but
+                        // successful response
+                        if let Some((t, o)) = ab.cancel(lane) {
+                            core.record_outcome(&ab.key, &o);
+                            respond_lane(core, t, o);
+                        }
+                    }
+                    Some(Cancel::Abort(reason)) => {
+                        if let Some((t, o)) = ab.cancel(lane) {
+                            abort_lane(
+                                core, &ab.key, &t, &o, reason, &mut stats,
+                            );
+                        }
+                    }
+                }
+            }
+            if ab.is_empty() {
+                continue; // every lane was cancelled
             }
             if !cfg.step_delay.is_zero() {
                 std::thread::sleep(cfg.step_delay);
             }
             match ab.step() {
-                Ok(finished) => {
+                Ok((runs, mut finished)) => {
                     let still_live = !ab.is_empty();
                     if still_live {
                         stats.retired_early += finished.len() as u64;
                     }
-                    for (ticket, outcome) in finished {
+                    // stream each lane's block delta — lanes that
+                    // finished this cycle get their final Committed
+                    // before their Finished below
+                    for run in &runs {
+                        if let Some(t) = ab.ticket_mut(run.lane) {
+                            emit_commit(core, t, run);
+                        } else if let Some((_, t, _)) = finished
+                            .iter_mut()
+                            .find(|(l, _, _)| *l == run.lane)
+                        {
+                            emit_commit(core, t, run);
+                        }
+                    }
+                    for (_, ticket, outcome) in finished {
                         core.record_outcome(&ab.key, &outcome);
                         respond_lane(core, ticket, outcome);
                     }
                 }
                 Err(e) => {
+                    // drain through the cancel path so every lane's
+                    // Aborted event and the /metrics wasted_* counters
+                    // carry the work it actually burned (the lanes are
+                    // still well-formed; only the failed program call
+                    // poisoned the batch)
                     let msg = format!("decode failed: {e:#}");
-                    for t in ab.take_all_tickets() {
-                        let _ = t.resp.send(Err(msg.clone()));
+                    for lane in ab.ticketed_lanes() {
+                        if let Some((t, o)) = ab.cancel(lane) {
+                            abort_lane(
+                                core, &ab.key, &t, &o, &msg, &mut stats,
+                            );
+                        }
                     }
                     ab.poisoned = true;
                 }
@@ -628,22 +987,45 @@ fn worker_loop_continuous(
             }
             !ab.poisoned
         });
-        if shutdown
-            && batcher.is_empty()
-            && active.iter().all(|ab| ab.is_empty())
-        {
-            return;
-        }
     }
 }
 
-/// Answer one retired lane. TTFT/TTLT include queueing: the lane's
-/// decode-relative first-token offset is rebased onto its admission
-/// instant.
+/// Detokenize one committed block run into the lane's stream and send
+/// the `Committed` event. A failed send means the client dropped its
+/// handle — the lane is marked dead and the next boundary sweep cancels
+/// it (write-failure disconnect detection, one block of slack at most).
+///
+/// `tokens` — and the `max_new_tokens` budget it feeds — count the
+/// tokens this delta actually *delivers*: the stream decoder drops
+/// specials and everything at/after the first `<eos>`, and this toy
+/// tokenizer is one char per token, so the delta's char count is
+/// exactly its delivered-token count. Dead post-`<eos>` refinement
+/// (the teacher baselines decode every block) charges nothing.
+fn emit_commit(core: &ServingCore, t: &mut Ticket, run: &CommitRun) {
+    let text = core.tokenizer.decode_stream(&mut t.detok, &run.tokens);
+    let revealed = text.chars().count();
+    t.committed_tokens += revealed;
+    let block = t.blocks_committed;
+    t.blocks_committed += 1;
+    let sent = t.events.send(LaneEvent::Committed {
+        block,
+        text,
+        tokens: revealed,
+    });
+    if sent.is_err() {
+        t.dead = true;
+    }
+}
+
+/// Answer one retired lane with its terminal `Finished` event.
+/// TTFT/TTLT include queueing: the lane's decode-relative first-token
+/// offset is rebased onto its admission instant. (A streaming client's
+/// *observed* TTFT is stamped by the HTTP layer from the first
+/// `Committed` chunk actually written to the socket.)
 fn respond_lane(core: &ServingCore, ticket: Ticket, o: DecodeOutcome) {
     let wait = ticket.admitted - ticket.enqueued;
     let text = core.tokenizer.decode(&o.gen, true);
-    let _ = ticket.resp.send(Ok(GenerateResponse {
+    let _ = ticket.events.send(LaneEvent::Finished(GenerateResponse {
         text,
         steps: o.steps,
         model_calls: o.model_calls,
@@ -655,9 +1037,37 @@ fn respond_lane(core: &ServingCore, ticket: Ticket, o: DecodeOutcome) {
     }));
 }
 
+/// Terminal `Aborted` for a cancelled in-flight lane: surfaces the
+/// wasted work on the event, `/metrics` (per backbone/method) and the
+/// `aborted_inflight` counter on `/healthz`.
+fn abort_lane(
+    core: &mut ServingCore,
+    key: &GroupKey,
+    ticket: &Ticket,
+    o: &DecodeOutcome,
+    reason: &str,
+    stats: &mut ServeStats,
+) {
+    stats.aborted_inflight += 1;
+    core.record_abort(
+        key,
+        &AbortRecord {
+            steps: o.steps,
+            model_calls: o.model_calls,
+            committed_tokens: ticket.committed_tokens,
+        },
+    );
+    let _ = ticket.events.send(LaneEvent::Aborted {
+        reason: reason.to_string(),
+        steps: o.steps,
+        model_calls: o.model_calls,
+        committed_tokens: ticket.committed_tokens,
+    });
+}
+
 fn health_json(
     core: &ServingCore,
-    batcher: &DynamicBatcher<(GenerateRequest, Responder)>,
+    batcher: &DynamicBatcher<Submit>,
     active: &[ActiveBatch<Ticket>],
     stats: &ServeStats,
 ) -> Json {
@@ -705,6 +1115,8 @@ fn health_json(
         ("total_admissions", Json::num(total_admissions as f64)),
         ("mid_flight_admissions", Json::num(mid_flight as f64)),
         ("retired_early", Json::num(stats.retired_early as f64)),
+        ("aborted_queued", Json::num(stats.aborted_queued as f64)),
+        ("aborted_inflight", Json::num(stats.aborted_inflight as f64)),
         ("prefix_hits", Json::num(prefix_hits as f64)),
         ("prefix_hit_blocks", Json::num(prefix_hit_blocks as f64)),
         ("prefix_evictions", Json::num(prefix_evictions as f64)),
@@ -721,7 +1133,7 @@ fn worker_loop_closed(
     cfg: RouterConfig,
     queued: Arc<AtomicUsize>,
 ) {
-    let mut batcher: DynamicBatcher<(GenerateRequest, Responder)> =
+    let mut batcher: DynamicBatcher<Submit> =
         DynamicBatcher::new(cfg.max_batch, cfg.max_wait);
     // closed-batch admission accounting for /healthz: every request
     // dispatched into a group counts as an admission; mid-flight joins
@@ -739,23 +1151,25 @@ fn worker_loop_closed(
         };
         match rx.recv_timeout(timeout) {
             Ok(RouterMsg::Request(b)) => {
-                let (req, resp, submitted) = *b;
+                let sub = *b;
                 // fold the tau override into the key: a group is
                 // tau-uniform, so no request decodes with another
                 // request's threshold. Methods whose finalization
                 // ignores tau keep one group — no batch fragmentation
                 // over an override they would never read.
-                let tau = if req.method.uses_tau_conf() {
-                    req.tau_conf
+                let tau = if sub.req.method.uses_tau_conf() {
+                    sub.req.tau_conf
                 } else {
                     None
                 };
-                let key = GroupKey::new(req.backbone.clone(), req.method)
-                    .with_tau(tau);
+                let key =
+                    GroupKey::new(sub.req.backbone.clone(), sub.req.method)
+                        .with_tau(tau);
                 batcher.push(Pending {
                     key,
-                    payload: (req, resp),
-                    enqueued: submitted,
+                    enqueued: sub.submitted,
+                    deadline: sub.ctl.deadline,
+                    payload: sub,
                 });
                 // fall through: maybe this filled a bucket
             }
@@ -772,7 +1186,12 @@ fn worker_loop_closed(
             Err(mpsc::RecvTimeoutError::Disconnected) => shutdown = true,
         }
         // drain every ready group this wakeup, then dispatch them
-        // together — independent groups decode concurrently
+        // together — independent groups decode concurrently. The closed
+        // path runs groups to completion, so there is no lane to cancel
+        // mid-decode (and `max_new_tokens` is documented as ignored
+        // here); queued-deadline expiry IS enforced, at dispatch: an
+        // expired request never costs a group slot or a decode, same
+        // contract as the continuous path's `take_for`.
         let mut groups: Vec<(GroupKey, Group)> = Vec::new();
         loop {
             let item = if shutdown {
@@ -785,8 +1204,25 @@ fn worker_loop_closed(
             // exact (the old `min(load)` clamp was a racy read-modify-
             // write that could leak permits under concurrent submits)
             queued.fetch_sub(items.len(), Ordering::SeqCst);
-            stats.closed_total_admissions += items.len() as u64;
-            groups.push((key, items));
+            let now = Instant::now();
+            let mut live: Group = Vec::with_capacity(items.len());
+            for p in items {
+                if p.deadline.is_some_and(|d| now > d) {
+                    stats.aborted_queued += 1;
+                    p.payload.abort("deadline expired before admission");
+                } else if p.payload.events.send(LaneEvent::Admitted).is_err()
+                {
+                    // handle already dropped: the client is gone, don't
+                    // spend a group slot on a run-to-completion decode
+                    stats.aborted_queued += 1;
+                } else {
+                    stats.closed_total_admissions += 1;
+                    live.push(p);
+                }
+            }
+            if !live.is_empty() {
+                groups.push((key, live));
+            }
         }
         run_groups(core, groups);
         if shutdown && batcher.is_empty() {
@@ -795,7 +1231,7 @@ fn worker_loop_closed(
     }
 }
 
-type Group = Vec<Pending<(GenerateRequest, Responder)>>;
+type Group = Vec<Pending<Submit>>;
 
 /// Decode opts for one group. Groups are tau-uniform by construction
 /// (tau is folded into the `GroupKey`), so applying the key's tau is
@@ -808,9 +1244,13 @@ fn group_opts(geom: &Geometry, key: &GroupKey) -> DecodeOpts {
     opts
 }
 
-/// Answer one group's requests from its decode result. Metrics are
-/// recorded by the caller (serial path: inside `decode_group`; parallel
-/// path: explicitly, after the scoped join), never here.
+/// Answer one group's requests from its decode result. The closed path
+/// decodes to completion, so the event stream collapses to a single
+/// whole-response `Committed` delta followed by `Finished` — the wire
+/// contract (concatenated deltas == final text, one terminal event)
+/// holds on both worker paths. Metrics are recorded by the caller
+/// (serial path: inside `decode_group`; parallel path: explicitly,
+/// after the scoped join), never here.
 fn respond_group(
     core: &ServingCore,
     items: Group,
@@ -822,22 +1262,30 @@ fn respond_group(
             for (p, o) in items.into_iter().zip(outcomes) {
                 let wait = decode_start - p.enqueued;
                 let text = core.tokenizer.decode(&o.gen, true);
-                let _ = p.payload.1.send(Ok(GenerateResponse {
-                    text,
-                    steps: o.steps,
-                    model_calls: o.model_calls,
-                    latency: o.latency,
-                    ttft: wait + o.ttft,
-                    ttlt: Instant::now() - p.enqueued,
-                    gen_len: o.gen_len,
-                    gen_ids: o.gen,
-                }));
+                let _ = p.payload.events.send(LaneEvent::Committed {
+                    block: 0,
+                    text: text.clone(),
+                    tokens: o.gen_len,
+                });
+                let _ =
+                    p.payload.events.send(LaneEvent::Finished(
+                        GenerateResponse {
+                            text,
+                            steps: o.steps,
+                            model_calls: o.model_calls,
+                            latency: o.latency,
+                            ttft: wait + o.ttft,
+                            ttlt: Instant::now() - p.enqueued,
+                            gen_len: o.gen_len,
+                            gen_ids: o.gen,
+                        },
+                    ));
             }
         }
         Err(e) => {
             let msg = format!("decode failed: {e:#}");
             for p in items {
-                let _ = p.payload.1.send(Err(msg.clone()));
+                p.payload.abort(&msg);
             }
         }
     }
@@ -863,7 +1311,7 @@ fn run_groups(core: &mut ServingCore, groups: Vec<(GroupKey, Group)>) {
             let opts = group_opts(core.geometry(), &key);
             let prompts: Vec<Vec<i32>> = items
                 .iter()
-                .map(|p| p.payload.0.prompt_ids.clone())
+                .map(|p| p.payload.req.prompt_ids.clone())
                 .collect();
             let t0 = Instant::now();
             let result = core.decode_group(&key, &prompts, &opts);
@@ -888,7 +1336,7 @@ fn run_groups(core: &mut ServingCore, groups: Vec<(GroupKey, Group)>) {
                 key.method,
                 items
                     .iter()
-                    .map(|p| p.payload.0.prompt_ids.clone())
+                    .map(|p| p.payload.req.prompt_ids.clone())
                     .collect(),
                 group_opts(&geom, key),
             )

@@ -23,7 +23,7 @@ use anyhow::Result;
 
 use super::batcher::GroupKey;
 use super::kv_cache::KvPool;
-use super::methods::machine::BatchState;
+use super::methods::machine::{BatchState, CommitRun};
 use super::methods::{self, DecodeOpts, DecodeOutcome, Method};
 use crate::runtime::{Geometry, ModelWeights, Programs, Runtime};
 use crate::util::threadpool;
@@ -238,12 +238,18 @@ impl<T> ActiveBatch<T> {
     }
 
     /// Advance every live lane by one block, then retire finished lanes
-    /// early: their `(ticket, outcome)` pairs return immediately while
-    /// slower lanes keep decoding.
-    pub fn step(&mut self) -> Result<Vec<(T, DecodeOutcome)>> {
+    /// early. Returns the cycle's [`CommitRun`]s (which lane finalized
+    /// which token span — the event pipeline turns these into streamed
+    /// block deltas) plus `(lane, ticket, outcome)` for every lane that
+    /// finished; a finished lane's final block run precedes its retire
+    /// entry, so the driver can emit `Committed` before `Finished`.
+    #[allow(clippy::type_complexity)]
+    pub fn step(
+        &mut self,
+    ) -> Result<(Vec<CommitRun>, Vec<(usize, T, DecodeOutcome)>)> {
         self.last_active = std::time::Instant::now();
-        self.state.step_cycle()?;
-        Ok(self
+        let runs = self.state.step_cycle()?;
+        let finished = self
             .state
             .take_finished()
             .into_iter()
@@ -251,16 +257,37 @@ impl<T> ActiveBatch<T> {
                 let ticket = self.tickets[lane]
                     .take()
                     .expect("retired lane has a ticket");
-                (ticket, outcome)
+                (lane, ticket, outcome)
             })
-            .collect())
+            .collect();
+        Ok((runs, finished))
     }
 
-    /// Abandon the batch (decode error): hand back every outstanding
-    /// ticket so the caller can fail the requests.
-    pub fn take_all_tickets(&mut self) -> Vec<T> {
-        self.tickets.iter_mut().filter_map(Option::take).collect()
+    /// Cancel one live lane between block cycles: its state drops, its
+    /// KV slot frees (unpinning any prefix chain) and its ticket comes
+    /// back with the partial outcome for wasted-work accounting. The
+    /// freed lane is immediately admissible.
+    pub fn cancel(&mut self, lane: usize) -> Option<(T, DecodeOutcome)> {
+        let outcome = self.state.cancel_lane(lane)?;
+        let ticket =
+            self.tickets[lane].take().expect("cancelled lane has a ticket");
+        Some((ticket, outcome))
     }
+
+    /// Borrow one live lane's ticket (commit-event bookkeeping).
+    pub fn ticket_mut(&mut self, lane: usize) -> Option<&mut T> {
+        self.tickets.get_mut(lane).and_then(Option::as_mut)
+    }
+
+    /// Lane ids that currently hold a ticket (live lanes), ascending.
+    pub fn ticketed_lanes(&self) -> Vec<usize> {
+        self.tickets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, t)| t.as_ref().map(|_| i))
+            .collect()
+    }
+
 }
 
 /// Worker threads the decode executors (chunk fan-out here, group

@@ -4,9 +4,12 @@
 //!   serve      start the HTTP server (router + continuous batching)
 //!   generate   one-shot decode from the command line
 //!   eval       method x family evaluation grid (paper-table rows)
-//!   bench      decode-throughput grid -> machine-readable JSON;
-//!              --scenario serving runs staggered arrivals through the
-//!              router (continuous vs closed-batch) -> BENCH_serving.json
+//!   bench      decode-throughput grid (+ cancelled-lane accounting
+//!              cells) -> machine-readable JSON; --scenario serving
+//!              runs staggered arrivals through the router (continuous
+//!              vs closed-batch) -> BENCH_serving.json; --scenario
+//!              stream drives streaming clients + mid-stream cancels
+//!              -> BENCH_stream.json
 //!   analysis   print Fig. 4 arithmetic-intensity / Fig. 9 roofline
 //!   info       artifacts manifest summary
 
@@ -55,9 +58,10 @@ fn print_help() {
          \x20 serve      --addr 127.0.0.1:8472 --backbone dream --max-batch 4 --max-wait-ms 25 [--closed-batch] [--no-prefix-cache] [--io-timeout-ms 10000]\n\
          \x20 generate   --prompt 'q:3*4+5=?' --method cdlm --backbone dream [--tau 0.9]\n\
          \x20 eval       --methods cdlm,ar --families chain-arith --n 16 --backbone dream\n\
-         \x20 bench      --methods all --batches 1,2,4,8 --n 16 --out BENCH_decode.json [--check-baseline BENCH_baseline.json]\n\
+         \x20 bench      --methods all --batches 1,2,4,8 --n 16 --out BENCH_decode.json [--check-baseline BENCH_baseline.json] [--cancel-block 2]\n\
          \x20 bench      --scenario serving --method cdlm --n 32 --arrival-ms 3 --out BENCH_serving.json\n\
          \x20 bench      --scenario prefix --method cdlm --n 24 --distinct 6 --arrival-ms 2 --out BENCH_prefix.json\n\
+         \x20 bench      --scenario stream --method cdlm --n 16 --arrival-ms 2 --cancel-every 4 --cancel-after-blocks 1 --out BENCH_stream.json\n\
          \x20 analysis   [--fig 4|9]\n\
          \x20 info\n"
     );
@@ -205,6 +209,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     match args.get_or("scenario", "decode") {
         "serving" => return cmd_bench_serving(args),
         "prefix" => return cmd_bench_prefix(args),
+        "stream" => return cmd_bench_stream(args),
         _ => {}
     }
     let n = args.get_usize("n", 16);
@@ -311,6 +316,67 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             ]));
         }
     }
+    // ---- cancelled-lane accounting cells: admit a full machine batch,
+    // advance `--cancel-block` block cycles, then cancel every
+    // surviving lane at the boundary (the streaming pipeline's
+    // disconnect/deadline path). The work burned up to the cancel is a
+    // pure function of the reference backend, so these integers are
+    // gated by --check-baseline exactly like the full-decode cells
+    // (python/tools/gen_bench_baseline.py ports the same truncation).
+    let cancel_block = args.get_usize("cancel-block", 2);
+    for m in &methods {
+        let key = GroupKey::new(backbone.clone(), *m);
+        let bs = 4.min(prompts.len());
+        if bs == 0 {
+            break;
+        }
+        let mut st = core.open_batch(&key, opts.clone(), bs)?;
+        let mut outcomes = Vec::new();
+        for p in &prompts[..bs] {
+            st.admit(p, None)?;
+        }
+        for _ in 0..cancel_block {
+            if st.is_empty() {
+                break;
+            }
+            st.step_cycle()?;
+            outcomes.extend(st.take_finished().into_iter().map(|(_, o)| o));
+        }
+        let mut cancelled = 0u64;
+        for lane in 0..st.capacity() {
+            if let Some(o) = st.cancel_lane(lane) {
+                cancelled += 1;
+                outcomes.push(o);
+            }
+        }
+        anyhow::ensure!(
+            st.kv_in_use() == 0,
+            "cancelled lanes must free every KV slot"
+        );
+        let tokens: usize = outcomes.iter().map(|o| o.gen_len).sum();
+        let total_steps: u64 = outcomes.iter().map(|o| o.steps).sum();
+        let total_calls: u64 = outcomes.iter().map(|o| o.model_calls).sum();
+        println!(
+            "{:<14} {:>6} cancel@{cancel_block}: cancelled {} of {}, \
+             steps {}, calls {}",
+            m.name(),
+            bs,
+            cancelled,
+            outcomes.len(),
+            total_steps,
+            total_calls
+        );
+        results.push(Json::obj(vec![
+            ("method", Json::str(m.name())),
+            ("batch", Json::num(bs as f64)),
+            ("cancel_at_block", Json::num(cancel_block as f64)),
+            ("cancelled_lanes", Json::num(cancelled as f64)),
+            ("requests", Json::num(outcomes.len() as f64)),
+            ("tokens", Json::num(tokens as f64)),
+            ("total_steps", Json::num(total_steps as f64)),
+            ("total_model_calls", Json::num(total_calls as f64)),
+        ]));
+    }
     let doc = Json::obj(vec![
         ("schema", Json::str("cdlm.bench.decode/v1")),
         ("backend", Json::str(core.rt.backend_name())),
@@ -358,23 +424,18 @@ fn drive_trace(
 ) -> anyhow::Result<(Vec<cdlm::coordinator::GenerateResponse>, f64, Json)> {
     let router = Router::start(artifacts_dir(), cfg)?;
     let t0 = Instant::now();
-    let mut receivers = Vec::with_capacity(prompts.len());
+    let mut handles = Vec::with_capacity(prompts.len());
     for p in prompts {
-        receivers.push(router.submit(GenerateRequest {
-            backbone: backbone.to_string(),
+        handles.push(router.submit(GenerateRequest::new(
+            backbone,
             method,
-            prompt_ids: p.clone(),
-            tau_conf: None,
-        })?);
+            p.clone(),
+        ))?);
         std::thread::sleep(arrival);
     }
-    let mut responses = Vec::with_capacity(receivers.len());
-    for rx in receivers {
-        responses.push(
-            rx.recv()
-                .map_err(|_| anyhow::anyhow!("worker dropped a request"))?
-                .map_err(|e| anyhow::anyhow!("{e}"))?,
-        );
+    let mut responses = Vec::with_capacity(handles.len());
+    for h in handles {
+        responses.push(h.wait().map_err(|e| anyhow::anyhow!("{e}"))?);
     }
     let wall_s = t0.elapsed().as_secs_f64();
     let health = router.health()?;
@@ -660,6 +721,223 @@ fn cmd_bench_prefix(args: &Args) -> anyhow::Result<()> {
         ("prefill_calls_saved", Json::num(saved as f64)),
         ("warm_hits", Json::num(warm_hits)),
         ("modes", Json::Arr(modes)),
+    ]);
+    std::fs::write(&out_path, doc.to_string())?;
+    println!("results -> {out_path}");
+    Ok(())
+}
+
+/// What one streaming client observed: event timings plus — for
+/// cancelled requests — the work the server reported wasted.
+#[derive(Default)]
+struct StreamProbe {
+    ttfb_ms: Option<f64>,
+    gaps_ms: Vec<f64>,
+    finished: bool,
+    aborted: bool,
+    wasted_steps: u64,
+    wasted_calls: u64,
+    wasted_tokens: u64,
+}
+
+/// Drain one request's event pipeline, recording time-to-first-block
+/// and inter-block gaps; with `cancel_after` set, cancel the request
+/// after that many block deltas and capture the terminal abort's
+/// wasted-work accounting.
+fn consume_stream(
+    handle: &cdlm::coordinator::ResponseHandle,
+    submitted: Instant,
+    cancel_after: Option<usize>,
+) -> StreamProbe {
+    use cdlm::coordinator::LaneEvent;
+    let mut probe = StreamProbe::default();
+    let mut deltas = 0usize;
+    let mut last_delta: Option<Instant> = None;
+    while let Some(ev) = handle.next_event() {
+        match ev {
+            LaneEvent::Admitted => {}
+            LaneEvent::Committed { .. } => {
+                let now = Instant::now();
+                if probe.ttfb_ms.is_none() {
+                    probe.ttfb_ms =
+                        Some((now - submitted).as_secs_f64() * 1e3);
+                }
+                if let Some(prev) = last_delta {
+                    probe.gaps_ms.push((now - prev).as_secs_f64() * 1e3);
+                }
+                last_delta = Some(now);
+                deltas += 1;
+                if cancel_after.is_some_and(|k| deltas >= k) {
+                    handle.cancel();
+                }
+            }
+            LaneEvent::Finished(_) => {
+                probe.finished = true;
+                break;
+            }
+            LaneEvent::Aborted {
+                steps,
+                model_calls,
+                committed_tokens,
+                ..
+            } => {
+                probe.aborted = true;
+                probe.wasted_steps = steps;
+                probe.wasted_calls = model_calls;
+                probe.wasted_tokens = committed_tokens as u64;
+                break;
+            }
+        }
+    }
+    probe
+}
+
+/// Streaming bench: an open-loop arrival trace of streaming clients
+/// against the continuous router. Headline numbers are
+/// **time-to-first-block** (submit -> first `Committed` event — what a
+/// streaming user actually waits for, a block instead of the whole
+/// response) and the **inter-block gap** percentiles; every
+/// `--cancel-every`-th client cancels after `--cancel-after-blocks`
+/// deltas, and the bench records how much work those cancelled lanes
+/// wasted (the number end-to-end cancellation exists to keep small).
+/// Schema `cdlm.bench.stream/v1`, run as a CI smoke with an artifact.
+fn cmd_bench_stream(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 16);
+    let arrival =
+        Duration::from_millis(args.get_usize("arrival-ms", 2) as u64);
+    let max_batch = args.get_usize("max-batch", 4);
+    let cancel_every = args.get_usize("cancel-every", 4);
+    let cancel_after = args.get_usize("cancel-after-blocks", 1);
+    let backbone = args.get_or("backbone", "dream").to_string();
+    let out_path = args.get_or("out", "BENCH_stream.json").to_string();
+    let method = Method::from_name(args.get_or("method", "cdlm"))
+        .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
+
+    let probe_core = ServingCore::load(&artifacts_dir(), 1)?;
+    let geom = probe_core.rt.manifest.geometry.clone();
+    let samples = workload::generate(Family::ChainArith, n, 0xE7A1);
+    let prompts: Vec<Vec<i32>> = samples
+        .iter()
+        .map(|s| {
+            workload::encode_example(
+                &probe_core.tokenizer,
+                Family::ChainArith,
+                s,
+                geom.prompt_len,
+                geom.gen_len,
+            )
+            .map(|e| e.prompt_ids)
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let backend = probe_core.rt.backend_name();
+    drop(probe_core);
+
+    let router = Router::start(
+        artifacts_dir(),
+        RouterConfig {
+            max_batch,
+            max_queue: n.max(256),
+            ..RouterConfig::default()
+        },
+    )?;
+    let t0 = Instant::now();
+    let mut consumers = Vec::with_capacity(n);
+    for (i, p) in prompts.iter().enumerate() {
+        let victim = cancel_every > 0 && (i + 1) % cancel_every == 0;
+        let submitted = Instant::now();
+        let handle = router.submit(GenerateRequest::new(
+            backbone.as_str(),
+            method,
+            p.clone(),
+        ))?;
+        consumers.push(std::thread::spawn(move || {
+            consume_stream(
+                &handle,
+                submitted,
+                victim.then_some(cancel_after),
+            )
+        }));
+        std::thread::sleep(arrival);
+    }
+    let probes: Vec<StreamProbe> = consumers
+        .into_iter()
+        .map(|c| c.join().expect("stream consumer panicked"))
+        .collect();
+    let wall_s = t0.elapsed().as_secs_f64();
+    let health = router.health()?;
+    router.shutdown();
+
+    let mut ttfb = Summary::new();
+    let mut gaps = Summary::new();
+    let (mut completed, mut cancelled) = (0usize, 0usize);
+    let mut wasted_tokens = Summary::new();
+    let mut wasted_steps = Summary::new();
+    let mut wasted_calls = Summary::new();
+    for p in &probes {
+        if let Some(t) = p.ttfb_ms {
+            ttfb.push(t);
+        }
+        for &g in &p.gaps_ms {
+            gaps.push(g);
+        }
+        completed += usize::from(p.finished);
+        if p.aborted {
+            cancelled += 1;
+            wasted_tokens.push(p.wasted_tokens as f64);
+            wasted_steps.push(p.wasted_steps as f64);
+            wasted_calls.push(p.wasted_calls as f64);
+        }
+    }
+    anyhow::ensure!(
+        completed + cancelled == n,
+        "every stream must end in exactly one terminal event \
+         ({completed} finished + {cancelled} aborted != {n})"
+    );
+    let stat = |k: &str| health.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    println!(
+        "streamed {n} requests: ttfb p50 {:.2} ms / p95 {:.2} ms, \
+         inter-block gap p50 {:.2} ms / p95 {:.2} ms",
+        ttfb.percentile(50.0),
+        ttfb.percentile(95.0),
+        gaps.percentile(50.0),
+        gaps.percentile(95.0),
+    );
+    println!(
+        "cancelled {cancelled} (every {cancel_every}th after \
+         {cancel_after} block(s)): mean wasted tokens {:.1}, steps {:.1}, \
+         model calls {:.1}",
+        wasted_tokens.mean(),
+        wasted_steps.mean(),
+        wasted_calls.mean(),
+    );
+    let doc = Json::obj(vec![
+        ("schema", Json::str("cdlm.bench.stream/v1")),
+        ("backend", Json::str(backend)),
+        ("backbone", Json::str(backbone.as_str())),
+        ("method", Json::str(method.name())),
+        ("n", Json::num(n as f64)),
+        ("arrival_ms", Json::num(arrival.as_millis() as f64)),
+        ("max_batch", Json::num(max_batch as f64)),
+        ("gen_len", Json::num(geom.gen_len as f64)),
+        ("block_size", Json::num(geom.block_size as f64)),
+        ("cancel_every", Json::num(cancel_every as f64)),
+        ("cancel_after_blocks", Json::num(cancel_after as f64)),
+        ("completed", Json::num(completed as f64)),
+        ("cancelled", Json::num(cancelled as f64)),
+        ("ttfb_p50_ms", Json::num(ttfb.percentile(50.0))),
+        ("ttfb_p95_ms", Json::num(ttfb.percentile(95.0))),
+        ("ttfb_mean_ms", Json::num(ttfb.mean())),
+        ("gap_p50_ms", Json::num(gaps.percentile(50.0))),
+        ("gap_p95_ms", Json::num(gaps.percentile(95.0))),
+        ("wasted_tokens_per_cancel", Json::num(wasted_tokens.mean())),
+        ("wasted_steps_per_cancel", Json::num(wasted_steps.mean())),
+        (
+            "wasted_model_calls_per_cancel",
+            Json::num(wasted_calls.mean()),
+        ),
+        ("aborted_inflight", Json::num(stat("aborted_inflight"))),
+        ("aborted_queued", Json::num(stat("aborted_queued"))),
+        ("wall_s", Json::num(wall_s)),
     ]);
     std::fs::write(&out_path, doc.to_string())?;
     println!("results -> {out_path}");

@@ -1,23 +1,37 @@
 //! HTTP/1.1 API over std::net — one handler thread per connection.
 //! Handlers never touch XLA state: they tokenize, submit to the router
-//! (whose worker thread owns the PJRT runtime), and wait on a channel.
+//! (whose worker thread owns the PJRT runtime), and relay lane events.
 //!
 //!   POST /generate   {"prompt": str, "backbone": str?, "method": str?,
-//!                     "tau_conf": num?} -> text + §A.3 counters +
-//!                     ttft_ms/ttlt_ms (queueing included)
-//!   GET  /metrics    per-(backbone, method) §A.3 aggregates
+//!                     "tau_conf": num?, "timeout_ms": num?,
+//!                     "max_new_tokens": num?, "stream": bool?}
+//!                    -> text + §A.3 counters + ttft_ms/ttlt_ms
+//!                    (queueing included); with "stream": true the
+//!                    response is chunked NDJSON, one lane event per
+//!                    line (see rust/README.md "The streaming wire
+//!                    protocol")
+//!   GET  /metrics    per-(backbone, method) §A.3 aggregates + wasted
+//!                    work of aborted lanes
 //!   GET  /healthz    liveness + platform info + continuous-batching
 //!                    state (in_flight_lanes, active_batches,
-//!                    total/mid-flight admissions, retired_early)
+//!                    total/mid-flight admissions, retired_early,
+//!                    aborted_queued/aborted_inflight)
+//!
+//! Streaming cancellation: every chunk write runs under the socket's
+//! `io_timeout`; a failed or timed-out write marks the client gone,
+//! cancels the lane through the request handle, and the worker frees
+//! its KV slot + prefix-chain pin at the next block boundary.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::{GenerateRequest, Method, Router};
+use crate::coordinator::{
+    GenerateRequest, LaneEvent, Method, ResponseHandle, Router,
+};
 use crate::tokenizer::{Tokenizer, BOS, PAD};
 use crate::util::json::Json;
 use crate::workload;
@@ -121,6 +135,7 @@ fn respond(stream: &mut TcpStream, status: u16, body: &str) {
         400 => "Bad Request",
         404 => "Not Found",
         429 => "Too Many Requests",
+        504 => "Gateway Timeout",
         _ => "Internal Server Error",
     };
     let _ = write!(
@@ -148,18 +163,17 @@ pub fn encode_user_prompt(
     Ok(out)
 }
 
-fn handle_generate(
+/// Parse a `/generate` body into a router request plus the stream flag.
+fn parse_generate(
     tok: &Tokenizer,
     router: &Router,
     default_backbone: &str,
     body: &str,
-) -> (u16, String) {
-    let req = match Json::parse(body) {
-        Ok(j) => j,
-        Err(e) => return (400, err_json(&format!("bad json: {e}"))),
-    };
+) -> Result<(GenerateRequest, bool), (u16, String)> {
+    let req = Json::parse(body)
+        .map_err(|e| (400, err_json(&format!("bad json: {e}"))))?;
     let Some(prompt) = req.get("prompt").and_then(Json::as_str) else {
-        return (400, err_json("missing 'prompt'"));
+        return Err((400, err_json("missing 'prompt'")));
     };
     let backbone = req
         .get("backbone")
@@ -168,47 +182,187 @@ fn handle_generate(
         .to_string();
     let method = match req.get("method").and_then(Json::as_str) {
         None => Method::Cdlm,
-        Some(m) => match Method::from_name(m) {
-            Some(m) => m,
-            None => return (400, err_json(&format!("unknown method '{m}'"))),
-        },
+        Some(m) => Method::from_name(m).ok_or_else(|| {
+            (400, err_json(&format!("unknown method '{m}'")))
+        })?,
     };
     let prompt_ids =
-        match encode_user_prompt(tok, prompt, router.geometry.prompt_len) {
-            Ok(ids) => ids,
-            Err(e) => return (400, err_json(&format!("{e:#}"))),
-        };
-    let tau_conf = req.get("tau_conf").and_then(Json::as_f64).map(|f| f as f32);
-    let rx = match router.submit(GenerateRequest {
-        backbone,
-        method,
-        prompt_ids,
-        tau_conf,
-    }) {
-        Ok(rx) => rx,
-        Err(e) => return (429, err_json(&format!("{e:#}"))),
-    };
-    match rx.recv() {
-        Ok(Ok(resp)) => {
-            let final_answer = workload::extract_final(&resp.text)
-                .map(Json::str)
-                .unwrap_or(Json::Null);
-            let j = Json::obj(vec![
-                ("text", Json::str(resp.text.clone())),
-                ("final", final_answer),
-                ("steps", Json::num(resp.steps as f64)),
-                ("model_calls", Json::num(resp.model_calls as f64)),
-                ("gen_len", Json::num(resp.gen_len as f64)),
-                ("latency_ms", Json::num(resp.latency.as_secs_f64() * 1e3)),
-                ("ttft_ms", Json::num(resp.ttft.as_secs_f64() * 1e3)),
-                ("ttlt_ms", Json::num(resp.ttlt.as_secs_f64() * 1e3)),
-                ("method", Json::str(method.name())),
-            ]);
+        encode_user_prompt(tok, prompt, router.geometry.prompt_len)
+            .map_err(|e| (400, err_json(&format!("{e:#}"))))?;
+    let tau_conf =
+        req.get("tau_conf").and_then(Json::as_f64).map(|f| f as f32);
+    let timeout = req
+        .get("timeout_ms")
+        .and_then(Json::as_f64)
+        .filter(|&ms| ms > 0.0 && ms.is_finite())
+        // f64 seconds, not `as u64` millis: a sub-millisecond budget
+        // must stay a real (tiny) budget, not truncate to
+        // already-expired
+        .map(|ms| Duration::from_secs_f64(ms / 1e3));
+    let max_new_tokens = req
+        .get("max_new_tokens")
+        .and_then(Json::as_usize)
+        .filter(|&n| n > 0);
+    let stream =
+        req.get("stream").and_then(Json::as_bool).unwrap_or(false);
+    Ok((
+        GenerateRequest {
+            backbone,
+            method,
+            prompt_ids,
+            tau_conf,
+            timeout,
+            max_new_tokens,
+        },
+        stream,
+    ))
+}
+
+/// The terminal JSON object shared by the one-shot response body and
+/// the streamed `finished` event. `ttft_ms` is overridable: a streaming
+/// client's observed TTFT is the first delta chunk actually written to
+/// its socket, not the worker-side first-token stamp.
+fn finished_json(
+    resp: &crate::coordinator::GenerateResponse,
+    method: Method,
+    ttft_ms: f64,
+) -> Vec<(&'static str, Json)> {
+    let final_answer = workload::extract_final(&resp.text)
+        .map(Json::str)
+        .unwrap_or(Json::Null);
+    vec![
+        ("text", Json::str(resp.text.clone())),
+        ("final", final_answer),
+        ("steps", Json::num(resp.steps as f64)),
+        ("model_calls", Json::num(resp.model_calls as f64)),
+        ("gen_len", Json::num(resp.gen_len as f64)),
+        ("latency_ms", Json::num(resp.latency.as_secs_f64() * 1e3)),
+        ("ttft_ms", Json::num(ttft_ms)),
+        ("ttlt_ms", Json::num(resp.ttlt.as_secs_f64() * 1e3)),
+        ("method", Json::str(method.name())),
+    ]
+}
+
+/// One-shot `/generate`: drain the event pipeline to its terminal
+/// event. An aborted deadline maps to 504 so clients can tell a budget
+/// expiry from a server fault.
+fn handle_generate(
+    handle: &ResponseHandle,
+    method: Method,
+) -> (u16, String) {
+    match handle.wait() {
+        Ok(resp) => {
+            let j = Json::obj(finished_json(
+                &resp,
+                method,
+                resp.ttft.as_secs_f64() * 1e3,
+            ));
             (200, j.to_string())
         }
-        Ok(Err(e)) => (500, err_json(&e)),
-        Err(_) => (500, err_json("worker dropped the request")),
+        Err(reason) if reason.contains("deadline") => {
+            (504, err_json(&reason))
+        }
+        Err(reason) => (500, err_json(&reason)),
     }
+}
+
+/// Write one chunked-transfer chunk (a single NDJSON event line).
+fn write_chunk(stream: &mut TcpStream, line: &str) -> std::io::Result<()> {
+    // each event is one chunk: "<hex len>\r\n<json>\n\r\n"
+    write!(stream, "{:x}\r\n{line}\n\r\n", line.len() + 1)?;
+    stream.flush()
+}
+
+/// Streaming `/generate` (`"stream": true`): chunked transfer, one
+/// JSON event per line, written as each lane event arrives —
+/// `admitted`, `delta` per finalized block, then exactly one terminal
+/// `finished`/`aborted` line followed by the chunked-transfer
+/// terminator. A failed chunk write (disconnect, or a peer stalled past
+/// `io_timeout` — the per-chunk write budget) cancels the lane so the
+/// worker reclaims its KV at the next block boundary.
+fn handle_generate_stream(
+    stream: &mut TcpStream,
+    handle: &ResponseHandle,
+    method: Method,
+    arrived: Instant,
+) {
+    let header = "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\n\
+                  Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n";
+    if stream.write_all(header.as_bytes()).is_err() {
+        handle.cancel();
+        return;
+    }
+    let mut first_delta: Option<Instant> = None;
+    loop {
+        let Some(event) = handle.next_event() else {
+            // worker died without a terminal event
+            let line = Json::obj(vec![
+                ("event", Json::str("aborted")),
+                ("reason", Json::str("worker dropped the request")),
+            ])
+            .to_string();
+            let _ = write_chunk(stream, &line);
+            break;
+        };
+        let is_delta = matches!(&event, LaneEvent::Committed { .. });
+        let (line, terminal) = match event {
+            LaneEvent::Admitted => (
+                Json::obj(vec![("event", Json::str("admitted"))])
+                    .to_string(),
+                false,
+            ),
+            LaneEvent::Committed { block, text, tokens } => (
+                Json::obj(vec![
+                    ("event", Json::str("delta")),
+                    ("block", Json::num(block as f64)),
+                    ("text", Json::str(text)),
+                    ("tokens", Json::num(tokens as f64)),
+                ])
+                .to_string(),
+                false,
+            ),
+            LaneEvent::Finished(resp) => {
+                // satellite fix: a streamed client's TTFT is the first
+                // delta chunk it actually received, not the worker-side
+                // first-token stamp (which ignores socket delivery)
+                let ttft_ms = first_delta
+                    .map(|t| (t - arrived).as_secs_f64() * 1e3)
+                    .unwrap_or(resp.ttft.as_secs_f64() * 1e3);
+                let mut fields = vec![("event", Json::str("finished"))];
+                fields.extend(finished_json(&resp, method, ttft_ms));
+                (Json::obj(fields).to_string(), true)
+            }
+            LaneEvent::Aborted { reason, steps, model_calls, committed_tokens } => (
+                Json::obj(vec![
+                    ("event", Json::str("aborted")),
+                    ("reason", Json::str(reason)),
+                    ("steps", Json::num(steps as f64)),
+                    ("model_calls", Json::num(model_calls as f64)),
+                    (
+                        "committed_tokens",
+                        Json::num(committed_tokens as f64),
+                    ),
+                ])
+                .to_string(),
+                true,
+            ),
+        };
+        if write_chunk(stream, &line).is_err() {
+            // client gone: cancel the lane and stop relaying. The
+            // dropped handle double-covers this (Committed sends fail),
+            // but the explicit cancel reacts one block sooner.
+            handle.cancel();
+            return;
+        }
+        if is_delta && first_delta.is_none() {
+            first_delta = Some(Instant::now());
+        }
+        if terminal {
+            break;
+        }
+    }
+    // chunked-transfer terminator
+    let _ = stream.write_all(b"0\r\n\r\n");
 }
 
 /// Serve until the process is killed.
@@ -255,7 +409,30 @@ pub fn serve_on(
                 };
             let (status, body) = match (method.as_str(), path.as_str()) {
                 ("POST", "/generate") => {
-                    handle_generate(&tok, &router, &backbone, &body)
+                    let arrived = Instant::now();
+                    match parse_generate(&tok, &router, &backbone, &body) {
+                        Err((status, body)) => (status, body),
+                        Ok((req, stream_mode)) => {
+                            let gen_method = req.method;
+                            match router.submit(req) {
+                                Err(e) => (429, err_json(&format!("{e:#}"))),
+                                Ok(handle) if stream_mode => {
+                                    // the chunked event relay owns the
+                                    // socket from here on
+                                    handle_generate_stream(
+                                        &mut stream,
+                                        &handle,
+                                        gen_method,
+                                        arrived,
+                                    );
+                                    return;
+                                }
+                                Ok(handle) => {
+                                    handle_generate(&handle, gen_method)
+                                }
+                            }
+                        }
+                    }
                 }
                 ("GET", "/metrics") => match router.metrics() {
                     Ok(j) => (200, j.to_string()),

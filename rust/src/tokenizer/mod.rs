@@ -65,11 +65,43 @@ impl Tokenizer {
     }
 
     /// Decode ids, dropping specials; stops at the first `<eos>` when
-    /// `stop_at_eos` (paper §A.3 generation-length accounting).
+    /// `stop_at_eos` (paper §A.3 generation-length accounting). The
+    /// `stop_at_eos` form IS one [`Tokenizer::decode_stream`] call over
+    /// a fresh [`StreamDecoder`], so the streamed-deltas-equal-one-shot
+    /// contract holds by construction, not by parallel maintenance.
     pub fn decode(&self, ids: &[i32], stop_at_eos: bool) -> String {
+        if stop_at_eos {
+            return self.decode_stream(&mut StreamDecoder::new(), ids);
+        }
         let mut out = String::new();
         for &i in ids {
-            if i == EOS && stop_at_eos {
+            if (0..=3).contains(&i) {
+                continue;
+            }
+            if let Some(Some(c)) = self.id_to_tok.get(i as usize) {
+                out.push(*c);
+            } else {
+                out.push('?');
+            }
+        }
+        out
+    }
+
+    /// Incrementally decode the next run of a streamed sequence.
+    /// Equivalent to `decode(all_ids, true)` over the concatenation of
+    /// every run fed so far: specials are dropped and the first `<eos>`
+    /// terminates the stream, across run boundaries (a run after the
+    /// `<eos>` run decodes to the empty string). The streaming serving
+    /// path relies on this equivalence — `tests/streaming.rs` pins the
+    /// concatenated deltas byte-identical to the one-shot decode.
+    pub fn decode_stream(&self, st: &mut StreamDecoder, ids: &[i32]) -> String {
+        if st.done {
+            return String::new();
+        }
+        let mut out = String::new();
+        for &i in ids {
+            if i == EOS {
+                st.done = true;
                 break;
             }
             if (0..=3).contains(&i) {
@@ -108,6 +140,26 @@ impl Tokenizer {
             );
         }
         Ok(())
+    }
+}
+
+/// Per-request incremental detokenizer state: carries the "saw
+/// `<eos>`" bit across block-delta runs so a stream of
+/// [`Tokenizer::decode_stream`] calls reproduces the one-shot
+/// `decode(ids, true)` exactly, however the id sequence is split.
+#[derive(Debug, Clone, Default)]
+pub struct StreamDecoder {
+    done: bool,
+}
+
+impl StreamDecoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// True once an `<eos>` has been fed: every later run decodes to "".
+    pub fn finished(&self) -> bool {
+        self.done
     }
 }
 
@@ -152,6 +204,29 @@ mod tests {
     #[test]
     fn unknown_char_errors() {
         assert!(Tokenizer::new().encode("A").is_err());
+    }
+
+    #[test]
+    fn stream_decode_matches_one_shot_for_any_split() {
+        let t = Tokenizer::new();
+        let mut ids = t.encode("#17").unwrap();
+        ids.push(EOS);
+        ids.extend(t.encode("junk").unwrap());
+        ids.push(MASK);
+        let want = t.decode(&ids, true);
+        // every two-way split point, including before/after the eos
+        for cut in 0..=ids.len() {
+            let mut st = StreamDecoder::new();
+            let mut got = t.decode_stream(&mut st, &ids[..cut]);
+            got.push_str(&t.decode_stream(&mut st, &ids[cut..]));
+            assert_eq!(got, want, "split at {cut}");
+        }
+        // and one token at a time
+        let mut st = StreamDecoder::new();
+        let got: String =
+            ids.iter().map(|&i| t.decode_stream(&mut st, &[i])).collect();
+        assert_eq!(got, want);
+        assert!(st.finished());
     }
 
     #[test]

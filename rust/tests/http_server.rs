@@ -1,5 +1,8 @@
 //! HTTP front-end robustness: socket timeouts must keep idle and
-//! slow-loris connections from pinning the bounded handler pool.
+//! slow-loris connections from pinning the bounded handler pool, and
+//! the `"stream": true` chunked NDJSON wire protocol must deliver
+//! deltas whose concatenation is byte-identical to the one-shot
+//! response.
 //!
 //! Runs hermetically on the reference backend; the server is started on
 //! an ephemeral port via `serve_on`.
@@ -11,6 +14,7 @@ use std::time::{Duration, Instant};
 use cdlm::coordinator::router::RouterConfig;
 use cdlm::coordinator::Router;
 use cdlm::server::{self, http::ServerConfig};
+use cdlm::util::json::Json;
 
 fn start_server(io_timeout: Duration) -> SocketAddr {
     let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral");
@@ -47,6 +51,135 @@ fn http_get(addr: SocketAddr, path: &str) -> String {
     let mut out = String::new();
     let _ = s.read_to_string(&mut out);
     out
+}
+
+fn http_post(addr: SocketAddr, path: &str, body: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    write!(
+        s,
+        "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("request written");
+    let mut out = String::new();
+    let _ = s.read_to_string(&mut out);
+    out
+}
+
+fn body_of(resp: &str) -> &str {
+    resp.split("\r\n\r\n").nth(1).unwrap_or("")
+}
+
+/// Decode a chunked-transfer body into its payload bytes.
+fn dechunk(mut body: &str) -> String {
+    let mut out = String::new();
+    loop {
+        let Some((len_line, rest)) = body.split_once("\r\n") else { break };
+        let len =
+            usize::from_str_radix(len_line.trim(), 16).expect("chunk length");
+        if len == 0 {
+            break;
+        }
+        out.push_str(&rest[..len]);
+        // skip the chunk payload and its trailing CRLF
+        body = &rest[len + 2..];
+    }
+    out
+}
+
+#[test]
+fn streamed_deltas_match_the_one_shot_response_over_the_wire() {
+    let addr = start_server(Duration::from_secs(30));
+    let req = r#"{"prompt": "q:3*4+5=?", "method": "cdlm"}"#;
+    let one_shot = http_post(addr, "/generate", req);
+    assert!(one_shot.starts_with("HTTP/1.1 200"), "{one_shot:?}");
+    let one_shot = Json::parse(body_of(&one_shot)).expect("response json");
+    let want_text =
+        one_shot.get("text").and_then(Json::as_str).expect("text");
+
+    let streamed = http_post(
+        addr,
+        "/generate",
+        r#"{"prompt": "q:3*4+5=?", "method": "cdlm", "stream": true}"#,
+    );
+    assert!(streamed.starts_with("HTTP/1.1 200"), "{streamed:?}");
+    assert!(
+        streamed.contains("Transfer-Encoding: chunked"),
+        "{streamed:?}"
+    );
+    assert!(
+        streamed.contains("application/x-ndjson"),
+        "{streamed:?}"
+    );
+    let payload = dechunk(body_of(&streamed));
+    let events: Vec<Json> = payload
+        .lines()
+        .map(|l| Json::parse(l).expect("event line json"))
+        .collect();
+    assert!(events.len() >= 3, "admitted + >=1 delta + terminal");
+    let kind = |e: &Json| {
+        e.get("event").and_then(Json::as_str).unwrap_or("").to_string()
+    };
+    assert_eq!(kind(&events[0]), "admitted");
+    let mut concat = String::new();
+    let mut deltas = 0;
+    for e in &events[..events.len() - 1] {
+        if kind(e) == "delta" {
+            concat.push_str(e.get("text").and_then(Json::as_str).unwrap());
+            deltas += 1;
+        }
+    }
+    assert!(deltas >= 1, "at least one block delta");
+    let last = events.last().unwrap();
+    assert_eq!(
+        kind(last),
+        "finished",
+        "exactly one terminal event, last: {last}"
+    );
+    assert_eq!(
+        concat,
+        want_text,
+        "concatenated deltas must equal the one-shot text"
+    );
+    assert_eq!(
+        last.get("text").and_then(Json::as_str),
+        Some(want_text),
+        "terminal event carries the full text"
+    );
+    assert!(
+        last.get("ttft_ms").and_then(Json::as_f64).is_some(),
+        "terminal event carries the socket-observed TTFT"
+    );
+}
+
+#[test]
+fn streamed_deadline_abort_is_a_terminal_event_line() {
+    let addr = start_server(Duration::from_secs(30));
+    // a microscopic (250us) deadline: the request almost certainly
+    // expires before admission and must die with a terminal `aborted`
+    // line on the stream, not a dropped connection
+    let streamed = http_post(
+        addr,
+        "/generate",
+        r#"{"prompt": "q:1+1=?", "method": "cdlm", "stream": true,
+            "timeout_ms": 0.25}"#,
+    );
+    assert!(streamed.starts_with("HTTP/1.1 200"), "{streamed:?}");
+    let payload = dechunk(body_of(&streamed));
+    let last = payload
+        .lines()
+        .last()
+        .map(|l| Json::parse(l).expect("event json"))
+        .expect("at least one event line");
+    let kind = last.get("event").and_then(Json::as_str).unwrap_or("");
+    // the request usually expires in the queue, but a fast worker can
+    // still finish it first — both are legal terminal events
+    assert!(
+        kind == "aborted" || kind == "finished",
+        "missing terminal event: {last}"
+    );
 }
 
 #[test]

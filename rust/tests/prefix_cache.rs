@@ -308,16 +308,17 @@ fn router_repeated_prompts_hit_and_report_on_healthz() {
     .expect("router starts");
     let tok = Tokenizer::new();
     let s = workload::generate(Family::ChainArith, 1, 99).pop().unwrap();
-    let req = || GenerateRequest {
-        backbone: "dream".into(),
-        method: Method::Cdlm,
-        prompt_ids: encode_user_prompt(&tok, &s.prompt, 64).unwrap(),
-        tau_conf: None,
+    let req = || {
+        GenerateRequest::new(
+            "dream",
+            Method::Cdlm,
+            encode_user_prompt(&tok, &s.prompt, 64).unwrap(),
+        )
     };
     // sequential round trips: the second arrival admits against the
     // retained machine's warm chain
-    let cold = router.submit(req()).unwrap().recv().unwrap().unwrap();
-    let warm = router.submit(req()).unwrap().recv().unwrap().unwrap();
+    let cold = router.submit(req()).unwrap().wait().unwrap();
+    let warm = router.submit(req()).unwrap().wait().unwrap();
     assert_eq!(warm.gen_ids, cold.gen_ids, "warm response text identical");
     assert_eq!(warm.steps, cold.steps);
     assert_eq!(

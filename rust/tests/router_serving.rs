@@ -29,19 +29,18 @@ fn start_router() -> Router {
 fn valid_request(method: Method) -> GenerateRequest {
     let tok = Tokenizer::new();
     let s = workload::generate(Family::ListOp, 1, 77).pop().unwrap();
-    GenerateRequest {
-        backbone: "dream".into(),
+    GenerateRequest::new(
+        "dream",
         method,
-        prompt_ids: encode_user_prompt(&tok, &s.prompt, 64).unwrap(),
-        tau_conf: None,
-    }
+        encode_user_prompt(&tok, &s.prompt, 64).unwrap(),
+    )
 }
 
 #[test]
 fn request_roundtrip_through_worker() {
     let router = start_router();
-    let rx = router.submit(valid_request(Method::Cdlm)).unwrap();
-    let resp = rx.recv().unwrap().expect("decode ok");
+    let handle = router.submit(valid_request(Method::Cdlm)).unwrap();
+    let resp = handle.wait().expect("decode ok");
     assert!(resp.steps >= 1);
     assert!(resp.gen_len <= router.geometry.gen_len);
     assert!(!resp.gen_ids.is_empty());
@@ -51,12 +50,12 @@ fn request_roundtrip_through_worker() {
 #[test]
 fn concurrent_requests_are_batched() {
     let router = start_router();
-    let receivers: Vec<_> = (0..4)
+    let handles: Vec<_> = (0..4)
         .map(|_| router.submit(valid_request(Method::Cdlm)).unwrap())
         .collect();
     let mut ok = 0;
-    for rx in receivers {
-        if rx.recv().unwrap().is_ok() {
+    for h in handles {
+        if h.wait().is_ok() {
             ok += 1;
         }
     }
@@ -102,6 +101,8 @@ fn health_reports_worker_state() {
         "total_admissions",
         "mid_flight_admissions",
         "retired_early",
+        "aborted_queued",
+        "aborted_inflight",
     ] {
         assert!(h.get(k).and_then(|v| v.as_f64()).is_some(), "missing {k}");
     }
@@ -128,7 +129,7 @@ fn request_admitted_mid_decode_completes() {
         },
     )
     .expect("router starts");
-    let rx_a = router.submit(valid_request(Method::Vanilla)).unwrap();
+    let handle_a = router.submit(valid_request(Method::Vanilla)).unwrap();
     // wait until A's batch is actually in flight
     let deadline = std::time::Instant::now() + Duration::from_secs(5);
     loop {
@@ -143,9 +144,9 @@ fn request_admitted_mid_decode_completes() {
         );
         std::thread::sleep(Duration::from_millis(1));
     }
-    let rx_b = router.submit(valid_request(Method::Vanilla)).unwrap();
-    let resp_b = rx_b.recv().unwrap().expect("mid-decode admission decodes");
-    let resp_a = rx_a.recv().unwrap().expect("in-flight lane unaffected");
+    let handle_b = router.submit(valid_request(Method::Vanilla)).unwrap();
+    let resp_b = handle_b.wait().expect("mid-decode admission decodes");
+    let resp_a = handle_a.wait().expect("in-flight lane unaffected");
     assert!(resp_a.gen_len <= router.geometry.gen_len);
     assert!(resp_b.gen_len <= router.geometry.gen_len);
     let h = router.health().unwrap();
@@ -163,14 +164,20 @@ fn request_admitted_mid_decode_completes() {
 }
 
 #[test]
-fn shutdown_drains_pending_requests() {
+fn shutdown_delivers_terminal_events() {
+    // satellite: shutdown must never answer a request by silently
+    // dropping its channel — every request still in the system gets a
+    // terminal event. A request may win the race and finish normally;
+    // one caught by the drain gets Aborted{reason: "shutdown"}.
     let router = start_router();
-    // enqueue one request and shut down immediately: the worker must
-    // still answer it (pop_any drain on shutdown)
-    let rx = router.submit(valid_request(Method::Ar)).unwrap();
+    let handle = router.submit(valid_request(Method::Ar)).unwrap();
     router.shutdown();
-    let resp = rx.recv().expect("response channel intact");
-    assert!(resp.is_ok(), "pending request dropped on shutdown");
+    match handle.wait() {
+        Ok(resp) => assert!(resp.steps >= 1, "finished before the drain"),
+        Err(reason) => {
+            assert!(reason.contains("shutdown"), "unexpected abort: {reason}")
+        }
+    }
 }
 
 #[test]
@@ -178,8 +185,8 @@ fn tau_override_travels_with_request() {
     let router = start_router();
     let mut req = valid_request(Method::Cdlm);
     req.tau_conf = Some(0.0); // finalize whole blocks per step
-    let rx = router.submit(req).unwrap();
-    let resp = rx.recv().unwrap().unwrap();
+    let handle = router.submit(req).unwrap();
+    let resp = handle.wait().unwrap();
     // tau=0 finalizes a whole block per step: steps <= num blocks + eos
     assert!(
         resp.steps <= router.geometry.num_blocks() as u64,

@@ -1,0 +1,563 @@
+//! Lane-event pipeline invariants: streamed block deltas, end-to-end
+//! cancellation, and the KV/prefix-chain reclamation cancellation
+//! promises.
+//!
+//! Load-bearing pins:
+//!  * **byte identity** — for every method, concatenating a request's
+//!    `Committed` text deltas reproduces the non-streamed response
+//!    `text` byte-for-byte (router level), and the machine's
+//!    `CommitRun`s reproduce the closed-batch gen ids (machine level);
+//!  * **cancellation reclaims resources** — a lane cancelled at block
+//!    k frees its KV slot and unpins its prefix chain (pool accounting
+//!    returns to the warm-cache baseline);
+//!  * **isolation** — cancelling one lane mid-batch leaves the
+//!    surviving lanes' decode traces (gen ids, steps, model calls)
+//!    exactly at their solo values;
+//!  * **budget / deadline** — `max_new_tokens` truncates with a normal
+//!    `Finished`, an expired deadline aborts without ever spending a
+//!    lane, and both surface on `/healthz`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cdlm::coordinator::router::RouterConfig;
+use cdlm::coordinator::{
+    BatchState, DecodeOpts, DecodeOutcome, Engine, GenerateRequest, KvPool,
+    LaneEvent, Method, Router, ALL_METHODS,
+};
+use cdlm::runtime::{ModelWeights, Runtime};
+use cdlm::server::http::encode_user_prompt;
+use cdlm::tokenizer::{StreamDecoder, Tokenizer};
+use cdlm::workload::{self, Family};
+
+const SEED: u64 = 0x5EED_0007;
+
+fn prompts(n: usize, task_seed: u64) -> Vec<Vec<i32>> {
+    let rt = Runtime::reference(SEED);
+    let geom = rt.manifest.geometry.clone();
+    let tok = Tokenizer::new();
+    workload::generate(Family::ChainArith, n, task_seed)
+        .iter()
+        .map(|s| {
+            workload::encode_example(
+                &tok,
+                Family::ChainArith,
+                s,
+                geom.prompt_len,
+                geom.gen_len,
+            )
+            .unwrap()
+            .prompt_ids
+        })
+        .collect()
+}
+
+fn weights_for(rt: &Runtime, m: Method) -> Arc<ModelWeights> {
+    Arc::new(
+        ModelWeights::load(&rt.manifest, &m.weights_for("dream")).unwrap(),
+    )
+}
+
+fn machine(
+    rt: &Arc<Runtime>,
+    m: Method,
+    opts: &DecodeOpts,
+    capacity: usize,
+) -> BatchState {
+    BatchState::new(
+        rt.clone(),
+        weights_for(rt, m),
+        m,
+        opts.clone(),
+        capacity,
+    )
+    .unwrap()
+}
+
+fn request_for(method: Method, task_seed: u64) -> GenerateRequest {
+    let tok = Tokenizer::new();
+    let s = workload::generate(Family::ListOp, 1, task_seed).pop().unwrap();
+    GenerateRequest::new(
+        "dream",
+        method,
+        encode_user_prompt(&tok, &s.prompt, 64).unwrap(),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// (a) stream deltas are byte-identical to the one-shot text
+// ---------------------------------------------------------------------------
+
+/// Router level: for every method, drain a request's event pipeline and
+/// check `Admitted` ordering, exactly one terminal event, and the
+/// concatenated `Committed` deltas equal to the final `text`.
+#[test]
+fn stream_deltas_concatenate_to_the_response_text_for_all_methods() {
+    let router = Router::start(
+        cdlm::artifacts_dir(),
+        RouterConfig {
+            max_batch: 2,
+            max_queue: 16,
+            pool_capacity: 16,
+            ..RouterConfig::default()
+        },
+    )
+    .expect("router starts");
+    for m in ALL_METHODS {
+        let handle = router.submit(request_for(m, 77)).unwrap();
+        let mut concat = String::new();
+        let mut admitted = false;
+        let mut finished = None;
+        let mut next_block = 0usize;
+        while let Some(ev) = handle.next_event() {
+            match ev {
+                LaneEvent::Admitted => {
+                    assert!(!admitted, "{}: double Admitted", m.name());
+                    assert!(
+                        concat.is_empty() && finished.is_none(),
+                        "{}: Admitted out of order",
+                        m.name()
+                    );
+                    admitted = true;
+                }
+                LaneEvent::Committed { block, text, .. } => {
+                    assert!(admitted, "{}: delta before Admitted", m.name());
+                    assert_eq!(
+                        block,
+                        next_block,
+                        "{}: blocks out of order",
+                        m.name()
+                    );
+                    next_block += 1;
+                    concat.push_str(&text);
+                }
+                LaneEvent::Finished(resp) => {
+                    finished = Some(resp);
+                    // terminal: the channel must close without another
+                    // event
+                    assert!(
+                        handle.next_event().is_none(),
+                        "{}: event after the terminal Finished",
+                        m.name()
+                    );
+                    break;
+                }
+                LaneEvent::Aborted { reason, .. } => {
+                    panic!("{}: unexpected abort: {reason}", m.name())
+                }
+            }
+        }
+        let resp = finished.expect("terminal event");
+        assert!(next_block >= 1, "{}: no block deltas", m.name());
+        assert_eq!(
+            concat,
+            resp.text,
+            "{}: streamed deltas diverge from the one-shot text",
+            m.name()
+        );
+    }
+    router.shutdown();
+}
+
+/// Machine level: per-lane `CommitRun`s, decoded incrementally, equal
+/// the closed-batch text — and arrive in generation order.
+#[test]
+fn commit_runs_reproduce_closed_batch_text_for_all_methods() {
+    let rt = Arc::new(Runtime::reference(SEED));
+    let geom = rt.manifest.geometry.clone();
+    let opts = DecodeOpts::defaults(&geom);
+    let tok = Tokenizer::new();
+    let ps = prompts(3, 0x57EA);
+    for m in ALL_METHODS {
+        let weights = weights_for(&rt, m);
+        let engine = Engine::new(&rt, &weights);
+        let mut pool = KvPool::new(&geom, 8);
+        let closed = engine.decode_serial(m, &opts, &ps, &mut pool).unwrap();
+        let mut st = machine(&rt, m, &opts, ps.len());
+        for p in &ps {
+            st.admit(p, None).unwrap();
+        }
+        let mut streams: Vec<(StreamDecoder, String, usize)> = (0..ps.len())
+            .map(|_| (StreamDecoder::new(), String::new(), 0))
+            .collect();
+        let mut guard = 0;
+        while !st.is_empty() {
+            guard += 1;
+            assert!(guard <= 10_000, "{}: machine failed to drain", m.name());
+            for run in st.step_cycle().unwrap() {
+                let (detok, text, watermark) = &mut streams[run.lane];
+                assert_eq!(
+                    run.start, *watermark,
+                    "{}: runs must be contiguous per lane",
+                    m.name()
+                );
+                *watermark += run.tokens.len();
+                text.push_str(&tok.decode_stream(detok, &run.tokens));
+            }
+            st.take_finished();
+        }
+        for (lane, (_, text, _)) in streams.iter().enumerate() {
+            let want = tok.decode(&closed[lane].gen, true);
+            assert_eq!(
+                text, &want,
+                "{}: lane {lane} streamed text diverges",
+                m.name()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (b) cancellation frees KV slots and unpins prefix chains
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cancel_mid_decode_frees_kv_and_unpins_prefix_chain() {
+    let rt = Arc::new(Runtime::reference(SEED));
+    let geom = rt.manifest.geometry.clone();
+    let opts = DecodeOpts::defaults(&geom);
+    let ps = prompts(1, 0xCA9C);
+    let mut st = machine(&rt, Method::Cdlm, &opts, 1);
+    st.set_prefix_cache(true);
+    // warm the chain: one full decode, lane retires, chain unpinned
+    let lane = st.admit(&ps[0], None).unwrap();
+    let mut guard = 0;
+    while !st.is_empty() {
+        guard += 1;
+        assert!(guard <= 10_000);
+        st.step_cycle().unwrap();
+        st.take_finished();
+    }
+    let baseline = st
+        .prefix_chain_info(&ps[0])
+        .expect("prefill installed a chain");
+    assert_eq!(baseline.1, 0, "retired lane must leave the chain unpinned");
+    assert_eq!(st.kv_in_use(), 0);
+
+    // warm admission: chain pinned, prefill skipped
+    let lane2 = st.admit(&ps[0], None).unwrap();
+    assert_eq!(lane2, lane, "capacity-1 machine recycles the lane");
+    assert_eq!(st.prefix_hits(), 1, "warm admission must hit the chain");
+    let pinned = st.prefix_chain_info(&ps[0]).unwrap();
+    assert_eq!(pinned.0, baseline.0, "resident blocks unchanged");
+    assert_eq!(pinned.1, 1, "admission must pin the chain");
+    assert_eq!(st.kv_in_use(), 1);
+
+    // cancel at block k=1: the slot frees and the pin releases, but the
+    // chain stays resident as warm cache
+    st.step_cycle().unwrap();
+    st.take_finished();
+    let partial = st.cancel_lane(lane2);
+    let cancelled_work = match partial {
+        Some(o) => o,
+        None => {
+            // the lane may have finalized <eos> in its first block and
+            // retired naturally; rerun the pin assertions on a lane that
+            // is provably mid-decode instead
+            let l = st.admit(&ps[0], None).unwrap();
+            st.cancel_lane(l).expect("freshly admitted lane is live")
+        }
+    };
+    assert!(
+        cancelled_work.gen_len <= geom.gen_len,
+        "partial outcome is well-formed"
+    );
+    assert_eq!(st.kv_in_use(), 0, "cancel must free the KV slot");
+    let after = st.prefix_chain_info(&ps[0]).unwrap();
+    assert_eq!(
+        after,
+        baseline,
+        "pool accounting must return to the warm-cache baseline \
+         (resident blocks intact, refcount back to zero)"
+    );
+    // the freed lane is immediately admissible and decodes correctly
+    let l3 = st.admit(&ps[0], None).unwrap();
+    assert_eq!(st.kv_in_use(), 1);
+    let mut got = None;
+    let mut guard = 0;
+    while !st.is_empty() {
+        guard += 1;
+        assert!(guard <= 10_000);
+        st.step_cycle().unwrap();
+        for (lane, o) in st.take_finished() {
+            assert_eq!(lane, l3);
+            got = Some(o);
+        }
+    }
+    assert!(got.is_some(), "post-cancel admission decodes to completion");
+    assert_eq!(st.kv_in_use(), 0);
+}
+
+#[test]
+fn cancelled_lane_without_kv_slot_is_safe() {
+    // cache-less methods hold no slot: cancel must not touch the pool
+    let rt = Arc::new(Runtime::reference(SEED));
+    let geom = rt.manifest.geometry.clone();
+    let opts = DecodeOpts::defaults(&geom);
+    let ps = prompts(1, 0x0CA5);
+    let mut st = machine(&rt, Method::Vanilla, &opts, 1);
+    let lane = st.admit(&ps[0], None).unwrap();
+    st.step_cycle().unwrap();
+    let o = st.cancel_lane(lane).expect("vanilla never finishes early");
+    assert!(o.steps >= 1, "one block of work happened");
+    assert_eq!(st.kv_in_use(), 0);
+    assert!(st.cancel_lane(lane).is_none(), "double cancel is a no-op");
+    assert!(st.is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// (c) a cancelled lane never perturbs survivors
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cancel_does_not_perturb_surviving_lane_traces() {
+    let rt = Arc::new(Runtime::reference(SEED));
+    let geom = rt.manifest.geometry.clone();
+    let opts = DecodeOpts::defaults(&geom);
+    for m in [Method::Vanilla, Method::Cdlm, Method::Ar] {
+        let ps = prompts(2, 0xD15C ^ m.name().len() as u64);
+        let weights = weights_for(&rt, m);
+        let engine = Engine::new(&rt, &weights);
+        let mut pool = KvPool::new(&geom, 4);
+        let solo_a = engine
+            .decode_serial(m, &opts, &ps[..1], &mut pool)
+            .unwrap();
+        // A starts; B joins one block later (its own cohort); B is then
+        // "disconnected" (cancelled) while A keeps decoding
+        let mut st = machine(&rt, m, &opts, 2);
+        let lane_a = st.admit(&ps[0], None).unwrap();
+        st.step_cycle().unwrap();
+        if let Some((l, o)) = st.take_finished().pop() {
+            // A early-stopped inside its first block (possible for the
+            // early-stopping methods): the scenario is vacuous for this
+            // seed — A provably decoded solo
+            assert_eq!(l, lane_a);
+            assert_eq!(o.gen, solo_a[0].gen, "{}", m.name());
+            continue;
+        }
+        let lane_b = st.admit(&ps[1], None).unwrap();
+        assert_ne!(lane_b, lane_a);
+        st.step_cycle().unwrap();
+        let mut got_a: Option<DecodeOutcome> = None;
+        let mut b_live = true;
+        for (l, o) in st.take_finished() {
+            if l == lane_a {
+                got_a = Some(o);
+            } else {
+                b_live = false; // B early-stopped before the disconnect
+            }
+        }
+        if b_live {
+            st.cancel_lane(lane_b).expect("B is mid-decode");
+        }
+        // Vanilla never early-stops, so the full disconnect scenario is
+        // guaranteed to execute for at least that method
+        assert!(
+            b_live || m != Method::Vanilla,
+            "vanilla lanes cannot retire early"
+        );
+        let mut guard = 0;
+        while !st.is_empty() {
+            guard += 1;
+            assert!(guard <= 10_000, "{}: machine failed to drain", m.name());
+            st.step_cycle().unwrap();
+            for (l, o) in st.take_finished() {
+                assert_eq!(l, lane_a);
+                assert!(got_a.is_none(), "{}: A retired twice", m.name());
+                got_a = Some(o);
+            }
+        }
+        let got_a = got_a.expect("A retired");
+        let s = &solo_a[0];
+        assert_eq!(got_a.gen, s.gen, "{}: survivor gen perturbed", m.name());
+        assert_eq!(
+            (got_a.steps, got_a.model_calls, got_a.gen_len),
+            (s.steps, s.model_calls, s.gen_len),
+            "{}: survivor accounting perturbed",
+            m.name()
+        );
+        assert_eq!(st.kv_in_use(), 0, "{}: KV leaked", m.name());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// deadline / budget / disconnect through the router
+// ---------------------------------------------------------------------------
+
+#[test]
+fn queued_deadline_expiry_aborts_without_spending_a_lane() {
+    // step_delay widens block boundaries so the second request is still
+    // queued when its (already expired) deadline is checked
+    let router = Router::start(
+        cdlm::artifacts_dir(),
+        RouterConfig {
+            max_batch: 1, // one lane: the second request must queue
+            max_queue: 16,
+            pool_capacity: 1,
+            max_active: 1,
+            step_delay: Duration::from_millis(25),
+            ..RouterConfig::default()
+        },
+    )
+    .expect("router starts");
+    let first = router.submit(request_for(Method::Vanilla, 31)).unwrap();
+    let mut dead = request_for(Method::Vanilla, 32);
+    dead.timeout = Some(Duration::ZERO); // expired on arrival
+    let dead_handle = router.submit(dead).unwrap();
+    let reason = dead_handle.wait().expect_err("expired request must abort");
+    assert!(reason.contains("deadline"), "got: {reason}");
+    let resp = first.wait().expect("live request unaffected");
+    assert!(resp.steps >= 1);
+    let h = router.health().unwrap();
+    let stat = |k: &str| h.get(k).and_then(|v| v.as_f64()).unwrap_or(-1.0);
+    assert!(
+        stat("aborted_queued") >= 1.0,
+        "healthz must count the queued abort: {h}"
+    );
+    assert_eq!(
+        stat("kv_slots_in_use"),
+        0.0,
+        "no KV may remain held: {h}"
+    );
+    router.shutdown();
+}
+
+#[test]
+fn max_new_tokens_truncates_with_a_finished_response() {
+    let router = Router::start(
+        cdlm::artifacts_dir(),
+        RouterConfig {
+            max_batch: 2,
+            max_queue: 8,
+            pool_capacity: 8,
+            ..RouterConfig::default()
+        },
+    )
+    .expect("router starts");
+    // reference: the untruncated decode
+    let full = router
+        .submit(request_for(Method::Vanilla, 44))
+        .unwrap()
+        .wait()
+        .expect("full decode");
+    let block = router.geometry.block_size;
+    let mut req = request_for(Method::Vanilla, 44);
+    req.max_new_tokens = Some(block); // stop after the first boundary
+    let resp = router
+        .submit(req)
+        .unwrap()
+        .wait()
+        .expect("budget stop is a successful response");
+    assert!(
+        full.text.starts_with(&resp.text),
+        "truncated text must be a prefix of the full text \
+         ({:?} vs {:?})",
+        resp.text,
+        full.text
+    );
+    if full.gen_len >= block {
+        // the answer meets the budget: block 0 delivers exactly
+        // `block` visible tokens (an <eos> inside it would cap gen_len
+        // below the block), so the lane retires at the first boundary
+        assert_eq!(
+            resp.gen_len, block,
+            "budget must truncate at the first block boundary"
+        );
+        assert!(
+            resp.steps < full.steps,
+            "truncation must save refinement steps ({} vs {})",
+            resp.steps,
+            full.steps
+        );
+    } else {
+        // the full answer fits the budget: the budget must not distort
+        // anything — identical trace to the unbudgeted decode
+        assert_eq!((resp.gen_len, resp.steps), (full.gen_len, full.steps));
+        assert_eq!(resp.text, full.text);
+    }
+    router.shutdown();
+}
+
+#[test]
+fn closed_path_drops_expired_queued_requests_too() {
+    // the deadline contract holds on the closed-batch worker as well:
+    // enforcement happens at group dispatch instead of take_for
+    let router = Router::start(
+        cdlm::artifacts_dir(),
+        RouterConfig {
+            continuous: false,
+            max_batch: 2,
+            max_queue: 8,
+            pool_capacity: 8,
+            ..RouterConfig::default()
+        },
+    )
+    .expect("router starts");
+    let mut dead = request_for(Method::Cdlm, 61);
+    dead.timeout = Some(Duration::ZERO); // expired on arrival
+    let reason = router
+        .submit(dead)
+        .unwrap()
+        .wait()
+        .expect_err("expired request must abort at dispatch");
+    assert!(reason.contains("deadline"), "got: {reason}");
+    let resp = router
+        .submit(request_for(Method::Cdlm, 62))
+        .unwrap()
+        .wait()
+        .expect("live request decodes normally");
+    assert!(resp.steps >= 1);
+    let h = router.health().unwrap();
+    let stat = |k: &str| h.get(k).and_then(|v| v.as_f64()).unwrap_or(-1.0);
+    assert!(
+        stat("aborted_queued") >= 1.0,
+        "healthz must count the dispatch-time abort: {h}"
+    );
+    router.shutdown();
+}
+
+#[test]
+fn mid_stream_disconnect_cancels_and_frees_the_lane() {
+    // step_delay stretches the decode so the cancel lands mid-flight
+    let router = Router::start(
+        cdlm::artifacts_dir(),
+        RouterConfig {
+            max_batch: 4,
+            max_queue: 16,
+            pool_capacity: 16,
+            step_delay: Duration::from_millis(30),
+            ..RouterConfig::default()
+        },
+    )
+    .expect("router starts");
+    let victim = router.submit(request_for(Method::Vanilla, 55)).unwrap();
+    let survivor = router.submit(request_for(Method::Vanilla, 56)).unwrap();
+    // wait for the victim's first block, then vanish (handle drop =
+    // client disconnect; cancel() makes the intent explicit)
+    let mut saw_delta = false;
+    while let Some(ev) = victim.next_event() {
+        if matches!(ev, LaneEvent::Committed { .. }) {
+            saw_delta = true;
+            victim.cancel();
+            break;
+        }
+    }
+    assert!(saw_delta, "victim never streamed a block");
+    let reason = victim.wait().expect_err("cancelled request must abort");
+    assert!(reason.contains("cancelled"), "got: {reason}");
+    drop(victim);
+    let resp = survivor.wait().expect("survivor completes");
+    assert!(resp.gen_len <= router.geometry.gen_len);
+    let h = router.health().unwrap();
+    let stat = |k: &str| h.get(k).and_then(|v| v.as_f64()).unwrap_or(-1.0);
+    assert!(
+        stat("aborted_inflight") >= 1.0,
+        "healthz must count the in-flight abort: {h}"
+    );
+    assert_eq!(
+        stat("kv_slots_in_use"),
+        0.0,
+        "cancelled lane must free its KV: {h}"
+    );
+    router.shutdown();
+}
