@@ -3,9 +3,9 @@
 
 CARGO ?= cargo
 
-.PHONY: ci verify fmt clippy build test smoke check-baseline check-pjrt bench clean
+.PHONY: ci verify fmt clippy build test smoke check-baseline shard-smoke check-pjrt bench clean
 
-ci: fmt clippy build test smoke check-baseline check-pjrt
+ci: fmt clippy build test smoke check-baseline shard-smoke check-pjrt
 
 # Tier-1 verify (the regression gate), exactly as the roadmap states it.
 verify:
@@ -28,11 +28,21 @@ smoke:
 	$(CARGO) run --release --bin cdlm -- eval --methods cdlm,ar --n 8
 
 # Deterministic accounting gate: the same bench CI runs, hard-failing on
-# any drift of per-cell steps/model_calls from BENCH_baseline.json.
-# To regenerate after an intentional accounting change:
-#   cargo run --release --bin cdlm -- bench --methods all --batches 1,4,8 --n 8 --out BENCH_baseline.json
+# any drift of per-cell steps/model_calls from BENCH_baseline.json. The
+# gate runs at --replicas 1 AND --replicas 4 against the same committed
+# baseline, so the routed (closed-loop through the sharded dispatcher)
+# cells also pin shard-count invariance. To regenerate after an
+# intentional accounting change:
+#   python3 python/tools/gen_bench_baseline.py
 check-baseline:
-	$(CARGO) run --release --bin cdlm -- bench --methods all --batches 1,4,8 --n 8 --out BENCH_decode.json --check-baseline BENCH_baseline.json
+	$(CARGO) run --release --bin cdlm -- bench --methods all --batches 1,4,8 --n 8 --replicas 1 --out BENCH_decode.json --check-baseline BENCH_baseline.json
+	$(CARGO) run --release --bin cdlm -- bench --methods all --batches 1,4,8 --n 8 --replicas 4 --out BENCH_decode_r4.json --check-baseline BENCH_baseline.json
+
+# Sharded-serving smoke: 1-vs-N replica arrival trace + saturation
+# burst (schema cdlm.bench.shard/v1). Record only — invariance is
+# gated by check-baseline, admission semantics by the test suite.
+shard-smoke:
+	$(CARGO) run --release --bin cdlm -- bench --scenario shard --method cdlm --n 24 --distinct 6 --replicas 4 --arrival-ms 2 --out BENCH_shard.json
 
 # Type-check the off-by-default PJRT seam against the vendored xla API
 # stub (the `pjrt` feature gates real execution behind the real crate).

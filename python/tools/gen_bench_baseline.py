@@ -542,6 +542,30 @@ def main():
             "total_steps": total_steps,
             "total_model_calls": total_calls,
         })
+    # routed shard-invariance cells (rust: `cdlm bench --replicas N`):
+    # every prompt decoded closed-loop through the sharded router, i.e.
+    # in a solo cohort on whichever replica the dispatcher picked.
+    # Per-lane accounting in a lockstep cohort depends on the slowest
+    # cohort mate, so solo cohorts are the composition every replica
+    # count reproduces exactly — the rust cell must match this one
+    # whether it ran on 1 shard or 4.
+    for method, model in METHODS:
+        ms = model_seed(model)
+        outs = [engine_decode(method, ms, [p])[0] for p in prompts]
+        tokens = sum(s.gen_length() for s in outs)
+        total_steps = sum(s.steps for s in outs)
+        total_calls = sum(s.model_calls for s in outs)
+        print(f"{method:<14} routed: requests {len(outs)}, "
+              f"tokens {tokens}, steps {total_steps}, calls {total_calls}")
+        cells.append({
+            "method": method,
+            "batch": 1,
+            "routed": 1,
+            "requests": len(outs),
+            "tokens": tokens,
+            "total_steps": total_steps,
+            "total_model_calls": total_calls,
+        })
     doc = {
         "schema": "cdlm.bench.decode/v1",
         "backend": "reference",

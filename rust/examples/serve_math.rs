@@ -60,6 +60,7 @@ fn main() -> anyhow::Result<()> {
                 addr: srv_addr,
                 default_backbone: "dream".into(),
                 io_timeout: Duration::from_secs(10),
+                ..ServerConfig::default()
             },
         );
     });

@@ -213,11 +213,17 @@ pub fn save_results(name: &str, j: crate::util::json::Json) {
 const ACCOUNTING_FIELDS: [&str; 4] =
     ["requests", "tokens", "total_steps", "total_model_calls"];
 
-/// Cell identity: (method, batch, cancel_at_block). Full-decode cells
-/// have no `cancel_at_block` field and key as `u64::MAX`; the
+/// Cell identity: (method, batch, cancel_at_block, routed). Full-decode
+/// cells have no `cancel_at_block` field and key as `u64::MAX`; the
 /// cancelled-lane cells key by the block cycle the cancellation fired
-/// at, so the same (method, batch) can carry both cell kinds.
-fn cell_key(cell: &crate::util::json::Json) -> Option<(String, u64, u64)> {
+/// at, so the same (method, batch) can carry both cell kinds. `routed`
+/// (0/1) separates the sharded-router solo-cohort cells from the direct
+/// batch-1 cells: their accounting is identical by construction, and
+/// keying them apart is what lets the CI replica matrix gate the routed
+/// numbers without touching the direct ones.
+fn cell_key(
+    cell: &crate::util::json::Json,
+) -> Option<(String, u64, u64, u64)> {
     let m = cell.get("method")?.as_str()?.to_string();
     let b = cell.get("batch")?.as_f64()?;
     let c = cell
@@ -225,15 +231,21 @@ fn cell_key(cell: &crate::util::json::Json) -> Option<(String, u64, u64)> {
         .and_then(crate::util::json::Json::as_f64)
         .map(|v| v as u64)
         .unwrap_or(u64::MAX);
-    Some((m, b as u64, c))
+    let r = cell
+        .get("routed")
+        .and_then(crate::util::json::Json::as_f64)
+        .map(|v| v as u64)
+        .unwrap_or(0);
+    Some((m, b as u64, c, r))
 }
 
 /// Human label for drift reports.
-fn cell_label(key: &(String, u64, u64)) -> String {
+fn cell_label(key: &(String, u64, u64, u64)) -> String {
+    let routed = if key.3 != 0 { "/routed" } else { "" };
     if key.2 == u64::MAX {
-        format!("{}/bs{}", key.0, key.1)
+        format!("{}/bs{}{routed}", key.0, key.1)
     } else {
-        format!("{}/bs{}/cancel@{}", key.0, key.1, key.2)
+        format!("{}/bs{}/cancel@{}{routed}", key.0, key.1, key.2)
     }
 }
 
@@ -375,5 +387,26 @@ mod tests {
         let err = check_baseline(&drifted, &base).unwrap_err();
         assert!(err.contains("cancel@2"), "{err}");
         assert!(!err.contains("cdlm/bs1:"), "full cell must not drift: {err}");
+    }
+
+    #[test]
+    fn routed_cells_key_separately_from_direct_cells() {
+        // a router-driven solo-cohort cell shares (method, batch) with
+        // the direct batch-1 cell but is gated independently — a drift
+        // in the routed path must name the routed cell, not the direct
+        // one
+        let routed = |calls: f64| {
+            let mut c = cell("cdlm", 1.0, calls);
+            if let Json::Obj(ref mut m) = c {
+                m.insert("routed".into(), Json::num(1.0));
+            }
+            c
+        };
+        let base = doc(vec![cell("cdlm", 1.0, 42.0), routed(42.0)]);
+        let same = doc(vec![cell("cdlm", 1.0, 42.0), routed(42.0)]);
+        assert!(check_baseline(&same, &base).is_ok());
+        let drifted = doc(vec![cell("cdlm", 1.0, 42.0), routed(43.0)]);
+        let err = check_baseline(&drifted, &base).unwrap_err();
+        assert!(err.contains("cdlm/bs1/routed"), "{err}");
     }
 }

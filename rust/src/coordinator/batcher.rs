@@ -175,6 +175,58 @@ impl<T> DynamicBatcher<T> {
         (fresh, expired)
     }
 
+    /// Queued requests for exactly `key` (work-stealing victim probe).
+    pub fn len_for(&self, key: &GroupKey) -> usize {
+        self.queues.get(key).map_or(0, Vec::len)
+    }
+
+    /// Work-stealing drain: up to `n` oldest *live* requests of `key`
+    /// that have already waited at least `min_wait` at `now`. The age
+    /// gate keeps thieves honest — a fresh arrival routed here by
+    /// prefix affinity is left for this shard to admit within its own
+    /// batching window; only requests the shard failed to serve within
+    /// that window are fair game for an idle sibling. Queues are
+    /// oldest-first, so the scan stops at the first too-young request.
+    /// Expired requests ahead of the cut are handed back separately,
+    /// exactly like [`DynamicBatcher::take_for`].
+    #[allow(clippy::type_complexity)]
+    pub fn steal_for(
+        &mut self,
+        key: &GroupKey,
+        n: usize,
+        now: Instant,
+        min_wait: Duration,
+    ) -> (Vec<Pending<T>>, Vec<Pending<T>>) {
+        let (mut fresh, mut expired) = (Vec::new(), Vec::new());
+        if n == 0 || !self.queues.contains_key(key) {
+            return (fresh, expired);
+        }
+        let q = self.queues.get_mut(key).unwrap();
+        let mut consumed = 0;
+        let mut live = 0;
+        for p in q.iter() {
+            if live >= n || now.duration_since(p.enqueued) < min_wait {
+                break;
+            }
+            consumed += 1;
+            if !p.deadline.is_some_and(|d| now > d) {
+                live += 1;
+            }
+        }
+        for p in q.drain(..consumed) {
+            if p.deadline.is_some_and(|d| now > d) {
+                expired.push(p);
+            } else {
+                fresh.push(p);
+            }
+        }
+        if q.is_empty() {
+            self.queues.remove(key);
+        }
+        self.count -= consumed;
+        (fresh, expired)
+    }
+
     /// Drain every queued request (any key) whose deadline has passed
     /// at `now`. The serving workers run this once per loop iteration,
     /// so an expired request releases its queue permit and receives its
@@ -392,6 +444,38 @@ mod tests {
         let (fresh, expired) = b.take_for(&key(Method::Cdlm), 1, later);
         assert_eq!(payloads(fresh), vec![3]);
         assert!(expired.is_empty());
+    }
+
+    #[test]
+    fn steal_for_honors_the_age_gate() {
+        let mut b = DynamicBatcher::new(8, Duration::from_secs(100));
+        let t = Instant::now();
+        let window = Duration::from_millis(10);
+        b.push(pend(Method::Cdlm, 1, t));
+        b.push(pend(Method::Cdlm, 2, t + Duration::from_millis(8)));
+        assert_eq!(b.len_for(&key(Method::Cdlm)), 2);
+        // at t+5ms nothing has waited out the window: no steal
+        let early = t + Duration::from_millis(5);
+        let (fresh, _) = b.steal_for(&key(Method::Cdlm), 4, early, window);
+        assert!(fresh.is_empty(), "fresh arrivals are not stealable");
+        assert_eq!(b.len(), 2);
+        // at t+12ms only the first request is old enough; the second is
+        // behind it and too young, so the scan stops there
+        let later = t + Duration::from_millis(12);
+        let (fresh, _) = b.steal_for(&key(Method::Cdlm), 4, later, window);
+        assert_eq!(payloads(fresh), vec![1]);
+        assert_eq!(b.len(), 1, "younger request left for its own shard");
+        assert_eq!(b.len_for(&key(Method::Cdlm)), 1);
+        // once it too ages out, it is stealable — and expired requests
+        // ahead of the cut are handed back, never stolen into a lane
+        let mut dead = pend(Method::Cdlm, 3, t);
+        dead.deadline = Some(t);
+        b.push(dead);
+        let done = t + Duration::from_secs(1);
+        let (fresh, expired) = b.steal_for(&key(Method::Cdlm), 4, done, window);
+        assert_eq!(payloads(fresh), vec![2]);
+        assert_eq!(payloads(expired), vec![3]);
+        assert!(b.is_empty(), "count balanced across both outcomes");
     }
 
     #[test]

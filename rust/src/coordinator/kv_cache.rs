@@ -70,6 +70,29 @@ fn page_len_of(geom: &Geometry) -> usize {
     }
 }
 
+/// Stable FNV-1a hash of the longest block-aligned prompt prefix — the
+/// replica dispatcher's affinity key. Two prompts that would share a
+/// prefix-trie chain (identical up to the last full block) hash alike,
+/// so `hash % replicas` steers shared-prompt traffic to the one shard
+/// whose trie already holds the warm pages. Tokens past the final block
+/// boundary are ignored: they can never be shared (the trie is paged at
+/// block granularity), so they must not split warm traffic.
+pub fn prefix_affinity_hash(prompt_ids: &[i32], block_size: usize) -> u64 {
+    let aligned = if block_size > 0 {
+        prompt_ids.len() - prompt_ids.len() % block_size
+    } else {
+        prompt_ids.len()
+    };
+    let mut h: u64 = 0xcbf29ce484222325;
+    for t in &prompt_ids[..aligned] {
+        for b in t.to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
 /// One block of cached prompt KV in the trie: `tokens` is the block's
 /// token ids, `page` its `[L, H, B, dh]` region, `refs` the number of
 /// live lanes pinning it.
@@ -701,6 +724,34 @@ impl KvPool {
 mod tests {
     use super::*;
     use crate::util::prop::check;
+
+    #[test]
+    fn affinity_hash_is_block_aligned_and_stable() {
+        let a = [1, 2, 3, 4, 5, 6, 7, 8];
+        assert_eq!(
+            prefix_affinity_hash(&a, 4),
+            prefix_affinity_hash(&a, 4),
+            "deterministic"
+        );
+        // a difference past the last full block boundary is invisible
+        let ragged = [1, 2, 3, 4, 5, 6, 7];
+        let mut ragged_tail = ragged;
+        ragged_tail[6] = 99; // index 6 is past the 4-aligned boundary
+        assert_eq!(
+            prefix_affinity_hash(&ragged, 4),
+            prefix_affinity_hash(&ragged_tail, 4),
+            "trailing partial block must not split affinity"
+        );
+        // a difference inside the aligned prefix changes the hash
+        let mut c = a;
+        c[0] = 99;
+        assert_ne!(prefix_affinity_hash(&a, 4), prefix_affinity_hash(&c, 4));
+        // block_size 0 degrades to hashing the whole prompt
+        assert_ne!(
+            prefix_affinity_hash(&a, 0),
+            prefix_affinity_hash(&a[..7], 0)
+        );
+    }
 
     fn geom() -> Geometry {
         Geometry {

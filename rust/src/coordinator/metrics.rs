@@ -67,6 +67,24 @@ impl MetricsAggregator {
         self.wasted_tokens += r.committed_tokens as u64;
     }
 
+    /// Fold another aggregator (e.g. a sibling replica's view of the
+    /// same (backbone, method) cell) into this one. Sample-exact: every
+    /// underlying Summary keeps its raw samples, so merged percentiles
+    /// and means equal those of a single aggregator that saw all
+    /// requests.
+    pub fn merge(&mut self, other: &MetricsAggregator) {
+        self.latency_s.merge(&other.latency_s);
+        self.steps.merge(&other.steps);
+        self.model_calls.merge(&other.model_calls);
+        self.gen_len.merge(&other.gen_len);
+        self.n_scored += other.n_scored;
+        self.n_correct += other.n_correct;
+        self.n_aborted += other.n_aborted;
+        self.wasted_steps += other.wasted_steps;
+        self.wasted_model_calls += other.wasted_model_calls;
+        self.wasted_tokens += other.wasted_tokens;
+    }
+
     pub fn count(&self) -> usize {
         self.latency_s.count()
     }
@@ -211,6 +229,40 @@ mod tests {
         assert_eq!(j.get("wasted_steps").unwrap().as_i64(), Some(7));
         assert_eq!(j.get("wasted_model_calls").unwrap().as_i64(), Some(9));
         assert_eq!(j.get("wasted_tokens").unwrap().as_i64(), Some(5));
+    }
+
+    #[test]
+    fn merge_equals_single_aggregator() {
+        let mut a = MetricsAggregator::new();
+        let mut b = MetricsAggregator::new();
+        let mut whole = MetricsAggregator::new();
+        for (i, r) in
+            [rec(100, 10, 20, true), rec(200, 20, 30, false)].iter().enumerate()
+        {
+            if i % 2 == 0 {
+                a.record(r);
+            } else {
+                b.record(r);
+            }
+            whole.record(r);
+        }
+        b.record_abort(&AbortRecord {
+            steps: 3,
+            model_calls: 4,
+            committed_tokens: 2,
+        });
+        whole.record_abort(&AbortRecord {
+            steps: 3,
+            model_calls: 4,
+            committed_tokens: 2,
+        });
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.aborted(), whole.aborted());
+        assert_eq!(a.avg_steps(), whole.avg_steps());
+        assert_eq!(a.tps(), whole.tps());
+        assert_eq!(a.score(), whole.score());
+        assert_eq!(a.to_json().to_string(), whole.to_json().to_string());
     }
 
     #[test]

@@ -17,7 +17,7 @@ pub use methods::{DecodeOpts, DecodeOutcome, Method, ALL_METHODS};
 pub use metrics::{AbortRecord, MetricsAggregator, RequestRecord};
 pub use router::{
     GenerateRequest, GenerateResponse, LaneEvent, ResponseHandle, Router,
-    ServingCore,
+    ServingCore, SubmitError, TryEvent,
 };
 pub use scheduler::{ActiveBatch, Engine};
 pub use sequence::SequenceState;

@@ -36,17 +36,42 @@
 //! admission (`DynamicBatcher::take_for`) so a dead client never costs
 //! a prefill. `/healthz` counts both: `aborted_queued` /
 //! `aborted_inflight`.
+//!
+//! **Sharded replicas.** `RouterConfig::replicas = N` splits the
+//! serving core into N independent shards, each a full `ServingCore`
+//! (weights, KV pool, prefix trie) driven by its own worker thread over
+//! its own inbox. The dispatcher routes each request by
+//! *prefix affinity* — `prefix_affinity_hash(prompt) % N` — so
+//! shared-prompt traffic always lands on the one shard whose prefix
+//! trie is already warm, spilling to the least-loaded shard only when
+//! the affinity shard's queue exceeds its fair share. A hot shard
+//! cannot strand capacity elsewhere: at block boundaries, shards with
+//! free lanes (or nothing to do at all) *steal* queued requests that
+//! have already waited out the batching window on a sibling's inbox.
+//! Per-lane decode traces depend only on (prompt, seed), so routing and
+//! stealing never change a request's tokens, steps, or model calls —
+//! accounting is byte-identical at any replica count (CI-gated).
+//!
+//! **Admission control.** `Router::submit` returns a typed
+//! [`SubmitError`]: malformed requests (`Invalid`), a saturated global
+//! queue (`QueueFull`), a client over its in-flight fairness cap
+//! (`ClientCap`), and a draining router (`Draining`) are told apart so
+//! the HTTP layer can answer 400 / 429 / 429 / 503 with a
+//! `Retry-After` hint. [`Router::begin_drain`] starts a graceful
+//! drain: new submits are refused, every queued request gets a
+//! terminal `Aborted{"shutdown"}`, in-flight lanes *finish* normally,
+//! then the workers exit ([`Router::join`] / [`Router::shutdown`]).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::batcher::{DynamicBatcher, GroupKey, Pending};
-use super::kv_cache::KvPool;
+use super::kv_cache::{prefix_affinity_hash, KvPool};
 use super::methods::machine::{BatchState, CommitRun};
 use super::methods::{DecodeOpts, DecodeOutcome, Method};
 use super::metrics::{AbortRecord, MetricsAggregator, RequestRecord};
@@ -200,6 +225,13 @@ pub struct GenerateRequest {
     /// so the closed-batch worker (run-to-completion groups) ignores
     /// it.
     pub max_new_tokens: Option<usize>,
+    /// Fairness identity for `RouterConfig::max_per_client`: at most
+    /// that many requests of one client may be in the system at once
+    /// (queued or decoding). `None` is exempt — internal callers
+    /// (benches, tests) and deployments without client attribution are
+    /// never throttled. The HTTP layer fills it from the request's
+    /// `client_id` field, defaulting to the peer IP.
+    pub client: Option<String>,
 }
 
 impl GenerateRequest {
@@ -215,6 +247,7 @@ impl GenerateRequest {
             tau_conf: None,
             timeout: None,
             max_new_tokens: None,
+            client: None,
         }
     }
 }
@@ -316,6 +349,17 @@ impl ResponseHandle {
         }
     }
 
+    /// Nonblocking poll of the event pipeline (the event-loop HTTP
+    /// front door sweeps hundreds of these per iteration; a blocking
+    /// `next_event` would pin the loop on one connection).
+    pub fn try_next_event(&self) -> TryEvent {
+        match self.rx.try_recv() {
+            Ok(ev) => TryEvent::Event(ev),
+            Err(mpsc::TryRecvError::Empty) => TryEvent::Empty,
+            Err(mpsc::TryRecvError::Disconnected) => TryEvent::Closed,
+        }
+    }
+
     /// Request cancellation. Asynchronous: the worker retires the lane
     /// at its next block boundary and answers with a terminal
     /// `Aborted`.
@@ -324,7 +368,106 @@ impl ResponseHandle {
     }
 }
 
+/// One nonblocking poll of a [`ResponseHandle`].
+pub enum TryEvent {
+    /// An event is ready.
+    Event(LaneEvent),
+    /// Nothing yet; poll again later.
+    Empty,
+    /// The channel closed without a terminal event (worker died).
+    Closed,
+}
+
 type EventTx = mpsc::Sender<LaneEvent>;
+
+/// Typed admission verdicts from [`Router::submit`], so the HTTP layer
+/// maps each to the right status code and `Retry-After` hint instead of
+/// collapsing every refusal into one 429.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Malformed request (bad prompt length, unknown backbone) — a 400,
+    /// retrying is pointless.
+    Invalid(String),
+    /// The global queue is at `max_queue` — a 429 with `Retry-After`.
+    QueueFull { queued: usize, max: usize, retry_after: Duration },
+    /// This client is at its `max_per_client` in-flight fairness cap —
+    /// a 429 with `Retry-After`; other clients are unaffected.
+    ClientCap { client: String, in_flight: usize, cap: usize, retry_after: Duration },
+    /// The router is draining for shutdown — a 503 with `Retry-After`
+    /// (another instance will take the retry after the rolling
+    /// restart).
+    Draining { retry_after: Duration },
+}
+
+impl SubmitError {
+    /// HTTP status this refusal maps to.
+    pub fn status(&self) -> u16 {
+        match self {
+            SubmitError::Invalid(_) => 400,
+            SubmitError::QueueFull { .. } | SubmitError::ClientCap { .. } => 429,
+            SubmitError::Draining { .. } => 503,
+        }
+    }
+
+    /// `Retry-After` hint, when retrying can help.
+    pub fn retry_after(&self) -> Option<Duration> {
+        match self {
+            SubmitError::Invalid(_) => None,
+            SubmitError::QueueFull { retry_after, .. }
+            | SubmitError::ClientCap { retry_after, .. }
+            | SubmitError::Draining { retry_after } => Some(*retry_after),
+        }
+    }
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Invalid(msg) => write!(f, "{msg}"),
+            SubmitError::QueueFull { queued, max, .. } => {
+                write!(f, "admission rejected: queue full ({queued}/{max})")
+            }
+            SubmitError::ClientCap { client, in_flight, cap, .. } => write!(
+                f,
+                "admission rejected: client '{client}' is at its fairness \
+                 cap ({in_flight}/{cap} in flight)"
+            ),
+            SubmitError::Draining { .. } => {
+                write!(f, "admission rejected: draining for shutdown")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// RAII share of a client's `max_per_client` fairness budget. Travels
+/// with the request (Submit -> Ticket), so *every* exit — finished,
+/// aborted, expired in queue, dead channel — releases the slot by
+/// dropping it; no terminal path can leak a client's budget.
+struct ClientPermit {
+    held: Option<(Arc<Mutex<HashMap<String, usize>>>, String)>,
+}
+
+impl ClientPermit {
+    fn unlimited() -> Self {
+        Self { held: None }
+    }
+}
+
+impl Drop for ClientPermit {
+    fn drop(&mut self) {
+        if let Some((clients, name)) = self.held.take() {
+            let mut m = clients.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(n) = m.get_mut(&name) {
+                *n = n.saturating_sub(1);
+                if *n == 0 {
+                    m.remove(&name);
+                }
+            }
+        }
+    }
+}
 
 /// A submitted request in flight toward a worker lane.
 struct Submit {
@@ -334,6 +477,12 @@ struct Submit {
     /// Stamped at `Router::submit`, so TTFT/TTLT include the time a
     /// message waits in the channel while the worker decodes.
     submitted: Instant,
+    /// The shard `prefix_affinity_hash` steered this request toward;
+    /// shards compare it against their own id at admission to measure
+    /// the affinity hit rate.
+    affinity: usize,
+    /// Held for the request's whole life; dropped on any terminal path.
+    _permit: ClientPermit,
 }
 
 impl Submit {
@@ -348,11 +497,102 @@ impl Submit {
     }
 }
 
-enum RouterMsg {
-    Request(Box<Submit>),
-    Metrics(mpsc::Sender<Json>),
+/// Control-plane message fanned out to every shard. Metrics replies as
+/// raw aggregators (not JSON) so the dispatcher can merge the shards'
+/// per-(backbone, method) cells sample-exactly.
+enum ControlMsg {
+    Metrics(mpsc::Sender<HashMap<String, MetricsAggregator>>),
     Health(mpsc::Sender<Json>),
-    Shutdown,
+}
+
+/// One shard's mailbox: its private request queue plus pending control
+/// messages and the drain flag, all under one short-held lock. The
+/// worker owns everything else (core, machines) thread-locally.
+struct ShardInbox {
+    batcher: DynamicBatcher<Submit>,
+    control: Vec<ControlMsg>,
+    shutdown: bool,
+}
+
+/// One replica shard: the mailbox the dispatcher routes into and the
+/// racy load gauges (`depth`, `in_flight`) routing and stealing read
+/// without taking the lock.
+struct Shard {
+    id: usize,
+    inbox: Mutex<ShardInbox>,
+    cv: Condvar,
+    /// Queued requests in this shard's batcher (kept in sync after
+    /// every locked mutation; reads are advisory).
+    depth: AtomicUsize,
+    /// Live lanes across this shard's machines (updated once per worker
+    /// iteration; reads are advisory).
+    in_flight: AtomicUsize,
+}
+
+impl Shard {
+    fn new(id: usize, max_batch: usize, max_wait: Duration) -> Shard {
+        Shard {
+            id,
+            inbox: Mutex::new(ShardInbox {
+                batcher: DynamicBatcher::new(max_batch, max_wait),
+                control: Vec::new(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            depth: AtomicUsize::new(0),
+            in_flight: AtomicUsize::new(0),
+        }
+    }
+
+    /// Lock the inbox, surviving a poisoned mutex (a panicked sibling
+    /// must not take the whole front door down with it).
+    fn lock(&self) -> MutexGuard<'_, ShardInbox> {
+        self.inbox.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Refresh the advisory queue-depth gauge; call before releasing
+    /// any lock that mutated the batcher.
+    fn sync_depth(&self, inbox: &ShardInbox) {
+        self.depth.store(inbox.batcher.len(), Ordering::SeqCst);
+    }
+
+    /// Route one request into this shard. Refused (handed back) once
+    /// the shard has begun draining: the worker's queue-abort pass runs
+    /// exactly once, so anything pushed after it would hang forever.
+    fn push(&self, p: Pending<Submit>) -> Result<(), Pending<Submit>> {
+        let mut inbox = self.lock();
+        if inbox.shutdown {
+            return Err(p);
+        }
+        inbox.batcher.push(p);
+        self.sync_depth(&inbox);
+        drop(inbox);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    fn send_control(&self, msg: ControlMsg) {
+        let mut inbox = self.lock();
+        inbox.control.push(msg);
+        drop(inbox);
+        self.cv.notify_all();
+    }
+}
+
+/// Dispatcher state shared by `submit` and the shard workers.
+struct Dispatch {
+    shards: Vec<Arc<Shard>>,
+    /// Global queued-request count (the `max_queue` bound spans all
+    /// shards, so a burst cannot hide by spreading out).
+    queued: Arc<AtomicUsize>,
+    draining: AtomicBool,
+    /// Per-client in-flight counts backing `max_per_client`.
+    clients: Arc<Mutex<HashMap<String, usize>>>,
+    rejected_queue_full: AtomicU64,
+    rejected_client_cap: AtomicU64,
+    rejected_draining: AtomicU64,
+    routed_affinity: AtomicU64,
+    routed_spill: AtomicU64,
 }
 
 #[derive(Debug, Clone)]
@@ -382,6 +622,16 @@ pub struct RouterConfig {
     /// are retained as warm caches until a new key needs their room.
     /// `cdlm serve --no-prefix-cache` turns it off.
     pub prefix_cache: bool,
+    /// Replica shards. Each shard is a full serving core — its own
+    /// weights, KV pool, prefix trie, and worker thread — so
+    /// `pool_capacity` and `max_active` are **per replica**. `1`
+    /// reproduces the single-worker behavior exactly.
+    pub replicas: usize,
+    /// Per-client in-flight fairness cap (`0` = off). Counts a client's
+    /// requests queued + decoding across all shards; excess submits get
+    /// [`SubmitError::ClientCap`] so one flooding client cannot consume
+    /// the whole `max_queue`.
+    pub max_per_client: usize,
 }
 
 impl Default for RouterConfig {
@@ -395,97 +645,218 @@ impl Default for RouterConfig {
             max_active: 4,
             step_delay: Duration::ZERO,
             prefix_cache: true,
+            replicas: 1,
+            max_per_client: 0,
         }
     }
 }
 
 pub struct Router {
-    tx: mpsc::Sender<RouterMsg>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    dispatch: Arc<Dispatch>,
+    workers: Vec<std::thread::JoinHandle<()>>,
     pub geometry: Geometry,
     pub max_queue: usize,
-    queued: Arc<AtomicUsize>,
+    max_batch: usize,
+    max_per_client: usize,
+    continuous: bool,
     known_models: Vec<String>,
 }
 
 impl Router {
-    /// Spawn the decode worker (which loads all backend state on its
-    /// own thread) and wait for it to come up.
+    /// Spawn one decode worker per replica shard (each loads its own
+    /// full serving core on its own thread) and wait for all of them to
+    /// come up.
     pub fn start(artifacts: PathBuf, cfg: RouterConfig) -> Result<Router> {
-        let (tx, rx) = mpsc::channel::<RouterMsg>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<Geometry, String>>();
+        let replicas = cfg.replicas.max(1);
         let queued = Arc::new(AtomicUsize::new(0));
-        let wq = queued.clone();
-        let wcfg = cfg.clone();
-        let wartifacts = artifacts.clone();
+        let shards: Vec<Arc<Shard>> = (0..replicas)
+            .map(|id| Arc::new(Shard::new(id, cfg.max_batch, cfg.max_wait)))
+            .collect();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<Geometry, String>>();
         // the continuous worker decodes exclusively through per-batch
         // KV pools (pool_capacity bounds their total lanes); don't
         // also allocate the shared core pool it would never touch
         let core_pool = if cfg.continuous { 0 } else { cfg.pool_capacity };
-        let worker = std::thread::Builder::new()
-            .name("cdlm-decode-worker".into())
-            .spawn(move || {
-                let mut core =
-                    match ServingCore::load(&wartifacts, core_pool) {
-                        Ok(c) => {
-                            let _ = ready_tx
-                                .send(Ok(c.rt.manifest.geometry.clone()));
-                            c
+        let mut workers = Vec::with_capacity(replicas);
+        for id in 0..replicas {
+            let shard = shards[id].clone();
+            let peers = shards.clone();
+            let wq = queued.clone();
+            let wcfg = cfg.clone();
+            let wartifacts = artifacts.clone();
+            let wready = ready_tx.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("cdlm-decode-worker-{id}"))
+                    .spawn(move || {
+                        let mut core =
+                            match ServingCore::load(&wartifacts, core_pool) {
+                                Ok(c) => {
+                                    let _ = wready.send(Ok(c
+                                        .rt
+                                        .manifest
+                                        .geometry
+                                        .clone()));
+                                    c
+                                }
+                                Err(e) => {
+                                    let _ =
+                                        wready.send(Err(format!("{e:#}")));
+                                    return;
+                                }
+                            };
+                        if wcfg.continuous {
+                            worker_loop_continuous(
+                                &mut core, shard, peers, wcfg, wq,
+                            );
+                        } else {
+                            worker_loop_closed(
+                                &mut core, shard, wcfg, replicas, wq,
+                            );
                         }
-                        Err(e) => {
-                            let _ = ready_tx.send(Err(format!("{e:#}")));
-                            return;
-                        }
-                    };
-                if wcfg.continuous {
-                    worker_loop_continuous(&mut core, rx, wcfg, wq);
-                } else {
-                    worker_loop_closed(&mut core, rx, wcfg, wq);
+                    })?,
+            );
+        }
+        drop(ready_tx);
+        let dispatch = Arc::new(Dispatch {
+            shards,
+            queued,
+            draining: AtomicBool::new(false),
+            clients: Arc::new(Mutex::new(HashMap::new())),
+            rejected_queue_full: AtomicU64::new(0),
+            rejected_client_cap: AtomicU64::new(0),
+            rejected_draining: AtomicU64::new(0),
+            routed_affinity: AtomicU64::new(0),
+            routed_spill: AtomicU64::new(0),
+        });
+        let mut geometry: Option<Geometry> = None;
+        for _ in 0..replicas {
+            let up = ready_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("worker died during startup"));
+            match up {
+                Ok(Ok(g)) => geometry = Some(g),
+                Ok(Err(e)) => {
+                    // one replica failed to load: drain the siblings
+                    // that did come up, then surface the error
+                    for s in &dispatch.shards {
+                        let mut inbox = s.lock();
+                        inbox.shutdown = true;
+                        drop(inbox);
+                        s.cv.notify_all();
+                    }
+                    for w in workers {
+                        let _ = w.join();
+                    }
+                    anyhow::bail!("serving core failed to load: {e}");
                 }
-            })?;
-        let geometry = ready_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("worker died during startup"))?
-            .map_err(|e| anyhow::anyhow!("serving core failed to load: {e}"))?;
+                Err(e) => {
+                    for w in workers {
+                        let _ = w.join();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        let geometry = geometry.expect("replicas >= 1 sent a geometry");
         // Known model list comes from the manifest; re-read it cheaply
         // here so admission can reject unknown backbones without a
-        // round-trip to the worker.
+        // round-trip to a worker.
         let manifest = crate::runtime::Manifest::load_or_reference(&artifacts)?;
         Ok(Router {
-            tx,
-            worker: Some(worker),
+            dispatch,
+            workers,
             geometry,
             max_queue: cfg.max_queue,
-            queued,
+            max_batch: cfg.max_batch.max(1),
+            max_per_client: cfg.max_per_client,
+            continuous: cfg.continuous,
             known_models: manifest.models.iter().map(|(k, _)| k.clone()).collect(),
         })
     }
 
+    pub fn replicas(&self) -> usize {
+        self.dispatch.shards.len()
+    }
+
+    /// How long a refused client should wait before retrying: roughly
+    /// the time the current backlog needs to drain one scheduling round
+    /// per replica, clamped to [1s, 30s].
+    fn retry_after_hint(&self) -> Duration {
+        let q = self.dispatch.queued.load(Ordering::SeqCst);
+        let per_round = (self.replicas() * self.max_batch).max(1);
+        Duration::from_secs(((q / per_round) as u64).clamp(1, 30))
+    }
+
     /// Enqueue a request; returns the handle to its event pipeline.
-    pub fn submit(&self, req: GenerateRequest) -> Result<ResponseHandle> {
-        anyhow::ensure!(
-            req.prompt_ids.len() == self.geometry.prompt_len,
-            "prompt must be padded to {} tokens (got {})",
-            self.geometry.prompt_len,
-            req.prompt_ids.len()
-        );
+    ///
+    /// Routing: the block-aligned prompt-prefix hash names an affinity
+    /// shard (warm prefix trie); the request spills to the least-loaded
+    /// shard only when the affinity shard's queue already exceeds its
+    /// fair share of `max_queue`.
+    pub fn submit(
+        &self,
+        req: GenerateRequest,
+    ) -> Result<ResponseHandle, SubmitError> {
+        if req.prompt_ids.len() != self.geometry.prompt_len {
+            return Err(SubmitError::Invalid(format!(
+                "prompt must be padded to {} tokens (got {})",
+                self.geometry.prompt_len,
+                req.prompt_ids.len()
+            )));
+        }
         let model = req.method.weights_for(&req.backbone);
-        anyhow::ensure!(
-            self.known_models.contains(&model),
-            "unknown backbone '{}' for method '{}'",
-            req.backbone,
-            req.method.name()
-        );
+        if !self.known_models.contains(&model) {
+            return Err(SubmitError::Invalid(format!(
+                "unknown backbone '{}' for method '{}'",
+                req.backbone,
+                req.method.name()
+            )));
+        }
+        let d = &self.dispatch;
+        if d.draining.load(Ordering::SeqCst) {
+            d.rejected_draining.fetch_add(1, Ordering::SeqCst);
+            return Err(SubmitError::Draining {
+                retry_after: self.retry_after_hint(),
+            });
+        }
+        // fairness cap first: a flooding client must be refused by its
+        // own budget before it can even contend for the global queue
+        let permit = match (&req.client, self.max_per_client) {
+            (Some(name), cap) if cap > 0 => {
+                let mut m = d.clients.lock().unwrap_or_else(|e| e.into_inner());
+                let n = m.entry(name.clone()).or_insert(0);
+                if *n >= cap {
+                    let in_flight = *n;
+                    drop(m);
+                    d.rejected_client_cap.fetch_add(1, Ordering::SeqCst);
+                    return Err(SubmitError::ClientCap {
+                        client: name.clone(),
+                        in_flight,
+                        cap,
+                        retry_after: self.retry_after_hint(),
+                    });
+                }
+                *n += 1;
+                ClientPermit {
+                    held: Some((d.clients.clone(), name.clone())),
+                }
+            }
+            _ => ClientPermit::unlimited(),
+        };
         // reserve-then-rollback: acting on the fetch_add result keeps
         // the bound exact under concurrent submits (a load-then-add
         // here would be the same racy RMW the worker's decrement had)
-        let q = self.queued.fetch_add(1, Ordering::SeqCst);
+        let q = d.queued.fetch_add(1, Ordering::SeqCst);
         if q >= self.max_queue {
-            self.queued.fetch_sub(1, Ordering::SeqCst);
-            anyhow::bail!(
-                "admission rejected: queue full ({q}/{})",
-                self.max_queue
-            );
+            d.queued.fetch_sub(1, Ordering::SeqCst);
+            drop(permit); // release the fairness slot with the refusal
+            d.rejected_queue_full.fetch_add(1, Ordering::SeqCst);
+            return Err(SubmitError::QueueFull {
+                queued: q,
+                max: self.max_queue,
+                retry_after: self.retry_after_hint(),
+            });
         }
         let now = Instant::now();
         let ctl = Arc::new(RequestCtl {
@@ -493,52 +864,187 @@ impl Router {
             deadline: req.timeout.map(|t| now + t),
             max_new_tokens: req.max_new_tokens,
         });
-        let (etx, erx) = mpsc::channel();
-        let sub = Submit {
-            req,
-            events: etx,
-            ctl: ctl.clone(),
-            submitted: now,
+        // prefix-affinity routing with least-loaded spill
+        let shards = &d.shards;
+        let affinity = (prefix_affinity_hash(
+            &req.prompt_ids,
+            self.geometry.block_size,
+        ) % shards.len() as u64) as usize;
+        let fair_share = (self.max_queue / shards.len()).max(1);
+        let target =
+            if shards[affinity].depth.load(Ordering::Relaxed) < fair_share {
+                d.routed_affinity.fetch_add(1, Ordering::SeqCst);
+                affinity
+            } else {
+                d.routed_spill.fetch_add(1, Ordering::SeqCst);
+                shards
+                    .iter()
+                    .min_by_key(|s| {
+                        s.depth.load(Ordering::Relaxed)
+                            + s.in_flight.load(Ordering::Relaxed)
+                    })
+                    .map(|s| s.id)
+                    .unwrap_or(affinity)
+            };
+        // the continuous machine carries tau per lane; the closed path
+        // folds the override into the group key (tau-uniform groups)
+        let key = if self.continuous {
+            GroupKey::new(req.backbone.clone(), req.method)
+        } else {
+            let tau =
+                if req.method.uses_tau_conf() { req.tau_conf } else { None };
+            GroupKey::new(req.backbone.clone(), req.method).with_tau(tau)
         };
-        if self.tx.send(RouterMsg::Request(Box::new(sub))).is_err() {
-            // the request never reached the worker: release the permit
-            // so a dead worker reports as such, not as a full queue
-            self.queued.fetch_sub(1, Ordering::SeqCst);
-            anyhow::bail!("router worker is gone");
+        let (etx, erx) = mpsc::channel();
+        let pending = Pending {
+            key,
+            enqueued: now,
+            deadline: ctl.deadline,
+            payload: Submit {
+                req,
+                events: etx,
+                ctl: ctl.clone(),
+                submitted: now,
+                affinity,
+                _permit: permit,
+            },
+        };
+        if shards[target].push(pending).is_err() {
+            // the shard began draining between the flag check and the
+            // push: hand the refusal back instead of stranding the
+            // request in a queue nobody will ever drain
+            d.queued.fetch_sub(1, Ordering::SeqCst);
+            d.rejected_draining.fetch_add(1, Ordering::SeqCst);
+            return Err(SubmitError::Draining {
+                retry_after: self.retry_after_hint(),
+            });
+        }
+        // hint every other shard: an idle sibling may wake and steal
+        // once the request has waited out the batching window
+        for s in shards {
+            if s.id != target {
+                s.cv.notify_all();
+            }
         }
         Ok(ResponseHandle { rx: erx, ctl })
     }
 
+    /// Merged per-(backbone, method) metrics across every shard.
+    /// Sample-exact: shards reply with their raw aggregators and the
+    /// merge concatenates samples, so percentiles equal a single-worker
+    /// run over the same requests.
     pub fn metrics(&self) -> Result<Json> {
-        let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(RouterMsg::Metrics(tx))
-            .map_err(|_| anyhow::anyhow!("router worker is gone"))?;
-        Ok(rx.recv()?)
+        let mut merged: HashMap<String, MetricsAggregator> = HashMap::new();
+        for shard in &self.dispatch.shards {
+            let (tx, rx) = mpsc::channel();
+            shard.send_control(ControlMsg::Metrics(tx));
+            let m = rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("router worker is gone"))?;
+            for (k, v) in m {
+                match merged.entry(k) {
+                    std::collections::hash_map::Entry::Occupied(mut e) => {
+                        e.get_mut().merge(&v)
+                    }
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        e.insert(v);
+                    }
+                }
+            }
+        }
+        Ok(Json::Obj(
+            merged.into_iter().map(|(k, v)| (k, v.to_json())).collect(),
+        ))
     }
 
+    /// Merged health across every shard: numeric gauges/counters are
+    /// summed, the per-shard breakdown rides along under `"shards"`,
+    /// and the dispatcher contributes its routing/rejection counters.
     pub fn health(&self) -> Result<Json> {
-        let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(RouterMsg::Health(tx))
-            .map_err(|_| anyhow::anyhow!("router worker is gone"))?;
-        Ok(rx.recv()?)
+        let mut per_shard = Vec::with_capacity(self.replicas());
+        for shard in &self.dispatch.shards {
+            let (tx, rx) = mpsc::channel();
+            shard.send_control(ControlMsg::Health(tx));
+            per_shard.push(
+                rx.recv()
+                    .map_err(|_| anyhow::anyhow!("router worker is gone"))?,
+            );
+        }
+        let d = &self.dispatch;
+        let mut merged: BTreeMap<String, Json> = BTreeMap::new();
+        for h in &per_shard {
+            let Json::Obj(m) = h else { continue };
+            for (k, v) in m {
+                if k == "replica" {
+                    continue; // shard ordinal: meaningless to sum
+                }
+                match v {
+                    Json::Num(n) => {
+                        let slot = merged
+                            .entry(k.clone())
+                            .or_insert(Json::Num(0.0));
+                        if let Json::Num(acc) = slot {
+                            *acc += n;
+                        }
+                    }
+                    other => {
+                        merged.entry(k.clone()).or_insert_with(|| other.clone());
+                    }
+                }
+            }
+        }
+        let count = |c: &AtomicU64| {
+            Json::num(c.load(Ordering::SeqCst) as f64)
+        };
+        merged.insert("replicas".into(), Json::num(self.replicas() as f64));
+        merged.insert(
+            "rejected_queue_full".into(),
+            count(&d.rejected_queue_full),
+        );
+        merged.insert(
+            "rejected_client_cap".into(),
+            count(&d.rejected_client_cap),
+        );
+        merged
+            .insert("rejected_draining".into(), count(&d.rejected_draining));
+        merged.insert("routed_affinity".into(), count(&d.routed_affinity));
+        merged.insert("routed_spill".into(), count(&d.routed_spill));
+        merged.insert("shards".into(), Json::Arr(per_shard));
+        Ok(Json::Obj(merged))
     }
 
-    /// Graceful drain: every request still in the system receives a
-    /// terminal event — nothing is ever answered by a silently dropped
-    /// channel. The continuous worker aborts queued requests and
-    /// in-flight lanes with `Aborted { reason: "shutdown" }` (a
-    /// streaming socket sees it as its terminal line) and frees their
-    /// KV state immediately; the closed-batch worker instead decodes
-    /// its remaining queue to completion (its groups are
-    /// run-to-completion, so draining by finishing is the cheaper exit
-    /// there). Then the worker exits.
-    pub fn shutdown(mut self) {
-        let _ = self.tx.send(RouterMsg::Shutdown);
-        if let Some(w) = self.worker.take() {
+    /// Begin a graceful drain without blocking: new submits are refused
+    /// with [`SubmitError::Draining`] (HTTP 503), every *queued*
+    /// request is answered with a terminal `Aborted{"shutdown"}`, and
+    /// in-flight lanes keep decoding to their natural `Finished` — a
+    /// rolling restart never truncates a response mid-stream. Call
+    /// [`Router::join`] to wait for the workers to exit.
+    pub fn begin_drain(&self) {
+        self.dispatch.draining.store(true, Ordering::SeqCst);
+        for shard in &self.dispatch.shards {
+            let mut inbox = shard.lock();
+            inbox.shutdown = true;
+            drop(inbox);
+            shard.cv.notify_all();
+        }
+    }
+
+    /// Wait for every shard worker to finish its drain and exit.
+    pub fn join(mut self) {
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+
+    /// Graceful drain, blocking until every worker has exited: every
+    /// request still in the system receives a terminal event — nothing
+    /// is ever answered by a silently dropped channel. Queued requests
+    /// abort with `Aborted{"shutdown"}`; in-flight continuous lanes
+    /// finish normally (the closed-batch worker likewise decodes its
+    /// remaining queue to completion).
+    pub fn shutdown(self) {
+        self.begin_drain();
+        self.join();
     }
 }
 
@@ -561,6 +1067,9 @@ struct Ticket {
     /// The event channel came back disconnected (client dropped its
     /// handle): cancel the lane at the next block boundary.
     dead: bool,
+    /// Client fairness slot, released when the ticket drops on any
+    /// terminal path.
+    _permit: ClientPermit,
 }
 
 impl Ticket {
@@ -577,6 +1086,7 @@ impl Ticket {
                 committed_tokens: 0,
                 blocks_committed: 0,
                 dead: false,
+                _permit: sub._permit,
             },
             sub.req,
         )
@@ -628,6 +1138,14 @@ struct ServeStats {
     /// cancel, shutdown) — their KV slots and chain pins were reclaimed
     /// at the block boundary.
     aborted_inflight: u64,
+    /// Requests this shard admitted into a lane or group.
+    admitted_requests: u64,
+    /// Of those, how many were admitted by the shard their prompt's
+    /// prefix hash named (affinity hit rate = affinity / admitted).
+    affinity_admissions: u64,
+    /// Queued requests this shard took from a sibling's inbox at a
+    /// block boundary (thief-side count).
+    stolen: u64,
 }
 
 impl ServeStats {
@@ -654,15 +1172,14 @@ fn kv_lanes_of(ab: &ActiveBatch<Ticket>) -> usize {
 
 fn worker_loop_continuous(
     core: &mut ServingCore,
-    rx: mpsc::Receiver<RouterMsg>,
+    shard: Arc<Shard>,
+    peers: Vec<Arc<Shard>>,
     cfg: RouterConfig,
     queued: Arc<AtomicUsize>,
 ) {
-    let mut batcher: DynamicBatcher<Submit> =
-        DynamicBatcher::new(cfg.max_batch, cfg.max_wait);
     let mut active: Vec<ActiveBatch<Ticket>> = Vec::new();
     let mut stats = ServeStats::default();
-    let mut shutdown = false;
+    let mut draining = false;
     // lanes one new machine would hold (each lane needs at most one KV
     // slot, so total lanes bound total continuous KV memory)
     let bucket_cap = core
@@ -675,85 +1192,174 @@ fn worker_loop_continuous(
         .unwrap_or(1);
     let batch_cap = cfg.max_batch.clamp(1, bucket_cap);
     loop {
-        // ---- 1. ingest channel traffic (block only when fully idle —
-        // drained batches retained as warm prefix caches don't count)
+        // ---- 1. ingest the inbox (park on the condvar only when fully
+        // idle — drained batches retained as warm prefix caches don't
+        // count; a sibling with queued work keeps the nap short so a
+        // steal opportunity is never slept through)
         let any_live = active.iter().any(|ab| !ab.is_empty());
-        let timeout = if any_live {
-            Duration::ZERO
-        } else if !batcher.is_empty() {
-            Duration::from_millis(1)
-        } else {
-            Duration::from_millis(200)
-        };
-        let mut msgs = Vec::new();
-        match rx.recv_timeout(timeout) {
-            Ok(m) => msgs.push(m),
-            Err(mpsc::RecvTimeoutError::Timeout) => {}
-            Err(mpsc::RecvTimeoutError::Disconnected) => shutdown = true,
+        let peers_queued = peers.iter().any(|p| {
+            p.id != shard.id && p.depth.load(Ordering::Relaxed) > 0
+        });
+        let mut inbox = shard.lock();
+        if !any_live
+            && !draining
+            && inbox.control.is_empty()
+            && !inbox.shutdown
+        {
+            let nap = if !inbox.batcher.is_empty() || peers_queued {
+                Duration::from_millis(1)
+            } else {
+                Duration::from_millis(200)
+            };
+            inbox = shard
+                .cv
+                .wait_timeout(inbox, nap)
+                .unwrap_or_else(|e| e.into_inner())
+                .0;
         }
-        while let Ok(m) = rx.try_recv() {
-            msgs.push(m);
+        let control = std::mem::take(&mut inbox.control);
+        if inbox.shutdown {
+            draining = true;
         }
-        for m in msgs {
-            match m {
-                RouterMsg::Request(b) => {
-                    let sub = *b;
-                    // tau stays per-lane in the step machine, so
-                    // overrides batch together without leaking
-                    let key = GroupKey::new(
-                        sub.req.backbone.clone(),
-                        sub.req.method,
-                    );
-                    batcher.push(Pending {
-                        key,
-                        enqueued: sub.submitted,
-                        deadline: sub.ctl.deadline,
-                        payload: sub,
-                    });
+        // ---- 1.5 graceful drain begins: answer every *queued* request
+        // with a terminal Aborted{"shutdown"} (the inbox refuses pushes
+        // once its shutdown flag is set, so nothing arrives after this
+        // sweep), then keep stepping the in-flight lanes below until
+        // they all finish naturally.
+        let mut drained: Vec<Pending<Submit>> = Vec::new();
+        if draining {
+            while let Some((_key, items)) = inbox.batcher.pop_any() {
+                drained.extend(items);
+            }
+        }
+        let queued_here = inbox.batcher.len();
+        shard.sync_depth(&inbox);
+        drop(inbox);
+        for p in drained {
+            queued.fetch_sub(1, Ordering::SeqCst);
+            stats.aborted_queued += 1;
+            p.payload.abort("shutdown");
+        }
+        for msg in control {
+            match msg {
+                ControlMsg::Metrics(tx) => {
+                    let _ = tx.send(core.metrics.clone());
                 }
-                RouterMsg::Metrics(tx) => {
-                    let _ = tx.send(core.metrics_json());
-                }
-                RouterMsg::Health(tx) => {
+                ControlMsg::Health(tx) => {
                     let _ = tx.send(health_json(
-                        core, &batcher, &active, &stats,
+                        core,
+                        shard.id,
+                        queued_here,
+                        &active,
+                        &stats,
                     ));
                 }
-                RouterMsg::Shutdown => shutdown = true,
             }
-        }
-        // ---- 1.5 graceful drain: on shutdown every queued request and
-        // in-flight lane gets a terminal Aborted{"shutdown"} event
-        // (instead of its channel silently dropping), KV state frees,
-        // and the worker exits immediately.
-        if shutdown {
-            while let Some((_key, items)) = batcher.pop_any() {
-                queued.fetch_sub(items.len(), Ordering::SeqCst);
-                for p in items {
-                    stats.aborted_queued += 1;
-                    p.payload.abort("shutdown");
-                }
-            }
-            for ab in active.iter_mut() {
-                for lane in ab.ticketed_lanes() {
-                    if let Some((t, o)) = ab.cancel(lane) {
-                        abort_lane(
-                            core, &ab.key, &t, &o, "shutdown", &mut stats,
-                        );
-                    }
-                }
-                stats.absorb(&ab.state);
-            }
-            return;
         }
         // ---- 1.6 reap expired queued requests every iteration: a dead
         // client's permit and terminal 504 must not wait for a free
         // lane of its key to show up (the worker wakes at least every
         // 200ms even when idle, so the delay is bounded by one wakeup)
-        for p in batcher.take_expired(Instant::now()) {
-            queued.fetch_sub(1, Ordering::SeqCst);
-            stats.aborted_queued += 1;
-            p.payload.abort("deadline expired before admission");
+        if !draining {
+            let expired = {
+                let mut inbox = shard.lock();
+                let v = inbox.batcher.take_expired(Instant::now());
+                shard.sync_depth(&inbox);
+                v
+            };
+            for p in expired {
+                queued.fetch_sub(1, Ordering::SeqCst);
+                stats.aborted_queued += 1;
+                p.payload.abort("deadline expired before admission");
+            }
+        }
+        // ---- 1.7 work stealing at the block boundary: capacity here
+        // must not idle while a sibling's queue holds requests that
+        // already waited out their batching window (`max_wait` is the
+        // age gate — a fresh affinity-routed arrival is left for its
+        // own shard). Lock discipline: never two inboxes at once — the
+        // victim's lock is released before our own is retaken, so steal
+        // cycles cannot deadlock.
+        if !draining && peers.len() > 1 {
+            let now = Instant::now();
+            let mut loot: Vec<Pending<Submit>> = Vec::new();
+            let mut reaped: Vec<Pending<Submit>> = Vec::new();
+            // (a) deficit steal: live batches with free lanes our own
+            // queue cannot fill
+            let (wants, idle) = {
+                let inbox = shard.lock();
+                let wants: Vec<(GroupKey, usize)> = active
+                    .iter()
+                    .filter_map(|ab| {
+                        let free = ab.free_lanes();
+                        let own = inbox.batcher.len_for(&ab.key);
+                        (free > own).then(|| (ab.key.clone(), free - own))
+                    })
+                    .collect();
+                let idle = inbox.batcher.is_empty()
+                    && active.iter().all(|ab| ab.is_empty());
+                (wants, idle)
+            };
+            for (key, mut need) in wants {
+                for victim in &peers {
+                    if need == 0 {
+                        break;
+                    }
+                    if victim.id == shard.id
+                        || victim.depth.load(Ordering::Relaxed) == 0
+                    {
+                        continue;
+                    }
+                    let mut vin = victim.lock();
+                    let (fresh, expired) = vin
+                        .batcher
+                        .steal_for(&key, need, now, cfg.max_wait);
+                    victim.sync_depth(&vin);
+                    drop(vin);
+                    need = need.saturating_sub(fresh.len());
+                    loot.extend(fresh);
+                    reaped.extend(expired);
+                }
+            }
+            // (b) idle steal: nothing of our own at all — take up to a
+            // batch of the oldest keys from the deepest sibling
+            if idle && loot.is_empty() {
+                let victim = peers
+                    .iter()
+                    .filter(|p| p.id != shard.id)
+                    .max_by_key(|p| p.depth.load(Ordering::Relaxed))
+                    .filter(|p| p.depth.load(Ordering::Relaxed) > 0);
+                if let Some(victim) = victim {
+                    let mut vin = victim.lock();
+                    for key in vin.batcher.keys_by_age() {
+                        if loot.len() >= batch_cap {
+                            break;
+                        }
+                        let (fresh, expired) = vin.batcher.steal_for(
+                            &key,
+                            batch_cap - loot.len(),
+                            now,
+                            cfg.max_wait,
+                        );
+                        loot.extend(fresh);
+                        reaped.extend(expired);
+                    }
+                    victim.sync_depth(&vin);
+                }
+            }
+            for p in reaped {
+                queued.fetch_sub(1, Ordering::SeqCst);
+                stats.aborted_queued += 1;
+                p.payload.abort("deadline expired before admission");
+            }
+            if !loot.is_empty() {
+                stats.stolen += loot.len() as u64;
+                let mut inbox = shard.lock();
+                for p in loot {
+                    inbox.batcher.push(p);
+                }
+                shard.sync_depth(&inbox);
+            }
         }
         // ---- 2. open machines for queued keys no live batch can host.
         // A block-step batch admits later arrivals mid-flight, so there
@@ -765,7 +1371,11 @@ fn worker_loop_continuous(
         // drain thanks to mid-flight refills) would starve every other
         // key forever. The overflow is bounded by the number of
         // distinct queued keys (backbone × method, a dozen at most).
-        for key in batcher.keys_by_age() {
+        let queued_keys = {
+            let inbox = shard.lock();
+            inbox.batcher.keys_by_age()
+        };
+        for key in queued_keys {
             let has_room = active
                 .iter()
                 .any(|ab| ab.key == key && ab.free_lanes() > 0);
@@ -828,8 +1438,16 @@ fn worker_loop_continuous(
                 Err(e) => {
                     // fail this key's queued requests (bad weights)
                     let msg = format!("decode failed: {e:#}");
-                    let (fresh, expired) =
-                        batcher.take_for(&key, usize::MAX, Instant::now());
+                    let (fresh, expired) = {
+                        let mut inbox = shard.lock();
+                        let r = inbox.batcher.take_for(
+                            &key,
+                            usize::MAX,
+                            Instant::now(),
+                        );
+                        shard.sync_depth(&inbox);
+                        r
+                    };
                     queued.fetch_sub(
                         fresh.len() + expired.len(),
                         Ordering::SeqCst,
@@ -855,8 +1473,14 @@ fn worker_loop_continuous(
                 if free == 0 {
                     break;
                 }
-                let (fresh, expired) =
-                    batcher.take_for(&ab.key, free, Instant::now());
+                let (fresh, expired) = {
+                    let mut inbox = shard.lock();
+                    let r = inbox
+                        .batcher
+                        .take_for(&ab.key, free, Instant::now());
+                    shard.sync_depth(&inbox);
+                    r
+                };
                 if fresh.is_empty() && expired.is_empty() {
                     break;
                 }
@@ -874,6 +1498,7 @@ fn worker_loop_continuous(
                         p.payload.abort("cancelled before admission");
                         continue;
                     }
+                    let affinity_hit = p.payload.affinity == shard.id;
                     let (ticket, req) = Ticket::from_submit(p.payload);
                     if ticket.events.send(LaneEvent::Admitted).is_err() {
                         // handle already dropped: the client is gone,
@@ -881,15 +1506,21 @@ fn worker_loop_continuous(
                         stats.aborted_queued += 1;
                         continue;
                     }
-                    if let Err((t, e)) =
-                        ab.admit(&req.prompt_ids, req.tau_conf, ticket)
-                    {
-                        let _ = t.events.send(LaneEvent::Aborted {
-                            reason: format!("admission failed: {e:#}"),
-                            steps: 0,
-                            model_calls: 0,
-                            committed_tokens: 0,
-                        });
+                    match ab.admit(&req.prompt_ids, req.tau_conf, ticket) {
+                        Ok(_) => {
+                            stats.admitted_requests += 1;
+                            if affinity_hit {
+                                stats.affinity_admissions += 1;
+                            }
+                        }
+                        Err((t, e)) => {
+                            let _ = t.events.send(LaneEvent::Aborted {
+                                reason: format!("admission failed: {e:#}"),
+                                steps: 0,
+                                model_calls: 0,
+                                committed_tokens: 0,
+                            });
+                        }
                     }
                 }
             }
@@ -987,6 +1618,18 @@ fn worker_loop_continuous(
             }
             !ab.poisoned
         });
+        // replica gauge: the dispatcher's least-loaded fallback reads
+        // live lanes without taking the inbox lock
+        let lanes: usize = active.iter().map(|ab| ab.live_lanes()).sum();
+        shard.in_flight.store(lanes, Ordering::Relaxed);
+        // drain completes once every in-flight lane has delivered its
+        // terminal event — nothing is cut short, nothing is dropped
+        if draining && active.iter().all(|ab| ab.is_empty()) {
+            for ab in &active {
+                stats.absorb(&ab.state);
+            }
+            return;
+        }
     }
 }
 
@@ -1067,7 +1710,8 @@ fn abort_lane(
 
 fn health_json(
     core: &ServingCore,
-    batcher: &DynamicBatcher<Submit>,
+    shard_id: usize,
+    queued_here: usize,
     active: &[ActiveBatch<Ticket>],
     stats: &ServeStats,
 ) -> Json {
@@ -1105,7 +1749,7 @@ fn health_json(
         ("kv_slots_in_use", Json::num(kv_in_use as f64)),
         ("kv_total_allocs", Json::num(kv_allocs as f64)),
         ("kv_shared_slots", Json::num(kv_shared_slots as f64)),
-        ("queued", Json::num(batcher.len() as f64)),
+        ("queued", Json::num(queued_here as f64)),
         // active = machines with live lanes (the pre-retention meaning);
         // drained machines kept only as warm prefix caches report
         // separately so "idle server" stays distinguishable
@@ -1120,6 +1764,15 @@ fn health_json(
         ("prefix_hits", Json::num(prefix_hits as f64)),
         ("prefix_hit_blocks", Json::num(prefix_hit_blocks as f64)),
         ("prefix_evictions", Json::num(prefix_evictions as f64)),
+        // per-replica identity + dispatcher-visible counters ("replica"
+        // is excluded from the cross-shard sum; the rest add up)
+        ("replica", Json::num(shard_id as f64)),
+        ("admitted_requests", Json::num(stats.admitted_requests as f64)),
+        (
+            "affinity_admissions",
+            Json::num(stats.affinity_admissions as f64),
+        ),
+        ("stolen", Json::num(stats.stolen as f64)),
     ])
 }
 
@@ -1129,62 +1782,45 @@ fn health_json(
 
 fn worker_loop_closed(
     core: &mut ServingCore,
-    rx: mpsc::Receiver<RouterMsg>,
-    cfg: RouterConfig,
+    shard: Arc<Shard>,
+    _cfg: RouterConfig,
+    replicas: usize,
     queued: Arc<AtomicUsize>,
 ) {
-    let mut batcher: DynamicBatcher<Submit> =
-        DynamicBatcher::new(cfg.max_batch, cfg.max_wait);
     // closed-batch admission accounting for /healthz: every request
     // dispatched into a group counts as an admission; mid-flight joins
     // and early retirement don't exist on this path, so those stay 0.
     let mut stats = ServeStats::default();
-    let mut shutdown = false;
+    // closed groups run to completion — there is no block boundary to
+    // steal at, so the closed path relies on dispatcher routing alone.
+    // The decode thread budget is split across replicas up front so N
+    // shards decoding concurrently never oversubscribe the host.
+    let threads = crate::coordinator::scheduler::decode_threads_shared(
+        &core.rt, replicas,
+    );
     loop {
-        let timeout = if batcher.is_empty() {
-            Duration::from_millis(200)
-        } else {
-            batcher
-                .next_deadline()
-                .map(|d| d.saturating_duration_since(Instant::now()))
-                .unwrap_or(Duration::from_millis(1))
-        };
-        match rx.recv_timeout(timeout) {
-            Ok(RouterMsg::Request(b)) => {
-                let sub = *b;
-                // fold the tau override into the key: a group is
-                // tau-uniform, so no request decodes with another
-                // request's threshold. Methods whose finalization
-                // ignores tau keep one group — no batch fragmentation
-                // over an override they would never read.
-                let tau = if sub.req.method.uses_tau_conf() {
-                    sub.req.tau_conf
-                } else {
-                    None
-                };
-                let key =
-                    GroupKey::new(sub.req.backbone.clone(), sub.req.method)
-                        .with_tau(tau);
-                batcher.push(Pending {
-                    key,
-                    enqueued: sub.submitted,
-                    deadline: sub.ctl.deadline,
-                    payload: sub,
-                });
-                // fall through: maybe this filled a bucket
-            }
-            Ok(RouterMsg::Metrics(tx)) => {
-                let _ = tx.send(core.metrics_json());
-                continue;
-            }
-            Ok(RouterMsg::Health(tx)) => {
-                let _ = tx.send(health_json(core, &batcher, &[], &stats));
-                continue;
-            }
-            Ok(RouterMsg::Shutdown) => shutdown = true,
-            Err(mpsc::RecvTimeoutError::Timeout) => {}
-            Err(mpsc::RecvTimeoutError::Disconnected) => shutdown = true,
+        let mut inbox = shard.lock();
+        if inbox.control.is_empty() && !inbox.shutdown {
+            let nap = if inbox.batcher.is_empty() {
+                Duration::from_millis(200)
+            } else {
+                inbox
+                    .batcher
+                    .next_deadline()
+                    .map(|d| {
+                        d.saturating_duration_since(Instant::now())
+                            .max(Duration::from_millis(1))
+                    })
+                    .unwrap_or(Duration::from_millis(1))
+            };
+            inbox = shard
+                .cv
+                .wait_timeout(inbox, nap)
+                .unwrap_or_else(|e| e.into_inner())
+                .0;
         }
+        let control = std::mem::take(&mut inbox.control);
+        let shutdown = inbox.shutdown;
         // drain every ready group this wakeup, then dispatch them
         // together — independent groups decode concurrently. The closed
         // path runs groups to completion, so there is no lane to cancel
@@ -1192,14 +1828,37 @@ fn worker_loop_closed(
         // here); queued-deadline expiry IS enforced, at dispatch: an
         // expired request never costs a group slot or a decode, same
         // contract as the continuous path's `take_for`.
-        let mut groups: Vec<(GroupKey, Group)> = Vec::new();
+        let mut popped: Vec<(GroupKey, Group)> = Vec::new();
         loop {
             let item = if shutdown {
-                batcher.pop_any()
+                inbox.batcher.pop_any()
             } else {
-                batcher.pop_ready(Instant::now())
+                inbox.batcher.pop_ready(Instant::now())
             };
-            let Some((key, items)) = item else { break };
+            let Some(g) = item else { break };
+            popped.push(g);
+        }
+        let queued_here = inbox.batcher.len();
+        shard.sync_depth(&inbox);
+        drop(inbox);
+        for msg in control {
+            match msg {
+                ControlMsg::Metrics(tx) => {
+                    let _ = tx.send(core.metrics.clone());
+                }
+                ControlMsg::Health(tx) => {
+                    let _ = tx.send(health_json(
+                        core,
+                        shard.id,
+                        queued_here,
+                        &[],
+                        &stats,
+                    ));
+                }
+            }
+        }
+        let mut groups: Vec<(GroupKey, Group)> = Vec::new();
+        for (key, items) in popped {
             // pushes and pops are balanced, so a plain decrement is
             // exact (the old `min(load)` clamp was a racy read-modify-
             // write that could leak permits under concurrent submits)
@@ -1207,7 +1866,12 @@ fn worker_loop_closed(
             let now = Instant::now();
             let mut live: Group = Vec::with_capacity(items.len());
             for p in items {
-                if p.deadline.is_some_and(|d| now > d) {
+                if shutdown {
+                    // drain contract: queued work gets its terminal
+                    // Aborted{"shutdown"} instead of a silent drop
+                    stats.aborted_queued += 1;
+                    p.payload.abort("shutdown");
+                } else if p.deadline.is_some_and(|d| now > d) {
                     stats.aborted_queued += 1;
                     p.payload.abort("deadline expired before admission");
                 } else if p.payload.events.send(LaneEvent::Admitted).is_err()
@@ -1217,6 +1881,10 @@ fn worker_loop_closed(
                     stats.aborted_queued += 1;
                 } else {
                     stats.closed_total_admissions += 1;
+                    stats.admitted_requests += 1;
+                    if p.payload.affinity == shard.id {
+                        stats.affinity_admissions += 1;
+                    }
                     live.push(p);
                 }
             }
@@ -1224,8 +1892,10 @@ fn worker_loop_closed(
                 groups.push((key, live));
             }
         }
-        run_groups(core, groups);
-        if shutdown && batcher.is_empty() {
+        run_groups(core, groups, threads);
+        if shutdown {
+            // the inbox refuses pushes once `shutdown` is set, so the
+            // pop_any sweep above has already emptied it for good
             return;
         }
     }
@@ -1296,11 +1966,14 @@ fn respond_group(
 /// groups fan out on scoped threads, each with its own KV pool and slot
 /// set, then respond in group order — decode traces are identical to
 /// running the groups back to back.
-fn run_groups(core: &mut ServingCore, groups: Vec<(GroupKey, Group)>) {
+fn run_groups(
+    core: &mut ServingCore,
+    groups: Vec<(GroupKey, Group)>,
+    threads: usize,
+) {
     if groups.is_empty() {
         return;
     }
-    let threads = crate::coordinator::scheduler::decode_threads(&core.rt);
     // resolve every group's weights up front; any load failure drops to
     // the serial path, which reproduces the error per group
     let all_loaded = groups.iter().all(|(key, _)| {

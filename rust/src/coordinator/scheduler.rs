@@ -311,6 +311,14 @@ pub fn decode_threads(rt: &Runtime) -> usize {
         .min(cap)
 }
 
+/// `decode_threads` divided evenly across `replicas` concurrent shard
+/// workers, never below 1 — N replicas decoding at once share the same
+/// machine, so each gets a proportional slice of the thread budget
+/// instead of all of them fanning out to the full parallelism.
+pub fn decode_threads_shared(rt: &Runtime, replicas: usize) -> usize {
+    (decode_threads(rt) / replicas.max(1)).max(1)
+}
+
 /// Borrow `real` lanes and pad to `bucket` by aliasing the last live
 /// lane — no prompt buffer is ever cloned for a dead lane.
 fn pad_chunk(real: &[Vec<i32>], bucket: usize) -> Vec<&[i32]> {

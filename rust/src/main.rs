@@ -55,13 +55,14 @@ fn print_help() {
          USAGE: cdlm <command> [--flags]\n\
          \n\
          COMMANDS:\n\
-         \x20 serve      --addr 127.0.0.1:8472 --backbone dream --max-batch 4 --max-wait-ms 25 [--closed-batch] [--no-prefix-cache] [--io-timeout-ms 10000]\n\
+         \x20 serve      --addr 127.0.0.1:8472 --backbone dream --max-batch 4 --max-wait-ms 25 [--replicas 1] [--max-queue-depth 256] [--max-per-client 0] [--closed-batch] [--no-prefix-cache] [--io-timeout-ms 10000] [--http-threads 8] [--blocking-http]\n\
          \x20 generate   --prompt 'q:3*4+5=?' --method cdlm --backbone dream [--tau 0.9]\n\
          \x20 eval       --methods cdlm,ar --families chain-arith --n 16 --backbone dream\n\
-         \x20 bench      --methods all --batches 1,2,4,8 --n 16 --out BENCH_decode.json [--check-baseline BENCH_baseline.json] [--cancel-block 2]\n\
+         \x20 bench      --methods all --batches 1,2,4,8 --n 16 --out BENCH_decode.json [--replicas 1] [--check-baseline BENCH_baseline.json] [--cancel-block 2]\n\
          \x20 bench      --scenario serving --method cdlm --n 32 --arrival-ms 3 --out BENCH_serving.json\n\
          \x20 bench      --scenario prefix --method cdlm --n 24 --distinct 6 --arrival-ms 2 --out BENCH_prefix.json\n\
          \x20 bench      --scenario stream --method cdlm --n 16 --arrival-ms 2 --cancel-every 4 --cancel-after-blocks 1 --out BENCH_stream.json\n\
+         \x20 bench      --scenario shard --method cdlm --n 24 --distinct 6 --replicas 4 --arrival-ms 2 --out BENCH_shard.json\n\
          \x20 analysis   [--fig 4|9]\n\
          \x20 info\n"
     );
@@ -75,7 +76,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             max_wait: Duration::from_millis(
                 args.get_usize("max-wait-ms", 25) as u64,
             ),
-            max_queue: args.get_usize("max-queue", 256),
+            // --max-queue-depth is the documented spelling; --max-queue
+            // stays accepted for older scripts
+            max_queue: args.get_usize(
+                "max-queue-depth",
+                args.get_usize("max-queue", 256),
+            ),
             pool_capacity: args.get_usize("pool", 64),
             continuous: !args.has("closed-batch"),
             max_active: args.get_usize("max-active", 4),
@@ -83,6 +89,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 args.get_usize("step-delay-ms", 0) as u64,
             ),
             prefix_cache: !args.has("no-prefix-cache"),
+            replicas: args.get_usize("replicas", 1).max(1),
+            max_per_client: args.get_usize("max-per-client", 0),
         },
     )?;
     server::serve(
@@ -93,6 +101,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             io_timeout: Duration::from_millis(
                 args.get_usize("io-timeout-ms", 10_000) as u64,
             ),
+            http_threads: args.get_usize("http-threads", 8),
+            blocking: args.has("blocking-http"),
         },
     )
 }
@@ -210,6 +220,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         "serving" => return cmd_bench_serving(args),
         "prefix" => return cmd_bench_prefix(args),
         "stream" => return cmd_bench_stream(args),
+        "shard" => return cmd_bench_shard(args),
         _ => {}
     }
     let n = args.get_usize("n", 16);
@@ -377,6 +388,35 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             ("total_model_calls", Json::num(total_calls as f64)),
         ]));
     }
+    // ---- routed shard-invariance cells: the same prompts driven
+    // through the sharded router (replica count from --replicas),
+    // closed-loop so every request decodes in a solo cohort. Per-lane
+    // accounting in a cohort depends on the slowest cohort mate (the
+    // lockstep refinement loop), so solo cohorts are the composition
+    // every replica count reproduces exactly — these integers are
+    // byte-identical whether the dispatcher ran 1 shard or 4, and the
+    // CI matrix gates both against the same committed baseline.
+    let replicas = args.get_usize("replicas", 1).max(1);
+    for m in &methods {
+        let (requests, tokens, total_steps, total_calls) =
+            routed_solo_cells(&prompts, &backbone, *m, replicas, opts.tau_conf)?;
+        println!(
+            "{:<14} routed x{replicas}: requests {requests}, tokens {tokens}, \
+             steps {total_steps}, calls {total_calls}",
+            m.name(),
+        );
+        results.push(Json::obj(vec![
+            ("method", Json::str(m.name())),
+            ("batch", Json::num(1.0)),
+            // marks the cell as router-driven: keyed separately from the
+            // direct batch-1 cell, identical accounting by construction
+            ("routed", Json::num(1.0)),
+            ("requests", Json::num(requests as f64)),
+            ("tokens", Json::num(tokens as f64)),
+            ("total_steps", Json::num(total_steps as f64)),
+            ("total_model_calls", Json::num(total_calls as f64)),
+        ]));
+    }
     let doc = Json::obj(vec![
         ("schema", Json::str("cdlm.bench.decode/v1")),
         ("backend", Json::str(core.rt.backend_name())),
@@ -391,6 +431,10 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         ("n", Json::num(n as f64)),
         ("gen_len", Json::num(geom.gen_len as f64)),
         ("block_size", Json::num(geom.block_size as f64)),
+        // how many router shards the routed cells ran on — recorded for
+        // the CI matrix logs, never part of the cell identity (the whole
+        // point is that the cells don't change with it)
+        ("replicas", Json::num(replicas as f64)),
         ("results", Json::Arr(results)),
     ]);
     std::fs::write(&out_path, doc.to_string())?;
@@ -441,6 +485,258 @@ fn drive_trace(
     let health = router.health()?;
     router.shutdown();
     Ok((responses, wall_s, health))
+}
+
+/// Closed-loop solo decode of every prompt through a sharded router:
+/// submit one request, wait for its terminal response, then the next —
+/// each request therefore decodes in a cohort of one on whichever
+/// replica the dispatcher picked, and its step/model-call accounting is
+/// a pure function of the request. Returns the summed accounting cell
+/// `(requests, tokens, total_steps, total_model_calls)`.
+fn routed_solo_cells(
+    prompts: &[Vec<i32>],
+    backbone: &str,
+    method: Method,
+    replicas: usize,
+    tau: f32,
+) -> anyhow::Result<(usize, usize, u64, u64)> {
+    let router = Router::start(
+        artifacts_dir(),
+        RouterConfig {
+            max_queue: prompts.len().max(256),
+            replicas,
+            // repeated PAD-heavy prompts must not skip prefills: the
+            // cell gates cold accounting
+            prefix_cache: false,
+            ..RouterConfig::default()
+        },
+    )?;
+    let (mut tokens, mut steps, mut calls) = (0usize, 0u64, 0u64);
+    for p in prompts {
+        let mut req = GenerateRequest::new(backbone, method, p.clone());
+        req.tau_conf = Some(tau);
+        let resp = router
+            .submit(req)?
+            .wait()
+            .map_err(|e| anyhow::anyhow!("routed decode aborted: {e}"))?;
+        tokens += resp.gen_len;
+        steps += resp.steps;
+        calls += resp.model_calls;
+    }
+    router.shutdown();
+    Ok((prompts.len(), tokens, steps, calls))
+}
+
+/// Shard bench (`--scenario shard`): the same open-loop arrival trace
+/// of templated traffic (`--distinct` unique prompts round-robined over
+/// `--n` arrivals) at 1 replica vs `--replicas`, reporting TTFT
+/// percentiles, per-replica admissions, affinity hit rate, and steal
+/// counts; then a saturation burst against a deliberately tiny queue to
+/// record the admission-control refusals (429s + `Retry-After` hints).
+/// Schema `cdlm.bench.shard/v1`, run as a CI smoke with an artifact —
+/// latency-shaped numbers stay unasserted, and the accounting-grade
+/// shard invariance is gated by the routed cells of the decode bench.
+fn cmd_bench_shard(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 24);
+    let distinct = args.get_usize("distinct", 6).clamp(1, n.max(1));
+    let replicas = args.get_usize("replicas", 4).max(1);
+    let arrival =
+        Duration::from_millis(args.get_usize("arrival-ms", 2) as u64);
+    let max_batch = args.get_usize("max-batch", 2);
+    let backbone = args.get_or("backbone", "dream").to_string();
+    let out_path = args.get_or("out", "BENCH_shard.json").to_string();
+    let method = Method::from_name(args.get_or("method", "cdlm"))
+        .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
+
+    let probe = ServingCore::load(&artifacts_dir(), 1)?;
+    let geom = probe.rt.manifest.geometry.clone();
+    let samples = workload::generate(Family::ChainArith, distinct, 0xE7A1);
+    let base: Vec<Vec<i32>> = samples
+        .iter()
+        .map(|s| {
+            workload::encode_example(
+                &probe.tokenizer,
+                Family::ChainArith,
+                s,
+                geom.prompt_len,
+                geom.gen_len,
+            )
+            .map(|e| e.prompt_ids)
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let prompts: Vec<Vec<i32>> =
+        (0..n).map(|i| base[i % distinct].clone()).collect();
+    let backend = probe.rt.backend_name();
+    drop(probe);
+
+    // ---- phase A: the same trace at 1 replica vs N
+    println!(
+        "{:<10} {:>11} {:>11} {:>9} {:>9} {:>7} {:>9}",
+        "replicas", "ttft-p50", "ttft-p95", "affinity", "spill", "stolen",
+        "wall(s)"
+    );
+    let mut variants = Vec::new();
+    let mut counts = vec![1];
+    if replicas > 1 {
+        counts.push(replicas);
+    }
+    for r in counts {
+        let (responses, wall_s, health) = drive_trace(
+            RouterConfig {
+                max_batch,
+                max_queue: n.max(256),
+                replicas: r,
+                ..RouterConfig::default()
+            },
+            &prompts,
+            &backbone,
+            method,
+            arrival,
+        )?;
+        let mut ttft = Summary::new();
+        for resp in &responses {
+            ttft.push(resp.ttft.as_secs_f64() * 1e3);
+        }
+        let stat =
+            |k: &str| health.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        let admitted = stat("admitted_requests");
+        let affinity_rate = if admitted > 0.0 {
+            stat("affinity_admissions") / admitted
+        } else {
+            0.0
+        };
+        // per-replica breakdown straight from the merged health's
+        // "shards" array
+        let per_replica: Vec<Json> = health
+            .get("shards")
+            .and_then(Json::as_arr)
+            .map(|shards| {
+                shards
+                    .iter()
+                    .map(|s| {
+                        let g = |k: &str| {
+                            s.get(k).and_then(Json::as_f64).unwrap_or(0.0)
+                        };
+                        Json::obj(vec![
+                            ("replica", Json::num(g("replica"))),
+                            (
+                                "admitted_requests",
+                                Json::num(g("admitted_requests")),
+                            ),
+                            (
+                                "affinity_admissions",
+                                Json::num(g("affinity_admissions")),
+                            ),
+                            ("stolen", Json::num(g("stolen"))),
+                        ])
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        println!(
+            "{:<10} {:>11.2} {:>11.2} {:>8.0}% {:>9} {:>7} {:>9.2}",
+            r,
+            ttft.percentile(50.0),
+            ttft.percentile(95.0),
+            affinity_rate * 100.0,
+            stat("routed_spill") as u64,
+            stat("stolen") as u64,
+            wall_s
+        );
+        variants.push(Json::obj(vec![
+            ("replicas", Json::num(r as f64)),
+            ("requests", Json::num(responses.len() as f64)),
+            ("ttft_p50_ms", Json::num(ttft.percentile(50.0))),
+            ("ttft_p95_ms", Json::num(ttft.percentile(95.0))),
+            ("ttft_mean_ms", Json::num(ttft.mean())),
+            ("wall_s", Json::num(wall_s)),
+            ("admitted_requests", Json::num(admitted)),
+            ("affinity_admissions", Json::num(stat("affinity_admissions"))),
+            ("affinity_hit_rate", Json::num(affinity_rate)),
+            ("routed_affinity", Json::num(stat("routed_affinity"))),
+            ("routed_spill", Json::num(stat("routed_spill"))),
+            ("stolen", Json::num(stat("stolen"))),
+            ("per_replica", Json::Arr(per_replica)),
+        ]));
+    }
+
+    // ---- phase B: saturation burst against a deliberately tiny queue.
+    // step_delay holds lanes in flight so the burst meets a full queue;
+    // the refusals and their Retry-After hints are the product here.
+    let router = Router::start(
+        artifacts_dir(),
+        RouterConfig {
+            max_batch: 1,
+            max_active: 1,
+            max_queue: 2,
+            replicas,
+            step_delay: Duration::from_millis(20),
+            // tight on purpose: the two burst clients trip the fairness
+            // cap as well as the full queue
+            max_per_client: 2,
+            ..RouterConfig::default()
+        },
+    )?;
+    let mut handles = Vec::new();
+    let (mut rejected_429, mut rejected_other) = (0u64, 0u64);
+    let mut retry_hints = Summary::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let mut req =
+            GenerateRequest::new(backbone.as_str(), method, p.clone());
+        req.client = Some(format!("burst-client-{}", i % 2));
+        match router.submit(req) {
+            Ok(h) => handles.push(h),
+            Err(e) if e.status() == 429 => {
+                rejected_429 += 1;
+                if let Some(d) = e.retry_after() {
+                    retry_hints.push(d.as_secs_f64());
+                }
+            }
+            Err(_) => rejected_other += 1,
+        }
+    }
+    let accepted = handles.len();
+    for h in handles {
+        h.wait().map_err(|e| anyhow::anyhow!("burst decode failed: {e}"))?;
+    }
+    let health = router.health()?;
+    let stat = |k: &str| health.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    let saturation = Json::obj(vec![
+        ("submitted", Json::num(n as f64)),
+        ("accepted", Json::num(accepted as f64)),
+        ("rejected_429", Json::num(rejected_429 as f64)),
+        ("rejected_other", Json::num(rejected_other as f64)),
+        ("rejected_queue_full", Json::num(stat("rejected_queue_full"))),
+        ("rejected_client_cap", Json::num(stat("rejected_client_cap"))),
+        ("retry_after_mean_s", Json::num(retry_hints.mean())),
+    ]);
+    router.shutdown();
+    println!(
+        "saturation burst: {accepted}/{n} accepted, {rejected_429} x 429 \
+         (queue_full {}, client_cap {}), mean Retry-After {:.1}s",
+        stat("rejected_queue_full"),
+        stat("rejected_client_cap"),
+        retry_hints.mean()
+    );
+
+    let doc = Json::obj(vec![
+        ("schema", Json::str("cdlm.bench.shard/v1")),
+        ("backend", Json::str(backend)),
+        ("backbone", Json::str(backbone.as_str())),
+        ("method", Json::str(method.name())),
+        ("n", Json::num(n as f64)),
+        ("distinct_prompts", Json::num(distinct as f64)),
+        ("replicas", Json::num(replicas as f64)),
+        ("arrival_ms", Json::num(arrival.as_millis() as f64)),
+        ("max_batch", Json::num(max_batch as f64)),
+        ("gen_len", Json::num(geom.gen_len as f64)),
+        ("block_size", Json::num(geom.block_size as f64)),
+        ("variants", Json::Arr(variants)),
+        ("saturation", saturation),
+    ]);
+    std::fs::write(&out_path, doc.to_string())?;
+    println!("results -> {out_path}");
+    Ok(())
 }
 
 /// One serving-bench pass: staggered arrivals through a fresh router.

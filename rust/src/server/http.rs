@@ -1,34 +1,48 @@
-//! HTTP/1.1 API over std::net — one handler thread per connection.
-//! Handlers never touch XLA state: they tokenize, submit to the router
-//! (whose worker thread owns the PJRT runtime), and relay lane events.
+//! HTTP/1.1 API over std::net. The default front door is a
+//! **nonblocking event loop**: one thread multiplexes every connection
+//! (accept burst, incremental request parsing, `try_next_event` polling
+//! of lane pipelines, buffered writes), so hundreds of concurrent
+//! streaming clients cost file descriptors, not threads. The legacy
+//! thread-per-connection pool (`ServerConfig::blocking`, pool size
+//! `http_threads`) is kept for comparison and as a fallback. Handlers
+//! never touch XLA state: they tokenize, submit to the router (whose
+//! shard workers own the runtime), and relay lane events.
 //!
 //!   POST /generate   {"prompt": str, "backbone": str?, "method": str?,
 //!                     "tau_conf": num?, "timeout_ms": num?,
-//!                     "max_new_tokens": num?, "stream": bool?}
+//!                     "max_new_tokens": num?, "stream": bool?,
+//!                     "client_id": str?}
 //!                    -> text + §A.3 counters + ttft_ms/ttlt_ms
 //!                    (queueing included); with "stream": true the
 //!                    response is chunked NDJSON, one lane event per
 //!                    line (see rust/README.md "The streaming wire
 //!                    protocol")
 //!   GET  /metrics    per-(backbone, method) §A.3 aggregates + wasted
-//!                    work of aborted lanes
+//!                    work of aborted lanes, merged across replicas
 //!   GET  /healthz    liveness + platform info + continuous-batching
-//!                    state (in_flight_lanes, active_batches,
-//!                    total/mid-flight admissions, retired_early,
-//!                    aborted_queued/aborted_inflight)
+//!                    state, summed across replicas, with the
+//!                    per-replica breakdown under "shards" and the
+//!                    dispatcher's routing/rejection counters
 //!
-//! Streaming cancellation: every chunk write runs under the socket's
-//! `io_timeout`; a failed or timed-out write marks the client gone,
-//! cancels the lane through the request handle, and the worker frees
-//! its KV slot + prefix-chain pin at the next block boundary.
+//! Admission refusals map straight from [`SubmitError`]: 400 for
+//! malformed requests, 429 (+ `Retry-After`) for a full queue or a
+//! client over its fairness cap, 503 (+ `Retry-After`) while draining.
+//! `client_id` (default: peer IP) names the fairness bucket.
+//!
+//! Streaming cancellation: a failed or stalled-past-`io_timeout` write
+//! marks the client gone, cancels the lane through the request handle,
+//! and the worker frees its KV slot + prefix-chain pin at the next
+//! block boundary.
 
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::coordinator::router::TryEvent;
 use crate::coordinator::{
     GenerateRequest, LaneEvent, Method, ResponseHandle, Router,
 };
@@ -39,11 +53,31 @@ use crate::workload;
 pub struct ServerConfig {
     pub addr: String,
     pub default_backbone: String,
-    /// Per-socket read/write timeout. The handler pool is 8 threads;
-    /// without this, 8 idle or slow-loris connections pin the whole
-    /// server — every blocking socket syscall must be able to give up.
-    /// `Duration::ZERO` disables the timeouts (blocking sockets).
+    /// Connection inactivity budget. Event loop: a connection that has
+    /// not delivered a full request within this budget of its accept is
+    /// dropped, and a streaming peer that stalls writes this long is
+    /// treated as gone. Blocking pool: per-socket read/write timeout.
+    /// `Duration::ZERO` disables the timeouts.
     pub io_timeout: Duration,
+    /// Handler threads for the legacy blocking front door (it used to
+    /// be hardcoded to 8). Ignored by the event loop, which multiplexes
+    /// every connection on one thread.
+    pub http_threads: usize,
+    /// `true` selects the legacy thread-per-connection front door;
+    /// default is the nonblocking event loop.
+    pub blocking: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".into(),
+            default_backbone: "dream".into(),
+            io_timeout: Duration::from_secs(10),
+            http_threads: 8,
+            blocking: false,
+        }
+    }
 }
 
 /// Request-size guards: a drip-feeding (slow-loris) client that stays
@@ -53,6 +87,9 @@ pub struct ServerConfig {
 const MAX_HEADERS: usize = 64;
 const MAX_LINE_BYTES: usize = 8 * 1024;
 const MAX_BODY_BYTES: usize = 1024 * 1024;
+/// Lane events relayed per connection per event-loop sweep (bounds how
+/// long one busy stream can monopolize the loop).
+const MAX_EVENTS_PER_SWEEP: usize = 64;
 
 fn in_budget(deadline: &Option<std::time::Instant>) -> bool {
     match deadline {
@@ -89,7 +126,9 @@ fn read_line_within(
 
 /// Parse one HTTP request (method, path, body). `budget` is the total
 /// wall-clock allowance for reading the request; the socket's own
-/// read timeout bounds each syscall, this bounds their sum.
+/// read timeout bounds each syscall, this bounds their sum. (Blocking
+/// front door only; the event loop parses incrementally with
+/// `try_parse_request`.)
 fn read_request(
     stream: &mut TcpStream,
     budget: Option<std::time::Duration>,
@@ -129,20 +168,39 @@ fn read_request(
     Ok((method, path, String::from_utf8_lossy(&body).into_owned()))
 }
 
-fn respond(stream: &mut TcpStream, status: u16, body: &str) {
+/// Serialize one response. `retry_after` adds the `Retry-After` header
+/// (whole seconds, floor 1) on 429/503 admission refusals.
+fn response_bytes(
+    status: u16,
+    retry_after: Option<Duration>,
+    body: &str,
+) -> Vec<u8> {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
         429 => "Too Many Requests",
+        503 => "Service Unavailable",
         504 => "Gateway Timeout",
         _ => "Internal Server Error",
     };
-    let _ = write!(
-        stream,
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+    let retry = retry_after
+        .map(|d| format!("Retry-After: {}\r\n", d.as_secs().max(1)))
+        .unwrap_or_default();
+    format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n{retry}Connection: close\r\n\r\n{body}",
         body.len()
-    );
+    )
+    .into_bytes()
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    status: u16,
+    retry_after: Option<Duration>,
+    body: &str,
+) {
+    let _ = stream.write_all(&response_bytes(status, retry_after, body));
 }
 
 fn err_json(msg: &str) -> String {
@@ -164,11 +222,14 @@ pub fn encode_user_prompt(
 }
 
 /// Parse a `/generate` body into a router request plus the stream flag.
+/// `peer_ip` seeds the fairness identity when the body carries no
+/// `client_id`.
 fn parse_generate(
     tok: &Tokenizer,
     router: &Router,
     default_backbone: &str,
     body: &str,
+    peer_ip: Option<&str>,
 ) -> Result<(GenerateRequest, bool), (u16, String)> {
     let req = Json::parse(body)
         .map_err(|e| (400, err_json(&format!("bad json: {e}"))))?;
@@ -205,6 +266,11 @@ fn parse_generate(
         .filter(|&n| n > 0);
     let stream =
         req.get("stream").and_then(Json::as_bool).unwrap_or(false);
+    let client = req
+        .get("client_id")
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .or_else(|| peer_ip.map(str::to_string));
     Ok((
         GenerateRequest {
             backbone,
@@ -213,6 +279,7 @@ fn parse_generate(
             tau_conf,
             timeout,
             max_new_tokens,
+            client,
         },
         stream,
     ))
@@ -243,9 +310,18 @@ fn finished_json(
     ]
 }
 
+/// Map a terminal `Aborted` reason to a status: deadline expiries are
+/// the client's budget (504), everything else is a server-side abort.
+fn abort_status(reason: &str) -> u16 {
+    if reason.contains("deadline") {
+        504
+    } else {
+        500
+    }
+}
+
 /// One-shot `/generate`: drain the event pipeline to its terminal
-/// event. An aborted deadline maps to 504 so clients can tell a budget
-/// expiry from a server fault.
+/// event (blocking front door).
 fn handle_generate(
     handle: &ResponseHandle,
     method: Method,
@@ -259,36 +335,95 @@ fn handle_generate(
             ));
             (200, j.to_string())
         }
-        Err(reason) if reason.contains("deadline") => {
-            (504, err_json(&reason))
-        }
-        Err(reason) => (500, err_json(&reason)),
+        Err(reason) => (abort_status(&reason), err_json(&reason)),
     }
 }
 
-/// Write one chunked-transfer chunk (a single NDJSON event line).
-fn write_chunk(stream: &mut TcpStream, line: &str) -> std::io::Result<()> {
+/// Serialize one lane event to its NDJSON wire line; returns the line
+/// and whether it is terminal. `first_delta` feeds the streamed
+/// `finished` event's socket-observed TTFT.
+fn event_line(
+    event: LaneEvent,
+    method: Method,
+    arrived: Instant,
+    first_delta: Option<Instant>,
+) -> (String, bool) {
+    match event {
+        LaneEvent::Admitted => (
+            Json::obj(vec![("event", Json::str("admitted"))]).to_string(),
+            false,
+        ),
+        LaneEvent::Committed { block, text, tokens } => (
+            Json::obj(vec![
+                ("event", Json::str("delta")),
+                ("block", Json::num(block as f64)),
+                ("text", Json::str(text)),
+                ("tokens", Json::num(tokens as f64)),
+            ])
+            .to_string(),
+            false,
+        ),
+        LaneEvent::Finished(resp) => {
+            // satellite fix (PR 5): a streamed client's TTFT is the
+            // first delta chunk it actually received, not the
+            // worker-side first-token stamp (which ignores socket
+            // delivery)
+            let ttft_ms = first_delta
+                .map(|t| (t - arrived).as_secs_f64() * 1e3)
+                .unwrap_or(resp.ttft.as_secs_f64() * 1e3);
+            let mut fields = vec![("event", Json::str("finished"))];
+            fields.extend(finished_json(&resp, method, ttft_ms));
+            (Json::obj(fields).to_string(), true)
+        }
+        LaneEvent::Aborted { reason, steps, model_calls, committed_tokens } => (
+            Json::obj(vec![
+                ("event", Json::str("aborted")),
+                ("reason", Json::str(reason)),
+                ("steps", Json::num(steps as f64)),
+                ("model_calls", Json::num(model_calls as f64)),
+                (
+                    "committed_tokens",
+                    Json::num(committed_tokens as f64),
+                ),
+            ])
+            .to_string(),
+            true,
+        ),
+    }
+}
+
+const STREAM_HEADER: &[u8] =
+    b"HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\n\
+      Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n";
+
+/// Append one chunked-transfer chunk (a single NDJSON event line).
+fn push_chunk(out: &mut Vec<u8>, line: &str) {
     // each event is one chunk: "<hex len>\r\n<json>\n\r\n"
+    out.extend_from_slice(
+        format!("{:x}\r\n{line}\n\r\n", line.len() + 1).as_bytes(),
+    );
+}
+
+/// Write one chunked-transfer chunk (blocking front door).
+fn write_chunk(stream: &mut TcpStream, line: &str) -> std::io::Result<()> {
     write!(stream, "{:x}\r\n{line}\n\r\n", line.len() + 1)?;
     stream.flush()
 }
 
-/// Streaming `/generate` (`"stream": true`): chunked transfer, one
-/// JSON event per line, written as each lane event arrives —
-/// `admitted`, `delta` per finalized block, then exactly one terminal
-/// `finished`/`aborted` line followed by the chunked-transfer
-/// terminator. A failed chunk write (disconnect, or a peer stalled past
-/// `io_timeout` — the per-chunk write budget) cancels the lane so the
-/// worker reclaims its KV at the next block boundary.
+/// Streaming `/generate` (`"stream": true`), blocking front door:
+/// chunked transfer, one JSON event per line, written as each lane
+/// event arrives — `admitted`, `delta` per finalized block, then
+/// exactly one terminal `finished`/`aborted` line followed by the
+/// chunked-transfer terminator. A failed chunk write (disconnect, or a
+/// peer stalled past `io_timeout` — the per-chunk write budget) cancels
+/// the lane so the worker reclaims its KV at the next block boundary.
 fn handle_generate_stream(
     stream: &mut TcpStream,
     handle: &ResponseHandle,
     method: Method,
     arrived: Instant,
 ) {
-    let header = "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\n\
-                  Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n";
-    if stream.write_all(header.as_bytes()).is_err() {
+    if stream.write_all(STREAM_HEADER).is_err() {
         handle.cancel();
         return;
     }
@@ -305,48 +440,8 @@ fn handle_generate_stream(
             break;
         };
         let is_delta = matches!(&event, LaneEvent::Committed { .. });
-        let (line, terminal) = match event {
-            LaneEvent::Admitted => (
-                Json::obj(vec![("event", Json::str("admitted"))])
-                    .to_string(),
-                false,
-            ),
-            LaneEvent::Committed { block, text, tokens } => (
-                Json::obj(vec![
-                    ("event", Json::str("delta")),
-                    ("block", Json::num(block as f64)),
-                    ("text", Json::str(text)),
-                    ("tokens", Json::num(tokens as f64)),
-                ])
-                .to_string(),
-                false,
-            ),
-            LaneEvent::Finished(resp) => {
-                // satellite fix: a streamed client's TTFT is the first
-                // delta chunk it actually received, not the worker-side
-                // first-token stamp (which ignores socket delivery)
-                let ttft_ms = first_delta
-                    .map(|t| (t - arrived).as_secs_f64() * 1e3)
-                    .unwrap_or(resp.ttft.as_secs_f64() * 1e3);
-                let mut fields = vec![("event", Json::str("finished"))];
-                fields.extend(finished_json(&resp, method, ttft_ms));
-                (Json::obj(fields).to_string(), true)
-            }
-            LaneEvent::Aborted { reason, steps, model_calls, committed_tokens } => (
-                Json::obj(vec![
-                    ("event", Json::str("aborted")),
-                    ("reason", Json::str(reason)),
-                    ("steps", Json::num(steps as f64)),
-                    ("model_calls", Json::num(model_calls as f64)),
-                    (
-                        "committed_tokens",
-                        Json::num(committed_tokens as f64),
-                    ),
-                ])
-                .to_string(),
-                true,
-            ),
-        };
+        let (line, terminal) =
+            event_line(event, method, arrived, first_delta);
         if write_chunk(stream, &line).is_err() {
             // client gone: cancel the lane and stop relaying. The
             // dropped handle double-covers this (Committed sends fail),
@@ -365,6 +460,486 @@ fn handle_generate_stream(
     let _ = stream.write_all(b"0\r\n\r\n");
 }
 
+// ---------------------------------------------------------------------------
+// Nonblocking event-loop front door (default)
+// ---------------------------------------------------------------------------
+
+/// Scan `buf` for one complete HTTP request.
+///
+/// Returns `Ok(Some((method, path, body)))` once the head and the full
+/// `Content-Length` body have arrived, `Ok(None)` when more bytes are
+/// needed, and `Err(message)` for malformed or oversized requests.
+fn try_parse_request(
+    buf: &[u8],
+) -> Result<Option<(String, String, String)>, String> {
+    let Some(head_end) =
+        buf.windows(4).position(|w| w == b"\r\n\r\n")
+    else {
+        if buf.len() > 2 * MAX_LINE_BYTES {
+            return Err("headers too large".into());
+        }
+        return Ok(None);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]);
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    if request_line.len() > MAX_LINE_BYTES {
+        return Err("line too long".into());
+    }
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let mut content_len = 0usize;
+    let mut headers = 0usize;
+    for h in lines {
+        headers += 1;
+        if headers > MAX_HEADERS {
+            return Err("too many headers".into());
+        }
+        if let Some(v) =
+            h.to_ascii_lowercase().strip_prefix("content-length:")
+        {
+            content_len = v.trim().parse().unwrap_or(0);
+        }
+    }
+    if content_len > MAX_BODY_BYTES {
+        return Err("body too large".into());
+    }
+    let body_start = head_end + 4;
+    if buf.len() < body_start + content_len {
+        return Ok(None);
+    }
+    let body =
+        String::from_utf8_lossy(&buf[body_start..body_start + content_len])
+            .into_owned();
+    Ok(Some((method, path, body)))
+}
+
+/// Where one multiplexed connection is in its life.
+enum ConnState {
+    /// Accumulating request bytes.
+    Reading,
+    /// One-shot `/generate`: polling the lane pipeline for its terminal
+    /// event.
+    Waiting { handle: ResponseHandle, method: Method },
+    /// Streaming `/generate`: relaying lane events as chunked NDJSON.
+    Streaming {
+        handle: ResponseHandle,
+        method: Method,
+        arrived: Instant,
+        first_delta: Option<Instant>,
+    },
+    /// Response fully queued; flush `out`, then close.
+    Closing,
+    /// Drop the connection now (deadline, dead peer, flushed close).
+    Dead,
+}
+
+/// One multiplexed connection.
+struct Conn {
+    stream: TcpStream,
+    peer_ip: Option<String>,
+    /// Request bytes accumulated so far (Reading).
+    buf: Vec<u8>,
+    /// Response bytes queued but not yet accepted by the socket.
+    out: Vec<u8>,
+    state: ConnState,
+    /// The full request must arrive by here (accept + io_timeout) —
+    /// the event-loop analogue of the blocking path's loris budget.
+    read_deadline: Option<Instant>,
+    /// Since when `out` has failed to make progress (stalled peer).
+    stalled_since: Option<Instant>,
+}
+
+/// Cancel the connection's lane, if it holds one (dead-peer paths).
+fn cancel_lane(state: &ConnState) {
+    if let ConnState::Waiting { handle, .. }
+    | ConnState::Streaming { handle, .. } = state
+    {
+        handle.cancel();
+    }
+}
+
+/// Pump one connection: socket reads (request bytes + disconnect
+/// detection), state transitions, event polling, and buffered writes.
+/// Sets `progress` if anything moved. Returns `false` once the
+/// connection should be dropped.
+fn step_conn(
+    conn: &mut Conn,
+    router: &Router,
+    tok: &Tokenizer,
+    default_backbone: &str,
+    io_timeout: Option<Duration>,
+    progress: &mut bool,
+) -> bool {
+    let now = Instant::now();
+    // ---- socket reads
+    let mut read_buf = [0u8; 4096];
+    loop {
+        match conn.stream.read(&mut read_buf) {
+            Ok(0) => match conn.state {
+                // peer hung up: a mid-request close is silent; a
+                // mid-decode close cancels the lane so the worker
+                // reclaims it at the next block boundary
+                ConnState::Reading | ConnState::Dead => return false,
+                ConnState::Waiting { .. } | ConnState::Streaming { .. } => {
+                    cancel_lane(&conn.state);
+                    return false;
+                }
+                // half-close while flushing: keep writing the response
+                ConnState::Closing => break,
+            },
+            Ok(n) => {
+                *progress = true;
+                if matches!(conn.state, ConnState::Reading) {
+                    conn.buf.extend_from_slice(&read_buf[..n]);
+                    if conn.buf.len() > MAX_BODY_BYTES + 2 * MAX_LINE_BYTES {
+                        conn.out.extend_from_slice(&response_bytes(
+                            400,
+                            None,
+                            &err_json("request too large"),
+                        ));
+                        conn.state = ConnState::Closing;
+                        break;
+                    }
+                }
+                // pipelined bytes past the request are ignored
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(_) => {
+                cancel_lane(&conn.state);
+                return false;
+            }
+        }
+    }
+    // ---- state machine
+    let state = std::mem::replace(&mut conn.state, ConnState::Dead);
+    conn.state = match state {
+        ConnState::Reading => {
+            if conn.read_deadline.is_some_and(|d| now > d) {
+                // idle / loris connection: hang up silently
+                ConnState::Dead
+            } else {
+                match try_parse_request(&conn.buf) {
+                    Err(msg) => {
+                        conn.out.extend_from_slice(&response_bytes(
+                            400,
+                            None,
+                            &err_json(&msg),
+                        ));
+                        ConnState::Closing
+                    }
+                    Ok(None) => ConnState::Reading,
+                    Ok(Some((method, path, body))) => {
+                        *progress = true;
+                        dispatch(
+                            conn,
+                            router,
+                            tok,
+                            default_backbone,
+                            &method,
+                            &path,
+                            &body,
+                        )
+                    }
+                }
+            }
+        }
+        ConnState::Waiting { handle, method } => {
+            let mut next = None;
+            for _ in 0..MAX_EVENTS_PER_SWEEP {
+                match handle.try_next_event() {
+                    TryEvent::Event(LaneEvent::Finished(resp)) => {
+                        let j = Json::obj(finished_json(
+                            &resp,
+                            method,
+                            resp.ttft.as_secs_f64() * 1e3,
+                        ));
+                        conn.out.extend_from_slice(&response_bytes(
+                            200,
+                            None,
+                            &j.to_string(),
+                        ));
+                        next = Some(ConnState::Closing);
+                        *progress = true;
+                        break;
+                    }
+                    TryEvent::Event(LaneEvent::Aborted {
+                        reason, ..
+                    }) => {
+                        conn.out.extend_from_slice(&response_bytes(
+                            abort_status(&reason),
+                            None,
+                            &err_json(&reason),
+                        ));
+                        next = Some(ConnState::Closing);
+                        *progress = true;
+                        break;
+                    }
+                    // one-shot clients only see the terminal event
+                    TryEvent::Event(_) => continue,
+                    TryEvent::Empty => break,
+                    TryEvent::Closed => {
+                        conn.out.extend_from_slice(&response_bytes(
+                            500,
+                            None,
+                            &err_json("worker dropped the request"),
+                        ));
+                        next = Some(ConnState::Closing);
+                        *progress = true;
+                        break;
+                    }
+                }
+            }
+            next.unwrap_or(ConnState::Waiting { handle, method })
+        }
+        ConnState::Streaming { handle, method, arrived, mut first_delta } => {
+            let mut next = None;
+            for _ in 0..MAX_EVENTS_PER_SWEEP {
+                match handle.try_next_event() {
+                    TryEvent::Event(event) => {
+                        *progress = true;
+                        let is_delta =
+                            matches!(&event, LaneEvent::Committed { .. });
+                        let (line, terminal) =
+                            event_line(event, method, arrived, first_delta);
+                        push_chunk(&mut conn.out, &line);
+                        if is_delta && first_delta.is_none() {
+                            first_delta = Some(Instant::now());
+                        }
+                        if terminal {
+                            conn.out.extend_from_slice(b"0\r\n\r\n");
+                            next = Some(ConnState::Closing);
+                            break;
+                        }
+                    }
+                    TryEvent::Empty => break,
+                    TryEvent::Closed => {
+                        let line = Json::obj(vec![
+                            ("event", Json::str("aborted")),
+                            (
+                                "reason",
+                                Json::str("worker dropped the request"),
+                            ),
+                        ])
+                        .to_string();
+                        push_chunk(&mut conn.out, &line);
+                        conn.out.extend_from_slice(b"0\r\n\r\n");
+                        next = Some(ConnState::Closing);
+                        *progress = true;
+                        break;
+                    }
+                }
+            }
+            next.unwrap_or(ConnState::Streaming {
+                handle,
+                method,
+                arrived,
+                first_delta,
+            })
+        }
+        other => other,
+    };
+    // ---- buffered writes
+    if !conn.out.is_empty() && !matches!(conn.state, ConnState::Dead) {
+        match conn.stream.write(&conn.out) {
+            Ok(0) => {
+                cancel_lane(&conn.state);
+                conn.state = ConnState::Dead;
+            }
+            Ok(n) => {
+                conn.out.drain(..n);
+                conn.stalled_since = None;
+                *progress = true;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                // a peer that stops reading its stream for io_timeout is
+                // as gone as one that disconnected: cancel the lane so
+                // its KV slot frees at the next block boundary
+                let since = *conn.stalled_since.get_or_insert(now);
+                if io_timeout
+                    .is_some_and(|t| now.duration_since(since) > t)
+                {
+                    cancel_lane(&conn.state);
+                    conn.state = ConnState::Dead;
+                }
+            }
+            Err(_) => {
+                cancel_lane(&conn.state);
+                conn.state = ConnState::Dead;
+            }
+        }
+    }
+    if matches!(conn.state, ConnState::Closing) && conn.out.is_empty() {
+        conn.state = ConnState::Dead;
+    }
+    !matches!(conn.state, ConnState::Dead)
+}
+
+/// Route one parsed request; returns the connection's next state.
+fn dispatch(
+    conn: &mut Conn,
+    router: &Router,
+    tok: &Tokenizer,
+    default_backbone: &str,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> ConnState {
+    match (method, path) {
+        ("POST", "/generate") => {
+            let arrived = Instant::now();
+            match parse_generate(
+                tok,
+                router,
+                default_backbone,
+                body,
+                conn.peer_ip.as_deref(),
+            ) {
+                Err((status, body)) => {
+                    conn.out.extend_from_slice(&response_bytes(
+                        status, None, &body,
+                    ));
+                    ConnState::Closing
+                }
+                Ok((req, stream_mode)) => {
+                    let gen_method = req.method;
+                    match router.submit(req) {
+                        Err(e) => {
+                            conn.out.extend_from_slice(&response_bytes(
+                                e.status(),
+                                e.retry_after(),
+                                &err_json(&e.to_string()),
+                            ));
+                            ConnState::Closing
+                        }
+                        Ok(handle) if stream_mode => {
+                            conn.out.extend_from_slice(STREAM_HEADER);
+                            ConnState::Streaming {
+                                handle,
+                                method: gen_method,
+                                arrived,
+                                first_delta: None,
+                            }
+                        }
+                        Ok(handle) => ConnState::Waiting {
+                            handle,
+                            method: gen_method,
+                        },
+                    }
+                }
+            }
+        }
+        ("GET", "/metrics") => {
+            let (status, body) = match router.metrics() {
+                Ok(j) => (200, j.to_string()),
+                Err(e) => (500, err_json(&format!("{e:#}"))),
+            };
+            conn.out
+                .extend_from_slice(&response_bytes(status, None, &body));
+            ConnState::Closing
+        }
+        ("GET", "/healthz") => {
+            let (status, body) = match router.health() {
+                Ok(j) => (200, j.to_string()),
+                Err(e) => (500, err_json(&format!("{e:#}"))),
+            };
+            conn.out
+                .extend_from_slice(&response_bytes(status, None, &body));
+            ConnState::Closing
+        }
+        _ => {
+            conn.out.extend_from_slice(&response_bytes(
+                404,
+                None,
+                &err_json("not found"),
+            ));
+            ConnState::Closing
+        }
+    }
+}
+
+/// The nonblocking event loop: accept burst, then one pump pass over
+/// every connection, sleeping ~500µs only when nothing moved. Once
+/// `stop` is observed the loop stops accepting, begins the router's
+/// graceful drain (new submits answer 503), keeps pumping until every
+/// open connection has flushed its terminal event, then joins the shard
+/// workers and returns.
+fn serve_event_loop(
+    listener: TcpListener,
+    router: Router,
+    cfg: ServerConfig,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    let tok = Tokenizer::new();
+    let io_timeout = if cfg.io_timeout.is_zero() {
+        None
+    } else {
+        Some(cfg.io_timeout)
+    };
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut draining = false;
+    loop {
+        let mut progress = false;
+        if !draining && stop.load(Ordering::SeqCst) {
+            draining = true;
+            router.begin_drain();
+        }
+        if !draining {
+            loop {
+                match listener.accept() {
+                    Ok((stream, peer)) => {
+                        let _ = stream.set_nonblocking(true);
+                        conns.push(Conn {
+                            stream,
+                            peer_ip: Some(peer.ip().to_string()),
+                            buf: Vec::new(),
+                            out: Vec::new(),
+                            state: ConnState::Reading,
+                            read_deadline: io_timeout
+                                .map(|t| Instant::now() + t),
+                            stalled_since: None,
+                        });
+                        progress = true;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(_) => break,
+                }
+            }
+        }
+        let mut i = 0;
+        while i < conns.len() {
+            let alive = step_conn(
+                &mut conns[i],
+                &router,
+                &tok,
+                &cfg.default_backbone,
+                io_timeout,
+                &mut progress,
+            );
+            if alive {
+                i += 1;
+            } else {
+                conns.swap_remove(i);
+                progress = true;
+            }
+        }
+        if draining && conns.is_empty() {
+            // every connection answered; drain the shard workers too
+            router.shutdown();
+            return Ok(());
+        }
+        if !progress {
+            std::thread::sleep(Duration::from_micros(500));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------------
+
 /// Serve until the process is killed.
 pub fn serve(router: Router, cfg: ServerConfig) -> Result<()> {
     let listener = TcpListener::bind(&cfg.addr)?;
@@ -379,16 +954,38 @@ pub fn serve_on(
     router: Router,
     cfg: ServerConfig,
 ) -> Result<()> {
+    serve_on_until(listener, router, cfg, Arc::new(AtomicBool::new(false)))
+}
+
+/// Serve until `stop` becomes true, then drain gracefully: accepts
+/// cease, in-flight requests finish (queued ones answer their terminal
+/// `Aborted{"shutdown"}`, new submits answer 503 + `Retry-After`), the
+/// shard workers join, and the call returns. The blocking front door
+/// checks `stop` between accepted connections only.
+pub fn serve_on_until(
+    listener: TcpListener,
+    router: Router,
+    cfg: ServerConfig,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    if !cfg.blocking {
+        return serve_event_loop(listener, router, cfg, stop);
+    }
     let router = Arc::new(router);
     // bounded connection-handler pool (decode concurrency is separately
-    // bounded by the router worker + batcher)
-    let pool = crate::util::threadpool::ThreadPool::new(8);
+    // bounded by the shard workers + batchers). Pool size was hardcoded
+    // to 8; `http_threads` owns it now.
+    let pool =
+        crate::util::threadpool::ThreadPool::new(cfg.http_threads.max(1));
     let io_timeout = if cfg.io_timeout.is_zero() {
         None
     } else {
         Some(cfg.io_timeout)
     };
     for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
         let Ok(mut stream) = stream else { continue };
         // an unresponsive peer must release its handler thread: every
         // read/write syscall on the socket gives up after io_timeout
@@ -399,6 +996,8 @@ pub fn serve_on(
         let backbone = cfg.default_backbone.clone();
         pool.execute(move || {
             let tok = Tokenizer::new();
+            let peer_ip =
+                stream.peer_addr().ok().map(|a| a.ip().to_string());
             // the whole request must arrive within one io_timeout of
             // the handler starting — a drip-feed that beats every
             // per-syscall timeout still cannot hold the thread longer
@@ -407,15 +1006,26 @@ pub fn serve_on(
                     Ok(r) => r,
                     Err(_) => return,
                 };
-            let (status, body) = match (method.as_str(), path.as_str()) {
+            let (status, retry, body) = match (method.as_str(), path.as_str())
+            {
                 ("POST", "/generate") => {
                     let arrived = Instant::now();
-                    match parse_generate(&tok, &router, &backbone, &body) {
-                        Err((status, body)) => (status, body),
+                    match parse_generate(
+                        &tok,
+                        &router,
+                        &backbone,
+                        &body,
+                        peer_ip.as_deref(),
+                    ) {
+                        Err((status, body)) => (status, None, body),
                         Ok((req, stream_mode)) => {
                             let gen_method = req.method;
                             match router.submit(req) {
-                                Err(e) => (429, err_json(&format!("{e:#}"))),
+                                Err(e) => (
+                                    e.status(),
+                                    e.retry_after(),
+                                    err_json(&e.to_string()),
+                                ),
                                 Ok(handle) if stream_mode => {
                                     // the chunked event relay owns the
                                     // socket from here on
@@ -428,24 +1038,33 @@ pub fn serve_on(
                                     return;
                                 }
                                 Ok(handle) => {
-                                    handle_generate(&handle, gen_method)
+                                    let (s, b) =
+                                        handle_generate(&handle, gen_method);
+                                    (s, None, b)
                                 }
                             }
                         }
                     }
                 }
                 ("GET", "/metrics") => match router.metrics() {
-                    Ok(j) => (200, j.to_string()),
-                    Err(e) => (500, err_json(&format!("{e:#}"))),
+                    Ok(j) => (200, None, j.to_string()),
+                    Err(e) => (500, None, err_json(&format!("{e:#}"))),
                 },
                 ("GET", "/healthz") => match router.health() {
-                    Ok(j) => (200, j.to_string()),
-                    Err(e) => (500, err_json(&format!("{e:#}"))),
+                    Ok(j) => (200, None, j.to_string()),
+                    Err(e) => (500, None, err_json(&format!("{e:#}"))),
                 },
-                _ => (404, err_json("not found")),
+                _ => (404, None, err_json("not found")),
             };
-            respond(&mut stream, status, &body);
+            respond(&mut stream, status, retry, &body);
         });
+    }
+    // drain on the blocking path too, so `stop` means the same thing on
+    // both front doors: joining the pool first lets every in-flight
+    // handler release its Arc, so the unwrap cannot miss the shutdown
+    drop(pool);
+    if let Ok(router) = Arc::try_unwrap(router) {
+        router.shutdown();
     }
     Ok(())
 }

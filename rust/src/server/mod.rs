@@ -2,4 +2,4 @@
 
 pub mod http;
 
-pub use http::{serve, serve_on};
+pub use http::{serve, serve_on, serve_on_until};

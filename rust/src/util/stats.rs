@@ -52,6 +52,13 @@ impl Summary {
         self.xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
+    /// Fold another summary's samples into this one. Exact: the merged
+    /// summary is indistinguishable from one that saw every sample
+    /// directly, so per-replica aggregates combine without drift.
+    pub fn merge(&mut self, other: &Summary) {
+        self.xs.extend_from_slice(&other.xs);
+    }
+
     /// Linear-interpolated percentile, q in [0, 100].
     pub fn percentile(&self, q: f64) -> f64 {
         if self.xs.is_empty() {
@@ -122,6 +129,25 @@ mod tests {
         assert_eq!(s.percentile(50.0), 50.0);
         assert_eq!(s.percentile(100.0), 100.0);
         assert_eq!(s.percentile(95.0), 95.0);
+    }
+
+    #[test]
+    fn merge_is_exact() {
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        let mut all = Summary::new();
+        for x in [1.0, 5.0, 9.0] {
+            a.push(x);
+            all.push(x);
+        }
+        for x in [2.0, 4.0] {
+            b.push(x);
+            all.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.sum(), all.sum());
+        assert_eq!(a.percentile(50.0), all.percentile(50.0));
     }
 
     #[test]

@@ -9,6 +9,8 @@
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use cdlm::coordinator::router::RouterConfig;
@@ -17,18 +19,22 @@ use cdlm::server::{self, http::ServerConfig};
 use cdlm::util::json::Json;
 
 fn start_server(io_timeout: Duration) -> SocketAddr {
-    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral");
-    let addr = listener.local_addr().unwrap();
-    let router = Router::start(
-        cdlm::artifacts_dir(),
+    start_server_with(
         RouterConfig {
             max_batch: 2,
             max_queue: 8,
             pool_capacity: 8,
             ..RouterConfig::default()
         },
+        io_timeout,
     )
-    .expect("router starts");
+}
+
+fn start_server_with(cfg: RouterConfig, io_timeout: Duration) -> SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral");
+    let addr = listener.local_addr().unwrap();
+    let router =
+        Router::start(cdlm::artifacts_dir(), cfg).expect("router starts");
     std::thread::spawn(move || {
         let _ = server::serve_on(
             listener,
@@ -37,6 +43,7 @@ fn start_server(io_timeout: Duration) -> SocketAddr {
                 addr: String::new(), // already bound
                 default_backbone: "dream".into(),
                 io_timeout,
+                ..ServerConfig::default()
             },
         );
     });
@@ -205,6 +212,157 @@ fn idle_connections_cannot_pin_the_handler_pool() {
         "request starved for {:?}",
         t0.elapsed()
     );
+}
+
+#[test]
+fn event_loop_sustains_64_concurrent_streaming_connections() {
+    // the acceptance bar for the nonblocking front door: 64 streaming
+    // clients multiplexed on the single event-loop thread (the old
+    // blocking pool would deadlock at 9 held connections)
+    let addr = start_server_with(
+        RouterConfig {
+            max_batch: 4,
+            max_queue: 128,
+            pool_capacity: 16,
+            max_active: 8,
+            ..RouterConfig::default()
+        },
+        Duration::from_secs(60),
+    );
+    let body = r#"{"prompt": "q:2+2=?", "method": "cdlm", "stream": true}"#;
+    let mut conns: Vec<TcpStream> = Vec::new();
+    for _ in 0..64 {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        write!(
+            s,
+            "POST /generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\
+             Connection: close\r\n\r\n{body}",
+            body.len()
+        )
+        .expect("request written");
+        conns.push(s);
+    }
+    // every socket is open before any response is consumed, so the
+    // server holds all 64 connections concurrently
+    for mut s in conns {
+        let mut out = String::new();
+        let _ = s.read_to_string(&mut out);
+        assert!(out.starts_with("HTTP/1.1 200"), "{out:?}");
+        let payload = dechunk(body_of(&out));
+        let last = payload
+            .lines()
+            .last()
+            .map(|l| Json::parse(l).expect("event json"))
+            .expect("terminal event");
+        assert_eq!(
+            last.get("event").and_then(Json::as_str),
+            Some("finished"),
+            "stream must end in a terminal finished event: {last}"
+        );
+    }
+}
+
+#[test]
+fn saturated_admission_answers_429_with_retry_after_on_the_wire() {
+    // per-client cap of 1 with a slow decode: the first request holds
+    // its fairness permit while the second (same client) must bounce
+    let addr = start_server_with(
+        RouterConfig {
+            max_batch: 1,
+            max_active: 1,
+            max_queue: 8,
+            pool_capacity: 4,
+            max_per_client: 1,
+            step_delay: Duration::from_millis(100),
+            ..RouterConfig::default()
+        },
+        Duration::from_secs(30),
+    );
+    let mut held = TcpStream::connect(addr).expect("connect");
+    held.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let body = r#"{"prompt": "q:9*9=?", "method": "cdlm", "stream": true,
+                   "client_id": "cap"}"#;
+    write!(
+        held,
+        "POST /generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n\
+         {body}",
+        body.len()
+    )
+    .expect("request written");
+    // the stream header is only written once submit() succeeded, so
+    // seeing any bytes proves the permit is held
+    let mut buf = [0u8; 64];
+    let n = held.read(&mut buf).expect("stream header");
+    assert!(n > 0, "held request must be admitted first");
+
+    let resp = http_post(
+        addr,
+        "/generate",
+        r#"{"prompt": "q:1+2=?", "method": "cdlm", "client_id": "cap"}"#,
+    );
+    assert!(resp.starts_with("HTTP/1.1 429"), "{resp:?}");
+    assert!(resp.contains("Retry-After:"), "{resp:?}");
+    drop(held); // hang up: the server cancels the in-flight lane
+}
+
+#[test]
+fn drain_answers_503_with_retry_after_then_shuts_down() {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral");
+    let addr = listener.local_addr().unwrap();
+    let router = Router::start(
+        cdlm::artifacts_dir(),
+        RouterConfig {
+            max_batch: 2,
+            max_queue: 8,
+            pool_capacity: 8,
+            ..RouterConfig::default()
+        },
+    )
+    .expect("router starts");
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_flag = stop.clone();
+    let srv = std::thread::spawn(move || {
+        server::serve_on_until(
+            listener,
+            router,
+            ServerConfig {
+                addr: String::new(), // already bound
+                default_backbone: "dream".into(),
+                io_timeout: Duration::from_secs(10),
+                ..ServerConfig::default()
+            },
+            stop_flag,
+        )
+    });
+    // a connection accepted *before* the drain begins but whose request
+    // lands *after* must get the admission answer, not a dropped socket
+    let mut late = TcpStream::connect(addr).expect("connect");
+    late.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    write!(late, "POST /generate HTTP/1.1\r\nHost: t\r\n")
+        .expect("partial header written");
+    std::thread::sleep(Duration::from_millis(100)); // loop registers it
+    stop.store(true, Ordering::SeqCst);
+    std::thread::sleep(Duration::from_millis(100)); // drain begins
+    let body = r#"{"prompt": "q:1+1=?", "method": "cdlm"}"#;
+    write!(
+        late,
+        "Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("request completed");
+    let mut out = String::new();
+    let _ = late.read_to_string(&mut out);
+    assert!(out.starts_with("HTTP/1.1 503"), "{out:?}");
+    assert!(out.contains("Retry-After:"), "{out:?}");
+    // with its last connection answered, the event loop joins the shard
+    // workers and returns cleanly
+    let t0 = Instant::now();
+    while !srv.is_finished() && t0.elapsed() < Duration::from_secs(10) {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(srv.is_finished(), "server must return after the drain");
+    srv.join().unwrap().expect("clean shutdown");
 }
 
 #[test]

@@ -1,0 +1,321 @@
+//! Sharded serving core: prefix-affinity routing, work stealing,
+//! admission control (queue depth + per-client fairness), graceful
+//! drain, and the shard-count invariance contract — a request decoded
+//! closed-loop (solo cohort) produces byte-identical text and
+//! step/model-call accounting whether the dispatcher ran 1 replica
+//! or 4.
+//!
+//! Runs hermetically on the deterministic reference backend.
+
+use std::time::Duration;
+
+use cdlm::coordinator::router::RouterConfig;
+use cdlm::coordinator::{GenerateRequest, Method, Router};
+use cdlm::server::http::encode_user_prompt;
+use cdlm::tokenizer::Tokenizer;
+use cdlm::util::json::Json;
+use cdlm::workload::{self, Family};
+
+fn request_for(prompt: &str, method: Method) -> GenerateRequest {
+    let tok = Tokenizer::new();
+    GenerateRequest::new(
+        "dream",
+        method,
+        encode_user_prompt(&tok, prompt, 64).unwrap(),
+    )
+}
+
+fn sample_prompts(n: usize, seed: u64) -> Vec<String> {
+    workload::generate(Family::ListOp, n, seed)
+        .into_iter()
+        .map(|s| s.prompt)
+        .collect()
+}
+
+/// Sum a numeric per-shard counter out of `health()["shards"]`.
+fn shard_counter(health: &Json, key: &str) -> Vec<u64> {
+    health
+        .get("shards")
+        .and_then(Json::as_arr)
+        .expect("health carries the per-shard breakdown")
+        .iter()
+        .map(|s| s.get(key).and_then(Json::as_f64).unwrap_or(0.0) as u64)
+        .collect()
+}
+
+#[test]
+fn queue_overflow_is_a_429_with_a_retry_after_hint() {
+    let router = Router::start(
+        cdlm::artifacts_dir(),
+        RouterConfig {
+            max_batch: 1,
+            max_active: 1,
+            max_queue: 1,
+            pool_capacity: 4,
+            step_delay: Duration::from_millis(50),
+            ..RouterConfig::default()
+        },
+    )
+    .expect("router starts");
+    let prompts = sample_prompts(3, 0x51);
+    // A is popped off the queue and decodes slowly; B fills the single
+    // queue slot; C must bounce at admission
+    let a = router.submit(request_for(&prompts[0], Method::Cdlm)).unwrap();
+    std::thread::sleep(Duration::from_millis(150));
+    let b = router.submit(request_for(&prompts[1], Method::Cdlm)).unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+    let err = router
+        .submit(request_for(&prompts[2], Method::Cdlm))
+        .err()
+        .expect("third submit must be refused");
+    assert_eq!(err.status(), 429, "{err}");
+    assert!(err.retry_after().is_some(), "429 must carry a retry hint");
+    assert!(err.to_string().contains("queue full"), "{err}");
+    let h = router.health().unwrap();
+    assert_eq!(
+        h.get("rejected_queue_full").and_then(Json::as_f64),
+        Some(1.0)
+    );
+    a.cancel();
+    b.cancel();
+    router.shutdown();
+}
+
+#[test]
+fn per_client_cap_rejects_the_flooder_but_not_others() {
+    let router = Router::start(
+        cdlm::artifacts_dir(),
+        RouterConfig {
+            max_batch: 1,
+            max_active: 1,
+            max_queue: 32,
+            pool_capacity: 4,
+            max_per_client: 2,
+            step_delay: Duration::from_millis(50),
+            ..RouterConfig::default()
+        },
+    )
+    .expect("router starts");
+    let prompts = sample_prompts(4, 0x52);
+    let submit = |i: usize, client: &str| {
+        let mut req = request_for(&prompts[i], Method::Cdlm);
+        req.client = Some(client.into());
+        router.submit(req)
+    };
+    let a = submit(0, "flood").expect("first under the cap");
+    let b = submit(1, "flood").expect("second under the cap");
+    let err = submit(2, "flood").err().expect("third must hit the cap");
+    assert_eq!(err.status(), 429, "{err}");
+    assert!(err.retry_after().is_some(), "cap refusal carries a hint");
+    assert!(err.to_string().contains("flood"), "{err}");
+    // fairness: the flooder's saturation must not starve other clients
+    let c = submit(3, "polite").expect("other clients still admitted");
+    let h = router.health().unwrap();
+    assert_eq!(
+        h.get("rejected_client_cap").and_then(Json::as_f64),
+        Some(1.0)
+    );
+    for handle in [&a, &b, &c] {
+        handle.cancel();
+    }
+    router.shutdown();
+}
+
+#[test]
+fn graceful_drain_answers_every_request_across_replicas() {
+    let router = Router::start(
+        cdlm::artifacts_dir(),
+        RouterConfig {
+            max_batch: 1,
+            max_active: 1,
+            max_queue: 32,
+            pool_capacity: 8,
+            replicas: 2,
+            step_delay: Duration::from_millis(20),
+            ..RouterConfig::default()
+        },
+    )
+    .expect("router starts");
+    let prompts = sample_prompts(6, 0x53);
+    let handles: Vec<_> = prompts
+        .iter()
+        .map(|p| router.submit(request_for(p, Method::Cdlm)).unwrap())
+        .collect();
+    // let both shards pull one request into decode before draining
+    std::thread::sleep(Duration::from_millis(100));
+    router.begin_drain();
+    // drain refuses new work with a 503
+    let err = router
+        .submit(request_for(&prompts[0], Method::Cdlm))
+        .err()
+        .expect("submit during drain must be refused");
+    assert_eq!(err.status(), 503, "{err}");
+    assert!(err.retry_after().is_some(), "503 must carry a retry hint");
+    // the drain contract: every request already in the system gets its
+    // terminal event — in-flight lanes finish, queued ones abort with
+    // "shutdown", and no channel is ever silently dropped
+    let mut finished = 0;
+    let mut aborted = 0;
+    for h in handles {
+        match h.wait() {
+            Ok(resp) => {
+                assert!(!resp.gen_ids.is_empty());
+                finished += 1;
+            }
+            Err(reason) => {
+                assert!(
+                    reason.contains("shutdown"),
+                    "queued work must abort with the drain reason, \
+                     not {reason:?}"
+                );
+                aborted += 1;
+            }
+        }
+    }
+    assert_eq!(finished + aborted, 6, "no request may vanish");
+    assert!(finished >= 1, "in-flight lanes must finish, not abort");
+    assert!(aborted >= 1, "queued lanes must abort at drain");
+    router.join();
+}
+
+#[test]
+fn repeated_prompts_route_to_the_warm_affinity_shard() {
+    let router = Router::start(
+        cdlm::artifacts_dir(),
+        RouterConfig {
+            max_batch: 2,
+            max_queue: 64,
+            pool_capacity: 16,
+            replicas: 4,
+            ..RouterConfig::default()
+        },
+    )
+    .expect("router starts");
+    let prompt = sample_prompts(1, 0x54).pop().unwrap();
+    // closed loop: the queue is empty at each submit, so the affinity
+    // shard is never over its fair share and no request spills
+    for _ in 0..6 {
+        let h = router.submit(request_for(&prompt, Method::Cdlm)).unwrap();
+        h.wait().expect("decode ok");
+    }
+    let h = router.health().unwrap();
+    assert_eq!(h.get("routed_affinity").and_then(Json::as_f64), Some(6.0));
+    assert_eq!(h.get("routed_spill").and_then(Json::as_f64), Some(0.0));
+    let admitted = shard_counter(&h, "admitted_requests");
+    assert_eq!(admitted.iter().sum::<u64>(), 6);
+    assert_eq!(
+        admitted.iter().filter(|&&n| n > 0).count(),
+        1,
+        "one warm shard must own every repeat of the prompt: {admitted:?}"
+    );
+    let affinity = shard_counter(&h, "affinity_admissions");
+    assert_eq!(affinity, admitted, "every admission was affinity-routed");
+    // the warm shard's prefix trie served the repeats
+    let hits = shard_counter(&h, "prefix_hits");
+    assert!(
+        hits.iter().sum::<u64>() >= 1,
+        "repeated prompt must hit the warm prefix trie: {hits:?}"
+    );
+    router.shutdown();
+}
+
+#[test]
+fn stolen_request_produces_a_byte_identical_trace() {
+    // solo baseline: one replica, cohort of one
+    let solo = Router::start(
+        cdlm::artifacts_dir(),
+        RouterConfig {
+            max_batch: 1,
+            max_active: 1,
+            max_queue: 8,
+            pool_capacity: 4,
+            prefix_cache: false,
+            ..RouterConfig::default()
+        },
+    )
+    .expect("router starts");
+    let prompt = sample_prompts(1, 0x55).pop().unwrap();
+    let want = solo
+        .submit(request_for(&prompt, Method::Cdlm))
+        .unwrap()
+        .wait()
+        .expect("solo decode ok");
+    solo.shutdown();
+
+    // two shards, per-shard capacity of one, slow decode: both requests
+    // affinity-route to the same shard, so the idle sibling must steal
+    // the queued one once it has aged past the batching window
+    let router = Router::start(
+        cdlm::artifacts_dir(),
+        RouterConfig {
+            max_batch: 1,
+            max_active: 1,
+            max_wait: Duration::from_millis(5),
+            max_queue: 8,
+            pool_capacity: 8,
+            replicas: 2,
+            prefix_cache: false,
+            step_delay: Duration::from_millis(30),
+            ..RouterConfig::default()
+        },
+    )
+    .expect("router starts");
+    let a = router.submit(request_for(&prompt, Method::Cdlm)).unwrap();
+    std::thread::sleep(Duration::from_millis(60));
+    let b = router.submit(request_for(&prompt, Method::Cdlm)).unwrap();
+    let resp_a = a.wait().expect("first decode ok");
+    let resp_b = b.wait().expect("stolen decode ok");
+    let h = router.health().unwrap();
+    let stolen: u64 = shard_counter(&h, "stolen").iter().sum();
+    assert!(stolen >= 1, "the idle sibling must have stolen: {h}");
+    // the theft is invisible in the decode trace: token ids, text, and
+    // step/model-call accounting are byte-identical to the solo run
+    for resp in [&resp_a, &resp_b] {
+        assert_eq!(resp.gen_ids, want.gen_ids);
+        assert_eq!(resp.text, want.text);
+        assert_eq!(resp.steps, want.steps);
+        assert_eq!(resp.model_calls, want.model_calls);
+    }
+    router.shutdown();
+}
+
+#[test]
+fn solo_accounting_is_invariant_across_replica_counts() {
+    let prompts = sample_prompts(3, 0x56);
+    let run = |replicas: usize| {
+        let router = Router::start(
+            cdlm::artifacts_dir(),
+            RouterConfig {
+                replicas,
+                prefix_cache: false,
+                ..RouterConfig::default()
+            },
+        )
+        .expect("router starts");
+        let mut out = Vec::new();
+        for p in &prompts {
+            for method in [Method::Cdlm, Method::Vanilla] {
+                let resp = router
+                    .submit(request_for(p, method))
+                    .unwrap()
+                    .wait()
+                    .expect("decode ok");
+                out.push((
+                    resp.text,
+                    resp.gen_ids,
+                    resp.steps,
+                    resp.model_calls,
+                ));
+            }
+        }
+        router.shutdown();
+        out
+    };
+    let one = run(1);
+    let four = run(4);
+    assert_eq!(
+        one, four,
+        "closed-loop decode traces and accounting must not depend on \
+         the replica count"
+    );
+}
