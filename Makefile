@@ -3,9 +3,9 @@
 
 CARGO ?= cargo
 
-.PHONY: ci verify fmt clippy build test smoke check-baseline shard-smoke check-pjrt bench clean
+.PHONY: ci verify fmt clippy build test smoke check-baseline shard-smoke chaos-smoke check-pjrt bench clean
 
-ci: fmt clippy build test smoke check-baseline shard-smoke check-pjrt
+ci: fmt clippy build test smoke check-baseline shard-smoke chaos-smoke check-pjrt
 
 # Tier-1 verify (the regression gate), exactly as the roadmap states it.
 verify:
@@ -34,15 +34,30 @@ smoke:
 # cells also pin shard-count invariance. To regenerate after an
 # intentional accounting change:
 #   python3 python/tools/gen_bench_baseline.py
+# The third leg re-runs the --replicas 4 grid with a seeded fault plan
+# armed: a worker is killed before its first commit mid-run, and the
+# routed solo-cohort cells must still reproduce EXACTLY the committed
+# baseline integers — supervised re-dispatch is required to be
+# invisible in the accounting.
 check-baseline:
 	$(CARGO) run --release --bin cdlm -- bench --methods all --batches 1,4,8 --n 8 --replicas 1 --out BENCH_decode.json --check-baseline BENCH_baseline.json
 	$(CARGO) run --release --bin cdlm -- bench --methods all --batches 1,4,8 --n 8 --replicas 4 --out BENCH_decode_r4.json --check-baseline BENCH_baseline.json
+	$(CARGO) run --release --bin cdlm -- bench --methods all --batches 1,4,8 --n 8 --replicas 4 --fault-seed 7 --out BENCH_decode_faulted.json --check-baseline BENCH_baseline.json
 
 # Sharded-serving smoke: 1-vs-N replica arrival trace + saturation
 # burst (schema cdlm.bench.shard/v1). Record only — invariance is
 # gated by check-baseline, admission semantics by the test suite.
 shard-smoke:
 	$(CARGO) run --release --bin cdlm -- bench --scenario shard --method cdlm --n 24 --distinct 6 --replicas 4 --arrival-ms 2 --out BENCH_shard.json
+
+# Chaos recovery gate: one arrival trace run clean and again under a
+# seeded fault plan (a worker panic before any commit plus a delayed
+# step; schema cdlm.bench.chaos/v1). Unlike the other scenario smokes
+# this one asserts: exactly one terminal event per request, finished
+# faulted responses byte-identical to their clean twins, aborts only
+# with supervision reasons, and the plan must actually fire.
+chaos-smoke:
+	$(CARGO) run --release --bin cdlm -- bench --scenario chaos --method cdlm --n 24 --distinct 6 --replicas 4 --arrival-ms 2 --fault-seed 7 --out BENCH_chaos.json
 
 # Type-check the off-by-default PJRT seam against the vendored xla API
 # stub (the `pjrt` feature gates real execution behind the real crate).

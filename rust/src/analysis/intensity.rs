@@ -208,6 +208,7 @@ impl IntensityModel {
 pub const PAPER_BATCH_SIZES: [usize; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 

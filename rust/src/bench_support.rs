@@ -206,6 +206,53 @@ pub fn save_results(name: &str, j: crate::util::json::Json) {
     }
 }
 
+/// One request's fully drained event stream, audited against the
+/// lane-event contract (`Admitted?` · `Committed*` · exactly one
+/// terminal). The chaos bench and the fault-tolerance tests both gate
+/// on `terminals == 1` for every admitted request, fault or no fault.
+#[derive(Debug)]
+pub struct TerminalAudit {
+    /// Set when the terminal was `Finished`.
+    pub finished: Option<crate::coordinator::GenerateResponse>,
+    /// Set when the terminal was `Aborted`.
+    pub abort_reason: Option<String>,
+    /// Terminal events observed — the contract demands exactly one.
+    pub terminals: usize,
+    /// `Committed` block deltas observed before the terminal.
+    pub committed_blocks: usize,
+}
+
+/// Drain a response stream to channel close, counting terminals rather
+/// than stopping at the first one — a duplicated terminal (the bug
+/// class supervision re-dispatch could introduce) must surface as
+/// `terminals == 2`, not be silently swallowed.
+pub fn drain_and_audit(
+    handle: &crate::coordinator::ResponseHandle,
+) -> TerminalAudit {
+    use crate::coordinator::LaneEvent;
+    let mut audit = TerminalAudit {
+        finished: None,
+        abort_reason: None,
+        terminals: 0,
+        committed_blocks: 0,
+    };
+    while let Some(ev) = handle.next_event() {
+        match ev {
+            LaneEvent::Admitted => {}
+            LaneEvent::Committed { .. } => audit.committed_blocks += 1,
+            LaneEvent::Finished(resp) => {
+                audit.terminals += 1;
+                audit.finished = Some(resp);
+            }
+            LaneEvent::Aborted { reason, .. } => {
+                audit.terminals += 1;
+                audit.abort_reason = Some(reason);
+            }
+        }
+    }
+    audit
+}
+
 /// The per-cell fields of a `cdlm.bench.decode/v1` document that are
 /// exact deterministic integers on the reference backend — the CI
 /// accounting gate compares these and nothing else (throughput and
@@ -307,6 +354,7 @@ pub fn check_baseline(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::check_baseline;
     use crate::util::json::Json;

@@ -144,10 +144,9 @@ impl<T> DynamicBatcher<T> {
         now: Instant,
     ) -> (Vec<Pending<T>>, Vec<Pending<T>>) {
         let (mut fresh, mut expired) = (Vec::new(), Vec::new());
-        if n == 0 || !self.queues.contains_key(key) {
+        let Some(q) = self.queues.get_mut(key).filter(|_| n > 0) else {
             return (fresh, expired);
-        }
-        let q = self.queues.get_mut(key).unwrap();
+        };
         // oldest first: stop once n live requests are in hand (later
         // expired entries are caught by the next admission pass)
         let mut consumed = 0;
@@ -198,10 +197,9 @@ impl<T> DynamicBatcher<T> {
         min_wait: Duration,
     ) -> (Vec<Pending<T>>, Vec<Pending<T>>) {
         let (mut fresh, mut expired) = (Vec::new(), Vec::new());
-        if n == 0 || !self.queues.contains_key(key) {
+        let Some(q) = self.queues.get_mut(key).filter(|_| n > 0) else {
             return (fresh, expired);
-        }
-        let q = self.queues.get_mut(key).unwrap();
+        };
         let mut consumed = 0;
         let mut live = 0;
         for p in q.iter() {
@@ -255,7 +253,9 @@ impl<T> DynamicBatcher<T> {
     /// Pure queue removal (callers that pop whole batches account
     /// `total_batches` themselves).
     fn drain(&mut self, key: &GroupKey, n: usize) -> Vec<Pending<T>> {
-        let q = self.queues.get_mut(key).unwrap();
+        let Some(q) = self.queues.get_mut(key) else {
+            return Vec::new();
+        };
         let take = q.len().min(n);
         let batch: Vec<Pending<T>> = q.drain(..take).collect();
         if q.is_empty() {
@@ -289,6 +289,7 @@ impl<T> DynamicBatcher<T> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::util::prop::check;

@@ -1,0 +1,392 @@
+//! Seeded fault injection for the supervision layer.
+//!
+//! A [`FaultPlan`] is a deterministic schedule of faults — worker
+//! panics, delayed steps, KV-page allocation failures, socket resets —
+//! keyed to *work indices* (a shard's step-cycle ordinal, its admission
+//! ordinal, or an accepted request's ordinal), never wall-clock time,
+//! so a plan replays identically across runs and machines. Off by
+//! default; `cdlm serve`/`cdlm bench` arm one with `--fault-seed N`
+//! (a conservative derived plan) or `--fault-spec SPEC` (explicit).
+//!
+//! Spec grammar (comma-separated points):
+//!
+//! ```text
+//! panic@shard<S>:step<K>        worker S panics before its K-th step cycle
+//! delay:<MS>@shard<S>:step<K>   worker S sleeps MS ms before step cycle K
+//! kvfail:<N>@shard<S>:admit<K>  worker S's K-th admission fails its next
+//!                               N KV-page allocations
+//! sockreset@req<K>              the K-th accepted /generate socket is
+//!                               reset after submit (client sees a dead
+//!                               connection, the lane must be cleaned up)
+//! panic@step<K>                 omitting shard<S> makes a point wildcard:
+//!                               it fires on whichever shard reaches the
+//!                               trigger first
+//! ```
+//!
+//! Every point fires **at most once** per process (an atomic latch), so
+//! a respawned worker — whose step counter restarts at zero — does not
+//! re-trip the fault that killed its predecessor; injecting a second
+//! kill takes a second point. Shard indices are taken modulo the live
+//! replica count, so a plan written for one topology still names a real
+//! shard in another.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::time::Duration;
+
+use crate::util::rng::SplitMix64;
+
+/// What a triggered fault point does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic the shard worker thread (exercises `catch_unwind`
+    /// supervision + re-dispatch).
+    Panic,
+    /// Sleep before the step cycle (exercises the stall watchdog when
+    /// the delay exceeds its deadline).
+    Delay(Duration),
+    /// Fail the next N KV-page allocations in the admitting batch.
+    KvFail(u64),
+    /// Reset the accepted socket (server layer).
+    SockReset,
+}
+
+/// When a fault point triggers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Trigger {
+    /// Before the shard's K-th step cycle (a cycle = one pass that
+    /// advances live batches one block).
+    Step(u64),
+    /// At the shard's K-th lane admission.
+    Admit(u64),
+    /// At the server's K-th accepted `/generate` request.
+    Request(u64),
+}
+
+#[derive(Debug, Clone)]
+struct FaultPoint {
+    /// `None` = wildcard: first shard to reach the trigger fires it.
+    shard: Option<usize>,
+    trigger: Trigger,
+    kind: FaultKind,
+}
+
+/// A deterministic, fire-once schedule of injected faults.
+#[derive(Debug)]
+pub struct FaultPlan {
+    points: Vec<FaultPoint>,
+    fired: Vec<AtomicBool>,
+    /// Live replica count, bound by `Router::start` so `shard<S>`
+    /// resolves to `S % replicas` regardless of topology.
+    replicas: AtomicUsize,
+    spec: String,
+}
+
+impl FaultPlan {
+    fn from_points(points: Vec<FaultPoint>, spec: String) -> Self {
+        let fired = points.iter().map(|_| AtomicBool::new(false)).collect();
+        Self { points, fired, replicas: AtomicUsize::new(1), spec }
+    }
+
+    /// Parse the spec grammar (see module docs). Errors name the
+    /// offending clause.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut points = Vec::new();
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty())
+        {
+            let (kind_s, target) = clause
+                .split_once('@')
+                .ok_or_else(|| format!("fault '{clause}': missing '@'"))?;
+            let (name, arg) = match kind_s.split_once(':') {
+                Some((n, a)) => (n, Some(a)),
+                None => (kind_s, None),
+            };
+            let num = |what: &str| -> Result<u64, String> {
+                arg.ok_or_else(|| {
+                    format!("fault '{clause}': '{name}' needs :{what}")
+                })?
+                .parse::<u64>()
+                .map_err(|_| format!("fault '{clause}': bad {what}"))
+            };
+            let kind = match name {
+                "panic" => FaultKind::Panic,
+                "delay" => FaultKind::Delay(Duration::from_millis(num("ms")?)),
+                "kvfail" => FaultKind::KvFail(num("count")?),
+                "sockreset" => FaultKind::SockReset,
+                other => {
+                    return Err(format!(
+                        "fault '{clause}': unknown kind '{other}'"
+                    ))
+                }
+            };
+            let (shard, at) = match target.split_once(':') {
+                Some((s, rest)) => {
+                    let id = s
+                        .strip_prefix("shard")
+                        .and_then(|n| n.parse::<usize>().ok())
+                        .ok_or_else(|| {
+                            format!("fault '{clause}': bad target '{s}'")
+                        })?;
+                    (Some(id), rest)
+                }
+                None => (None, target),
+            };
+            let ordinal = |prefix: &str| {
+                at.strip_prefix(prefix)
+                    .and_then(|n| n.parse::<u64>().ok())
+                    .ok_or_else(|| {
+                        format!("fault '{clause}': bad trigger '{at}'")
+                    })
+            };
+            let trigger = if at.starts_with("step") {
+                Trigger::Step(ordinal("step")?)
+            } else if at.starts_with("admit") {
+                Trigger::Admit(ordinal("admit")?)
+            } else if at.starts_with("req") {
+                if shard.is_some() {
+                    return Err(format!(
+                        "fault '{clause}': req triggers are server-wide, \
+                         drop the shard prefix"
+                    ));
+                }
+                Trigger::Request(ordinal("req")?)
+            } else {
+                return Err(format!("fault '{clause}': bad trigger '{at}'"));
+            };
+            match (kind, trigger) {
+                (FaultKind::SockReset, Trigger::Request(_)) => {}
+                (FaultKind::SockReset, _) => {
+                    return Err(format!(
+                        "fault '{clause}': sockreset needs a req<K> trigger"
+                    ))
+                }
+                (_, Trigger::Request(_)) => {
+                    return Err(format!(
+                        "fault '{clause}': req<K> only triggers sockreset"
+                    ))
+                }
+                (FaultKind::KvFail(_), Trigger::Step(_)) => {
+                    return Err(format!(
+                        "fault '{clause}': kvfail needs an admit<K> trigger"
+                    ))
+                }
+                _ => {}
+            }
+            points.push(FaultPoint { shard, trigger, kind });
+        }
+        if points.is_empty() {
+            return Err("empty fault spec".into());
+        }
+        Ok(Self::from_points(points, spec.to_string()))
+    }
+
+    /// Derive a conservative plan from a seed: one wildcard worker
+    /// panic *before any step* (pre-commit, so the victim's in-flight
+    /// requests are all re-dispatchable and integer accounting is
+    /// preserved — the property the faulted `--check-baseline` CI leg
+    /// gates), plus one seeded delayed step later in the run. Richer
+    /// scenarios (mid-stream kills, KV exhaustion, socket resets) take
+    /// an explicit `--fault-spec`.
+    pub fn from_seed(seed: u64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let delay_step = 4 + rng.below(8);
+        let delay_ms = 20 + rng.below(60);
+        let spec =
+            format!("panic@step0,delay:{delay_ms}@step{delay_step}");
+        let points = vec![
+            FaultPoint {
+                shard: None,
+                trigger: Trigger::Step(0),
+                kind: FaultKind::Panic,
+            },
+            FaultPoint {
+                shard: None,
+                trigger: Trigger::Step(delay_step),
+                kind: FaultKind::Delay(Duration::from_millis(delay_ms)),
+            },
+        ];
+        Self::from_points(points, spec)
+    }
+
+    /// Canonical spec string (logging, bench schema).
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    /// Points fired so far. The chaos bench gates on this being nonzero:
+    /// an armed plan that never fires means the trace missed its
+    /// triggers and the run exercised nothing.
+    pub fn fired_count(&self) -> usize {
+        self.fired.iter().filter(|f| f.load(Ordering::SeqCst)).count()
+    }
+
+    /// Total points in the plan.
+    pub fn point_count(&self) -> usize {
+        self.points.len()
+    }
+
+    /// Bind the live replica count so `shard<S>` targets resolve.
+    pub fn bind_replicas(&self, replicas: usize) {
+        self.replicas.store(replicas.max(1), Ordering::SeqCst);
+    }
+
+    /// Find-and-latch the first unfired point matching `pred`.
+    fn fire<F>(&self, pred: F) -> Option<FaultKind>
+    where
+        F: Fn(&FaultPoint) -> bool,
+    {
+        for (i, p) in self.points.iter().enumerate() {
+            if !pred(p) {
+                continue;
+            }
+            if self.fired[i]
+                .compare_exchange(
+                    false,
+                    true,
+                    Ordering::SeqCst,
+                    Ordering::SeqCst,
+                )
+                .is_ok()
+            {
+                return Some(p.kind);
+            }
+        }
+        None
+    }
+
+    fn shard_matches(&self, p: &FaultPoint, shard: usize) -> bool {
+        let replicas = self.replicas.load(Ordering::SeqCst).max(1);
+        match p.shard {
+            None => true,
+            Some(s) => s % replicas == shard,
+        }
+    }
+
+    /// A `Panic`/`Delay` point due before shard `shard`'s step cycle
+    /// `step` (0-based, counted per worker incarnation).
+    pub fn at_step(&self, shard: usize, step: u64) -> Option<FaultKind> {
+        self.fire(|p| {
+            matches!(p.kind, FaultKind::Panic | FaultKind::Delay(_))
+                && p.trigger == Trigger::Step(step)
+                && self.shard_matches(p, shard)
+        })
+    }
+
+    /// A `KvFail` point due at shard `shard`'s admission ordinal
+    /// `admit`; returns the number of allocations to fail.
+    pub fn at_admit(&self, shard: usize, admit: u64) -> Option<u64> {
+        match self.fire(|p| {
+            matches!(p.kind, FaultKind::KvFail(_))
+                && p.trigger == Trigger::Admit(admit)
+                && self.shard_matches(p, shard)
+        }) {
+            Some(FaultKind::KvFail(n)) => Some(n),
+            _ => None,
+        }
+    }
+
+    /// True when the server should reset the `ordinal`-th accepted
+    /// `/generate` socket.
+    pub fn at_request(&self, ordinal: u64) -> bool {
+        self.fire(|p| {
+            p.kind == FaultKind::SockReset
+                && p.trigger == Trigger::Request(ordinal)
+        })
+        .is_some()
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_kind() {
+        let plan = FaultPlan::parse(
+            "panic@shard0:step12, delay:500@shard1:step3, \
+             kvfail:2@shard0:admit1, sockreset@req3, panic@step4",
+        )
+        .unwrap();
+        assert_eq!(plan.points.len(), 5);
+        assert_eq!(plan.points[0].shard, Some(0));
+        assert_eq!(plan.points[0].trigger, Trigger::Step(12));
+        assert_eq!(plan.points[0].kind, FaultKind::Panic);
+        assert_eq!(
+            plan.points[1].kind,
+            FaultKind::Delay(Duration::from_millis(500))
+        );
+        assert_eq!(plan.points[2].kind, FaultKind::KvFail(2));
+        assert_eq!(plan.points[2].trigger, Trigger::Admit(1));
+        assert_eq!(plan.points[3].kind, FaultKind::SockReset);
+        assert_eq!(plan.points[4].shard, None, "wildcard shard");
+    }
+
+    #[test]
+    fn rejects_malformed_clauses() {
+        for bad in [
+            "",
+            "panic",
+            "panic@",
+            "panic@shard0",
+            "panic@shardx:step1",
+            "explode@shard0:step1",
+            "delay@shard0:step1",
+            "kvfail:2@shard0:step1",
+            "sockreset@shard0:step1",
+            "panic@req1",
+            "sockreset@req1,panic@shard0:stepx",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must fail");
+        }
+    }
+
+    #[test]
+    fn points_fire_exactly_once() {
+        let plan = FaultPlan::parse("panic@shard0:step2").unwrap();
+        plan.bind_replicas(2);
+        assert!(plan.at_step(0, 1).is_none());
+        assert!(plan.at_step(1, 2).is_none(), "wrong shard");
+        assert_eq!(plan.at_step(0, 2), Some(FaultKind::Panic));
+        assert!(plan.at_step(0, 2).is_none(), "latched after firing");
+    }
+
+    #[test]
+    fn wildcard_fires_on_first_matching_shard_only() {
+        let plan = FaultPlan::parse("panic@step0").unwrap();
+        plan.bind_replicas(4);
+        assert_eq!(plan.at_step(3, 0), Some(FaultKind::Panic));
+        assert!(plan.at_step(0, 0).is_none());
+    }
+
+    #[test]
+    fn shard_targets_resolve_modulo_replicas() {
+        let plan = FaultPlan::parse("panic@shard5:step0").unwrap();
+        plan.bind_replicas(2);
+        assert_eq!(plan.at_step(1, 0), Some(FaultKind::Panic));
+    }
+
+    #[test]
+    fn seeded_plan_is_deterministic_and_conservative() {
+        let a = FaultPlan::from_seed(0xC4A05);
+        let b = FaultPlan::from_seed(0xC4A05);
+        assert_eq!(a.spec(), b.spec());
+        // the kill is always pre-commit (step 0): re-dispatch territory
+        assert_eq!(a.at_step(0, 0), Some(FaultKind::Panic));
+        assert!(matches!(
+            FaultPlan::from_seed(1).points[1].kind,
+            FaultKind::Delay(_)
+        ));
+    }
+
+    #[test]
+    fn kvfail_and_sockreset_lookups() {
+        let plan =
+            FaultPlan::parse("kvfail:3@shard1:admit0,sockreset@req2").unwrap();
+        plan.bind_replicas(2);
+        assert_eq!(plan.at_admit(1, 0), Some(3));
+        assert!(plan.at_admit(1, 0).is_none(), "latched");
+        assert!(!plan.at_request(1));
+        assert!(plan.at_request(2));
+        assert!(!plan.at_request(2), "latched");
+    }
+}

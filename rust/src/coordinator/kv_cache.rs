@@ -156,6 +156,10 @@ pub struct KvPool {
     pub prefix_hit_blocks: u64,
     /// Chain blocks reclaimed by the LRU evictor under page pressure.
     pub prefix_evictions: u64,
+    /// Armed by [`KvPool::inject_alloc_failures`] (fault injection):
+    /// while nonzero, `alloc` fails and decrements it. Zero in
+    /// production — only a `FaultPlan` ever arms it.
+    forced_alloc_failures: u64,
 }
 
 impl KvPool {
@@ -216,6 +220,7 @@ impl KvPool {
             prefix_hits: 0,
             prefix_hit_blocks: 0,
             prefix_evictions: 0,
+            forced_alloc_failures: 0,
         }
     }
 
@@ -252,7 +257,19 @@ impl KvPool {
         self.page_used.len()
     }
 
+    /// Fault injection: fail the next `n` allocations with a typed
+    /// error, as if the pool were exhausted. Exercises the admission
+    /// failure path (`Aborted{"admission failed: ..."}`) without
+    /// needing a genuinely full pool.
+    pub fn inject_alloc_failures(&mut self, n: u64) {
+        self.forced_alloc_failures += n;
+    }
+
     pub fn alloc(&mut self) -> Result<SlotId> {
+        if self.forced_alloc_failures > 0 {
+            self.forced_alloc_failures -= 1;
+            anyhow::bail!("KV allocation failed (injected fault)");
+        }
         let idx = self
             .free
             .pop()
@@ -721,6 +738,7 @@ impl KvPool {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::util::prop::check;

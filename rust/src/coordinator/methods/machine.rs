@@ -210,6 +210,14 @@ impl BatchState {
         self.pool.in_use()
     }
 
+    /// Fault injection passthrough: fail this batch's next `n` KV
+    /// allocations (see [`KvPool::inject_alloc_failures`]). The next
+    /// admissions abort with a typed `admission failed` error instead
+    /// of entering a lane.
+    pub fn inject_kv_alloc_failures(&mut self, n: u64) {
+        self.pool.inject_alloc_failures(n);
+    }
+
     /// Lifetime slot allocations in this batch's pool — exceeds the
     /// lane count once retired lanes' slots recycle into admissions.
     pub fn kv_total_allocs(&self) -> u64 {

@@ -157,7 +157,52 @@ impl MetricsAggregator {
     }
 }
 
+/// Snapshot of the dispatcher's supervision counters, surfaced on both
+/// `/metrics` and `/healthz`. Panics and watchdog trips count
+/// *detections*; `redispatched` / `aborted_shard_failure` split the
+/// victim's requests by the idempotency rule (no `Committed` delta yet
+/// sent → replay elsewhere, else terminal abort); `recovery_*_ms`
+/// measure detection → respawned-worker-ready.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SupervisionStats {
+    pub shard_panics: u64,
+    pub watchdog_trips: u64,
+    pub redispatched_requests: u64,
+    pub aborted_shard_failure: u64,
+    pub restarts: u64,
+    pub dead_shards: u64,
+    pub recovery_count: u64,
+    pub recovery_total_ms: u64,
+    pub recovery_max_ms: u64,
+}
+
+impl SupervisionStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shard_panics", Json::num(self.shard_panics as f64)),
+            ("watchdog_trips", Json::num(self.watchdog_trips as f64)),
+            (
+                "redispatched_requests",
+                Json::num(self.redispatched_requests as f64),
+            ),
+            (
+                "aborted_shard_failure",
+                Json::num(self.aborted_shard_failure as f64),
+            ),
+            ("restarts", Json::num(self.restarts as f64)),
+            ("dead_shards", Json::num(self.dead_shards as f64)),
+            ("recovery_count", Json::num(self.recovery_count as f64)),
+            (
+                "recovery_total_ms",
+                Json::num(self.recovery_total_ms as f64),
+            ),
+            ("recovery_max_ms", Json::num(self.recovery_max_ms as f64)),
+        ])
+    }
+}
+
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 

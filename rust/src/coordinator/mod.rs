@@ -3,6 +3,7 @@
 //! decode scheduler, per-method engines, and §A.3-style metrics.
 
 pub mod batcher;
+pub mod faults;
 pub mod kv_cache;
 pub mod methods;
 pub mod metrics;
@@ -11,6 +12,7 @@ pub mod scheduler;
 pub mod sequence;
 
 pub use batcher::{DynamicBatcher, GroupKey, Pending};
+pub use faults::{FaultKind, FaultPlan};
 pub use kv_cache::{ChainPin, KvPool, SlotId};
 pub use methods::machine::{BatchState, CommitRun};
 pub use methods::{DecodeOpts, DecodeOutcome, Method, ALL_METHODS};

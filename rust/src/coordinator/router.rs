@@ -61,8 +61,28 @@
 //! drain: new submits are refused, every queued request gets a
 //! terminal `Aborted{"shutdown"}`, in-flight lanes *finish* normally,
 //! then the workers exit ([`Router::join`] / [`Router::shutdown`]).
+//!
+//! **Supervision.** Every shard worker runs under a per-shard
+//! supervisor thread behind `catch_unwind`. A panicking worker (or one
+//! that misses its busy-heartbeat deadline — the stall watchdog treats
+//! a wedged step like a panic) is quarantined: its generation counter
+//! is bumped so a zombie incarnation stands down on its next block
+//! boundary, and every admitted-but-unfinished request in the shard's
+//! recovery registry is settled by the idempotency rule — a request
+//! that never streamed a `Committed` delta is *re-dispatched* (its
+//! decode trace is a pure function of (prompt, seed), so the replay is
+//! byte-identical); one that already streamed gets a terminal
+//! `Aborted{"shard_failure"}` with a Retry-After hint. The worker then
+//! respawns with a fresh core (KV pool, prefix trie), bounded by
+//! `restart_budget` per `restart_window`; past the budget the shard is
+//! marked dead, its queue evacuates to live siblings, routing skips
+//! it, and `/healthz` reports `degraded: true`. A [`FaultPlan`]
+//! (`RouterConfig::fault_plan`, off by default) deterministically
+//! injects worker panics, delayed steps, and KV-allocation failures to
+//! test all of the above; `cdlm bench --scenario chaos` drives it.
 
 use std::collections::{BTreeMap, HashMap};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
@@ -71,10 +91,13 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::batcher::{DynamicBatcher, GroupKey, Pending};
+use super::faults::{FaultKind, FaultPlan};
 use super::kv_cache::{prefix_affinity_hash, KvPool};
 use super::methods::machine::{BatchState, CommitRun};
 use super::methods::{DecodeOpts, DecodeOutcome, Method};
-use super::metrics::{AbortRecord, MetricsAggregator, RequestRecord};
+use super::metrics::{
+    AbortRecord, MetricsAggregator, RequestRecord, SupervisionStats,
+};
 use super::scheduler::{ActiveBatch, Engine};
 use crate::runtime::{Geometry, ModelWeights, Runtime};
 use crate::tokenizer::{StreamDecoder, Tokenizer};
@@ -207,6 +230,7 @@ impl ServingCore {
 // Router: channel front-end + decode worker thread
 // ---------------------------------------------------------------------------
 
+#[derive(Clone)]
 pub struct GenerateRequest {
     pub backbone: String,
     pub method: Method,
@@ -328,23 +352,75 @@ impl RequestCtl {
 pub struct ResponseHandle {
     rx: mpsc::Receiver<LaneEvent>,
     ctl: Arc<RequestCtl>,
+    /// A terminal event has been delivered through this handle
+    /// (received, or synthesized on disconnect). Guarantees the
+    /// exactly-one-terminal contract survives a dead worker: a channel
+    /// that disconnects *without* a terminal yields one synthesized
+    /// `Aborted{"worker_lost"}`, never a silent `None`/hang, and never
+    /// a second terminal after a real one.
+    terminal_seen: std::cell::Cell<bool>,
 }
 
 impl ResponseHandle {
-    /// Next lane event; `None` once the channel closes (after the
-    /// terminal event, or if the worker died).
+    fn new(
+        rx: mpsc::Receiver<LaneEvent>,
+        ctl: Arc<RequestCtl>,
+    ) -> ResponseHandle {
+        ResponseHandle {
+            rx,
+            ctl,
+            terminal_seen: std::cell::Cell::new(false),
+        }
+    }
+
+    fn note(&self, ev: &LaneEvent) {
+        if matches!(ev, LaneEvent::Finished(_) | LaneEvent::Aborted { .. })
+        {
+            self.terminal_seen.set(true);
+        }
+    }
+
+    fn synthesize_lost(&self) -> LaneEvent {
+        self.terminal_seen.set(true);
+        LaneEvent::Aborted {
+            reason: "worker_lost: event channel disconnected without a \
+                     terminal event"
+                .to_string(),
+            steps: 0,
+            model_calls: 0,
+            committed_tokens: 0,
+        }
+    }
+
+    /// Next lane event. A disconnect before the terminal event (the
+    /// worker died and nothing recovered the request) is surfaced as
+    /// one synthesized `Aborted{"worker_lost"}`; `None` only ever
+    /// means "the terminal event was already delivered".
     pub fn next_event(&self) -> Option<LaneEvent> {
-        self.rx.recv().ok()
+        match self.rx.recv() {
+            Ok(ev) => {
+                self.note(&ev);
+                Some(ev)
+            }
+            Err(_) if !self.terminal_seen.get() => {
+                Some(self.synthesize_lost())
+            }
+            Err(_) => None,
+        }
     }
 
     /// Drain to the terminal event: `Finished -> Ok`, `Aborted -> Err`.
+    /// A worker lost without recovery yields
+    /// `Err("worker_lost: ...")`, not a hang.
     pub fn wait(&self) -> Result<GenerateResponse, String> {
         loop {
-            match self.rx.recv() {
-                Ok(LaneEvent::Finished(resp)) => return Ok(resp),
-                Ok(LaneEvent::Aborted { reason, .. }) => return Err(reason),
-                Ok(_) => continue,
-                Err(_) => return Err("worker dropped the request".into()),
+            match self.next_event() {
+                Some(LaneEvent::Finished(resp)) => return Ok(resp),
+                Some(LaneEvent::Aborted { reason, .. }) => {
+                    return Err(reason)
+                }
+                Some(_) => continue,
+                None => return Err("worker dropped the request".into()),
             }
         }
     }
@@ -354,8 +430,16 @@ impl ResponseHandle {
     /// `next_event` would pin the loop on one connection).
     pub fn try_next_event(&self) -> TryEvent {
         match self.rx.try_recv() {
-            Ok(ev) => TryEvent::Event(ev),
+            Ok(ev) => {
+                self.note(&ev);
+                TryEvent::Event(ev)
+            }
             Err(mpsc::TryRecvError::Empty) => TryEvent::Empty,
+            Err(mpsc::TryRecvError::Disconnected)
+                if !self.terminal_seen.get() =>
+            {
+                TryEvent::Event(self.synthesize_lost())
+            }
             Err(mpsc::TryRecvError::Disconnected) => TryEvent::Closed,
         }
     }
@@ -374,11 +458,118 @@ pub enum TryEvent {
     Event(LaneEvent),
     /// Nothing yet; poll again later.
     Empty,
-    /// The channel closed without a terminal event (worker died).
+    /// The channel is closed and the terminal event was already
+    /// delivered (a pre-terminal worker death surfaces as an
+    /// `Event(Aborted{"worker_lost"})` instead).
     Closed,
 }
 
 type EventTx = mpsc::Sender<LaneEvent>;
+
+/// What the worker has sent through a [`LaneSlot`], tracked under the
+/// slot's lock so the supervisor's recovery decision and the worker's
+/// sends serialize.
+#[derive(Default)]
+struct SlotState {
+    /// Seized by the supervisor: further worker sends are dropped (the
+    /// zombie incarnation starves; the request's channel now belongs
+    /// to its replay or its terminal abort).
+    revoked: bool,
+    /// At least one `Committed` delta reached the channel — the
+    /// re-dispatch idempotency rule: a request that streamed cannot be
+    /// replayed (the client already consumed part of one trace).
+    committed: bool,
+    /// A terminal `Finished`/`Aborted` reached the channel.
+    terminal: bool,
+    /// `Admitted` was sent (a replayed request suppresses the
+    /// duplicate so the client sees one admission).
+    admitted_sent: bool,
+    /// Tokens delivered so far (the abort event's accounting when the
+    /// worker died holding the exact counters).
+    committed_tokens: usize,
+}
+
+/// The worker-side half of one request's event channel, wrapped so a
+/// supervisor can atomically *seize* it: revoke the (possibly zombie)
+/// worker's send rights and read exactly what the client has been
+/// promised so far. All worker sends route through [`LaneSlot::send`];
+/// a send after revocation fails like a disconnected client, which the
+/// worker already handles by cancelling the lane.
+struct LaneSlot {
+    tx: EventTx,
+    st: Mutex<SlotState>,
+}
+
+impl LaneSlot {
+    fn new(tx: EventTx) -> Arc<LaneSlot> {
+        Arc::new(LaneSlot { tx, st: Mutex::new(SlotState::default()) })
+    }
+
+    /// A fresh slot over the same channel for a re-dispatched request:
+    /// send rights restored, `Admitted` suppressed (the client already
+    /// saw one), commit/terminal state reset for the replay.
+    fn replay(old: &LaneSlot) -> Arc<LaneSlot> {
+        Arc::new(LaneSlot {
+            tx: old.tx.clone(),
+            st: Mutex::new(SlotState {
+                admitted_sent: true,
+                ..SlotState::default()
+            }),
+        })
+    }
+
+    fn lock(&self) -> MutexGuard<'_, SlotState> {
+        self.st.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Worker-side send. `Err` means the event was not delivered —
+    /// receiver gone or slot revoked/terminal — and the caller should
+    /// treat the request as gone (cancel the lane).
+    fn send(&self, ev: LaneEvent) -> Result<(), ()> {
+        let mut st = self.lock();
+        if st.revoked || st.terminal {
+            return Err(());
+        }
+        match &ev {
+            LaneEvent::Admitted => {
+                if st.admitted_sent {
+                    return Ok(());
+                }
+                st.admitted_sent = true;
+            }
+            LaneEvent::Committed { tokens, .. } => {
+                st.committed = true;
+                st.committed_tokens += tokens;
+            }
+            LaneEvent::Finished(_) | LaneEvent::Aborted { .. } => {
+                st.terminal = true;
+            }
+        }
+        self.tx.send(ev).map_err(|_| ())
+    }
+
+    /// Supervisor-side: revoke worker send rights and report
+    /// `(committed, terminal, committed_tokens)` — the state the
+    /// recovery decision is made on. Holding the lock for the flag
+    /// flip closes the race with an in-flight worker send.
+    fn seize(&self) -> (bool, bool, usize) {
+        let mut st = self.lock();
+        st.revoked = true;
+        (st.committed, st.terminal, st.committed_tokens)
+    }
+
+    /// Supervisor-side terminal send on a seized slot (revocation does
+    /// not apply to the supervisor). No-op if a terminal already went
+    /// out — the exactly-one-terminal contract holds.
+    fn force_terminal(&self, ev: LaneEvent) {
+        let mut st = self.lock();
+        if st.terminal {
+            return;
+        }
+        st.terminal = true;
+        let _ = self.tx.send(ev);
+    }
+}
 
 /// Typed admission verdicts from [`Router::submit`], so the HTTP layer
 /// maps each to the right status code and `Retry-After` hint instead of
@@ -397,6 +588,10 @@ pub enum SubmitError {
     /// (another instance will take the retry after the rolling
     /// restart).
     Draining { retry_after: Duration },
+    /// Every shard has exhausted its restart budget and been marked
+    /// dead — a 503 with `Retry-After` (an operator or orchestrator
+    /// restart is needed; `/healthz` reports `degraded`).
+    Degraded { retry_after: Duration },
 }
 
 impl SubmitError {
@@ -405,7 +600,7 @@ impl SubmitError {
         match self {
             SubmitError::Invalid(_) => 400,
             SubmitError::QueueFull { .. } | SubmitError::ClientCap { .. } => 429,
-            SubmitError::Draining { .. } => 503,
+            SubmitError::Draining { .. } | SubmitError::Degraded { .. } => 503,
         }
     }
 
@@ -415,7 +610,8 @@ impl SubmitError {
             SubmitError::Invalid(_) => None,
             SubmitError::QueueFull { retry_after, .. }
             | SubmitError::ClientCap { retry_after, .. }
-            | SubmitError::Draining { retry_after } => Some(*retry_after),
+            | SubmitError::Draining { retry_after }
+            | SubmitError::Degraded { retry_after } => Some(*retry_after),
         }
     }
 }
@@ -435,6 +631,11 @@ impl std::fmt::Display for SubmitError {
             SubmitError::Draining { .. } => {
                 write!(f, "admission rejected: draining for shutdown")
             }
+            SubmitError::Degraded { .. } => write!(
+                f,
+                "admission rejected: every shard is dead (restart budget \
+                 exhausted); the service is degraded"
+            ),
         }
     }
 }
@@ -472,7 +673,7 @@ impl Drop for ClientPermit {
 /// A submitted request in flight toward a worker lane.
 struct Submit {
     req: GenerateRequest,
-    events: EventTx,
+    events: Arc<LaneSlot>,
     ctl: Arc<RequestCtl>,
     /// Stamped at `Router::submit`, so TTFT/TTLT include the time a
     /// message waits in the channel while the worker decodes.
@@ -481,6 +682,8 @@ struct Submit {
     /// shards compare it against their own id at admission to measure
     /// the affinity hit rate.
     affinity: usize,
+    /// Router-wide request id, keying the shard's recovery registry.
+    rid: u64,
     /// Held for the request's whole life; dropped on any terminal path.
     _permit: ClientPermit,
 }
@@ -495,6 +698,20 @@ impl Submit {
             committed_tokens: 0,
         });
     }
+}
+
+/// Everything the supervisor needs to settle one admitted request
+/// after its worker died: the seized event slot decides replay vs
+/// abort, and the cloned request rebuilds the [`Submit`] for replay.
+/// Inserted at lane admission, removed at the lane's terminal event —
+/// so the registry is exactly the set of admitted-but-unanswered
+/// requests.
+struct Recoverable {
+    slot: Arc<LaneSlot>,
+    ctl: Arc<RequestCtl>,
+    req: GenerateRequest,
+    submitted: Instant,
+    affinity: usize,
 }
 
 /// Control-plane message fanned out to every shard. Metrics replies as
@@ -514,9 +731,16 @@ struct ShardInbox {
     shutdown: bool,
 }
 
-/// One replica shard: the mailbox the dispatcher routes into and the
+/// Shard lifecycle states (`Shard::state`).
+const SHARD_LIVE: usize = 0;
+const SHARD_RESTARTING: usize = 1;
+const SHARD_DEAD: usize = 2;
+
+/// One replica shard: the mailbox the dispatcher routes into, the
 /// racy load gauges (`depth`, `in_flight`) routing and stealing read
-/// without taking the lock.
+/// without taking the lock, and the supervision state (heartbeat,
+/// generation, lifecycle, recovery registry) shared between the
+/// worker and its supervisor.
 struct Shard {
     id: usize,
     inbox: Mutex<ShardInbox>,
@@ -527,6 +751,28 @@ struct Shard {
     /// Live lanes across this shard's machines (updated once per worker
     /// iteration; reads are advisory).
     in_flight: AtomicUsize,
+    /// Worker liveness stamp: ms since `epoch` of the last block
+    /// boundary (plus the busy flag below), read by the watchdog.
+    heartbeat: AtomicU64,
+    /// The worker had live work at its last stamp. The watchdog only
+    /// applies to busy workers — an idle worker parks on its condvar
+    /// for 200ms stretches and must not trip it.
+    busy: AtomicBool,
+    /// Worker incarnation. The supervisor bumps it *before* sweeping
+    /// the registry; a superseded (wedged-then-woken) incarnation
+    /// observes the mismatch at its next block boundary and stands
+    /// down, and every send it attempts in between hits its revoked
+    /// slots.
+    generation: AtomicUsize,
+    /// `SHARD_LIVE` / `SHARD_RESTARTING` / `SHARD_DEAD`.
+    state: AtomicUsize,
+    /// Worker respawns performed by the supervisor (lifetime).
+    restarts: AtomicU64,
+    /// Admitted-but-unanswered requests, by rid — what the supervisor
+    /// can still recover after a worker death.
+    registry: Mutex<HashMap<u64, Recoverable>>,
+    /// Heartbeat time base (per shard, so stamps never mix bases).
+    epoch: Instant,
 }
 
 impl Shard {
@@ -541,6 +787,13 @@ impl Shard {
             cv: Condvar::new(),
             depth: AtomicUsize::new(0),
             in_flight: AtomicUsize::new(0),
+            heartbeat: AtomicU64::new(0),
+            busy: AtomicBool::new(false),
+            generation: AtomicUsize::new(0),
+            state: AtomicUsize::new(SHARD_LIVE),
+            restarts: AtomicU64::new(0),
+            registry: Mutex::new(HashMap::new()),
+            epoch: Instant::now(),
         }
     }
 
@@ -548,6 +801,39 @@ impl Shard {
     /// must not take the whole front door down with it).
     fn lock(&self) -> MutexGuard<'_, ShardInbox> {
         self.inbox.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn state(&self) -> usize {
+        self.state.load(Ordering::SeqCst)
+    }
+
+    fn set_state(&self, s: usize) {
+        self.state.store(s, Ordering::SeqCst);
+    }
+
+    /// Stamp worker liveness (called at every block boundary).
+    fn beat(&self, busy: bool) {
+        self.heartbeat
+            .store(self.epoch.elapsed().as_millis() as u64, Ordering::SeqCst);
+        self.busy.store(busy, Ordering::SeqCst);
+    }
+
+    /// Milliseconds since the last liveness stamp.
+    fn heartbeat_age_ms(&self) -> u64 {
+        (self.epoch.elapsed().as_millis() as u64)
+            .saturating_sub(self.heartbeat.load(Ordering::SeqCst))
+    }
+
+    fn registry_lock(&self) -> MutexGuard<'_, HashMap<u64, Recoverable>> {
+        self.registry.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn registry_insert(&self, rid: u64, rec: Recoverable) {
+        self.registry_lock().insert(rid, rec);
+    }
+
+    fn registry_remove(&self, rid: u64) {
+        self.registry_lock().remove(&rid);
     }
 
     /// Refresh the advisory queue-depth gauge; call before releasing
@@ -571,11 +857,18 @@ impl Shard {
         Ok(())
     }
 
-    fn send_control(&self, msg: ControlMsg) {
+    /// Queue a control message for the worker. Refused (`false`) once
+    /// the inbox is shut down — after shard death or drain nothing will
+    /// ever service it, and the caller must not block on the reply.
+    fn send_control(&self, msg: ControlMsg) -> bool {
         let mut inbox = self.lock();
+        if inbox.shutdown {
+            return false;
+        }
         inbox.control.push(msg);
         drop(inbox);
         self.cv.notify_all();
+        true
     }
 }
 
@@ -591,8 +884,53 @@ struct Dispatch {
     rejected_queue_full: AtomicU64,
     rejected_client_cap: AtomicU64,
     rejected_draining: AtomicU64,
+    rejected_degraded: AtomicU64,
     routed_affinity: AtomicU64,
     routed_spill: AtomicU64,
+    /// Router-wide request-id source; every admitted request gets one,
+    /// keying the shard recovery registries.
+    next_rid: AtomicU64,
+    shard_panics: AtomicU64,
+    watchdog_trips: AtomicU64,
+    redispatched: AtomicU64,
+    aborted_shard_failure: AtomicU64,
+    dead_shards: AtomicU64,
+    recovery_count: AtomicU64,
+    recovery_total_ms: AtomicU64,
+    recovery_max_ms: AtomicU64,
+}
+
+impl Dispatch {
+    fn supervision(&self) -> SupervisionStats {
+        let c = |a: &AtomicU64| a.load(Ordering::SeqCst);
+        SupervisionStats {
+            shard_panics: c(&self.shard_panics),
+            watchdog_trips: c(&self.watchdog_trips),
+            redispatched_requests: c(&self.redispatched),
+            aborted_shard_failure: c(&self.aborted_shard_failure),
+            restarts: self
+                .shards
+                .iter()
+                .map(|s| s.restarts.load(Ordering::SeqCst))
+                .sum(),
+            dead_shards: c(&self.dead_shards),
+            recovery_count: c(&self.recovery_count),
+            recovery_total_ms: c(&self.recovery_total_ms),
+            recovery_max_ms: c(&self.recovery_max_ms),
+        }
+    }
+
+    /// Least-loaded shard among those still accepting work, if any.
+    fn least_loaded_live(&self, exclude: Option<usize>) -> Option<usize> {
+        self.shards
+            .iter()
+            .filter(|s| s.state() != SHARD_DEAD && Some(s.id) != exclude)
+            .min_by_key(|s| {
+                s.depth.load(Ordering::Relaxed)
+                    + s.in_flight.load(Ordering::Relaxed)
+            })
+            .map(|s| s.id)
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -632,6 +970,22 @@ pub struct RouterConfig {
     /// [`SubmitError::ClientCap`] so one flooding client cannot consume
     /// the whole `max_queue`.
     pub max_per_client: usize,
+    /// Deterministic fault-injection plan (`None` in production).
+    /// Threaded to every shard worker; see [`FaultPlan`] for the spec
+    /// grammar and `cdlm serve --fault-spec/--fault-seed`.
+    pub fault_plan: Option<Arc<FaultPlan>>,
+    /// Worker respawns the supervisor allows per shard within
+    /// `restart_window` before declaring the shard dead (`0` = never
+    /// restart: first failure kills the shard).
+    pub restart_budget: usize,
+    /// Sliding window over which `restart_budget` is counted.
+    pub restart_window: Duration,
+    /// Stall watchdog: a worker that is busy (live lanes) but hasn't
+    /// stamped a block boundary for this long is treated as wedged —
+    /// superseded and replaced like a panic. `Duration::ZERO` disables
+    /// the watchdog. Must comfortably exceed the worst-case block step
+    /// (including `step_delay`).
+    pub watchdog_deadline: Duration,
 }
 
 impl Default for RouterConfig {
@@ -647,6 +1001,10 @@ impl Default for RouterConfig {
             prefix_cache: true,
             replicas: 1,
             max_per_client: 0,
+            fault_plan: None,
+            restart_budget: 3,
+            restart_window: Duration::from_secs(60),
+            watchdog_deadline: Duration::from_secs(5),
         }
     }
 }
@@ -663,61 +1021,23 @@ pub struct Router {
 }
 
 impl Router {
-    /// Spawn one decode worker per replica shard (each loads its own
-    /// full serving core on its own thread) and wait for all of them to
-    /// come up.
-    pub fn start(artifacts: PathBuf, cfg: RouterConfig) -> Result<Router> {
+    /// Spawn one supervisor per replica shard (each supervisor spawns
+    /// and, on failure, respawns a decode worker that loads its own
+    /// full serving core) and wait for all of them to come up.
+    pub fn start(artifacts: PathBuf, mut cfg: RouterConfig) -> Result<Router> {
         let replicas = cfg.replicas.max(1);
+        if let Some(plan) = &cfg.fault_plan {
+            plan.bind_replicas(replicas);
+        }
+        if !cfg.continuous {
+            // the closed-batch worker runs groups to completion, so a
+            // healthy step can legitimately outlast any fixed deadline
+            cfg.watchdog_deadline = Duration::ZERO;
+        }
         let queued = Arc::new(AtomicUsize::new(0));
         let shards: Vec<Arc<Shard>> = (0..replicas)
             .map(|id| Arc::new(Shard::new(id, cfg.max_batch, cfg.max_wait)))
             .collect();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<Geometry, String>>();
-        // the continuous worker decodes exclusively through per-batch
-        // KV pools (pool_capacity bounds their total lanes); don't
-        // also allocate the shared core pool it would never touch
-        let core_pool = if cfg.continuous { 0 } else { cfg.pool_capacity };
-        let mut workers = Vec::with_capacity(replicas);
-        for id in 0..replicas {
-            let shard = shards[id].clone();
-            let peers = shards.clone();
-            let wq = queued.clone();
-            let wcfg = cfg.clone();
-            let wartifacts = artifacts.clone();
-            let wready = ready_tx.clone();
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("cdlm-decode-worker-{id}"))
-                    .spawn(move || {
-                        let mut core =
-                            match ServingCore::load(&wartifacts, core_pool) {
-                                Ok(c) => {
-                                    let _ = wready.send(Ok(c
-                                        .rt
-                                        .manifest
-                                        .geometry
-                                        .clone()));
-                                    c
-                                }
-                                Err(e) => {
-                                    let _ =
-                                        wready.send(Err(format!("{e:#}")));
-                                    return;
-                                }
-                            };
-                        if wcfg.continuous {
-                            worker_loop_continuous(
-                                &mut core, shard, peers, wcfg, wq,
-                            );
-                        } else {
-                            worker_loop_closed(
-                                &mut core, shard, wcfg, replicas, wq,
-                            );
-                        }
-                    })?,
-            );
-        }
-        drop(ready_tx);
         let dispatch = Arc::new(Dispatch {
             shards,
             queued,
@@ -726,9 +1046,41 @@ impl Router {
             rejected_queue_full: AtomicU64::new(0),
             rejected_client_cap: AtomicU64::new(0),
             rejected_draining: AtomicU64::new(0),
+            rejected_degraded: AtomicU64::new(0),
             routed_affinity: AtomicU64::new(0),
             routed_spill: AtomicU64::new(0),
+            next_rid: AtomicU64::new(0),
+            shard_panics: AtomicU64::new(0),
+            watchdog_trips: AtomicU64::new(0),
+            redispatched: AtomicU64::new(0),
+            aborted_shard_failure: AtomicU64::new(0),
+            dead_shards: AtomicU64::new(0),
+            recovery_count: AtomicU64::new(0),
+            recovery_total_ms: AtomicU64::new(0),
+            recovery_max_ms: AtomicU64::new(0),
         });
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<Geometry, String>>();
+        // the continuous worker decodes exclusively through per-batch
+        // KV pools (pool_capacity bounds their total lanes); don't
+        // also allocate the shared core pool it would never touch
+        let core_pool = if cfg.continuous { 0 } else { cfg.pool_capacity };
+        let mut workers = Vec::with_capacity(replicas);
+        for id in 0..replicas {
+            let sdispatch = dispatch.clone();
+            let scfg = cfg.clone();
+            let sartifacts = artifacts.clone();
+            let sready = ready_tx.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("cdlm-shard-supervisor-{id}"))
+                    .spawn(move || {
+                        supervise_shard(
+                            sartifacts, core_pool, sdispatch, id, scfg, sready,
+                        );
+                    })?,
+            );
+        }
+        drop(ready_tx);
         let mut geometry: Option<Geometry> = None;
         for _ in 0..replicas {
             let up = ready_rx
@@ -864,28 +1216,36 @@ impl Router {
             deadline: req.timeout.map(|t| now + t),
             max_new_tokens: req.max_new_tokens,
         });
-        // prefix-affinity routing with least-loaded spill
+        // prefix-affinity routing with least-loaded spill, over *live*
+        // shards only — a dead shard's queue is never drained
         let shards = &d.shards;
+        let live: Vec<usize> = shards
+            .iter()
+            .filter(|s| s.state() != SHARD_DEAD)
+            .map(|s| s.id)
+            .collect();
+        if live.is_empty() {
+            d.queued.fetch_sub(1, Ordering::SeqCst);
+            drop(permit);
+            d.rejected_degraded.fetch_add(1, Ordering::SeqCst);
+            return Err(SubmitError::Degraded {
+                retry_after: self.retry_after_hint(),
+            });
+        }
         let affinity = (prefix_affinity_hash(
             &req.prompt_ids,
             self.geometry.block_size,
         ) % shards.len() as u64) as usize;
-        let fair_share = (self.max_queue / shards.len()).max(1);
-        let target =
-            if shards[affinity].depth.load(Ordering::Relaxed) < fair_share {
-                d.routed_affinity.fetch_add(1, Ordering::SeqCst);
-                affinity
-            } else {
-                d.routed_spill.fetch_add(1, Ordering::SeqCst);
-                shards
-                    .iter()
-                    .min_by_key(|s| {
-                        s.depth.load(Ordering::Relaxed)
-                            + s.in_flight.load(Ordering::Relaxed)
-                    })
-                    .map(|s| s.id)
-                    .unwrap_or(affinity)
-            };
+        let fair_share = (self.max_queue / live.len()).max(1);
+        let target = if live.contains(&affinity)
+            && shards[affinity].depth.load(Ordering::Relaxed) < fair_share
+        {
+            d.routed_affinity.fetch_add(1, Ordering::SeqCst);
+            affinity
+        } else {
+            d.routed_spill.fetch_add(1, Ordering::SeqCst);
+            d.least_loaded_live(None).unwrap_or(affinity)
+        };
         // the continuous machine carries tau per lane; the closed path
         // folds the override into the group key (tau-uniform groups)
         let key = if self.continuous {
@@ -896,37 +1256,75 @@ impl Router {
             GroupKey::new(req.backbone.clone(), req.method).with_tau(tau)
         };
         let (etx, erx) = mpsc::channel();
-        let pending = Pending {
+        let slot = LaneSlot::new(etx);
+        let mut pending = Pending {
             key,
             enqueued: now,
             deadline: ctl.deadline,
             payload: Submit {
                 req,
-                events: etx,
+                events: slot,
                 ctl: ctl.clone(),
                 submitted: now,
                 affinity,
+                rid: d.next_rid.fetch_add(1, Ordering::SeqCst),
                 _permit: permit,
             },
         };
-        if shards[target].push(pending).is_err() {
-            // the shard began draining between the flag check and the
-            // push: hand the refusal back instead of stranding the
-            // request in a queue nobody will ever drain
+        // push-retry: a shard may refuse (drain began, or its worker
+        // just died and the supervisor closed the inbox) between the
+        // liveness check and the push — try the remaining live shards
+        // before giving up
+        let mut tried = vec![target];
+        let mut placed = false;
+        loop {
+            let t = *tried.last().expect("tried starts non-empty");
+            match shards[t].push(pending) {
+                Ok(()) => {
+                    placed = true;
+                    break;
+                }
+                Err(p) => {
+                    if d.draining.load(Ordering::SeqCst) {
+                        d.queued.fetch_sub(1, Ordering::SeqCst);
+                        d.rejected_draining.fetch_add(1, Ordering::SeqCst);
+                        return Err(SubmitError::Draining {
+                            retry_after: self.retry_after_hint(),
+                        });
+                    }
+                    pending = p;
+                    let next = shards
+                        .iter()
+                        .filter(|s| {
+                            s.state() != SHARD_DEAD && !tried.contains(&s.id)
+                        })
+                        .min_by_key(|s| {
+                            s.depth.load(Ordering::Relaxed)
+                                + s.in_flight.load(Ordering::Relaxed)
+                        })
+                        .map(|s| s.id);
+                    match next {
+                        Some(n) => tried.push(n),
+                        None => break,
+                    }
+                }
+            }
+        }
+        if !placed {
             d.queued.fetch_sub(1, Ordering::SeqCst);
-            d.rejected_draining.fetch_add(1, Ordering::SeqCst);
-            return Err(SubmitError::Draining {
+            d.rejected_degraded.fetch_add(1, Ordering::SeqCst);
+            return Err(SubmitError::Degraded {
                 retry_after: self.retry_after_hint(),
             });
         }
         // hint every other shard: an idle sibling may wake and steal
         // once the request has waited out the batching window
         for s in shards {
-            if s.id != target {
+            if !tried.contains(&s.id) {
                 s.cv.notify_all();
             }
         }
-        Ok(ResponseHandle { rx: erx, ctl })
+        Ok(ResponseHandle::new(erx, ctl))
     }
 
     /// Merged per-(backbone, method) metrics across every shard.
@@ -936,11 +1334,18 @@ impl Router {
     pub fn metrics(&self) -> Result<Json> {
         let mut merged: HashMap<String, MetricsAggregator> = HashMap::new();
         for shard in &self.dispatch.shards {
+            if shard.state() == SHARD_DEAD {
+                continue;
+            }
             let (tx, rx) = mpsc::channel();
-            shard.send_control(ControlMsg::Metrics(tx));
-            let m = rx
-                .recv()
-                .map_err(|_| anyhow::anyhow!("router worker is gone"))?;
+            if !shard.send_control(ControlMsg::Metrics(tx)) {
+                continue;
+            }
+            // a worker that dies mid-request takes its per-cell
+            // aggregators down with its core; skip the shard rather
+            // than fail the whole endpoint (the supervision counters
+            // still record the loss)
+            let Ok(m) = rx.recv() else { continue };
             for (k, v) in m {
                 match merged.entry(k) {
                     std::collections::hash_map::Entry::Occupied(mut e) => {
@@ -952,9 +1357,23 @@ impl Router {
                 }
             }
         }
-        Ok(Json::Obj(
-            merged.into_iter().map(|(k, v)| (k, v.to_json())).collect(),
-        ))
+        let mut obj: BTreeMap<String, Json> =
+            merged.into_iter().map(|(k, v)| (k, v.to_json())).collect();
+        let sup = self.dispatch.supervision();
+        obj.insert(
+            "shard_panics".to_string(),
+            Json::num(sup.shard_panics as f64),
+        );
+        obj.insert(
+            "redispatched_requests".to_string(),
+            Json::num(sup.redispatched_requests as f64),
+        );
+        obj.insert(
+            "watchdog_trips".to_string(),
+            Json::num(sup.watchdog_trips as f64),
+        );
+        obj.insert("supervision".to_string(), sup.to_json());
+        Ok(Json::Obj(obj))
     }
 
     /// Merged health across every shard: numeric gauges/counters are
@@ -963,20 +1382,62 @@ impl Router {
     pub fn health(&self) -> Result<Json> {
         let mut per_shard = Vec::with_capacity(self.replicas());
         for shard in &self.dispatch.shards {
-            let (tx, rx) = mpsc::channel();
-            shard.send_control(ControlMsg::Health(tx));
-            per_shard.push(
-                rx.recv()
-                    .map_err(|_| anyhow::anyhow!("router worker is gone"))?,
+            let state_name = match shard.state() {
+                SHARD_DEAD => "dead",
+                SHARD_RESTARTING => "restarting",
+                _ => "live",
+            };
+            // a dead (or mid-restart, inbox-refusing) shard cannot
+            // answer: synthesize its entry from supervisor-side state
+            // so /healthz never hangs on a shard that will not reply
+            let reply = if shard.state() == SHARD_DEAD {
+                None
+            } else {
+                let (tx, rx) = mpsc::channel();
+                if shard.send_control(ControlMsg::Health(tx)) {
+                    rx.recv().ok()
+                } else {
+                    None
+                }
+            };
+            let mut entry = match reply {
+                Some(Json::Obj(m)) => m,
+                _ => BTreeMap::from([
+                    ("status".to_string(), Json::str(state_name)),
+                    (
+                        "replica".to_string(),
+                        Json::num(shard.id as f64),
+                    ),
+                    (
+                        "queued".to_string(),
+                        Json::num(
+                            shard.depth.load(Ordering::SeqCst) as f64
+                        ),
+                    ),
+                    ("in_flight_lanes".to_string(), Json::num(0.0)),
+                ]),
+            };
+            entry.insert("state".to_string(), Json::str(state_name));
+            entry.insert(
+                "last_heartbeat_ms".to_string(),
+                Json::num(shard.heartbeat_age_ms() as f64),
             );
+            entry.insert(
+                "restarts".to_string(),
+                Json::num(shard.restarts.load(Ordering::SeqCst) as f64),
+            );
+            per_shard.push(Json::Obj(entry));
         }
         let d = &self.dispatch;
         let mut merged: BTreeMap<String, Json> = BTreeMap::new();
         for h in &per_shard {
             let Json::Obj(m) = h else { continue };
             for (k, v) in m {
-                if k == "replica" {
-                    continue; // shard ordinal: meaningless to sum
+                if k == "replica"
+                    || k == "state"
+                    || k == "last_heartbeat_ms"
+                {
+                    continue; // per-shard identity/liveness: not summable
                 }
                 match v {
                     Json::Num(n) => {
@@ -1009,6 +1470,25 @@ impl Router {
             .insert("rejected_draining".into(), count(&d.rejected_draining));
         merged.insert("routed_affinity".into(), count(&d.routed_affinity));
         merged.insert("routed_spill".into(), count(&d.routed_spill));
+        merged
+            .insert("rejected_degraded".into(), count(&d.rejected_degraded));
+        let any_dead =
+            d.shards.iter().any(|s| s.state() == SHARD_DEAD);
+        merged.insert("degraded".into(), Json::Bool(any_dead));
+        let sup = d.supervision();
+        merged.insert(
+            "shard_panics".into(),
+            Json::num(sup.shard_panics as f64),
+        );
+        merged.insert(
+            "watchdog_trips".into(),
+            Json::num(sup.watchdog_trips as f64),
+        );
+        merged.insert(
+            "redispatched_requests".into(),
+            Json::num(sup.redispatched_requests as f64),
+        );
+        merged.insert("supervision".into(), sup.to_json());
         merged.insert("shards".into(), Json::Arr(per_shard));
         Ok(Json::Obj(merged))
     }
@@ -1049,6 +1529,348 @@ impl Router {
 }
 
 // ---------------------------------------------------------------------------
+// Shard supervision: spawn, watch, recover, respawn
+// ---------------------------------------------------------------------------
+
+/// How one worker incarnation ended.
+enum WorkerExit {
+    /// Graceful: the drain finished (or the core never loaded — the
+    /// load error already went out through the handshake channel).
+    Clean,
+    /// The supervisor bumped the shard generation (watchdog trip) and
+    /// this incarnation noticed and stood down.
+    Superseded,
+    /// `catch_unwind` caught a panic inside the worker loop.
+    Panicked(String),
+}
+
+fn panic_msg(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic payload".to_string()
+    }
+}
+
+/// Run one shard forever: spawn its decode worker, watch it (exit +
+/// stall watchdog), and on failure recover — supersede the incarnation,
+/// sweep the recovery registry (replay or abort each admitted request
+/// by the idempotency rule), then respawn within the restart budget or
+/// take the shard out of service.
+///
+/// The supervisor thread is the one `Router::join` waits on; it returns
+/// only when its worker drained cleanly or the shard died.
+fn supervise_shard(
+    artifacts: PathBuf,
+    core_pool: usize,
+    d: Arc<Dispatch>,
+    id: usize,
+    cfg: RouterConfig,
+    ready: mpsc::Sender<Result<Geometry, String>>,
+) {
+    let shard = d.shards[id].clone();
+    // consumed on the first generation: startup errors surface through
+    // Router::start, later ones through /healthz + the supervision
+    // counters
+    let mut ready = Some(ready);
+    let mut restart_log: Vec<Instant> = Vec::new();
+    let mut pending_recovery: Option<Instant> = None;
+    loop {
+        let gen = shard.generation.load(Ordering::SeqCst);
+        shard.beat(false);
+        let (ltx, lrx) = mpsc::channel::<Result<Geometry, String>>();
+        let wshard = shard.clone();
+        let wpeers = d.shards.clone();
+        let wq = d.queued.clone();
+        let wcfg = cfg.clone();
+        let wartifacts = artifacts.clone();
+        let spawned = std::thread::Builder::new()
+            .name(format!("cdlm-decode-worker-{id}-g{gen}"))
+            .spawn(move || -> WorkerExit {
+                let mut core =
+                    match ServingCore::load(&wartifacts, core_pool) {
+                        Ok(c) => {
+                            let _ = ltx
+                                .send(Ok(c.rt.manifest.geometry.clone()));
+                            c
+                        }
+                        Err(e) => {
+                            let _ = ltx.send(Err(format!("{e:#}")));
+                            return WorkerExit::Clean;
+                        }
+                    };
+                let replicas = wpeers.len();
+                let out = catch_unwind(AssertUnwindSafe(|| {
+                    if wcfg.continuous {
+                        worker_loop_continuous(
+                            &mut core, wshard, wpeers, wcfg, wq, gen,
+                        )
+                    } else {
+                        worker_loop_closed(
+                            &mut core, wshard, wcfg, replicas, wq, gen,
+                        )
+                    }
+                }));
+                match out {
+                    Ok(exit) => exit,
+                    Err(p) => WorkerExit::Panicked(panic_msg(p)),
+                }
+            });
+        let handle = match spawned {
+            Ok(h) => h,
+            Err(e) => {
+                if let Some(r) = ready.take() {
+                    let _ = r.send(Err(format!(
+                        "failed to spawn decode worker: {e}"
+                    )));
+                } else {
+                    eprintln!(
+                        "shard {id}: failed to respawn decode worker: {e}"
+                    );
+                    mark_shard_dead(&d, &shard);
+                }
+                return;
+            }
+        };
+        // load handshake: geometry up, or a load error (first
+        // generation reports through Router::start; a respawn that
+        // cannot reload its core kills the shard)
+        match lrx.recv() {
+            Ok(Ok(geom)) => {
+                if let Some(r) = ready.take() {
+                    let _ = r.send(Ok(geom));
+                } else if let Some(t0) = pending_recovery.take() {
+                    let ms = t0.elapsed().as_millis() as u64;
+                    d.recovery_count.fetch_add(1, Ordering::SeqCst);
+                    d.recovery_total_ms.fetch_add(ms, Ordering::SeqCst);
+                    d.recovery_max_ms.fetch_max(ms, Ordering::SeqCst);
+                }
+                shard.set_state(SHARD_LIVE);
+            }
+            Ok(Err(e)) => {
+                let _ = handle.join();
+                if let Some(r) = ready.take() {
+                    let _ = r.send(Err(e));
+                } else {
+                    eprintln!(
+                        "shard {id}: core reload failed during \
+                         recovery: {e}"
+                    );
+                    mark_shard_dead(&d, &shard);
+                }
+                return;
+            }
+            Err(_) => {
+                let _ = handle.join();
+                if let Some(r) = ready.take() {
+                    let _ = r
+                        .send(Err("worker died during startup".to_string()));
+                } else {
+                    eprintln!(
+                        "shard {id}: worker died while reloading its core"
+                    );
+                    mark_shard_dead(&d, &shard);
+                }
+                return;
+            }
+        }
+        // monitor: poll for worker exit and for a stalled heartbeat.
+        // 20ms granularity is far below any sane watchdog deadline and
+        // adds no load (the worker never blocks on the supervisor).
+        let deadline_ms = cfg.watchdog_deadline.as_millis() as u64;
+        let mut wedged = false;
+        loop {
+            if handle.is_finished() {
+                break;
+            }
+            if deadline_ms > 0
+                && shard.busy.load(Ordering::SeqCst)
+                && shard.heartbeat_age_ms() > deadline_ms
+            {
+                wedged = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        if wedged {
+            // treat like a panic, but the thread is still running:
+            // abandon the handle (the incarnation observes the
+            // generation bump below and stands down on its own; its
+            // seized slots make every send it attempts a no-op)
+            d.watchdog_trips.fetch_add(1, Ordering::SeqCst);
+            eprintln!(
+                "shard {id}: watchdog tripped (busy, no heartbeat for \
+                 {}ms > {deadline_ms}ms); superseding worker",
+                shard.heartbeat_age_ms()
+            );
+        } else {
+            let exit = match handle.join() {
+                Ok(exit) => exit,
+                // a panic outside catch_unwind (core load/handshake)
+                Err(p) => WorkerExit::Panicked(panic_msg(p)),
+            };
+            match exit {
+                WorkerExit::Clean | WorkerExit::Superseded => return,
+                WorkerExit::Panicked(msg) => {
+                    d.shard_panics.fetch_add(1, Ordering::SeqCst);
+                    eprintln!("shard {id}: worker panicked: {msg}");
+                }
+            }
+        }
+        // ---- recovery: supersede the incarnation, settle every
+        // admitted-but-unanswered request, then respawn or die
+        let t0 = Instant::now();
+        shard.set_state(SHARD_RESTARTING);
+        shard.generation.fetch_add(1, Ordering::SeqCst);
+        shard.cv.notify_all(); // wake a parked zombie so it stands down
+        let now = Instant::now();
+        restart_log.retain(|t| now.duration_since(*t) < cfg.restart_window);
+        let can_restart = restart_log.len() < cfg.restart_budget;
+        let swept: Vec<Recoverable> = {
+            let mut reg = shard.registry_lock();
+            reg.drain().map(|(_, rec)| rec).collect()
+        };
+        for rec in swept {
+            let (committed, terminal, tokens) = rec.slot.seize();
+            if terminal {
+                continue; // answered between death and sweep
+            }
+            if committed {
+                // the client consumed part of one decode trace: a
+                // replay could only duplicate or contradict it, so the
+                // idempotency rule says abort (client retries with the
+                // Retry-After hint)
+                d.aborted_shard_failure.fetch_add(1, Ordering::SeqCst);
+                rec.slot.force_terminal(LaneEvent::Aborted {
+                    reason: "shard_failure: worker lost after streaming \
+                             began; partial output cannot be replayed"
+                        .to_string(),
+                    steps: 0,
+                    model_calls: 0,
+                    committed_tokens: tokens,
+                });
+                continue;
+            }
+            // no delta ever reached the client: per-lane traces are
+            // pure functions of (prompt, seed), so a from-scratch
+            // replay is byte-identical and invisible
+            redispatch(&d, &shard, rec, can_restart);
+        }
+        if can_restart {
+            restart_log.push(now);
+            shard.restarts.fetch_add(1, Ordering::SeqCst);
+            pending_recovery = Some(t0);
+            continue;
+        }
+        eprintln!(
+            "shard {id}: restart budget exhausted ({} failures within \
+             {:?}); taking shard out of service",
+            restart_log.len() + 1,
+            cfg.restart_window
+        );
+        mark_shard_dead(&d, &shard);
+        return;
+    }
+}
+
+/// Queue one recovered request for a fresh decode: on the shard's own
+/// (about-to-respawn) inbox when it still has restart budget, else on
+/// the least-loaded live sibling. Recovery bypasses admission control —
+/// the request was already admitted once; bouncing it on `max_queue`
+/// now would turn a transparent replay into a client-visible failure.
+fn redispatch(d: &Dispatch, from: &Shard, rec: Recoverable, self_ok: bool) {
+    let rid = d.next_rid.fetch_add(1, Ordering::SeqCst);
+    // continuous-path key (the closed path keeps no recovery registry)
+    let key = GroupKey::new(rec.req.backbone.clone(), rec.req.method);
+    let pending = Pending {
+        key,
+        enqueued: rec.submitted,
+        deadline: rec.ctl.deadline,
+        payload: Submit {
+            req: rec.req,
+            events: LaneSlot::replay(&rec.slot),
+            ctl: rec.ctl,
+            submitted: rec.submitted,
+            affinity: rec.affinity,
+            rid,
+            _permit: ClientPermit::unlimited(),
+        },
+    };
+    let target = if self_ok {
+        Some(from.id)
+    } else {
+        d.least_loaded_live(Some(from.id))
+    };
+    let refused = match target {
+        Some(t) => {
+            // the sweep's take already decremented nothing — these
+            // requests left `queued` at admission — so re-queueing
+            // must count them back in
+            d.queued.fetch_add(1, Ordering::SeqCst);
+            match d.shards[t].push(pending) {
+                Ok(()) => {
+                    d.redispatched.fetch_add(1, Ordering::SeqCst);
+                    None
+                }
+                Err(p) => {
+                    d.queued.fetch_sub(1, Ordering::SeqCst);
+                    Some(p)
+                }
+            }
+        }
+        None => Some(pending),
+    };
+    if let Some(p) = refused {
+        d.aborted_shard_failure.fetch_add(1, Ordering::SeqCst);
+        p.payload
+            .abort("shard_failure: no healthy shard available for replay");
+    }
+}
+
+/// Take a shard out of service for good: flip it dead, close its inbox,
+/// and evacuate everything stranded inside — queued requests move to
+/// live siblings, pending control messages are dropped (their receivers
+/// synthesize a reply from supervisor-side state).
+fn mark_shard_dead(d: &Dispatch, shard: &Shard) {
+    shard.set_state(SHARD_DEAD);
+    d.dead_shards.fetch_add(1, Ordering::SeqCst);
+    shard.in_flight.store(0, Ordering::Relaxed);
+    let (stranded, control) = {
+        let mut inbox = shard.lock();
+        inbox.shutdown = true;
+        let mut stranded: Vec<Pending<Submit>> = Vec::new();
+        while let Some((_k, items)) = inbox.batcher.pop_any() {
+            stranded.extend(items);
+        }
+        shard.sync_depth(&inbox);
+        (stranded, std::mem::take(&mut inbox.control))
+    };
+    drop(control);
+    for p in stranded {
+        // still counted in `queued` (never taken by a worker): keep the
+        // count on a successful move, give it back on refusal
+        let moved = match d.least_loaded_live(Some(shard.id)) {
+            Some(t) => d.shards[t].push(p).err(),
+            None => Some(p),
+        };
+        match moved {
+            None => {
+                d.redispatched.fetch_add(1, Ordering::SeqCst);
+            }
+            Some(p) => {
+                d.queued.fetch_sub(1, Ordering::SeqCst);
+                d.aborted_shard_failure.fetch_add(1, Ordering::SeqCst);
+                p.payload.abort(
+                    "shard_failure: no healthy shard available for replay",
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Continuous worker: block-step machines + mid-flight admission
 // ---------------------------------------------------------------------------
 
@@ -1057,7 +1879,7 @@ impl Router {
 /// streaming state (incremental detokenizer + committed-token count the
 /// generation budget is charged against).
 struct Ticket {
-    events: EventTx,
+    events: Arc<LaneSlot>,
     ctl: Arc<RequestCtl>,
     enqueued: Instant,
     admitted: Instant,
@@ -1065,8 +1887,12 @@ struct Ticket {
     committed_tokens: usize,
     blocks_committed: usize,
     /// The event channel came back disconnected (client dropped its
-    /// handle): cancel the lane at the next block boundary.
+    /// handle) or the slot was seized by the supervisor: cancel the
+    /// lane at the next block boundary.
     dead: bool,
+    /// Router-wide request id, keying this shard's recovery registry
+    /// while the lane is admitted-but-unanswered.
+    rid: u64,
     /// Client fairness slot, released when the ticket drops on any
     /// terminal path.
     _permit: ClientPermit,
@@ -1086,6 +1912,7 @@ impl Ticket {
                 committed_tokens: 0,
                 blocks_committed: 0,
                 dead: false,
+                rid: sub.rid,
                 _permit: sub._permit,
             },
             sub.req,
@@ -1176,10 +2003,17 @@ fn worker_loop_continuous(
     peers: Vec<Arc<Shard>>,
     cfg: RouterConfig,
     queued: Arc<AtomicUsize>,
-) {
+    my_gen: usize,
+) -> WorkerExit {
     let mut active: Vec<ActiveBatch<Ticket>> = Vec::new();
     let mut stats = ServeStats::default();
     let mut draining = false;
+    // fault-injection state: per-incarnation ordinals the plan's
+    // step/admit triggers match against (None plan = zero overhead
+    // beyond two counter bumps per iteration)
+    let fault = cfg.fault_plan.clone();
+    let mut fault_steps: u64 = 0;
+    let mut fault_admits: u64 = 0;
     // lanes one new machine would hold (each lane needs at most one KV
     // slot, so total lanes bound total continuous KV memory)
     let bucket_cap = core
@@ -1192,11 +2026,37 @@ fn worker_loop_continuous(
         .unwrap_or(1);
     let batch_cap = cfg.max_batch.clamp(1, bucket_cap);
     loop {
+        // ---- 0. supersession check: the supervisor declared this
+        // incarnation wedged and already swept + re-dispatched its
+        // requests. Stand down — but first answer any lane we still
+        // hold: an admission that raced the supervisor's registry sweep
+        // (we wedged inside the admission phase) would otherwise strand
+        // its client. Sends on slots the supervisor seized fail
+        // harmlessly, so already-recovered lanes are untouched.
+        if shard.generation.load(Ordering::SeqCst) != my_gen {
+            for ab in active.iter_mut() {
+                for lane in ab.ticketed_lanes() {
+                    if let Some((t, o)) = ab.cancel(lane) {
+                        shard.registry_remove(t.rid);
+                        let _ = t.events.send(LaneEvent::Aborted {
+                            reason: "shard_failure: worker superseded by \
+                                     its supervisor"
+                                .to_string(),
+                            steps: o.steps,
+                            model_calls: o.model_calls,
+                            committed_tokens: t.committed_tokens,
+                        });
+                    }
+                }
+            }
+            return WorkerExit::Superseded;
+        }
         // ---- 1. ingest the inbox (park on the condvar only when fully
         // idle — drained batches retained as warm prefix caches don't
         // count; a sibling with queued work keeps the nap short so a
         // steal opportunity is never slept through)
         let any_live = active.iter().any(|ab| !ab.is_empty());
+        shard.beat(any_live);
         let peers_queued = peers.iter().any(|p| {
             p.id != shard.id && p.depth.load(Ordering::Relaxed) > 0
         });
@@ -1499,6 +2359,13 @@ fn worker_loop_continuous(
                         continue;
                     }
                     let affinity_hit = p.payload.affinity == shard.id;
+                    let rec = Recoverable {
+                        slot: p.payload.events.clone(),
+                        ctl: p.payload.ctl.clone(),
+                        req: p.payload.req.clone(),
+                        submitted: p.payload.submitted,
+                        affinity: p.payload.affinity,
+                    };
                     let (ticket, req) = Ticket::from_submit(p.payload);
                     if ticket.events.send(LaneEvent::Admitted).is_err() {
                         // handle already dropped: the client is gone,
@@ -1506,6 +2373,18 @@ fn worker_loop_continuous(
                         stats.aborted_queued += 1;
                         continue;
                     }
+                    // register for recovery the moment the client is
+                    // promised an admission; removed on every terminal
+                    // path, so the registry is exactly the set of
+                    // admitted-but-unanswered requests
+                    shard.registry_insert(ticket.rid, rec);
+                    if let Some(n) = fault
+                        .as_ref()
+                        .and_then(|f| f.at_admit(shard.id, fault_admits))
+                    {
+                        ab.state.inject_kv_alloc_failures(n);
+                    }
+                    fault_admits += 1;
                     match ab.admit(&req.prompt_ids, req.tau_conf, ticket) {
                         Ok(_) => {
                             stats.admitted_requests += 1;
@@ -1514,6 +2393,7 @@ fn worker_loop_continuous(
                             }
                         }
                         Err((t, e)) => {
+                            shard.registry_remove(t.rid);
                             let _ = t.events.send(LaneEvent::Aborted {
                                 reason: format!("admission failed: {e:#}"),
                                 steps: 0,
@@ -1524,6 +2404,29 @@ fn worker_loop_continuous(
                     }
                 }
             }
+        }
+        // ---- 3.5 block-boundary heartbeat + fault triggers: stamp
+        // liveness exactly where a healthy worker provably makes
+        // progress (the watchdog only judges busy workers), then give
+        // the fault plan its chance to wedge or kill this incarnation.
+        let stepping = active.iter().any(|ab| !ab.is_empty());
+        shard.beat(stepping);
+        if stepping {
+            if let Some(k) = fault
+                .as_ref()
+                .and_then(|f| f.at_step(shard.id, fault_steps))
+            {
+                match k {
+                    FaultKind::Panic => panic!(
+                        "injected worker panic (fault plan, shard {}, \
+                         step ordinal {})",
+                        shard.id, fault_steps
+                    ),
+                    FaultKind::Delay(d) => std::thread::sleep(d),
+                    _ => {}
+                }
+            }
+            fault_steps += 1;
         }
         // ---- 4. cancellation sweep, then advance every live batch one
         // block; retire + answer finished lanes immediately. The sweep
@@ -1548,13 +2451,14 @@ fn worker_loop_continuous(
                         // successful response
                         if let Some((t, o)) = ab.cancel(lane) {
                             core.record_outcome(&ab.key, &o);
-                            respond_lane(core, t, o);
+                            respond_lane(core, &shard, t, o);
                         }
                     }
                     Some(Cancel::Abort(reason)) => {
                         if let Some((t, o)) = ab.cancel(lane) {
                             abort_lane(
-                                core, &ab.key, &t, &o, reason, &mut stats,
+                                core, &shard, &ab.key, &t, &o, reason,
+                                &mut stats,
                             );
                         }
                     }
@@ -1587,7 +2491,7 @@ fn worker_loop_continuous(
                     }
                     for (_, ticket, outcome) in finished {
                         core.record_outcome(&ab.key, &outcome);
-                        respond_lane(core, ticket, outcome);
+                        respond_lane(core, &shard, ticket, outcome);
                     }
                 }
                 Err(e) => {
@@ -1600,7 +2504,8 @@ fn worker_loop_continuous(
                     for lane in ab.ticketed_lanes() {
                         if let Some((t, o)) = ab.cancel(lane) {
                             abort_lane(
-                                core, &ab.key, &t, &o, &msg, &mut stats,
+                                core, &shard, &ab.key, &t, &o, &msg,
+                                &mut stats,
                             );
                         }
                     }
@@ -1619,16 +2524,19 @@ fn worker_loop_continuous(
             !ab.poisoned
         });
         // replica gauge: the dispatcher's least-loaded fallback reads
-        // live lanes without taking the inbox lock
-        let lanes: usize = active.iter().map(|ab| ab.live_lanes()).sum();
-        shard.in_flight.store(lanes, Ordering::Relaxed);
+        // live lanes without taking the inbox lock (a superseded
+        // incarnation must not clobber its replacement's gauge)
+        if shard.generation.load(Ordering::SeqCst) == my_gen {
+            let lanes: usize = active.iter().map(|ab| ab.live_lanes()).sum();
+            shard.in_flight.store(lanes, Ordering::Relaxed);
+        }
         // drain completes once every in-flight lane has delivered its
         // terminal event — nothing is cut short, nothing is dropped
         if draining && active.iter().all(|ab| ab.is_empty()) {
             for ab in &active {
                 stats.absorb(&ab.state);
             }
-            return;
+            return WorkerExit::Clean;
         }
     }
 }
@@ -1665,7 +2573,13 @@ fn emit_commit(core: &ServingCore, t: &mut Ticket, run: &CommitRun) {
 /// offset is rebased onto its admission instant. (A streaming client's
 /// *observed* TTFT is stamped by the HTTP layer from the first
 /// `Committed` chunk actually written to the socket.)
-fn respond_lane(core: &ServingCore, ticket: Ticket, o: DecodeOutcome) {
+fn respond_lane(
+    core: &ServingCore,
+    shard: &Shard,
+    ticket: Ticket,
+    o: DecodeOutcome,
+) {
+    shard.registry_remove(ticket.rid);
     let wait = ticket.admitted - ticket.enqueued;
     let text = core.tokenizer.decode(&o.gen, true);
     let _ = ticket.events.send(LaneEvent::Finished(GenerateResponse {
@@ -1685,12 +2599,14 @@ fn respond_lane(core: &ServingCore, ticket: Ticket, o: DecodeOutcome) {
 /// `aborted_inflight` counter on `/healthz`.
 fn abort_lane(
     core: &mut ServingCore,
+    shard: &Shard,
     key: &GroupKey,
     ticket: &Ticket,
     o: &DecodeOutcome,
     reason: &str,
     stats: &mut ServeStats,
 ) {
+    shard.registry_remove(ticket.rid);
     stats.aborted_inflight += 1;
     core.record_abort(
         key,
@@ -1786,7 +2702,8 @@ fn worker_loop_closed(
     _cfg: RouterConfig,
     replicas: usize,
     queued: Arc<AtomicUsize>,
-) {
+    my_gen: usize,
+) -> WorkerExit {
     // closed-batch admission accounting for /healthz: every request
     // dispatched into a group counts as an admission; mid-flight joins
     // and early retirement don't exist on this path, so those stay 0.
@@ -1799,6 +2716,13 @@ fn worker_loop_closed(
         &core.rt, replicas,
     );
     loop {
+        if shard.generation.load(Ordering::SeqCst) != my_gen {
+            return WorkerExit::Superseded;
+        }
+        // the closed path stamps idle liveness only: groups run to
+        // completion, so a healthy decode can legitimately outlast any
+        // fixed deadline (Router::start disables the watchdog here)
+        shard.beat(false);
         let mut inbox = shard.lock();
         if inbox.control.is_empty() && !inbox.shutdown {
             let nap = if inbox.batcher.is_empty() {
@@ -1896,7 +2820,7 @@ fn worker_loop_closed(
         if shutdown {
             // the inbox refuses pushes once `shutdown` is set, so the
             // pop_any sweep above has already emptied it for good
-            return;
+            return WorkerExit::Clean;
         }
     }
 }

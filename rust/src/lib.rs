@@ -23,6 +23,13 @@
 //! * [`util`] — std-only JSON/CLI/RNG/stats/property-test infrastructure
 //!   (the offline registry has no serde/clap/criterion/proptest).
 
+// A panicking worker is survivable (the supervisor catches, quarantines
+// and re-dispatches), but that makes every `.unwrap()` on the request
+// path a potential availability incident rather than a crash report —
+// so unwraps must justify themselves: test code allows the lint at the
+// module, invariant-backed sites use `.expect(why)` or a scoped allow.
+#![warn(clippy::unwrap_used)]
+
 pub mod analysis;
 pub mod bench_support;
 pub mod coordinator;

@@ -9,16 +9,19 @@
 //!              runs staggered arrivals through the router (continuous
 //!              vs closed-batch) -> BENCH_serving.json; --scenario
 //!              stream drives streaming clients + mid-stream cancels
-//!              -> BENCH_stream.json
+//!              -> BENCH_stream.json; --scenario chaos replays a trace
+//!              under a seeded fault plan and gates the recovery
+//!              invariants -> BENCH_chaos.json
 //!   analysis   print Fig. 4 arithmetic-intensity / Fig. 9 roofline
 //!   info       artifacts manifest summary
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use cdlm::coordinator::router::RouterConfig;
 use cdlm::coordinator::{
-    DecodeOpts, GenerateRequest, GroupKey, Method, Router, ServingCore,
-    ALL_METHODS,
+    DecodeOpts, FaultPlan, GenerateRequest, GroupKey, Method, Router,
+    ServingCore, ALL_METHODS,
 };
 use cdlm::server::{self, http::ServerConfig};
 use cdlm::util::cli::Args;
@@ -55,7 +58,7 @@ fn print_help() {
          USAGE: cdlm <command> [--flags]\n\
          \n\
          COMMANDS:\n\
-         \x20 serve      --addr 127.0.0.1:8472 --backbone dream --max-batch 4 --max-wait-ms 25 [--replicas 1] [--max-queue-depth 256] [--max-per-client 0] [--closed-batch] [--no-prefix-cache] [--io-timeout-ms 10000] [--http-threads 8] [--blocking-http]\n\
+         \x20 serve      --addr 127.0.0.1:8472 --backbone dream --max-batch 4 --max-wait-ms 25 [--replicas 1] [--max-queue-depth 256] [--max-per-client 0] [--closed-batch] [--no-prefix-cache] [--io-timeout-ms 10000] [--http-threads 8] [--blocking-http] [--restart-budget 3] [--restart-window-ms 60000] [--watchdog-ms 5000] [--fault-seed N | --fault-spec SPEC]\n\
          \x20 generate   --prompt 'q:3*4+5=?' --method cdlm --backbone dream [--tau 0.9]\n\
          \x20 eval       --methods cdlm,ar --families chain-arith --n 16 --backbone dream\n\
          \x20 bench      --methods all --batches 1,2,4,8 --n 16 --out BENCH_decode.json [--replicas 1] [--check-baseline BENCH_baseline.json] [--cancel-block 2]\n\
@@ -63,12 +66,30 @@ fn print_help() {
          \x20 bench      --scenario prefix --method cdlm --n 24 --distinct 6 --arrival-ms 2 --out BENCH_prefix.json\n\
          \x20 bench      --scenario stream --method cdlm --n 16 --arrival-ms 2 --cancel-every 4 --cancel-after-blocks 1 --out BENCH_stream.json\n\
          \x20 bench      --scenario shard --method cdlm --n 24 --distinct 6 --replicas 4 --arrival-ms 2 --out BENCH_shard.json\n\
+         \x20 bench      --scenario chaos --method cdlm --n 24 --distinct 6 --replicas 4 --arrival-ms 2 [--fault-seed N | --fault-spec SPEC] --out BENCH_chaos.json\n\
          \x20 analysis   [--fig 4|9]\n\
          \x20 info\n"
     );
 }
 
+/// `--fault-spec SPEC` (explicit) or `--fault-seed N` (derived plan);
+/// both absent -> no injection. Shared by serve and the bench
+/// scenarios so every entry point arms faults the same way.
+fn fault_plan_from_args(args: &Args) -> anyhow::Result<Option<Arc<FaultPlan>>> {
+    if let Some(spec) = args.get("fault-spec") {
+        let plan = FaultPlan::parse(spec)
+            .map_err(|e| anyhow::anyhow!("--fault-spec: {e}"))?;
+        return Ok(Some(Arc::new(plan)));
+    }
+    if args.has("fault-seed") {
+        let seed = args.get_usize("fault-seed", 0) as u64;
+        return Ok(Some(Arc::new(FaultPlan::from_seed(seed))));
+    }
+    Ok(None)
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let fault_plan = fault_plan_from_args(args)?;
     let router = Router::start(
         artifacts_dir(),
         RouterConfig {
@@ -91,6 +112,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             prefix_cache: !args.has("no-prefix-cache"),
             replicas: args.get_usize("replicas", 1).max(1),
             max_per_client: args.get_usize("max-per-client", 0),
+            fault_plan: fault_plan.clone(),
+            restart_budget: args.get_usize("restart-budget", 3),
+            restart_window: Duration::from_millis(
+                args.get_usize("restart-window-ms", 60_000) as u64,
+            ),
+            watchdog_deadline: Duration::from_millis(
+                args.get_usize("watchdog-ms", 5_000) as u64,
+            ),
         },
     )?;
     server::serve(
@@ -103,6 +132,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             ),
             http_threads: args.get_usize("http-threads", 8),
             blocking: args.has("blocking-http"),
+            fault_plan,
         },
     )
 }
@@ -221,6 +251,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         "prefix" => return cmd_bench_prefix(args),
         "stream" => return cmd_bench_stream(args),
         "shard" => return cmd_bench_shard(args),
+        "chaos" => return cmd_bench_chaos(args),
         _ => {}
     }
     let n = args.get_usize("n", 16);
@@ -243,7 +274,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         // exercises the parallel chunk executor in the default grid
         .unwrap_or_else(|| vec![1, 2, 4, 8]);
     anyhow::ensure!(!batches.is_empty(), "no valid batch sizes selected");
-    let max_bs = *batches.iter().max().unwrap();
+    let max_bs = *batches.iter().max().expect("batches nonempty");
 
     let mut core = ServingCore::load(&artifacts_dir(), (2 * max_bs).max(16))?;
     let geom = core.rt.manifest.geometry.clone();
@@ -397,9 +428,22 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     // byte-identical whether the dispatcher ran 1 shard or 4, and the
     // CI matrix gates both against the same committed baseline.
     let replicas = args.get_usize("replicas", 1).max(1);
+    // armed via --fault-seed/--fault-spec: the faulted CI leg kills a
+    // worker mid-run and gates that the routed integers don't move (the
+    // seeded plan panics pre-commit, so every victim is re-dispatchable)
+    let fault_plan = fault_plan_from_args(args)?;
+    if let Some(plan) = &fault_plan {
+        println!("fault plan armed for routed cells: {}", plan.spec());
+    }
     for m in &methods {
-        let (requests, tokens, total_steps, total_calls) =
-            routed_solo_cells(&prompts, &backbone, *m, replicas, opts.tau_conf)?;
+        let (requests, tokens, total_steps, total_calls) = routed_solo_cells(
+            &prompts,
+            &backbone,
+            *m,
+            replicas,
+            opts.tau_conf,
+            fault_plan.clone(),
+        )?;
         println!(
             "{:<14} routed x{replicas}: requests {requests}, tokens {tokens}, \
              steps {total_steps}, calls {total_calls}",
@@ -499,6 +543,7 @@ fn routed_solo_cells(
     method: Method,
     replicas: usize,
     tau: f32,
+    fault_plan: Option<Arc<FaultPlan>>,
 ) -> anyhow::Result<(usize, usize, u64, u64)> {
     let router = Router::start(
         artifacts_dir(),
@@ -508,6 +553,9 @@ fn routed_solo_cells(
             // repeated PAD-heavy prompts must not skip prefills: the
             // cell gates cold accounting
             prefix_cache: false,
+            // solo cohorts make every in-flight victim of an injected
+            // worker kill re-dispatchable with identical accounting
+            fault_plan,
             ..RouterConfig::default()
         },
     )?;
@@ -736,6 +784,249 @@ fn cmd_bench_shard(args: &Args) -> anyhow::Result<()> {
     ]);
     std::fs::write(&out_path, doc.to_string())?;
     println!("results -> {out_path}");
+    Ok(())
+}
+
+/// Chaos bench (`--scenario chaos`): the same open-loop arrival trace
+/// run twice — clean, then with a seeded fault plan armed — gating the
+/// supervision layer's recovery story end to end. The report's hard
+/// invariants (violations fail the run, they are not just numbers):
+/// every submitted request observes **exactly one terminal event**;
+/// every request that finishes under faults returns **byte-identical**
+/// text and token ids to its clean twin (per-lane decode traces are
+/// pure functions of the request, so a re-dispatched replay must be
+/// indistinguishable); any abort names a supervision reason; and the
+/// armed plan actually fired. Recovery stats (panics, watchdog trips,
+/// re-dispatches, respawn latency) come from the merged health
+/// snapshot. Schema `cdlm.bench.chaos/v1`, run as a CI smoke with an
+/// artifact.
+fn cmd_bench_chaos(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 24);
+    let distinct = args.get_usize("distinct", 6).clamp(1, n.max(1));
+    let replicas = args.get_usize("replicas", 4).max(1);
+    let arrival =
+        Duration::from_millis(args.get_usize("arrival-ms", 2) as u64);
+    let max_batch = args.get_usize("max-batch", 2);
+    // a small per-step delay keeps lanes in flight long enough for the
+    // plan's triggers to land mid-trace
+    let step_delay =
+        Duration::from_millis(args.get_usize("step-delay-ms", 2) as u64);
+    let backbone = args.get_or("backbone", "dream").to_string();
+    let out_path = args.get_or("out", "BENCH_chaos.json").to_string();
+    let method = Method::from_name(args.get_or("method", "cdlm"))
+        .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
+    let plan = match fault_plan_from_args(args)? {
+        Some(p) => p,
+        None => Arc::new(FaultPlan::from_seed(0xC4A05)),
+    };
+
+    let probe = ServingCore::load(&artifacts_dir(), 1)?;
+    let geom = probe.rt.manifest.geometry.clone();
+    let samples = workload::generate(Family::ChainArith, distinct, 0xE7A1);
+    let base: Vec<Vec<i32>> = samples
+        .iter()
+        .map(|s| {
+            workload::encode_example(
+                &probe.tokenizer,
+                Family::ChainArith,
+                s,
+                geom.prompt_len,
+                geom.gen_len,
+            )
+            .map(|e| e.prompt_ids)
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let prompts: Vec<Vec<i32>> =
+        (0..n).map(|i| base[i % distinct].clone()).collect();
+    let backend = probe.rt.backend_name();
+    drop(probe);
+
+    // one pass: submit the trace, drain every stream off-thread with
+    // the terminal audit, snapshot health before shutdown
+    let run = |fault: Option<Arc<FaultPlan>>| -> anyhow::Result<(
+        Vec<Option<cdlm::bench_support::TerminalAudit>>,
+        u64,
+        f64,
+        Json,
+    )> {
+        let router = Router::start(
+            artifacts_dir(),
+            RouterConfig {
+                max_batch,
+                max_queue: n.max(256),
+                replicas,
+                step_delay,
+                prefix_cache: false,
+                fault_plan: fault,
+                ..RouterConfig::default()
+            },
+        )?;
+        let t0 = Instant::now();
+        let mut consumers = Vec::with_capacity(n);
+        let mut rejected = 0u64;
+        for p in &prompts {
+            match router.submit(GenerateRequest::new(
+                backbone.as_str(),
+                method,
+                p.clone(),
+            )) {
+                Ok(handle) => consumers.push(Some(std::thread::spawn(
+                    move || cdlm::bench_support::drain_and_audit(&handle),
+                ))),
+                // a degraded router may refuse late arrivals after a
+                // restart budget exhausts — legal, counted, not audited
+                Err(_) => {
+                    rejected += 1;
+                    consumers.push(None);
+                }
+            }
+            std::thread::sleep(arrival);
+        }
+        let audits: Vec<_> = consumers
+            .into_iter()
+            .map(|c| {
+                c.map(|t| t.join().expect("chaos consumer panicked"))
+            })
+            .collect();
+        let wall_s = t0.elapsed().as_secs_f64();
+        let health = router.health()?;
+        router.shutdown();
+        Ok((audits, rejected, wall_s, health))
+    };
+
+    let (clean, clean_rejected, clean_wall_s, _clean_health) = run(None)?;
+    let (faulted, faulted_rejected, faulted_wall_s, health) =
+        run(Some(plan.clone()))?;
+
+    let mut violations: Vec<String> = Vec::new();
+    if clean_rejected > 0 {
+        violations
+            .push(format!("clean run rejected {clean_rejected} submits"));
+    }
+    let mut clean_finished = 0usize;
+    for (i, a) in clean.iter().enumerate() {
+        match a {
+            Some(a) if a.terminals == 1 && a.finished.is_some() => {
+                clean_finished += 1;
+            }
+            Some(a) => violations.push(format!(
+                "clean request {i}: {} terminals, finished={}",
+                a.terminals,
+                a.finished.is_some()
+            )),
+            None => {}
+        }
+    }
+    let (mut finished, mut aborted) = (0usize, 0usize);
+    for (i, a) in faulted.iter().enumerate() {
+        let Some(a) = a else { continue };
+        if a.terminals != 1 {
+            violations.push(format!(
+                "faulted request {i}: {} terminal events (contract: \
+                 exactly one)",
+                a.terminals
+            ));
+            continue;
+        }
+        match (&a.finished, &a.abort_reason) {
+            (Some(resp), None) => {
+                finished += 1;
+                let twin = clean[i].as_ref().and_then(|c| c.finished.as_ref());
+                match twin {
+                    Some(c)
+                        if c.text == resp.text
+                            && c.gen_ids == resp.gen_ids => {}
+                    Some(_) => violations.push(format!(
+                        "faulted request {i}: response diverged from its \
+                         clean twin (re-dispatch must replay \
+                         byte-identically)"
+                    )),
+                    None => {}
+                }
+            }
+            (None, Some(reason)) => {
+                aborted += 1;
+                if !reason.starts_with("shard_failure")
+                    && !reason.starts_with("worker_lost")
+                {
+                    violations.push(format!(
+                        "faulted request {i}: abort reason {reason:?} is \
+                         not a supervision outcome"
+                    ));
+                }
+            }
+            _ => violations.push(format!(
+                "faulted request {i}: malformed terminal audit"
+            )),
+        }
+    }
+    if plan.fired_count() == 0 {
+        violations.push(format!(
+            "fault plan {:?} never fired — the trace missed every trigger",
+            plan.spec()
+        ));
+    }
+
+    let sup = health.get("supervision").cloned().unwrap_or(Json::Null);
+    let stat = |k: &str| sup.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    println!(
+        "chaos: clean {clean_finished}/{n} finished in {clean_wall_s:.2}s; \
+         faulted {finished} finished + {aborted} aborted \
+         ({faulted_rejected} rejected) in {faulted_wall_s:.2}s"
+    );
+    println!(
+        "recovery: {} panics, {} watchdog trips, {} re-dispatched, \
+         {} aborted(shard_failure), {} restarts, max respawn {:.0} ms \
+         [plan {} -> {}/{} fired]",
+        stat("shard_panics"),
+        stat("watchdog_trips"),
+        stat("redispatched_requests"),
+        stat("aborted_shard_failure"),
+        stat("restarts"),
+        stat("recovery_max_ms"),
+        plan.spec(),
+        plan.fired_count(),
+        plan.point_count(),
+    );
+    for v in &violations {
+        eprintln!("VIOLATION: {v}");
+    }
+
+    let doc = Json::obj(vec![
+        ("schema", Json::str("cdlm.bench.chaos/v1")),
+        ("backend", Json::str(backend)),
+        ("backbone", Json::str(backbone.as_str())),
+        ("method", Json::str(method.name())),
+        ("n", Json::num(n as f64)),
+        ("distinct_prompts", Json::num(distinct as f64)),
+        ("replicas", Json::num(replicas as f64)),
+        ("arrival_ms", Json::num(arrival.as_millis() as f64)),
+        ("max_batch", Json::num(max_batch as f64)),
+        ("step_delay_ms", Json::num(step_delay.as_millis() as f64)),
+        ("gen_len", Json::num(geom.gen_len as f64)),
+        ("block_size", Json::num(geom.block_size as f64)),
+        ("fault_spec", Json::str(plan.spec())),
+        ("points_fired", Json::num(plan.fired_count() as f64)),
+        ("clean_finished", Json::num(clean_finished as f64)),
+        ("clean_wall_s", Json::num(clean_wall_s)),
+        ("faulted_finished", Json::num(finished as f64)),
+        ("faulted_aborted", Json::num(aborted as f64)),
+        ("faulted_rejected", Json::num(faulted_rejected as f64)),
+        ("faulted_wall_s", Json::num(faulted_wall_s)),
+        ("supervision", sup),
+        ("degraded", health.get("degraded").cloned().unwrap_or(Json::Null)),
+        (
+            "violations",
+            Json::arr(violations.iter().map(|v| Json::str(v.as_str()))),
+        ),
+    ]);
+    std::fs::write(&out_path, doc.to_string())?;
+    println!("results -> {out_path}");
+    anyhow::ensure!(
+        violations.is_empty(),
+        "chaos invariants violated:\n{}",
+        violations.join("\n")
+    );
     Ok(())
 }
 

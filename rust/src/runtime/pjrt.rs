@@ -37,7 +37,13 @@ impl ProgramKey {
 #[cfg(feature = "pjrt")]
 pub use client::PjrtBackend;
 
+// Mutex locks in this module unwrap poison deliberately: a poisoned
+// backend mutex means a decode panicked mid-call, and the supervisor
+// quarantines the owning core instead of ever reusing it — so
+// propagating the original panic is the designed outcome, not a new
+// failure mode worth a softer error path.
 #[cfg(feature = "pjrt")]
+#[allow(clippy::unwrap_used)]
 mod client {
     use std::collections::HashMap;
     use std::sync::{Arc, Mutex};

@@ -486,6 +486,7 @@ impl Backend for ReferenceBackend {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use std::path::Path;

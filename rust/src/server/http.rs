@@ -36,7 +36,7 @@
 
 use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -44,7 +44,7 @@ use anyhow::Result;
 
 use crate::coordinator::router::TryEvent;
 use crate::coordinator::{
-    GenerateRequest, LaneEvent, Method, ResponseHandle, Router,
+    FaultPlan, GenerateRequest, LaneEvent, Method, ResponseHandle, Router,
 };
 use crate::tokenizer::{Tokenizer, BOS, PAD};
 use crate::util::json::Json;
@@ -66,6 +66,12 @@ pub struct ServerConfig {
     /// `true` selects the legacy thread-per-connection front door;
     /// default is the nonblocking event loop.
     pub blocking: bool,
+    /// Deterministic fault injection (`None` in production): its
+    /// `sockreset@req<K>` points kill the connection of the K-th
+    /// accepted `/generate` right after admission — the client sees a
+    /// reset mid-response, exercising the disconnect-cancel path.
+    /// Usually the same plan handed to `RouterConfig::fault_plan`.
+    pub fault_plan: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ServerConfig {
@@ -76,7 +82,27 @@ impl Default for ServerConfig {
             io_timeout: Duration::from_secs(10),
             http_threads: 8,
             blocking: false,
+            fault_plan: None,
         }
+    }
+}
+
+/// Serial number of the next `/generate` admission, shared by both
+/// front doors' handlers — the ordinal the fault plan's
+/// `sockreset@req<K>` triggers match against.
+struct ReqCounter(AtomicU64);
+
+impl ReqCounter {
+    fn next(&self) -> u64 {
+        self.0.fetch_add(1, Ordering::SeqCst)
+    }
+}
+
+/// `true` when the fault plan wants this request's socket reset.
+fn sock_reset_due(plan: Option<&Arc<FaultPlan>>, ordinal: u64) -> bool {
+    match plan {
+        Some(p) => p.at_request(ordinal),
+        None => false,
     }
 }
 
@@ -311,12 +337,32 @@ fn finished_json(
 }
 
 /// Map a terminal `Aborted` reason to a status: deadline expiries are
-/// the client's budget (504), everything else is a server-side abort.
+/// the client's budget (504); a request lost to a shard failure is a
+/// retryable 503 (the service recovered or degraded — either way a
+/// fresh submit can succeed elsewhere); everything else is a
+/// server-side 500.
 fn abort_status(reason: &str) -> u16 {
     if reason.contains("deadline") {
         504
+    } else if reason.starts_with("shard_failure")
+        || reason.starts_with("worker_lost")
+    {
+        503
     } else {
         500
+    }
+}
+
+/// `Retry-After` hint for a terminal abort: only the 503s above are
+/// worth an immediate client retry (a re-submit reroutes to a live
+/// shard; a respawn typically completes within a second).
+fn abort_retry_after(reason: &str) -> Option<Duration> {
+    if reason.starts_with("shard_failure")
+        || reason.starts_with("worker_lost")
+    {
+        Some(Duration::from_secs(1))
+    } else {
+        None
     }
 }
 
@@ -325,7 +371,7 @@ fn abort_status(reason: &str) -> u16 {
 fn handle_generate(
     handle: &ResponseHandle,
     method: Method,
-) -> (u16, String) {
+) -> (u16, Option<Duration>, String) {
     match handle.wait() {
         Ok(resp) => {
             let j = Json::obj(finished_json(
@@ -333,9 +379,13 @@ fn handle_generate(
                 method,
                 resp.ttft.as_secs_f64() * 1e3,
             ));
-            (200, j.to_string())
+            (200, None, j.to_string())
         }
-        Err(reason) => (abort_status(&reason), err_json(&reason)),
+        Err(reason) => (
+            abort_status(&reason),
+            abort_retry_after(&reason),
+            err_json(&reason),
+        ),
     }
 }
 
@@ -570,6 +620,8 @@ fn step_conn(
     tok: &Tokenizer,
     default_backbone: &str,
     io_timeout: Option<Duration>,
+    fault_plan: Option<&Arc<FaultPlan>>,
+    req_counter: &ReqCounter,
     progress: &mut bool,
 ) -> bool {
     let now = Instant::now();
@@ -637,6 +689,8 @@ fn step_conn(
                             router,
                             tok,
                             default_backbone,
+                            fault_plan,
+                            req_counter,
                             &method,
                             &path,
                             &body,
@@ -669,7 +723,7 @@ fn step_conn(
                     }) => {
                         conn.out.extend_from_slice(&response_bytes(
                             abort_status(&reason),
-                            None,
+                            abort_retry_after(&reason),
                             &err_json(&reason),
                         ));
                         next = Some(ConnState::Closing);
@@ -782,6 +836,8 @@ fn dispatch(
     router: &Router,
     tok: &Tokenizer,
     default_backbone: &str,
+    fault_plan: Option<&Arc<FaultPlan>>,
+    req_counter: &ReqCounter,
     method: &str,
     path: &str,
     body: &str,
@@ -804,6 +860,7 @@ fn dispatch(
                 }
                 Ok((req, stream_mode)) => {
                     let gen_method = req.method;
+                    let ordinal = req_counter.next();
                     match router.submit(req) {
                         Err(e) => {
                             conn.out.extend_from_slice(&response_bytes(
@@ -812,6 +869,16 @@ fn dispatch(
                                 &err_json(&e.to_string()),
                             ));
                             ConnState::Closing
+                        }
+                        Ok(handle)
+                            if sock_reset_due(fault_plan, ordinal) =>
+                        {
+                            // injected socket reset: the client's
+                            // connection dies right after admission;
+                            // the cancel mirrors what the write-failure
+                            // path would do a block later
+                            handle.cancel();
+                            ConnState::Dead
                         }
                         Ok(handle) if stream_mode => {
                             conn.out.extend_from_slice(STREAM_HEADER);
@@ -878,6 +945,7 @@ fn serve_event_loop(
     } else {
         Some(cfg.io_timeout)
     };
+    let req_counter = ReqCounter(AtomicU64::new(0));
     let mut conns: Vec<Conn> = Vec::new();
     let mut draining = false;
     loop {
@@ -916,6 +984,8 @@ fn serve_event_loop(
                 &tok,
                 &cfg.default_backbone,
                 io_timeout,
+                cfg.fault_plan.as_ref(),
+                &req_counter,
                 &mut progress,
             );
             if alive {
@@ -982,6 +1052,7 @@ pub fn serve_on_until(
     } else {
         Some(cfg.io_timeout)
     };
+    let req_counter = Arc::new(ReqCounter(AtomicU64::new(0)));
     for stream in listener.incoming() {
         if stop.load(Ordering::SeqCst) {
             break;
@@ -994,6 +1065,8 @@ pub fn serve_on_until(
         let _ = stream.set_write_timeout(io_timeout);
         let router = router.clone();
         let backbone = cfg.default_backbone.clone();
+        let fault_plan = cfg.fault_plan.clone();
+        let req_counter = req_counter.clone();
         pool.execute(move || {
             let tok = Tokenizer::new();
             let peer_ip =
@@ -1020,12 +1093,24 @@ pub fn serve_on_until(
                         Err((status, body)) => (status, None, body),
                         Ok((req, stream_mode)) => {
                             let gen_method = req.method;
+                            let ordinal = req_counter.next();
                             match router.submit(req) {
                                 Err(e) => (
                                     e.status(),
                                     e.retry_after(),
                                     err_json(&e.to_string()),
                                 ),
+                                Ok(handle)
+                                    if sock_reset_due(
+                                        fault_plan.as_ref(),
+                                        ordinal,
+                                    ) =>
+                                {
+                                    // injected socket reset: drop the
+                                    // connection right after admission
+                                    handle.cancel();
+                                    return;
+                                }
                                 Ok(handle) if stream_mode => {
                                     // the chunked event relay owns the
                                     // socket from here on
@@ -1038,9 +1123,7 @@ pub fn serve_on_until(
                                     return;
                                 }
                                 Ok(handle) => {
-                                    let (s, b) =
-                                        handle_generate(&handle, gen_method);
-                                    (s, None, b)
+                                    handle_generate(&handle, gen_method)
                                 }
                             }
                         }

@@ -132,7 +132,9 @@ impl Tokenizer {
             if t.starts_with('<') {
                 continue; // specials already checked
             }
-            let ch = t.chars().next().unwrap();
+            let Some(ch) = t.chars().next() else {
+                anyhow::bail!("token id {id} maps to an empty token");
+            };
             anyhow::ensure!(
                 self.id_to_tok.get(id) == Some(&Some(ch)),
                 "token id {id} maps to {:?}, python says {ch:?}",
@@ -164,6 +166,7 @@ impl StreamDecoder {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 

@@ -18,12 +18,7 @@ impl Args {
             if let Some(rest) = a.strip_prefix("--") {
                 if let Some((k, v)) = rest.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
-                } else if it
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
-                {
-                    let v = it.next().unwrap();
+                } else if let Some(v) = it.next_if(|n| !n.starts_with("--")) {
                     out.flags.insert(rest.to_string(), v);
                 } else {
                     out.flags.insert(rest.to_string(), "true".to_string());

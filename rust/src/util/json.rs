@@ -250,7 +250,9 @@ impl<'a> Parser<'a> {
         {
             self.pos += 1;
         }
-        let s = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+        // the scanner loop above only ever advances over ASCII bytes
+        let s = std::str::from_utf8(&self.b[start..self.pos])
+            .map_err(|_| self.err("bad number"))?;
         s.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))
@@ -363,6 +365,7 @@ pub fn load(path: &std::path::Path) -> anyhow::Result<Json> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 

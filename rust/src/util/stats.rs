@@ -65,7 +65,7 @@ impl Summary {
             return 0.0;
         }
         let mut v = self.xs.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
         let pos = q / 100.0 * (v.len() - 1) as f64;
         let lo = pos.floor() as usize;
         let hi = pos.ceil() as usize;

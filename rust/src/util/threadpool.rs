@@ -41,7 +41,7 @@ where
                 if i >= slots.len() {
                     break;
                 }
-                let job = slots[i].lock().unwrap().take();
+                let job = slots[i].lock().expect("job slot poisoned").take();
                 if let Some(job) = job {
                     job();
                 }
@@ -69,7 +69,7 @@ impl ThreadPool {
                     .name(format!("cdlm-http-{i}"))
                     .spawn(move || loop {
                         let job = {
-                            let guard = rx.lock().unwrap();
+                            let guard = rx.lock().expect("job queue poisoned");
                             guard.recv()
                         };
                         match job {

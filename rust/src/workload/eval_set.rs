@@ -75,6 +75,7 @@ impl EvalSet {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::tokenizer::Tokenizer;

@@ -131,7 +131,7 @@ fn gen_list_op(rng: &mut SplitMix64) -> Sample {
             }
         }
         1 => {
-            let out = digits.iter().max().unwrap().to_string();
+            let out = digits.iter().max().expect("digits nonempty").to_string();
             Sample {
                 prompt: format!("q:max({s})=?"),
                 answer: format!("#{out}"),
@@ -139,7 +139,7 @@ fn gen_list_op(rng: &mut SplitMix64) -> Sample {
             }
         }
         _ => {
-            let out = digits.iter().min().unwrap().to_string();
+            let out = digits.iter().min().expect("digits nonempty").to_string();
             Sample {
                 prompt: format!("q:min({s})=?"),
                 answer: format!("#{out}"),
@@ -162,6 +162,7 @@ pub fn generate(family: Family, n: usize, seed: u64) -> Vec<Sample> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::util::prop::check;

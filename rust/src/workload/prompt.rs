@@ -72,6 +72,7 @@ pub fn encode_example(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 

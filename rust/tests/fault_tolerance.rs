@@ -1,0 +1,265 @@
+//! Supervised shard workers: panic isolation, the stall watchdog, and
+//! deterministic re-dispatch. The contract under test: a worker death
+//! never strands a client (every admitted request still observes
+//! exactly one terminal event), a victim that had streamed nothing is
+//! replayed byte-identically on a healthy worker, and a shard that
+//! burns its restart budget goes dead and degrades the router instead
+//! of crash-looping.
+//!
+//! Runs hermetically on the deterministic reference backend.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cdlm::bench_support::drain_and_audit;
+use cdlm::coordinator::router::RouterConfig;
+use cdlm::coordinator::{FaultPlan, GenerateRequest, Method, Router};
+use cdlm::server::http::encode_user_prompt;
+use cdlm::tokenizer::Tokenizer;
+use cdlm::util::json::Json;
+use cdlm::workload::{self, Family};
+
+fn request_for(prompt: &str, method: Method) -> GenerateRequest {
+    let tok = Tokenizer::new();
+    GenerateRequest::new(
+        "dream",
+        method,
+        encode_user_prompt(&tok, prompt, 64).unwrap(),
+    )
+}
+
+fn sample_prompts(n: usize, seed: u64) -> Vec<String> {
+    workload::generate(Family::ListOp, n, seed)
+        .into_iter()
+        .map(|s| s.prompt)
+        .collect()
+}
+
+fn plan(spec: &str) -> Option<Arc<FaultPlan>> {
+    Some(Arc::new(FaultPlan::parse(spec).expect("valid fault spec")))
+}
+
+fn stat(h: &Json, key: &str) -> f64 {
+    h.get(key).and_then(Json::as_f64).unwrap_or(0.0)
+}
+
+/// Poll `health()` until `pred` holds (the supervisor runs on its own
+/// thread, so state transitions are asynchronous to the test).
+fn wait_for_health(
+    router: &Router,
+    what: &str,
+    pred: impl Fn(&Json) -> bool,
+) -> Json {
+    let t0 = Instant::now();
+    loop {
+        let h = router.health().expect("health snapshot");
+        if pred(&h) {
+            return h;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "timed out waiting for {what}: {h}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn pre_commit_panic_victim_replays_byte_identically() {
+    let base = RouterConfig {
+        max_batch: 1,
+        max_active: 1,
+        max_queue: 8,
+        pool_capacity: 4,
+        prefix_cache: false,
+        ..RouterConfig::default()
+    };
+    let prompt = sample_prompts(1, 0x61).pop().unwrap();
+
+    let clean = Router::start(cdlm::artifacts_dir(), base.clone())
+        .expect("router starts");
+    let want = clean
+        .submit(request_for(&prompt, Method::Cdlm))
+        .unwrap()
+        .wait()
+        .expect("clean decode ok");
+    clean.shutdown();
+
+    // the worker panics before its first step cycle: the victim has
+    // streamed no Committed delta, so the idempotency rule replays it
+    let router = Router::start(
+        cdlm::artifacts_dir(),
+        RouterConfig {
+            fault_plan: plan("panic@shard0:step0"),
+            ..base
+        },
+    )
+    .expect("router starts");
+    let resp = router
+        .submit(request_for(&prompt, Method::Cdlm))
+        .unwrap()
+        .wait()
+        .expect("victim must be re-dispatched, not aborted");
+    // per-lane decode traces are pure functions of the request: the
+    // replay is indistinguishable from a run that never saw a panic
+    assert_eq!(resp.gen_ids, want.gen_ids);
+    assert_eq!(resp.text, want.text);
+    assert_eq!(resp.steps, want.steps);
+    assert_eq!(resp.model_calls, want.model_calls);
+    let h = router.health().unwrap();
+    assert_eq!(stat(&h, "shard_panics"), 1.0, "{h}");
+    assert_eq!(stat(&h, "redispatched_requests"), 1.0, "{h}");
+    assert_eq!(
+        h.get("degraded").and_then(Json::as_bool),
+        Some(false),
+        "one panic within budget must not degrade the router: {h}"
+    );
+    let sup = h.get("supervision").expect("supervision stats");
+    assert_eq!(stat(sup, "restarts"), 1.0, "{h}");
+    assert_eq!(stat(sup, "dead_shards"), 0.0, "{h}");
+    router.shutdown();
+}
+
+#[test]
+fn every_request_sees_exactly_one_terminal_wherever_the_panic_lands() {
+    // property sweep: kill the worker before step cycle k for a range
+    // of k spanning pre-commit, mid-stream, and past-completion — in
+    // every world each request must observe exactly one terminal event,
+    // either a Finished or a shard_failure Aborted
+    let prompts = sample_prompts(2, 0x62);
+    for k in 0..6u64 {
+        let router = Router::start(
+            cdlm::artifacts_dir(),
+            RouterConfig {
+                max_batch: 2,
+                max_active: 2,
+                max_queue: 8,
+                pool_capacity: 8,
+                prefix_cache: false,
+                fault_plan: plan(&format!("panic@shard0:step{k}")),
+                ..RouterConfig::default()
+            },
+        )
+        .expect("router starts");
+        let handles: Vec<_> = prompts
+            .iter()
+            .map(|p| router.submit(request_for(p, Method::Cdlm)).unwrap())
+            .collect();
+        for (i, h) in handles.iter().enumerate() {
+            let audit = drain_and_audit(h);
+            assert_eq!(
+                audit.terminals, 1,
+                "step{k} request {i}: {} terminal events",
+                audit.terminals
+            );
+            if let Some(reason) = &audit.abort_reason {
+                assert!(
+                    reason.starts_with("shard_failure"),
+                    "step{k} request {i}: unexpected abort {reason:?}"
+                );
+            }
+        }
+        router.shutdown();
+    }
+}
+
+#[test]
+fn exhausted_restart_budget_kills_the_shard_and_degrades_the_router() {
+    // two kills against a budget of one: the first respawn succeeds,
+    // the second is refused and the shard goes dead
+    let router = Router::start(
+        cdlm::artifacts_dir(),
+        RouterConfig {
+            max_batch: 1,
+            max_active: 1,
+            max_queue: 8,
+            pool_capacity: 4,
+            prefix_cache: false,
+            restart_budget: 1,
+            fault_plan: plan("panic@shard0:step0,panic@shard0:step0"),
+            ..RouterConfig::default()
+        },
+    )
+    .expect("router starts");
+    let prompt = sample_prompts(1, 0x63).pop().unwrap();
+    let err = router
+        .submit(request_for(&prompt, Method::Cdlm))
+        .unwrap()
+        .wait()
+        .err()
+        .expect("with no healthy shard left the victim must abort");
+    assert!(err.starts_with("shard_failure"), "{err}");
+
+    let h = wait_for_health(&router, "the shard to be marked dead", |h| {
+        h.get("degraded").and_then(Json::as_bool) == Some(true)
+    });
+    let shards = h.get("shards").and_then(Json::as_arr).expect("shards");
+    assert_eq!(shards.len(), 1, "{h}");
+    assert_eq!(
+        shards[0].get("state").and_then(Json::as_str),
+        Some("dead"),
+        "{h}"
+    );
+    let sup = h.get("supervision").expect("supervision stats");
+    assert_eq!(stat(sup, "shard_panics"), 2.0, "{h}");
+    assert_eq!(stat(sup, "restarts"), 1.0, "{h}");
+    assert_eq!(stat(sup, "dead_shards"), 1.0, "{h}");
+
+    // a dead-only router refuses new work up front: 503 + Retry-After
+    let err = router
+        .submit(request_for(&prompt, Method::Cdlm))
+        .err()
+        .expect("submit against a dead fleet must be refused");
+    assert_eq!(err.status(), 503, "{err}");
+    assert!(err.retry_after().is_some(), "503 must carry a retry hint");
+    router.shutdown();
+}
+
+#[test]
+fn stalled_worker_trips_the_watchdog_and_the_request_recovers() {
+    let base = RouterConfig {
+        max_batch: 1,
+        max_active: 1,
+        max_queue: 8,
+        pool_capacity: 4,
+        prefix_cache: false,
+        ..RouterConfig::default()
+    };
+    let prompt = sample_prompts(1, 0x64).pop().unwrap();
+
+    let clean = Router::start(cdlm::artifacts_dir(), base.clone())
+        .expect("router starts");
+    let want = clean
+        .submit(request_for(&prompt, Method::Cdlm))
+        .unwrap()
+        .wait()
+        .expect("clean decode ok");
+    clean.shutdown();
+
+    // the worker wedges for 1.5 s against a 250 ms heartbeat deadline:
+    // the watchdog must declare it lost and re-dispatch its request
+    // without waiting for the sleep to return
+    let router = Router::start(
+        cdlm::artifacts_dir(),
+        RouterConfig {
+            watchdog_deadline: Duration::from_millis(250),
+            fault_plan: plan("delay:1500@shard0:step0"),
+            ..base
+        },
+    )
+    .expect("router starts");
+    let resp = router
+        .submit(request_for(&prompt, Method::Cdlm))
+        .unwrap()
+        .wait()
+        .expect("stalled victim must be re-dispatched, not aborted");
+    assert_eq!(resp.gen_ids, want.gen_ids);
+    assert_eq!(resp.text, want.text);
+    let h = router.health().unwrap();
+    assert_eq!(stat(&h, "watchdog_trips"), 1.0, "{h}");
+    assert_eq!(stat(&h, "shard_panics"), 0.0, "{h}");
+    assert_eq!(stat(&h, "redispatched_requests"), 1.0, "{h}");
+    let sup = h.get("supervision").expect("supervision stats");
+    assert_eq!(stat(sup, "restarts"), 1.0, "{h}");
+    router.shutdown();
+}
