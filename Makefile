@@ -3,9 +3,9 @@
 
 CARGO ?= cargo
 
-.PHONY: ci verify fmt clippy build test smoke check-baseline shard-smoke chaos-smoke check-pjrt bench clean
+.PHONY: ci verify fmt clippy build test smoke check-baseline shard-smoke chaos-smoke hotpath check-pjrt bench clean
 
-ci: fmt clippy build test smoke check-baseline shard-smoke chaos-smoke check-pjrt
+ci: fmt clippy build test smoke check-baseline shard-smoke chaos-smoke hotpath check-pjrt
 
 # Tier-1 verify (the regression gate), exactly as the roadmap states it.
 verify:
@@ -58,6 +58,15 @@ shard-smoke:
 # with supervision reasons, and the plan must actually fire.
 chaos-smoke:
 	$(CARGO) run --release --bin cdlm -- bench --scenario chaos --method cdlm --n 24 --distinct 6 --replicas 4 --arrival-ms 2 --fault-seed 7 --out BENCH_chaos.json
+
+# Steady-state decode-step microbench + allocation gate (schema
+# cdlm.bench.hotpath/v1): drives every method's machine policy
+# functions with a reused step arena and HARD-FAILS if any steady-state
+# gated window performs a heap allocation. Latency/tokens-per-s fields
+# are advisory trend data — compare BENCH_hotpath.json across commits;
+# only the allocation count gates.
+hotpath:
+	$(CARGO) run --release --bin cdlm -- bench --scenario hotpath --methods all --batches 1,4 --repeats 6 --out BENCH_hotpath.json
 
 # Type-check the off-by-default PJRT seam against the vendored xla API
 # stub (the `pjrt` feature gates real execution behind the real crate).

@@ -8,6 +8,7 @@
 
 use cdlm::bench_support as bench;
 use cdlm::coordinator::KvPool;
+use cdlm::runtime::programs::{BlockStepOut, DenoiseOut, PrefillOut};
 use cdlm::runtime::{Programs, TensorI32};
 use cdlm::util::stats;
 
@@ -40,17 +41,23 @@ fn main() {
         let ids = TensorI32::from_vec(&[bs, s], vec![5; bs * s]);
         let pids = TensorI32::from_vec(&[bs, p], vec![5; bs * p]);
 
+        // writer-style outputs, reused across iterations like the
+        // engines' step arenas — the measured call is allocation-free
+        // once warm on the reference backend
+        let mut blk_out = BlockStepOut::default();
         let st = stats::bench(2, 10, || {
             progs
                 .student_block_step(bs, b, &pool.view(&slots, p), &vf, &blk,
-                                    p as i32)
+                                    p as i32, &mut blk_out)
                 .unwrap();
         });
+        let mut den_out = DenoiseOut::default();
         let td = stats::bench(2, 10, || {
-            progs.teacher_denoise(bs, &ids, &vf).unwrap();
+            progs.teacher_denoise(bs, &ids, &vf, &mut den_out).unwrap();
         });
+        let mut pre_out = PrefillOut::default();
         let pf = stats::bench(2, 10, || {
-            progs.student_prefill(bs, &pids, &vf).unwrap();
+            progs.student_prefill(bs, &pids, &vf, &mut pre_out).unwrap();
         });
         println!(
             "bs={bs}: block_step {:.3}ms  teacher_denoise {:.3}ms  prefill {:.3}ms  (denoise/block ratio {:.1}x)",

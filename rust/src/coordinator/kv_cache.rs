@@ -41,7 +41,7 @@ use std::collections::HashMap;
 
 use anyhow::Result;
 
-use crate::runtime::{Geometry, KvDims, KvSeg, KvView};
+use crate::runtime::{Geometry, KvDims, KvSeg, KvView, INLINE_LANES};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct SlotId(usize);
@@ -316,12 +316,31 @@ impl KvPool {
     /// Borrow a zero-copy view of `ids`' caches with the given lockstep
     /// valid-prefix length. No cache data moves: each lane is a segment
     /// run over the slabs — its pinned prefix pages (if a chain is
-    /// attached) followed by its private slot. An all-plain batch (the
-    /// closed-batch engines) takes the allocation-light bases path.
+    /// attached) followed by its private slot. An all-plain batch of up
+    /// to [`INLINE_LANES`] lanes (every closed-batch engine and the
+    /// block-step machine's cohorts) builds its view with **zero** heap
+    /// allocations: the bases live on the stack and the view stores them
+    /// inline. Chained lanes (prefix cache) still build per-lane segment
+    /// runs — that path allocates and is documented as off the hotpath
+    /// allocation gate.
     pub fn view(&self, ids: &[SlotId], cache_len: usize) -> KvView<'_> {
         if ids.iter().all(|&id| self.chains[id.0].is_empty()) {
-            let bases = ids.iter().map(|&id| self.base(id)).collect();
-            return KvView::new(&self.k, &self.v, bases, self.dims, cache_len);
+            if ids.len() <= INLINE_LANES {
+                let mut bases = [0usize; INLINE_LANES];
+                for (b, &id) in bases.iter_mut().zip(ids) {
+                    *b = self.base(id);
+                }
+                return KvView::new(
+                    &self.k,
+                    &self.v,
+                    &bases[..ids.len()],
+                    self.dims,
+                    cache_len,
+                );
+            }
+            let bases: Vec<usize> =
+                ids.iter().map(|&id| self.base(id)).collect();
+            return KvView::new(&self.k, &self.v, &bases, self.dims, cache_len);
         }
         let lanes = ids.iter().map(|&id| self.lane_segs(id)).collect();
         KvView::segmented(&self.k, &self.v, lanes, self.dims, cache_len)
@@ -379,14 +398,26 @@ impl KvPool {
             l_n * bs * h_n * p * d,
             "prefill KV must be [L, bs={bs}, H, P={p}, dh]"
         );
-        let base = self.base(id);
-        for l in 0..l_n {
-            for h in 0..h_n {
-                let src = (((l * bs + lane) * h_n + h) * p) * d;
-                let dst = base + ((l * h_n + h) * s_n) * d;
-                self.k[dst..dst + p * d].copy_from_slice(&k[src..src + p * d]);
-                self.v[dst..dst + p * d].copy_from_slice(&v[src..src + p * d]);
+        // precomputed stride walk: the src head-stride equals the span
+        // (heads are adjacent in [L, bs, H, P, dh]), so only the dst
+        // pointer needs a wider step; no index math in the inner loop
+        let span = p * d;
+        let src_l = bs * h_n * span;
+        let dst_h = s_n * d;
+        let dst_l = h_n * dst_h;
+        let mut src_row = lane * h_n * span;
+        let mut dst_row = self.base(id);
+        for _l in 0..l_n {
+            let mut src = src_row;
+            let mut dst = dst_row;
+            for _h in 0..h_n {
+                self.k[dst..dst + span].copy_from_slice(&k[src..src + span]);
+                self.v[dst..dst + span].copy_from_slice(&v[src..src + span]);
+                src += span;
+                dst += dst_h;
             }
+            src_row += src_l;
+            dst_row += dst_l;
         }
         self.cache_lens[id.0] = p;
     }
@@ -412,16 +443,27 @@ impl KvPool {
             self.chains[id.0].is_empty() || pos >= self.prompt_len,
             "commit into the shared prefix of a chained slot"
         );
-        let base = self.base(id);
-        for l in 0..l_n {
-            for h in 0..h_n {
-                let src = (((l * bs + lane) * h_n + h) * blk) * d;
-                let dst = base + ((l * h_n + h) * s_n + pos) * d;
-                self.k[dst..dst + blk * d]
-                    .copy_from_slice(&k_blk[src..src + blk * d]);
-                self.v[dst..dst + blk * d]
-                    .copy_from_slice(&v_blk[src..src + blk * d]);
+        // same stride walk as write_prefill: src heads are adjacent
+        // blk*d spans, dst heads step by a full sequence row
+        let span = blk * d;
+        let src_l = bs * h_n * span;
+        let dst_h = s_n * d;
+        let dst_l = h_n * dst_h;
+        let mut src_row = lane * h_n * span;
+        let mut dst_row = self.base(id) + pos * d;
+        for _l in 0..l_n {
+            let mut src = src_row;
+            let mut dst = dst_row;
+            for _h in 0..h_n {
+                self.k[dst..dst + span]
+                    .copy_from_slice(&k_blk[src..src + span]);
+                self.v[dst..dst + span]
+                    .copy_from_slice(&v_blk[src..src + span]);
+                src += span;
+                dst += dst_h;
             }
+            src_row += src_l;
+            dst_row += dst_l;
         }
         self.cache_lens[id.0] = pos + blk;
     }
@@ -445,11 +487,22 @@ impl KvPool {
         let (l_n, h_n, s_n, d) = (g.n_layers, g.n_heads, g.seq_len, g.d_head);
         let row = h_n * s_n * d;
         let base = self.base(id);
-        for l in 0..l_n {
-            let src = (l * bs + lane) * row;
-            let dst = base + l * row;
-            self.k[dst..dst + row].copy_from_slice(&k[src..src + row]);
-            self.v[dst..dst + row].copy_from_slice(&v[src..src + row]);
+        if bs == 1 {
+            // a single-lane [L, 1, H, S, dh] stack is layout-identical
+            // to the slot's [L, H, S, dh]: one slot-sized memcpy
+            let n = l_n * row;
+            self.k[base..base + n].copy_from_slice(&k[..n]);
+            self.v[base..base + n].copy_from_slice(&v[..n]);
+        } else {
+            let src_l = bs * row;
+            let mut src = lane * row;
+            let mut dst = base;
+            for _l in 0..l_n {
+                self.k[dst..dst + row].copy_from_slice(&k[src..src + row]);
+                self.v[dst..dst + row].copy_from_slice(&v[src..src + row]);
+                src += src_l;
+                dst += row;
+            }
         }
         self.cache_lens[id.0] = s_n;
     }

@@ -2,13 +2,14 @@
 //! an exact token-level KV cache. One `ar_step` per generated token;
 //! lanes stop at `<eos>` but the lockstep batch runs until all lanes
 //! finish (dead lanes keep executing, their outputs ignored). Each step
-//! borrows a zero-copy `KvView` of the lane slots — the pre-view
-//! per-token `[L, bs, H, S, dh]` gather (the single largest memcpy in
-//! the old decode loop) no longer exists.
+//! borrows a zero-copy `KvView` of the lane slots and writes into the
+//! caller's reused [`StepScratch`] arena — the pre-view per-token
+//! `[L, bs, H, S, dh]` gather (the single largest memcpy in the old
+//! decode loop) no longer exists, and a warm step allocates nothing.
 
 use anyhow::Result;
 
-use super::{machine, DecodeOutcome};
+use super::{machine, DecodeOutcome, StepScratch};
 use crate::coordinator::kv_cache::{KvPool, SlotId};
 use crate::coordinator::sequence::SequenceState;
 use crate::runtime::{Geometry, Programs, TensorI32};
@@ -30,28 +31,37 @@ pub fn decode(
     let valid_from =
         TensorI32::from_vec(&[bs], seqs.iter().map(|s| s.valid_from).collect());
 
+    let mut scratch = StepScratch::new();
+
     // ---- causal prefill: prompt KV + first-token logits
     let mut prompt_ids = vec![0i32; bs * p_len];
     for (r, s) in seqs.iter().enumerate() {
         prompt_ids[r * p_len..(r + 1) * p_len].copy_from_slice(&s.prompt_ids);
     }
-    let pre = progs.ar_prefill(
+    progs.ar_prefill(
         bs,
         &TensorI32::from_vec(&[bs, p_len], prompt_ids),
         &valid_from,
+        &mut scratch.arena.ar_prefill,
     )?;
     let slots: Vec<SlotId> =
         (0..bs).map(|_| pool.alloc()).collect::<Result<_>>()?;
     for (lane, &slot) in slots.iter().enumerate() {
-        pool.write_prefill(slot, lane, bs, &pre.k.data, &pre.v.data);
+        pool.write_prefill(
+            slot,
+            lane,
+            bs,
+            &scratch.arena.ar_prefill.k.data,
+            &scratch.arena.ar_prefill.v.data,
+        );
     }
     for s in seqs.iter_mut() {
         s.model_calls += 1;
     }
 
-    let mut cur: Vec<i32> = pre.tok.data.clone();
+    let mut cur: Vec<i32> = scratch.arena.ar_prefill.tok.data.clone();
     // reused every step: one [bs] token buffer
-    let mut tok_t = TensorI32::zeros(&[bs]);
+    scratch.arena.tok.reuse(&[bs]);
     let mut done = vec![false; bs];
     for i in 0..g_len {
         for r in 0..bs {
@@ -68,21 +78,29 @@ pub fn decode(
         if done.iter().all(|&d| d) || i == g_len - 1 {
             break;
         }
-        tok_t.data.copy_from_slice(&cur);
-        let out = progs.ar_step(
+        scratch.arena.tok.data.copy_from_slice(&cur);
+        progs.ar_step(
             bs,
             &pool.view(&slots, p_len + i),
             &valid_from,
-            &tok_t,
+            &scratch.arena.tok,
+            &mut scratch.arena.ar_step,
         )?;
         // append the new token's KV for every lane (exact caching)
         for (lane, &slot) in slots.iter().enumerate() {
-            pool.commit_block(slot, lane, bs, 1, &out.k1.data, &out.v1.data);
+            pool.commit_block(
+                slot,
+                lane,
+                bs,
+                1,
+                &scratch.arena.ar_step.k1.data,
+                &scratch.arena.ar_step.v1.data,
+            );
             if !done[lane] {
                 seqs[lane].model_calls += 1;
             }
         }
-        cur.copy_from_slice(&out.tok.data);
+        cur.copy_from_slice(&scratch.arena.ar_step.tok.data);
     }
     for slot in slots {
         pool.free(slot);
@@ -113,6 +131,7 @@ pub(crate) fn machine_prefill(
     seq: &mut SequenceState,
     pad_to: usize,
     prefix_tag: Option<u64>,
+    scratch: &mut StepScratch,
 ) -> Result<(SlotId, i32)> {
     let slot = pool.alloc()?;
     if let Some(tag) = prefix_tag {
@@ -125,14 +144,14 @@ pub(crate) fn machine_prefill(
         }
     }
     let (pid, vf) = machine::padded_prompt(seq, pad_to);
-    let pre = match progs.ar_prefill(pad_to, &pid, &vf) {
-        Ok(pre) => pre,
-        Err(e) => {
-            // hand the slot back: a failed admission must not leak it
-            pool.free(slot);
-            return Err(e);
-        }
-    };
+    if let Err(e) =
+        progs.ar_prefill(pad_to, &pid, &vf, &mut scratch.arena.ar_prefill)
+    {
+        // hand the slot back: a failed admission must not leak it
+        pool.free(slot);
+        return Err(e);
+    }
+    let pre = &scratch.arena.ar_prefill;
     seq.model_calls += 1;
     if let Some(tag) = prefix_tag {
         if let Ok(pin) = pool.prefix_install(
@@ -144,8 +163,9 @@ pub(crate) fn machine_prefill(
             &pre.v.data,
             Some(pre.tok.data[0]),
         ) {
+            let tok = pre.tok.data[0];
             pool.attach_chain(slot, pin);
-            return Ok((slot, pre.tok.data[0]));
+            return Ok((slot, tok));
         }
     }
     pool.write_prefill(slot, 0, pad_to, &pre.k.data, &pre.v.data);
@@ -159,6 +179,8 @@ pub(crate) fn machine_prefill(
 /// (which also commits that token's KV for every cohort lane, done or
 /// not — exact caching, same as the closed-batch engine). `cur` holds
 /// each lane's pending proposal and is written back for the next block.
+/// All per-call buffers come from the caller's [`StepScratch`]: a warm
+/// step allocates nothing.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn machine_step(
     progs: &Programs,
@@ -170,16 +192,16 @@ pub(crate) fn machine_step(
     pos0: usize,
     blk: usize,
     pad_to: usize,
+    scratch: &mut StepScratch,
 ) -> Result<()> {
     let n = seqs.len();
     let (p_len, g_len) = (geom.prompt_len, geom.gen_len);
-    let valid_from = TensorI32::from_vec(
-        &[pad_to],
-        machine::pad_map(n, pad_to, |r| seqs[r].valid_from),
-    );
-    let call_slots: Vec<SlotId> =
-        machine::pad_map(n, pad_to, |r| slots[r]);
-    let mut tok_t = TensorI32::zeros(&[pad_to]);
+    scratch.arena.valid_from.reuse(&[pad_to]);
+    for r in 0..pad_to {
+        scratch.arena.valid_from.data[r] = seqs[r.min(n - 1)].valid_from;
+    }
+    scratch.pad_slots(slots, n, pad_to);
+    scratch.arena.tok.reuse(&[pad_to]);
     for t in 0..blk {
         let i = pos0 + t;
         for r in 0..n {
@@ -196,22 +218,30 @@ pub(crate) fn machine_step(
             break;
         }
         for r in 0..pad_to {
-            tok_t.data[r] = cur[r.min(n - 1)];
+            scratch.arena.tok.data[r] = cur[r.min(n - 1)];
         }
-        let out = progs.ar_step(
+        progs.ar_step(
             pad_to,
-            &pool.view(&call_slots, p_len + i),
-            &valid_from,
-            &tok_t,
+            &pool.view(&scratch.call_slots, p_len + i),
+            &scratch.arena.valid_from,
+            &scratch.arena.tok,
+            &mut scratch.arena.ar_step,
         )?;
         // append the new token's KV for every real lane (exact caching)
         for (lane, &slot) in slots.iter().enumerate() {
-            pool.commit_block(slot, lane, pad_to, 1, &out.k1.data, &out.v1.data);
+            pool.commit_block(
+                slot,
+                lane,
+                pad_to,
+                1,
+                &scratch.arena.ar_step.k1.data,
+                &scratch.arena.ar_step.v1.data,
+            );
             if !seqs[lane].done {
                 seqs[lane].model_calls += 1;
             }
         }
-        cur[..n].copy_from_slice(&out.tok.data[..n]);
+        cur[..n].copy_from_slice(&scratch.arena.ar_step.tok.data[..n]);
     }
     Ok(())
 }

@@ -8,7 +8,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::{machine, DecodeOpts, DecodeOutcome};
+use super::{DecodeOpts, DecodeOutcome, StepScratch};
 use crate::coordinator::sequence::SequenceState;
 use crate::runtime::{Geometry, Programs, TensorI32};
 
@@ -30,8 +30,8 @@ pub fn decode(
     policy: Policy,
 ) -> Result<Vec<DecodeOutcome>> {
     let bs = prompts.len();
-    let (p_len, g_len, s_len, v) =
-        (geom.prompt_len, geom.gen_len, geom.seq_len, geom.vocab_size);
+    let (p_len, g_len, s_len) =
+        (geom.prompt_len, geom.gen_len, geom.seq_len);
     let blk = opts.block_size;
     let num_blocks = g_len / blk;
     let m_per_step = opts
@@ -46,29 +46,35 @@ pub fn decode(
     let valid_from =
         TensorI32::from_vec(&[bs], seqs.iter().map(|s| s.valid_from).collect());
 
-    // reused every step: one [bs, S] id buffer, no per-step allocation
-    let mut ids_t = TensorI32::zeros(&[bs, s_len]);
+    // sized once, reused every step: ids buffer + denoise output
+    let mut scratch = StepScratch::new();
+    scratch.arena.ids.reuse(&[bs, s_len]);
     for b in 0..num_blocks {
         let lo = b * blk;
         loop {
             // lockstep: run while any lane still has masked positions in
             // the block; every lane ticks (python-reference accounting)
-            let any = (0..bs).any(|r| !seqs[r].masked_in(lo, blk).is_empty());
+            let any = (0..bs).any(|r| !seqs[r].block_fully_finalized(lo, blk));
             if !any {
                 break;
             }
             for (r, s) in seqs.iter().enumerate() {
                 s.copy_full_ids_into(
-                    &mut ids_t.data[r * s_len..(r + 1) * s_len],
+                    &mut scratch.arena.ids.data[r * s_len..(r + 1) * s_len],
                 );
             }
-            let out = progs.teacher_denoise(bs, &ids_t, &valid_from)?;
+            progs.teacher_denoise(
+                bs,
+                &scratch.arena.ids,
+                &valid_from,
+                &mut scratch.arena.denoise,
+            )?;
+            let out = &scratch.arena.denoise;
             for r in 0..bs {
                 let base = r * s_len + p_len + lo;
                 let toks = &out.tok.data[base..base + blk];
                 let confs = &out.conf.data[base..base + blk];
-                let _ = v; // logits available in out.logits if needed
-                if !seqs[r].masked_in(lo, blk).is_empty() {
+                if !seqs[r].block_fully_finalized(lo, blk) {
                     match policy {
                         Policy::TopM => {
                             seqs[r].finalize_top_m(lo, toks, confs, m_per_step)
@@ -97,7 +103,9 @@ pub fn decode(
 /// masked positions in the block (python-reference accounting) — so a
 /// cohort holding the whole batch reproduces the closed-batch trace
 /// byte-for-byte. Call rows beyond `seqs.len()` are padded by aliasing
-/// the last live lane (the AOT bucket contract).
+/// the last live lane (the AOT bucket contract). All program inputs and
+/// outputs live in the caller's [`StepScratch`]: once warm, a pass
+/// allocates nothing.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn machine_step(
     progs: &Programs,
@@ -109,6 +117,7 @@ pub(crate) fn machine_step(
     lo: usize,
     blk: usize,
     pad_to: usize,
+    scratch: &mut StepScratch,
 ) -> Result<()> {
     let n = seqs.len();
     let (p_len, s_len) = (geom.prompt_len, geom.seq_len);
@@ -116,24 +125,31 @@ pub(crate) fn machine_step(
         .steps_per_block
         .map(|spb| blk.div_ceil(spb))
         .unwrap_or(1);
-    let valid_from = TensorI32::from_vec(
-        &[pad_to],
-        machine::pad_map(n, pad_to, |r| seqs[r].valid_from),
-    );
-    let mut ids_t = TensorI32::zeros(&[pad_to, s_len]);
+    scratch.arena.valid_from.reuse(&[pad_to]);
+    for r in 0..pad_to {
+        scratch.arena.valid_from.data[r] = seqs[r.min(n - 1)].valid_from;
+    }
+    scratch.arena.ids.reuse(&[pad_to, s_len]);
     loop {
-        let any = (0..n).any(|r| !seqs[r].masked_in(lo, blk).is_empty());
+        let any = (0..n).any(|r| !seqs[r].block_fully_finalized(lo, blk));
         if !any {
             break;
         }
         for r in 0..pad_to {
-            seqs[r.min(n - 1)]
-                .copy_full_ids_into(&mut ids_t.data[r * s_len..(r + 1) * s_len]);
+            seqs[r.min(n - 1)].copy_full_ids_into(
+                &mut scratch.arena.ids.data[r * s_len..(r + 1) * s_len],
+            );
         }
-        let out = progs.teacher_denoise(pad_to, &ids_t, &valid_from)?;
+        progs.teacher_denoise(
+            pad_to,
+            &scratch.arena.ids,
+            &scratch.arena.valid_from,
+            &mut scratch.arena.denoise,
+        )?;
+        let out = &scratch.arena.denoise;
         for r in 0..n {
             let base = r * s_len + p_len + lo;
-            if !seqs[r].masked_in(lo, blk).is_empty() {
+            if !seqs[r].block_fully_finalized(lo, blk) {
                 let toks = &out.tok.data[base..base + blk];
                 let confs = &out.conf.data[base..base + blk];
                 match policy {

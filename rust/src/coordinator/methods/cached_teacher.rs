@@ -14,13 +14,14 @@
 //! "dual" part of dual caching). Refreshes overwrite the lane slots in
 //! place; approx steps borrow a zero-copy `KvView` spanning the whole
 //! (stale) sequence — no batch-major staging buffer exists on this
-//! path. With refresh_every = 1 the approx path degenerates to exact
-//! recomputation, which the integration tests use as a correctness
-//! anchor.
+//! path, and every program input/output lives in a reused
+//! [`StepScratch`] arena. With refresh_every = 1 the approx path
+//! degenerates to exact recomputation, which the integration tests use
+//! as a correctness anchor.
 
 use anyhow::Result;
 
-use super::{machine, DecodeOpts, DecodeOutcome};
+use super::{DecodeOpts, DecodeOutcome, StepScratch};
 use crate::coordinator::kv_cache::{KvPool, SlotId};
 use crate::coordinator::sequence::SequenceState;
 use crate::runtime::{Geometry, Programs, TensorI32};
@@ -55,8 +56,9 @@ pub fn decode(
         (0..bs).map(|_| pool.alloc()).collect::<Result<_>>()?;
 
     // reused across steps: [bs, S] refresh ids and [bs, B] block ids
-    let mut ids_t = TensorI32::zeros(&[bs, s_len]);
-    let mut blk_t = TensorI32::zeros(&[bs, blk]);
+    let mut scratch = StepScratch::new();
+    scratch.arena.ids.reuse(&[bs, s_len]);
+    scratch.arena.blk.reuse(&[bs, blk]);
     let mut steps_since_refresh = usize::MAX; // force refresh first
 
     for b in 0..num_blocks {
@@ -65,10 +67,9 @@ pub fn decode(
             steps_since_refresh = usize::MAX; // refresh at block boundary
         }
         loop {
-            let active: Vec<usize> = (0..bs)
-                .filter(|&r| !seqs[r].masked_in(lo, blk).is_empty())
-                .collect();
-            if active.is_empty() {
+            let any =
+                (0..bs).any(|r| !seqs[r].block_fully_finalized(lo, blk));
+            if !any {
                 break;
             }
             let refresh = steps_since_refresh >= opts.refresh_every;
@@ -76,14 +77,29 @@ pub fn decode(
                 // full bidirectional pass: fresh logits + fresh KV stacks
                 for (r, s) in seqs.iter().enumerate() {
                     s.copy_full_ids_into(
-                        &mut ids_t.data[r * s_len..(r + 1) * s_len],
+                        &mut scratch.arena.ids.data[r * s_len..(r + 1) * s_len],
                     );
                 }
-                let out = progs.teacher_full_cache(bs, &ids_t, &valid_from)?;
+                progs.teacher_full_cache(
+                    bs,
+                    &scratch.arena.ids,
+                    &valid_from,
+                    &mut scratch.arena.full_cache,
+                )?;
                 for (lane, &slot) in slots.iter().enumerate() {
-                    pool.write_full(slot, lane, bs, &out.k.data, &out.v.data);
+                    pool.write_full(
+                        slot,
+                        lane,
+                        bs,
+                        &scratch.arena.full_cache.k.data,
+                        &scratch.arena.full_cache.v.data,
+                    );
                 }
-                for &r in &active {
+                let out = &scratch.arena.full_cache;
+                for r in 0..bs {
+                    if seqs[r].block_fully_finalized(lo, blk) {
+                        continue;
+                    }
                     let base = r * s_len + p_len + lo;
                     finalize(
                         &mut seqs[r],
@@ -101,18 +117,23 @@ pub fn decode(
                 // approximate step: recompute the active block only,
                 // reading the stale full-sequence cache through a view
                 for (r, s) in seqs.iter().enumerate() {
-                    blk_t.data[r * blk..(r + 1) * blk]
+                    scratch.arena.blk.data[r * blk..(r + 1) * blk]
                         .copy_from_slice(&s.gen[lo..lo + blk]);
                 }
-                let out = progs.teacher_block_approx(
+                progs.teacher_block_approx(
                     bs,
                     blk,
                     &pool.view(&slots, s_len),
                     &valid_from,
-                    &blk_t,
+                    &scratch.arena.blk,
                     (p_len + lo) as i32,
+                    &mut scratch.arena.block,
                 )?;
-                for &r in &active {
+                let out = &scratch.arena.block;
+                for r in 0..bs {
+                    if seqs[r].block_fully_finalized(lo, blk) {
+                        continue;
+                    }
                     let base = r * blk;
                     finalize(
                         &mut seqs[r],
@@ -160,7 +181,8 @@ fn finalize(
 /// behavior when counters agree — and returns the counter for write-
 /// back. `DualCache` refreshes at every block boundary regardless.
 /// Refreshes rewrite only the real lanes' slots; padded call rows alias
-/// the last live lane and are never written back.
+/// the last live lane and are never written back. Once the caller's
+/// [`StepScratch`] is warm, a pass performs zero heap allocations.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn machine_step(
     progs: &Programs,
@@ -175,6 +197,7 @@ pub(crate) fn machine_step(
     lo: usize,
     blk: usize,
     pad_to: usize,
+    scratch: &mut StepScratch,
 ) -> Result<usize> {
     let n = seqs.len();
     let (p_len, s_len) = (geom.prompt_len, geom.seq_len);
@@ -183,33 +206,45 @@ pub(crate) fn machine_step(
     } else {
         ssr_in
     };
-    let valid_from = TensorI32::from_vec(
-        &[pad_to],
-        machine::pad_map(n, pad_to, |r| seqs[r].valid_from),
-    );
-    let call_slots: Vec<SlotId> =
-        machine::pad_map(n, pad_to, |r| slots[r]);
-    let mut ids_t = TensorI32::zeros(&[pad_to, s_len]);
-    let mut blk_t = TensorI32::zeros(&[pad_to, blk]);
+    scratch.arena.valid_from.reuse(&[pad_to]);
+    for r in 0..pad_to {
+        scratch.arena.valid_from.data[r] = seqs[r.min(n - 1)].valid_from;
+    }
+    scratch.pad_slots(slots, n, pad_to);
+    scratch.arena.ids.reuse(&[pad_to, s_len]);
+    scratch.arena.blk.reuse(&[pad_to, blk]);
     loop {
-        let active: Vec<usize> = (0..n)
-            .filter(|&r| !seqs[r].masked_in(lo, blk).is_empty())
-            .collect();
-        if active.is_empty() {
+        let any = (0..n).any(|r| !seqs[r].block_fully_finalized(lo, blk));
+        if !any {
             break;
         }
         if ssr >= opts.refresh_every {
             // full bidirectional pass: fresh logits + fresh KV stacks
             for r in 0..pad_to {
                 seqs[r.min(n - 1)].copy_full_ids_into(
-                    &mut ids_t.data[r * s_len..(r + 1) * s_len],
+                    &mut scratch.arena.ids.data[r * s_len..(r + 1) * s_len],
                 );
             }
-            let out = progs.teacher_full_cache(pad_to, &ids_t, &valid_from)?;
+            progs.teacher_full_cache(
+                pad_to,
+                &scratch.arena.ids,
+                &scratch.arena.valid_from,
+                &mut scratch.arena.full_cache,
+            )?;
             for (lane, &slot) in slots.iter().enumerate() {
-                pool.write_full(slot, lane, pad_to, &out.k.data, &out.v.data);
+                pool.write_full(
+                    slot,
+                    lane,
+                    pad_to,
+                    &scratch.arena.full_cache.k.data,
+                    &scratch.arena.full_cache.v.data,
+                );
             }
-            for &r in &active {
+            let out = &scratch.arena.full_cache;
+            for r in 0..n {
+                if seqs[r].block_fully_finalized(lo, blk) {
+                    continue;
+                }
                 let base = r * s_len + p_len + lo;
                 finalize(
                     &mut *seqs[r],
@@ -226,18 +261,23 @@ pub(crate) fn machine_step(
         } else {
             // approximate step: active block only, stale full-seq cache
             for r in 0..pad_to {
-                blk_t.data[r * blk..(r + 1) * blk]
+                scratch.arena.blk.data[r * blk..(r + 1) * blk]
                     .copy_from_slice(&seqs[r.min(n - 1)].gen[lo..lo + blk]);
             }
-            let out = progs.teacher_block_approx(
+            progs.teacher_block_approx(
                 pad_to,
                 blk,
-                &pool.view(&call_slots, s_len),
-                &valid_from,
-                &blk_t,
+                &pool.view(&scratch.call_slots, s_len),
+                &scratch.arena.valid_from,
+                &scratch.arena.blk,
                 (p_len + lo) as i32,
+                &mut scratch.arena.block,
             )?;
-            for &r in &active {
+            let out = &scratch.arena.block;
+            for r in 0..n {
+                if seqs[r].block_fully_finalized(lo, blk) {
+                    continue;
+                }
                 let base = r * blk;
                 finalize(
                     &mut *seqs[r],

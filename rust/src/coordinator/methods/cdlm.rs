@@ -13,9 +13,10 @@
 //!      no compute is spent on later blocks (early stopping).
 //!
 //! The cache never leaves the pool: every program call borrows a
-//! zero-copy `KvView` over the lane-major slabs, so the per-block
-//! `[L, bs, H, S, dh]` staging copies of the pre-view engines are gone
-//! from this hot path entirely.
+//! zero-copy `KvView` over the lane-major slabs, and every program
+//! input/output lives in a reused [`StepScratch`] arena — a steady-state
+//! refinement step touches no allocator at all (the `hotpath` bench
+//! gates this).
 //!
 //! This mirrors `python/compile/decoding.py::student_cdlm_decode`
 //! token-for-token; integration tests enforce parity via the
@@ -24,7 +25,7 @@
 
 use anyhow::Result;
 
-use super::{machine, DecodeOpts, DecodeOutcome};
+use super::{machine, DecodeOpts, DecodeOutcome, StepScratch};
 use crate::coordinator::kv_cache::{KvPool, SlotId};
 use crate::coordinator::sequence::SequenceState;
 use crate::runtime::{Geometry, Programs, TensorI32};
@@ -49,20 +50,29 @@ pub fn decode(
     let valid_from =
         TensorI32::from_vec(&[bs], seqs.iter().map(|s| s.valid_from).collect());
 
+    let mut scratch = StepScratch::new();
+
     // ---- prefill: exact prompt KV, once per request
     let mut prompt_ids = vec![0i32; bs * p_len];
     for (r, s) in seqs.iter().enumerate() {
         prompt_ids[r * p_len..(r + 1) * p_len].copy_from_slice(&s.prompt_ids);
     }
-    let pre = progs.student_prefill(
+    progs.student_prefill(
         bs,
         &TensorI32::from_vec(&[bs, p_len], prompt_ids),
         &valid_from,
+        &mut scratch.arena.prefill,
     )?;
     let slots: Vec<SlotId> =
         (0..bs).map(|_| pool.alloc()).collect::<Result<_>>()?;
     for (lane, &slot) in slots.iter().enumerate() {
-        pool.write_prefill(slot, lane, bs, &pre.k.data, &pre.v.data);
+        pool.write_prefill(
+            slot,
+            lane,
+            bs,
+            &scratch.arena.prefill.k.data,
+            &scratch.arena.prefill.v.data,
+        );
     }
     for s in seqs.iter_mut() {
         s.model_calls += 1;
@@ -70,7 +80,7 @@ pub fn decode(
 
     let mut cache_len = p_len;
     // reused every step and commit: one [bs, B] block-id buffer
-    let mut blk_t = TensorI32::zeros(&[bs, blk]);
+    scratch.arena.blk.reuse(&[bs, blk]);
     for b in 0..num_blocks {
         let lo = b * blk;
         let any_active = seqs.iter().any(|s| !s.done);
@@ -81,31 +91,31 @@ pub fn decode(
         loop {
             // lockstep accounting (matches the python reference): every
             // not-done lane ticks while any lane still refines the block
-            let need: Vec<usize> = (0..bs)
-                .filter(|&r| {
-                    !seqs[r].done && !seqs[r].masked_in(lo, blk).is_empty()
-                })
-                .collect();
-            if need.is_empty() {
+            let any = (0..bs).any(|r| {
+                !seqs[r].done && !seqs[r].block_fully_finalized(lo, blk)
+            });
+            if !any {
                 break;
             }
             for (r, s) in seqs.iter().enumerate() {
-                blk_t.data[r * blk..(r + 1) * blk]
+                scratch.arena.blk.data[r * blk..(r + 1) * blk]
                     .copy_from_slice(&s.gen[lo..lo + blk]);
             }
-            let out = progs.student_block_step(
+            progs.student_block_step(
                 bs,
                 blk,
                 &pool.view(&slots, cache_len),
                 &valid_from,
-                &blk_t,
+                &scratch.arena.blk,
                 (p_len + lo) as i32,
+                &mut scratch.arena.block,
             )?;
+            let out = &scratch.arena.block;
             for r in 0..bs {
                 if seqs[r].done {
                     continue;
                 }
-                if !seqs[r].masked_in(lo, blk).is_empty() {
+                if !seqs[r].block_fully_finalized(lo, blk) {
                     let base = r * blk;
                     seqs[r].finalize_threshold(
                         lo,
@@ -131,21 +141,27 @@ pub fn decode(
         // ---- commit: recompute block KV from the *final* tokens so the
         // cache is exact (one extra model call, not a refinement step)
         for (r, s) in seqs.iter().enumerate() {
-            blk_t.data[r * blk..(r + 1) * blk]
+            scratch.arena.blk.data[r * blk..(r + 1) * blk]
                 .copy_from_slice(&s.gen[lo..lo + blk]);
         }
-        let out = progs.student_block_step(
+        progs.student_block_step(
             bs,
             blk,
             &pool.view(&slots, cache_len),
             &valid_from,
-            &blk_t,
+            &scratch.arena.blk,
             (p_len + lo) as i32,
+            &mut scratch.arena.block,
         )?;
         for (lane, &slot) in slots.iter().enumerate() {
             if !seqs[lane].done {
                 pool.commit_block(
-                    slot, lane, bs, blk, &out.k_blk.data, &out.v_blk.data,
+                    slot,
+                    lane,
+                    bs,
+                    blk,
+                    &scratch.arena.block.k_blk.data,
+                    &scratch.arena.block.v_blk.data,
                 );
                 seqs[lane].model_calls += 1;
             }
@@ -186,6 +202,7 @@ pub(crate) fn machine_prefill(
     seq: &mut SequenceState,
     pad_to: usize,
     prefix_tag: Option<u64>,
+    scratch: &mut StepScratch,
 ) -> Result<SlotId> {
     let slot = pool.alloc()?;
     if let Some(tag) = prefix_tag {
@@ -197,14 +214,14 @@ pub(crate) fn machine_prefill(
         }
     }
     let (pid, vf) = machine::padded_prompt(seq, pad_to);
-    let pre = match progs.student_prefill(pad_to, &pid, &vf) {
-        Ok(pre) => pre,
-        Err(e) => {
-            // hand the slot back: a failed admission must not leak it
-            pool.free(slot);
-            return Err(e);
-        }
-    };
+    if let Err(e) =
+        progs.student_prefill(pad_to, &pid, &vf, &mut scratch.arena.prefill)
+    {
+        // hand the slot back: a failed admission must not leak it
+        pool.free(slot);
+        return Err(e);
+    }
+    let pre = &scratch.arena.prefill;
     seq.model_calls += 1;
     if let Some(tag) = prefix_tag {
         if let Ok(pin) = pool.prefix_install(
@@ -229,6 +246,8 @@ pub(crate) fn machine_prefill(
 /// not-done cohort lane ticks while any cohort lane still has masked
 /// positions in the block. Rows beyond `seqs.len()` alias the last live
 /// lane and its slot (bucket padding; never finalized or committed).
+/// This is the hot path the `hotpath` bench drives: once the scratch
+/// arena is warm, a refinement pass performs zero heap allocations.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn machine_step(
     progs: &Programs,
@@ -240,40 +259,42 @@ pub(crate) fn machine_step(
     lo: usize,
     blk: usize,
     pad_to: usize,
+    scratch: &mut StepScratch,
 ) -> Result<()> {
     let n = seqs.len();
     let p_len = geom.prompt_len;
     let cache_len = p_len + lo;
-    let valid_from = TensorI32::from_vec(
-        &[pad_to],
-        machine::pad_map(n, pad_to, |r| seqs[r].valid_from),
-    );
-    let call_slots: Vec<SlotId> =
-        machine::pad_map(n, pad_to, |r| slots[r]);
-    let mut blk_t = TensorI32::zeros(&[pad_to, blk]);
+    scratch.arena.valid_from.reuse(&[pad_to]);
+    for r in 0..pad_to {
+        scratch.arena.valid_from.data[r] = seqs[r.min(n - 1)].valid_from;
+    }
+    scratch.pad_slots(slots, n, pad_to);
+    scratch.arena.blk.reuse(&[pad_to, blk]);
     loop {
         let any = (0..n)
-            .any(|r| !seqs[r].done && !seqs[r].masked_in(lo, blk).is_empty());
+            .any(|r| !seqs[r].done && !seqs[r].block_fully_finalized(lo, blk));
         if !any {
             break;
         }
         for r in 0..pad_to {
-            blk_t.data[r * blk..(r + 1) * blk]
+            scratch.arena.blk.data[r * blk..(r + 1) * blk]
                 .copy_from_slice(&seqs[r.min(n - 1)].gen[lo..lo + blk]);
         }
-        let out = progs.student_block_step(
+        progs.student_block_step(
             pad_to,
             blk,
-            &pool.view(&call_slots, cache_len),
-            &valid_from,
-            &blk_t,
+            &pool.view(&scratch.call_slots, cache_len),
+            &scratch.arena.valid_from,
+            &scratch.arena.blk,
             (p_len + lo) as i32,
+            &mut scratch.arena.block,
         )?;
+        let out = &scratch.arena.block;
         for r in 0..n {
             if seqs[r].done {
                 continue;
             }
-            if !seqs[r].masked_in(lo, blk).is_empty() {
+            if !seqs[r].block_fully_finalized(lo, blk) {
                 let base = r * blk;
                 seqs[r].finalize_threshold(
                     lo,
@@ -298,7 +319,11 @@ pub(crate) fn machine_step(
 /// Commit the block KV for the cohort lanes that continue past the
 /// boundary (one extra model call each, not a refinement step — the
 /// same §A.3 accounting as [`decode`]). `items` holds only continuing
-/// lanes; callers skip the call entirely when none continue.
+/// lanes; callers skip the call entirely when none continue. Shares the
+/// caller's [`StepScratch`] with [`machine_step`] — the buffers are
+/// reshaped (`reuse`) when the continuing-lane pad differs from the
+/// step pad, which zero-fills in place without allocating once warm.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn machine_commit(
     progs: &Programs,
     geom: &Geometry,
@@ -307,6 +332,7 @@ pub(crate) fn machine_commit(
     lo: usize,
     blk: usize,
     pad_to: usize,
+    scratch: &mut StepScratch,
 ) -> Result<()> {
     let n = items.len();
     if n == 0 {
@@ -314,27 +340,37 @@ pub(crate) fn machine_commit(
     }
     let p_len = geom.prompt_len;
     let cache_len = p_len + lo;
-    let valid_from = TensorI32::from_vec(
-        &[pad_to],
-        machine::pad_map(n, pad_to, |r| items[r].0.valid_from),
-    );
-    let call_slots: Vec<SlotId> =
-        machine::pad_map(n, pad_to, |r| items[r].1);
-    let mut blk_t = TensorI32::zeros(&[pad_to, blk]);
+    scratch.arena.valid_from.reuse(&[pad_to]);
     for r in 0..pad_to {
-        blk_t.data[r * blk..(r + 1) * blk]
+        scratch.arena.valid_from.data[r] = items[r.min(n - 1)].0.valid_from;
+    }
+    scratch.call_slots.clear();
+    scratch
+        .call_slots
+        .extend((0..pad_to).map(|r| items[r.min(n - 1)].1));
+    scratch.arena.blk.reuse(&[pad_to, blk]);
+    for r in 0..pad_to {
+        scratch.arena.blk.data[r * blk..(r + 1) * blk]
             .copy_from_slice(&items[r.min(n - 1)].0.gen[lo..lo + blk]);
     }
-    let out = progs.student_block_step(
+    progs.student_block_step(
         pad_to,
         blk,
-        &pool.view(&call_slots, cache_len),
-        &valid_from,
-        &blk_t,
+        &pool.view(&scratch.call_slots, cache_len),
+        &scratch.arena.valid_from,
+        &scratch.arena.blk,
         (p_len + lo) as i32,
+        &mut scratch.arena.block,
     )?;
     for (lane, (s, slot)) in items.iter_mut().enumerate() {
-        pool.commit_block(*slot, lane, pad_to, blk, &out.k_blk.data, &out.v_blk.data);
+        pool.commit_block(
+            *slot,
+            lane,
+            pad_to,
+            blk,
+            &scratch.arena.block.k_blk.data,
+            &scratch.arena.block.v_blk.data,
+        );
         s.model_calls += 1;
     }
     Ok(())

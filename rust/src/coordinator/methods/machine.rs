@@ -42,7 +42,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use super::{ar, bidirectional, cached_teacher, cdlm};
-use super::{DecodeOpts, DecodeOutcome, Method};
+use super::{DecodeOpts, DecodeOutcome, Method, StepScratch};
 use crate::coordinator::kv_cache::{KvPool, SlotId};
 use crate::coordinator::sequence::SequenceState;
 use crate::runtime::{
@@ -105,6 +105,10 @@ pub struct BatchState {
     buckets: Vec<usize>,
     pool: KvPool,
     lanes: Vec<Option<Lane>>,
+    /// Step arena + padded-call buffers, sized on first use and reused
+    /// by every admission and `step_cycle` — the machine's steady-state
+    /// decode steps allocate nothing (the `hotpath` bench gate).
+    scratch: StepScratch,
     stepped: bool,
     /// Cross-request prompt-prefix reuse at admission (off by default:
     /// the closed-batch trace pins assume every admit prefills; the
@@ -151,6 +155,7 @@ impl BatchState {
             buckets,
             pool,
             lanes: (0..cap).map(|_| None).collect(),
+            scratch: StepScratch::new(),
             stepped: false,
             prefix_cache: false,
             total_admissions: 0,
@@ -310,6 +315,7 @@ impl BatchState {
                     &mut seq,
                     pre_pad,
                     prefix_tag,
+                    &mut self.scratch,
                 )?),
                 0,
             ),
@@ -320,6 +326,7 @@ impl BatchState {
                     &mut seq,
                     pre_pad,
                     prefix_tag,
+                    &mut self.scratch,
                 )?;
                 (Some(slot), tok)
             }
@@ -461,6 +468,7 @@ impl BatchState {
                         cursor * blk,
                         blk,
                         pad_to,
+                        &mut self.scratch,
                     )?;
                 }
                 // no early stop in the bidirectional baselines
@@ -499,6 +507,7 @@ impl BatchState {
                         cursor * blk,
                         blk,
                         pad_to,
+                        &mut self.scratch,
                     )?
                 };
                 for l in lane_refs {
@@ -527,6 +536,7 @@ impl BatchState {
                         cursor * blk,
                         blk,
                         pad_to,
+                        &mut self.scratch,
                     )?;
                 }
                 // commit block KV only for lanes continuing past the
@@ -552,6 +562,7 @@ impl BatchState {
                         cursor * blk,
                         blk,
                         pad,
+                        &mut self.scratch,
                     )?;
                 }
                 for l in lane_refs {
@@ -585,6 +596,7 @@ impl BatchState {
                         cursor,
                         blk,
                         pad_to,
+                        &mut self.scratch,
                     )?;
                 }
                 let g_len = self.geom.gen_len;

@@ -16,9 +16,12 @@
 //!      are re-drafted — the cache stays exact).
 //!
 //! Both cache sets (drafter + verifier) live in one pool; every program
-//! call borrows a zero-copy `KvView` of the relevant slot set — the
-//! four `[L, bs, H, S, dh]` staging buffers of the pre-view engine are
-//! gone.
+//! call borrows a zero-copy `KvView` of the relevant slot set. The
+//! drafter's and verifier's block outputs must be live at the same time
+//! (the commit step reads both), so this engine keeps two
+//! [`BlockStepOut`] scratch structs — the two-arena case the
+//! [`crate::runtime::StepArena`] docs call out — both reused across
+//! every draft/verify/commit call.
 //!
 //! The output equals AR greedy decoding exactly (same tokens), but with
 //! fewer verifier passes when the drafter agrees — the acceptance rate
@@ -36,6 +39,7 @@ use anyhow::Result;
 use super::{DecodeOpts, DecodeOutcome};
 use crate::coordinator::kv_cache::{KvPool, SlotId};
 use crate::coordinator::sequence::SequenceState;
+use crate::runtime::programs::{ArPrefillOut, BlockStepOut, PrefillOut};
 use crate::runtime::{Geometry, Programs, TensorI32};
 use crate::tokenizer::MASK;
 
@@ -52,7 +56,7 @@ pub fn decode(
 ) -> Result<Vec<DecodeOutcome>> {
     let bs = prompts.len();
     let (p_len, g_len) = (geom.prompt_len, geom.gen_len);
-    let blk = geom.block_size;
+    let blk = opts.block_size;
     let num_blocks = g_len / blk;
 
     let mut seqs: Vec<SequenceState> = prompts
@@ -69,8 +73,10 @@ pub fn decode(
     let pid_t = TensorI32::from_vec(&[bs, p_len], prompt_ids);
 
     // two cache sets: drafter (student) + verifier (AR)
-    let d_pre = draft_progs.student_prefill(bs, &pid_t, &valid_from)?;
-    let v_pre = verify_progs.ar_prefill(bs, &pid_t, &valid_from)?;
+    let mut d_pre = PrefillOut::default();
+    draft_progs.student_prefill(bs, &pid_t, &valid_from, &mut d_pre)?;
+    let mut v_pre = ArPrefillOut::default();
+    verify_progs.ar_prefill(bs, &pid_t, &valid_from, &mut v_pre)?;
     let d_slots: Vec<SlotId> =
         (0..bs).map(|_| pool.alloc()).collect::<Result<_>>()?;
     let v_slots: Vec<SlotId> =
@@ -83,8 +89,11 @@ pub fn decode(
 
     // verifier's next-token proposal entering the current block
     let mut next_tok: Vec<i32> = v_pre.tok.data.clone();
-    // reused [bs, B] block-id buffer for every draft/verify/commit call
+    // reused [bs, B] block-id buffer for every draft/verify/commit call,
+    // plus the two live block outputs (drafter + verifier)
     let mut blk_t = TensorI32::from_vec(&[bs, blk], vec![MASK; bs * blk]);
+    let mut d_out = BlockStepOut::default();
+    let mut v_out = BlockStepOut::default();
     let mut cache_len = p_len;
 
     for b in 0..num_blocks {
@@ -94,36 +103,35 @@ pub fn decode(
         }
         // ---- 1. draft the full block with the CDLM student
         loop {
-            let need: Vec<usize> = (0..bs)
-                .filter(|&r| {
-                    !seqs[r].done && !seqs[r].masked_in(lo, blk).is_empty()
-                })
-                .collect();
-            if need.is_empty() {
+            let any = (0..bs).any(|r| {
+                !seqs[r].done && !seqs[r].block_fully_finalized(lo, blk)
+            });
+            if !any {
                 break;
             }
             for (r, s) in seqs.iter().enumerate() {
                 blk_t.data[r * blk..(r + 1) * blk]
                     .copy_from_slice(&s.gen[lo..lo + blk]);
             }
-            let out = draft_progs.student_block_step(
+            draft_progs.student_block_step(
                 bs,
                 blk,
                 &pool.view(&d_slots, cache_len),
                 &valid_from,
                 &blk_t,
                 (p_len + lo) as i32,
+                &mut d_out,
             )?;
             for r in 0..bs {
                 if seqs[r].done {
                     continue;
                 }
-                if !seqs[r].masked_in(lo, blk).is_empty() {
+                if !seqs[r].block_fully_finalized(lo, blk) {
                     let base = r * blk;
                     seqs[r].finalize_threshold(
                         lo,
-                        &out.tok.data[base..base + blk],
-                        &out.conf.data[base..base + blk],
+                        &d_out.tok.data[base..base + blk],
+                        &d_out.conf.data[base..base + blk],
                         opts.tau_conf,
                     );
                 }
@@ -145,13 +153,14 @@ pub fn decode(
             blk_t.data[r * blk..(r + 1) * blk]
                 .copy_from_slice(&s.gen[lo..lo + blk]);
         }
-        let ver = verify_progs.ar_verify(
+        verify_progs.ar_verify(
             bs,
             blk,
             &pool.view(&v_slots, cache_len),
             &valid_from,
             &blk_t,
             (p_len + lo) as i32,
+            &mut v_out,
         )?;
         // ---- 3. greedy acceptance per lane
         for r in 0..bs {
@@ -160,10 +169,10 @@ pub fn decode(
             }
             seqs[r].model_calls += 1;
             let base = r * blk;
-            // ver.tok[i] = AR's greedy continuation AFTER draft token i
+            // v_out.tok[i] = AR's greedy continuation AFTER draft token i
             let mut accepted = 1usize; // position lo holds AR's own token
             while accepted < blk {
-                let ar_choice = ver.tok.data[base + accepted - 1];
+                let ar_choice = v_out.tok.data[base + accepted - 1];
                 if seqs[r].gen[lo + accepted] == ar_choice {
                     accepted += 1;
                 } else {
@@ -177,7 +186,7 @@ pub fn decode(
             for i in accepted..blk {
                 seqs[r].gen[lo + i] = MASK;
             }
-            next_tok[r] = ver.tok.data[base + accepted - 1];
+            next_tok[r] = v_out.tok.data[base + accepted - 1];
         }
         // a block is only committed when fully accepted by every live
         // lane; otherwise the partial tail is re-drafted — for the toy
@@ -201,6 +210,9 @@ pub fn decode(
                 lo,
                 cache_len,
                 &mut next_tok,
+                &mut blk_t,
+                &mut d_out,
+                &mut v_out,
             )?;
         }
         // ---- 4. early stop + commit both caches from final tokens
@@ -216,22 +228,32 @@ pub fn decode(
             blk_t.data[r * blk..(r + 1) * blk]
                 .copy_from_slice(&s.gen[lo..lo + blk]);
         }
-        let dcommit = draft_progs.student_block_step(
-            bs, blk, &pool.view(&d_slots, cache_len), &valid_from, &blk_t,
+        draft_progs.student_block_step(
+            bs,
+            blk,
+            &pool.view(&d_slots, cache_len),
+            &valid_from,
+            &blk_t,
             (p_len + lo) as i32,
+            &mut d_out,
         )?;
-        let vcommit = verify_progs.ar_verify(
-            bs, blk, &pool.view(&v_slots, cache_len), &valid_from, &blk_t,
+        verify_progs.ar_verify(
+            bs,
+            blk,
+            &pool.view(&v_slots, cache_len),
+            &valid_from,
+            &blk_t,
             (p_len + lo) as i32,
+            &mut v_out,
         )?;
         for lane in 0..bs {
             if !seqs[lane].done {
                 pool.commit_block(d_slots[lane], lane, bs, blk,
-                                  &dcommit.k_blk.data, &dcommit.v_blk.data);
+                                  &d_out.k_blk.data, &d_out.v_blk.data);
                 pool.commit_block(v_slots[lane], lane, bs, blk,
-                                  &vcommit.k_blk.data, &vcommit.v_blk.data);
+                                  &v_out.k_blk.data, &v_out.v_blk.data);
                 seqs[lane].model_calls += 2;
-                next_tok[lane] = vcommit.tok.data[lane * blk + blk - 1];
+                next_tok[lane] = v_out.tok.data[lane * blk + blk - 1];
             }
         }
         cache_len += blk;
@@ -245,7 +267,8 @@ pub fn decode(
 /// Re-draft + re-verify the unfinished tail of a block until every live
 /// lane has it fully finalized. Bounded: each verify pass accepts at
 /// least one token per lane. Reads both cache sets through fresh views
-/// per call (`slots` is the (draft, verify) slot-set pair).
+/// per call (`slots` is the (draft, verify) slot-set pair) and reuses
+/// the caller's block-id buffer and block outputs.
 #[allow(clippy::too_many_arguments)]
 fn continue_redraft(
     draft_progs: &Programs,
@@ -259,48 +282,58 @@ fn continue_redraft(
     lo: usize,
     cache_len: usize,
     next_tok: &mut [i32],
+    blk_t: &mut TensorI32,
+    d_out: &mut BlockStepOut,
+    v_out: &mut BlockStepOut,
 ) -> Result<()> {
     let (d_slots, v_slots) = slots;
     let bs = seqs.len();
     let blk = geom.block_size;
     let p_len = geom.prompt_len;
-    let mut blk_t = TensorI32::from_vec(&[bs, blk], vec![MASK; bs * blk]);
+    // acceptance membership must be captured before drafting fills the
+    // block, so one small index buffer survives (reused across passes)
+    let mut unfinished: Vec<usize> = Vec::with_capacity(bs);
     let mut guard = 0;
     loop {
         guard += 1;
         anyhow::ensure!(guard <= blk + 1, "speculative redraft diverged");
-        let unfinished: Vec<usize> = (0..bs)
-            .filter(|&r| {
-                !seqs[r].done && !seqs[r].block_fully_finalized(lo, blk)
-            })
-            .collect();
+        unfinished.clear();
+        unfinished.extend((0..bs).filter(|&r| {
+            !seqs[r].done && !seqs[r].block_fully_finalized(lo, blk)
+        }));
         if unfinished.is_empty() {
             return Ok(());
         }
         // draft masked tail
         loop {
-            let need: Vec<usize> = (0..bs)
-                .filter(|&r| {
-                    !seqs[r].done && !seqs[r].masked_in(lo, blk).is_empty()
-                })
-                .collect();
-            if need.is_empty() {
+            let any = (0..bs).any(|r| {
+                !seqs[r].done && !seqs[r].block_fully_finalized(lo, blk)
+            });
+            if !any {
                 break;
             }
             for (r, s) in seqs.iter().enumerate() {
                 blk_t.data[r * blk..(r + 1) * blk]
                     .copy_from_slice(&s.gen[lo..lo + blk]);
             }
-            let out = draft_progs.student_block_step(
-                bs, blk, &pool.view(d_slots, cache_len), valid_from, &blk_t,
+            draft_progs.student_block_step(
+                bs,
+                blk,
+                &pool.view(d_slots, cache_len),
+                valid_from,
+                blk_t,
                 (p_len + lo) as i32,
+                d_out,
             )?;
-            for &r in &need {
+            for r in 0..bs {
+                if seqs[r].done || seqs[r].block_fully_finalized(lo, blk) {
+                    continue;
+                }
                 let base = r * blk;
                 seqs[r].finalize_threshold(
                     lo,
-                    &out.tok.data[base..base + blk],
-                    &out.conf.data[base..base + blk],
+                    &d_out.tok.data[base..base + blk],
+                    &d_out.conf.data[base..base + blk],
                     opts.tau_conf,
                 );
                 seqs[r].steps += 1;
@@ -312,16 +345,21 @@ fn continue_redraft(
             blk_t.data[r * blk..(r + 1) * blk]
                 .copy_from_slice(&s.gen[lo..lo + blk]);
         }
-        let ver = verify_progs.ar_verify(
-            bs, blk, &pool.view(v_slots, cache_len), valid_from, &blk_t,
+        verify_progs.ar_verify(
+            bs,
+            blk,
+            &pool.view(v_slots, cache_len),
+            valid_from,
+            blk_t,
             (p_len + lo) as i32,
+            v_out,
         )?;
         for &r in &unfinished {
             seqs[r].model_calls += 1;
             let base = r * blk;
             let mut accepted = 1usize;
             while accepted < blk {
-                let ar_choice = ver.tok.data[base + accepted - 1];
+                let ar_choice = v_out.tok.data[base + accepted - 1];
                 if seqs[r].gen[lo + accepted] == ar_choice {
                     accepted += 1;
                 } else {
@@ -333,7 +371,7 @@ fn continue_redraft(
             for i in accepted..blk {
                 seqs[r].gen[lo + i] = MASK;
             }
-            next_tok[r] = ver.tok.data[base + accepted - 1];
+            next_tok[r] = v_out.tok.data[base + accepted - 1];
         }
     }
 }
@@ -348,7 +386,7 @@ mod tests {
         // AR greedy:   after a -> b, after b -> X (mismatch at c)
         // result: accept a, b, then correction X; tail re-masked
         let draft = [10, 11, 12, 13];
-        let ar_next = [11, 99, 0, 0]; // ver.tok per position
+        let ar_next = [11, 99, 0, 0]; // verifier tok per position
         let mut gen = draft;
         let mut accepted = 1;
         while accepted < 4 {

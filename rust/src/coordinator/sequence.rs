@@ -80,6 +80,12 @@ impl SequenceState {
     /// with conf >= tau; if none clears the bar, reveals the single
     /// most-confident masked position so progress is guaranteed.
     /// Returns the number of tokens finalized.
+    ///
+    /// Runs as a single allocation-free pass (this is called once per
+    /// lane per refinement step — the hot path's zero-allocation gate
+    /// covers it): the reveal and the fallback argmax share one scan,
+    /// with first-maximum tie-breaking (matches python argmax semantics
+    /// — ties are real: softmax confidence saturates at 1.0).
     pub fn finalize_threshold(
         &mut self,
         lo: usize,
@@ -88,29 +94,26 @@ impl SequenceState {
         tau: f32,
     ) -> usize {
         let len = toks.len();
-        let masked = self.masked_in(lo, len);
-        if masked.is_empty() {
-            return 0;
-        }
         let mut finalized = 0;
-        for &pos in &masked {
-            if confs[pos - lo] >= tau {
-                self.gen[pos] = toks[pos - lo];
+        let mut best: Option<usize> = None; // first-max masked offset
+        for i in 0..len {
+            if self.gen[lo + i] != MASK {
+                continue;
+            }
+            match best {
+                Some(b) if confs[b] >= confs[i] => {}
+                _ => best = Some(i),
+            }
+            if confs[i] >= tau {
+                self.gen[lo + i] = toks[i];
                 finalized += 1;
             }
         }
+        let Some(best) = best else {
+            return 0; // nothing masked in the block
+        };
         if finalized == 0 {
-            // first maximum on ties (matches python argmax semantics —
-            // ties are real: softmax confidence saturates at 1.0)
-            let mut best = masked[0];
-            let mut best_c = confs[best - lo];
-            for &pos in &masked[1..] {
-                if confs[pos - lo] > best_c {
-                    best_c = confs[pos - lo];
-                    best = pos;
-                }
-            }
-            self.gen[best] = toks[best - lo];
+            self.gen[lo + best] = toks[best];
             finalized = 1;
         }
         self.note_finalized();
@@ -119,6 +122,11 @@ impl SequenceState {
 
     /// Top-m finalization (vanilla / truncated-step baselines): reveal
     /// the m most confident masked positions in the block.
+    ///
+    /// Allocation-free repeated selection instead of sort-and-take: m is
+    /// small (1 in every configured baseline) and each round picks the
+    /// first maximum among the still-masked positions, which reveals the
+    /// exact set (and order) the old stable descending sort did.
     pub fn finalize_top_m(
         &mut self,
         lo: usize,
@@ -126,18 +134,26 @@ impl SequenceState {
         confs: &[f32],
         m: usize,
     ) -> usize {
-        let mut masked = self.masked_in(lo, toks.len());
-        if masked.is_empty() {
+        let len = toks.len();
+        let remaining =
+            (0..len).filter(|&i| self.gen[lo + i] == MASK).count();
+        if remaining == 0 {
             return 0;
         }
-        masked.sort_by(|&a, &b| {
-            confs[b - lo]
-                .partial_cmp(&confs[a - lo])
-                .unwrap_or(std::cmp::Ordering::Equal)
-        });
-        let take = masked.len().min(m.max(1));
-        for &pos in &masked[..take] {
-            self.gen[pos] = toks[pos - lo];
+        let take = remaining.min(m.max(1));
+        for _ in 0..take {
+            let mut best: Option<usize> = None;
+            for i in 0..len {
+                if self.gen[lo + i] != MASK {
+                    continue;
+                }
+                match best {
+                    Some(b) if confs[b] >= confs[i] => {}
+                    _ => best = Some(i),
+                }
+            }
+            let b = best.expect("remaining masked positions cover take");
+            self.gen[lo + b] = toks[b];
         }
         self.note_finalized();
         take

@@ -1,0 +1,473 @@
+//! Hot-path measurement driver: `cdlm bench --scenario hotpath`.
+//!
+//! Drives each method's block-step-machine policy functions (the same
+//! `machine_prefill` / `machine_step` / `machine_commit` calls
+//! [`BatchState::step_cycle`] dispatches) directly, with the gated
+//! region wrapped in a wall-clock + allocation-counter window:
+//!
+//! * **gated** — the policy-function calls themselves: every program
+//!   execution, KV view construction, slab write, and finalization
+//!   scan. This is the steady-state decode step, and once the shared
+//!   [`StepScratch`] arena is warm it must perform **zero** heap
+//!   allocations (the bench hard-fails otherwise).
+//! * **outside the gate** — per-block cohort assembly (`Vec`s of lane
+//!   borrows, the continuing-lane item list) and per-repeat sequence
+//!   construction. The machine pays the same per-block bookkeeping;
+//!   it is O(lanes) pointer pushes per *block*, not per step, and is
+//!   deliberately excluded so the gate pins the per-step contract.
+//!
+//! Repeat 0 of every cell warms the arena (first-shape `reuse` calls
+//! size the buffers) and is excluded from all reported numbers; repeats
+//! >= 1 are the steady state. Reported per-step latency divides the
+//! gated wall time by the §A.3 refinement-step count, so cells are
+//! comparable to `BENCH_decode.json` accounting.
+//!
+//! The allocation counter only counts when the driving binary installs
+//! [`CountingAlloc`](crate::util::alloc_count::CountingAlloc); callers
+//! gate on [`alloc_count::counting_enabled`] first.
+//!
+//! [`BatchState::step_cycle`]: crate::coordinator::methods::machine::BatchState::step_cycle
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::analysis::intensity::{ArchConfig, DecodeMode};
+use crate::coordinator::kv_cache::{KvPool, SlotId};
+use crate::coordinator::methods::{
+    ar, bidirectional, cached_teacher, cdlm, DecodeOpts, Method, StepScratch,
+};
+use crate::coordinator::sequence::SequenceState;
+use crate::runtime::{Geometry, Programs};
+use crate::util::alloc_count;
+use crate::util::stats::Summary;
+
+/// One measured (method, batch) cell. All perf fields cover steady
+/// repeats only (repeat 0 warms the arena); `warm_allocs` records what
+/// arena sizing cost so the artifact shows the one-time price too.
+#[derive(Debug, Clone)]
+pub struct HotpathCell {
+    pub method: Method,
+    pub batch: usize,
+    /// Measured repeats (total repeats minus the warm-up).
+    pub steady_repeats: usize,
+    /// §A.3 refinement steps summed over steady repeats.
+    pub steps: u64,
+    /// §A.3 generated tokens (pre-`<eos>`) summed over steady repeats.
+    pub tokens: u64,
+    /// Wall seconds inside the gated windows, steady repeats.
+    pub gated_s: f64,
+    /// Per-repeat (gated ns / steps), 50th / 95th percentile.
+    pub ns_per_step_p50: f64,
+    pub ns_per_step_p95: f64,
+    pub tokens_per_s: f64,
+    /// Heap acquisitions inside the gated windows on steady repeats —
+    /// the hard-gated quantity (must be 0).
+    pub steady_allocs: u64,
+    /// Heap acquisitions inside the gated windows on repeat 0.
+    pub warm_allocs: u64,
+}
+
+impl HotpathCell {
+    pub fn allocs_per_step(&self) -> f64 {
+        self.steady_allocs as f64 / self.steps.max(1) as f64
+    }
+}
+
+/// Deterministic full-length synthetic prompt (no padding, all ids in
+/// the reference token range), varied per lane so batched lanes do not
+/// collapse into identical traces.
+pub fn synth_prompt(geom: &Geometry, lane: usize) -> Vec<i32> {
+    (0..geom.prompt_len)
+        .map(|i| 4 + ((lane * 31 + i * 7) % 50) as i32)
+        .collect()
+}
+
+/// Map a decode method onto the §5.4 arithmetic-intensity mode used for
+/// the analytic context attached to each bench cell. `dllm-cache`
+/// approximates to block mode (its steady step recomputes one block;
+/// periodic full refreshes push its true traffic toward vanilla).
+pub fn decode_mode_for(method: Method, block: usize) -> DecodeMode {
+    match method {
+        Method::Ar => DecodeMode::Ar,
+        Method::Vanilla | Method::FastDllmPar => DecodeMode::VanillaDlm,
+        Method::DllmCache | Method::FastDllmDc | Method::Cdlm => {
+            DecodeMode::BlockDlm { block }
+        }
+    }
+}
+
+/// The reference geometry viewed as a transformer [`ArchConfig`] so the
+/// intensity model can attach analytic FLOPs/bytes-per-step to each
+/// cell. The reference backend is a hash-chain mock, not a transformer
+/// — these numbers contextualize the measured ns/step against what the
+/// same decode schedule would move on real hardware; they are a model,
+/// not a measurement. MHA (`n_kv_heads = n_heads`) and a classic
+/// two-matrix MLP are the assumptions.
+pub fn reference_arch(geom: &Geometry) -> ArchConfig {
+    ArchConfig {
+        name: "reference",
+        n_layers: geom.n_layers,
+        d_model: geom.d_model,
+        n_q_heads: geom.n_heads,
+        n_kv_heads: geom.n_heads,
+        d_head: geom.d_head,
+        d_ff: geom.d_ff,
+        vocab: geom.vocab_size,
+        mlp_mats: 2,
+    }
+}
+
+/// Smallest exported bucket covering `n` lanes (callers pass sorted
+/// buckets; past the largest bucket the raw count is used, matching
+/// the machine's cohort padding).
+fn pad_of(buckets: &[usize], n: usize) -> usize {
+    buckets.iter().copied().find(|&b| b >= n).unwrap_or(n)
+}
+
+/// Accumulated gated window: wall ns + thread-local heap acquisitions
+/// across every `run` call.
+struct Gate {
+    ns: u64,
+    allocs: u64,
+}
+
+impl Gate {
+    fn new() -> Self {
+        Gate { ns: 0, allocs: 0 }
+    }
+
+    /// Run `f` inside the window. `Instant` reads and the counter reads
+    /// do not allocate, so the window measures exactly `f`.
+    fn run<T>(&mut self, f: impl FnOnce() -> Result<T>) -> Result<T> {
+        let a0 = alloc_count::thread_allocs();
+        let t0 = Instant::now();
+        let out = f();
+        self.ns += t0.elapsed().as_nanos() as u64;
+        self.allocs += alloc_count::thread_allocs().saturating_sub(a0);
+        out
+    }
+}
+
+/// Decode `prompts` once through `method`'s machine policy functions,
+/// mirroring `step_cohort`'s drive pattern for a single cohort, gating
+/// only the policy calls. Returns (§A.3 steps, §A.3 gen tokens).
+#[allow(clippy::too_many_arguments)]
+fn run_repeat(
+    progs: &Programs,
+    geom: &Geometry,
+    method: Method,
+    opts: &DecodeOpts,
+    pool: &mut KvPool,
+    prompts: &[Vec<i32>],
+    taus: &[f32],
+    buckets: &[usize],
+    scratch: &mut StepScratch,
+    gate: &mut Gate,
+) -> Result<(u64, u64)> {
+    let bs = prompts.len();
+    let (g_len, blk) = (geom.gen_len, opts.block_size);
+    let num_blocks = g_len / blk;
+    let pad_to = pad_of(buckets, bs);
+    let pre_pad = pad_of(buckets, 1);
+
+    let mut seqs: Vec<SequenceState> =
+        prompts.iter().map(|p| SequenceState::new(geom, p)).collect();
+
+    match method {
+        Method::Vanilla | Method::FastDllmPar => {
+            let policy = if method == Method::Vanilla {
+                bidirectional::Policy::TopM
+            } else {
+                bidirectional::Policy::Threshold
+            };
+            for b in 0..num_blocks {
+                let lo = b * blk;
+                let mut refs: Vec<&mut SequenceState> =
+                    seqs.iter_mut().collect();
+                gate.run(|| {
+                    bidirectional::machine_step(
+                        progs, geom, opts, policy, &mut refs, taus, lo, blk,
+                        pad_to, scratch,
+                    )
+                })?;
+            }
+        }
+        Method::DllmCache | Method::FastDllmDc => {
+            let variant = if method == Method::DllmCache {
+                cached_teacher::Variant::DllmCache
+            } else {
+                cached_teacher::Variant::DualCache
+            };
+            let slots: Vec<SlotId> =
+                (0..bs).map(|_| pool.alloc()).collect::<Result<_>>()?;
+            let mut ssr = usize::MAX; // force a refresh on the first pass
+            for b in 0..num_blocks {
+                let lo = b * blk;
+                let mut refs: Vec<&mut SequenceState> =
+                    seqs.iter_mut().collect();
+                ssr = gate.run(|| {
+                    cached_teacher::machine_step(
+                        progs, geom, opts, variant, pool, &mut refs, taus,
+                        &slots, ssr, lo, blk, pad_to, scratch,
+                    )
+                })?;
+            }
+            for s in slots {
+                pool.free(s);
+            }
+        }
+        Method::Cdlm => {
+            let mut slots: Vec<SlotId> = Vec::with_capacity(bs);
+            for seq in seqs.iter_mut() {
+                slots.push(cdlm::machine_prefill(
+                    progs, pool, seq, pre_pad, None, scratch,
+                )?);
+            }
+            for b in 0..num_blocks {
+                let lo = b * blk;
+                if seqs.iter().all(|s| s.done) {
+                    break;
+                }
+                {
+                    let mut refs: Vec<&mut SequenceState> =
+                        seqs.iter_mut().collect();
+                    gate.run(|| {
+                        cdlm::machine_step(
+                            progs, geom, pool, &mut refs, taus, &slots, lo,
+                            blk, pad_to, scratch,
+                        )
+                    })?;
+                }
+                // commit only for lanes continuing past the boundary,
+                // re-padded to the continuing-lane bucket (machine
+                // semantics)
+                if b + 1 < num_blocks {
+                    let mut items: Vec<(&mut SequenceState, SlotId)> = seqs
+                        .iter_mut()
+                        .zip(slots.iter().copied())
+                        .filter(|it| !it.0.done)
+                        .collect();
+                    if !items.is_empty() {
+                        let cpad = pad_of(buckets, items.len());
+                        gate.run(|| {
+                            cdlm::machine_commit(
+                                progs, geom, pool, &mut items, lo, blk,
+                                cpad, scratch,
+                            )
+                        })?;
+                    }
+                }
+            }
+            for s in slots {
+                pool.free(s);
+            }
+        }
+        Method::Ar => {
+            let mut slots: Vec<SlotId> = Vec::with_capacity(bs);
+            let mut cur = vec![0i32; bs];
+            for (r, seq) in seqs.iter_mut().enumerate() {
+                let (slot, tok) = ar::machine_prefill(
+                    progs, pool, seq, pre_pad, None, scratch,
+                )?;
+                slots.push(slot);
+                cur[r] = tok;
+            }
+            let mut pos = 0usize;
+            while pos < g_len {
+                if seqs.iter().all(|s| s.done) {
+                    break;
+                }
+                let mut refs: Vec<&mut SequenceState> =
+                    seqs.iter_mut().collect();
+                gate.run(|| {
+                    ar::machine_step(
+                        progs, geom, pool, &mut refs, &mut cur, &slots, pos,
+                        blk, pad_to, scratch,
+                    )
+                })?;
+                pos += blk;
+            }
+            for s in slots {
+                pool.free(s);
+            }
+        }
+    }
+
+    let (mut steps, mut tokens) = (0u64, 0u64);
+    for s in seqs {
+        let o = s.into_outcome();
+        steps += o.steps;
+        tokens += o.gen_len as u64;
+    }
+    Ok((steps, tokens))
+}
+
+/// Measure one (method, batch) cell: `repeats` full decodes sharing one
+/// [`StepScratch`] and one [`KvPool`], repeat 0 excluded as warm-up.
+/// The same synthetic prompts decode every repeat, so steady repeats
+/// are trace-identical and per-repeat ns/step is a clean latency
+/// sample.
+pub fn run_cell(
+    progs: &Programs,
+    geom: &Geometry,
+    buckets: &[usize],
+    method: Method,
+    batch: usize,
+    repeats: usize,
+    tau: f32,
+) -> Result<HotpathCell> {
+    anyhow::ensure!(batch >= 1, "batch must be >= 1");
+    anyhow::ensure!(
+        repeats >= 2,
+        "need >= 2 repeats: repeat 0 only warms the arena"
+    );
+    let mut opts = DecodeOpts::defaults(geom);
+    opts.tau_conf = tau;
+    anyhow::ensure!(
+        geom.gen_len % opts.block_size == 0,
+        "block size must divide gen_len"
+    );
+
+    let prompts: Vec<Vec<i32>> =
+        (0..batch).map(|lane| synth_prompt(geom, lane)).collect();
+    let taus = vec![tau; batch];
+    let mut pool = KvPool::new(
+        geom,
+        if method.uses_kv_cache() { batch } else { 0 },
+    );
+    let mut scratch = StepScratch::new();
+
+    let mut samples = Summary::new();
+    let (mut steps, mut tokens, mut gated_ns) = (0u64, 0u64, 0u64);
+    let (mut steady_allocs, mut warm_allocs) = (0u64, 0u64);
+    for rep in 0..repeats {
+        let mut gate = Gate::new();
+        let (s, t) = run_repeat(
+            progs, geom, method, &opts, &mut pool, &prompts, &taus, buckets,
+            &mut scratch, &mut gate,
+        )?;
+        if rep == 0 {
+            warm_allocs = gate.allocs;
+            continue;
+        }
+        steps += s;
+        tokens += t;
+        gated_ns += gate.ns;
+        steady_allocs += gate.allocs;
+        samples.push(gate.ns as f64 / s.max(1) as f64);
+    }
+    let gated_s = gated_ns as f64 / 1e9;
+    Ok(HotpathCell {
+        method,
+        batch,
+        steady_repeats: repeats - 1,
+        steps,
+        tokens,
+        gated_s,
+        ns_per_step_p50: samples.percentile(50.0),
+        ns_per_step_p95: samples.percentile(95.0),
+        tokens_per_s: tokens as f64 / gated_s.max(1e-12),
+        steady_allocs,
+        warm_allocs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::methods::ALL_METHODS;
+    use crate::runtime::{ModelWeights, Programs, Runtime};
+
+    // NOTE: the library test binary does not install the counting
+    // allocator, so steady_allocs reads 0 here regardless of behavior;
+    // tests/hot_path.rs (which installs it) owns the allocation
+    // assertions. These tests pin the driver itself.
+
+    fn sorted_buckets(rt: &Runtime) -> Vec<usize> {
+        let mut b = rt.manifest.buckets.clone();
+        b.sort_unstable();
+        b
+    }
+
+    #[test]
+    fn every_method_completes_and_accounts() {
+        let rt = Runtime::reference(0x5EED_0042);
+        let geom = rt.manifest.geometry.clone();
+        let buckets = sorted_buckets(&rt);
+        for m in ALL_METHODS {
+            let weights =
+                ModelWeights::load(&rt.manifest, &m.weights_for("dream"))
+                    .expect("weights");
+            let progs = Programs::new(&rt, &weights);
+            let cell = run_cell(&progs, &geom, &buckets, m, 2, 2, 0.9)
+                .expect("cell");
+            assert!(cell.steps > 0, "{}: no steps recorded", m.name());
+            assert!(cell.tokens > 0, "{}: no tokens recorded", m.name());
+            assert!(cell.gated_s > 0.0, "{}: empty gated window", m.name());
+            assert_eq!(cell.steady_repeats, 1);
+        }
+    }
+
+    #[test]
+    fn steady_repeats_are_trace_deterministic() {
+        // fresh sequence state per repeat + deterministic backend =>
+        // identical steps/tokens across cells and across repeats
+        let rt = Runtime::reference(0x5EED_0042);
+        let geom = rt.manifest.geometry.clone();
+        let buckets = sorted_buckets(&rt);
+        let m = Method::Cdlm;
+        let weights =
+            ModelWeights::load(&rt.manifest, &m.weights_for("dream"))
+                .expect("weights");
+        let progs = Programs::new(&rt, &weights);
+        let c3 = run_cell(&progs, &geom, &buckets, m, 2, 4, 0.9).expect("c3");
+        let c1 = run_cell(&progs, &geom, &buckets, m, 2, 2, 0.9).expect("c1");
+        assert_eq!(c3.steps % c3.steady_repeats as u64, 0);
+        assert_eq!(c3.steps / c3.steady_repeats as u64, c1.steps);
+        assert_eq!(c3.tokens / c3.steady_repeats as u64, c1.tokens);
+    }
+
+    #[test]
+    fn mode_mapping_matches_cache_columns() {
+        assert_eq!(decode_mode_for(Method::Ar, 8), DecodeMode::Ar);
+        assert_eq!(
+            decode_mode_for(Method::Vanilla, 8),
+            DecodeMode::VanillaDlm
+        );
+        assert_eq!(
+            decode_mode_for(Method::FastDllmPar, 8),
+            DecodeMode::VanillaDlm
+        );
+        for m in [Method::DllmCache, Method::FastDllmDc, Method::Cdlm] {
+            assert_eq!(
+                decode_mode_for(m, 8),
+                DecodeMode::BlockDlm { block: 8 }
+            );
+        }
+    }
+
+    #[test]
+    fn reference_arch_mirrors_geometry() {
+        let rt = Runtime::reference(1);
+        let g = rt.manifest.geometry.clone();
+        let a = reference_arch(&g);
+        assert_eq!(a.n_layers, g.n_layers);
+        assert_eq!(a.n_q_heads, g.n_heads);
+        assert_eq!(a.n_kv_heads, g.n_heads);
+        assert_eq!(a.vocab, g.vocab_size);
+        assert!(a.params() > 0.0);
+    }
+
+    #[test]
+    fn synth_prompts_are_full_length_valid_ids() {
+        let rt = Runtime::reference(1);
+        let g = rt.manifest.geometry.clone();
+        for lane in 0..4 {
+            let p = synth_prompt(&g, lane);
+            assert_eq!(p.len(), g.prompt_len);
+            assert!(p.iter().all(|&t| t >= 4 && (t as usize) < g.vocab_size));
+        }
+        assert_ne!(synth_prompt(&g, 0), synth_prompt(&g, 1));
+    }
+}

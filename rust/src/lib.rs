@@ -33,6 +33,7 @@
 pub mod analysis;
 pub mod bench_support;
 pub mod coordinator;
+pub mod hotpath;
 pub mod runtime;
 pub mod server;
 pub mod tokenizer;

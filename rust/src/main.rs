@@ -11,7 +11,9 @@
 //!              stream drives streaming clients + mid-stream cancels
 //!              -> BENCH_stream.json; --scenario chaos replays a trace
 //!              under a seeded fault plan and gates the recovery
-//!              invariants -> BENCH_chaos.json
+//!              invariants -> BENCH_chaos.json; --scenario hotpath
+//!              microbenches the steady-state decode step and
+//!              hard-gates it allocation-free -> BENCH_hotpath.json
 //!   analysis   print Fig. 4 arithmetic-intensity / Fig. 9 roofline
 //!   info       artifacts manifest summary
 
@@ -29,6 +31,16 @@ use cdlm::util::json::Json;
 use cdlm::util::stats::Summary;
 use cdlm::workload::{self, Family};
 use cdlm::{analysis, artifacts_dir};
+
+/// Count heap acquisitions so `bench --scenario hotpath` can hard-gate
+/// allocation-free steady-state decode steps. Pure pass-through to the
+/// system allocator plus one relaxed counter bump per acquisition —
+/// negligible for every other subcommand, so it stays installed
+/// unconditionally (the gate refuses to run against an uncounted
+/// binary; see `util::alloc_count`).
+#[global_allocator]
+static COUNTING_ALLOC: cdlm::util::alloc_count::CountingAlloc =
+    cdlm::util::alloc_count::CountingAlloc;
 
 fn main() {
     let args = Args::from_env();
@@ -67,6 +79,7 @@ fn print_help() {
          \x20 bench      --scenario stream --method cdlm --n 16 --arrival-ms 2 --cancel-every 4 --cancel-after-blocks 1 --out BENCH_stream.json\n\
          \x20 bench      --scenario shard --method cdlm --n 24 --distinct 6 --replicas 4 --arrival-ms 2 --out BENCH_shard.json\n\
          \x20 bench      --scenario chaos --method cdlm --n 24 --distinct 6 --replicas 4 --arrival-ms 2 [--fault-seed N | --fault-spec SPEC] --out BENCH_chaos.json\n\
+         \x20 bench      --scenario hotpath --methods all --batches 1,4 --repeats 6 --out BENCH_hotpath.json  (hard-gates 0 allocs/steady step)\n\
          \x20 analysis   [--fig 4|9]\n\
          \x20 info\n"
     );
@@ -252,6 +265,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         "stream" => return cmd_bench_stream(args),
         "shard" => return cmd_bench_shard(args),
         "chaos" => return cmd_bench_chaos(args),
+        "hotpath" => return cmd_bench_hotpath(args),
         _ => {}
     }
     let n = args.get_usize("n", 16);
@@ -1528,6 +1542,182 @@ fn cmd_bench_stream(args: &Args) -> anyhow::Result<()> {
     ]);
     std::fs::write(&out_path, doc.to_string())?;
     println!("results -> {out_path}");
+    Ok(())
+}
+
+/// Steady-state decode-step microbench (`--scenario hotpath`): drives
+/// each method's block-step-machine policy functions directly through
+/// `cdlm::hotpath`, measuring gated ns/step + tokens/s and counting
+/// heap acquisitions inside the gated windows with this binary's
+/// counting allocator. Emits `BENCH_hotpath.json` (schema
+/// `cdlm.bench.hotpath/v1`), writing the artifact *before* gating so a
+/// violation still leaves the evidence on disk, then hard-fails unless
+/// every steady-state cell performed zero allocations. Latency fields
+/// are advisory trend data — only the allocation count gates.
+fn cmd_bench_hotpath(args: &Args) -> anyhow::Result<()> {
+    use analysis::intensity::{IntensityModel, Workload};
+    use analysis::roofline::A100;
+    use cdlm::hotpath;
+    use cdlm::runtime::{ModelWeights, Programs};
+    use cdlm::util::alloc_count;
+
+    anyhow::ensure!(
+        alloc_count::counting_enabled(),
+        "counting allocator is not installed in this binary; the \
+         allocation gate would read zero vacuously"
+    );
+
+    let backbone = args.get_or("backbone", "dream").to_string();
+    let out_path = args.get_or("out", "BENCH_hotpath.json").to_string();
+    let repeats = args.get_usize("repeats", 6).max(2);
+    let tau = args.get_f64("tau", 0.9) as f32;
+    let methods: Vec<Method> = match args.get("methods") {
+        None | Some("all") => ALL_METHODS.to_vec(),
+        Some(s) => s.split(',').filter_map(Method::from_name).collect(),
+    };
+    anyhow::ensure!(!methods.is_empty(), "no valid methods selected");
+    let batches: Vec<usize> = args
+        .get("batches")
+        .map(|s| {
+            s.split(',')
+                .filter_map(|x| x.parse().ok())
+                .filter(|&b| b > 0)
+                .collect()
+        })
+        // 1 and 4 are both exported buckets: the gate covers the
+        // single-lane and padded-cohort shapes without chunk splitting
+        .unwrap_or_else(|| vec![1, 4]);
+    anyhow::ensure!(!batches.is_empty(), "no valid batch sizes selected");
+    let max_bs = *batches.iter().max().expect("batches nonempty");
+
+    let core = ServingCore::load(&artifacts_dir(), max_bs.max(4))?;
+    let geom = core.rt.manifest.geometry.clone();
+    let mut buckets = core.rt.manifest.buckets.clone();
+    buckets.sort_unstable();
+
+    // analytic context: the decode schedule's FLOPs/bytes per step in
+    // the §5.4 intensity model, evaluated at the reference geometry
+    let model = IntensityModel::new(
+        hotpath::reference_arch(&geom),
+        Workload { prompt_len: geom.prompt_len, gen_len: geom.gen_len },
+    );
+
+    println!(
+        "{:<14} {:>6} {:>14} {:>14} {:>12} {:>12} {:>12}",
+        "method", "batch", "ns/step p50", "ns/step p95", "tokens/s",
+        "allocs", "model KB/st"
+    );
+    let mut rows = Vec::new();
+    let mut violations: Vec<String> = Vec::new();
+    for m in &methods {
+        let weights =
+            ModelWeights::load(&core.rt.manifest, &m.weights_for(&backbone))?;
+        weights.upload(&core.rt)?;
+        let progs = Programs::new(&core.rt, &weights);
+        for &bs in &batches {
+            let cell = hotpath::run_cell(
+                &progs, &geom, &buckets, *m, bs, repeats, tau,
+            )?;
+            let mode = hotpath::decode_mode_for(*m, geom.block_size);
+            let cost = model.step_cost(mode, bs);
+            let point = A100.simulate(cost);
+            println!(
+                "{:<14} {:>6} {:>14.0} {:>14.0} {:>12.1} {:>12} {:>12.1}",
+                m.name(),
+                bs,
+                cell.ns_per_step_p50,
+                cell.ns_per_step_p95,
+                cell.tokens_per_s,
+                cell.steady_allocs,
+                cost.bytes / 1e3,
+            );
+            if cell.steady_allocs > 0 {
+                violations.push(format!(
+                    "{} bs={}: {} heap allocations across {} steady-state \
+                     steps (want 0)",
+                    m.name(),
+                    bs,
+                    cell.steady_allocs,
+                    cell.steps
+                ));
+            }
+            rows.push(Json::obj(vec![
+                ("method", Json::str(m.name())),
+                ("batch", Json::num(bs as f64)),
+                ("steady_repeats", Json::num(cell.steady_repeats as f64)),
+                ("steps", Json::num(cell.steps as f64)),
+                ("tokens", Json::num(cell.tokens as f64)),
+                ("gated_s", Json::num(cell.gated_s)),
+                ("ns_per_step_p50", Json::num(cell.ns_per_step_p50)),
+                ("ns_per_step_p95", Json::num(cell.ns_per_step_p95)),
+                ("tokens_per_s", Json::num(cell.tokens_per_s)),
+                ("allocs_per_step", Json::num(cell.allocs_per_step())),
+                ("steady_allocs", Json::num(cell.steady_allocs as f64)),
+                ("warm_allocs", Json::num(cell.warm_allocs as f64)),
+                (
+                    "analytic",
+                    Json::obj(vec![
+                        ("mode", Json::str(mode.label())),
+                        ("flops_per_step", Json::num(cost.flops)),
+                        ("bytes_per_step", Json::num(cost.bytes)),
+                        ("ai_flop_per_byte", Json::num(cost.ai())),
+                        (
+                            "a100_step_latency_s",
+                            Json::num(point.step_latency_s),
+                        ),
+                        ("memory_bound", Json::Bool(point.memory_bound)),
+                    ]),
+                ),
+            ]));
+        }
+    }
+
+    let doc = Json::obj(vec![
+        ("schema", Json::str("cdlm.bench.hotpath/v1")),
+        ("backend", Json::str(core.rt.backend_name())),
+        ("backbone", Json::str(backbone.as_str())),
+        ("tau", Json::num(tau as f64)),
+        ("repeats", Json::num(repeats as f64)),
+        (
+            "geometry",
+            Json::obj(vec![
+                ("prompt_len", Json::num(geom.prompt_len as f64)),
+                ("gen_len", Json::num(geom.gen_len as f64)),
+                ("block_size", Json::num(geom.block_size as f64)),
+            ]),
+        ),
+        (
+            "alloc_gate",
+            Json::str(
+                "steady-state gated windows must perform 0 heap \
+                 allocations; latency fields are advisory trend data",
+            ),
+        ),
+        (
+            "roofline",
+            Json::obj(vec![
+                ("device", Json::str("A100-SXM4-80GB")),
+                ("ridge_flop_per_byte", Json::num(A100.ridge())),
+                ("peak_tflops", Json::num(A100.peak_flops / 1e12)),
+                ("bandwidth_gbps", Json::num(A100.bandwidth / 1e9)),
+            ]),
+        ),
+        ("results", Json::Arr(rows)),
+    ]);
+    // artifact first, gate second: a violation must still leave the
+    // measurement on disk for the CI upload (chaos-gate convention)
+    std::fs::write(&out_path, doc.to_string())?;
+    println!("wrote {out_path}");
+    anyhow::ensure!(
+        violations.is_empty(),
+        "hotpath allocation gate failed:\n  {}",
+        violations.join("\n  ")
+    );
+    println!(
+        "hotpath gate: all steady-state decode steps allocation-free \
+         ({} cells)",
+        methods.len() * batches.len()
+    );
     Ok(())
 }
 

@@ -1,0 +1,58 @@
+//! Step arena: reusable per-machine scratch for the decode hot path.
+//!
+//! Every program output (and every padded program input the engines
+//! assemble) lives in one [`StepArena`] owned by the decode machine
+//! (`BatchState`) or by a closed-batch engine invocation. Buffers are
+//! sized on first use (admission / the first step of a batch shape) and
+//! reused on every subsequent `step_cycle`: `TensorF32::reuse` keeps
+//! the allocation when the shape is unchanged and zero-fills only on a
+//! shape change, so steady-state decode steps perform **zero** heap
+//! allocations — the property `cdlm bench --scenario hotpath` gates
+//! with a counting global allocator.
+//!
+//! Correctness under reuse rests on the overwrite contract documented
+//! in [`crate::runtime::programs`]: for a fixed shape, producers
+//! rewrite every element they ever set, so dirty buffers are
+//! indistinguishable from fresh ones; `tests/hot_path.rs` pins this by
+//! decoding through a deliberately dirty arena across different batch
+//! shapes and comparing traces against a fresh machine.
+
+use super::programs::{
+    ArPrefillOut, ArStepOut, BlockStepOut, DenoiseOut, FullCacheOut,
+    PrefillOut,
+};
+use super::tensor::TensorI32;
+
+/// Reusable decode-step scratch: one instance per decode machine (or
+/// per closed-batch engine call), never shared across threads.
+#[derive(Default)]
+pub struct StepArena {
+    /// `teacher_denoise` output (vanilla / Fast-dLLM parallel).
+    pub denoise: DenoiseOut,
+    /// `teacher_full_cache` output (dLLM-Cache refresh steps).
+    pub full_cache: FullCacheOut,
+    /// Block-step output (`student_block_step` / `teacher_block_approx`
+    /// / `ar_verify`) — one per arena; engines that need two live block
+    /// outputs at once (speculative decoding) use two arenas.
+    pub block: BlockStepOut,
+    /// `student_prefill` output (admission).
+    pub prefill: PrefillOut,
+    /// `ar_prefill` output (admission).
+    pub ar_prefill: ArPrefillOut,
+    /// `ar_step` output.
+    pub ar_step: ArStepOut,
+    /// Padded full-sequence ids `[pad, S]` (full-seq engines).
+    pub ids: TensorI32,
+    /// Padded block ids `[pad, B]` (block engines).
+    pub blk: TensorI32,
+    /// Padded current-token ids `[pad]` (AR engine).
+    pub tok: TensorI32,
+    /// Padded per-lane valid-from offsets `[pad]`.
+    pub valid_from: TensorI32,
+}
+
+impl StepArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}

@@ -70,13 +70,19 @@ pub trait Backend: Send + Sync {
     }
 
     /// One bidirectional refinement pass over the full padded sequence.
+    ///
+    /// All program methods are writer-style: the caller owns the output
+    /// struct (see [`crate::runtime::StepArena`]) and the backend fills
+    /// it in place, reusing its buffers. Steady-state calls with stable
+    /// shapes must not allocate.
     fn teacher_denoise(
         &self,
         w: &ModelWeights,
         bs: usize,
         ids: &TensorI32,        // [bs, S]
         valid_from: &TensorI32, // [bs]
-    ) -> Result<DenoiseOut>;
+        out: &mut DenoiseOut,
+    ) -> Result<()>;
 
     /// Full pass that also returns the KV stacks (approx-cache refresh).
     fn teacher_full_cache(
@@ -85,7 +91,8 @@ pub trait Backend: Send + Sync {
         bs: usize,
         ids: &TensorI32,
         valid_from: &TensorI32,
-    ) -> Result<FullCacheOut>;
+        out: &mut FullCacheOut,
+    ) -> Result<()>;
 
     /// Block-scoped teacher step against a stale full-sequence cache
     /// (the view's valid prefix spans the whole sequence).
@@ -98,7 +105,8 @@ pub trait Backend: Send + Sync {
         valid_from: &TensorI32,
         blk_ids: &TensorI32, // [bs, B]
         pos0: i32,
-    ) -> Result<BlockStepOut>;
+        out: &mut BlockStepOut,
+    ) -> Result<()>;
 
     /// Student prompt prefill: exact prompt KV.
     fn student_prefill(
@@ -107,7 +115,8 @@ pub trait Backend: Send + Sync {
         bs: usize,
         prompt_ids: &TensorI32, // [bs, P]
         valid_from: &TensorI32,
-    ) -> Result<PrefillOut>;
+        out: &mut PrefillOut,
+    ) -> Result<()>;
 
     /// Student block refinement step under the exact cache; the view's
     /// `cache_len` is the committed-prefix length.
@@ -120,7 +129,8 @@ pub trait Backend: Send + Sync {
         valid_from: &TensorI32,
         blk_ids: &TensorI32,
         pos0: i32,
-    ) -> Result<BlockStepOut>;
+        out: &mut BlockStepOut,
+    ) -> Result<()>;
 
     /// Parallel AR verification of a drafted block (Appendix C).
     fn ar_verify(
@@ -132,7 +142,8 @@ pub trait Backend: Send + Sync {
         valid_from: &TensorI32,
         blk_ids: &TensorI32,
         pos0: i32,
-    ) -> Result<BlockStepOut>;
+        out: &mut BlockStepOut,
+    ) -> Result<()>;
 
     /// Causal prompt prefill + first-token logits.
     fn ar_prefill(
@@ -141,7 +152,8 @@ pub trait Backend: Send + Sync {
         bs: usize,
         prompt_ids: &TensorI32,
         valid_from: &TensorI32,
-    ) -> Result<ArPrefillOut>;
+        out: &mut ArPrefillOut,
+    ) -> Result<()>;
 
     /// One causal decode step with an exact token-level cache.
     fn ar_step(
@@ -151,7 +163,8 @@ pub trait Backend: Send + Sync {
         kv: &KvView<'_>,
         valid_from: &TensorI32,
         tok_ids: &TensorI32, // [bs]
-    ) -> Result<ArStepOut>;
+        out: &mut ArStepOut,
+    ) -> Result<()>;
 }
 
 /// The runtime a `ServingCore` owns: a manifest plus the backend that

@@ -17,13 +17,18 @@
 //!   slot at their natural offsets.
 //!
 //! Creating a view copies no cache data either way: a view is the two
-//! slab borrows plus the per-lane segment tables. Engines hand views
-//! straight to the backend every program call; backends that execute on
-//! the host (the reference backend) read individual positions through
-//! the accessors, and backends that need a device layout (PJRT)
-//! materialize the batch-major `[L, bs, H, S, dh]` buffer behind the
-//! seam with [`KvView::to_batch_major`] — the one place a full copy
-//! still exists, and only for that backend.
+//! slab borrows plus the per-lane lane table. For private-slot batches
+//! up to [`INLINE_LANES`] lanes the table is an inline base-offset
+//! array, so building a view — one per program call on the decode hot
+//! path — performs **zero** heap allocations; chained or oversized
+//! batches fall back to a heap-backed segment table (the prefix-cache
+//! path, off the hotpath gate and documented as such). Engines hand
+//! views straight to the backend every program call; backends that
+//! execute on the host (the reference backend) read individual
+//! positions through the accessors, and backends that need a device
+//! layout (PJRT) materialize the batch-major `[L, bs, H, S, dh]` buffer
+//! behind the seam with [`KvView::to_batch_major`] — the one place a
+//! full copy still exists, and only for that backend.
 //!
 //! `cache_len` is the lockstep valid-prefix length: positions
 //! `>= cache_len` are stale slab content (slots are not zeroed on free)
@@ -77,9 +82,7 @@ impl KvSeg {
     }
 }
 
-/// One lane's segment run. Plain single-slot lanes (every closed-batch
-/// engine) are stored inline so building a view of them allocates
-/// nothing per lane, exactly like the pre-refactor bases vector.
+/// One lane's segment run (heap-backed lane table only).
 enum LaneMap {
     One(KvSeg),
     Many(Vec<KvSeg>),
@@ -95,13 +98,26 @@ impl LaneMap {
     }
 }
 
+/// Largest private-slot batch whose lane table stays inline (no heap
+/// allocation per view). Serving buckets top out at 4 lanes and eval
+/// closed batches at 32 slots but ≤16 lanes per cohort; bigger batches
+/// still work through the heap fallback.
+pub const INLINE_LANES: usize = 16;
+
+/// Per-view lane table: inline whole-slot bases on the hot path, a
+/// heap-backed segment run everywhere else.
+enum LaneTable {
+    Plain { bases: [usize; INLINE_LANES], bs: usize },
+    Segmented(Vec<LaneMap>),
+}
+
 /// Borrowed view of a batch's KV caches: segmented lane maps over the
 /// slabs, valid-prefix bounded. See the module docs for the layout
 /// contract.
 pub struct KvView<'a> {
     k: &'a [f32],
     v: &'a [f32],
-    lanes: Vec<LaneMap>,
+    lanes: LaneTable,
     dims: KvDims,
     cache_len: usize,
 }
@@ -109,17 +125,38 @@ pub struct KvView<'a> {
 impl<'a> KvView<'a> {
     /// Build a view over classic one-slot-per-lane layouts.
     /// `bases[lane]` is the element offset of that lane's `[L, H, S,
-    /// dh]` slot; every slot must fit inside both slabs.
+    /// dh]` slot; every slot must fit inside both slabs. Allocation-free
+    /// for batches up to [`INLINE_LANES`] lanes.
     pub fn new(
         k: &'a [f32],
         v: &'a [f32],
-        bases: Vec<usize>,
+        bases: &[usize],
         dims: KvDims,
         cache_len: usize,
     ) -> KvView<'a> {
+        debug_assert!(cache_len <= dims.seq_len, "cache_len beyond slot");
+        if bases.len() <= INLINE_LANES {
+            let mut inline = [0usize; INLINE_LANES];
+            inline[..bases.len()].copy_from_slice(bases);
+            #[cfg(debug_assertions)]
+            for &b in bases {
+                debug_assert!(
+                    b + dims.slot_elems() <= k.len()
+                        && b + dims.slot_elems() <= v.len(),
+                    "slot outside the slabs"
+                );
+            }
+            return KvView {
+                k,
+                v,
+                lanes: LaneTable::Plain { bases: inline, bs: bases.len() },
+                dims,
+                cache_len,
+            };
+        }
         let lanes = bases
-            .into_iter()
-            .map(|b| LaneMap::One(KvSeg::full_slot(b, dims.seq_len)))
+            .iter()
+            .map(|&b| LaneMap::One(KvSeg::full_slot(b, dims.seq_len)))
             .collect();
         Self::build(k, v, lanes, dims, cache_len)
     }
@@ -175,12 +212,15 @@ impl<'a> KvView<'a> {
             }
             debug_assert!(next >= cache_len, "segments do not cover cache_len");
         }
-        KvView { k, v, lanes, dims, cache_len }
+        KvView { k, v, lanes: LaneTable::Segmented(lanes), dims, cache_len }
     }
 
     /// Number of lanes in the view.
     pub fn bs(&self) -> usize {
-        self.lanes.len()
+        match &self.lanes {
+            LaneTable::Plain { bs, .. } => *bs,
+            LaneTable::Segmented(lanes) => lanes.len(),
+        }
     }
 
     /// Valid-prefix length: positions `< cache_len` are committed.
@@ -196,12 +236,20 @@ impl<'a> KvView<'a> {
     fn idx(&self, lane: usize, l: usize, h: usize, pos: usize, d: usize) -> usize {
         debug_assert!(pos < self.cache_len, "read past valid prefix");
         let g = &self.dims;
-        let segs = self.lanes[lane].segs();
-        // single-slot lanes keep the pre-refactor pure offset
-        // arithmetic; multi-segment (chained) lanes guess the segment
-        // from the uniform page length — exact for pool-built runs
-        // (equal-length pages then the tail) — and fall back to a scan
-        // for arbitrary layouts
+        let segs = match &self.lanes {
+            LaneTable::Plain { bases, bs } => {
+                debug_assert!(lane < *bs, "lane out of range");
+                // whole-slot lanes: pure offset arithmetic, no table walk
+                return bases[lane]
+                    + ((l * g.n_heads + h) * g.seq_len + pos) * g.d_head
+                    + d;
+            }
+            LaneTable::Segmented(lanes) => lanes[lane].segs(),
+        };
+        // multi-segment (chained) lanes guess the segment from the
+        // uniform page length — exact for pool-built runs (equal-length
+        // pages then the tail) — and fall back to a scan for arbitrary
+        // layouts
         let seg = if segs.len() == 1 {
             &segs[0]
         } else {
@@ -242,24 +290,34 @@ impl<'a> KvView<'a> {
     pub fn to_batch_major(&self) -> (TensorF32, TensorF32) {
         let g = &self.dims;
         let (l_n, h_n, s_n, dh) = (g.n_layers, g.n_heads, g.seq_len, g.d_head);
-        let bs = self.lanes.len();
+        let bs = self.bs();
         let mut k = TensorF32::zeros(&[l_n, bs, h_n, s_n, dh]);
         let mut v = TensorF32::zeros(&[l_n, bs, h_n, s_n, dh]);
-        for (lane, map) in self.lanes.iter().enumerate() {
-            for seg in map.segs() {
-                let span = seg.len * dh;
-                for l in 0..l_n {
-                    for h in 0..h_n {
-                        let src = seg.base
-                            + ((l * h_n + h) * seg.region_len + seg.offset)
-                                * dh;
-                        let dst = (((l * bs + lane) * h_n + h) * s_n
-                            + seg.start)
-                            * dh;
-                        k.data[dst..dst + span]
-                            .copy_from_slice(&self.k[src..src + span]);
-                        v.data[dst..dst + span]
-                            .copy_from_slice(&self.v[src..src + span]);
+        let mut copy_seg = |lane: usize, seg: &KvSeg| {
+            let span = seg.len * dh;
+            for l in 0..l_n {
+                for h in 0..h_n {
+                    let src = seg.base
+                        + ((l * h_n + h) * seg.region_len + seg.offset) * dh;
+                    let dst =
+                        (((l * bs + lane) * h_n + h) * s_n + seg.start) * dh;
+                    k.data[dst..dst + span]
+                        .copy_from_slice(&self.k[src..src + span]);
+                    v.data[dst..dst + span]
+                        .copy_from_slice(&self.v[src..src + span]);
+                }
+            }
+        };
+        match &self.lanes {
+            LaneTable::Plain { bases, bs } => {
+                for (lane, &b) in bases[..*bs].iter().enumerate() {
+                    copy_seg(lane, &KvSeg::full_slot(b, s_n));
+                }
+            }
+            LaneTable::Segmented(lanes) => {
+                for (lane, map) in lanes.iter().enumerate() {
+                    for seg in map.segs() {
+                        copy_seg(lane, seg);
                     }
                 }
             }
@@ -285,13 +343,29 @@ mod tests {
         k.extend((0..n).map(|i| 1000.0 + i as f32));
         let v: Vec<f32> = k.iter().map(|x| x + 0.5).collect();
         // lanes swapped relative to slot order
-        let view = KvView::new(&k, &v, vec![n, 0], d, 4);
+        let view = KvView::new(&k, &v, &[n, 0], d, 4);
         assert_eq!(view.bs(), 2);
         // lane 0 reads slot 1's content
         assert_eq!(view.k_at(0, 0, 0, 0, 0), 1000.0);
         // lane 1, layer 1, head 1, pos 3, feat 2 = last element of slot 0
         assert_eq!(view.k_at(1, 1, 1, 3, 2), (n - 1) as f32);
         assert_eq!(view.v_at(1, 0, 0, 0, 0), 0.5);
+    }
+
+    #[test]
+    fn oversized_plain_batches_fall_back_to_segment_table() {
+        let d = dims();
+        let n = d.slot_elems();
+        let lanes = INLINE_LANES + 3;
+        let k: Vec<f32> = (0..lanes * n).map(|i| i as f32).collect();
+        let v = k.clone();
+        let bases: Vec<usize> = (0..lanes).map(|i| i * n).collect();
+        let view = KvView::new(&k, &v, &bases, d, 4);
+        assert_eq!(view.bs(), lanes);
+        for lane in 0..lanes {
+            assert_eq!(view.k_at(lane, 0, 0, 0, 0), (lane * n) as f32);
+            assert_eq!(view.k_at(lane, 1, 1, 3, 2), (lane * n + n - 1) as f32);
+        }
     }
 
     #[test]
@@ -373,7 +447,7 @@ mod tests {
         let d = dims();
         let k = vec![0.0; d.slot_elems()];
         let v = vec![0.0; d.slot_elems()];
-        let view = KvView::new(&k, &v, vec![0], d, 2);
+        let view = KvView::new(&k, &v, &[0], d, 2);
         view.k_at(0, 0, 0, 2, 0);
     }
 

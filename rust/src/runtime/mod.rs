@@ -9,6 +9,7 @@
 //! contract, and when it is absent the built-in reference manifest
 //! stands in.
 
+pub mod arena;
 pub mod backend;
 pub mod kv;
 pub mod manifest;
@@ -18,11 +19,12 @@ pub mod reference;
 pub mod tensor;
 pub mod weights;
 
+pub use arena::StepArena;
 pub use backend::{Backend, Runtime};
-pub use kv::{KvDims, KvSeg, KvView};
+pub use kv::{KvDims, KvSeg, KvView, INLINE_LANES};
 pub use manifest::{Geometry, Manifest};
 pub use pjrt::ProgramKey;
-pub use programs::Programs;
+pub use programs::{ProposalLogits, Programs};
 pub use reference::ReferenceBackend;
 pub use tensor::{TensorF32, TensorI32};
 pub use weights::ModelWeights;

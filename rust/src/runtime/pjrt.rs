@@ -281,16 +281,21 @@ mod client {
             bs: usize,
             ids: &TensorI32,
             valid_from: &TensorI32,
-        ) -> Result<DenoiseOut> {
+            out: &mut DenoiseOut,
+        ) -> Result<()> {
             let key = ProgramKey::new("teacher_denoise", bs, None);
             let a = ids.to_literal()?;
             let b = valid_from.to_literal()?;
-            let out = self.run(w, &key, &[&a, &b])?;
-            Ok(DenoiseOut {
-                logits: TensorF32::from_literal(&out[0])?,
-                tok: TensorI32::from_literal(&out[1])?,
-                conf: TensorF32::from_literal(&out[2])?,
-            })
+            let res = self.run(w, &key, &[&a, &b])?;
+            out.tok = TensorI32::from_literal(&res[1])?;
+            out.conf = TensorF32::from_literal(&res[2])?;
+            let dense = TensorF32::from_literal(&res[0])?;
+            out.logits.set_from_dense(
+                &dense.data,
+                &out.tok.data,
+                self.manifest.geometry.vocab_size,
+            );
+            Ok(())
         }
 
         fn teacher_full_cache(
@@ -299,18 +304,23 @@ mod client {
             bs: usize,
             ids: &TensorI32,
             valid_from: &TensorI32,
-        ) -> Result<FullCacheOut> {
+            out: &mut FullCacheOut,
+        ) -> Result<()> {
             let key = ProgramKey::new("teacher_full_cache", bs, None);
             let a = ids.to_literal()?;
             let b = valid_from.to_literal()?;
-            let out = self.run(w, &key, &[&a, &b])?;
-            Ok(FullCacheOut {
-                logits: TensorF32::from_literal(&out[0])?,
-                tok: TensorI32::from_literal(&out[1])?,
-                conf: TensorF32::from_literal(&out[2])?,
-                k: TensorF32::from_literal(&out[3])?,
-                v: TensorF32::from_literal(&out[4])?,
-            })
+            let res = self.run(w, &key, &[&a, &b])?;
+            out.tok = TensorI32::from_literal(&res[1])?;
+            out.conf = TensorF32::from_literal(&res[2])?;
+            out.k = TensorF32::from_literal(&res[3])?;
+            out.v = TensorF32::from_literal(&res[4])?;
+            let dense = TensorF32::from_literal(&res[0])?;
+            out.logits.set_from_dense(
+                &dense.data,
+                &out.tok.data,
+                self.manifest.geometry.vocab_size,
+            );
+            Ok(())
         }
 
         fn teacher_block_approx(
@@ -322,7 +332,8 @@ mod client {
             valid_from: &TensorI32,
             blk_ids: &TensorI32,
             pos0: i32,
-        ) -> Result<BlockStepOut> {
+            out: &mut BlockStepOut,
+        ) -> Result<()> {
             let key = ProgramKey::new("teacher_block_approx", bs, Some(block));
             let (k_cache, v_cache) = kv.to_batch_major();
             let kc = k_cache.to_literal()?;
@@ -330,8 +341,8 @@ mod client {
             let vf = valid_from.to_literal()?;
             let blk = blk_ids.to_literal()?;
             let p0 = scalar_i32(pos0);
-            let out = self.run(w, &key, &[&kc, &vc, &vf, &blk, &p0])?;
-            parse_block_step(out)
+            let res = self.run(w, &key, &[&kc, &vc, &vf, &blk, &p0])?;
+            self.parse_block_step(res, out)
         }
 
         fn student_prefill(
@@ -340,15 +351,15 @@ mod client {
             bs: usize,
             prompt_ids: &TensorI32,
             valid_from: &TensorI32,
-        ) -> Result<PrefillOut> {
+            out: &mut PrefillOut,
+        ) -> Result<()> {
             let key = ProgramKey::new("student_prefill", bs, None);
             let a = prompt_ids.to_literal()?;
             let b = valid_from.to_literal()?;
-            let out = self.run(w, &key, &[&a, &b])?;
-            Ok(PrefillOut {
-                k: TensorF32::from_literal(&out[0])?,
-                v: TensorF32::from_literal(&out[1])?,
-            })
+            let res = self.run(w, &key, &[&a, &b])?;
+            out.k = TensorF32::from_literal(&res[0])?;
+            out.v = TensorF32::from_literal(&res[1])?;
+            Ok(())
         }
 
         fn student_block_step(
@@ -360,7 +371,8 @@ mod client {
             valid_from: &TensorI32,
             blk_ids: &TensorI32,
             pos0: i32,
-        ) -> Result<BlockStepOut> {
+            out: &mut BlockStepOut,
+        ) -> Result<()> {
             let key = ProgramKey::new("student_block_step", bs, Some(block));
             let (k_cache, v_cache) = kv.to_batch_major();
             let kc = k_cache.to_literal()?;
@@ -369,8 +381,8 @@ mod client {
             let vf = valid_from.to_literal()?;
             let blk = blk_ids.to_literal()?;
             let p0 = scalar_i32(pos0);
-            let out = self.run(w, &key, &[&kc, &vc, &cl, &vf, &blk, &p0])?;
-            parse_block_step(out)
+            let res = self.run(w, &key, &[&kc, &vc, &cl, &vf, &blk, &p0])?;
+            self.parse_block_step(res, out)
         }
 
         fn ar_verify(
@@ -382,7 +394,8 @@ mod client {
             valid_from: &TensorI32,
             blk_ids: &TensorI32,
             pos0: i32,
-        ) -> Result<BlockStepOut> {
+            out: &mut BlockStepOut,
+        ) -> Result<()> {
             let key = ProgramKey::new("ar_verify", bs, Some(block));
             let (k_cache, v_cache) = kv.to_batch_major();
             let kc = k_cache.to_literal()?;
@@ -391,8 +404,8 @@ mod client {
             let vf = valid_from.to_literal()?;
             let blk = blk_ids.to_literal()?;
             let p0 = scalar_i32(pos0);
-            let out = self.run(w, &key, &[&kc, &vc, &cl, &vf, &blk, &p0])?;
-            parse_block_step(out)
+            let res = self.run(w, &key, &[&kc, &vc, &cl, &vf, &blk, &p0])?;
+            self.parse_block_step(res, out)
         }
 
         fn ar_prefill(
@@ -401,18 +414,23 @@ mod client {
             bs: usize,
             prompt_ids: &TensorI32,
             valid_from: &TensorI32,
-        ) -> Result<ArPrefillOut> {
+            out: &mut ArPrefillOut,
+        ) -> Result<()> {
             let key = ProgramKey::new("ar_prefill", bs, None);
             let a = prompt_ids.to_literal()?;
             let b = valid_from.to_literal()?;
-            let out = self.run(w, &key, &[&a, &b])?;
-            Ok(ArPrefillOut {
-                logits: TensorF32::from_literal(&out[0])?,
-                tok: TensorI32::from_literal(&out[1])?,
-                conf: TensorF32::from_literal(&out[2])?,
-                k: TensorF32::from_literal(&out[3])?,
-                v: TensorF32::from_literal(&out[4])?,
-            })
+            let res = self.run(w, &key, &[&a, &b])?;
+            out.tok = TensorI32::from_literal(&res[1])?;
+            out.conf = TensorF32::from_literal(&res[2])?;
+            out.k = TensorF32::from_literal(&res[3])?;
+            out.v = TensorF32::from_literal(&res[4])?;
+            let dense = TensorF32::from_literal(&res[0])?;
+            out.logits.set_from_dense(
+                &dense.data,
+                &out.tok.data,
+                self.manifest.geometry.vocab_size,
+            );
+            Ok(())
         }
 
         fn ar_step(
@@ -422,7 +440,8 @@ mod client {
             kv: &KvView<'_>,
             valid_from: &TensorI32,
             tok_ids: &TensorI32,
-        ) -> Result<ArStepOut> {
+            out: &mut ArStepOut,
+        ) -> Result<()> {
             let key = ProgramKey::new("ar_step", bs, None);
             let (k_cache, v_cache) = kv.to_batch_major();
             let kc = k_cache.to_literal()?;
@@ -430,25 +449,43 @@ mod client {
             let cl = scalar_i32(kv.cache_len() as i32);
             let vf = valid_from.to_literal()?;
             let t = tok_ids.to_literal()?;
-            let out = self.run(w, &key, &[&kc, &vc, &cl, &vf, &t])?;
-            Ok(ArStepOut {
-                logits: TensorF32::from_literal(&out[0])?,
-                tok: TensorI32::from_literal(&out[1])?,
-                conf: TensorF32::from_literal(&out[2])?,
-                k1: TensorF32::from_literal(&out[3])?,
-                v1: TensorF32::from_literal(&out[4])?,
-            })
+            let res = self.run(w, &key, &[&kc, &vc, &cl, &vf, &t])?;
+            out.tok = TensorI32::from_literal(&res[1])?;
+            out.conf = TensorF32::from_literal(&res[2])?;
+            out.k1 = TensorF32::from_literal(&res[3])?;
+            out.v1 = TensorF32::from_literal(&res[4])?;
+            let dense = TensorF32::from_literal(&res[0])?;
+            out.logits.set_from_dense(
+                &dense.data,
+                &out.tok.data,
+                self.manifest.geometry.vocab_size,
+            );
+            Ok(())
         }
     }
 
-    fn parse_block_step(out: Vec<xla::Literal>) -> Result<BlockStepOut> {
-        Ok(BlockStepOut {
-            logits: TensorF32::from_literal(&out[0])?,
-            tok: TensorI32::from_literal(&out[1])?,
-            conf: TensorF32::from_literal(&out[2])?,
-            k_blk: TensorF32::from_literal(&out[3])?,
-            v_blk: TensorF32::from_literal(&out[4])?,
-        })
+    impl PjrtBackend {
+        /// Decompose a block-step program's output tuple into the
+        /// caller's struct, reducing the dense logits to the sparse peak
+        /// representation at the seam (the logit at each row's argmax
+        /// token — exactly what `ProposalLogits` carries).
+        fn parse_block_step(
+            &self,
+            res: Vec<xla::Literal>,
+            out: &mut BlockStepOut,
+        ) -> Result<()> {
+            out.tok = TensorI32::from_literal(&res[1])?;
+            out.conf = TensorF32::from_literal(&res[2])?;
+            out.k_blk = TensorF32::from_literal(&res[3])?;
+            out.v_blk = TensorF32::from_literal(&res[4])?;
+            let dense = TensorF32::from_literal(&res[0])?;
+            out.logits.set_from_dense(
+                &dense.data,
+                &out.tok.data,
+                self.manifest.geometry.vocab_size,
+            );
+            Ok(())
+        }
     }
 }
 

@@ -4,8 +4,18 @@
 //! exposes the eight program entry points with host-tensor signatures;
 //! engines never see backend-specific types. KV caches flow through as
 //! borrowed [`KvView`]s (zero-copy slab windows); everything else is a
-//! host tensor. Output tuple orders are fixed by the L2 function
+//! host tensor. Output argument orders are fixed by the L2 function
 //! signatures in `python/compile/model.py`.
+//!
+//! Every program is writer-style: the caller owns the output struct
+//! (usually inside a [`crate::runtime::StepArena`]) and the backend
+//! fills it in place, reusing the buffers via [`TensorF32::reuse`].
+//! The contract is overwrite-on-reuse: for a given output shape the
+//! backend rewrites every element it ever sets, so a dirty buffer from
+//! the previous step is indistinguishable from a fresh one — and a
+//! shape change zero-fills, so no value can leak across batch shapes.
+//! Steady-state decode steps therefore perform zero heap allocations
+//! (the `hotpath` bench gates this with a counting allocator).
 #![allow(clippy::too_many_arguments)]
 
 use anyhow::Result;
@@ -15,16 +25,111 @@ use super::kv::KvView;
 use super::tensor::{TensorF32, TensorI32};
 use super::weights::ModelWeights;
 
+/// Sparse per-position proposal logits.
+///
+/// The programs' proposal distributions cross the backend seam as one
+/// `(token, logit)` peak per output row rather than a dense
+/// `[rows, vocab]` tensor: no engine ever scans the vocabulary axis
+/// (they consume the `tok`/`conf` projections), so materializing and
+/// zeroing `rows x vocab` floats every refinement step was pure
+/// allocation traffic. Device backends reduce their dense logits to
+/// the same peak form at the seam; [`ProposalLogits::to_dense`]
+/// recovers the dense tensor for parity tests.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ProposalLogits {
+    rows: usize,
+    vocab: usize,
+    peak_tok: Vec<i32>,
+    peak_val: Vec<f32>,
+}
+
+impl ProposalLogits {
+    /// Resize for reuse. Same geometry keeps the buffers (every row is
+    /// rewritten by the producer); a geometry change re-zeroes.
+    pub fn reuse(&mut self, rows: usize, vocab: usize) {
+        if self.rows == rows && self.vocab == vocab {
+            return;
+        }
+        self.rows = rows;
+        self.vocab = vocab;
+        self.peak_tok.clear();
+        self.peak_tok.resize(rows, 0);
+        self.peak_val.clear();
+        self.peak_val.resize(rows, 0.0);
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Set row `row`'s single nonzero entry.
+    pub fn set(&mut self, row: usize, tok: i32, val: f32) {
+        self.peak_tok[row] = tok;
+        self.peak_val[row] = val;
+    }
+
+    /// Dense lookup: the logit at `(row, tok)` — the peak value when
+    /// `tok` is the row's proposal, 0.0 everywhere else.
+    pub fn get(&self, row: usize, tok: i32) -> f32 {
+        if self.peak_tok[row] == tok {
+            self.peak_val[row]
+        } else {
+            0.0
+        }
+    }
+
+    /// The row's `(token, logit)` peak.
+    pub fn peak(&self, row: usize) -> (i32, f32) {
+        (self.peak_tok[row], self.peak_val[row])
+    }
+
+    /// Materialize the dense `[rows, vocab]` tensor (tests / tooling
+    /// only — never on the decode path).
+    pub fn to_dense(&self) -> TensorF32 {
+        let mut out = TensorF32::zeros(&[self.rows, self.vocab]);
+        for r in 0..self.rows {
+            let t = self.peak_tok[r];
+            if t >= 0 && (t as usize) < self.vocab {
+                out.data[r * self.vocab + t as usize] = self.peak_val[r];
+            }
+        }
+        out
+    }
+
+    /// Reduce a dense `[rows, vocab]` logits buffer to peaks, taking
+    /// the logit at each row's proposed token (the device-backend seam
+    /// conversion; `tok` is the program's argmax output).
+    pub fn set_from_dense(&mut self, dense: &[f32], tok: &[i32], vocab: usize) {
+        let rows = tok.len();
+        self.reuse(rows, vocab);
+        for r in 0..rows {
+            let t = tok[r];
+            let val = if t >= 0 && (t as usize) < vocab {
+                dense[r * vocab + t as usize]
+            } else {
+                0.0
+            };
+            self.set(r, t, val);
+        }
+    }
+}
+
 /// One refinement step over every sequence position (vanilla teacher).
+#[derive(Default)]
 pub struct DenoiseOut {
-    pub logits: TensorF32, // [bs, S, V]
-    pub tok: TensorI32,    // [bs, S]
-    pub conf: TensorF32,   // [bs, S]
+    pub logits: ProposalLogits, // peaks over [bs*S, V]
+    pub tok: TensorI32,         // [bs, S]
+    pub conf: TensorF32,        // [bs, S]
 }
 
 /// Full step that also returns the KV stacks (approx-cache refresh).
+#[derive(Default)]
 pub struct FullCacheOut {
-    pub logits: TensorF32,
+    pub logits: ProposalLogits,
     pub tok: TensorI32,
     pub conf: TensorF32,
     pub k: TensorF32, // [L, bs, H, S, dh]
@@ -32,29 +137,33 @@ pub struct FullCacheOut {
 }
 
 /// Block-scoped step (student exact-cache / teacher approx-cache).
+#[derive(Default)]
 pub struct BlockStepOut {
-    pub logits: TensorF32, // [bs, B, V]
-    pub tok: TensorI32,    // [bs, B]
-    pub conf: TensorF32,   // [bs, B]
-    pub k_blk: TensorF32,  // [L, bs, H, B, dh]
+    pub logits: ProposalLogits, // peaks over [bs*B, V]
+    pub tok: TensorI32,         // [bs, B]
+    pub conf: TensorF32,        // [bs, B]
+    pub k_blk: TensorF32,       // [L, bs, H, B, dh]
     pub v_blk: TensorF32,
 }
 
+#[derive(Default)]
 pub struct PrefillOut {
     pub k: TensorF32, // [L, bs, H, P, dh]
     pub v: TensorF32,
 }
 
+#[derive(Default)]
 pub struct ArPrefillOut {
-    pub logits: TensorF32, // [bs, V]
-    pub tok: TensorI32,    // [bs]
-    pub conf: TensorF32,   // [bs]
+    pub logits: ProposalLogits, // peaks over [bs, V]
+    pub tok: TensorI32,         // [bs]
+    pub conf: TensorF32,        // [bs]
     pub k: TensorF32,
     pub v: TensorF32,
 }
 
+#[derive(Default)]
 pub struct ArStepOut {
-    pub logits: TensorF32, // [bs, V]
+    pub logits: ProposalLogits, // peaks over [bs, V]
     pub tok: TensorI32,
     pub conf: TensorF32,
     pub k1: TensorF32, // [L, bs, H, 1, dh]
@@ -77,8 +186,11 @@ impl<'rt> Programs<'rt> {
         bs: usize,
         ids: &TensorI32,        // [bs, S]
         valid_from: &TensorI32, // [bs]
-    ) -> Result<DenoiseOut> {
-        self.rt.backend().teacher_denoise(self.weights, bs, ids, valid_from)
+        out: &mut DenoiseOut,
+    ) -> Result<()> {
+        self.rt
+            .backend()
+            .teacher_denoise(self.weights, bs, ids, valid_from, out)
     }
 
     pub fn teacher_full_cache(
@@ -86,10 +198,11 @@ impl<'rt> Programs<'rt> {
         bs: usize,
         ids: &TensorI32,
         valid_from: &TensorI32,
-    ) -> Result<FullCacheOut> {
+        out: &mut FullCacheOut,
+    ) -> Result<()> {
         self.rt
             .backend()
-            .teacher_full_cache(self.weights, bs, ids, valid_from)
+            .teacher_full_cache(self.weights, bs, ids, valid_from, out)
     }
 
     pub fn teacher_block_approx(
@@ -100,7 +213,8 @@ impl<'rt> Programs<'rt> {
         valid_from: &TensorI32,
         blk_ids: &TensorI32, // [bs, B]
         pos0: i32,
-    ) -> Result<BlockStepOut> {
+        out: &mut BlockStepOut,
+    ) -> Result<()> {
         self.rt.backend().teacher_block_approx(
             self.weights,
             bs,
@@ -109,6 +223,7 @@ impl<'rt> Programs<'rt> {
             valid_from,
             blk_ids,
             pos0,
+            out,
         )
     }
 
@@ -117,10 +232,11 @@ impl<'rt> Programs<'rt> {
         bs: usize,
         prompt_ids: &TensorI32, // [bs, P]
         valid_from: &TensorI32,
-    ) -> Result<PrefillOut> {
+        out: &mut PrefillOut,
+    ) -> Result<()> {
         self.rt
             .backend()
-            .student_prefill(self.weights, bs, prompt_ids, valid_from)
+            .student_prefill(self.weights, bs, prompt_ids, valid_from, out)
     }
 
     pub fn student_block_step(
@@ -131,7 +247,8 @@ impl<'rt> Programs<'rt> {
         valid_from: &TensorI32,
         blk_ids: &TensorI32,
         pos0: i32,
-    ) -> Result<BlockStepOut> {
+        out: &mut BlockStepOut,
+    ) -> Result<()> {
         self.rt.backend().student_block_step(
             self.weights,
             bs,
@@ -140,6 +257,7 @@ impl<'rt> Programs<'rt> {
             valid_from,
             blk_ids,
             pos0,
+            out,
         )
     }
 
@@ -154,7 +272,8 @@ impl<'rt> Programs<'rt> {
         valid_from: &TensorI32,
         blk_ids: &TensorI32,
         pos0: i32,
-    ) -> Result<BlockStepOut> {
+        out: &mut BlockStepOut,
+    ) -> Result<()> {
         self.rt.backend().ar_verify(
             self.weights,
             bs,
@@ -163,6 +282,7 @@ impl<'rt> Programs<'rt> {
             valid_from,
             blk_ids,
             pos0,
+            out,
         )
     }
 
@@ -171,10 +291,11 @@ impl<'rt> Programs<'rt> {
         bs: usize,
         prompt_ids: &TensorI32,
         valid_from: &TensorI32,
-    ) -> Result<ArPrefillOut> {
+        out: &mut ArPrefillOut,
+    ) -> Result<()> {
         self.rt
             .backend()
-            .ar_prefill(self.weights, bs, prompt_ids, valid_from)
+            .ar_prefill(self.weights, bs, prompt_ids, valid_from, out)
     }
 
     pub fn ar_step(
@@ -183,7 +304,57 @@ impl<'rt> Programs<'rt> {
         kv: &KvView<'_>,
         valid_from: &TensorI32,
         tok_ids: &TensorI32, // [bs]
-    ) -> Result<ArStepOut> {
-        self.rt.backend().ar_step(self.weights, bs, kv, valid_from, tok_ids)
+        out: &mut ArStepOut,
+    ) -> Result<()> {
+        self.rt
+            .backend()
+            .ar_step(self.weights, bs, kv, valid_from, tok_ids, out)
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::ProposalLogits;
+
+    #[test]
+    fn sparse_logits_round_trip() {
+        let mut p = ProposalLogits::default();
+        p.reuse(3, 8);
+        p.set(0, 5, 5.0);
+        p.set(1, 2, 5.0);
+        p.set(2, 7, 1.5);
+        assert_eq!(p.get(0, 5), 5.0);
+        assert_eq!(p.get(0, 4), 0.0);
+        assert_eq!(p.peak(2), (7, 1.5));
+        let d = p.to_dense();
+        assert_eq!(d.shape, vec![3, 8]);
+        assert_eq!(d.data[5], 5.0);
+        assert_eq!(d.data[8 + 2], 5.0);
+        assert_eq!(d.data[2 * 8 + 7], 1.5);
+        assert_eq!(d.data.iter().filter(|&&x| x != 0.0).count(), 3);
+    }
+
+    #[test]
+    fn sparse_logits_reuse_rezeroes_on_geometry_change() {
+        let mut p = ProposalLogits::default();
+        p.reuse(2, 4);
+        p.set(0, 1, 5.0);
+        p.set(1, 2, 5.0);
+        p.reuse(2, 4); // same geometry: peaks retained
+        assert_eq!(p.peak(0), (1, 5.0));
+        p.reuse(3, 4); // row change: cleared
+        assert_eq!(p.peak(0), (0, 0.0));
+        assert_eq!(p.rows(), 3);
+    }
+
+    #[test]
+    fn dense_reduction_takes_peak_at_proposed_token() {
+        let dense = vec![0.0, 0.0, 3.0, 0.0, 1.0, 0.0, 0.0, 0.0];
+        let tok = vec![2, 0];
+        let mut p = ProposalLogits::default();
+        p.set_from_dense(&dense, &tok, 4);
+        assert_eq!(p.peak(0), (2, 3.0));
+        assert_eq!(p.peak(1), (0, 1.0));
     }
 }

@@ -30,6 +30,15 @@
 //!
 //! The backend holds no mutable state, so it is trivially `Send + Sync`
 //! and reports full host parallelism to the chunk executor.
+//!
+//! Hot-path shape: every program writes into caller-owned (arena)
+//! buffers via `reuse` — steady-state calls with stable shapes never
+//! allocate. Proposal logits cross the seam as sparse
+//! [`ProposalLogits`] peaks, and context hashes are written with a
+//! batched per-lane pass: one contiguous layer-0 walk per lane, then a
+//! precomputed-stride replication across layers (`replicate_ctx`),
+//! instead of the old one-element-per-layer scatter that recomputed
+//! the full 5-d index for every (layer, position) pair.
 #![allow(clippy::too_many_arguments)]
 
 use anyhow::Result;
@@ -39,7 +48,7 @@ use super::kv::KvView;
 use super::manifest::Geometry;
 use super::programs::{
     ArPrefillOut, ArStepOut, BlockStepOut, DenoiseOut, FullCacheOut,
-    PrefillOut,
+    PrefillOut, ProposalLogits,
 };
 use super::tensor::{TensorF32, TensorI32};
 use super::weights::ModelWeights;
@@ -55,6 +64,10 @@ const CTX_MASK: u64 = 0x00FF_FFFF;
 /// (ids 4..57 carry characters in the compiled-in vocab).
 const TOK_BASE: i32 = 4;
 const TOK_RANGE: u64 = 53;
+
+/// Every proposal peak crosses the seam with this logit value (the
+/// reference head is a hard one-hot).
+const PEAK_LOGIT: f32 = 5.0;
 
 pub struct ReferenceBackend {
     geom: Geometry,
@@ -94,12 +107,35 @@ fn view_ctx(kv: &KvView<'_>, lane: usize, pos: usize) -> u64 {
     kv.k_at(lane, 0, 0, pos, 0) as u64 & CTX_MASK
 }
 
-/// Write the context hash for `(lane, pos)` into every layer of a
-/// batch-major `[L, bs, H, len, dh]` output buffer (head 0, feature 0).
-fn write_ctx(data: &mut [f32], l_n: usize, bs: usize, h_n: usize,
-             len: usize, dh: usize, lane: usize, pos: usize, ctx: u64) {
-    for l in 0..l_n {
-        data[(((l * bs + lane) * h_n * len) + pos) * dh] = ctx as f32;
+/// Replicate one lane's layer-0 context row across all layers of both
+/// batch-major `[L, bs, H, len, dh]` stacks (head 0, feature 0), and
+/// mirror it into `v`. The producer writes layer 0 of `k` with a
+/// contiguous per-lane walk first; this pass fans it out with two
+/// precomputed strides (`dh` across positions, `bs*H*len*dh` across
+/// layers) — no per-element index recomputation.
+fn replicate_ctx(
+    k: &mut [f32],
+    v: &mut [f32],
+    l_n: usize,
+    bs: usize,
+    h_n: usize,
+    len: usize,
+    dh: usize,
+    lane: usize,
+) {
+    let lane0 = lane * h_n * len * dh;
+    let lstride = bs * h_n * len * dh;
+    let mut off = lane0;
+    for _p in 0..len {
+        let c = k[off];
+        v[off] = c;
+        let mut o = off + lstride;
+        for _l in 1..l_n {
+            k[o] = c;
+            v[o] = c;
+            o += lstride;
+        }
+        off += dh;
     }
 }
 
@@ -144,6 +180,62 @@ impl ReferenceBackend {
         mix(ms, 0xB10C_CACE) & CTX_MASK
     }
 
+    /// Walk one lane's committed-token chain over a borrowed id row,
+    /// writing the per-position context hashes into layer 0 of the
+    /// batch-major stacks with a contiguous stride walk, then fanning
+    /// them out via [`replicate_ctx`]. Returns the final context hash.
+    fn chain_lane(
+        &self,
+        ms: u64,
+        ids: &[i32],
+        lane: usize,
+        bs: usize,
+        len: usize,
+        k: &mut [f32],
+        v: &mut [f32],
+    ) -> u64 {
+        let g = &self.geom;
+        let (l_n, h_n, dh) = (g.n_layers, g.n_heads, g.d_head);
+        let mut ctx = self.ctx_root(ms);
+        let mut off = lane * h_n * len * dh; // (l=0, lane, h=0, p=0, d=0)
+        for &t in ids {
+            ctx = ctx_step(ctx, t);
+            k[off] = ctx as f32;
+            off += dh;
+        }
+        replicate_ctx(k, v, l_n, bs, h_n, len, dh, lane);
+        ctx
+    }
+
+    /// Committed-token context chains over all lanes of a `[bs, len]`
+    /// id buffer (borrowed slices — no per-lane clones), emitted as KV
+    /// stacks of the given position length into the reusable outputs.
+    fn chain_kv(
+        &self,
+        ms: u64,
+        bs: usize,
+        len: usize,
+        ids: &[i32],
+        k: &mut TensorF32,
+        v: &mut TensorF32,
+    ) {
+        let g = &self.geom;
+        let (l_n, h_n, dh) = (g.n_layers, g.n_heads, g.d_head);
+        k.reuse(&[l_n, bs, h_n, len, dh]);
+        v.reuse(&[l_n, bs, h_n, len, dh]);
+        for lane in 0..bs {
+            self.chain_lane(
+                ms,
+                &ids[lane * len..(lane + 1) * len],
+                lane,
+                bs,
+                len,
+                &mut k.data,
+                &mut v.data,
+            );
+        }
+    }
+
     /// Full-sequence proposal shared by `teacher_denoise` and
     /// `teacher_full_cache` — both must emit identical tokens and
     /// confidences for identical inputs (the refresh_every=1 anchor).
@@ -152,7 +244,10 @@ impl ReferenceBackend {
         w: &ModelWeights,
         bs: usize,
         ids: &TensorI32,
-    ) -> Result<(TensorF32, TensorI32, TensorF32)> {
+        logits: &mut ProposalLogits,
+        tok: &mut TensorI32,
+        conf: &mut TensorF32,
+    ) -> Result<()> {
         let (s, v) = (self.geom.seq_len, self.geom.vocab_size);
         anyhow::ensure!(
             ids.data.len() == bs * s,
@@ -160,54 +255,25 @@ impl ReferenceBackend {
             ids.data.len()
         );
         let ms = self.model_seed(w);
-        let mut logits = TensorF32::zeros(&[bs, s, v]);
-        let mut tok = vec![0i32; bs * s];
-        let mut conf = vec![0f32; bs * s];
+        logits.reuse(bs * s, v);
+        tok.reuse(&[bs, s]);
+        conf.reuse(&[bs, s]);
         for lane in 0..bs {
             let row = &ids.data[lane * s..(lane + 1) * s];
             let lh = token_hash(row);
             for p in 0..s {
                 let (t, c) = self.dlm_propose(ms, mix(lh, p as u64), false);
-                tok[lane * s + p] = t;
-                conf[lane * s + p] = c;
-                logits.data[(lane * s + p) * v + t as usize] = 5.0;
+                tok.data[lane * s + p] = t;
+                conf.data[lane * s + p] = c;
+                logits.set(lane * s + p, t, PEAK_LOGIT);
             }
         }
-        Ok((
-            logits,
-            TensorI32::from_vec(&[bs, s], tok),
-            TensorF32::from_vec(&[bs, s], conf),
-        ))
+        Ok(())
     }
 
-    /// Committed-token context chain over a sequence, emitted as KV
-    /// stacks of the given position length.
-    fn chain_kv(
-        &self,
-        ms: u64,
-        bs: usize,
-        len: usize,
-        lane_ids: impl Fn(usize) -> Vec<i32>,
-    ) -> (TensorF32, TensorF32, Vec<u64>) {
-        let g = &self.geom;
-        let (l_n, h_n, dh) = (g.n_layers, g.n_heads, g.d_head);
-        let mut k = TensorF32::zeros(&[l_n, bs, h_n, len, dh]);
-        let mut v = TensorF32::zeros(&[l_n, bs, h_n, len, dh]);
-        let mut last = vec![0u64; bs];
-        for lane in 0..bs {
-            let ids = lane_ids(lane);
-            let mut ctx = self.ctx_root(ms);
-            for (p, &t) in ids.iter().enumerate() {
-                ctx = ctx_step(ctx, t);
-                write_ctx(&mut k.data, l_n, bs, h_n, len, dh, lane, p, ctx);
-                write_ctx(&mut v.data, l_n, bs, h_n, len, dh, lane, p, ctx);
-            }
-            last[lane] = ctx;
-        }
-        (k, v, last)
-    }
-
-    /// Shared implementation of the two DLM block programs.
+    /// Shared implementation of the two DLM block programs: a batched
+    /// per-lane pass (proposals + layer-0 context chain in one walk,
+    /// then the stride-walk layer replication).
     fn dlm_block_step(
         &self,
         w: &ModelWeights,
@@ -218,7 +284,8 @@ impl ReferenceBackend {
         blk_ids: &TensorI32,
         pos0: i32,
         student: bool,
-    ) -> Result<BlockStepOut> {
+        out: &mut BlockStepOut,
+    ) -> Result<()> {
         let g = &self.geom;
         let (l_n, h_n, dh, v) =
             (g.n_layers, g.n_heads, g.d_head, g.vocab_size);
@@ -232,37 +299,42 @@ impl ReferenceBackend {
             kv.bs()
         );
         let ms = self.model_seed(w);
-        let mut logits = TensorF32::zeros(&[bs, block, v]);
-        let mut tok = vec![0i32; bs * block];
-        let mut conf = vec![0f32; bs * block];
-        let mut k_blk = TensorF32::zeros(&[l_n, bs, h_n, block, dh]);
-        let mut v_blk = TensorF32::zeros(&[l_n, bs, h_n, block, dh]);
+        out.logits.reuse(bs * block, v);
+        out.tok.reuse(&[bs, block]);
+        out.conf.reuse(&[bs, block]);
+        out.k_blk.reuse(&[l_n, bs, h_n, block, dh]);
+        out.v_blk.reuse(&[l_n, bs, h_n, block, dh]);
         for lane in 0..bs {
             let row = &blk_ids.data[lane * block..(lane + 1) * block];
             let ctx_prev = view_ctx(kv, lane, ctx_pos);
             let bh = mix(token_hash(row), ctx_prev);
             let mut ctx = ctx_prev;
-            for i in 0..block {
+            let mut off = lane * h_n * block * dh; // layer-0 walk
+            for (i, &t_in) in row.iter().enumerate() {
                 let h_pos = mix(bh, (pos0 as u64) + i as u64);
                 let (t, c) = self.dlm_propose(ms, h_pos, student);
-                tok[lane * block + i] = t;
-                conf[lane * block + i] = c;
-                logits.data[(lane * block + i) * v + t as usize] = 5.0;
+                out.tok.data[lane * block + i] = t;
+                out.conf.data[lane * block + i] = c;
+                out.logits.set(lane * block + i, t, PEAK_LOGIT);
                 // commit chain over the *input* tokens: when the engine
                 // re-runs this program on final tokens, the emitted KV is
                 // the exact committed-prefix chain
-                ctx = ctx_step(ctx, row[i]);
-                write_ctx(&mut k_blk.data, l_n, bs, h_n, block, dh, lane, i, ctx);
-                write_ctx(&mut v_blk.data, l_n, bs, h_n, block, dh, lane, i, ctx);
+                ctx = ctx_step(ctx, t_in);
+                out.k_blk.data[off] = ctx as f32;
+                off += dh;
             }
+            replicate_ctx(
+                &mut out.k_blk.data,
+                &mut out.v_blk.data,
+                l_n,
+                bs,
+                h_n,
+                block,
+                dh,
+                lane,
+            );
         }
-        Ok(BlockStepOut {
-            logits,
-            tok: TensorI32::from_vec(&[bs, block], tok),
-            conf: TensorF32::from_vec(&[bs, block], conf),
-            k_blk,
-            v_blk,
-        })
+        Ok(())
     }
 }
 
@@ -287,9 +359,16 @@ impl Backend for ReferenceBackend {
         bs: usize,
         ids: &TensorI32,
         _valid_from: &TensorI32,
-    ) -> Result<DenoiseOut> {
-        let (logits, tok, conf) = self.full_seq_propose(w, bs, ids)?;
-        Ok(DenoiseOut { logits, tok, conf })
+        out: &mut DenoiseOut,
+    ) -> Result<()> {
+        self.full_seq_propose(
+            w,
+            bs,
+            ids,
+            &mut out.logits,
+            &mut out.tok,
+            &mut out.conf,
+        )
     }
 
     fn teacher_full_cache(
@@ -298,14 +377,20 @@ impl Backend for ReferenceBackend {
         bs: usize,
         ids: &TensorI32,
         _valid_from: &TensorI32,
-    ) -> Result<FullCacheOut> {
-        let (logits, tok, conf) = self.full_seq_propose(w, bs, ids)?;
+        out: &mut FullCacheOut,
+    ) -> Result<()> {
+        self.full_seq_propose(
+            w,
+            bs,
+            ids,
+            &mut out.logits,
+            &mut out.tok,
+            &mut out.conf,
+        )?;
         let s = self.geom.seq_len;
         let ms = self.model_seed(w);
-        let (k, v, _) = self.chain_kv(ms, bs, s, |lane| {
-            ids.data[lane * s..(lane + 1) * s].to_vec()
-        });
-        Ok(FullCacheOut { logits, tok, conf, k, v })
+        self.chain_kv(ms, bs, s, &ids.data, &mut out.k, &mut out.v);
+        Ok(())
     }
 
     fn teacher_block_approx(
@@ -317,10 +402,19 @@ impl Backend for ReferenceBackend {
         _valid_from: &TensorI32,
         blk_ids: &TensorI32,
         pos0: i32,
-    ) -> Result<BlockStepOut> {
+        out: &mut BlockStepOut,
+    ) -> Result<()> {
         anyhow::ensure!(pos0 >= 1, "block cannot start at position 0");
         self.dlm_block_step(
-            w, bs, block, kv, (pos0 - 1) as usize, blk_ids, pos0, false,
+            w,
+            bs,
+            block,
+            kv,
+            (pos0 - 1) as usize,
+            blk_ids,
+            pos0,
+            false,
+            out,
         )
     }
 
@@ -330,17 +424,16 @@ impl Backend for ReferenceBackend {
         bs: usize,
         prompt_ids: &TensorI32,
         _valid_from: &TensorI32,
-    ) -> Result<PrefillOut> {
+        out: &mut PrefillOut,
+    ) -> Result<()> {
         let p = self.geom.prompt_len;
         anyhow::ensure!(
             prompt_ids.data.len() == bs * p,
             "prompt ids must be [bs={bs}, P={p}]"
         );
         let ms = self.model_seed(w);
-        let (k, v, _) = self.chain_kv(ms, bs, p, |lane| {
-            prompt_ids.data[lane * p..(lane + 1) * p].to_vec()
-        });
-        Ok(PrefillOut { k, v })
+        self.chain_kv(ms, bs, p, &prompt_ids.data, &mut out.k, &mut out.v);
+        Ok(())
     }
 
     fn student_block_step(
@@ -352,11 +445,20 @@ impl Backend for ReferenceBackend {
         _valid_from: &TensorI32,
         blk_ids: &TensorI32,
         pos0: i32,
-    ) -> Result<BlockStepOut> {
+        out: &mut BlockStepOut,
+    ) -> Result<()> {
         let cache_len = kv.cache_len();
         anyhow::ensure!(cache_len >= 1, "student cache cannot be empty");
         self.dlm_block_step(
-            w, bs, block, kv, cache_len - 1, blk_ids, pos0, true,
+            w,
+            bs,
+            block,
+            kv,
+            cache_len - 1,
+            blk_ids,
+            pos0,
+            true,
+            out,
         )
     }
 
@@ -369,7 +471,8 @@ impl Backend for ReferenceBackend {
         _valid_from: &TensorI32,
         blk_ids: &TensorI32,
         _pos0: i32,
-    ) -> Result<BlockStepOut> {
+        out: &mut BlockStepOut,
+    ) -> Result<()> {
         let g = &self.geom;
         let (l_n, h_n, dh, v) =
             (g.n_layers, g.n_heads, g.d_head, g.vocab_size);
@@ -381,33 +484,38 @@ impl Backend for ReferenceBackend {
         );
         anyhow::ensure!(kv.bs() == bs, "KV view lane count mismatch");
         let ms = self.model_seed(w);
-        let mut logits = TensorF32::zeros(&[bs, block, v]);
-        let mut tok = vec![0i32; bs * block];
-        let mut conf = vec![0f32; bs * block];
-        let mut k_blk = TensorF32::zeros(&[l_n, bs, h_n, block, dh]);
-        let mut v_blk = TensorF32::zeros(&[l_n, bs, h_n, block, dh]);
+        out.logits.reuse(bs * block, v);
+        out.tok.reuse(&[bs, block]);
+        out.conf.reuse(&[bs, block]);
+        out.k_blk.reuse(&[l_n, bs, h_n, block, dh]);
+        out.v_blk.reuse(&[l_n, bs, h_n, block, dh]);
         for lane in 0..bs {
             let row = &blk_ids.data[lane * block..(lane + 1) * block];
             let mut ctx = view_ctx(kv, lane, cache_len - 1);
-            for i in 0..block {
+            let mut off = lane * h_n * block * dh; // layer-0 walk
+            for (i, &t_in) in row.iter().enumerate() {
                 // teacher-forced: extend the chain by draft token i, then
                 // emit AR's greedy continuation *after* it
-                ctx = ctx_step(ctx, row[i]);
+                ctx = ctx_step(ctx, t_in);
                 let (t, c) = self.ar_next(ms, ctx);
-                tok[lane * block + i] = t;
-                conf[lane * block + i] = c;
-                logits.data[(lane * block + i) * v + t as usize] = 5.0;
-                write_ctx(&mut k_blk.data, l_n, bs, h_n, block, dh, lane, i, ctx);
-                write_ctx(&mut v_blk.data, l_n, bs, h_n, block, dh, lane, i, ctx);
+                out.tok.data[lane * block + i] = t;
+                out.conf.data[lane * block + i] = c;
+                out.logits.set(lane * block + i, t, PEAK_LOGIT);
+                out.k_blk.data[off] = ctx as f32;
+                off += dh;
             }
+            replicate_ctx(
+                &mut out.k_blk.data,
+                &mut out.v_blk.data,
+                l_n,
+                bs,
+                h_n,
+                block,
+                dh,
+                lane,
+            );
         }
-        Ok(BlockStepOut {
-            logits,
-            tok: TensorI32::from_vec(&[bs, block], tok),
-            conf: TensorF32::from_vec(&[bs, block], conf),
-            k_blk,
-            v_blk,
-        })
+        Ok(())
     }
 
     fn ar_prefill(
@@ -416,32 +524,37 @@ impl Backend for ReferenceBackend {
         bs: usize,
         prompt_ids: &TensorI32,
         _valid_from: &TensorI32,
-    ) -> Result<ArPrefillOut> {
-        let (p, v) = (self.geom.prompt_len, self.geom.vocab_size);
+        out: &mut ArPrefillOut,
+    ) -> Result<()> {
+        let g = &self.geom;
+        let (p, v) = (g.prompt_len, g.vocab_size);
+        let (l_n, h_n, dh) = (g.n_layers, g.n_heads, g.d_head);
         anyhow::ensure!(
             prompt_ids.data.len() == bs * p,
             "prompt ids must be [bs={bs}, P={p}]"
         );
         let ms = self.model_seed(w);
-        let (k, kv, last) = self.chain_kv(ms, bs, p, |lane| {
-            prompt_ids.data[lane * p..(lane + 1) * p].to_vec()
-        });
-        let mut logits = TensorF32::zeros(&[bs, v]);
-        let mut tok = vec![0i32; bs];
-        let mut conf = vec![0f32; bs];
+        out.k.reuse(&[l_n, bs, h_n, p, dh]);
+        out.v.reuse(&[l_n, bs, h_n, p, dh]);
+        out.logits.reuse(bs, v);
+        out.tok.reuse(&[bs]);
+        out.conf.reuse(&[bs]);
         for lane in 0..bs {
-            let (t, c) = self.ar_next(ms, last[lane]);
-            tok[lane] = t;
-            conf[lane] = c;
-            logits.data[lane * v + t as usize] = 5.0;
+            let last = self.chain_lane(
+                ms,
+                &prompt_ids.data[lane * p..(lane + 1) * p],
+                lane,
+                bs,
+                p,
+                &mut out.k.data,
+                &mut out.v.data,
+            );
+            let (t, c) = self.ar_next(ms, last);
+            out.tok.data[lane] = t;
+            out.conf.data[lane] = c;
+            out.logits.set(lane, t, PEAK_LOGIT);
         }
-        Ok(ArPrefillOut {
-            logits,
-            tok: TensorI32::from_vec(&[bs], tok),
-            conf: TensorF32::from_vec(&[bs], conf),
-            k,
-            v: kv,
-        })
+        Ok(())
     }
 
     fn ar_step(
@@ -451,7 +564,8 @@ impl Backend for ReferenceBackend {
         kv: &KvView<'_>,
         _valid_from: &TensorI32,
         tok_ids: &TensorI32,
-    ) -> Result<ArStepOut> {
+        out: &mut ArStepOut,
+    ) -> Result<()> {
         let g = &self.geom;
         let (l_n, h_n, dh, v) =
             (g.n_layers, g.n_heads, g.d_head, g.vocab_size);
@@ -460,28 +574,31 @@ impl Backend for ReferenceBackend {
         anyhow::ensure!(tok_ids.data.len() == bs, "tok ids must be [bs]");
         anyhow::ensure!(kv.bs() == bs, "KV view lane count mismatch");
         let ms = self.model_seed(w);
-        let mut logits = TensorF32::zeros(&[bs, v]);
-        let mut tok = vec![0i32; bs];
-        let mut conf = vec![0f32; bs];
-        let mut k1 = TensorF32::zeros(&[l_n, bs, h_n, 1, dh]);
-        let mut v1 = TensorF32::zeros(&[l_n, bs, h_n, 1, dh]);
+        out.logits.reuse(bs, v);
+        out.tok.reuse(&[bs]);
+        out.conf.reuse(&[bs]);
+        out.k1.reuse(&[l_n, bs, h_n, 1, dh]);
+        out.v1.reuse(&[l_n, bs, h_n, 1, dh]);
         for lane in 0..bs {
             let prev = view_ctx(kv, lane, cache_len - 1);
             let ctx = ctx_step(prev, tok_ids.data[lane]);
             let (t, c) = self.ar_next(ms, ctx);
-            tok[lane] = t;
-            conf[lane] = c;
-            logits.data[lane * v + t as usize] = 5.0;
-            write_ctx(&mut k1.data, l_n, bs, h_n, 1, dh, lane, 0, ctx);
-            write_ctx(&mut v1.data, l_n, bs, h_n, 1, dh, lane, 0, ctx);
+            out.tok.data[lane] = t;
+            out.conf.data[lane] = c;
+            out.logits.set(lane, t, PEAK_LOGIT);
+            out.k1.data[lane * h_n * dh] = ctx as f32;
+            replicate_ctx(
+                &mut out.k1.data,
+                &mut out.v1.data,
+                l_n,
+                bs,
+                h_n,
+                1,
+                dh,
+                lane,
+            );
         }
-        Ok(ArStepOut {
-            logits,
-            tok: TensorI32::from_vec(&[bs], tok),
-            conf: TensorF32::from_vec(&[bs], conf),
-            k1,
-            v1,
-        })
+        Ok(())
     }
 }
 
@@ -514,10 +631,13 @@ mod tests {
             (0..g.seq_len as i32).map(|i| i % 50).collect(),
         );
         let vf = TensorI32::from_vec(&[1], vec![0]);
-        let d = b.teacher_denoise(&w, 1, &ids, &vf).unwrap();
-        let f = b.teacher_full_cache(&w, 1, &ids, &vf).unwrap();
+        let mut d = DenoiseOut::default();
+        b.teacher_denoise(&w, 1, &ids, &vf, &mut d).unwrap();
+        let mut f = FullCacheOut::default();
+        b.teacher_full_cache(&w, 1, &ids, &vf, &mut f).unwrap();
         assert_eq!(d.tok.data, f.tok.data);
         assert_eq!(d.conf.data, f.conf.data);
+        assert_eq!(d.logits, f.logits);
     }
 
     #[test]
@@ -530,24 +650,26 @@ mod tests {
         let row_b: Vec<i32> = (0..s as i32).map(|i| 4 + (i * 7) % 40).collect();
         let vf1 = TensorI32::from_vec(&[1], vec![0]);
         let vf2 = TensorI32::from_vec(&[2], vec![0, 0]);
-        let solo = b
-            .teacher_denoise(
-                &w,
-                1,
-                &TensorI32::from_vec(&[1, s], row_b.clone()),
-                &vf1,
-            )
-            .unwrap();
+        let mut solo = DenoiseOut::default();
+        b.teacher_denoise(
+            &w,
+            1,
+            &TensorI32::from_vec(&[1, s], row_b.clone()),
+            &vf1,
+            &mut solo,
+        )
+        .unwrap();
         let mut both_ids = row_a.clone();
         both_ids.extend_from_slice(&row_b);
-        let both = b
-            .teacher_denoise(
-                &w,
-                2,
-                &TensorI32::from_vec(&[2, s], both_ids),
-                &vf2,
-            )
-            .unwrap();
+        let mut both = DenoiseOut::default();
+        b.teacher_denoise(
+            &w,
+            2,
+            &TensorI32::from_vec(&[2, s], both_ids),
+            &vf2,
+            &mut both,
+        )
+        .unwrap();
         assert_eq!(&both.tok.data[s..], &solo.tok.data[..]);
     }
 
@@ -559,7 +681,8 @@ mod tests {
         let (p, blk) = (g.prompt_len, g.block_size);
         let prompt = TensorI32::from_vec(&[1, p], vec![5; p]);
         let vf = TensorI32::from_vec(&[1], vec![0]);
-        let pre = b.student_prefill(&w, 1, &prompt, &vf).unwrap();
+        let mut pre = PrefillOut::default();
+        b.student_prefill(&w, 1, &prompt, &vf, &mut pre).unwrap();
         // the last prompt position carries a nonzero context hash
         // (prefill output is batch-major [L, 1, H, P, dh]; the hash
         // lives at layer 0, head 0, feature 0)
@@ -583,18 +706,95 @@ mod tests {
             }
         }
         let v_slab = k_slab.clone();
-        let view = KvView::new(&k_slab, &v_slab, vec![0], dims, p);
+        let view = KvView::new(&k_slab, &v_slab, &[0], dims, p);
         let blk_ids = TensorI32::from_vec(&[1, blk], vec![1; blk]);
-        let out = b
-            .student_block_step(&w, 1, blk, &view, &vf, &blk_ids, p as i32)
+        let mut out = BlockStepOut::default();
+        b.student_block_step(&w, 1, blk, &view, &vf, &blk_ids, p as i32, &mut out)
             .unwrap();
         assert_eq!(out.tok.data.len(), blk);
-        // deterministic: same call, same outputs
-        let again = b
-            .student_block_step(&w, 1, blk, &view, &vf, &blk_ids, p as i32)
-            .unwrap();
+        // deterministic: same call, same outputs — including into a
+        // dirty reused output struct
+        let mut again = BlockStepOut::default();
+        b.student_block_step(
+            &w, 1, blk, &view, &vf, &blk_ids, p as i32, &mut again,
+        )
+        .unwrap();
         assert_eq!(out.tok.data, again.tok.data);
         assert_eq!(out.conf.data, again.conf.data);
+        b.student_block_step(&w, 1, blk, &view, &vf, &blk_ids, p as i32, &mut out)
+            .unwrap();
+        assert_eq!(out.tok.data, again.tok.data);
+        assert_eq!(out.k_blk.data, again.k_blk.data);
+        assert_eq!(out.v_blk.data, again.v_blk.data);
+    }
+
+    #[test]
+    fn sparse_logits_peak_matches_proposal() {
+        let b = backend();
+        let w = weights();
+        let g = Manifest::reference(Path::new("ref")).geometry;
+        let ids = TensorI32::from_vec(
+            &[1, g.seq_len],
+            (0..g.seq_len as i32).map(|i| 4 + i % 40).collect(),
+        );
+        let vf = TensorI32::from_vec(&[1], vec![0]);
+        let mut d = DenoiseOut::default();
+        b.teacher_denoise(&w, 1, &ids, &vf, &mut d).unwrap();
+        for (row, &t) in d.tok.data.iter().enumerate() {
+            assert_eq!(d.logits.peak(row), (t, 5.0));
+        }
+        // dense materialization stays one-hot
+        let dense = d.logits.to_dense();
+        assert_eq!(
+            dense.data.iter().filter(|&&x| x != 0.0).count(),
+            g.seq_len
+        );
+    }
+
+    #[test]
+    fn dirty_output_reuse_across_batch_shapes_is_clean() {
+        // bs=2 fills wider buffers; a following bs=1 call into the same
+        // (dirty) output struct must be byte-identical to a fresh one —
+        // the arena-reuse contract the hot path relies on
+        let b = backend();
+        let w = weights();
+        let g = Manifest::reference(Path::new("ref")).geometry;
+        let s = g.seq_len;
+        let row: Vec<i32> = (0..s as i32).map(|i| 4 + i % 37).collect();
+        let mut two_ids = row.clone();
+        two_ids.extend((0..s as i32).map(|i| 4 + (i * 3) % 37));
+        let vf1 = TensorI32::from_vec(&[1], vec![0]);
+        let vf2 = TensorI32::from_vec(&[2], vec![0, 0]);
+        let mut dirty = FullCacheOut::default();
+        b.teacher_full_cache(
+            &w,
+            2,
+            &TensorI32::from_vec(&[2, s], two_ids),
+            &vf2,
+            &mut dirty,
+        )
+        .unwrap();
+        b.teacher_full_cache(
+            &w,
+            1,
+            &TensorI32::from_vec(&[1, s], row.clone()),
+            &vf1,
+            &mut dirty,
+        )
+        .unwrap();
+        let mut fresh = FullCacheOut::default();
+        b.teacher_full_cache(
+            &w,
+            1,
+            &TensorI32::from_vec(&[1, s], row),
+            &vf1,
+            &mut fresh,
+        )
+        .unwrap();
+        assert_eq!(dirty.tok.data, fresh.tok.data);
+        assert_eq!(dirty.conf.data, fresh.conf.data);
+        assert_eq!(dirty.k.data, fresh.k.data);
+        assert_eq!(dirty.v.data, fresh.v.data);
     }
 
     #[test]

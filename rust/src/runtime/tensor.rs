@@ -3,7 +3,7 @@
 //! These are the interchange type across the [`crate::runtime::Backend`]
 //! seam; the PJRT path (feature `pjrt`) adds `xla::Literal` conversions.
 
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct TensorF32 {
     pub shape: Vec<usize>,
     pub data: Vec<f32>,
@@ -23,9 +23,27 @@ impl TensorF32 {
     pub fn numel(&self) -> usize {
         self.data.len()
     }
+
+    /// Reshape in place for buffer reuse. When the shape is unchanged
+    /// the contents are kept as-is (the writer overwrites every element
+    /// it later exposes — the step-arena contract); on a shape change
+    /// the buffer is zero-filled so no stale value from a differently
+    /// shaped step can leak through. Never shrinks capacity, so a
+    /// steady-state caller stops allocating after the first use of each
+    /// shape's high-water mark.
+    pub fn reuse(&mut self, shape: &[usize]) {
+        if self.shape.as_slice() == shape {
+            return;
+        }
+        let n: usize = shape.iter().product();
+        self.shape.clear();
+        self.shape.extend_from_slice(shape);
+        self.data.clear();
+        self.data.resize(n, 0.0);
+    }
 }
 
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct TensorI32 {
     pub shape: Vec<usize>,
     pub data: Vec<i32>,
@@ -44,6 +62,18 @@ impl TensorI32 {
 
     pub fn numel(&self) -> usize {
         self.data.len()
+    }
+
+    /// In-place reshape-for-reuse; see [`TensorF32::reuse`].
+    pub fn reuse(&mut self, shape: &[usize]) {
+        if self.shape.as_slice() == shape {
+            return;
+        }
+        let n: usize = shape.iter().product();
+        self.shape.clear();
+        self.shape.extend_from_slice(shape);
+        self.data.clear();
+        self.data.resize(n, 0);
     }
 }
 
@@ -126,5 +156,21 @@ mod tests {
     #[should_panic]
     fn i32_shape_mismatch_panics() {
         TensorI32::from_vec(&[3], vec![1, 2]);
+    }
+
+    #[test]
+    fn reuse_keeps_same_shape_contents_and_zeroes_on_change() {
+        let mut t = TensorF32::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        t.reuse(&[2, 2]);
+        assert_eq!(t.data, vec![1., 2., 3., 4.], "same shape: kept");
+        t.reuse(&[3, 2]);
+        assert_eq!(t.shape, vec![3, 2]);
+        assert!(t.data.iter().all(|&x| x == 0.0), "shape change: zeroed");
+        assert_eq!(t.numel(), 6);
+        let mut i = TensorI32::from_vec(&[2], vec![7, 8]);
+        i.reuse(&[1]);
+        assert_eq!(i.data, vec![0]);
+        i.reuse(&[1]);
+        assert_eq!(i.shape, vec![1]);
     }
 }

@@ -1,0 +1,121 @@
+//! Counting allocator shim for the hot-path allocation gate.
+//!
+//! [`CountingAlloc`] delegates every request to the system allocator and
+//! bumps two counters on each *acquisition* (alloc / alloc_zeroed /
+//! realloc — frees are not counted, the gate cares about demand, not
+//! balance): a process-wide total and a per-thread count. The hotpath
+//! bench diffs [`thread_allocs`] around the steady-state decode window
+//! and hard-fails if the delta is nonzero.
+//!
+//! The shim is **not** installed by the library: binaries that want the
+//! gate opt in with
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: cdlm::util::alloc_count::CountingAlloc = CountingAlloc;
+//! ```
+//!
+//! (the `cdlm` CLI and the `hot_path` integration test do). Everything
+//! else — the library unit tests, the other integration-test binaries,
+//! the benches — keeps the plain system allocator, so the counters read
+//! zero there and [`counting_enabled`] reports whether the shim is
+//! live. Counting costs one relaxed atomic increment plus one TLS
+//! bump per acquisition; it is cheap enough to leave on for every
+//! `cdlm` subcommand.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static PROCESS_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// A `#[global_allocator]` that counts heap acquisitions. Zero-sized;
+/// safe to construct in a `static`.
+pub struct CountingAlloc;
+
+impl CountingAlloc {
+    #[inline]
+    fn bump() {
+        PROCESS_ALLOCS.fetch_add(1, Ordering::Relaxed);
+        // try_with: TLS may already be torn down when a thread's own
+        // destructors free memory — those frees still allocate nothing,
+        // but a realloc there must not abort the process.
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+    }
+}
+
+// SAFETY: pure pass-through to `System`; the counters never influence
+// the returned pointers or layouts.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        Self::bump();
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        Self::bump();
+        unsafe { System.alloc_zeroed(layout) }
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        // a realloc is a fresh acquisition even when it shrinks or
+        // resizes in place: the hot path must not reach the allocator
+        // at all, so any call counts against the gate
+        Self::bump();
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+}
+
+/// Heap acquisitions performed by the calling thread since it started.
+/// Reads 0 when [`CountingAlloc`] is not installed.
+pub fn thread_allocs() -> u64 {
+    THREAD_ALLOCS.try_with(Cell::get).unwrap_or(0)
+}
+
+/// Process-wide heap acquisitions. Reads 0 when [`CountingAlloc`] is
+/// not installed.
+pub fn process_allocs() -> u64 {
+    PROCESS_ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Whether the counting allocator is actually the global allocator of
+/// this binary: forces one boxed allocation and checks that the
+/// thread-local counter moved. Gate drivers call this first so a
+/// mis-wired binary fails loudly instead of "measuring" zero allocs
+/// with a counter nothing increments.
+pub fn counting_enabled() -> bool {
+    let before = thread_allocs();
+    drop(std::hint::black_box(Box::new(0u64)));
+    thread_allocs() > before
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The library test binary does NOT install the shim, so these
+    // tests pin the uninstalled behavior; tests/hot_path.rs installs
+    // it and pins the counting behavior.
+
+    #[test]
+    fn uninstalled_counters_stay_flat() {
+        assert!(!counting_enabled());
+        let before = thread_allocs();
+        drop(std::hint::black_box(vec![0u8; 4096]));
+        assert_eq!(thread_allocs(), before);
+        assert_eq!(process_allocs(), 0);
+    }
+}

@@ -4,6 +4,7 @@
 //! usual suspects (serde, clap, rand, criterion, proptest) are replaced
 //! by these small, fully-tested modules.
 
+pub mod alloc_count;
 pub mod cli;
 pub mod json;
 pub mod prop;
