@@ -3,9 +3,9 @@
 
 CARGO ?= cargo
 
-.PHONY: ci verify fmt clippy build test smoke check-baseline shard-smoke chaos-smoke hotpath check-pjrt bench clean
+.PHONY: ci verify fmt clippy build test smoke check-baseline shard-smoke chaos-smoke hotpath preempt-smoke check-pjrt bench clean
 
-ci: fmt clippy build test smoke check-baseline shard-smoke chaos-smoke hotpath check-pjrt
+ci: fmt clippy build test smoke check-baseline shard-smoke chaos-smoke hotpath preempt-smoke check-pjrt
 
 # Tier-1 verify (the regression gate), exactly as the roadmap states it.
 verify:
@@ -67,6 +67,16 @@ chaos-smoke:
 # only the allocation count gates.
 hotpath:
 	$(CARGO) run --release --bin cdlm -- bench --scenario hotpath --methods all --batches 1,4 --repeats 6 --out BENCH_hotpath.json
+
+# SLO-preemption pressure cooker (schema cdlm.bench.preempt/v1): an
+# over-subscribed paged pool (contiguous cap 2 lanes) runs waves of 4,
+# trims to the cap by spilling lanes to the host cold tier at the first
+# block boundary, and resumes them after the survivors drain. HARD
+# gates: over-subscription happened, resumes == preempts > 0 with
+# spilled bytes, and every preempted request byte-identical to its
+# uninterrupted twin. Resume-latency percentiles are trend data only.
+preempt-smoke:
+	$(CARGO) run --release --bin cdlm -- bench --scenario preempt --method cdlm --n 16 --out BENCH_preempt.json
 
 # Type-check the off-by-default PJRT seam against the vendored xla API
 # stub (the `pjrt` feature gates real execution behind the real crate).

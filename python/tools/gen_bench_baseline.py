@@ -566,6 +566,33 @@ def main():
             "total_steps": total_steps,
             "total_model_calls": total_calls,
         })
+    # preempted-lane accounting cells (rust: `cdlm bench` machine-path
+    # harness — the same min(4, n)-lane machine batch, but every live
+    # lane is suspended to the KV pool's cold tier and immediately
+    # resumed at the first block boundary). Preemption is REQUIRED to
+    # be invisible in the accounting: the rust harness checks each run
+    # byte-identical to its uninterrupted twin in-bench, so the
+    # baseline integers are simply those of the uninterrupted batch,
+    # keyed separately with "preempt": 1 — any drift the spill/reseat
+    # round trip ever introduces fails the CI gate.
+    for method, model in METHODS:
+        ms = model_seed(model)
+        bs = min(4, len(prompts))
+        outs = decode_batch(method, ms, prompts[:bs])
+        tokens = sum(s.gen_length() for s in outs)
+        total_steps = sum(s.steps for s in outs)
+        total_calls = sum(s.model_calls for s in outs)
+        print(f"{method:<14} {bs:>6} preempt: tokens {tokens}, "
+              f"steps {total_steps}, calls {total_calls}")
+        cells.append({
+            "method": method,
+            "batch": bs,
+            "preempt": 1,
+            "requests": len(outs),
+            "tokens": tokens,
+            "total_steps": total_steps,
+            "total_model_calls": total_calls,
+        })
     doc = {
         "schema": "cdlm.bench.decode/v1",
         "backend": "reference",

@@ -31,10 +31,11 @@ fn main() {
     );
     for bs in core.rt.manifest.buckets.clone() {
         let mut pool = KvPool::new(&g, bs);
-        let slots: Vec<_> = (0..bs).map(|_| pool.alloc().unwrap()).collect();
+        let leases: Vec<_> = (0..bs).map(|_| pool.alloc().unwrap()).collect();
+        let lrefs: Vec<_> = leases.iter().collect();
         let kp = vec![0.5f32; l * bs * h * p * dh];
-        for (lane, &slot) in slots.iter().enumerate() {
-            pool.write_prefill(slot, lane, bs, &kp, &kp);
+        for (lane, lease) in leases.iter().enumerate() {
+            pool.write_prefill(lease, lane, bs, &kp, &kp).unwrap();
         }
         let vf = TensorI32::from_vec(&[bs], vec![0; bs]);
         let blk = TensorI32::from_vec(&[bs, b], vec![5; bs * b]);
@@ -47,7 +48,7 @@ fn main() {
         let mut blk_out = BlockStepOut::default();
         let st = stats::bench(2, 10, || {
             progs
-                .student_block_step(bs, b, &pool.view(&slots, p), &vf, &blk,
+                .student_block_step(bs, b, &pool.view(&lrefs), &vf, &blk,
                                     p as i32, &mut blk_out)
                 .unwrap();
         });
@@ -72,29 +73,30 @@ fn main() {
     // materialization device backends still pay behind the seam
     let bs = 4;
     let mut pool = KvPool::new(&g, bs);
-    let slots: Vec<_> = (0..bs).map(|_| pool.alloc().unwrap()).collect();
+    let leases: Vec<_> = (0..bs).map(|_| pool.alloc().unwrap()).collect();
+    let lrefs: Vec<_> = leases.iter().collect();
     let kp = vec![0.5f32; l * bs * h * p * dh];
-    for (lane, &slot) in slots.iter().enumerate() {
-        pool.write_prefill(slot, lane, bs, &kp, &kp);
+    for (lane, lease) in leases.iter().enumerate() {
+        pool.write_prefill(lease, lane, bs, &kp, &kp).unwrap();
     }
     let view_cost = stats::bench(5, 100, || {
-        let v = pool.view(&slots, p);
+        let v = pool.view(&lrefs);
         std::hint::black_box(v.cache_len());
     });
     let gather_cost = stats::bench(5, 100, || {
-        let (k, v) = pool.view(&slots, p).to_batch_major();
+        let (k, v) = pool.view(&lrefs).to_batch_major();
         std::hint::black_box((k.numel(), v.numel()));
     });
     println!(
         "kv view (bs=4, zero-copy): {:.2}us   batch-major materialize \
-         (pjrt seam only): {:.1}us   bytes/slot: {}KiB",
+         (pjrt seam only): {:.1}us   bytes/lane: {}KiB",
         view_cost.mean() * 1e6,
         gather_cost.mean() * 1e6,
-        pool.bytes_per_slot() / 1024
+        pool.bytes_per_lane() / 1024
     );
-    // one commit (append-only; repeated commits would overflow the slot)
+    // one commit (append-only; repeated commits would overflow the lane)
     let kb = vec![0.5f32; l * bs * h * b * dh];
     let t0 = std::time::Instant::now();
-    pool.commit_block(slots[0], 0, bs, b, &kb, &kb);
+    pool.commit_block(&leases[0], 0, bs, b, &kb, &kb).unwrap();
     println!("kv commit (one block): {:.1}us", t0.elapsed().as_secs_f64() * 1e6);
 }

@@ -260,17 +260,20 @@ pub fn drain_and_audit(
 const ACCOUNTING_FIELDS: [&str; 4] =
     ["requests", "tokens", "total_steps", "total_model_calls"];
 
-/// Cell identity: (method, batch, cancel_at_block, routed). Full-decode
-/// cells have no `cancel_at_block` field and key as `u64::MAX`; the
-/// cancelled-lane cells key by the block cycle the cancellation fired
-/// at, so the same (method, batch) can carry both cell kinds. `routed`
-/// (0/1) separates the sharded-router solo-cohort cells from the direct
-/// batch-1 cells: their accounting is identical by construction, and
-/// keying them apart is what lets the CI replica matrix gate the routed
-/// numbers without touching the direct ones.
+/// Cell identity: (method, batch, cancel_at_block, routed, preempt).
+/// Full-decode cells have no `cancel_at_block` field and key as
+/// `u64::MAX`; the cancelled-lane cells key by the block cycle the
+/// cancellation fired at, so the same (method, batch) can carry both
+/// cell kinds. `routed` (0/1) separates the sharded-router solo-cohort
+/// cells from the direct batch-1 cells: their accounting is identical
+/// by construction, and keying them apart is what lets the CI replica
+/// matrix gate the routed numbers without touching the direct ones.
+/// `preempt` (0/1) likewise separates the suspend/spill/resume cells —
+/// whose accounting must equal the uninterrupted run of the same
+/// (method, batch) — from that uninterrupted run itself.
 fn cell_key(
     cell: &crate::util::json::Json,
-) -> Option<(String, u64, u64, u64)> {
+) -> Option<(String, u64, u64, u64, u64)> {
     let m = cell.get("method")?.as_str()?.to_string();
     let b = cell.get("batch")?.as_f64()?;
     let c = cell
@@ -283,16 +286,22 @@ fn cell_key(
         .and_then(crate::util::json::Json::as_f64)
         .map(|v| v as u64)
         .unwrap_or(0);
-    Some((m, b as u64, c, r))
+    let p = cell
+        .get("preempt")
+        .and_then(crate::util::json::Json::as_f64)
+        .map(|v| v as u64)
+        .unwrap_or(0);
+    Some((m, b as u64, c, r, p))
 }
 
 /// Human label for drift reports.
-fn cell_label(key: &(String, u64, u64, u64)) -> String {
+fn cell_label(key: &(String, u64, u64, u64, u64)) -> String {
     let routed = if key.3 != 0 { "/routed" } else { "" };
+    let preempt = if key.4 != 0 { "/preempt" } else { "" };
     if key.2 == u64::MAX {
-        format!("{}/bs{}{routed}", key.0, key.1)
+        format!("{}/bs{}{routed}{preempt}", key.0, key.1)
     } else {
-        format!("{}/bs{}/cancel@{}{routed}", key.0, key.1, key.2)
+        format!("{}/bs{}/cancel@{}{routed}{preempt}", key.0, key.1, key.2)
     }
 }
 
@@ -435,6 +444,30 @@ mod tests {
         let err = check_baseline(&drifted, &base).unwrap_err();
         assert!(err.contains("cancel@2"), "{err}");
         assert!(!err.contains("cdlm/bs1:"), "full cell must not drift: {err}");
+    }
+
+    #[test]
+    fn preempt_cells_key_separately_from_uninterrupted_cells() {
+        // a suspend/spill/resume cell shares (method, batch) with the
+        // uninterrupted cell it must match — the gate keys them apart
+        // so a drift names the preempt cell, not the uninterrupted one
+        let preempt = |calls: f64| {
+            let mut c = cell("cdlm", 4.0, calls);
+            if let Json::Obj(ref mut m) = c {
+                m.insert("preempt".into(), Json::num(1.0));
+            }
+            c
+        };
+        let base = doc(vec![cell("cdlm", 4.0, 42.0), preempt(42.0)]);
+        let same = doc(vec![cell("cdlm", 4.0, 42.0), preempt(42.0)]);
+        assert!(check_baseline(&same, &base).is_ok());
+        let drifted = doc(vec![cell("cdlm", 4.0, 42.0), preempt(43.0)]);
+        let err = check_baseline(&drifted, &base).unwrap_err();
+        assert!(err.contains("cdlm/bs4/preempt"), "{err}");
+        assert!(
+            !err.contains("cdlm/bs4:"),
+            "uninterrupted cell must not drift: {err}"
+        );
     }
 
     #[test]

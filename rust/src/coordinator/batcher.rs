@@ -179,6 +179,19 @@ impl<T> DynamicBatcher<T> {
         self.queues.get(key).map_or(0, Vec::len)
     }
 
+    /// Highest scheduling weight among `key`'s queued requests, scored
+    /// by the caller's `weight` (the serving worker passes its
+    /// age-boosted effective priority). `None` when nothing of `key` is
+    /// queued — the preemption pass reads that as "no challenger" and
+    /// leaves every live lane alone.
+    pub fn max_priority_for(
+        &self,
+        key: &GroupKey,
+        weight: impl Fn(&Pending<T>) -> i64,
+    ) -> Option<i64> {
+        self.queues.get(key)?.iter().map(weight).max()
+    }
+
     /// Work-stealing drain: up to `n` oldest *live* requests of `key`
     /// that have already waited at least `min_wait` at `now`. The age
     /// gate keeps thieves honest — a fresh arrival routed here by
@@ -506,6 +519,28 @@ mod tests {
         }
         rest.sort_unstable();
         assert_eq!(rest, vec![3, 4]);
+    }
+
+    #[test]
+    fn max_priority_scans_only_the_requested_key() {
+        let mut b = DynamicBatcher::new(8, Duration::from_secs(100));
+        let t = Instant::now();
+        assert_eq!(
+            b.max_priority_for(&key(Method::Cdlm), |p| p.payload as i64),
+            None,
+            "empty key has no challenger"
+        );
+        b.push(pend(Method::Cdlm, 3, t));
+        b.push(pend(Method::Cdlm, 7, t));
+        b.push(pend(Method::Ar, 99, t));
+        assert_eq!(
+            b.max_priority_for(&key(Method::Cdlm), |p| p.payload as i64),
+            Some(7)
+        );
+        assert_eq!(
+            b.max_priority_for(&key(Method::Vanilla), |p| p.payload as i64),
+            None
+        );
     }
 
     #[test]

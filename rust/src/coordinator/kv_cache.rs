@@ -1,5 +1,5 @@
-//! Block KV-cache manager: lane slots + ref-counted shared-prefix
-//! chains.
+//! Paged block KV-cache manager: leased per-lane page tables +
+//! ref-counted shared-prefix chains.
 //!
 //! Exact block-level caching is the paper's second pillar (§4.3): the
 //! prompt KV is written at prefill, each completed block's KV is
@@ -10,47 +10,120 @@
 //! share a block-aligned token prefix can share the cached KV for it
 //! verbatim.
 //!
-//! The pool therefore owns two kinds of storage inside one pair of
-//! contiguous K/V slabs:
+//! Since the paged refactor a lane no longer owns one contiguous
+//! `[L, H, S, dh]` slot. The pool's pair of contiguous K/V slabs is
+//! carved into three fixed-size page regions:
 //!
-//! * **lane slots** — the classic one-owner `[L, H, S, dh]` regions
-//!   with O(1) alloc/free; every decode engine commits generated-block
-//!   KV here, and engines that never share (the closed-batch baselines,
-//!   the approximate-cache teachers) keep their whole cache here;
-//! * **prefix pages** — block-granular `[L, H, B, dh]` regions indexed
-//!   by a token-id trie ([`ChainNode`]) and shared across lanes with
-//!   refcounts. A lane that admits with a cached prompt pins its chain
-//!   (one refcount per node); retirement unpins; unpinned chains stay
-//!   resident as a warm cache until an LRU evictor reclaims them under
-//!   page pressure. Eviction is leaf-first and never touches a pinned
-//!   node, so a live lane's prefix can never be freed under it (the
-//!   pinned-chain guarantee `tests/prefix_cache.rs` pins).
+//! * **prompt pages** — `[L, H, P, dh]` regions holding one private
+//!   prompt prefill each, allocated at the lane's first write (lanes
+//!   that admit against a shared prefix chain never take one);
+//! * **tail pages** — `[L, H, B, dh]` block-granular regions holding
+//!   generated-block KV, allocated on demand exactly when a commit
+//!   first crosses a block boundary. Decode concurrency is therefore
+//!   bounded by *pages touched*, not by a contiguous slot count — an
+//!   over-subscribed pool ([`KvPool::with_page_budgets`]) holds more
+//!   live lanes than whole-sequence slots would ever fit;
+//! * **prefix pages** — block-granular regions indexed by a token-id
+//!   trie ([`ChainNode`]) and shared across lanes with refcounts
+//!   (unchanged from the shared-prefix refactor): pin on admit, unpin
+//!   on retire, leaf-first LRU eviction that never touches a pinned
+//!   node.
 //!
-//! Divergence is copy-on-write by construction: a prompt that shares
-//! `k` blocks and then differs branches the trie at block `k` — the
-//! divergent tail gets fresh pages and the shared prefix is never
-//! overwritten.
+//! Every lane is owned through an opaque RAII [`KvLease`]: allocation
+//! returns the lease, all writes and views require it, and giving it
+//! back ([`KvPool::release`]) — or merely dropping it — frees the
+//! lane's pages and unpins its chain. Double-free and view-after-free
+//! are unrepresentable: there is no second lease to misuse.
 //!
-//! Engines never copy the cache out: [`KvPool::view`] lends a zero-copy
-//! [`KvView`] whose per-lane segment runs stitch shared pages and the
-//! private slot together; commits append in place per lane. Device
+//! On top of paging the pool supports **preemption**: at a block
+//! boundary [`KvPool::suspend`] consumes a lane's lease, spills its
+//! allocated pages into a host-side cold-tier byte arena
+//! ([`SuspendedKv`]), and frees the pages for other lanes — keeping
+//! the prefix chain pinned so eviction cannot reclaim it under the
+//! parked request. [`KvPool::resume`] reallocates pages, copies the
+//! bytes back, and returns a fresh lease; decode continues
+//! byte-identically because the slab content, segment geometry, and
+//! `cache_len` are restored exactly.
+//!
+//! Engines never copy the cache out: [`KvPool::view`] lends a
+//! zero-copy [`KvView`] whose per-lane segment runs stitch shared
+//! prefix pages, the prompt page, and the tail pages together; commits
+//! append in place per lane. Segment runs are cached per lane, so a
+//! view over ≤ [`INLINE_LANES`] lanes allocates nothing. Device
 //! backends that need the batch-major layout materialize it behind the
 //! seam via `KvView::to_batch_major`.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::runtime::{Geometry, KvDims, KvSeg, KvView, INLINE_LANES};
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub struct SlotId(usize);
+/// Pool identity counter backing [`KvLease`]'s foreign-lease guard.
+static NEXT_POOL_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Owning handle for one allocated lane: the capability every write
+/// and view requires. Releasing it ([`KvPool::release`]) frees the
+/// lane's pages and unpins its chain immediately; merely dropping it
+/// parks the lane on the pool's reaper list, which the next
+/// [`KvPool::alloc`] drains — so a leaked lease can delay a free but
+/// can never leak pages, and a freed lane can never be written or
+/// viewed again (the lease is gone).
+#[derive(Debug)]
+pub struct KvLease {
+    lane: usize,
+    pool_id: u64,
+    /// Cleared when the pool consumes the lease (release / suspend):
+    /// a disarmed drop must not push the lane to the reaper.
+    armed: bool,
+    reaper: Arc<Mutex<Vec<usize>>>,
+}
+
+impl Drop for KvLease {
+    fn drop(&mut self) {
+        if self.armed {
+            if let Ok(mut r) = self.reaper.lock() {
+                r.push(self.lane);
+            }
+        }
+    }
+}
+
+/// A suspended lane's cold-tier state: little-endian f32 bytes of every
+/// allocated page (prompt page first, then tail pages, K before V per
+/// page), plus the geometry needed to rebuild the lane exactly. The
+/// prefix chain stays **pinned** while parked — [`KvPool::resume`]
+/// reattaches it without re-incrementing refs, and a parked request
+/// that aborts must hand its state to [`KvPool::discard_suspended`] so
+/// the pins drop.
+#[derive(Debug)]
+pub struct SuspendedKv {
+    bytes: Vec<u8>,
+    cache_len: usize,
+    chain: Vec<usize>,
+    needs_prompt_page: bool,
+    n_tail: usize,
+}
+
+impl SuspendedKv {
+    /// Cold-tier footprint in bytes.
+    pub fn spilled_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// Valid-prefix length the lane resumes at.
+    pub fn cache_len(&self) -> usize {
+        self.cache_len
+    }
+}
 
 /// A pinned prefix chain: the trie path (root-first) whose pages hold
 /// one full prompt's KV. Produced by [`KvPool::prefix_acquire_full`] /
 /// [`KvPool::prefix_install`] with every node's refcount already
 /// incremented; hand it to [`KvPool::attach_chain`] so the owning
-/// slot's retirement unpins it.
+/// lease's release unpins it.
 #[derive(Debug)]
 pub struct ChainPin {
     nodes: Vec<usize>,
@@ -67,6 +140,17 @@ fn page_len_of(geom: &Geometry) -> usize {
         geom.block_size
     } else {
         geom.prompt_len.max(1)
+    }
+}
+
+/// Positions per decode-tail page: the block size (commits are
+/// block-granular, so pages fill exactly), or the whole gen region when
+/// the geometry has no blocks.
+fn tail_len_of(geom: &Geometry) -> usize {
+    if geom.block_size > 0 {
+        geom.block_size
+    } else {
+        (geom.seq_len - geom.prompt_len).max(1)
     }
 }
 
@@ -108,31 +192,51 @@ struct ChainNode {
     ar_tok: Option<i32>,
 }
 
-/// Slab pool with O(1) slot alloc/free plus the shared-prefix page
-/// store and its trie index.
+/// Paged slab pool: leased lanes over on-demand prompt/tail pages plus
+/// the shared-prefix page store and its trie index.
 pub struct KvPool {
     dims: KvDims,
     prompt_len: usize,
-    /// Positions per prefix page (the prefix-sharing granularity):
-    /// the geometry block size when it divides the prompt, else the
-    /// whole prompt as a single block.
+    /// Positions per prefix page (the prefix-sharing granularity).
     page_len: usize,
-    /// Pages covering one full prompt.
+    /// Prefix pages covering one full prompt.
     prompt_pages: usize,
-    k: Vec<f32>, // [slots | pages], lane-major regions
+    /// Positions per decode-tail page.
+    tail_len: usize,
+    /// Tail pages covering one full gen region.
+    tail_pages_full: usize,
+    k: Vec<f32>, // [prompt pages | tail pages | prefix pages]
     v: Vec<f32>,
-    // ---- lane slots (one owner each)
+    // ---- lanes (leased, one owner each)
     cache_lens: Vec<usize>,
-    used: Vec<bool>,
-    free: Vec<usize>,
-    slot_elems: usize,
-    /// Per-slot attached chain (trie node path); empty = private slot
-    /// only.
+    lane_used: Vec<bool>,
+    lane_free: Vec<usize>,
+    /// Per-lane attached chain (trie node path); empty = no shared
+    /// prefix.
     chains: Vec<Vec<usize>>,
+    /// Per-lane private prompt page (chained lanes never hold one).
+    prompt_page_of: Vec<Option<usize>>,
+    /// Per-lane tail pages in position order.
+    tail_pages_of: Vec<Vec<usize>>,
+    /// Cached per-lane segment runs, kept exactly in sync with the
+    /// page tables above so views allocate nothing.
+    seg_runs: Vec<Vec<KvSeg>>,
+    /// Dropped-but-unreleased leases, reaped at the next alloc.
+    reaper: Arc<Mutex<Vec<usize>>>,
+    pool_id: u64,
+    // ---- page free lists
+    prompt_page_elems: usize,
+    tail_page_elems: usize,
+    prompt_free: Vec<usize>,
+    tail_free: Vec<usize>,
+    prompt_budget: usize,
+    tail_budget: usize,
     // ---- prefix pages (shared, ref-counted)
     page_elems: usize,
-    /// Element offset where the page region starts in the slabs.
+    /// Element offset where the prefix-page region starts in the slabs.
     page_region: usize,
+    /// Element offset where the tail-page region starts in the slabs.
+    tail_region: usize,
     page_used: Vec<bool>,
     page_free: Vec<usize>,
     // ---- trie
@@ -142,11 +246,10 @@ pub struct KvPool {
     lru_tick: u64,
     // ---- counters
     pub peak_in_use: usize,
-    /// Lifetime alloc count. With mid-batch slot recycling (continuous
-    /// batching retires a lane and hands its slot to the next
-    /// admission) this exceeds `capacity` on a busy pool — aggregated
-    /// across pools as `kv_total_allocs` on `/healthz`, an
-    /// admission-churn signal.
+    /// Lifetime alloc count. With mid-batch lane recycling (continuous
+    /// batching retires a lane and hands it to the next admission) this
+    /// exceeds `capacity` on a busy pool — aggregated across pools as
+    /// `kv_total_allocs` on `/healthz`, an admission-churn signal.
     pub total_allocs: u64,
     /// Full-prompt chain hits: admissions that skipped prefill
     /// entirely.
@@ -156,6 +259,12 @@ pub struct KvPool {
     pub prefix_hit_blocks: u64,
     /// Chain blocks reclaimed by the LRU evictor under page pressure.
     pub prefix_evictions: u64,
+    /// Lanes suspended to the cold tier ([`KvPool::suspend`]).
+    pub preempts: u64,
+    /// Lanes brought back from the cold tier ([`KvPool::resume`]).
+    pub resumes: u64,
+    /// Lifetime bytes spilled to the cold tier.
+    pub spilled_bytes: u64,
     /// Armed by [`KvPool::inject_alloc_failures`] (fault injection):
     /// while nonzero, `alloc` fails and decrements it. Zero in
     /// production — only a `FaultPlan` ever arms it.
@@ -163,11 +272,15 @@ pub struct KvPool {
 }
 
 impl KvPool {
-    /// A pool with `capacity` lane slots and **no** prefix pages: the
-    /// layout every closed-batch path uses (those engines always
-    /// prefill into private slots, keeping the trace-pinned baseline
-    /// accounting cold by construction). The block-step machine builds
-    /// its pool with [`KvPool::with_prefix_pages`] instead.
+    /// A fully provisioned pool with `capacity` lanes and **no**
+    /// prefix pages: the layout every closed-batch path uses (those
+    /// engines always prefill into private pages, keeping the
+    /// trace-pinned baseline accounting cold by construction). Fully
+    /// provisioned means every lane can hold its whole sequence, so
+    /// on-demand page allocation can never fail on these paths. The
+    /// block-step machine builds its pool with
+    /// [`KvPool::with_prefix_pages`] instead; the preempt bench
+    /// over-subscribes with [`KvPool::with_page_budgets`].
     pub fn new(geom: &Geometry, capacity: usize) -> Self {
         Self::with_prefix_pages(geom, capacity, 0)
     }
@@ -180,35 +293,79 @@ impl KvPool {
         2 * capacity * (geom.prompt_len / page_len_of(geom))
     }
 
-    /// A pool with an explicit prefix-page budget (tests exercise
-    /// eviction pressure through this constructor).
+    /// A fully provisioned pool with an explicit prefix-page budget
+    /// (tests exercise eviction pressure through this constructor).
     pub fn with_prefix_pages(
         geom: &Geometry,
         capacity: usize,
         page_capacity: usize,
     ) -> Self {
+        let tail_pages_full = (geom.seq_len - geom.prompt_len)
+            .max(1)
+            .div_ceil(tail_len_of(geom));
+        Self::with_page_budgets(
+            geom,
+            capacity,
+            capacity,
+            capacity * tail_pages_full,
+            page_capacity,
+        )
+    }
+
+    /// A pool with explicit lane/page budgets. `prompt_budget` and
+    /// `tail_budget` may **under-provision** `lanes` (fewer pages than
+    /// every lane's full sequence needs): writes then fail with a typed
+    /// error when the free lists run dry, and the caller is expected to
+    /// suspend lanes to make progress — the preempt bench and
+    /// preemption tests build their pressure cookers through this
+    /// constructor.
+    pub fn with_page_budgets(
+        geom: &Geometry,
+        lanes: usize,
+        prompt_budget: usize,
+        tail_budget: usize,
+        page_capacity: usize,
+    ) -> Self {
         let dims = KvDims::of(geom);
-        let slot_elems = dims.slot_elems();
         let page_len = page_len_of(geom);
         let prompt_pages = geom.prompt_len / page_len;
-        let page_elems =
-            dims.n_layers * dims.n_heads * page_len * dims.d_head;
-        let page_region = capacity * slot_elems;
+        let tail_len = tail_len_of(geom);
+        let tail_pages_full =
+            (geom.seq_len - geom.prompt_len).max(1).div_ceil(tail_len);
+        let row = dims.n_layers * dims.n_heads * dims.d_head;
+        let prompt_page_elems = row * geom.prompt_len;
+        let tail_page_elems = row * tail_len;
+        let page_elems = row * page_len;
+        let tail_region = prompt_budget * prompt_page_elems;
+        let page_region = tail_region + tail_budget * tail_page_elems;
         let total = page_region + page_capacity * page_elems;
         Self {
             dims,
             prompt_len: geom.prompt_len,
             page_len,
             prompt_pages,
+            tail_len,
+            tail_pages_full,
             k: vec![0.0; total],
             v: vec![0.0; total],
-            cache_lens: vec![0; capacity],
-            used: vec![false; capacity],
-            free: (0..capacity).rev().collect(),
-            slot_elems,
-            chains: (0..capacity).map(|_| Vec::new()).collect(),
+            cache_lens: vec![0; lanes],
+            lane_used: vec![false; lanes],
+            lane_free: (0..lanes).rev().collect(),
+            chains: (0..lanes).map(|_| Vec::new()).collect(),
+            prompt_page_of: vec![None; lanes],
+            tail_pages_of: (0..lanes).map(|_| Vec::new()).collect(),
+            seg_runs: (0..lanes).map(|_| Vec::new()).collect(),
+            reaper: Arc::new(Mutex::new(Vec::new())),
+            pool_id: NEXT_POOL_ID.fetch_add(1, Ordering::Relaxed),
+            prompt_page_elems,
+            tail_page_elems,
+            prompt_free: (0..prompt_budget).rev().collect(),
+            tail_free: (0..tail_budget).rev().collect(),
+            prompt_budget,
+            tail_budget,
             page_elems,
             page_region,
+            tail_region,
             page_used: vec![false; page_capacity],
             page_free: (0..page_capacity).rev().collect(),
             nodes: Vec::new(),
@@ -220,20 +377,27 @@ impl KvPool {
             prefix_hits: 0,
             prefix_hit_blocks: 0,
             prefix_evictions: 0,
+            preempts: 0,
+            resumes: 0,
+            spilled_bytes: 0,
             forced_alloc_failures: 0,
         }
     }
 
     pub fn capacity(&self) -> usize {
-        self.used.len()
+        self.lane_used.len()
     }
 
     pub fn in_use(&self) -> usize {
-        self.used.len() - self.free.len()
+        self.lane_used.len() - self.lane_free.len()
     }
 
-    pub fn bytes_per_slot(&self) -> usize {
-        2 * self.slot_elems * std::mem::size_of::<f32>()
+    /// Full per-lane KV footprint (prompt page + a whole gen region of
+    /// tail pages, K and V).
+    pub fn bytes_per_lane(&self) -> usize {
+        2 * (self.prompt_page_elems
+            + self.tail_pages_full * self.tail_page_elems)
+            * std::mem::size_of::<f32>()
     }
 
     /// Positions per prefix page (the block-aligned sharing
@@ -245,6 +409,34 @@ impl KvPool {
     /// Pages that make up one full prompt chain.
     pub fn prompt_pages(&self) -> usize {
         self.prompt_pages
+    }
+
+    /// Positions per decode-tail page.
+    pub fn tail_len(&self) -> usize {
+        self.tail_len
+    }
+
+    /// Tail pages covering one full gen region.
+    pub fn tail_pages_full(&self) -> usize {
+        self.tail_pages_full
+    }
+
+    pub fn prompt_page_budget(&self) -> usize {
+        self.prompt_budget
+    }
+
+    pub fn tail_page_budget(&self) -> usize {
+        self.tail_budget
+    }
+
+    /// Tail pages currently on the free list (the preemption
+    /// watermark signal).
+    pub fn tail_pages_free(&self) -> usize {
+        self.tail_free.len()
+    }
+
+    pub fn prompt_pages_free(&self) -> usize {
+        self.prompt_free.len()
     }
 
     /// Prefix pages currently resident (pinned or retained) — surfaced
@@ -265,47 +457,110 @@ impl KvPool {
         self.forced_alloc_failures += n;
     }
 
-    pub fn alloc(&mut self) -> Result<SlotId> {
+    #[inline]
+    fn check(&self, lease: &KvLease) {
+        assert_eq!(
+            lease.pool_id, self.pool_id,
+            "foreign KvLease: lease belongs to another pool"
+        );
+        debug_assert!(self.lane_used[lease.lane], "lease names a free lane");
+    }
+
+    fn make_lease(&self, lane: usize) -> KvLease {
+        KvLease {
+            lane,
+            pool_id: self.pool_id,
+            armed: true,
+            reaper: Arc::clone(&self.reaper),
+        }
+    }
+
+    /// Free lanes whose leases were dropped without an explicit
+    /// [`KvPool::release`]. Normal paths release explicitly; the
+    /// reaper is the safety net that turns a leaked lease into a
+    /// delayed free instead of a leaked lane.
+    fn reap_dropped(&mut self) {
+        let reaper = Arc::clone(&self.reaper);
+        let mut dropped = reaper.lock().expect("reaper lock");
+        for lane in dropped.drain(..) {
+            if self.lane_used[lane] {
+                self.free_lane(lane);
+            }
+        }
+    }
+
+    pub fn alloc(&mut self) -> Result<KvLease> {
+        self.reap_dropped();
         if self.forced_alloc_failures > 0 {
             self.forced_alloc_failures -= 1;
             anyhow::bail!("KV allocation failed (injected fault)");
         }
-        let idx = self
-            .free
+        let lane = self
+            .lane_free
             .pop()
             .ok_or_else(|| anyhow::anyhow!("KV pool exhausted"))?;
-        debug_assert!(!self.used[idx]);
-        debug_assert!(self.chains[idx].is_empty(), "freed slot kept a chain");
-        self.used[idx] = true;
-        self.cache_lens[idx] = 0;
+        debug_assert!(!self.lane_used[lane]);
+        debug_assert!(self.chains[lane].is_empty(), "freed lane kept a chain");
+        debug_assert!(self.prompt_page_of[lane].is_none());
+        debug_assert!(self.tail_pages_of[lane].is_empty());
+        self.lane_used[lane] = true;
+        self.cache_lens[lane] = 0;
+        self.seg_runs[lane].clear();
         self.peak_in_use = self.peak_in_use.max(self.in_use());
         self.total_allocs += 1;
-        Ok(SlotId(idx))
+        Ok(self.make_lease(lane))
     }
 
-    /// Free a slot. If a prefix chain is attached its refcounts drop by
-    /// one; the chain's pages stay resident as warm cache until the LRU
-    /// evictor needs them.
-    pub fn free(&mut self, id: SlotId) {
-        assert!(self.used[id.0], "double free of KV slot {id:?}");
-        let path = std::mem::take(&mut self.chains[id.0]);
-        for n in path {
+    /// Give a lane back: pages return to their free lists and an
+    /// attached prefix chain's refcounts drop by one (the chain's
+    /// pages stay resident as warm cache until the LRU evictor needs
+    /// them). Consuming the lease is what makes double-free
+    /// unrepresentable.
+    pub fn release(&mut self, mut lease: KvLease) {
+        self.check(&lease);
+        lease.armed = false;
+        let lane = lease.lane;
+        drop(lease);
+        self.free_lane(lane);
+    }
+
+    fn free_lane(&mut self, lane: usize) {
+        debug_assert!(self.lane_used[lane], "free of a free lane");
+        // unpin the chain in place (no Vec is dropped: lane state keeps
+        // its capacity across recycles, for the allocation-free hotpath)
+        for i in 0..self.chains[lane].len() {
+            let n = self.chains[lane][i];
             let node = self.nodes[n].as_mut().expect("chain node resident");
             debug_assert!(node.refs > 0, "unpin of an unpinned chain node");
             node.refs -= 1;
         }
-        self.used[id.0] = false;
+        self.chains[lane].clear();
+        if let Some(pg) = self.prompt_page_of[lane].take() {
+            self.prompt_free.push(pg);
+        }
+        while let Some(pg) = self.tail_pages_of[lane].pop() {
+            self.tail_free.push(pg);
+        }
+        self.seg_runs[lane].clear();
+        self.cache_lens[lane] = 0;
+        self.lane_used[lane] = false;
         // zeroing is unnecessary for correctness (cache_len gates reads)
-        self.free.push(id.0);
+        self.lane_free.push(lane);
     }
 
-    pub fn cache_len(&self, id: SlotId) -> usize {
-        self.cache_lens[id.0]
+    pub fn cache_len_of(&self, lease: &KvLease) -> usize {
+        self.check(lease);
+        self.cache_lens[lease.lane]
     }
 
     #[inline]
-    fn base(&self, id: SlotId) -> usize {
-        id.0 * self.slot_elems
+    fn prompt_base(&self, page: usize) -> usize {
+        page * self.prompt_page_elems
+    }
+
+    #[inline]
+    fn tail_base(&self, page: usize) -> usize {
+        self.tail_region + page * self.tail_page_elems
     }
 
     #[inline]
@@ -313,49 +568,330 @@ impl KvPool {
         self.page_region + page * self.page_elems
     }
 
-    /// Borrow a zero-copy view of `ids`' caches with the given lockstep
-    /// valid-prefix length. No cache data moves: each lane is a segment
-    /// run over the slabs — its pinned prefix pages (if a chain is
-    /// attached) followed by its private slot. An all-plain batch of up
-    /// to [`INLINE_LANES`] lanes (every closed-batch engine and the
-    /// block-step machine's cohorts) builds its view with **zero** heap
-    /// allocations: the bases live on the stack and the view stores them
-    /// inline. Chained lanes (prefix cache) still build per-lane segment
-    /// runs — that path allocates and is documented as off the hotpath
-    /// allocation gate.
-    pub fn view(&self, ids: &[SlotId], cache_len: usize) -> KvView<'_> {
-        if ids.iter().all(|&id| self.chains[id.0].is_empty()) {
-            if ids.len() <= INLINE_LANES {
-                let mut bases = [0usize; INLINE_LANES];
-                for (b, &id) in bases.iter_mut().zip(ids) {
-                    *b = self.base(id);
-                }
-                return KvView::new(
-                    &self.k,
-                    &self.v,
-                    &bases[..ids.len()],
-                    self.dims,
-                    cache_len,
+    /// Positions the lane's allocated pages cover (contiguous from 0).
+    #[inline]
+    fn covered(&self, lane: usize) -> usize {
+        self.seg_runs[lane].last().map(|s| s.start + s.len).unwrap_or(0)
+    }
+
+    /// Allocate pages on demand until the lane covers `[0, upto)`.
+    /// Partial progress is kept on failure (the lane stays consistent;
+    /// its pages free at release), so a failed write is safe to retry
+    /// after a suspend frees pages.
+    fn ensure_coverage(&mut self, lane: usize, upto: usize) -> Result<()> {
+        debug_assert!(upto <= self.dims.seq_len, "coverage beyond sequence");
+        if self.chains[lane].is_empty()
+            && self.prompt_page_of[lane].is_none()
+            && upto > 0
+        {
+            let Some(pg) = self.prompt_free.pop() else {
+                anyhow::bail!(
+                    "KV pool out of prompt pages ({} budgeted)",
+                    self.prompt_budget
                 );
-            }
-            let bases: Vec<usize> =
-                ids.iter().map(|&id| self.base(id)).collect();
-            return KvView::new(&self.k, &self.v, &bases, self.dims, cache_len);
+            };
+            self.prompt_page_of[lane] = Some(pg);
+            debug_assert!(self.seg_runs[lane].is_empty());
+            self.seg_runs[lane].push(KvSeg {
+                start: 0,
+                len: self.prompt_len,
+                base: self.prompt_base(pg),
+                region_len: self.prompt_len,
+                offset: 0,
+            });
         }
-        let lanes = ids.iter().map(|&id| self.lane_segs(id)).collect();
+        while self.covered(lane) < upto {
+            let Some(pg) = self.tail_free.pop() else {
+                anyhow::bail!(
+                    "KV pool out of tail pages ({} budgeted)",
+                    self.tail_budget
+                );
+            };
+            let start =
+                self.prompt_len + self.tail_pages_of[lane].len() * self.tail_len;
+            let len = self.tail_len.min(self.dims.seq_len - start);
+            self.tail_pages_of[lane].push(pg);
+            self.seg_runs[lane].push(KvSeg {
+                start,
+                len,
+                base: self.tail_base(pg),
+                region_len: self.tail_len,
+                offset: 0,
+            });
+        }
+        Ok(())
+    }
+
+    /// Scatter a batch-major `[L, bs, H, span_len, dh]` source span
+    /// covering absolute positions `[first_pos, first_pos + span_len)`
+    /// of `src_lane` into the lane's pages. Each overlapping segment
+    /// takes one contiguous `run * dh` copy per (layer, head).
+    fn write_span(
+        &mut self,
+        lane: usize,
+        src_lane: usize,
+        bs: usize,
+        first_pos: usize,
+        span_len: usize,
+        k: &[f32],
+        v: &[f32],
+    ) {
+        let g = self.dims;
+        let (l_n, h_n, d) = (g.n_layers, g.n_heads, g.d_head);
+        debug_assert!(
+            k.len() >= l_n * bs * h_n * span_len * d
+                && v.len() >= l_n * bs * h_n * span_len * d,
+            "KV source must be [L, bs={bs}, H, {span_len}, dh]"
+        );
+        let end = first_pos + span_len;
+        for si in 0..self.seg_runs[lane].len() {
+            let seg = self.seg_runs[lane][si];
+            let s0 = seg.start.max(first_pos);
+            let s1 = (seg.start + seg.len).min(end);
+            if s0 >= s1 {
+                continue;
+            }
+            let run = (s1 - s0) * d;
+            for l in 0..l_n {
+                for h in 0..h_n {
+                    let src = (((l * bs + src_lane) * h_n + h) * span_len
+                        + (s0 - first_pos))
+                        * d;
+                    let dst = seg.base
+                        + ((l * h_n + h) * seg.region_len
+                            + seg.offset
+                            + (s0 - seg.start))
+                            * d;
+                    self.k[dst..dst + run]
+                        .copy_from_slice(&k[src..src + run]);
+                    self.v[dst..dst + run]
+                        .copy_from_slice(&v[src..src + run]);
+                }
+            }
+        }
+    }
+
+    /// Install prefill output for one lane. `k`/`v` are batch-major
+    /// [L, bs, H, P, dh] slices from the prefill program; the prompt
+    /// page is allocated on demand and is the only region written.
+    pub fn write_prefill(
+        &mut self,
+        lease: &KvLease,
+        src_lane: usize,
+        bs: usize,
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<()> {
+        self.check(lease);
+        let lane = lease.lane;
+        debug_assert!(
+            self.chains[lane].is_empty(),
+            "write_prefill into a chained lane"
+        );
+        let p = self.prompt_len;
+        let g = self.dims;
+        assert_eq!(
+            k.len(),
+            g.n_layers * bs * g.n_heads * p * g.d_head,
+            "prefill KV must be [L, bs={bs}, H, P={p}, dh]"
+        );
+        self.ensure_coverage(lane, p)?;
+        self.write_span(lane, src_lane, bs, 0, p, k, v);
+        self.cache_lens[lane] = p;
+        Ok(())
+    }
+
+    /// Commit a finalized block's KV for one lane. `k_blk`/`v_blk` are
+    /// [L, bs, H, B, dh]; the block appends in place at the lane's
+    /// current cache_len, which advances by `blk` (exact append-only
+    /// caching). A tail page is allocated exactly when the commit
+    /// crosses into uncovered positions; under page pressure that
+    /// allocation fails with a typed error and the caller may suspend
+    /// a lane and retry.
+    pub fn commit_block(
+        &mut self,
+        lease: &KvLease,
+        src_lane: usize,
+        bs: usize,
+        blk: usize,
+        k_blk: &[f32],
+        v_blk: &[f32],
+    ) -> Result<()> {
+        self.check(lease);
+        let lane = lease.lane;
+        let pos = self.cache_lens[lane];
+        let s_n = self.dims.seq_len;
+        assert!(pos + blk <= s_n, "cache overflow: {pos} + {blk} > {s_n}");
+        debug_assert!(
+            self.chains[lane].is_empty() || pos >= self.prompt_len,
+            "commit into the shared prefix of a chained lane"
+        );
+        self.ensure_coverage(lane, pos + blk)?;
+        self.write_span(lane, src_lane, bs, pos, blk, k_blk, v_blk);
+        self.cache_lens[lane] = pos + blk;
+        Ok(())
+    }
+
+    /// Direct write of full-sequence KV (approximate-cache baselines):
+    /// overwrite the lane's pages with the stale full-sequence stacks
+    /// [L, bs, H, S, dh] and mark the whole sequence resident.
+    pub fn write_full(
+        &mut self,
+        lease: &KvLease,
+        src_lane: usize,
+        bs: usize,
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<()> {
+        self.check(lease);
+        let lane = lease.lane;
+        debug_assert!(
+            self.chains[lane].is_empty(),
+            "write_full into a chained lane"
+        );
+        let s_n = self.dims.seq_len;
+        self.ensure_coverage(lane, s_n)?;
+        self.write_span(lane, src_lane, bs, 0, s_n, k, v);
+        self.cache_lens[lane] = s_n;
+        Ok(())
+    }
+
+    /// Borrow a zero-copy view of the leased lanes' caches. No cache
+    /// data moves: each lane is its cached segment run over the slabs —
+    /// pinned prefix pages (if a chain is attached), the private prompt
+    /// page, then tail pages. The lockstep valid-prefix length is the
+    /// lanes' shared `cache_len` (debug-asserted equal). Batches up to
+    /// [`INLINE_LANES`] lanes build the view with **zero** heap
+    /// allocations.
+    pub fn view(&self, leases: &[&KvLease]) -> KvView<'_> {
+        self.view_padded(leases, leases.len())
+    }
+
+    /// [`KvPool::view`] widened to `pad_to` lanes: rows past the real
+    /// lanes alias the last real lane's segments (programs are compiled
+    /// per bucket width; padded rows are never read back).
+    pub fn view_padded(&self, leases: &[&KvLease], pad_to: usize) -> KvView<'_> {
+        assert!(!leases.is_empty(), "view of an empty cohort");
+        debug_assert!(pad_to >= leases.len(), "pad narrower than cohort");
+        let cache_len = self.cache_lens[leases[0].lane];
+        #[cfg(debug_assertions)]
+        for l in leases {
+            self.check(l);
+            debug_assert_eq!(
+                self.cache_lens[l.lane], cache_len,
+                "cohort lanes out of lockstep"
+            );
+        }
+        if pad_to <= INLINE_LANES {
+            let mut segs: [&[KvSeg]; INLINE_LANES] = [&[]; INLINE_LANES];
+            for (r, slot) in segs.iter_mut().enumerate().take(pad_to) {
+                let lane = leases[r.min(leases.len() - 1)].lane;
+                *slot = &self.seg_runs[lane];
+            }
+            return KvView::inline(
+                &self.k,
+                &self.v,
+                &segs[..pad_to],
+                self.dims,
+                cache_len,
+            );
+        }
+        let lanes: Vec<Vec<KvSeg>> = (0..pad_to)
+            .map(|r| self.seg_runs[leases[r.min(leases.len() - 1)].lane].clone())
+            .collect();
         KvView::segmented(&self.k, &self.v, lanes, self.dims, cache_len)
     }
 
-    fn lane_segs(&self, id: SlotId) -> Vec<KvSeg> {
-        let path = &self.chains[id.0];
-        if path.is_empty() {
-            return vec![KvSeg::full_slot(self.base(id), self.dims.seq_len)];
+    // -----------------------------------------------------------------
+    // Preemption: suspend / resume through the cold tier
+    // -----------------------------------------------------------------
+
+    fn spill_region(out: &mut Vec<u8>, slab: &[f32], base: usize, n: usize) {
+        for x in &slab[base..base + n] {
+            out.extend_from_slice(&x.to_le_bytes());
         }
-        let mut segs = Vec::with_capacity(path.len() + 1);
-        for (i, &n) in path.iter().enumerate() {
+    }
+
+    fn unspill_region(
+        bytes: &[u8],
+        cursor: &mut usize,
+        slab: &mut [f32],
+        base: usize,
+        n: usize,
+    ) {
+        for x in slab[base..base + n].iter_mut() {
+            let mut b = [0u8; 4];
+            b.copy_from_slice(&bytes[*cursor..*cursor + 4]);
+            *x = f32::from_le_bytes(b);
+            *cursor += 4;
+        }
+    }
+
+    /// Suspend a lane: consume its lease, spill every allocated page
+    /// to a cold-tier byte arena, and free the lane + pages for other
+    /// requests. The prefix chain is carried in the suspended state
+    /// **still pinned** — parking must not let the evictor reclaim the
+    /// prompt KV the lane will resume against.
+    pub fn suspend(&mut self, mut lease: KvLease) -> SuspendedKv {
+        self.check(&lease);
+        lease.armed = false;
+        let lane = lease.lane;
+        drop(lease);
+        let cache_len = self.cache_lens[lane];
+        let chain = std::mem::take(&mut self.chains[lane]);
+        let needs_prompt_page = self.prompt_page_of[lane].is_some();
+        let mut bytes = Vec::new();
+        if let Some(pg) = self.prompt_page_of[lane].take() {
+            let b = self.prompt_base(pg);
+            Self::spill_region(&mut bytes, &self.k, b, self.prompt_page_elems);
+            Self::spill_region(&mut bytes, &self.v, b, self.prompt_page_elems);
+            self.prompt_free.push(pg);
+        }
+        let n_tail = self.tail_pages_of[lane].len();
+        for i in 0..n_tail {
+            let b = self.tail_base(self.tail_pages_of[lane][i]);
+            Self::spill_region(&mut bytes, &self.k, b, self.tail_page_elems);
+            Self::spill_region(&mut bytes, &self.v, b, self.tail_page_elems);
+        }
+        while let Some(pg) = self.tail_pages_of[lane].pop() {
+            self.tail_free.push(pg);
+        }
+        self.seg_runs[lane].clear();
+        self.cache_lens[lane] = 0;
+        self.lane_used[lane] = false;
+        self.lane_free.push(lane);
+        self.preempts += 1;
+        self.spilled_bytes += bytes.len() as u64;
+        SuspendedKv { bytes, cache_len, chain, needs_prompt_page, n_tail }
+    }
+
+    /// Whether [`KvPool::resume`] would succeed right now: a free lane
+    /// plus enough free pages to rebuild the suspended lane exactly.
+    pub fn can_resume(&self, s: &SuspendedKv) -> bool {
+        !self.lane_free.is_empty()
+            && (!s.needs_prompt_page || !self.prompt_free.is_empty())
+            && self.tail_free.len() >= s.n_tail
+    }
+
+    /// Bring a suspended lane back: reallocate its pages, copy the
+    /// cold-tier bytes into them, rebuild the segment run, and
+    /// reattach the still-pinned chain (no refcount change). The
+    /// restored lane is byte-identical to the suspended one, so decode
+    /// continues exactly where it stopped. Check-then-commit: under
+    /// pressure the state is handed back untouched for a later retry.
+    pub fn resume(&mut self, s: SuspendedKv) -> Result<KvLease, SuspendedKv> {
+        self.reap_dropped();
+        if !self.can_resume(&s) {
+            return Err(s);
+        }
+        let lane = self.lane_free.pop().expect("can_resume checked a lane");
+        self.lane_used[lane] = true;
+        self.peak_in_use = self.peak_in_use.max(self.in_use());
+        self.seg_runs[lane].clear();
+        for (i, &n) in s.chain.iter().enumerate() {
             let page =
                 self.nodes[n].as_ref().expect("chain node resident").page;
-            segs.push(KvSeg {
+            self.seg_runs[lane].push(KvSeg {
                 start: i * self.page_len,
                 len: self.page_len,
                 base: self.page_base(page),
@@ -363,148 +899,105 @@ impl KvPool {
                 offset: 0,
             });
         }
-        // generated positions live in the lane's own slot at their
-        // natural offsets
-        segs.push(KvSeg {
-            start: self.prompt_len,
-            len: self.dims.seq_len - self.prompt_len,
-            base: self.base(id),
-            region_len: self.dims.seq_len,
-            offset: self.prompt_len,
-        });
-        segs
+        self.chains[lane] = s.chain;
+        let mut cursor = 0usize;
+        if s.needs_prompt_page {
+            let pg = self.prompt_free.pop().expect("can_resume checked");
+            self.prompt_page_of[lane] = Some(pg);
+            let b = self.prompt_base(pg);
+            Self::unspill_region(
+                &s.bytes,
+                &mut cursor,
+                &mut self.k,
+                b,
+                self.prompt_page_elems,
+            );
+            Self::unspill_region(
+                &s.bytes,
+                &mut cursor,
+                &mut self.v,
+                b,
+                self.prompt_page_elems,
+            );
+            self.seg_runs[lane].push(KvSeg {
+                start: 0,
+                len: self.prompt_len,
+                base: b,
+                region_len: self.prompt_len,
+                offset: 0,
+            });
+        }
+        for t in 0..s.n_tail {
+            let pg = self.tail_free.pop().expect("can_resume checked");
+            let b = self.tail_base(pg);
+            Self::unspill_region(
+                &s.bytes,
+                &mut cursor,
+                &mut self.k,
+                b,
+                self.tail_page_elems,
+            );
+            Self::unspill_region(
+                &s.bytes,
+                &mut cursor,
+                &mut self.v,
+                b,
+                self.tail_page_elems,
+            );
+            let start = self.prompt_len + t * self.tail_len;
+            self.tail_pages_of[lane].push(pg);
+            self.seg_runs[lane].push(KvSeg {
+                start,
+                len: self.tail_len.min(self.dims.seq_len - start),
+                base: b,
+                region_len: self.tail_len,
+                offset: 0,
+            });
+        }
+        debug_assert_eq!(cursor, s.bytes.len(), "cold-tier size mismatch");
+        self.cache_lens[lane] = s.cache_len;
+        self.resumes += 1;
+        Ok(self.make_lease(lane))
     }
 
-    /// Install prefill output for one lane. `k`/`v` are batch-major
-    /// [L, bs, H, P, dh] slices from the prefill program; the prompt
-    /// region of the slot is the only part written.
-    pub fn write_prefill(
-        &mut self,
-        id: SlotId,
-        lane: usize,
-        bs: usize,
-        k: &[f32],
-        v: &[f32],
-    ) {
-        debug_assert!(
-            self.chains[id.0].is_empty(),
-            "write_prefill into a chained slot"
-        );
-        let g = self.dims;
-        let (l_n, h_n, s_n, d) = (g.n_layers, g.n_heads, g.seq_len, g.d_head);
-        let p = self.prompt_len;
+    /// Abandon a suspended lane without resuming it (the parked
+    /// request was cancelled or timed out): drop the chain pins the
+    /// suspension carried.
+    pub fn discard_suspended(&mut self, s: SuspendedKv) {
+        for &n in &s.chain {
+            let node = self.nodes[n].as_mut().expect("chain node resident");
+            debug_assert!(node.refs > 0, "discard of an unpinned chain node");
+            node.refs -= 1;
+        }
+    }
+
+    /// Leak check: with no live lanes, every page must be back on its
+    /// free list, every lane's page table empty, and every resident
+    /// prefix chain unpinned. Tests call this after churn (admission
+    /// failures, aborts between admit and first commit, preempt/resume
+    /// cycles) to prove nothing leaked.
+    pub fn assert_no_leaks(&self) {
+        assert_eq!(self.in_use(), 0, "live lanes at leak check");
+        for lane in 0..self.lane_used.len() {
+            assert!(self.chains[lane].is_empty(), "lane {lane} kept a chain");
+            assert!(
+                self.prompt_page_of[lane].is_none(),
+                "lane {lane} kept a prompt page"
+            );
+            assert!(
+                self.tail_pages_of[lane].is_empty(),
+                "lane {lane} kept tail pages"
+            );
+        }
         assert_eq!(
-            k.len(),
-            l_n * bs * h_n * p * d,
-            "prefill KV must be [L, bs={bs}, H, P={p}, dh]"
+            self.prompt_free.len(),
+            self.prompt_budget,
+            "prompt pages leaked"
         );
-        // precomputed stride walk: the src head-stride equals the span
-        // (heads are adjacent in [L, bs, H, P, dh]), so only the dst
-        // pointer needs a wider step; no index math in the inner loop
-        let span = p * d;
-        let src_l = bs * h_n * span;
-        let dst_h = s_n * d;
-        let dst_l = h_n * dst_h;
-        let mut src_row = lane * h_n * span;
-        let mut dst_row = self.base(id);
-        for _l in 0..l_n {
-            let mut src = src_row;
-            let mut dst = dst_row;
-            for _h in 0..h_n {
-                self.k[dst..dst + span].copy_from_slice(&k[src..src + span]);
-                self.v[dst..dst + span].copy_from_slice(&v[src..src + span]);
-                src += span;
-                dst += dst_h;
-            }
-            src_row += src_l;
-            dst_row += dst_l;
+        assert_eq!(self.tail_free.len(), self.tail_budget, "tail pages leaked");
+        for node in self.nodes.iter().flatten() {
+            assert_eq!(node.refs, 0, "pinned chain node at leak check");
         }
-        self.cache_lens[id.0] = p;
-    }
-
-    /// Commit a finalized block's KV for one lane. `k_blk`/`v_blk` are
-    /// [L, bs, H, B, dh]; the block appends in place at the slot's
-    /// current cache_len, which advances by `blk` (exact append-only
-    /// caching — no other slab region is touched).
-    pub fn commit_block(
-        &mut self,
-        id: SlotId,
-        lane: usize,
-        bs: usize,
-        blk: usize,
-        k_blk: &[f32],
-        v_blk: &[f32],
-    ) {
-        let g = self.dims;
-        let (l_n, h_n, s_n, d) = (g.n_layers, g.n_heads, g.seq_len, g.d_head);
-        let pos = self.cache_lens[id.0];
-        assert!(pos + blk <= s_n, "cache overflow: {pos} + {blk} > {s_n}");
-        debug_assert!(
-            self.chains[id.0].is_empty() || pos >= self.prompt_len,
-            "commit into the shared prefix of a chained slot"
-        );
-        // same stride walk as write_prefill: src heads are adjacent
-        // blk*d spans, dst heads step by a full sequence row
-        let span = blk * d;
-        let src_l = bs * h_n * span;
-        let dst_h = s_n * d;
-        let dst_l = h_n * dst_h;
-        let mut src_row = lane * h_n * span;
-        let mut dst_row = self.base(id) + pos * d;
-        for _l in 0..l_n {
-            let mut src = src_row;
-            let mut dst = dst_row;
-            for _h in 0..h_n {
-                self.k[dst..dst + span]
-                    .copy_from_slice(&k_blk[src..src + span]);
-                self.v[dst..dst + span]
-                    .copy_from_slice(&v_blk[src..src + span]);
-                src += span;
-                dst += dst_h;
-            }
-            src_row += src_l;
-            dst_row += dst_l;
-        }
-        self.cache_lens[id.0] = pos + blk;
-    }
-
-    /// Direct write of full-sequence KV (approximate-cache baselines):
-    /// overwrite the slot with the stale full-sequence stacks
-    /// [L, bs, H, S, dh] and mark the whole sequence resident.
-    pub fn write_full(
-        &mut self,
-        id: SlotId,
-        lane: usize,
-        bs: usize,
-        k: &[f32],
-        v: &[f32],
-    ) {
-        debug_assert!(
-            self.chains[id.0].is_empty(),
-            "write_full into a chained slot"
-        );
-        let g = self.dims;
-        let (l_n, h_n, s_n, d) = (g.n_layers, g.n_heads, g.seq_len, g.d_head);
-        let row = h_n * s_n * d;
-        let base = self.base(id);
-        if bs == 1 {
-            // a single-lane [L, 1, H, S, dh] stack is layout-identical
-            // to the slot's [L, H, S, dh]: one slot-sized memcpy
-            let n = l_n * row;
-            self.k[base..base + n].copy_from_slice(&k[..n]);
-            self.v[base..base + n].copy_from_slice(&v[..n]);
-        } else {
-            let src_l = bs * row;
-            let mut src = lane * row;
-            let mut dst = base;
-            for _l in 0..l_n {
-                self.k[dst..dst + row].copy_from_slice(&k[src..src + row]);
-                self.v[dst..dst + row].copy_from_slice(&v[src..src + row]);
-                src += src_l;
-                dst += row;
-            }
-        }
-        self.cache_lens[id.0] = s_n;
     }
 
     // -----------------------------------------------------------------
@@ -574,7 +1067,7 @@ impl KvPool {
     /// overwritten), missing blocks get fresh pages written from the
     /// batch-major `[L, bs, H, P, dh]` prefill K/V. Fails without side
     /// effects when the page budget cannot cover the uncached tail even
-    /// after LRU eviction; callers then fall back to a private-slot
+    /// after LRU eviction; callers then fall back to a private-page
     /// prefill.
     #[allow(clippy::too_many_arguments)]
     pub fn prefix_install(
@@ -664,18 +1157,36 @@ impl KvPool {
         Ok(ChainPin { nodes: path, ar_tok })
     }
 
-    /// Attach a pinned chain to a live slot: the slot now reads its
-    /// prompt positions from the shared pages (its prompt region is
-    /// never written) and [`KvPool::free`] will unpin the chain when
+    /// Attach a pinned chain to a leased lane: the lane now reads its
+    /// prompt positions from the shared pages (it never takes a private
+    /// prompt page) and releasing the lease will unpin the chain when
     /// the lane retires.
-    pub fn attach_chain(&mut self, id: SlotId, pin: ChainPin) {
-        assert!(self.used[id.0], "attach_chain to a free slot");
-        assert!(self.chains[id.0].is_empty(), "slot already has a chain");
-        self.chains[id.0] = pin.nodes;
-        self.cache_lens[id.0] = self.prompt_len;
+    pub fn attach_chain(&mut self, lease: &KvLease, pin: ChainPin) {
+        self.check(lease);
+        let lane = lease.lane;
+        assert!(self.chains[lane].is_empty(), "lane already has a chain");
+        assert!(
+            self.prompt_page_of[lane].is_none()
+                && self.tail_pages_of[lane].is_empty(),
+            "attach_chain to a lane that already wrote pages"
+        );
+        self.seg_runs[lane].clear();
+        for (i, &n) in pin.nodes.iter().enumerate() {
+            let page =
+                self.nodes[n].as_ref().expect("chain node resident").page;
+            self.seg_runs[lane].push(KvSeg {
+                start: i * self.page_len,
+                len: self.page_len,
+                base: self.page_base(page),
+                region_len: self.page_len,
+                offset: 0,
+            });
+        }
+        self.chains[lane] = pin.nodes;
+        self.cache_lens[lane] = self.prompt_len;
     }
 
-    /// Release a pin without attaching it to a slot (admission error
+    /// Release a pin without attaching it to a lane (admission error
     /// paths).
     pub fn release_pin(&mut self, pin: ChainPin) {
         for n in pin.nodes {
@@ -757,7 +1268,7 @@ impl KvPool {
     }
 
     /// Write prompt block `bi` of one lane's batch-major
-    /// `[L, bs, H, P, dh]` prefill output into a page.
+    /// `[L, bs, H, P, dh]` prefill output into a prefix page.
     fn write_page(
         &mut self,
         page: usize,
@@ -852,70 +1363,99 @@ mod tests {
     }
 
     #[test]
-    fn alloc_free_cycle() {
+    fn alloc_release_cycle() {
         let mut p = KvPool::new(&geom(), 2);
         let a = p.alloc().unwrap();
         let b = p.alloc().unwrap();
         assert!(p.alloc().is_err(), "capacity enforced");
-        p.free(a);
+        p.release(a);
         let c = p.alloc().unwrap();
         assert_eq!(p.in_use(), 2);
-        p.free(b);
-        p.free(c);
+        p.release(b);
+        p.release(c);
         assert_eq!(p.in_use(), 0);
         assert_eq!(p.peak_in_use, 2);
+        p.assert_no_leaks();
     }
 
     #[test]
-    #[should_panic(expected = "double free")]
-    fn double_free_panics() {
-        let mut p = KvPool::new(&geom(), 1);
+    fn dropped_lease_is_reaped_at_next_alloc() {
+        let g = geom();
+        let mut p = KvPool::new(&g, 1);
+        let (k, v) = prefill_kv(&g, 0.0);
         let a = p.alloc().unwrap();
-        p.free(a);
-        p.free(a);
+        p.write_prefill(&a, 0, 1, &k, &v).unwrap();
+        drop(a); // leaked, not released
+        assert_eq!(p.in_use(), 1, "reap is lazy");
+        // the reaper frees the lane (and its pages) before allocating
+        let b = p.alloc().unwrap();
+        assert_eq!(p.in_use(), 1);
+        assert_eq!(p.cache_len_of(&b), 0, "recycled lane starts fresh");
+        p.release(b);
+        p.assert_no_leaks();
     }
 
     #[test]
-    #[should_panic(expected = "double free")]
-    fn double_free_of_chained_slot_panics() {
-        // the double-free guard must keep firing for chained slots: a
-        // second free would otherwise unpin the chain twice
+    fn dropped_lease_unpins_chain_on_reap() {
         let g = geom();
         let mut pool = KvPool::with_prefix_pages(&g, 1, 2);
         let (k, v) = prefill_kv(&g, 0.0);
         let a = pool.alloc().unwrap();
         let pin =
             pool.prefix_install(9, &[5, 6, 7, 8], 0, 1, &k, &v, None).unwrap();
-        pool.attach_chain(a, pin);
-        pool.free(a);
-        pool.free(a);
+        pool.attach_chain(&a, pin);
+        drop(a);
+        let b = pool.alloc().unwrap(); // reaps a, unpinning the chain
+        assert_eq!(
+            pool.prefix_chain_info(9, &[5, 6, 7, 8]),
+            Some((2, 0)),
+            "chain unpinned exactly once"
+        );
+        pool.release(b);
+        pool.assert_no_leaks();
+    }
+
+    #[test]
+    #[should_panic(expected = "foreign KvLease")]
+    fn leases_are_pool_scoped() {
+        let g = geom();
+        let mut p1 = KvPool::new(&g, 1);
+        let mut p2 = KvPool::new(&g, 1);
+        let a = p1.alloc().unwrap();
+        p2.release(a);
     }
 
     #[test]
     fn prefill_commit_view_roundtrip() {
         let g = geom();
         let mut pool = KvPool::new(&g, 2);
-        let id = pool.alloc().unwrap();
+        let lease = pool.alloc().unwrap();
         let (l_n, h_n, d, p, blk) = (2usize, 2usize, 4usize, 4usize, 2usize);
         let bs = 1;
         // distinct values per (l, h, pos, d)
-        let kp: Vec<f32> = (0..l_n * bs * h_n * p * d).map(|i| i as f32).collect();
+        let kp: Vec<f32> =
+            (0..l_n * bs * h_n * p * d).map(|i| i as f32).collect();
         let vp: Vec<f32> = kp.iter().map(|x| x + 0.5).collect();
-        pool.write_prefill(id, 0, bs, &kp, &vp);
-        assert_eq!(pool.cache_len(id), p);
+        pool.write_prefill(&lease, 0, bs, &kp, &vp).unwrap();
+        assert_eq!(pool.cache_len_of(&lease), p);
 
-        let kb: Vec<f32> =
-            (0..l_n * bs * h_n * blk * d).map(|i| 1000.0 + i as f32).collect();
+        let kb: Vec<f32> = (0..l_n * bs * h_n * blk * d)
+            .map(|i| 1000.0 + i as f32)
+            .collect();
         let vb: Vec<f32> = kb.iter().map(|x| x + 0.5).collect();
-        pool.commit_block(id, 0, bs, blk, &kb, &vb);
-        assert_eq!(pool.cache_len(id), p + blk);
+        pool.commit_block(&lease, 0, bs, blk, &kb, &vb).unwrap();
+        assert_eq!(pool.cache_len_of(&lease), p + blk);
 
-        let view = pool.view(&[id], p + blk);
+        let view = pool.view(&[&lease]);
+        assert_eq!(view.cache_len(), p + blk);
         // prompt l=0, h=0, pos=0..4 is the front of the prefill input
         for pos in 0..p {
             for f in 0..d {
                 assert_eq!(view.k_at(0, 0, 0, pos, f), (pos * d + f) as f32);
-                assert_eq!(view.v_at(0, 0, 0, pos, f), (pos * d + f) as f32 + 0.5);
+                assert_eq!(
+                    view.v_at(0, 0, 0, pos, f),
+                    (pos * d + f) as f32 + 0.5
+                );
             }
         }
         // committed block lands at pos = p.. for l=0, h=0
@@ -927,6 +1467,8 @@ mod tests {
                 );
             }
         }
+        pool.release(lease);
+        pool.assert_no_leaks();
     }
 
     #[test]
@@ -936,12 +1478,13 @@ mod tests {
         let a = pool.alloc().unwrap();
         let b = pool.alloc().unwrap();
         let n = 2 * 2 * 4 * 4; // [L, bs=1, H, P, dh]
-        pool.write_prefill(a, 0, 1, &vec![1.0; n], &vec![1.0; n]);
-        pool.write_prefill(b, 0, 1, &vec![2.0; n], &vec![2.0; n]);
-        let view = pool.view(&[b, a], 4);
+        pool.write_prefill(&a, 0, 1, &vec![1.0; n], &vec![1.0; n]).unwrap();
+        pool.write_prefill(&b, 0, 1, &vec![2.0; n], &vec![2.0; n]).unwrap();
+        let view = pool.view(&[&b, &a]);
         assert_eq!(view.bs(), 2);
-        assert_eq!(view.k_at(0, 0, 0, 0, 0), 2.0, "lane 0 is slot b");
-        assert_eq!(view.k_at(1, 0, 0, 0, 0), 1.0, "lane 1 is slot a");
+        assert_eq!(view.cache_len(), 4);
+        assert_eq!(view.k_at(0, 0, 0, 0, 0), 2.0, "lane 0 is lease b");
+        assert_eq!(view.k_at(1, 0, 0, 0, 0), 1.0, "lane 1 is lease a");
         // batch-major materialization places lane rows correctly
         let (bk, _) = view.to_batch_major();
         let row = 2 * 8 * 4; // [H, S, dh]
@@ -950,47 +1493,72 @@ mod tests {
     }
 
     #[test]
+    fn padded_view_aliases_last_real_lane() {
+        let g = geom();
+        let mut pool = KvPool::new(&g, 2);
+        let a = pool.alloc().unwrap();
+        let n = 2 * 2 * 4 * 4;
+        pool.write_prefill(&a, 0, 1, &vec![7.0; n], &vec![7.0; n]).unwrap();
+        let view = pool.view_padded(&[&a], 4);
+        assert_eq!(view.bs(), 4);
+        for lane in 0..4 {
+            assert_eq!(view.k_at(lane, 0, 0, 0, 0), 7.0);
+        }
+        pool.release(a);
+        pool.assert_no_leaks();
+    }
+
+    #[test]
     fn property_pool_never_leaks_or_double_allocs() {
         check("kv-pool-invariants", 50, |r| {
             let mut pool = KvPool::new(&geom(), 4);
-            let mut held: Vec<SlotId> = Vec::new();
+            let mut held: Vec<KvLease> = Vec::new();
             for _ in 0..100 {
                 if r.below(2) == 0 && !held.is_empty() {
                     let i = r.index(held.len());
-                    pool.free(held.swap_remove(i));
+                    pool.release(held.swap_remove(i));
                 } else if pool.in_use() < pool.capacity() {
-                    let id = pool.alloc().unwrap();
-                    if held.contains(&id) {
+                    let lease = pool.alloc().unwrap();
+                    if held.iter().any(|h| h.lane == lease.lane) {
                         return false; // double-alloc!
                     }
-                    held.push(id);
+                    held.push(lease);
                 }
                 if pool.in_use() != held.len() {
                     return false;
                 }
             }
+            for lease in held {
+                pool.release(lease);
+            }
+            pool.assert_no_leaks();
             true
         });
     }
 
     #[test]
-    fn mid_batch_recycle_resets_slot_state() {
-        // continuous batching: a retired lane's slot is freed while the
-        // pool is live and handed to the next admission with a clean
-        // cache_len, leaving sibling slots untouched
+    fn mid_batch_recycle_resets_lane_state() {
+        // continuous batching: a retired lane is freed while the pool
+        // is live and handed to the next admission with a clean
+        // cache_len, leaving sibling lanes untouched
         let g = geom();
         let mut pool = KvPool::new(&g, 2);
         let keep = pool.alloc().unwrap();
         let retire = pool.alloc().unwrap();
         let n = 2 * 2 * 4 * 4; // [L, bs=1, H, P, dh]
-        pool.write_prefill(keep, 0, 1, &vec![7.0; n], &vec![7.0; n]);
-        pool.write_prefill(retire, 0, 1, &vec![9.0; n], &vec![9.0; n]);
-        pool.free(retire);
+        pool.write_prefill(&keep, 0, 1, &vec![7.0; n], &vec![7.0; n]).unwrap();
+        pool.write_prefill(&retire, 0, 1, &vec![9.0; n], &vec![9.0; n])
+            .unwrap();
+        pool.release(retire);
         let admitted = pool.alloc().unwrap();
-        assert_eq!(pool.cache_len(admitted), 0, "recycled slot starts fresh");
-        assert_eq!(pool.cache_len(keep), 4, "sibling lane unaffected");
+        assert_eq!(
+            pool.cache_len_of(&admitted),
+            0,
+            "recycled lane starts fresh"
+        );
+        assert_eq!(pool.cache_len_of(&keep), 4, "sibling lane unaffected");
         assert_eq!(pool.total_allocs, 3, "lifetime allocs count recycling");
-        let view = pool.view(&[keep], 4);
+        let view = pool.view(&[&keep]);
         assert_eq!(view.k_at(0, 0, 0, 0, 0), 7.0);
     }
 
@@ -998,12 +1566,245 @@ mod tests {
     fn write_full_marks_whole_sequence() {
         let g = geom();
         let mut pool = KvPool::new(&g, 1);
-        let id = pool.alloc().unwrap();
+        let lease = pool.alloc().unwrap();
         let n = 2 * 2 * 8 * 4;
-        pool.write_full(id, 0, 1, &vec![3.0; n], &vec![3.0; n]);
-        assert_eq!(pool.cache_len(id), g.seq_len);
-        let view = pool.view(&[id], g.seq_len);
+        pool.write_full(&lease, 0, 1, &vec![3.0; n], &vec![3.0; n]).unwrap();
+        assert_eq!(pool.cache_len_of(&lease), g.seq_len);
+        let view = pool.view(&[&lease]);
         assert_eq!(view.k_at(0, 1, 1, 7, 3), 3.0);
+    }
+
+    // -----------------------------------------------------------------
+    // Paged tails: on-demand allocation + over-subscription
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn tail_pages_allocate_on_demand_at_block_boundaries() {
+        let g = geom(); // p=4, gen=4, blk=2 -> 2 tail pages per lane
+        let mut pool = KvPool::new(&g, 1);
+        assert_eq!(pool.tail_pages_full(), 2);
+        let lease = pool.alloc().unwrap();
+        assert_eq!(pool.tail_pages_free(), 2, "nothing allocated yet");
+        let (k, v) = prefill_kv(&g, 0.0);
+        pool.write_prefill(&lease, 0, 1, &k, &v).unwrap();
+        assert_eq!(pool.prompt_pages_free(), 0, "prompt page taken");
+        assert_eq!(pool.tail_pages_free(), 2, "prefill takes no tail page");
+        let nb = 2 * 2 * 2 * 4; // [L, 1, H, blk=2, dh]
+        pool.commit_block(&lease, 0, 1, 2, &vec![1.0; nb], &vec![1.0; nb])
+            .unwrap();
+        assert_eq!(pool.tail_pages_free(), 1, "first block takes one page");
+        pool.commit_block(&lease, 0, 1, 2, &vec![2.0; nb], &vec![2.0; nb])
+            .unwrap();
+        assert_eq!(pool.tail_pages_free(), 0);
+        pool.release(lease);
+        assert_eq!(pool.tail_pages_free(), 2, "release returns pages");
+        pool.assert_no_leaks();
+    }
+
+    #[test]
+    fn oversubscribed_pool_holds_more_lanes_than_contiguous_slots() {
+        let g = geom();
+        // memory for 2 whole sequences, but 4 lanes: a contiguous
+        // one-owner layout caps at 2 live lanes; paging admits 4 as
+        // long as they stay in their first block
+        let mut pool = KvPool::with_page_budgets(&g, 4, 4, 4, 0);
+        let (k, v) = prefill_kv(&g, 0.0);
+        let leases: Vec<KvLease> = (0..4)
+            .map(|_| {
+                let l = pool.alloc().unwrap();
+                pool.write_prefill(&l, 0, 1, &k, &v).unwrap();
+                l
+            })
+            .collect();
+        assert_eq!(pool.in_use(), 4, "4 live lanes on 2 sequences' memory");
+        let nb = 2 * 2 * 2 * 4;
+        for l in &leases {
+            pool.commit_block(l, 0, 1, 2, &vec![1.0; nb], &vec![1.0; nb])
+                .unwrap();
+        }
+        // the 5th block commit in the cohort would need a 5th tail page
+        let err = pool
+            .commit_block(&leases[0], 0, 1, 2, &vec![2.0; nb], &vec![2.0; nb])
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("out of tail pages"),
+            "typed pressure error, got: {err}"
+        );
+        for l in leases {
+            pool.release(l);
+        }
+        pool.assert_no_leaks();
+    }
+
+    #[test]
+    fn failed_page_alloc_keeps_lane_consistent_and_retryable() {
+        let g = geom();
+        let mut pool = KvPool::with_page_budgets(&g, 2, 2, 1, 0);
+        let (k, v) = prefill_kv(&g, 0.0);
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        pool.write_prefill(&a, 0, 1, &k, &v).unwrap();
+        pool.write_prefill(&b, 0, 1, &k, &v).unwrap();
+        let nb = 2 * 2 * 2 * 4;
+        pool.commit_block(&a, 0, 1, 2, &vec![1.0; nb], &vec![1.0; nb])
+            .unwrap();
+        // b can't get a tail page while a holds the only one
+        assert!(pool
+            .commit_block(&b, 0, 1, 2, &vec![2.0; nb], &vec![2.0; nb])
+            .is_err());
+        assert_eq!(pool.cache_len_of(&b), 4, "failed commit didn't advance");
+        // releasing a frees the page; the same commit now succeeds
+        pool.release(a);
+        pool.commit_block(&b, 0, 1, 2, &vec![2.0; nb], &vec![2.0; nb])
+            .unwrap();
+        assert_eq!(pool.cache_len_of(&b), 6);
+        let view = pool.view(&[&b]);
+        assert_eq!(view.k_at(0, 0, 0, 4, 0), 2.0);
+        pool.release(b);
+        pool.assert_no_leaks();
+    }
+
+    // -----------------------------------------------------------------
+    // Preemption: suspend / resume
+    // -----------------------------------------------------------------
+
+    /// Snapshot every valid element of a lane through its view.
+    fn snapshot(pool: &KvPool, lease: &KvLease) -> Vec<f32> {
+        let g = geom();
+        let view = pool.view(&[lease]);
+        let mut out = Vec::new();
+        for l in 0..g.n_layers {
+            for h in 0..g.n_heads {
+                for pos in 0..view.cache_len() {
+                    for f in 0..g.d_head {
+                        out.push(view.k_at(0, l, h, pos, f));
+                        out.push(view.v_at(0, l, h, pos, f));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn suspend_resume_restores_bytes_exactly() {
+        let g = geom();
+        let mut pool = KvPool::new(&g, 2);
+        let lease = pool.alloc().unwrap();
+        let (k, v) = prefill_kv(&g, 3.0);
+        pool.write_prefill(&lease, 0, 1, &k, &v).unwrap();
+        let nb = 2 * 2 * 2 * 4;
+        let kb: Vec<f32> = (0..nb).map(|i| 500.0 + i as f32).collect();
+        pool.commit_block(&lease, 0, 1, 2, &kb, &kb).unwrap();
+        let before = snapshot(&pool, &lease);
+
+        let s = pool.suspend(lease);
+        assert_eq!(pool.in_use(), 0);
+        assert_eq!(s.cache_len(), 6);
+        assert!(s.spilled_bytes() > 0);
+        assert_eq!(pool.preempts, 1);
+        // cold-tier size = (prompt page + 1 tail page) * K and V * 4B
+        let row = g.n_layers * g.n_heads * g.d_head;
+        assert_eq!(s.spilled_bytes(), 2 * 4 * row * (g.prompt_len + 2));
+
+        // another lane can use the freed pages while it's parked
+        let other = pool.alloc().unwrap();
+        pool.write_prefill(&other, 0, 1, &k, &v).unwrap();
+        pool.release(other);
+
+        let lease = pool.resume(s).unwrap();
+        assert_eq!(pool.resumes, 1);
+        assert_eq!(pool.cache_len_of(&lease), 6);
+        assert_eq!(snapshot(&pool, &lease), before, "byte-identical resume");
+        // decode continues: the next commit appends at pos 6
+        let kb2: Vec<f32> = (0..nb).map(|i| 900.0 + i as f32).collect();
+        pool.commit_block(&lease, 0, 1, 2, &kb2, &kb2).unwrap();
+        assert_eq!(pool.cache_len_of(&lease), 8);
+        pool.release(lease);
+        pool.assert_no_leaks();
+    }
+
+    #[test]
+    fn suspend_keeps_chain_pinned_and_resume_reattaches() {
+        let g = geom();
+        // page budget: exactly one prompt's worth, so eviction pressure
+        // would reclaim the chain if parking ever unpinned it
+        let mut pool = KvPool::with_prefix_pages(&g, 2, 2);
+        let prompt = vec![5, 6, 7, 8];
+        let (k, v) = prefill_kv(&g, 0.0);
+        let a = pool.alloc().unwrap();
+        let pin = pool.prefix_install(9, &prompt, 0, 1, &k, &v, None).unwrap();
+        pool.attach_chain(&a, pin);
+        let nb = 2 * 2 * 2 * 4;
+        pool.commit_block(&a, 0, 1, 2, &vec![4.0; nb], &vec![4.0; nb])
+            .unwrap();
+        let before = snapshot(&pool, &a);
+
+        let s = pool.suspend(a);
+        assert_eq!(
+            pool.prefix_chain_info(9, &prompt),
+            Some((2, 1)),
+            "parked lane keeps its chain pinned"
+        );
+        // under pressure a competing install must fail, not evict it
+        let b = pool.alloc().unwrap();
+        assert!(pool
+            .prefix_install(9, &[10, 11, 12, 13], 0, 1, &k, &v, None)
+            .is_err());
+        pool.release(b);
+
+        let a = pool.resume(s).unwrap();
+        assert_eq!(
+            pool.prefix_chain_info(9, &prompt),
+            Some((2, 1)),
+            "resume reattaches without double-pinning"
+        );
+        assert_eq!(snapshot(&pool, &a), before);
+        pool.release(a);
+        assert_eq!(pool.prefix_chain_info(9, &prompt), Some((2, 0)));
+        pool.assert_no_leaks();
+    }
+
+    #[test]
+    fn resume_under_pressure_hands_state_back() {
+        let g = geom();
+        let mut pool = KvPool::with_page_budgets(&g, 2, 1, 2, 0);
+        let (k, v) = prefill_kv(&g, 0.0);
+        let a = pool.alloc().unwrap();
+        pool.write_prefill(&a, 0, 1, &k, &v).unwrap();
+        let s = pool.suspend(a);
+        // the only prompt page is taken by a new lane
+        let b = pool.alloc().unwrap();
+        pool.write_prefill(&b, 0, 1, &k, &v).unwrap();
+        assert!(!pool.can_resume(&s));
+        let s = match pool.resume(s) {
+            Err(s) => s,
+            Ok(_) => panic!("resume must fail under page pressure"),
+        };
+        pool.release(b);
+        let a = pool.resume(s).unwrap();
+        assert_eq!(pool.cache_len_of(&a), 4);
+        pool.release(a);
+        pool.assert_no_leaks();
+    }
+
+    #[test]
+    fn discard_suspended_unpins_chain() {
+        let g = geom();
+        let mut pool = KvPool::with_prefix_pages(&g, 1, 2);
+        let prompt = vec![5, 6, 7, 8];
+        let (k, v) = prefill_kv(&g, 0.0);
+        let a = pool.alloc().unwrap();
+        let pin = pool.prefix_install(9, &prompt, 0, 1, &k, &v, None).unwrap();
+        pool.attach_chain(&a, pin);
+        let s = pool.suspend(a);
+        pool.discard_suspended(s);
+        assert_eq!(
+            pool.prefix_chain_info(9, &prompt),
+            Some((2, 0)),
+            "aborted parked request dropped its pins"
+        );
+        pool.assert_no_leaks();
     }
 
     // -----------------------------------------------------------------
@@ -1017,25 +1818,25 @@ mod tests {
         let prompt = vec![5, 6, 7, 8];
         let (k, v) = prefill_kv(&g, 0.0);
 
-        // cold: install writes 2 pages and pins the chain on slot a
+        // cold: install writes 2 pages and pins the chain on lane a
         let a = pool.alloc().unwrap();
         let pin = pool.prefix_install(9, &prompt, 0, 1, &k, &v, None).unwrap();
-        pool.attach_chain(a, pin);
-        assert_eq!(pool.cache_len(a), g.prompt_len);
+        pool.attach_chain(&a, pin);
+        assert_eq!(pool.cache_len_of(&a), g.prompt_len);
         assert_eq!(pool.prefix_resident_pages(), 2);
         assert_eq!(pool.prefix_hits, 0);
 
         // warm: a second lane full-hits and shares the same pages
         let b = pool.alloc().unwrap();
         let pin = pool.prefix_acquire_full(9, &prompt, false).unwrap();
-        pool.attach_chain(b, pin);
+        pool.attach_chain(&b, pin);
         assert_eq!(pool.prefix_hits, 1);
         assert_eq!(pool.prefix_hit_blocks, 2);
         assert_eq!(pool.prefix_resident_pages(), 2, "no new pages on a hit");
         assert_eq!(pool.prefix_chain_info(9, &prompt), Some((2, 2)));
 
         // both lanes read the prefill content through their views
-        let view = pool.view(&[a, b], g.prompt_len);
+        let view = pool.view(&[&a, &b]);
         for lane in 0..2 {
             for l in 0..g.n_layers {
                 for h in 0..g.n_heads {
@@ -1066,10 +1867,10 @@ mod tests {
 
         let a = pool.alloc().unwrap();
         let pin = pool.prefix_install(9, &p1, 0, 1, &k1, &v1, None).unwrap();
-        pool.attach_chain(a, pin);
+        pool.attach_chain(&a, pin);
         let b = pool.alloc().unwrap();
         let pin = pool.prefix_install(9, &p2, 0, 1, &k2, &v2, None).unwrap();
-        pool.attach_chain(b, pin);
+        pool.attach_chain(&b, pin);
 
         // block 0 shared (copy-on-write: only the divergent tail is new)
         assert_eq!(pool.prefix_resident_pages(), 3);
@@ -1079,7 +1880,7 @@ mod tests {
 
         // lane a still reads p1's original block-1 KV (nothing was
         // overwritten); lane b reads its own divergent block
-        let view = pool.view(&[a, b], g.prompt_len);
+        let view = pool.view(&[&a, &b]);
         let src = 2 * g.d_head; // (l=0, h=0, pos=2, f=0) in [L,1,H,P,dh]
         assert_eq!(view.k_at(0, 0, 0, 2, 0), k1[src]);
         assert_eq!(view.k_at(1, 0, 0, 2, 0), k2[src]);
@@ -1096,7 +1897,7 @@ mod tests {
         let (k, v) = prefill_kv(&g, 0.0);
         let a = pool.alloc().unwrap();
         let pin = pool.prefix_install(1, &prompt, 0, 1, &k, &v, None).unwrap();
-        pool.attach_chain(a, pin);
+        pool.attach_chain(&a, pin);
         assert!(pool.prefix_acquire_full(2, &prompt, false).is_none());
         assert!(pool.prefix_chain_info(2, &prompt).is_none());
     }
@@ -1112,7 +1913,7 @@ mod tests {
 
         let a = pool.alloc().unwrap();
         let pin = pool.prefix_install(9, &p1, 0, 1, &k, &v, None).unwrap();
-        pool.attach_chain(a, pin);
+        pool.attach_chain(&a, pin);
 
         // p1's chain is pinned: installing p2 must fail, not evict it
         let b = pool.alloc().unwrap();
@@ -1123,14 +1924,14 @@ mod tests {
         assert_eq!(pool.prefix_evictions, 0);
         assert_eq!(pool.prefix_chain_info(9, &p1), Some((2, 1)), "p1 intact");
         // the failed install leaves no dangling pins
-        pool.free(b);
+        pool.release(b);
 
         // retiring lane a unpins; the retained chain is now evictable
-        pool.free(a);
+        pool.release(a);
         assert_eq!(pool.prefix_chain_info(9, &p1), Some((2, 0)));
         let b = pool.alloc().unwrap();
         let pin = pool.prefix_install(9, &p2, 0, 1, &k, &v, None).unwrap();
-        pool.attach_chain(b, pin);
+        pool.attach_chain(&b, pin);
         assert_eq!(pool.prefix_evictions, 2, "p1's two pages reclaimed");
         assert!(pool.prefix_chain_info(9, &p1).is_none(), "p1 evicted");
         assert_eq!(pool.prefix_chain_info(9, &p2), Some((2, 1)));
@@ -1144,7 +1945,7 @@ mod tests {
         let (k, v) = prefill_kv(&g, 0.0);
         let a = pool.alloc().unwrap();
         let pin = pool.prefix_install(9, &prompt, 0, 1, &k, &v, None).unwrap();
-        pool.attach_chain(a, pin);
+        pool.attach_chain(&a, pin);
         // DLM chain has no cached first token: AR-style lookups miss…
         assert!(pool.prefix_acquire_full(9, &prompt, true).is_none());
         // …until an install caches one on the leaf
@@ -1169,21 +1970,24 @@ mod tests {
         for p in [&p1, &p2] {
             let s = pool.alloc().unwrap();
             let pin = pool.prefix_install(9, p, 0, 1, &k, &v, None).unwrap();
-            pool.attach_chain(s, pin);
-            pool.free(s);
+            pool.attach_chain(&s, pin);
+            pool.release(s);
         }
         // touch p1 so p2 is the LRU chain
         let s = pool.alloc().unwrap();
         let pin = pool.prefix_acquire_full(9, &p1, false).unwrap();
-        pool.attach_chain(s, pin);
-        pool.free(s);
+        pool.attach_chain(&s, pin);
+        pool.release(s);
         // p3 needs two pages: p2 (coldest, unpinned) is reclaimed
         let s = pool.alloc().unwrap();
         let pin = pool.prefix_install(9, &p3, 0, 1, &k, &v, None).unwrap();
-        pool.attach_chain(s, pin);
-        pool.free(s);
+        pool.attach_chain(&s, pin);
+        pool.release(s);
         assert!(pool.prefix_chain_info(9, &p1).is_some(), "warm chain kept");
-        assert!(pool.prefix_chain_info(9, &p2).is_none(), "cold chain evicted");
+        assert!(
+            pool.prefix_chain_info(9, &p2).is_none(),
+            "cold chain evicted"
+        );
         assert!(pool.prefix_chain_info(9, &p3).is_some());
     }
 }

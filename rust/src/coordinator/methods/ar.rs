@@ -2,15 +2,16 @@
 //! an exact token-level KV cache. One `ar_step` per generated token;
 //! lanes stop at `<eos>` but the lockstep batch runs until all lanes
 //! finish (dead lanes keep executing, their outputs ignored). Each step
-//! borrows a zero-copy `KvView` of the lane slots and writes into the
-//! caller's reused [`StepScratch`] arena — the pre-view per-token
-//! `[L, bs, H, S, dh]` gather (the single largest memcpy in the old
-//! decode loop) no longer exists, and a warm step allocates nothing.
+//! borrows a zero-copy `KvView` of the lane pages through the cohort's
+//! [`KvLease`]s and writes into the caller's reused [`StepScratch`]
+//! arena — the pre-view per-token `[L, bs, H, S, dh]` gather (the
+//! single largest memcpy in the old decode loop) no longer exists, and
+//! a warm step allocates nothing.
 
 use anyhow::Result;
 
 use super::{machine, DecodeOutcome, StepScratch};
-use crate::coordinator::kv_cache::{KvPool, SlotId};
+use crate::coordinator::kv_cache::{KvLease, KvPool};
 use crate::coordinator::sequence::SequenceState;
 use crate::runtime::{Geometry, Programs, TensorI32};
 use crate::tokenizer::EOS;
@@ -44,20 +45,21 @@ pub fn decode(
         &valid_from,
         &mut scratch.arena.ar_prefill,
     )?;
-    let slots: Vec<SlotId> =
+    let leases: Vec<KvLease> =
         (0..bs).map(|_| pool.alloc()).collect::<Result<_>>()?;
-    for (lane, &slot) in slots.iter().enumerate() {
+    for (lane, lease) in leases.iter().enumerate() {
         pool.write_prefill(
-            slot,
+            lease,
             lane,
             bs,
             &scratch.arena.ar_prefill.k.data,
             &scratch.arena.ar_prefill.v.data,
-        );
+        )?;
     }
     for s in seqs.iter_mut() {
         s.model_calls += 1;
     }
+    let lrefs: Vec<&KvLease> = leases.iter().collect();
 
     let mut cur: Vec<i32> = scratch.arena.ar_prefill.tok.data.clone();
     // reused every step: one [bs] token buffer
@@ -81,29 +83,30 @@ pub fn decode(
         scratch.arena.tok.data.copy_from_slice(&cur);
         progs.ar_step(
             bs,
-            &pool.view(&slots, p_len + i),
+            &pool.view(&lrefs),
             &valid_from,
             &scratch.arena.tok,
             &mut scratch.arena.ar_step,
         )?;
         // append the new token's KV for every lane (exact caching)
-        for (lane, &slot) in slots.iter().enumerate() {
+        for (lane, lease) in lrefs.iter().enumerate() {
             pool.commit_block(
-                slot,
+                lease,
                 lane,
                 bs,
                 1,
                 &scratch.arena.ar_step.k1.data,
                 &scratch.arena.ar_step.v1.data,
-            );
+            )?;
             if !done[lane] {
                 seqs[lane].model_calls += 1;
             }
         }
         cur.copy_from_slice(&scratch.arena.ar_step.tok.data);
     }
-    for slot in slots {
-        pool.free(slot);
+    drop(lrefs);
+    for lease in leases {
+        pool.release(lease);
     }
     Ok(seqs.into_iter().map(SequenceState::into_outcome).collect())
 }
@@ -112,10 +115,10 @@ pub fn decode(
 // Block-step-machine policy (resumable per-lane decode)
 // ---------------------------------------------------------------------------
 
-/// Admission prefill for one lane: allocate a slot, install the causal
+/// Admission prefill for one lane: lease a lane, install the causal
 /// prompt KV with a single-lane `ar_prefill` call (padded to the
 /// smallest exported bucket by aliasing the one real prompt row, like
-/// every other machine program call), and return the slot plus the
+/// every other machine program call), and return the lease plus the
 /// first-token proposal the prefill emits.
 ///
 /// With `prefix_tag` set, a fully cached prompt whose chain also
@@ -123,7 +126,7 @@ pub fn decode(
 /// prefill call (AR prefill is the only program that returns decode
 /// state beyond KV, so the proposal is cached on the chain leaf at
 /// install time — a chain without one counts as a miss). Misses prefill
-/// and install as usual, falling back to a private slot under pinned
+/// and install as usual, falling back to private pages under pinned
 /// page pressure.
 pub(crate) fn machine_prefill(
     progs: &Programs,
@@ -132,23 +135,23 @@ pub(crate) fn machine_prefill(
     pad_to: usize,
     prefix_tag: Option<u64>,
     scratch: &mut StepScratch,
-) -> Result<(SlotId, i32)> {
-    let slot = pool.alloc()?;
+) -> Result<(KvLease, i32)> {
+    let lease = pool.alloc()?;
     if let Some(tag) = prefix_tag {
         if let Some(pin) =
             pool.prefix_acquire_full(tag, &seq.prompt_ids, true)
         {
             let tok = pin.ar_tok.expect("hit required a cached first token");
-            pool.attach_chain(slot, pin);
-            return Ok((slot, tok));
+            pool.attach_chain(&lease, pin);
+            return Ok((lease, tok));
         }
     }
     let (pid, vf) = machine::padded_prompt(seq, pad_to);
     if let Err(e) =
         progs.ar_prefill(pad_to, &pid, &vf, &mut scratch.arena.ar_prefill)
     {
-        // hand the slot back: a failed admission must not leak it
-        pool.free(slot);
+        // hand the lane back: a failed admission must not leak it
+        pool.release(lease);
         return Err(e);
     }
     let pre = &scratch.arena.ar_prefill;
@@ -164,12 +167,16 @@ pub(crate) fn machine_prefill(
             Some(pre.tok.data[0]),
         ) {
             let tok = pre.tok.data[0];
-            pool.attach_chain(slot, pin);
-            return Ok((slot, tok));
+            pool.attach_chain(&lease, pin);
+            return Ok((lease, tok));
         }
     }
-    pool.write_prefill(slot, 0, pad_to, &pre.k.data, &pre.v.data);
-    Ok((slot, pre.tok.data[0]))
+    if let Err(e) = pool.write_prefill(&lease, 0, pad_to, &pre.k.data, &pre.v.data)
+    {
+        pool.release(lease);
+        return Err(e);
+    }
+    Ok((lease, pre.tok.data[0]))
 }
 
 /// Advance one cohort by up to `blk` token positions starting at gen
@@ -180,7 +187,8 @@ pub(crate) fn machine_prefill(
 /// not — exact caching, same as the closed-batch engine). `cur` holds
 /// each lane's pending proposal and is written back for the next block.
 /// All per-call buffers come from the caller's [`StepScratch`]: a warm
-/// step allocates nothing.
+/// step allocates nothing (bucket padding of KV lanes happens inside
+/// `KvPool::view_padded`, aliasing the last real lane's pages).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn machine_step(
     progs: &Programs,
@@ -188,19 +196,19 @@ pub(crate) fn machine_step(
     pool: &mut KvPool,
     seqs: &mut [&mut SequenceState],
     cur: &mut [i32],
-    slots: &[SlotId],
+    leases: &[&KvLease],
     pos0: usize,
     blk: usize,
     pad_to: usize,
     scratch: &mut StepScratch,
 ) -> Result<()> {
     let n = seqs.len();
-    let (p_len, g_len) = (geom.prompt_len, geom.gen_len);
+    debug_assert_eq!(n, leases.len(), "cohort seqs/leases out of sync");
+    let g_len = geom.gen_len;
     scratch.arena.valid_from.reuse(&[pad_to]);
     for r in 0..pad_to {
         scratch.arena.valid_from.data[r] = seqs[r.min(n - 1)].valid_from;
     }
-    scratch.pad_slots(slots, n, pad_to);
     scratch.arena.tok.reuse(&[pad_to]);
     for t in 0..blk {
         let i = pos0 + t;
@@ -222,21 +230,21 @@ pub(crate) fn machine_step(
         }
         progs.ar_step(
             pad_to,
-            &pool.view(&scratch.call_slots, p_len + i),
+            &pool.view_padded(leases, pad_to),
             &scratch.arena.valid_from,
             &scratch.arena.tok,
             &mut scratch.arena.ar_step,
         )?;
         // append the new token's KV for every real lane (exact caching)
-        for (lane, &slot) in slots.iter().enumerate() {
+        for (lane, lease) in leases.iter().enumerate() {
             pool.commit_block(
-                slot,
+                lease,
                 lane,
                 pad_to,
                 1,
                 &scratch.arena.ar_step.k1.data,
                 &scratch.arena.ar_step.v1.data,
-            );
+            )?;
             if !seqs[lane].done {
                 seqs[lane].model_calls += 1;
             }

@@ -11,10 +11,10 @@
 //! Both run `teacher_full_cache` for refresh steps and
 //! `teacher_block_approx` in between — the latter excludes the stale
 //! copy of the active block in favour of freshly computed K/V (the
-//! "dual" part of dual caching). Refreshes overwrite the lane slots in
-//! place; approx steps borrow a zero-copy `KvView` spanning the whole
-//! (stale) sequence — no batch-major staging buffer exists on this
-//! path, and every program input/output lives in a reused
+//! "dual" part of dual caching). Refreshes overwrite the lanes' pages
+//! in place; approx steps borrow a zero-copy `KvView` spanning the
+//! whole (stale) sequence — no batch-major staging buffer exists on
+//! this path, and every program input/output lives in a reused
 //! [`StepScratch`] arena. With refresh_every = 1 the approx path
 //! degenerates to exact recomputation, which the integration tests use
 //! as a correctness anchor.
@@ -22,7 +22,7 @@
 use anyhow::Result;
 
 use super::{DecodeOpts, DecodeOutcome, StepScratch};
-use crate::coordinator::kv_cache::{KvPool, SlotId};
+use crate::coordinator::kv_cache::{KvLease, KvPool};
 use crate::coordinator::sequence::SequenceState;
 use crate::runtime::{Geometry, Programs, TensorI32};
 
@@ -52,8 +52,9 @@ pub fn decode(
     let valid_from =
         TensorI32::from_vec(&[bs], seqs.iter().map(|s| s.valid_from).collect());
 
-    let slots: Vec<SlotId> =
+    let leases: Vec<KvLease> =
         (0..bs).map(|_| pool.alloc()).collect::<Result<_>>()?;
+    let lrefs: Vec<&KvLease> = leases.iter().collect();
 
     // reused across steps: [bs, S] refresh ids and [bs, B] block ids
     let mut scratch = StepScratch::new();
@@ -86,14 +87,14 @@ pub fn decode(
                     &valid_from,
                     &mut scratch.arena.full_cache,
                 )?;
-                for (lane, &slot) in slots.iter().enumerate() {
+                for (lane, lease) in lrefs.iter().enumerate() {
                     pool.write_full(
-                        slot,
+                        lease,
                         lane,
                         bs,
                         &scratch.arena.full_cache.k.data,
                         &scratch.arena.full_cache.v.data,
-                    );
+                    )?;
                 }
                 let out = &scratch.arena.full_cache;
                 for r in 0..bs {
@@ -123,7 +124,7 @@ pub fn decode(
                 progs.teacher_block_approx(
                     bs,
                     blk,
-                    &pool.view(&slots, s_len),
+                    &pool.view(&lrefs),
                     &valid_from,
                     &scratch.arena.blk,
                     (p_len + lo) as i32,
@@ -150,8 +151,9 @@ pub fn decode(
             }
         }
     }
-    for slot in slots {
-        pool.free(slot);
+    drop(lrefs);
+    for lease in leases {
+        pool.release(lease);
     }
     Ok(seqs.into_iter().map(SequenceState::into_outcome).collect())
 }
@@ -180,7 +182,7 @@ fn finalize(
 /// — a refresh as soon as any lane needs one, exactly the legacy
 /// behavior when counters agree — and returns the counter for write-
 /// back. `DualCache` refreshes at every block boundary regardless.
-/// Refreshes rewrite only the real lanes' slots; padded call rows alias
+/// Refreshes rewrite only the real lanes' pages; padded call rows alias
 /// the last live lane and are never written back. Once the caller's
 /// [`StepScratch`] is warm, a pass performs zero heap allocations.
 #[allow(clippy::too_many_arguments)]
@@ -192,7 +194,7 @@ pub(crate) fn machine_step(
     pool: &mut KvPool,
     seqs: &mut [&mut SequenceState],
     taus: &[f32],
-    slots: &[SlotId],
+    leases: &[&KvLease],
     ssr_in: usize,
     lo: usize,
     blk: usize,
@@ -200,6 +202,7 @@ pub(crate) fn machine_step(
     scratch: &mut StepScratch,
 ) -> Result<usize> {
     let n = seqs.len();
+    debug_assert_eq!(n, leases.len(), "cohort seqs/leases out of sync");
     let (p_len, s_len) = (geom.prompt_len, geom.seq_len);
     let mut ssr = if variant == Variant::DualCache {
         usize::MAX // refresh at the block boundary
@@ -210,7 +213,6 @@ pub(crate) fn machine_step(
     for r in 0..pad_to {
         scratch.arena.valid_from.data[r] = seqs[r.min(n - 1)].valid_from;
     }
-    scratch.pad_slots(slots, n, pad_to);
     scratch.arena.ids.reuse(&[pad_to, s_len]);
     scratch.arena.blk.reuse(&[pad_to, blk]);
     loop {
@@ -231,14 +233,14 @@ pub(crate) fn machine_step(
                 &scratch.arena.valid_from,
                 &mut scratch.arena.full_cache,
             )?;
-            for (lane, &slot) in slots.iter().enumerate() {
+            for (lane, lease) in leases.iter().enumerate() {
                 pool.write_full(
-                    slot,
+                    lease,
                     lane,
                     pad_to,
                     &scratch.arena.full_cache.k.data,
                     &scratch.arena.full_cache.v.data,
-                );
+                )?;
             }
             let out = &scratch.arena.full_cache;
             for r in 0..n {
@@ -267,7 +269,7 @@ pub(crate) fn machine_step(
             progs.teacher_block_approx(
                 pad_to,
                 blk,
-                &pool.view(&scratch.call_slots, s_len),
+                &pool.view_padded(leases, pad_to),
                 &scratch.arena.valid_from,
                 &scratch.arena.blk,
                 (p_len + lo) as i32,

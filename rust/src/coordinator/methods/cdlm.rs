@@ -7,16 +7,16 @@
 //!      >= tau is finalized in parallel (>=1 per step guaranteed);
 //!   3. when the block is complete, one commit call recomputes the
 //!      block's K/V from its *final* tokens and appends it in place to
-//!      the lane's slot (counted in `model_calls`, not `steps` — see
+//!      the lane's pages (counted in `model_calls`, not `steps` — see
 //!      rust/README.md);
 //!   4. a finalized `<eos>` stops the request at the block boundary —
 //!      no compute is spent on later blocks (early stopping).
 //!
 //! The cache never leaves the pool: every program call borrows a
-//! zero-copy `KvView` over the lane-major slabs, and every program
-//! input/output lives in a reused [`StepScratch`] arena — a steady-state
-//! refinement step touches no allocator at all (the `hotpath` bench
-//! gates this).
+//! zero-copy `KvView` over the paged slabs through the lanes'
+//! [`KvLease`]s, and every program input/output lives in a reused
+//! [`StepScratch`] arena — a steady-state refinement step touches no
+//! allocator at all (the `hotpath` bench gates this).
 //!
 //! This mirrors `python/compile/decoding.py::student_cdlm_decode`
 //! token-for-token; integration tests enforce parity via the
@@ -26,7 +26,7 @@
 use anyhow::Result;
 
 use super::{machine, DecodeOpts, DecodeOutcome, StepScratch};
-use crate::coordinator::kv_cache::{KvPool, SlotId};
+use crate::coordinator::kv_cache::{KvLease, KvPool};
 use crate::coordinator::sequence::SequenceState;
 use crate::runtime::{Geometry, Programs, TensorI32};
 
@@ -63,22 +63,22 @@ pub fn decode(
         &valid_from,
         &mut scratch.arena.prefill,
     )?;
-    let slots: Vec<SlotId> =
+    let leases: Vec<KvLease> =
         (0..bs).map(|_| pool.alloc()).collect::<Result<_>>()?;
-    for (lane, &slot) in slots.iter().enumerate() {
+    for (lane, lease) in leases.iter().enumerate() {
         pool.write_prefill(
-            slot,
+            lease,
             lane,
             bs,
             &scratch.arena.prefill.k.data,
             &scratch.arena.prefill.v.data,
-        );
+        )?;
     }
     for s in seqs.iter_mut() {
         s.model_calls += 1;
     }
+    let lrefs: Vec<&KvLease> = leases.iter().collect();
 
-    let mut cache_len = p_len;
     // reused every step and commit: one [bs, B] block-id buffer
     scratch.arena.blk.reuse(&[bs, blk]);
     for b in 0..num_blocks {
@@ -104,7 +104,7 @@ pub fn decode(
             progs.student_block_step(
                 bs,
                 blk,
-                &pool.view(&slots, cache_len),
+                &pool.view(&lrefs),
                 &valid_from,
                 &scratch.arena.blk,
                 (p_len + lo) as i32,
@@ -139,7 +139,10 @@ pub fn decode(
             break; // no one needs this block's KV committed
         }
         // ---- commit: recompute block KV from the *final* tokens so the
-        // cache is exact (one extra model call, not a refinement step)
+        // cache is exact (one extra model call, not a refinement step).
+        // Every lane commits — done lanes too: the paged view requires
+        // each lane's pages to cover the lockstep cache_len, and the
+        // memcpy costs no model call (the accounting stays gated below).
         for (r, s) in seqs.iter().enumerate() {
             scratch.arena.blk.data[r * blk..(r + 1) * blk]
                 .copy_from_slice(&s.gen[lo..lo + blk]);
@@ -147,29 +150,29 @@ pub fn decode(
         progs.student_block_step(
             bs,
             blk,
-            &pool.view(&slots, cache_len),
+            &pool.view(&lrefs),
             &valid_from,
             &scratch.arena.blk,
             (p_len + lo) as i32,
             &mut scratch.arena.block,
         )?;
-        for (lane, &slot) in slots.iter().enumerate() {
+        for (lane, lease) in lrefs.iter().enumerate() {
+            pool.commit_block(
+                lease,
+                lane,
+                bs,
+                blk,
+                &scratch.arena.block.k_blk.data,
+                &scratch.arena.block.v_blk.data,
+            )?;
             if !seqs[lane].done {
-                pool.commit_block(
-                    slot,
-                    lane,
-                    bs,
-                    blk,
-                    &scratch.arena.block.k_blk.data,
-                    &scratch.arena.block.v_blk.data,
-                );
                 seqs[lane].model_calls += 1;
             }
         }
-        cache_len += blk;
     }
-    for slot in slots {
-        pool.free(slot);
+    drop(lrefs);
+    for lease in leases {
+        pool.release(lease);
     }
     Ok(seqs.into_iter().map(SequenceState::into_outcome).collect())
 }
@@ -178,13 +181,13 @@ pub fn decode(
 // Block-step-machine policy (resumable per-lane decode)
 // ---------------------------------------------------------------------------
 
-/// Admission prefill for one lane: allocate a slot and install the
-/// exact prompt KV, padded up to the smallest exported bucket
-/// (`pad_to`) by aliasing the one real prompt row — the same AOT
-/// bucket contract every cohort call honors (a manifest need not
-/// export bucket 1). Per-lane outputs equal the batched prefill of
-/// [`decode`] (lanes are independent), so admitting a whole group
-/// lane-by-lane reproduces the closed-batch trace.
+/// Admission prefill for one lane: lease a lane and install the exact
+/// prompt KV, padded up to the smallest exported bucket (`pad_to`) by
+/// aliasing the one real prompt row — the same AOT bucket contract
+/// every cohort call honors (a manifest need not export bucket 1).
+/// Per-lane outputs equal the batched prefill of [`decode`] (lanes are
+/// independent), so admitting a whole group lane-by-lane reproduces the
+/// closed-batch trace.
 ///
 /// With `prefix_tag` set (the serving layer's shared-prefix cache), a
 /// fully cached prompt pins its resident chain and **skips the prefill
@@ -194,7 +197,7 @@ pub fn decode(
 /// exactly the skipped prefill. A miss prefills as usual and
 /// installs the chain (copy-on-write at the first divergent block) so
 /// later admissions can share it; if the page budget is exhausted by
-/// pinned chains the lane falls back to a private-slot prefill —
+/// pinned chains the lane falls back to a private-page prefill —
 /// identical trace, no sharing.
 pub(crate) fn machine_prefill(
     progs: &Programs,
@@ -203,22 +206,22 @@ pub(crate) fn machine_prefill(
     pad_to: usize,
     prefix_tag: Option<u64>,
     scratch: &mut StepScratch,
-) -> Result<SlotId> {
-    let slot = pool.alloc()?;
+) -> Result<KvLease> {
+    let lease = pool.alloc()?;
     if let Some(tag) = prefix_tag {
         if let Some(pin) =
             pool.prefix_acquire_full(tag, &seq.prompt_ids, false)
         {
-            pool.attach_chain(slot, pin);
-            return Ok(slot);
+            pool.attach_chain(&lease, pin);
+            return Ok(lease);
         }
     }
     let (pid, vf) = machine::padded_prompt(seq, pad_to);
     if let Err(e) =
         progs.student_prefill(pad_to, &pid, &vf, &mut scratch.arena.prefill)
     {
-        // hand the slot back: a failed admission must not leak it
-        pool.free(slot);
+        // hand the lane back: a failed admission must not leak it
+        pool.release(lease);
         return Err(e);
     }
     let pre = &scratch.arena.prefill;
@@ -233,21 +236,26 @@ pub(crate) fn machine_prefill(
             &pre.v.data,
             None,
         ) {
-            pool.attach_chain(slot, pin);
-            return Ok(slot);
+            pool.attach_chain(&lease, pin);
+            return Ok(lease);
         }
     }
-    pool.write_prefill(slot, 0, pad_to, &pre.k.data, &pre.v.data);
-    Ok(slot)
+    if let Err(e) = pool.write_prefill(&lease, 0, pad_to, &pre.k.data, &pre.v.data)
+    {
+        pool.release(lease);
+        return Err(e);
+    }
+    Ok(lease)
 }
 
 /// Refine one cohort's block to completion + early-stop marking at the
 /// boundary. Mirrors the per-block refinement loop of [`decode`]: every
 /// not-done cohort lane ticks while any cohort lane still has masked
 /// positions in the block. Rows beyond `seqs.len()` alias the last live
-/// lane and its slot (bucket padding; never finalized or committed).
-/// This is the hot path the `hotpath` bench drives: once the scratch
-/// arena is warm, a refinement pass performs zero heap allocations.
+/// lane and its pages (bucket padding inside `view_padded`; never
+/// finalized or committed). This is the hot path the `hotpath` bench
+/// drives: once the scratch arena is warm, a refinement pass performs
+/// zero heap allocations.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn machine_step(
     progs: &Programs,
@@ -255,20 +263,24 @@ pub(crate) fn machine_step(
     pool: &KvPool,
     seqs: &mut [&mut SequenceState],
     taus: &[f32],
-    slots: &[SlotId],
+    leases: &[&KvLease],
     lo: usize,
     blk: usize,
     pad_to: usize,
     scratch: &mut StepScratch,
 ) -> Result<()> {
     let n = seqs.len();
+    debug_assert_eq!(n, leases.len(), "cohort seqs/leases out of sync");
     let p_len = geom.prompt_len;
-    let cache_len = p_len + lo;
+    debug_assert_eq!(
+        pool.cache_len_of(leases[0]),
+        p_len + lo,
+        "cohort cache out of lockstep with the block cursor"
+    );
     scratch.arena.valid_from.reuse(&[pad_to]);
     for r in 0..pad_to {
         scratch.arena.valid_from.data[r] = seqs[r.min(n - 1)].valid_from;
     }
-    scratch.pad_slots(slots, n, pad_to);
     scratch.arena.blk.reuse(&[pad_to, blk]);
     loop {
         let any = (0..n)
@@ -283,7 +295,7 @@ pub(crate) fn machine_step(
         progs.student_block_step(
             pad_to,
             blk,
-            &pool.view(&scratch.call_slots, cache_len),
+            &pool.view_padded(leases, pad_to),
             &scratch.arena.valid_from,
             &scratch.arena.blk,
             (p_len + lo) as i32,
@@ -318,60 +330,58 @@ pub(crate) fn machine_step(
 
 /// Commit the block KV for the cohort lanes that continue past the
 /// boundary (one extra model call each, not a refinement step — the
-/// same §A.3 accounting as [`decode`]). `items` holds only continuing
-/// lanes; callers skip the call entirely when none continue. Shares the
-/// caller's [`StepScratch`] with [`machine_step`] — the buffers are
-/// reshaped (`reuse`) when the continuing-lane pad differs from the
-/// step pad, which zero-fills in place without allocating once warm.
+/// same §A.3 accounting as [`decode`]). `seqs`/`leases` hold only
+/// continuing lanes, in lockstep; callers skip the call entirely when
+/// none continue. Shares the caller's [`StepScratch`] with
+/// [`machine_step`] — the buffers are reshaped (`reuse`) when the
+/// continuing-lane pad differs from the step pad, which zero-fills in
+/// place without allocating once warm.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn machine_commit(
     progs: &Programs,
     geom: &Geometry,
     pool: &mut KvPool,
-    items: &mut [(&mut SequenceState, SlotId)],
+    seqs: &mut [&mut SequenceState],
+    leases: &[&KvLease],
     lo: usize,
     blk: usize,
     pad_to: usize,
     scratch: &mut StepScratch,
 ) -> Result<()> {
-    let n = items.len();
+    let n = seqs.len();
     if n == 0 {
         return Ok(());
     }
+    debug_assert_eq!(n, leases.len(), "commit seqs/leases out of sync");
     let p_len = geom.prompt_len;
-    let cache_len = p_len + lo;
     scratch.arena.valid_from.reuse(&[pad_to]);
     for r in 0..pad_to {
-        scratch.arena.valid_from.data[r] = items[r.min(n - 1)].0.valid_from;
+        scratch.arena.valid_from.data[r] = seqs[r.min(n - 1)].valid_from;
     }
-    scratch.call_slots.clear();
-    scratch
-        .call_slots
-        .extend((0..pad_to).map(|r| items[r.min(n - 1)].1));
     scratch.arena.blk.reuse(&[pad_to, blk]);
     for r in 0..pad_to {
         scratch.arena.blk.data[r * blk..(r + 1) * blk]
-            .copy_from_slice(&items[r.min(n - 1)].0.gen[lo..lo + blk]);
+            .copy_from_slice(&seqs[r.min(n - 1)].gen[lo..lo + blk]);
     }
     progs.student_block_step(
         pad_to,
         blk,
-        &pool.view(&scratch.call_slots, cache_len),
+        &pool.view_padded(leases, pad_to),
         &scratch.arena.valid_from,
         &scratch.arena.blk,
         (p_len + lo) as i32,
         &mut scratch.arena.block,
     )?;
-    for (lane, (s, slot)) in items.iter_mut().enumerate() {
+    for (lane, lease) in leases.iter().enumerate() {
         pool.commit_block(
-            *slot,
+            lease,
             lane,
             pad_to,
             blk,
             &scratch.arena.block.k_blk.data,
             &scratch.arena.block.v_blk.data,
-        );
-        s.model_calls += 1;
+        )?;
+        seqs[lane].model_calls += 1;
     }
     Ok(())
 }

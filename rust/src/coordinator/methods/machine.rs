@@ -10,7 +10,7 @@
 //! boundaries. [`BatchState`] exploits it:
 //!
 //! * every request owns a **lane**: a [`SequenceState`], an optional KV
-//!   slot, a per-lane tau, and a block cursor;
+//!   lease, a per-lane tau, and a block cursor;
 //! * [`BatchState::admit`] fills a free lane at any block boundary with
 //!   a bucket-1 prefill (per-lane program outputs are independent of
 //!   batch composition, so a lane admitted alone decodes exactly as it
@@ -22,8 +22,14 @@
 //!   bucket by aliasing the last live lane), then commits its block KV
 //!   and applies the method's early-stop policy;
 //! * [`BatchState::take_finished`] retires finished lanes immediately —
-//!   the outcome is produced and the KV slot freed mid-batch, instead
-//!   of the lane dragging along dead until the group drains.
+//!   the outcome is produced and the KV lease released mid-batch,
+//!   instead of the lane dragging along dead until the group drains;
+//! * [`BatchState::suspend_lane`] / [`BatchState::resume_lane`] park a
+//!   live lane at a block boundary: its KV pages spill to a host-side
+//!   cold tier ([`SuspendedKv`]) and the lane slot frees for another
+//!   request; resuming restores the bytes exactly, so the continued
+//!   decode is byte-identical to an uninterrupted run
+//!   (`tests/preemption.rs` pins this for all six methods).
 //!
 //! The per-method step behavior (cache variant, finalization policy,
 //! §A.3 step/model-call accounting) lives next to each closed-batch
@@ -43,7 +49,7 @@ use anyhow::Result;
 
 use super::{ar, bidirectional, cached_teacher, cdlm};
 use super::{DecodeOpts, DecodeOutcome, Method, StepScratch};
-use crate::coordinator::kv_cache::{KvPool, SlotId};
+use crate::coordinator::kv_cache::{KvLease, KvPool, SuspendedKv};
 use crate::coordinator::sequence::SequenceState;
 use crate::runtime::{
     Geometry, ModelWeights, Programs, Runtime, TensorI32,
@@ -85,15 +91,41 @@ struct Lane {
     cur_tok: i32,
     /// AR: next generation index to write.
     ar_pos: usize,
-    slot: Option<SlotId>,
+    lease: Option<KvLease>,
     /// Set at the block boundary where the lane completed; the lane
     /// stops stepping and waits for [`BatchState::take_finished`].
     finished: bool,
 }
 
+/// A lane parked off the machine by [`BatchState::suspend_lane`]: the
+/// full decode state plus the lane's spilled KV pages (host-side cold
+/// tier). Holds no pool resources except the shared-prefix chain pin
+/// (kept so the cached prompt pages cannot be evicted out from under a
+/// parked request); [`BatchState::resume_lane`] puts it back on a free
+/// lane with byte-identical continuation, and
+/// [`BatchState::discard_suspended`] drops it (unpinning the chain) if
+/// the request is cancelled while parked.
+pub struct SuspendedLane {
+    seq: SequenceState,
+    tau: f32,
+    block: usize,
+    ssr: usize,
+    cur_tok: i32,
+    ar_pos: usize,
+    kv: Option<SuspendedKv>,
+}
+
+impl SuspendedLane {
+    /// Bytes held in the cold tier for this lane (0 for cache-less
+    /// methods, whose lanes have no KV to spill).
+    pub fn spilled_bytes(&self) -> usize {
+        self.kv.as_ref().map_or(0, SuspendedKv::spilled_bytes)
+    }
+}
+
 /// A resumable lockstep batch: fixed lane capacity, per-lane state, an
-/// owned KV pool whose slots recycle as lanes retire and admissions
-/// take their place.
+/// owned KV pool whose paged lanes recycle as requests retire and
+/// admissions take their place.
 pub struct BatchState {
     rt: Arc<Runtime>,
     weights: Arc<ModelWeights>,
@@ -139,7 +171,7 @@ impl BatchState {
         buckets.sort_unstable();
         let max_bucket = buckets.last().copied().unwrap_or(1);
         let cap = capacity.clamp(1, max_bucket);
-        // cache-less methods never allocate a slot; skip their slabs.
+        // cache-less methods never lease a lane; skip their slabs.
         // Prefix pages are NOT budgeted here: the machine starts with
         // the prefix cache off, and `set_prefix_cache(true)` swaps in
         // the paged pool — a machine that never shares never pays for
@@ -163,6 +195,36 @@ impl BatchState {
         })
     }
 
+    /// A machine whose pool **under-provisions** its page budgets: the
+    /// pressure cooker behind `cdlm bench --scenario preempt` and
+    /// `tests/preemption.rs`. `prompt_budget` / `tail_budget` pages are
+    /// shared by all lanes; when the tail free list cannot cover the
+    /// next block wave the caller suspends lanes
+    /// ([`BatchState::suspend_lane`]) to spill pages and make progress.
+    /// One-owner full-slot provisioning of the same slab would cap live
+    /// lanes at `tail_budget / tail_pages_full` — paged on-demand
+    /// allocation sustains more, which is the whole point.
+    pub fn with_kv_budgets(
+        rt: Arc<Runtime>,
+        weights: Arc<ModelWeights>,
+        method: Method,
+        opts: DecodeOpts,
+        capacity: usize,
+        prompt_budget: usize,
+        tail_budget: usize,
+    ) -> Result<BatchState> {
+        let mut st = Self::new(rt, weights, method, opts, capacity)?;
+        let pool_cap = if method.uses_kv_cache() { st.capacity() } else { 0 };
+        st.pool = KvPool::with_page_budgets(
+            &st.geom,
+            pool_cap,
+            prompt_budget,
+            tail_budget,
+            0,
+        );
+        Ok(st)
+    }
+
     /// Enable (or disable) shared-prefix KV reuse for admissions. Warm
     /// full-prompt hits then skip the admission prefill: decode traces
     /// stay byte-identical (the chain pages hold exactly the prefill
@@ -172,7 +234,7 @@ impl BatchState {
     /// Enabling on a fresh machine (the serving layer does it right
     /// after construction) swaps in a pool with the default prefix-page
     /// budget. Enabling later — once lanes or counters exist — keeps
-    /// the pageless pool: admissions then fall back to private-slot
+    /// the pageless pool: admissions then fall back to private-page
     /// prefills, which is always correct, just unshared.
     pub fn set_prefix_cache(&mut self, on: bool) {
         if on
@@ -210,7 +272,7 @@ impl BatchState {
         self.lanes.iter().all(Option::is_none)
     }
 
-    /// KV slots currently held by live lanes.
+    /// KV lanes currently leased by live lanes.
     pub fn kv_in_use(&self) -> usize {
         self.pool.in_use()
     }
@@ -223,8 +285,8 @@ impl BatchState {
         self.pool.inject_alloc_failures(n);
     }
 
-    /// Lifetime slot allocations in this batch's pool — exceeds the
-    /// lane count once retired lanes' slots recycle into admissions.
+    /// Lifetime lane allocations in this batch's pool — exceeds the
+    /// lane count once retired lanes recycle into admissions.
     pub fn kv_total_allocs(&self) -> u64 {
         self.pool.total_allocs
     }
@@ -249,6 +311,80 @@ impl BatchState {
         self.pool.prefix_resident_pages()
     }
 
+    /// Lanes suspended to the cold tier over this machine's lifetime.
+    pub fn kv_preempts(&self) -> u64 {
+        self.pool.preempts
+    }
+
+    /// Suspended lanes restored from the cold tier.
+    pub fn kv_resumes(&self) -> u64 {
+        self.pool.resumes
+    }
+
+    /// Total bytes ever spilled to the cold tier by suspensions.
+    pub fn kv_spilled_bytes(&self) -> u64 {
+        self.pool.spilled_bytes
+    }
+
+    /// Live lanes that have not reached their finish boundary — the
+    /// preemption watermark's demand signal: each may commit one more
+    /// block (at most one new tail page) next cycle.
+    pub fn unfinished_lanes(&self) -> usize {
+        self.lanes.iter().flatten().filter(|l| !l.finished).count()
+    }
+
+    /// Tail pages on the pool's free list (the watermark supply
+    /// signal; see [`BatchState::with_kv_budgets`]).
+    pub fn kv_tail_pages_free(&self) -> usize {
+        self.pool.tail_pages_free()
+    }
+
+    pub fn kv_prompt_pages_free(&self) -> usize {
+        self.pool.prompt_pages_free()
+    }
+
+    /// Tail pages provisioned in this machine's pool.
+    pub fn kv_tail_page_budget(&self) -> usize {
+        self.pool.tail_page_budget()
+    }
+
+    pub fn kv_prompt_page_budget(&self) -> usize {
+        self.pool.prompt_page_budget()
+    }
+
+    /// Tail pages covering one full gen region; `tail_page_budget /
+    /// tail_pages_full` is the one-owner contiguous-slot lane cap the
+    /// preempt bench compares against.
+    pub fn kv_tail_pages_full(&self) -> usize {
+        self.pool.tail_pages_full()
+    }
+
+    /// Leak check: every leased pool lane is owned by exactly one live
+    /// lane. Holds between any two machine calls (admissions release
+    /// their lease on every error path; retirement, cancellation, and
+    /// suspension free or spill eagerly). `tests/preemption.rs` and the
+    /// fault-tolerance tests call this after draining a machine;
+    /// [`KvPool::assert_no_leaks`] checks the page-level accounting
+    /// underneath.
+    pub fn assert_kv_balanced(&self) {
+        let held = self
+            .lanes
+            .iter()
+            .flatten()
+            .filter(|l| l.lease.is_some())
+            .count();
+        assert_eq!(
+            self.pool.in_use(),
+            held,
+            "leaked KV lanes: pool leases {} but lanes hold {}",
+            self.pool.in_use(),
+            held
+        );
+        if held == 0 {
+            self.pool.assert_no_leaks();
+        }
+    }
+
     /// Diagnostic/test accessor: `(resident blocks, min refcount)` of a
     /// prompt's cached chain under this machine's weights.
     pub fn prefix_chain_info(
@@ -260,10 +396,10 @@ impl BatchState {
 
     /// Admit one request into a free lane: a single-lane prefill
     /// (padded to the smallest exported bucket) for the caching
-    /// methods, slot allocation only for the approximate-cache
-    /// teachers, nothing for the cache-less baselines. Legal at any
-    /// block boundary — the new lane starts at block 0 in its own
-    /// cohort and never perturbs in-flight lanes.
+    /// methods, a lane lease only for the approximate-cache teachers,
+    /// nothing for the cache-less baselines. Legal at any block
+    /// boundary — the new lane starts at block 0 in its own cohort and
+    /// never perturbs in-flight lanes.
     ///
     /// Admissions are per-lane by design (a mid-flight join has no one
     /// to share a call with). When a batch opens with several requests
@@ -303,7 +439,7 @@ impl BatchState {
         // must never share one
         let prefix_tag =
             if self.prefix_cache { Some(self.weights.seed) } else { None };
-        let (slot, cur_tok) = match self.method {
+        let (lease, cur_tok) = match self.method {
             Method::Vanilla | Method::FastDllmPar => (None, 0),
             Method::DllmCache | Method::FastDllmDc => {
                 (Some(self.pool.alloc()?), 0)
@@ -320,7 +456,7 @@ impl BatchState {
                 0,
             ),
             Method::Ar => {
-                let (slot, tok) = ar::machine_prefill(
+                let (lease, tok) = ar::machine_prefill(
                     &progs,
                     &mut self.pool,
                     &mut seq,
@@ -328,7 +464,7 @@ impl BatchState {
                     prefix_tag,
                     &mut self.scratch,
                 )?;
-                (Some(slot), tok)
+                (Some(lease), tok)
             }
         };
         self.lanes[idx] = Some(Lane {
@@ -338,7 +474,7 @@ impl BatchState {
             ssr: usize::MAX,
             cur_tok,
             ar_pos: 0,
-            slot,
+            lease,
             finished: false,
         });
         self.total_admissions += 1;
@@ -385,27 +521,112 @@ impl BatchState {
         Ok(runs)
     }
 
-    /// Cancel a live lane at the block boundary: drop its state, free
-    /// its KV slot (which also unpins any shared-prefix chain the
-    /// admission attached — the pages stay resident as warm cache), and
-    /// return the partial outcome so the caller can account the wasted
-    /// steps/model calls. Legal between any two [`step_cycle`] calls;
-    /// in-flight cohort mates are never perturbed (per-lane program
-    /// outputs are independent of batch composition, the same property
-    /// admission relies on). Returns `None` for a lane that is already
-    /// empty.
+    /// Cancel a live lane at the block boundary: drop its state,
+    /// release its KV lease (which also unpins any shared-prefix chain
+    /// the admission attached — the pages stay resident as warm cache),
+    /// and return the partial outcome so the caller can account the
+    /// wasted steps/model calls. Legal between any two [`step_cycle`]
+    /// calls; in-flight cohort mates are never perturbed (per-lane
+    /// program outputs are independent of batch composition, the same
+    /// property admission relies on). Returns `None` for a lane that is
+    /// already empty.
     ///
     /// [`step_cycle`]: BatchState::step_cycle
     pub fn cancel_lane(&mut self, lane: usize) -> Option<DecodeOutcome> {
         let l = self.lanes.get_mut(lane)?.take()?;
-        if let Some(slot) = l.slot {
-            self.pool.free(slot);
+        if let Some(lease) = l.lease {
+            self.pool.release(lease);
         }
         Some(l.seq.into_outcome())
     }
 
-    /// Retire every finished lane: free its KV slot (mid-batch slot
-    /// recycling — the slot is immediately reusable by the next
+    /// Suspend a live, unfinished lane at the block boundary: the KV
+    /// pages spill to the pool's cold tier, the lane and its pool lane
+    /// free immediately for another admission, and the decode state
+    /// comes back as a [`SuspendedLane`] the caller parks. Returns
+    /// `None` for an empty lane or one already finished (retire those
+    /// through [`BatchState::take_finished`] instead — suspending a
+    /// finished lane would only delay its response).
+    ///
+    /// Legal between any two [`step_cycle`] calls, like
+    /// [`BatchState::cancel_lane`]. The shared-prefix chain pin (if
+    /// any) stays pinned inside the spilled state so the cached prompt
+    /// pages survive the parking.
+    pub fn suspend_lane(&mut self, lane: usize) -> Option<SuspendedLane> {
+        match self.lanes.get(lane)?.as_ref() {
+            Some(l) if !l.finished => {}
+            _ => return None,
+        }
+        let l = self.lanes[lane].take().expect("checked live above");
+        let kv = l.lease.map(|lease| self.pool.suspend(lease));
+        Some(SuspendedLane {
+            seq: l.seq,
+            tau: l.tau,
+            block: l.block,
+            ssr: l.ssr,
+            cur_tok: l.cur_tok,
+            ar_pos: l.ar_pos,
+            kv,
+        })
+    }
+
+    /// Whether [`BatchState::resume_lane`] would succeed right now: a
+    /// free lane exists and the pool has pages for the spilled state.
+    pub fn can_resume(&self, s: &SuspendedLane) -> bool {
+        self.lanes.iter().any(Option::is_none)
+            && match &s.kv {
+                Some(kv) => self.pool.can_resume(kv),
+                None => true,
+            }
+    }
+
+    /// Resume a suspended lane onto a free lane: pages re-allocate, the
+    /// spilled bytes copy back, and the lane continues from its block
+    /// cursor byte-identically. On failure (no free lane, or the pool
+    /// cannot seat the pages right now) the state is handed back intact
+    /// for the caller to retry later.
+    pub fn resume_lane(
+        &mut self,
+        mut s: SuspendedLane,
+    ) -> std::result::Result<usize, SuspendedLane> {
+        let Some(idx) = self.lanes.iter().position(Option::is_none) else {
+            return Err(s);
+        };
+        let lease = match s.kv.take() {
+            None => None,
+            Some(kv) => match self.pool.resume(kv) {
+                Ok(lease) => Some(lease),
+                Err(kv) => {
+                    s.kv = Some(kv);
+                    return Err(s);
+                }
+            },
+        };
+        self.lanes[idx] = Some(Lane {
+            seq: s.seq,
+            tau: s.tau,
+            block: s.block,
+            ssr: s.ssr,
+            cur_tok: s.cur_tok,
+            ar_pos: s.ar_pos,
+            lease,
+            finished: false,
+        });
+        Ok(idx)
+    }
+
+    /// Drop a parked lane for good (request cancelled or its client
+    /// gone): unpins any chain the spilled state still holds and
+    /// returns the partial outcome for abort accounting.
+    pub fn discard_suspended(&mut self, s: SuspendedLane) -> DecodeOutcome {
+        if let Some(kv) = s.kv {
+            self.pool.discard_suspended(kv);
+        }
+        s.seq.into_outcome()
+    }
+
+    /// Retire every finished lane: release its KV lease (mid-batch lane
+    /// recycling — the pool lane is immediately reusable by the next
     /// admission) and convert its state into a [`DecodeOutcome`].
     /// Returns `(lane index, outcome)` pairs.
     pub fn take_finished(&mut self) -> Vec<(usize, DecodeOutcome)> {
@@ -413,8 +634,8 @@ impl BatchState {
         for (i, entry) in self.lanes.iter_mut().enumerate() {
             if entry.as_ref().is_some_and(|l| l.finished) {
                 let lane = entry.take().expect("checked above");
-                if let Some(slot) = lane.slot {
-                    self.pool.free(slot);
+                if let Some(lease) = lane.lease {
+                    self.pool.release(lease);
                 }
                 out.push((i, lane.seq.into_outcome()));
             }
@@ -485,15 +706,20 @@ impl BatchState {
                 } else {
                     cached_teacher::Variant::DualCache
                 };
-                let slots: Vec<SlotId> = lane_refs
-                    .iter()
-                    .map(|l| l.slot.expect("cached lane has a slot"))
-                    .collect();
                 let ssr_in =
                     lane_refs.iter().map(|l| l.ssr).max().unwrap_or(usize::MAX);
                 let ssr_out = {
+                    // split each lane borrow into disjoint seq + lease
                     let mut seqs: Vec<&mut SequenceState> =
-                        lane_refs.iter_mut().map(|l| &mut l.seq).collect();
+                        Vec::with_capacity(n);
+                    let mut leases: Vec<&KvLease> = Vec::with_capacity(n);
+                    for l in lane_refs.iter_mut() {
+                        let Lane { seq, lease, .. } = &mut **l;
+                        seqs.push(seq);
+                        leases.push(
+                            lease.as_ref().expect("cached lane holds a lease"),
+                        );
+                    }
                     cached_teacher::machine_step(
                         &progs,
                         &self.geom,
@@ -502,7 +728,7 @@ impl BatchState {
                         &mut self.pool,
                         &mut seqs,
                         &taus,
-                        &slots,
+                        &leases,
                         ssr_in,
                         cursor * blk,
                         blk,
@@ -519,20 +745,24 @@ impl BatchState {
                 }
             }
             Method::Cdlm => {
-                let slots: Vec<SlotId> = lane_refs
-                    .iter()
-                    .map(|l| l.slot.expect("cdlm lane has a slot"))
-                    .collect();
                 {
                     let mut seqs: Vec<&mut SequenceState> =
-                        lane_refs.iter_mut().map(|l| &mut l.seq).collect();
+                        Vec::with_capacity(n);
+                    let mut leases: Vec<&KvLease> = Vec::with_capacity(n);
+                    for l in lane_refs.iter_mut() {
+                        let Lane { seq, lease, .. } = &mut **l;
+                        seqs.push(seq);
+                        leases.push(
+                            lease.as_ref().expect("cdlm lane holds a lease"),
+                        );
+                    }
                     cdlm::machine_step(
                         &progs,
                         &self.geom,
                         &self.pool,
                         &mut seqs,
                         &taus,
-                        &slots,
+                        &leases,
                         cursor * blk,
                         blk,
                         pad_to,
@@ -541,24 +771,31 @@ impl BatchState {
                 }
                 // commit block KV only for lanes continuing past the
                 // boundary (early-stopped lanes retire without paying
-                // the commit call — same as the closed-batch engine)
+                // the commit call — same as the closed-batch engine;
+                // their pages never need to cover later blocks because
+                // retirement frees them before the cohort re-forms)
                 if cursor + 1 < num_blocks {
-                    let mut items: Vec<(&mut SequenceState, SlotId)> =
-                        lane_refs
-                            .iter_mut()
-                            .filter(|l| !l.seq.done)
-                            .map(|l| {
-                                let slot =
-                                    l.slot.expect("cdlm lane has a slot");
-                                (&mut l.seq, slot)
-                            })
-                            .collect();
-                    let pad = pad_of(&self.buckets, items.len());
+                    let mut cseqs: Vec<&mut SequenceState> =
+                        Vec::with_capacity(n);
+                    let mut cleases: Vec<&KvLease> = Vec::with_capacity(n);
+                    for l in lane_refs.iter_mut() {
+                        if !l.seq.done {
+                            let Lane { seq, lease, .. } = &mut **l;
+                            cseqs.push(seq);
+                            cleases.push(
+                                lease
+                                    .as_ref()
+                                    .expect("cdlm lane holds a lease"),
+                            );
+                        }
+                    }
+                    let pad = pad_of(&self.buckets, cseqs.len());
                     cdlm::machine_commit(
                         &progs,
                         &self.geom,
                         &mut self.pool,
-                        &mut items,
+                        &mut cseqs,
+                        &cleases,
                         cursor * blk,
                         blk,
                         pad,
@@ -577,22 +814,26 @@ impl BatchState {
                 }
             }
             Method::Ar => {
-                let slots: Vec<SlotId> = lane_refs
-                    .iter()
-                    .map(|l| l.slot.expect("ar lane has a slot"))
-                    .collect();
                 let mut curs: Vec<i32> =
                     lane_refs.iter().map(|l| l.cur_tok).collect();
                 {
                     let mut seqs: Vec<&mut SequenceState> =
-                        lane_refs.iter_mut().map(|l| &mut l.seq).collect();
+                        Vec::with_capacity(n);
+                    let mut leases: Vec<&KvLease> = Vec::with_capacity(n);
+                    for l in lane_refs.iter_mut() {
+                        let Lane { seq, lease, .. } = &mut **l;
+                        seqs.push(seq);
+                        leases.push(
+                            lease.as_ref().expect("ar lane holds a lease"),
+                        );
+                    }
                     ar::machine_step(
                         &progs,
                         &self.geom,
                         &mut self.pool,
                         &mut seqs,
                         &mut curs,
-                        &slots,
+                        &leases,
                         cursor,
                         blk,
                         pad_to,

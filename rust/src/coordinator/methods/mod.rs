@@ -32,35 +32,26 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use super::kv_cache::{KvPool, SlotId};
+use super::kv_cache::KvPool;
 use crate::runtime::{Geometry, Programs, StepArena};
 
 /// Per-machine decode scratch: the [`StepArena`] holding every program
-/// output and padded program input, plus the reused slot-padding buffer
-/// the policy functions build their `KvView`s from. One instance lives
-/// in each [`machine::BatchState`]; closed-batch engines build a local
-/// one per decode call. After the first step of a batch shape, every
-/// buffer is warm and steady-state decode steps allocate nothing — the
-/// property `cdlm bench --scenario hotpath` gates.
+/// output and padded program input. One instance lives in each
+/// [`machine::BatchState`]; closed-batch engines build a local one per
+/// decode call. Bucket padding of KV lanes happens inside
+/// `KvPool::view_padded` (padded rows borrow the last real lane's
+/// segment run), so no slot-padding buffer exists anymore. After the
+/// first step of a batch shape, every buffer is warm and steady-state
+/// decode steps allocate nothing — the property
+/// `cdlm bench --scenario hotpath` gates.
 #[derive(Default)]
 pub struct StepScratch {
     pub arena: StepArena,
-    /// Bucket-padded slot list (`Vec::clear` keeps capacity, so reuse
-    /// across cohorts never reallocates once warm).
-    pub call_slots: Vec<SlotId>,
 }
 
 impl StepScratch {
     pub fn new() -> Self {
         Self::default()
-    }
-
-    /// Fill `call_slots` with the bucket-padded slot list: rows past
-    /// `n - 1` alias the last live lane (the shared pad contract).
-    pub fn pad_slots(&mut self, slots: &[SlotId], n: usize, pad_to: usize) {
-        self.call_slots.clear();
-        self.call_slots
-            .extend((0..pad_to).map(|r| slots[r.min(n - 1)]));
     }
 }
 

@@ -15,11 +15,11 @@
 //!      (positions beyond the accepted prefix are recomputed when they
 //!      are re-drafted — the cache stays exact).
 //!
-//! Both cache sets (drafter + verifier) live in one pool; every program
-//! call borrows a zero-copy `KvView` of the relevant slot set. The
-//! drafter's and verifier's block outputs must be live at the same time
-//! (the commit step reads both), so this engine keeps two
-//! [`BlockStepOut`] scratch structs — the two-arena case the
+//! Both cache sets (drafter + verifier) lease lanes from one pool;
+//! every program call borrows a zero-copy `KvView` of the relevant
+//! lease set. The drafter's and verifier's block outputs must be live
+//! at the same time (the commit step reads both), so this engine keeps
+//! two [`BlockStepOut`] scratch structs — the two-arena case the
 //! [`crate::runtime::StepArena`] docs call out — both reused across
 //! every draft/verify/commit call.
 //!
@@ -37,7 +37,7 @@
 use anyhow::Result;
 
 use super::{DecodeOpts, DecodeOutcome};
-use crate::coordinator::kv_cache::{KvPool, SlotId};
+use crate::coordinator::kv_cache::{KvLease, KvPool};
 use crate::coordinator::sequence::SequenceState;
 use crate::runtime::programs::{ArPrefillOut, BlockStepOut, PrefillOut};
 use crate::runtime::{Geometry, Programs, TensorI32};
@@ -77,15 +77,29 @@ pub fn decode(
     draft_progs.student_prefill(bs, &pid_t, &valid_from, &mut d_pre)?;
     let mut v_pre = ArPrefillOut::default();
     verify_progs.ar_prefill(bs, &pid_t, &valid_from, &mut v_pre)?;
-    let d_slots: Vec<SlotId> =
+    let d_leases: Vec<KvLease> =
         (0..bs).map(|_| pool.alloc()).collect::<Result<_>>()?;
-    let v_slots: Vec<SlotId> =
+    let v_leases: Vec<KvLease> =
         (0..bs).map(|_| pool.alloc()).collect::<Result<_>>()?;
     for lane in 0..bs {
-        pool.write_prefill(d_slots[lane], lane, bs, &d_pre.k.data, &d_pre.v.data);
-        pool.write_prefill(v_slots[lane], lane, bs, &v_pre.k.data, &v_pre.v.data);
+        pool.write_prefill(
+            &d_leases[lane],
+            lane,
+            bs,
+            &d_pre.k.data,
+            &d_pre.v.data,
+        )?;
+        pool.write_prefill(
+            &v_leases[lane],
+            lane,
+            bs,
+            &v_pre.k.data,
+            &v_pre.v.data,
+        )?;
         seqs[lane].model_calls += 2;
     }
+    let d_refs: Vec<&KvLease> = d_leases.iter().collect();
+    let v_refs: Vec<&KvLease> = v_leases.iter().collect();
 
     // verifier's next-token proposal entering the current block
     let mut next_tok: Vec<i32> = v_pre.tok.data.clone();
@@ -94,7 +108,6 @@ pub fn decode(
     let mut blk_t = TensorI32::from_vec(&[bs, blk], vec![MASK; bs * blk]);
     let mut d_out = BlockStepOut::default();
     let mut v_out = BlockStepOut::default();
-    let mut cache_len = p_len;
 
     for b in 0..num_blocks {
         let lo = b * blk;
@@ -116,7 +129,7 @@ pub fn decode(
             draft_progs.student_block_step(
                 bs,
                 blk,
-                &pool.view(&d_slots, cache_len),
+                &pool.view(&d_refs),
                 &valid_from,
                 &blk_t,
                 (p_len + lo) as i32,
@@ -156,7 +169,7 @@ pub fn decode(
         verify_progs.ar_verify(
             bs,
             blk,
-            &pool.view(&v_slots, cache_len),
+            &pool.view(&v_refs),
             &valid_from,
             &blk_t,
             (p_len + lo) as i32,
@@ -206,9 +219,8 @@ pub fn decode(
                 &mut seqs,
                 &valid_from,
                 pool,
-                (d_slots.as_slice(), v_slots.as_slice()),
+                (&d_refs, &v_refs),
                 lo,
-                cache_len,
                 &mut next_tok,
                 &mut blk_t,
                 &mut d_out,
@@ -231,7 +243,7 @@ pub fn decode(
         draft_progs.student_block_step(
             bs,
             blk,
-            &pool.view(&d_slots, cache_len),
+            &pool.view(&d_refs),
             &valid_from,
             &blk_t,
             (p_len + lo) as i32,
@@ -240,26 +252,30 @@ pub fn decode(
         verify_progs.ar_verify(
             bs,
             blk,
-            &pool.view(&v_slots, cache_len),
+            &pool.view(&v_refs),
             &valid_from,
             &blk_t,
             (p_len + lo) as i32,
             &mut v_out,
         )?;
+        // every lane commits — done lanes too, so their pages keep
+        // covering the lockstep cache_len later views span; the
+        // accounting stays gated on live lanes
         for lane in 0..bs {
+            pool.commit_block(&d_leases[lane], lane, bs, blk,
+                              &d_out.k_blk.data, &d_out.v_blk.data)?;
+            pool.commit_block(&v_leases[lane], lane, bs, blk,
+                              &v_out.k_blk.data, &v_out.v_blk.data)?;
             if !seqs[lane].done {
-                pool.commit_block(d_slots[lane], lane, bs, blk,
-                                  &d_out.k_blk.data, &d_out.v_blk.data);
-                pool.commit_block(v_slots[lane], lane, bs, blk,
-                                  &v_out.k_blk.data, &v_out.v_blk.data);
                 seqs[lane].model_calls += 2;
                 next_tok[lane] = v_out.tok.data[lane * blk + blk - 1];
             }
         }
-        cache_len += blk;
     }
-    for slot in d_slots.into_iter().chain(v_slots) {
-        pool.free(slot);
+    drop(d_refs);
+    drop(v_refs);
+    for lease in d_leases.into_iter().chain(v_leases) {
+        pool.release(lease);
     }
     Ok(seqs.into_iter().map(SequenceState::into_outcome).collect())
 }
@@ -267,7 +283,7 @@ pub fn decode(
 /// Re-draft + re-verify the unfinished tail of a block until every live
 /// lane has it fully finalized. Bounded: each verify pass accepts at
 /// least one token per lane. Reads both cache sets through fresh views
-/// per call (`slots` is the (draft, verify) slot-set pair) and reuses
+/// per call (`leases` is the (draft, verify) lease-set pair) and reuses
 /// the caller's block-id buffer and block outputs.
 #[allow(clippy::too_many_arguments)]
 fn continue_redraft(
@@ -278,15 +294,14 @@ fn continue_redraft(
     seqs: &mut [SequenceState],
     valid_from: &TensorI32,
     pool: &KvPool,
-    slots: (&[SlotId], &[SlotId]),
+    leases: (&[&KvLease], &[&KvLease]),
     lo: usize,
-    cache_len: usize,
     next_tok: &mut [i32],
     blk_t: &mut TensorI32,
     d_out: &mut BlockStepOut,
     v_out: &mut BlockStepOut,
 ) -> Result<()> {
-    let (d_slots, v_slots) = slots;
+    let (d_refs, v_refs) = leases;
     let bs = seqs.len();
     let blk = geom.block_size;
     let p_len = geom.prompt_len;
@@ -319,7 +334,7 @@ fn continue_redraft(
             draft_progs.student_block_step(
                 bs,
                 blk,
-                &pool.view(d_slots, cache_len),
+                &pool.view(d_refs),
                 valid_from,
                 blk_t,
                 (p_len + lo) as i32,
@@ -348,7 +363,7 @@ fn continue_redraft(
         verify_progs.ar_verify(
             bs,
             blk,
-            &pool.view(v_slots, cache_len),
+            &pool.view(v_refs),
             valid_from,
             blk_t,
             (p_len + lo) as i32,

@@ -201,6 +201,30 @@ impl SupervisionStats {
     }
 }
 
+/// Lifetime SLO-preemption counters, surfaced on both `/metrics` (as
+/// the `preemption` object, summed across shards) and `/healthz` (as
+/// flat `kv_preempts` / `kv_resumes` / `kv_spilled_bytes` keys).
+/// `preempts` counts lanes suspended at a block boundary to make room
+/// for higher-priority work, `resumes` counts lanes seated back from
+/// the cold tier (byte-identical continuation), and `spilled_bytes`
+/// totals the KV bytes ever written to the host-side spill arena.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PreemptionStats {
+    pub preempts: u64,
+    pub resumes: u64,
+    pub spilled_bytes: u64,
+}
+
+impl PreemptionStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("preempts", Json::num(self.preempts as f64)),
+            ("resumes", Json::num(self.resumes as f64)),
+            ("spilled_bytes", Json::num(self.spilled_bytes as f64)),
+        ])
+    }
+}
+
 #[cfg(test)]
 #[allow(clippy::unwrap_used)]
 mod tests {

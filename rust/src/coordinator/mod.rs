@@ -13,8 +13,8 @@ pub mod sequence;
 
 pub use batcher::{DynamicBatcher, GroupKey, Pending};
 pub use faults::{FaultKind, FaultPlan};
-pub use kv_cache::{ChainPin, KvPool, SlotId};
-pub use methods::machine::{BatchState, CommitRun};
+pub use kv_cache::{ChainPin, KvLease, KvPool, SuspendedKv};
+pub use methods::machine::{BatchState, CommitRun, SuspendedLane};
 pub use methods::{DecodeOpts, DecodeOutcome, Method, ALL_METHODS};
 pub use metrics::{AbortRecord, MetricsAggregator, RequestRecord};
 pub use router::{

@@ -96,7 +96,8 @@ use super::kv_cache::{prefix_affinity_hash, KvPool};
 use super::methods::machine::{BatchState, CommitRun};
 use super::methods::{DecodeOpts, DecodeOutcome, Method};
 use super::metrics::{
-    AbortRecord, MetricsAggregator, RequestRecord, SupervisionStats,
+    AbortRecord, MetricsAggregator, PreemptionStats, RequestRecord,
+    SupervisionStats,
 };
 use super::scheduler::{ActiveBatch, Engine};
 use crate::runtime::{Geometry, ModelWeights, Runtime};
@@ -166,6 +167,30 @@ impl ServingCore {
         let model = key.method.weights_for(&key.backbone);
         let weights = self.ensure_weights(&model)?;
         BatchState::new(self.rt.clone(), weights, key.method, opts, capacity)
+    }
+
+    /// Open a block-step batch whose pool under-provisions its page
+    /// budgets (see [`BatchState::with_kv_budgets`]) — the preempt
+    /// bench's pressure cooker.
+    pub fn open_batch_budgeted(
+        &mut self,
+        key: &GroupKey,
+        opts: DecodeOpts,
+        capacity: usize,
+        prompt_budget: usize,
+        tail_budget: usize,
+    ) -> Result<BatchState> {
+        let model = key.method.weights_for(&key.backbone);
+        let weights = self.ensure_weights(&model)?;
+        BatchState::with_kv_budgets(
+            self.rt.clone(),
+            weights,
+            key.method,
+            opts,
+            capacity,
+            prompt_budget,
+            tail_budget,
+        )
     }
 
     /// Decode one lockstep group to completion (benches/examples call
@@ -256,6 +281,15 @@ pub struct GenerateRequest {
     /// never throttled. The HTTP layer fills it from the request's
     /// `client_id` field, defaulting to the peer IP.
     pub client: Option<String>,
+    /// SLO priority (higher = more urgent, default 0). At block
+    /// boundaries the continuous worker may preempt a live lane — spill
+    /// its KV pages host-side and park it — when a queued request's
+    /// *effective* priority (static priority plus one point per
+    /// [`PRIORITY_AGE_MS`] waited) strictly exceeds the lane's. The age
+    /// boost applies symmetrically, so starved low-priority work
+    /// eventually outranks fresh high-priority arrivals and nothing
+    /// waits forever.
+    pub priority: i32,
 }
 
 impl GenerateRequest {
@@ -272,6 +306,7 @@ impl GenerateRequest {
             timeout: None,
             max_new_tokens: None,
             client: None,
+            priority: 0,
         }
     }
 }
@@ -614,6 +649,18 @@ impl SubmitError {
             | SubmitError::Degraded { retry_after } => Some(*retry_after),
         }
     }
+
+    /// Machine-readable refusal code for the typed HTTP error body
+    /// (`{"code", "message", "retry_after_ms"}`).
+    pub fn code(&self) -> &'static str {
+        match self {
+            SubmitError::Invalid(_) => "invalid_request",
+            SubmitError::QueueFull { .. } => "queue_full",
+            SubmitError::ClientCap { .. } => "client_cap",
+            SubmitError::Draining { .. } => "draining",
+            SubmitError::Degraded { .. } => "degraded",
+        }
+    }
 }
 
 impl std::fmt::Display for SubmitError {
@@ -773,6 +820,13 @@ struct Shard {
     registry: Mutex<HashMap<u64, Recoverable>>,
     /// Heartbeat time base (per shard, so stamps never mix bases).
     epoch: Instant,
+    /// Lifetime SLO-preemption counters (worker bumps, dispatcher
+    /// reads): lanes suspended, lanes resumed, and KV bytes spilled to
+    /// the host-side cold tier. They survive worker respawns, unlike
+    /// the per-batch counters a dead core takes with it.
+    kv_preempts: AtomicU64,
+    kv_resumes: AtomicU64,
+    kv_spilled_bytes: AtomicU64,
 }
 
 impl Shard {
@@ -794,6 +848,9 @@ impl Shard {
             restarts: AtomicU64::new(0),
             registry: Mutex::new(HashMap::new()),
             epoch: Instant::now(),
+            kv_preempts: AtomicU64::new(0),
+            kv_resumes: AtomicU64::new(0),
+            kv_spilled_bytes: AtomicU64::new(0),
         }
     }
 
@@ -918,6 +975,17 @@ impl Dispatch {
             recovery_total_ms: c(&self.recovery_total_ms),
             recovery_max_ms: c(&self.recovery_max_ms),
         }
+    }
+
+    /// Lifetime preempt/resume counters summed across every shard.
+    fn preemption(&self) -> PreemptionStats {
+        let mut p = PreemptionStats::default();
+        for s in &self.shards {
+            p.preempts += s.kv_preempts.load(Ordering::SeqCst);
+            p.resumes += s.kv_resumes.load(Ordering::SeqCst);
+            p.spilled_bytes += s.kv_spilled_bytes.load(Ordering::SeqCst);
+        }
+        p
     }
 
     /// Least-loaded shard among those still accepting work, if any.
@@ -1373,6 +1441,10 @@ impl Router {
             Json::num(sup.watchdog_trips as f64),
         );
         obj.insert("supervision".to_string(), sup.to_json());
+        obj.insert(
+            "preemption".to_string(),
+            self.dispatch.preemption().to_json(),
+        );
         Ok(Json::Obj(obj))
     }
 
@@ -1893,6 +1965,9 @@ struct Ticket {
     /// Router-wide request id, keying this shard's recovery registry
     /// while the lane is admitted-but-unanswered.
     rid: u64,
+    /// Static SLO priority from the request; the preemption passes
+    /// compare it age-boosted (see [`effective_priority`]).
+    priority: i32,
     /// Client fairness slot, released when the ticket drops on any
     /// terminal path.
     _permit: ClientPermit,
@@ -1913,6 +1988,7 @@ impl Ticket {
                 blocks_committed: 0,
                 dead: false,
                 rid: sub.rid,
+                priority: sub.req.priority,
                 _permit: sub._permit,
             },
             sub.req,
@@ -1946,6 +2022,24 @@ fn cancel_of(t: &Ticket, now: Instant) -> Option<Cancel> {
     None
 }
 
+/// Milliseconds of waiting that buy one effective-priority point. The
+/// boost applies to queued requests, parked lanes, and live lanes
+/// alike, so preemption is strictly relative: holding a lane does not
+/// freeze a request's rank, and being preempted does not erase the
+/// seniority a lane accrued while waiting.
+const PRIORITY_AGE_MS: u64 = 500;
+
+/// SLO scheduling weight at a block boundary: static request priority
+/// plus one point per [`PRIORITY_AGE_MS`] elapsed since `enqueued`.
+/// All preempt/resume decisions compare these values, and preemption
+/// requires a *strictly* greater challenger, so equal-priority traffic
+/// never thrashes.
+fn effective_priority(priority: i32, enqueued: Instant, now: Instant) -> i64 {
+    priority as i64
+        + (now.duration_since(enqueued).as_millis() as u64 / PRIORITY_AGE_MS)
+            as i64
+}
+
 /// Serving counters surfaced on `/healthz`. Live batches report their
 /// own admission counts; these fold in batches that already dropped
 /// (poisoned, or reclaimed after draining).
@@ -1973,6 +2067,11 @@ struct ServeStats {
     /// Queued requests this shard took from a sibling's inbox at a
     /// block boundary (thief-side count).
     stolen: u64,
+    /// Preempt/resume counters folded in from dropped batches, mirroring
+    /// the `closed_*` admission counters above.
+    closed_preempts: u64,
+    closed_resumes: u64,
+    closed_spilled_bytes: u64,
 }
 
 impl ServeStats {
@@ -1984,6 +2083,9 @@ impl ServeStats {
         self.closed_prefix_hits += st.prefix_hits();
         self.closed_prefix_hit_blocks += st.prefix_hit_blocks();
         self.closed_prefix_evictions += st.prefix_evictions();
+        self.closed_preempts += st.kv_preempts();
+        self.closed_resumes += st.kv_resumes();
+        self.closed_spilled_bytes += st.kv_spilled_bytes();
     }
 }
 
@@ -2048,6 +2150,20 @@ fn worker_loop_continuous(
                         });
                     }
                 }
+                // parked lanes are admitted work too: answer them so a
+                // preempted client is never stranded by supersession
+                while !ab.parked.is_empty() {
+                    let (t, o) = ab.discard_parked(0);
+                    shard.registry_remove(t.rid);
+                    let _ = t.events.send(LaneEvent::Aborted {
+                        reason: "shard_failure: worker superseded by \
+                                 its supervisor"
+                            .to_string(),
+                        steps: o.steps,
+                        model_calls: o.model_calls,
+                        committed_tokens: t.committed_tokens,
+                    });
+                }
             }
             return WorkerExit::Superseded;
         }
@@ -2055,7 +2171,10 @@ fn worker_loop_continuous(
         // idle — drained batches retained as warm prefix caches don't
         // count; a sibling with queued work keeps the nap short so a
         // steal opportunity is never slept through)
-        let any_live = active.iter().any(|ab| !ab.is_empty());
+        // parked lanes count as live work: the worker must keep cycling
+        // so its resume pass can seat them the moment a lane frees
+        let any_live =
+            active.iter().any(|ab| !ab.is_empty() || !ab.parked.is_empty());
         shard.beat(any_live);
         let peers_queued = peers.iter().any(|p| {
             p.id != shard.id && p.depth.load(Ordering::Relaxed) > 0
@@ -2157,7 +2276,9 @@ fn worker_loop_continuous(
                     })
                     .collect();
                 let idle = inbox.batcher.is_empty()
-                    && active.iter().all(|ab| ab.is_empty());
+                    && active
+                        .iter()
+                        .all(|ab| ab.is_empty() && ab.parked.is_empty());
                 (wants, idle)
             };
             for (key, mut need) in wants {
@@ -2261,13 +2382,15 @@ fn worker_loop_continuous(
                 // exists once the retained warm caches are reclaimed —
                 // check BEFORE evicting, so hopeless pressure never
                 // destroys other keys' warm prefix chains for nothing
-                let n_live =
-                    active.iter().filter(|ab| !ab.is_empty()).count();
-                let kv_live: usize = active
-                    .iter()
-                    .filter(|ab| !ab.is_empty())
-                    .map(kv_lanes_of)
-                    .sum();
+                // a batch with parked lanes is pinned (their spilled KV
+                // resumes into *this* batch's pool), so it counts as
+                // live for capacity even when no lane is stepping
+                let pinned = |ab: &&ActiveBatch<Ticket>| {
+                    !ab.is_empty() || !ab.parked.is_empty()
+                };
+                let n_live = active.iter().filter(pinned).count();
+                let kv_live: usize =
+                    active.iter().filter(pinned).map(kv_lanes_of).sum();
                 if key_served && over_caps(n_live, kv_live) {
                     continue; // at capacity and this key already decodes
                 }
@@ -2281,7 +2404,9 @@ fn worker_loop_continuous(
                     let idle = active
                         .iter()
                         .enumerate()
-                        .filter(|(_, ab)| ab.is_empty())
+                        .filter(|(_, ab)| {
+                            ab.is_empty() && ab.parked.is_empty()
+                        })
                         .min_by_key(|(_, ab)| ab.last_active)
                         .map(|(i, _)| i);
                     let Some(i) = idle else { break };
@@ -2319,6 +2444,116 @@ fn worker_loop_continuous(
                     for p in fresh {
                         p.payload.abort(&msg);
                     }
+                }
+            }
+        }
+        // ---- 2.7 resume pass: parked (preempted) lanes come back
+        // first. Dead parked entries — client gone, cancelled, deadline
+        // or generation budget hit while parked — are settled without
+        // ever re-costing a lane. Then free lanes seat the
+        // highest-effective-priority parked entries, unless a queued
+        // request for the same key outranks them strictly (the lane is
+        // left free for the admission pass below instead).
+        for ab in active.iter_mut() {
+            let now = Instant::now();
+            for idx in (0..ab.parked.len()).rev() {
+                let kind = cancel_of(&ab.parked[idx].1, now);
+                match kind {
+                    None => {}
+                    Some(Cancel::Budget) => {
+                        let (t, o) = ab.discard_parked(idx);
+                        core.record_outcome(&ab.key, &o);
+                        respond_lane(core, &shard, t, o);
+                    }
+                    Some(Cancel::Abort(reason)) => {
+                        let (t, o) = ab.discard_parked(idx);
+                        abort_lane(
+                            core, &shard, &ab.key, &t, &o, reason,
+                            &mut stats,
+                        );
+                    }
+                }
+            }
+            while ab.free_lanes() > 0 && !ab.parked.is_empty() {
+                let now = Instant::now();
+                let (idx, eff) = ab
+                    .parked
+                    .iter()
+                    .enumerate()
+                    .map(|(i, (_, t))| {
+                        (i, effective_priority(t.priority, t.enqueued, now))
+                    })
+                    .max_by_key(|&(_, e)| e)
+                    .expect("parked is non-empty");
+                let challenger = {
+                    let inbox = shard.lock();
+                    inbox.batcher.max_priority_for(&ab.key, |p| {
+                        effective_priority(
+                            p.payload.req.priority,
+                            p.enqueued,
+                            now,
+                        )
+                    })
+                };
+                if challenger.is_some_and(|q| q > eff) {
+                    break; // yield the free lane to the queued request
+                }
+                if ab.try_resume(idx).is_none() {
+                    break; // page pressure: retry at the next boundary
+                }
+                shard.kv_resumes.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        // ---- 2.8 preempt pass: when a batch is full and a queued
+        // request of its key strictly outranks the weakest live lane
+        // (both age-boosted), that lane suspends at this block boundary
+        // — its pages spill to the host-side cold tier and its ticket
+        // parks — so the admission pass can seat the challenger. Strict
+        // inequality means equal-priority traffic never preempts, and
+        // one suspension frees exactly one lane per pass, so thrash is
+        // bounded by the block cadence.
+        if !draining {
+            for ab in active.iter_mut() {
+                while ab.free_lanes() == 0 && !ab.is_empty() {
+                    let now = Instant::now();
+                    let challenger = {
+                        let inbox = shard.lock();
+                        inbox.batcher.max_priority_for(&ab.key, |p| {
+                            effective_priority(
+                                p.payload.req.priority,
+                                p.enqueued,
+                                now,
+                            )
+                        })
+                    };
+                    let Some(challenger) = challenger else { break };
+                    let victim = ab
+                        .ticketed_lanes()
+                        .into_iter()
+                        .filter_map(|lane| {
+                            ab.ticket(lane).map(|t| {
+                                (
+                                    lane,
+                                    effective_priority(
+                                        t.priority, t.enqueued, now,
+                                    ),
+                                )
+                            })
+                        })
+                        .min_by_key(|&(_, e)| e);
+                    let Some((lane, lane_eff)) = victim else { break };
+                    if challenger <= lane_eff {
+                        break;
+                    }
+                    let spilled0 = ab.state.kv_spilled_bytes();
+                    if !ab.suspend(lane) {
+                        break;
+                    }
+                    shard.kv_preempts.fetch_add(1, Ordering::SeqCst);
+                    shard.kv_spilled_bytes.fetch_add(
+                        ab.state.kv_spilled_bytes() - spilled0,
+                        Ordering::SeqCst,
+                    );
                 }
             }
         }
@@ -2509,6 +2744,15 @@ fn worker_loop_continuous(
                             );
                         }
                     }
+                    // parked lanes would resume into this poisoned
+                    // batch's pool: settle them now, before the retain
+                    // pass drops the batch (and their spilled KV)
+                    while !ab.parked.is_empty() {
+                        let (t, o) = ab.discard_parked(0);
+                        abort_lane(
+                            core, &shard, &ab.key, &t, &o, &msg, &mut stats,
+                        );
+                    }
                     ab.poisoned = true;
                 }
             }
@@ -2531,8 +2775,14 @@ fn worker_loop_continuous(
             shard.in_flight.store(lanes, Ordering::Relaxed);
         }
         // drain completes once every in-flight lane has delivered its
-        // terminal event — nothing is cut short, nothing is dropped
-        if draining && active.iter().all(|ab| ab.is_empty()) {
+        // terminal event — nothing is cut short, nothing is dropped.
+        // Parked lanes block completion too: the resume pass keeps
+        // seating them as live lanes finish, so they drain naturally.
+        if draining
+            && active
+                .iter()
+                .all(|ab| ab.is_empty() && ab.parked.is_empty())
+        {
             for ab in &active {
                 stats.absorb(&ab.state);
             }
@@ -2658,6 +2908,14 @@ fn health_json(
     // only pools that still exist contribute
     let kv_shared_slots = core.pool.prefix_resident_pages()
         + active.iter().map(|ab| ab.state.kv_shared_pages()).sum::<usize>();
+    let kv_preempts = stats.closed_preempts
+        + active.iter().map(|ab| ab.state.kv_preempts()).sum::<u64>();
+    let kv_resumes = stats.closed_resumes
+        + active.iter().map(|ab| ab.state.kv_resumes()).sum::<u64>();
+    let kv_spilled_bytes = stats.closed_spilled_bytes
+        + active.iter().map(|ab| ab.state.kv_spilled_bytes()).sum::<u64>();
+    let parked_lanes: usize =
+        active.iter().map(|ab| ab.parked_lanes()).sum();
     Json::obj(vec![
         ("status", Json::str("ok")),
         ("platform", Json::str(core.rt.platform())),
@@ -2672,6 +2930,12 @@ fn health_json(
         ("active_batches", Json::num(decoding as f64)),
         ("retained_batches", Json::num((active.len() - decoding) as f64)),
         ("in_flight_lanes", Json::num(in_flight as f64)),
+        // SLO preemption: lifetime suspend/resume counters plus the
+        // current number of lanes parked with spilled KV
+        ("kv_preempts", Json::num(kv_preempts as f64)),
+        ("kv_resumes", Json::num(kv_resumes as f64)),
+        ("kv_spilled_bytes", Json::num(kv_spilled_bytes as f64)),
+        ("parked_lanes", Json::num(parked_lanes as f64)),
         ("total_admissions", Json::num(total_admissions as f64)),
         ("mid_flight_admissions", Json::num(mid_flight as f64)),
         ("retired_early", Json::num(stats.retired_early as f64)),

@@ -23,7 +23,7 @@ use anyhow::Result;
 
 use super::batcher::GroupKey;
 use super::kv_cache::KvPool;
-use super::methods::machine::{BatchState, CommitRun};
+use super::methods::machine::{BatchState, CommitRun, SuspendedLane};
 use super::methods::{self, DecodeOpts, DecodeOutcome, Method};
 use crate::runtime::{Geometry, ModelWeights, Programs, Runtime};
 use crate::util::threadpool;
@@ -191,6 +191,14 @@ pub struct ActiveBatch<T> {
     /// warm prefix caches; the driver reclaims the coldest one first
     /// when it needs room for a new key.
     pub last_active: std::time::Instant,
+    /// Lanes preempted off the machine with their tickets: KV spilled
+    /// to the pool's cold tier, waiting for [`ActiveBatch::try_resume`]
+    /// (or [`ActiveBatch::discard_parked`] if the requester gives up).
+    /// A batch with parked lanes is NOT drained even when
+    /// [`ActiveBatch::is_empty`] — the driver must check both before
+    /// reclaiming or dropping it, or parked requests would vanish
+    /// without a terminal event.
+    pub parked: Vec<(SuspendedLane, T)>,
     tickets: Vec<Option<T>>,
 }
 
@@ -202,6 +210,7 @@ impl<T> ActiveBatch<T> {
             state,
             poisoned: false,
             last_active: std::time::Instant::now(),
+            parked: Vec::new(),
             tickets: (0..cap).map(|_| None).collect(),
         }
     }
@@ -288,6 +297,64 @@ impl<T> ActiveBatch<T> {
             .collect()
     }
 
+    /// Borrow one live lane's ticket immutably (preemption policy
+    /// reads request priority without touching lane state).
+    pub fn ticket(&self, lane: usize) -> Option<&T> {
+        self.tickets.get(lane).and_then(Option::as_ref)
+    }
+
+    /// Preempt one live lane between block cycles: its decode state and
+    /// spilled KV park on this batch with the ticket, and the lane
+    /// frees for a new admission. Returns `false` for empty or
+    /// already-finished lanes (those retire through
+    /// [`ActiveBatch::step`], not preemption).
+    pub fn suspend(&mut self, lane: usize) -> bool {
+        match self.state.suspend_lane(lane) {
+            Some(s) => {
+                let ticket = self.tickets[lane]
+                    .take()
+                    .expect("suspended lane has a ticket");
+                self.parked.push((s, ticket));
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Number of lanes currently parked on this batch.
+    pub fn parked_lanes(&self) -> usize {
+        self.parked.len()
+    }
+
+    /// Resume parked entry `idx` onto a free lane with byte-identical
+    /// continuation. On success the ticket is re-filed and the lane id
+    /// returned; if the machine cannot seat it right now the entry goes
+    /// back to its position for a later retry.
+    pub fn try_resume(&mut self, idx: usize) -> Option<usize> {
+        if idx >= self.parked.len() {
+            return None;
+        }
+        let (s, ticket) = self.parked.remove(idx);
+        match self.state.resume_lane(s) {
+            Ok(lane) => {
+                self.tickets[lane] = Some(ticket);
+                self.last_active = std::time::Instant::now();
+                Some(lane)
+            }
+            Err(s) => {
+                self.parked.insert(idx, (s, ticket));
+                None
+            }
+        }
+    }
+
+    /// Drop parked entry `idx` for good (requester gone or batch
+    /// teardown): spilled KV and chain pins release, and the ticket
+    /// comes back with the partial outcome for abort accounting.
+    pub fn discard_parked(&mut self, idx: usize) -> (T, DecodeOutcome) {
+        let (s, ticket) = self.parked.remove(idx);
+        (ticket, self.state.discard_suspended(s))
+    }
 }
 
 /// Worker threads the decode executors (chunk fan-out here, group

@@ -33,7 +33,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::analysis::intensity::{ArchConfig, DecodeMode};
-use crate::coordinator::kv_cache::{KvPool, SlotId};
+use crate::coordinator::kv_cache::{KvLease, KvPool};
 use crate::coordinator::methods::{
     ar, bidirectional, cached_teacher, cdlm, DecodeOpts, Method, StepScratch,
 };
@@ -199,8 +199,11 @@ fn run_repeat(
             } else {
                 cached_teacher::Variant::DualCache
             };
-            let slots: Vec<SlotId> =
+            let leases: Vec<KvLease> =
                 (0..bs).map(|_| pool.alloc()).collect::<Result<_>>()?;
+            // lease refs are assembled outside the gated windows (like
+            // the cohort-assembly Vecs): O(lanes) pushes per repeat
+            let lrefs: Vec<&KvLease> = leases.iter().collect();
             let mut ssr = usize::MAX; // force a refresh on the first pass
             for b in 0..num_blocks {
                 let lo = b * blk;
@@ -209,21 +212,25 @@ fn run_repeat(
                 ssr = gate.run(|| {
                     cached_teacher::machine_step(
                         progs, geom, opts, variant, pool, &mut refs, taus,
-                        &slots, ssr, lo, blk, pad_to, scratch,
+                        &lrefs, ssr, lo, blk, pad_to, scratch,
                     )
                 })?;
             }
-            for s in slots {
-                pool.free(s);
+            drop(lrefs);
+            for lease in leases {
+                pool.release(lease);
             }
         }
         Method::Cdlm => {
-            let mut slots: Vec<SlotId> = Vec::with_capacity(bs);
+            let mut leases: Vec<KvLease> = Vec::with_capacity(bs);
             for seq in seqs.iter_mut() {
-                slots.push(cdlm::machine_prefill(
+                leases.push(cdlm::machine_prefill(
                     progs, pool, seq, pre_pad, None, scratch,
                 )?);
             }
+            // lease refs are assembled outside the gated windows (like
+            // the cohort-assembly Vecs): O(lanes) pushes per repeat
+            let lrefs: Vec<&KvLease> = leases.iter().collect();
             for b in 0..num_blocks {
                 let lo = b * blk;
                 if seqs.iter().all(|s| s.done) {
@@ -234,7 +241,7 @@ fn run_repeat(
                         seqs.iter_mut().collect();
                     gate.run(|| {
                         cdlm::machine_step(
-                            progs, geom, pool, &mut refs, taus, &slots, lo,
+                            progs, geom, pool, &mut refs, taus, &lrefs, lo,
                             blk, pad_to, scratch,
                         )
                     })?;
@@ -243,36 +250,44 @@ fn run_repeat(
                 // re-padded to the continuing-lane bucket (machine
                 // semantics)
                 if b + 1 < num_blocks {
-                    let mut items: Vec<(&mut SequenceState, SlotId)> = seqs
-                        .iter_mut()
-                        .zip(slots.iter().copied())
-                        .filter(|it| !it.0.done)
-                        .collect();
-                    if !items.is_empty() {
-                        let cpad = pad_of(buckets, items.len());
+                    let mut cseqs: Vec<&mut SequenceState> =
+                        Vec::with_capacity(bs);
+                    let mut cleases: Vec<&KvLease> = Vec::with_capacity(bs);
+                    for (s, l) in seqs.iter_mut().zip(lrefs.iter()) {
+                        if !s.done {
+                            cseqs.push(s);
+                            cleases.push(l);
+                        }
+                    }
+                    if !cseqs.is_empty() {
+                        let cpad = pad_of(buckets, cseqs.len());
                         gate.run(|| {
                             cdlm::machine_commit(
-                                progs, geom, pool, &mut items, lo, blk,
-                                cpad, scratch,
+                                progs, geom, pool, &mut cseqs, &cleases, lo,
+                                blk, cpad, scratch,
                             )
                         })?;
                     }
                 }
             }
-            for s in slots {
-                pool.free(s);
+            drop(lrefs);
+            for lease in leases {
+                pool.release(lease);
             }
         }
         Method::Ar => {
-            let mut slots: Vec<SlotId> = Vec::with_capacity(bs);
+            let mut leases: Vec<KvLease> = Vec::with_capacity(bs);
             let mut cur = vec![0i32; bs];
             for (r, seq) in seqs.iter_mut().enumerate() {
-                let (slot, tok) = ar::machine_prefill(
+                let (lease, tok) = ar::machine_prefill(
                     progs, pool, seq, pre_pad, None, scratch,
                 )?;
-                slots.push(slot);
+                leases.push(lease);
                 cur[r] = tok;
             }
+            // lease refs are assembled outside the gated windows (like
+            // the cohort-assembly Vecs): O(lanes) pushes per repeat
+            let lrefs: Vec<&KvLease> = leases.iter().collect();
             let mut pos = 0usize;
             while pos < g_len {
                 if seqs.iter().all(|s| s.done) {
@@ -282,14 +297,15 @@ fn run_repeat(
                     seqs.iter_mut().collect();
                 gate.run(|| {
                     ar::machine_step(
-                        progs, geom, pool, &mut refs, &mut cur, &slots, pos,
+                        progs, geom, pool, &mut refs, &mut cur, &lrefs, pos,
                         blk, pad_to, scratch,
                     )
                 })?;
                 pos += blk;
             }
-            for s in slots {
-                pool.free(s);
+            drop(lrefs);
+            for lease in leases {
+                pool.release(lease);
             }
         }
     }

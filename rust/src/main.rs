@@ -13,7 +13,11 @@
 //!              under a seeded fault plan and gates the recovery
 //!              invariants -> BENCH_chaos.json; --scenario hotpath
 //!              microbenches the steady-state decode step and
-//!              hard-gates it allocation-free -> BENCH_hotpath.json
+//!              hard-gates it allocation-free -> BENCH_hotpath.json;
+//!              --scenario preempt over-subscribes a paged KV pool and
+//!              gates suspend/spill/resume byte-identity plus
+//!              more-live-lanes-than-contiguous-cap ->
+//!              BENCH_preempt.json
 //!   analysis   print Fig. 4 arithmetic-intensity / Fig. 9 roofline
 //!   info       artifacts manifest summary
 
@@ -22,8 +26,8 @@ use std::time::{Duration, Instant};
 
 use cdlm::coordinator::router::RouterConfig;
 use cdlm::coordinator::{
-    DecodeOpts, FaultPlan, GenerateRequest, GroupKey, Method, Router,
-    ServingCore, ALL_METHODS,
+    DecodeOpts, DecodeOutcome, FaultPlan, GenerateRequest, GroupKey, Method,
+    Router, ServingCore, SuspendedLane, ALL_METHODS,
 };
 use cdlm::server::{self, http::ServerConfig};
 use cdlm::util::cli::Args;
@@ -80,6 +84,7 @@ fn print_help() {
          \x20 bench      --scenario shard --method cdlm --n 24 --distinct 6 --replicas 4 --arrival-ms 2 --out BENCH_shard.json\n\
          \x20 bench      --scenario chaos --method cdlm --n 24 --distinct 6 --replicas 4 --arrival-ms 2 [--fault-seed N | --fault-spec SPEC] --out BENCH_chaos.json\n\
          \x20 bench      --scenario hotpath --methods all --batches 1,4 --repeats 6 --out BENCH_hotpath.json  (hard-gates 0 allocs/steady step)\n\
+         \x20 bench      --scenario preempt --method cdlm --n 16 --out BENCH_preempt.json  (hard-gates preempt/resume byte-identity + paged over-subscription)\n\
          \x20 analysis   [--fig 4|9]\n\
          \x20 info\n"
     );
@@ -266,6 +271,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         "shard" => return cmd_bench_shard(args),
         "chaos" => return cmd_bench_chaos(args),
         "hotpath" => return cmd_bench_hotpath(args),
+        "preempt" => return cmd_bench_preempt(args),
         _ => {}
     }
     let n = args.get_usize("n", 16);
@@ -475,6 +481,67 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             ("total_model_calls", Json::num(total_calls as f64)),
         ]));
     }
+    // ---- preempted-lane accounting cells: the same machine batch as
+    // the cancel cells, but after the first block cycle every live lane
+    // is suspended to the pool's cold tier and immediately resumed (a
+    // full spill + reseat round trip). Preemption is required to be
+    // invisible in the accounting: each run is checked byte-identical
+    // to its uninterrupted twin right here, and the committed baseline
+    // pins the integers under a separate "preempt": 1 cell identity so
+    // any silent drift in the suspend/resume path fails the CI gate.
+    for m in &methods {
+        let key = GroupKey::new(backbone.clone(), *m);
+        let bs = 4.min(prompts.len());
+        if bs == 0 {
+            break;
+        }
+        let (base, _) = machine_batch_outcomes(
+            &mut core,
+            &key,
+            &opts,
+            &prompts[..bs],
+            false,
+        )?;
+        let (outs, preempts) = machine_batch_outcomes(
+            &mut core,
+            &key,
+            &opts,
+            &prompts[..bs],
+            true,
+        )?;
+        for (b, o) in base.iter().zip(&outs) {
+            anyhow::ensure!(
+                b.gen == o.gen
+                    && b.steps == o.steps
+                    && b.model_calls == o.model_calls,
+                "{}: preempted lane diverged from uninterrupted decode",
+                m.name()
+            );
+        }
+        let tokens: usize = outs.iter().map(|o| o.gen_len).sum();
+        let total_steps: u64 = outs.iter().map(|o| o.steps).sum();
+        let total_calls: u64 = outs.iter().map(|o| o.model_calls).sum();
+        println!(
+            "{:<14} {:>6} preempt: {} suspended, steps {}, calls {}",
+            m.name(),
+            bs,
+            preempts,
+            total_steps,
+            total_calls
+        );
+        results.push(Json::obj(vec![
+            ("method", Json::str(m.name())),
+            ("batch", Json::num(bs as f64)),
+            // marks the spill/resume round-trip cell: keyed separately
+            // from the plain batch cells, accounting identical to an
+            // uninterrupted run by the in-bench check above
+            ("preempt", Json::num(1.0)),
+            ("requests", Json::num(outs.len() as f64)),
+            ("tokens", Json::num(tokens as f64)),
+            ("total_steps", Json::num(total_steps as f64)),
+            ("total_model_calls", Json::num(total_calls as f64)),
+        ]));
+    }
     let doc = Json::obj(vec![
         ("schema", Json::str("cdlm.bench.decode/v1")),
         ("backend", Json::str(core.rt.backend_name())),
@@ -509,6 +576,296 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         })?;
         println!("accounting matches {baseline_path}");
     }
+    Ok(())
+}
+
+/// Run one machine batch of `prompts` to completion on a fully
+/// provisioned pool, optionally suspending **and immediately
+/// resuming** every live lane at the first block boundary (the
+/// spill/reseat round trip the preempt accounting cells pin). Returns
+/// outcomes in admission order plus the pool's lifetime preempt count.
+fn machine_batch_outcomes(
+    core: &mut ServingCore,
+    key: &GroupKey,
+    opts: &DecodeOpts,
+    prompts: &[Vec<i32>],
+    preempt_roundtrip: bool,
+) -> anyhow::Result<(Vec<DecodeOutcome>, u64)> {
+    let mut st = core.open_batch(key, opts.clone(), prompts.len())?;
+    // lane -> admission index; resumes reseat on the first free lane,
+    // so the map follows every suspend/resume round trip
+    let mut orig = vec![usize::MAX; st.capacity()];
+    let mut outs: Vec<Option<DecodeOutcome>> =
+        prompts.iter().map(|_| None).collect();
+    for (i, p) in prompts.iter().enumerate() {
+        let lane = st.admit(p, None)?;
+        orig[lane] = i;
+    }
+    let mut first = true;
+    while !st.is_empty() {
+        st.step_cycle()?;
+        for (lane, o) in st.take_finished() {
+            outs[orig[lane]] = Some(o);
+        }
+        if preempt_roundtrip && first {
+            first = false;
+            let mut parked: Vec<(SuspendedLane, usize)> = Vec::new();
+            for lane in 0..st.capacity() {
+                if let Some(s) = st.suspend_lane(lane) {
+                    parked.push((s, orig[lane]));
+                }
+            }
+            for (s, req) in parked {
+                let lane = st.resume_lane(s).map_err(|_| {
+                    anyhow::anyhow!(
+                        "resume refused on a fully provisioned pool"
+                    )
+                })?;
+                orig[lane] = req;
+            }
+        }
+    }
+    st.assert_kv_balanced();
+    let preempts = st.kv_preempts();
+    let outs = outs
+        .into_iter()
+        .collect::<Option<Vec<_>>>()
+        .ok_or_else(|| anyhow::anyhow!("machine batch lost an outcome"))?;
+    Ok((outs, preempts))
+}
+
+/// `--scenario preempt`: SLO-preemption pressure cooker on one
+/// over-subscribed machine (schema `cdlm.bench.preempt/v1`). The pool
+/// is built with a tail-page budget that one-owner contiguous-slot
+/// provisioning could serve to only `contiguous_lane_cap` lanes; paged
+/// on-demand allocation admits a full wave anyway, runs it through its
+/// first block cycle, then trims the live set back to the contiguous
+/// cap by suspending the over-admitted lanes to the cold tier (a
+/// free-list watermark stays armed as safety net), survivors drain,
+/// and the parked lanes resume (timed) and run out one at a time.
+/// Hard gates, not trend data:
+///   * `max_live_lanes > contiguous_lane_cap` (paged over-subscription
+///     actually happened)
+///   * every preempted request byte-identical to its uninterrupted
+///     twin (gen ids, steps, model_calls)
+///   * `resumes == preempts > 0`, `spilled_bytes > 0`, and the pool
+///     balances after every wave
+/// Resume-latency percentiles are advisory trend data (CI runners are
+/// too noisy to gate on).
+fn cmd_bench_preempt(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 16);
+    let backbone = args.get_or("backbone", "dream").to_string();
+    let out_path = args.get_or("out", "BENCH_preempt.json").to_string();
+    let method = Method::from_name(args.get_or("method", "cdlm"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --method"))?;
+    anyhow::ensure!(
+        method.uses_kv_cache(),
+        "--scenario preempt needs a KV-caching method (cache-less lanes \
+         have no pages to spill)"
+    );
+    let mut core = ServingCore::load(&artifacts_dir(), 16)?;
+    let geom = core.rt.manifest.geometry.clone();
+    let opts = DecodeOpts::defaults(&geom);
+    let key = GroupKey::new(backbone.clone(), method);
+
+    let samples = workload::generate(Family::ChainArith, n, 0x9E21);
+    let prompts: Vec<Vec<i32>> = samples
+        .iter()
+        .map(|s| {
+            workload::encode_example(
+                &core.tokenizer,
+                Family::ChainArith,
+                s,
+                geom.prompt_len,
+                geom.gen_len,
+            )
+            .map(|e| e.prompt_ids)
+        })
+        .collect::<anyhow::Result<_>>()?;
+    anyhow::ensure!(!prompts.is_empty(), "need at least one prompt");
+
+    // the pressure cooker: tail pages for only TWO full gen regions
+    // shared by four lanes — contiguous provisioning caps at 2 live
+    // lanes, paged allocation runs all 4 and preempts to finish
+    let tail_full = if geom.block_size > 0 {
+        (geom.seq_len - geom.prompt_len).max(1).div_ceil(geom.block_size)
+    } else {
+        1
+    };
+    let mut st = core.open_batch_budgeted(
+        &key,
+        opts.clone(),
+        4,
+        4,
+        2 * tail_full,
+    )?;
+    let lanes = st.capacity();
+    let contiguous_cap = (st.kv_tail_page_budget() / st.kv_tail_pages_full())
+        .min(st.kv_prompt_page_budget());
+
+    // uninterrupted twins, on fully provisioned machines of the same
+    // wave width
+    let mut reference: Vec<DecodeOutcome> = Vec::with_capacity(prompts.len());
+    for wave in prompts.chunks(lanes) {
+        let (outs, _) =
+            machine_batch_outcomes(&mut core, &key, &opts, wave, false)?;
+        reference.extend(outs);
+    }
+
+    let mut resume_lat = Summary::new();
+    let mut max_live = 0usize;
+    let mut waves = 0usize;
+    let mut outs: Vec<Option<DecodeOutcome>> =
+        prompts.iter().map(|_| None).collect();
+    let t0 = Instant::now();
+    for (w, wave) in prompts.chunks(lanes).enumerate() {
+        waves += 1;
+        let base = w * lanes;
+        let mut orig = vec![usize::MAX; st.capacity()];
+        for (i, p) in wave.iter().enumerate() {
+            let lane = st.admit(p, None)?;
+            orig[lane] = base + i;
+        }
+        max_live = max_live.max(st.live_lanes());
+        // phase 1: run the whole over-admitted wave through its first
+        // block cycle, then trim back to the contiguous cap — the
+        // lanes admitted beyond guaranteed capacity spill to the cold
+        // tier (this is the SLO scheduler's over-admission paying its
+        // debt). A free-list watermark stays armed as the safety net:
+        // every unfinished lane may commit one tail page per cycle.
+        let mut parked: Vec<(SuspendedLane, usize)> = Vec::new();
+        let mut trimmed = false;
+        while !st.is_empty() {
+            while st.kv_tail_pages_free() < st.unfinished_lanes()
+                || (trimmed && st.unfinished_lanes() > contiguous_cap)
+            {
+                let mut suspended = false;
+                for lane in 0..st.capacity() {
+                    if let Some(s) = st.suspend_lane(lane) {
+                        parked.push((s, orig[lane]));
+                        suspended = true;
+                        break;
+                    }
+                }
+                anyhow::ensure!(
+                    suspended,
+                    "page pressure with no suspendable lane"
+                );
+            }
+            if st.is_empty() {
+                break;
+            }
+            st.step_cycle()?;
+            trimmed = true;
+            for (lane, o) in st.take_finished() {
+                outs[orig[lane]] = Some(o);
+            }
+        }
+        // phase 2: resume each parked lane (timed) and run it out
+        // solo — the drained pool always seats one full lane
+        for (s, req) in parked {
+            anyhow::ensure!(
+                st.can_resume(&s),
+                "drained machine must reseat a parked lane"
+            );
+            let tr = Instant::now();
+            let lane = st
+                .resume_lane(s)
+                .map_err(|_| anyhow::anyhow!("resume refused"))?;
+            resume_lat.push(tr.elapsed().as_secs_f64());
+            orig[lane] = req;
+            while !st.is_empty() {
+                st.step_cycle()?;
+                for (l, o) in st.take_finished() {
+                    outs[orig[l]] = Some(o);
+                }
+            }
+        }
+        st.assert_kv_balanced();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let preempts = st.kv_preempts();
+    let resumes = st.kv_resumes();
+    let spilled_bytes = st.kv_spilled_bytes();
+
+    // ---- the gates
+    anyhow::ensure!(
+        max_live > contiguous_cap,
+        "paged pool must sustain more live lanes than the contiguous \
+         slot cap (live {max_live} <= cap {contiguous_cap})"
+    );
+    anyhow::ensure!(
+        preempts > 0 && resumes == preempts,
+        "every preempt must resume (preempts {preempts}, resumes {resumes})"
+    );
+    anyhow::ensure!(spilled_bytes > 0, "preemption spilled no bytes");
+    let outs: Vec<DecodeOutcome> = outs
+        .into_iter()
+        .collect::<Option<Vec<_>>>()
+        .ok_or_else(|| anyhow::anyhow!("a request lost its outcome"))?;
+    for (i, (o, r)) in outs.iter().zip(&reference).enumerate() {
+        anyhow::ensure!(
+            o.gen == r.gen
+                && o.steps == r.steps
+                && o.model_calls == r.model_calls,
+            "request {i}: preempted decode diverged from its \
+             uninterrupted twin"
+        );
+    }
+
+    println!(
+        "preempt: {} requests in {} waves of {} lanes  (tail budget {} \
+         pages, contiguous cap {} lanes)",
+        outs.len(),
+        waves,
+        lanes,
+        st.kv_tail_page_budget(),
+        contiguous_cap
+    );
+    println!(
+        "  max live {}  preempts {}  resumes {}  spilled {} B  resume \
+         p50 {:.3} ms  p95 {:.3} ms",
+        max_live,
+        preempts,
+        resumes,
+        spilled_bytes,
+        resume_lat.percentile(50.0) * 1e3,
+        resume_lat.percentile(95.0) * 1e3
+    );
+    println!(
+        "  all {} outcomes byte-identical to uninterrupted twins",
+        outs.len()
+    );
+
+    let doc = Json::obj(vec![
+        ("schema", Json::str("cdlm.bench.preempt/v1")),
+        ("backend", Json::str(core.rt.backend_name())),
+        ("platform", Json::str(core.rt.platform())),
+        ("backbone", Json::str(backbone.as_str())),
+        ("method", Json::str(method.name())),
+        ("n", Json::num(outs.len() as f64)),
+        ("lanes", Json::num(lanes as f64)),
+        ("prompt_page_budget", Json::num(st.kv_prompt_page_budget() as f64)),
+        ("tail_page_budget", Json::num(st.kv_tail_page_budget() as f64)),
+        ("tail_pages_full", Json::num(st.kv_tail_pages_full() as f64)),
+        ("contiguous_lane_cap", Json::num(contiguous_cap as f64)),
+        ("max_live_lanes", Json::num(max_live as f64)),
+        ("preempts", Json::num(preempts as f64)),
+        ("resumes", Json::num(resumes as f64)),
+        ("spilled_bytes", Json::num(spilled_bytes as f64)),
+        (
+            "resume_p50_ms",
+            Json::num(resume_lat.percentile(50.0) * 1e3),
+        ),
+        (
+            "resume_p95_ms",
+            Json::num(resume_lat.percentile(95.0) * 1e3),
+        ),
+        ("byte_identical", Json::num(1.0)),
+        ("wall_s", Json::num(wall_s)),
+    ]);
+    std::fs::write(&out_path, doc.to_string())?;
+    println!("results -> {out_path}");
     Ok(())
 }
 

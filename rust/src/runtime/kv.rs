@@ -104,10 +104,13 @@ impl LaneMap {
 /// still work through the heap fallback.
 pub const INLINE_LANES: usize = 16;
 
-/// Per-view lane table: inline whole-slot bases on the hot path, a
-/// heap-backed segment run everywhere else.
-enum LaneTable {
+/// Per-view lane table: inline whole-slot bases or borrowed segment
+/// runs on the hot path, a heap-backed segment run everywhere else.
+enum LaneTable<'a> {
     Plain { bases: [usize; INLINE_LANES], bs: usize },
+    /// Borrowed per-lane segment runs (the paged pool lends its cached
+    /// runs): zero-allocation like `Plain`, but page-table aware.
+    Inline { segs: [&'a [KvSeg]; INLINE_LANES], bs: usize },
     Segmented(Vec<LaneMap>),
 }
 
@@ -117,7 +120,7 @@ enum LaneTable {
 pub struct KvView<'a> {
     k: &'a [f32],
     v: &'a [f32],
-    lanes: LaneTable,
+    lanes: LaneTable<'a>,
     dims: KvDims,
     cache_len: usize,
 }
@@ -159,6 +162,63 @@ impl<'a> KvView<'a> {
             .map(|&b| LaneMap::One(KvSeg::full_slot(b, dims.seq_len)))
             .collect();
         Self::build(k, v, lanes, dims, cache_len)
+    }
+
+    /// Build a view that *borrows* per-lane segment runs (the paged
+    /// pool lends its cached runs): allocation-free for batches up to
+    /// [`INLINE_LANES`] lanes, with the same segment contract as
+    /// [`KvView::segmented`]. Oversized batches fall back to the
+    /// heap-backed table by cloning the runs.
+    pub fn inline(
+        k: &'a [f32],
+        v: &'a [f32],
+        lanes: &[&'a [KvSeg]],
+        dims: KvDims,
+        cache_len: usize,
+    ) -> KvView<'a> {
+        debug_assert!(cache_len <= dims.seq_len, "cache_len beyond slot");
+        if lanes.len() <= INLINE_LANES {
+            let mut segs: [&'a [KvSeg]; INLINE_LANES] = [&[]; INLINE_LANES];
+            segs[..lanes.len()].copy_from_slice(lanes);
+            #[cfg(debug_assertions)]
+            for lane in lanes {
+                let mut next = 0usize;
+                for s in lane.iter() {
+                    debug_assert_eq!(
+                        s.start, next,
+                        "segments must be contiguous"
+                    );
+                    debug_assert!(s.len > 0, "empty KV segment");
+                    debug_assert!(
+                        s.offset + s.len <= s.region_len,
+                        "segment overruns its region"
+                    );
+                    let end = s.base
+                        + dims.n_layers
+                            * dims.n_heads
+                            * s.region_len
+                            * dims.d_head;
+                    debug_assert!(
+                        end <= k.len() && end <= v.len(),
+                        "segment region outside the slabs"
+                    );
+                    next += s.len;
+                }
+                debug_assert!(
+                    next >= cache_len,
+                    "segments do not cover cache_len"
+                );
+            }
+            return KvView {
+                k,
+                v,
+                lanes: LaneTable::Inline { segs, bs: lanes.len() },
+                dims,
+                cache_len,
+            };
+        }
+        let lanes = lanes.iter().map(|s| s.to_vec()).collect();
+        Self::segmented(k, v, lanes, dims, cache_len)
     }
 
     /// Build a view from explicit per-lane segment runs (the shared-
@@ -219,6 +279,7 @@ impl<'a> KvView<'a> {
     pub fn bs(&self) -> usize {
         match &self.lanes {
             LaneTable::Plain { bs, .. } => *bs,
+            LaneTable::Inline { bs, .. } => *bs,
             LaneTable::Segmented(lanes) => lanes.len(),
         }
     }
@@ -243,6 +304,10 @@ impl<'a> KvView<'a> {
                 return bases[lane]
                     + ((l * g.n_heads + h) * g.seq_len + pos) * g.d_head
                     + d;
+            }
+            LaneTable::Inline { segs, bs } => {
+                debug_assert!(lane < *bs, "lane out of range");
+                segs[lane]
             }
             LaneTable::Segmented(lanes) => lanes[lane].segs(),
         };
@@ -312,6 +377,13 @@ impl<'a> KvView<'a> {
             LaneTable::Plain { bases, bs } => {
                 for (lane, &b) in bases[..*bs].iter().enumerate() {
                     copy_seg(lane, &KvSeg::full_slot(b, s_n));
+                }
+            }
+            LaneTable::Inline { segs, bs } => {
+                for (lane, run) in segs[..*bs].iter().enumerate() {
+                    for seg in run.iter() {
+                        copy_seg(lane, seg);
+                    }
                 }
             }
             LaneTable::Segmented(lanes) => {
@@ -396,6 +468,51 @@ mod tests {
         // pos 2..4 come from the slot at natural offsets
         assert_eq!(view.k_at(0, 0, 0, 2, 0), 6.0);
         assert_eq!(view.v_at(0, 0, 0, 3, 1), -10.0);
+    }
+
+    #[test]
+    fn inline_view_matches_segmented_view() {
+        let d = dims();
+        let slot_elems = d.slot_elems();
+        let page_elems = d.n_layers * d.n_heads * 2 * d.d_head;
+        let mut k = vec![0.0f32; slot_elems + page_elems];
+        for (i, x) in k.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        let v: Vec<f32> = k.iter().map(|x| -x).collect();
+        let run = [
+            KvSeg {
+                start: 0,
+                len: 2,
+                base: slot_elems,
+                region_len: 2,
+                offset: 0,
+            },
+            KvSeg { start: 2, len: 2, base: 0, region_len: 4, offset: 2 },
+        ];
+        let borrowed: [&[KvSeg]; 1] = [&run];
+        let inline = KvView::inline(&k, &v, &borrowed, d, 4);
+        let heap = KvView::segmented(&k, &v, vec![run.to_vec()], d, 4);
+        assert_eq!(inline.bs(), 1);
+        for l in 0..d.n_layers {
+            for h in 0..d.n_heads {
+                for pos in 0..4 {
+                    for f in 0..d.d_head {
+                        assert_eq!(
+                            inline.k_at(0, l, h, pos, f),
+                            heap.k_at(0, l, h, pos, f)
+                        );
+                        assert_eq!(
+                            inline.v_at(0, l, h, pos, f),
+                            heap.v_at(0, l, h, pos, f)
+                        );
+                    }
+                }
+            }
+        }
+        let (ik, _) = inline.to_batch_major();
+        let (hk, _) = heap.to_batch_major();
+        assert_eq!(ik.data, hk.data);
     }
 
     #[test]

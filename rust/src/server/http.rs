@@ -8,15 +8,20 @@
 //! never touch XLA state: they tokenize, submit to the router (whose
 //! shard workers own the runtime), and relay lane events.
 //!
-//!   POST /generate   {"prompt": str, "backbone": str?, "method": str?,
+//!   POST /v1/generate {"prompt": str, "backbone": str?, "method": str?,
 //!                     "tau_conf": num?, "timeout_ms": num?,
 //!                     "max_new_tokens": num?, "stream": bool?,
-//!                     "client_id": str?}
+//!                     "client_id": str?, "priority": num?}
 //!                    -> text + §A.3 counters + ttft_ms/ttlt_ms
 //!                    (queueing included); with "stream": true the
 //!                    response is chunked NDJSON, one lane event per
 //!                    line (see rust/README.md "The streaming wire
-//!                    protocol")
+//!                    protocol"). `POST /generate` is a legacy alias
+//!                    with the identical contract. `priority` feeds
+//!                    SLO-aware preemption: higher-priority queued work
+//!                    may suspend a lower-priority live lane at a block
+//!                    boundary (its KV spills host-side and resumes
+//!                    byte-identically later).
 //!   GET  /metrics    per-(backbone, method) §A.3 aggregates + wasted
 //!                    work of aborted lanes, merged across replicas
 //!   GET  /healthz    liveness + platform info + continuous-batching
@@ -27,7 +32,9 @@
 //! Admission refusals map straight from [`SubmitError`]: 400 for
 //! malformed requests, 429 (+ `Retry-After`) for a full queue or a
 //! client over its fairness cap, 503 (+ `Retry-After`) while draining.
-//! `client_id` (default: peer IP) names the fairness bucket.
+//! `client_id` (default: peer IP) names the fairness bucket. Every
+//! 4xx/5xx carries the typed body `{"code", "message",
+//! "retry_after_ms"}` (see [`err_json`]).
 //!
 //! Streaming cancellation: a failed or stalled-past-`io_timeout` write
 //! marks the client gone, cancels the lane through the request handle,
@@ -229,8 +236,42 @@ fn respond(
     let _ = stream.write_all(&response_bytes(status, retry_after, body));
 }
 
-fn err_json(msg: &str) -> String {
-    Json::obj(vec![("error", Json::str(msg))]).to_string()
+/// Typed error body: every 4xx/5xx on both front doors answers with
+/// `{"code", "message", "retry_after_ms"}` — `code` is a stable
+/// machine-readable token, `message` is human-readable detail, and
+/// `retry_after_ms` mirrors the `Retry-After` header (null when a
+/// retry cannot help). `/generate` and `/v1/generate` share the same
+/// contract.
+fn err_json(
+    code: &str,
+    msg: &str,
+    retry_after: Option<Duration>,
+) -> String {
+    let retry = retry_after
+        .map(|d| Json::num(d.as_millis() as f64))
+        .unwrap_or(Json::Null);
+    Json::obj(vec![
+        ("code", Json::str(code)),
+        ("message", Json::str(msg)),
+        ("retry_after_ms", retry),
+    ])
+    .to_string()
+}
+
+/// Error code for a terminal `Aborted` reason, aligned with
+/// [`abort_status`]: deadline expiries are `deadline_exceeded` (504),
+/// shard losses are retryable `shard_failure` (503), everything else
+/// surfaces as `decode_failed` (500).
+fn abort_code(reason: &str) -> &'static str {
+    if reason.contains("deadline") {
+        "deadline_exceeded"
+    } else if reason.starts_with("shard_failure")
+        || reason.starts_with("worker_lost")
+    {
+        "shard_failure"
+    } else {
+        "decode_failed"
+    }
 }
 
 /// Encode a user prompt to the fixed left-padded geometry.
@@ -258,9 +299,9 @@ fn parse_generate(
     peer_ip: Option<&str>,
 ) -> Result<(GenerateRequest, bool), (u16, String)> {
     let req = Json::parse(body)
-        .map_err(|e| (400, err_json(&format!("bad json: {e}"))))?;
+        .map_err(|e| (400, err_json("invalid_request", &format!("bad json: {e}"), None)))?;
     let Some(prompt) = req.get("prompt").and_then(Json::as_str) else {
-        return Err((400, err_json("missing 'prompt'")));
+        return Err((400, err_json("invalid_request", "missing 'prompt'", None)));
     };
     let backbone = req
         .get("backbone")
@@ -270,12 +311,12 @@ fn parse_generate(
     let method = match req.get("method").and_then(Json::as_str) {
         None => Method::Cdlm,
         Some(m) => Method::from_name(m).ok_or_else(|| {
-            (400, err_json(&format!("unknown method '{m}'")))
+            (400, err_json("invalid_request", &format!("unknown method '{m}'"), None))
         })?,
     };
     let prompt_ids =
         encode_user_prompt(tok, prompt, router.geometry.prompt_len)
-            .map_err(|e| (400, err_json(&format!("{e:#}"))))?;
+            .map_err(|e| (400, err_json("invalid_request", &format!("{e:#}"), None)))?;
     let tau_conf =
         req.get("tau_conf").and_then(Json::as_f64).map(|f| f as f32);
     let timeout = req
@@ -297,6 +338,12 @@ fn parse_generate(
         .and_then(Json::as_str)
         .map(str::to_string)
         .or_else(|| peer_ip.map(str::to_string));
+    let priority = req
+        .get("priority")
+        .and_then(Json::as_f64)
+        .filter(|p| p.is_finite())
+        .map(|p| p.clamp(i32::MIN as f64, i32::MAX as f64) as i32)
+        .unwrap_or(0);
     Ok((
         GenerateRequest {
             backbone,
@@ -306,6 +353,7 @@ fn parse_generate(
             timeout,
             max_new_tokens,
             client,
+            priority,
         },
         stream,
     ))
@@ -384,7 +432,7 @@ fn handle_generate(
         Err(reason) => (
             abort_status(&reason),
             abort_retry_after(&reason),
-            err_json(&reason),
+            err_json(abort_code(&reason), &reason, abort_retry_after(&reason)),
         ),
     }
 }
@@ -649,7 +697,7 @@ fn step_conn(
                         conn.out.extend_from_slice(&response_bytes(
                             400,
                             None,
-                            &err_json("request too large"),
+                            &err_json("invalid_request", "request too large", None),
                         ));
                         conn.state = ConnState::Closing;
                         break;
@@ -677,7 +725,7 @@ fn step_conn(
                         conn.out.extend_from_slice(&response_bytes(
                             400,
                             None,
-                            &err_json(&msg),
+                            &err_json("invalid_request", &msg, None),
                         ));
                         ConnState::Closing
                     }
@@ -724,7 +772,7 @@ fn step_conn(
                         conn.out.extend_from_slice(&response_bytes(
                             abort_status(&reason),
                             abort_retry_after(&reason),
-                            &err_json(&reason),
+                            &err_json(abort_code(&reason), &reason, abort_retry_after(&reason)),
                         ));
                         next = Some(ConnState::Closing);
                         *progress = true;
@@ -737,7 +785,7 @@ fn step_conn(
                         conn.out.extend_from_slice(&response_bytes(
                             500,
                             None,
-                            &err_json("worker dropped the request"),
+                            &err_json("internal", "worker dropped the request", None),
                         ));
                         next = Some(ConnState::Closing);
                         *progress = true;
@@ -843,7 +891,7 @@ fn dispatch(
     body: &str,
 ) -> ConnState {
     match (method, path) {
-        ("POST", "/generate") => {
+        ("POST", "/v1/generate" | "/generate") => {
             let arrived = Instant::now();
             match parse_generate(
                 tok,
@@ -866,7 +914,7 @@ fn dispatch(
                             conn.out.extend_from_slice(&response_bytes(
                                 e.status(),
                                 e.retry_after(),
-                                &err_json(&e.to_string()),
+                                &err_json(e.code(), &e.to_string(), e.retry_after()),
                             ));
                             ConnState::Closing
                         }
@@ -900,7 +948,7 @@ fn dispatch(
         ("GET", "/metrics") => {
             let (status, body) = match router.metrics() {
                 Ok(j) => (200, j.to_string()),
-                Err(e) => (500, err_json(&format!("{e:#}"))),
+                Err(e) => (500, err_json("internal", &format!("{e:#}"), None)),
             };
             conn.out
                 .extend_from_slice(&response_bytes(status, None, &body));
@@ -909,7 +957,7 @@ fn dispatch(
         ("GET", "/healthz") => {
             let (status, body) = match router.health() {
                 Ok(j) => (200, j.to_string()),
-                Err(e) => (500, err_json(&format!("{e:#}"))),
+                Err(e) => (500, err_json("internal", &format!("{e:#}"), None)),
             };
             conn.out
                 .extend_from_slice(&response_bytes(status, None, &body));
@@ -919,7 +967,7 @@ fn dispatch(
             conn.out.extend_from_slice(&response_bytes(
                 404,
                 None,
-                &err_json("not found"),
+                &err_json("not_found", "not found", None),
             ));
             ConnState::Closing
         }
@@ -1081,7 +1129,7 @@ pub fn serve_on_until(
                 };
             let (status, retry, body) = match (method.as_str(), path.as_str())
             {
-                ("POST", "/generate") => {
+                ("POST", "/v1/generate" | "/generate") => {
                     let arrived = Instant::now();
                     match parse_generate(
                         &tok,
@@ -1098,7 +1146,7 @@ pub fn serve_on_until(
                                 Err(e) => (
                                     e.status(),
                                     e.retry_after(),
-                                    err_json(&e.to_string()),
+                                    err_json(e.code(), &e.to_string(), e.retry_after()),
                                 ),
                                 Ok(handle)
                                     if sock_reset_due(
@@ -1131,13 +1179,13 @@ pub fn serve_on_until(
                 }
                 ("GET", "/metrics") => match router.metrics() {
                     Ok(j) => (200, None, j.to_string()),
-                    Err(e) => (500, None, err_json(&format!("{e:#}"))),
+                    Err(e) => (500, None, err_json("internal", &format!("{e:#}"), None)),
                 },
                 ("GET", "/healthz") => match router.health() {
                     Ok(j) => (200, None, j.to_string()),
-                    Err(e) => (500, None, err_json(&format!("{e:#}"))),
+                    Err(e) => (500, None, err_json("internal", &format!("{e:#}"), None)),
                 },
-                _ => (404, None, err_json("not found")),
+                _ => (404, None, err_json("not_found", "not found", None)),
             };
             respond(&mut stream, status, retry, &body);
         });

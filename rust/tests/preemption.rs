@@ -1,0 +1,323 @@
+//! SLO-preemption invariants: suspend / spill / resume on the paged
+//! per-lane KV pool.
+//!
+//! The load-bearing pins of the preemption subsystem:
+//!  * **byte-identical continuation** — for every method, a batch whose
+//!    live lanes are all suspended to the cold tier and resumed at a
+//!    block boundary decodes exactly (gen ids, steps, model_calls) as
+//!    the uninterrupted batch: preemption must be invisible in both the
+//!    trace and the accounting;
+//!  * **resource round-trip** — suspending frees the lane and its pages
+//!    immediately (another admission can take them), resuming
+//!    re-allocates them, and the pool balances to zero after the
+//!    machine drains; a parked lane that is discarded instead releases
+//!    everything it still held (including its prefix-chain pin);
+//!  * **paged over-subscription** — a pool whose tail-page budget could
+//!    serve only `tail_budget / tail_pages_full` lanes under one-owner
+//!    contiguous provisioning sustains MORE live lanes when paged, with
+//!    preemption covering the shortfall.
+
+use std::sync::Arc;
+
+use cdlm::coordinator::{
+    BatchState, DecodeOpts, DecodeOutcome, Method, SuspendedLane,
+    ALL_METHODS,
+};
+use cdlm::runtime::{ModelWeights, Runtime};
+use cdlm::tokenizer::Tokenizer;
+use cdlm::workload::{self, Family};
+
+const SEED: u64 = 0x5EED_0009;
+
+fn prompts(n: usize, task_seed: u64) -> Vec<Vec<i32>> {
+    let rt = Runtime::reference(SEED);
+    let geom = rt.manifest.geometry.clone();
+    let tok = Tokenizer::new();
+    workload::generate(Family::ChainArith, n, task_seed)
+        .iter()
+        .map(|s| {
+            workload::encode_example(
+                &tok,
+                Family::ChainArith,
+                s,
+                geom.prompt_len,
+                geom.gen_len,
+            )
+            .unwrap()
+            .prompt_ids
+        })
+        .collect()
+}
+
+fn weights_for(rt: &Runtime, m: Method) -> Arc<ModelWeights> {
+    Arc::new(
+        ModelWeights::load(&rt.manifest, &m.weights_for("dream")).unwrap(),
+    )
+}
+
+fn machine(rt: &Arc<Runtime>, m: Method, capacity: usize) -> BatchState {
+    let opts = DecodeOpts::defaults(&rt.manifest.geometry);
+    BatchState::new(rt.clone(), weights_for(rt, m), m, opts, capacity)
+        .unwrap()
+}
+
+/// Drive a machine batch of `prompts` to completion; when `roundtrip`
+/// every live lane is suspended and immediately resumed at the first
+/// block boundary. Outcomes return in admission order.
+fn run_batch(
+    st: &mut BatchState,
+    prompts: &[Vec<i32>],
+    roundtrip: bool,
+) -> Vec<DecodeOutcome> {
+    let mut orig = vec![usize::MAX; st.capacity()];
+    let mut outs: Vec<Option<DecodeOutcome>> =
+        prompts.iter().map(|_| None).collect();
+    for (i, p) in prompts.iter().enumerate() {
+        let lane = st.admit(p, None).unwrap();
+        orig[lane] = i;
+    }
+    let mut first = true;
+    while !st.is_empty() {
+        st.step_cycle().unwrap();
+        for (lane, o) in st.take_finished() {
+            outs[orig[lane]] = Some(o);
+        }
+        if roundtrip && first {
+            first = false;
+            let mut parked: Vec<(SuspendedLane, usize)> = Vec::new();
+            for lane in 0..st.capacity() {
+                if let Some(s) = st.suspend_lane(lane) {
+                    parked.push((s, orig[lane]));
+                }
+            }
+            for (s, req) in parked {
+                let lane = st.resume_lane(s).expect("provisioned resume");
+                orig[lane] = req;
+            }
+        }
+    }
+    st.assert_kv_balanced();
+    outs.into_iter().map(Option::unwrap).collect()
+}
+
+fn assert_same(method: Method, a: &[DecodeOutcome], b: &[DecodeOutcome]) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.gen, y.gen,
+            "{method:?} lane {i}: gen ids diverged after suspend/resume"
+        );
+        assert_eq!(x.steps, y.steps, "{method:?} lane {i}: steps diverged");
+        assert_eq!(
+            x.model_calls, y.model_calls,
+            "{method:?} lane {i}: model_calls diverged"
+        );
+        assert_eq!(x.gen_len, y.gen_len);
+    }
+}
+
+/// Suspend + resume at a block boundary is invisible: byte-identical
+/// gen ids and identical step/model-call accounting for all methods.
+#[test]
+fn suspend_resume_is_byte_identical_for_every_method() {
+    let rt = Arc::new(Runtime::reference(SEED));
+    let ps = prompts(4, 0xAB01);
+    for &m in &ALL_METHODS {
+        let base = run_batch(&mut machine(&rt, m, ps.len()), &ps, false);
+        let mut st = machine(&rt, m, ps.len());
+        let outs = run_batch(&mut st, &ps, true);
+        assert_same(m, &base, &outs);
+        assert_eq!(
+            st.kv_preempts(),
+            st.kv_resumes(),
+            "{m:?}: every preempt must have resumed"
+        );
+        if m.uses_kv_cache() {
+            assert!(
+                st.kv_preempts() > 0,
+                "{m:?}: the round trip must actually spill"
+            );
+            assert!(st.kv_spilled_bytes() > 0);
+        }
+    }
+}
+
+/// Suspending frees the pool lane and its pages for another admission;
+/// resuming re-allocates them; the accounting round-trips exactly.
+#[test]
+fn suspend_frees_resources_and_accounting_round_trips() {
+    let rt = Arc::new(Runtime::reference(SEED));
+    let ps = prompts(3, 0xAB02);
+    let mut st = machine(&rt, Method::Cdlm, 2);
+    st.admit(&ps[0], None).unwrap();
+    st.admit(&ps[1], None).unwrap();
+    st.step_cycle().unwrap();
+    st.take_finished();
+    assert_eq!(st.kv_in_use(), 2);
+    let free_before = st.kv_tail_pages_free();
+
+    let parked = st.suspend_lane(0).expect("live lane suspends");
+    assert_eq!(st.kv_in_use(), 1, "suspend frees the pool lane at once");
+    assert!(
+        st.kv_tail_pages_free() > free_before,
+        "suspend returns the lane's tail pages to the free list"
+    );
+    assert_eq!(st.kv_preempts(), 1);
+    assert!(parked.spilled_bytes() > 0);
+    assert_eq!(st.kv_spilled_bytes(), parked.spilled_bytes() as u64);
+
+    // the freed lane is immediately admissible
+    let lane = st.admit(&ps[2], None).unwrap();
+    assert_eq!(st.kv_in_use(), 2);
+    assert!(!st.can_resume(&parked), "no free lane while both are live");
+    assert!(st.cancel_lane(lane).is_some());
+
+    // resume restores the lane and the page accounting
+    assert!(st.can_resume(&parked));
+    st.resume_lane(parked).expect("free lane seats the parked state");
+    assert_eq!(st.kv_resumes(), 1);
+    assert_eq!(st.kv_in_use(), 2);
+
+    while !st.is_empty() {
+        st.step_cycle().unwrap();
+        st.take_finished();
+    }
+    st.assert_kv_balanced();
+}
+
+/// A parked lane that is discarded (cancelled while suspended) releases
+/// everything and reports its partial work for abort accounting.
+#[test]
+fn discard_suspended_releases_everything() {
+    let rt = Arc::new(Runtime::reference(SEED));
+    let ps = prompts(1, 0xAB00);
+    let mut st = machine(&rt, Method::Cdlm, 1);
+    st.admit(&ps[0], None).unwrap();
+    st.step_cycle().unwrap();
+    st.take_finished();
+    // task seed chosen so the lane outlives its first block (verified
+    // against the python accounting mirror) — the suspend is live
+    let parked = st.suspend_lane(0).expect("lane outlives block 0");
+    let outcome = st.discard_suspended(parked);
+    assert!(outcome.steps > 0, "partial work must be reported");
+    assert!(st.is_empty());
+    st.assert_kv_balanced();
+}
+
+/// The pressure cooker: a pool provisioned for 2 contiguous lanes runs
+/// 4 live lanes paged, trims back to the contiguous cap at the first
+/// block boundary (spilling the over-admitted lanes), and still
+/// produces byte-identical outcomes.
+#[test]
+fn paged_pool_sustains_more_live_lanes_than_contiguous_cap() {
+    let rt = Arc::new(Runtime::reference(SEED));
+    let geom = rt.manifest.geometry.clone();
+    let opts = DecodeOpts::defaults(&geom);
+    let ps = prompts(4, 0xAB04);
+    let base = run_batch(&mut machine(&rt, Method::Cdlm, ps.len()), &ps, false);
+
+    let tail_full = (geom.seq_len - geom.prompt_len)
+        .max(1)
+        .div_ceil(geom.block_size.max(1));
+    let mut st = BatchState::with_kv_budgets(
+        rt.clone(),
+        weights_for(&rt, Method::Cdlm),
+        Method::Cdlm,
+        opts,
+        4,
+        4,
+        2 * tail_full,
+    )
+    .unwrap();
+    let contiguous_cap = (st.kv_tail_page_budget() / st.kv_tail_pages_full())
+        .min(st.kv_prompt_page_budget());
+    assert_eq!(contiguous_cap, 2);
+
+    let mut orig = vec![usize::MAX; st.capacity()];
+    let mut outs: Vec<Option<DecodeOutcome>> =
+        ps.iter().map(|_| None).collect();
+    for (i, p) in ps.iter().enumerate() {
+        let lane = st.admit(p, None).unwrap();
+        orig[lane] = i;
+    }
+    let max_live = st.live_lanes();
+    assert!(
+        max_live > contiguous_cap,
+        "paged admission must exceed the contiguous slot cap"
+    );
+
+    // run the over-admitted wave through its first block cycle, then
+    // trim back to the contiguous cap (the over-admission pays its
+    // debt by spilling); a free-list watermark stays armed as the
+    // safety net — each unfinished lane may commit one tail page per
+    // cycle
+    let mut parked: Vec<(SuspendedLane, usize)> = Vec::new();
+    let mut trimmed = false;
+    while !st.is_empty() {
+        while st.kv_tail_pages_free() < st.unfinished_lanes()
+            || (trimmed && st.unfinished_lanes() > contiguous_cap)
+        {
+            let victim = (0..st.capacity())
+                .find_map(|l| st.suspend_lane(l).map(|s| (s, orig[l])))
+                .expect("pressure with no suspendable lane");
+            parked.push(victim);
+        }
+        if st.is_empty() {
+            break;
+        }
+        st.step_cycle().unwrap();
+        trimmed = true;
+        for (lane, o) in st.take_finished() {
+            outs[orig[lane]] = Some(o);
+        }
+    }
+    // task seed 0xAB04 is verified (python accounting mirror): 3 of
+    // the 4 lanes outlive block 0, so the trim must have spilled
+    assert!(!parked.is_empty(), "the budget must force preemption");
+
+    // resume each parked lane solo and run it out
+    for (s, req) in parked {
+        assert!(st.can_resume(&s), "drained pool must seat a parked lane");
+        let lane = st.resume_lane(s).expect("resume");
+        orig[lane] = req;
+        while !st.is_empty() {
+            st.step_cycle().unwrap();
+            for (l, o) in st.take_finished() {
+                outs[orig[l]] = Some(o);
+            }
+        }
+    }
+    st.assert_kv_balanced();
+    assert_eq!(st.kv_preempts(), st.kv_resumes());
+    assert!(st.kv_preempts() > 0);
+
+    let outs: Vec<DecodeOutcome> =
+        outs.into_iter().map(Option::unwrap).collect();
+    assert_same(Method::Cdlm, &base, &outs);
+}
+
+/// `resume_lane` with no free lane refuses and hands the state back
+/// intact; the state remains resumable later.
+#[test]
+fn resume_refusal_hands_the_state_back() {
+    let rt = Arc::new(Runtime::reference(SEED));
+    let ps = prompts(2, 0xAB06);
+    let mut st = machine(&rt, Method::Cdlm, 1);
+    st.admit(&ps[0], None).unwrap();
+    st.step_cycle().unwrap();
+    st.take_finished();
+    let parked = st.suspend_lane(0).expect("lane outlives block 0");
+    st.admit(&ps[1], None).unwrap();
+    let parked = match st.resume_lane(parked) {
+        Ok(_) => panic!("resume must refuse while every lane is live"),
+        Err(s) => s,
+    };
+    assert!(st.cancel_lane(0).is_some());
+    assert!(st.can_resume(&parked));
+    st.resume_lane(parked).expect("freed lane seats the parked state");
+    while !st.is_empty() {
+        st.step_cycle().unwrap();
+        st.take_finished();
+    }
+    st.assert_kv_balanced();
+}
