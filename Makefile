@@ -3,9 +3,9 @@
 
 CARGO ?= cargo
 
-.PHONY: ci verify fmt clippy build test smoke check-baseline shard-smoke chaos-smoke hotpath preempt-smoke check-pjrt bench clean
+.PHONY: ci verify fmt clippy build test test-scalar smoke check-baseline shard-smoke chaos-smoke hotpath preempt-smoke check-pjrt bench clean
 
-ci: fmt clippy build test smoke check-baseline shard-smoke chaos-smoke hotpath preempt-smoke check-pjrt
+ci: fmt clippy build test test-scalar smoke check-baseline shard-smoke chaos-smoke hotpath preempt-smoke check-pjrt
 
 # Tier-1 verify (the regression gate), exactly as the roadmap states it.
 verify:
@@ -22,6 +22,13 @@ build:
 
 test:
 	$(CARGO) test -q
+
+# The whole suite again with the util::kernels scalar fallback pinned,
+# so the non-SIMD path cannot bit-rot on AVX2-capable machines. The
+# golden-trace tests double as scalar-vs-SIMD parity at the decode
+# level: traces must be byte-identical under both settings.
+test-scalar:
+	CDLM_FORCE_SCALAR=1 $(CARGO) test -q
 
 # Hermetic end-to-end smoke: eval two methods on the reference backend.
 smoke:
@@ -60,11 +67,12 @@ chaos-smoke:
 	$(CARGO) run --release --bin cdlm -- bench --scenario chaos --method cdlm --n 24 --distinct 6 --replicas 4 --arrival-ms 2 --fault-seed 7 --out BENCH_chaos.json
 
 # Steady-state decode-step microbench + allocation gate (schema
-# cdlm.bench.hotpath/v1): drives every method's machine policy
+# cdlm.bench.hotpath/v2): drives every method's machine policy
 # functions with a reused step arena and HARD-FAILS if any steady-state
 # gated window performs a heap allocation. Latency/tokens-per-s fields
-# are advisory trend data — compare BENCH_hotpath.json across commits;
-# only the allocation count gates.
+# and the per-kernel GB/s cells (with the selected util::kernels ISA
+# path) are advisory trend data — compare BENCH_hotpath.json across
+# commits; only the allocation count gates.
 hotpath:
 	$(CARGO) run --release --bin cdlm -- bench --scenario hotpath --methods all --batches 1,4 --repeats 6 --out BENCH_hotpath.json
 

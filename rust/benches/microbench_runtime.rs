@@ -1,8 +1,10 @@
 //! Runtime microbenchmarks (the §Perf profile targets): per-program
-//! execute cost and KV pool view/commit cost — the backend-level
-//! numbers serving-latency regressions are diffed against. Runs on
-//! whichever backend the serving core loads (reference when no
-//! artifacts are present).
+//! execute cost, KV pool view/commit cost, and the `util::kernels`
+//! memory-primitive throughput (copy/splat/fan-out GB/s at block-,
+//! page-, and slot-sized inputs) — the backend-level numbers
+//! serving-latency regressions are diffed against. Runs on whichever
+//! backend the serving core loads (reference when no artifacts are
+//! present).
 //!
 //! Run: `cargo bench --bench microbench_runtime`
 
@@ -99,4 +101,22 @@ fn main() {
     let t0 = std::time::Instant::now();
     pool.commit_block(&leases[0], 0, bs, b, &kb, &kb).unwrap();
     println!("kv commit (one block): {:.1}us", t0.elapsed().as_secs_f64() * 1e6);
+
+    // SIMD memory-kernel throughput: every slab walk above funnels
+    // through these primitives; the same cells land in the
+    // cdlm.bench.hotpath/v2 artifact as the per-kernel trend
+    println!(
+        "\n=== util::kernels throughput (isa: {}) ===",
+        cdlm::util::kernels::active_isa().label()
+    );
+    println!(
+        "{:<12} {:>6} {:>8} {:>12} {:>10}",
+        "kernel", "class", "elems", "ns p50", "GB/s"
+    );
+    for c in cdlm::hotpath::run_kernel_cells(&g, 6) {
+        println!(
+            "{:<12} {:>6} {:>8} {:>12.0} {:>10.2}",
+            c.kernel, c.size_class, c.elems, c.ns_p50, c.gbps
+        );
+    }
 }

@@ -60,6 +60,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use crate::runtime::{Geometry, KvDims, KvSeg, KvView, INLINE_LANES};
+use crate::util::kernels;
 
 /// Pool identity counter backing [`KvLease`]'s foreign-lease guard.
 static NEXT_POOL_ID: AtomicU64 = AtomicU64::new(1);
@@ -651,22 +652,40 @@ impl KvPool {
             if s0 >= s1 {
                 continue;
             }
+            // head rows have uniform strides on both sides within a
+            // layer: one 2-D SIMD kernel copy per (layer, slab)
             let run = (s1 - s0) * d;
+            let src_stride = span_len * d;
+            let dst_stride = seg.region_len * d;
             for l in 0..l_n {
-                for h in 0..h_n {
-                    let src = (((l * bs + src_lane) * h_n + h) * span_len
-                        + (s0 - first_pos))
+                let src = ((l * bs + src_lane) * h_n * span_len
+                    + (s0 - first_pos))
+                    * d;
+                let dst = seg.base
+                    + (l * h_n * seg.region_len
+                        + seg.offset
+                        + (s0 - seg.start))
                         * d;
-                    let dst = seg.base
-                        + ((l * h_n + h) * seg.region_len
-                            + seg.offset
-                            + (s0 - seg.start))
-                            * d;
-                    self.k[dst..dst + run]
-                        .copy_from_slice(&k[src..src + run]);
-                    self.v[dst..dst + run]
-                        .copy_from_slice(&v[src..src + run]);
-                }
+                kernels::copy_2d(
+                    &mut self.k,
+                    dst,
+                    dst_stride,
+                    k,
+                    src,
+                    src_stride,
+                    h_n,
+                    run,
+                );
+                kernels::copy_2d(
+                    &mut self.v,
+                    dst,
+                    dst_stride,
+                    v,
+                    src,
+                    src_stride,
+                    h_n,
+                    run,
+                );
             }
         }
     }
@@ -807,9 +826,8 @@ impl KvPool {
     // -----------------------------------------------------------------
 
     fn spill_region(out: &mut Vec<u8>, slab: &[f32], base: usize, n: usize) {
-        for x in &slab[base..base + n] {
-            out.extend_from_slice(&x.to_le_bytes());
-        }
+        // widening scatter to the cold tier: one bulk byte move
+        kernels::spill_f32_le(out, &slab[base..base + n]);
     }
 
     fn unspill_region(
@@ -819,12 +837,12 @@ impl KvPool {
         base: usize,
         n: usize,
     ) {
-        for x in slab[base..base + n].iter_mut() {
-            let mut b = [0u8; 4];
-            b.copy_from_slice(&bytes[*cursor..*cursor + 4]);
-            *x = f32::from_le_bytes(b);
-            *cursor += 4;
-        }
+        // widening gather from the cold tier: one bulk byte move
+        kernels::unspill_f32_le(
+            &bytes[*cursor..*cursor + 4 * n],
+            &mut slab[base..base + n],
+        );
+        *cursor += 4 * n;
     }
 
     /// Suspend a lane: consume its lease, spill every allocated page
@@ -1288,15 +1306,31 @@ impl KvPool {
             "prefill KV must be [L, bs={bs}, H, P={p}, dh]"
         );
         let base = self.page_base(page);
+        // head rows stride p*d in the source and pl*d in the page: one
+        // 2-D SIMD kernel copy per (layer, slab)
         for l in 0..l_n {
-            for h in 0..h_n {
-                let src = (((l * bs + lane) * h_n + h) * p + bi * pl) * d;
-                let dst = base + (l * h_n + h) * pl * d;
-                self.k[dst..dst + pl * d]
-                    .copy_from_slice(&k[src..src + pl * d]);
-                self.v[dst..dst + pl * d]
-                    .copy_from_slice(&v[src..src + pl * d]);
-            }
+            let src = ((l * bs + lane) * h_n * p + bi * pl) * d;
+            let dst = base + l * h_n * pl * d;
+            kernels::copy_2d(
+                &mut self.k,
+                dst,
+                pl * d,
+                k,
+                src,
+                p * d,
+                h_n,
+                pl * d,
+            );
+            kernels::copy_2d(
+                &mut self.v,
+                dst,
+                pl * d,
+                v,
+                src,
+                p * d,
+                h_n,
+                pl * d,
+            );
         }
     }
 }

@@ -40,7 +40,8 @@ use crate::coordinator::methods::{
 use crate::coordinator::sequence::SequenceState;
 use crate::runtime::{Geometry, Programs};
 use crate::util::alloc_count;
-use crate::util::stats::Summary;
+use crate::util::kernels;
+use crate::util::stats::{self, Summary};
 
 /// One measured (method, batch) cell. All perf fields cover steady
 /// repeats only (repeat 0 warms the arena); `warm_allocs` records what
@@ -72,6 +73,132 @@ impl HotpathCell {
     pub fn allocs_per_step(&self) -> f64 {
         self.steady_allocs as f64 / self.steps.max(1) as f64
     }
+}
+
+/// One per-kernel throughput cell for the cdlm.bench.hotpath/v2
+/// artifact: a fixed geometry-derived input measured over repeated
+/// calls of one `util::kernels` primitive. `bytes_per_call` counts the
+/// bytes the kernel logically moves (reads + writes), `ns_p50` is the
+/// median per-call wall time, and `gbps` is the derived throughput —
+/// the advisory trend number SIMD wins show up in PR-over-PR.
+#[derive(Debug, Clone)]
+pub struct KernelCell {
+    pub kernel: &'static str,
+    /// Input size class: a generated-block region (`block`), a prompt
+    /// page (`page`), or a full lane slot (`slot`).
+    pub size_class: &'static str,
+    /// f32 elements in the cell's working set.
+    pub elems: usize,
+    /// Bytes logically moved per call (reads + writes).
+    pub bytes_per_call: u64,
+    pub ns_p50: f64,
+    pub gbps: f64,
+    /// ISA path the dispatched call executed on.
+    pub isa: &'static str,
+}
+
+fn kernel_cell(
+    kernel: &'static str,
+    size_class: &'static str,
+    elems: usize,
+    bytes_per_call: u64,
+    st: &Summary,
+    isa: &'static str,
+) -> KernelCell {
+    let ns_p50 = st.percentile(50.0) * 1e9;
+    KernelCell {
+        kernel,
+        size_class,
+        elems,
+        bytes_per_call,
+        ns_p50,
+        // bytes per nanosecond == decimal GB/s
+        gbps: bytes_per_call as f64 / ns_p50.max(1e-3),
+        isa,
+    }
+}
+
+/// Measure every `util::kernels` primitive at the three slab-walk size
+/// classes the KV hot path actually moves: one generated-block region
+/// (`[L, H, B, dh]`), one prompt page (`[L, H, P, dh]`), and one full
+/// lane slot (`[L, H, S, dh]`). All buffers are allocated up front, so
+/// the measured calls are allocation-free like their hot-path call
+/// sites; `repeats` scales the per-cell iteration count.
+pub fn run_kernel_cells(geom: &Geometry, repeats: usize) -> Vec<KernelCell> {
+    let isa = kernels::active_isa().label();
+    let (l_n, h_n, dh, s_n) =
+        (geom.n_layers, geom.n_heads, geom.d_head, geom.seq_len);
+    let classes: [(&'static str, usize); 3] = [
+        ("block", geom.block_size),
+        ("page", geom.prompt_len),
+        ("slot", geom.seq_len),
+    ];
+    let warm = 8;
+    let iters = repeats.max(2) * 32;
+    let mut cells = Vec::new();
+    for (class, len) in classes {
+        let n = l_n * h_n * len * dh;
+        let row = h_n * len * dh;
+        let src: Vec<f32> = (0..n).map(|i| (i % 97) as f32 * 0.5).collect();
+        let mut dst = vec![0.0f32; n];
+
+        let st = stats::bench(warm, iters, || {
+            kernels::copy(&mut dst, &src);
+            std::hint::black_box(&dst);
+        });
+        cells.push(kernel_cell("copy", class, n, 8 * n as u64, &st, isa));
+
+        let st = stats::bench(warm, iters, || {
+            kernels::fill(&mut dst, 0.0);
+            std::hint::black_box(&dst);
+        });
+        cells.push(kernel_cell("fill", class, n, 4 * n as u64, &st, isa));
+
+        // the pjrt-seam widening shape: L*H rows of len*dh scattered
+        // into an S-strided slot layout
+        let run = len * dh;
+        let mut slot = vec![0.0f32; l_n * h_n * s_n * dh];
+        let st = stats::bench(warm, iters, || {
+            kernels::copy_2d(
+                &mut slot,
+                0,
+                s_n * dh,
+                &src,
+                0,
+                run,
+                l_n * h_n,
+                run,
+            );
+            std::hint::black_box(&slot);
+        });
+        cells.push(kernel_cell("copy_2d", class, n, 8 * n as u64, &st, isa));
+
+        // the replicate_ctx shape: one lane's layer-0 row fanned across
+        // all layers of both slabs (bs=1, so lstride == row)
+        let mut kf = src.clone();
+        let mut vf = vec![0.0f32; n];
+        let st = stats::bench(warm, iters, || {
+            kernels::fanout_rows(&mut kf, &mut vf, 0, row, l_n, row);
+            std::hint::black_box((&kf, &vf));
+        });
+        let fan_bytes = (8 * l_n * row) as u64;
+        cells.push(kernel_cell("fanout_rows", class, n, fan_bytes, &st, isa));
+
+        // cold-tier widening scatter/gather (suspend/resume spills)
+        let mut bytes = Vec::with_capacity(4 * n);
+        let st = stats::bench(warm, iters, || {
+            bytes.clear();
+            kernels::spill_f32_le(&mut bytes, &src);
+            std::hint::black_box(&bytes);
+        });
+        cells.push(kernel_cell("spill", class, n, 8 * n as u64, &st, isa));
+        let st = stats::bench(warm, iters, || {
+            kernels::unspill_f32_le(&bytes, &mut dst);
+            std::hint::black_box(&dst);
+        });
+        cells.push(kernel_cell("unspill", class, n, 8 * n as u64, &st, isa));
+    }
+    cells
 }
 
 /// Deterministic full-length synthetic prompt (no padding, all ids in
@@ -473,6 +600,28 @@ mod tests {
         assert_eq!(a.n_kv_heads, g.n_heads);
         assert_eq!(a.vocab, g.vocab_size);
         assert!(a.params() > 0.0);
+    }
+
+    #[test]
+    fn kernel_cells_cover_all_primitives_and_sizes() {
+        let rt = Runtime::reference(1);
+        let g = rt.manifest.geometry.clone();
+        let cells = run_kernel_cells(&g, 2);
+        // 6 kernels x 3 size classes
+        assert_eq!(cells.len(), 18);
+        let isa = kernels::active_isa().label();
+        for c in &cells {
+            assert!(c.elems > 0 && c.bytes_per_call > 0, "{}", c.kernel);
+            assert!(c.gbps > 0.0, "{}: empty throughput", c.kernel);
+            assert_eq!(c.isa, isa, "{}: wrong ISA label", c.kernel);
+        }
+        for class in ["block", "page", "slot"] {
+            assert_eq!(
+                cells.iter().filter(|c| c.size_class == class).count(),
+                6,
+                "{class}: missing kernels"
+            );
+        }
     }
 
     #[test]

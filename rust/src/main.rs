@@ -1907,10 +1907,12 @@ fn cmd_bench_stream(args: &Args) -> anyhow::Result<()> {
 /// `cdlm::hotpath`, measuring gated ns/step + tokens/s and counting
 /// heap acquisitions inside the gated windows with this binary's
 /// counting allocator. Emits `BENCH_hotpath.json` (schema
-/// `cdlm.bench.hotpath/v1`), writing the artifact *before* gating so a
-/// violation still leaves the evidence on disk, then hard-fails unless
-/// every steady-state cell performed zero allocations. Latency fields
-/// are advisory trend data — only the allocation count gates.
+/// `cdlm.bench.hotpath/v2`: the v1 per-method rows plus per-kernel
+/// GB/s cells and the selected `util::kernels` ISA path), writing the
+/// artifact *before* gating so a violation still leaves the evidence
+/// on disk, then hard-fails unless every steady-state cell performed
+/// zero allocations. Latency and throughput fields are advisory trend
+/// data — only the allocation count gates.
 fn cmd_bench_hotpath(args: &Args) -> anyhow::Result<()> {
     use analysis::intensity::{IntensityModel, Workload};
     use analysis::roofline::A100;
@@ -2029,8 +2031,34 @@ fn cmd_bench_hotpath(args: &Args) -> anyhow::Result<()> {
         }
     }
 
+    // per-kernel throughput cells: the util::kernels primitives every
+    // slab walk now funnels through, measured at the block/page/slot
+    // size classes. Advisory trend data (GB/s per kernel per size).
+    let isa = cdlm::util::kernels::active_isa().label();
+    println!(
+        "\n{:<12} {:>6} {:>8} {:>12} {:>10} {:>8}",
+        "kernel", "class", "elems", "ns p50", "GB/s", "isa"
+    );
+    let mut kernel_rows = Vec::new();
+    for c in hotpath::run_kernel_cells(&geom, repeats) {
+        println!(
+            "{:<12} {:>6} {:>8} {:>12.0} {:>10.2} {:>8}",
+            c.kernel, c.size_class, c.elems, c.ns_p50, c.gbps, c.isa
+        );
+        kernel_rows.push(Json::obj(vec![
+            ("kernel", Json::str(c.kernel)),
+            ("size_class", Json::str(c.size_class)),
+            ("elems", Json::num(c.elems as f64)),
+            ("bytes_per_call", Json::num(c.bytes_per_call as f64)),
+            ("ns_p50", Json::num(c.ns_p50)),
+            ("gbps", Json::num(c.gbps)),
+            ("isa", Json::str(c.isa)),
+        ]));
+    }
+
     let doc = Json::obj(vec![
-        ("schema", Json::str("cdlm.bench.hotpath/v1")),
+        ("schema", Json::str("cdlm.bench.hotpath/v2")),
+        ("isa", Json::str(isa)),
         ("backend", Json::str(core.rt.backend_name())),
         ("backbone", Json::str(backbone.as_str())),
         ("tau", Json::num(tau as f64)),
@@ -2060,6 +2088,7 @@ fn cmd_bench_hotpath(args: &Args) -> anyhow::Result<()> {
             ]),
         ),
         ("results", Json::Arr(rows)),
+        ("kernels", Json::Arr(kernel_rows)),
     ]);
     // artifact first, gate second: a violation must still leave the
     // measurement on disk for the CI upload (chaos-gate convention)

@@ -35,6 +35,7 @@
 //! and reads there are a bug the debug assertions catch.
 
 use super::tensor::TensorF32;
+use crate::util::kernels;
 
 /// Per-slot layout dimensions: one lane's slot is `[L, H, S, dh]`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -351,7 +352,10 @@ impl<'a> KvView<'a> {
     /// programs consume. This is the full copy the engines no longer
     /// perform; only device backends (PJRT) pay it, behind the seam.
     /// Shared prefix segments are copied once per lane here — the price
-    /// of the device layout, not of the shared pool.
+    /// of the device layout, not of the shared pool. Head rows have
+    /// uniform strides on both sides within a layer, so the widening is
+    /// one 2-D SIMD kernel copy per (layer, segment) instead of
+    /// per-(layer, head) index recomputation.
     pub fn to_batch_major(&self) -> (TensorF32, TensorF32) {
         let g = &self.dims;
         let (l_n, h_n, s_n, dh) = (g.n_layers, g.n_heads, g.seq_len, g.d_head);
@@ -359,18 +363,31 @@ impl<'a> KvView<'a> {
         let mut k = TensorF32::zeros(&[l_n, bs, h_n, s_n, dh]);
         let mut v = TensorF32::zeros(&[l_n, bs, h_n, s_n, dh]);
         let mut copy_seg = |lane: usize, seg: &KvSeg| {
-            let span = seg.len * dh;
+            let run = seg.len * dh;
             for l in 0..l_n {
-                for h in 0..h_n {
-                    let src = seg.base
-                        + ((l * h_n + h) * seg.region_len + seg.offset) * dh;
-                    let dst =
-                        (((l * bs + lane) * h_n + h) * s_n + seg.start) * dh;
-                    k.data[dst..dst + span]
-                        .copy_from_slice(&self.k[src..src + span]);
-                    v.data[dst..dst + span]
-                        .copy_from_slice(&self.v[src..src + span]);
-                }
+                let src =
+                    seg.base + (l * h_n * seg.region_len + seg.offset) * dh;
+                let dst = ((l * bs + lane) * h_n * s_n + seg.start) * dh;
+                kernels::copy_2d(
+                    &mut k.data,
+                    dst,
+                    s_n * dh,
+                    self.k,
+                    src,
+                    seg.region_len * dh,
+                    h_n,
+                    run,
+                );
+                kernels::copy_2d(
+                    &mut v.data,
+                    dst,
+                    s_n * dh,
+                    self.v,
+                    src,
+                    seg.region_len * dh,
+                    h_n,
+                    run,
+                );
             }
         };
         match &self.lanes {

@@ -36,9 +36,10 @@
 //! allocate. Proposal logits cross the seam as sparse
 //! [`ProposalLogits`] peaks, and context hashes are written with a
 //! batched per-lane pass: one contiguous layer-0 walk per lane, then a
-//! precomputed-stride replication across layers (`replicate_ctx`),
-//! instead of the old one-element-per-layer scatter that recomputed
-//! the full 5-d index for every (layer, position) pair.
+//! cache-blocked SIMD fan-out across layers (`replicate_ctx`, backed
+//! by [`crate::util::kernels::fanout_rows`]) that moves contiguous
+//! lane rows instead of the old one-element-per-layer scatter that
+//! recomputed the full 5-d index for every (layer, position) pair.
 #![allow(clippy::too_many_arguments)]
 
 use anyhow::Result;
@@ -51,6 +52,7 @@ use super::programs::{
     PrefillOut, ProposalLogits,
 };
 use super::tensor::{TensorF32, TensorI32};
+use crate::util::kernels;
 use super::weights::ModelWeights;
 
 /// Fixed default seed (override per-process with `CDLM_REF_SEED`).
@@ -110,9 +112,13 @@ fn view_ctx(kv: &KvView<'_>, lane: usize, pos: usize) -> u64 {
 /// Replicate one lane's layer-0 context row across all layers of both
 /// batch-major `[L, bs, H, len, dh]` stacks (head 0, feature 0), and
 /// mirror it into `v`. The producer writes layer 0 of `k` with a
-/// contiguous per-lane walk first; this pass fans it out with two
-/// precomputed strides (`dh` across positions, `bs*H*len*dh` across
-/// layers) — no per-element index recomputation.
+/// contiguous per-lane walk first; this pass fans the whole contiguous
+/// `H*len*dh` lane row out with the cache-blocked SIMD kernel instead
+/// of an `lstride`-strided single-element scatter. Byte-identity with
+/// the scalar scatter holds because producers only ever write the
+/// (head 0, feature 0) context slots of these arena buffers and every
+/// other element is zero in both source and destination (zero-filled
+/// at `reuse` shape changes, never dirtied afterwards).
 fn replicate_ctx(
     k: &mut [f32],
     v: &mut [f32],
@@ -123,20 +129,8 @@ fn replicate_ctx(
     dh: usize,
     lane: usize,
 ) {
-    let lane0 = lane * h_n * len * dh;
-    let lstride = bs * h_n * len * dh;
-    let mut off = lane0;
-    for _p in 0..len {
-        let c = k[off];
-        v[off] = c;
-        let mut o = off + lstride;
-        for _l in 1..l_n {
-            k[o] = c;
-            v[o] = c;
-            o += lstride;
-        }
-        off += dh;
-    }
+    let row = h_n * len * dh;
+    kernels::fanout_rows(k, v, lane * row, row, l_n, bs * row);
 }
 
 impl ReferenceBackend {
@@ -688,23 +682,22 @@ mod tests {
         // lives at layer 0, head 0, feature 0)
         let ctx = pre.k.data[(p - 1) * g.d_head] as u64 & CTX_MASK;
         assert_ne!(ctx, 0);
-        // widen prompt KV into a lane-major [L, H, S, dh] slot and view it
+        // widen prompt KV into a lane-major [L, H, S, dh] slot and view
+        // it: each (l, h) row is a contiguous P*dh run in the prefill
+        // output and an S*dh-strided run in the slot, so the whole
+        // widening is one uniform-stride 2-D kernel copy
         let dims = KvDims::of(&g);
         let mut k_slab = vec![0.0f32; dims.slot_elems()];
-        for l in 0..g.n_layers {
-            for h in 0..g.n_heads {
-                for pos in 0..p {
-                    for d in 0..g.d_head {
-                        let src = (((l * g.n_heads) + h) * p + pos) * g.d_head
-                            + d;
-                        let dst = (((l * g.n_heads) + h) * g.seq_len + pos)
-                            * g.d_head
-                            + d;
-                        k_slab[dst] = pre.k.data[src];
-                    }
-                }
-            }
-        }
+        kernels::copy_2d(
+            &mut k_slab,
+            0,
+            g.seq_len * g.d_head,
+            &pre.k.data,
+            0,
+            p * g.d_head,
+            g.n_layers * g.n_heads,
+            p * g.d_head,
+        );
         let v_slab = k_slab.clone();
         let view = KvView::new(&k_slab, &v_slab, &[0], dims, p);
         let blk_ids = TensorI32::from_vec(&[1, blk], vec![1; blk]);

@@ -30,7 +30,9 @@ impl TensorF32 {
     /// the buffer is zero-filled so no stale value from a differently
     /// shaped step can leak through. Never shrinks capacity, so a
     /// steady-state caller stops allocating after the first use of each
-    /// shape's high-water mark.
+    /// shape's high-water mark: once capacity covers the new element
+    /// count the zero-fill runs through the SIMD fill kernel with no
+    /// allocator round trip.
     pub fn reuse(&mut self, shape: &[usize]) {
         if self.shape.as_slice() == shape {
             return;
@@ -38,8 +40,16 @@ impl TensorF32 {
         let n: usize = shape.iter().product();
         self.shape.clear();
         self.shape.extend_from_slice(shape);
-        self.data.clear();
-        self.data.resize(n, 0.0);
+        if n <= self.data.len() {
+            // shrink or same numel: keep the buffer, SIMD zero-fill
+            self.data.truncate(n);
+            crate::util::kernels::fill(&mut self.data, 0.0);
+        } else {
+            // grow: SIMD-zero the live prefix, extend the remainder
+            // (allocates only past the high-water mark)
+            crate::util::kernels::fill(&mut self.data, 0.0);
+            self.data.resize(n, 0.0);
+        }
     }
 }
 
@@ -72,8 +82,13 @@ impl TensorI32 {
         let n: usize = shape.iter().product();
         self.shape.clear();
         self.shape.extend_from_slice(shape);
-        self.data.clear();
-        self.data.resize(n, 0);
+        if n <= self.data.len() {
+            self.data.truncate(n);
+            crate::util::kernels::fill_i32(&mut self.data, 0);
+        } else {
+            crate::util::kernels::fill_i32(&mut self.data, 0);
+            self.data.resize(n, 0);
+        }
     }
 }
 

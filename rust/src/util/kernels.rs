@@ -1,0 +1,602 @@
+//! SIMD-dispatched memory kernels for the KV hot path.
+//!
+//! Every slab walk in the stack — context fan-out across layers,
+//! paged-KV span/page commits, suspend/resume spills, arena zero-fills,
+//! and the batch-major widening at the pjrt seam — funnels through this
+//! module instead of open-coded scalar loops. The kernels are
+//! fixed-width f32x8 primitives on stable Rust: an unrolled
+//! `core::arch` intrinsic path selected once at runtime
+//! (`is_x86_feature_detected!("avx2")` on x86_64, NEON on aarch64) and
+//! a portable unrolled-scalar fallback everywhere else.
+//!
+//! Dispatch rules:
+//! - The ISA is detected once per process and cached in a `OnceLock`;
+//!   every public entry point reads the cached value, so steady-state
+//!   calls never touch the environment or CPUID again (and never
+//!   allocate — the hot-path allocation gate covers these kernels).
+//! - `CDLM_FORCE_SCALAR=1` (any non-empty value other than `0`) pins
+//!   the scalar fallback for debugging and for the CI leg that keeps
+//!   the fallback from bit-rotting on AVX2-capable runners.
+//! - Tests that need both paths in one process use the `*_with`
+//!   variants, which take an explicit [`Isa`] instead of the cached
+//!   one. Requesting an ISA the CPU lacks falls back to scalar.
+//!
+//! Alignment/tail contract: no kernel requires aligned inputs — the
+//! vector paths use unaligned loads/stores (`loadu`/`storeu`,
+//! `vld1q`/`vst1q`) so callers may pass any sub-slice offset. Lengths
+//! need not be multiples of the vector width; tails shorter than one
+//! vector are handled element-wise. Every kernel writes exactly the
+//! bytes the equivalent scalar loop writes — byte-for-byte, in every
+//! ISA — which is what keeps decode traces identical across machines
+//! and is pinned by `tests/simd_kernels.rs`.
+//!
+//! Cache blocking: multi-row walks (layer fan-out, 2-D strided copies)
+//! move one L1-sized chunk of the source row across all destination
+//! rows before advancing, so the source chunk is read from L1 `rows`
+//! times instead of streaming the full row per destination.
+
+#![allow(clippy::too_many_arguments)]
+
+use std::sync::OnceLock;
+
+/// Environment variable that pins the scalar fallback when set to any
+/// non-empty value other than `0`.
+pub const FORCE_SCALAR_ENV: &str = "CDLM_FORCE_SCALAR";
+
+/// Elements per cache-blocked chunk for multi-row walks: 2048 f32 =
+/// 8 KiB, a quarter of a typical 32 KiB L1D, leaving room for the
+/// destination lines of the row being fanned.
+const BLOCK_ELEMS: usize = 2048;
+
+/// Instruction-set path a kernel call executes on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// 8-lane f32 AVX2 path (x86_64 only).
+    Avx2,
+    /// 4-lane f32 NEON path (aarch64 only).
+    Neon,
+    /// Portable unrolled-scalar fallback.
+    Scalar,
+}
+
+impl Isa {
+    /// Stable label used in bench artifacts and logs.
+    pub fn label(self) -> &'static str {
+        match self {
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+            Isa::Scalar => "scalar",
+        }
+    }
+}
+
+static ACTIVE: OnceLock<Isa> = OnceLock::new();
+
+fn force_scalar_from_env() -> bool {
+    match std::env::var_os(FORCE_SCALAR_ENV) {
+        Some(v) => !v.is_empty() && v != "0",
+        None => false,
+    }
+}
+
+/// Pure detection given the env override — split out so the policy is
+/// unit-testable without mutating process environment.
+fn detect(force_scalar: bool) -> Isa {
+    if force_scalar {
+        return Isa::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Isa::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Isa::Neon;
+        }
+    }
+    Isa::Scalar
+}
+
+/// The ISA every dispatched kernel call runs on, detected once per
+/// process (honoring `CDLM_FORCE_SCALAR`) and cached.
+pub fn active_isa() -> Isa {
+    *ACTIVE.get_or_init(|| detect(force_scalar_from_env()))
+}
+
+/// Clamp a requested ISA to what this CPU can actually execute, so the
+/// explicit `*_with` test entry points are safe to call with any
+/// variant on any machine.
+fn usable(isa: Isa) -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    if isa == Isa::Avx2 && std::arch::is_x86_feature_detected!("avx2") {
+        return Isa::Avx2;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if isa == Isa::Neon && std::arch::is_aarch64_feature_detected!("neon") {
+        return Isa::Neon;
+    }
+    let _ = isa;
+    Isa::Scalar
+}
+
+// ---------------------------------------------------------------------------
+// copy: blocked contiguous copy (dst and src must not overlap)
+// ---------------------------------------------------------------------------
+
+/// Copy `src` into `dst` (equal lengths) on the dispatched ISA path.
+pub fn copy(dst: &mut [f32], src: &[f32]) {
+    copy_with(active_isa(), dst, src);
+}
+
+/// [`copy`] with an explicit ISA (parity tests).
+pub fn copy_with(isa: Isa, dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len(), "kernels::copy length mismatch");
+    match usable(isa) {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `usable` verified AVX2 is available on this CPU.
+        Isa::Avx2 => unsafe { copy_avx2(dst, src) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: `usable` verified NEON is available on this CPU.
+        Isa::Neon => unsafe { copy_neon(dst, src) },
+        _ => copy_scalar(dst, src),
+    }
+}
+
+fn copy_scalar(dst: &mut [f32], src: &[f32]) {
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d = *s;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn copy_avx2(dst: &mut [f32], src: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = dst.len();
+    let (sp, dp) = (src.as_ptr(), dst.as_mut_ptr());
+    let mut i = 0;
+    // 4x-unrolled 8-lane body, then single vectors, then scalar tail.
+    // SAFETY: every offset below is < n, checked by the loop bounds;
+    // loads/stores are the unaligned variants.
+    unsafe {
+        while i + 32 <= n {
+            let a = _mm256_loadu_ps(sp.add(i));
+            let b = _mm256_loadu_ps(sp.add(i + 8));
+            let c = _mm256_loadu_ps(sp.add(i + 16));
+            let d = _mm256_loadu_ps(sp.add(i + 24));
+            _mm256_storeu_ps(dp.add(i), a);
+            _mm256_storeu_ps(dp.add(i + 8), b);
+            _mm256_storeu_ps(dp.add(i + 16), c);
+            _mm256_storeu_ps(dp.add(i + 24), d);
+            i += 32;
+        }
+        while i + 8 <= n {
+            _mm256_storeu_ps(dp.add(i), _mm256_loadu_ps(sp.add(i)));
+            i += 8;
+        }
+        while i < n {
+            *dp.add(i) = *sp.add(i);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn copy_neon(dst: &mut [f32], src: &[f32]) {
+    use std::arch::aarch64::*;
+    let n = dst.len();
+    let (sp, dp) = (src.as_ptr(), dst.as_mut_ptr());
+    let mut i = 0;
+    // two q-registers per iteration = one f32x8 chunk
+    // SAFETY: every offset below is < n, checked by the loop bounds.
+    unsafe {
+        while i + 8 <= n {
+            let a = vld1q_f32(sp.add(i));
+            let b = vld1q_f32(sp.add(i + 4));
+            vst1q_f32(dp.add(i), a);
+            vst1q_f32(dp.add(i + 4), b);
+            i += 8;
+        }
+        while i < n {
+            *dp.add(i) = *sp.add(i);
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fill: broadcast-splat / zero-or-const fill
+// ---------------------------------------------------------------------------
+
+/// Fill `dst` with `value` on the dispatched ISA path.
+pub fn fill(dst: &mut [f32], value: f32) {
+    fill_with(active_isa(), dst, value);
+}
+
+/// [`fill`] with an explicit ISA (parity tests).
+pub fn fill_with(isa: Isa, dst: &mut [f32], value: f32) {
+    match usable(isa) {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `usable` verified AVX2 is available on this CPU.
+        Isa::Avx2 => unsafe { fill_avx2(dst, value) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: `usable` verified NEON is available on this CPU.
+        Isa::Neon => unsafe { fill_neon(dst, value) },
+        _ => fill_scalar(dst, value),
+    }
+}
+
+fn fill_scalar(dst: &mut [f32], value: f32) {
+    for d in dst.iter_mut() {
+        *d = value;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn fill_avx2(dst: &mut [f32], value: f32) {
+    use std::arch::x86_64::*;
+    let n = dst.len();
+    let dp = dst.as_mut_ptr();
+    let mut i = 0;
+    // SAFETY: offsets bounded by n; unaligned stores.
+    unsafe {
+        let v = _mm256_set1_ps(value);
+        while i + 32 <= n {
+            _mm256_storeu_ps(dp.add(i), v);
+            _mm256_storeu_ps(dp.add(i + 8), v);
+            _mm256_storeu_ps(dp.add(i + 16), v);
+            _mm256_storeu_ps(dp.add(i + 24), v);
+            i += 32;
+        }
+        while i + 8 <= n {
+            _mm256_storeu_ps(dp.add(i), v);
+            i += 8;
+        }
+        while i < n {
+            *dp.add(i) = value;
+            i += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn fill_neon(dst: &mut [f32], value: f32) {
+    use std::arch::aarch64::*;
+    let n = dst.len();
+    let dp = dst.as_mut_ptr();
+    let mut i = 0;
+    // SAFETY: offsets bounded by n.
+    unsafe {
+        let v = vdupq_n_f32(value);
+        while i + 8 <= n {
+            vst1q_f32(dp.add(i), v);
+            vst1q_f32(dp.add(i + 4), v);
+            i += 8;
+        }
+        while i < n {
+            *dp.add(i) = value;
+            i += 1;
+        }
+    }
+}
+
+/// Fill an i32 slice with `value` on the dispatched ISA path (arena
+/// index/mask buffers share the hot path with the f32 slabs).
+pub fn fill_i32(dst: &mut [i32], value: i32) {
+    fill_i32_with(active_isa(), dst, value);
+}
+
+/// [`fill_i32`] with an explicit ISA (parity tests).
+pub fn fill_i32_with(isa: Isa, dst: &mut [i32], value: i32) {
+    #[cfg(target_arch = "x86_64")]
+    if usable(isa) == Isa::Avx2 {
+        // SAFETY: `usable` verified AVX2 is available on this CPU.
+        unsafe { fill_i32_avx2(dst, value) };
+        return;
+    }
+    let _ = isa;
+    for d in dst.iter_mut() {
+        *d = value;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn fill_i32_avx2(dst: &mut [i32], value: i32) {
+    use std::arch::x86_64::*;
+    let n = dst.len();
+    let dp = dst.as_mut_ptr();
+    let mut i = 0;
+    // SAFETY: offsets bounded by n; unaligned integer stores.
+    unsafe {
+        let v = _mm256_set1_epi32(value);
+        while i + 8 <= n {
+            _mm256_storeu_si256(dp.add(i).cast(), v);
+            i += 8;
+        }
+        while i < n {
+            *dp.add(i) = value;
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// copy_2d: uniform-stride row copy (the [L,H,S,dh] slab-walk workhorse)
+// ---------------------------------------------------------------------------
+
+/// Copy `rows` runs of `run` contiguous f32s from `src` to `dst`, with
+/// uniform per-row strides. This is the slab-walk primitive: a
+/// [L,H,S,dh] traversal with uniform strides over any two of the axes
+/// collapses to one `copy_2d` call per remaining axis, so commits,
+/// page writes, and the pjrt-seam widening all move whole `run`-sized
+/// lines instead of recomputing a 4-deep index per element.
+pub fn copy_2d(
+    dst: &mut [f32],
+    dst_off: usize,
+    dst_stride: usize,
+    src: &[f32],
+    src_off: usize,
+    src_stride: usize,
+    rows: usize,
+    run: usize,
+) {
+    copy_2d_with(
+        active_isa(),
+        dst,
+        dst_off,
+        dst_stride,
+        src,
+        src_off,
+        src_stride,
+        rows,
+        run,
+    );
+}
+
+/// [`copy_2d`] with an explicit ISA (parity tests).
+pub fn copy_2d_with(
+    isa: Isa,
+    dst: &mut [f32],
+    dst_off: usize,
+    dst_stride: usize,
+    src: &[f32],
+    src_off: usize,
+    src_stride: usize,
+    rows: usize,
+    run: usize,
+) {
+    let isa = usable(isa);
+    for r in 0..rows {
+        let s = src_off + r * src_stride;
+        let d = dst_off + r * dst_stride;
+        copy_with(isa, &mut dst[d..d + run], &src[s..s + run]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fanout_rows: cache-blocked context fan-out across layers
+// ---------------------------------------------------------------------------
+
+/// Fan one lane's layer-0 context row across every layer of both KV
+/// slabs: `v`'s rows (all `l_n` layers, including layer 0) become
+/// copies of `k`'s layer-0 row `k[base .. base+row]`, and `k`'s layers
+/// `1..l_n` become copies of its own layer 0. Layer `l`'s row starts
+/// at `base + l*lstride`.
+///
+/// This replaces the per-position `lstride`-strided single-element
+/// scatter in `replicate_ctx`: the row is walked in L1-sized chunks,
+/// each chunk fanned across all destination layers before advancing
+/// (see module docs), so every transfer is a contiguous `run` instead
+/// of isolated elements 1.5 cache lines apart. Byte-identity with the
+/// scalar scatter holds because producers only ever write the (head 0,
+/// feature 0) context positions of these rows and the remaining
+/// elements are zero in both source and destination (zeroed at arena
+/// reuse, never dirtied) — copying the full row moves exactly the
+/// bytes the scatter wrote plus zeros onto zeros.
+pub fn fanout_rows(
+    k: &mut [f32],
+    v: &mut [f32],
+    base: usize,
+    row: usize,
+    l_n: usize,
+    lstride: usize,
+) {
+    fanout_rows_with(active_isa(), k, v, base, row, l_n, lstride);
+}
+
+/// [`fanout_rows`] with an explicit ISA (parity tests).
+pub fn fanout_rows_with(
+    isa: Isa,
+    k: &mut [f32],
+    v: &mut [f32],
+    base: usize,
+    row: usize,
+    l_n: usize,
+    lstride: usize,
+) {
+    assert!(l_n >= 1 && lstride >= row, "fanout_rows geometry");
+    assert!(
+        base + (l_n - 1) * lstride + row <= k.len() && k.len() == v.len(),
+        "fanout_rows out of bounds"
+    );
+    let isa = usable(isa);
+    let mut off = 0;
+    while off < row {
+        let n = BLOCK_ELEMS.min(row - off);
+        // every layer of v mirrors k's layer-0 chunk (cross-buffer)
+        for l in 0..l_n {
+            let d = base + l * lstride + off;
+            copy_with(isa, &mut v[d..d + n], &k[base + off..base + off + n]);
+        }
+        off += n;
+    }
+    if l_n > 1 {
+        // k layers 1.. copy k layer 0 — same buffer, so split below the
+        // first destination row (lstride >= row makes the split valid)
+        let (head, tail) = k.split_at_mut(base + row);
+        let src = &head[base..];
+        let mut off = 0;
+        while off < row {
+            let n = BLOCK_ELEMS.min(row - off);
+            for l in 1..l_n {
+                let d = l * lstride - row + off;
+                copy_with(isa, &mut tail[d..d + n], &src[off..off + n]);
+            }
+            off += n;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// widening gather/scatter: f32 slab <-> little-endian cold-tier bytes
+// ---------------------------------------------------------------------------
+
+/// Widening scatter: append `src` to `out` as little-endian f32 bytes
+/// (the suspend-to-cold-tier spill). One bulk byte move on
+/// little-endian targets; per-element `to_le_bytes` elsewhere.
+pub fn spill_f32_le(out: &mut Vec<u8>, src: &[f32]) {
+    #[cfg(target_endian = "little")]
+    {
+        // SAFETY: f32 has no invalid bit patterns and its in-memory
+        // layout on a little-endian target IS its to_le_bytes order;
+        // the reinterpreted slice is read-only and scoped to this call.
+        let bytes = unsafe {
+            std::slice::from_raw_parts(src.as_ptr().cast::<u8>(), src.len() * 4)
+        };
+        out.extend_from_slice(bytes);
+    }
+    #[cfg(not(target_endian = "little"))]
+    for x in src {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Widening gather: decode little-endian f32 bytes into `dst` (the
+/// resume-from-cold-tier unspill). Inverse of [`spill_f32_le`].
+pub fn unspill_f32_le(bytes: &[u8], dst: &mut [f32]) {
+    assert_eq!(bytes.len(), dst.len() * 4, "unspill length mismatch");
+    #[cfg(target_endian = "little")]
+    {
+        // SAFETY: any 4 bytes are a valid f32 bit pattern; on a
+        // little-endian target the raw store equals from_le_bytes.
+        let db = unsafe {
+            std::slice::from_raw_parts_mut(
+                dst.as_mut_ptr().cast::<u8>(),
+                dst.len() * 4,
+            )
+        };
+        db.copy_from_slice(bytes);
+    }
+    #[cfg(not(target_endian = "little"))]
+    for (d, c) in dst.iter_mut().zip(bytes.chunks_exact(4)) {
+        *d = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn force_scalar_policy_pins_fallback() {
+        assert_eq!(detect(true), Isa::Scalar);
+        // without the pin, detection returns whatever the CPU supports
+        // and never panics
+        let _ = detect(false).label();
+    }
+
+    #[test]
+    fn active_isa_is_cached_and_stable() {
+        let a = active_isa();
+        assert_eq!(a, active_isa());
+        assert!(!a.label().is_empty());
+    }
+
+    #[test]
+    fn usable_clamps_to_cpu() {
+        // whatever is requested, the result is executable here
+        for isa in [Isa::Avx2, Isa::Neon, Isa::Scalar] {
+            let _ = usable(isa).label();
+        }
+        assert_eq!(usable(Isa::Scalar), Isa::Scalar);
+    }
+
+    #[test]
+    fn copy_matches_scalar_reference() {
+        let src: Vec<f32> = (0..100).map(|i| i as f32 * 0.5 - 7.0).collect();
+        let mut dst = vec![0.0f32; 100];
+        copy(&mut dst, &src);
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    fn fill_covers_tails() {
+        for n in [0usize, 1, 7, 8, 9, 31, 32, 33, 100] {
+            let mut d = vec![1.0f32; n];
+            fill(&mut d, -2.5);
+            assert!(d.iter().all(|&x| x == -2.5), "n={n}");
+            let mut di = vec![1i32; n];
+            fill_i32(&mut di, 42);
+            assert!(di.iter().all(|&x| x == 42), "n={n}");
+        }
+    }
+
+    #[test]
+    fn copy_2d_strided_rows() {
+        // 3 rows of 4 from a stride-6 source into a stride-5 dest
+        let src: Vec<f32> = (0..20).map(|i| i as f32).collect();
+        let mut dst = vec![0.0f32; 17];
+        copy_2d(&mut dst, 1, 5, &src, 2, 6, 3, 4);
+        for r in 0..3 {
+            for c in 0..4 {
+                assert_eq!(dst[1 + r * 5 + c], (2 + r * 6 + c) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn fanout_rows_replicates_layer_zero() {
+        // 3 layers, 2 lanes (lstride = 2*row), lane 1
+        let (row, l_n) = (10usize, 3usize);
+        let lstride = 2 * row;
+        let base = row; // lane 1
+        let mut k = vec![0.0f32; l_n * lstride];
+        let mut v = vec![0.0f32; l_n * lstride];
+        for (i, x) in k[base..base + row].iter_mut().enumerate() {
+            *x = i as f32 + 1.0;
+        }
+        fanout_rows(&mut k, &mut v, base, row, l_n, lstride);
+        for l in 0..l_n {
+            let o = base + l * lstride;
+            for i in 0..row {
+                assert_eq!(k[o + i], i as f32 + 1.0, "k l={l} i={i}");
+                assert_eq!(v[o + i], i as f32 + 1.0, "v l={l} i={i}");
+            }
+        }
+        // other lane untouched
+        assert_eq!(k[0], 0.0);
+        assert_eq!(v[0], 0.0);
+    }
+
+    #[test]
+    fn spill_roundtrip() {
+        let src: Vec<f32> = (0..37).map(|i| (i as f32).sin()).collect();
+        let mut bytes = Vec::new();
+        spill_f32_le(&mut bytes, &src);
+        assert_eq!(bytes.len(), src.len() * 4);
+        // matches the element-wise encoding exactly
+        for (i, x) in src.iter().enumerate() {
+            assert_eq!(&bytes[i * 4..i * 4 + 4], &x.to_le_bytes());
+        }
+        let mut back = vec![0.0f32; src.len()];
+        unspill_f32_le(&bytes, &mut back);
+        assert_eq!(back, src);
+    }
+}

@@ -7,6 +7,7 @@
 pub mod alloc_count;
 pub mod cli;
 pub mod json;
+pub mod kernels;
 pub mod prop;
 pub mod rng;
 pub mod stats;
